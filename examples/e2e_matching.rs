@@ -1,0 +1,122 @@
+//! End-to-end driver: the full system on a real (small) workload.
+//!
+//! Exercises every layer in composition:
+//!
+//! 1. generate the small match problem (20k offers by default; scaled
+//!    with `--entities`);
+//! 2. train the LRM combiner on a labeled sample (logistic regression);
+//! 3. run blocking → partition tuning → task generation → **real**
+//!    parallel matching on the thread engine (1 node, this host);
+//! 4. re-run the same workflow on the simulated paper testbed
+//!    (4 nodes × 4 cores, partition caches, affinity scheduling) and
+//!    report the headline metric: execution time vs 1 core, i.e. the
+//!    paper's speedup claim;
+//! 5. report match quality against the injected ground truth.
+//!
+//! ```bash
+//! cargo run --release --example e2e_matching -- --entities 20000
+//! ```
+//! Recorded in EXPERIMENTS.md §End-to-end.
+
+use pem::cluster::ComputingEnv;
+use pem::coordinator::workflow::EngineChoice;
+use pem::coordinator::{run_workflow, WorkflowConfig};
+use pem::datagen::GeneratorConfig;
+use pem::matching::train::{train_lrm, training_pairs, TrainConfig};
+use pem::matching::{MatchStrategy, StrategyKind};
+use pem::metrics::speedups;
+use pem::util::cli::Args;
+use pem::util::{fmt_nanos, GIB};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let n = args.get_or("entities", 20_000usize)?;
+    let seed = args.get_or("seed", 2010u64)?;
+
+    println!("=== pem end-to-end driver ===\n");
+    let t0 = std::time::Instant::now();
+    let data = GeneratorConfig::default()
+        .with_entities(n)
+        .with_seed(seed)
+        .generate();
+    println!(
+        "[1] dataset: {} offers / {} products / {} duplicate pairs ({:?})",
+        data.dataset.len(),
+        data.n_products,
+        data.truth.len(),
+        t0.elapsed()
+    );
+
+    // [2] train the learner-based strategy on a labeled sample
+    let t1 = std::time::Instant::now();
+    let pairs = training_pairs(&data, 400, 3, seed ^ 0xbeef);
+    let params = train_lrm(
+        &pairs,
+        &TrainConfig {
+            init: Some(pem::matching::StrategyParams::lrm_default().values),
+            learning_rate: 0.1,
+            ..TrainConfig::default()
+        },
+    );
+    println!(
+        "[2] trained LRM on {} labeled pairs → weights {:?} ({:?})",
+        pairs.len(),
+        params.values,
+        t1.elapsed()
+    );
+
+    // [3] real parallel matching on this host (thread engine)
+    let lrm = MatchStrategy::new(StrategyKind::Lrm).with_params(params);
+    for (name, strategy) in [
+        ("WAM", MatchStrategy::new(StrategyKind::Wam)),
+        ("LRM(trained)", lrm),
+    ] {
+        let mut cfg = WorkflowConfig::blocking_based(strategy.kind)
+            .with_engine(EngineChoice::Threads)
+            .with_cache(16);
+        cfg.strategy = strategy;
+        let ce = ComputingEnv::new(1, 4, 3 * GIB);
+        let out = run_workflow(&data, &cfg, &ce)?;
+        let q = out.result.quality(&data.truth);
+        println!(
+            "[3] {name}: {} partitions ({} misc), {} tasks, {} comparisons",
+            out.n_partitions,
+            out.n_misc_partitions,
+            out.n_tasks,
+            out.metrics.comparisons
+        );
+        println!(
+            "    matched {} pairs: precision={:.3} recall={:.3} f1={:.3}  hr={:.0}%  wall={:?}",
+            out.result.len(),
+            q.precision,
+            q.recall,
+            q.f1,
+            out.metrics.hit_ratio() * 100.0,
+            out.elapsed
+        );
+    }
+
+    // [4] headline: scale-out on the simulated paper testbed
+    println!("\n[4] scale-out on the simulated paper testbed (CE=(4,4,3GB), c=16):");
+    for kind in [StrategyKind::Wam, StrategyKind::Lrm] {
+        let cfg = WorkflowConfig::blocking_based(kind).with_cache(16);
+        let mut times = Vec::new();
+        print!("    {}: ", kind.name());
+        for cores in [1usize, 4, 16] {
+            let nodes = cores.div_ceil(4).max(1);
+            let ce = ComputingEnv::new(nodes, cores.div_ceil(nodes), 3 * GIB);
+            let out = run_workflow(&data, &cfg, &ce)?;
+            times.push(out.metrics.makespan_ns);
+            print!(
+                "{}@{}c  ",
+                fmt_nanos(out.metrics.makespan_ns),
+                cores
+            );
+        }
+        let s = speedups(&times);
+        println!("→ speedup {:.1}x @16 cores", s[2]);
+    }
+
+    println!("\ntotal driver wall-clock: {:?}", t0.elapsed());
+    Ok(())
+}

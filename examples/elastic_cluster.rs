@@ -1,0 +1,92 @@
+//! Elasticity & fault tolerance (paper §4): match services can be added
+//! on demand, removed, and the workflow survives node failures by
+//! reassigning the failed service's tasks.
+//!
+//! Demonstrated on the virtual-time simulator: the same workload runs
+//! (a) healthy, (b) with a node lost mid-run, (c) on a heterogeneous
+//! cluster with a half-speed straggler — the pull-based scheduler
+//! load-balances all three.
+//!
+//! ```bash
+//! cargo run --release --example elastic_cluster
+//! ```
+
+use pem::cluster::{ComputingEnv, HeterogeneousEnv, NodeSpec};
+use pem::coordinator::workflow::build_partitions;
+use pem::coordinator::WorkflowConfig;
+use pem::datagen::GeneratorConfig;
+use pem::engine::sim::{run_heterogeneous, SimConfig};
+use pem::engine::{calibrate, sim};
+use pem::matching::StrategyKind;
+use pem::partition::generate_tasks;
+use pem::store::DataService;
+use pem::util::{fmt_nanos, GIB};
+
+fn main() -> anyhow::Result<()> {
+    let data = GeneratorConfig::default().with_entities(6_000).generate();
+    let kind = StrategyKind::Wam;
+    let mut wf = WorkflowConfig::blocking_based(kind);
+    {
+        use pem::coordinator::PartitioningChoice;
+        if let PartitioningChoice::BlockingBased {
+            max_size, min_size, ..
+        } = &mut wf.partitioning
+        {
+            *max_size = Some(250);
+            *min_size = 50;
+        }
+    }
+    let ce = ComputingEnv::new(4, 4, 3 * GIB);
+    let parts = build_partitions(&data, &wf, &ce)?;
+    let tasks = generate_tasks(&parts);
+    let store = DataService::build(&data.dataset, &parts);
+    let cost =
+        calibrate::calibrated_params(&data.dataset, kind, 100, 7);
+    println!(
+        "workload: {} partitions, {} tasks, calibrated {:.0} ns/pair\n",
+        parts.len(),
+        tasks.len(),
+        cost.pair_ns
+    );
+
+    // (a) healthy 4-node run
+    let mut cfg = SimConfig::new(kind, cost);
+    cfg.cache_capacity = 16;
+    let healthy = sim::run(&ce, &parts, tasks.clone(), &store, cfg);
+    println!(
+        "(a) healthy 4-node cluster:        {}",
+        fmt_nanos(healthy.metrics.makespan_ns)
+    );
+
+    // (b) node 3 dies a quarter of the way in — tasks are reassigned
+    let mut cfg = SimConfig::new(kind, cost);
+    cfg.cache_capacity = 16;
+    cfg.failures = vec![(healthy.metrics.makespan_ns / 4, 3)];
+    let failed = sim::run(&ce, &parts, tasks.clone(), &store, cfg);
+    println!(
+        "(b) node 3 fails at 25%:           {}  (all {} tasks still completed)",
+        fmt_nanos(failed.metrics.makespan_ns),
+        failed.metrics.tasks
+    );
+
+    // (c) heterogeneous: 3 full-speed nodes + 1 straggler at half speed
+    let mut env = HeterogeneousEnv::uniform(&ce);
+    env.nodes[3] = NodeSpec {
+        speed: 0.5,
+        ..env.nodes[3]
+    };
+    let mut cfg = SimConfig::new(kind, cost);
+    cfg.cache_capacity = 16;
+    let hetero =
+        run_heterogeneous(&env, &parts, tasks, &store, &mut cfg);
+    println!(
+        "(c) heterogeneous (one 0.5x node): {}  (imbalance {:.2})",
+        fmt_nanos(hetero.metrics.makespan_ns),
+        hetero.metrics.imbalance()
+    );
+    println!(
+        "\npull-based scheduling keeps the straggler fed with fewer tasks \
+         instead of stalling the makespan (paper §4)."
+    );
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! Matching multiple input sources (paper §3.3).
+//!
+//! Two duplicate-free shop catalogs are matched against each other,
+//! three ways:
+//!
+//! * **union** — combine both sources and run the standard
+//!   single-source workflow (finds intra- and cross-source duplicates);
+//! * **duplicate-free Cartesian** — `m·n` cross-source tasks instead of
+//!   `(m+n)(m+n−1)/2`;
+//! * **duplicate-free blocked** — the same blocking on both sources with
+//!   *paired* partition tuning, matching corresponding blocks only
+//!   (misc partitions of either side × all partitions of the other).
+//!
+//! ```bash
+//! cargo run --release --example multi_source
+//! ```
+
+use pem::blocking::BlockingMethod;
+use pem::cluster::ComputingEnv;
+use pem::coordinator::multi_source::{
+    cross_quality, run_two_source_workflow, split_duplicate_free,
+    union_sources, TwoSourceMode,
+};
+use pem::coordinator::workflow::EngineChoice;
+use pem::coordinator::{run_workflow, WorkflowConfig};
+use pem::datagen::GeneratorConfig;
+use pem::matching::{MatchStrategy, StrategyKind};
+use pem::util::GIB;
+
+fn main() -> anyhow::Result<()> {
+    // one generated world, split into two duplicate-free shop catalogs
+    let data = GeneratorConfig::tiny().with_entities(2_000).generate();
+    let (a, b, cross_truth) =
+        split_duplicate_free(&data.dataset, &data.truth);
+    println!(
+        "source A: {} offers, source B: {} offers, {} cross-source duplicate pairs",
+        a.len(),
+        b.len(),
+        cross_truth.len()
+    );
+    let ce = ComputingEnv::new(1, 4, 3 * GIB);
+    let strategy = MatchStrategy::new(StrategyKind::Wam);
+
+    // ——— union approach ———
+    let union = union_sources(vec![a.clone(), b.clone()]);
+    let mut ucfg = WorkflowConfig::size_based(StrategyKind::Wam)
+        .with_engine(EngineChoice::Threads);
+    if let pem::coordinator::PartitioningChoice::SizeBased { max_size } =
+        &mut ucfg.partitioning
+    {
+        *max_size = Some(200);
+    }
+    let u = run_workflow(&union, &ucfg, &ce)?;
+    println!(
+        "\nunion:                  {} tasks, {} comparisons, {} matches",
+        u.n_tasks,
+        u.metrics.comparisons,
+        u.result.len()
+    );
+
+    // ——— duplicate-free cartesian ———
+    let cart = run_two_source_workflow(
+        &a,
+        &b,
+        &TwoSourceMode::Cartesian {
+            max_size: Some(200),
+        },
+        strategy,
+        &ce,
+    )?;
+    let qc = cross_quality(&cart.result, &cross_truth, a.len() as u32);
+    println!(
+        "duplicate-free m·n:     {} tasks (union equivalent {}), {} comparisons, recall {:.3}",
+        cart.n_tasks, cart.union_equivalent_tasks, cart.comparisons, qc.recall
+    );
+
+    // ——— duplicate-free with paired-tuned blocking ———
+    let blocked = run_two_source_workflow(
+        &a,
+        &b,
+        &TwoSourceMode::Blocked {
+            method: BlockingMethod::product_type(),
+            max_size: Some(200),
+            min_size: 40,
+        },
+        strategy,
+        &ce,
+    )?;
+    let qb = cross_quality(&blocked.result, &cross_truth, a.len() as u32);
+    println!(
+        "duplicate-free blocked: {} tasks, {} comparisons ({}% of m·n), recall {:.3}",
+        blocked.n_tasks,
+        blocked.comparisons,
+        100 * blocked.comparisons / cart.comparisons.max(1),
+        qb.recall
+    );
+    println!(
+        "\nblocking prunes the cross-source search space while paired \
+         partition tuning keeps corresponding blocks aligned (§3.3)."
+    );
+    Ok(())
+}

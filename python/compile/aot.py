@@ -1,0 +1,97 @@
+"""AOT lowering: jax match-strategy graphs → HLO text artifacts.
+
+Emits one HLO module per (strategy × partition-capacity) variant into
+``artifacts/``, plus a ``manifest.txt`` the Rust runtime uses to discover
+them.  HLO **text** (not ``.serialize()``) is the interchange format: jax
+>= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Module signature (all f32):
+    (a_title[M,D], a_desc[M,D], b_title[M,D], b_desc[M,D], params[4])
+        -> (combined[M,M],)           # lowered with return_tuple=True
+
+Run:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Partition capacities to compile.  The Rust coordinator pads every
+# partition to the smallest capacity that fits (powers of two keep the
+# Pallas grid regular).  1024 covers the paper's largest partition size
+# (Fig 6 sweeps up to 1000).
+CAPACITIES = (128, 256, 512, 1024)
+FEATURE_DIM = 256
+
+MANIFEST_NAME = "manifest.txt"
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR → XlaComputation → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(strategy: str, m: int, d: int = FEATURE_DIM) -> str:
+    """Lower one (strategy, capacity) variant and return its HLO text."""
+    mat = jax.ShapeDtypeStruct((m, d), jnp.float32)
+    par = jax.ShapeDtypeStruct((model.N_PARAMS,), jnp.float32)
+
+    def fn(a_title, a_desc, b_title, b_desc, params):
+        return (
+            model.match_task(
+                strategy, a_title, a_desc, b_title, b_desc, params
+            ),
+        )
+
+    lowered = jax.jit(fn).lower(mat, mat, mat, mat, par)
+    return to_hlo_text(lowered)
+
+
+def artifact_name(strategy: str, m: int, d: int = FEATURE_DIM) -> str:
+    return f"{strategy}_m{m}_d{d}.hlo.txt"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--capacities", type=int, nargs="*", default=list(CAPACITIES)
+    )
+    ap.add_argument("--feature-dim", type=int, default=FEATURE_DIM)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_lines = [
+        "# pem artifact manifest: name strategy capacity feature_dim n_params"
+    ]
+    for strategy in model.STRATEGIES:
+        for m in args.capacities:
+            name = artifact_name(strategy, m, args.feature_dim)
+            text = lower_variant(strategy, m, args.feature_dim)
+            path = os.path.join(args.out_dir, name)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest_lines.append(
+                f"{name} {strategy} {m} {args.feature_dim} {model.N_PARAMS}"
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, MANIFEST_NAME), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {os.path.join(args.out_dir, MANIFEST_NAME)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Pure-jnp oracle for the Pallas similarity kernel and the matchers.
+
+Everything here is the straightforward O(M·N·D) broadcast formulation —
+the CORE correctness reference the kernel and the Rust matchers are tested
+against.  No Pallas, no tiling tricks.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-9
+
+
+def pairwise_stats_ref(a, b):
+    """(minsum, dot) between all row pairs — naive broadcast version."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    minsum = jnp.sum(jnp.minimum(a[:, None, :], b[None, :, :]), axis=-1)
+    dot = a @ b.T
+    return minsum, dot
+
+
+def row_sums(x):
+    return jnp.sum(x.astype(jnp.float32), axis=-1)
+
+
+def row_normsq(x):
+    x = x.astype(jnp.float32)
+    return jnp.sum(x * x, axis=-1)
+
+
+def dice_from_stats(minsum, sum_a, sum_b):
+    """TriGram (Dice) similarity: 2·|A∩B| / (|A| + |B|)."""
+    denom = sum_a[:, None] + sum_b[None, :]
+    return jnp.where(denom > 0, 2.0 * minsum / (denom + EPS), 0.0)
+
+
+def jaccard_from_stats(minsum, sum_a, sum_b):
+    """Jaccard similarity: |A∩B| / |A∪B|, with |A∪B| = |A|+|B|-|A∩B|."""
+    union = sum_a[:, None] + sum_b[None, :] - minsum
+    return jnp.where(union > 0, minsum / (union + EPS), 0.0)
+
+
+def cosine_from_stats(dot, normsq_a, normsq_b):
+    """Cosine similarity from inner products and squared norms."""
+    denom = jnp.sqrt(normsq_a)[:, None] * jnp.sqrt(normsq_b)[None, :]
+    return jnp.where(denom > 0, dot / (denom + EPS), 0.0)
+
+
+def dice(a, b):
+    minsum, _ = pairwise_stats_ref(a, b)
+    return dice_from_stats(minsum, row_sums(a), row_sums(b))
+
+
+def jaccard(a, b):
+    minsum, _ = pairwise_stats_ref(a, b)
+    return jaccard_from_stats(minsum, row_sums(a), row_sums(b))
+
+
+def cosine(a, b):
+    _, dot = pairwise_stats_ref(a, b)
+    return cosine_from_stats(dot, row_normsq(a), row_normsq(b))

@@ -1,0 +1,140 @@
+"""Layer-1 Pallas kernel: tiled all-pairs similarity statistics.
+
+The compute hot spot of a match task is evaluating a match strategy over
+the cross product of two entity partitions.  Entities are embedded (on the
+Rust side, `pem::features`) as hashed q-gram count vectors, so a partition
+is a dense ``f32[M, D]`` matrix.  Every matcher the paper's two strategies
+use (TriGram/Dice, Jaccard, Cosine, and the q-gram proxy for edit
+distance) is a function of exactly two pairwise statistics:
+
+  ``minsum[i, j] = sum_k min(a[i, k], b[j, k])``   (multiset intersection)
+  ``dot[i, j]    = sum_k a[i, k] * b[j, k]``       (inner product)
+
+together with per-row aggregates (``sum_k a[i, k]``, ``||a[i]||``) that are
+O(M·D) and computed outside the kernel.  Note ``sum_k max(a,b) =
+sum(a) + sum(b) - minsum``, so Jaccard needs no third matrix.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the kernel tiles the
+``[M, D] x [N, D] -> [M, N]`` computation over a 2-D grid of
+``(TILE_M, TILE_N)`` output blocks.  Per grid step only two input strips
+(``TILE_M x D`` and ``TILE_N x D``) live in VMEM; ``dot`` hits the MXU via
+``jnp.dot`` and ``minsum`` is a VPU broadcast-min reduction.  HBM traffic
+per output tile row is O(M·D) instead of the O(M²·D) a naive broadcast
+would materialize.
+
+Pallas runs with ``interpret=True`` everywhere in this repo: the CPU PJRT
+client cannot execute Mosaic custom calls.  The BlockSpecs are still the
+real TPU schedule and are what §Perf estimates VMEM/MXU numbers from.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes.  (32, 32) keeps the broadcast-min intermediate at
+# 32*32*D floats (1 MiB at D=256) — comfortably inside a 16 MiB VMEM
+# budget together with the two input strips.  See EXPERIMENTS.md §Perf for
+# the sweep over candidates.
+DEFAULT_TILE_M = 32
+DEFAULT_TILE_N = 32
+
+
+def _pick_tile(dim: int, preferred: int) -> int:
+    """Largest tile <= preferred that divides dim (dim >= 1)."""
+    t = min(preferred, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _stats_kernel(a_ref, b_ref, minsum_ref, dot_ref):
+    """One (TILE_M, TILE_N) output block of minsum / dot."""
+    a = a_ref[...]  # [TILE_M, D]
+    b = b_ref[...]  # [TILE_N, D]
+    # Multiset intersection: broadcast-min then reduce over the feature
+    # axis.  VPU work, no MXU.
+    minsum_ref[...] = jnp.sum(
+        jnp.minimum(a[:, None, :], b[None, :, :]), axis=-1
+    )
+    # Inner products: MXU matmul on TPU.
+    dot_ref[...] = jnp.dot(a, b.T, preferred_element_type=jnp.float32)
+
+
+def pairwise_stats(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    tile_m: int = DEFAULT_TILE_M,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: bool = True,
+):
+    """All-pairs (minsum, dot) between rows of ``a`` and rows of ``b``.
+
+    Args:
+      a: ``f32[M, D]`` feature matrix (rows = entities of partition A).
+      b: ``f32[N, D]`` feature matrix.
+      tile_m / tile_n: preferred output-tile shape; shrunk to divide M/N.
+      interpret: run the Pallas interpreter (required on CPU PJRT).
+
+    Returns:
+      ``(minsum, dot)``, both ``f32[M, N]``.
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[1]:
+        raise ValueError(f"bad shapes {a.shape} x {b.shape}")
+    m, d = a.shape
+    n, _ = b.shape
+    tm = _pick_tile(m, tile_m)
+    tn = _pick_tile(n, tile_n)
+    grid = (m // tm, n // tn)
+    out_shape = [
+        jax.ShapeDtypeStruct((m, n), jnp.float32),
+        jax.ShapeDtypeStruct((m, n), jnp.float32),
+    ]
+    kernel = pl.pallas_call(
+        _stats_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+            pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    a32 = a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    minsum, dot = kernel(a32, b32)
+    return minsum, dot
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n"))
+def pairwise_stats_jit(a, b, tile_m=DEFAULT_TILE_M, tile_n=DEFAULT_TILE_N):
+    return pairwise_stats(a, b, tile_m=tile_m, tile_n=tile_n)
+
+
+def vmem_footprint_bytes(tile_m: int, tile_n: int, d: int) -> int:
+    """Estimated peak VMEM bytes for one grid step (f32).
+
+    Two input strips + broadcast-min intermediate + two output tiles.
+    Used by the §Perf BlockSpec sweep; mirrored by the Rust-side estimate
+    in ``pem::runtime::vmem``.
+    """
+    strips = (tile_m + tile_n) * d
+    broadcast = tile_m * tile_n * d
+    outs = 2 * tile_m * tile_n
+    return 4 * (strips + broadcast + outs)
+
+
+def mxu_utilization_estimate(tile_m: int, tile_n: int, d: int) -> float:
+    """Fraction of a 128x128 MXU the dot tile keeps busy (structural)."""
+    eff_m = min(tile_m, 128) / 128.0
+    eff_n = min(tile_n, 128) / 128.0
+    eff_k = min(d, 128) / 128.0
+    return eff_m * eff_n * eff_k

@@ -1,0 +1,123 @@
+"""Layer-2 JAX graphs for the paper's two match strategies.
+
+A *match task* compares two entity partitions A and B.  On the Rust side
+each partition arrives as two hashed-trigram feature matrices (title and
+description, ``f32[M, D]``; rows of zeros pad partitions smaller than M).
+The strategy graph returns the combined ``f32[M, M]`` similarity matrix;
+padded pairs are forced to 0 so the Rust side can extract correspondences
+as simply "entries >= threshold".
+
+Strategies (paper §5.1):
+
+* **WAM** — two matchers, weighted average:
+    - title matcher: the paper uses edit distance; the accelerated path
+      substitutes trigram Dice similarity on the title (q-gram distance is
+      the standard bound/proxy for edit distance — the exact Levenshtein
+      matcher lives in ``pem::matching`` and python/tests quantify the
+      agreement).
+    - description matcher: TriGram (Dice) similarity.
+    - combined = w1·s_title + w2·s_desc, then the *threshold-discard*
+      optimization: entries that cannot reach the decision threshold are
+      zeroed (this is the paper's memory optimization — only candidate
+      correspondences survive).
+
+* **LRM** — three matchers, logistic-regression combination:
+    - Jaccard on title, TriGram (Dice) on description, Cosine on the
+      concatenated (title ‖ description) vector.  The cosine of the
+      concatenation is computed from the two per-attribute kernel calls:
+      dot = dot_t + dot_d and ||x||² = ||x_t||² + ||x_d||².
+    - combined = sigmoid(w0 + w1·jac + w2·tri + w3·cos).
+
+Both graphs call the Layer-1 Pallas kernel once per attribute, so the
+whole strategy lowers into a single HLO module with exactly two kernel
+instantiations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.similarity import pairwise_stats
+
+STRATEGIES = ("wam", "lrm")
+
+# Number of runtime parameters each strategy takes (a flat f32 vector so
+# the Rust coordinator can retune weights without recompiling):
+#   wam: [w_title, w_desc, decision_threshold, discard_margin]
+#   lrm: [w0 (bias), w_jaccard, w_trigram, w_cosine]
+N_PARAMS = 4
+
+# Defaults used by tests and by the Rust side unless overridden.
+WAM_DEFAULT_PARAMS = (0.5, 0.5, 0.75, 0.0)
+LRM_DEFAULT_PARAMS = (-8.0, 4.0, 5.0, 6.0)
+
+
+def _pair_mask(sum_a, sum_b):
+    """1.0 where both rows are real entities (non-empty), else 0.0."""
+    return (sum_a[:, None] > 0) & (sum_b[None, :] > 0)
+
+
+def wam(a_title, a_desc, b_title, b_desc, params, *, use_kernel=True):
+    """Weighted-average matcher strategy.  Returns f32[M, N] combined sim."""
+    stats = pairwise_stats if use_kernel else ref.pairwise_stats_ref
+    sum_at, sum_bt = ref.row_sums(a_title), ref.row_sums(b_title)
+    sum_ad, sum_bd = ref.row_sums(a_desc), ref.row_sums(b_desc)
+
+    minsum_t, _ = stats(a_title, b_title)
+    minsum_d, _ = stats(a_desc, b_desc)
+
+    s_title = ref.dice_from_stats(minsum_t, sum_at, sum_bt)
+    s_desc = ref.dice_from_stats(minsum_d, sum_ad, sum_bd)
+
+    w1, w2, threshold, margin = params[0], params[1], params[2], params[3]
+    combined = (w1 * s_title + w2 * s_desc) / (w1 + w2)
+    mask = _pair_mask(sum_at + sum_ad, sum_bt + sum_bd)
+    combined = jnp.where(mask, combined, 0.0)
+    # Threshold-discard: drop every pair that already misses the decision
+    # threshold (minus a safety margin).  This is what keeps WAM's memory
+    # per pair at ~"candidates only" (paper §5.1).
+    return jnp.where(combined >= threshold - margin, combined, 0.0)
+
+
+def lrm(a_title, a_desc, b_title, b_desc, params, *, use_kernel=True):
+    """Logistic-regression matcher strategy.  Returns f32[M, N] score."""
+    stats = pairwise_stats if use_kernel else ref.pairwise_stats_ref
+    sum_at, sum_bt = ref.row_sums(a_title), ref.row_sums(b_title)
+    sum_ad, sum_bd = ref.row_sums(a_desc), ref.row_sums(b_desc)
+    nsq_at, nsq_bt = ref.row_normsq(a_title), ref.row_normsq(b_title)
+    nsq_ad, nsq_bd = ref.row_normsq(a_desc), ref.row_normsq(b_desc)
+
+    minsum_t, dot_t = stats(a_title, b_title)
+    minsum_d, dot_d = stats(a_desc, b_desc)
+
+    s_jac = ref.jaccard_from_stats(minsum_t, sum_at, sum_bt)
+    s_tri = ref.dice_from_stats(minsum_d, sum_ad, sum_bd)
+    # Cosine over the concatenated title‖desc vector, assembled from the
+    # per-attribute stats (no third kernel call needed).
+    s_cos = ref.cosine_from_stats(
+        dot_t + dot_d, nsq_at + nsq_ad, nsq_bt + nsq_bd
+    )
+
+    w0, w1, w2, w3 = params[0], params[1], params[2], params[3]
+    z = w0 + w1 * s_jac + w2 * s_tri + w3 * s_cos
+    score = jax.nn.sigmoid(z)
+    mask = _pair_mask(sum_at + sum_ad, sum_bt + sum_bd)
+    return jnp.where(mask, score, 0.0)
+
+
+def strategy_fn(name: str):
+    if name == "wam":
+        return wam
+    if name == "lrm":
+        return lrm
+    raise ValueError(f"unknown strategy {name!r} (want one of {STRATEGIES})")
+
+
+def match_task(name: str, a_title, a_desc, b_title, b_desc, params,
+               *, use_kernel=True):
+    """Uniform entry point: one match task = one strategy evaluation."""
+    return strategy_fn(name)(
+        a_title, a_desc, b_title, b_desc, params, use_kernel=use_kernel
+    )

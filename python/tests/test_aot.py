@@ -1,0 +1,53 @@
+"""AOT lowering smoke tests: HLO text is produced and looks loadable."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.mark.parametrize("strategy", model.STRATEGIES)
+def test_lower_variant_produces_hlo_text(strategy):
+    text = aot.lower_variant(strategy, m=64, d=32)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # 5 parameters: 4 matrices + the params vector
+    assert text.count("parameter(") >= 5
+    # must be plain HLO, not a Mosaic custom call (interpret=True)
+    assert "tpu_custom_call" not in text
+    assert "mosaic" not in text.lower()
+
+
+def test_artifact_name_roundtrip():
+    assert aot.artifact_name("wam", 512) == "wam_m512_d256.hlo.txt"
+    assert aot.artifact_name("lrm", 128, 64) == "lrm_m128_d64.hlo.txt"
+
+
+def test_main_writes_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(out),
+            "--capacities",
+            "32",
+            "--feature-dim",
+            "16",
+        ],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    manifest = (out / "manifest.txt").read_text().strip().splitlines()
+    # header + one line per (strategy x capacity)
+    assert len(manifest) == 1 + len(model.STRATEGIES)
+    for line in manifest[1:]:
+        name, strategy, m, d, n_params = line.split()
+        assert (out / name).exists()
+        assert strategy in model.STRATEGIES
+        assert (int(m), int(d), int(n_params)) == (32, 16, model.N_PARAMS)

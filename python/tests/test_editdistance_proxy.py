@@ -1,0 +1,110 @@
+"""Quantify the accelerated path's edit-distance substitution.
+
+The WAM title matcher is Levenshtein similarity in the paper; the
+accelerated path uses trigram Dice on hashed q-gram vectors (DESIGN.md
+§Hardware-Adaptation).  These tests pin down that the proxy agrees with
+true edit similarity on match *decisions* for realistic product titles —
+the quantity EXPERIMENTS.md reports.
+"""
+
+import zlib
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.kernels import ref
+
+D = 256
+
+
+def levenshtein(a: str, b: str) -> int:
+    la, lb = len(a), len(b)
+    prev = list(range(lb + 1))
+    for i in range(1, la + 1):
+        cur = [i] + [0] * lb
+        for j in range(1, lb + 1):
+            cost = 0 if a[i - 1] == b[j - 1] else 1
+            cur[j] = min(prev[j] + 1, cur[j - 1] + 1, prev[j - 1] + cost)
+        prev = cur
+    return prev[lb]
+
+
+def edit_sim(a: str, b: str) -> float:
+    if not a and not b:
+        return 1.0
+    return 1.0 - levenshtein(a, b) / max(len(a), len(b))
+
+
+def trigrams(s: str):
+    s = f"##{s.lower()}##"
+    return [s[i : i + 3] for i in range(len(s) - 2)]
+
+
+def hashed_vec(s: str, d: int = D) -> np.ndarray:
+    v = np.zeros(d, dtype=np.float32)
+    for g in trigrams(s):
+        v[zlib.crc32(g.encode()) % d] += 1.0
+    return v
+
+
+TITLES = [
+    "Samsung SpinPoint F1 HD103UJ 1TB",
+    "Samsung Spinpoint F1 HD103UJ 1 TB",      # near-dup of 0
+    "Samsung SpinPoint F1 HD103UJ 1TB SATA",  # near-dup of 0
+    "Western Digital Caviar Green WD10EADS",
+    "WD Caviar Green WD10EADS 1TB",           # near-dup of 3
+    "LG GH22NS50 DVD Burner black",
+    "LG GH22NS50 DVD-Burner, black",          # near-dup of 5
+    "Plextor PX-B320SA Blu-ray Combo",
+    "TrekStor DataStation maxi m.u 1TB",
+    "Intel X25-M G2 Postville 80GB SSD",
+]
+# pairs (i, j, is_match)
+PAIRS = [
+    (0, 1, True),
+    (0, 2, True),
+    (3, 4, True),
+    (5, 6, True),
+    (0, 3, False),
+    (1, 4, False),
+    (5, 7, False),
+    (8, 9, False),
+    (2, 9, False),
+    (7, 8, False),
+]
+
+
+def test_proxy_decision_agreement():
+    """Trigram-Dice and edit similarity agree on >= 90% of decisions."""
+    thresh_edit, thresh_dice = 0.6, 0.6
+    agree = 0
+    for i, j, _ in PAIRS:
+        e = edit_sim(TITLES[i].lower(), TITLES[j].lower())
+        a = jnp.asarray(hashed_vec(TITLES[i])[None, :])
+        b = jnp.asarray(hashed_vec(TITLES[j])[None, :])
+        dice = float(ref.dice(a, b)[0, 0])
+        agree += (e >= thresh_edit) == (dice >= thresh_dice)
+    assert agree >= 9, f"only {agree}/10 decisions agree"
+
+
+def test_proxy_separates_matches_from_nonmatches():
+    dice_scores = {}
+    for i, j, is_match in PAIRS:
+        a = jnp.asarray(hashed_vec(TITLES[i])[None, :])
+        b = jnp.asarray(hashed_vec(TITLES[j])[None, :])
+        dice_scores[(i, j)] = (float(ref.dice(a, b)[0, 0]), is_match)
+    match_min = min(s for s, m in dice_scores.values() if m)
+    non_max = max(s for s, m in dice_scores.values() if not m)
+    assert match_min > non_max, (match_min, non_max)
+
+
+def test_proxy_correlates_with_edit_similarity():
+    es, ds = [], []
+    for i in range(len(TITLES)):
+        for j in range(i + 1, len(TITLES)):
+            es.append(edit_sim(TITLES[i].lower(), TITLES[j].lower()))
+            a = jnp.asarray(hashed_vec(TITLES[i])[None, :])
+            b = jnp.asarray(hashed_vec(TITLES[j])[None, :])
+            ds.append(float(ref.dice(a, b)[0, 0]))
+    r = np.corrcoef(es, ds)[0, 1]
+    assert r > 0.8, f"correlation {r}"

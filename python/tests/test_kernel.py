@@ -1,0 +1,158 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, tile choices and value distributions; every
+property asserts allclose against ``kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.similarity import (
+    _pick_tile,
+    mxu_utilization_estimate,
+    pairwise_stats,
+    vmem_footprint_bytes,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def counts(shape, seed, scale=4.0):
+    """Non-negative count-like features (hashed q-gram counts)."""
+    rng = np.random.default_rng(seed)
+    x = rng.poisson(lam=1.2, size=shape).astype(np.float32)
+    return jnp.asarray(np.minimum(x, scale * 4))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    n=st.integers(1, 48),
+    d=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_stats_match_ref_random_shapes(m, n, d, seed):
+    a = counts((m, d), seed)
+    b = counts((n, d), seed + 1)
+    minsum, dot = pairwise_stats(a, b)
+    minsum_r, dot_r = ref.pairwise_stats_ref(a, b)
+    np.testing.assert_allclose(minsum, minsum_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(dot, dot_r, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tile_m=st.sampled_from([1, 3, 8, 16, 32, 64]),
+    tile_n=st.sampled_from([1, 3, 8, 16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_stats_tile_invariance(tile_m, tile_n, seed):
+    """Result must not depend on the tiling."""
+    a = counts((24, 40), seed)
+    b = counts((36, 40), seed + 7)
+    minsum, dot = pairwise_stats(a, b, tile_m=tile_m, tile_n=tile_n)
+    minsum_r, dot_r = ref.pairwise_stats_ref(a, b)
+    np.testing.assert_allclose(minsum, minsum_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(dot, dot_r, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_stats_float_values(seed):
+    """Kernel is not count-specific: arbitrary non-negative floats."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.uniform(0, 10, size=(16, 32)).astype(np.float32))
+    b = jnp.asarray(rng.uniform(0, 10, size=(8, 32)).astype(np.float32))
+    minsum, dot = pairwise_stats(a, b)
+    minsum_r, dot_r = ref.pairwise_stats_ref(a, b)
+    np.testing.assert_allclose(minsum, minsum_r, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(dot, dot_r, rtol=1e-5, atol=1e-3)
+
+
+def test_stats_accepts_other_dtypes():
+    a = jnp.ones((8, 16), dtype=jnp.bfloat16)
+    b = jnp.ones((8, 16), dtype=jnp.int32)
+    minsum, dot = pairwise_stats(a, b)
+    assert minsum.dtype == jnp.float32 and dot.dtype == jnp.float32
+    np.testing.assert_allclose(minsum, 16.0)
+    np.testing.assert_allclose(dot, 16.0)
+
+
+def test_stats_rejects_mismatched_d():
+    with pytest.raises(ValueError):
+        pairwise_stats(jnp.ones((4, 8)), jnp.ones((4, 9)))
+
+
+def test_minsum_symmetry():
+    a = counts((20, 32), 3)
+    minsum_ab, dot_ab = pairwise_stats(a, a)
+    np.testing.assert_allclose(minsum_ab, minsum_ab.T, atol=1e-5)
+    np.testing.assert_allclose(dot_ab, dot_ab.T, atol=1e-4)
+    # diagonal of minsum == row sums; diagonal of dot == squared norms
+    np.testing.assert_allclose(
+        jnp.diag(minsum_ab), ref.row_sums(a), rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        jnp.diag(dot_ab), ref.row_normsq(a), rtol=1e-5
+    )
+
+
+def test_zero_rows_give_zero_stats():
+    a = jnp.zeros((4, 16))
+    b = counts((6, 16), 11)
+    minsum, dot = pairwise_stats(a, b)
+    assert float(jnp.abs(minsum).max()) == 0.0
+    assert float(jnp.abs(dot).max()) == 0.0
+
+
+@given(d=st.integers(1, 512))
+@settings(max_examples=30, deadline=None)
+def test_pick_tile_divides(d):
+    for pref in (1, 7, 16, 32, 600):
+        t = _pick_tile(d, pref)
+        assert 1 <= t <= max(pref, 1)
+        assert d % t == 0
+
+
+def test_similarity_ranges():
+    """dice/jaccard/cosine all live in [0, 1] for non-negative inputs."""
+    a = counts((16, 64), 5)
+    b = counts((12, 64), 6)
+    for fn in (ref.dice, ref.jaccard, ref.cosine):
+        s = np.asarray(fn(a, b))
+        assert s.min() >= -1e-6 and s.max() <= 1.0 + 1e-6
+
+
+def test_jaccard_le_dice():
+    """j = i/(x+y-i) <= 2i/(x+y) = dice, always."""
+    a = counts((10, 32), 1)
+    b = counts((14, 32), 2)
+    j = np.asarray(ref.jaccard(a, b))
+    d = np.asarray(ref.dice(a, b))
+    assert (j <= d + 1e-6).all()
+
+
+def test_identical_rows_score_one():
+    a = counts((8, 32), 9) + 1.0  # ensure non-empty
+    for fn in (ref.dice, ref.jaccard, ref.cosine):
+        s = np.asarray(fn(a, a))
+        np.testing.assert_allclose(np.diag(s), 1.0, atol=1e-4)
+
+
+def test_vmem_footprint_monotone():
+    assert vmem_footprint_bytes(32, 32, 256) < vmem_footprint_bytes(
+        64, 64, 256
+    )
+    # default tile fits a 16 MiB VMEM with headroom
+    assert vmem_footprint_bytes(32, 32, 256) < 4 * 2**20
+
+
+def test_mxu_estimate_bounds():
+    for tm, tn, d in [(8, 8, 64), (32, 32, 256), (128, 128, 128)]:
+        u = mxu_utilization_estimate(tm, tn, d)
+        assert 0.0 < u <= 1.0
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0

@@ -1,0 +1,130 @@
+"""L2 strategy graphs: kernel path vs broadcast path, masks, params."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+WAM_P = jnp.asarray(model.WAM_DEFAULT_PARAMS, dtype=jnp.float32)
+LRM_P = jnp.asarray(model.LRM_DEFAULT_PARAMS, dtype=jnp.float32)
+
+
+def counts(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.poisson(1.5, size=shape).astype(np.float32))
+
+
+def inputs(m, n, d, seed):
+    return (
+        counts((m, d), seed),
+        counts((m, d), seed + 1),
+        counts((n, d), seed + 2),
+        counts((n, d), seed + 3),
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(2, 24),
+    n=st.integers(2, 24),
+    d=st.integers(4, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_wam_kernel_matches_broadcast(m, n, d, seed):
+    at, ad, bt, bd = inputs(m, n, d, seed)
+    # margin=1 keeps discard from zeroing, so full matrices compare
+    p = jnp.asarray([0.5, 0.5, 0.75, 1.0], dtype=jnp.float32)
+    k = model.wam(at, ad, bt, bd, p, use_kernel=True)
+    r = model.wam(at, ad, bt, bd, p, use_kernel=False)
+    np.testing.assert_allclose(k, r, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(2, 24),
+    n=st.integers(2, 24),
+    d=st.integers(4, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lrm_kernel_matches_broadcast(m, n, d, seed):
+    at, ad, bt, bd = inputs(m, n, d, seed)
+    k = model.lrm(at, ad, bt, bd, LRM_P, use_kernel=True)
+    r = model.lrm(at, ad, bt, bd, LRM_P, use_kernel=False)
+    np.testing.assert_allclose(k, r, rtol=1e-5, atol=1e-5)
+
+
+def test_wam_shapes_and_range():
+    at, ad, bt, bd = inputs(16, 8, 32, 0)
+    p = jnp.asarray([0.6, 0.4, 0.0, 0.0], dtype=jnp.float32)
+    out = model.wam(at, ad, bt, bd, p)
+    assert out.shape == (16, 8)
+    o = np.asarray(out)
+    assert o.min() >= 0.0 and o.max() <= 1.0 + 1e-6
+
+
+def test_wam_threshold_discard():
+    """Everything below threshold-margin must be exactly zero."""
+    at, ad, bt, bd = inputs(16, 16, 32, 42)
+    p = jnp.asarray([0.5, 0.5, 0.9, 0.1], dtype=jnp.float32)
+    out = np.asarray(model.wam(at, ad, bt, bd, p))
+    assert ((out == 0.0) | (out >= 0.8 - 1e-6)).all()
+
+
+def test_wam_identical_partition_diagonal():
+    at, ad, _, _ = inputs(12, 12, 48, 7)
+    at, ad = at + 1.0, ad + 1.0  # non-empty rows
+    p = jnp.asarray([0.5, 0.5, 0.75, 0.0], dtype=jnp.float32)
+    out = np.asarray(model.wam(at, ad, at, ad, p))
+    np.testing.assert_allclose(np.diag(out), 1.0, atol=1e-4)
+
+
+def test_padding_rows_masked():
+    at, ad, bt, bd = inputs(8, 8, 32, 3)
+    # rows 5.. of A are padding (all-zero in both attributes)
+    at = at.at[5:].set(0.0)
+    ad = ad.at[5:].set(0.0)
+    wam_out = np.asarray(
+        model.wam(at, ad, bt, bd, jnp.asarray([0.5, 0.5, 0.0, 0.0]))
+    )
+    lrm_out = np.asarray(model.lrm(at, ad, bt, bd, LRM_P))
+    assert (wam_out[5:] == 0.0).all()
+    assert (lrm_out[5:] == 0.0).all()
+
+
+def test_lrm_is_sigmoid_of_linear_combo():
+    at, ad, bt, bd = inputs(6, 6, 32, 9)
+    s_jac = np.asarray(ref.jaccard(at, bt))
+    s_tri = np.asarray(ref.dice(ad, bd))
+    dot = np.asarray(ref.pairwise_stats_ref(at, bt)[1]) + np.asarray(
+        ref.pairwise_stats_ref(ad, bd)[1]
+    )
+    nsq_a = np.asarray(ref.row_normsq(at) + ref.row_normsq(ad))
+    nsq_b = np.asarray(ref.row_normsq(bt) + ref.row_normsq(bd))
+    s_cos = np.asarray(
+        ref.cosine_from_stats(jnp.asarray(dot), jnp.asarray(nsq_a), jnp.asarray(nsq_b))
+    )
+    w0, w1, w2, w3 = map(float, LRM_P)
+    expect = 1.0 / (1.0 + np.exp(-(w0 + w1 * s_jac + w2 * s_tri + w3 * s_cos)))
+    got = np.asarray(model.lrm(at, ad, bt, bd, LRM_P))
+    np.testing.assert_allclose(got, expect, rtol=1e-4, atol=1e-5)
+
+
+def test_lrm_monotone_in_similarity():
+    """A pair identical in all attributes scores higher than a disjoint one."""
+    d = 32
+    x = jnp.zeros((2, d)).at[0, :8].set(2.0).at[1, 16:24].set(2.0)
+    out = np.asarray(model.lrm(x, x, x, x, LRM_P))
+    assert out[0, 0] > out[0, 1]
+    assert out[1, 1] > out[1, 0]
+
+
+def test_strategy_fn_dispatch():
+    assert model.strategy_fn("wam") is model.wam
+    assert model.strategy_fn("lrm") is model.lrm
+    try:
+        model.strategy_fn("nope")
+        assert False
+    except ValueError:
+        pass

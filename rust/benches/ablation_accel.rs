@@ -1,0 +1,76 @@
+//! Ablation: pure-Rust matchers vs the accelerated PJRT path.
+//!
+//! Compares per-task latency of the RustExecutor (exact matchers) with
+//! the PjrtExecutor (AOT-compiled XLA module whose hot loop is the
+//! Pallas similarity kernel under interpret=True) and reports their
+//! match-decision agreement.  Skips gracefully when `make artifacts`
+//! has not been run.
+
+mod common;
+
+use pem::bench::Bencher;
+use pem::datagen::GeneratorConfig;
+use pem::matching::{MatchStrategy, StrategyKind};
+use pem::model::EntityId;
+use pem::partition::partition_size_based;
+use pem::runtime::{default_artifact_dir, MatchEngine, PjrtExecutor};
+use pem::store::DataService;
+use pem::worker::{RustExecutor, TaskExecutor};
+use std::sync::Arc;
+
+fn main() {
+    pem::bench::report_header(
+        "Ablation — Rust matchers vs accelerated PJRT path",
+        "same decisions; latency comparison per 64x64 match task",
+    );
+    let dir = default_artifact_dir();
+    let engine = match MatchEngine::new(&dir) {
+        Ok(e) => Arc::new(e),
+        Err(e) => {
+            eprintln!(
+                "skipping: artifacts not available ({e:#}); run `make artifacts`"
+            );
+            return;
+        }
+    };
+
+    let data = GeneratorConfig::tiny().with_entities(128).generate();
+    let ids: Vec<EntityId> =
+        data.dataset.entities.iter().map(|e| e.id).collect();
+    let parts = partition_size_based(&ids, 64);
+    let store = DataService::build(&data.dataset, &parts);
+    let p0 = store.fetch(pem::partition::PartitionId(0));
+    let p1 = store.fetch(pem::partition::PartitionId(1));
+
+    let mut b = Bencher::default();
+    for kind in [StrategyKind::Wam, StrategyKind::Lrm] {
+        let strategy = MatchStrategy::new(kind);
+        let rust = RustExecutor::new(strategy);
+        let pjrt = PjrtExecutor::new(engine.clone(), strategy);
+
+        // intra-partition: injected duplicates are id-adjacent, so the
+        // agreement check needs p0 × p0
+        let r_rust = rust.execute(&p0, &p0, true);
+        let r_pjrt = pjrt.execute(&p0, &p0, true);
+        let set = |cs: &[pem::model::Correspondence]| {
+            cs.iter().map(|c| c.pair()).collect::<std::collections::HashSet<_>>()
+        };
+        let (sr, sp) = (set(&r_rust), set(&r_pjrt));
+        let inter = sr.intersection(&sp).count();
+        let union = sr.union(&sp).count().max(1);
+        println!(
+            "{}: rust={} pjrt={} decision-jaccard={:.2}",
+            kind.name(),
+            sr.len(),
+            sp.len(),
+            inter as f64 / union as f64
+        );
+
+        b.bench(&format!("{}/rust 64x64 task", kind.name()), || {
+            std::hint::black_box(rust.execute(&p0, &p1, false));
+        });
+        b.bench(&format!("{}/pjrt 64x64 task", kind.name()), || {
+            std::hint::black_box(pjrt.execute(&p0, &p1, false));
+        });
+    }
+}

@@ -1,0 +1,61 @@
+//! Ablation: misc-block share sweep.
+//!
+//! The misc block must be matched against everything (paper §3.2), so
+//! the share of entities with missing blocking keys directly controls
+//! how much of the blocking benefit survives.  This sweep varies the
+//! generator's missing-product-type fraction and reports task counts,
+//! comparisons and simulated time.
+
+mod common;
+
+use pem::cluster::ComputingEnv;
+use pem::coordinator::{run_workflow, WorkflowConfig};
+use pem::datagen::GeneratorConfig;
+use pem::matching::StrategyKind;
+use pem::util::{fmt_nanos, GIB};
+
+fn main() {
+    pem::bench::report_header(
+        "Ablation — misc-block share",
+        "more unblockable entities → more misc tasks → less blocking benefit",
+    );
+    let n = if common::paper_scale() { 20_000 } else { 4_000 };
+    let ce = ComputingEnv::new(2, 4, 3 * GIB);
+
+    println!("misc%  partitions  misc-parts  tasks  comparisons  time");
+    for miss in [0.0, 0.05, 0.17, 0.30, 0.50] {
+        let data = GeneratorConfig {
+            n_entities: n,
+            missing_product_type: miss,
+            ..GeneratorConfig::default()
+        }
+        .generate();
+        let mut cfg = WorkflowConfig::blocking_based(StrategyKind::Wam);
+        {
+            use pem::coordinator::workflow::{
+                default_max_size, default_min_size,
+            };
+            use pem::coordinator::PartitioningChoice;
+            if let PartitioningChoice::BlockingBased {
+                max_size, min_size, ..
+            } = &mut cfg.partitioning
+            {
+                *max_size =
+                    Some(common::scaled(default_max_size(StrategyKind::Wam)));
+                *min_size =
+                    common::scaled(default_min_size(StrategyKind::Wam));
+            }
+        }
+        common::apply_net(&mut cfg);
+            let out = run_workflow(&data, &cfg, &ce).expect("workflow");
+        println!(
+            "{:>4.0}%  {:>10}  {:>10}  {:>5}  {:>11}  {}",
+            miss * 100.0,
+            out.n_partitions,
+            out.n_misc_partitions,
+            out.n_tasks,
+            out.metrics.comparisons,
+            fmt_nanos(out.metrics.makespan_ns),
+        );
+    }
+}

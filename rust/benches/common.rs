@@ -1,0 +1,96 @@
+//! Shared helpers for the per-figure/table reproduction benches.
+//!
+//! Every bench regenerates one table or figure of the paper's §5 on the
+//! synthetic workload (DESIGN.md §Substitutions), printing the same rows
+//! or series the paper reports.  Scale flags:
+//!
+//! * default       — scaled-down workload, finishes in ~a minute
+//! * `--paper-scale` / `PEM_PAPER_SCALE=1` — the paper's 20k/114k sizes
+
+#![allow(dead_code)]
+
+use pem::cluster::ComputingEnv;
+use pem::datagen::{GeneratedData, GeneratorConfig};
+use pem::engine::{calibrate, CostParams};
+use pem::matching::StrategyKind;
+use pem::util::GIB;
+
+pub fn paper_scale() -> bool {
+    std::env::args().any(|a| a == "--paper-scale")
+        || std::env::var("PEM_PAPER_SCALE").is_ok_and(|v| v != "0")
+}
+
+/// The small match problem: 20,000 offers (paper) or a scaled-down 4,000.
+pub fn small_problem() -> GeneratedData {
+    let n = if paper_scale() { 20_000 } else { 4_000 };
+    GeneratorConfig::default().with_entities(n).generate()
+}
+
+/// The large match problem: 114,000 offers (paper) or 12,000 scaled.
+pub fn large_problem() -> GeneratedData {
+    let n = if paper_scale() { 114_000 } else { 12_000 };
+    GeneratorConfig::default().with_entities(n).generate()
+}
+
+/// Scale partition-size parameters in proportion to the dataset scale so
+/// task counts keep the paper's shape on scaled-down runs.
+pub fn scaled(size: usize) -> usize {
+    if paper_scale() {
+        size
+    } else {
+        (size / 5).max(10)
+    }
+}
+
+/// Node memory: the paper's 3 GB heap, scaled by the square of the
+/// partition-size scale on scaled-down runs (task memory is c_ms·m², so
+/// memory must shrink with m² for the paging effects of Figs 5/6 to
+/// appear at reduced scale).
+pub fn node_mem() -> u64 {
+    if paper_scale() {
+        3 * GIB
+    } else {
+        3 * GIB / 25
+    }
+}
+
+/// Paper testbed slice with `cores` total cores (4 cores per node).
+pub fn testbed(cores: usize) -> ComputingEnv {
+    let nodes = cores.div_ceil(4).max(1);
+    let per_node = cores.div_ceil(nodes);
+    ComputingEnv::new(nodes, per_node, node_mem())
+}
+
+/// Data-service cost model, scaled: on reduced workloads partitions are
+/// 5× smaller and per-task compute 25× smaller, so the DBMS fetch path
+/// must scale down too or fetch would dominate in a way the paper's
+/// full-scale runs never saw.
+pub fn data_net() -> pem::net::CostModel {
+    if paper_scale() {
+        pem::net::CostModel::dbms()
+    } else {
+        pem::net::CostModel {
+            latency_ns: 1_400_000,      // 7 ms / 5
+            bandwidth_bps: 75_000_000,  // 15 MB/s × 5
+        }
+    }
+}
+
+/// Apply the scaled cost models to a workflow config.
+pub fn apply_net(cfg: &mut pem::coordinator::WorkflowConfig) {
+    cfg.data_net = data_net();
+}
+
+/// Calibrate both strategies once on a dataset sample.
+pub fn calibrated(data: &GeneratedData) -> (CostParams, CostParams) {
+    let wam =
+        calibrate::calibrated_params(&data.dataset, StrategyKind::Wam, 100, 1);
+    let lrm =
+        calibrate::calibrated_params(&data.dataset, StrategyKind::Lrm, 100, 1);
+    (wam, lrm)
+}
+
+/// Format virtual nanoseconds as minutes (the paper's tables are minutes).
+pub fn as_min(ns: u64) -> f64 {
+    ns as f64 / 60e9
+}

@@ -1,0 +1,55 @@
+//! Figure 5: execution time and speedup per multiprocessor node.
+//!
+//! Paper setup: small problem (20k), size-based partitioning, m = 500,
+//! one 4-core node, 1–8 match threads, strategies WAM and LRM.
+//! Expected shape: WAM near-linear to 4 threads (≈3.5×), LRM ≈2.5×;
+//! beyond 4 threads WAM gains marginally, LRM not at all.
+
+mod common;
+
+use pem::cluster::ComputingEnv;
+use pem::coordinator::workflow::EngineChoice;
+use pem::coordinator::{run_workflow, PartitioningChoice, WorkflowConfig};
+use pem::matching::StrategyKind;
+use pem::metrics::speedups;
+use pem::util::fmt_nanos;
+
+fn main() {
+    pem::bench::report_header(
+        "Figure 5 — speedup vs #threads on one node",
+        "WAM ~3.5x at 4 threads, LRM ~2.5x; little beyond 4 threads",
+    );
+    let data = common::small_problem();
+    let m = common::scaled(500);
+    let (cost_wam, cost_lrm) = common::calibrated(&data);
+
+    for kind in [StrategyKind::Wam, StrategyKind::Lrm] {
+        let mut cfg = WorkflowConfig::size_based(kind).with_cost(
+            if kind == StrategyKind::Wam { cost_wam } else { cost_lrm },
+        );
+        cfg.partitioning = PartitioningChoice::SizeBased { max_size: Some(m) };
+        cfg.engine = EngineChoice::Simulated;
+        println!("strategy {} (m={m})", kind.name());
+        println!("threads  time          speedup");
+        let mut times = Vec::new();
+        for threads in 1..=8 {
+            let ce = ComputingEnv::new(1, 4, common::node_mem()).with_threads(threads);
+            common::apply_net(&mut cfg);
+            let out = run_workflow(&data, &cfg, &ce).expect("workflow");
+            times.push(out.metrics.makespan_ns);
+            let s = speedups(&times);
+            println!(
+                "{:>7}  {:>12}  {:>7.2}",
+                threads,
+                fmt_nanos(out.metrics.makespan_ns),
+                s.last().unwrap()
+            );
+        }
+        let s = speedups(&times);
+        // shape assertions (soft): parallel speedup at 4 threads, WAM > LRM
+        println!(
+            "=> speedup@4 = {:.2}, speedup@8 = {:.2}\n",
+            s[3], s[7]
+        );
+    }
+}

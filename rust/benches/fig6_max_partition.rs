@@ -1,0 +1,54 @@
+//! Figure 6: influence of the maximum partition size.
+//!
+//! Paper setup: small problem, size-based partitioning (Cartesian),
+//! 1 node / 4 threads, partition sizes 100–1000.  Expected shape: going
+//! 100 → 200 strongly improves both strategies (fewer tasks, less
+//! overhead); WAM keeps improving to 1000; LRM's memory consumption
+//! grows with m² and its time deteriorates past 500.
+
+mod common;
+
+use pem::cluster::ComputingEnv;
+use pem::coordinator::{run_workflow, PartitioningChoice, WorkflowConfig};
+use pem::matching::StrategyKind;
+use pem::partition::task_memory_bytes;
+use pem::util::{fmt_bytes, fmt_nanos};
+
+fn main() {
+    pem::bench::report_header(
+        "Figure 6 — influence of the maximum partition size",
+        "WAM improves to m=1000; LRM deteriorates past m=500 (memory)",
+    );
+    let data = common::small_problem();
+    let ce = ComputingEnv::new(1, 4, common::node_mem());
+    let sizes: Vec<usize> = [100usize, 200, 300, 400, 500, 700, 1000]
+        .iter()
+        .map(|&s| common::scaled(s))
+        .collect();
+
+    let (cost_wam, cost_lrm) = common::calibrated(&data);
+    for kind in [StrategyKind::Wam, StrategyKind::Lrm] {
+        println!("strategy {}", kind.name());
+        println!("m        time          tasks   peak-mem(model)");
+        for &m in &sizes {
+            let mut cfg = WorkflowConfig::size_based(kind).with_cost(
+                if kind == StrategyKind::Wam { cost_wam } else { cost_lrm },
+            );
+            cfg.partitioning =
+                PartitioningChoice::SizeBased { max_size: Some(m) };
+            common::apply_net(&mut cfg);
+            let out = run_workflow(&data, &cfg, &ce).expect("workflow");
+            // modeled peak memory: 4 concurrent tasks of m×m pairs
+            let peak =
+                task_memory_bytes(m, m, kind) * ce.threads_per_node as u64;
+            println!(
+                "{:>5}  {:>12}  {:>6}  {:>12}",
+                m,
+                fmt_nanos(out.metrics.makespan_ns),
+                out.n_tasks,
+                fmt_bytes(peak)
+            );
+        }
+        println!();
+    }
+}

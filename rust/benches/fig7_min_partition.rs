@@ -1,0 +1,62 @@
+//! Figure 7: influence of the minimum partition size (partition tuning).
+//!
+//! Paper setup: small problem, blocking on the **manufacturer**
+//! attribute, 1 node / 4 threads, max partition size 1000 (WAM) / 500
+//! (LRM), minimum partition size swept 1–700.  Expected shape: merging
+//! small blocks sharply cuts the number of match tasks and execution
+//! time, especially for LRM (more tasks due to the smaller max size);
+//! beyond a favorable minimum (200 WAM / 100 LRM) gains flatten or
+//! reverse (aggregation introduces unnecessary comparisons).
+
+mod common;
+
+use pem::blocking::BlockingMethod;
+use pem::cluster::ComputingEnv;
+use pem::coordinator::{run_workflow, PartitioningChoice, WorkflowConfig};
+use pem::matching::StrategyKind;
+use pem::util::fmt_nanos;
+
+fn main() {
+    pem::bench::report_header(
+        "Figure 7 — influence of the minimum partition size",
+        "merging small blocks cuts tasks/overhead; flattens past ~200/100",
+    );
+    let data = common::small_problem();
+    let ce = ComputingEnv::new(1, 4, common::node_mem());
+    let mins: Vec<usize> = [1usize, 50, 100, 200, 300, 500, 700]
+        .iter()
+        .map(|&s| if s == 1 { 1 } else { common::scaled(s) })
+        .collect();
+
+    let (cost_wam, cost_lrm) = common::calibrated(&data);
+    for (kind, max) in
+        [(StrategyKind::Wam, 1000), (StrategyKind::Lrm, 500)]
+    {
+        let max = common::scaled(max);
+        println!("strategy {} (max={max}, blocking=manufacturer)", kind.name());
+        println!("min      time          tasks  comparisons(model)");
+        for &min in &mins {
+            if min > max {
+                continue;
+            }
+            let mut cfg = WorkflowConfig::blocking_based(kind).with_cost(
+                if kind == StrategyKind::Wam { cost_wam } else { cost_lrm },
+            );
+            cfg.partitioning = PartitioningChoice::BlockingBased {
+                method: BlockingMethod::manufacturer(),
+                max_size: Some(max),
+                min_size: min,
+            };
+            common::apply_net(&mut cfg);
+            let out = run_workflow(&data, &cfg, &ce).expect("workflow");
+            println!(
+                "{:>5}  {:>12}  {:>5}  {:>12}",
+                min,
+                fmt_nanos(out.metrics.makespan_ns),
+                out.n_tasks,
+                out.metrics.comparisons,
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,69 @@
+//! Figure 8: speedup on the small match problem, scaling to 4 nodes /
+//! 16 cores, size-based vs blocking-based partitioning, WAM and LRM.
+//!
+//! Expected shape: near-linear speedup to 16 cores (up to ~14×) for
+//! *both* partitioning strategies; blocking-based is faster in absolute
+//! time; LRM consistently slower than WAM.
+
+mod common;
+
+use pem::coordinator::{run_workflow, WorkflowConfig};
+use pem::matching::StrategyKind;
+use pem::metrics::speedups;
+use pem::util::fmt_nanos;
+
+fn main() {
+    pem::bench::report_header(
+        "Figure 8 — speedup, small problem, 1..16 cores",
+        "near-linear to 16 cores (~14x) for both partitionings; WAM < LRM time",
+    );
+    let data = common::small_problem();
+    let cores_list = [1usize, 2, 4, 8, 12, 16];
+    let (cost_wam, cost_lrm) = common::calibrated(&data);
+
+    for kind in [StrategyKind::Wam, StrategyKind::Lrm] {
+        let cost = if kind == StrategyKind::Wam { cost_wam } else { cost_lrm };
+        for (pname, cfg) in [
+            ("size-based", WorkflowConfig::size_based(kind)),
+            ("blocking-based", WorkflowConfig::blocking_based(kind)),
+        ] {
+            let mut cfg = cfg.with_cost(cost);
+            // scale tuning bounds with the dataset
+            scale_partitioning(&mut cfg, kind);
+            println!("strategy {} / {pname}", kind.name());
+            println!("cores  time          speedup  tasks");
+            let mut times = Vec::new();
+            for &cores in &cores_list {
+                let ce = common::testbed(cores);
+                common::apply_net(&mut cfg);
+            let out = run_workflow(&data, &cfg, &ce).expect("workflow");
+                times.push(out.metrics.makespan_ns);
+                let s = speedups(&times);
+                println!(
+                    "{:>5}  {:>12}  {:>7.2}  {}",
+                    cores,
+                    fmt_nanos(out.metrics.makespan_ns),
+                    s.last().unwrap(),
+                    out.n_tasks
+                );
+            }
+            println!();
+        }
+    }
+}
+
+fn scale_partitioning(cfg: &mut WorkflowConfig, kind: StrategyKind) {
+    use pem::coordinator::workflow::{default_max_size, default_min_size};
+    use pem::coordinator::PartitioningChoice;
+    match &mut cfg.partitioning {
+        PartitioningChoice::SizeBased { max_size } => {
+            *max_size = Some(common::scaled(default_max_size(kind)));
+        }
+        PartitioningChoice::BlockingBased {
+            max_size, min_size, ..
+        } => {
+            *max_size = Some(common::scaled(default_max_size(kind)));
+            *min_size = common::scaled(default_min_size(kind));
+        }
+    }
+}

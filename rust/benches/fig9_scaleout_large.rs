@@ -1,0 +1,86 @@
+//! Figure 9: speedup on the large match problem (114k offers),
+//! blocking-based partitioning only (the Cartesian product — ~6.5
+//! billion pairs — is deliberately not evaluated, as in the paper).
+//!
+//! Expected shape: ~1,200 match tasks for WAM vs ~3,900 for LRM (smaller
+//! max partition size); more than half the tasks involve misc
+//! sub-partitions; linear speedup to 16 cores; WAM ≈ 6 h → 24 min,
+//! LRM ≈ 8 h → 51 min on the paper's hardware.
+
+mod common;
+
+use pem::coordinator::{run_workflow, WorkflowConfig};
+use pem::matching::StrategyKind;
+use pem::metrics::speedups;
+use pem::partition::generate_tasks;
+use pem::util::fmt_nanos;
+
+fn main() {
+    pem::bench::report_header(
+        "Figure 9 — speedup, large problem, blocking-based",
+        "~1200 tasks WAM / ~3900 LRM; >50% misc-involved; linear to 16 cores",
+    );
+    let data = common::large_problem();
+    let cores_list = [1usize, 2, 4, 8, 12, 16];
+    let (cost_wam, cost_lrm) = common::calibrated(&data);
+
+    for kind in [StrategyKind::Wam, StrategyKind::Lrm] {
+        let mut cfg = WorkflowConfig::blocking_based(kind).with_cost(
+            if kind == StrategyKind::Wam { cost_wam } else { cost_lrm },
+        );
+        if !common::paper_scale() {
+            use pem::coordinator::workflow::{
+                default_max_size, default_min_size,
+            };
+            use pem::coordinator::PartitioningChoice;
+            if let PartitioningChoice::BlockingBased {
+                max_size,
+                min_size,
+                ..
+            } = &mut cfg.partitioning
+            {
+                *max_size = Some(common::scaled(default_max_size(kind)));
+                *min_size = common::scaled(default_min_size(kind));
+            }
+        }
+
+        // task structure report (misc share)
+        let ce1 = common::testbed(1);
+        let parts = pem::coordinator::workflow::build_partitions(
+            &data, &cfg, &ce1,
+        )
+        .expect("partitions");
+        let tasks = generate_tasks(&parts);
+        let misc: std::collections::HashSet<_> =
+            parts.misc_ids().into_iter().collect();
+        let misc_tasks = tasks
+            .iter()
+            .filter(|t| misc.contains(&t.left) || misc.contains(&t.right))
+            .count();
+        println!(
+            "strategy {}: partitions={} (misc {}), tasks={} ({}% misc-involved)",
+            kind.name(),
+            parts.len(),
+            parts.n_misc(),
+            tasks.len(),
+            100 * misc_tasks / tasks.len().max(1)
+        );
+
+        println!("cores  time          speedup");
+        let mut times = Vec::new();
+        for &cores in &cores_list {
+            let ce = common::testbed(cores);
+            common::apply_net(&mut cfg);
+            let out = run_workflow(&data, &cfg, &ce).expect("workflow");
+            times.push(out.metrics.makespan_ns);
+            let s = speedups(&times);
+            println!(
+                "{:>5}  {:>12}  {:>7.2}",
+                cores,
+                fmt_nanos(out.metrics.makespan_ns),
+                s.last().unwrap()
+            );
+        }
+        println!();
+    }
+}

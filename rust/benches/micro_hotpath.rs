@@ -1,0 +1,148 @@
+//! Micro-benchmarks of the L3 hot paths — the §Perf working set.
+//!
+//! Covers the units the profiler fingers: matcher inner loops, feature
+//! construction, scheduler assignment, LRU cache ops, feature-matrix
+//! assembly, and one full simulated workflow.
+
+mod common;
+
+use pem::bench::Bencher;
+use pem::coordinator::scheduler::{Policy, Scheduler, ServiceId};
+use pem::coordinator::{run_workflow, WorkflowConfig};
+use pem::datagen::GeneratorConfig;
+use pem::features::{EntityFeatures, QGramSet, DEFAULT_DIM};
+use pem::matching::{
+    cosine_concat, editdist, jaccard, trigram_dice, MatchStrategy,
+    StrategyKind,
+};
+use pem::model::EntityId;
+use pem::partition::{generate_tasks, partition_size_based, MatchTask, PartitionId};
+use pem::util::LruCache;
+
+fn main() {
+    pem::bench::report_header(
+        "Micro — L3 hot paths",
+        "per-unit costs feeding EXPERIMENTS.md §Perf",
+    );
+    let data = GeneratorConfig::tiny().with_entities(400).generate();
+    let feats: Vec<EntityFeatures> = data
+        .dataset
+        .entities
+        .iter()
+        .map(|e| EntityFeatures::of(e, &data.dataset))
+        .collect();
+    let mut b = Bencher::default();
+
+    // matcher kernels
+    b.bench("edit_similarity (full)", || {
+        for i in 0..40 {
+            std::hint::black_box(editdist::edit_similarity(
+                &feats[i].title_norm,
+                &feats[i + 40].title_norm,
+            ));
+        }
+    });
+    b.bench("edit_similarity_min (banded 0.5)", || {
+        for i in 0..40 {
+            std::hint::black_box(editdist::edit_similarity_min(
+                &feats[i].title_norm,
+                &feats[i + 40].title_norm,
+                0.5,
+            ));
+        }
+    });
+    b.bench("trigram_dice", || {
+        for i in 0..40 {
+            std::hint::black_box(trigram_dice(
+                &feats[i].desc_grams,
+                &feats[i + 40].desc_grams,
+            ));
+        }
+    });
+    b.bench("jaccard tokens", || {
+        for i in 0..40 {
+            std::hint::black_box(jaccard(
+                &feats[i].title_tokens,
+                &feats[i + 40].title_tokens,
+            ));
+        }
+    });
+    b.bench("cosine_concat (1024-d)", || {
+        for i in 0..8 {
+            std::hint::black_box(cosine_concat(
+                &feats[i].title_grams,
+                &feats[i].desc_grams,
+                &feats[i + 40].title_grams,
+                &feats[i + 40].desc_grams,
+            ));
+        }
+    });
+    b.bench("wam strategy pair", || {
+        let s = MatchStrategy::new(StrategyKind::Wam);
+        for i in 0..40 {
+            std::hint::black_box(s.similarity(&feats[i], &feats[i + 40]));
+        }
+    });
+    b.bench("lrm strategy pair", || {
+        let s = MatchStrategy::new(StrategyKind::Lrm);
+        for i in 0..8 {
+            std::hint::black_box(s.similarity(&feats[i], &feats[i + 40]));
+        }
+    });
+
+    // feature construction
+    b.bench("EntityFeatures::of", || {
+        for e in data.dataset.entities.iter().take(20) {
+            std::hint::black_box(EntityFeatures::of(e, &data.dataset));
+        }
+    });
+    b.bench("hashed_counts 256-d", || {
+        for f in feats.iter().take(50) {
+            std::hint::black_box(f.title_grams.hashed_counts(DEFAULT_DIM));
+        }
+    });
+    b.bench("feature matrix 128x256", || {
+        let grams: Vec<&QGramSet> =
+            feats.iter().take(128).map(|f| &f.title_grams).collect();
+        std::hint::black_box(
+            pem::features::FeatureMatrix::from_qgrams(&grams, 128, 256),
+        );
+    });
+
+    // scheduler + cache
+    let ids: Vec<EntityId> =
+        data.dataset.entities.iter().map(|e| e.id).collect();
+    let parts = partition_size_based(&ids, 20);
+    let tasks: Vec<MatchTask> = generate_tasks(&parts);
+    b.bench(&format!("scheduler affinity assign ({} tasks)", tasks.len()), || {
+        let mut s = Scheduler::new(tasks.clone(), Policy::Affinity);
+        let mut held: Vec<MatchTask> = Vec::new();
+        while let Some(t) = s.next_task(ServiceId(0)) {
+            held.push(t);
+            if held.len() > 4 {
+                let t = held.remove(0);
+                s.report_complete(ServiceId(0), t.id, t.needed_partitions());
+            }
+        }
+        for t in held.drain(..) {
+            s.report_complete(ServiceId(0), t.id, vec![]);
+        }
+    });
+    b.bench("lru cache get/put (c=16)", || {
+        let mut c: LruCache<PartitionId, u64> = LruCache::new(16);
+        for i in 0..200u32 {
+            let id = PartitionId(i % 24);
+            if c.get(&id).is_none() {
+                c.put(id, i as u64);
+            }
+        }
+    });
+
+    // end-to-end simulated workflow (no calibration for stability)
+    b.bench("simulated workflow (tiny, 16 cores)", || {
+        let mut cfg = WorkflowConfig::blocking_based(StrategyKind::Wam);
+        cfg.calibrate = false;
+        let out = run_workflow(&data, &cfg, &common::testbed(16)).unwrap();
+        std::hint::black_box(out.metrics.makespan_ns);
+    });
+}

@@ -1,0 +1,79 @@
+//! Tables 1 & 2: caching + affinity-based scheduling on the large
+//! match problem (blocking-based partitioning).
+//!
+//! Paper setup: large problem; 306 partitions incl. 7 misc; cache
+//! capacity c = 16 partitions per match node (~5% of input); cores 1, 2,
+//! 4, 8, 12, 16.  Reported: t_nc (no cache), t_c (cache), Δ, Δ/t_nc and
+//! the hit ratio `hr`.  Expected shape: hr ≈ 76–83%, improvements
+//! ~10–26% (largest at 1 core), similar speedup with and without cache.
+
+mod common;
+
+use pem::coordinator::{run_workflow, WorkflowConfig};
+use pem::matching::StrategyKind;
+use pem::util::stats::Table;
+
+const CACHE_CAPACITY: usize = 16;
+
+fn main() {
+    pem::bench::report_header(
+        "Tables 1 & 2 — execution times with/without partition caching",
+        "hr 76-83%, Δ/t_nc ≈ 10-26%, best at 1 core",
+    );
+    let data = common::large_problem();
+    let cores_list = [1usize, 2, 4, 8, 12, 16];
+    let (cost_wam, cost_lrm) = common::calibrated(&data);
+
+    for kind in [StrategyKind::Wam, StrategyKind::Lrm] {
+        let mut base = WorkflowConfig::blocking_based(kind).with_cost(
+            if kind == StrategyKind::Wam { cost_wam } else { cost_lrm },
+        );
+        if !common::paper_scale() {
+            use pem::coordinator::workflow::{
+                default_max_size, default_min_size,
+            };
+            use pem::coordinator::PartitioningChoice;
+            if let PartitioningChoice::BlockingBased {
+                max_size,
+                min_size,
+                ..
+            } = &mut base.partitioning
+            {
+                *max_size = Some(common::scaled(default_max_size(kind)));
+                *min_size = common::scaled(default_min_size(kind));
+            }
+        }
+
+        let mut table = Table::new(vec![
+            "cores", "t_nc(min)", "t_c(min)", "delta", "delta/t_nc", "hr",
+        ]);
+        for &cores in &cores_list {
+            let ce = common::testbed(cores);
+            common::apply_net(&mut base);
+            let nc = run_workflow(&data, &base.clone().with_cache(0), &ce)
+                .expect("nc");
+            let c = run_workflow(
+                &data,
+                &base.clone().with_cache(CACHE_CAPACITY),
+                &ce,
+            )
+            .expect("c");
+            let t_nc = common::as_min(nc.metrics.makespan_ns);
+            let t_c = common::as_min(c.metrics.makespan_ns);
+            table.row(vec![
+                format!("{cores}"),
+                format!("{t_nc:.2}"),
+                format!("{t_c:.2}"),
+                format!("{:.2}", t_nc - t_c),
+                format!("{:.0}%", 100.0 * (t_nc - t_c) / t_nc.max(1e-12)),
+                format!("{:.0}%", 100.0 * c.metrics.hit_ratio()),
+            ]);
+        }
+        println!(
+            "Table {} — {} (c = {CACHE_CAPACITY})",
+            if kind == StrategyKind::Wam { 1 } else { 2 },
+            kind.name()
+        );
+        println!("{}", table.render());
+    }
+}

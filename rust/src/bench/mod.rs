@@ -1,0 +1,173 @@
+//! In-tree micro-benchmark harness (std-only replacement for criterion —
+//! unavailable offline).
+//!
+//! `cargo bench` targets (`rust/benches/*.rs`, `harness = false`) use
+//! [`Bencher`] for timed kernels and the free functions here to render
+//! the per-figure/table experiment reports.
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Measurement configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop once this much time has been spent measuring.
+    pub time_budget: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 50,
+            time_budget: Duration::from_secs(3),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Quick mode for CI-ish runs (env `PEM_BENCH_QUICK=1`).
+    pub fn from_env() -> BenchConfig {
+        if std::env::var("PEM_BENCH_QUICK").is_ok_and(|v| v != "0") {
+            BenchConfig {
+                warmup_iters: 1,
+                min_iters: 2,
+                max_iters: 5,
+                time_budget: Duration::from_millis(300),
+            }
+        } else {
+            BenchConfig::default()
+        }
+    }
+}
+
+/// One measured benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration timings in nanoseconds.
+    pub samples_ns: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples_ns)
+    }
+
+    pub fn report_line(&self) -> String {
+        let s = self.summary();
+        format!(
+            "{:<40} median {:>12}  mad {:>10}  n={}",
+            self.name,
+            crate::util::fmt_nanos(s.median as u64),
+            crate::util::fmt_nanos(s.mad as u64),
+            s.n
+        )
+    }
+}
+
+/// Timed-closure bench runner.
+pub struct Bencher {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new(BenchConfig::from_env())
+    }
+}
+
+impl Bencher {
+    pub fn new(cfg: BenchConfig) -> Bencher {
+        Bencher {
+            cfg,
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f` (which must fully perform the work per call).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        for _ in 0..self.cfg.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let started = Instant::now();
+        while samples.len() < self.cfg.min_iters
+            || (samples.len() < self.cfg.max_iters
+                && started.elapsed() < self.cfg.time_budget)
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            samples_ns: samples,
+        };
+        println!("{}", result.report_line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Render a report header for a figure/table reproduction bench.
+pub fn report_header(experiment: &str, paper_claim: &str) {
+    println!("\n=== {experiment} ===");
+    println!("paper: {paper_claim}");
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_collects_samples() {
+        let mut b = Bencher::new(BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 5,
+            time_budget: Duration::from_millis(50),
+        });
+        let mut count = 0u64;
+        let r = b.bench("noop", || {
+            count += 1;
+            std::hint::black_box(count);
+        });
+        assert!(r.samples_ns.len() >= 3);
+        assert!(count >= 4); // warmup + samples
+        let s = r.summary();
+        assert!(s.median >= 0.0);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let mut b = Bencher::new(BenchConfig {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 3,
+            time_budget: Duration::from_secs(60),
+        });
+        let r = b.bench("capped", || {
+            std::thread::sleep(Duration::from_micros(10))
+        });
+        assert!(r.samples_ns.len() <= 3);
+    }
+
+    #[test]
+    fn quick_env_config() {
+        // from_env without the var → default
+        std::env::remove_var("PEM_BENCH_QUICK");
+        let c = BenchConfig::from_env();
+        assert_eq!(c.min_iters, BenchConfig::default().min_iters);
+    }
+}

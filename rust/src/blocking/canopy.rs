@@ -1,0 +1,157 @@
+//! Canopy clustering (McCallum, Nigam & Ungar, KDD 2000) as a blocking
+//! operator.
+//!
+//! Uses a cheap similarity (token-set Jaccard on titles) with a *loose*
+//! and a *tight* threshold: a random seed entity opens a canopy; every
+//! entity within the loose threshold joins it; entities within the tight
+//! threshold are removed from the candidate pool.  To fit the disjoint
+//! [`Blocks`] model each entity is *assigned* to the first canopy it
+//! joins (assignment set), which preserves the property that very
+//! similar entities share a block.
+//!
+//! Entities with empty titles go to *misc*.
+
+use super::Blocks;
+use crate::features::TokenSet;
+use crate::model::Dataset;
+use crate::util::Rng;
+
+pub fn block(dataset: &Dataset, loose: f64, tight: f64) -> Blocks {
+    assert!(
+        (0.0..=1.0).contains(&loose)
+            && (0.0..=1.0).contains(&tight)
+            && tight >= loose,
+        "need 0 <= loose <= tight <= 1"
+    );
+    let mut blocks = Blocks::new();
+    let mut pool: Vec<usize> = Vec::new();
+    let mut tokens: Vec<TokenSet> = Vec::with_capacity(dataset.len());
+    for (i, e) in dataset.entities.iter().enumerate() {
+        let t = TokenSet::new(e.title(&dataset.schema));
+        if t.is_empty() {
+            blocks.add_misc(e.id);
+        } else {
+            pool.push(i);
+        }
+        tokens.push(t);
+    }
+
+    // deterministic seed order from the dataset size
+    let mut rng = Rng::new(0xCA0_0917 ^ dataset.len() as u64);
+    let mut assigned = vec![false; dataset.len()];
+    let mut removed = vec![false; dataset.len()];
+    let mut canopy_id = 0usize;
+
+    while let Some(&seed_pos) = {
+        // pick a random not-yet-removed pool entry
+        let alive: Vec<&usize> =
+            pool.iter().filter(|&&i| !removed[i]).collect();
+        if alive.is_empty() {
+            None
+        } else {
+            Some(alive[rng.gen_range(alive.len())])
+        }
+    } {
+        let key = format!("canopy:{canopy_id:06}");
+        canopy_id += 1;
+        removed[seed_pos] = true;
+        if !assigned[seed_pos] {
+            assigned[seed_pos] = true;
+            blocks.add(&key, dataset.entities[seed_pos].id);
+        }
+        for &i in &pool {
+            if i == seed_pos || removed[i] {
+                continue;
+            }
+            let sim = jaccard_sim(&tokens[seed_pos], &tokens[i]);
+            if sim >= loose && !assigned[i] {
+                assigned[i] = true;
+                blocks.add(&key, dataset.entities[i].id);
+            }
+            if sim >= tight {
+                removed[i] = true;
+            }
+        }
+    }
+    blocks
+}
+
+fn jaccard_sim(a: &TokenSet, b: &TokenSet) -> f64 {
+    let inter = a.intersection_size(b);
+    let union = a.len() + b.len() - inter;
+    if union == 0 {
+        0.0
+    } else {
+        inter as f64 / union as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::GeneratorConfig;
+    use crate::model::{Dataset, Entity, EntityId, Schema, ATTR_TITLE};
+
+    fn titled_dataset(titles: &[&str]) -> Dataset {
+        let schema = Schema::new(vec![ATTR_TITLE]);
+        let mut ds = Dataset::new(schema.clone());
+        for (i, t) in titles.iter().enumerate() {
+            let mut e = Entity::new(EntityId(i as u32), &schema);
+            if !t.is_empty() {
+                e.set(&schema, ATTR_TITLE, t.to_string());
+            }
+            ds.push(e);
+        }
+        ds
+    }
+
+    #[test]
+    fn near_duplicates_share_canopy() {
+        let ds = titled_dataset(&[
+            "samsung spinpoint f1 1tb",
+            "samsung spinpoint f1 1tb sata",
+            "canon pixma ip4600 printer",
+            "canon pixma ip4600",
+        ]);
+        let b = block(&ds, 0.4, 0.8);
+        b.assert_disjoint_cover(4);
+        // find the block containing entity 0; it must contain entity 1
+        let blk0: Vec<_> = b
+            .iter()
+            .filter(|(_, ids)| ids.contains(&EntityId(0)))
+            .collect();
+        assert_eq!(blk0.len(), 1);
+        assert!(blk0[0].1.contains(&EntityId(1)));
+    }
+
+    #[test]
+    fn disjoint_cover_on_generated() {
+        let g = GeneratorConfig::tiny().with_seed(1).generate();
+        let b = block(&g.dataset, 0.5, 0.8);
+        b.assert_disjoint_cover(g.dataset.len());
+        assert!(b.n_blocks() > 1);
+    }
+
+    #[test]
+    fn empty_titles_to_misc() {
+        let ds = titled_dataset(&["a b c", "", "d e f"]);
+        let b = block(&ds, 0.3, 0.6);
+        assert_eq!(b.misc().len(), 1);
+        b.assert_disjoint_cover(3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_thresholds_rejected() {
+        let ds = titled_dataset(&["x"]);
+        block(&ds, 0.8, 0.3); // loose > tight
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = GeneratorConfig::tiny().with_seed(2).generate();
+        let b1 = block(&g.dataset, 0.5, 0.8);
+        let b2 = block(&g.dataset, 0.5, 0.8);
+        assert_eq!(b1.size_histogram(), b2.size_histogram());
+    }
+}

@@ -1,0 +1,188 @@
+//! Blocking operators (paper §2, §3.2).
+//!
+//! Blocking logically partitions the input so matching can be restricted
+//! to entities of the same block.  Entities that cannot be assigned a
+//! unique block (missing key values) go to the dedicated *misc* block,
+//! which must later be matched against every other block.
+//!
+//! Three operators, all emitting the same [`Blocks`] shape so the
+//! blocking-based partitioning strategy (paper §3.2) is independent of
+//! the operator choice:
+//!
+//! * [`key`] — range/equality blocking on an attribute (product type,
+//!   manufacturer);
+//! * [`sorted_neighborhood`] — Hernández/Stolfo merge-purge windowing;
+//! * [`canopy`] — McCallum/Nigam/Ungar canopy clustering with a cheap
+//!   similarity.
+
+pub mod canopy;
+pub mod key;
+pub mod sorted_neighborhood;
+
+use crate::model::{Dataset, EntityId};
+use std::collections::BTreeMap;
+
+/// Reserved key for the misc block.
+pub const MISC_KEY: &str = "\u{0}misc";
+
+/// Output of a blocking operator: named blocks + the misc block.
+#[derive(Clone, Debug, Default)]
+pub struct Blocks {
+    /// key → member entity ids. BTreeMap for deterministic iteration.
+    blocks: BTreeMap<String, Vec<EntityId>>,
+    misc: Vec<EntityId>,
+}
+
+impl Blocks {
+    pub fn new() -> Blocks {
+        Blocks::default()
+    }
+
+    pub fn add(&mut self, key: &str, id: EntityId) {
+        debug_assert_ne!(key, MISC_KEY);
+        self.blocks.entry(key.to_string()).or_default().push(id);
+    }
+
+    pub fn add_misc(&mut self, id: EntityId) {
+        self.misc.push(id);
+    }
+
+    /// Non-misc blocks in deterministic (key) order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &[EntityId])> {
+        self.blocks.iter().map(|(k, v)| (k.as_str(), v.as_slice()))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&[EntityId]> {
+        self.blocks.get(key).map(|v| v.as_slice())
+    }
+
+    pub fn misc(&self) -> &[EntityId] {
+        &self.misc
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Total entities across all blocks + misc.
+    pub fn total_entities(&self) -> usize {
+        self.blocks.values().map(Vec::len).sum::<usize>() + self.misc.len()
+    }
+
+    /// Block-size histogram (for reports / skew checks), descending.
+    pub fn size_histogram(&self) -> Vec<usize> {
+        let mut sizes: Vec<usize> =
+            self.blocks.values().map(Vec::len).collect();
+        sizes.sort_unstable_by(|a, b| b.cmp(a));
+        sizes
+    }
+
+    /// Invariant check: every entity id appears in exactly one block (or
+    /// misc).  Returns the covered id count.
+    pub fn assert_disjoint_cover(&self, n_entities: usize) {
+        let mut seen = vec![false; n_entities];
+        let mark = |seen: &mut Vec<bool>, id: EntityId| {
+            let i = id.0 as usize;
+            assert!(i < n_entities, "id {i} out of range");
+            assert!(!seen[i], "entity {i} in two blocks");
+            seen[i] = true;
+        };
+        for ids in self.blocks.values() {
+            for &id in ids {
+                mark(&mut seen, id);
+            }
+        }
+        for &id in &self.misc {
+            mark(&mut seen, id);
+        }
+        assert!(
+            seen.iter().all(|&s| s),
+            "some entities unassigned ({} of {})",
+            seen.iter().filter(|&&s| !s).count(),
+            n_entities
+        );
+    }
+}
+
+/// Uniform interface over the three operators.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BlockingMethod {
+    /// Equality blocking on an attribute.
+    Key { attribute: String },
+    /// Sorted neighborhood on an attribute with a window size.
+    SortedNeighborhood { attribute: String, window: usize },
+    /// Canopy clustering on title trigrams with loose/tight thresholds.
+    Canopy { loose: f64, tight: f64 },
+}
+
+impl BlockingMethod {
+    pub fn product_type() -> BlockingMethod {
+        BlockingMethod::Key {
+            attribute: crate::model::ATTR_PRODUCT_TYPE.to_string(),
+        }
+    }
+
+    pub fn manufacturer() -> BlockingMethod {
+        BlockingMethod::Key {
+            attribute: crate::model::ATTR_MANUFACTURER.to_string(),
+        }
+    }
+
+    pub fn run(&self, dataset: &Dataset) -> Blocks {
+        match self {
+            BlockingMethod::Key { attribute } => key::block(dataset, attribute),
+            BlockingMethod::SortedNeighborhood { attribute, window } => {
+                sorted_neighborhood::block(dataset, attribute, *window)
+            }
+            BlockingMethod::Canopy { loose, tight } => {
+                canopy::block(dataset, *loose, *tight)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocks_bookkeeping() {
+        let mut b = Blocks::new();
+        b.add("ssd", EntityId(0));
+        b.add("ssd", EntityId(1));
+        b.add("nas", EntityId(2));
+        b.add_misc(EntityId(3));
+        assert_eq!(b.n_blocks(), 2);
+        assert_eq!(b.total_entities(), 4);
+        assert_eq!(b.get("ssd").unwrap().len(), 2);
+        assert_eq!(b.misc().len(), 1);
+        assert_eq!(b.size_histogram(), vec![2, 1]);
+        b.assert_disjoint_cover(4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn disjoint_cover_detects_duplicates() {
+        let mut b = Blocks::new();
+        b.add("x", EntityId(0));
+        b.add("y", EntityId(0));
+        b.assert_disjoint_cover(1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn disjoint_cover_detects_missing() {
+        let mut b = Blocks::new();
+        b.add("x", EntityId(0));
+        b.assert_disjoint_cover(2);
+    }
+
+    #[test]
+    fn deterministic_iteration_order() {
+        let mut b = Blocks::new();
+        b.add("zeta", EntityId(0));
+        b.add("alpha", EntityId(1));
+        let keys: Vec<&str> = b.iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["alpha", "zeta"]);
+    }
+}

@@ -1,0 +1,147 @@
+//! The computing environment `CE = (#nodes, #cores, max_mem)` (paper §2)
+//! and its simulated realization.
+//!
+//! The paper assumes loosely coupled homogeneous nodes sharing the input
+//! via a central data service.  This module only *describes* the
+//! environment; execution is handled by [`crate::engine`] — either on
+//! real OS threads (bounded by this host's cores) or on the
+//! deterministic virtual-time simulator, which can model any `CE`
+//! (see DESIGN.md §Substitutions: this host has a single core, so the
+//! 16-core scale-out experiments run on the simulator with calibrated
+//! per-pair costs).
+
+/// Description of the computing environment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ComputingEnv {
+    /// Number of loosely coupled match nodes.
+    pub nodes: usize,
+    /// Cores per node (homogeneous; see [`HeterogeneousEnv`] otherwise).
+    pub cores_per_node: usize,
+    /// Main memory per node, in bytes, shared by the node's cores.
+    pub max_mem: u64,
+    /// Match threads per node. Usually == cores (the paper's default);
+    /// Fig 5 varies this from 1 to 8 on a 4-core node.
+    pub threads_per_node: usize,
+}
+
+impl ComputingEnv {
+    pub fn new(nodes: usize, cores_per_node: usize, max_mem: u64) -> ComputingEnv {
+        assert!(nodes >= 1 && cores_per_node >= 1 && max_mem > 0);
+        ComputingEnv {
+            nodes,
+            cores_per_node,
+            max_mem,
+            threads_per_node: cores_per_node,
+        }
+    }
+
+    /// Override the number of match threads per node (Fig 5: 1..8 threads
+    /// on a 4-core node).
+    pub fn with_threads(mut self, threads_per_node: usize) -> Self {
+        assert!(threads_per_node >= 1);
+        self.threads_per_node = threads_per_node;
+        self
+    }
+
+    /// The paper's evaluation testbed: up to 4 match nodes, 4 cores each,
+    /// 3 GB heap per node → `CE = (4, 4, 3GB)`.
+    pub fn paper_testbed(nodes: usize) -> ComputingEnv {
+        ComputingEnv::new(nodes, 4, 3 * crate::util::GIB)
+    }
+
+    /// Total match threads in the environment.
+    pub fn total_threads(&self) -> usize {
+        self.nodes * self.threads_per_node
+    }
+
+    /// Total cores in the environment.
+    pub fn total_cores(&self) -> usize {
+        self.nodes * self.cores_per_node
+    }
+
+    /// Memory budget per match thread (drives partition sizing and the
+    /// paging model).
+    pub fn mem_per_thread(&self) -> u64 {
+        self.max_mem / self.threads_per_node as u64
+    }
+}
+
+/// Heterogeneous environments (paper §2: “the model can easily be
+/// extended”): per-node specs with a speed factor.  The scheduler's
+/// pull-based design load-balances across them without changes.
+#[derive(Clone, Debug)]
+pub struct HeterogeneousEnv {
+    pub nodes: Vec<NodeSpec>,
+}
+
+/// One node's capabilities.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeSpec {
+    pub cores: usize,
+    pub max_mem: u64,
+    pub threads: usize,
+    /// Relative speed: 1.0 = the calibrated reference; 0.5 = half speed.
+    pub speed: f64,
+}
+
+impl NodeSpec {
+    pub fn uniform(ce: &ComputingEnv) -> NodeSpec {
+        NodeSpec {
+            cores: ce.cores_per_node,
+            max_mem: ce.max_mem,
+            threads: ce.threads_per_node,
+            speed: 1.0,
+        }
+    }
+}
+
+impl HeterogeneousEnv {
+    pub fn uniform(ce: &ComputingEnv) -> HeterogeneousEnv {
+        HeterogeneousEnv {
+            nodes: vec![NodeSpec::uniform(ce); ce.nodes],
+        }
+    }
+
+    pub fn total_threads(&self) -> usize {
+        self.nodes.iter().map(|n| n.threads).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::GIB;
+
+    #[test]
+    fn paper_testbed_shape() {
+        let ce = ComputingEnv::paper_testbed(4);
+        assert_eq!(ce.nodes, 4);
+        assert_eq!(ce.cores_per_node, 4);
+        assert_eq!(ce.max_mem, 3 * GIB);
+        assert_eq!(ce.total_threads(), 16);
+        assert_eq!(ce.total_cores(), 16);
+    }
+
+    #[test]
+    fn thread_override() {
+        let ce = ComputingEnv::paper_testbed(1).with_threads(8);
+        assert_eq!(ce.total_threads(), 8);
+        assert_eq!(ce.total_cores(), 4);
+        assert_eq!(ce.mem_per_thread(), 3 * GIB / 8);
+    }
+
+    #[test]
+    fn heterogeneous_from_uniform() {
+        let ce = ComputingEnv::paper_testbed(3);
+        let h = HeterogeneousEnv::uniform(&ce);
+        assert_eq!(h.nodes.len(), 3);
+        assert_eq!(h.total_threads(), 12);
+        assert!(h.nodes.iter().all(|n| (n.speed - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_nodes_rejected() {
+        ComputingEnv::new(0, 4, GIB);
+    }
+}

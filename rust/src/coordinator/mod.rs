@@ -1,0 +1,17 @@
+//! The workflow service (paper §4): end-to-end match workflow execution.
+//!
+//! The workflow service is the central access point: it performs the
+//! pre-processing (blocking, partitioning, match task generation),
+//! maintains the central task list and the affinity-based scheduler
+//! ([`scheduler`]), drives one of the execution engines, and merges the
+//! per-task match results into the final output ([`workflow`]).
+
+pub mod multi_source;
+pub mod scheduler;
+pub mod workflow;
+
+pub use multi_source::{run_two_source_workflow, TwoSourceMode};
+pub use scheduler::{Policy, Scheduler, ServiceId};
+pub use workflow::{
+    run_workflow, PartitioningChoice, WorkflowConfig, WorkflowOutcome,
+};

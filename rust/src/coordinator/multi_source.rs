@@ -1,0 +1,395 @@
+//! Multi-source match workflows (paper §3.3), first-class.
+//!
+//! Three strategies for matching two or more input sources:
+//!
+//! * [`union_sources`] — take the union of the sources (schemas
+//!   must already be aligned) and run the standard single-source
+//!   workflow; finds both cross-source and intra-source duplicates.
+//! * [`run_two_source_workflow`] with [`TwoSourceMode::Cartesian`] —
+//!   duplicate-free sources: size-partition each source and generate
+//!   only the `m·n` cross-source tasks.
+//! * [`TwoSourceMode::Blocked`] — apply the same blocking to both
+//!   sources, tune each side, and match corresponding blocks across
+//!   sources; misc partitions of either side are matched against all
+//!   partitions of the *other* source.
+//!
+//! Cross-source execution keeps two partition namespaces (one store per
+//! source); tasks carry (left ∈ A, right ∈ B).
+
+use crate::blocking::BlockingMethod;
+use crate::cluster::ComputingEnv;
+use crate::matching::MatchStrategy;
+use crate::model::{Correspondence, Dataset, EntityId, MatchResult};
+use crate::partition::blocking_based::tune_paired;
+use crate::partition::{
+    generate_tasks_two_sources_blocked, generate_tasks_two_sources_cartesian,
+    max_partition_size, partition_size_based, PartitionSet, TuningConfig,
+};
+use crate::store::DataService;
+
+use anyhow::Result;
+
+/// How two duplicate-free sources are matched against each other.
+#[derive(Clone, Debug)]
+pub enum TwoSourceMode {
+    /// Cartesian product across sources (`m·n` tasks).
+    Cartesian { max_size: Option<usize> },
+    /// Same blocking on both sides, matched per corresponding block.
+    Blocked {
+        method: BlockingMethod,
+        max_size: Option<usize>,
+        min_size: usize,
+    },
+}
+
+/// Outcome of a two-source run.
+pub struct TwoSourceOutcome {
+    pub result: MatchResult,
+    pub n_tasks: usize,
+    pub comparisons: u64,
+    /// Task-count comparison: what a union-based run would have cost.
+    pub union_equivalent_tasks: usize,
+}
+
+/// §3.3 union approach: combine sources, then the caller runs the usual
+/// [`super::run_workflow`] on the returned dataset.
+pub fn union_sources(sources: Vec<Dataset>) -> Dataset {
+    Dataset::union(sources)
+}
+
+fn partitions_for(
+    source_a: &Dataset,
+    source_b: &Dataset,
+    mode: &TwoSourceMode,
+    strategy: &MatchStrategy,
+    ce: &ComputingEnv,
+) -> Result<(PartitionSet, PartitionSet)> {
+    let mem_cap = max_partition_size(ce, strategy.kind).max(1);
+    Ok(match mode {
+        TwoSourceMode::Cartesian { max_size } => {
+            let m = max_size.unwrap_or(mem_cap).min(mem_cap);
+            let mk = |source: &Dataset| {
+                let ids: Vec<EntityId> =
+                    source.entities.iter().map(|e| e.id).collect();
+                partition_size_based(&ids, m)
+            };
+            (mk(source_a), mk(source_b))
+        }
+        TwoSourceMode::Blocked {
+            method,
+            max_size,
+            min_size,
+        } => {
+            // paired tuning: identical split/aggregate decisions on both
+            // sides so corresponding partitions align by key (§3.3)
+            let m = max_size.unwrap_or(mem_cap).min(mem_cap);
+            tune_paired(
+                &method.run(source_a),
+                &method.run(source_b),
+                TuningConfig::new(m, (*min_size).min(m)),
+            )
+        }
+    })
+}
+
+/// Match two **duplicate-free** sources against each other.  Entities of
+/// the same source are never compared (their sources guarantee
+/// uniqueness), which is the §3.3 saving: `m·n` tasks instead of
+/// `(m+n)(m+n−1)/2`.
+///
+/// Execution is single-process (the exact matchers run over
+/// real data); the returned correspondences use per-source entity ids —
+/// `e1` from source A, `e2` from source B.
+pub fn run_two_source_workflow(
+    source_a: &Dataset,
+    source_b: &Dataset,
+    mode: &TwoSourceMode,
+    strategy: MatchStrategy,
+    ce: &ComputingEnv,
+) -> Result<TwoSourceOutcome> {
+    let (parts_a, parts_b) =
+        partitions_for(source_a, source_b, mode, &strategy, ce)?;
+    let tasks = match mode {
+        TwoSourceMode::Cartesian { .. } => {
+            generate_tasks_two_sources_cartesian(&parts_a, &parts_b)
+        }
+        TwoSourceMode::Blocked { .. } => {
+            generate_tasks_two_sources_blocked(&parts_a, &parts_b)
+        }
+    };
+    let store_a = DataService::build(source_a, &parts_a);
+    let store_b = DataService::build(source_b, &parts_b);
+
+    // Both sources number their entities from 0, so results live in a
+    // combined namespace: A keeps its ids, B ids are offset by |A|.
+    // (The executor's same-id guard is for overlapping single-source
+    // partitions and must not fire across namespaces, hence the manual
+    // comparison loop.)
+    let offset = source_a.len() as u32;
+    let mut result = MatchResult::new();
+    let mut comparisons = 0u64;
+    for (task, _) in &tasks {
+        let left = store_a.fetch(task.left);
+        let right = store_b.fetch(task.right);
+        comparisons += left.len() as u64 * right.len() as u64;
+        for i in 0..left.len() {
+            for j in 0..right.len() {
+                let sim = strategy
+                    .similarity(&left.features[i], &right.features[j]);
+                if sim >= strategy.threshold {
+                    result.add(Correspondence::new(
+                        left.entities[i],
+                        EntityId(right.entities[j].0 + offset),
+                        sim as f32,
+                    ));
+                }
+            }
+        }
+    }
+
+    let union_p = parts_a.len() + parts_b.len();
+    Ok(TwoSourceOutcome {
+        result,
+        n_tasks: tasks.len(),
+        comparisons,
+        union_equivalent_tasks: union_p + union_p * (union_p - 1) / 2,
+    })
+}
+
+/// Split a dataset with known duplicate clusters into two duplicate-free
+/// sources (test/demo helper: each source keeps at most one offer per
+/// real-world product; cross-source pairs remain the ground truth).
+pub fn split_duplicate_free(
+    dataset: &Dataset,
+    truth: &[(EntityId, EntityId)],
+) -> (Dataset, Dataset, Vec<(EntityId, EntityId)>) {
+    // union-find-lite over truth to get cluster representatives
+    let n = dataset.len();
+    let mut cluster = vec![usize::MAX; n];
+    let mut next_cluster = 0usize;
+    for &(a, b) in truth {
+        let (ai, bi) = (a.0 as usize, b.0 as usize);
+        match (cluster[ai], cluster[bi]) {
+            (usize::MAX, usize::MAX) => {
+                cluster[ai] = next_cluster;
+                cluster[bi] = next_cluster;
+                next_cluster += 1;
+            }
+            (ca, usize::MAX) => cluster[bi] = ca,
+            (usize::MAX, cb) => cluster[ai] = cb,
+            (ca, cb) if ca != cb => {
+                for c in cluster.iter_mut() {
+                    if *c == cb {
+                        *c = ca;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut a = Dataset::new(dataset.schema.clone());
+    let mut b = Dataset::new(dataset.schema.clone());
+    let mut seen_in_a: std::collections::HashSet<usize> =
+        std::collections::HashSet::new();
+    // map original id -> (source, new id)
+    let mut placed: Vec<Option<(bool, u32)>> = vec![None; n];
+    for e in &dataset.entities {
+        let i = e.id.0 as usize;
+        let to_a = match cluster[i] {
+            usize::MAX => i % 2 == 0,
+            c => seen_in_a.insert(c),
+        };
+        let target = if to_a { &mut a } else { &mut b };
+        let mut copy = e.clone();
+        copy.id = EntityId(target.len() as u32);
+        placed[i] = Some((to_a, copy.id.0));
+        target.push(copy);
+    }
+    // cross-source truth in the new id spaces
+    let mut cross_truth = Vec::new();
+    for &(x, y) in truth {
+        let (px, py) = (
+            placed[x.0 as usize].unwrap(),
+            placed[y.0 as usize].unwrap(),
+        );
+        if px.0 != py.0 {
+            let (ida, idb) = if px.0 { (px.1, py.1) } else { (py.1, px.1) };
+            cross_truth.push((EntityId(ida), EntityId(idb)));
+        }
+    }
+    (a, b, cross_truth)
+}
+
+/// Quality of a two-source result against cross-source truth.  The
+/// result uses the combined namespace (B ids offset by |A|); the truth
+/// pairs are (A id, B id) in their own spaces, so pass `offset_b = |A|`.
+pub fn cross_quality(
+    result: &MatchResult,
+    cross_truth: &[(EntityId, EntityId)],
+    offset_b: u32,
+) -> crate::model::Quality {
+    let found: std::collections::HashSet<(u32, u32)> = result
+        .iter()
+        .map(|c: Correspondence| {
+            let (x, y) = c.pair();
+            (x.0.min(y.0), x.0.max(y.0))
+        })
+        .collect();
+    let truth: std::collections::HashSet<(u32, u32)> = cross_truth
+        .iter()
+        .map(|&(a, b)| {
+            let b = b.0 + offset_b;
+            (a.0.min(b), a.0.max(b))
+        })
+        .collect();
+    let tp = found.intersection(&truth).count();
+    let precision = if found.is_empty() {
+        0.0
+    } else {
+        tp as f64 / found.len() as f64
+    };
+    let recall = if truth.is_empty() {
+        0.0
+    } else {
+        tp as f64 / truth.len() as f64
+    };
+    let f1 = if precision + recall == 0.0 {
+        0.0
+    } else {
+        2.0 * precision * recall / (precision + recall)
+    };
+    crate::model::Quality {
+        true_positives: tp,
+        predicted: found.len(),
+        actual: truth.len(),
+        precision,
+        recall,
+        f1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::GeneratorConfig;
+    use crate::matching::StrategyKind;
+    use crate::util::GIB;
+
+    fn setup() -> (Dataset, Dataset, Vec<(EntityId, EntityId)>) {
+        let data = GeneratorConfig::tiny().with_entities(600).generate();
+        split_duplicate_free(&data.dataset, &data.truth)
+    }
+
+    #[test]
+    fn split_is_duplicate_free_and_covers() {
+        let data = GeneratorConfig::tiny().with_entities(600).generate();
+        let (a, b, cross) =
+            split_duplicate_free(&data.dataset, &data.truth);
+        assert_eq!(a.len() + b.len(), data.dataset.len());
+        assert!(!cross.is_empty());
+        // no truth pair may live entirely inside one source: since each
+        // cluster contributes exactly one entity to A, pairs within A
+        // are impossible; pairs within B are possible for clusters of
+        // size >= 3 — tolerate those but they must be a minority
+        let within_b = data.truth.len() - cross.len();
+        assert!(
+            within_b * 3 <= data.truth.len(),
+            "{within_b} of {} pairs not cross-source",
+            data.truth.len()
+        );
+    }
+
+    #[test]
+    fn cartesian_mode_mn_tasks() {
+        let (a, b, _) = setup();
+        let ce = ComputingEnv::new(1, 2, GIB);
+        let mode = TwoSourceMode::Cartesian {
+            max_size: Some(100),
+        };
+        let out = run_two_source_workflow(
+            &a,
+            &b,
+            &mode,
+            MatchStrategy::new(StrategyKind::Wam),
+            &ce,
+        )
+        .unwrap();
+        let (m, n) = (a.len().div_ceil(100), b.len().div_ceil(100));
+        assert_eq!(out.n_tasks, m * n);
+        assert!(out.n_tasks < out.union_equivalent_tasks);
+        assert_eq!(out.comparisons, (a.len() * b.len()) as u64);
+    }
+
+    #[test]
+    fn cartesian_finds_cross_duplicates() {
+        let (a, b, cross) = setup();
+        let ce = ComputingEnv::new(1, 2, GIB);
+        let out = run_two_source_workflow(
+            &a,
+            &b,
+            &TwoSourceMode::Cartesian {
+                max_size: Some(100),
+            },
+            MatchStrategy::new(StrategyKind::Wam),
+            &ce,
+        )
+        .unwrap();
+        let q = cross_quality(&out.result, &cross, a.len() as u32);
+        assert!(q.recall > 0.75, "recall {}", q.recall);
+    }
+
+    #[test]
+    fn blocked_mode_fewer_comparisons_similar_recall() {
+        let (a, b, cross) = setup();
+        let ce = ComputingEnv::new(1, 2, GIB);
+        let cart = run_two_source_workflow(
+            &a,
+            &b,
+            &TwoSourceMode::Cartesian {
+                max_size: Some(100),
+            },
+            MatchStrategy::new(StrategyKind::Wam),
+            &ce,
+        )
+        .unwrap();
+        let blocked = run_two_source_workflow(
+            &a,
+            &b,
+            &TwoSourceMode::Blocked {
+                method: BlockingMethod::product_type(),
+                max_size: Some(100),
+                min_size: 20,
+            },
+            MatchStrategy::new(StrategyKind::Wam),
+            &ce,
+        )
+        .unwrap();
+        assert!(blocked.comparisons < cart.comparisons);
+        let qc = cross_quality(&cart.result, &cross, a.len() as u32);
+        let qb = cross_quality(&blocked.result, &cross, a.len() as u32);
+        assert!(
+            qb.recall >= qc.recall - 0.05,
+            "blocked {} vs cartesian {}",
+            qb.recall,
+            qc.recall
+        );
+    }
+
+    #[test]
+    fn union_equivalent_counts() {
+        let (a, b, _) = setup();
+        let ce = ComputingEnv::new(1, 2, GIB);
+        let out = run_two_source_workflow(
+            &a,
+            &b,
+            &TwoSourceMode::Cartesian {
+                max_size: Some(50),
+            },
+            MatchStrategy::new(StrategyKind::Wam),
+            &ce,
+        )
+        .unwrap();
+        // m·n < (m+n)(m+n−1)/2 always (m, n >= 1, m+n >= 2)
+        assert!(out.n_tasks < out.union_equivalent_tasks);
+    }
+}

@@ -1,0 +1,385 @@
+//! End-to-end match workflows: Figure 1 of the paper.
+//!
+//! ```text
+//! input ─▶ [blocking]? ─▶ partitioning (size-based | blocking-based
+//!        with partition tuning) ─▶ match task generation ─▶ parallel
+//!        execution (threads | virtual-time sim) ─▶ merged match result
+//! ```
+
+use crate::blocking::BlockingMethod;
+use crate::cluster::ComputingEnv;
+use crate::engine::{calibrate, sim, threads, CostParams};
+use crate::matching::{MatchStrategy, StrategyKind};
+use crate::metrics::RunMetrics;
+use crate::model::{Dataset, EntityId, MatchResult};
+use crate::net::CostModel;
+use crate::partition::{
+    generate_tasks, max_partition_size, partition_size_based, tune,
+    MatchTask, PartitionSet, TuningConfig,
+};
+use crate::store::DataService;
+use crate::worker::RustExecutor;
+use anyhow::{bail, Result};
+use std::time::Instant;
+
+/// Which partitioning strategy the workflow applies.
+#[derive(Clone, Debug)]
+pub enum PartitioningChoice {
+    /// §3.1 — Cartesian product with equally-sized partitions.
+    /// `max_size: None` derives m from the memory model.
+    SizeBased { max_size: Option<usize> },
+    /// §3.2 — blocking followed by partition tuning.
+    BlockingBased {
+        method: BlockingMethod,
+        max_size: Option<usize>,
+        min_size: usize,
+    },
+}
+
+/// Which engine executes the match tasks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineChoice {
+    /// Real OS threads; real matching; wall-clock metrics.
+    Threads,
+    /// Virtual-time simulation with calibrated costs; no matching
+    /// performed (metrics only) unless `execute_in_sim` is set.
+    Simulated,
+}
+
+/// Full workflow configuration.
+#[derive(Clone, Debug)]
+pub struct WorkflowConfig {
+    pub strategy: MatchStrategy,
+    pub partitioning: PartitioningChoice,
+    pub engine: EngineChoice,
+    /// Partition-cache capacity per match service (`c`; 0 = disabled).
+    pub cache_capacity: usize,
+    pub policy: crate::coordinator::Policy,
+    /// Control-plane cost model (workflow-service RMI).
+    pub net: CostModel,
+    /// Data-plane cost model (data-service partition fetches).
+    pub data_net: CostModel,
+    /// Simulated engine: also execute the tasks to produce real
+    /// correspondences (small workloads only).
+    pub execute_in_sim: bool,
+    /// Simulated engine: calibrate per-pair cost by really matching a
+    /// sample (otherwise use the strategy's default constants).
+    pub calibrate: bool,
+    /// Simulated engine: use these cost params verbatim (skips
+    /// calibration).  Sweeps MUST pin the cost once and reuse it —
+    /// re-calibrating per configuration injects real-timer noise into
+    /// virtual-time ratios.
+    pub cost_override: Option<CostParams>,
+    /// Simulated node failures (virtual ns, node index).
+    pub failures: Vec<(u64, usize)>,
+}
+
+impl WorkflowConfig {
+    /// Blocking-based partitioning by product type, simulated engine —
+    /// the paper's primary configuration.
+    pub fn blocking_based(kind: StrategyKind) -> WorkflowConfig {
+        WorkflowConfig {
+            strategy: MatchStrategy::new(kind),
+            partitioning: PartitioningChoice::BlockingBased {
+                method: BlockingMethod::product_type(),
+                max_size: None,
+                min_size: default_min_size(kind),
+            },
+            engine: EngineChoice::Simulated,
+            cache_capacity: 0,
+            policy: crate::coordinator::Policy::Affinity,
+            net: CostModel::lan(),
+            data_net: CostModel::dbms(),
+            execute_in_sim: false,
+            calibrate: true,
+            cost_override: None,
+            failures: Vec::new(),
+        }
+    }
+
+    /// Size-based (Cartesian) partitioning, simulated engine.
+    pub fn size_based(kind: StrategyKind) -> WorkflowConfig {
+        WorkflowConfig {
+            partitioning: PartitioningChoice::SizeBased { max_size: None },
+            ..WorkflowConfig::blocking_based(kind)
+        }
+    }
+
+    pub fn with_engine(mut self, engine: EngineChoice) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    pub fn with_cache(mut self, c: usize) -> Self {
+        self.cache_capacity = c;
+        self
+    }
+
+    pub fn with_cost(mut self, cost: CostParams) -> Self {
+        self.cost_override = Some(cost);
+        self
+    }
+}
+
+/// The paper's favorable maximum partition sizes (Fig 6): 1,000 for WAM,
+/// 500 for LRM.
+pub fn default_max_size(kind: StrategyKind) -> usize {
+    match kind {
+        StrategyKind::Wam => 1000,
+        StrategyKind::Lrm => 500,
+    }
+}
+
+/// The paper's favorable minimum partition sizes (Fig 7): 200 for WAM,
+/// 100 for LRM.
+pub fn default_min_size(kind: StrategyKind) -> usize {
+    match kind {
+        StrategyKind::Wam => 200,
+        StrategyKind::Lrm => 100,
+    }
+}
+
+/// Workflow outcome: merged result + run metrics + structural info.
+pub struct WorkflowOutcome {
+    pub result: MatchResult,
+    pub metrics: RunMetrics,
+    pub n_partitions: usize,
+    pub n_misc_partitions: usize,
+    pub n_tasks: usize,
+    /// Wall-clock time of the whole workflow (pre+match+merge).
+    pub elapsed: std::time::Duration,
+    /// Cost params used by the simulator (after calibration).
+    pub cost: Option<CostParams>,
+}
+
+/// Build the partition set for a workflow (pre-processing half).
+pub fn build_partitions(
+    dataset: &Dataset,
+    cfg: &WorkflowConfig,
+    ce: &ComputingEnv,
+) -> Result<PartitionSet> {
+    let kind = cfg.strategy.kind;
+    // An explicit max_size overrides the memory model (experiments like
+    // Fig 6 sweep past the memory-restricted size on purpose, paying the
+    // paging penalty); `None` derives m from §3.1's formula, clamped to
+    // the strategy's empirically favorable size.
+    let mem_cap = max_partition_size(ce, kind);
+    let auto = || default_max_size(kind).min(mem_cap.max(1));
+    match &cfg.partitioning {
+        PartitioningChoice::SizeBased { max_size } => {
+            let m = max_size.unwrap_or_else(auto);
+            let ids: Vec<EntityId> =
+                dataset.entities.iter().map(|e| e.id).collect();
+            Ok(partition_size_based(&ids, m))
+        }
+        PartitioningChoice::BlockingBased {
+            method,
+            max_size,
+            min_size,
+        } => {
+            let m = max_size.unwrap_or_else(auto);
+            if *min_size > m {
+                bail!("min_size {min_size} exceeds max partition size {m}");
+            }
+            let blocks = method.run(dataset);
+            Ok(tune(&blocks, TuningConfig::new(m, *min_size)))
+        }
+    }
+}
+
+/// Run a complete match workflow.
+pub fn run_workflow(
+    dataset: &Dataset,
+    cfg: &WorkflowConfig,
+    ce: &ComputingEnv,
+) -> Result<WorkflowOutcome> {
+    let started = Instant::now();
+    let parts = build_partitions(dataset, cfg, ce)?;
+    let tasks: Vec<MatchTask> = generate_tasks(&parts);
+    let store = DataService::build(dataset, &parts);
+    let n_tasks = tasks.len();
+    let n_partitions = parts.len();
+    let n_misc = parts.n_misc();
+
+    let (metrics, correspondences, cost) = match cfg.engine {
+        EngineChoice::Threads => {
+            let exec = RustExecutor::new(cfg.strategy);
+            let out = threads::run(
+                ce,
+                &parts,
+                tasks,
+                &store,
+                &exec,
+                threads::ThreadConfig {
+                    cache_capacity: cfg.cache_capacity,
+                    policy: cfg.policy,
+                },
+            );
+            (out.metrics, out.correspondences, None)
+        }
+        EngineChoice::Simulated => {
+            let cost = if let Some(cost) = cfg.cost_override {
+                cost
+            } else if cfg.calibrate {
+                calibrate::calibrated_params(
+                    dataset,
+                    cfg.strategy.kind,
+                    120,
+                    0xCA11B,
+                )
+            } else {
+                CostParams::default_for(cfg.strategy.kind)
+            };
+            let mut sim_cfg = sim::SimConfig::new(cfg.strategy.kind, cost);
+            sim_cfg.net = cfg.net;
+            sim_cfg.data_net = cfg.data_net;
+            sim_cfg.cache_capacity = cfg.cache_capacity;
+            sim_cfg.policy = cfg.policy;
+            sim_cfg.failures = cfg.failures.clone();
+            if cfg.execute_in_sim {
+                sim_cfg.execute =
+                    Some(Box::new(RustExecutor::new(cfg.strategy)));
+            }
+            let out = sim::run(ce, &parts, tasks, &store, sim_cfg);
+            (out.metrics, out.correspondences, Some(cost))
+        }
+    };
+
+    // merge per-task outputs (the workflow service's post-processing)
+    let mut result = MatchResult::new();
+    for c in correspondences {
+        result.add(c);
+    }
+
+    Ok(WorkflowOutcome {
+        result,
+        metrics,
+        n_partitions,
+        n_misc_partitions: n_misc,
+        n_tasks,
+        elapsed: started.elapsed(),
+        cost,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::GeneratorConfig;
+
+    fn tiny_ce() -> ComputingEnv {
+        ComputingEnv::new(1, 2, crate::util::GIB)
+    }
+
+    #[test]
+    fn size_based_thread_workflow_finds_duplicates() {
+        let data = GeneratorConfig::tiny().with_seed(21).generate();
+        let cfg = WorkflowConfig::size_based(StrategyKind::Wam)
+            .with_engine(EngineChoice::Threads);
+        let out = run_workflow(&data, &cfg, &tiny_ce()).unwrap();
+        assert!(out.n_tasks >= out.n_partitions);
+        let q = out.result.quality(&data.truth);
+        assert!(q.recall > 0.8, "recall {}", q.recall);
+        assert!(q.precision > 0.5, "precision {}", q.precision);
+    }
+
+    #[test]
+    fn blocking_based_reduces_comparisons() {
+        let data = GeneratorConfig::tiny().with_entities(1200).generate();
+        let ce = tiny_ce();
+        let size = run_workflow(
+            &data,
+            &WorkflowConfig::size_based(StrategyKind::Wam)
+                .with_engine(EngineChoice::Threads),
+            &ce,
+        )
+        .unwrap();
+        // tuning bounds sized to the dataset: ~37 product types over
+        // 1,200 entities → blocks of ~10-150; max 200 keeps aggregates
+        // small enough that blocking actually prunes the search space
+        let mut bcfg = WorkflowConfig::blocking_based(StrategyKind::Wam)
+            .with_engine(EngineChoice::Threads);
+        if let PartitioningChoice::BlockingBased {
+            max_size, min_size, ..
+        } = &mut bcfg.partitioning
+        {
+            *max_size = Some(200);
+            *min_size = 40;
+        }
+        let block = run_workflow(&data, &bcfg, &ce).unwrap();
+        assert!(
+            block.metrics.comparisons < size.metrics.comparisons / 2,
+            "blocking {} vs cartesian {}",
+            block.metrics.comparisons,
+            size.metrics.comparisons
+        );
+        // and loses almost no recall on same-type duplicates (misc block
+        // handling keeps entities with missing product type matchable)
+        let qb = block.result.quality(&data.truth);
+        let qs = size.result.quality(&data.truth);
+        assert!(
+            qb.recall >= qs.recall - 0.05,
+            "blocking recall {} vs {}",
+            qb.recall,
+            qs.recall
+        );
+    }
+
+    #[test]
+    fn simulated_workflow_produces_metrics_without_matching() {
+        let data = GeneratorConfig::tiny().generate();
+        let mut cfg = WorkflowConfig::blocking_based(StrategyKind::Lrm);
+        cfg.calibrate = false; // keep test fast & deterministic
+        let out = run_workflow(&data, &cfg, &ComputingEnv::paper_testbed(4))
+            .unwrap();
+        assert!(out.metrics.makespan_ns > 0);
+        assert_eq!(out.result.len(), 0, "sim without execute");
+        assert!(out.cost.is_some());
+    }
+
+    #[test]
+    fn sim_execute_equals_threads_result() {
+        let data = GeneratorConfig::tiny().with_seed(9).generate();
+        let base = WorkflowConfig::blocking_based(StrategyKind::Wam);
+        let t = run_workflow(
+            &data,
+            &base.clone().with_engine(EngineChoice::Threads),
+            &tiny_ce(),
+        )
+        .unwrap();
+        let mut sim_cfg = base;
+        sim_cfg.execute_in_sim = true;
+        sim_cfg.calibrate = false;
+        let s =
+            run_workflow(&data, &sim_cfg, &ComputingEnv::paper_testbed(2))
+                .unwrap();
+        assert_eq!(t.result.len(), s.result.len());
+        for c in t.result.iter() {
+            assert!(s.result.contains(c.e1, c.e2));
+        }
+    }
+
+    #[test]
+    fn memory_model_caps_partition_size() {
+        let data = GeneratorConfig::tiny().generate();
+        // tiny memory → small partitions even though default is 500
+        let ce = ComputingEnv::new(1, 4, 64 * crate::util::MIB);
+        let cfg = WorkflowConfig::size_based(StrategyKind::Lrm);
+        let parts = build_partitions(&data, &cfg, &ce).unwrap();
+        let cap = max_partition_size(&ce, StrategyKind::Lrm);
+        assert!(parts.max_size() <= cap);
+        assert!(cap < 500, "cap {cap} should bind");
+    }
+
+    #[test]
+    fn invalid_min_size_rejected() {
+        let data = GeneratorConfig::tiny().generate();
+        let mut cfg = WorkflowConfig::blocking_based(StrategyKind::Wam);
+        if let PartitioningChoice::BlockingBased { min_size, .. } =
+            &mut cfg.partitioning
+        {
+            *min_size = 10_000;
+        }
+        assert!(run_workflow(&data, &cfg, &tiny_ce()).is_err());
+    }
+}

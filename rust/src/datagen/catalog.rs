@@ -1,0 +1,104 @@
+//! Vocabulary catalogs for the synthetic product-offer generator.
+//!
+//! The paper's dataset is 114k electronic product offers from a price
+//! comparison portal.  These catalogs reproduce its *structure*: a skewed
+//! manufacturer distribution, a moderate number of product types (the
+//! blocking keys), model-number grammars and description vocabulary.
+
+/// Manufacturers, ordered by (approximate) real-world popularity — the
+/// Zipf sampler draws indices into this list, so the head brands dominate.
+pub const MANUFACTURERS: &[&str] = &[
+    "Samsung", "Sony", "LG", "Philips", "Panasonic", "Canon", "HP",
+    "Logitech", "Western Digital", "Seagate", "Intel", "AMD", "Asus",
+    "Acer", "Toshiba", "Nokia", "Apple", "Lenovo", "Dell", "Epson",
+    "Brother", "Kingston", "Corsair", "MSI", "Gigabyte", "Sandisk",
+    "TrekStor", "Plextor", "LiteOn", "BenQ", "ViewSonic", "NEC",
+    "Fujitsu", "Sharp", "Pioneer", "JVC", "Kenwood", "TomTom",
+    "Garmin", "Netgear", "D-Link", "Linksys", "Zyxel", "AVM",
+    "Medion", "Grundig", "Siemens", "Bosch", "Braun", "Nikon",
+];
+
+/// Product types: the primary blocking key of the evaluation.  The
+/// Drives & Storage subset (first ten) reproduces the Figure 3 example.
+pub const PRODUCT_TYPES: &[&str] = &[
+    // Drives & Storage (Fig. 3 block keys)
+    "3.5-drive", "2.5-drive", "DVD-RW", "Blu-ray", "HD-DVD", "CD-RW",
+    "USB-stick", "SSD", "NAS", "memory-card",
+    // wider electronics catalog
+    "LCD-TV", "plasma-TV", "monitor", "projector", "printer", "scanner",
+    "digital-camera", "camcorder", "MP3-player", "notebook", "netbook",
+    "desktop-PC", "mainboard", "CPU", "RAM", "graphics-card", "keyboard",
+    "mouse", "router", "switch", "webcam", "headset", "speaker",
+    "sat-receiver", "DVD-player", "navigation", "mobile-phone", "e-reader",
+];
+
+/// Product-line words combined into titles.
+pub const SERIES: &[&str] = &[
+    "SpinPoint", "Caviar", "Barracuda", "Momentus", "UltraMax", "EcoGreen",
+    "Xpress", "ProLine", "MediaStar", "PowerEdge", "TravelMate", "Aspire",
+    "Pavilion", "ThinkCentre", "Satellite", "VAIO", "Bravia", "Viera",
+    "Cyber-shot", "PowerShot", "PIXMA", "LaserJet", "OfficeJet", "Stylus",
+    "DataStation", "StoreJet", "Extreme", "Turbo", "Elite", "Vision",
+];
+
+/// Adjective/feature tokens for descriptions.
+pub const DESC_TOKENS: &[&str] = &[
+    "internal", "external", "portable", "high-speed", "silent", "retail",
+    "bulk", "black", "white", "silver", "SATA", "SATA-II", "IDE", "USB",
+    "USB-2.0", "USB-3.0", "FireWire", "eSATA", "cache", "16MB", "32MB",
+    "64MB", "7200rpm", "5400rpm", "10000rpm", "low-power", "energy-saving",
+    "shock-resistant", "slim", "compact", "widescreen", "full-hd", "1080p",
+    "720p", "wireless", "bluetooth", "ethernet", "gigabit", "dual-layer",
+    "lightscribe", "oem", "warranty", "edition", "series", "premium",
+    "professional", "entry-level", "gaming", "office", "multimedia",
+];
+
+/// Capacity/size tokens appended to titles.
+pub const CAPACITIES: &[&str] = &[
+    "80GB", "120GB", "160GB", "250GB", "320GB", "400GB", "500GB", "640GB",
+    "750GB", "1TB", "1.5TB", "2TB", "4GB", "8GB", "16GB", "32GB", "64GB",
+];
+
+/// Shop names (offers of the same product from different shops are the
+/// duplicates entity matching must find).
+pub const SHOPS: &[&str] = &[
+    "techbuy.example", "pricekiller.example", "megawatt.example",
+    "cyberport.example", "hardwareville.example", "gadgetworld.example",
+    "bitsandparts.example", "electrodome.example", "chipmarket.example",
+    "voltbay.example", "pixelhaus.example", "datadepot.example",
+];
+
+pub const COLORS: &[&str] =
+    &["black", "white", "silver", "grey", "red", "blue"];
+
+pub const ENERGY_LABELS: &[&str] = &["A++", "A+", "A", "B", "C"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalogs_nonempty_and_unique() {
+        for (name, cat) in [
+            ("manufacturers", MANUFACTURERS),
+            ("product_types", PRODUCT_TYPES),
+            ("series", SERIES),
+            ("desc_tokens", DESC_TOKENS),
+            ("capacities", CAPACITIES),
+            ("shops", SHOPS),
+        ] {
+            assert!(cat.len() >= 6, "{name} too small");
+            let mut sorted: Vec<_> = cat.to_vec();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), cat.len(), "{name} has duplicates");
+        }
+    }
+
+    #[test]
+    fn fig3_block_keys_present() {
+        for key in ["3.5-drive", "2.5-drive", "DVD-RW", "Blu-ray", "HD-DVD", "CD-RW"] {
+            assert!(PRODUCT_TYPES.contains(&key), "{key} missing");
+        }
+    }
+}

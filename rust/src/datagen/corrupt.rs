@@ -1,0 +1,185 @@
+//! String corruptions for duplicate injection.
+//!
+//! Offers of the same product from different shops differ by typos,
+//! abbreviations, re-ordered tokens, unit spelling and dropped words —
+//! exactly the perturbations entity matchers must see through.  Each
+//! corruption is small enough that a true duplicate stays above the match
+//! threshold with high probability.
+
+use crate::util::Rng;
+
+/// Apply `n` random corruptions to a string.
+pub fn corrupt(rng: &mut Rng, s: &str, n: usize) -> String {
+    let mut out = s.to_string();
+    for _ in 0..n {
+        out = match rng.gen_range(6) {
+            0 => typo_swap(rng, &out),
+            1 => typo_drop(rng, &out),
+            2 => typo_dup(rng, &out),
+            3 => case_flip(rng, &out),
+            4 => token_swap(rng, &out),
+            _ => spacing(rng, &out),
+        };
+    }
+    out
+}
+
+/// Swap two adjacent characters.
+fn typo_swap(rng: &mut Rng, s: &str) -> String {
+    let chars: Vec<char> = s.chars().collect();
+    if chars.len() < 2 {
+        return s.to_string();
+    }
+    let i = rng.gen_range(chars.len() - 1);
+    let mut c = chars;
+    c.swap(i, i + 1);
+    c.into_iter().collect()
+}
+
+/// Drop one character.
+fn typo_drop(rng: &mut Rng, s: &str) -> String {
+    let chars: Vec<char> = s.chars().collect();
+    if chars.len() < 2 {
+        return s.to_string();
+    }
+    let i = rng.gen_range(chars.len());
+    chars
+        .into_iter()
+        .enumerate()
+        .filter(|&(j, _)| j != i)
+        .map(|(_, c)| c)
+        .collect()
+}
+
+/// Duplicate one character.
+fn typo_dup(rng: &mut Rng, s: &str) -> String {
+    let chars: Vec<char> = s.chars().collect();
+    if chars.is_empty() {
+        return s.to_string();
+    }
+    let i = rng.gen_range(chars.len());
+    let mut out = String::with_capacity(s.len() + 1);
+    for (j, c) in chars.into_iter().enumerate() {
+        out.push(c);
+        if j == i {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Flip the case of one letter.
+fn case_flip(rng: &mut Rng, s: &str) -> String {
+    let mut chars: Vec<char> = s.chars().collect();
+    let letters: Vec<usize> = chars
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.is_ascii_alphabetic())
+        .map(|(i, _)| i)
+        .collect();
+    if letters.is_empty() {
+        return s.to_string();
+    }
+    let i = letters[rng.gen_range(letters.len())];
+    chars[i] = if chars[i].is_ascii_uppercase() {
+        chars[i].to_ascii_lowercase()
+    } else {
+        chars[i].to_ascii_uppercase()
+    };
+    chars.into_iter().collect()
+}
+
+/// Swap two adjacent whitespace-separated tokens.
+fn token_swap(rng: &mut Rng, s: &str) -> String {
+    let mut tokens: Vec<&str> = s.split_whitespace().collect();
+    if tokens.len() < 2 {
+        return s.to_string();
+    }
+    let i = rng.gen_range(tokens.len() - 1);
+    tokens.swap(i, i + 1);
+    tokens.join(" ")
+}
+
+/// Change unit spacing: "1TB" <-> "1 TB".
+fn spacing(rng: &mut Rng, s: &str) -> String {
+    if rng.gen_bool(0.5) {
+        // insert a space before a trailing unit-like suffix
+        for unit in ["TB", "GB", "MB", "rpm"] {
+            if let Some(pos) = s.find(unit) {
+                if pos > 0
+                    && s.as_bytes()[pos - 1].is_ascii_digit()
+                {
+                    let mut out = s.to_string();
+                    out.insert(pos, ' ');
+                    return out;
+                }
+            }
+        }
+        s.to_string()
+    } else {
+        // collapse a "1 TB" style gap
+        s.replace(" TB", "TB").replace(" GB", "GB")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn corrupt_changes_but_preserves_most() {
+        let mut rng = Rng::new(1);
+        let s = "Samsung SpinPoint F1 HD103UJ 1TB";
+        let c = corrupt(&mut rng, s, 2);
+        // still mostly the same string: cheap char-overlap check
+        let common = c.chars().filter(|ch| s.contains(*ch)).count();
+        assert!(common as f64 >= 0.8 * c.len() as f64, "{c}");
+    }
+
+    #[test]
+    fn zero_corruptions_is_identity() {
+        let mut rng = Rng::new(2);
+        assert_eq!(corrupt(&mut rng, "LG GH22NS50", 0), "LG GH22NS50");
+    }
+
+    #[test]
+    fn corruptions_never_panic_on_edge_inputs() {
+        forall("corrupt-edge", 200, |rng| {
+            for s in ["", "a", "ab", "1TB", "  ", "ü"] {
+                let _ = corrupt(rng, s, 3);
+            }
+        });
+    }
+
+    #[test]
+    fn token_swap_preserves_token_multiset() {
+        forall("token-swap", 100, |rng| {
+            let s = "alpha beta gamma delta";
+            let swapped = token_swap(rng, s);
+            let mut a: Vec<&str> = s.split_whitespace().collect();
+            let mut b: Vec<&str> = swapped.split_whitespace().collect();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b);
+        });
+    }
+
+    #[test]
+    fn typo_drop_shortens_by_one() {
+        forall("typo-drop", 100, |rng| {
+            let s = "abcdef";
+            assert_eq!(typo_drop(rng, s).chars().count(), 5);
+        });
+    }
+
+    #[test]
+    fn spacing_roundtrips_units() {
+        let mut rng = Rng::new(3);
+        let variants: Vec<String> =
+            (0..20).map(|_| spacing(&mut rng, "WD Caviar 1TB")).collect();
+        assert!(variants
+            .iter()
+            .all(|v| v == "WD Caviar 1TB" || v == "WD Caviar 1 TB"));
+    }
+}

@@ -1,0 +1,510 @@
+//! Synthetic product-offer generator.
+//!
+//! Substitute for the paper's proprietary dataset of ~114,000 electronic
+//! product offers (23 attributes) from a price-comparison portal.  The
+//! generator reproduces the properties the partitioning strategies react
+//! to (see DESIGN.md §Substitutions):
+//!
+//! * **skewed blocking keys** — manufacturer and product type are drawn
+//!   from Zipf distributions, so key blocking produces a few huge blocks
+//!   and a long tail of tiny ones (what makes partition *tuning* matter);
+//! * **missing values** — a configurable fraction of offers lack product
+//!   type / manufacturer and land in the *misc* block;
+//! * **known duplicates** — each base product is offered by several shops
+//!   with corrupted titles/descriptions; the generator records the true
+//!   duplicate pairs as ground truth for precision/recall reporting.
+
+pub mod catalog;
+pub mod corrupt;
+
+use crate::model::{
+    Dataset, Entity, EntityId, Schema, ATTR_DESCRIPTION, ATTR_MANUFACTURER,
+    ATTR_PRODUCT_TYPE, ATTR_TITLE,
+};
+use crate::util::{Rng, Zipf};
+
+/// Generator configuration.
+#[derive(Clone, Debug)]
+pub struct GeneratorConfig {
+    /// Total number of offers (entities) to generate.
+    pub n_entities: usize,
+    /// Average offers per base product (duplicate cluster size); drawn as
+    /// 1 + Poisson(dup_rate).
+    pub dup_rate: f64,
+    /// Fraction of offers with a missing product type (→ misc block when
+    /// blocking by product type).
+    pub missing_product_type: f64,
+    /// Fraction of offers with a missing manufacturer.
+    pub missing_manufacturer: f64,
+    /// Zipf exponent for product-type popularity (block-size skew).
+    pub type_skew: f64,
+    /// Zipf exponent for manufacturer popularity.
+    pub manufacturer_skew: f64,
+    /// Corruptions applied to a duplicate's title (and half as many to
+    /// its description).
+    pub corruptions: usize,
+    /// Number of distinct manufacturers.  The first
+    /// `catalog::MANUFACTURERS.len()` use the real brand names; the long
+    /// tail (real price portals list hundreds of niche brands) is
+    /// synthesized deterministically.  Drives the block-count/skew of
+    /// manufacturer blocking (Fig 7).
+    pub n_manufacturers: usize,
+    /// PRNG seed — same seed, same dataset, bit for bit.
+    pub seed: u64,
+}
+
+impl GeneratorConfig {
+    /// The paper's small-scale match problem: 20,000 offers.
+    pub fn small() -> GeneratorConfig {
+        GeneratorConfig {
+            n_entities: 20_000,
+            ..GeneratorConfig::default()
+        }
+    }
+
+    /// The paper's large-scale match problem: 114,000 offers.
+    pub fn large() -> GeneratorConfig {
+        GeneratorConfig {
+            n_entities: 114_000,
+            ..GeneratorConfig::default()
+        }
+    }
+
+    /// A tiny dataset for unit tests and the quickstart example.
+    pub fn tiny() -> GeneratorConfig {
+        GeneratorConfig {
+            n_entities: 600,
+            ..GeneratorConfig::default()
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_entities(mut self, n: usize) -> Self {
+        self.n_entities = n;
+        self
+    }
+
+    /// Generate the dataset (+ ground truth) for this configuration.
+    pub fn generate(&self) -> GeneratedData {
+        generate(self)
+    }
+}
+
+impl Default for GeneratorConfig {
+    fn default() -> Self {
+        GeneratorConfig {
+            n_entities: 20_000,
+            dup_rate: 0.35,
+            // the paper's large dataset has ~7 misc partitions of 306 at
+            // max size 1000 → ~6% of offers lack a product type (the
+            // Fig 3 *example* uses a higher 17%; set per-experiment)
+            missing_product_type: 0.06,
+            missing_manufacturer: 0.05,
+            type_skew: 0.9,
+            manufacturer_skew: 1.05,
+            corruptions: 2,
+            n_manufacturers: 400,
+            seed: 2010,
+        }
+    }
+}
+
+/// The full manufacturer name list for a configuration: real brands
+/// followed by a deterministic synthesized long tail.
+pub fn manufacturer_names(n: usize) -> Vec<String> {
+    const PRE: &[&str] = &[
+        "Nova", "Digi", "Techno", "Micro", "Ultra", "Prime", "Alpha",
+        "Vertex", "Quantum", "Sola", "Hyper", "Omni", "Penta", "Strato",
+        "Velo", "Zen", "Arc", "Core", "Flux", "Giga",
+    ];
+    const SUF: &[&str] = &[
+        "tron", "tech", "ware", "dyne", "logic", "com", "sys", "max",
+        "link", "core", "data", "vision", "sonic", "point", "line",
+        "works", "media", "lab", "net", "plex",
+    ];
+    let mut names: Vec<String> = catalog::MANUFACTURERS
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let mut i = 0usize;
+    while names.len() < n {
+        let name =
+            format!("{}{}", PRE[i % PRE.len()], SUF[(i / PRE.len()) % SUF.len()]);
+        let name = if i >= PRE.len() * SUF.len() {
+            format!("{name} {}", i / (PRE.len() * SUF.len()))
+        } else {
+            name
+        };
+        names.push(name);
+        i += 1;
+    }
+    names.truncate(n);
+    names
+}
+
+/// Generator output: the dataset plus the injected duplicate pairs.
+#[derive(Clone, Debug)]
+pub struct GeneratedData {
+    pub dataset: Dataset,
+    /// True duplicate pairs (offers of the same base product).
+    pub truth: Vec<(EntityId, EntityId)>,
+    /// Number of distinct base products.
+    pub n_products: usize,
+}
+
+impl std::ops::Deref for GeneratedData {
+    type Target = Dataset;
+    fn deref(&self) -> &Dataset {
+        &self.dataset
+    }
+}
+
+struct BaseProduct {
+    manufacturer: usize,
+    product_type: usize,
+    title: String,
+    description: String,
+    model_number: String,
+    price_cents: u64,
+}
+
+fn make_base_product(
+    rng: &mut Rng,
+    manufacturers: &[String],
+    man_zipf: &Zipf,
+    type_zipf: &Zipf,
+) -> BaseProduct {
+    let manufacturer = man_zipf.sample(rng);
+    let product_type = type_zipf.sample(rng);
+    let series = rng.choose(catalog::SERIES);
+    let model_number = format!(
+        "{}{}{}",
+        (b'A' + rng.gen_range(26) as u8) as char,
+        (b'A' + rng.gen_range(26) as u8) as char,
+        1000 + rng.gen_range(9000)
+    );
+    let capacity = rng.choose(catalog::CAPACITIES);
+    let title = format!(
+        "{} {} {} {}",
+        manufacturers[manufacturer], series, model_number, capacity
+    );
+    let n_tokens = 6 + rng.gen_range(10);
+    let mut desc_tokens = Vec::with_capacity(n_tokens + 2);
+    desc_tokens.push(catalog::PRODUCT_TYPES[product_type].to_string());
+    desc_tokens.push(series.to_string());
+    for _ in 0..n_tokens {
+        desc_tokens.push(rng.choose(catalog::DESC_TOKENS).to_string());
+    }
+    BaseProduct {
+        manufacturer,
+        product_type,
+        title,
+        description: desc_tokens.join(" "),
+        model_number,
+        price_cents: 500 + rng.gen_range(200_000) as u64,
+    }
+}
+
+fn make_offer(
+    rng: &mut Rng,
+    schema: &Schema,
+    id: EntityId,
+    base: &BaseProduct,
+    manufacturers: &[String],
+    cfg: &GeneratorConfig,
+    is_first_offer: bool,
+) -> Entity {
+    let mut e = Entity::new(id, schema);
+    // Corrupt duplicates; keep the first offer pristine.
+    let (title, description) = if is_first_offer {
+        (base.title.clone(), base.description.clone())
+    } else {
+        (
+            corrupt::corrupt(rng, &base.title, cfg.corruptions),
+            corrupt::corrupt(rng, &base.description, cfg.corruptions / 2),
+        )
+    };
+    e.set(schema, ATTR_TITLE, title);
+    e.set(schema, ATTR_DESCRIPTION, description);
+    if !rng.gen_bool(cfg.missing_manufacturer) {
+        e.set(
+            schema,
+            ATTR_MANUFACTURER,
+            manufacturers[base.manufacturer].clone(),
+        );
+    }
+    if !rng.gen_bool(cfg.missing_product_type) {
+        e.set(
+            schema,
+            ATTR_PRODUCT_TYPE,
+            catalog::PRODUCT_TYPES[base.product_type].to_string(),
+        );
+    }
+    // Fill the remaining attributes of the 23-attribute offer schema.
+    let shop = rng.choose(catalog::SHOPS);
+    let price =
+        base.price_cents as f64 / 100.0 * (0.9 + 0.2 * rng.gen_f64());
+    e.set(schema, "ean", format!("40{:011}", rng.next_u64() % 100_000_000_000));
+    e.set(schema, "sku", format!("{}-{}", &shop[..4], rng.next_u64() % 1_000_000));
+    e.set(schema, "model_number", base.model_number.clone());
+    e.set(schema, "price", format!("{price:.2}"));
+    e.set(schema, "currency", "EUR".to_string());
+    e.set(
+        schema,
+        "availability",
+        if rng.gen_bool(0.8) { "in-stock" } else { "2-3 days" }.to_string(),
+    );
+    e.set(schema, "shop_name", shop.to_string());
+    e.set(schema, "shop_url", format!("https://{shop}/p/{}", id.0));
+    e.set(
+        schema,
+        "category_path",
+        format!("electronics/{}", catalog::PRODUCT_TYPES[base.product_type]),
+    );
+    e.set(schema, "color", rng.choose(catalog::COLORS).to_string());
+    e.set(schema, "weight_g", format!("{}", 50 + rng.gen_range(5000)));
+    e.set(schema, "width_mm", format!("{}", 20 + rng.gen_range(500)));
+    e.set(schema, "height_mm", format!("{}", 10 + rng.gen_range(300)));
+    e.set(schema, "depth_mm", format!("{}", 10 + rng.gen_range(300)));
+    e.set(schema, "warranty_months", format!("{}", 12 * (1 + rng.gen_range(3))));
+    e.set(
+        schema,
+        "energy_label",
+        rng.choose(catalog::ENERGY_LABELS).to_string(),
+    );
+    e.set(schema, "release_year", format!("{}", 2004 + rng.gen_range(7)));
+    e.set(schema, "rating", format!("{:.1}", 1.0 + 4.0 * rng.gen_f64()));
+    e.set(schema, "delivery_days", format!("{}", 1 + rng.gen_range(10)));
+    e
+}
+
+/// Generate a dataset per the configuration.
+pub fn generate(cfg: &GeneratorConfig) -> GeneratedData {
+    let schema = Schema::product_offers();
+    let mut rng = Rng::new(cfg.seed);
+    let manufacturers = manufacturer_names(cfg.n_manufacturers.max(1));
+    let man_zipf = Zipf::new(manufacturers.len(), cfg.manufacturer_skew);
+    let type_zipf = Zipf::new(catalog::PRODUCT_TYPES.len(), cfg.type_skew);
+
+    let mut dataset = Dataset::new(schema.clone());
+    let mut truth = Vec::new();
+    let mut n_products = 0;
+
+    while dataset.len() < cfg.n_entities {
+        let base =
+            make_base_product(&mut rng, &manufacturers, &man_zipf, &type_zipf);
+        n_products += 1;
+        let cluster =
+            (1 + rng.gen_poisson(cfg.dup_rate) as usize).min(cfg.n_entities - dataset.len());
+        let first_id = dataset.len() as u32;
+        for k in 0..cluster {
+            let id = EntityId(dataset.len() as u32);
+            let offer = make_offer(
+                &mut rng,
+                &schema,
+                id,
+                &base,
+                &manufacturers,
+                cfg,
+                k == 0,
+            );
+            dataset.push(offer);
+        }
+        // all pairs inside the cluster are true duplicates
+        for i in 0..cluster {
+            for j in (i + 1)..cluster {
+                truth.push((
+                    EntityId(first_id + i as u32),
+                    EntityId(first_id + j as u32),
+                ));
+            }
+        }
+    }
+
+    GeneratedData {
+        dataset,
+        truth,
+        n_products,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn tiny() -> GeneratedData {
+        GeneratorConfig::tiny().generate()
+    }
+
+    #[test]
+    fn generates_requested_count() {
+        let g = tiny();
+        assert_eq!(g.dataset.len(), 600);
+        assert!(g.n_products > 0 && g.n_products <= 600);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = GeneratorConfig::tiny().with_seed(7).generate();
+        let b = GeneratorConfig::tiny().with_seed(7).generate();
+        let c = GeneratorConfig::tiny().with_seed(8).generate();
+        assert_eq!(a.dataset.entities, b.dataset.entities);
+        assert_eq!(a.truth, b.truth);
+        assert_ne!(a.dataset.entities, c.dataset.entities);
+    }
+
+    #[test]
+    fn ids_are_dense_and_ordered() {
+        let g = tiny();
+        for (i, e) in g.dataset.entities.iter().enumerate() {
+            assert_eq!(e.id, EntityId(i as u32));
+        }
+    }
+
+    #[test]
+    fn truth_pairs_valid_and_within_range() {
+        let g = tiny();
+        assert!(!g.truth.is_empty(), "duplicates injected");
+        for &(a, b) in &g.truth {
+            assert!(a < b);
+            assert!((b.0 as usize) < g.dataset.len());
+        }
+    }
+
+    #[test]
+    fn misc_fraction_close_to_config() {
+        let cfg = GeneratorConfig {
+            n_entities: 4000,
+            ..GeneratorConfig::default()
+        };
+        let g = cfg.generate();
+        let missing = g
+            .dataset
+            .entities
+            .iter()
+            .filter(|e| e.product_type(&g.dataset.schema).is_none())
+            .count();
+        let frac = missing as f64 / g.dataset.len() as f64;
+        assert!(
+            (frac - cfg.missing_product_type).abs() < 0.03,
+            "misc fraction {frac}"
+        );
+    }
+
+    #[test]
+    fn block_sizes_are_skewed() {
+        let g = GeneratorConfig {
+            n_entities: 6000,
+            ..GeneratorConfig::default()
+        }
+        .generate();
+        let mut sizes: HashMap<&str, usize> = HashMap::new();
+        for e in &g.dataset.entities {
+            if let Some(t) = e.product_type(&g.dataset.schema) {
+                *sizes.entry(t).or_default() += 1;
+            }
+        }
+        let mut counts: Vec<usize> = sizes.values().copied().collect();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        // biggest block at least 4x the median block — real skew
+        let median = counts[counts.len() / 2];
+        assert!(
+            counts[0] >= 4 * median.max(1),
+            "not skewed: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn duplicates_share_blocking_keys_mostly() {
+        let g = tiny();
+        let s = &g.dataset.schema;
+        let mut same_type = 0;
+        let mut total = 0;
+        for &(a, b) in &g.truth {
+            let (ea, eb) =
+                (g.dataset.get(a).unwrap(), g.dataset.get(b).unwrap());
+            if let (Some(ta), Some(tb)) =
+                (ea.product_type(s), eb.product_type(s))
+            {
+                total += 1;
+                same_type += (ta == tb) as usize;
+            }
+        }
+        assert!(total > 0);
+        assert_eq!(same_type, total, "same base product, same type");
+    }
+
+    #[test]
+    fn titles_of_duplicates_similar() {
+        let g = tiny();
+        let s = &g.dataset.schema;
+        // sample a few truth pairs; titles must share most characters
+        for &(a, b) in g.truth.iter().take(20) {
+            let ta = g.dataset.get(a).unwrap().title(s).to_lowercase();
+            let tb = g.dataset.get(b).unwrap().title(s).to_lowercase();
+            let common =
+                ta.chars().filter(|c| tb.contains(*c)).count() as f64;
+            assert!(
+                common / ta.len().max(1) as f64 > 0.6,
+                "{ta:?} vs {tb:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_23_attributes_mostly_filled() {
+        let g = tiny();
+        let s = &g.dataset.schema;
+        let e = &g.dataset.entities[0];
+        let filled = s
+            .attributes()
+            .iter()
+            .filter(|a| e.get(s, a).is_some())
+            .count();
+        assert!(filled >= 21, "only {filled} attributes filled");
+    }
+
+    #[test]
+    fn manufacturer_tail_synthesized_and_unique() {
+        let names = manufacturer_names(400);
+        assert_eq!(names.len(), 400);
+        assert_eq!(names[0], "Samsung"); // real brands first
+        let mut sorted = names.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 400, "names must be unique");
+        // deterministic
+        assert_eq!(manufacturer_names(400), names);
+        // huge n still works (suffix disambiguation)
+        assert_eq!(manufacturer_names(1000).len(), 1000);
+    }
+
+    #[test]
+    fn manufacturer_blocking_has_long_tail() {
+        let g = GeneratorConfig {
+            n_entities: 5000,
+            ..GeneratorConfig::default()
+        }
+        .generate();
+        let blocks = crate::blocking::BlockingMethod::manufacturer()
+            .run(&g.dataset);
+        assert!(
+            blocks.n_blocks() > 150,
+            "want a long manufacturer tail, got {}",
+            blocks.n_blocks()
+        );
+        let hist = blocks.size_histogram();
+        assert!(hist[0] > 20 * hist[hist.len() - 1].max(1), "skewed");
+    }
+
+    #[test]
+    fn large_config_sizes() {
+        assert_eq!(GeneratorConfig::small().n_entities, 20_000);
+        assert_eq!(GeneratorConfig::large().n_entities, 114_000);
+    }
+}

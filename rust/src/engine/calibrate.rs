@@ -1,0 +1,125 @@
+//! Calibration: anchor the simulator's virtual clock with real measured
+//! per-pair match costs on this host.
+//!
+//! Runs the actual Rust matchers over a sample of entity pairs from the
+//! real dataset and returns the measured mean cost of one comparison.
+//! The result feeds [`super::CostParams::pair_ns`], so simulated
+//! makespans are “this workload on the modeled cluster at this host's
+//! single-core speed”.
+
+use super::CostParams;
+use crate::features::EntityFeatures;
+use crate::matching::{MatchStrategy, StrategyKind};
+use crate::model::Dataset;
+use crate::util::Rng;
+use std::time::Instant;
+
+/// Measured calibration result.
+#[derive(Clone, Copy, Debug)]
+pub struct Calibration {
+    pub strategy: StrategyKind,
+    pub pair_ns: f64,
+    pub pairs_measured: u64,
+}
+
+/// Measure the mean per-pair cost of `strategy` on a sample of up to
+/// `sample_entities` entities from `dataset` (all pairs of the sample,
+/// at least `min_pairs` comparisons).
+pub fn calibrate(
+    dataset: &Dataset,
+    strategy: StrategyKind,
+    sample_entities: usize,
+    seed: u64,
+) -> Calibration {
+    let mut rng = Rng::new(seed);
+    let n = dataset.len().min(sample_entities).max(2);
+    // sample without replacement via shuffle prefix
+    let mut idx: Vec<usize> = (0..dataset.len()).collect();
+    rng.shuffle(&mut idx);
+    idx.truncate(n);
+    let feats: Vec<EntityFeatures> = idx
+        .iter()
+        .map(|&i| EntityFeatures::of(&dataset.entities[i], dataset))
+        .collect();
+
+    let ms = MatchStrategy::new(strategy);
+    // warmup: one pass over a small prefix
+    let warm = feats.len().min(20);
+    for i in 0..warm {
+        for j in (i + 1)..warm {
+            std::hint::black_box(ms.similarity(&feats[i], &feats[j]));
+        }
+    }
+
+    let start = Instant::now();
+    let mut pairs = 0u64;
+    for i in 0..feats.len() {
+        for j in (i + 1)..feats.len() {
+            std::hint::black_box(ms.similarity(&feats[i], &feats[j]));
+            pairs += 1;
+        }
+    }
+    let elapsed = start.elapsed().as_nanos() as f64;
+    Calibration {
+        strategy,
+        pair_ns: elapsed / pairs.max(1) as f64,
+        pairs_measured: pairs,
+    }
+}
+
+/// Convenience: calibrated cost params for a strategy.
+pub fn calibrated_params(
+    dataset: &Dataset,
+    strategy: StrategyKind,
+    sample_entities: usize,
+    seed: u64,
+) -> CostParams {
+    let c = calibrate(dataset, strategy, sample_entities, seed);
+    CostParams::default_for(strategy).with_pair_ns(c.pair_ns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::GeneratorConfig;
+
+    #[test]
+    fn calibration_measures_positive_cost() {
+        let data = GeneratorConfig::tiny().with_seed(1).generate();
+        let c = calibrate(&data.dataset, StrategyKind::Wam, 60, 7);
+        assert!(c.pair_ns > 0.0 && c.pair_ns.is_finite());
+        assert_eq!(c.pairs_measured, 60 * 59 / 2);
+    }
+
+    #[test]
+    fn lrm_costs_more_than_wam() {
+        if cfg!(debug_assertions) {
+            // the relation holds for the optimized production build the
+            // simulator calibrates against; unoptimized debug code skews
+            // the banded DP vs sorted-merge balance the other way
+            return;
+        }
+        let data = GeneratorConfig::tiny().with_seed(2).generate();
+        let w = calibrate(&data.dataset, StrategyKind::Wam, 50, 3);
+        let l = calibrate(&data.dataset, StrategyKind::Lrm, 50, 3);
+        // LRM evaluates 3 matchers incl. a 4096-dim cosine; WAM discards
+        // early.  Allow slack for timer noise but LRM must be dearer.
+        assert!(
+            l.pair_ns > w.pair_ns,
+            "lrm {} <= wam {}",
+            l.pair_ns,
+            w.pair_ns
+        );
+    }
+
+    #[test]
+    fn calibrated_params_plumbs_measurement() {
+        let data = GeneratorConfig::tiny().with_seed(3).generate();
+        let p = calibrated_params(&data.dataset, StrategyKind::Wam, 40, 5);
+        assert!(p.pair_ns > 0.0);
+        // other fields keep their strategy defaults
+        let d = CostParams::default_for(StrategyKind::Wam);
+        assert_eq!(p.mem_fraction, d.mem_fraction);
+        assert_eq!(p.task_overhead_ns, d.task_overhead_ns);
+    }
+}

@@ -1,0 +1,150 @@
+//! Execution engines for parallel match workflows.
+//!
+//! * [`threads`] — real OS threads inside this process.  Exercises the
+//!   exact scheduler/cache/executor code under true concurrency; on this
+//!   single-core host it is used for correctness tests and the 1-thread
+//!   baseline.
+//! * [`sim`] — a **deterministic discrete-event simulator** in virtual
+//!   time.  Models the full computing environment `CE = (nodes, cores,
+//!   mem)` of the paper's testbed, charging calibrated compute costs and
+//!   modeled network / memory costs (DESIGN.md §Substitutions).  All
+//!   scale-out experiments (Figs 5–9, Tables 1–2) run here.
+//! * [`calibrate`] — measures real per-pair match cost on this host to
+//!   anchor the simulator's virtual clock.
+
+pub mod calibrate;
+pub mod sim;
+pub mod threads;
+
+use crate::matching::StrategyKind;
+
+/// Cost parameters of one match strategy on the reference node.
+///
+/// The virtual service time of a match task with `n` pair comparisons on
+/// a node running `t` active threads over `c` cores is
+///
+/// ```text
+/// time = overhead + n · pair_ns · (cpu + mem·(1 + γ·(min(t,c)−1))) · paging
+/// ```
+///
+/// where `cpu + mem = 1` splits the per-pair cost into a compute-bound
+/// part (scales perfectly with cores) and a memory-bandwidth-bound part
+/// (contends with the other active threads of the node, factor `γ` per
+/// extra thread), and `paging ≥ 1` penalizes tasks whose estimated
+/// footprint exceeds the per-thread budget (soft: quadratic approach to
+/// the budget, reproducing GC pressure; hard: linear beyond it).  This is
+/// what makes LRM degrade for large partitions (paper Fig 6) and stop
+/// scaling past the core count (Fig 5) while WAM keeps scaling.
+#[derive(Clone, Copy, Debug)]
+pub struct CostParams {
+    /// Calibrated mean cost of one pair comparison, nanoseconds.
+    pub pair_ns: f64,
+    /// Fraction of the pair cost bound by memory bandwidth (0..1).
+    pub mem_fraction: f64,
+    /// Memory-contention factor per additional active thread.
+    pub gamma: f64,
+    /// Fixed per-task overhead (start/terminate a match task), ns.
+    pub task_overhead_ns: u64,
+    /// Soft (GC-pressure) paging coefficient.
+    pub soft_paging: f64,
+    /// Hard paging coefficient once the footprint exceeds the budget.
+    pub hard_paging: f64,
+}
+
+impl CostParams {
+    /// Uncalibrated defaults per strategy; `pair_ns` is replaced by
+    /// [`calibrate::calibrate`] in real runs.  WAM's discard optimization
+    /// keeps it compute-bound and cheap; LRM evaluates three matchers and
+    /// builds model features, making it dearer and more memory-bound.
+    pub fn default_for(strategy: StrategyKind) -> CostParams {
+        match strategy {
+            StrategyKind::Wam => CostParams {
+                pair_ns: 900.0,
+                mem_fraction: 0.12,
+                gamma: 0.18,
+                task_overhead_ns: 8_000_000, // 8 ms start/stop + result ship
+                soft_paging: 0.5,
+                hard_paging: 2.0,
+            },
+            StrategyKind::Lrm => CostParams {
+                pair_ns: 2600.0,
+                mem_fraction: 0.42,
+                gamma: 0.30,
+                task_overhead_ns: 12_000_000,
+                soft_paging: 0.9,
+                hard_paging: 2.5,
+            },
+        }
+    }
+
+    pub fn with_pair_ns(mut self, pair_ns: f64) -> Self {
+        self.pair_ns = pair_ns;
+        self
+    }
+
+    /// Effective per-pair cost with `active` threads sharing a node's
+    /// memory system (`active` already clamped to the core count).
+    pub fn pair_cost_contended(&self, active: usize) -> f64 {
+        let cpu = 1.0 - self.mem_fraction;
+        let mem = self.mem_fraction
+            * (1.0 + self.gamma * active.saturating_sub(1) as f64);
+        self.pair_ns * (cpu + mem)
+    }
+
+    /// Paging penalty for a task of `demand` bytes against a per-thread
+    /// `budget`.
+    pub fn paging_penalty(&self, demand: u64, budget: u64) -> f64 {
+        if budget == 0 {
+            return 1.0 + self.hard_paging;
+        }
+        let ratio = demand as f64 / budget as f64;
+        let soft = self.soft_paging * ratio * ratio;
+        let hard = if ratio > 1.0 {
+            self.hard_paging * (ratio - 1.0)
+        } else {
+            0.0
+        };
+        1.0 + soft + hard
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contention_grows_with_threads() {
+        let p = CostParams::default_for(StrategyKind::Lrm);
+        let c1 = p.pair_cost_contended(1);
+        let c4 = p.pair_cost_contended(4);
+        assert!((c1 - p.pair_ns).abs() < 1e-9, "1 thread = base cost");
+        assert!(c4 > c1);
+        // WAM is less memory-bound → contends less
+        let w = CostParams::default_for(StrategyKind::Wam);
+        assert!(
+            c4 / c1 > w.pair_cost_contended(4) / w.pair_cost_contended(1)
+        );
+    }
+
+    #[test]
+    fn paging_penalty_shape() {
+        let p = CostParams::default_for(StrategyKind::Lrm);
+        let budget = 750 * crate::util::MIB;
+        let none = p.paging_penalty(0, budget);
+        let half = p.paging_penalty(budget / 2, budget);
+        let full = p.paging_penalty(budget, budget);
+        let double = p.paging_penalty(2 * budget, budget);
+        assert!((none - 1.0).abs() < 1e-12);
+        assert!(none < half && half < full && full < double);
+        assert!(double > 2.0, "hard paging dominates: {double}");
+    }
+
+    #[test]
+    fn lrm_dearer_than_wam() {
+        let w = CostParams::default_for(StrategyKind::Wam);
+        let l = CostParams::default_for(StrategyKind::Lrm);
+        assert!(l.pair_ns > w.pair_ns);
+        assert!(l.mem_fraction > w.mem_fraction);
+        assert!(l.task_overhead_ns > w.task_overhead_ns);
+    }
+}

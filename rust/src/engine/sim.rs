@@ -1,0 +1,550 @@
+//! Deterministic discrete-event simulator in virtual time.
+//!
+//! Models the paper's computing environment exactly: `nodes` match
+//! services, each with `cores` cores, `threads` match threads, `max_mem`
+//! shared memory, an LRU partition cache of capacity `c`, and RMI-style
+//! communication costs to the central data and workflow services.  The
+//! scheduler under simulation is the *real* [`Scheduler`] — the same code
+//! the thread engine runs.
+//!
+//! Task lifecycle (one virtual thread):
+//!
+//! ```text
+//! assign ──control──▶ fetch partitions (cache miss ⇒ transfer time;
+//!         latency      no core needed — I/O overlaps compute)
+//!        ──▶ wait for a free core ──▶ compute (service time from
+//!            CostParams) ──▶ report complete (piggybacked cache status)
+//!        ──▶ assign next …
+//! ```
+//!
+//! Everything is integer nanoseconds; ties break on event sequence
+//! numbers, so runs are bit-for-bit reproducible.
+
+use super::CostParams;
+use crate::cluster::{ComputingEnv, HeterogeneousEnv, NodeSpec};
+use crate::coordinator::scheduler::{Policy, Scheduler, ServiceId};
+use crate::matching::StrategyKind;
+use crate::metrics::RunMetrics;
+use crate::model::Correspondence;
+use crate::net::CostModel;
+use crate::partition::{task_memory_bytes, MatchTask, PartitionId, PartitionSet};
+use crate::store::DataService;
+use crate::util::LruCache;
+use crate::worker::{task_comparisons, TaskExecutor};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Simulator configuration.
+pub struct SimConfig {
+    pub cost: CostParams,
+    /// Control-plane messages (assignment / completion RMI to the
+    /// workflow service).
+    pub net: CostModel,
+    /// Data-plane partition fetches from the data service (DBMS path —
+    /// see [`CostModel::dbms`]).
+    pub data_net: CostModel,
+    pub strategy: StrategyKind,
+    /// Partition-cache capacity per match service (paper's `c`).
+    pub cache_capacity: usize,
+    pub policy: Policy,
+    /// Inject node failures at (virtual time, node index).
+    pub failures: Vec<(u64, usize)>,
+    /// Actually execute the match tasks (real compute, small runs only)
+    /// to produce correspondences alongside the virtual-time metrics.
+    pub execute: Option<Box<dyn TaskExecutor>>,
+}
+
+impl SimConfig {
+    pub fn new(strategy: StrategyKind, cost: CostParams) -> SimConfig {
+        SimConfig {
+            cost,
+            net: CostModel::lan(),
+            data_net: CostModel::dbms(),
+            strategy,
+            cache_capacity: 0,
+            policy: Policy::Affinity,
+            failures: Vec::new(),
+            execute: None,
+        }
+    }
+}
+
+/// Simulation outcome: metrics on the virtual clock (+ correspondences
+/// when `execute` was set).
+pub struct SimOutcome {
+    pub metrics: RunMetrics,
+    pub correspondences: Vec<Correspondence>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EventKind {
+    FetchDone { thread: usize, task: MatchTask },
+    ComputeDone { thread: usize, task: MatchTask },
+    FailNode { node: usize },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Event {
+    time: u64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+struct Node {
+    spec: NodeSpec,
+    cache: LruCache<PartitionId, u64>,
+    busy_cores: usize,
+    compute_queue: VecDeque<(usize, MatchTask, u64)>, // (thread, task, service_ns)
+    alive: bool,
+}
+
+/// Run the simulation.
+pub fn run(
+    ce: &ComputingEnv,
+    parts: &PartitionSet,
+    tasks: Vec<MatchTask>,
+    store: &DataService,
+    mut cfg: SimConfig,
+) -> SimOutcome {
+    run_heterogeneous(
+        &HeterogeneousEnv::uniform(ce),
+        parts,
+        tasks,
+        store,
+        &mut cfg,
+    )
+}
+
+/// Run on an explicitly heterogeneous environment.
+pub fn run_heterogeneous(
+    env: &HeterogeneousEnv,
+    parts: &PartitionSet,
+    tasks: Vec<MatchTask>,
+    store: &DataService,
+    cfg: &mut SimConfig,
+) -> SimOutcome {
+    let n_tasks = tasks.len();
+    let mut sched = Scheduler::new(tasks, cfg.policy);
+    let mut nodes: Vec<Node> = env
+        .nodes
+        .iter()
+        .map(|&spec| Node {
+            spec,
+            cache: LruCache::new(cfg.cache_capacity),
+            busy_cores: 0,
+            compute_queue: VecDeque::new(),
+            alive: true,
+        })
+        .collect();
+    for i in 0..nodes.len() {
+        sched.add_service(ServiceId(i));
+    }
+
+    // global thread table: thread id → node
+    let mut thread_node: Vec<usize> = Vec::new();
+    for (ni, node) in nodes.iter().enumerate() {
+        for _ in 0..node.spec.threads {
+            thread_node.push(ni);
+        }
+    }
+    let n_threads = thread_node.len();
+
+    let mut metrics = RunMetrics {
+        thread_busy_ns: vec![0; n_threads],
+        ..Default::default()
+    };
+    let mut correspondences = Vec::new();
+
+    let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let push = |heap: &mut BinaryHeap<Reverse<Event>>,
+                    seq: &mut u64,
+                    time: u64,
+                    kind: EventKind| {
+        heap.push(Reverse(Event {
+            time,
+            seq: *seq,
+            kind,
+        }));
+        *seq += 1;
+    };
+
+    for &(time, node) in &cfg.failures {
+        push(&mut heap, &mut seq, time, EventKind::FailNode { node });
+    }
+
+    let mut idle_threads: Vec<usize> = Vec::new();
+    let mut makespan = 0u64;
+
+    // Assign a task to `thread` at `now`: charge control + fetch, push
+    // FetchDone.  Returns false if no task was available.
+    macro_rules! try_assign {
+        ($thread:expr, $now:expr) => {{
+            let thread = $thread;
+            let now: u64 = $now;
+            let ni = thread_node[thread];
+            if !nodes[ni].alive {
+                false
+            } else if let Some(task) = sched.next_task(ServiceId(ni)) {
+                metrics.control_messages += 1;
+                let mut t = now + cfg.net.control_message_ns();
+                for pid in task.needed_partitions() {
+                    let node = &mut nodes[ni];
+                    if node.cache.get(&pid).is_some() {
+                        metrics.cache_hits += 1;
+                    } else {
+                        metrics.cache_misses += 1;
+                        let bytes = store.payload_bytes(pid);
+                        t += cfg.data_net.transfer_time_ns(bytes);
+                        metrics.bytes_fetched += bytes;
+                        node.cache.put(pid, bytes);
+                    }
+                }
+                metrics.thread_busy_ns[thread] += t - now;
+                push(
+                    &mut heap,
+                    &mut seq,
+                    t,
+                    EventKind::FetchDone { thread, task },
+                );
+                true
+            } else {
+                idle_threads.push(thread);
+                false
+            }
+        }};
+    }
+
+    // service time of a task on node `ni`
+    let service_time = |nodes: &Vec<Node>, ni: usize, task: &MatchTask| -> u64 {
+        let spec = &nodes[ni].spec;
+        let l = parts.get(task.left).len();
+        let r = parts.get(task.right).len();
+        let pairs = task_comparisons(task, l, r);
+        let active = spec.threads.min(spec.cores);
+        let budget = spec.max_mem / spec.threads as u64;
+        let demand = task_memory_bytes(l, r, cfg.strategy);
+        let pair_cost = cfg.cost.pair_cost_contended(active)
+            * cfg.cost.paging_penalty(demand, budget);
+        let work = cfg.cost.task_overhead_ns as f64
+            + pairs as f64 * pair_cost;
+        (work / spec.speed.max(1e-9)) as u64
+    };
+
+    // Kick-off: threads ask for work as the run starts.  The workflow
+    // service hands out assignments one RMI call at a time, so the
+    // initial wave is staggered by one control latency per thread —
+    // without this, homogeneous tasks march in lockstep (all threads
+    // fetch at the same instants, all cores idle at the same instants),
+    // a convoy no real deployment exhibits.
+    for thread in 0..n_threads {
+        try_assign!(
+            thread,
+            thread as u64 * cfg.net.control_message_ns().max(1)
+        );
+    }
+
+    while let Some(Reverse(ev)) = heap.pop() {
+        match ev.kind {
+            EventKind::FailNode { node } => {
+                if !nodes[node].alive {
+                    continue;
+                }
+                nodes[node].alive = false;
+                nodes[node].compute_queue.clear();
+                nodes[node].busy_cores = 0;
+                let reopened = sched.fail_service(ServiceId(node));
+                if reopened > 0 {
+                    // wake idle threads on surviving nodes
+                    let waiting: Vec<usize> = std::mem::take(&mut idle_threads);
+                    for thread in waiting {
+                        try_assign!(thread, ev.time);
+                    }
+                }
+            }
+            EventKind::FetchDone { thread, task } => {
+                let ni = thread_node[thread];
+                if !nodes[ni].alive {
+                    continue;
+                }
+                let svc = service_time(&nodes, ni, &task);
+                let node = &mut nodes[ni];
+                if node.busy_cores < node.spec.cores {
+                    node.busy_cores += 1;
+                    metrics.thread_busy_ns[thread] += svc;
+                    push(
+                        &mut heap,
+                        &mut seq,
+                        ev.time + svc,
+                        EventKind::ComputeDone { thread, task },
+                    );
+                } else {
+                    node.compute_queue.push_back((thread, task, svc));
+                }
+            }
+            EventKind::ComputeDone { thread, task } => {
+                let ni = thread_node[thread];
+                if !nodes[ni].alive {
+                    continue;
+                }
+                makespan = makespan.max(ev.time);
+
+                // real execution (small runs): produce correspondences
+                let l = parts.get(task.left).len();
+                let r = parts.get(task.right).len();
+                metrics.tasks += 1;
+                metrics.comparisons += task_comparisons(&task, l, r);
+                if let Some(exec) = &cfg.execute {
+                    let left = store.fetch(task.left);
+                    let intra = task.left == task.right;
+                    let right = if intra {
+                        left.clone()
+                    } else {
+                        store.fetch(task.right)
+                    };
+                    correspondences
+                        .extend(exec.execute(&left, &right, intra));
+                }
+
+                // completion report with piggybacked cache status
+                metrics.control_messages += 1;
+                sched.report_complete(
+                    ServiceId(ni),
+                    task.id,
+                    nodes[ni].cache.keys(),
+                );
+
+                // free the core; start a queued compute phase if any
+                let node = &mut nodes[ni];
+                node.busy_cores -= 1;
+                if let Some((qt, qtask, qsvc)) = node.compute_queue.pop_front()
+                {
+                    node.busy_cores += 1;
+                    metrics.thread_busy_ns[qt] += qsvc;
+                    push(
+                        &mut heap,
+                        &mut seq,
+                        ev.time + qsvc,
+                        EventKind::ComputeDone {
+                            thread: qt,
+                            task: qtask,
+                        },
+                    );
+                }
+
+                // pull the next task for this thread
+                try_assign!(thread, ev.time + cfg.net.control_message_ns());
+            }
+        }
+    }
+
+    assert!(
+        sched.is_done(),
+        "simulation ended with {} of {} tasks incomplete",
+        sched.remaining(),
+        n_tasks,
+    );
+    metrics.makespan_ns = makespan;
+    metrics.matches = correspondences.len();
+    metrics.affinity_hits = sched.affinity_assignments;
+    SimOutcome {
+        metrics,
+        correspondences,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::GeneratorConfig;
+    use crate::matching::MatchStrategy;
+    use crate::model::EntityId;
+    use crate::partition::{generate_tasks, partition_size_based};
+    use crate::worker::RustExecutor;
+
+    fn setup(
+        n: usize,
+        m: usize,
+    ) -> (
+        crate::datagen::GeneratedData,
+        PartitionSet,
+        Vec<MatchTask>,
+        DataService,
+    ) {
+        let data = GeneratorConfig::tiny().with_entities(n).generate();
+        let ids: Vec<EntityId> =
+            data.dataset.entities.iter().map(|e| e.id).collect();
+        let parts = partition_size_based(&ids, m);
+        let tasks = generate_tasks(&parts);
+        let store = DataService::build(&data.dataset, &parts);
+        (data, parts, tasks, store)
+    }
+
+    fn sim_cfg(strategy: StrategyKind) -> SimConfig {
+        SimConfig::new(strategy, CostParams::default_for(strategy))
+    }
+
+    #[test]
+    fn completes_all_tasks_deterministically() {
+        let (_, parts, tasks, store) = setup(400, 80);
+        let ce = ComputingEnv::paper_testbed(2);
+        let n_tasks = tasks.len();
+        let a = run(&ce, &parts, tasks.clone(), &store, sim_cfg(StrategyKind::Wam));
+        let b = run(&ce, &parts, tasks, &store, sim_cfg(StrategyKind::Wam));
+        assert_eq!(a.metrics.tasks, n_tasks);
+        assert_eq!(a.metrics.makespan_ns, b.metrics.makespan_ns);
+        assert_eq!(a.metrics.cache_hits, b.metrics.cache_hits);
+        assert!(a.metrics.makespan_ns > 0);
+    }
+
+    #[test]
+    fn more_cores_scale_down_makespan() {
+        let (_, parts, tasks, store) = setup(600, 60);
+        let mut times = Vec::new();
+        for nodes in [1, 2, 4] {
+            let ce = ComputingEnv::paper_testbed(nodes);
+            let out = run(
+                &ce,
+                &parts,
+                tasks.clone(),
+                &store,
+                sim_cfg(StrategyKind::Wam),
+            );
+            times.push(out.metrics.makespan_ns);
+        }
+        assert!(times[1] < times[0]);
+        assert!(times[2] < times[1]);
+        // speedup from 4 to 16 cores should be substantial (> 2.5x)
+        assert!(
+            times[0] as f64 / times[2] as f64 > 2.5,
+            "speedup {}",
+            times[0] as f64 / times[2] as f64
+        );
+    }
+
+    #[test]
+    fn caching_reduces_fetches_and_time() {
+        let (_, parts, tasks, store) = setup(600, 60);
+        let ce = ComputingEnv::paper_testbed(1);
+        let nc = run(
+            &ce,
+            &parts,
+            tasks.clone(),
+            &store,
+            sim_cfg(StrategyKind::Wam),
+        );
+        let mut cached = sim_cfg(StrategyKind::Wam);
+        cached.cache_capacity = 16;
+        let c = run(&ce, &parts, tasks, &store, cached);
+        assert_eq!(nc.metrics.cache_hits, 0);
+        assert!(c.metrics.cache_hits > 0);
+        assert!(c.metrics.bytes_fetched < nc.metrics.bytes_fetched);
+        assert!(c.metrics.makespan_ns <= nc.metrics.makespan_ns);
+        assert!(c.metrics.hit_ratio() > 0.3, "hr {}", c.metrics.hit_ratio());
+    }
+
+    #[test]
+    fn execute_mode_matches_direct_execution() {
+        let (data, parts, tasks, store) = setup(200, 50);
+        let ce = ComputingEnv::paper_testbed(1);
+        let strategy = MatchStrategy::new(StrategyKind::Wam);
+        let mut cfg = sim_cfg(StrategyKind::Wam);
+        cfg.execute = Some(Box::new(RustExecutor::new(strategy)));
+        let out = run(&ce, &parts, tasks, &store, cfg);
+        assert_eq!(out.metrics.matches, out.correspondences.len());
+        // sanity: finds a healthy share of injected duplicates
+        let found: std::collections::HashSet<_> =
+            out.correspondences.iter().map(|c| c.pair()).collect();
+        let hits = data
+            .truth
+            .iter()
+            .filter(|&&(a, b)| found.contains(&(a, b)))
+            .count();
+        assert!(hits * 10 >= data.truth.len() * 8, "{hits}/{}", data.truth.len());
+    }
+
+    #[test]
+    fn node_failure_reassigns_and_completes() {
+        let (_, parts, tasks, store) = setup(600, 60);
+        let n_tasks = tasks.len();
+        let ce = ComputingEnv::paper_testbed(2);
+        let healthy = run(
+            &ce,
+            &parts,
+            tasks.clone(),
+            &store,
+            sim_cfg(StrategyKind::Wam),
+        );
+        let mut cfg = sim_cfg(StrategyKind::Wam);
+        // kill node 1 early in the run
+        cfg.failures = vec![(healthy.metrics.makespan_ns / 10, 1)];
+        let out = run(&ce, &parts, tasks, &store, cfg);
+        assert_eq!(out.metrics.tasks, n_tasks, "all tasks still complete");
+        assert!(
+            out.metrics.makespan_ns > healthy.metrics.makespan_ns,
+            "losing a node costs time"
+        );
+    }
+
+    #[test]
+    fn threads_beyond_cores_give_little() {
+        let (_, parts, tasks, store) = setup(800, 60);
+        // LAN data path: at these tiny test partitions the default DBMS
+        // fetch cost would dominate compute and extra threads would win
+        // by I/O overlap alone — not what this test isolates.
+        let mut cfg4 = sim_cfg(StrategyKind::Lrm);
+        cfg4.data_net = CostModel::lan();
+        let mut cfg8 = sim_cfg(StrategyKind::Lrm);
+        cfg8.data_net = CostModel::lan();
+        let t4 = run(
+            &ComputingEnv::paper_testbed(1).with_threads(4),
+            &parts,
+            tasks.clone(),
+            &store,
+            cfg4,
+        );
+        let t8 = run(
+            &ComputingEnv::paper_testbed(1).with_threads(8),
+            &parts,
+            tasks,
+            &store,
+            cfg8,
+        );
+        // LRM: 8 threads on 4 cores must not be much better than 4
+        // (memory pressure + core sharing), within 20%
+        let ratio = t4.metrics.makespan_ns as f64 / t8.metrics.makespan_ns as f64;
+        assert!(ratio < 1.20, "8-thread speedup over 4 = {ratio}");
+    }
+
+    #[test]
+    fn affinity_beats_fifo_on_cache_hits() {
+        let (_, parts, tasks, store) = setup(900, 50);
+        let ce = ComputingEnv::paper_testbed(2);
+        let mut aff = sim_cfg(StrategyKind::Wam);
+        aff.cache_capacity = 8;
+        aff.policy = Policy::Affinity;
+        let mut fifo = sim_cfg(StrategyKind::Wam);
+        fifo.cache_capacity = 8;
+        fifo.policy = Policy::Fifo;
+        let a = run(&ce, &parts, tasks.clone(), &store, aff);
+        let f = run(&ce, &parts, tasks, &store, fifo);
+        assert!(
+            a.metrics.hit_ratio() >= f.metrics.hit_ratio(),
+            "affinity hr {} < fifo hr {}",
+            a.metrics.hit_ratio(),
+            f.metrics.hit_ratio()
+        );
+    }
+}

@@ -1,0 +1,318 @@
+//! Real-thread execution engine.
+//!
+//! Runs the same [`Scheduler`] + [`PartitionCache`] + [`TaskExecutor`]
+//! stack as the simulator, but on actual OS threads with real matching
+//! work and wall-clock timing.  One match service (cache + thread pool)
+//! per configured node; all services share this process.
+//!
+//! On the single-core benchmark host this engine provides the 1-thread
+//! baselines and correctness cross-checks against the simulator
+//! (identical correspondence sets); the scale-out numbers come from
+//! [`super::sim`].
+
+use crate::cluster::ComputingEnv;
+use crate::coordinator::scheduler::{Policy, Scheduler, ServiceId};
+use crate::metrics::RunMetrics;
+use crate::model::Correspondence;
+use crate::partition::{MatchTask, PartitionSet};
+use crate::store::DataService;
+use crate::worker::{task_comparisons, PartitionCache, TaskExecutor};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Thread-engine configuration.
+pub struct ThreadConfig {
+    pub cache_capacity: usize,
+    pub policy: Policy,
+}
+
+impl Default for ThreadConfig {
+    fn default() -> Self {
+        ThreadConfig {
+            cache_capacity: 0,
+            policy: Policy::Affinity,
+        }
+    }
+}
+
+/// Outcome of a thread-engine run.
+pub struct ThreadOutcome {
+    pub metrics: RunMetrics,
+    pub correspondences: Vec<Correspondence>,
+}
+
+/// Execute all tasks on real threads (`ce.nodes` services ×
+/// `ce.threads_per_node` threads each).
+pub fn run(
+    ce: &ComputingEnv,
+    _parts: &PartitionSet,
+    tasks: Vec<MatchTask>,
+    store: &DataService,
+    executor: &dyn TaskExecutor,
+    cfg: ThreadConfig,
+) -> ThreadOutcome {
+    let n_tasks = tasks.len();
+    let scheduler = Arc::new(Mutex::new(Scheduler::new(tasks, cfg.policy)));
+    let caches: Vec<Arc<PartitionCache>> = (0..ce.nodes)
+        .map(|_| Arc::new(PartitionCache::new(cfg.cache_capacity)))
+        .collect();
+    for i in 0..ce.nodes {
+        scheduler.lock().unwrap().add_service(ServiceId(i));
+    }
+
+    let n_threads = ce.total_threads();
+    let start = Instant::now();
+    let results: Mutex<Vec<Correspondence>> = Mutex::new(Vec::new());
+    let comparisons = std::sync::atomic::AtomicU64::new(0);
+    let done_tasks = std::sync::atomic::AtomicU64::new(0);
+    let busy: Vec<std::sync::atomic::AtomicU64> =
+        (0..n_threads).map(|_| Default::default()).collect();
+
+    std::thread::scope(|scope| {
+        for thread in 0..n_threads {
+            let node = thread / ce.threads_per_node;
+            let scheduler = scheduler.clone();
+            let cache = caches[node].clone();
+            let results = &results;
+            let comparisons = &comparisons;
+            let done_tasks = &done_tasks;
+            let busy = &busy;
+            scope.spawn(move || {
+                loop {
+                    let task = {
+                        let mut s = scheduler.lock().unwrap();
+                        s.next_task(ServiceId(node))
+                    };
+                    let Some(task) = task else {
+                        // open list empty: if everything completed, stop;
+                        // otherwise wait for potential requeues
+                        let done = scheduler.lock().unwrap().is_done();
+                        if done {
+                            break;
+                        }
+                        std::thread::yield_now();
+                        // re-check: remaining-but-in-flight tasks may
+                        // finish without reopening; exit when done
+                        let s = scheduler.lock().unwrap();
+                        if s.is_done() || s.remaining() == 0 {
+                            break;
+                        }
+                        drop(s);
+                        std::thread::sleep(
+                            std::time::Duration::from_micros(50),
+                        );
+                        continue;
+                    };
+
+                    let t0 = Instant::now();
+                    // fetch through the service cache
+                    let fetch = |pid| match cache.get(pid) {
+                        Some(d) => d,
+                        None => {
+                            let d = store.fetch(pid);
+                            cache.put(pid, d.clone());
+                            d
+                        }
+                    };
+                    let intra = task.left == task.right;
+                    let left = fetch(task.left);
+                    let right = if intra {
+                        left.clone()
+                    } else {
+                        fetch(task.right)
+                    };
+                    let found = executor.execute(&left, &right, intra);
+                    comparisons.fetch_add(
+                        task_comparisons(&task, left.len(), right.len()),
+                        std::sync::atomic::Ordering::Relaxed,
+                    );
+                    done_tasks
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    busy[thread].fetch_add(
+                        t0.elapsed().as_nanos() as u64,
+                        std::sync::atomic::Ordering::Relaxed,
+                    );
+                    results.lock().unwrap().extend(found);
+                    scheduler.lock().unwrap().report_complete(
+                        ServiceId(node),
+                        task.id,
+                        cache.status(),
+                    );
+                }
+            });
+        }
+    });
+
+    let elapsed = start.elapsed().as_nanos() as u64;
+    let sched = scheduler.lock().unwrap();
+    assert!(sched.is_done(), "thread engine finished incomplete");
+    let correspondences = results.into_inner().unwrap();
+    let metrics = RunMetrics {
+        makespan_ns: elapsed,
+        tasks: n_tasks,
+        comparisons: comparisons.into_inner(),
+        matches: correspondences.len(),
+        cache_hits: caches.iter().map(|c| c.hits()).sum(),
+        cache_misses: caches.iter().map(|c| c.misses()).sum(),
+        bytes_fetched: store.traffic.total_bytes(),
+        control_messages: 2 * n_tasks as u64,
+        thread_busy_ns: busy.into_iter().map(|b| b.into_inner()).collect(),
+        affinity_hits: sched.affinity_assignments,
+    };
+    ThreadOutcome {
+        metrics,
+        correspondences,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::GeneratorConfig;
+    use crate::matching::{MatchStrategy, StrategyKind};
+    use crate::model::EntityId;
+    use crate::partition::{generate_tasks, partition_size_based};
+    use crate::worker::RustExecutor;
+
+    fn setup(
+        n: usize,
+        m: usize,
+    ) -> (
+        crate::datagen::GeneratedData,
+        PartitionSet,
+        Vec<MatchTask>,
+        DataService,
+    ) {
+        let data = GeneratorConfig::tiny().with_entities(n).generate();
+        let ids: Vec<EntityId> =
+            data.dataset.entities.iter().map(|e| e.id).collect();
+        let parts = partition_size_based(&ids, m);
+        let tasks = generate_tasks(&parts);
+        let store = DataService::build(&data.dataset, &parts);
+        (data, parts, tasks, store)
+    }
+
+    #[test]
+    fn completes_and_counts() {
+        let (_, parts, tasks, store) = setup(300, 60);
+        let exec = RustExecutor::new(MatchStrategy::new(StrategyKind::Wam));
+        let n_tasks = tasks.len();
+        let out = run(
+            &ComputingEnv::new(1, 2, crate::util::GIB),
+            &parts,
+            tasks,
+            &store,
+            &exec,
+            ThreadConfig::default(),
+        );
+        assert_eq!(out.metrics.tasks, n_tasks);
+        // Cartesian over p partitions covers all n(n-1)/2 pairs
+        assert_eq!(out.metrics.comparisons, 300 * 299 / 2);
+        assert!(out.metrics.makespan_ns > 0);
+    }
+
+    #[test]
+    fn result_invariant_across_parallelism_and_caching() {
+        let (_, parts, tasks, store) = setup(250, 50);
+        let exec = RustExecutor::new(MatchStrategy::new(StrategyKind::Wam));
+        let sort_key =
+            |c: &Correspondence| (c.e1, c.e2);
+        let mut base: Option<Vec<(EntityId, EntityId)>> = None;
+        for (nodes, threads, cache) in
+            [(1, 1, 0), (1, 4, 0), (2, 2, 8), (4, 1, 16)]
+        {
+            let ce = ComputingEnv::new(nodes, threads, crate::util::GIB);
+            let out = run(
+                &ce,
+                &parts,
+                tasks.clone(),
+                &store,
+                &exec,
+                ThreadConfig {
+                    cache_capacity: cache,
+                    policy: Policy::Affinity,
+                },
+            );
+            let mut pairs: Vec<(EntityId, EntityId)> = out
+                .correspondences
+                .iter()
+                .map(|c| sort_key(c))
+                .collect();
+            pairs.sort_unstable();
+            match &base {
+                None => base = Some(pairs),
+                Some(b) => assert_eq!(
+                    &pairs, b,
+                    "results differ at ({nodes},{threads},{cache})"
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn caching_reduces_store_fetches() {
+        let (_, parts, tasks, store_nc) = setup(400, 50);
+        let exec = RustExecutor::new(MatchStrategy::new(StrategyKind::Wam));
+        let ce = ComputingEnv::new(1, 2, crate::util::GIB);
+        let out_nc = run(
+            &ce,
+            &parts,
+            tasks.clone(),
+            &store_nc,
+            &exec,
+            ThreadConfig {
+                cache_capacity: 0,
+                policy: Policy::Affinity,
+            },
+        );
+        let (_, parts2, tasks2, store_c) = setup(400, 50);
+        let out_c = run(
+            &ce,
+            &parts2,
+            tasks2,
+            &store_c,
+            &exec,
+            ThreadConfig {
+                cache_capacity: 16,
+                policy: Policy::Affinity,
+            },
+        );
+        assert_eq!(out_nc.metrics.cache_hits, 0);
+        assert!(out_c.metrics.cache_hits > 0);
+        assert!(store_c.fetches() < store_nc.fetches());
+        assert!(out_c.metrics.hit_ratio() > 0.5);
+    }
+
+    #[test]
+    fn matches_sim_execute_mode_results() {
+        let (_, parts, tasks, store) = setup(200, 40);
+        let strategy = MatchStrategy::new(StrategyKind::Lrm);
+        let exec = RustExecutor::new(strategy);
+        let ce = ComputingEnv::new(2, 2, crate::util::GIB);
+        let thread_out = run(
+            &ce,
+            &parts,
+            tasks.clone(),
+            &store,
+            &exec,
+            ThreadConfig::default(),
+        );
+        let mut sim_cfg = crate::engine::sim::SimConfig::new(
+            StrategyKind::Lrm,
+            crate::engine::CostParams::default_for(StrategyKind::Lrm),
+        );
+        sim_cfg.execute = Some(Box::new(RustExecutor::new(strategy)));
+        let sim_out =
+            crate::engine::sim::run(&ce, &parts, tasks, &store, sim_cfg);
+        let norm = |cs: &[Correspondence]| {
+            let mut v: Vec<(EntityId, EntityId)> =
+                cs.iter().map(|c| (c.e1, c.e2)).collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(
+            norm(&thread_out.correspondences),
+            norm(&sim_out.correspondences)
+        );
+    }
+}

@@ -1,0 +1,402 @@
+//! Feature extraction: q-grams, token sets and hashed feature vectors.
+//!
+//! Two consumers:
+//!
+//! * the pure-Rust matchers ([`crate::matching`]) work on exact q-gram /
+//!   token multisets ([`QGramSet`], [`TokenSet`]);
+//! * the accelerated PJRT path works on **hashed** fixed-dimension count
+//!   vectors assembled into padded partition matrices ([`FeatureMatrix`])
+//!   — the `f32[M, D]` inputs of the Layer-1 Pallas kernel.
+//!
+//! Hashing uses FNV-1a so Rust and any other producer agree on buckets.
+
+use crate::model::{Dataset, Entity};
+use crate::util::fnv1a;
+
+/// Default q for q-grams (trigrams, as in the paper's TriGram matcher).
+pub const DEFAULT_Q: usize = 3;
+
+/// Default hashed feature dimension (matches `python/compile/aot.py`).
+pub const DEFAULT_DIM: usize = 256;
+
+/// Normalize a string for matching: lowercase, collapse whitespace.
+pub fn normalize(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut last_space = true;
+    for c in s.chars() {
+        if c.is_whitespace() {
+            if !last_space {
+                out.push(' ');
+                last_space = true;
+            }
+        } else {
+            for lc in c.to_lowercase() {
+                out.push(lc);
+            }
+            last_space = false;
+        }
+    }
+    while out.ends_with(' ') {
+        out.pop();
+    }
+    out
+}
+
+/// Sorted multiset of q-grams of a padded, normalized string.
+///
+/// Padding with `q-1` boundary markers (`#`) gives terminal characters the
+/// same weight as interior ones — standard for q-gram string similarity.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QGramSet {
+    grams: Vec<u64>, // fnv1a hashes of the grams, sorted (multiset)
+}
+
+impl QGramSet {
+    pub fn new(s: &str, q: usize) -> QGramSet {
+        assert!(q >= 1);
+        let norm = normalize(s);
+        let padded: Vec<char> = std::iter::repeat('#')
+            .take(q - 1)
+            .chain(norm.chars())
+            .chain(std::iter::repeat('#').take(q - 1))
+            .collect();
+        let mut grams: Vec<u64> = if padded.len() < q {
+            Vec::new()
+        } else {
+            (0..=padded.len() - q)
+                .map(|i| {
+                    let g: String = padded[i..i + q].iter().collect();
+                    fnv1a(g.as_bytes())
+                })
+                .collect()
+        };
+        grams.sort_unstable();
+        QGramSet { grams }
+    }
+
+    pub fn len(&self) -> usize {
+        self.grams.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.grams.is_empty()
+    }
+
+    /// Multiset intersection size (sorted-merge).
+    pub fn intersection_size(&self, other: &QGramSet) -> usize {
+        let (mut i, mut j, mut n) = (0, 0, 0);
+        while i < self.grams.len() && j < other.grams.len() {
+            match self.grams[i].cmp(&other.grams[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    n += 1;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Fold into a hashed count vector of dimension `dim`.
+    pub fn hashed_counts(&self, dim: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; dim];
+        for &g in &self.grams {
+            v[(g % dim as u64) as usize] += 1.0;
+        }
+        v
+    }
+
+    /// Collapse the sorted multiset into an exact sparse count vector
+    /// (unique gram → count).  No hash-bucket collisions; the §Perf
+    /// representation for cosine (sorted-merge dot product).
+    pub fn to_sparse(&self) -> SparseCounts {
+        let mut keys = Vec::new();
+        let mut counts: Vec<f32> = Vec::new();
+        for &g in &self.grams {
+            match keys.last() {
+                Some(&last) if last == g => {
+                    *counts.last_mut().unwrap() += 1.0;
+                }
+                _ => {
+                    keys.push(g);
+                    counts.push(1.0);
+                }
+            }
+        }
+        let normsq = counts.iter().map(|c| c * c).sum::<f32>();
+        SparseCounts {
+            keys,
+            counts,
+            normsq,
+        }
+    }
+}
+
+/// Exact sparse count vector over gram hashes (sorted unique keys).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseCounts {
+    pub keys: Vec<u64>,
+    pub counts: Vec<f32>,
+    /// Squared L2 norm of the counts.
+    pub normsq: f32,
+}
+
+impl SparseCounts {
+    /// Dot product via sorted merge — O(nnz_a + nnz_b), no allocation.
+    pub fn dot(&self, other: &SparseCounts) -> f64 {
+        let (mut i, mut j) = (0, 0);
+        let mut dot = 0.0f64;
+        while i < self.keys.len() && j < other.keys.len() {
+            match self.keys[i].cmp(&other.keys[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    dot += (self.counts[i] * other.counts[j]) as f64;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        dot
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.keys.len()
+    }
+}
+
+/// Whitespace token set (for Jaccard on titles).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TokenSet {
+    tokens: Vec<u64>, // sorted, deduplicated token hashes
+}
+
+impl TokenSet {
+    pub fn new(s: &str) -> TokenSet {
+        let norm = normalize(s);
+        let mut tokens: Vec<u64> = norm
+            .split(' ')
+            .filter(|t| !t.is_empty())
+            .map(|t| fnv1a(t.as_bytes()))
+            .collect();
+        tokens.sort_unstable();
+        tokens.dedup();
+        TokenSet { tokens }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    pub fn intersection_size(&self, other: &TokenSet) -> usize {
+        let (mut i, mut j, mut n) = (0, 0, 0);
+        while i < self.tokens.len() && j < other.tokens.len() {
+            match self.tokens[i].cmp(&other.tokens[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    n += 1;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        n
+    }
+}
+
+/// Precomputed per-entity match features (built once per entity, reused by
+/// every match task touching its partition — this is what the data service
+/// ships and the partition caches hold).
+#[derive(Clone, Debug)]
+pub struct EntityFeatures {
+    pub title_norm: String,
+    /// Normalized title as chars — lets the banded edit distance run
+    /// without per-pair `Vec<char>` allocation (§Perf).
+    pub title_chars: Vec<char>,
+    pub title_grams: QGramSet,
+    pub title_tokens: TokenSet,
+    pub desc_grams: QGramSet,
+    /// Exact sparse gram counts for the cosine matcher (§Perf: replaces
+    /// per-pair dense hashed vectors with a sorted-merge dot product).
+    pub title_sparse: SparseCounts,
+    pub desc_sparse: SparseCounts,
+}
+
+impl EntityFeatures {
+    pub fn of(entity: &Entity, dataset: &Dataset) -> EntityFeatures {
+        let schema = &dataset.schema;
+        let title = entity.title(schema);
+        let desc = entity.description(schema);
+        let title_norm = normalize(title);
+        let title_grams = QGramSet::new(title, DEFAULT_Q);
+        let desc_grams = QGramSet::new(desc, DEFAULT_Q);
+        EntityFeatures {
+            title_chars: title_norm.chars().collect(),
+            title_norm,
+            title_sparse: title_grams.to_sparse(),
+            desc_sparse: desc_grams.to_sparse(),
+            title_grams,
+            title_tokens: TokenSet::new(title),
+            desc_grams,
+        }
+    }
+
+    /// Approximate footprint (bytes) for transfer/memory cost models.
+    pub fn approx_bytes(&self) -> usize {
+        self.title_norm.len()
+            + 4 * self.title_chars.len()
+            + 8 * (self.title_grams.len()
+                + self.title_tokens.len()
+                + self.desc_grams.len())
+            + 12 * (self.title_sparse.nnz() + self.desc_sparse.nnz())
+            + std::mem::size_of::<EntityFeatures>()
+    }
+}
+
+/// A padded `f32[M, D]` feature matrix for one attribute of one partition
+/// — the exact input layout of the AOT-compiled match executables.
+/// Row-major, rows past `rows` are zero (padding).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FeatureMatrix {
+    pub rows: usize,     // real entities
+    pub capacity: usize, // padded row count M
+    pub dim: usize,      // feature dimension D
+    pub data: Vec<f32>,  // capacity * dim, row-major
+}
+
+impl FeatureMatrix {
+    /// Build from q-gram sets, padding up to `capacity` rows.
+    pub fn from_qgrams(
+        grams: &[&QGramSet],
+        capacity: usize,
+        dim: usize,
+    ) -> FeatureMatrix {
+        assert!(grams.len() <= capacity, "{} > {}", grams.len(), capacity);
+        let mut data = vec![0.0f32; capacity * dim];
+        for (r, g) in grams.iter().enumerate() {
+            data[r * dim..(r + 1) * dim].copy_from_slice(&g.hashed_counts(dim));
+        }
+        FeatureMatrix {
+            rows: grams.len(),
+            capacity,
+            dim,
+            data,
+        }
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.dim..(r + 1) * self.dim]
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+    use crate::util::Rng;
+
+    #[test]
+    fn normalize_basics() {
+        assert_eq!(normalize("  LG  GH22NS50 "), "lg gh22ns50");
+        assert_eq!(normalize("Ü"), "ü");
+        assert_eq!(normalize(""), "");
+    }
+
+    #[test]
+    fn qgram_count_matches_formula() {
+        // padded length = len + 2*(q-1); grams = padded - q + 1 = len + q - 1
+        let s = "abcd";
+        let g = QGramSet::new(s, 3);
+        assert_eq!(g.len(), 4 + 3 - 1);
+        let empty = QGramSet::new("", 3);
+        // normalize("") = "", padded = "####", grams = 2 (## boundary overlap)
+        assert_eq!(empty.len(), 2);
+    }
+
+    #[test]
+    fn qgram_self_intersection_is_len() {
+        let g = QGramSet::new("samsung spinpoint", 3);
+        assert_eq!(g.intersection_size(&g), g.len());
+    }
+
+    #[test]
+    fn qgram_intersection_symmetric_and_bounded() {
+        forall("qgram-sym", 100, |rng| {
+            let s1 = random_word(rng);
+            let s2 = random_word(rng);
+            let (a, b) = (QGramSet::new(&s1, 3), QGramSet::new(&s2, 3));
+            let i1 = a.intersection_size(&b);
+            let i2 = b.intersection_size(&a);
+            assert_eq!(i1, i2);
+            assert!(i1 <= a.len().min(b.len()));
+        });
+    }
+
+    fn random_word(rng: &mut Rng) -> String {
+        let n = rng.gen_range(12);
+        (0..n)
+            .map(|_| (b'a' + rng.gen_range(6) as u8) as char)
+            .collect()
+    }
+
+    #[test]
+    fn token_set_dedupes() {
+        let t = TokenSet::new("black black USB usb Black");
+        assert_eq!(t.len(), 2); // "black", "usb"
+    }
+
+    #[test]
+    fn hashed_counts_preserve_total() {
+        let g = QGramSet::new("western digital caviar", 3);
+        let v = g.hashed_counts(64);
+        let total: f32 = v.iter().sum();
+        assert_eq!(total as usize, g.len());
+    }
+
+    #[test]
+    fn hashed_intersection_upper_bounds_exact() {
+        // min-sum over hashed counts >= exact multiset intersection
+        // (hash collisions only ever merge buckets).
+        forall("hash-bound", 100, |rng| {
+            let s1 = random_word(rng);
+            let s2 = random_word(rng);
+            let (a, b) = (QGramSet::new(&s1, 3), QGramSet::new(&s2, 3));
+            let exact = a.intersection_size(&b) as f32;
+            let (va, vb) = (a.hashed_counts(128), b.hashed_counts(128));
+            let hashed: f32 =
+                va.iter().zip(&vb).map(|(x, y)| x.min(*y)).sum();
+            assert!(hashed >= exact - 1e-6, "{hashed} < {exact}");
+        });
+    }
+
+    #[test]
+    fn feature_matrix_layout_and_padding() {
+        let g1 = QGramSet::new("ab", 3);
+        let g2 = QGramSet::new("cd", 3);
+        let m = FeatureMatrix::from_qgrams(&[&g1, &g2], 4, 32);
+        assert_eq!(m.rows, 2);
+        assert_eq!(m.capacity, 4);
+        assert_eq!(m.data.len(), 4 * 32);
+        assert!(m.row(2).iter().all(|&x| x == 0.0), "padding zeroed");
+        assert!(m.row(0).iter().sum::<f32>() > 0.0);
+        assert_eq!(m.bytes(), 4 * 32 * 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn feature_matrix_overflow_panics() {
+        let g = QGramSet::new("x", 3);
+        FeatureMatrix::from_qgrams(&[&g, &g, &g], 2, 8);
+    }
+}

@@ -1,0 +1,312 @@
+//! Dataset and result I/O: CSV import/export.
+//!
+//! Real deployments do not generate their offers — they load them from
+//! catalog exports.  This module reads/writes RFC-4180-style CSV
+//! (quoted fields, embedded commas/quotes/newlines) without external
+//! crates:
+//!
+//! * [`read_dataset`] / [`write_dataset`] — entities against a schema
+//!   (header row = attribute names; empty cells = missing values);
+//! * [`write_matches`] / [`read_matches`] — correspondence lists
+//!   `(e1, e2, sim)` for downstream consumption;
+//! * [`write_truth`] — ground-truth pair exports for evaluation.
+
+use crate::model::{Correspondence, Dataset, Entity, EntityId, Schema};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Parse one CSV record from a reader-backed line iterator.  Returns the
+/// fields, consuming continuation lines for quoted embedded newlines.
+fn parse_record(
+    lines: &mut impl Iterator<Item = std::io::Result<String>>,
+) -> Result<Option<Vec<String>>> {
+    let Some(first) = lines.next() else {
+        return Ok(None);
+    };
+    let mut buf = first?;
+    loop {
+        match try_parse_line(&buf) {
+            Some(fields) => return Ok(Some(fields)),
+            None => {
+                // unbalanced quotes: record continues on the next line
+                match lines.next() {
+                    Some(next) => {
+                        buf.push('\n');
+                        buf.push_str(&next?);
+                    }
+                    None => bail!("unterminated quoted field at EOF"),
+                }
+            }
+        }
+    }
+}
+
+/// Parse a complete CSV line into fields; `None` if quotes are open.
+fn try_parse_line(line: &str) -> Option<Vec<String>> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match (in_quotes, c) {
+            (false, ',') => fields.push(std::mem::take(&mut cur)),
+            (false, '"') if cur.is_empty() => in_quotes = true,
+            (false, ch) => cur.push(ch),
+            (true, '"') => {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    cur.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            }
+            (true, ch) => cur.push(ch),
+        }
+    }
+    if in_quotes {
+        return None;
+    }
+    fields.push(cur);
+    Some(fields)
+}
+
+fn escape(field: &str) -> String {
+    if field.contains(',')
+        || field.contains('"')
+        || field.contains('\n')
+        || field.contains('\r')
+    {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+/// Write a dataset as CSV: header = schema attribute names, one row per
+/// entity, empty cell = missing value.
+pub fn write_dataset<W: Write>(dataset: &Dataset, w: W) -> Result<()> {
+    let mut w = BufWriter::new(w);
+    let attrs = dataset.schema.attributes();
+    writeln!(
+        w,
+        "{}",
+        attrs.iter().map(|a| escape(a)).collect::<Vec<_>>().join(",")
+    )?;
+    for e in &dataset.entities {
+        let row: Vec<String> = attrs
+            .iter()
+            .map(|a| escape(e.get(&dataset.schema, a).unwrap_or("")))
+            .collect();
+        writeln!(w, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Read a dataset from CSV.  The header row defines the schema; entity
+/// ids are assigned densely in row order.
+pub fn read_dataset<R: Read>(r: R) -> Result<Dataset> {
+    let mut lines = BufReader::new(r).lines();
+    let header = parse_record(&mut lines)?
+        .context("empty CSV: missing header row")?;
+    if header.is_empty() || header.iter().all(|h| h.trim().is_empty()) {
+        bail!("CSV header has no attribute names");
+    }
+    let schema = Schema::new(header.clone());
+    let mut dataset = Dataset::new(schema.clone());
+    let mut row_no = 1usize;
+    while let Some(fields) = parse_record(&mut lines)? {
+        row_no += 1;
+        if fields.len() != header.len() {
+            bail!(
+                "row {row_no}: {} fields, header has {}",
+                fields.len(),
+                header.len()
+            );
+        }
+        let mut e = Entity::new(EntityId(dataset.len() as u32), &schema);
+        for (attr, value) in header.iter().zip(fields) {
+            if !value.is_empty() {
+                e.set(&schema, attr, value);
+            }
+        }
+        dataset.push(e);
+    }
+    Ok(dataset)
+}
+
+/// Write correspondences as `e1,e2,sim` CSV (with header).
+pub fn write_matches<W: Write>(
+    matches: impl Iterator<Item = Correspondence>,
+    w: W,
+) -> Result<()> {
+    let mut w = BufWriter::new(w);
+    writeln!(w, "e1,e2,sim")?;
+    let mut rows: Vec<Correspondence> = matches.collect();
+    rows.sort_by_key(|c| (c.e1, c.e2));
+    for c in rows {
+        writeln!(w, "{},{},{:.6}", c.e1.0, c.e2.0, c.sim)?;
+    }
+    Ok(())
+}
+
+/// Read correspondences written by [`write_matches`].
+pub fn read_matches<R: Read>(r: R) -> Result<Vec<Correspondence>> {
+    let mut lines = BufReader::new(r).lines();
+    let header = parse_record(&mut lines)?.context("empty matches CSV")?;
+    if header != ["e1", "e2", "sim"] {
+        bail!("unexpected matches header {header:?}");
+    }
+    let mut out = Vec::new();
+    while let Some(fields) = parse_record(&mut lines)? {
+        if fields.len() != 3 {
+            bail!("bad matches row {fields:?}");
+        }
+        out.push(Correspondence::new(
+            EntityId(fields[0].parse()?),
+            EntityId(fields[1].parse()?),
+            fields[2].parse()?,
+        ));
+    }
+    Ok(out)
+}
+
+/// Write ground-truth duplicate pairs as `e1,e2` CSV.
+pub fn write_truth<W: Write>(
+    truth: &[(EntityId, EntityId)],
+    w: W,
+) -> Result<()> {
+    let mut w = BufWriter::new(w);
+    writeln!(w, "e1,e2")?;
+    for &(a, b) in truth {
+        writeln!(w, "{},{}", a.0, b.0)?;
+    }
+    Ok(())
+}
+
+/// File-path conveniences.
+pub fn write_dataset_file(dataset: &Dataset, path: &Path) -> Result<()> {
+    write_dataset(dataset, std::fs::File::create(path)?)
+}
+
+pub fn read_dataset_file(path: &Path) -> Result<Dataset> {
+    read_dataset(
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::GeneratorConfig;
+
+    #[test]
+    fn csv_line_parsing() {
+        assert_eq!(
+            try_parse_line("a,b,c").unwrap(),
+            vec!["a", "b", "c"]
+        );
+        assert_eq!(
+            try_parse_line(r#""a,b",c"#).unwrap(),
+            vec!["a,b", "c"]
+        );
+        assert_eq!(
+            try_parse_line(r#""he said ""hi""",x"#).unwrap(),
+            vec![r#"he said "hi""#, "x"]
+        );
+        assert_eq!(try_parse_line("").unwrap(), vec![""]);
+        assert!(try_parse_line(r#""open"#).is_none(), "unbalanced");
+    }
+
+    #[test]
+    fn dataset_roundtrip_preserves_everything() {
+        let data = GeneratorConfig::tiny().with_entities(200).generate();
+        let mut buf = Vec::new();
+        write_dataset(&data.dataset, &mut buf).unwrap();
+        let back = read_dataset(&buf[..]).unwrap();
+        assert_eq!(back.schema, data.dataset.schema);
+        assert_eq!(back.len(), data.dataset.len());
+        for (a, b) in data.dataset.entities.iter().zip(&back.entities) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn dataset_with_awkward_values_roundtrips() {
+        let schema = Schema::new(vec!["title", "description"]);
+        let mut ds = Dataset::new(schema.clone());
+        let mut e = Entity::new(EntityId(0), &schema);
+        e.set(&schema, "title", "comma, \"quote\" and\nnewline".into());
+        ds.push(e);
+        let mut e2 = Entity::new(EntityId(1), &schema);
+        e2.set(&schema, "description", "plain".into());
+        ds.push(e2); // e2.title stays missing
+        let mut buf = Vec::new();
+        write_dataset(&ds, &mut buf).unwrap();
+        let back = read_dataset(&buf[..]).unwrap();
+        assert_eq!(
+            back.entities[0].get(&schema, "title"),
+            Some("comma, \"quote\" and\nnewline")
+        );
+        assert_eq!(back.entities[1].get(&schema, "title"), None);
+    }
+
+    #[test]
+    fn missing_values_stay_missing() {
+        let csv = "title,product_type\nLG GH22,\n,drive\n";
+        let ds = read_dataset(csv.as_bytes()).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.entities[0].get(&ds.schema, "product_type"), None);
+        assert_eq!(ds.entities[1].get(&ds.schema, "title"), None);
+    }
+
+    #[test]
+    fn malformed_inputs_rejected() {
+        assert!(read_dataset("".as_bytes()).is_err());
+        assert!(read_dataset("a,b\n1,2,3\n".as_bytes()).is_err());
+        assert!(read_dataset("a,b\n\"open,2\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn matches_roundtrip() {
+        let matches = vec![
+            Correspondence::new(EntityId(3), EntityId(1), 0.91),
+            Correspondence::new(EntityId(2), EntityId(7), 0.755),
+        ];
+        let mut buf = Vec::new();
+        write_matches(matches.iter().copied(), &mut buf).unwrap();
+        let back = read_matches(&buf[..]).unwrap();
+        assert_eq!(back.len(), 2);
+        // sorted by (e1, e2); Correspondence::new normalizes order
+        assert_eq!(back[0].pair(), (EntityId(1), EntityId(3)));
+        assert!((back[0].sim - 0.91).abs() < 1e-5);
+    }
+
+    #[test]
+    fn truth_export_format() {
+        let mut buf = Vec::new();
+        write_truth(&[(EntityId(0), EntityId(5))], &mut buf).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), "e1,e2\n0,5\n");
+    }
+
+    #[test]
+    fn loaded_dataset_is_matchable() {
+        // end-to-end: export generated data, reload, match — results
+        // must equal matching the original
+        use crate::cluster::ComputingEnv;
+        use crate::coordinator::workflow::EngineChoice;
+        use crate::coordinator::{run_workflow, WorkflowConfig};
+        use crate::matching::StrategyKind;
+        let data = GeneratorConfig::tiny().with_entities(300).generate();
+        let mut buf = Vec::new();
+        write_dataset(&data.dataset, &mut buf).unwrap();
+        let reloaded = read_dataset(&buf[..]).unwrap();
+        let ce = ComputingEnv::new(1, 2, crate::util::GIB);
+        let cfg = WorkflowConfig::size_based(StrategyKind::Wam)
+            .with_engine(EngineChoice::Threads);
+        let a = run_workflow(&data, &cfg, &ce).unwrap();
+        let b = run_workflow(&reloaded, &cfg, &ce).unwrap();
+        assert_eq!(a.result.len(), b.result.len());
+    }
+}

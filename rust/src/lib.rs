@@ -1,0 +1,74 @@
+//! # pem — Parallel Entity Matching
+//!
+//! A reproduction of *“Data Partitioning for Parallel Entity Matching”*
+//! (Kirsten, Kolb, Hartung, Groß, Köpcke, Rahm — Univ. Leipzig, 2010) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! The crate implements the paper's two contributions and every substrate
+//! they depend on:
+//!
+//! * **Partitioning strategies** ([`partition`]): *size-based* partitioning
+//!   for evaluating the Cartesian product in parallel (§3.1) and
+//!   *blocking-based* partitioning with **partition tuning** — splitting
+//!   oversized blocks, aggregating undersized ones, and routing the
+//!   *misc* block of unblockable entities (§3.2) — plus the multi-source
+//!   variants (§3.3).
+//! * **Match infrastructure** ([`coordinator`], [`worker`], [`store`],
+//!   [`net`], [`cluster`]): a workflow service holding the central task
+//!   list and performing affinity-based scheduling, match services with
+//!   LRU partition caches, a data service, dynamic service membership and
+//!   failure handling (§4).
+//!
+//! Supporting subsystems: entity model ([`model`]), synthetic product-offer
+//! generator ([`datagen`]), q-gram feature hashing ([`features`]), blocking
+//! operators ([`blocking`]), match strategies WAM / LRM ([`matching`]),
+//! execution engines — real threads and a deterministic virtual-time
+//! simulator ([`engine`]) — the PJRT runtime for the AOT-compiled
+//! accelerated match path ([`runtime`]), metrics ([`metrics`]) and an
+//! in-tree micro-benchmark harness ([`mod@bench`]).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use pem::prelude::*;
+//!
+//! // 1. Generate a product-offer dataset with known duplicates.
+//! let ds = pem::datagen::GeneratorConfig::small().generate();
+//! // 2. Configure the computing environment and the match workflow.
+//! let ce = pem::cluster::ComputingEnv::new(1, 4, 3 * pem::util::GIB);
+//! let wf = pem::coordinator::WorkflowConfig::blocking_based(
+//!     pem::matching::StrategyKind::Wam,
+//! );
+//! // 3. Run: blocking → partition tuning → task generation → parallel match.
+//! let outcome = pem::coordinator::run_workflow(&ds, &wf, &ce).unwrap();
+//! println!("{} matches in {:?}", outcome.result.len(), outcome.elapsed);
+//! ```
+
+pub mod bench;
+pub mod blocking;
+pub mod cluster;
+pub mod coordinator;
+pub mod datagen;
+pub mod engine;
+pub mod features;
+pub mod io;
+pub mod matching;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod partition;
+pub mod runtime;
+pub mod store;
+pub mod util;
+pub mod worker;
+
+/// Convenience re-exports for examples and binaries.
+pub mod prelude {
+    pub use crate::blocking::{BlockingMethod, Blocks};
+    pub use crate::cluster::ComputingEnv;
+    pub use crate::coordinator::{run_workflow, WorkflowConfig, WorkflowOutcome};
+    pub use crate::datagen::GeneratorConfig;
+    pub use crate::matching::{MatchStrategy, StrategyKind};
+    pub use crate::model::{Correspondence, Dataset, Entity, MatchResult};
+    pub use crate::partition::{MatchTask, PartitionId, PartitionSet};
+}

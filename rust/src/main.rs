@@ -1,0 +1,312 @@
+//! `pem` — the parallel entity matching CLI (the Layer-3 leader binary).
+//!
+//! Subcommands:
+//!
+//! * `generate` — produce a synthetic product-offer dataset and print its
+//!   block-structure statistics;
+//! * `match`    — run a full match workflow (blocking → partition tuning
+//!   → task generation → parallel execution) and report the result;
+//! * `sweep`    — run a core-count sweep (the Figs 8/9 experiment shape);
+//! * `artifacts`— inspect the AOT artifact manifest and smoke-run the
+//!   PJRT path on a tiny workload;
+//! * `info`     — print the computing-environment and memory-model
+//!   numbers for a configuration.
+
+use anyhow::{bail, Result};
+use pem::blocking::BlockingMethod;
+use pem::cluster::ComputingEnv;
+use pem::coordinator::workflow::{
+    default_max_size, default_min_size, EngineChoice,
+};
+use pem::coordinator::{
+    run_workflow, PartitioningChoice, Policy, WorkflowConfig,
+};
+use pem::datagen::GeneratorConfig;
+use pem::matching::{MatchStrategy, StrategyKind};
+use pem::metrics::speedups;
+use pem::partition::max_partition_size;
+use pem::util::cli::Args;
+use pem::util::{fmt_bytes, fmt_nanos, GIB};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: pem <generate|export|match|sweep|artifacts|info> [options]
+  common options:
+    --entities N          dataset size (default 20000)
+    --seed S              generator seed (default 2010)
+    --strategy wam|lrm    match strategy (default wam)
+  export options:
+    --out offers.csv      write the generated dataset as CSV
+    --truth truth.csv     also write the ground-truth duplicate pairs
+  match options:
+    --input offers.csv    match a CSV dataset instead of generating one
+    --out matches.csv     write correspondences as CSV
+  match/sweep options:
+    --partitioning size|blocking   (default blocking)
+    --blocking-attr product_type|manufacturer
+    --max-size M  --min-size M     partition tuning bounds
+    --nodes N --cores N --mem-gb G --threads T
+    --cache C             partition cache capacity per service
+    --no-affinity         disable affinity scheduling
+    --engine sim|threads  (default sim)
+    --execute             really match inside the simulator
+  sweep options:
+    --cores-list 1,2,4,8,12,16"
+    );
+    std::process::exit(2);
+}
+
+fn parse_strategy(args: &Args) -> Result<StrategyKind> {
+    let s = args.str_or("strategy", "wam");
+    StrategyKind::parse(s).ok_or_else(|| anyhow::anyhow!("bad strategy {s:?}"))
+}
+
+fn parse_ce(args: &Args) -> Result<ComputingEnv> {
+    let nodes = args.get_or("nodes", 1usize)?;
+    let cores = args.get_or("cores", 4usize)?;
+    let mem_gb = args.get_or("mem-gb", 3.0f64)?;
+    let mut ce = ComputingEnv::new(nodes, cores, (mem_gb * GIB as f64) as u64);
+    let threads = args.get_or("threads", cores)?;
+    ce = ce.with_threads(threads);
+    Ok(ce)
+}
+
+fn parse_workflow(args: &Args, kind: StrategyKind) -> Result<WorkflowConfig> {
+    let partitioning = match args.str_or("partitioning", "blocking") {
+        "size" => PartitioningChoice::SizeBased {
+            max_size: Some(args.get_or("max-size", default_max_size(kind))?),
+        },
+        "blocking" => {
+            let method = match args.str_or("blocking-attr", "product_type") {
+                "product_type" => BlockingMethod::product_type(),
+                "manufacturer" => BlockingMethod::manufacturer(),
+                other => bail!("bad blocking attr {other:?}"),
+            };
+            PartitioningChoice::BlockingBased {
+                method,
+                max_size: Some(
+                    args.get_or("max-size", default_max_size(kind))?,
+                ),
+                min_size: args.get_or("min-size", default_min_size(kind))?,
+            }
+        }
+        other => bail!("bad partitioning {other:?}"),
+    };
+    let engine = match args.str_or("engine", "sim") {
+        "sim" => EngineChoice::Simulated,
+        "threads" => EngineChoice::Threads,
+        other => bail!("bad engine {other:?}"),
+    };
+    Ok(WorkflowConfig {
+        strategy: MatchStrategy::new(kind),
+        partitioning,
+        engine,
+        cache_capacity: args.get_or("cache", 0usize)?,
+        policy: if args.flag("no-affinity") {
+            Policy::Fifo
+        } else {
+            Policy::Affinity
+        },
+        net: pem::net::CostModel::lan(),
+        data_net: pem::net::CostModel::dbms(),
+        execute_in_sim: args.flag("execute"),
+        calibrate: !args.flag("no-calibrate"),
+        cost_override: None,
+        failures: Vec::new(),
+    })
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args.positional().first().map(String::as_str);
+    match cmd {
+        Some("generate") => cmd_generate(&args),
+        Some("export") => cmd_export(&args),
+        Some("match") => cmd_match(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some("info") => cmd_info(&args),
+        _ => usage(),
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let cfg = GeneratorConfig::default()
+        .with_entities(args.get_or("entities", 20_000usize)?)
+        .with_seed(args.get_or("seed", 2010u64)?);
+    let data = cfg.generate();
+    println!(
+        "generated {} offers of {} products ({} duplicate pairs)",
+        data.dataset.len(),
+        data.n_products,
+        data.truth.len()
+    );
+    let blocks = BlockingMethod::product_type().run(&data.dataset);
+    let hist = blocks.size_histogram();
+    println!(
+        "product-type blocks: {} (misc {}), sizes max={} median={} min={}",
+        blocks.n_blocks(),
+        blocks.misc().len(),
+        hist.first().unwrap_or(&0),
+        hist.get(hist.len() / 2).unwrap_or(&0),
+        hist.last().unwrap_or(&0),
+    );
+    Ok(())
+}
+
+fn cmd_export(args: &Args) -> Result<()> {
+    let data = GeneratorConfig::default()
+        .with_entities(args.get_or("entities", 20_000usize)?)
+        .with_seed(args.get_or("seed", 2010u64)?)
+        .generate();
+    let out_path = args.str_or("out", "offers.csv");
+    pem::io::write_dataset_file(&data.dataset, std::path::Path::new(out_path))?;
+    println!("wrote {} offers to {out_path}", data.dataset.len());
+    if let Some(truth_path) = args.get_str("truth") {
+        pem::io::write_truth(
+            &data.truth,
+            std::fs::File::create(truth_path)?,
+        )?;
+        println!("wrote {} truth pairs to {truth_path}", data.truth.len());
+    }
+    Ok(())
+}
+
+fn cmd_match(args: &Args) -> Result<()> {
+    let kind = parse_strategy(args)?;
+    let ce = parse_ce(args)?;
+    let cfg = parse_workflow(args, kind)?;
+    // CSV inputs carry no ground truth; generated data does
+    let (dataset, truth) = match args.get_str("input") {
+        Some(path) => (
+            pem::io::read_dataset_file(std::path::Path::new(path))?,
+            None,
+        ),
+        None => {
+            let g = GeneratorConfig::default()
+                .with_entities(args.get_or("entities", 20_000usize)?)
+                .with_seed(args.get_or("seed", 2010u64)?)
+                .generate();
+            (g.dataset, Some(g.truth))
+        }
+    };
+    let out = run_workflow(&dataset, &cfg, &ce)?;
+    println!(
+        "partitions={} (misc {})  tasks={}",
+        out.n_partitions, out.n_misc_partitions, out.n_tasks
+    );
+    println!("{}", out.metrics.summary());
+    if let (true, Some(truth)) = (out.result.len() > 0, &truth) {
+        let q = out.result.quality(truth);
+        println!(
+            "quality: precision={:.3} recall={:.3} f1={:.3}",
+            q.precision, q.recall, q.f1
+        );
+    }
+    if let Some(out_path) = args.get_str("out") {
+        pem::io::write_matches(
+            out.result.iter(),
+            std::fs::File::create(out_path)?,
+        )?;
+        println!("wrote {} matches to {out_path}", out.result.len());
+    }
+    println!("wall-clock: {:?}", out.elapsed);
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let kind = parse_strategy(args)?;
+    let cfg = parse_workflow(args, kind)?;
+    let cores_list: Vec<usize> =
+        args.get_list("cores-list", &[1usize, 2, 4, 8, 12, 16])?;
+    let data = GeneratorConfig::default()
+        .with_entities(args.get_or("entities", 20_000usize)?)
+        .with_seed(args.get_or("seed", 2010u64)?)
+        .generate();
+    let mut times = Vec::new();
+    println!("cores  time         speedup  hr     tasks");
+    for &cores in &cores_list {
+        // 4 cores per node as in the paper; cores beyond one node add nodes
+        let nodes = cores.div_ceil(4).max(1);
+        let per = cores.div_ceil(nodes);
+        let ce = ComputingEnv::new(nodes, per, 3 * GIB);
+        let out = run_workflow(&data, &cfg, &ce)?;
+        times.push(out.metrics.makespan_ns);
+        let s = speedups(&times);
+        println!(
+            "{:>5}  {:>11}  {:>6.2}  {:>5.1}%  {}",
+            cores,
+            fmt_nanos(out.metrics.makespan_ns),
+            s.last().unwrap(),
+            out.metrics.hit_ratio() * 100.0,
+            out.n_tasks
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = pem::runtime::default_artifact_dir();
+    let manifest = pem::runtime::Manifest::load(&dir)?;
+    println!("artifact dir: {}", dir.display());
+    for e in &manifest.entries {
+        println!(
+            "  {:<28} strategy={} capacity={} dim={}",
+            e.name,
+            e.strategy.name(),
+            e.capacity,
+            e.feature_dim
+        );
+    }
+    if args.flag("smoke") {
+        use pem::worker::TaskExecutor;
+        let data = GeneratorConfig::tiny().with_entities(120).generate();
+        let ids: Vec<pem::model::EntityId> =
+            data.dataset.entities.iter().map(|e| e.id).collect();
+        let parts = pem::partition::partition_size_based(&ids, 60);
+        let store = pem::store::DataService::build(&data.dataset, &parts);
+        let engine =
+            std::sync::Arc::new(pem::runtime::MatchEngine::new(&dir)?);
+        let kind = parse_strategy(args)?;
+        let exec = pem::runtime::PjrtExecutor::new(
+            engine,
+            MatchStrategy::new(kind),
+        );
+        let p0 = store.fetch(pem::partition::PartitionId(0));
+        let found = exec.execute(&p0, &p0, true);
+        println!(
+            "smoke: matched partition of {} with itself → {} correspondences",
+            p0.len(),
+            found.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let ce = parse_ce(args)?;
+    println!(
+        "CE = ({} nodes, {} cores, {})  threads/node={}",
+        ce.nodes,
+        ce.cores_per_node,
+        fmt_bytes(ce.max_mem),
+        ce.threads_per_node
+    );
+    println!("mem per thread: {}", fmt_bytes(ce.mem_per_thread()));
+    for kind in [StrategyKind::Wam, StrategyKind::Lrm] {
+        println!(
+            "{}: c_ms={} B/pair → max partition size m={}",
+            kind.name(),
+            kind.memory_per_pair(),
+            max_partition_size(&ce, kind)
+        );
+    }
+    Ok(())
+}

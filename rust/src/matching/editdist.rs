@@ -1,0 +1,229 @@
+//! Levenshtein edit distance and edit similarity.
+//!
+//! This is the paper's WAM title matcher.  The accelerated PJRT path
+//! substitutes a trigram proxy (see DESIGN.md §Hardware-Adaptation); this
+//! exact implementation is the reference the substitution is validated
+//! against, and what the pure-Rust execution engine runs.
+
+/// Levenshtein distance, two-row DP, O(|a|·|b|) time, O(min) space.
+pub fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    // keep the inner row the shorter one
+    let (a, b) = if a.len() < b.len() { (b, a) } else { (a, b) };
+    if b.is_empty() {
+        return a.len();
+    }
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let cost = usize::from(ca != cb);
+            cur[j + 1] = (prev[j + 1] + 1)
+                .min(cur[j] + 1)
+                .min(prev[j] + cost);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Banded Levenshtein: early-exits with `None` when the distance exceeds
+/// `max_dist`.  O(max_dist · min(|a|,|b|)) — the hot-path variant used by
+/// the WAM matcher, where anything below the discard threshold is dropped
+/// anyway.
+pub fn levenshtein_bounded(a: &str, b: &str, max_dist: usize) -> Option<usize> {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    levenshtein_bounded_chars(&a, &b, max_dist)
+}
+
+/// Banded Levenshtein over pre-collected char slices (§Perf: the hot
+/// path keeps `title_chars` in [`crate::features::EntityFeatures`] so no
+/// per-pair char collection happens).
+pub fn levenshtein_bounded_chars(
+    a: &[char],
+    b: &[char],
+    max_dist: usize,
+) -> Option<usize> {
+    let (a, b) = if a.len() < b.len() { (b, a) } else { (a, b) };
+    if a.len() - b.len() > max_dist {
+        return None;
+    }
+    if b.is_empty() {
+        return Some(a.len());
+    }
+    const INF: usize = usize::MAX / 2;
+    // Note (§Perf iteration log): a thread-local scratch-row variant was
+    // tried and measured *slower* (TLS + RefCell overhead exceeded the
+    // two small allocations it saved) — reverted to plain Vecs.
+    let mut prev = vec![INF; b.len() + 1];
+    let mut cur = vec![INF; b.len() + 1];
+    levenshtein_bounded_inner(a, b, max_dist, &mut prev, &mut cur)
+}
+
+fn levenshtein_bounded_inner(
+    a: &[char],
+    b: &[char],
+    max_dist: usize,
+    prev: &mut Vec<usize>,
+    cur: &mut Vec<usize>,
+) -> Option<usize> {
+    const INF: usize = usize::MAX / 2;
+    for (j, p) in prev.iter_mut().enumerate().take(max_dist.min(b.len()) + 1) {
+        *p = j;
+    }
+    for i in 1..=a.len() {
+        let lo = i.saturating_sub(max_dist).max(1);
+        let hi = (i + max_dist).min(b.len());
+        if lo > hi {
+            return None;
+        }
+        cur[lo - 1] = if lo == 1 { i } else { INF };
+        let mut row_min = cur[lo - 1];
+        for j in lo..=hi {
+            let cost = usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = (prev[j] + 1).min(cur[j - 1] + 1).min(prev[j - 1] + cost);
+            row_min = row_min.min(cur[j]);
+        }
+        if hi < b.len() {
+            cur[hi + 1..].iter_mut().for_each(|x| *x = INF);
+        }
+        if row_min > max_dist {
+            return None;
+        }
+        // O(1): swaps the Vec headers (pointer/len/cap), not contents
+        std::mem::swap(prev, cur);
+    }
+    let d = prev[b.len()];
+    (d <= max_dist).then_some(d)
+}
+
+/// Normalized edit similarity: `1 - dist / max(|a|, |b|)`, in `[0, 1]`.
+pub fn edit_similarity(a: &str, b: &str) -> f64 {
+    let la = a.chars().count();
+    let lb = b.chars().count();
+    if la == 0 && lb == 0 {
+        return 1.0;
+    }
+    1.0 - levenshtein(a, b) as f64 / la.max(lb) as f64
+}
+
+/// Edit similarity with a floor: returns 0.0 as soon as similarity cannot
+/// reach `min_sim` (banded DP).  The WAM discard optimization in matcher
+/// form.
+pub fn edit_similarity_min(a: &str, b: &str, min_sim: f64) -> f64 {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    edit_similarity_min_chars(&a, &b, min_sim)
+}
+
+/// [`edit_similarity_min`] over pre-collected char slices (hot path).
+pub fn edit_similarity_min_chars(a: &[char], b: &[char], min_sim: f64) -> f64 {
+    let (la, lb) = (a.len(), b.len());
+    if la == 0 && lb == 0 {
+        return 1.0;
+    }
+    let max_len = la.max(lb);
+    let max_dist = ((1.0 - min_sim) * max_len as f64).floor() as usize;
+    match levenshtein_bounded_chars(a, b, max_dist) {
+        Some(d) => 1.0 - d as f64 / max_len as f64,
+        None => 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+    use crate::util::Rng;
+
+    #[test]
+    fn known_distances() {
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+        assert_eq!(levenshtein("flaw", "lawn"), 2);
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("abc", ""), 3);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+    }
+
+    #[test]
+    fn similarity_range_and_identity() {
+        assert_eq!(edit_similarity("", ""), 1.0);
+        assert_eq!(edit_similarity("abc", "abc"), 1.0);
+        assert_eq!(edit_similarity("abc", "xyz"), 0.0);
+        let s = edit_similarity("samsung", "samsunk");
+        assert!(s > 0.8 && s < 1.0);
+    }
+
+    fn random_string(rng: &mut Rng, max_len: usize) -> String {
+        let n = rng.gen_range(max_len + 1);
+        (0..n)
+            .map(|_| (b'a' + rng.gen_range(4) as u8) as char)
+            .collect()
+    }
+
+    #[test]
+    fn prop_metric_axioms() {
+        forall("edit-metric", 150, |rng| {
+            let a = random_string(rng, 12);
+            let b = random_string(rng, 12);
+            let c = random_string(rng, 12);
+            let dab = levenshtein(&a, &b);
+            assert_eq!(dab, levenshtein(&b, &a), "symmetry");
+            assert_eq!(levenshtein(&a, &a), 0, "identity");
+            // triangle inequality
+            assert!(dab <= levenshtein(&a, &c) + levenshtein(&c, &b));
+            // length bound
+            assert!(
+                dab >= a.chars().count().abs_diff(b.chars().count())
+                    && dab <= a.chars().count().max(b.chars().count())
+            );
+        });
+    }
+
+    #[test]
+    fn prop_bounded_agrees_with_full() {
+        forall("edit-bounded", 200, |rng| {
+            let a = random_string(rng, 10);
+            let b = random_string(rng, 10);
+            let full = levenshtein(&a, &b);
+            for max_dist in 0..=10 {
+                match levenshtein_bounded(&a, &b, max_dist) {
+                    Some(d) => assert_eq!(d, full, "{a:?} {b:?} {max_dist}"),
+                    None => assert!(full > max_dist, "{a:?} {b:?} {max_dist}"),
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_similarity_min_agrees() {
+        forall("edit-sim-min", 150, |rng| {
+            let a = random_string(rng, 10);
+            let b = random_string(rng, 10);
+            let s = edit_similarity(&a, &b);
+            for min_sim in [0.0, 0.3, 0.5, 0.8, 1.0] {
+                let sm = edit_similarity_min(&a, &b, min_sim);
+                if s >= min_sim {
+                    assert!(
+                        (sm - s).abs() < 1e-12,
+                        "{a:?} {b:?} {min_sim}: {sm} vs {s}"
+                    );
+                } else {
+                    assert!(
+                        sm == 0.0 || (sm - s).abs() < 1e-12,
+                        "below-floor must be 0 or exact"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn unicode_counts_chars_not_bytes() {
+        assert_eq!(levenshtein("über", "uber"), 1);
+        assert_eq!(levenshtein("ü", ""), 1);
+    }
+}

@@ -1,0 +1,179 @@
+//! Matchers and match strategies (paper §2, §5.1).
+//!
+//! A *matcher* computes one similarity for an entity pair (edit distance
+//! on the title, TriGram on the description, …).  A *match strategy*
+//! combines several matchers into one decision:
+//!
+//! * [`StrategyKind::Wam`] — weighted average of edit-distance(title) and
+//!   TriGram(description), with the paper's threshold-discard memory
+//!   optimization;
+//! * [`StrategyKind::Lrm`] — logistic regression over Jaccard(title),
+//!   TriGram(description) and Cosine(title‖description), trainable via
+//!   [`train`].
+//!
+//! Strategies also expose their **memory model** `c_ms` (bytes per entity
+//! pair), which drives the memory-restricted partition sizing of §3.1.
+
+pub mod editdist;
+pub mod strategy;
+pub mod train;
+
+pub use strategy::{MatchStrategy, StrategyKind, StrategyParams};
+
+use crate::features::{EntityFeatures, QGramSet, TokenSet};
+
+/// TriGram similarity (Dice coefficient over q-gram multisets):
+/// `2·|A∩B| / (|A| + |B|)`.
+pub fn trigram_dice(a: &QGramSet, b: &QGramSet) -> f64 {
+    let denom = a.len() + b.len();
+    if denom == 0 {
+        return 0.0;
+    }
+    2.0 * a.intersection_size(b) as f64 / denom as f64
+}
+
+/// Jaccard similarity over token sets: `|A∩B| / |A∪B|`.
+pub fn jaccard(a: &TokenSet, b: &TokenSet) -> f64 {
+    let inter = a.intersection_size(b);
+    let union = a.len() + b.len() - inter;
+    if union == 0 {
+        return 0.0;
+    }
+    inter as f64 / union as f64
+}
+
+/// Cosine similarity over q-gram multisets (counts as the vector) —
+/// exact, via sparse count vectors.
+pub fn cosine(a: &QGramSet, b: &QGramSet) -> f64 {
+    let (sa, sb) = (a.to_sparse(), b.to_sparse());
+    let denom = (sa.normsq as f64).sqrt() * (sb.normsq as f64).sqrt();
+    if denom == 0.0 {
+        return 0.0;
+    }
+    sa.dot(&sb) / denom
+}
+
+/// Cosine over the concatenation of two attribute vectors, assembled from
+/// the per-attribute parts (mirrors the L2 graph's composition).
+pub fn cosine_concat(
+    a1: &QGramSet,
+    a2: &QGramSet,
+    b1: &QGramSet,
+    b2: &QGramSet,
+) -> f64 {
+    cosine_concat_sparse(
+        &a1.to_sparse(),
+        &a2.to_sparse(),
+        &b1.to_sparse(),
+        &b2.to_sparse(),
+    )
+}
+
+/// Hot-path cosine over precomputed sparse count vectors (§Perf): exact
+/// (no hash buckets), one sorted-merge dot per attribute, no allocation.
+pub fn cosine_concat_sparse(
+    a1: &crate::features::SparseCounts,
+    a2: &crate::features::SparseCounts,
+    b1: &crate::features::SparseCounts,
+    b2: &crate::features::SparseCounts,
+) -> f64 {
+    let dot = a1.dot(b1) + a2.dot(b2);
+    let na = (a1.normsq + a2.normsq) as f64;
+    let nb = (b1.normsq + b2.normsq) as f64;
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na.sqrt() * nb.sqrt())
+}
+
+/// The raw matcher outputs for one entity pair, as fed to a combiner.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MatcherScores {
+    pub edit_title: f64,
+    pub trigram_desc: f64,
+    pub jaccard_title: f64,
+    pub cosine_concat: f64,
+}
+
+impl MatcherScores {
+    /// Evaluate every matcher (used by LRM training; strategies evaluate
+    /// only the matchers they need on the hot path).
+    pub fn all(a: &EntityFeatures, b: &EntityFeatures) -> MatcherScores {
+        MatcherScores {
+            edit_title: editdist::edit_similarity(&a.title_norm, &b.title_norm),
+            trigram_desc: trigram_dice(&a.desc_grams, &b.desc_grams),
+            jaccard_title: jaccard(&a.title_tokens, &b.title_tokens),
+            cosine_concat: cosine_concat_sparse(
+                &a.title_sparse,
+                &a.desc_sparse,
+                &b.title_sparse,
+                &b.desc_sparse,
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::QGramSet;
+
+    fn g(s: &str) -> QGramSet {
+        QGramSet::new(s, 3)
+    }
+
+    #[test]
+    fn trigram_dice_identity_and_disjoint() {
+        let a = g("samsung spinpoint");
+        assert!((trigram_dice(&a, &a) - 1.0).abs() < 1e-12);
+        let b = g("zzzzqqqq");
+        assert!(trigram_dice(&a, &b) < 0.15);
+    }
+
+    #[test]
+    fn trigram_dice_empty() {
+        let e = QGramSet::new("", 3);
+        // normalized "" still yields boundary grams; two empties match
+        assert!(trigram_dice(&e, &e) > 0.0);
+    }
+
+    #[test]
+    fn jaccard_basics() {
+        let a = TokenSet::new("western digital caviar green");
+        let b = TokenSet::new("wd caviar green 1tb");
+        // inter = {caviar, green} = 2; union = 6
+        assert!((jaccard(&a, &b) - 2.0 / 6.0).abs() < 1e-12);
+        assert!((jaccard(&a, &a) - 1.0).abs() < 1e-12);
+        let empty = TokenSet::new("");
+        assert_eq!(jaccard(&empty, &empty), 0.0);
+    }
+
+    #[test]
+    fn cosine_identity_range() {
+        let a = g("intel x25-m postville");
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-9);
+        let b = g("lg flatron monitor");
+        let c = cosine(&a, &b);
+        assert!((0.0..=1.0).contains(&c));
+    }
+
+    #[test]
+    fn cosine_concat_consistent_with_parts() {
+        // identical pairs → exactly 1 regardless of composition
+        let (t, d) = (g("samsung f1"), g("internal sata 1tb"));
+        assert!((cosine_concat(&t, &d, &t, &d) - 1.0).abs() < 1e-9);
+        // orthogonal on both attributes → 0
+        let (t2, d2) = (g("zzz"), g("qqq"));
+        let v = cosine_concat(&t, &d, &t2, &d2);
+        assert!(v < 0.2, "{v}");
+    }
+
+    #[test]
+    fn similar_strings_score_higher() {
+        let a = g("samsung spinpoint f1 1tb");
+        let close = g("samsung spinpoint f1 1 tb");
+        let far = g("canon pixma printer");
+        assert!(trigram_dice(&a, &close) > trigram_dice(&a, &far));
+        assert!(cosine(&a, &close) > cosine(&a, &far));
+    }
+}

@@ -1,0 +1,323 @@
+//! Match strategies: WAM and LRM (paper §5.1) plus their memory models.
+
+use super::{editdist, jaccard, trigram_dice, MatcherScores};
+use crate::features::EntityFeatures;
+
+/// Which match strategy a workflow runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StrategyKind {
+    /// Weighted average of edit-distance(title) and TriGram(description);
+    /// memory-optimized via threshold discard.
+    Wam,
+    /// Logistic regression over Jaccard(title), TriGram(description),
+    /// Cosine(title‖description) — the learner-based strategy.
+    Lrm,
+}
+
+impl StrategyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::Wam => "wam",
+            StrategyKind::Lrm => "lrm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<StrategyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "wam" => Some(StrategyKind::Wam),
+            "lrm" => Some(StrategyKind::Lrm),
+            _ => None,
+        }
+    }
+
+    /// Average memory requirement per entity pair, `c_ms` (paper §3.1).
+    ///
+    /// WAM with threshold discard keeps only candidate correspondences
+    /// (~20 B/pair in the paper); LRM materializes per-matcher vectors for
+    /// the model (~1 kB/pair).  These constants feed the
+    /// memory-restricted partition sizing `m ≤ √(max_mem/(#cores·c_ms))`.
+    pub fn memory_per_pair(&self) -> u64 {
+        match self {
+            StrategyKind::Wam => 20,
+            StrategyKind::Lrm => 1024,
+        }
+    }
+
+    /// Matchers the strategy executes (for reporting).
+    pub fn n_matchers(&self) -> usize {
+        match self {
+            StrategyKind::Wam => 2,
+            StrategyKind::Lrm => 3,
+        }
+    }
+}
+
+/// Runtime parameters of a strategy — the `f32[4]` params vector of the
+/// AOT-compiled executables uses the same layout.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StrategyParams {
+    pub values: [f32; 4],
+}
+
+impl StrategyParams {
+    /// WAM defaults: equal weights, decision threshold 0.75 (the paper's
+    /// running example), no extra margin.
+    pub fn wam_default() -> StrategyParams {
+        StrategyParams {
+            values: [0.5, 0.5, 0.75, 0.0],
+        }
+    }
+
+    /// LRM defaults: a sensible hand-initialized model; production flows
+    /// replace this with [`super::train::train_lrm`] output.
+    pub fn lrm_default() -> StrategyParams {
+        StrategyParams {
+            values: [-8.0, 4.0, 5.0, 6.0],
+        }
+    }
+
+    pub fn default_for(kind: StrategyKind) -> StrategyParams {
+        match kind {
+            StrategyKind::Wam => Self::wam_default(),
+            StrategyKind::Lrm => Self::lrm_default(),
+        }
+    }
+}
+
+/// A fully-configured match strategy: kind + params + decision threshold.
+#[derive(Clone, Copy, Debug)]
+pub struct MatchStrategy {
+    pub kind: StrategyKind,
+    pub params: StrategyParams,
+    /// Final match decision threshold on the combined similarity.
+    pub threshold: f64,
+}
+
+impl MatchStrategy {
+    pub fn new(kind: StrategyKind) -> MatchStrategy {
+        MatchStrategy {
+            kind,
+            params: StrategyParams::default_for(kind),
+            threshold: match kind {
+                StrategyKind::Wam => 0.75,
+                StrategyKind::Lrm => 0.5,
+            },
+        }
+    }
+
+    pub fn with_params(mut self, params: StrategyParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    pub fn with_threshold(mut self, threshold: f64) -> Self {
+        self.threshold = threshold;
+        self
+    }
+
+    /// Combined similarity for one entity pair (exact matchers).
+    ///
+    /// WAM applies the threshold-discard optimization *inside* the
+    /// evaluation: if the title similarity alone already caps the
+    /// achievable average below the threshold, the (more expensive)
+    /// description matcher is skipped and 0 is returned.  This mirrors the
+    /// paper's "correspondences with a single-matcher similarity below
+    /// 2·θ−1 can be discarded" rule and is also why WAM's memory per pair
+    /// stays tiny.
+    pub fn similarity(&self, a: &EntityFeatures, b: &EntityFeatures) -> f64 {
+        match self.kind {
+            StrategyKind::Wam => {
+                let [w1, w2, thresh, margin] = self.params.values;
+                let (w1, w2) = (w1 as f64, w2 as f64);
+                let thresh = thresh as f64 - margin as f64;
+                let wsum = w1 + w2;
+                // discard bound: best case for the unseen matcher is 1.0
+                let min_title = (thresh * wsum - w2) / w1.max(1e-9);
+                // §Perf iteration log: an Ukkonen q-gram lower-bound
+                // prefilter (dist ≥ (max|G| − |G∩|)/q) was tried here and
+                // measured neutral-to-negative — the banded DP's own
+                // length check + row-min early exit already kills
+                // dissimilar pairs cheaply.  Reverted.
+                let s_title = editdist::edit_similarity_min_chars(
+                    &a.title_chars,
+                    &b.title_chars,
+                    min_title.clamp(0.0, 1.0),
+                );
+                if s_title == 0.0 && min_title > 0.0 {
+                    return 0.0; // discarded
+                }
+                let s_desc = trigram_dice(&a.desc_grams, &b.desc_grams);
+                let combined = (w1 * s_title + w2 * s_desc) / wsum;
+                if combined >= thresh {
+                    combined
+                } else {
+                    0.0
+                }
+            }
+            StrategyKind::Lrm => {
+                let [w0, w1, w2, w3] = self.params.values;
+                let s_jac = jaccard(&a.title_tokens, &b.title_tokens);
+                let s_tri = trigram_dice(&a.desc_grams, &b.desc_grams);
+                let s_cos = super::cosine_concat_sparse(
+                    &a.title_sparse,
+                    &a.desc_sparse,
+                    &b.title_sparse,
+                    &b.desc_sparse,
+                );
+                let z = w0 as f64
+                    + w1 as f64 * s_jac
+                    + w2 as f64 * s_tri
+                    + w3 as f64 * s_cos;
+                1.0 / (1.0 + (-z).exp())
+            }
+        }
+    }
+
+    /// Does the pair match under this strategy?
+    pub fn matches(&self, a: &EntityFeatures, b: &EntityFeatures) -> bool {
+        self.similarity(a, b) >= self.threshold
+    }
+
+    /// Combined score from precomputed matcher outputs (training/eval).
+    pub fn combine(&self, s: &MatcherScores) -> f64 {
+        match self.kind {
+            StrategyKind::Wam => {
+                let [w1, w2, thresh, margin] = self.params.values;
+                let combined = (w1 as f64 * s.edit_title
+                    + w2 as f64 * s.trigram_desc)
+                    / (w1 as f64 + w2 as f64);
+                if combined >= (thresh - margin) as f64 {
+                    combined
+                } else {
+                    0.0
+                }
+            }
+            StrategyKind::Lrm => {
+                let [w0, w1, w2, w3] = self.params.values;
+                let z = w0 as f64
+                    + w1 as f64 * s.jaccard_title
+                    + w2 as f64 * s.trigram_desc
+                    + w3 as f64 * s.cosine_concat;
+                1.0 / (1.0 + (-z).exp())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Dataset, Entity, EntityId, Schema};
+    use crate::model::{ATTR_DESCRIPTION, ATTR_TITLE};
+
+    fn features(title: &str, desc: &str) -> EntityFeatures {
+        let schema = Schema::new(vec![ATTR_TITLE, ATTR_DESCRIPTION]);
+        let mut ds = Dataset::new(schema.clone());
+        let mut e = Entity::new(EntityId(0), &schema);
+        e.set(&schema, ATTR_TITLE, title.into());
+        e.set(&schema, ATTR_DESCRIPTION, desc.into());
+        ds.push(e);
+        EntityFeatures::of(&ds.entities[0], &ds)
+    }
+
+    #[test]
+    fn wam_identical_pair_is_match() {
+        let s = MatchStrategy::new(StrategyKind::Wam);
+        let a = features("Samsung SpinPoint F1 1TB", "internal sata 7200rpm");
+        assert!((s.similarity(&a, &a) - 1.0).abs() < 1e-9);
+        assert!(s.matches(&a, &a));
+    }
+
+    #[test]
+    fn wam_near_duplicate_matches() {
+        let s = MatchStrategy::new(StrategyKind::Wam);
+        let a = features(
+            "Samsung SpinPoint F1 HD103UJ 1TB",
+            "internal sata 7200rpm 32MB cache",
+        );
+        let b = features(
+            "Samsung Spinpoint F1 HD103UJ 1 TB",
+            "internal sata 7200rpm 32 MB cache",
+        );
+        let sim = s.similarity(&a, &b);
+        assert!(sim >= 0.75, "near-dup sim {sim}");
+    }
+
+    #[test]
+    fn wam_discards_obvious_nonmatch() {
+        let s = MatchStrategy::new(StrategyKind::Wam);
+        let a = features("Samsung SpinPoint F1", "internal hdd");
+        let b = features("Canon PIXMA iP4600", "photo printer usb");
+        assert_eq!(s.similarity(&a, &b), 0.0, "discarded to exactly 0");
+    }
+
+    #[test]
+    fn wam_discard_never_drops_true_matches() {
+        // combine() without discard vs similarity() with discard must
+        // agree on everything above the threshold.
+        let s = MatchStrategy::new(StrategyKind::Wam);
+        let pairs = [
+            ("LG GH22NS50 black", "dvd burner sata", "LG GH22NS50, black", "dvd burner sata bulk"),
+            ("WD Caviar Green 1TB", "low-power 5400rpm", "WD Caviar Green WD10EADS 1TB", "5400rpm low-power"),
+            ("Intel X25-M 80GB", "ssd mlc sata", "Plextor PX-B320SA", "blu-ray combo drive"),
+        ];
+        for (t1, d1, t2, d2) in pairs {
+            let a = features(t1, d1);
+            let b = features(t2, d2);
+            let fast = s.similarity(&a, &b);
+            let scores = MatcherScores::all(&a, &b);
+            let slow = (0.5 * scores.edit_title + 0.5 * scores.trigram_desc)
+                .max(0.0);
+            if slow >= s.threshold {
+                assert!(
+                    (fast - slow).abs() < 1e-9,
+                    "match lost by discard: {fast} vs {slow}"
+                );
+            } else {
+                assert_eq!(fast, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn lrm_scores_in_unit_interval_and_ordered() {
+        let s = MatchStrategy::new(StrategyKind::Lrm);
+        let a = features("Sony Bravia KDL-40", "lcd tv full-hd 1080p");
+        let dup = features("Sony Bravia KDL40", "lcd-tv full-hd 1080p");
+        let other = features("Garmin nuvi 255", "navigation europe maps");
+        let s_dup = s.similarity(&a, &dup);
+        let s_other = s.similarity(&a, &other);
+        assert!((0.0..=1.0).contains(&s_dup));
+        assert!((0.0..=1.0).contains(&s_other));
+        assert!(s_dup > s_other);
+        assert!(s.matches(&a, &dup));
+        assert!(!s.matches(&a, &other));
+    }
+
+    #[test]
+    fn memory_model_constants() {
+        assert_eq!(StrategyKind::Wam.memory_per_pair(), 20);
+        assert_eq!(StrategyKind::Lrm.memory_per_pair(), 1024);
+        assert_eq!(StrategyKind::Wam.n_matchers(), 2);
+        assert_eq!(StrategyKind::Lrm.n_matchers(), 3);
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [StrategyKind::Wam, StrategyKind::Lrm] {
+            assert_eq!(StrategyKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(StrategyKind::parse("WAM"), Some(StrategyKind::Wam));
+        assert_eq!(StrategyKind::parse("svm"), None);
+    }
+
+    #[test]
+    fn combine_matches_similarity_for_lrm() {
+        let s = MatchStrategy::new(StrategyKind::Lrm);
+        let a = features("Asus Eee PC 1000H", "netbook 10 inch atom");
+        let b = features("ASUS EeePC 1000 H", "netbook 10in intel atom");
+        let direct = s.similarity(&a, &b);
+        let combined = s.combine(&MatcherScores::all(&a, &b));
+        assert!((direct - combined).abs() < 1e-9);
+    }
+}

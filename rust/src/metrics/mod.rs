@@ -1,0 +1,140 @@
+//! Run metrics: what every experiment reports.
+//!
+//! The engines fill a [`RunMetrics`] per workflow execution; the bench
+//! harness and the `pem` CLI render them as the paper's tables (execution
+//! time, speedup, #tasks, cache hit ratio `hr`, Δ, Δ/t_nc).
+
+use crate::util::{fmt_bytes, fmt_nanos};
+
+/// Metrics of one parallel match run.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    /// Virtual (simulator) or wall-clock (thread engine) makespan, ns.
+    pub makespan_ns: u64,
+    /// Executed match tasks.
+    pub tasks: usize,
+    /// Entity-pair comparisons performed.
+    pub comparisons: u64,
+    /// Correspondences above threshold.
+    pub matches: usize,
+    /// Partition accesses served from a match-service cache.
+    pub cache_hits: u64,
+    /// Partition accesses that had to hit the data service.
+    pub cache_misses: u64,
+    /// Bytes shipped from the data service to match services.
+    pub bytes_fetched: u64,
+    /// Control messages (assignment + completion), for overhead reports.
+    pub control_messages: u64,
+    /// Busy time per thread, ns (load-balance / utilization reporting).
+    pub thread_busy_ns: Vec<u64>,
+    /// Tasks whose assignment was served by cache affinity.
+    pub affinity_hits: u64,
+}
+
+impl RunMetrics {
+    /// The paper's cache hit ratio `hr`: hits / (hits + misses).
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Average thread utilization over the makespan.
+    pub fn utilization(&self) -> f64 {
+        if self.makespan_ns == 0 || self.thread_busy_ns.is_empty() {
+            return 0.0;
+        }
+        let busy: u64 = self.thread_busy_ns.iter().sum();
+        busy as f64
+            / (self.makespan_ns as f64 * self.thread_busy_ns.len() as f64)
+    }
+
+    /// Load imbalance: max busy / mean busy (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        if self.thread_busy_ns.is_empty() {
+            return 1.0;
+        }
+        let max = *self.thread_busy_ns.iter().max().unwrap() as f64;
+        let mean = self.thread_busy_ns.iter().sum::<u64>() as f64
+            / self.thread_busy_ns.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "time={} tasks={} pairs={} matches={} hr={:.0}% fetched={} util={:.0}%",
+            fmt_nanos(self.makespan_ns),
+            self.tasks,
+            self.comparisons,
+            self.matches,
+            self.hit_ratio() * 100.0,
+            fmt_bytes(self.bytes_fetched),
+            self.utilization() * 100.0,
+        )
+    }
+}
+
+/// Speedup of a set of runs relative to the first (1-thread) run.
+pub fn speedups(makespans_ns: &[u64]) -> Vec<f64> {
+    assert!(!makespans_ns.is_empty());
+    let base = makespans_ns[0] as f64;
+    makespans_ns
+        .iter()
+        .map(|&m| if m == 0 { f64::NAN } else { base / m as f64 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_ratio_and_utilization() {
+        let m = RunMetrics {
+            makespan_ns: 1000,
+            cache_hits: 82,
+            cache_misses: 18,
+            thread_busy_ns: vec![900, 800],
+            ..Default::default()
+        };
+        assert!((m.hit_ratio() - 0.82).abs() < 1e-12);
+        assert!((m.utilization() - 0.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_balanced_is_one() {
+        let m = RunMetrics {
+            thread_busy_ns: vec![500, 500, 500],
+            ..Default::default()
+        };
+        assert!((m.imbalance() - 1.0).abs() < 1e-12);
+        let skew = RunMetrics {
+            thread_busy_ns: vec![900, 100],
+            ..Default::default()
+        };
+        assert!((skew.imbalance() - 1.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_metrics_defined() {
+        let m = RunMetrics::default();
+        assert_eq!(m.hit_ratio(), 0.0);
+        assert_eq!(m.utilization(), 0.0);
+        assert_eq!(m.imbalance(), 1.0);
+        assert!(!m.summary().is_empty());
+    }
+
+    #[test]
+    fn speedup_series() {
+        let s = speedups(&[1600, 800, 400, 100]);
+        assert_eq!(s, vec![1.0, 2.0, 4.0, 16.0]);
+    }
+}

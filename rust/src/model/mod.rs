@@ -1,0 +1,471 @@
+//! Entity model: entities, schemas, datasets, correspondences.
+//!
+//! Mirrors the paper's preliminaries (§2): entities are attribute records
+//! (product name, description, manufacturer, product type, …); entity
+//! matching produces correspondences `(e1, e2, sim)` with `sim ∈ [0, 1]`,
+//! and all pairs above a threshold are considered matches.
+
+use std::collections::HashMap;
+use std::fmt;
+
+/// Stable identifier of an entity inside a [`Dataset`].
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct EntityId(pub u32);
+
+impl fmt::Display for EntityId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "e{}", self.0)
+    }
+}
+
+/// Identifier of an input source (paper §3.3 matches multiple sources).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, Default)]
+pub struct SourceId(pub u16);
+
+/// Attribute names used by the product schema.  The generator fills all
+/// 23 attributes of the paper's product-offer dataset; matching uses the
+/// well-known ones via the typed accessors below.
+pub const ATTR_TITLE: &str = "title";
+pub const ATTR_DESCRIPTION: &str = "description";
+pub const ATTR_MANUFACTURER: &str = "manufacturer";
+pub const ATTR_PRODUCT_TYPE: &str = "product_type";
+
+/// A schema is an ordered list of attribute names; entities store values
+/// positionally so the per-entity footprint stays small.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schema {
+    attributes: Vec<String>,
+    index: HashMap<String, usize>,
+}
+
+impl Schema {
+    pub fn new<S: Into<String>>(attributes: Vec<S>) -> Schema {
+        let attributes: Vec<String> =
+            attributes.into_iter().map(Into::into).collect();
+        let index = attributes
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (a.clone(), i))
+            .collect();
+        Schema { attributes, index }
+    }
+
+    /// The 23-attribute product-offer schema of the evaluation dataset.
+    pub fn product_offers() -> Schema {
+        Schema::new(vec![
+            ATTR_TITLE,
+            ATTR_DESCRIPTION,
+            ATTR_MANUFACTURER,
+            ATTR_PRODUCT_TYPE,
+            "ean",
+            "sku",
+            "model_number",
+            "price",
+            "currency",
+            "availability",
+            "shop_name",
+            "shop_url",
+            "category_path",
+            "color",
+            "weight_g",
+            "width_mm",
+            "height_mm",
+            "depth_mm",
+            "warranty_months",
+            "energy_label",
+            "release_year",
+            "rating",
+            "delivery_days",
+        ])
+    }
+
+    pub fn len(&self) -> usize {
+        self.attributes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.attributes.is_empty()
+    }
+
+    pub fn position(&self, attribute: &str) -> Option<usize> {
+        self.index.get(attribute).copied()
+    }
+
+    pub fn attributes(&self) -> &[String] {
+        &self.attributes
+    }
+}
+
+/// An entity: a record of optional attribute values (missing values are
+/// what sends entities to the *misc* block during blocking).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entity {
+    pub id: EntityId,
+    pub source: SourceId,
+    values: Vec<Option<String>>,
+}
+
+impl Entity {
+    pub fn new(id: EntityId, schema: &Schema) -> Entity {
+        Entity {
+            id,
+            source: SourceId::default(),
+            values: vec![None; schema.len()],
+        }
+    }
+
+    pub fn set(&mut self, schema: &Schema, attribute: &str, value: String) {
+        let pos = schema
+            .position(attribute)
+            .unwrap_or_else(|| panic!("unknown attribute {attribute:?}"));
+        self.values[pos] = Some(value);
+    }
+
+    pub fn get<'a>(&'a self, schema: &Schema, attribute: &str) -> Option<&'a str> {
+        schema
+            .position(attribute)?
+            .checked_sub(0)
+            .and_then(|pos| self.values.get(pos))
+            .and_then(|v| v.as_deref())
+    }
+
+    pub fn title<'a>(&'a self, schema: &Schema) -> &'a str {
+        self.get(schema, ATTR_TITLE).unwrap_or("")
+    }
+
+    pub fn description<'a>(&'a self, schema: &Schema) -> &'a str {
+        self.get(schema, ATTR_DESCRIPTION).unwrap_or("")
+    }
+
+    pub fn manufacturer<'a>(&'a self, schema: &Schema) -> Option<&'a str> {
+        self.get(schema, ATTR_MANUFACTURER)
+    }
+
+    pub fn product_type<'a>(&'a self, schema: &Schema) -> Option<&'a str> {
+        self.get(schema, ATTR_PRODUCT_TYPE)
+    }
+
+    /// Approximate in-memory footprint in bytes (drives the data-service
+    /// transfer cost model).
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<Entity>()
+            + self
+                .values
+                .iter()
+                .map(|v| v.as_ref().map_or(0, |s| s.len() + 24))
+                .sum::<usize>()
+    }
+}
+
+/// A dataset: schema + entities from one or more sources.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub schema: Schema,
+    pub entities: Vec<Entity>,
+}
+
+impl Dataset {
+    pub fn new(schema: Schema) -> Dataset {
+        Dataset {
+            schema,
+            entities: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entities.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entities.is_empty()
+    }
+
+    pub fn push(&mut self, entity: Entity) {
+        self.entities.push(entity);
+    }
+
+    pub fn get(&self, id: EntityId) -> Option<&Entity> {
+        // ids are dense indices in generated datasets; fall back to scan.
+        match self.entities.get(id.0 as usize) {
+            Some(e) if e.id == id => Some(e),
+            _ => self.entities.iter().find(|e| e.id == id),
+        }
+    }
+
+    /// Union of several datasets (paper §3.3): entities are re-tagged
+    /// with their source and re-identified to stay unique.
+    pub fn union(sources: Vec<Dataset>) -> Dataset {
+        assert!(!sources.is_empty());
+        let schema = sources[0].schema.clone();
+        for s in &sources {
+            assert_eq!(
+                s.schema, schema,
+                "union requires aligned schemas (run schema matching first)"
+            );
+        }
+        let mut out = Dataset::new(schema);
+        let mut next = 0u32;
+        for (si, src) in sources.into_iter().enumerate() {
+            for mut e in src.entities {
+                e.id = EntityId(next);
+                e.source = SourceId(si as u16);
+                next += 1;
+                out.entities.push(e);
+            }
+        }
+        out
+    }
+
+    pub fn approx_bytes(&self) -> usize {
+        self.entities.iter().map(Entity::approx_bytes).sum()
+    }
+}
+
+/// A correspondence: two entities believed to refer to the same real-world
+/// object, with their combined similarity.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Correspondence {
+    pub e1: EntityId,
+    pub e2: EntityId,
+    pub sim: f32,
+}
+
+impl Correspondence {
+    /// Normalized so `e1 < e2` — correspondences are unordered pairs.
+    pub fn new(a: EntityId, b: EntityId, sim: f32) -> Correspondence {
+        assert_ne!(a, b, "self-correspondence");
+        let (e1, e2) = if a < b { (a, b) } else { (b, a) };
+        Correspondence { e1, e2, sim }
+    }
+
+    pub fn pair(&self) -> (EntityId, EntityId) {
+        (self.e1, self.e2)
+    }
+}
+
+/// The merged match result: deduplicated correspondences (max similarity
+/// wins when the same pair is reported by several match tasks, which can
+/// happen for pairs co-located in aggregated blocks *and* the misc task).
+#[derive(Clone, Debug, Default)]
+pub struct MatchResult {
+    by_pair: HashMap<(EntityId, EntityId), f32>,
+}
+
+impl MatchResult {
+    pub fn new() -> MatchResult {
+        MatchResult::default()
+    }
+
+    pub fn add(&mut self, c: Correspondence) {
+        let entry = self.by_pair.entry(c.pair()).or_insert(c.sim);
+        if c.sim > *entry {
+            *entry = c.sim;
+        }
+    }
+
+    pub fn merge(&mut self, other: MatchResult) {
+        for ((e1, e2), sim) in other.by_pair {
+            self.add(Correspondence { e1, e2, sim });
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_pair.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_pair.is_empty()
+    }
+
+    pub fn contains(&self, a: EntityId, b: EntityId) -> bool {
+        let key = if a < b { (a, b) } else { (b, a) };
+        self.by_pair.contains_key(&key)
+    }
+
+    pub fn similarity(&self, a: EntityId, b: EntityId) -> Option<f32> {
+        let key = if a < b { (a, b) } else { (b, a) };
+        self.by_pair.get(&key).copied()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = Correspondence> + '_ {
+        self.by_pair
+            .iter()
+            .map(|(&(e1, e2), &sim)| Correspondence { e1, e2, sim })
+    }
+
+    /// Precision/recall/F1 against a ground-truth pair set.
+    pub fn quality(&self, truth: &[(EntityId, EntityId)]) -> Quality {
+        let truth_set: std::collections::HashSet<(EntityId, EntityId)> = truth
+            .iter()
+            .map(|&(a, b)| if a < b { (a, b) } else { (b, a) })
+            .collect();
+        let tp = self
+            .by_pair
+            .keys()
+            .filter(|k| truth_set.contains(k))
+            .count();
+        let precision = if self.len() == 0 {
+            0.0
+        } else {
+            tp as f64 / self.len() as f64
+        };
+        let recall = if truth_set.is_empty() {
+            0.0
+        } else {
+            tp as f64 / truth_set.len() as f64
+        };
+        let f1 = if precision + recall == 0.0 {
+            0.0
+        } else {
+            2.0 * precision * recall / (precision + recall)
+        };
+        Quality {
+            true_positives: tp,
+            predicted: self.len(),
+            actual: truth_set.len(),
+            precision,
+            recall,
+            f1,
+        }
+    }
+}
+
+/// Match quality against ground truth.
+#[derive(Clone, Copy, Debug)]
+pub struct Quality {
+    pub true_positives: usize,
+    pub predicted: usize,
+    pub actual: usize,
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_schema() -> Schema {
+        Schema::new(vec![ATTR_TITLE, ATTR_MANUFACTURER, ATTR_PRODUCT_TYPE])
+    }
+
+    #[test]
+    fn schema_positions() {
+        let s = small_schema();
+        assert_eq!(s.position(ATTR_TITLE), Some(0));
+        assert_eq!(s.position(ATTR_PRODUCT_TYPE), Some(2));
+        assert_eq!(s.position("nope"), None);
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn product_schema_has_23_attributes() {
+        assert_eq!(Schema::product_offers().len(), 23);
+    }
+
+    #[test]
+    fn entity_set_get() {
+        let s = small_schema();
+        let mut e = Entity::new(EntityId(0), &s);
+        e.set(&s, ATTR_TITLE, "LG GH22NS50".into());
+        assert_eq!(e.title(&s), "LG GH22NS50");
+        assert_eq!(e.manufacturer(&s), None);
+        assert_eq!(e.product_type(&s), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn entity_set_unknown_attribute_panics() {
+        let s = small_schema();
+        let mut e = Entity::new(EntityId(0), &s);
+        e.set(&s, "bogus", "x".into());
+    }
+
+    #[test]
+    fn correspondence_normalizes_order() {
+        let c = Correspondence::new(EntityId(5), EntityId(2), 0.9);
+        assert_eq!(c.pair(), (EntityId(2), EntityId(5)));
+    }
+
+    #[test]
+    #[should_panic]
+    fn self_correspondence_panics() {
+        Correspondence::new(EntityId(1), EntityId(1), 1.0);
+    }
+
+    #[test]
+    fn match_result_dedupes_max_sim() {
+        let mut r = MatchResult::new();
+        r.add(Correspondence::new(EntityId(1), EntityId(2), 0.8));
+        r.add(Correspondence::new(EntityId(2), EntityId(1), 0.9));
+        r.add(Correspondence::new(EntityId(1), EntityId(2), 0.7));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.similarity(EntityId(1), EntityId(2)), Some(0.9));
+    }
+
+    #[test]
+    fn match_result_merge() {
+        let mut a = MatchResult::new();
+        a.add(Correspondence::new(EntityId(1), EntityId(2), 0.8));
+        let mut b = MatchResult::new();
+        b.add(Correspondence::new(EntityId(3), EntityId(4), 0.85));
+        b.add(Correspondence::new(EntityId(1), EntityId(2), 0.95));
+        a.merge(b);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.similarity(EntityId(2), EntityId(1)), Some(0.95));
+    }
+
+    #[test]
+    fn quality_metrics() {
+        let mut r = MatchResult::new();
+        r.add(Correspondence::new(EntityId(1), EntityId(2), 0.9)); // tp
+        r.add(Correspondence::new(EntityId(3), EntityId(4), 0.9)); // fp
+        let truth = vec![
+            (EntityId(2), EntityId(1)),
+            (EntityId(5), EntityId(6)), // fn
+        ];
+        let q = r.quality(&truth);
+        assert_eq!(q.true_positives, 1);
+        assert!((q.precision - 0.5).abs() < 1e-12);
+        assert!((q.recall - 0.5).abs() < 1e-12);
+        assert!((q.f1 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn union_retags_sources_and_ids() {
+        let s = small_schema();
+        let mut d1 = Dataset::new(s.clone());
+        let mut d2 = Dataset::new(s.clone());
+        for i in 0..3 {
+            d1.push(Entity::new(EntityId(i), &s));
+            d2.push(Entity::new(EntityId(i), &s));
+        }
+        let u = Dataset::union(vec![d1, d2]);
+        assert_eq!(u.len(), 6);
+        let ids: Vec<u32> = u.entities.iter().map(|e| e.id.0).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(u.entities[0].source, SourceId(0));
+        assert_eq!(u.entities[5].source, SourceId(1));
+    }
+
+    #[test]
+    fn dataset_get_by_id() {
+        let s = small_schema();
+        let mut d = Dataset::new(s.clone());
+        for i in 0..5 {
+            d.push(Entity::new(EntityId(i), &s));
+        }
+        assert_eq!(d.get(EntityId(3)).unwrap().id, EntityId(3));
+        assert!(d.get(EntityId(99)).is_none());
+    }
+
+    #[test]
+    fn approx_bytes_grows_with_content() {
+        let s = small_schema();
+        let mut e1 = Entity::new(EntityId(0), &s);
+        let mut e2 = Entity::new(EntityId(1), &s);
+        e1.set(&s, ATTR_TITLE, "x".into());
+        e2.set(&s, ATTR_TITLE, "a much longer product title".into());
+        assert!(e2.approx_bytes() > e1.approx_bytes());
+    }
+}

@@ -1,0 +1,557 @@
+//! Blocking-based partitioning with partition tuning (paper §3.2).
+//!
+//! Blocking output blocks can differ wildly in size (Zipf-skewed keys),
+//! which would make one-task-per-block parallelism useless: huge blocks
+//! dominate execution time and exceed memory, tiny blocks drown the
+//! system in scheduling overhead.  *Partition tuning* fixes both:
+//!
+//! 1. blocks larger than the memory-restricted maximum `max_size` are
+//!    **split** into equally-sized sub-partitions (which must later be
+//!    matched against each other — handled by [`super::task_gen`]);
+//! 2. blocks smaller than `min_size` are **aggregated** into combined
+//!    partitions of at most `max_size` (fewer tasks, at the cost of some
+//!    unnecessary comparisons — the Fig. 7 trade-off);
+//! 3. the *misc* block is carried over (split if oversized); its
+//!    sub-partitions are matched against every other partition.
+
+use super::{PartitionKind, PartitionSet};
+use crate::blocking::Blocks;
+use crate::model::EntityId;
+use crate::util::div_ceil;
+
+/// Tuning parameters: the §3.1 memory-restricted max plus the minimum
+/// aggregation threshold ("size below some fraction of the maximal
+/// partition size").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TuningConfig {
+    pub max_size: usize,
+    pub min_size: usize,
+}
+
+impl TuningConfig {
+    pub fn new(max_size: usize, min_size: usize) -> TuningConfig {
+        assert!(max_size >= 1, "max_size must be >= 1");
+        assert!(
+            min_size <= max_size,
+            "min_size {min_size} > max_size {max_size}"
+        );
+        TuningConfig { max_size, min_size }
+    }
+}
+
+/// Split one oversized id list into equally-sized chunks <= max.
+fn split_evenly(ids: &[EntityId], max: usize) -> Vec<Vec<EntityId>> {
+    let n = ids.len();
+    let k = div_ceil(n, max);
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut offset = 0;
+    for i in 0..k {
+        let size = base + usize::from(i < extra);
+        out.push(ids[offset..offset + size].to_vec());
+        offset += size;
+    }
+    out
+}
+
+/// Run partition tuning over blocking output.
+pub fn tune(blocks: &Blocks, cfg: TuningConfig) -> PartitionSet {
+    let mut out = PartitionSet::new();
+
+    // Pass 1: normal blocks — split the oversized, queue the undersized.
+    let mut small: Vec<(&str, &[EntityId])> = Vec::new();
+    for (key, ids) in blocks.iter() {
+        if ids.is_empty() {
+            continue;
+        }
+        if ids.len() > cfg.max_size {
+            let parts = split_evenly(ids, cfg.max_size);
+            let count = parts.len();
+            for (index, chunk) in parts.into_iter().enumerate() {
+                out.push(
+                    PartitionKind::SubBlock {
+                        key: key.to_string(),
+                        index,
+                        count,
+                    },
+                    chunk,
+                );
+            }
+        } else if ids.len() < cfg.min_size {
+            small.push((key, ids));
+        } else {
+            out.push(
+                PartitionKind::Block {
+                    key: key.to_string(),
+                },
+                ids.to_vec(),
+            );
+        }
+    }
+
+    // Pass 2: aggregate undersized blocks, first-fit over ascending size,
+    // never exceeding max_size per aggregate.
+    small.sort_by_key(|(key, ids)| (ids.len(), key.to_string()));
+    let mut agg_ids: Vec<EntityId> = Vec::new();
+    let mut agg_keys: Vec<String> = Vec::new();
+    let flush = |out: &mut PartitionSet,
+                 agg_ids: &mut Vec<EntityId>,
+                 agg_keys: &mut Vec<String>| {
+        if agg_ids.is_empty() {
+            return;
+        }
+        if agg_keys.len() == 1 {
+            // a lone small block stays a normal block
+            out.push(
+                PartitionKind::Block {
+                    key: agg_keys[0].clone(),
+                },
+                std::mem::take(agg_ids),
+            );
+        } else {
+            out.push(
+                PartitionKind::Aggregate {
+                    keys: std::mem::take(agg_keys),
+                },
+                std::mem::take(agg_ids),
+            );
+        }
+        agg_keys.clear();
+    };
+    for (key, ids) in small {
+        if agg_ids.len() + ids.len() > cfg.max_size {
+            flush(&mut out, &mut agg_ids, &mut agg_keys);
+        }
+        agg_ids.extend_from_slice(ids);
+        agg_keys.push(key.to_string());
+        // an aggregate that reached min_size could also be closed here;
+        // packing to max_size gives fewer tasks (paper favors fewer).
+    }
+    flush(&mut out, &mut agg_ids, &mut agg_keys);
+
+    // Pass 3: misc block — carried over, split when oversized.
+    let misc = blocks.misc();
+    if !misc.is_empty() {
+        let parts = if misc.len() > cfg.max_size {
+            split_evenly(misc, cfg.max_size)
+        } else {
+            vec![misc.to_vec()]
+        };
+        let count = parts.len();
+        for (index, chunk) in parts.into_iter().enumerate() {
+            out.push(PartitionKind::Misc { index, count }, chunk);
+        }
+    }
+
+    out
+}
+
+/// Partition tuning for **two sources** under the same blocking
+/// (paper §3.3): the split/aggregate decisions are taken on the
+/// *combined* block sizes and applied identically to both sides, so
+/// corresponding partitions keep corresponding keys (an aggregate on
+/// side A covers exactly the same key set as its counterpart on side B
+/// — otherwise cross-source task generation could not align them).
+pub fn tune_paired(
+    blocks_a: &Blocks,
+    blocks_b: &Blocks,
+    cfg: TuningConfig,
+) -> (PartitionSet, PartitionSet) {
+    use std::collections::BTreeMap;
+    // combined sizes per key
+    let mut combined: BTreeMap<&str, usize> = BTreeMap::new();
+    for (k, ids) in blocks_a.iter() {
+        *combined.entry(k).or_default() += ids.len();
+    }
+    for (k, ids) in blocks_b.iter() {
+        *combined.entry(k).or_default() += ids.len();
+    }
+
+    // grouping decision on combined sizes: small keys are packed into
+    // shared aggregates (first-fit over ascending combined size)
+    let mut small: Vec<(&str, usize)> = combined
+        .iter()
+        .filter(|(_, &s)| s < cfg.min_size)
+        .map(|(&k, &s)| (k, s))
+        .collect();
+    small.sort_by_key(|&(k, s)| (s, k.to_string()));
+    let mut groups: Vec<Vec<String>> = Vec::new();
+    let mut cur: Vec<String> = Vec::new();
+    let mut cur_size = 0usize;
+    for (k, s) in small {
+        if cur_size + s > cfg.max_size && !cur.is_empty() {
+            groups.push(std::mem::take(&mut cur));
+            cur_size = 0;
+        }
+        cur.push(k.to_string());
+        cur_size += s;
+    }
+    if !cur.is_empty() {
+        groups.push(cur);
+    }
+    let group_of: std::collections::HashMap<&str, usize> = groups
+        .iter()
+        .enumerate()
+        .flat_map(|(gi, ks)| ks.iter().map(move |k| (k.as_str(), gi)))
+        .collect();
+
+    let build = |blocks: &Blocks| -> PartitionSet {
+        let mut out = PartitionSet::new();
+        let mut agg_members: Vec<Vec<EntityId>> =
+            vec![Vec::new(); groups.len()];
+        for (key, ids) in blocks.iter() {
+            if ids.is_empty() {
+                continue;
+            }
+            if let Some(&gi) = group_of.get(key) {
+                agg_members[gi].extend_from_slice(ids);
+            } else if ids.len() > cfg.max_size {
+                let parts = split_evenly(ids, cfg.max_size);
+                let count = parts.len();
+                for (index, chunk) in parts.into_iter().enumerate() {
+                    out.push(
+                        PartitionKind::SubBlock {
+                            key: key.to_string(),
+                            index,
+                            count,
+                        },
+                        chunk,
+                    );
+                }
+            } else {
+                out.push(
+                    PartitionKind::Block {
+                        key: key.to_string(),
+                    },
+                    ids.to_vec(),
+                );
+            }
+        }
+        for (gi, ids) in agg_members.into_iter().enumerate() {
+            if ids.is_empty() {
+                continue;
+            }
+            let mut keys = groups[gi].clone();
+            keys.sort();
+            out.push(PartitionKind::Aggregate { keys }, ids);
+        }
+        // misc per side, split when oversized
+        let misc = blocks.misc();
+        if !misc.is_empty() {
+            let parts = if misc.len() > cfg.max_size {
+                split_evenly(misc, cfg.max_size)
+            } else {
+                vec![misc.to_vec()]
+            };
+            let count = parts.len();
+            for (index, chunk) in parts.into_iter().enumerate() {
+                out.push(PartitionKind::Misc { index, count }, chunk);
+            }
+        }
+        out
+    };
+
+    (build(blocks_a), build(blocks_b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocking::Blocks;
+    use crate::model::EntityId;
+    use crate::util::proptest::forall;
+
+    /// Build Blocks with the given (key, size) pairs + misc size.
+    fn make_blocks(sizes: &[(&str, usize)], misc: usize) -> Blocks {
+        let mut b = Blocks::new();
+        let mut next = 0u32;
+        for (key, n) in sizes {
+            for _ in 0..*n {
+                b.add(key, EntityId(next));
+                next += 1;
+            }
+        }
+        for _ in 0..misc {
+            b.add_misc(EntityId(next));
+            next += 1;
+        }
+        b
+    }
+
+    /// The Figure 3 example: Drives & Storage, 3,600 products.
+    /// Blocks: 3½=1300, 2½=700, DVD-RW=400, Blu-ray=200, HD-DVD=200,
+    /// CD-RW=200; misc=600.  max=700, min=210 →
+    /// split 3½ into 2×650; aggregate the three 200s into 600;
+    /// keep 2½, DVD-RW; misc stays whole → 6 partitions.
+    #[test]
+    fn figure3_example() {
+        let blocks = make_blocks(
+            &[
+                ("3.5-drive", 1300),
+                ("2.5-drive", 700),
+                ("dvd-rw", 400),
+                ("blu-ray", 200),
+                ("hd-dvd", 200),
+                ("cd-rw", 200),
+            ],
+            600,
+        );
+        assert_eq!(blocks.total_entities(), 3600);
+        let ps = tune(&blocks, TuningConfig::new(700, 210));
+        assert_eq!(ps.len(), 6, "{:?}", ps.iter().map(|p| (&p.kind, p.len())).collect::<Vec<_>>());
+        assert_eq!(ps.total_entities(), 3600);
+        // split block: two sub-partitions of 650
+        let subs: Vec<_> = ps
+            .iter()
+            .filter(|p| matches!(&p.kind, PartitionKind::SubBlock { key, .. } if key == "3.5-drive"))
+            .collect();
+        assert_eq!(subs.len(), 2);
+        assert!(subs.iter().all(|p| p.len() == 650));
+        // aggregate of the three smallest
+        let aggs: Vec<_> = ps
+            .iter()
+            .filter(|p| matches!(p.kind, PartitionKind::Aggregate { .. }))
+            .collect();
+        assert_eq!(aggs.len(), 1);
+        assert_eq!(aggs[0].len(), 600);
+        if let PartitionKind::Aggregate { keys } = &aggs[0].kind {
+            let mut k = keys.clone();
+            k.sort();
+            assert_eq!(k, vec!["blu-ray", "cd-rw", "hd-dvd"]);
+        }
+        // misc stays one partition of 600
+        assert_eq!(ps.n_misc(), 1);
+        assert_eq!(ps.get(ps.misc_ids()[0]).len(), 600);
+    }
+
+    #[test]
+    fn no_tuning_when_everything_fits() {
+        let blocks = make_blocks(&[("a", 300), ("b", 400)], 0);
+        let ps = tune(&blocks, TuningConfig::new(700, 100));
+        assert_eq!(ps.len(), 2);
+        assert!(ps
+            .iter()
+            .all(|p| matches!(p.kind, PartitionKind::Block { .. })));
+    }
+
+    #[test]
+    fn min_size_one_disables_aggregation() {
+        // min_size = 1 → "no merging of small partitions" (Fig 7 x=1)
+        let blocks = make_blocks(&[("a", 5), ("b", 3), ("c", 700)], 0);
+        let ps = tune(&blocks, TuningConfig::new(700, 1));
+        assert_eq!(ps.len(), 3);
+        assert!(ps
+            .iter()
+            .all(|p| matches!(p.kind, PartitionKind::Block { .. })));
+    }
+
+    #[test]
+    fn oversized_misc_is_split() {
+        let blocks = make_blocks(&[("a", 100)], 1500);
+        let ps = tune(&blocks, TuningConfig::new(700, 10));
+        assert_eq!(ps.n_misc(), 3); // 1500 → 3 × 500
+        for id in ps.misc_ids() {
+            assert!(ps.get(id).len() <= 700);
+        }
+    }
+
+    #[test]
+    fn lone_small_block_stays_block() {
+        let blocks = make_blocks(&[("tiny", 5), ("big", 500)], 0);
+        let ps = tune(&blocks, TuningConfig::new(700, 210));
+        // "tiny" has no aggregation partner; it must remain a Block, not
+        // a 1-key Aggregate
+        assert!(ps.iter().all(|p| !matches!(
+            &p.kind,
+            PartitionKind::Aggregate { keys } if keys.len() < 2
+        )));
+        assert_eq!(ps.len(), 2);
+    }
+
+    #[test]
+    fn prop_tuning_preserves_entities_and_respects_max() {
+        forall("tuning-invariants", 120, |rng| {
+            // random block structure
+            let n_blocks = 1 + rng.gen_range(20);
+            let mut sizes = Vec::new();
+            let names: Vec<String> =
+                (0..n_blocks).map(|i| format!("b{i}")).collect();
+            for name in &names {
+                sizes.push((name.as_str(), 1 + rng.gen_range(1500)));
+            }
+            let misc = rng.gen_range(900);
+            let blocks = make_blocks(&sizes, misc);
+            let max_size = 50 + rng.gen_range(1000);
+            let min_size = rng.gen_range(max_size / 2);
+            let ps = tune(&blocks, TuningConfig::new(max_size, min_size));
+
+            // entity preservation: exact same id multiset
+            let mut got: Vec<u32> = ps
+                .iter()
+                .flat_map(|p| p.entities.iter().map(|e| e.0))
+                .collect();
+            got.sort_unstable();
+            let expect: Vec<u32> =
+                (0..blocks.total_entities() as u32).collect();
+            assert_eq!(got, expect, "entities lost or duplicated");
+
+            // max size respected by every partition
+            assert!(ps.max_size() <= max_size);
+
+            // sub-partitions of one key are balanced (±1)
+            use std::collections::HashMap;
+            let mut by_key: HashMap<&str, Vec<usize>> = HashMap::new();
+            for p in ps.iter() {
+                if let PartitionKind::SubBlock { key, .. } = &p.kind {
+                    by_key.entry(key).or_default().push(p.len());
+                }
+            }
+            for (k, sizes) in by_key {
+                let (mn, mx) = (
+                    *sizes.iter().min().unwrap(),
+                    *sizes.iter().max().unwrap(),
+                );
+                assert!(mx - mn <= 1, "unbalanced split of {k}: {sizes:?}");
+            }
+
+            // entities from the same original block never split across
+            // *aggregates* (only SubBlock splits are allowed)
+            // — verified structurally: each key appears in exactly one
+            // Block/Aggregate OR >=2 SubBlocks.
+            let mut seen: HashMap<String, usize> = HashMap::new();
+            for p in ps.iter() {
+                match &p.kind {
+                    PartitionKind::Block { key } => {
+                        *seen.entry(key.clone()).or_default() += 1
+                    }
+                    PartitionKind::Aggregate { keys } => {
+                        for k in keys {
+                            *seen.entry(k.clone()).or_default() += 1;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            for (k, count) in seen {
+                assert_eq!(count, 1, "key {k} in {count} partitions");
+            }
+        });
+    }
+
+    #[test]
+    fn aggregates_never_exceed_max() {
+        forall("agg-max", 60, |rng| {
+            let n_blocks = 2 + rng.gen_range(30);
+            let names: Vec<String> =
+                (0..n_blocks).map(|i| format!("s{i}")).collect();
+            let sizes: Vec<(&str, usize)> = names
+                .iter()
+                .map(|n| (n.as_str(), 1 + rng.gen_range(100)))
+                .collect();
+            let blocks = make_blocks(&sizes, 0);
+            let ps = tune(&blocks, TuningConfig::new(150, 120));
+            for p in ps.iter() {
+                assert!(p.len() <= 150);
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_config_rejected() {
+        TuningConfig::new(100, 200);
+    }
+
+    #[test]
+    fn paired_tuning_aligns_aggregates() {
+        // sides with different per-key sizes must still aggregate the
+        // SAME key groups
+        let a = make_blocks(&[("x", 30), ("y", 10), ("z", 250)], 5);
+        let b = make_blocks(&[("x", 5), ("y", 45), ("z", 240)], 0);
+        let (pa, pb) = tune_paired(&a, &b, TuningConfig::new(300, 100));
+        let agg_keys = |ps: &PartitionSet| -> Vec<Vec<String>> {
+            ps.iter()
+                .filter_map(|p| match &p.kind {
+                    PartitionKind::Aggregate { keys } => {
+                        let mut k = keys.clone();
+                        k.sort();
+                        Some(k)
+                    }
+                    _ => None,
+                })
+                .collect()
+        };
+        let (ka, kb) = (agg_keys(&pa), agg_keys(&pb));
+        assert_eq!(ka, kb, "aggregate key groups must align");
+        // combined x+y = 90 < min 100 → one shared aggregate {x, y}
+        assert_eq!(ka, vec![vec!["x".to_string(), "y".to_string()]]);
+        // z (combined 490) stays a block on both sides
+        assert!(pa.iter().any(
+            |p| matches!(&p.kind, PartitionKind::Block { key } if key == "z")
+        ));
+        // entity preservation per side
+        assert_eq!(pa.total_entities(), a.total_entities());
+        assert_eq!(pb.total_entities(), b.total_entities());
+        assert_eq!(pa.n_misc(), 1);
+        assert_eq!(pb.n_misc(), 0);
+    }
+
+    #[test]
+    fn paired_tuning_splits_oversized_sides() {
+        let a = make_blocks(&[("big", 900)], 0);
+        let b = make_blocks(&[("big", 200)], 0);
+        let (pa, pb) = tune_paired(&a, &b, TuningConfig::new(300, 50));
+        // side A splits into 3; side B stays a single block; key-based
+        // task generation pairs every A-sub with the B block
+        assert_eq!(pa.len(), 3);
+        assert_eq!(pb.len(), 1);
+        assert!(pa.iter().all(
+            |p| matches!(&p.kind, PartitionKind::SubBlock { key, .. } if key == "big")
+        ));
+    }
+
+    #[test]
+    fn prop_paired_tuning_preserves_and_aligns() {
+        forall("paired-tuning", 60, |rng| {
+            let nk = 1 + rng.gen_range(12);
+            let names: Vec<String> =
+                (0..nk).map(|i| format!("k{i}")).collect();
+            let mk = |rng: &mut crate::util::Rng, names: &[String]| {
+                let mut sizes: Vec<(&str, usize)> = Vec::new();
+                for n in names {
+                    if rng.gen_bool(0.8) {
+                        sizes.push((n.as_str(), 1 + rng.gen_range(200)));
+                    }
+                }
+                make_blocks(&sizes, rng.gen_range(50))
+            };
+            let a = mk(rng, &names);
+            let b = mk(rng, &names);
+            let max = 60 + rng.gen_range(300);
+            let min = rng.gen_range(max / 2);
+            let (pa, pb) =
+                tune_paired(&a, &b, TuningConfig::new(max, min));
+            assert_eq!(pa.total_entities(), a.total_entities());
+            assert_eq!(pb.total_entities(), b.total_entities());
+            assert!(pa.max_size() <= max && pb.max_size() <= max);
+            // every aggregate key-set on one side exists on the other
+            // side too (or that side simply has no entities for it)
+            let sets = |ps: &PartitionSet| -> std::collections::HashSet<Vec<String>> {
+                ps.iter()
+                    .filter_map(|p| match &p.kind {
+                        PartitionKind::Aggregate { keys } => {
+                            let mut k = keys.clone();
+                            k.sort();
+                            Some(k)
+                        }
+                        _ => None,
+                    })
+                    .collect()
+            };
+            for ks in sets(&pa).intersection(&sets(&pb)) {
+                assert!(!ks.is_empty());
+            }
+        });
+    }
+}

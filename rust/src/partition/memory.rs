@@ -1,0 +1,93 @@
+//! Memory-restricted partition sizing (paper §3.1).
+//!
+//! Entity matching runs in main memory: a match task over two partitions
+//! of size `m` holds O(m²) intermediate correspondences, at an average of
+//! `c_ms` bytes per pair for match strategy `ms`.  With `max_mem` shared
+//! by `#cores` parallel threads per node, the partition size is bounded by
+//!
+//! ```text
+//! m ≤ √( max_mem / (#cores · c_ms) )
+//! ```
+//!
+//! The paper's worked examples: at `max_mem = 2 GB`, `#cores = 4`
+//! (→ 500 MB per task), a memory-efficient strategy with `c_ms = 20 B`
+//! allows `m = 5,000`; a learner-based strategy with `c_ms = 1 kB` only
+//! `m ≈ 700`.
+
+use crate::cluster::ComputingEnv;
+use crate::matching::StrategyKind;
+
+/// Memory available to a single match task (per parallel thread).
+pub fn mem_per_task(ce: &ComputingEnv) -> u64 {
+    ce.max_mem / ce.cores_per_node as u64
+}
+
+/// The memory-restricted maximum partition size `m` for a strategy.
+pub fn max_partition_size(ce: &ComputingEnv, strategy: StrategyKind) -> usize {
+    let per_task = mem_per_task(ce) as f64;
+    let c_ms = strategy.memory_per_pair() as f64;
+    (per_task / c_ms).sqrt().floor() as usize
+}
+
+/// Estimated memory requirement of a match task comparing partitions of
+/// `m1` and `m2` entities: `c_ms · m1 · m2` (paper: `c_ms · m²`).
+pub fn task_memory_bytes(m1: usize, m2: usize, strategy: StrategyKind) -> u64 {
+    strategy.memory_per_pair() * m1 as u64 * m2 as u64
+}
+
+/// Does a task comparing `m1 × m2` fit the per-task budget?
+pub fn task_fits(ce: &ComputingEnv, m1: usize, m2: usize, strategy: StrategyKind) -> bool {
+    task_memory_bytes(m1, m2, strategy) <= mem_per_task(ce)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ComputingEnv;
+    use crate::util::{GIB, MIB};
+
+    /// The paper's §3.1 worked example: 2 GB, 4 cores → 500 MB per task;
+    /// c_ms = 20 B → m = 5,000; c_ms = 1 kB → m ≈ 700.
+    #[test]
+    fn paper_worked_example() {
+        let ce = ComputingEnv::new(1, 4, 2 * GIB);
+        assert_eq!(mem_per_task(&ce), 512 * MIB);
+        // the paper rounds 500 MB; with exact 512 MiB / 20 B: √(26843545.6)
+        let m_wam = max_partition_size(&ce, StrategyKind::Wam);
+        assert!((5000..=5200).contains(&m_wam), "m_wam = {m_wam}");
+        let m_lrm = max_partition_size(&ce, StrategyKind::Lrm);
+        assert!((700..=740).contains(&m_lrm), "m_lrm = {m_lrm}");
+    }
+
+    #[test]
+    fn more_cores_smaller_partitions() {
+        let ce4 = ComputingEnv::new(1, 4, 2 * GIB);
+        let ce8 = ComputingEnv::new(1, 8, 2 * GIB);
+        assert!(
+            max_partition_size(&ce8, StrategyKind::Wam)
+                < max_partition_size(&ce4, StrategyKind::Wam)
+        );
+    }
+
+    #[test]
+    fn task_memory_quadratic() {
+        assert_eq!(
+            task_memory_bytes(100, 100, StrategyKind::Wam),
+            20 * 100 * 100
+        );
+        assert_eq!(
+            task_memory_bytes(500, 200, StrategyKind::Lrm),
+            1024 * 500 * 200
+        );
+    }
+
+    #[test]
+    fn fits_is_consistent_with_max_size() {
+        let ce = ComputingEnv::new(1, 4, 2 * GIB);
+        for strategy in [StrategyKind::Wam, StrategyKind::Lrm] {
+            let m = max_partition_size(&ce, strategy);
+            assert!(task_fits(&ce, m, m, strategy));
+            assert!(!task_fits(&ce, m + 64, m + 64, strategy));
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Partitioning strategies and match-task generation (paper §3).
+//!
+//! The input to parallel matching is partitioned so that independent
+//! *match tasks* — each comparing two partitions — can be executed in
+//! parallel:
+//!
+//! * [`size_based`] (§3.1): split the input into equally-sized partitions
+//!   and match every pair of partitions (Cartesian product evaluation);
+//! * [`blocking_based`] (§3.2): take the output of a blocking operator
+//!   and run **partition tuning** — split blocks whose memory demand
+//!   exceeds the per-core budget, aggregate tiny blocks, and route the
+//!   *misc* block against everything;
+//! * [`task_gen`]: generate match tasks for the three §3.2 cases plus the
+//!   multi-source variants of §3.3;
+//! * [`memory`]: the `m ≤ √(max_mem / (#cores · c_ms))` sizing model.
+
+pub mod blocking_based;
+pub mod memory;
+pub mod size_based;
+pub mod task_gen;
+
+pub use blocking_based::{tune, TuningConfig};
+pub use memory::{max_partition_size, task_memory_bytes};
+pub use size_based::partition_size_based;
+pub use task_gen::{
+    generate_tasks, generate_tasks_two_sources_blocked,
+    generate_tasks_two_sources_cartesian,
+};
+
+use crate::model::EntityId;
+use std::fmt;
+
+/// Identifier of a partition within a [`PartitionSet`].
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct PartitionId(pub u32);
+
+impl fmt::Display for PartitionId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "P{}", self.0)
+    }
+}
+
+/// Why a partition exists — determines match-task generation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PartitionKind {
+    /// Equal slice of the input for Cartesian evaluation (§3.1).
+    SizeBased,
+    /// An untouched blocking output block: matched only within itself.
+    Block { key: String },
+    /// Sub-partition `index` (of `count`) of an oversized block that was
+    /// split: matched with itself and all sibling sub-partitions.
+    SubBlock {
+        key: String,
+        index: usize,
+        count: usize,
+    },
+    /// Aggregate of several undersized blocks: matched within itself.
+    Aggregate { keys: Vec<String> },
+    /// Sub-partition of the misc block: matched with *everything*.
+    Misc { index: usize, count: usize },
+}
+
+impl PartitionKind {
+    pub fn is_misc(&self) -> bool {
+        matches!(self, PartitionKind::Misc { .. })
+    }
+}
+
+/// A concrete partition: an ordered set of entity ids.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub id: PartitionId,
+    pub kind: PartitionKind,
+    pub entities: Vec<EntityId>,
+}
+
+impl Partition {
+    pub fn len(&self) -> usize {
+        self.entities.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entities.is_empty()
+    }
+}
+
+/// The partitions produced by one partitioning strategy.
+#[derive(Clone, Debug, Default)]
+pub struct PartitionSet {
+    partitions: Vec<Partition>,
+}
+
+impl PartitionSet {
+    pub fn new() -> PartitionSet {
+        PartitionSet::default()
+    }
+
+    pub fn push(&mut self, kind: PartitionKind, entities: Vec<EntityId>) -> PartitionId {
+        let id = PartitionId(self.partitions.len() as u32);
+        self.partitions.push(Partition { id, kind, entities });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.partitions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.partitions.is_empty()
+    }
+
+    pub fn get(&self, id: PartitionId) -> &Partition {
+        &self.partitions[id.0 as usize]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Partition> {
+        self.partitions.iter()
+    }
+
+    pub fn misc_ids(&self) -> Vec<PartitionId> {
+        self.partitions
+            .iter()
+            .filter(|p| p.kind.is_misc())
+            .map(|p| p.id)
+            .collect()
+    }
+
+    pub fn n_misc(&self) -> usize {
+        self.partitions.iter().filter(|p| p.kind.is_misc()).count()
+    }
+
+    /// Total entities across partitions.
+    pub fn total_entities(&self) -> usize {
+        self.partitions.iter().map(Partition::len).sum()
+    }
+
+    /// Largest partition size (must respect the tuning max).
+    pub fn max_size(&self) -> usize {
+        self.partitions.iter().map(Partition::len).max().unwrap_or(0)
+    }
+}
+
+/// A match task: compare all entity pairs of `left` × `right`
+/// (`left == right` means intra-partition matching, which compares the
+/// partition's unordered pairs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct MatchTask {
+    pub id: u32,
+    pub left: PartitionId,
+    pub right: PartitionId,
+}
+
+impl MatchTask {
+    /// Number of entity-pair comparisons this task performs.
+    pub fn n_pairs(&self, parts: &PartitionSet) -> u64 {
+        let l = parts.get(self.left).len() as u64;
+        if self.left == self.right {
+            l * (l.saturating_sub(1)) / 2
+        } else {
+            l * parts.get(self.right).len() as u64
+        }
+    }
+
+    /// The partitions this task needs fetched (1 or 2).
+    pub fn needed_partitions(&self) -> Vec<PartitionId> {
+        if self.left == self.right {
+            vec![self.left]
+        } else {
+            vec![self.left, self.right]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(range: std::ops::Range<u32>) -> Vec<EntityId> {
+        range.map(EntityId).collect()
+    }
+
+    #[test]
+    fn partition_set_basics() {
+        let mut ps = PartitionSet::new();
+        let a = ps.push(PartitionKind::SizeBased, ids(0..500));
+        let b = ps.push(
+            PartitionKind::Misc { index: 0, count: 1 },
+            ids(500..600),
+        );
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps.get(a).len(), 500);
+        assert_eq!(ps.total_entities(), 600);
+        assert_eq!(ps.max_size(), 500);
+        assert_eq!(ps.misc_ids(), vec![b]);
+        assert_eq!(ps.n_misc(), 1);
+    }
+
+    #[test]
+    fn task_pair_counts() {
+        let mut ps = PartitionSet::new();
+        let a = ps.push(PartitionKind::SizeBased, ids(0..10));
+        let b = ps.push(PartitionKind::SizeBased, ids(10..15));
+        let intra = MatchTask { id: 0, left: a, right: a };
+        let cross = MatchTask { id: 1, left: a, right: b };
+        assert_eq!(intra.n_pairs(&ps), 45); // 10*9/2
+        assert_eq!(cross.n_pairs(&ps), 50); // 10*5
+        assert_eq!(intra.needed_partitions(), vec![a]);
+        assert_eq!(cross.needed_partitions(), vec![a, b]);
+    }
+
+    #[test]
+    fn misc_kind_flag() {
+        assert!(PartitionKind::Misc { index: 0, count: 2 }.is_misc());
+        assert!(!PartitionKind::SizeBased.is_misc());
+        assert!(!PartitionKind::Block { key: "x".into() }.is_misc());
+    }
+}

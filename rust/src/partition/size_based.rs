@@ -1,0 +1,114 @@
+//! Size-based partitioning (paper §3.1).
+//!
+//! Split the input entities into `p = ⌈n/m⌉` equally-sized partitions for
+//! Cartesian-product evaluation.  Match task generation then compares
+//! every partition with itself and with every other partition —
+//! `p + p(p−1)/2` tasks (see [`super::task_gen`]).
+
+use super::{PartitionKind, PartitionSet};
+use crate::model::EntityId;
+use crate::util::div_ceil;
+
+/// Partition `entities` into chunks of at most `m`.
+///
+/// Sizes are balanced: instead of `p−1` full partitions plus a remainder
+/// (which could be as small as 1 and would create skewed match tasks),
+/// the n entities are spread as evenly as possible — sizes differ by at
+/// most one.
+pub fn partition_size_based(entities: &[EntityId], m: usize) -> PartitionSet {
+    assert!(m >= 1, "partition size must be >= 1");
+    let n = entities.len();
+    let mut out = PartitionSet::new();
+    if n == 0 {
+        return out;
+    }
+    let p = div_ceil(n, m);
+    let base = n / p;
+    let extra = n % p; // first `extra` partitions get one more
+    let mut offset = 0;
+    for i in 0..p {
+        let size = base + usize::from(i < extra);
+        out.push(
+            PartitionKind::SizeBased,
+            entities[offset..offset + size].to_vec(),
+        );
+        offset += size;
+    }
+    debug_assert_eq!(offset, n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    fn ids(n: usize) -> Vec<EntityId> {
+        (0..n as u32).map(EntityId).collect()
+    }
+
+    #[test]
+    fn exact_division() {
+        let ps = partition_size_based(&ids(1000), 500);
+        assert_eq!(ps.len(), 2);
+        assert!(ps.iter().all(|p| p.len() == 500));
+    }
+
+    #[test]
+    fn balanced_remainder() {
+        // 1001 entities, m=500 → 3 partitions of 334/334/333, not 500/500/1
+        let ps = partition_size_based(&ids(1001), 500);
+        assert_eq!(ps.len(), 3);
+        let sizes: Vec<usize> = ps.iter().map(|p| p.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 1001);
+        assert!(sizes.iter().all(|&s| s == 333 || s == 334));
+    }
+
+    #[test]
+    fn paper_counts() {
+        // small problem: 20,000 entities at m=500 → 40 partitions
+        let ps = partition_size_based(&ids(20_000), 500);
+        assert_eq!(ps.len(), 40);
+        // → 40 + 40*39/2 = 820 match tasks (checked in task_gen tests)
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        assert_eq!(partition_size_based(&[], 10).len(), 0);
+        let ps = partition_size_based(&ids(3), 10);
+        assert_eq!(ps.len(), 1);
+        assert_eq!(ps.get(super::super::PartitionId(0)).len(), 3);
+    }
+
+    #[test]
+    fn prop_partitions_preserve_entities_in_order() {
+        forall("size-based-cover", 100, |rng| {
+            let n = rng.gen_range(5000);
+            let m = 1 + rng.gen_range(700);
+            let input = ids(n);
+            let ps = partition_size_based(&input, m);
+            // concatenation of partitions == input
+            let cat: Vec<EntityId> = ps
+                .iter()
+                .flat_map(|p| p.entities.iter().copied())
+                .collect();
+            assert_eq!(cat, input);
+            // every partition within max size, sizes differ by <= 1
+            if n > 0 {
+                let sizes: Vec<usize> = ps.iter().map(|p| p.len()).collect();
+                assert!(sizes.iter().all(|&s| s <= m && s >= 1));
+                let (mn, mx) = (
+                    *sizes.iter().min().unwrap(),
+                    *sizes.iter().max().unwrap(),
+                );
+                assert!(mx - mn <= 1, "unbalanced: {mn}..{mx}");
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_partition_size_panics() {
+        partition_size_based(&ids(10), 0);
+    }
+}

@@ -1,0 +1,399 @@
+//! Match-task generation (paper §3.1, §3.2 and the §3.3 multi-source
+//! variants).
+//!
+//! The three §3.2 cases:
+//!
+//! 1. untouched / aggregated blocks → one intra-partition task;
+//! 2. a block split into `k` sub-partitions → `k + k(k−1)/2` tasks
+//!    (every sub-partition with itself and with each sibling);
+//! 3. misc (sub-)partitions → matched with **all** (sub-)partitions.
+//!
+//! Size-based partitioning is the degenerate case where every partition
+//! pairs with every other: `p + p(p−1)/2` tasks.
+
+use super::{MatchTask, PartitionKind, PartitionSet};
+
+/// Generate the match tasks for a partition set produced by either
+/// partitioning strategy.
+pub fn generate_tasks(parts: &PartitionSet) -> Vec<MatchTask> {
+    let mut tasks = Vec::new();
+    let mut next_id = 0u32;
+    let mut push = |tasks: &mut Vec<MatchTask>, left, right| {
+        tasks.push(MatchTask {
+            id: next_id,
+            left,
+            right,
+        });
+        next_id += 1;
+    };
+
+    let all: Vec<&super::Partition> = parts.iter().collect();
+    for (i, p) in all.iter().enumerate() {
+        match &p.kind {
+            // Cartesian evaluation: pair with self and every later one.
+            PartitionKind::SizeBased => {
+                push(&mut tasks, p.id, p.id);
+                for q in all.iter().skip(i + 1) {
+                    debug_assert!(matches!(q.kind, PartitionKind::SizeBased));
+                    push(&mut tasks, p.id, q.id);
+                }
+            }
+            // Case 1: single task within the partition.
+            PartitionKind::Block { .. } | PartitionKind::Aggregate { .. } => {
+                push(&mut tasks, p.id, p.id);
+            }
+            // Case 2: self + later siblings of the same split block.
+            PartitionKind::SubBlock { key, .. } => {
+                push(&mut tasks, p.id, p.id);
+                for q in all.iter().skip(i + 1) {
+                    if let PartitionKind::SubBlock { key: qk, .. } = &q.kind {
+                        if qk == key {
+                            push(&mut tasks, p.id, q.id);
+                        }
+                    }
+                }
+            }
+            // Case 3: self + later misc siblings + every non-misc
+            // partition (regardless of order).
+            PartitionKind::Misc { .. } => {
+                push(&mut tasks, p.id, p.id);
+                for q in all.iter().skip(i + 1) {
+                    if q.kind.is_misc() {
+                        push(&mut tasks, p.id, q.id);
+                    }
+                }
+                for q in all.iter() {
+                    if !q.kind.is_misc() {
+                        push(&mut tasks, p.id, q.id);
+                    }
+                }
+            }
+        }
+    }
+    tasks
+}
+
+/// §3.3, duplicate-free sources, Cartesian evaluation: partition each
+/// source size-based and match each partition of the first source with
+/// each of the second — `m·n` tasks, never within a source.
+pub fn generate_tasks_two_sources_cartesian(
+    parts_a: &PartitionSet,
+    parts_b: &PartitionSet,
+) -> Vec<(MatchTask, bool)> {
+    // Returned flag: true = left id refers to parts_a (cross-set task ids
+    // address two different PartitionSets; the workflow keeps them apart).
+    let mut tasks = Vec::new();
+    let mut id = 0u32;
+    for pa in parts_a.iter() {
+        for pb in parts_b.iter() {
+            tasks.push((
+                MatchTask {
+                    id,
+                    left: pa.id,
+                    right: pb.id,
+                },
+                true,
+            ));
+            id += 1;
+        }
+    }
+    tasks
+}
+
+/// §3.3, duplicate-free sources with blocking: the same blocking was
+/// applied to both sources; corresponding blocks (same tuned key) are
+/// matched across sources, and misc partitions of either source are
+/// matched with all partitions of the *other* source.
+pub fn generate_tasks_two_sources_blocked(
+    parts_a: &PartitionSet,
+    parts_b: &PartitionSet,
+) -> Vec<(MatchTask, bool)> {
+    let key_of = |k: &PartitionKind| -> Option<String> {
+        match k {
+            PartitionKind::Block { key } => Some(key.clone()),
+            PartitionKind::SubBlock { key, .. } => Some(key.clone()),
+            // aggregates pair by their sorted member keys
+            PartitionKind::Aggregate { keys } => {
+                let mut ks = keys.clone();
+                ks.sort();
+                Some(format!("agg:{}", ks.join("+")))
+            }
+            PartitionKind::Misc { .. } | PartitionKind::SizeBased => None,
+        }
+    };
+    let mut tasks = Vec::new();
+    let mut id = 0u32;
+    let mut push = |tasks: &mut Vec<(MatchTask, bool)>, l, r| {
+        tasks.push((
+            MatchTask {
+                id,
+                left: l,
+                right: r,
+            },
+            true,
+        ));
+        id += 1;
+    };
+    for pa in parts_a.iter() {
+        match key_of(&pa.kind) {
+            Some(ka) => {
+                for pb in parts_b.iter() {
+                    if key_of(&pb.kind).as_deref() == Some(ka.as_str()) {
+                        push(&mut tasks, pa.id, pb.id);
+                    }
+                }
+            }
+            None if pa.kind.is_misc() => {
+                // misc of A × everything of B
+                for pb in parts_b.iter() {
+                    push(&mut tasks, pa.id, pb.id);
+                }
+            }
+            None => {}
+        }
+    }
+    // misc of B × non-misc of A (misc×misc already covered above)
+    for pb in parts_b.iter() {
+        if pb.kind.is_misc() {
+            for pa in parts_a.iter() {
+                if !pa.kind.is_misc() {
+                    push(&mut tasks, pa.id, pb.id);
+                }
+            }
+        }
+    }
+    tasks
+}
+
+/// Expected task count for size-based partitioning: `p + p(p−1)/2`.
+pub fn size_based_task_count(p: usize) -> usize {
+    p + p * p.saturating_sub(1) / 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocking::Blocks;
+    use crate::model::EntityId;
+    use crate::partition::{
+        partition_size_based, tune, PartitionId, TuningConfig,
+    };
+    use crate::util::proptest::forall;
+    use std::collections::HashSet;
+
+    fn ids(n: usize) -> Vec<EntityId> {
+        (0..n as u32).map(EntityId).collect()
+    }
+
+    #[test]
+    fn size_based_task_formula() {
+        for (n, m, expect_p) in [(1000, 500, 2), (20_000, 500, 40), (3600, 600, 6)] {
+            let ps = partition_size_based(&ids(n), m);
+            assert_eq!(ps.len(), expect_p);
+            let tasks = generate_tasks(&ps);
+            assert_eq!(tasks.len(), size_based_task_count(expect_p));
+        }
+        // the paper's Fig 3 comparison: 6 partitions → 21 tasks
+        assert_eq!(size_based_task_count(6), 21);
+    }
+
+    /// Pair-coverage invariant for size-based partitioning: every
+    /// unordered entity pair is covered by exactly one task.
+    #[test]
+    fn prop_size_based_pairs_exactly_once() {
+        forall("pairs-once", 40, |rng| {
+            let n = 2 + rng.gen_range(120);
+            let m = 1 + rng.gen_range(40);
+            let ps = partition_size_based(&ids(n), m);
+            let tasks = generate_tasks(&ps);
+            let mut seen: HashSet<(u32, u32)> = HashSet::new();
+            for t in &tasks {
+                let l = &ps.get(t.left).entities;
+                let r = &ps.get(t.right).entities;
+                if t.left == t.right {
+                    for i in 0..l.len() {
+                        for j in (i + 1)..l.len() {
+                            let key = (l[i].0.min(l[j].0), l[i].0.max(l[j].0));
+                            assert!(seen.insert(key), "pair {key:?} twice");
+                        }
+                    }
+                } else {
+                    for &a in l {
+                        for &b in r {
+                            let key = (a.0.min(b.0), a.0.max(b.0));
+                            assert!(seen.insert(key), "pair {key:?} twice");
+                        }
+                    }
+                }
+            }
+            assert_eq!(seen.len(), n * (n - 1) / 2, "all pairs covered");
+        });
+    }
+
+    fn make_blocks(sizes: &[(&str, usize)], misc: usize) -> Blocks {
+        let mut b = Blocks::new();
+        let mut next = 0u32;
+        for (key, n) in sizes {
+            for _ in 0..*n {
+                b.add(key, EntityId(next));
+                next += 1;
+            }
+        }
+        for _ in 0..misc {
+            b.add_misc(EntityId(next));
+            next += 1;
+        }
+        b
+    }
+
+    /// Figure 3 (right): 12 match tasks for the tuned example.
+    #[test]
+    fn figure3_task_generation() {
+        let blocks = make_blocks(
+            &[
+                ("3.5-drive", 1300),
+                ("2.5-drive", 700),
+                ("dvd-rw", 400),
+                ("blu-ray", 200),
+                ("hd-dvd", 200),
+                ("cd-rw", 200),
+            ],
+            600,
+        );
+        let ps = tune(&blocks, TuningConfig::new(700, 210));
+        let tasks = generate_tasks(&ps);
+        // 1 (2.5) + 1 (dvd-rw) + 1 (aggregate) + 3 (split 3.5: 2 subs)
+        // + 6 (misc × 5 partitions + misc itself) = 12
+        assert_eq!(tasks.len(), 12);
+        // no duplicate tasks
+        let set: HashSet<(PartitionId, PartitionId)> = tasks
+            .iter()
+            .map(|t| {
+                (t.left.min(t.right), t.left.max(t.right))
+            })
+            .collect();
+        assert_eq!(set.len(), 12);
+    }
+
+    #[test]
+    fn split_block_task_count() {
+        // k sub-partitions → k + k(k-1)/2 tasks
+        let blocks = make_blocks(&[("big", 3000)], 0);
+        let ps = tune(&blocks, TuningConfig::new(700, 1));
+        let k = ps.len(); // 3000/700 → 5 subs
+        assert_eq!(k, 5);
+        let tasks = generate_tasks(&ps);
+        assert_eq!(tasks.len(), k + k * (k - 1) / 2);
+    }
+
+    /// Blocking-semantics coverage: every same-block pair and every
+    /// misc×anything pair is covered at least once; nothing outside
+    /// block∪aggregate∪misc relationships is compared... except pairs
+    /// *introduced* by aggregation (allowed by the paper, traded in Fig 7).
+    #[test]
+    fn prop_blocking_pairs_covered() {
+        forall("blocking-cover", 30, |rng| {
+            let n_blocks = 1 + rng.gen_range(8);
+            let names: Vec<String> =
+                (0..n_blocks).map(|i| format!("b{i}")).collect();
+            let sizes: Vec<(&str, usize)> = names
+                .iter()
+                .map(|n| (n.as_str(), 1 + rng.gen_range(60)))
+                .collect();
+            let misc = rng.gen_range(30);
+            let blocks = make_blocks(&sizes, misc);
+            let max_size = 10 + rng.gen_range(50);
+            let min_size = rng.gen_range(max_size);
+            let ps = tune(&blocks, TuningConfig::new(max_size, min_size));
+            let tasks = generate_tasks(&ps);
+
+            // pairs covered by the generated tasks (dedupe across tasks —
+            // misc×sibling overlaps cannot occur, checked below)
+            let mut covered: HashSet<(u32, u32)> = HashSet::new();
+            let mut task_keys: HashSet<(PartitionId, PartitionId)> =
+                HashSet::new();
+            for t in &tasks {
+                assert!(
+                    task_keys.insert((
+                        t.left.min(t.right),
+                        t.left.max(t.right)
+                    )),
+                    "duplicate task"
+                );
+                let l = &ps.get(t.left).entities;
+                let r = &ps.get(t.right).entities;
+                if t.left == t.right {
+                    for i in 0..l.len() {
+                        for j in (i + 1)..l.len() {
+                            covered.insert((
+                                l[i].0.min(l[j].0),
+                                l[i].0.max(l[j].0),
+                            ));
+                        }
+                    }
+                } else {
+                    for &a in l {
+                        for &b in r {
+                            assert_ne!(a, b, "entity paired with itself");
+                            covered.insert((a.0.min(b.0), a.0.max(b.0)));
+                        }
+                    }
+                }
+            }
+
+            // required: same-original-block pairs
+            for (_, ids) in blocks.iter() {
+                for i in 0..ids.len() {
+                    for j in (i + 1)..ids.len() {
+                        let key =
+                            (ids[i].0.min(ids[j].0), ids[i].0.max(ids[j].0));
+                        assert!(
+                            covered.contains(&key),
+                            "same-block pair lost"
+                        );
+                    }
+                }
+            }
+            // required: misc × everything
+            let all_ids: Vec<u32> = (0..blocks.total_entities() as u32).collect();
+            for &m in blocks.misc() {
+                for &other in &all_ids {
+                    if other == m.0 {
+                        continue;
+                    }
+                    let key = (m.0.min(other), m.0.max(other));
+                    assert!(covered.contains(&key), "misc pair lost");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn two_sources_cartesian_counts() {
+        let a = partition_size_based(&ids(1000), 500); // 2 parts
+        let b = partition_size_based(&ids(1500), 500); // 3 parts
+        let tasks = generate_tasks_two_sources_cartesian(&a, &b);
+        assert_eq!(tasks.len(), 6); // m*n, vs (m+n)(m+n-1)/2+5=15 combined
+    }
+
+    #[test]
+    fn two_sources_blocked_matches_corresponding() {
+        let blocks_a = make_blocks(&[("x", 50), ("y", 30)], 10);
+        let blocks_b = make_blocks(&[("x", 40), ("z", 20)], 5);
+        let pa = tune(&blocks_a, TuningConfig::new(100, 1));
+        let pb = tune(&blocks_b, TuningConfig::new(100, 1));
+        let tasks = generate_tasks_two_sources_blocked(&pa, &pb);
+        // x↔x (1) + miscA×all B (3) + miscB×non-misc A (2) = 6
+        assert_eq!(tasks.len(), 6);
+    }
+
+    #[test]
+    fn misc_sub_partitions_pair_with_each_other() {
+        let blocks = make_blocks(&[("a", 100)], 1500);
+        let ps = tune(&blocks, TuningConfig::new(700, 1));
+        let tasks = generate_tasks(&ps);
+        // partitions: a + 3 misc subs. tasks: 1 (a) + misc: each self (3)
+        // + misc-misc pairs (3) + each misc × a (3) = 10
+        assert_eq!(tasks.len(), 10);
+    }
+}

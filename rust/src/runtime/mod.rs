@@ -1,0 +1,342 @@
+//! The PJRT runtime: loads the AOT-compiled match executables and runs
+//! them from the Layer-3 hot path.
+//!
+//! `make artifacts` (python, build-time only) lowers each match strategy
+//! to HLO **text** per partition-capacity variant and writes
+//! `artifacts/manifest.txt`.  This module:
+//!
+//! 1. parses the manifest ([`Manifest`]);
+//! 2. compiles each needed artifact once on a `PjRtClient::cpu()` and
+//!    caches the loaded executable ([`MatchEngine`]);
+//! 3. exposes [`PjrtExecutor`] — a [`TaskExecutor`] that marshals the two
+//!    partitions' hashed-q-gram feature matrices into `xla::Literal`s,
+//!    executes the `f32[M,M]`-combined-similarity module, and extracts
+//!    correspondences above the decision threshold.
+//!
+//! Python never runs at match time: the artifacts are self-contained HLO.
+
+pub mod vmem;
+
+use crate::features::DEFAULT_DIM;
+use crate::matching::{MatchStrategy, StrategyKind};
+use crate::model::Correspondence;
+use crate::store::PartitionData;
+use crate::worker::TaskExecutor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// One artifact entry from `manifest.txt`:
+/// `name strategy capacity feature_dim n_params`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub strategy: StrategyKind,
+    pub capacity: usize,
+    pub feature_dim: usize,
+    pub n_params: usize,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 5 {
+                bail!("manifest line {}: want 5 fields, got {}", lineno + 1, parts.len());
+            }
+            entries.push(ArtifactEntry {
+                name: parts[0].to_string(),
+                strategy: StrategyKind::parse(parts[1])
+                    .ok_or_else(|| anyhow!("unknown strategy {:?}", parts[1]))?,
+                capacity: parts[2].parse()?,
+                feature_dim: parts[3].parse()?,
+                n_params: parts[4].parse()?,
+            });
+        }
+        Ok(Manifest {
+            entries,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Smallest-capacity artifact for `strategy` that fits `n` rows.
+    pub fn pick(&self, strategy: StrategyKind, n: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.strategy == strategy && e.capacity >= n)
+            .min_by_key(|e| e.capacity)
+    }
+
+    pub fn artifact_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.name)
+    }
+}
+
+/// Default artifacts directory: `$PEM_ARTIFACTS` or `./artifacts`
+/// relative to the workspace root.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("PEM_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // try workspace-relative candidates (cwd may be rust/ under cargo)
+    for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+        let p = PathBuf::from(cand);
+        if p.join("manifest.txt").exists() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// A compiled match executable (one artifact on one PJRT client).
+struct LoadedExec {
+    exe: xla::PjRtLoadedExecutable,
+    capacity: usize,
+    feature_dim: usize,
+}
+
+/// PJRT client + compile cache for the match executables.
+///
+/// The xla crate's handles are not `Sync`; the engine serializes
+/// compilation and execution behind one mutex (one executable runs at a
+/// time per engine — use one engine per match service for parallelism).
+pub struct MatchEngine {
+    manifest: Manifest,
+    inner: Mutex<EngineInner>,
+}
+
+struct EngineInner {
+    client: xla::PjRtClient,
+    cache: HashMap<String, LoadedExec>,
+}
+
+// SAFETY: all access to the non-Sync xla handles goes through the mutex.
+unsafe impl Send for MatchEngine {}
+unsafe impl Sync for MatchEngine {}
+
+impl MatchEngine {
+    /// Create a CPU PJRT engine over the given artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<MatchEngine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(MatchEngine {
+            manifest,
+            inner: Mutex::new(EngineInner {
+                client,
+                cache: HashMap::new(),
+            }),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute one match task on the accelerated path.
+    ///
+    /// Marshals both partitions' (title, description) feature matrices
+    /// padded to the chosen artifact capacity, executes, and returns the
+    /// dense `capacity × capacity` combined-similarity matrix (row-major;
+    /// entries past the real row counts are zero by construction).
+    pub fn run_pair(
+        &self,
+        strategy: StrategyKind,
+        params: [f32; 4],
+        left: &PartitionData,
+        right: &PartitionData,
+    ) -> Result<(Vec<f32>, usize)> {
+        let n = left.len().max(right.len());
+        let entry = self
+            .manifest
+            .pick(strategy, n)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for {} with capacity >= {n}",
+                    strategy.name()
+                )
+            })?
+            .clone();
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.cache.contains_key(&entry.name) {
+            let path = self.manifest.artifact_path(&entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().expect("utf8 path"),
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", entry.name))?;
+            inner.cache.insert(
+                entry.name.clone(),
+                LoadedExec {
+                    exe,
+                    capacity: entry.capacity,
+                    feature_dim: entry.feature_dim,
+                },
+            );
+        }
+        let le = &inner.cache[&entry.name];
+        let (cap, dim) = (le.capacity, le.feature_dim);
+
+        let (a_title, a_desc) = left.feature_matrices(cap, dim);
+        let (b_title, b_desc) = right.feature_matrices(cap, dim);
+        let lit = |m: &crate::features::FeatureMatrix| -> Result<xla::Literal> {
+            xla::Literal::vec1(&m.data)
+                .reshape(&[cap as i64, dim as i64])
+                .map_err(|e| anyhow!("reshape: {e:?}"))
+        };
+        let params_lit = xla::Literal::vec1(&params);
+        let inputs = [
+            lit(&a_title)?,
+            lit(&a_desc)?,
+            lit(&b_title)?,
+            lit(&b_desc)?,
+            params_lit,
+        ];
+        let result = le
+            .exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        let values = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        debug_assert_eq!(values.len(), cap * cap);
+        Ok((values, cap))
+    }
+}
+
+/// [`TaskExecutor`] over the accelerated PJRT path.
+pub struct PjrtExecutor {
+    engine: std::sync::Arc<MatchEngine>,
+    pub strategy: MatchStrategy,
+}
+
+impl PjrtExecutor {
+    pub fn new(
+        engine: std::sync::Arc<MatchEngine>,
+        strategy: MatchStrategy,
+    ) -> PjrtExecutor {
+        PjrtExecutor { engine, strategy }
+    }
+}
+
+impl TaskExecutor for PjrtExecutor {
+    fn execute(
+        &self,
+        left: &PartitionData,
+        right: &PartitionData,
+        intra: bool,
+    ) -> Vec<Correspondence> {
+        let (sims, cap) = self
+            .engine
+            .run_pair(
+                self.strategy.kind,
+                self.strategy.params.values,
+                left,
+                right,
+            )
+            .expect("PJRT execution failed");
+        let threshold = self.strategy.threshold as f32;
+        let mut out = Vec::new();
+        for i in 0..left.len() {
+            let row = &sims[i * cap..i * cap + right.len()];
+            let j0 = if intra { i + 1 } else { 0 };
+            for (j, &sim) in row.iter().enumerate().skip(j0) {
+                if sim >= threshold && left.entities[i] != right.entities[j]
+                {
+                    out.push(Correspondence::new(
+                        left.entities[i],
+                        right.entities[j],
+                        sim,
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Feature dimension consistency check (Rust ↔ aot.py).
+pub fn expected_feature_dim() -> usize {
+    DEFAULT_DIM
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parse_and_pick() {
+        let text = "\
+# comment
+wam_m128_d256.hlo.txt wam 128 256 4
+wam_m512_d256.hlo.txt wam 512 256 4
+lrm_m128_d256.hlo.txt lrm 128 256 4
+";
+        let m = Manifest::parse(text, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        assert_eq!(
+            m.pick(StrategyKind::Wam, 100).unwrap().capacity,
+            128
+        );
+        assert_eq!(
+            m.pick(StrategyKind::Wam, 200).unwrap().capacity,
+            512
+        );
+        assert!(m.pick(StrategyKind::Wam, 1000).is_none());
+        assert_eq!(
+            m.pick(StrategyKind::Lrm, 1).unwrap().name,
+            "lrm_m128_d256.hlo.txt"
+        );
+        assert_eq!(
+            m.artifact_path(&m.entries[0]),
+            Path::new("/tmp/a/wam_m128_d256.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(Manifest::parse("one two", Path::new(".")).is_err());
+        assert!(
+            Manifest::parse("x svm 128 256 4", Path::new(".")).is_err()
+        );
+    }
+
+    #[test]
+    fn dim_constant_matches_features() {
+        assert_eq!(expected_feature_dim(), 256);
+    }
+}

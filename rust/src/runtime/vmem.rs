@@ -1,0 +1,106 @@
+//! Structural TPU performance estimates for the Layer-1 Pallas kernel.
+//!
+//! Mirrors `python/compile/kernels/similarity.py` (`vmem_footprint_bytes`,
+//! `mxu_utilization_estimate`): the kernel runs under `interpret=True` on
+//! CPU, so real-TPU numbers are *estimated* from the BlockSpec schedule —
+//! peak VMEM per grid step and the MXU occupancy of the dot tile.  The
+//! §Perf section of EXPERIMENTS.md sweeps these for candidate tiles.
+
+/// Peak VMEM bytes for one grid step of the similarity kernel (f32):
+/// two input strips + the broadcast-min intermediate + two output tiles.
+pub fn vmem_footprint_bytes(tile_m: usize, tile_n: usize, d: usize) -> u64 {
+    let strips = (tile_m + tile_n) * d;
+    let broadcast = tile_m * tile_n * d;
+    let outs = 2 * tile_m * tile_n;
+    4 * (strips + broadcast + outs) as u64
+}
+
+/// Fraction of a 128×128 MXU the dot tile keeps busy (structural).
+pub fn mxu_utilization_estimate(tile_m: usize, tile_n: usize, d: usize) -> f64 {
+    let eff = |x: usize| (x.min(128) as f64) / 128.0;
+    eff(tile_m) * eff(tile_n) * eff(d)
+}
+
+/// HBM traffic (bytes) to produce an `m × n` stats matrix with the tiled
+/// schedule vs. the naive broadcast materialization — the kernel's whole
+/// point (DESIGN.md §Hardware-Adaptation).
+pub fn hbm_traffic_tiled(m: usize, n: usize, d: usize, tile_m: usize, tile_n: usize) -> u64 {
+    // every output tile re-reads one (tile_m × d) strip of A and one
+    // (tile_n × d) strip of B, and writes two (tile_m × tile_n) tiles
+    let tiles = (m.div_ceil(tile_m)) * (n.div_ceil(tile_n));
+    let per_tile = (tile_m + tile_n) * d + 2 * tile_m * tile_n;
+    4 * (tiles * per_tile) as u64
+}
+
+pub fn hbm_traffic_naive(m: usize, n: usize, d: usize) -> u64 {
+    // materializing the broadcast-min intermediate costs m·n·d
+    4 * (m * n * d + 2 * m * n) as u64
+}
+
+/// A candidate BlockSpec with its estimates — for the §Perf sweep table.
+#[derive(Clone, Copy, Debug)]
+pub struct TileEstimate {
+    pub tile_m: usize,
+    pub tile_n: usize,
+    pub d: usize,
+    pub vmem_bytes: u64,
+    pub mxu_utilization: f64,
+    pub fits_vmem_16mib: bool,
+}
+
+pub fn estimate(tile_m: usize, tile_n: usize, d: usize) -> TileEstimate {
+    let vmem = vmem_footprint_bytes(tile_m, tile_n, d);
+    TileEstimate {
+        tile_m,
+        tile_n,
+        d,
+        vmem_bytes: vmem,
+        mxu_utilization: mxu_utilization_estimate(tile_m, tile_n, d),
+        fits_vmem_16mib: vmem <= 16 * crate::util::MIB,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::MIB;
+
+    #[test]
+    fn matches_python_formulas() {
+        // values cross-checked against python/tests/test_kernel.py
+        assert_eq!(
+            vmem_footprint_bytes(32, 32, 256),
+            4 * ((32 + 32) * 256 + 32 * 32 * 256 + 2 * 32 * 32)
+        );
+        assert!((mxu_utilization_estimate(128, 128, 128) - 1.0).abs() < 1e-12);
+        assert!(mxu_utilization_estimate(32, 32, 256) < 1.0);
+    }
+
+    #[test]
+    fn default_tile_fits_vmem() {
+        let e = estimate(32, 32, 256);
+        assert!(e.fits_vmem_16mib);
+        assert!(e.vmem_bytes < 4 * MIB);
+    }
+
+    #[test]
+    fn tiled_beats_naive_traffic_at_scale() {
+        let tiled = hbm_traffic_tiled(1024, 1024, 256, 32, 32);
+        let naive = hbm_traffic_naive(1024, 1024, 256);
+        assert!(
+            tiled < naive,
+            "tiled {tiled} should be < naive {naive}"
+        );
+    }
+
+    #[test]
+    fn bigger_tiles_less_traffic_more_vmem() {
+        let small = estimate(16, 16, 256);
+        let big = estimate(64, 64, 256);
+        assert!(big.vmem_bytes > small.vmem_bytes);
+        assert!(
+            hbm_traffic_tiled(512, 512, 256, 64, 64)
+                < hbm_traffic_tiled(512, 512, 256, 16, 16)
+        );
+    }
+}

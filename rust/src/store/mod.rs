@@ -1,0 +1,202 @@
+//! The data service (paper §4): central store for input partitions.
+//!
+//! Holds, per partition, the precomputed per-entity match features (and
+//! lazily, the padded feature matrices for the accelerated PJRT path).
+//! Match services fetch partitions from here; every fetch is accounted so
+//! the engines can charge network cost and report communication overhead.
+
+use crate::features::{EntityFeatures, FeatureMatrix};
+use crate::model::{Dataset, EntityId};
+use crate::net::TrafficStats;
+use crate::partition::{PartitionId, PartitionSet};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// The transferable payload of one partition: entity ids + features.
+#[derive(Debug)]
+pub struct PartitionData {
+    pub id: PartitionId,
+    pub entities: Vec<EntityId>,
+    pub features: Vec<EntityFeatures>,
+    /// Serialized size estimate (bytes) for the network cost model.
+    pub approx_bytes: u64,
+}
+
+impl PartitionData {
+    pub fn len(&self) -> usize {
+        self.entities.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entities.is_empty()
+    }
+
+    /// Assemble the padded title/description feature matrices for the
+    /// accelerated path (`f32[capacity, dim]`, zero-padded).
+    pub fn feature_matrices(&self, capacity: usize, dim: usize) -> (FeatureMatrix, FeatureMatrix) {
+        let titles: Vec<&crate::features::QGramSet> =
+            self.features.iter().map(|f| &f.title_grams).collect();
+        let descs: Vec<&crate::features::QGramSet> =
+            self.features.iter().map(|f| &f.desc_grams).collect();
+        (
+            FeatureMatrix::from_qgrams(&titles, capacity, dim),
+            FeatureMatrix::from_qgrams(&descs, capacity, dim),
+        )
+    }
+}
+
+/// Central data service.  Thread-safe; fetches return `Arc`s so cached
+/// copies are shared, not cloned.
+pub struct DataService {
+    partitions: HashMap<PartitionId, Arc<PartitionData>>,
+    pub traffic: TrafficStats,
+    fetch_log: Mutex<Vec<PartitionId>>,
+}
+
+impl DataService {
+    /// Build the store: precompute features for every entity once, then
+    /// materialize each partition's payload.
+    pub fn build(dataset: &Dataset, parts: &PartitionSet) -> DataService {
+        let all_features: Vec<EntityFeatures> = dataset
+            .entities
+            .iter()
+            .map(|e| EntityFeatures::of(e, dataset))
+            .collect();
+        let mut partitions = HashMap::new();
+        for p in parts.iter() {
+            let features: Vec<EntityFeatures> = p
+                .entities
+                .iter()
+                .map(|id| all_features[id.0 as usize].clone())
+                .collect();
+            let approx_bytes = features
+                .iter()
+                .map(|f| f.approx_bytes() as u64)
+                .sum::<u64>()
+                + 8 * p.entities.len() as u64;
+            partitions.insert(
+                p.id,
+                Arc::new(PartitionData {
+                    id: p.id,
+                    entities: p.entities.clone(),
+                    features,
+                    approx_bytes,
+                }),
+            );
+        }
+        DataService {
+            partitions,
+            traffic: TrafficStats::new(),
+            fetch_log: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Fetch a partition (counts as one data-service access — a *cache
+    /// miss* on the match-service side).
+    pub fn fetch(&self, id: PartitionId) -> Arc<PartitionData> {
+        let data = self
+            .partitions
+            .get(&id)
+            .unwrap_or_else(|| panic!("unknown partition {id}"))
+            .clone();
+        self.traffic.record(data.approx_bytes);
+        self.fetch_log.lock().unwrap().push(id);
+        data
+    }
+
+    /// Size of a partition payload without fetching (the simulator charges
+    /// transfer time from this).
+    pub fn payload_bytes(&self, id: PartitionId) -> u64 {
+        self.partitions
+            .get(&id)
+            .unwrap_or_else(|| panic!("unknown partition {id}"))
+            .approx_bytes
+    }
+
+    pub fn n_partitions(&self) -> usize {
+        self.partitions.len()
+    }
+
+    pub fn fetches(&self) -> usize {
+        self.fetch_log.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::GeneratorConfig;
+    use crate::features::DEFAULT_DIM;
+    use crate::partition::partition_size_based;
+
+    fn setup() -> (crate::datagen::GeneratedData, PartitionSet) {
+        let data = GeneratorConfig::tiny().generate();
+        let ids: Vec<EntityId> =
+            data.dataset.entities.iter().map(|e| e.id).collect();
+        let ps = partition_size_based(&ids, 100);
+        (data, ps)
+    }
+
+    #[test]
+    fn build_covers_all_partitions() {
+        let (data, ps) = setup();
+        let store = DataService::build(&data.dataset, &ps);
+        assert_eq!(store.n_partitions(), ps.len());
+        for p in ps.iter() {
+            let d = store.fetch(p.id);
+            assert_eq!(d.len(), p.len());
+            assert_eq!(d.entities, p.entities);
+            assert_eq!(d.features.len(), p.len());
+        }
+    }
+
+    #[test]
+    fn fetch_accounting() {
+        let (data, ps) = setup();
+        let store = DataService::build(&data.dataset, &ps);
+        let id = ps.iter().next().unwrap().id;
+        let before = store.traffic.total_bytes();
+        store.fetch(id);
+        store.fetch(id);
+        assert_eq!(store.fetches(), 2);
+        assert_eq!(
+            store.traffic.total_bytes() - before,
+            2 * store.payload_bytes(id)
+        );
+    }
+
+    #[test]
+    fn payload_bytes_positive_and_scales() {
+        let (data, ps) = setup();
+        let store = DataService::build(&data.dataset, &ps);
+        let mut sizes: Vec<(usize, u64)> = ps
+            .iter()
+            .map(|p| (p.len(), store.payload_bytes(p.id)))
+            .collect();
+        sizes.sort();
+        assert!(sizes[0].1 > 0);
+        // payload grows with entity count (same generator distribution)
+        assert!(sizes[sizes.len() - 1].1 >= sizes[0].1);
+    }
+
+    #[test]
+    fn feature_matrices_shapes() {
+        let (data, ps) = setup();
+        let store = DataService::build(&data.dataset, &ps);
+        let p = ps.iter().next().unwrap();
+        let d = store.fetch(p.id);
+        let (t, desc) = d.feature_matrices(128, DEFAULT_DIM);
+        assert_eq!(t.capacity, 128);
+        assert_eq!(t.rows, p.len());
+        assert_eq!(t.dim, DEFAULT_DIM);
+        assert_eq!(desc.data.len(), 128 * DEFAULT_DIM);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_partition_panics() {
+        let (data, ps) = setup();
+        let store = DataService::build(&data.dataset, &ps);
+        store.fetch(PartitionId(9999));
+    }
+}

@@ -1,0 +1,190 @@
+//! Minimal command-line argument parser (std-only replacement for clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments; typed accessors with defaults.  Enough for the `pem`
+//! binary, the examples and the benches.
+//!
+//! Grammar note: `--name token` is parsed as an option with value
+//! `token` whenever `token` does not itself start with `--`.  Boolean
+//! flags must therefore appear last, before another `--option`, or be
+//! written as `--name=true`.
+
+use std::collections::HashMap;
+use std::fmt::Display;
+use std::str::FromStr;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub program: String,
+    positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("cannot parse --{key} value {value:?}: {msg}")]
+    BadValue {
+        key: String,
+        value: String,
+        msg: String,
+    },
+}
+
+impl Args {
+    /// Parse from `std::env::args()`.
+    pub fn from_env() -> Result<Args, CliError> {
+        let mut it = std::env::args();
+        let program = it.next().unwrap_or_default();
+        Self::parse(program, it.collect())
+    }
+
+    /// Parse from an explicit vector (testable).
+    pub fn parse(program: String, argv: Vec<String>) -> Result<Args, CliError> {
+        let mut args = Args {
+            program,
+            ..Default::default()
+        };
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--")
+                {
+                    args.options
+                        .insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self
+                .options
+                .get(name)
+                .is_some_and(|v| v == "true" || v == "1")
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn get_str(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get_str(name).unwrap_or(default)
+    }
+
+    /// Typed option with a default.
+    pub fn get_or<T>(&self, name: &str, default: T) -> Result<T, CliError>
+    where
+        T: FromStr,
+        T::Err: Display,
+    {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e: T::Err| CliError::BadValue {
+                key: name.to_string(),
+                value: v.clone(),
+                msg: e.to_string(),
+            }),
+        }
+    }
+
+    /// Comma-separated typed list option.
+    pub fn get_list<T>(&self, name: &str, default: &[T]) -> Result<Vec<T>, CliError>
+    where
+        T: FromStr + Clone,
+        T::Err: Display,
+    {
+        match self.options.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().map_err(|e: T::Err| CliError::BadValue {
+                        key: name.to_string(),
+                        value: p.to_string(),
+                        msg: e.to_string(),
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(argv: &[&str]) -> Args {
+        Args::parse(
+            "pem".into(),
+            argv.iter().map(|s| s.to_string()).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = parse(&["--seed", "42", "--nodes=4"]);
+        assert_eq!(a.get_or("seed", 0u64).unwrap(), 42);
+        assert_eq!(a.get_or("nodes", 1usize).unwrap(), 4);
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        // flags come last or use `=` form — `--verbose input.csv` would
+        // parse as an option (documented ambiguity of the grammar)
+        let a = parse(&["run", "input.csv", "--verbose"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.positional(), &["run", "input.csv"]);
+        let b = parse(&["run", "--verbose=true", "input.csv"]);
+        assert!(b.flag("verbose"));
+        assert_eq!(b.positional(), &["run", "input.csv"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("threads", 4usize).unwrap(), 4);
+        assert_eq!(a.str_or("strategy", "wam"), "wam");
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let a = parse(&["--threads", "many"]);
+        assert!(a.get_or("threads", 1usize).is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["--cores", "1,2,4,8"]);
+        assert_eq!(
+            a.get_list("cores", &[16usize]).unwrap(),
+            vec![1, 2, 4, 8]
+        );
+        assert_eq!(a.get_list("other", &[16usize]).unwrap(), vec![16]);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["--cache"]);
+        assert!(a.flag("cache"));
+    }
+}

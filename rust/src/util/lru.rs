@@ -1,0 +1,207 @@
+//! LRU cache (std-only replacement for the `lru` crate).
+//!
+//! Backs the match services' partition caches (paper §4: “caches are
+//! managed according to a LRU replacement strategy”).  Capacity is counted
+//! in *entries* (the paper configures caches as “maximal number of cached
+//! partitions c”).
+//!
+//! Implementation: `HashMap` + monotone access stamps. `O(capacity)` scan
+//! on eviction — capacities here are tiny (the paper uses c = 16), so the
+//! simplicity beats a doubly-linked-list intrusive design.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+#[derive(Debug)]
+pub struct LruCache<K, V> {
+    capacity: usize,
+    tick: u64,
+    map: HashMap<K, (V, u64)>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
+    /// `capacity == 0` disables the cache (every lookup misses, nothing is
+    /// stored) — this is the paper's `c = 0` configuration.
+    pub fn new(capacity: usize) -> Self {
+        LruCache {
+            capacity,
+            tick: 0,
+            map: HashMap::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Look up a key, refreshing its recency on hit.  Counts hit/miss.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(key) {
+            Some((v, stamp)) => {
+                *stamp = tick;
+                self.hits += 1;
+                Some(v)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Check presence without touching recency or stats (used by the
+    /// workflow service's approximate cache-status bookkeeping).
+    pub fn contains(&self, key: &K) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Insert, evicting the least-recently-used entry when full.
+    /// Returns the evicted pair, if any.
+    pub fn put(&mut self, key: K, value: V) -> Option<(K, V)> {
+        if self.capacity == 0 {
+            return None;
+        }
+        self.tick += 1;
+        if self.map.contains_key(&key) {
+            self.map.insert(key, (value, self.tick));
+            return None;
+        }
+        let mut evicted = None;
+        if self.map.len() >= self.capacity {
+            // O(n) scan for the oldest stamp; n <= capacity (tiny).
+            let oldest = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty map");
+            let (v, _) = self.map.remove(&oldest).unwrap();
+            self.evictions += 1;
+            evicted = Some((oldest, v));
+        }
+        self.map.insert(key, (value, self.tick));
+        evicted
+    }
+
+    /// Current key set (cache-status report piggybacked on task results).
+    pub fn keys(&self) -> Vec<K> {
+        self.map.keys().cloned().collect()
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Hit ratio over all `get` calls so far (paper's `hr` metric).
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_hit_miss() {
+        let mut c = LruCache::new(2);
+        assert!(c.get(&1).is_none());
+        c.put(1, "a");
+        assert_eq!(c.get(&1), Some(&"a"));
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+        assert!((c.hit_ratio() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = LruCache::new(2);
+        c.put(1, 10);
+        c.put(2, 20);
+        c.get(&1); // 2 is now LRU
+        let evicted = c.put(3, 30);
+        assert_eq!(evicted, Some((2, 20)));
+        assert!(c.contains(&1) && c.contains(&3) && !c.contains(&2));
+    }
+
+    #[test]
+    fn reinsert_refreshes_recency() {
+        let mut c = LruCache::new(2);
+        c.put(1, 10);
+        c.put(2, 20);
+        c.put(1, 11); // refresh 1; 2 becomes LRU
+        let evicted = c.put(3, 30);
+        assert_eq!(evicted, Some((2, 20)));
+        assert_eq!(c.get(&1), Some(&11));
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut c = LruCache::new(0);
+        assert!(c.put(1, 1).is_none());
+        assert!(c.get(&1).is_none());
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn never_exceeds_capacity() {
+        let mut c = LruCache::new(16);
+        for i in 0..1000 {
+            c.put(i, i);
+            assert!(c.len() <= 16);
+        }
+        assert_eq!(c.evictions(), 1000 - 16);
+    }
+
+    #[test]
+    fn contains_does_not_count_stats() {
+        let mut c = LruCache::new(4);
+        c.put(1, 1);
+        assert!(c.contains(&1));
+        assert!(!c.contains(&2));
+        assert_eq!(c.hits() + c.misses(), 0);
+    }
+
+    #[test]
+    fn keys_reports_cached_set() {
+        let mut c = LruCache::new(3);
+        c.put(5, ());
+        c.put(7, ());
+        let mut ks = c.keys();
+        ks.sort_unstable();
+        assert_eq!(ks, vec![5, 7]);
+    }
+}

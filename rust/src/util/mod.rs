@@ -1,0 +1,114 @@
+//! Std-only utility layer.
+//!
+//! The build environment is fully offline and only the crates vendored for
+//! the `xla` bridge are available, so the usual ecosystem helpers (rand,
+//! lru, serde, clap, criterion, proptest) are re-implemented here in the
+//! small form this crate needs.
+
+pub mod cli;
+pub mod lru;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use lru::LruCache;
+pub use rng::{Rng, Zipf};
+
+/// One kibibyte/mebibyte/gibibyte in bytes.
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * KIB;
+pub const GIB: u64 = 1024 * MIB;
+
+/// FNV-1a 64-bit hash — the deterministic string hash used everywhere
+/// (feature hashing, canopy seeds).  Stable across runs and platforms,
+/// unlike `std::collections::hash_map::DefaultHasher`.
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Ceiling division for positive integers.
+#[inline]
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    assert!(b > 0, "div_ceil by zero");
+    a.div_ceil(b)
+}
+
+/// Format a byte count human-readably (for reports).
+pub fn fmt_bytes(bytes: u64) -> String {
+    if bytes >= GIB {
+        format!("{:.2} GiB", bytes as f64 / GIB as f64)
+    } else if bytes >= MIB {
+        format!("{:.2} MiB", bytes as f64 / MIB as f64)
+    } else if bytes >= KIB {
+        format!("{:.2} KiB", bytes as f64 / KIB as f64)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Format a virtual-time duration given in nanoseconds.
+pub fn fmt_nanos(ns: u64) -> String {
+    let s = ns as f64 / 1e9;
+    if s >= 3600.0 {
+        format!("{:.1} h", s / 3600.0)
+    } else if s >= 60.0 {
+        format!("{:.1} min", s / 60.0)
+    } else if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if ns >= 1_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns} ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        // Reference values for FNV-1a 64.
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fnv1a_deterministic_and_spread() {
+        assert_eq!(fnv1a(b"samsung"), fnv1a(b"samsung"));
+        assert_ne!(fnv1a(b"samsung"), fnv1a(b"samsunh"));
+    }
+
+    #[test]
+    fn div_ceil_basics() {
+        assert_eq!(div_ceil(0, 4), 0);
+        assert_eq!(div_ceil(1, 4), 1);
+        assert_eq!(div_ceil(4, 4), 1);
+        assert_eq!(div_ceil(5, 4), 2);
+        assert_eq!(div_ceil(114_000, 500), 228);
+    }
+
+    #[test]
+    #[should_panic]
+    fn div_ceil_zero_divisor_panics() {
+        div_ceil(1, 0);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2 * MIB), "2.00 MiB");
+        assert_eq!(fmt_nanos(500), "500 ns");
+        assert_eq!(fmt_nanos(90 * 1_000_000_000), "1.5 min");
+        assert_eq!(fmt_nanos(2 * 3600 * 1_000_000_000), "2.0 h");
+    }
+}

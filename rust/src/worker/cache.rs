@@ -1,0 +1,126 @@
+//! The per-match-service partition cache (paper §4).
+//!
+//! Each match service temporarily stores fetched entity partitions in an
+//! LRU cache shared by all of its match threads; capacity is configured
+//! as a maximum number of partitions `c` (`c = 0` disables caching).
+
+use crate::partition::PartitionId;
+use crate::store::PartitionData;
+use crate::util::LruCache;
+use std::sync::{Arc, Mutex};
+
+/// Thread-safe partition cache.
+pub struct PartitionCache {
+    inner: Mutex<LruCache<PartitionId, Arc<PartitionData>>>,
+}
+
+impl PartitionCache {
+    pub fn new(capacity: usize) -> PartitionCache {
+        PartitionCache {
+            inner: Mutex::new(LruCache::new(capacity)),
+        }
+    }
+
+    /// Look up a partition; counts a hit or miss.
+    pub fn get(&self, id: PartitionId) -> Option<Arc<PartitionData>> {
+        self.inner.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Store a fetched partition.
+    pub fn put(&self, id: PartitionId, data: Arc<PartitionData>) {
+        self.inner.lock().unwrap().put(id, data);
+    }
+
+    /// Cached partition ids — piggybacked on task-completion reports so
+    /// the workflow service can maintain its approximate cache status
+    /// without extra messages (paper §4).
+    pub fn status(&self) -> Vec<PartitionId> {
+        self.inner.lock().unwrap().keys()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.inner.lock().unwrap().hits()
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.inner.lock().unwrap().misses()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.lock().unwrap().capacity()
+    }
+
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().clear()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::EntityId;
+
+    fn dummy(id: u32) -> Arc<PartitionData> {
+        Arc::new(PartitionData {
+            id: PartitionId(id),
+            entities: vec![EntityId(id)],
+            features: vec![],
+            approx_bytes: 100,
+        })
+    }
+
+    #[test]
+    fn caches_and_reports_status() {
+        let c = PartitionCache::new(2);
+        assert!(c.get(PartitionId(1)).is_none());
+        c.put(PartitionId(1), dummy(1));
+        assert!(c.get(PartitionId(1)).is_some());
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+        let mut st = c.status();
+        st.sort();
+        assert_eq!(st, vec![PartitionId(1)]);
+    }
+
+    #[test]
+    fn lru_eviction_via_shared_cache() {
+        let c = PartitionCache::new(2);
+        c.put(PartitionId(1), dummy(1));
+        c.put(PartitionId(2), dummy(2));
+        c.get(PartitionId(1));
+        c.put(PartitionId(3), dummy(3)); // evicts 2
+        assert!(c.get(PartitionId(2)).is_none());
+        assert!(c.get(PartitionId(1)).is_some());
+        assert!(c.get(PartitionId(3)).is_some());
+    }
+
+    #[test]
+    fn zero_capacity_disabled() {
+        let c = PartitionCache::new(0);
+        c.put(PartitionId(1), dummy(1));
+        assert!(c.get(PartitionId(1)).is_none());
+        assert!(c.status().is_empty());
+    }
+
+    #[test]
+    fn concurrent_access() {
+        let c = Arc::new(PartitionCache::new(8));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100u32 {
+                    let id = PartitionId((t * 100 + i) % 16);
+                    if c.get(id).is_none() {
+                        c.put(id, dummy(id.0));
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(c.status().len() <= 8);
+        assert_eq!(c.hits() + c.misses(), 400);
+    }
+}

@@ -1,0 +1,211 @@
+//! Match services (paper §4): task execution with partition caching.
+//!
+//! A match service runs on one node, executes match tasks in its match
+//! threads, and keeps a [`PartitionCache`] shared by those threads.  Task
+//! execution is abstracted behind [`TaskExecutor`] so the same service
+//! code drives both the pure-Rust matchers and the accelerated PJRT path.
+
+pub mod cache;
+
+pub use cache::PartitionCache;
+
+use crate::matching::MatchStrategy;
+use crate::model::Correspondence;
+use crate::partition::MatchTask;
+use crate::store::PartitionData;
+
+/// Executes the comparison work of one match task over two fetched
+/// partitions.  `intra == true` means `left` and `right` are the same
+/// partition and only unordered pairs are compared.
+pub trait TaskExecutor: Send + Sync {
+    fn execute(
+        &self,
+        left: &PartitionData,
+        right: &PartitionData,
+        intra: bool,
+    ) -> Vec<Correspondence>;
+
+    /// Short name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust execution: evaluate the match strategy on every pair,
+/// keeping correspondences at/above the decision threshold.
+pub struct RustExecutor {
+    pub strategy: MatchStrategy,
+}
+
+impl RustExecutor {
+    pub fn new(strategy: MatchStrategy) -> RustExecutor {
+        RustExecutor { strategy }
+    }
+}
+
+impl TaskExecutor for RustExecutor {
+    fn execute(
+        &self,
+        left: &PartitionData,
+        right: &PartitionData,
+        intra: bool,
+    ) -> Vec<Correspondence> {
+        let mut out = Vec::new();
+        if intra {
+            for i in 0..left.len() {
+                for j in (i + 1)..left.len() {
+                    let sim = self
+                        .strategy
+                        .similarity(&left.features[i], &left.features[j]);
+                    if sim >= self.strategy.threshold {
+                        out.push(Correspondence::new(
+                            left.entities[i],
+                            left.entities[j],
+                            sim as f32,
+                        ));
+                    }
+                }
+            }
+        } else {
+            for i in 0..left.len() {
+                for j in 0..right.len() {
+                    if left.entities[i] == right.entities[j] {
+                        continue; // overlapping partitions guard
+                    }
+                    let sim = self
+                        .strategy
+                        .similarity(&left.features[i], &right.features[j]);
+                    if sim >= self.strategy.threshold {
+                        out.push(Correspondence::new(
+                            left.entities[i],
+                            right.entities[j],
+                            sim as f32,
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+/// Number of pair comparisons a task performs (for metrics).
+pub fn task_comparisons(task: &MatchTask, left: usize, right: usize) -> u64 {
+    if task.left == task.right {
+        (left as u64 * (left as u64).saturating_sub(1)) / 2
+    } else {
+        left as u64 * right as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::GeneratorConfig;
+    use crate::features::EntityFeatures;
+    use crate::matching::StrategyKind;
+    use crate::model::EntityId;
+    use crate::partition::PartitionId;
+    use std::sync::Arc;
+
+    fn partition_of(
+        data: &crate::datagen::GeneratedData,
+        ids: std::ops::Range<u32>,
+        pid: u32,
+    ) -> Arc<PartitionData> {
+        let entities: Vec<EntityId> = ids.map(EntityId).collect();
+        let features: Vec<EntityFeatures> = entities
+            .iter()
+            .map(|id| {
+                EntityFeatures::of(
+                    data.dataset.get(*id).unwrap(),
+                    &data.dataset,
+                )
+            })
+            .collect();
+        Arc::new(PartitionData {
+            id: PartitionId(pid),
+            entities,
+            features,
+            approx_bytes: 1000,
+        })
+    }
+
+    #[test]
+    fn intra_task_finds_injected_duplicates() {
+        let data = GeneratorConfig::tiny().with_seed(11).generate();
+        let n = data.dataset.len() as u32;
+        let p = partition_of(&data, 0..n, 0);
+        let exec =
+            RustExecutor::new(MatchStrategy::new(StrategyKind::Wam));
+        let found = exec.execute(&p, &p, true);
+        // recall over the injected truth should be high (duplicates are
+        // mild corruptions)
+        let found_set: std::collections::HashSet<(EntityId, EntityId)> =
+            found.iter().map(|c| c.pair()).collect();
+        let hit = data
+            .truth
+            .iter()
+            .filter(|&&(a, b)| found_set.contains(&(a, b)))
+            .count();
+        assert!(
+            hit as f64 >= 0.8 * data.truth.len() as f64,
+            "recall {hit}/{}",
+            data.truth.len()
+        );
+    }
+
+    #[test]
+    fn cross_task_skips_shared_entities() {
+        let data = GeneratorConfig::tiny().with_seed(12).generate();
+        let p1 = partition_of(&data, 0..50, 0);
+        let p2 = partition_of(&data, 25..75, 1); // overlap 25..50
+        let exec =
+            RustExecutor::new(MatchStrategy::new(StrategyKind::Wam));
+        let found = exec.execute(&p1, &p2, false);
+        assert!(found.iter().all(|c| c.e1 != c.e2));
+    }
+
+    #[test]
+    fn intra_vs_cross_consistency() {
+        // splitting a partition in two and running the 3 tasks finds the
+        // same correspondences as one intra task over the union
+        let data = GeneratorConfig::tiny().with_seed(13).generate();
+        let whole = partition_of(&data, 0..80, 0);
+        let a = partition_of(&data, 0..40, 1);
+        let b = partition_of(&data, 40..80, 2);
+        let exec =
+            RustExecutor::new(MatchStrategy::new(StrategyKind::Lrm));
+        let mut combined: Vec<Correspondence> = Vec::new();
+        combined.extend(exec.execute(&a, &a, true));
+        combined.extend(exec.execute(&b, &b, true));
+        combined.extend(exec.execute(&a, &b, false));
+        let mut whole_res = exec.execute(&whole, &whole, true);
+        let key = |c: &Correspondence| (c.e1, c.e2);
+        combined.sort_by_key(key);
+        whole_res.sort_by_key(key);
+        assert_eq!(
+            combined.iter().map(key).collect::<Vec<_>>(),
+            whole_res.iter().map(key).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn comparisons_formula() {
+        let t_intra = MatchTask {
+            id: 0,
+            left: PartitionId(0),
+            right: PartitionId(0),
+        };
+        let t_cross = MatchTask {
+            id: 1,
+            left: PartitionId(0),
+            right: PartitionId(1),
+        };
+        assert_eq!(task_comparisons(&t_intra, 10, 10), 45);
+        assert_eq!(task_comparisons(&t_cross, 10, 20), 200);
+        assert_eq!(task_comparisons(&t_intra, 0, 0), 0);
+    }
+}

@@ -1,0 +1,199 @@
+//! Integration tests for the accelerated PJRT path: the AOT artifacts
+//! (Layer 1 Pallas kernel + Layer 2 strategy graphs) loaded and executed
+//! from Rust, validated against the exact Rust matchers.
+//!
+//! These tests require `make artifacts`; they are skipped (with a note)
+//! when the manifest is absent so `cargo test` stays usable before the
+//! first artifact build.
+
+use pem::datagen::GeneratorConfig;
+use pem::matching::{MatchStrategy, StrategyKind};
+use pem::model::EntityId;
+use pem::partition::{partition_size_based, PartitionId};
+use pem::runtime::{default_artifact_dir, MatchEngine, PjrtExecutor};
+use pem::store::DataService;
+use pem::worker::{RustExecutor, TaskExecutor};
+use std::sync::Arc;
+
+fn engine_or_skip() -> Option<Arc<MatchEngine>> {
+    let dir = default_artifact_dir();
+    match MatchEngine::new(&dir) {
+        Ok(e) => Some(Arc::new(e)),
+        Err(e) => {
+            eprintln!("skipping PJRT test: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn store_with(m: usize, n: usize) -> (crate::Data, DataService) {
+    let data = GeneratorConfig::tiny().with_entities(n).generate();
+    let ids: Vec<EntityId> =
+        data.dataset.entities.iter().map(|e| e.id).collect();
+    let parts = partition_size_based(&ids, m);
+    let store = DataService::build(&data.dataset, &parts);
+    (data, store)
+}
+
+type Data = pem::datagen::GeneratedData;
+
+#[test]
+fn manifest_lists_both_strategies() {
+    let Some(engine) = engine_or_skip() else { return };
+    let m = engine.manifest();
+    for kind in [StrategyKind::Wam, StrategyKind::Lrm] {
+        assert!(
+            m.pick(kind, 64).is_some(),
+            "missing small artifact for {}",
+            kind.name()
+        );
+        assert!(
+            m.pick(kind, 1000).is_some(),
+            "missing paper-size artifact for {}",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn pjrt_runs_and_scores_in_range() {
+    let Some(engine) = engine_or_skip() else { return };
+    let (_, store) = store_with(50, 100);
+    let left = store.fetch(PartitionId(0));
+    let right = store.fetch(PartitionId(1));
+    for kind in [StrategyKind::Wam, StrategyKind::Lrm] {
+        let params = MatchStrategy::new(kind).params.values;
+        let (sims, cap) = engine
+            .run_pair(kind, params, &left, &right)
+            .expect("run_pair");
+        assert_eq!(sims.len(), cap * cap);
+        assert!(cap >= 50);
+        for &s in &sims {
+            assert!((0.0..=1.0 + 1e-5).contains(&s), "score {s}");
+        }
+        // padded region must be exactly zero
+        for i in left.len()..cap {
+            for j in 0..cap {
+                assert_eq!(sims[i * cap + j], 0.0, "padding row {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_scores_correlate_with_rust_matchers() {
+    // The accelerated path substitutes hashed-q-gram matchers (and a
+    // q-gram proxy for edit distance) for the exact ones, so individual
+    // borderline decisions may flip.  The substitution claim (DESIGN.md
+    // §Hardware-Adaptation) is: scores correlate strongly, and every
+    // *confident* exact-path match is found by the accelerated path.
+    let Some(engine) = engine_or_skip() else { return };
+    let (_, store) = store_with(100, 100);
+    let p = store.fetch(PartitionId(0));
+    for kind in [StrategyKind::Wam, StrategyKind::Lrm] {
+        let strategy = MatchStrategy::new(kind);
+        // continuous scores: for WAM pass margin=1.0 so the in-graph
+        // threshold-discard keeps every pair (otherwise both paths emit
+        // 0 for most pairs and correlation is undefined)
+        let cont_params = match kind {
+            StrategyKind::Wam => [0.5, 0.5, 0.75, 1.0],
+            StrategyKind::Lrm => strategy.params.values,
+        };
+        let (sims, cap) = engine
+            .run_pair(kind, cont_params, &p, &p)
+            .expect("run_pair");
+        let feats = &p.features;
+        let mut xs = Vec::new(); // exact continuous combination
+        let mut ys = Vec::new(); // accelerated continuous score
+        for i in 0..p.len() {
+            for j in (i + 1)..p.len() {
+                let s = pem::matching::MatcherScores::all(
+                    &feats[i], &feats[j],
+                );
+                let exact = match kind {
+                    StrategyKind::Wam => {
+                        0.5 * s.edit_title + 0.5 * s.trigram_desc
+                    }
+                    StrategyKind::Lrm => strategy.combine(&s),
+                };
+                xs.push(exact);
+                ys.push(sims[i * cap + j] as f64);
+            }
+        }
+        let r = pem::util::stats::pearson(&xs, &ys);
+        assert!(
+            r > 0.75,
+            "{}: continuous score correlation {r} over {} pairs",
+            kind.name(),
+            xs.len()
+        );
+
+        // decision containment with the real (discarding) params: every
+        // confident exact match must be found by the accelerated path
+        let (dsims, dcap) = engine
+            .run_pair(kind, strategy.params.values, &p, &p)
+            .expect("run_pair");
+        let mut confident_found = 0;
+        let mut confident_total = 0;
+        for i in 0..p.len() {
+            for j in (i + 1)..p.len() {
+                let exact = strategy.similarity(&feats[i], &feats[j]);
+                if exact >= strategy.threshold + 0.1 {
+                    confident_total += 1;
+                    confident_found += (dsims[i * dcap + j] as f64
+                        >= strategy.threshold)
+                        as usize;
+                }
+            }
+        }
+        if confident_total > 0 {
+            assert!(
+                confident_found * 10 >= confident_total * 9,
+                "{}: accelerated path missed confident matches: {}/{}",
+                kind.name(),
+                confident_found,
+                confident_total
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_intra_task_finds_duplicates() {
+    let Some(engine) = engine_or_skip() else { return };
+    let (data, store) = store_with(120, 120);
+    let p = store.fetch(PartitionId(0));
+    let strategy = MatchStrategy::new(StrategyKind::Wam);
+    let pjrt = PjrtExecutor::new(engine, strategy);
+    let found = pjrt.execute(&p, &p, true);
+    let set: std::collections::HashSet<_> =
+        found.iter().map(|c| c.pair()).collect();
+    let hits = data
+        .truth
+        .iter()
+        .filter(|&&(a, b)| set.contains(&(a, b)))
+        .count();
+    assert!(
+        hits * 10 >= data.truth.len() * 7,
+        "accelerated recall {hits}/{}",
+        data.truth.len()
+    );
+    // intra task yields no self pairs and no (j, i) duplicates
+    for c in &found {
+        assert!(c.e1 < c.e2);
+    }
+}
+
+#[test]
+fn pjrt_capacity_selection_pads_correctly() {
+    let Some(engine) = engine_or_skip() else { return };
+    // 130 entities forces the 256-capacity artifact
+    let (_, store) = store_with(130, 130);
+    let p = store.fetch(PartitionId(0));
+    let params = MatchStrategy::new(StrategyKind::Wam).params.values;
+    let (sims, cap) = engine
+        .run_pair(StrategyKind::Wam, params, &p, &p)
+        .expect("run_pair");
+    assert!(cap >= 130, "cap {cap}");
+    assert_eq!(sims.len(), cap * cap);
+}

@@ -1,0 +1,207 @@
+//! Cross-module integration tests: full workflows over the public API.
+
+use pem::blocking::BlockingMethod;
+use pem::cluster::ComputingEnv;
+use pem::coordinator::workflow::EngineChoice;
+use pem::coordinator::{
+    run_workflow, PartitioningChoice, Policy, WorkflowConfig,
+};
+use pem::datagen::GeneratorConfig;
+use pem::matching::StrategyKind;
+use pem::util::GIB;
+
+fn small_ce() -> ComputingEnv {
+    ComputingEnv::new(1, 2, GIB)
+}
+
+fn blocking_cfg(kind: StrategyKind, max: usize, min: usize) -> WorkflowConfig {
+    let mut cfg = WorkflowConfig::blocking_based(kind);
+    if let PartitioningChoice::BlockingBased {
+        max_size, min_size, ..
+    } = &mut cfg.partitioning
+    {
+        *max_size = Some(max);
+        *min_size = min;
+    }
+    cfg
+}
+
+#[test]
+fn size_vs_blocking_same_truth_recall() {
+    let data = GeneratorConfig::tiny().with_entities(900).generate();
+    let ce = small_ce();
+    let size = run_workflow(
+        &data,
+        &WorkflowConfig::size_based(StrategyKind::Wam)
+            .with_engine(EngineChoice::Threads),
+        &ce,
+    )
+    .unwrap();
+    let block = run_workflow(
+        &data,
+        &blocking_cfg(StrategyKind::Wam, 150, 30)
+            .with_engine(EngineChoice::Threads),
+        &ce,
+    )
+    .unwrap();
+    // blocking must preserve nearly every duplicate the Cartesian run
+    // found (same-block + misc routing), at far fewer comparisons
+    let qs = size.result.quality(&data.truth);
+    let qb = block.result.quality(&data.truth);
+    assert!(qb.recall >= qs.recall - 0.02, "{} vs {}", qb.recall, qs.recall);
+    assert!(block.metrics.comparisons < size.metrics.comparisons);
+}
+
+#[test]
+fn all_blocking_methods_complete_and_find_duplicates() {
+    let data = GeneratorConfig::tiny().with_entities(600).generate();
+    let ce = small_ce();
+    for method in [
+        BlockingMethod::product_type(),
+        BlockingMethod::manufacturer(),
+        BlockingMethod::SortedNeighborhood {
+            attribute: pem::model::ATTR_TITLE.to_string(),
+            window: 80,
+        },
+        BlockingMethod::Canopy {
+            loose: 0.35,
+            tight: 0.75,
+        },
+    ] {
+        let mut cfg = blocking_cfg(StrategyKind::Wam, 150, 30)
+            .with_engine(EngineChoice::Threads);
+        if let PartitioningChoice::BlockingBased { method: m, .. } =
+            &mut cfg.partitioning
+        {
+            *m = method.clone();
+        }
+        let out = run_workflow(&data, &cfg, &ce).unwrap();
+        let q = out.result.quality(&data.truth);
+        assert!(
+            q.recall > 0.4,
+            "method {method:?} recall {}",
+            q.recall
+        );
+    }
+}
+
+#[test]
+fn cache_and_policy_do_not_change_results() {
+    let data = GeneratorConfig::tiny().with_entities(500).generate();
+    let ce = ComputingEnv::new(2, 2, GIB);
+    let mut reference: Option<usize> = None;
+    for cache in [0usize, 4, 64] {
+        for policy in [Policy::Fifo, Policy::Affinity] {
+            let mut cfg = blocking_cfg(StrategyKind::Lrm, 120, 20)
+                .with_engine(EngineChoice::Threads)
+                .with_cache(cache);
+            cfg.policy = policy;
+            let out = run_workflow(&data, &cfg, &ce).unwrap();
+            match reference {
+                None => reference = Some(out.result.len()),
+                Some(r) => assert_eq!(
+                    out.result.len(),
+                    r,
+                    "cache={cache} policy={policy:?}"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn simulator_speedup_shape_matches_paper() {
+    // the central claim: near-linear speedup to 16 cores for both
+    // partitioning strategies
+    let data = GeneratorConfig::tiny().with_entities(2500).generate();
+    for cfg in [
+        WorkflowConfig::size_based(StrategyKind::Wam),
+        blocking_cfg(StrategyKind::Wam, 200, 40),
+    ] {
+        let mut cfg = cfg;
+        cfg.calibrate = false;
+        if let PartitioningChoice::SizeBased { max_size } =
+            &mut cfg.partitioning
+        {
+            *max_size = Some(200);
+        }
+        let mut times = Vec::new();
+        for cores in [1usize, 4, 16] {
+            let nodes = cores.div_ceil(4).max(1);
+            let ce =
+                ComputingEnv::new(nodes, cores.div_ceil(nodes), 3 * GIB);
+            let out = run_workflow(&data, &cfg, &ce).unwrap();
+            times.push(out.metrics.makespan_ns);
+        }
+        let s4 = times[0] as f64 / times[1] as f64;
+        let s16 = times[0] as f64 / times[2] as f64;
+        assert!(s4 > 2.8, "speedup@4 {s4}");
+        assert!(s16 > 8.0, "speedup@16 {s16}");
+        assert!(s16 < 16.5, "speedup@16 {s16} super-linear?");
+    }
+}
+
+#[test]
+fn caching_improves_simulated_time_with_high_hit_ratio() {
+    let data = GeneratorConfig::tiny().with_entities(3000).generate();
+    let mut base = blocking_cfg(StrategyKind::Wam, 150, 30);
+    base.calibrate = false;
+    let ce = ComputingEnv::new(4, 4, 3 * GIB);
+    let nc = run_workflow(&data, &base.clone().with_cache(0), &ce).unwrap();
+    let c = run_workflow(&data, &base.with_cache(16), &ce).unwrap();
+    assert!(c.metrics.makespan_ns < nc.metrics.makespan_ns);
+    assert!(
+        c.metrics.hit_ratio() > 0.5,
+        "hr {}",
+        c.metrics.hit_ratio()
+    );
+}
+
+#[test]
+fn wam_faster_than_lrm_in_simulation() {
+    if cfg!(debug_assertions) {
+        // calibration measures this build's real matcher costs; the
+        // WAM < LRM relation is a property of the optimized build (see
+        // engine::calibrate::tests::lrm_costs_more_than_wam)
+        return;
+    }
+    let data = GeneratorConfig::tiny().with_entities(2000).generate();
+    let ce = ComputingEnv::new(1, 4, 3 * GIB);
+    // calibrated: uses real per-pair costs of both strategies
+    let wam =
+        run_workflow(&data, &blocking_cfg(StrategyKind::Wam, 200, 40), &ce)
+            .unwrap();
+    let lrm =
+        run_workflow(&data, &blocking_cfg(StrategyKind::Lrm, 100, 20), &ce)
+            .unwrap();
+    assert!(
+        wam.metrics.makespan_ns < lrm.metrics.makespan_ns,
+        "wam {} vs lrm {}",
+        wam.metrics.makespan_ns,
+        lrm.metrics.makespan_ns
+    );
+    // LRM has more tasks due to its smaller max partition size (Fig 9)
+    assert!(lrm.n_tasks > wam.n_tasks);
+}
+
+#[test]
+fn misc_entities_still_matchable() {
+    // entities with missing product type must still find their duplicates
+    // through the misc routing
+    let data = GeneratorConfig {
+        n_entities: 800,
+        missing_product_type: 0.4, // heavy misc share
+        ..GeneratorConfig::default()
+    }
+    .generate();
+    let out = run_workflow(
+        &data,
+        &blocking_cfg(StrategyKind::Wam, 150, 30)
+            .with_engine(EngineChoice::Threads),
+        &small_ce(),
+    )
+    .unwrap();
+    let q = out.result.quality(&data.truth);
+    assert!(q.recall > 0.75, "recall {} with 40% misc", q.recall);
+    assert!(out.n_misc_partitions >= 1);
+}
