@@ -1,0 +1,112 @@
+//! Distributed-runtime overhead: thread engine vs TCP services on the
+//! same workload.
+//!
+//! Quantifies what crossing real sockets costs relative to the shared-
+//! memory thread engine — wall time, data-plane wire bytes, control
+//! messages — and derives a per-task round-trip overhead.  The paper's
+//! §4 design (partition caching + affinity scheduling + one-round-trip
+//! pull) exists precisely to keep this overhead small.
+
+mod common;
+
+use pem::cluster::ComputingEnv;
+use pem::datagen::GeneratorConfig;
+use pem::engine::{dist, threads};
+use pem::matching::{MatchStrategy, StrategyKind};
+use pem::model::EntityId;
+use pem::partition::{generate_tasks, partition_size_based};
+use pem::store::DataService;
+use pem::util::{fmt_bytes, fmt_nanos};
+use pem::worker::{RustExecutor, TaskExecutor};
+use std::sync::Arc;
+
+fn main() {
+    pem::bench::report_header(
+        "Distributed runtime overhead — threads vs TCP services",
+        "same tasks, same executor; difference = wire + scheduling RPC",
+    );
+
+    let n = if common::paper_scale() { 8_000 } else { 2_000 };
+    let m = common::scaled(500).max(50);
+    let data = GeneratorConfig::default().with_entities(n).generate();
+    let ids: Vec<EntityId> =
+        data.dataset.entities.iter().map(|e| e.id).collect();
+    let parts = partition_size_based(&ids, m);
+    let strategy = MatchStrategy::new(StrategyKind::Wam);
+
+    println!(
+        "workload: {} entities → {} partitions → {} tasks\n",
+        n,
+        parts.len(),
+        generate_tasks(&parts).len()
+    );
+    println!("engine    nodes  time         hr     data plane      ctl msgs");
+
+    for nodes in [1usize, 2, 4] {
+        let ce = ComputingEnv::new(nodes, 2, common::node_mem());
+        let tasks = generate_tasks(&parts);
+        let n_tasks = tasks.len();
+
+        // thread engine (shared memory)
+        let store = DataService::build(&data.dataset, &parts);
+        let exec = RustExecutor::new(strategy);
+        let t = threads::run(
+            &ce,
+            &parts,
+            tasks.clone(),
+            &store,
+            &exec,
+            threads::ThreadConfig {
+                cache_capacity: 8,
+                policy: pem::coordinator::Policy::Affinity,
+            },
+        );
+        println!(
+            "threads   {:>5}  {:>11}  {:>4.0}%  {:>14}  {:>8}",
+            nodes,
+            fmt_nanos(t.metrics.makespan_ns),
+            t.metrics.hit_ratio() * 100.0,
+            format!("({})", fmt_bytes(t.metrics.bytes_fetched)),
+            t.metrics.control_messages,
+        );
+
+        // distributed engine (real sockets)
+        let store = Arc::new(DataService::build(&data.dataset, &parts));
+        let exec: Arc<dyn TaskExecutor> =
+            Arc::new(RustExecutor::new(strategy));
+        let d = dist::run(
+            &ce,
+            &parts,
+            tasks,
+            store,
+            exec,
+            dist::DistConfig {
+                cache_capacity: 8,
+                ..dist::DistConfig::default()
+            },
+        )
+        .expect("distributed run");
+        println!(
+            "dist      {:>5}  {:>11}  {:>4.0}%  {:>14}  {:>8}",
+            nodes,
+            fmt_nanos(d.metrics.makespan_ns),
+            d.metrics.hit_ratio() * 100.0,
+            fmt_bytes(d.metrics.bytes_fetched),
+            d.metrics.control_messages,
+        );
+        let overhead_ns = d
+            .metrics
+            .makespan_ns
+            .saturating_sub(t.metrics.makespan_ns);
+        println!(
+            "          → wire overhead {} total, {} per task\n",
+            fmt_nanos(overhead_ns),
+            fmt_nanos(overhead_ns / n_tasks.max(1) as u64),
+        );
+    }
+
+    println!(
+        "(thread-engine \"data plane\" is modeled approx_bytes; the dist \
+         row is bytes actually written to sockets, frames included)"
+    );
+}

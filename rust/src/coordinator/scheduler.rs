@@ -121,14 +121,36 @@ impl Scheduler {
         task_id: u32,
         cached: Vec<PartitionId>,
     ) {
-        let removed = self.in_flight.remove(&task_id);
         assert!(
-            removed.is_some_and(|(s, _)| s == service),
+            self.try_report_complete(service, task_id, cached),
             "completion for task {task_id} not in flight at {service:?}"
         );
-        self.completed += 1;
+    }
+
+    /// Like [`Self::report_complete`], but tolerates reports that no
+    /// longer match the in-flight table: a service that was presumed dead
+    /// (missed heartbeats → [`Self::fail_service`]) may still deliver a
+    /// completion for a task that has since been re-queued or re-assigned.
+    /// The distributed runtime must not crash on such stragglers — the
+    /// stale report is dropped and `false` returned.  The cache status is
+    /// recorded either way (it is current information about that service).
+    pub fn try_report_complete(
+        &mut self,
+        service: ServiceId,
+        task_id: u32,
+        cached: Vec<PartitionId>,
+    ) -> bool {
+        let fresh = matches!(
+            self.in_flight.get(&task_id),
+            Some((s, _)) if *s == service
+        );
+        if fresh {
+            self.in_flight.remove(&task_id);
+            self.completed += 1;
+        }
         self.cache_status
             .insert(service, cached.into_iter().collect());
+        fresh
     }
 
     /// A match service was added (paper §4: services can be added on
@@ -309,5 +331,105 @@ mod tests {
         let mut s = Scheduler::new(vec![task(0, 0, 0)], Policy::Affinity);
         s.add_service(ServiceId(3));
         assert!(s.cached_at(ServiceId(3)).unwrap().is_empty());
+    }
+
+    #[test]
+    fn affinity_tie_breaks_to_oldest_task() {
+        // tasks 1 and 2 both score one cached partition; the tie must go
+        // to the older (lower-index) task, i.e. FIFO within a score class
+        let tasks = vec![task(0, 8, 9), task(1, 5, 6), task(2, 5, 7)];
+        let mut s = Scheduler::new(tasks, Policy::Affinity);
+        let t0 = s.next_task(ServiceId(0)).unwrap();
+        assert_eq!(t0.id, 0);
+        s.report_complete(ServiceId(0), 0, vec![PartitionId(5)]);
+        let t = s.next_task(ServiceId(0)).unwrap();
+        assert_eq!(t.id, 1, "tie between 1 and 2 must pick the older");
+        assert_eq!(s.affinity_assignments, 1);
+    }
+
+    #[test]
+    fn affinity_double_hit_beats_single_hit() {
+        // task 2 has both partitions cached and must win over task 1
+        // (one cached) even though task 1 is older
+        let tasks = vec![task(0, 9, 9), task(1, 2, 8), task(2, 2, 3)];
+        let mut s = Scheduler::new(tasks, Policy::Affinity);
+        let t0 = s.next_task(ServiceId(1)).unwrap();
+        assert_eq!(t0.id, 0);
+        s.report_complete(
+            ServiceId(1),
+            0,
+            vec![PartitionId(2), PartitionId(3)],
+        );
+        assert_eq!(s.next_task(ServiceId(1)).unwrap().id, 2);
+    }
+
+    #[test]
+    fn affinity_zero_scores_fall_back_to_fifo_order() {
+        let tasks = vec![task(0, 1, 2), task(1, 3, 4)];
+        let mut s = Scheduler::new(tasks, Policy::Affinity);
+        let t0 = s.next_task(ServiceId(0)).unwrap();
+        assert_eq!(t0.id, 0);
+        s.report_complete(ServiceId(0), 0, vec![PartitionId(99)]);
+        // nothing cached matches the remaining task: FIFO, no affinity hit
+        assert_eq!(s.next_task(ServiceId(0)).unwrap().id, 1);
+        assert_eq!(s.affinity_assignments, 0);
+    }
+
+    #[test]
+    fn fail_service_requeues_all_in_flight_and_drops_status() {
+        let tasks =
+            vec![task(0, 0, 0), task(1, 1, 1), task(2, 2, 2), task(3, 3, 3)];
+        let mut s = Scheduler::new(tasks, Policy::Affinity);
+        // service 0 holds tasks 0 and 1, service 1 holds task 2
+        let a0 = s.next_task(ServiceId(0)).unwrap();
+        let a1 = s.next_task(ServiceId(0)).unwrap();
+        let b = s.next_task(ServiceId(1)).unwrap();
+        s.report_complete(ServiceId(1), b.id, vec![PartitionId(2)]);
+        assert_eq!(s.fail_service(ServiceId(0)), 2);
+        assert!(s.cached_at(ServiceId(0)).is_none(), "status dropped");
+        // the dead service's tasks are at the front of the open list and
+        // the workflow still completes through the surviving service
+        let ids: Vec<u32> = std::iter::from_fn(|| s.next_task(ServiceId(1)))
+            .map(|t| t.id)
+            .collect();
+        assert_eq!(ids.len(), 3);
+        // re-queued tasks go to the front, ahead of the never-assigned
+        // task 3 (their mutual order depends on in-flight iteration)
+        let front: std::collections::HashSet<u32> =
+            ids[..2].iter().copied().collect();
+        assert_eq!(
+            front,
+            [a0.id, a1.id].into_iter().collect(),
+            "failed tasks re-queued at the front"
+        );
+        assert_eq!(ids[2], 3);
+        for id in &ids {
+            s.report_complete(ServiceId(1), *id, vec![]);
+        }
+        assert!(s.is_done());
+        assert_eq!(s.completed(), 4);
+    }
+
+    #[test]
+    fn stale_completion_after_failure_is_rejected_not_fatal() {
+        let mut s = Scheduler::new(
+            vec![task(0, 0, 0), task(1, 1, 1)],
+            Policy::Fifo,
+        );
+        let t = s.next_task(ServiceId(0)).unwrap();
+        assert_eq!(s.fail_service(ServiceId(0)), 1);
+        // the "dead" service reports anyway — dropped, not double-counted
+        assert!(!s.try_report_complete(ServiceId(0), t.id, vec![]));
+        assert_eq!(s.completed(), 0);
+        // the re-queued task completes at another service exactly once
+        let re = s.next_task(ServiceId(1)).unwrap();
+        assert_eq!(re.id, t.id);
+        assert!(s.try_report_complete(ServiceId(1), re.id, vec![]));
+        // and a duplicate report of the same completion is rejected too
+        assert!(!s.try_report_complete(ServiceId(1), re.id, vec![]));
+        let t1 = s.next_task(ServiceId(1)).unwrap();
+        assert!(s.try_report_complete(ServiceId(1), t1.id, vec![]));
+        assert!(s.is_done());
+        assert_eq!(s.completed(), 2);
     }
 }

@@ -8,7 +8,7 @@
 
 use crate::blocking::BlockingMethod;
 use crate::cluster::ComputingEnv;
-use crate::engine::{calibrate, sim, threads, CostParams};
+use crate::engine::{calibrate, dist, sim, threads, CostParams};
 use crate::matching::{MatchStrategy, StrategyKind};
 use crate::metrics::RunMetrics;
 use crate::model::{Dataset, EntityId, MatchResult};
@@ -44,6 +44,11 @@ pub enum EngineChoice {
     /// Virtual-time simulation with calibrated costs; no matching
     /// performed (metrics only) unless `execute_in_sim` is set.
     Simulated,
+    /// Real services over localhost TCP ([`crate::engine::dist`]):
+    /// workflow + data services, `ce.nodes` match-service nodes, the
+    /// [`crate::rpc`] wire protocol in between; wall-clock metrics and
+    /// actual socket-byte traffic accounting.
+    Distributed,
 }
 
 /// Full workflow configuration.
@@ -196,7 +201,7 @@ pub fn run_workflow(
     let started = Instant::now();
     let parts = build_partitions(dataset, cfg, ce)?;
     let tasks: Vec<MatchTask> = generate_tasks(&parts);
-    let store = DataService::build(dataset, &parts);
+    let store = std::sync::Arc::new(DataService::build(dataset, &parts));
     let n_tasks = tasks.len();
     let n_partitions = parts.len();
     let n_misc = parts.n_misc();
@@ -215,6 +220,23 @@ pub fn run_workflow(
                     policy: cfg.policy,
                 },
             );
+            (out.metrics, out.correspondences, None)
+        }
+        EngineChoice::Distributed => {
+            let exec: std::sync::Arc<dyn crate::worker::TaskExecutor> =
+                std::sync::Arc::new(RustExecutor::new(cfg.strategy));
+            let out = dist::run(
+                ce,
+                &parts,
+                tasks,
+                store.clone(),
+                exec,
+                dist::DistConfig {
+                    cache_capacity: cfg.cache_capacity,
+                    policy: cfg.policy,
+                    ..dist::DistConfig::default()
+                },
+            )?;
             (out.metrics, out.correspondences, None)
         }
         EngineChoice::Simulated => {

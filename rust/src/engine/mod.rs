@@ -9,10 +9,15 @@
 //!   mem)` of the paper's testbed, charging calibrated compute costs and
 //!   modeled network / memory costs (DESIGN.md §Substitutions).  All
 //!   scale-out experiments (Figs 5–9, Tables 1–2) run here.
+//! * [`dist`] — the **distributed engine**: the paper's §4 services as
+//!   real TCP endpoints ([`crate::service`]) with match-service nodes
+//!   pulling tasks and fetching partitions over actual sockets.  Same
+//!   scheduler, same executors, real wire.
 //! * [`calibrate`] — measures real per-pair match cost on this host to
 //!   anchor the simulator's virtual clock.
 
 pub mod calibrate;
+pub mod dist;
 pub mod sim;
 pub mod threads;
 

@@ -74,6 +74,19 @@ impl QGramSet {
         QGramSet { grams }
     }
 
+    /// Rebuild from raw gram hashes (wire decoding — see [`crate::rpc`]).
+    /// Sorting restores the canonical multiset representation whatever
+    /// order the bytes arrived in.
+    pub fn from_hashes(mut grams: Vec<u64>) -> QGramSet {
+        grams.sort_unstable();
+        QGramSet { grams }
+    }
+
+    /// The sorted gram-hash multiset (wire encoding).
+    pub fn hashes(&self) -> &[u64] {
+        &self.grams
+    }
+
     pub fn len(&self) -> usize {
         self.grams.len()
     }
@@ -184,6 +197,18 @@ impl TokenSet {
         tokens.sort_unstable();
         tokens.dedup();
         TokenSet { tokens }
+    }
+
+    /// Rebuild from raw token hashes (wire decoding — see [`crate::rpc`]).
+    pub fn from_hashes(mut tokens: Vec<u64>) -> TokenSet {
+        tokens.sort_unstable();
+        tokens.dedup();
+        TokenSet { tokens }
+    }
+
+    /// The sorted, deduplicated token hashes (wire encoding).
+    pub fn hashes(&self) -> &[u64] {
+        &self.tokens
     }
 
     pub fn len(&self) -> usize {

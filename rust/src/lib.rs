@@ -17,13 +17,18 @@
 //!   [`net`], [`cluster`]): a workflow service holding the central task
 //!   list and performing affinity-based scheduling, match services with
 //!   LRU partition caches, a data service, dynamic service membership and
-//!   failure handling (§4).
+//!   failure handling (§4) — available both as in-process objects and as
+//!   **real TCP services** ([`rpc`], [`service`]) speaking a
+//!   length-prefixed binary wire protocol, driven by the distributed
+//!   engine ([`engine::dist`]) or as separate processes via
+//!   `pem serve` / `pem distmatch`.
 //!
 //! Supporting subsystems: entity model ([`model`]), synthetic product-offer
 //! generator ([`datagen`]), q-gram feature hashing ([`features`]), blocking
 //! operators ([`blocking`]), match strategies WAM / LRM ([`matching`]),
-//! execution engines — real threads and a deterministic virtual-time
-//! simulator ([`engine`]) — the PJRT runtime for the AOT-compiled
+//! execution engines — real threads, a deterministic virtual-time
+//! simulator, and distributed TCP services ([`engine`]) — the PJRT
+//! runtime for the AOT-compiled
 //! accelerated match path ([`runtime`]), metrics ([`metrics`]) and an
 //! in-tree micro-benchmark harness ([`mod@bench`]).
 //!
@@ -57,7 +62,9 @@ pub mod metrics;
 pub mod model;
 pub mod net;
 pub mod partition;
+pub mod rpc;
 pub mod runtime;
+pub mod service;
 pub mod store;
 pub mod util;
 pub mod worker;

@@ -7,10 +7,22 @@
 //! * `match`    — run a full match workflow (blocking → partition tuning
 //!   → task generation → parallel execution) and report the result;
 //! * `sweep`    — run a core-count sweep (the Figs 8/9 experiment shape);
+//! * `serve`    — start the workflow + data services on TCP ports and
+//!   wait for match-service nodes to complete the workflow;
+//! * `distmatch`— run one match-service node process against a running
+//!   `pem serve` coordinator;
 //! * `artifacts`— inspect the AOT artifact manifest and smoke-run the
 //!   PJRT path on a tiny workload;
 //! * `info`     — print the computing-environment and memory-model
 //!   numbers for a configuration.
+//!
+//! A full multi-process match on one machine:
+//!
+//! ```text
+//! $ pem serve --entities 20000 --workflow-port 7401 --data-port 7402
+//! $ pem distmatch --workflow 127.0.0.1:7401 --data 127.0.0.1:7402 \
+//!       --threads 4 --cache 8   # repeat per node / machine
+//! ```
 
 use anyhow::{bail, Result};
 use pem::blocking::BlockingMethod;
@@ -37,7 +49,7 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: pem <generate|export|match|sweep|artifacts|info> [options]
+        "usage: pem <generate|export|match|sweep|serve|distmatch|artifacts|info> [options]
   common options:
     --entities N          dataset size (default 20000)
     --seed S              generator seed (default 2010)
@@ -55,10 +67,19 @@ fn usage() -> ! {
     --nodes N --cores N --mem-gb G --threads T
     --cache C             partition cache capacity per service
     --no-affinity         disable affinity scheduling
-    --engine sim|threads  (default sim)
+    --engine sim|threads|dist  (default sim)
     --execute             really match inside the simulator
   sweep options:
-    --cores-list 1,2,4,8,12,16"
+    --cores-list 1,2,4,8,12,16
+  serve options (workflow + data services for multi-process matching):
+    --workflow-port P     control-plane port (default 0 = ephemeral)
+    --data-port P         data-plane port (default 0 = ephemeral)
+    --heartbeat-ms MS     failure-detection timeout (default 2000)
+    --timeout-s S         give up after S seconds (default 3600)
+  distmatch options (one match-service node):
+    --workflow HOST:PORT  workflow service address (required)
+    --data HOST:PORT      data service address (required)
+    --name NAME           node name  --threads T  --cache C"
     );
     std::process::exit(2);
 }
@@ -102,6 +123,7 @@ fn parse_workflow(args: &Args, kind: StrategyKind) -> Result<WorkflowConfig> {
     let engine = match args.str_or("engine", "sim") {
         "sim" => EngineChoice::Simulated,
         "threads" => EngineChoice::Threads,
+        "dist" => EngineChoice::Distributed,
         other => bail!("bad engine {other:?}"),
     };
     Ok(WorkflowConfig {
@@ -131,6 +153,8 @@ fn run() -> Result<()> {
         Some("export") => cmd_export(&args),
         Some("match") => cmd_match(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("distmatch") => cmd_distmatch(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("info") => cmd_info(&args),
         _ => usage(),
@@ -249,6 +273,169 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             out.n_tasks
         );
     }
+    Ok(())
+}
+
+/// Start the coordinator half of a multi-process match: generate (or
+/// load) the dataset, build partitions and tasks, and serve the
+/// workflow + data services until the task list drains.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use pem::service::{
+        DataServiceServer, WorkflowServerConfig, WorkflowServiceServer,
+    };
+    let kind = parse_strategy(args)?;
+    let ce = parse_ce(args)?;
+    let cfg = parse_workflow(args, kind)?;
+    let (dataset, truth) = match args.get_str("input") {
+        Some(path) => (
+            pem::io::read_dataset_file(std::path::Path::new(path))?,
+            None,
+        ),
+        None => {
+            let g = GeneratorConfig::default()
+                .with_entities(args.get_or("entities", 20_000usize)?)
+                .with_seed(args.get_or("seed", 2010u64)?)
+                .generate();
+            (g.dataset, Some(g.truth))
+        }
+    };
+    let parts =
+        pem::coordinator::workflow::build_partitions(&dataset, &cfg, &ce)?;
+    let tasks = pem::partition::generate_tasks(&parts);
+    let store = std::sync::Arc::new(pem::store::DataService::build(
+        &dataset, &parts,
+    ));
+    println!(
+        "dataset: {} entities → {} partitions (misc {}) → {} tasks",
+        dataset.len(),
+        parts.len(),
+        parts.n_misc(),
+        tasks.len()
+    );
+
+    let data_bind =
+        format!("0.0.0.0:{}", args.get_or("data-port", 0u16)?);
+    let wf_bind =
+        format!("0.0.0.0:{}", args.get_or("workflow-port", 0u16)?);
+    let data_srv = DataServiceServer::start(store, &data_bind)?;
+    let wf_srv = WorkflowServiceServer::start(
+        tasks,
+        WorkflowServerConfig {
+            policy: cfg.policy,
+            heartbeat_timeout: std::time::Duration::from_millis(
+                args.get_or("heartbeat-ms", 2000u64)?,
+            ),
+        },
+        &wf_bind,
+    )?;
+    println!("workflow service listening on {}", wf_srv.addr());
+    println!("data service listening on {}", data_srv.addr());
+    println!(
+        "attach nodes with: pem distmatch --workflow <host>:{} \
+         --data <host>:{} --strategy {}",
+        wf_srv.addr().port(),
+        data_srv.addr().port(),
+        kind.name()
+    );
+
+    let started = std::time::Instant::now();
+    let timeout = std::time::Duration::from_secs(
+        args.get_or("timeout-s", 3600u64)?,
+    );
+    if !wf_srv.wait_done(timeout) {
+        data_srv.shutdown();
+        bail!(
+            "timed out after {timeout:?} with {} tasks complete",
+            wf_srv.completed()
+        );
+    }
+    // grace period: let the nodes observe `done` and leave cleanly
+    std::thread::sleep(std::time::Duration::from_millis(250));
+    let elapsed = started.elapsed();
+    let report = wf_srv.finish();
+    let mut result = pem::model::MatchResult::new();
+    for c in report.correspondences {
+        result.add(c);
+    }
+    println!(
+        "completed {}/{} tasks on {} service(s): {} comparisons, {} matches",
+        report.completed_tasks,
+        report.total_tasks,
+        report.services_joined,
+        report.comparisons,
+        result.len()
+    );
+    println!(
+        "control plane: {} messages / {}; data plane: {} payloads / {}; \
+         requeued {} task(s), {} stale completion(s)",
+        report.control_messages,
+        fmt_bytes(report.control_wire_bytes),
+        data_srv.wire_messages(),
+        fmt_bytes(data_srv.wire_bytes()),
+        report.requeued_tasks,
+        report.stale_completions
+    );
+    if let Some(truth) = &truth {
+        let q = result.quality(truth);
+        println!(
+            "quality: precision={:.3} recall={:.3} f1={:.3}",
+            q.precision, q.recall, q.f1
+        );
+    }
+    if let Some(out_path) = args.get_str("out") {
+        pem::io::write_matches(
+            result.iter(),
+            std::fs::File::create(out_path)?,
+        )?;
+        println!("wrote {} matches to {out_path}", result.len());
+    }
+    println!("match wall-clock: {elapsed:?}");
+    data_srv.shutdown();
+    Ok(())
+}
+
+/// Run one match-service node against a `pem serve` coordinator.
+fn cmd_distmatch(args: &Args) -> Result<()> {
+    use pem::service::{run_match_node, MatchNodeConfig};
+    let kind = parse_strategy(args)?;
+    let workflow = args
+        .get_str("workflow")
+        .ok_or_else(|| anyhow::anyhow!("--workflow HOST:PORT required"))?;
+    let data = args
+        .get_str("data")
+        .ok_or_else(|| anyhow::anyhow!("--data HOST:PORT required"))?;
+    let mut cfg =
+        MatchNodeConfig::new(workflow.to_string(), data.to_string());
+    cfg.name = args.str_or("name", "distmatch").to_string();
+    cfg.threads = args.get_or("threads", 4usize)?;
+    cfg.cache_capacity = args.get_or("cache", 0usize)?;
+    let exec: std::sync::Arc<dyn pem::worker::TaskExecutor> =
+        std::sync::Arc::new(pem::worker::RustExecutor::new(
+            MatchStrategy::new(kind),
+        ));
+    println!(
+        "node {:?}: joining workflow service {workflow}, data service \
+         {data}, {} thread(s), cache {}",
+        cfg.name, cfg.threads, cfg.cache_capacity
+    );
+    let report = run_match_node(&cfg, exec)?;
+    let accesses = report.cache_hits + report.cache_misses;
+    println!(
+        "service #{}: completed {} tasks, {} comparisons, cache hr {:.0}%{}",
+        report.service,
+        report.tasks_completed,
+        report.comparisons,
+        if accesses == 0 {
+            0.0
+        } else {
+            100.0 * report.cache_hits as f64 / accesses as f64
+        },
+        if report.lost_coordinator {
+            " (coordinator went away)"
+        } else {
+            ""
+        }
+    );
     Ok(())
 }
 

@@ -1,11 +1,13 @@
 //! Simulated RMI: the communication cost model between services.
 //!
 //! The paper's services (workflow / data / match) talk over Java RMI on a
-//! LAN.  In this single-process reproduction, communication is modeled as
-//! a deterministic cost: every message pays `latency` plus
-//! `bytes / bandwidth`.  The virtual-time engine charges these costs on
-//! the simulated clock; the thread engine can optionally inject them as
-//! real sleeps (off by default).
+//! LAN.  For the simulator, communication is modeled as a deterministic
+//! cost: every message pays `latency` plus `bytes / bandwidth`.  The
+//! virtual-time engine charges these costs on the simulated clock; the
+//! thread engine can optionally inject them as real sleeps (off by
+//! default).  The *real-wire* counterpart of this module is
+//! [`crate::rpc`] + [`crate::service`]: actual TCP services whose
+//! delivered-bytes accounting flows through the same [`TrafficStats`].
 //!
 //! Delivered-bytes accounting feeds the communication-overhead numbers in
 //! the experiment reports.

@@ -1,0 +1,191 @@
+//! Stream framing and a small blocking transport over `TcpStream`.
+//!
+//! Frames are `u32 LE length` + payload (see [`super`] for the payload
+//! format).  [`Transport`] wraps one TCP connection with buffered
+//! reads/writes, per-connection byte accounting, and the one-round-trip
+//! `request` helper the services are built on.  Everything is blocking
+//! std I/O — one OS thread per connection, the same execution model as
+//! the paper's RMI runtime.
+
+use super::{encode_partition_message, Message, WireError};
+use crate::store::PartitionData;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// Upper bound on a single frame; larger headers are treated as stream
+/// corruption.  Partitions of ~1000 entities serialize to a few MB, so
+/// 256 MiB leaves room for extreme configurations while still rejecting
+/// garbage lengths immediately.
+pub const MAX_FRAME_BYTES: u64 = 256 * 1024 * 1024;
+
+fn wire_err(e: WireError) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, e)
+}
+
+/// Write one frame (length prefix + payload); returns bytes written.
+pub fn write_frame<W: Write>(w: &mut W, msg: &Message) -> io::Result<u64> {
+    write_payload(w, &msg.encode())
+}
+
+fn write_payload<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<u64> {
+    let len = payload.len() as u64;
+    if len > MAX_FRAME_BYTES {
+        return Err(wire_err(WireError::FrameTooLarge(len)));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(len + 4)
+}
+
+/// Read one frame; `Err(UnexpectedEof)` when the peer closed cleanly
+/// between frames, `InvalidData` on corrupt payloads.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Message> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf) as u64;
+    if len > MAX_FRAME_BYTES {
+        return Err(wire_err(WireError::FrameTooLarge(len)));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Message::decode(&payload).map_err(wire_err)
+}
+
+/// One framed, buffered, byte-counting TCP connection.
+pub struct Transport {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    /// Bytes written to the socket (frames incl. length prefixes).
+    pub sent_bytes: u64,
+    /// Frames written.
+    pub sent_messages: u64,
+}
+
+impl Transport {
+    /// Connect to `addr`, with `timeout` for connection establishment
+    /// and subsequent reads (writes inherit OS defaults).  Like
+    /// `TcpStream::connect`, every resolved address is tried in order —
+    /// on dual-stack hosts `localhost` may resolve to `::1` first while
+    /// the server listens on IPv4 only.
+    pub fn connect<A: ToSocketAddrs>(
+        addr: A,
+        timeout: Duration,
+    ) -> io::Result<Transport> {
+        let mut last_err = None;
+        for sock_addr in addr.to_socket_addrs()? {
+            match TcpStream::connect_timeout(&sock_addr, timeout) {
+                Ok(stream) => {
+                    stream.set_read_timeout(Some(timeout))?;
+                    return Transport::from_stream(stream);
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::AddrNotAvailable,
+                "address resolved to nothing",
+            )
+        }))
+    }
+
+    /// Wrap an accepted connection.
+    pub fn from_stream(stream: TcpStream) -> io::Result<Transport> {
+        stream.set_nodelay(true).ok(); // control messages are tiny
+        let write_half = stream.try_clone()?;
+        Ok(Transport {
+            reader: BufReader::new(stream),
+            writer: BufWriter::new(write_half),
+            sent_bytes: 0,
+            sent_messages: 0,
+        })
+    }
+
+    pub fn send(&mut self, msg: &Message) -> io::Result<u64> {
+        let n = write_frame(&mut self.writer, msg)?;
+        self.sent_bytes += n;
+        self.sent_messages += 1;
+        Ok(n)
+    }
+
+    /// Send a partition payload encoded from a borrowed
+    /// [`PartitionData`] (no deep clone); returns bytes written.
+    pub fn send_partition(&mut self, data: &PartitionData) -> io::Result<u64> {
+        self.send_raw_payload(&encode_partition_message(data))
+    }
+
+    /// Send a pre-encoded message payload (the frame length prefix is
+    /// added here).  Lets servers cache serialized replies — the data
+    /// service serves the same immutable partition bytes many times.
+    pub fn send_raw_payload(&mut self, payload: &[u8]) -> io::Result<u64> {
+        let n = write_payload(&mut self.writer, payload)?;
+        self.sent_bytes += n;
+        self.sent_messages += 1;
+        Ok(n)
+    }
+
+    pub fn recv(&mut self) -> io::Result<Message> {
+        read_frame(&mut self.reader)
+    }
+
+    /// One RPC round trip: send `msg`, block for the reply.
+    pub fn request(&mut self, msg: &Message) -> io::Result<Message> {
+        self.send(msg)?;
+        self.recv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::ServiceId;
+    use std::net::TcpListener;
+
+    #[test]
+    fn frame_roundtrip_over_real_socket() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = Transport::from_stream(stream).unwrap();
+            // echo until EOF
+            while let Ok(msg) = t.recv() {
+                t.send(&msg).unwrap();
+            }
+        });
+        let mut c =
+            Transport::connect(addr, Duration::from_secs(5)).unwrap();
+        for msg in [
+            Message::Join {
+                name: "node0".into(),
+            },
+            Message::NoTask { done: true },
+            Message::Heartbeat {
+                service: ServiceId(3),
+            },
+        ] {
+            let reply = c.request(&msg).unwrap();
+            assert_eq!(reply.encode(), msg.encode());
+        }
+        assert_eq!(c.sent_messages, 3);
+        assert!(c.sent_bytes > 0);
+        drop(c);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_header_rejected() {
+        let mut bad: &[u8] = &[0xFF, 0xFF, 0xFF, 0xFF, 0x00];
+        let err = read_frame(&mut bad).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn short_stream_is_eof() {
+        let mut short: &[u8] = &[4, 0, 0, 0, 1]; // promises 4, delivers 1
+        let err = read_frame(&mut short).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+}

@@ -1,0 +1,754 @@
+//! Wire protocol of the service-based distributed runtime (paper §4).
+//!
+//! The paper's workflow / data / match services talk over Java RMI on a
+//! LAN.  This module is the reproduction's RMI substitute: a
+//! **length-prefixed binary protocol** over `std::net::TcpStream` — no
+//! external crates, no async runtime.  Every frame is
+//!
+//! ```text
+//! ┌────────────┬───────────────────────────────┐
+//! │ u32 LE len │ payload (len bytes)           │
+//! └────────────┴───────────────────────────────┘
+//!   payload[0] = message tag, rest = fields in LE byte order
+//! ```
+//!
+//! [`Message`] enumerates the paper's control- and data-plane calls:
+//! task request/assignment, completion report **with piggybacked cache
+//! status**, partition fetch, heartbeat, and join/leave membership.
+//! Integers are little-endian; floats travel as IEEE-754 bit patterns so
+//! match similarities round-trip exactly; strings are UTF-8 with a u32
+//! length; collections carry a u32 element count that is validated
+//! against the remaining buffer before any allocation.
+//!
+//! Decoding is strict: a frame must parse completely and exactly —
+//! truncated buffers yield [`WireError::Truncated`], extra bytes yield
+//! [`WireError::TrailingBytes`] — so corrupt or hostile frames are
+//! rejected instead of being half-read (see the property tests at the
+//! bottom and [`frame`] for the stream framing).
+
+pub mod frame;
+
+pub use frame::{read_frame, write_frame, Transport, MAX_FRAME_BYTES};
+
+use crate::coordinator::scheduler::ServiceId;
+use crate::features::{EntityFeatures, QGramSet, TokenSet};
+use crate::model::{Correspondence, EntityId};
+use crate::partition::{MatchTask, PartitionId};
+use crate::store::PartitionData;
+use std::fmt;
+
+/// Decode failure: the frame is not a valid message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// The buffer ended before the message was complete.
+    Truncated,
+    /// The first payload byte is not a known message tag.
+    UnknownTag(u8),
+    /// The message decoded but left unconsumed bytes.
+    TrailingBytes(usize),
+    /// A string field is not valid UTF-8.
+    BadUtf8,
+    /// A frame header announced more than [`MAX_FRAME_BYTES`].
+    FrameTooLarge(u64),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "truncated frame"),
+            WireError::UnknownTag(t) => write!(f, "unknown message tag {t}"),
+            WireError::TrailingBytes(n) => {
+                write!(f, "{n} trailing bytes after message")
+            }
+            WireError::BadUtf8 => write!(f, "string field is not UTF-8"),
+            WireError::FrameTooLarge(n) => {
+                write!(f, "frame of {n} bytes exceeds limit")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// One protocol message (control plane to the workflow service, data
+/// plane to the data service).
+#[derive(Debug)]
+pub enum Message {
+    /// match service → workflow service: join the cluster.
+    Join { name: String },
+    /// workflow service → match service: membership granted.
+    JoinAck { service: ServiceId },
+    /// match service → workflow service: graceful departure.
+    Leave { service: ServiceId },
+    /// workflow service → match service: departure acknowledged.
+    LeaveAck,
+    /// match service → workflow service: pull a task (initial request;
+    /// subsequent pulls piggyback on [`Message::Complete`]).
+    TaskRequest { service: ServiceId },
+    /// workflow service → match service: task assignment.
+    TaskAssign { task: MatchTask },
+    /// workflow service → match service: nothing to assign right now.
+    /// `done == true` means the whole workflow has completed and the
+    /// match service may shut down; `false` means tasks are in flight
+    /// elsewhere and may yet be re-queued (poll again).
+    NoTask { done: bool },
+    /// match service → workflow service: completion report with the
+    /// piggybacked cache status (paper §4) and the task's match output.
+    /// The reply is the next assignment ([`Message::TaskAssign`] or
+    /// [`Message::NoTask`]) — the paper's pull scheduling in one round
+    /// trip.
+    Complete {
+        service: ServiceId,
+        task_id: u32,
+        comparisons: u64,
+        cached: Vec<PartitionId>,
+        matches: Vec<Correspondence>,
+    },
+    /// match service → workflow service: liveness signal.
+    Heartbeat { service: ServiceId },
+    /// workflow service → match service: liveness acknowledged.
+    HeartbeatAck,
+    /// match service → data service: fetch one partition.
+    FetchPartition { id: PartitionId },
+    /// data service → match service: the partition payload (entity ids +
+    /// precomputed match features).
+    Partition { data: PartitionData },
+    /// Either direction: request failed.
+    Error { message: String },
+}
+
+// ---------------------------------------------------------------- tags
+
+const TAG_JOIN: u8 = 1;
+const TAG_JOIN_ACK: u8 = 2;
+const TAG_LEAVE: u8 = 3;
+const TAG_LEAVE_ACK: u8 = 4;
+const TAG_TASK_REQUEST: u8 = 5;
+const TAG_TASK_ASSIGN: u8 = 6;
+const TAG_NO_TASK: u8 = 7;
+const TAG_COMPLETE: u8 = 8;
+const TAG_HEARTBEAT: u8 = 9;
+const TAG_HEARTBEAT_ACK: u8 = 10;
+const TAG_FETCH_PARTITION: u8 = 11;
+const TAG_PARTITION: u8 = 12;
+const TAG_ERROR: u8 = 13;
+
+/// Minimum wire footprint of one [`EntityFeatures`]: a 4-byte title
+/// length plus three 4-byte list counts (all possibly zero).
+const MIN_FEATURE_BYTES: usize = 16;
+
+// ------------------------------------------------------------- encoder
+
+fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    put_u32(buf, v.to_bits());
+}
+
+fn put_bool(buf: &mut Vec<u8>, v: bool) {
+    put_u8(buf, v as u8);
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_u64_list(buf: &mut Vec<u8>, vs: &[u64]) {
+    put_u32(buf, vs.len() as u32);
+    for &v in vs {
+        put_u64(buf, v);
+    }
+}
+
+fn put_service(buf: &mut Vec<u8>, s: ServiceId) {
+    put_u32(buf, s.0 as u32);
+}
+
+fn put_features(buf: &mut Vec<u8>, f: &EntityFeatures) {
+    // Only the canonical representations travel; `title_chars` and the
+    // sparse count vectors are derived again on the receiving side.
+    put_str(buf, &f.title_norm);
+    put_u64_list(buf, f.title_grams.hashes());
+    put_u64_list(buf, f.title_tokens.hashes());
+    put_u64_list(buf, f.desc_grams.hashes());
+}
+
+/// Encode the payload of a [`Message::Partition`] reply directly from a
+/// borrowed [`PartitionData`] — the data service serves `Arc`ed
+/// partitions and must not deep-clone them per fetch.
+pub fn encode_partition_message(data: &PartitionData) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64 + data.approx_bytes as usize / 2);
+    put_u8(&mut buf, TAG_PARTITION);
+    put_u32(&mut buf, data.id.0);
+    put_u64(&mut buf, data.approx_bytes);
+    put_u32(&mut buf, data.entities.len() as u32);
+    for e in &data.entities {
+        put_u32(&mut buf, e.0);
+    }
+    debug_assert_eq!(data.features.len(), data.entities.len());
+    for f in &data.features {
+        put_features(&mut buf, f);
+    }
+    buf
+}
+
+impl Message {
+    /// Encode to a payload (without the frame length prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(16);
+        match self {
+            Message::Join { name } => {
+                put_u8(&mut b, TAG_JOIN);
+                put_str(&mut b, name);
+            }
+            Message::JoinAck { service } => {
+                put_u8(&mut b, TAG_JOIN_ACK);
+                put_service(&mut b, *service);
+            }
+            Message::Leave { service } => {
+                put_u8(&mut b, TAG_LEAVE);
+                put_service(&mut b, *service);
+            }
+            Message::LeaveAck => put_u8(&mut b, TAG_LEAVE_ACK),
+            Message::TaskRequest { service } => {
+                put_u8(&mut b, TAG_TASK_REQUEST);
+                put_service(&mut b, *service);
+            }
+            Message::TaskAssign { task } => {
+                put_u8(&mut b, TAG_TASK_ASSIGN);
+                put_u32(&mut b, task.id);
+                put_u32(&mut b, task.left.0);
+                put_u32(&mut b, task.right.0);
+            }
+            Message::NoTask { done } => {
+                put_u8(&mut b, TAG_NO_TASK);
+                put_bool(&mut b, *done);
+            }
+            Message::Complete {
+                service,
+                task_id,
+                comparisons,
+                cached,
+                matches,
+            } => {
+                put_u8(&mut b, TAG_COMPLETE);
+                put_service(&mut b, *service);
+                put_u32(&mut b, *task_id);
+                put_u64(&mut b, *comparisons);
+                put_u32(&mut b, cached.len() as u32);
+                for p in cached {
+                    put_u32(&mut b, p.0);
+                }
+                put_u32(&mut b, matches.len() as u32);
+                for c in matches {
+                    put_u32(&mut b, c.e1.0);
+                    put_u32(&mut b, c.e2.0);
+                    put_f32(&mut b, c.sim);
+                }
+            }
+            Message::Heartbeat { service } => {
+                put_u8(&mut b, TAG_HEARTBEAT);
+                put_service(&mut b, *service);
+            }
+            Message::HeartbeatAck => put_u8(&mut b, TAG_HEARTBEAT_ACK),
+            Message::FetchPartition { id } => {
+                put_u8(&mut b, TAG_FETCH_PARTITION);
+                put_u32(&mut b, id.0);
+            }
+            Message::Partition { data } => {
+                return encode_partition_message(data);
+            }
+            Message::Error { message } => {
+                put_u8(&mut b, TAG_ERROR);
+                put_str(&mut b, message);
+            }
+        }
+        b
+    }
+
+    /// Decode a full payload; strict — see module docs.
+    pub fn decode(payload: &[u8]) -> Result<Message, WireError> {
+        let mut d = Dec {
+            buf: payload,
+            pos: 0,
+        };
+        let tag = d.u8()?;
+        let msg = match tag {
+            TAG_JOIN => Message::Join { name: d.string()? },
+            TAG_JOIN_ACK => Message::JoinAck {
+                service: d.service()?,
+            },
+            TAG_LEAVE => Message::Leave {
+                service: d.service()?,
+            },
+            TAG_LEAVE_ACK => Message::LeaveAck,
+            TAG_TASK_REQUEST => Message::TaskRequest {
+                service: d.service()?,
+            },
+            TAG_TASK_ASSIGN => Message::TaskAssign {
+                task: MatchTask {
+                    id: d.u32()?,
+                    left: PartitionId(d.u32()?),
+                    right: PartitionId(d.u32()?),
+                },
+            },
+            TAG_NO_TASK => Message::NoTask { done: d.bool()? },
+            TAG_COMPLETE => {
+                let service = d.service()?;
+                let task_id = d.u32()?;
+                let comparisons = d.u64()?;
+                let n_cached = d.list_len(4)?;
+                let mut cached = Vec::with_capacity(n_cached);
+                for _ in 0..n_cached {
+                    cached.push(PartitionId(d.u32()?));
+                }
+                let n_matches = d.list_len(12)?;
+                let mut matches = Vec::with_capacity(n_matches);
+                for _ in 0..n_matches {
+                    let e1 = EntityId(d.u32()?);
+                    let e2 = EntityId(d.u32()?);
+                    let sim = d.f32()?;
+                    matches.push(Correspondence { e1, e2, sim });
+                }
+                Message::Complete {
+                    service,
+                    task_id,
+                    comparisons,
+                    cached,
+                    matches,
+                }
+            }
+            TAG_HEARTBEAT => Message::Heartbeat {
+                service: d.service()?,
+            },
+            TAG_HEARTBEAT_ACK => Message::HeartbeatAck,
+            TAG_FETCH_PARTITION => Message::FetchPartition {
+                id: PartitionId(d.u32()?),
+            },
+            TAG_PARTITION => {
+                let id = PartitionId(d.u32()?);
+                let approx_bytes = d.u64()?;
+                let n = d.list_len(4)?;
+                let mut entities = Vec::with_capacity(n);
+                for _ in 0..n {
+                    entities.push(EntityId(d.u32()?));
+                }
+                // even an empty-string feature occupies MIN_FEATURE_BYTES
+                // on the wire; re-validate against what is actually left
+                // so a lying entity count cannot reserve gigabytes here
+                d.ensure_remaining(n, MIN_FEATURE_BYTES)?;
+                let mut features = Vec::with_capacity(n);
+                for _ in 0..n {
+                    features.push(d.features()?);
+                }
+                Message::Partition {
+                    data: PartitionData {
+                        id,
+                        entities,
+                        features,
+                        approx_bytes,
+                    },
+                }
+            }
+            TAG_ERROR => Message::Error {
+                message: d.string()?,
+            },
+            other => return Err(WireError::UnknownTag(other)),
+        };
+        d.finish()?;
+        Ok(msg)
+    }
+
+    /// Short tag name for logs and error messages.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Message::Join { .. } => "Join",
+            Message::JoinAck { .. } => "JoinAck",
+            Message::Leave { .. } => "Leave",
+            Message::LeaveAck => "LeaveAck",
+            Message::TaskRequest { .. } => "TaskRequest",
+            Message::TaskAssign { .. } => "TaskAssign",
+            Message::NoTask { .. } => "NoTask",
+            Message::Complete { .. } => "Complete",
+            Message::Heartbeat { .. } => "Heartbeat",
+            Message::HeartbeatAck => "HeartbeatAck",
+            Message::FetchPartition { .. } => "FetchPartition",
+            Message::Partition { .. } => "Partition",
+            Message::Error { .. } => "Error",
+        }
+    }
+}
+
+// ------------------------------------------------------------- decoder
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.buf.len() - self.pos < n {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn bool(&mut self) -> Result<bool, WireError> {
+        Ok(self.u8()? != 0)
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn service(&mut self) -> Result<ServiceId, WireError> {
+        Ok(ServiceId(self.u32()? as usize))
+    }
+
+    /// Element count of a collection whose elements need at least
+    /// `min_elem_bytes` each — validated against the remaining buffer so
+    /// a corrupt count cannot trigger a huge allocation.
+    fn list_len(&mut self, min_elem_bytes: usize) -> Result<usize, WireError> {
+        let n = self.u32()? as usize;
+        self.ensure_remaining(n, min_elem_bytes)?;
+        Ok(n)
+    }
+
+    /// Re-validate an already-read count against the bytes still in the
+    /// buffer (used when one count sizes several consecutive arrays
+    /// whose per-element wire footprints differ).
+    fn ensure_remaining(
+        &self,
+        count: usize,
+        min_elem_bytes: usize,
+    ) -> Result<(), WireError> {
+        if count.saturating_mul(min_elem_bytes) > self.buf.len() - self.pos {
+            return Err(WireError::Truncated);
+        }
+        Ok(())
+    }
+
+    fn string(&mut self) -> Result<String, WireError> {
+        let len = self.list_len(1)?;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::BadUtf8)
+    }
+
+    fn u64_list(&mut self) -> Result<Vec<u64>, WireError> {
+        let n = self.list_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+
+    fn features(&mut self) -> Result<EntityFeatures, WireError> {
+        let title_norm = self.string()?;
+        let title_grams = QGramSet::from_hashes(self.u64_list()?);
+        let title_tokens = TokenSet::from_hashes(self.u64_list()?);
+        let desc_grams = QGramSet::from_hashes(self.u64_list()?);
+        Ok(EntityFeatures {
+            title_chars: title_norm.chars().collect(),
+            title_sparse: title_grams.to_sparse(),
+            desc_sparse: desc_grams.to_sparse(),
+            title_norm,
+            title_grams,
+            title_tokens,
+            desc_grams,
+        })
+    }
+
+    fn finish(self) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::TrailingBytes(self.buf.len() - self.pos));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+    use crate::util::Rng;
+
+    fn rand_string(rng: &mut Rng, max_len: usize) -> String {
+        let len = rng.gen_range(max_len + 1);
+        (0..len)
+            .map(|_| {
+                // mixed ASCII + a multibyte char to exercise UTF-8 paths
+                match rng.gen_range(20) {
+                    0 => 'ü',
+                    n => (b'a' + (n as u8 % 26)) as char,
+                }
+            })
+            .collect()
+    }
+
+    fn rand_features(rng: &mut Rng) -> EntityFeatures {
+        let title = rand_string(rng, 24);
+        let desc = rand_string(rng, 60);
+        let title_grams = QGramSet::new(&title, 3);
+        let desc_grams = QGramSet::new(&desc, 3);
+        EntityFeatures {
+            title_chars: crate::features::normalize(&title).chars().collect(),
+            title_norm: crate::features::normalize(&title),
+            title_sparse: title_grams.to_sparse(),
+            desc_sparse: desc_grams.to_sparse(),
+            title_grams,
+            title_tokens: TokenSet::new(&title),
+            desc_grams,
+        }
+    }
+
+    fn rand_partition(rng: &mut Rng) -> PartitionData {
+        let n = rng.gen_range(6);
+        let entities: Vec<EntityId> =
+            (0..n).map(|i| EntityId(i as u32 * 7)).collect();
+        let features = (0..n).map(|_| rand_features(rng)).collect();
+        PartitionData {
+            id: PartitionId(rng.gen_range(1000) as u32),
+            entities,
+            features,
+            approx_bytes: rng.gen_range(1 << 20) as u64,
+        }
+    }
+
+    /// One of each message kind with randomized fields.
+    fn arbitrary_messages(rng: &mut Rng) -> Vec<Message> {
+        let svc = ServiceId(rng.gen_range(64));
+        vec![
+            Message::Join {
+                name: rand_string(rng, 16),
+            },
+            Message::JoinAck { service: svc },
+            Message::Leave { service: svc },
+            Message::LeaveAck,
+            Message::TaskRequest { service: svc },
+            Message::TaskAssign {
+                task: MatchTask {
+                    id: rng.gen_range(10_000) as u32,
+                    left: PartitionId(rng.gen_range(500) as u32),
+                    right: PartitionId(rng.gen_range(500) as u32),
+                },
+            },
+            Message::NoTask {
+                done: rng.gen_bool(0.5),
+            },
+            Message::Complete {
+                service: svc,
+                task_id: rng.gen_range(10_000) as u32,
+                comparisons: rng.gen_range(1 << 30) as u64,
+                cached: (0..rng.gen_range(5))
+                    .map(|i| PartitionId(i as u32))
+                    .collect(),
+                matches: (0..rng.gen_range(5))
+                    .map(|i| Correspondence {
+                        e1: EntityId(2 * i as u32),
+                        e2: EntityId(2 * i as u32 + 1),
+                        sim: (rng.gen_range(1000) as f32) / 1000.0,
+                    })
+                    .collect(),
+            },
+            Message::Heartbeat { service: svc },
+            Message::HeartbeatAck,
+            Message::FetchPartition {
+                id: PartitionId(rng.gen_range(500) as u32),
+            },
+            Message::Partition {
+                data: rand_partition(rng),
+            },
+            Message::Error {
+                message: rand_string(rng, 40),
+            },
+        ]
+    }
+
+    /// Property: every message round-trips encode → decode → encode to
+    /// identical bytes (the encoding is canonical, so byte equality is
+    /// full structural equality).
+    #[test]
+    fn prop_roundtrip_every_message_type() {
+        forall("wire-roundtrip", 48, |rng| {
+            for msg in arbitrary_messages(rng) {
+                let bytes = msg.encode();
+                let decoded = Message::decode(&bytes).unwrap_or_else(|e| {
+                    panic!("decode {}: {e}", msg.kind())
+                });
+                assert_eq!(
+                    decoded.encode(),
+                    bytes,
+                    "canonical re-encode mismatch for {}",
+                    msg.kind()
+                );
+                assert_eq!(decoded.kind(), msg.kind());
+            }
+        });
+    }
+
+    /// Property: every strict prefix of a valid payload is rejected —
+    /// decode never half-reads a truncated frame.
+    #[test]
+    fn prop_truncated_frames_rejected() {
+        forall("wire-truncated", 24, |rng| {
+            for msg in arbitrary_messages(rng) {
+                let bytes = msg.encode();
+                // all prefixes for small messages, sampled for large ones
+                let step = (bytes.len() / 64).max(1);
+                for cut in (0..bytes.len()).step_by(step) {
+                    assert!(
+                        Message::decode(&bytes[..cut]).is_err(),
+                        "{}: prefix {cut}/{} decoded",
+                        msg.kind(),
+                        bytes.len()
+                    );
+                }
+            }
+        });
+    }
+
+    /// Property: trailing junk after a valid message is rejected.
+    #[test]
+    fn prop_trailing_bytes_rejected() {
+        forall("wire-trailing", 24, |rng| {
+            for msg in arbitrary_messages(rng) {
+                let mut bytes = msg.encode();
+                bytes.push(rng.gen_range(256) as u8);
+                match Message::decode(&bytes) {
+                    Err(_) => {}
+                    Ok(d) => panic!(
+                        "{}: decoded with trailing byte as {}",
+                        msg.kind(),
+                        d.kind()
+                    ),
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn unknown_tag_rejected() {
+        assert!(matches!(
+            Message::decode(&[0xEE]),
+            Err(WireError::UnknownTag(0xEE))
+        ));
+        assert!(matches!(
+            Message::decode(&[]),
+            Err(WireError::Truncated)
+        ));
+    }
+
+    #[test]
+    fn corrupt_length_does_not_overallocate() {
+        // a Complete frame claiming 4 billion cached partitions must be
+        // rejected by the remaining-bytes check, not attempted
+        let mut b = vec![TAG_COMPLETE];
+        put_u32(&mut b, 1); // service
+        put_u32(&mut b, 2); // task
+        put_u64(&mut b, 3); // comparisons
+        put_u32(&mut b, u32::MAX); // cached count — lies
+        assert!(matches!(
+            Message::decode(&b),
+            Err(WireError::Truncated)
+        ));
+    }
+
+    #[test]
+    fn partition_frame_with_lying_entity_count_rejected_before_alloc() {
+        // a frame whose entity count is covered by entity-id bytes but
+        // whose feature section is absent must fail the second
+        // remaining-bytes check, not reserve features capacity for it
+        let n = 1000u32;
+        let mut b = vec![TAG_PARTITION];
+        put_u32(&mut b, 1); // id
+        put_u64(&mut b, 0); // approx_bytes
+        put_u32(&mut b, n);
+        for i in 0..n {
+            put_u32(&mut b, i); // entity ids — present and valid
+        }
+        // …and zero feature bytes follow
+        assert!(matches!(
+            Message::decode(&b),
+            Err(WireError::Truncated)
+        ));
+    }
+
+    #[test]
+    fn partition_payload_reconstructs_derived_features() {
+        let title = "LG GH22NS50 Super Multi";
+        let desc = "22x dvd writer sata";
+        let title_grams = QGramSet::new(title, 3);
+        let desc_grams = QGramSet::new(desc, 3);
+        let f = EntityFeatures {
+            title_chars: crate::features::normalize(title).chars().collect(),
+            title_norm: crate::features::normalize(title),
+            title_sparse: title_grams.to_sparse(),
+            desc_sparse: desc_grams.to_sparse(),
+            title_grams,
+            title_tokens: TokenSet::new(title),
+            desc_grams,
+        };
+        let data = PartitionData {
+            id: PartitionId(7),
+            entities: vec![EntityId(1)],
+            features: vec![f],
+            approx_bytes: 1234,
+        };
+        let bytes = encode_partition_message(&data);
+        let Ok(Message::Partition { data: back }) = Message::decode(&bytes)
+        else {
+            panic!("decode partition");
+        };
+        assert_eq!(back.id, data.id);
+        assert_eq!(back.entities, data.entities);
+        assert_eq!(back.approx_bytes, data.approx_bytes);
+        let (a, b) = (&back.features[0], &data.features[0]);
+        assert_eq!(a.title_norm, b.title_norm);
+        assert_eq!(a.title_chars, b.title_chars);
+        assert_eq!(a.title_grams, b.title_grams);
+        assert_eq!(a.title_tokens, b.title_tokens);
+        assert_eq!(a.desc_grams, b.desc_grams);
+        assert_eq!(a.title_sparse, b.title_sparse);
+        assert_eq!(a.desc_sparse, b.desc_sparse);
+    }
+
+    #[test]
+    fn message_encoding_via_enum_matches_borrowed_encoder() {
+        let data = PartitionData {
+            id: PartitionId(3),
+            entities: vec![],
+            features: vec![],
+            approx_bytes: 0,
+        };
+        let borrowed = encode_partition_message(&data);
+        let owned = Message::Partition { data }.encode();
+        assert_eq!(borrowed, owned);
+    }
+}

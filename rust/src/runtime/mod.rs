@@ -14,18 +14,23 @@
 //!    correspondences above the decision threshold.
 //!
 //! Python never runs at match time: the artifacts are self-contained HLO.
+//!
+//! **Feature gating:** the PJRT bridge needs the vendored `xla` crate
+//! and a `libxla_extension` install, so it sits behind the **`xla`**
+//! cargo feature.  The default (std-only) build keeps the same public
+//! API — [`MatchEngine::new`] then returns an error, and everything
+//! that probes for the accelerated path (tests, benches, examples,
+//! `pem artifacts --smoke`) skips gracefully, exactly as it does when
+//! `make artifacts` has not been run.
 
 pub mod vmem;
 
 use crate::features::DEFAULT_DIM;
-use crate::matching::{MatchStrategy, StrategyKind};
-use crate::model::Correspondence;
-use crate::store::PartitionData;
-use crate::worker::TaskExecutor;
+use crate::matching::StrategyKind;
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+
+pub use pjrt::{MatchEngine, PjrtExecutor};
 
 /// One artifact entry from `manifest.txt`:
 /// `name strategy capacity feature_dim n_params`.
@@ -109,183 +114,287 @@ pub fn default_artifact_dir() -> PathBuf {
     PathBuf::from("artifacts")
 }
 
-/// A compiled match executable (one artifact on one PJRT client).
-struct LoadedExec {
-    exe: xla::PjRtLoadedExecutable,
-    capacity: usize,
-    feature_dim: usize,
-}
+/// The real PJRT bridge (requires the vendored `xla` crate).
+#[cfg(feature = "xla")]
+mod pjrt {
+    use super::Manifest;
+    use crate::matching::{MatchStrategy, StrategyKind};
+    use crate::model::Correspondence;
+    use crate::store::PartitionData;
+    use crate::worker::TaskExecutor;
+    use anyhow::{anyhow, Result};
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::sync::Mutex;
 
-/// PJRT client + compile cache for the match executables.
-///
-/// The xla crate's handles are not `Sync`; the engine serializes
-/// compilation and execution behind one mutex (one executable runs at a
-/// time per engine — use one engine per match service for parallelism).
-pub struct MatchEngine {
-    manifest: Manifest,
-    inner: Mutex<EngineInner>,
-}
-
-struct EngineInner {
-    client: xla::PjRtClient,
-    cache: HashMap<String, LoadedExec>,
-}
-
-// SAFETY: all access to the non-Sync xla handles goes through the mutex.
-unsafe impl Send for MatchEngine {}
-unsafe impl Sync for MatchEngine {}
-
-impl MatchEngine {
-    /// Create a CPU PJRT engine over the given artifact directory.
-    pub fn new(artifact_dir: &Path) -> Result<MatchEngine> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
-        Ok(MatchEngine {
-            manifest,
-            inner: Mutex::new(EngineInner {
-                client,
-                cache: HashMap::new(),
-            }),
-        })
+    /// A compiled match executable (one artifact on one PJRT client).
+    struct LoadedExec {
+        exe: xla::PjRtLoadedExecutable,
+        capacity: usize,
+        feature_dim: usize,
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// Execute one match task on the accelerated path.
+    /// PJRT client + compile cache for the match executables.
     ///
-    /// Marshals both partitions' (title, description) feature matrices
-    /// padded to the chosen artifact capacity, executes, and returns the
-    /// dense `capacity × capacity` combined-similarity matrix (row-major;
-    /// entries past the real row counts are zero by construction).
-    pub fn run_pair(
-        &self,
-        strategy: StrategyKind,
-        params: [f32; 4],
-        left: &PartitionData,
-        right: &PartitionData,
-    ) -> Result<(Vec<f32>, usize)> {
-        let n = left.len().max(right.len());
-        let entry = self
-            .manifest
-            .pick(strategy, n)
-            .ok_or_else(|| {
-                anyhow!(
-                    "no artifact for {} with capacity >= {n}",
-                    strategy.name()
-                )
-            })?
-            .clone();
-        let mut inner = self.inner.lock().unwrap();
-        if !inner.cache.contains_key(&entry.name) {
-            let path = self.manifest.artifact_path(&entry);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().expect("utf8 path"),
-            )
-            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = inner
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {}: {e:?}", entry.name))?;
-            inner.cache.insert(
-                entry.name.clone(),
-                LoadedExec {
-                    exe,
-                    capacity: entry.capacity,
-                    feature_dim: entry.feature_dim,
-                },
-            );
+    /// The xla crate's handles are not `Sync`; the engine serializes
+    /// compilation and execution behind one mutex (one executable runs at a
+    /// time per engine — use one engine per match service for parallelism).
+    pub struct MatchEngine {
+        manifest: Manifest,
+        inner: Mutex<EngineInner>,
+    }
+
+    struct EngineInner {
+        client: xla::PjRtClient,
+        cache: HashMap<String, LoadedExec>,
+    }
+
+    // SAFETY: all access to the non-Sync xla handles goes through the mutex.
+    unsafe impl Send for MatchEngine {}
+    unsafe impl Sync for MatchEngine {}
+
+    impl MatchEngine {
+        /// Create a CPU PJRT engine over the given artifact directory.
+        pub fn new(artifact_dir: &Path) -> Result<MatchEngine> {
+            let manifest = Manifest::load(artifact_dir)?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+            Ok(MatchEngine {
+                manifest,
+                inner: Mutex::new(EngineInner {
+                    client,
+                    cache: HashMap::new(),
+                }),
+            })
         }
-        let le = &inner.cache[&entry.name];
-        let (cap, dim) = (le.capacity, le.feature_dim);
 
-        let (a_title, a_desc) = left.feature_matrices(cap, dim);
-        let (b_title, b_desc) = right.feature_matrices(cap, dim);
-        let lit = |m: &crate::features::FeatureMatrix| -> Result<xla::Literal> {
-            xla::Literal::vec1(&m.data)
-                .reshape(&[cap as i64, dim as i64])
-                .map_err(|e| anyhow!("reshape: {e:?}"))
-        };
-        let params_lit = xla::Literal::vec1(&params);
-        let inputs = [
-            lit(&a_title)?,
-            lit(&a_desc)?,
-            lit(&b_title)?,
-            lit(&b_desc)?,
-            params_lit,
-        ];
-        let result = le
-            .exe
-            .execute::<xla::Literal>(&inputs)
-            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let out = result
-            .to_tuple1()
-            .map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
-        let values = out
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("to_vec: {e:?}"))?;
-        debug_assert_eq!(values.len(), cap * cap);
-        Ok((values, cap))
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// Execute one match task on the accelerated path.
+        ///
+        /// Marshals both partitions' (title, description) feature
+        /// matrices padded to the chosen artifact capacity, executes,
+        /// and returns the dense `capacity × capacity`
+        /// combined-similarity matrix (row-major; entries past the real
+        /// row counts are zero by construction).
+        pub fn run_pair(
+            &self,
+            strategy: StrategyKind,
+            params: [f32; 4],
+            left: &PartitionData,
+            right: &PartitionData,
+        ) -> Result<(Vec<f32>, usize)> {
+            let n = left.len().max(right.len());
+            let entry = self
+                .manifest
+                .pick(strategy, n)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "no artifact for {} with capacity >= {n}",
+                        strategy.name()
+                    )
+                })?
+                .clone();
+            let mut inner = self.inner.lock().unwrap();
+            if !inner.cache.contains_key(&entry.name) {
+                let path = self.manifest.artifact_path(&entry);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().expect("utf8 path"),
+                )
+                .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = inner
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compile {}: {e:?}", entry.name))?;
+                inner.cache.insert(
+                    entry.name.clone(),
+                    LoadedExec {
+                        exe,
+                        capacity: entry.capacity,
+                        feature_dim: entry.feature_dim,
+                    },
+                );
+            }
+            let le = &inner.cache[&entry.name];
+            let (cap, dim) = (le.capacity, le.feature_dim);
+
+            let (a_title, a_desc) = left.feature_matrices(cap, dim);
+            let (b_title, b_desc) = right.feature_matrices(cap, dim);
+            let lit =
+                |m: &crate::features::FeatureMatrix| -> Result<xla::Literal> {
+                    xla::Literal::vec1(&m.data)
+                        .reshape(&[cap as i64, dim as i64])
+                        .map_err(|e| anyhow!("reshape: {e:?}"))
+                };
+            let params_lit = xla::Literal::vec1(&params);
+            let inputs = [
+                lit(&a_title)?,
+                lit(&a_desc)?,
+                lit(&b_title)?,
+                lit(&b_desc)?,
+                params_lit,
+            ];
+            let result = le
+                .exe
+                .execute::<xla::Literal>(&inputs)
+                .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            let out = result
+                .to_tuple1()
+                .map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+            let values = out
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            debug_assert_eq!(values.len(), cap * cap);
+            Ok((values, cap))
+        }
     }
-}
 
-/// [`TaskExecutor`] over the accelerated PJRT path.
-pub struct PjrtExecutor {
-    engine: std::sync::Arc<MatchEngine>,
-    pub strategy: MatchStrategy,
-}
-
-impl PjrtExecutor {
-    pub fn new(
+    /// [`TaskExecutor`] over the accelerated PJRT path.
+    pub struct PjrtExecutor {
         engine: std::sync::Arc<MatchEngine>,
-        strategy: MatchStrategy,
-    ) -> PjrtExecutor {
-        PjrtExecutor { engine, strategy }
+        pub strategy: MatchStrategy,
     }
-}
 
-impl TaskExecutor for PjrtExecutor {
-    fn execute(
-        &self,
-        left: &PartitionData,
-        right: &PartitionData,
-        intra: bool,
-    ) -> Vec<Correspondence> {
-        let (sims, cap) = self
-            .engine
-            .run_pair(
-                self.strategy.kind,
-                self.strategy.params.values,
-                left,
-                right,
-            )
-            .expect("PJRT execution failed");
-        let threshold = self.strategy.threshold as f32;
-        let mut out = Vec::new();
-        for i in 0..left.len() {
-            let row = &sims[i * cap..i * cap + right.len()];
-            let j0 = if intra { i + 1 } else { 0 };
-            for (j, &sim) in row.iter().enumerate().skip(j0) {
-                if sim >= threshold && left.entities[i] != right.entities[j]
-                {
-                    out.push(Correspondence::new(
-                        left.entities[i],
-                        right.entities[j],
-                        sim,
-                    ));
+    impl PjrtExecutor {
+        pub fn new(
+            engine: std::sync::Arc<MatchEngine>,
+            strategy: MatchStrategy,
+        ) -> PjrtExecutor {
+            PjrtExecutor { engine, strategy }
+        }
+    }
+
+    impl TaskExecutor for PjrtExecutor {
+        fn execute(
+            &self,
+            left: &PartitionData,
+            right: &PartitionData,
+            intra: bool,
+        ) -> Vec<Correspondence> {
+            let (sims, cap) = self
+                .engine
+                .run_pair(
+                    self.strategy.kind,
+                    self.strategy.params.values,
+                    left,
+                    right,
+                )
+                .expect("PJRT execution failed");
+            let threshold = self.strategy.threshold as f32;
+            let mut out = Vec::new();
+            for i in 0..left.len() {
+                let row = &sims[i * cap..i * cap + right.len()];
+                let j0 = if intra { i + 1 } else { 0 };
+                for (j, &sim) in row.iter().enumerate().skip(j0) {
+                    if sim >= threshold
+                        && left.entities[i] != right.entities[j]
+                    {
+                        out.push(Correspondence::new(
+                            left.entities[i],
+                            right.entities[j],
+                            sim,
+                        ));
+                    }
                 }
             }
+            out
         }
-        out
+
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
+    }
+}
+
+/// Stub used when the crate is built without the `xla` feature: same
+/// API, but [`MatchEngine::new`] always fails, so every accelerated-path
+/// consumer takes its existing "artifacts unavailable" skip path.
+#[cfg(not(feature = "xla"))]
+mod pjrt {
+    use super::Manifest;
+    use crate::matching::{MatchStrategy, StrategyKind};
+    use crate::model::Correspondence;
+    use crate::store::PartitionData;
+    use crate::worker::TaskExecutor;
+    use anyhow::{bail, Result};
+    use std::path::Path;
+
+    /// Disabled accelerated engine ([`MatchEngine::new`] always errs).
+    pub struct MatchEngine {
+        manifest: Manifest,
     }
 
-    fn name(&self) -> &'static str {
-        "pjrt"
+    impl MatchEngine {
+        /// Always fails: the accelerated path needs the `xla` feature.
+        pub fn new(_artifact_dir: &Path) -> Result<MatchEngine> {
+            bail!(
+                "accelerated PJRT path unavailable: pem was built without \
+                 the `xla` cargo feature (it needs the vendored xla bridge \
+                 crate and libxla_extension)"
+            )
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// Unreachable in practice — [`MatchEngine::new`] never
+        /// succeeds without the `xla` feature.
+        pub fn run_pair(
+            &self,
+            _strategy: StrategyKind,
+            _params: [f32; 4],
+            _left: &PartitionData,
+            _right: &PartitionData,
+        ) -> Result<(Vec<f32>, usize)> {
+            bail!("accelerated PJRT path unavailable (no `xla` feature)")
+        }
+    }
+
+    /// Disabled [`TaskExecutor`] counterpart (cannot be constructed in
+    /// practice, since no [`MatchEngine`] ever exists).
+    pub struct PjrtExecutor {
+        engine: std::sync::Arc<MatchEngine>,
+        pub strategy: MatchStrategy,
+    }
+
+    impl PjrtExecutor {
+        pub fn new(
+            engine: std::sync::Arc<MatchEngine>,
+            strategy: MatchStrategy,
+        ) -> PjrtExecutor {
+            PjrtExecutor { engine, strategy }
+        }
+    }
+
+    impl TaskExecutor for PjrtExecutor {
+        fn execute(
+            &self,
+            left: &PartitionData,
+            right: &PartitionData,
+            _intra: bool,
+        ) -> Vec<Correspondence> {
+            // keep the stub honest if someone ever conjures one up
+            let err = self
+                .engine
+                .run_pair(
+                    self.strategy.kind,
+                    self.strategy.params.values,
+                    left,
+                    right,
+                )
+                .expect_err("stub run_pair cannot succeed");
+            panic!("PJRT execution failed: {err}")
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
     }
 }
 

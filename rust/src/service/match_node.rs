@@ -1,0 +1,399 @@
+//! A match service as a TCP client node (paper §4).
+//!
+//! One node = one [`ServiceId`]: it joins the workflow service, runs
+//! `threads` match workers that pull tasks over the wire, fetch
+//! partitions from the data service through a shared
+//! [`PartitionCache`], execute them on the configured
+//! [`TaskExecutor`] (pure-Rust or accelerated — the same trait the
+//! in-process engines use), and report completions with the
+//! piggybacked cache status.  A separate heartbeat thread keeps the
+//! workflow service's failure detector fed.
+//!
+//! The node runs to workflow completion (`NoTask { done: true }`),
+//! then leaves gracefully.  `fail_after_tasks` simulates a crash for
+//! failure-handling tests: after N completions the node abandons its
+//! next assigned task and stops heartbeating, so the workflow service
+//! must detect the failure and re-queue.
+
+use crate::coordinator::scheduler::ServiceId;
+use crate::partition::PartitionId;
+use crate::rpc::{Message, Transport};
+use crate::store::PartitionData;
+use crate::worker::{task_comparisons, PartitionCache, TaskExecutor};
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Configuration of one match-service node.
+#[derive(Clone, Debug)]
+pub struct MatchNodeConfig {
+    /// Workflow-service address, `host:port`.
+    pub workflow_addr: String,
+    /// Data-service address, `host:port`.
+    pub data_addr: String,
+    /// Human-readable node name (shows up in coordinator logs).
+    pub name: String,
+    /// Match worker threads (the paper's threads-per-node).
+    pub threads: usize,
+    /// Partition-cache capacity `c` shared by the node's workers
+    /// (0 disables caching).
+    pub cache_capacity: usize,
+    /// Liveness signal period; must be well below the workflow
+    /// service's heartbeat timeout.
+    pub heartbeat_interval: Duration,
+    /// Back-off when the open task list is momentarily empty.
+    pub poll_interval: Duration,
+    /// Connect/read timeout for all sockets.
+    pub io_timeout: Duration,
+    /// Test hook: simulate a crash after completing this many tasks.
+    pub fail_after_tasks: Option<usize>,
+}
+
+impl MatchNodeConfig {
+    pub fn new(workflow_addr: String, data_addr: String) -> MatchNodeConfig {
+        MatchNodeConfig {
+            workflow_addr,
+            data_addr,
+            name: "match-node".into(),
+            threads: 1,
+            cache_capacity: 0,
+            heartbeat_interval: Duration::from_millis(50),
+            poll_interval: Duration::from_millis(2),
+            io_timeout: Duration::from_secs(30),
+            fail_after_tasks: None,
+        }
+    }
+}
+
+/// What one node did during a run.
+#[derive(Debug, Clone)]
+pub struct NodeReport {
+    /// The [`ServiceId`] granted at join.
+    pub service: usize,
+    pub tasks_completed: u64,
+    pub comparisons: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Busy time per worker thread, ns.
+    pub busy_ns: Vec<u64>,
+    /// The node went down without a graceful leave — either the
+    /// simulated crash (`fail_after_tasks`) or a worker hitting an
+    /// unrecoverable error while holding a task.  Either way heartbeats
+    /// stopped, so the workflow service re-queues its in-flight work.
+    pub crashed: bool,
+    /// The coordinator went away mid-run (treated as end of workflow).
+    pub lost_coordinator: bool,
+}
+
+/// A configured match-service node; [`MatchServiceNode::run`] blocks
+/// until the workflow completes.
+pub struct MatchServiceNode {
+    cfg: MatchNodeConfig,
+}
+
+impl MatchServiceNode {
+    pub fn new(cfg: MatchNodeConfig) -> MatchServiceNode {
+        MatchServiceNode { cfg }
+    }
+
+    pub fn run(&self, executor: Arc<dyn TaskExecutor>) -> Result<NodeReport> {
+        run_match_node(&self.cfg, executor)
+    }
+}
+
+#[derive(Default)]
+struct WorkerStats {
+    busy_ns: u64,
+    completed: u64,
+    comparisons: u64,
+    lost_coordinator: bool,
+}
+
+/// Join, match until done, leave.  See module docs.
+pub fn run_match_node(
+    cfg: &MatchNodeConfig,
+    executor: Arc<dyn TaskExecutor>,
+) -> Result<NodeReport> {
+    assert!(cfg.threads >= 1, "a match node needs at least one worker");
+    let mut control = Transport::connect(
+        cfg.workflow_addr.as_str(),
+        cfg.io_timeout,
+    )
+    .with_context(|| {
+        format!("connecting to workflow service {}", cfg.workflow_addr)
+    })?;
+    let service = match control.request(&Message::Join {
+        name: cfg.name.clone(),
+    })? {
+        Message::JoinAck { service } => service,
+        other => bail!("join rejected: got {}", other.kind()),
+    };
+
+    let cache = PartitionCache::new(cfg.cache_capacity);
+    let dead = AtomicBool::new(false); // crash simulation tripped
+    let done = AtomicBool::new(false); // workflow finished
+    let completed_total = AtomicUsize::new(0);
+
+    let worker_results: Vec<Result<WorkerStats>> = std::thread::scope(|s| {
+        // heartbeat thread: its own connection, stops on done/dead
+        // (joined implicitly at scope exit, right after `done` is set)
+        let _heartbeat = s.spawn(|| heartbeat_loop(cfg, service, &done, &dead));
+
+        let handles: Vec<_> = (0..cfg.threads)
+            .map(|_| {
+                let executor = &executor;
+                let cache = &cache;
+                let dead = &dead;
+                let completed_total = &completed_total;
+                s.spawn(move || {
+                    worker_loop(
+                        cfg,
+                        service,
+                        executor.as_ref(),
+                        cache,
+                        completed_total,
+                        dead,
+                    )
+                })
+            })
+            .collect();
+        let results = handles
+            .into_iter()
+            .map(|h| h.join().expect("match worker panicked"))
+            .collect();
+        done.store(true, Ordering::SeqCst);
+        results
+    });
+
+    let crashed = dead.load(Ordering::SeqCst);
+    if !crashed {
+        let _ = control.request(&Message::Leave { service });
+    }
+
+    let mut report = NodeReport {
+        service: service.0,
+        tasks_completed: 0,
+        comparisons: 0,
+        cache_hits: cache.hits(),
+        cache_misses: cache.misses(),
+        busy_ns: Vec::new(),
+        crashed,
+        lost_coordinator: false,
+    };
+    for r in worker_results {
+        let stats = r?;
+        report.tasks_completed += stats.completed;
+        report.comparisons += stats.comparisons;
+        report.busy_ns.push(stats.busy_ns);
+        report.lost_coordinator |= stats.lost_coordinator;
+    }
+    Ok(report)
+}
+
+fn heartbeat_loop(
+    cfg: &MatchNodeConfig,
+    service: ServiceId,
+    done: &AtomicBool,
+    dead: &AtomicBool,
+) {
+    let Ok(mut t) =
+        Transport::connect(cfg.workflow_addr.as_str(), cfg.io_timeout)
+    else {
+        return;
+    };
+    let step = Duration::from_millis(5).min(cfg.heartbeat_interval);
+    'outer: loop {
+        if done.load(Ordering::SeqCst) || dead.load(Ordering::SeqCst) {
+            break;
+        }
+        if t.request(&Message::Heartbeat { service }).is_err() {
+            break; // coordinator gone; workers will notice on their own
+        }
+        let mut slept = Duration::ZERO;
+        while slept < cfg.heartbeat_interval {
+            if done.load(Ordering::SeqCst) || dead.load(Ordering::SeqCst) {
+                break 'outer;
+            }
+            std::thread::sleep(step);
+            slept += step;
+        }
+    }
+}
+
+fn worker_loop(
+    cfg: &MatchNodeConfig,
+    service: ServiceId,
+    executor: &dyn TaskExecutor,
+    cache: &PartitionCache,
+    completed_total: &AtomicUsize,
+    dead: &AtomicBool,
+) -> Result<WorkerStats> {
+    let mut wf =
+        Transport::connect(cfg.workflow_addr.as_str(), cfg.io_timeout)?;
+    let mut data =
+        Transport::connect(cfg.data_addr.as_str(), cfg.io_timeout)?;
+    let mut stats = WorkerStats::default();
+    let mut outgoing = Message::TaskRequest { service };
+    loop {
+        if dead.load(Ordering::SeqCst) {
+            break; // node-wide simulated crash: drop everything
+        }
+        let reply = match wf.request(&outgoing) {
+            Ok(r) => r,
+            Err(_) => {
+                // coordinator went away — treat as end of workflow
+                stats.lost_coordinator = true;
+                break;
+            }
+        };
+        match reply {
+            Message::TaskAssign { task } => {
+                if let Some(limit) = cfg.fail_after_tasks {
+                    if completed_total.load(Ordering::SeqCst) >= limit {
+                        // simulated crash: abandon the in-flight task,
+                        // stop heartbeating — the workflow service must
+                        // detect this and re-queue (paper §4)
+                        dead.store(true, Ordering::SeqCst);
+                        break;
+                    }
+                }
+                let t0 = Instant::now();
+                let intra = task.left == task.right;
+                let fetched = fetch(&mut data, cache, task.left)
+                    .and_then(|left| {
+                        if intra {
+                            Ok((left.clone(), left))
+                        } else {
+                            fetch(&mut data, cache, task.right)
+                                .map(|right| (left, right))
+                        }
+                    });
+                let (left, right) = match fetched {
+                    Ok(pair) => pair,
+                    Err(e) => {
+                        // we hold an assigned task we can no longer run:
+                        // take the whole node down (stop heartbeating) so
+                        // the workflow service's failure detector re-queues
+                        // it (paper §4) instead of it hanging in-flight
+                        // while sibling workers poll forever
+                        dead.store(true, Ordering::SeqCst);
+                        return Err(e.context(format!(
+                            "fetch for task {} failed; abandoning node",
+                            task.id
+                        )));
+                    }
+                };
+                let found = executor.execute(&left, &right, intra);
+                let n_cmp =
+                    task_comparisons(&task, left.len(), right.len());
+                stats.busy_ns += t0.elapsed().as_nanos() as u64;
+                stats.completed += 1;
+                stats.comparisons += n_cmp;
+                completed_total.fetch_add(1, Ordering::SeqCst);
+                outgoing = Message::Complete {
+                    service,
+                    task_id: task.id,
+                    comparisons: n_cmp,
+                    cached: cache.status(),
+                    matches: found,
+                };
+            }
+            Message::NoTask { done: true } => break,
+            Message::NoTask { done: false } => {
+                // tasks in flight elsewhere may be re-queued — poll
+                std::thread::sleep(cfg.poll_interval);
+                outgoing = Message::TaskRequest { service };
+            }
+            Message::Error { message } => {
+                dead.store(true, Ordering::SeqCst);
+                bail!("workflow service error: {message}")
+            }
+            other => {
+                dead.store(true, Ordering::SeqCst);
+                bail!("unexpected {} from workflow service", other.kind())
+            }
+        }
+    }
+    Ok(stats)
+}
+
+/// Fetch a partition through the node cache, falling back to a wire
+/// fetch from the data service (a cache miss, as in the paper).
+fn fetch(
+    data: &mut Transport,
+    cache: &PartitionCache,
+    id: PartitionId,
+) -> Result<Arc<PartitionData>> {
+    if let Some(d) = cache.get(id) {
+        return Ok(d);
+    }
+    match data.request(&Message::FetchPartition { id })? {
+        Message::Partition { data: payload } => {
+            let arc = Arc::new(payload);
+            cache.put(id, arc.clone());
+            Ok(arc)
+        }
+        Message::Error { message } => {
+            bail!("data service error: {message}")
+        }
+        other => bail!("unexpected {} from data service", other.kind()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::GeneratorConfig;
+    use crate::matching::{MatchStrategy, StrategyKind};
+    use crate::model::EntityId;
+    use crate::partition::{generate_tasks, partition_size_based};
+    use crate::service::{
+        DataServiceServer, WorkflowServerConfig, WorkflowServiceServer,
+    };
+    use crate::store::DataService;
+    use crate::worker::RustExecutor;
+
+    #[test]
+    fn single_node_completes_a_small_workflow_over_tcp() {
+        let data = GeneratorConfig::tiny().with_entities(120).generate();
+        let ids: Vec<EntityId> =
+            data.dataset.entities.iter().map(|e| e.id).collect();
+        let parts = partition_size_based(&ids, 40);
+        let tasks = generate_tasks(&parts);
+        let n_tasks = tasks.len();
+        let store =
+            Arc::new(DataService::build(&data.dataset, &parts));
+
+        let data_srv =
+            DataServiceServer::start(store, "127.0.0.1:0").unwrap();
+        let wf_srv = WorkflowServiceServer::start(
+            tasks,
+            WorkflowServerConfig::default(),
+            "127.0.0.1:0",
+        )
+        .unwrap();
+
+        let mut cfg = MatchNodeConfig::new(
+            wf_srv.addr().to_string(),
+            data_srv.addr().to_string(),
+        );
+        cfg.threads = 2;
+        cfg.cache_capacity = 4;
+        let exec: Arc<dyn TaskExecutor> = Arc::new(RustExecutor::new(
+            MatchStrategy::new(StrategyKind::Wam),
+        ));
+        let report = run_match_node(&cfg, exec).unwrap();
+
+        assert_eq!(report.tasks_completed as usize, n_tasks);
+        assert!(!report.crashed);
+        assert!(report.cache_misses > 0);
+        assert_eq!(report.busy_ns.len(), 2);
+        assert!(wf_srv.wait_done(Duration::from_secs(1)));
+        let wf_report = wf_srv.finish();
+        assert_eq!(wf_report.completed_tasks, n_tasks);
+        assert_eq!(wf_report.comparisons, 120 * 119 / 2);
+        assert!(data_srv.wire_bytes() > 0);
+        data_srv.shutdown();
+    }
+}

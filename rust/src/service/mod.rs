@@ -1,0 +1,41 @@
+//! The paper's §4 services as **real network endpoints**.
+//!
+//! The seed modeled the workflow / data / match services of the paper's
+//! distributed infrastructure as in-process objects plus a communication
+//! *cost model* ([`crate::net`]).  This module makes them actual TCP
+//! servers speaking the [`crate::rpc`] wire protocol, one blocking OS
+//! thread per connection — the same architecture as the paper's RMI
+//! deployment:
+//!
+//! * [`WorkflowServiceServer`] — owns the central task list and the
+//!   *same* [`crate::coordinator::Scheduler`] the in-process engines
+//!   use (FIFO + affinity policies), hands out tasks pull-style, merges
+//!   completion reports, tracks membership (join/leave) and fails
+//!   services whose heartbeats stop arriving, re-queueing their
+//!   in-flight tasks;
+//! * [`DataServiceServer`] — serves [`crate::store::PartitionData`]
+//!   payloads over TCP, with per-fetch accounting of the **actual bytes
+//!   on the wire** feeding a [`crate::net::TrafficStats`];
+//! * [`MatchServiceNode`] ([`match_node`]) — runs the existing
+//!   [`crate::worker::TaskExecutor`] + [`crate::worker::PartitionCache`]
+//!   behind socket clients: join → pull task → fetch partitions → match
+//!   → report completion with piggybacked cache status → repeat.
+//!
+//! The services compose three ways: in one process via
+//! [`crate::engine::dist`] (threads with real sockets on localhost),
+//! or across processes/machines via the `pem serve` (workflow + data)
+//! and `pem distmatch` (match node) CLI subcommands.
+
+pub mod data;
+pub mod match_node;
+pub mod workflow;
+
+pub use data::DataServiceServer;
+pub use match_node::{run_match_node, MatchNodeConfig, NodeReport};
+pub use workflow::{
+    WorkflowReport, WorkflowServerConfig, WorkflowServiceServer,
+};
+
+/// Convenience: a match-service node handle (config + entry point) —
+/// see [`match_node`].
+pub use match_node::MatchServiceNode;

@@ -1,0 +1,519 @@
+//! The workflow service as a TCP endpoint (paper §4).
+//!
+//! Owns the central task list behind the *same* [`Scheduler`] the
+//! in-process engines use, and serves it pull-style over the wire:
+//!
+//! * `Join` → membership + a fresh [`ServiceId`];
+//! * `TaskRequest` / `Complete` → next assignment (`TaskAssign`, or
+//!   `NoTask {done}` when the open list is empty), with completion
+//!   reports carrying the piggybacked cache status that feeds
+//!   affinity-based scheduling;
+//! * `Heartbeat` → liveness; a monitor thread fails services whose
+//!   heartbeats stop arriving within the configured timeout and
+//!   re-queues their in-flight tasks (paper §4 failure handling);
+//! * `Leave` → graceful departure (in-flight tasks re-queued).
+//!
+//! Stale completions — a service presumed dead that reports anyway —
+//! are dropped via [`Scheduler::try_report_complete`] instead of
+//! crashing the coordinator.
+
+use crate::coordinator::scheduler::{Policy, Scheduler, ServiceId};
+use crate::model::Correspondence;
+use crate::net::TrafficStats;
+use crate::partition::MatchTask;
+use crate::rpc::{Message, Transport};
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Workflow-server tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkflowServerConfig {
+    /// Scheduling policy for the central task list.
+    pub policy: Policy,
+    /// A service that has not been heard from for this long is failed
+    /// and its in-flight tasks re-queued.
+    pub heartbeat_timeout: Duration,
+}
+
+impl Default for WorkflowServerConfig {
+    fn default() -> Self {
+        WorkflowServerConfig {
+            policy: Policy::Affinity,
+            heartbeat_timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+struct Member {
+    name: String,
+    last_seen: Instant,
+}
+
+struct WfShared {
+    sched: Mutex<Scheduler>,
+    results: Mutex<Vec<Correspondence>>,
+    members: Mutex<HashMap<usize, Member>>,
+    next_service: AtomicUsize,
+    comparisons: AtomicU64,
+    /// Control-plane frames received (assignments are counted on send
+    /// inside the reply to the same frame, so this ≈ the paper's
+    /// "2 messages per task" plus heartbeats and membership).
+    control_messages: AtomicU64,
+    /// Control-plane wire bytes sent (replies).
+    traffic: TrafficStats,
+    requeued_tasks: AtomicU64,
+    stale_completions: AtomicU64,
+    shutdown: AtomicBool,
+    heartbeat_timeout: Duration,
+}
+
+impl WfShared {
+    fn touch(&self, service: ServiceId) {
+        let mut members = self.members.lock().unwrap();
+        members
+            .entry(service.0)
+            .and_modify(|m| m.last_seen = Instant::now())
+            .or_insert_with(|| Member {
+                name: format!("service-{}(rejoined)", service.0),
+                last_seen: Instant::now(),
+            });
+    }
+
+    /// Reply to a pull (TaskRequest or Complete): the next assignment.
+    fn next_assignment(&self, service: ServiceId) -> Message {
+        let mut sched = self.sched.lock().unwrap();
+        match sched.next_task(service) {
+            Some(task) => Message::TaskAssign { task },
+            None => Message::NoTask {
+                done: sched.is_done(),
+            },
+        }
+    }
+}
+
+/// Final statistics of a workflow run, extracted by
+/// [`WorkflowServiceServer::finish`].
+#[derive(Debug)]
+pub struct WorkflowReport {
+    /// Merged per-task match output in completion order.
+    pub correspondences: Vec<Correspondence>,
+    pub completed_tasks: usize,
+    pub total_tasks: usize,
+    pub comparisons: u64,
+    pub control_messages: u64,
+    /// Control-plane bytes sent over sockets.
+    pub control_wire_bytes: u64,
+    pub affinity_assignments: u64,
+    /// Tasks re-queued because their service failed or left.
+    pub requeued_tasks: u64,
+    /// Completion reports dropped as stale (service presumed dead).
+    pub stale_completions: u64,
+    /// Services that ever joined.
+    pub services_joined: usize,
+}
+
+/// A running workflow-service endpoint.
+pub struct WorkflowServiceServer {
+    addr: SocketAddr,
+    shared: Arc<WfShared>,
+}
+
+impl WorkflowServiceServer {
+    /// Seed the central task list and start serving on `bind`
+    /// (`"127.0.0.1:0"` for an ephemeral port).
+    pub fn start(
+        tasks: Vec<MatchTask>,
+        cfg: WorkflowServerConfig,
+        bind: &str,
+    ) -> anyhow::Result<WorkflowServiceServer> {
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(WfShared {
+            sched: Mutex::new(Scheduler::new(tasks, cfg.policy)),
+            results: Mutex::new(Vec::new()),
+            members: Mutex::new(HashMap::new()),
+            next_service: AtomicUsize::new(0),
+            comparisons: AtomicU64::new(0),
+            control_messages: AtomicU64::new(0),
+            traffic: TrafficStats::new(),
+            requeued_tasks: AtomicU64::new(0),
+            stale_completions: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            heartbeat_timeout: cfg.heartbeat_timeout,
+        });
+        let accept_shared = shared.clone();
+        std::thread::Builder::new()
+            .name("pem-workflow-accept".into())
+            .spawn(move || accept_loop(listener, accept_shared))?;
+        let monitor_shared = shared.clone();
+        std::thread::Builder::new()
+            .name("pem-workflow-monitor".into())
+            .spawn(move || monitor_loop(monitor_shared))?;
+        Ok(WorkflowServiceServer { addr, shared })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Tasks completed so far (for progress displays).
+    pub fn completed(&self) -> usize {
+        self.shared.sched.lock().unwrap().completed()
+    }
+
+    /// Block until every task has completed, polling the scheduler.
+    /// Returns `false` on timeout.
+    pub fn wait_done(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if self.shared.sched.lock().unwrap().is_done() {
+                return true;
+            }
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Tear the server down without consuming the handle: stops the
+    /// accept and monitor loops and makes every connection handler drop
+    /// its connection at the next received frame, so match services
+    /// unblock with an I/O error even when the workflow never finished
+    /// (run-timeout path).  Idempotent.
+    pub fn abort(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect_timeout(
+            &self.addr,
+            Duration::from_millis(200),
+        );
+    }
+
+    /// Stop the accept and monitor loops and extract the final report.
+    /// Call after [`Self::wait_done`]; open connections drain when the
+    /// match services disconnect.
+    pub fn finish(self) -> WorkflowReport {
+        self.abort();
+        let sched = self.shared.sched.lock().unwrap();
+        WorkflowReport {
+            correspondences: std::mem::take(
+                &mut *self.shared.results.lock().unwrap(),
+            ),
+            completed_tasks: sched.completed(),
+            total_tasks: sched.total(),
+            comparisons: self.shared.comparisons.load(Ordering::Relaxed),
+            control_messages: self
+                .shared
+                .control_messages
+                .load(Ordering::Relaxed),
+            control_wire_bytes: self.shared.traffic.total_bytes(),
+            affinity_assignments: sched.affinity_assignments,
+            requeued_tasks: self
+                .shared
+                .requeued_tasks
+                .load(Ordering::Relaxed),
+            stale_completions: self
+                .shared
+                .stale_completions
+                .load(Ordering::Relaxed),
+            services_joined: self.shared.next_service.load(Ordering::Relaxed),
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<WfShared>) {
+    loop {
+        let Ok((stream, _)) = listener.accept() else { break };
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let conn_shared = shared.clone();
+        let _ = std::thread::Builder::new()
+            .name("pem-workflow-conn".into())
+            .spawn(move || handle_conn(stream, conn_shared));
+    }
+}
+
+/// Detect dead services: no message within the heartbeat timeout →
+/// fail the service, re-queue its in-flight tasks (paper §4).
+fn monitor_loop(shared: Arc<WfShared>) {
+    let tick = (shared.heartbeat_timeout / 4).max(Duration::from_millis(5));
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        std::thread::sleep(tick);
+        let now = Instant::now();
+        let expired: Vec<(usize, String)> = {
+            let mut members = shared.members.lock().unwrap();
+            let dead: Vec<usize> = members
+                .iter()
+                .filter(|(_, m)| {
+                    now.duration_since(m.last_seen)
+                        > shared.heartbeat_timeout
+                })
+                .map(|(&id, _)| id)
+                .collect();
+            dead.into_iter()
+                .map(|id| (id, members.remove(&id).expect("listed").name))
+                .collect()
+        };
+        for (id, name) in expired {
+            let reopened = shared
+                .sched
+                .lock()
+                .unwrap()
+                .fail_service(ServiceId(id));
+            shared
+                .requeued_tasks
+                .fetch_add(reopened as u64, Ordering::Relaxed);
+            eprintln!(
+                "workflow service: match service {id} ({name}) missed \
+                 heartbeats; re-queued {reopened} in-flight task(s)"
+            );
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, shared: Arc<WfShared>) {
+    let Ok(mut t) = Transport::from_stream(stream) else {
+        return;
+    };
+    while let Ok(msg) = t.recv() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            // aborted server: drop the connection instead of answering,
+            // so clients stuck in poll loops error out and exit
+            break;
+        }
+        shared.control_messages.fetch_add(1, Ordering::Relaxed);
+        let reply = match msg {
+            Message::Join { name } => {
+                let id = shared.next_service.fetch_add(1, Ordering::SeqCst);
+                shared.members.lock().unwrap().insert(
+                    id,
+                    Member {
+                        name,
+                        last_seen: Instant::now(),
+                    },
+                );
+                shared.sched.lock().unwrap().add_service(ServiceId(id));
+                Message::JoinAck {
+                    service: ServiceId(id),
+                }
+            }
+            Message::Leave { service } => {
+                shared.members.lock().unwrap().remove(&service.0);
+                let reopened = shared
+                    .sched
+                    .lock()
+                    .unwrap()
+                    .fail_service(service);
+                shared
+                    .requeued_tasks
+                    .fetch_add(reopened as u64, Ordering::Relaxed);
+                Message::LeaveAck
+            }
+            Message::TaskRequest { service } => {
+                shared.touch(service);
+                shared.next_assignment(service)
+            }
+            Message::Complete {
+                service,
+                task_id,
+                comparisons,
+                cached,
+                matches,
+            } => {
+                shared.touch(service);
+                {
+                    // hold the scheduler lock across the result append:
+                    // `is_done()` must never be observable as true while
+                    // this task's output is not yet in `results`, or a
+                    // wait_done() → finish() sequence could drain the
+                    // results missing the final task's matches.  Lock
+                    // order is sched → results here and in finish().
+                    let mut sched = shared.sched.lock().unwrap();
+                    if sched.try_report_complete(service, task_id, cached)
+                    {
+                        shared
+                            .comparisons
+                            .fetch_add(comparisons, Ordering::Relaxed);
+                        shared.results.lock().unwrap().extend(matches);
+                    } else {
+                        // straggler from a service presumed dead: the
+                        // task was re-queued, its output arrives again
+                        shared
+                            .stale_completions
+                            .fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                shared.next_assignment(service)
+            }
+            Message::Heartbeat { service } => {
+                shared.touch(service);
+                Message::HeartbeatAck
+            }
+            other => Message::Error {
+                message: format!(
+                    "workflow service got unexpected {}",
+                    other.kind()
+                ),
+            },
+        };
+        match t.send(&reply) {
+            Ok(n) => shared.traffic.record(n),
+            Err(_) => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::PartitionId;
+
+    fn task(id: u32, l: u32, r: u32) -> MatchTask {
+        MatchTask {
+            id,
+            left: PartitionId(l),
+            right: PartitionId(r),
+        }
+    }
+
+    fn client(addr: SocketAddr) -> Transport {
+        Transport::connect(addr, Duration::from_secs(5)).unwrap()
+    }
+
+    fn join(t: &mut Transport, name: &str) -> ServiceId {
+        match t
+            .request(&Message::Join { name: name.into() })
+            .unwrap()
+        {
+            Message::JoinAck { service } => service,
+            other => panic!("expected JoinAck, got {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn full_pull_protocol_round() {
+        let srv = WorkflowServiceServer::start(
+            vec![task(0, 0, 1), task(1, 2, 3)],
+            WorkflowServerConfig::default(),
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let mut c = client(srv.addr());
+        let svc = join(&mut c, "test-node");
+
+        // initial pull
+        let Message::TaskAssign { task: t0 } =
+            c.request(&Message::TaskRequest { service: svc }).unwrap()
+        else {
+            panic!("expected assignment");
+        };
+        // completion piggybacks the next pull
+        let reply = c
+            .request(&Message::Complete {
+                service: svc,
+                task_id: t0.id,
+                comparisons: 10,
+                cached: vec![t0.left, t0.right],
+                matches: vec![Correspondence {
+                    e1: crate::model::EntityId(1),
+                    e2: crate::model::EntityId(2),
+                    sim: 0.9,
+                }],
+            })
+            .unwrap();
+        let Message::TaskAssign { task: t1 } = reply else {
+            panic!("expected second assignment, got {}", reply.kind());
+        };
+        assert_ne!(t0.id, t1.id);
+        let reply = c
+            .request(&Message::Complete {
+                service: svc,
+                task_id: t1.id,
+                comparisons: 5,
+                cached: vec![],
+                matches: vec![],
+            })
+            .unwrap();
+        assert!(matches!(reply, Message::NoTask { done: true }));
+
+        assert!(srv.wait_done(Duration::from_secs(1)));
+        let _ = c.request(&Message::Leave { service: svc });
+        let report = srv.finish();
+        assert_eq!(report.completed_tasks, 2);
+        assert_eq!(report.total_tasks, 2);
+        assert_eq!(report.comparisons, 15);
+        assert_eq!(report.correspondences.len(), 1);
+        assert!(report.control_messages >= 4);
+        assert!(report.control_wire_bytes > 0);
+        assert_eq!(report.services_joined, 1);
+    }
+
+    #[test]
+    fn missed_heartbeats_requeue_in_flight_tasks() {
+        let srv = WorkflowServiceServer::start(
+            vec![task(0, 0, 0)],
+            WorkflowServerConfig {
+                policy: Policy::Fifo,
+                heartbeat_timeout: Duration::from_millis(80),
+            },
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        // node A joins, takes the task, then goes silent
+        let mut a = client(srv.addr());
+        let svc_a = join(&mut a, "doomed");
+        let Message::TaskAssign { task: t } = a
+            .request(&Message::TaskRequest { service: svc_a })
+            .unwrap()
+        else {
+            panic!("expected assignment");
+        };
+        std::thread::sleep(Duration::from_millis(300));
+
+        // node B joins and receives the re-queued task
+        let mut b = client(srv.addr());
+        let svc_b = join(&mut b, "survivor");
+        let Message::TaskAssign { task: re } = b
+            .request(&Message::TaskRequest { service: svc_b })
+            .unwrap()
+        else {
+            panic!("re-queued task not offered");
+        };
+        assert_eq!(re.id, t.id);
+
+        // the doomed node's stale completion is dropped…
+        let stale = a
+            .request(&Message::Complete {
+                service: svc_a,
+                task_id: t.id,
+                comparisons: 1,
+                cached: vec![],
+                matches: vec![],
+            })
+            .unwrap();
+        assert!(matches!(stale, Message::NoTask { .. }));
+        // …and does not mark the workflow done
+        assert!(!srv.wait_done(Duration::from_millis(50)));
+
+        // the survivor's completion does
+        let done = b
+            .request(&Message::Complete {
+                service: svc_b,
+                task_id: re.id,
+                comparisons: 1,
+                cached: vec![],
+                matches: vec![],
+            })
+            .unwrap();
+        assert!(matches!(done, Message::NoTask { done: true }));
+        assert!(srv.wait_done(Duration::from_secs(1)));
+        let report = srv.finish();
+        assert_eq!(report.completed_tasks, 1);
+        assert_eq!(report.requeued_tasks, 1);
+        assert_eq!(report.stale_completions, 1);
+    }
+}

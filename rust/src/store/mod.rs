@@ -94,14 +94,19 @@ impl DataService {
     /// Fetch a partition (counts as one data-service access — a *cache
     /// miss* on the match-service side).
     pub fn fetch(&self, id: PartitionId) -> Arc<PartitionData> {
-        let data = self
-            .partitions
-            .get(&id)
+        self.try_fetch(id)
             .unwrap_or_else(|| panic!("unknown partition {id}"))
-            .clone();
+    }
+
+    /// Fetch without panicking on unknown ids — the TCP data service
+    /// answers malformed remote requests with an error message instead
+    /// of dying (see [`crate::service::DataServiceServer`]).  Accounting
+    /// is only charged on success.
+    pub fn try_fetch(&self, id: PartitionId) -> Option<Arc<PartitionData>> {
+        let data = self.partitions.get(&id)?.clone();
         self.traffic.record(data.approx_bytes);
         self.fetch_log.lock().unwrap().push(id);
-        data
+        Some(data)
     }
 
     /// Size of a partition payload without fetching (the simulator charges

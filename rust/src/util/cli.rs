@@ -21,17 +21,30 @@ pub struct Args {
     flags: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("option --{0} expects a value")]
     MissingValue(String),
-    #[error("cannot parse --{key} value {value:?}: {msg}")]
     BadValue {
         key: String,
         value: String,
         msg: String,
     },
 }
+
+impl Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(name) => {
+                write!(f, "option --{name} expects a value")
+            }
+            CliError::BadValue { key, value, msg } => {
+                write!(f, "cannot parse --{key} value {value:?}: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse from `std::env::args()`.

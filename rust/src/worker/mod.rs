@@ -3,7 +3,10 @@
 //! A match service runs on one node, executes match tasks in its match
 //! threads, and keeps a [`PartitionCache`] shared by those threads.  Task
 //! execution is abstracted behind [`TaskExecutor`] so the same service
-//! code drives both the pure-Rust matchers and the accelerated PJRT path.
+//! code drives both the pure-Rust matchers and the accelerated PJRT path
+//! — and both the in-process engines and the networked match-service
+//! node ([`crate::service::match_node`]), which runs this exact stack
+//! behind a TCP socket loop.
 
 pub mod cache;
 

@@ -1,0 +1,215 @@
+//! End-to-end tests of the distributed runtime: a full blocking-based
+//! match workflow (generate → partition → task generation → parallel
+//! match) executed through **real localhost TCP services** — workflow,
+//! data, and ≥ 2 match-service nodes speaking the `pem::rpc` wire
+//! protocol — validated against the in-process thread engine on the
+//! same seed.
+
+use pem::cluster::ComputingEnv;
+use pem::coordinator::workflow::EngineChoice;
+use pem::coordinator::{
+    run_workflow, PartitioningChoice, Policy, WorkflowConfig,
+};
+use pem::datagen::GeneratorConfig;
+use pem::engine::dist;
+use pem::matching::{MatchStrategy, StrategyKind};
+use pem::model::EntityId;
+use pem::partition::{generate_tasks, partition_size_based};
+use pem::store::DataService;
+use pem::util::GIB;
+use pem::worker::{RustExecutor, TaskExecutor};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn blocking_cfg(kind: StrategyKind, max: usize, min: usize) -> WorkflowConfig {
+    let mut cfg = WorkflowConfig::blocking_based(kind);
+    if let PartitioningChoice::BlockingBased {
+        max_size, min_size, ..
+    } = &mut cfg.partitioning
+    {
+        *max_size = Some(max);
+        *min_size = min;
+    }
+    cfg
+}
+
+/// The acceptance-criteria test: a blocking-based workflow through real
+/// sockets with two match-service nodes produces correspondences
+/// identical to the thread engine on the same seed, and the traffic
+/// stats show nonzero bytes actually delivered over TCP.
+#[test]
+fn dist_workflow_matches_thread_engine_exactly() {
+    let data = GeneratorConfig::tiny()
+        .with_entities(600)
+        .with_seed(42)
+        .generate();
+    let ce = ComputingEnv::new(2, 2, GIB); // 2 match services × 2 workers
+    let base = blocking_cfg(StrategyKind::Wam, 150, 30).with_cache(8);
+
+    let threads = run_workflow(
+        &data,
+        &base.clone().with_engine(EngineChoice::Threads),
+        &ce,
+    )
+    .unwrap();
+    let dist = run_workflow(
+        &data,
+        &base.with_engine(EngineChoice::Distributed),
+        &ce,
+    )
+    .unwrap();
+
+    // identical structure …
+    assert_eq!(dist.n_partitions, threads.n_partitions);
+    assert_eq!(dist.n_tasks, threads.n_tasks);
+    assert_eq!(dist.metrics.tasks, threads.metrics.tasks);
+    assert_eq!(dist.metrics.comparisons, threads.metrics.comparisons);
+
+    // … and an identical merged match result, similarity included:
+    // the wire round trip reconstructs features losslessly, so every
+    // pair must score exactly the same
+    assert_eq!(dist.result.len(), threads.result.len());
+    for c in threads.result.iter() {
+        assert_eq!(
+            dist.result.similarity(c.e1, c.e2),
+            Some(c.sim),
+            "pair ({}, {}) differs across engines",
+            c.e1,
+            c.e2
+        );
+    }
+
+    // sanity: the workflow really found the injected duplicates
+    let q = dist.result.quality(&data.truth);
+    assert!(q.recall > 0.7, "recall {}", q.recall);
+
+    // real socket traffic: delivered bytes from actual TCP transfers
+    assert!(
+        dist.metrics.bytes_fetched > 0,
+        "data-plane TrafficStats must show delivered wire bytes"
+    );
+    assert!(dist.metrics.control_messages > dist.n_tasks as u64);
+    assert!(dist.metrics.cache_hits > 0, "partition caches engaged");
+}
+
+/// Failure handling (paper §4) through the wire: a node that stops
+/// heartbeating mid-run has its in-flight task re-queued by the
+/// workflow service, and the surviving node still completes the full
+/// workflow with the correct result.
+#[test]
+fn dist_node_failure_requeues_and_completes() {
+    let data = GeneratorConfig::tiny()
+        .with_entities(400)
+        .with_seed(7)
+        .generate();
+    let ids: Vec<EntityId> =
+        data.dataset.entities.iter().map(|e| e.id).collect();
+    let parts = partition_size_based(&ids, 40);
+    let tasks = generate_tasks(&parts);
+    let n_tasks = tasks.len();
+    assert!(n_tasks > 20, "need enough tasks to guarantee overlap");
+    let store = Arc::new(DataService::build(&data.dataset, &parts));
+
+    // reference result from the thread engine
+    let exec = RustExecutor::new(MatchStrategy::new(StrategyKind::Wam));
+    let reference = pem::engine::threads::run(
+        &ComputingEnv::new(1, 2, GIB),
+        &parts,
+        tasks.clone(),
+        &store,
+        &exec,
+        pem::engine::threads::ThreadConfig::default(),
+    );
+
+    // distributed run: node 1 crashes after completing one task,
+    // abandoning its next assignment without reporting
+    let ce = ComputingEnv::new(2, 1, GIB);
+    let shared_exec: Arc<dyn TaskExecutor> =
+        Arc::new(RustExecutor::new(MatchStrategy::new(StrategyKind::Wam)));
+    let out = dist::run(
+        &ce,
+        &parts,
+        tasks,
+        store.clone(),
+        shared_exec,
+        dist::DistConfig {
+            cache_capacity: 4,
+            policy: Policy::Affinity,
+            heartbeat_timeout: Duration::from_millis(250),
+            heartbeat_interval: Duration::from_millis(25),
+            fail_node_after: vec![(1, 1)],
+            ..dist::DistConfig::default()
+        },
+    )
+    .unwrap();
+
+    assert_eq!(out.metrics.tasks, n_tasks, "every task completed");
+    assert!(
+        out.workflow.requeued_tasks >= 1,
+        "the dead node's in-flight task must have been re-queued"
+    );
+    assert_eq!(
+        out.node_reports.iter().filter(|r| r.crashed).count(),
+        1,
+        "exactly one node simulated the crash"
+    );
+
+    // the failure must not change the merged result
+    let norm = |cs: &[pem::model::Correspondence]| {
+        let mut r = pem::model::MatchResult::new();
+        for &c in cs {
+            r.add(c);
+        }
+        let mut pairs: Vec<(EntityId, EntityId)> =
+            r.iter().map(|c| c.pair()).collect();
+        pairs.sort_unstable();
+        pairs
+    };
+    assert_eq!(
+        norm(&out.correspondences),
+        norm(&reference.correspondences)
+    );
+}
+
+/// The pull protocol balances load: with two equal nodes and plenty of
+/// tasks, both make progress (no node starves behind the wire).
+#[test]
+fn dist_pull_scheduling_balances_two_nodes() {
+    let data = GeneratorConfig::tiny()
+        .with_entities(500)
+        .with_seed(11)
+        .generate();
+    let ids: Vec<EntityId> =
+        data.dataset.entities.iter().map(|e| e.id).collect();
+    let parts = partition_size_based(&ids, 50);
+    let tasks = generate_tasks(&parts);
+    let store = Arc::new(DataService::build(&data.dataset, &parts));
+    let exec: Arc<dyn TaskExecutor> =
+        Arc::new(RustExecutor::new(MatchStrategy::new(StrategyKind::Wam)));
+    let out = dist::run(
+        &ComputingEnv::new(2, 2, GIB),
+        &parts,
+        tasks,
+        store,
+        exec,
+        dist::DistConfig {
+            cache_capacity: 8,
+            ..dist::DistConfig::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(out.node_reports.len(), 2);
+    for r in &out.node_reports {
+        assert!(
+            r.tasks_completed > 0,
+            "node {} starved: {:?}",
+            r.service,
+            out.node_reports
+                .iter()
+                .map(|n| n.tasks_completed)
+                .collect::<Vec<_>>()
+        );
+    }
+    // affinity scheduling engages across the wire
+    assert!(out.workflow.affinity_assignments > 0);
+}
