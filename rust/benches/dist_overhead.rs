@@ -107,6 +107,58 @@ fn main() {
 
     println!(
         "(thread-engine \"data plane\" is modeled approx_bytes; the dist \
-         row is bytes actually written to sockets, frames included)"
+         row is bytes actually written to sockets, frames included)\n"
+    );
+
+    // ---------------------------------------------------- replication
+    // Fetch-throughput scaling of the replicated data plane: caches
+    // off, so every task pays two wire fetches and the data plane is
+    // the bottleneck; more replicas = more aggregate serving capacity.
+    pem::bench::report_header(
+        "Replicated data plane — fetch throughput vs replica count",
+        "cache disabled; per-replica wire bytes show the fetch spread",
+    );
+    println!("replicas  time         data plane      throughput  per-replica");
+    for replicas in [1usize, 2, 3] {
+        let ce = ComputingEnv::new(3, 2, common::node_mem());
+        let tasks = generate_tasks(&parts);
+        let store = Arc::new(DataService::build(&data.dataset, &parts));
+        let exec: Arc<dyn TaskExecutor> =
+            Arc::new(RustExecutor::new(strategy));
+        let d = dist::run(
+            &ce,
+            &parts,
+            tasks,
+            store,
+            exec,
+            dist::DistConfig {
+                cache_capacity: 0,
+                data_replicas: replicas,
+                ..dist::DistConfig::default()
+            },
+        )
+        .expect("replicated distributed run");
+        let secs = d.metrics.makespan_ns as f64 / 1e9;
+        let mibps = if secs > 0.0 {
+            d.data_wire_bytes as f64 / (1024.0 * 1024.0) / secs
+        } else {
+            0.0
+        };
+        println!(
+            "{:>8}  {:>11}  {:>14}  {:>7.1} MiB/s  [{}]",
+            replicas,
+            fmt_nanos(d.metrics.makespan_ns),
+            fmt_bytes(d.data_wire_bytes),
+            mibps,
+            d.replica_wire_bytes
+                .iter()
+                .map(|b| fmt_bytes(*b))
+                .collect::<Vec<_>>()
+                .join(", "),
+        );
+    }
+    println!(
+        "\n(replica counts include the primary; its bytes include the \
+         one-time replication push to each replica)"
     );
 }

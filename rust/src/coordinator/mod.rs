@@ -6,6 +6,8 @@
 //! ([`scheduler`]), drives one of the execution engines, and merges the
 //! per-task match results into the final output ([`workflow`]).
 
+#![warn(missing_docs)]
+
 pub mod multi_source;
 pub mod scheduler;
 pub mod workflow;

@@ -33,19 +33,28 @@ use anyhow::Result;
 #[derive(Clone, Debug)]
 pub enum TwoSourceMode {
     /// Cartesian product across sources (`m·n` tasks).
-    Cartesian { max_size: Option<usize> },
+    Cartesian {
+        /// Maximum partition size (`None` derives from the memory model).
+        max_size: Option<usize>,
+    },
     /// Same blocking on both sides, matched per corresponding block.
     Blocked {
+        /// Blocking method applied to both sources.
         method: BlockingMethod,
+        /// Maximum partition size (`None` derives from the memory model).
         max_size: Option<usize>,
+        /// Minimum partition size for aggregation.
         min_size: usize,
     },
 }
 
 /// Outcome of a two-source run.
 pub struct TwoSourceOutcome {
+    /// Cross-source correspondences.
     pub result: MatchResult,
+    /// Match tasks executed.
     pub n_tasks: usize,
+    /// Pair comparisons evaluated.
     pub comparisons: u64,
     /// Task-count comparison: what a union-based run would have cost.
     pub union_equivalent_tasks: usize,

@@ -8,6 +8,14 @@
 //! with heterogeneous nodes for free; the affinity preference adds cache
 //! locality.  Failure handling (paper §4): when a match service stops
 //! responding, its in-flight tasks are put back on the open list.
+//!
+//! With a **replicated data plane** the scheduler additionally tracks
+//! how many data replicas hold each partition
+//! ([`Scheduler::add_replica_coverage`], fed by `ReplicaAnnounce`).
+//! Among tasks with equal cache affinity, assignment prefers the task
+//! whose partitions are the most widely replicated — those fetches can
+//! be served by a nearby, less-loaded replica (the paper's §5 caching +
+//! affinity strategy, extended across the network).
 
 use crate::partition::{MatchTask, PartitionId};
 use std::collections::{HashMap, HashSet, VecDeque};
@@ -32,6 +40,8 @@ pub struct Scheduler {
     open: VecDeque<MatchTask>,
     in_flight: HashMap<u32, (ServiceId, MatchTask)>,
     cache_status: HashMap<ServiceId, HashSet<PartitionId>>,
+    /// partition → number of data replicas announced as holding it.
+    replica_coverage: HashMap<PartitionId, u32>,
     policy: Policy,
     /// Tasks assigned with at least one affinity (cached-partition) hit.
     pub affinity_assignments: u64,
@@ -40,12 +50,14 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
+    /// Seed the central task list under the given policy.
     pub fn new(tasks: Vec<MatchTask>, policy: Policy) -> Scheduler {
         let total = tasks.len();
         Scheduler {
             open: tasks.into(),
             in_flight: HashMap::new(),
             cache_status: HashMap::new(),
+            replica_coverage: HashMap::new(),
             policy,
             affinity_assignments: 0,
             completed: 0,
@@ -53,24 +65,35 @@ impl Scheduler {
         }
     }
 
+    /// Tasks not yet completed (open + in flight).
     pub fn remaining(&self) -> usize {
         self.open.len() + self.in_flight.len()
     }
 
+    /// Tasks completed exactly once.
     pub fn completed(&self) -> usize {
         self.completed
     }
 
+    /// Tasks the workflow started with.
     pub fn total(&self) -> usize {
         self.total
     }
 
+    /// `true` once every task has completed.
     pub fn is_done(&self) -> bool {
         self.completed == self.total
     }
 
     /// Assign the next task to `service`, or `None` if the open list is
     /// empty (in-flight tasks may still complete — or fail and reopen).
+    ///
+    /// Under [`Policy::Affinity`] the score of a task is the pair
+    /// `(cached partitions at the service, replica coverage of its
+    /// partitions)`, compared lexicographically: cache locality first,
+    /// then — among equally-cached tasks — the one whose partitions the
+    /// most data replicas hold, so its fetches can be spread across the
+    /// replicated data plane.  Ties go to the oldest task (FIFO).
     pub fn next_task(&mut self, service: ServiceId) -> Option<MatchTask> {
         if self.open.is_empty() {
             return None;
@@ -79,15 +102,22 @@ impl Scheduler {
             Policy::Fifo => 0,
             Policy::Affinity => {
                 let cached = self.cache_status.get(&service);
-                let score = |t: &MatchTask| -> usize {
-                    match cached {
+                let coverage = &self.replica_coverage;
+                let score = |t: &MatchTask| -> (usize, u32) {
+                    let hits = match cached {
                         None => 0,
                         Some(set) => t
                             .needed_partitions()
                             .iter()
                             .filter(|p| set.contains(p))
                             .count(),
-                    }
+                    };
+                    let cov = t
+                        .needed_partitions()
+                        .iter()
+                        .map(|p| coverage.get(p).copied().unwrap_or(0))
+                        .sum();
+                    (hits, cov)
                 };
                 // best score wins; ties go to the oldest task (FIFO)
                 let mut best = 0usize;
@@ -97,12 +127,12 @@ impl Scheduler {
                     if s > best_score {
                         best = i;
                         best_score = s;
-                        if s == 2 {
+                        if s.0 == 2 && coverage.is_empty() {
                             break; // cannot do better than both cached
                         }
                     }
                 }
-                if best_score > 0 {
+                if best_score.0 > 0 {
                     self.affinity_assignments += 1;
                 }
                 best
@@ -111,6 +141,20 @@ impl Scheduler {
         let task = self.open.remove(idx).expect("index valid");
         self.in_flight.insert(task.id, (service, task));
         Some(task)
+    }
+
+    /// A data replica announced that it holds `parts`: bump each
+    /// partition's replica count.  Called once per announced replica
+    /// (the workflow service deduplicates re-announcements).
+    pub fn add_replica_coverage(&mut self, parts: &[PartitionId]) {
+        for p in parts {
+            *self.replica_coverage.entry(*p).or_insert(0) += 1;
+        }
+    }
+
+    /// How many data replicas hold `p`, as announced so far.
+    pub fn replica_coverage(&self, p: PartitionId) -> u32 {
+        self.replica_coverage.get(&p).copied().unwrap_or(0)
     }
 
     /// A match service reports a completed task together with its current
@@ -324,6 +368,51 @@ mod tests {
             completions.dedup();
             assert_eq!(completions.len(), n_tasks, "each task once");
         });
+    }
+
+    /// With equal cache affinity (here: none), assignment prefers the
+    /// task whose partitions are held by the most data replicas.
+    #[test]
+    fn replica_coverage_breaks_affinity_ties() {
+        let tasks = vec![task(0, 0, 1), task(1, 2, 3)];
+        let mut s = Scheduler::new(tasks, Policy::Affinity);
+        // two replicas announced holding partitions 2 and 3; only one
+        // holds 0 and 1
+        s.add_replica_coverage(&[
+            PartitionId(0),
+            PartitionId(1),
+            PartitionId(2),
+            PartitionId(3),
+        ]);
+        s.add_replica_coverage(&[PartitionId(2), PartitionId(3)]);
+        assert_eq!(s.replica_coverage(PartitionId(2)), 2);
+        assert_eq!(s.replica_coverage(PartitionId(0)), 1);
+        assert_eq!(s.replica_coverage(PartitionId(99)), 0);
+        // no cache status → cache score ties at 0 → coverage decides
+        let t = s.next_task(ServiceId(0)).unwrap();
+        assert_eq!(t.id, 1, "widely-replicated task preferred");
+        // coverage alone is not an affinity (cache) hit
+        assert_eq!(s.affinity_assignments, 0);
+    }
+
+    /// Cache affinity still dominates replica coverage: a task cached
+    /// at the service wins even when another task is better replicated.
+    #[test]
+    fn cache_affinity_dominates_replica_coverage() {
+        let tasks = vec![task(0, 9, 9), task(1, 5, 6), task(2, 2, 3)];
+        let mut s = Scheduler::new(tasks, Policy::Affinity);
+        // no status, no coverage yet → plain FIFO for the first pull
+        let t0 = s.next_task(ServiceId(0)).unwrap();
+        assert_eq!(t0.id, 0);
+        s.report_complete(ServiceId(0), 0, vec![PartitionId(5)]);
+        // three replicas announce partitions 2 and 3 (task 2's pair)
+        for _ in 0..3 {
+            s.add_replica_coverage(&[PartitionId(2), PartitionId(3)]);
+        }
+        // task 1 has one cached partition; task 2 has 3× coverage but
+        // nothing cached — cache locality must win
+        assert_eq!(s.next_task(ServiceId(0)).unwrap().id, 1);
+        assert_eq!(s.affinity_assignments, 1);
     }
 
     #[test]

@@ -26,12 +26,19 @@ use std::time::Instant;
 #[derive(Clone, Debug)]
 pub enum PartitioningChoice {
     /// §3.1 — Cartesian product with equally-sized partitions.
-    /// `max_size: None` derives m from the memory model.
-    SizeBased { max_size: Option<usize> },
+    SizeBased {
+        /// Maximum partition size; `None` derives m from the memory
+        /// model.
+        max_size: Option<usize>,
+    },
     /// §3.2 — blocking followed by partition tuning.
     BlockingBased {
+        /// Blocking method (e.g. by product type or manufacturer).
         method: BlockingMethod,
+        /// Maximum partition size; `None` derives m from the memory
+        /// model.
         max_size: Option<usize>,
+        /// Minimum partition size for aggregating small blocks.
         min_size: usize,
     },
 }
@@ -54,12 +61,19 @@ pub enum EngineChoice {
 /// Full workflow configuration.
 #[derive(Clone, Debug)]
 pub struct WorkflowConfig {
+    /// Match strategy (WAM or LRM) with its decision threshold.
     pub strategy: MatchStrategy,
+    /// Partitioning strategy (§3.1 size-based or §3.2 blocking-based).
     pub partitioning: PartitioningChoice,
+    /// Which engine executes the match tasks.
     pub engine: EngineChoice,
     /// Partition-cache capacity per match service (`c`; 0 = disabled).
     pub cache_capacity: usize,
+    /// Task-assignment policy (FIFO or affinity).
     pub policy: crate::coordinator::Policy,
+    /// Distributed engine: total data-plane servers (1 = just the
+    /// primary; N > 1 adds N−1 synced replicas and fetch failover).
+    pub data_replicas: usize,
     /// Control-plane cost model (workflow-service RMI).
     pub net: CostModel,
     /// Data-plane cost model (data-service partition fetches).
@@ -93,6 +107,7 @@ impl WorkflowConfig {
             engine: EngineChoice::Simulated,
             cache_capacity: 0,
             policy: crate::coordinator::Policy::Affinity,
+            data_replicas: 1,
             net: CostModel::lan(),
             data_net: CostModel::dbms(),
             execute_in_sim: false,
@@ -110,18 +125,28 @@ impl WorkflowConfig {
         }
     }
 
+    /// Select the execution engine (builder style).
     pub fn with_engine(mut self, engine: EngineChoice) -> Self {
         self.engine = engine;
         self
     }
 
+    /// Set the per-service partition-cache capacity (builder style).
     pub fn with_cache(mut self, c: usize) -> Self {
         self.cache_capacity = c;
         self
     }
 
+    /// Pin simulator cost params verbatim (builder style).
     pub fn with_cost(mut self, cost: CostParams) -> Self {
         self.cost_override = Some(cost);
+        self
+    }
+
+    /// Distributed engine: run this many data-plane servers (builder
+    /// style; clamped to ≥ 1 at run time).
+    pub fn with_data_replicas(mut self, n: usize) -> Self {
+        self.data_replicas = n;
         self
     }
 }
@@ -146,10 +171,15 @@ pub fn default_min_size(kind: StrategyKind) -> usize {
 
 /// Workflow outcome: merged result + run metrics + structural info.
 pub struct WorkflowOutcome {
+    /// Merged, deduplicated correspondences.
     pub result: MatchResult,
+    /// Engine metrics (wall clock or virtual time, see engine docs).
     pub metrics: RunMetrics,
+    /// Partitions after tuning.
     pub n_partitions: usize,
+    /// Partitions that came from the misc block (§3.2).
     pub n_misc_partitions: usize,
+    /// Match tasks generated.
     pub n_tasks: usize,
     /// Wall-clock time of the whole workflow (pre+match+merge).
     pub elapsed: std::time::Duration,
@@ -234,6 +264,7 @@ pub fn run_workflow(
                 dist::DistConfig {
                     cache_capacity: cfg.cache_capacity,
                     policy: cfg.policy,
+                    data_replicas: cfg.data_replicas.max(1),
                     ..dist::DistConfig::default()
                 },
             )?;

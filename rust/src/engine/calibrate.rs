@@ -17,8 +17,11 @@ use std::time::Instant;
 /// Measured calibration result.
 #[derive(Clone, Copy, Debug)]
 pub struct Calibration {
+    /// The strategy that was measured.
     pub strategy: StrategyKind,
+    /// Measured mean cost of one pair comparison, nanoseconds.
     pub pair_ns: f64,
+    /// How many comparisons the measurement averaged over.
     pub pairs_measured: u64,
 }
 

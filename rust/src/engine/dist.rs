@@ -4,7 +4,10 @@
 //! memory and [`super::sim`] charges modeled costs on a virtual clock,
 //! this engine launches the paper's §4 infrastructure for real:
 //!
-//! * a [`DataServiceServer`] serving partitions over TCP,
+//! * a [`DataServiceServer`] serving partitions over TCP — plus, with
+//!   `data_replicas > 1`, additional replica servers push-synced from
+//!   it and announced into the coordinator's replica directory, so
+//!   match nodes spread fetches and fail over when a replica dies,
 //! * a [`WorkflowServiceServer`] running the pull-based scheduler with
 //!   heartbeat-driven failure handling,
 //! * `ce.nodes` match-service nodes — threads in this process, but
@@ -17,8 +20,10 @@
 //! form that the workflow API and the tests drive.
 //!
 //! Metrics note: `bytes_fetched` reports **actual socket bytes** from
-//! the data service (frames included), not the modeled `approx_bytes`
-//! of the other engines — the number a network monitor would see.
+//! all data servers (frames included, and — in replicated runs — the
+//! one-time replication push), not the modeled `approx_bytes` of the
+//! other engines: the number a network monitor would see.
+//! [`DistOutcome::replica_wire_bytes`] breaks it down per server.
 
 use crate::cluster::ComputingEnv;
 use crate::coordinator::scheduler::Policy;
@@ -26,8 +31,8 @@ use crate::metrics::RunMetrics;
 use crate::model::Correspondence;
 use crate::partition::{MatchTask, PartitionSet};
 use crate::service::{
-    run_match_node, DataServiceServer, MatchNodeConfig, NodeReport,
-    WorkflowReport, WorkflowServerConfig, WorkflowServiceServer,
+    announce_replica, run_match_node, DataServiceServer, MatchNodeConfig,
+    NodeReport, WorkflowReport, WorkflowServerConfig, WorkflowServiceServer,
 };
 use crate::store::DataService;
 use crate::worker::TaskExecutor;
@@ -40,7 +45,13 @@ use std::time::{Duration, Instant};
 pub struct DistConfig {
     /// Partition-cache capacity per match service (0 = disabled).
     pub cache_capacity: usize,
+    /// Task-assignment policy (FIFO or affinity).
     pub policy: Policy,
+    /// Total data-plane servers: 1 = just the primary (the pre-replica
+    /// behavior); N > 1 additionally starts N−1 replicas, waits for
+    /// their push-sync, and announces all N into the coordinator's
+    /// replica directory.
+    pub data_replicas: usize,
     /// Failure detector: a silent service is failed after this long.
     pub heartbeat_timeout: Duration,
     /// Node-side liveness signal period.
@@ -59,6 +70,7 @@ impl Default for DistConfig {
         DistConfig {
             cache_capacity: 0,
             policy: Policy::Affinity,
+            data_replicas: 1,
             heartbeat_timeout: Duration::from_secs(2),
             heartbeat_interval: Duration::from_millis(50),
             poll_interval: Duration::from_millis(2),
@@ -70,7 +82,9 @@ impl Default for DistConfig {
 
 /// Outcome of a distributed run.
 pub struct DistOutcome {
+    /// Wall-clock run metrics (`bytes_fetched` = real socket bytes).
     pub metrics: RunMetrics,
+    /// Merged match output across all nodes.
     pub correspondences: Vec<Correspondence>,
     /// Per-node execution reports.
     pub node_reports: Vec<NodeReport>,
@@ -78,8 +92,13 @@ pub struct DistOutcome {
     /// Its `correspondences` have been drained into
     /// [`DistOutcome::correspondences`].
     pub workflow: WorkflowReport,
-    /// Actual data-plane socket bytes (also in `metrics.bytes_fetched`).
+    /// Actual data-plane socket bytes, all servers (also in
+    /// `metrics.bytes_fetched`).
     pub data_wire_bytes: u64,
+    /// Data-plane socket bytes per server — primary first, then the
+    /// replicas in start order.  The per-replica accounting a network
+    /// monitor would report.
+    pub replica_wire_bytes: Vec<u64>,
 }
 
 /// Execute all tasks on `ce.nodes` match-service nodes ×
@@ -95,6 +114,26 @@ pub fn run(
     let n_tasks = tasks.len();
     let data_srv = DataServiceServer::start(store, "127.0.0.1:0")
         .context("starting data service")?;
+    // replicated data plane: N−1 replicas push-synced from the primary
+    let mut replica_srvs: Vec<DataServiceServer> = Vec::new();
+    for r in 1..cfg.data_replicas.max(1) {
+        let srv = DataServiceServer::start_replica(
+            "127.0.0.1:0",
+            &data_srv.addr().to_string(),
+            Duration::from_secs(30),
+        )
+        .with_context(|| format!("starting data replica {r}"))?;
+        replica_srvs.push(srv);
+    }
+    for (r, srv) in replica_srvs.iter().enumerate() {
+        if !srv.wait_synced(Duration::from_secs(60)) {
+            data_srv.shutdown();
+            for s in &replica_srvs {
+                s.shutdown();
+            }
+            bail!("data replica {} did not sync in time", r + 1);
+        }
+    }
     let wf_srv = WorkflowServiceServer::start(
         tasks,
         WorkflowServerConfig {
@@ -106,13 +145,34 @@ pub fn run(
     .context("starting workflow service")?;
 
     let wf_addr = wf_srv.addr().to_string();
-    let data_addr = data_srv.addr().to_string();
+    let data_addrs: Vec<String> = std::iter::once(&data_srv)
+        .chain(replica_srvs.iter())
+        .map(|s| s.addr().to_string())
+        .collect();
+    // announce every data server into the directory so the scheduler
+    // sees replica coverage and late joiners learn all addresses
+    for (addr, srv) in
+        data_addrs.iter().zip(
+            std::iter::once(&data_srv).chain(replica_srvs.iter()),
+        )
+    {
+        announce_replica(
+            &wf_addr,
+            addr,
+            &srv.partition_ids(),
+            Duration::from_secs(10),
+        )
+        .with_context(|| format!("announcing data server {addr}"))?;
+    }
     let start = Instant::now();
 
     let node_handles: Vec<_> = (0..ce.nodes)
         .map(|i| {
-            let mut node_cfg =
-                MatchNodeConfig::new(wf_addr.clone(), data_addr.clone());
+            let mut node_cfg = MatchNodeConfig::new(
+                wf_addr.clone(),
+                data_addrs[0].clone(),
+            );
+            node_cfg.data_addrs = data_addrs.clone();
             node_cfg.name = format!("node-{i}");
             node_cfg.threads = ce.threads_per_node;
             node_cfg.cache_capacity = cfg.cache_capacity;
@@ -140,6 +200,9 @@ pub fn run(
         // polling an un-finishable workflow
         wf_srv.abort();
         data_srv.shutdown();
+        for srv in &replica_srvs {
+            srv.shutdown();
+        }
     }
 
     let mut node_reports = Vec::new();
@@ -151,7 +214,14 @@ pub fn run(
         }
     }
     data_srv.shutdown();
-    let data_wire_bytes = data_srv.wire_bytes();
+    for srv in &replica_srvs {
+        srv.shutdown();
+    }
+    let replica_wire_bytes: Vec<u64> = std::iter::once(&data_srv)
+        .chain(replica_srvs.iter())
+        .map(|s| s.wire_bytes())
+        .collect();
+    let data_wire_bytes: u64 = replica_wire_bytes.iter().sum();
     let mut workflow = wf_srv.finish();
 
     if !done {
@@ -197,6 +267,7 @@ pub fn run(
         node_reports,
         workflow,
         data_wire_bytes,
+        replica_wire_bytes,
     })
 }
 
@@ -253,6 +324,44 @@ mod tests {
         // both nodes participated (pull balancing)
         for r in &out.node_reports {
             assert!(r.tasks_completed > 0, "idle node {:?}", r.service);
+        }
+    }
+
+    /// With a replicated data plane, every data server carries real
+    /// traffic (the selector spreads first-time fetches) and the
+    /// per-replica accounting adds up to the total.
+    #[test]
+    fn replicated_data_plane_spreads_fetches_across_servers() {
+        let (parts, tasks, store) = setup(400, 40);
+        let n_tasks = tasks.len();
+        let ce = ComputingEnv::new(2, 2, crate::util::GIB);
+        let out = run(
+            &ce,
+            &parts,
+            tasks,
+            store,
+            wam_exec(),
+            DistConfig {
+                cache_capacity: 4,
+                data_replicas: 2,
+                ..DistConfig::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(out.metrics.tasks, n_tasks);
+        assert_eq!(out.replica_wire_bytes.len(), 2);
+        assert_eq!(
+            out.replica_wire_bytes.iter().sum::<u64>(),
+            out.data_wire_bytes
+        );
+        for (i, b) in out.replica_wire_bytes.iter().enumerate() {
+            assert!(*b > 0, "data server {i} served no bytes");
+        }
+        // the directory reached the scheduler and the nodes
+        assert_eq!(out.workflow.data_replicas.len(), 2);
+        for r in &out.node_reports {
+            assert_eq!(r.fetches_per_replica.len(), 2);
+            assert_eq!(r.replica_failovers, 0);
         }
     }
 

@@ -16,6 +16,8 @@
 //! * [`calibrate`] — measures real per-pair match cost on this host to
 //!   anchor the simulator's virtual clock.
 
+#![warn(missing_docs)]
+
 pub mod calibrate;
 pub mod dist;
 pub mod sim;
@@ -82,6 +84,7 @@ impl CostParams {
         }
     }
 
+    /// Replace the per-pair cost (builder style).
     pub fn with_pair_ns(mut self, pair_ns: f64) -> Self {
         self.pair_ns = pair_ns;
         self

@@ -36,6 +36,7 @@ use std::collections::{BinaryHeap, VecDeque};
 
 /// Simulator configuration.
 pub struct SimConfig {
+    /// Per-pair compute cost model (calibrated or defaults).
     pub cost: CostParams,
     /// Control-plane messages (assignment / completion RMI to the
     /// workflow service).
@@ -43,9 +44,11 @@ pub struct SimConfig {
     /// Data-plane partition fetches from the data service (DBMS path —
     /// see [`CostModel::dbms`]).
     pub data_net: CostModel,
+    /// Match strategy whose cost profile is simulated.
     pub strategy: StrategyKind,
     /// Partition-cache capacity per match service (paper's `c`).
     pub cache_capacity: usize,
+    /// Task-assignment policy (FIFO or affinity).
     pub policy: Policy,
     /// Inject node failures at (virtual time, node index).
     pub failures: Vec<(u64, usize)>,
@@ -55,6 +58,8 @@ pub struct SimConfig {
 }
 
 impl SimConfig {
+    /// Defaults: LAN control plane, DBMS data plane, affinity policy,
+    /// no cache, no failures, metrics-only (no real matching).
     pub fn new(strategy: StrategyKind, cost: CostParams) -> SimConfig {
         SimConfig {
             cost,
@@ -72,7 +77,9 @@ impl SimConfig {
 /// Simulation outcome: metrics on the virtual clock (+ correspondences
 /// when `execute` was set).
 pub struct SimOutcome {
+    /// Virtual-clock run metrics.
     pub metrics: RunMetrics,
+    /// Real match output (empty unless `execute` was set).
     pub correspondences: Vec<Correspondence>,
 }
 

@@ -22,7 +22,9 @@ use std::time::Instant;
 
 /// Thread-engine configuration.
 pub struct ThreadConfig {
+    /// Partition-cache capacity per match service (0 = disabled).
     pub cache_capacity: usize,
+    /// Task-assignment policy (FIFO or affinity).
     pub policy: Policy,
 }
 
@@ -37,7 +39,9 @@ impl Default for ThreadConfig {
 
 /// Outcome of a thread-engine run.
 pub struct ThreadOutcome {
+    /// Wall-clock run metrics.
     pub metrics: RunMetrics,
+    /// Per-task match output, merged.
     pub correspondences: Vec<Correspondence>,
 }
 

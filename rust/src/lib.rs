@@ -18,10 +18,15 @@
 //!   list and performing affinity-based scheduling, match services with
 //!   LRU partition caches, a data service, dynamic service membership and
 //!   failure handling (§4) — available both as in-process objects and as
-//!   **real TCP services** ([`rpc`], [`service`]) speaking a
-//!   length-prefixed binary wire protocol, driven by the distributed
-//!   engine ([`engine::dist`]) or as separate processes via
-//!   `pem serve` / `pem distmatch`.
+//!   **real TCP services** ([`rpc`], [`service`]) speaking a versioned
+//!   length-prefixed binary wire protocol (spec: `docs/WIRE_PROTOCOL.md`),
+//!   with a **replicated data plane**: partition frames push-synced
+//!   across data servers, a join-time replica directory,
+//!   locality/load-aware replica selection with failover, and
+//!   replica-coverage-aware affinity scheduling.  Driven by the
+//!   distributed engine ([`engine::dist`]) or as separate processes via
+//!   `pem serve` / `pem distmatch` (architecture tour:
+//!   `docs/ARCHITECTURE.md`).
 //!
 //! Supporting subsystems: entity model ([`model`]), synthetic product-offer
 //! generator ([`datagen`]), q-gram feature hashing ([`features`]), blocking

@@ -8,9 +8,13 @@
 //!   → task generation → parallel execution) and report the result;
 //! * `sweep`    — run a core-count sweep (the Figs 8/9 experiment shape);
 //! * `serve`    — start the workflow + data services on TCP ports and
-//!   wait for match-service nodes to complete the workflow;
+//!   wait for match-service nodes to complete the workflow; with
+//!   `--role data --replica-of HOST:PORT` it instead runs a standalone
+//!   data-plane replica that syncs from a running coordinator and
+//!   serves fetches until the coordinator goes away;
 //! * `distmatch`— run one match-service node process against a running
-//!   `pem serve` coordinator;
+//!   `pem serve` coordinator (give `--data` a comma-separated replica
+//!   list, or let the join-time directory supply it);
 //! * `artifacts`— inspect the AOT artifact manifest and smoke-run the
 //!   PJRT path on a tiny workload;
 //! * `info`     — print the computing-environment and memory-model
@@ -71,14 +75,24 @@ fn usage() -> ! {
     --execute             really match inside the simulator
   sweep options:
     --cores-list 1,2,4,8,12,16
+  match/sweep dist-engine options:
+    --data-replicas N     data-plane servers incl. primary (default 1)
   serve options (workflow + data services for multi-process matching):
     --workflow-port P     control-plane port (default 0 = ephemeral)
     --data-port P         data-plane port (default 0 = ephemeral)
     --heartbeat-ms MS     failure-detection timeout (default 2000)
     --timeout-s S         give up after S seconds (default 3600)
+    --advertise HOST      host to publish in the replica directory
+                          (default 127.0.0.1; set to this machine's
+                          address for multi-host runs)
+  serve --role data options (standalone data-plane replica):
+    --replica-of HOST:PORT  upstream data server to sync from (required)
+    --workflow HOST:PORT    coordinator to announce this replica to
+    --data-port P           port to serve on (default 0 = ephemeral)
   distmatch options (one match-service node):
     --workflow HOST:PORT  workflow service address (required)
-    --data HOST:PORT      data service address (required)
+    --data HOST:PORT[,HOST:PORT...]  data replica addresses (required;
+                          the join-time directory adds any missing ones)
     --name NAME           node name  --threads T  --cache C"
     );
     std::process::exit(2);
@@ -136,6 +150,7 @@ fn parse_workflow(args: &Args, kind: StrategyKind) -> Result<WorkflowConfig> {
         } else {
             Policy::Affinity
         },
+        data_replicas: args.get_or("data-replicas", 1usize)?,
         net: pem::net::CostModel::lan(),
         data_net: pem::net::CostModel::dbms(),
         execute_in_sim: args.flag("execute"),
@@ -276,12 +291,77 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `pem serve` dispatch: the default coordinator role, or a standalone
+/// data-plane replica with `--role data`.
+fn cmd_serve(args: &Args) -> Result<()> {
+    match args.str_or("role", "coordinator") {
+        "coordinator" => cmd_serve_coordinator(args),
+        "data" => cmd_serve_data_replica(args),
+        other => bail!("bad --role {other:?} (coordinator|data)"),
+    }
+}
+
+/// Standalone data-plane replica: sync the full partition-frame set
+/// from a running data server, optionally announce into the
+/// coordinator's replica directory, serve fetches until the upstream
+/// goes away, then report per-replica traffic and exit.
+fn cmd_serve_data_replica(args: &Args) -> Result<()> {
+    use pem::service::{announce_replica, DataServiceServer};
+    let upstream = args.get_str("replica-of").ok_or_else(|| {
+        anyhow::anyhow!("--replica-of HOST:PORT required with --role data")
+    })?;
+    let bind = format!("0.0.0.0:{}", args.get_or("data-port", 0u16)?);
+    let srv = DataServiceServer::start_replica(
+        &bind,
+        upstream,
+        std::time::Duration::from_secs(30),
+    )?;
+    println!("data replica on {} syncing from {upstream}…", srv.addr());
+    let sync_timeout = std::time::Duration::from_secs(
+        args.get_or("sync-timeout-s", 120u64)?,
+    );
+    if !srv.wait_synced(sync_timeout) {
+        srv.shutdown();
+        bail!("sync from {upstream} did not complete in {sync_timeout:?}");
+    }
+    println!("synced {} partitions", srv.partition_count());
+    let advertised = format!(
+        "{}:{}",
+        args.str_or("advertise", "127.0.0.1"),
+        srv.addr().port()
+    );
+    if let Some(wf) = args.get_str("workflow") {
+        let dir = announce_replica(
+            wf,
+            &advertised,
+            &srv.partition_ids(),
+            std::time::Duration::from_secs(10),
+        )?;
+        println!(
+            "announced as {advertised} to {wf}; replica directory: {}",
+            dir.join(", ")
+        );
+    }
+    // serve until the upstream (and with it the coordinator) goes away
+    while !srv.upstream_lost() {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+    println!(
+        "upstream {upstream} gone; served {} payloads / {} — exiting",
+        srv.wire_messages(),
+        fmt_bytes(srv.wire_bytes())
+    );
+    srv.shutdown();
+    Ok(())
+}
+
 /// Start the coordinator half of a multi-process match: generate (or
 /// load) the dataset, build partitions and tasks, and serve the
 /// workflow + data services until the task list drains.
-fn cmd_serve(args: &Args) -> Result<()> {
+fn cmd_serve_coordinator(args: &Args) -> Result<()> {
     use pem::service::{
-        DataServiceServer, WorkflowServerConfig, WorkflowServiceServer,
+        announce_replica, DataServiceServer, WorkflowServerConfig,
+        WorkflowServiceServer,
     };
     let kind = parse_strategy(args)?;
     let ce = parse_ce(args)?;
@@ -330,11 +410,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     )?;
     println!("workflow service listening on {}", wf_srv.addr());
     println!("data service listening on {}", data_srv.addr());
+    // register the primary in the replica directory so joining nodes
+    // and later `pem serve --role data` replicas discover it; the
+    // announced host must be reachable by the nodes (`--advertise`)
+    let advertise = args.str_or("advertise", "127.0.0.1");
+    let primary_addr =
+        format!("{advertise}:{}", data_srv.addr().port());
+    announce_replica(
+        &format!("127.0.0.1:{}", wf_srv.addr().port()),
+        &primary_addr,
+        &data_srv.partition_ids(),
+        std::time::Duration::from_secs(10),
+    )?;
     println!(
-        "attach nodes with: pem distmatch --workflow <host>:{} \
-         --data <host>:{} --strategy {}",
+        "attach data replicas with: pem serve --role data \
+         --replica-of {primary_addr} --workflow {advertise}:{}",
+        wf_srv.addr().port()
+    );
+    println!(
+        "attach nodes with: pem distmatch --workflow {advertise}:{} \
+         --data {primary_addr} --strategy {}",
         wf_srv.addr().port(),
-        data_srv.addr().port(),
         kind.name()
     );
 
@@ -366,8 +462,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         result.len()
     );
     println!(
-        "control plane: {} messages / {}; data plane: {} payloads / {}; \
-         requeued {} task(s), {} stale completion(s)",
+        "control plane: {} messages / {}; data plane (primary): {} \
+         payloads / {}; requeued {} task(s), {} stale completion(s)",
         report.control_messages,
         fmt_bytes(report.control_wire_bytes),
         data_srv.wire_messages(),
@@ -375,6 +471,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.requeued_tasks,
         report.stale_completions
     );
+    if report.data_replicas.len() > 1 {
+        println!(
+            "replica directory: {} (remote replicas report their own \
+             wire traffic on exit)",
+            report.data_replicas.join(", ")
+        );
+    }
+    if report.version_rejections > 0 {
+        println!(
+            "rejected {} peer(s) for protocol-version mismatch",
+            report.version_rejections
+        );
+    }
     if let Some(truth) = &truth {
         let q = result.quality(truth);
         println!(
@@ -401,11 +510,18 @@ fn cmd_distmatch(args: &Args) -> Result<()> {
     let workflow = args
         .get_str("workflow")
         .ok_or_else(|| anyhow::anyhow!("--workflow HOST:PORT required"))?;
-    let data = args
-        .get_str("data")
-        .ok_or_else(|| anyhow::anyhow!("--data HOST:PORT required"))?;
-    let mut cfg =
-        MatchNodeConfig::new(workflow.to_string(), data.to_string());
+    let data = args.get_str("data").ok_or_else(|| {
+        anyhow::anyhow!("--data HOST:PORT[,HOST:PORT...] required")
+    })?;
+    let mut data_addrs = data
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty());
+    let first = data_addrs.next().ok_or_else(|| {
+        anyhow::anyhow!("--data needs at least one HOST:PORT")
+    })?;
+    let mut cfg = MatchNodeConfig::new(workflow.to_string(), first);
+    cfg.data_addrs.extend(data_addrs);
     cfg.name = args.str_or("name", "distmatch").to_string();
     cfg.threads = args.get_or("threads", 4usize)?;
     cfg.cache_capacity = args.get_or("cache", 0usize)?;
@@ -414,9 +530,12 @@ fn cmd_distmatch(args: &Args) -> Result<()> {
             MatchStrategy::new(kind),
         ));
     println!(
-        "node {:?}: joining workflow service {workflow}, data service \
-         {data}, {} thread(s), cache {}",
-        cfg.name, cfg.threads, cfg.cache_capacity
+        "node {:?}: joining workflow service {workflow}, data replicas \
+         [{}], {} thread(s), cache {}",
+        cfg.name,
+        cfg.data_addrs.join(", "),
+        cfg.threads,
+        cfg.cache_capacity
     );
     let report = run_match_node(&cfg, exec)?;
     let accesses = report.cache_hits + report.cache_misses;
@@ -434,6 +553,20 @@ fn cmd_distmatch(args: &Args) -> Result<()> {
             " (coordinator went away)"
         } else {
             ""
+        }
+    );
+    println!(
+        "fetches per data replica: [{}]{}",
+        report
+            .fetches_per_replica
+            .iter()
+            .map(|n| n.to_string())
+            .collect::<Vec<_>>()
+            .join(", "),
+        if report.replica_failovers > 0 {
+            format!(" ({} replica failover(s))", report.replica_failovers)
+        } else {
+            String::new()
         }
     );
     Ok(())

@@ -42,6 +42,15 @@ fn write_payload<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<u64> {
 /// Read one frame; `Err(UnexpectedEof)` when the peer closed cleanly
 /// between frames, `InvalidData` on corrupt payloads.
 pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Message> {
+    let payload = read_frame_raw(r)?;
+    Message::decode(&payload).map_err(wire_err)
+}
+
+/// Read one frame's payload **without decoding it** (the length header
+/// is still validated against [`MAX_FRAME_BYTES`]).  Replication uses
+/// this to store the primary's encoded partition frames byte-for-byte,
+/// so a replica re-serves exactly the bytes the primary would have sent.
+pub fn read_frame_raw<R: Read>(r: &mut R) -> io::Result<Vec<u8>> {
     let mut len_buf = [0u8; 4];
     r.read_exact(&mut len_buf)?;
     let len = u32::from_le_bytes(len_buf) as u64;
@@ -50,7 +59,7 @@ pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Message> {
     }
     let mut payload = vec![0u8; len as usize];
     r.read_exact(&mut payload)?;
-    Message::decode(&payload).map_err(wire_err)
+    Ok(payload)
 }
 
 /// One framed, buffered, byte-counting TCP connection.
@@ -103,6 +112,8 @@ impl Transport {
         })
     }
 
+    /// Write one message as a frame; returns bytes written (payload +
+    /// length prefix).
     pub fn send(&mut self, msg: &Message) -> io::Result<u64> {
         let n = write_frame(&mut self.writer, msg)?;
         self.sent_bytes += n;
@@ -126,8 +137,15 @@ impl Transport {
         Ok(n)
     }
 
+    /// Block for the next frame and decode it.
     pub fn recv(&mut self) -> io::Result<Message> {
         read_frame(&mut self.reader)
+    }
+
+    /// Block for the next frame and return its raw payload bytes
+    /// (see [`read_frame_raw`]).
+    pub fn recv_raw(&mut self) -> io::Result<Vec<u8>> {
+        read_frame_raw(&mut self.reader)
     }
 
     /// One RPC round trip: send `msg`, block for the reply.
@@ -160,6 +178,7 @@ mod tests {
         for msg in [
             Message::Join {
                 name: "node0".into(),
+                version: super::super::PROTOCOL_VERSION,
             },
             Message::NoTask { done: true },
             Message::Heartbeat {

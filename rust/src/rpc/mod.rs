@@ -25,10 +25,35 @@
 //! [`WireError::TrailingBytes`] — so corrupt or hostile frames are
 //! rejected instead of being half-read (see the property tests at the
 //! bottom and [`frame`] for the stream framing).
+//!
+//! **Versioning (protocol v2).**  The handshake frames — [`Message::Join`],
+//! [`Message::JoinAck`], [`Message::ReplicaAnnounce`] — carry a protocol
+//! version byte ([`PROTOCOL_VERSION`]) immediately after the tag; a
+//! service receiving a mismatched version rejects the peer with a clear
+//! [`Message::Error`] instead of mis-parsing later frames.  v2 also adds
+//! the **replicated data plane**: [`Message::JoinAck`] delivers the
+//! replica directory, data servers announce themselves with
+//! [`Message::ReplicaAnnounce`], replicate partition frames with
+//! [`Message::SyncRequest`]/[`Message::SyncDone`], and answer fetches
+//! for partitions they do not hold with [`Message::Redirect`].  The
+//! authoritative byte-level layout of every frame is specified in
+//! `docs/WIRE_PROTOCOL.md`, kept in lockstep with this module.
+
+#![warn(missing_docs)]
 
 pub mod frame;
 
-pub use frame::{read_frame, write_frame, Transport, MAX_FRAME_BYTES};
+pub use frame::{read_frame, read_frame_raw, write_frame, Transport, MAX_FRAME_BYTES};
+
+/// Version of the wire protocol this build speaks.
+///
+/// Carried in the handshake frames ([`Message::Join`],
+/// [`Message::JoinAck`], [`Message::ReplicaAnnounce`]); peers with a
+/// different version are rejected at join time with a clear error
+/// (`docs/WIRE_PROTOCOL.md` § Version negotiation).  History:
+/// v1 — PR 1's unversioned frames; v2 — version byte + replicated data
+/// plane (directory, redirect, sync).
+pub const PROTOCOL_VERSION: u8 = 2;
 
 use crate::coordinator::scheduler::ServiceId;
 use crate::features::{EntityFeatures, QGramSet, TokenSet};
@@ -74,47 +99,133 @@ impl std::error::Error for WireError {}
 /// plane to the data service).
 #[derive(Debug)]
 pub enum Message {
-    /// match service → workflow service: join the cluster.
-    Join { name: String },
-    /// workflow service → match service: membership granted.
-    JoinAck { service: ServiceId },
+    /// match service → workflow service: join the cluster.  `version`
+    /// is the sender's [`PROTOCOL_VERSION`]; a mismatch is answered
+    /// with [`Message::Error`], never with a `JoinAck`.
+    Join {
+        /// Human-readable node name (coordinator logs).
+        name: String,
+        /// Sender's [`PROTOCOL_VERSION`].
+        version: u8,
+    },
+    /// workflow service → match service: membership granted.  Carries
+    /// the coordinator's protocol version (echo for symmetric checking)
+    /// and the current **replica directory** — the `host:port`
+    /// addresses of every announced data-service replica, so a joining
+    /// node can spread partition fetches without extra configuration.
+    JoinAck {
+        /// The [`ServiceId`] granted to the joining match service.
+        service: ServiceId,
+        /// Coordinator's [`PROTOCOL_VERSION`].
+        version: u8,
+        /// Data-plane replica directory (`host:port` per replica, in
+        /// announcement order; may be empty).
+        replicas: Vec<String>,
+    },
     /// match service → workflow service: graceful departure.
-    Leave { service: ServiceId },
+    Leave {
+        /// The departing service.
+        service: ServiceId,
+    },
     /// workflow service → match service: departure acknowledged.
     LeaveAck,
     /// match service → workflow service: pull a task (initial request;
     /// subsequent pulls piggyback on [`Message::Complete`]).
-    TaskRequest { service: ServiceId },
+    TaskRequest {
+        /// The pulling service.
+        service: ServiceId,
+    },
     /// workflow service → match service: task assignment.
-    TaskAssign { task: MatchTask },
+    TaskAssign {
+        /// The assigned match task (id + partition pair).
+        task: MatchTask,
+    },
     /// workflow service → match service: nothing to assign right now.
-    /// `done == true` means the whole workflow has completed and the
-    /// match service may shut down; `false` means tasks are in flight
-    /// elsewhere and may yet be re-queued (poll again).
-    NoTask { done: bool },
+    NoTask {
+        /// `true`: the whole workflow has completed and the match
+        /// service may shut down; `false`: tasks are in flight
+        /// elsewhere and may yet be re-queued (poll again).
+        done: bool,
+    },
     /// match service → workflow service: completion report with the
     /// piggybacked cache status (paper §4) and the task's match output.
     /// The reply is the next assignment ([`Message::TaskAssign`] or
     /// [`Message::NoTask`]) — the paper's pull scheduling in one round
     /// trip.
     Complete {
+        /// The reporting service.
         service: ServiceId,
+        /// The completed task.
         task_id: u32,
+        /// Pair comparisons the task evaluated.
         comparisons: u64,
+        /// Partition ids currently in the service's cache.
         cached: Vec<PartitionId>,
+        /// Correspondences the task found.
         matches: Vec<Correspondence>,
     },
     /// match service → workflow service: liveness signal.
-    Heartbeat { service: ServiceId },
+    Heartbeat {
+        /// The live service.
+        service: ServiceId,
+    },
     /// workflow service → match service: liveness acknowledged.
     HeartbeatAck,
     /// match service → data service: fetch one partition.
-    FetchPartition { id: PartitionId },
+    FetchPartition {
+        /// The wanted partition.
+        id: PartitionId,
+    },
     /// data service → match service: the partition payload (entity ids +
     /// precomputed match features).
-    Partition { data: PartitionData },
+    Partition {
+        /// The partition payload.
+        data: PartitionData,
+    },
+    /// data service → workflow service: announce a data-plane replica
+    /// into the directory, listing the partitions it holds (feeds
+    /// replica-aware affinity scheduling).  Answered with
+    /// [`Message::ReplicaDirectory`], or [`Message::Error`] on a
+    /// version mismatch.
+    ReplicaAnnounce {
+        /// `host:port` match nodes should use to reach this replica.
+        addr: String,
+        /// Sender's [`PROTOCOL_VERSION`].
+        version: u8,
+        /// Partitions this replica currently holds.
+        partitions: Vec<PartitionId>,
+    },
+    /// workflow service → data service: the directory after an
+    /// announcement (every replica announced so far, in order).
+    ReplicaDirectory {
+        /// `host:port` per announced replica.
+        replicas: Vec<String>,
+    },
+    /// data service → match service: this replica does not hold the
+    /// requested partition — retry at `addr` (normally the primary).
+    /// Clients follow at most one redirect hop per fetch attempt.
+    Redirect {
+        /// `host:port` of the data server that does hold the partition.
+        addr: String,
+    },
+    /// replica data service → upstream data service: push me every
+    /// partition frame I do not already hold (`have`).  The upstream
+    /// answers with a stream of [`Message::Partition`] frames
+    /// terminated by [`Message::SyncDone`].
+    SyncRequest {
+        /// Partitions the requesting replica already holds.
+        have: Vec<PartitionId>,
+    },
+    /// upstream data service → replica: replication stream complete.
+    SyncDone {
+        /// Number of partition frames pushed in this stream.
+        count: u32,
+    },
     /// Either direction: request failed.
-    Error { message: String },
+    Error {
+        /// Human-readable failure description.
+        message: String,
+    },
 }
 
 // ---------------------------------------------------------------- tags
@@ -132,6 +243,11 @@ const TAG_HEARTBEAT_ACK: u8 = 10;
 const TAG_FETCH_PARTITION: u8 = 11;
 const TAG_PARTITION: u8 = 12;
 const TAG_ERROR: u8 = 13;
+const TAG_REPLICA_ANNOUNCE: u8 = 14;
+const TAG_REPLICA_DIRECTORY: u8 = 15;
+const TAG_REDIRECT: u8 = 16;
+const TAG_SYNC_REQUEST: u8 = 17;
+const TAG_SYNC_DONE: u8 = 18;
 
 /// Minimum wire footprint of one [`EntityFeatures`]: a 4-byte title
 /// length plus three 4-byte list counts (all possibly zero).
@@ -175,6 +291,20 @@ fn put_service(buf: &mut Vec<u8>, s: ServiceId) {
     put_u32(buf, s.0 as u32);
 }
 
+fn put_str_list(buf: &mut Vec<u8>, ss: &[String]) {
+    put_u32(buf, ss.len() as u32);
+    for s in ss {
+        put_str(buf, s);
+    }
+}
+
+fn put_partition_list(buf: &mut Vec<u8>, ps: &[PartitionId]) {
+    put_u32(buf, ps.len() as u32);
+    for p in ps {
+        put_u32(buf, p.0);
+    }
+}
+
 fn put_features(buf: &mut Vec<u8>, f: &EntityFeatures) {
     // Only the canonical representations travel; `title_chars` and the
     // sparse count vectors are derived again on the receiving side.
@@ -208,13 +338,20 @@ impl Message {
     pub fn encode(&self) -> Vec<u8> {
         let mut b = Vec::with_capacity(16);
         match self {
-            Message::Join { name } => {
+            Message::Join { name, version } => {
                 put_u8(&mut b, TAG_JOIN);
+                put_u8(&mut b, *version);
                 put_str(&mut b, name);
             }
-            Message::JoinAck { service } => {
+            Message::JoinAck {
+                service,
+                version,
+                replicas,
+            } => {
                 put_u8(&mut b, TAG_JOIN_ACK);
+                put_u8(&mut b, *version);
                 put_service(&mut b, *service);
+                put_str_list(&mut b, replicas);
             }
             Message::Leave { service } => {
                 put_u8(&mut b, TAG_LEAVE);
@@ -269,6 +406,32 @@ impl Message {
             Message::Partition { data } => {
                 return encode_partition_message(data);
             }
+            Message::ReplicaAnnounce {
+                addr,
+                version,
+                partitions,
+            } => {
+                put_u8(&mut b, TAG_REPLICA_ANNOUNCE);
+                put_u8(&mut b, *version);
+                put_str(&mut b, addr);
+                put_partition_list(&mut b, partitions);
+            }
+            Message::ReplicaDirectory { replicas } => {
+                put_u8(&mut b, TAG_REPLICA_DIRECTORY);
+                put_str_list(&mut b, replicas);
+            }
+            Message::Redirect { addr } => {
+                put_u8(&mut b, TAG_REDIRECT);
+                put_str(&mut b, addr);
+            }
+            Message::SyncRequest { have } => {
+                put_u8(&mut b, TAG_SYNC_REQUEST);
+                put_partition_list(&mut b, have);
+            }
+            Message::SyncDone { count } => {
+                put_u8(&mut b, TAG_SYNC_DONE);
+                put_u32(&mut b, *count);
+            }
             Message::Error { message } => {
                 put_u8(&mut b, TAG_ERROR);
                 put_str(&mut b, message);
@@ -285,9 +448,14 @@ impl Message {
         };
         let tag = d.u8()?;
         let msg = match tag {
-            TAG_JOIN => Message::Join { name: d.string()? },
+            TAG_JOIN => Message::Join {
+                version: d.u8()?,
+                name: d.string()?,
+            },
             TAG_JOIN_ACK => Message::JoinAck {
+                version: d.u8()?,
                 service: d.service()?,
+                replicas: d.str_list()?,
             },
             TAG_LEAVE => Message::Leave {
                 service: d.service()?,
@@ -361,6 +529,19 @@ impl Message {
                     },
                 }
             }
+            TAG_REPLICA_ANNOUNCE => Message::ReplicaAnnounce {
+                version: d.u8()?,
+                addr: d.string()?,
+                partitions: d.partition_list()?,
+            },
+            TAG_REPLICA_DIRECTORY => Message::ReplicaDirectory {
+                replicas: d.str_list()?,
+            },
+            TAG_REDIRECT => Message::Redirect { addr: d.string()? },
+            TAG_SYNC_REQUEST => Message::SyncRequest {
+                have: d.partition_list()?,
+            },
+            TAG_SYNC_DONE => Message::SyncDone { count: d.u32()? },
             TAG_ERROR => Message::Error {
                 message: d.string()?,
             },
@@ -385,6 +566,11 @@ impl Message {
             Message::HeartbeatAck => "HeartbeatAck",
             Message::FetchPartition { .. } => "FetchPartition",
             Message::Partition { .. } => "Partition",
+            Message::ReplicaAnnounce { .. } => "ReplicaAnnounce",
+            Message::ReplicaDirectory { .. } => "ReplicaDirectory",
+            Message::Redirect { .. } => "Redirect",
+            Message::SyncRequest { .. } => "SyncRequest",
+            Message::SyncDone { .. } => "SyncDone",
             Message::Error { .. } => "Error",
         }
     }
@@ -458,6 +644,25 @@ impl<'a> Dec<'a> {
         let len = self.list_len(1)?;
         let bytes = self.take(len)?;
         String::from_utf8(bytes.to_vec()).map_err(|_| WireError::BadUtf8)
+    }
+
+    fn str_list(&mut self) -> Result<Vec<String>, WireError> {
+        // each string needs at least its own 4-byte length prefix
+        let n = self.list_len(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.string()?);
+        }
+        Ok(out)
+    }
+
+    fn partition_list(&mut self) -> Result<Vec<PartitionId>, WireError> {
+        let n = self.list_len(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(PartitionId(self.u32()?));
+        }
+        Ok(out)
     }
 
     fn u64_list(&mut self) -> Result<Vec<u64>, WireError> {
@@ -547,8 +752,15 @@ mod tests {
         vec![
             Message::Join {
                 name: rand_string(rng, 16),
+                version: rng.gen_range(256) as u8,
             },
-            Message::JoinAck { service: svc },
+            Message::JoinAck {
+                service: svc,
+                version: rng.gen_range(256) as u8,
+                replicas: (0..rng.gen_range(4))
+                    .map(|i| format!("10.0.0.{i}:74{i:02}"))
+                    .collect(),
+            },
             Message::Leave { service: svc },
             Message::LeaveAck,
             Message::TaskRequest { service: svc },
@@ -584,6 +796,29 @@ mod tests {
             },
             Message::Partition {
                 data: rand_partition(rng),
+            },
+            Message::ReplicaAnnounce {
+                addr: format!("127.0.0.1:{}", 1024 + rng.gen_range(60_000)),
+                version: rng.gen_range(256) as u8,
+                partitions: (0..rng.gen_range(6))
+                    .map(|i| PartitionId(i as u32))
+                    .collect(),
+            },
+            Message::ReplicaDirectory {
+                replicas: (0..rng.gen_range(4))
+                    .map(|i| format!("replica-{i}:7402"))
+                    .collect(),
+            },
+            Message::Redirect {
+                addr: rand_string(rng, 24),
+            },
+            Message::SyncRequest {
+                have: (0..rng.gen_range(8))
+                    .map(|i| PartitionId(i as u32 * 3))
+                    .collect(),
+            },
+            Message::SyncDone {
+                count: rng.gen_range(10_000) as u32,
             },
             Message::Error {
                 message: rand_string(rng, 40),
@@ -651,6 +886,70 @@ mod tests {
                 }
             }
         });
+    }
+
+    /// The handshake frames put the version byte immediately after the
+    /// tag, so a version check needs no further parsing — the layout
+    /// contract `docs/WIRE_PROTOCOL.md` § Version negotiation relies on.
+    #[test]
+    fn version_byte_is_first_after_tag_in_handshake_frames() {
+        let join = Message::Join {
+            name: "n".into(),
+            version: 0xAB,
+        }
+        .encode();
+        assert_eq!(join[0], TAG_JOIN);
+        assert_eq!(join[1], 0xAB);
+        let ack = Message::JoinAck {
+            service: ServiceId(1),
+            version: 0xCD,
+            replicas: vec![],
+        }
+        .encode();
+        assert_eq!(ack[0], TAG_JOIN_ACK);
+        assert_eq!(ack[1], 0xCD);
+        let ann = Message::ReplicaAnnounce {
+            addr: "h:1".into(),
+            version: 0xEF,
+            partitions: vec![],
+        }
+        .encode();
+        assert_eq!(ann[0], TAG_REPLICA_ANNOUNCE);
+        assert_eq!(ann[1], 0xEF);
+    }
+
+    #[test]
+    fn replica_directory_roundtrips_addresses_in_order() {
+        let dir = vec![
+            "10.1.2.3:7402".to_string(),
+            "10.1.2.4:7402".to_string(),
+        ];
+        let msg = Message::JoinAck {
+            service: ServiceId(9),
+            version: PROTOCOL_VERSION,
+            replicas: dir.clone(),
+        };
+        let Ok(Message::JoinAck {
+            service,
+            version,
+            replicas,
+        }) = Message::decode(&msg.encode())
+        else {
+            panic!("decode JoinAck");
+        };
+        assert_eq!(service, ServiceId(9));
+        assert_eq!(version, PROTOCOL_VERSION);
+        assert_eq!(replicas, dir);
+    }
+
+    #[test]
+    fn sync_request_with_lying_count_rejected_before_alloc() {
+        let mut b = vec![TAG_SYNC_REQUEST];
+        put_u32(&mut b, u32::MAX); // claims 4 billion held partitions
+        assert!(matches!(
+            Message::decode(&b),
+            Err(WireError::Truncated)
+        ));
     }
 
     #[test]

@@ -1,55 +1,148 @@
-//! The data service as a TCP endpoint (paper §4).
+//! The data service as a TCP endpoint (paper §4), now replicable.
 //!
 //! Wraps the in-process [`DataService`] store behind a socket loop:
 //! match services connect, send [`Message::FetchPartition`], and receive
 //! the partition payload (entity ids + precomputed match features).
+//!
+//! A server runs in one of two roles:
+//!
+//! * **primary** ([`DataServiceServer::start`]) — authoritative, backed
+//!   by the full store; partition frames are encoded once and cached;
+//! * **replica** ([`DataServiceServer::start_replica`]) — holds no
+//!   store, only the **encoded partition frames pushed from an
+//!   upstream server** over a [`Message::SyncRequest`] stream, and
+//!   re-serves them byte-identically.  A fetch for a partition the
+//!   replica does not (yet) hold is answered with
+//!   [`Message::Redirect`] to the upstream, never with an error.
+//!
 //! Every response is accounted twice, deliberately:
 //!
 //! * the store's own [`DataService::traffic`] keeps counting *logical*
-//!   payload bytes (`approx_bytes`) — comparable with the simulator;
-//! * [`DataServiceServer::wire_traffic`] counts the **actual bytes
-//!   written to the socket**, frames included — the number a network
-//!   monitor would report.
+//!   payload bytes (`approx_bytes`) — comparable with the simulator
+//!   (replication pushes use [`DataService::peek`] and are **not**
+//!   counted as logical fetches);
+//! * [`DataServiceServer::wire_bytes`] counts the **actual bytes
+//!   written to the socket**, frames included, per server — so a
+//!   replicated run reports per-replica byte accounting.
 
 use crate::net::TrafficStats;
 use crate::partition::PartitionId;
 use crate::rpc::{encode_partition_message, Message, Transport};
 use crate::store::DataService;
 use std::collections::HashMap;
+use std::io;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// What backs this server's partitions.
+enum Backing {
+    /// Authoritative store; frames are encoded lazily on first fetch.
+    Primary(Arc<DataService>),
+    /// No store: only frames pushed from `upstream`.  Misses redirect.
+    Replica {
+        /// `host:port` of the server this replica syncs from.
+        upstream: String,
+        /// Read/connect timeout for the sync connection.
+        io_timeout: Duration,
+    },
+}
+
+/// Outcome of one fetch against the local state.
+enum Served {
+    /// A complete pre-encoded `Partition` frame payload.
+    Payload(Arc<Vec<u8>>),
+    /// Not here — client should retry at this address.
+    Redirect(String),
+    /// Unknown everywhere (primary miss): protocol error.
+    Unknown,
+}
 
 struct DataShared {
-    store: Arc<DataService>,
+    backing: Backing,
     wire: TrafficStats,
     shutdown: AtomicBool,
+    /// Replica: the initial sync stream completed.  Primaries are
+    /// always "synced".
+    synced: AtomicBool,
+    /// Replica: a sync thread has been started (guards `begin_sync`).
+    sync_started: AtomicBool,
+    /// Replica: the upstream connection dropped after sync — the
+    /// coordinator is gone and this replica can retire.
+    upstream_lost: AtomicBool,
     /// Partition payloads are immutable for a run, so each is
     /// serialized once and the encoded frame reused for every
     /// subsequent fetch (repeat fetches are the common case whenever
-    /// match-service caches are small).
+    /// match-service caches are small).  Replicas are seeded by the
+    /// sync stream instead of a store.
     encoded: Mutex<HashMap<PartitionId, Arc<Vec<u8>>>>,
 }
 
 impl DataShared {
-    /// Logical fetch (store accounting) + cached wire encoding.
-    fn encoded_payload(&self, id: PartitionId) -> Option<Arc<Vec<u8>>> {
-        let data = self.store.try_fetch(id)?;
-        let mut cache = self.encoded.lock().unwrap();
-        Some(match cache.get(&id) {
-            Some(p) => p.clone(),
-            None => {
-                let p = Arc::new(encode_partition_message(&data));
-                cache.insert(id, p.clone());
-                p
+    /// Serve a fetch from local state; see [`Served`].
+    fn serve(&self, id: PartitionId) -> Served {
+        match &self.backing {
+            Backing::Primary(store) => {
+                // logical fetch accounting on every hit, like the
+                // in-process engines
+                let Some(data) = store.try_fetch(id) else {
+                    return Served::Unknown;
+                };
+                let mut cache = self.encoded.lock().unwrap();
+                let payload = match cache.get(&id) {
+                    Some(p) => p.clone(),
+                    None => {
+                        let p = Arc::new(encode_partition_message(&data));
+                        cache.insert(id, p.clone());
+                        p
+                    }
+                };
+                Served::Payload(payload)
             }
-        })
+            Backing::Replica { upstream, .. } => {
+                match self.encoded.lock().unwrap().get(&id) {
+                    Some(p) => Served::Payload(p.clone()),
+                    None => Served::Redirect(upstream.clone()),
+                }
+            }
+        }
+    }
+
+    /// Ids this server can currently serve without redirecting.
+    fn held_ids(&self) -> Vec<PartitionId> {
+        match &self.backing {
+            Backing::Primary(store) => store.partition_ids(),
+            Backing::Replica { .. } => {
+                let mut ids: Vec<PartitionId> =
+                    self.encoded.lock().unwrap().keys().copied().collect();
+                ids.sort_unstable();
+                ids
+            }
+        }
+    }
+
+    /// The encoded frame for `id` **without** logical fetch accounting
+    /// (replication push path).
+    fn encoded_for_sync(&self, id: PartitionId) -> Option<Arc<Vec<u8>>> {
+        if let Some(p) = self.encoded.lock().unwrap().get(&id) {
+            return Some(p.clone());
+        }
+        match &self.backing {
+            Backing::Primary(store) => {
+                let data = store.peek(id)?;
+                let p = Arc::new(encode_partition_message(&data));
+                self.encoded.lock().unwrap().insert(id, p.clone());
+                Some(p)
+            }
+            Backing::Replica { .. } => None,
+        }
     }
 }
 
-/// A running data-service endpoint.  Dropping the handle does *not* stop
-/// the server; call [`DataServiceServer::shutdown`].
+/// A running data-service endpoint (primary or replica).  Dropping the
+/// handle does *not* stop the server; call
+/// [`DataServiceServer::shutdown`].
 pub struct DataServiceServer {
     addr: SocketAddr,
     shared: Arc<DataShared>,
@@ -57,17 +150,64 @@ pub struct DataServiceServer {
 
 impl DataServiceServer {
     /// Bind `bind` (use `"127.0.0.1:0"` for an ephemeral port) and start
-    /// accepting fetch connections.
+    /// accepting fetch connections as the **primary**, backed by `store`.
     pub fn start(
         store: Arc<DataService>,
         bind: &str,
     ) -> anyhow::Result<DataServiceServer> {
+        Self::start_inner(Backing::Primary(store), bind, true)
+    }
+
+    /// Bind `bind` and start as a **replica** of the data server at
+    /// `upstream` (`host:port`): immediately begins pulling every
+    /// partition frame over a [`Message::SyncRequest`] stream, serving
+    /// redirects for partitions that have not arrived yet.  Use
+    /// [`DataServiceServer::wait_synced`] to block until the replica is
+    /// complete.
+    pub fn start_replica(
+        bind: &str,
+        upstream: &str,
+        io_timeout: Duration,
+    ) -> anyhow::Result<DataServiceServer> {
+        let srv = Self::start_replica_deferred(bind, upstream, io_timeout)?;
+        srv.begin_sync();
+        Ok(srv)
+    }
+
+    /// Like [`DataServiceServer::start_replica`], but without starting
+    /// the sync stream: the replica serves [`Message::Redirect`] for
+    /// everything until [`DataServiceServer::begin_sync`] is called.
+    /// Lets callers control when replication traffic happens (and tests
+    /// exercise the redirect path deterministically).
+    pub fn start_replica_deferred(
+        bind: &str,
+        upstream: &str,
+        io_timeout: Duration,
+    ) -> anyhow::Result<DataServiceServer> {
+        Self::start_inner(
+            Backing::Replica {
+                upstream: upstream.to_string(),
+                io_timeout,
+            },
+            bind,
+            false,
+        )
+    }
+
+    fn start_inner(
+        backing: Backing,
+        bind: &str,
+        synced: bool,
+    ) -> anyhow::Result<DataServiceServer> {
         let listener = TcpListener::bind(bind)?;
         let addr = listener.local_addr()?;
         let shared = Arc::new(DataShared {
-            store,
+            backing,
             wire: TrafficStats::new(),
             shutdown: AtomicBool::new(false),
+            synced: AtomicBool::new(synced),
+            sync_started: AtomicBool::new(false),
+            upstream_lost: AtomicBool::new(false),
             encoded: Mutex::new(HashMap::new()),
         });
         let accept_shared = shared.clone();
@@ -77,9 +217,63 @@ impl DataServiceServer {
         Ok(DataServiceServer { addr, shared })
     }
 
+    /// Replica: start the background sync stream from the upstream
+    /// server.  Idempotent; a no-op on primaries.
+    pub fn begin_sync(&self) {
+        if !matches!(self.shared.backing, Backing::Replica { .. }) {
+            return;
+        }
+        if self.shared.sync_started.swap(true, Ordering::SeqCst) {
+            return; // already running
+        }
+        let shared = self.shared.clone();
+        let _ = std::thread::Builder::new()
+            .name("pem-data-sync".into())
+            .spawn(move || sync_loop(shared));
+    }
+
     /// The bound address (for clients).
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// `true` for servers started with
+    /// [`DataServiceServer::start_replica`] /
+    /// [`DataServiceServer::start_replica_deferred`].
+    pub fn is_replica(&self) -> bool {
+        matches!(self.shared.backing, Backing::Replica { .. })
+    }
+
+    /// Block until the initial replication stream has completed
+    /// (immediately `true` on primaries); `false` on timeout.
+    pub fn wait_synced(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if self.shared.synced.load(Ordering::SeqCst) {
+                return true;
+            }
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Replica: the upstream connection dropped after sync (the
+    /// coordinator went away) — this replica can retire.
+    pub fn upstream_lost(&self) -> bool {
+        self.shared.upstream_lost.load(Ordering::SeqCst)
+    }
+
+    /// Partitions this server can serve without redirecting.
+    pub fn partition_count(&self) -> usize {
+        self.shared.held_ids().len()
+    }
+
+    /// Ids of the partitions this server holds (for replica
+    /// announcements — see [`crate::service::announce_replica`]).
+    pub fn partition_ids(&self) -> Vec<PartitionId> {
+        self.shared.held_ids()
     }
 
     /// Actual bytes delivered over sockets (frames included).
@@ -127,13 +321,17 @@ fn handle_conn(stream: TcpStream, shared: Arc<DataShared>) {
             break; // shut down: drop the connection, unblocking clients
         }
         let sent = match msg {
-            Message::FetchPartition { id } => {
-                match shared.encoded_payload(id) {
-                    Some(payload) => t.send_raw_payload(&payload),
-                    None => t.send(&Message::Error {
-                        message: format!("unknown partition {id}"),
-                    }),
+            Message::FetchPartition { id } => match shared.serve(id) {
+                Served::Payload(payload) => t.send_raw_payload(&payload),
+                Served::Redirect(addr) => {
+                    t.send(&Message::Redirect { addr })
                 }
+                Served::Unknown => t.send(&Message::Error {
+                    message: format!("unknown partition {id}"),
+                }),
+            },
+            Message::SyncRequest { have } => {
+                serve_sync(&mut t, &shared, &have)
             }
             other => t.send(&Message::Error {
                 message: format!(
@@ -147,6 +345,111 @@ fn handle_conn(stream: TcpStream, shared: Arc<DataShared>) {
             Err(_) => break,
         }
     }
+}
+
+/// Push every held partition frame the peer lacks, then `SyncDone`.
+/// Returns the total bytes written (recorded as one traffic entry —
+/// replication is one logical transfer, not thousands of fetches).
+fn serve_sync(
+    t: &mut Transport,
+    shared: &DataShared,
+    have: &[PartitionId],
+) -> io::Result<u64> {
+    let have: std::collections::HashSet<PartitionId> =
+        have.iter().copied().collect();
+    let mut total = 0u64;
+    let mut count = 0u32;
+    for id in shared.held_ids() {
+        if have.contains(&id) {
+            continue;
+        }
+        // `encoded_for_sync` can only miss if a concurrent shutdown
+        // raced the id listing; skip rather than abort the stream
+        if let Some(payload) = shared.encoded_for_sync(id) {
+            total += t.send_raw_payload(&payload)?;
+            count += 1;
+        }
+    }
+    total += t.send(&Message::SyncDone { count })?;
+    Ok(total)
+}
+
+/// One [`Message::SyncRequest`] round: ask upstream for everything not
+/// in the local frame set and absorb the pushed frames.  Returns the
+/// number of frames received, or an error when the upstream is gone /
+/// refused.
+fn sync_round(t: &mut Transport, shared: &DataShared) -> anyhow::Result<u32> {
+    let have: Vec<PartitionId> =
+        shared.encoded.lock().unwrap().keys().copied().collect();
+    t.send(&Message::SyncRequest { have })?;
+    let mut received = 0u32;
+    loop {
+        let raw = t.recv_raw()?;
+        match Message::decode(&raw) {
+            Ok(Message::Partition { data }) => {
+                shared
+                    .encoded
+                    .lock()
+                    .unwrap()
+                    .insert(data.id, Arc::new(raw));
+                received += 1;
+            }
+            Ok(Message::SyncDone { .. }) => return Ok(received),
+            Ok(Message::Error { message }) => {
+                anyhow::bail!("upstream refused sync: {message}")
+            }
+            Ok(other) => {
+                anyhow::bail!("unexpected {} in sync stream", other.kind())
+            }
+            Err(e) => anyhow::bail!("corrupt sync frame: {e}"),
+        }
+    }
+}
+
+/// Replica background thread: pull the full frame set from upstream,
+/// then keep heartbeating with incremental sync rounds — which both
+/// detects the upstream's departure (the coordinator went away) and
+/// heals any frames this replica is missing.
+fn sync_loop(shared: Arc<DataShared>) {
+    let Backing::Replica {
+        upstream,
+        io_timeout,
+    } = &shared.backing
+    else {
+        return;
+    };
+    let mut t = match Transport::connect(upstream.as_str(), *io_timeout) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("data replica: cannot reach upstream {upstream}: {e}");
+            shared.upstream_lost.store(true, Ordering::SeqCst);
+            return;
+        }
+    };
+    match sync_round(&mut t, &shared) {
+        Ok(_) => shared.synced.store(true, Ordering::SeqCst),
+        Err(e) => {
+            eprintln!("data replica: sync from {upstream} failed: {e:#}");
+            shared.upstream_lost.store(true, Ordering::SeqCst);
+            return;
+        }
+    }
+    let interval = Duration::from_millis(400);
+    let step = Duration::from_millis(20);
+    'watch: loop {
+        let mut slept = Duration::ZERO;
+        while slept < interval {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            std::thread::sleep(step);
+            slept += step;
+        }
+        if sync_round(&mut t, &shared).is_err() {
+            break 'watch;
+        }
+    }
+    shared.upstream_lost.store(true, Ordering::SeqCst);
 }
 
 #[cfg(test)]
@@ -208,5 +511,105 @@ mod tests {
             .unwrap();
         assert!(matches!(ok, Message::Partition { .. }));
         srv.shutdown();
+    }
+
+    /// A replica syncs the primary's encoded frames and re-serves them
+    /// byte-identically, without touching the primary's logical fetch
+    /// accounting.
+    #[test]
+    fn replica_syncs_and_serves_identical_frames() {
+        let store = store();
+        let n_parts = store.n_partitions();
+        let primary =
+            DataServiceServer::start(store.clone(), "127.0.0.1:0").unwrap();
+        let replica = DataServiceServer::start_replica(
+            "127.0.0.1:0",
+            &primary.addr().to_string(),
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        assert!(replica.is_replica());
+        assert!(!primary.is_replica());
+        assert!(replica.wait_synced(Duration::from_secs(10)));
+        assert_eq!(replica.partition_count(), n_parts);
+        assert_eq!(replica.partition_ids(), store.partition_ids());
+        // replication is not a logical fetch
+        assert_eq!(store.fetches(), 0);
+
+        let mut cp =
+            Transport::connect(primary.addr(), Duration::from_secs(5))
+                .unwrap();
+        let mut cr =
+            Transport::connect(replica.addr(), Duration::from_secs(5))
+                .unwrap();
+        let req = Message::FetchPartition { id: PartitionId(1) };
+        let from_primary = cp.request(&req).unwrap();
+        let from_replica = cr.request(&req).unwrap();
+        assert_eq!(from_primary.encode(), from_replica.encode());
+        // only the direct primary fetch is a logical fetch
+        assert_eq!(store.fetches(), 1);
+        // both servers account their own wire traffic
+        assert!(primary.wire_bytes() > 0);
+        assert!(replica.wire_bytes() > 0);
+        replica.shutdown();
+        primary.shutdown();
+    }
+
+    /// Before sync, a replica answers fetches with a redirect to its
+    /// upstream; after sync it serves the payload itself.
+    #[test]
+    fn unsynced_replica_redirects_to_upstream() {
+        let primary =
+            DataServiceServer::start(store(), "127.0.0.1:0").unwrap();
+        let upstream = primary.addr().to_string();
+        let replica = DataServiceServer::start_replica_deferred(
+            "127.0.0.1:0",
+            &upstream,
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        let mut c =
+            Transport::connect(replica.addr(), Duration::from_secs(5))
+                .unwrap();
+        let reply = c
+            .request(&Message::FetchPartition { id: PartitionId(0) })
+            .unwrap();
+        let Message::Redirect { addr } = reply else {
+            panic!("expected redirect, got {}", reply.kind());
+        };
+        assert_eq!(addr, upstream);
+
+        replica.begin_sync();
+        assert!(replica.wait_synced(Duration::from_secs(10)));
+        let reply = c
+            .request(&Message::FetchPartition { id: PartitionId(0) })
+            .unwrap();
+        assert!(matches!(reply, Message::Partition { .. }));
+        replica.shutdown();
+        primary.shutdown();
+    }
+
+    /// A replica notices when its upstream goes away after sync.
+    #[test]
+    fn replica_detects_upstream_loss() {
+        let primary =
+            DataServiceServer::start(store(), "127.0.0.1:0").unwrap();
+        let replica = DataServiceServer::start_replica(
+            "127.0.0.1:0",
+            &primary.addr().to_string(),
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        assert!(replica.wait_synced(Duration::from_secs(10)));
+        assert!(!replica.upstream_lost());
+        primary.shutdown();
+        // the primary drops the sync connection at its next recv; give
+        // the watcher a moment to observe it
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !replica.upstream_lost() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(replica.upstream_lost());
+        replica.shutdown();
     }
 }

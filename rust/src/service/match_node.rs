@@ -1,13 +1,21 @@
 //! A match service as a TCP client node (paper §4).
 //!
-//! One node = one [`ServiceId`]: it joins the workflow service, runs
-//! `threads` match workers that pull tasks over the wire, fetch
-//! partitions from the data service through a shared
-//! [`PartitionCache`], execute them on the configured
-//! [`TaskExecutor`] (pure-Rust or accelerated — the same trait the
-//! in-process engines use), and report completions with the
+//! One node = one [`ServiceId`]: it joins the workflow service (the
+//! join handshake negotiates the protocol version and delivers the
+//! data-plane **replica directory**), runs `threads` match workers
+//! that pull tasks over the wire, fetch partitions from the data-plane
+//! replicas through a shared [`PartitionCache`], execute them on the
+//! configured [`TaskExecutor`] (pure-Rust or accelerated — the same
+//! trait the in-process engines use), and report completions with the
 //! piggybacked cache status.  A separate heartbeat thread keeps the
 //! workflow service's failure detector fed.
+//!
+//! Each wire fetch picks a data replica through the node-wide
+//! [`ReplicaSelector`] (cached-locality first, then
+//! least-outstanding-fetches) and **fails over** to the next replica
+//! on connection errors; only when every replica is dead does the node
+//! abandon its task and stop heartbeating, so the workflow service
+//! re-queues it (paper §4 failure handling, now on the data plane too).
 //!
 //! The node runs to workflow completion (`NoTask { done: true }`),
 //! then leaves gracefully.  `fail_after_tasks` simulates a crash for
@@ -17,10 +25,13 @@
 
 use crate::coordinator::scheduler::ServiceId;
 use crate::partition::PartitionId;
-use crate::rpc::{Message, Transport};
+use crate::rpc::{Message, Transport, PROTOCOL_VERSION};
+use crate::service::replica::ReplicaSelector;
 use crate::store::PartitionData;
 use crate::worker::{task_comparisons, PartitionCache, TaskExecutor};
 use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -30,8 +41,11 @@ use std::time::{Duration, Instant};
 pub struct MatchNodeConfig {
     /// Workflow-service address, `host:port`.
     pub workflow_addr: String,
-    /// Data-service address, `host:port`.
-    pub data_addr: String,
+    /// Data-plane replica addresses, `host:port` each, preference
+    /// order.  The directory delivered in `JoinAck` is merged in at
+    /// join time (deduplicated, appended), so one seed address is
+    /// enough when the coordinator knows the rest.
+    pub data_addrs: Vec<String>,
     /// Human-readable node name (shows up in coordinator logs).
     pub name: String,
     /// Match worker threads (the paper's threads-per-node).
@@ -51,10 +65,13 @@ pub struct MatchNodeConfig {
 }
 
 impl MatchNodeConfig {
+    /// Config with defaults, seeded with one data-plane address (add
+    /// more to [`MatchNodeConfig::data_addrs`] for a replicated run —
+    /// or let the `JoinAck` directory supply them).
     pub fn new(workflow_addr: String, data_addr: String) -> MatchNodeConfig {
         MatchNodeConfig {
             workflow_addr,
-            data_addr,
+            data_addrs: vec![data_addr],
             name: "match-node".into(),
             threads: 1,
             cache_capacity: 0,
@@ -71,10 +88,20 @@ impl MatchNodeConfig {
 pub struct NodeReport {
     /// The [`ServiceId`] granted at join.
     pub service: usize,
+    /// Tasks this node completed and reported.
     pub tasks_completed: u64,
+    /// Pair comparisons this node evaluated.
     pub comparisons: u64,
+    /// Partition-cache hits across the node's workers.
     pub cache_hits: u64,
+    /// Partition-cache misses (each one a wire fetch).
     pub cache_misses: u64,
+    /// Wire fetches issued per data replica, in selector order
+    /// (config addresses first, then directory additions).
+    pub fetches_per_replica: Vec<u64>,
+    /// Data replicas this node gave up on mid-run (connection errors
+    /// answered by failing over to the next replica).
+    pub replica_failovers: u64,
     /// Busy time per worker thread, ns.
     pub busy_ns: Vec<u64>,
     /// The node went down without a graceful leave — either the
@@ -93,12 +120,44 @@ pub struct MatchServiceNode {
 }
 
 impl MatchServiceNode {
+    /// Wrap a config.
     pub fn new(cfg: MatchNodeConfig) -> MatchServiceNode {
         MatchServiceNode { cfg }
     }
 
+    /// Run to workflow completion (see [`run_match_node`]).
     pub fn run(&self, executor: Arc<dyn TaskExecutor>) -> Result<NodeReport> {
         run_match_node(&self.cfg, executor)
+    }
+}
+
+/// Join the workflow service over `t`, negotiating the protocol
+/// version; returns the granted [`ServiceId`] and the data-plane
+/// replica directory.  A coordinator speaking a different
+/// [`PROTOCOL_VERSION`] (or rejecting ours) yields a clear error.
+pub fn join_workflow(
+    t: &mut Transport,
+    name: &str,
+) -> Result<(ServiceId, Vec<String>)> {
+    match t.request(&Message::Join {
+        name: name.to_string(),
+        version: PROTOCOL_VERSION,
+    })? {
+        Message::JoinAck {
+            service,
+            version,
+            replicas,
+        } => {
+            if version != PROTOCOL_VERSION {
+                bail!(
+                    "protocol version mismatch: coordinator speaks \
+                     v{version}, this node speaks v{PROTOCOL_VERSION}"
+                );
+            }
+            Ok((service, replicas))
+        }
+        Message::Error { message } => bail!("join rejected: {message}"),
+        other => bail!("join rejected: got {}", other.kind()),
     }
 }
 
@@ -123,12 +182,16 @@ pub fn run_match_node(
     .with_context(|| {
         format!("connecting to workflow service {}", cfg.workflow_addr)
     })?;
-    let service = match control.request(&Message::Join {
-        name: cfg.name.clone(),
-    })? {
-        Message::JoinAck { service } => service,
-        other => bail!("join rejected: got {}", other.kind()),
-    };
+    let (service, directory) = join_workflow(&mut control, &cfg.name)?;
+
+    // configured replicas first (operator preference), then whatever
+    // the coordinator's directory adds; the selector deduplicates
+    let mut data_addrs = cfg.data_addrs.clone();
+    data_addrs.extend(directory);
+    let selector = ReplicaSelector::new(data_addrs);
+    if selector.is_empty() {
+        bail!("no data-plane address configured and none in the directory");
+    }
 
     let cache = PartitionCache::new(cfg.cache_capacity);
     let dead = AtomicBool::new(false); // crash simulation tripped
@@ -144,6 +207,7 @@ pub fn run_match_node(
             .map(|_| {
                 let executor = &executor;
                 let cache = &cache;
+                let selector = &selector;
                 let dead = &dead;
                 let completed_total = &completed_total;
                 s.spawn(move || {
@@ -152,6 +216,7 @@ pub fn run_match_node(
                         service,
                         executor.as_ref(),
                         cache,
+                        selector,
                         completed_total,
                         dead,
                     )
@@ -177,6 +242,8 @@ pub fn run_match_node(
         comparisons: 0,
         cache_hits: cache.hits(),
         cache_misses: cache.misses(),
+        fetches_per_replica: selector.fetches_per_replica(),
+        replica_failovers: selector.failovers(),
         busy_ns: Vec::new(),
         crashed,
         lost_coordinator: false,
@@ -226,13 +293,14 @@ fn worker_loop(
     service: ServiceId,
     executor: &dyn TaskExecutor,
     cache: &PartitionCache,
+    selector: &ReplicaSelector,
     completed_total: &AtomicUsize,
     dead: &AtomicBool,
 ) -> Result<WorkerStats> {
     let mut wf =
         Transport::connect(cfg.workflow_addr.as_str(), cfg.io_timeout)?;
-    let mut data =
-        Transport::connect(cfg.data_addr.as_str(), cfg.io_timeout)?;
+    // per-replica data connections, opened lazily on first use
+    let mut conns: HashMap<usize, Transport> = HashMap::new();
     let mut stats = WorkerStats::default();
     let mut outgoing = Message::TaskRequest { service };
     loop {
@@ -260,15 +328,16 @@ fn worker_loop(
                 }
                 let t0 = Instant::now();
                 let intra = task.left == task.right;
-                let fetched = fetch(&mut data, cache, task.left)
-                    .and_then(|left| {
-                        if intra {
-                            Ok((left.clone(), left))
-                        } else {
-                            fetch(&mut data, cache, task.right)
-                                .map(|right| (left, right))
-                        }
-                    });
+                let fetched = (|| {
+                    let left =
+                        fetch(cfg, &mut conns, selector, cache, task.left)?;
+                    let right = if intra {
+                        left.clone()
+                    } else {
+                        fetch(cfg, &mut conns, selector, cache, task.right)?
+                    };
+                    Ok::<_, anyhow::Error>((left, right))
+                })();
                 let (left, right) = match fetched {
                     Ok(pair) => pair,
                     Err(e) => {
@@ -318,26 +387,144 @@ fn worker_loop(
     Ok(stats)
 }
 
+/// What one fetch attempt produced at the protocol level.
+enum FetchReply {
+    /// The partition payload.
+    Data(Arc<PartitionData>),
+    /// Replica does not hold the partition — retry at this address.
+    Redirect(String),
+    /// Hard protocol-level refusal (e.g. unknown partition).
+    Denied(String),
+}
+
+fn classify(reply: Message) -> FetchReply {
+    match reply {
+        Message::Partition { data } => FetchReply::Data(Arc::new(data)),
+        Message::Redirect { addr } => FetchReply::Redirect(addr),
+        Message::Error { message } => FetchReply::Denied(message),
+        other => FetchReply::Denied(format!(
+            "unexpected {} from data service",
+            other.kind()
+        )),
+    }
+}
+
+/// One wire fetch against replica `idx`, reusing (or lazily opening)
+/// its connection.  `Err` means connection-level failure.
+fn fetch_once(
+    cfg: &MatchNodeConfig,
+    conns: &mut HashMap<usize, Transport>,
+    selector: &ReplicaSelector,
+    idx: usize,
+    id: PartitionId,
+) -> io::Result<FetchReply> {
+    if !conns.contains_key(&idx) {
+        let t = Transport::connect(selector.addr(idx), cfg.io_timeout)?;
+        conns.insert(idx, t);
+    }
+    let t = conns.get_mut(&idx).expect("just inserted");
+    Ok(classify(t.request(&Message::FetchPartition { id })?))
+}
+
+/// Follow one redirect to `addr`.  `Ok(None)` means the redirect
+/// target failed at the connection level (marked dead when it is a
+/// known replica) — the caller re-selects.  `Err` is a protocol-level
+/// failure (node-fatal, as before).
+fn fetch_redirected(
+    cfg: &MatchNodeConfig,
+    conns: &mut HashMap<usize, Transport>,
+    selector: &ReplicaSelector,
+    addr: &str,
+    id: PartitionId,
+) -> Result<Option<Arc<PartitionData>>> {
+    let known = selector.index_of(addr);
+    let outcome = match known {
+        Some(j) => {
+            selector.begin_fetch(j);
+            let r = fetch_once(cfg, conns, selector, j, id);
+            selector.finish_fetch(j);
+            r
+        }
+        None => Transport::connect(addr, cfg.io_timeout)
+            .and_then(|mut t| t.request(&Message::FetchPartition { id }))
+            .map(classify),
+    };
+    match outcome {
+        Ok(FetchReply::Data(d)) => {
+            if let Some(j) = known {
+                selector.record_locality(id, j);
+            }
+            Ok(Some(d))
+        }
+        Ok(FetchReply::Redirect(_)) => {
+            // a redirect must resolve in one hop; a chain means the
+            // data plane is misconfigured (e.g. replicas pointing at
+            // each other before either synced)
+            bail!("redirect loop while fetching partition {id}")
+        }
+        Ok(FetchReply::Denied(msg)) => bail!("data service error: {msg}"),
+        Err(_) => {
+            if let Some(j) = known {
+                conns.remove(&j);
+                selector.mark_dead(j);
+            }
+            Ok(None)
+        }
+    }
+}
+
 /// Fetch a partition through the node cache, falling back to a wire
-/// fetch from the data service (a cache miss, as in the paper).
+/// fetch from a data-plane replica (a cache miss, as in the paper).
+/// Replica choice and failover are the [`ReplicaSelector`]'s; every
+/// iteration either returns or marks a replica dead, so the loop
+/// terminates once all replicas are gone.
 fn fetch(
-    data: &mut Transport,
+    cfg: &MatchNodeConfig,
+    conns: &mut HashMap<usize, Transport>,
+    selector: &ReplicaSelector,
     cache: &PartitionCache,
     id: PartitionId,
 ) -> Result<Arc<PartitionData>> {
     if let Some(d) = cache.get(id) {
         return Ok(d);
     }
-    match data.request(&Message::FetchPartition { id })? {
-        Message::Partition { data: payload } => {
-            let arc = Arc::new(payload);
-            cache.put(id, arc.clone());
-            Ok(arc)
+    loop {
+        let Some(idx) = selector.select(id) else {
+            bail!("no live data replica left for partition {id}");
+        };
+        selector.begin_fetch(idx);
+        let outcome = fetch_once(cfg, conns, selector, idx, id);
+        selector.finish_fetch(idx);
+        match outcome {
+            Ok(FetchReply::Data(d)) => {
+                selector.record_locality(id, idx);
+                cache.put(id, d.clone());
+                return Ok(d);
+            }
+            Ok(FetchReply::Redirect(addr)) => {
+                match fetch_redirected(cfg, conns, selector, &addr, id)? {
+                    Some(d) => {
+                        cache.put(id, d.clone());
+                        return Ok(d);
+                    }
+                    None => {
+                        // the replica cannot serve this partition and
+                        // its upstream is unreachable: useless here —
+                        // fail over past it
+                        conns.remove(&idx);
+                        selector.mark_dead(idx);
+                    }
+                }
+            }
+            Ok(FetchReply::Denied(msg)) => {
+                bail!("data service error: {msg}")
+            }
+            Err(_) => {
+                // connection-level failure: next replica
+                conns.remove(&idx);
+                selector.mark_dead(idx);
+            }
         }
-        Message::Error { message } => {
-            bail!("data service error: {message}")
-        }
-        other => bail!("unexpected {} from data service", other.kind()),
     }
 }
 
@@ -389,11 +576,62 @@ mod tests {
         assert!(!report.crashed);
         assert!(report.cache_misses > 0);
         assert_eq!(report.busy_ns.len(), 2);
+        assert_eq!(report.fetches_per_replica.len(), 1);
+        assert!(report.fetches_per_replica[0] > 0);
+        assert_eq!(report.replica_failovers, 0);
         assert!(wf_srv.wait_done(Duration::from_secs(1)));
         let wf_report = wf_srv.finish();
         assert_eq!(wf_report.completed_tasks, n_tasks);
         assert_eq!(wf_report.comparisons, 120 * 119 / 2);
         assert!(data_srv.wire_bytes() > 0);
+        data_srv.shutdown();
+    }
+
+    /// A node whose preferred data replica is unreachable fails over
+    /// to the next one and still completes the workflow.
+    #[test]
+    fn node_fails_over_past_a_dead_replica() {
+        let data = GeneratorConfig::tiny().with_entities(90).generate();
+        let ids: Vec<EntityId> =
+            data.dataset.entities.iter().map(|e| e.id).collect();
+        let parts = partition_size_based(&ids, 30);
+        let tasks = generate_tasks(&parts);
+        let n_tasks = tasks.len();
+        let store = Arc::new(DataService::build(&data.dataset, &parts));
+
+        // an address nothing listens on: bind an ephemeral port, note
+        // it, and close the listener again
+        let dead_addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let data_srv =
+            DataServiceServer::start(store, "127.0.0.1:0").unwrap();
+        let wf_srv = WorkflowServiceServer::start(
+            tasks,
+            WorkflowServerConfig::default(),
+            "127.0.0.1:0",
+        )
+        .unwrap();
+
+        let mut cfg =
+            MatchNodeConfig::new(wf_srv.addr().to_string(), dead_addr);
+        cfg.data_addrs.push(data_srv.addr().to_string());
+        cfg.cache_capacity = 2;
+        let exec: Arc<dyn TaskExecutor> = Arc::new(RustExecutor::new(
+            MatchStrategy::new(StrategyKind::Wam),
+        ));
+        let report = run_match_node(&cfg, exec).unwrap();
+        assert_eq!(report.tasks_completed as usize, n_tasks);
+        assert!(!report.crashed);
+        assert_eq!(report.replica_failovers, 1, "dead replica abandoned");
+        assert_eq!(report.fetches_per_replica.len(), 2);
+        assert!(
+            report.fetches_per_replica[1] > 0,
+            "all real traffic on the live replica"
+        );
+        assert!(wf_srv.wait_done(Duration::from_secs(1)));
+        let _ = wf_srv.finish();
         data_srv.shutdown();
     }
 }

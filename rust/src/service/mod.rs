@@ -15,23 +15,36 @@
 //!   in-flight tasks;
 //! * [`DataServiceServer`] — serves [`crate::store::PartitionData`]
 //!   payloads over TCP, with per-fetch accounting of the **actual bytes
-//!   on the wire** feeding a [`crate::net::TrafficStats`];
+//!   on the wire** feeding a [`crate::net::TrafficStats`].  Runs either
+//!   as the authoritative **primary** or as a **replica** that holds
+//!   push-synced encoded partition frames and redirects misses
+//!   ([`data`]) — the replicated data plane removes the single data
+//!   server as both bandwidth bottleneck and single point of failure;
 //! * [`MatchServiceNode`] ([`match_node`]) — runs the existing
 //!   [`crate::worker::TaskExecutor`] + [`crate::worker::PartitionCache`]
 //!   behind socket clients: join → pull task → fetch partitions → match
 //!   → report completion with piggybacked cache status → repeat.
+//!   Partition fetches pick a replica via [`ReplicaSelector`]
+//!   (cached-locality first, then least-outstanding-fetches) and fail
+//!   over to the next replica on connection errors.
 //!
 //! The services compose three ways: in one process via
 //! [`crate::engine::dist`] (threads with real sockets on localhost),
-//! or across processes/machines via the `pem serve` (workflow + data)
-//! and `pem distmatch` (match node) CLI subcommands.
+//! or across processes/machines via the `pem serve` (workflow + data,
+//! or `--role data` for a standalone replica) and `pem distmatch`
+//! (match node) CLI subcommands.  `docs/ARCHITECTURE.md` has the full
+//! layer map and data-flow diagrams.
+
+#![warn(missing_docs)]
 
 pub mod data;
 pub mod match_node;
+pub mod replica;
 pub mod workflow;
 
 pub use data::DataServiceServer;
 pub use match_node::{run_match_node, MatchNodeConfig, NodeReport};
+pub use replica::{announce_replica, ReplicaSelector};
 pub use workflow::{
     WorkflowReport, WorkflowServerConfig, WorkflowServiceServer,
 };

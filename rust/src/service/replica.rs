@@ -1,0 +1,264 @@
+//! Replica selection for the data plane, plus the announcement client.
+//!
+//! A match node knows several data-service replicas (from its own
+//! configuration and from the directory delivered in `JoinAck`).  Each
+//! fetch picks one replica by, in order:
+//!
+//! 1. **cached locality** — the replica that last served this partition
+//!    (its encoded-frame cache and the OS page cache are warm there);
+//! 2. **least outstanding fetches** — among live replicas, the one with
+//!    the fewest in-flight fetches right now;
+//! 3. **least total fetches** — tie-break that spreads first-time
+//!    fetches round-robin across replicas instead of hammering the
+//!    first one;
+//! 4. lowest index (deterministic final tie-break).
+//!
+//! A replica that fails at the connection level is marked dead and its
+//! locality entries are dropped; selection then **fails over** to the
+//! next live replica.  Selection returns `None` only when every replica
+//! is dead — the caller treats that like the old single-data-server
+//! fetch failure (abandon the node, let the workflow service re-queue).
+
+use crate::partition::PartitionId;
+use crate::rpc::{Message, Transport, PROTOCOL_VERSION};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+struct ReplicaState {
+    addr: String,
+    alive: AtomicBool,
+    /// Fetches in flight right now (across this node's workers).
+    outstanding: AtomicUsize,
+    /// Fetches ever started against this replica.
+    fetches: AtomicU64,
+}
+
+/// Picks which data-plane replica serves each partition fetch; shared
+/// by all workers of one match node.  See the module docs for the
+/// selection policy.
+pub struct ReplicaSelector {
+    replicas: Vec<ReplicaState>,
+    /// partition → replica index that last served it successfully.
+    locality: Mutex<HashMap<PartitionId, usize>>,
+    failovers: AtomicU64,
+}
+
+impl ReplicaSelector {
+    /// Build a selector over `addrs` (duplicates removed, order kept —
+    /// exact string comparison, so `"localhost:1"` and `"127.0.0.1:1"`
+    /// count as distinct replicas).
+    pub fn new(addrs: Vec<String>) -> ReplicaSelector {
+        let mut seen: Vec<String> = Vec::new();
+        for a in addrs {
+            if !seen.contains(&a) {
+                seen.push(a);
+            }
+        }
+        ReplicaSelector {
+            replicas: seen
+                .into_iter()
+                .map(|addr| ReplicaState {
+                    addr,
+                    alive: AtomicBool::new(true),
+                    outstanding: AtomicUsize::new(0),
+                    fetches: AtomicU64::new(0),
+                })
+                .collect(),
+            locality: Mutex::new(HashMap::new()),
+            failovers: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of known replicas (live or dead).
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// `true` when no replicas are configured at all.
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    /// Number of replicas not (yet) marked dead.
+    pub fn live_count(&self) -> usize {
+        self.replicas
+            .iter()
+            .filter(|r| r.alive.load(Ordering::SeqCst))
+            .count()
+    }
+
+    /// Address of replica `idx`.
+    pub fn addr(&self, idx: usize) -> &str {
+        &self.replicas[idx].addr
+    }
+
+    /// Index of the replica with this exact address, if known.
+    pub fn index_of(&self, addr: &str) -> Option<usize> {
+        self.replicas.iter().position(|r| r.addr == addr)
+    }
+
+    /// Choose a replica for fetching `id`; `None` when all are dead.
+    pub fn select(&self, id: PartitionId) -> Option<usize> {
+        if let Some(&i) = self.locality.lock().unwrap().get(&id) {
+            if self.replicas[i].alive.load(Ordering::SeqCst) {
+                return Some(i);
+            }
+        }
+        self.replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.alive.load(Ordering::SeqCst))
+            .min_by_key(|(i, r)| {
+                (
+                    r.outstanding.load(Ordering::SeqCst),
+                    r.fetches.load(Ordering::SeqCst),
+                    *i,
+                )
+            })
+            .map(|(i, _)| i)
+    }
+
+    /// Mark a fetch against `idx` as started (pair with
+    /// [`ReplicaSelector::finish_fetch`]).
+    pub fn begin_fetch(&self, idx: usize) {
+        self.replicas[idx].outstanding.fetch_add(1, Ordering::SeqCst);
+        self.replicas[idx].fetches.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Mark a fetch against `idx` as finished (success or failure).
+    pub fn finish_fetch(&self, idx: usize) {
+        self.replicas[idx].outstanding.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Record that `idx` served `id` — future fetches of `id` prefer it.
+    pub fn record_locality(&self, id: PartitionId, idx: usize) {
+        self.locality.lock().unwrap().insert(id, idx);
+    }
+
+    /// Connection-level failure of `idx`: stop selecting it and forget
+    /// its locality entries.  Counts one failover.
+    pub fn mark_dead(&self, idx: usize) {
+        if self.replicas[idx].alive.swap(false, Ordering::SeqCst) {
+            self.failovers.fetch_add(1, Ordering::SeqCst);
+        }
+        self.locality.lock().unwrap().retain(|_, v| *v != idx);
+    }
+
+    /// Fetches ever started, per replica (configuration order).
+    pub fn fetches_per_replica(&self) -> Vec<u64> {
+        self.replicas
+            .iter()
+            .map(|r| r.fetches.load(Ordering::SeqCst))
+            .collect()
+    }
+
+    /// Replicas marked dead so far.
+    pub fn failovers(&self) -> u64 {
+        self.failovers.load(Ordering::SeqCst)
+    }
+}
+
+/// Announce a data-service replica at `data_addr` (holding
+/// `partitions`) to the workflow service at `workflow_addr`; returns
+/// the directory after the announcement.  Used by the dist engine, by
+/// `pem serve` (for its primary) and by `pem serve --role data`.
+pub fn announce_replica(
+    workflow_addr: &str,
+    data_addr: &str,
+    partitions: &[PartitionId],
+    timeout: Duration,
+) -> Result<Vec<String>> {
+    let mut t = Transport::connect(workflow_addr, timeout)?;
+    match t.request(&Message::ReplicaAnnounce {
+        addr: data_addr.to_string(),
+        version: PROTOCOL_VERSION,
+        partitions: partitions.to_vec(),
+    })? {
+        Message::ReplicaDirectory { replicas } => Ok(replicas),
+        Message::Error { message } => {
+            bail!("replica announcement rejected: {message}")
+        }
+        other => bail!(
+            "unexpected {} in reply to ReplicaAnnounce",
+            other.kind()
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn selector(n: usize) -> ReplicaSelector {
+        ReplicaSelector::new(
+            (0..n).map(|i| format!("10.0.0.{i}:7402")).collect(),
+        )
+    }
+
+    #[test]
+    fn dedups_addresses_preserving_order() {
+        let s = ReplicaSelector::new(vec![
+            "a:1".into(),
+            "b:2".into(),
+            "a:1".into(),
+        ]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.addr(0), "a:1");
+        assert_eq!(s.addr(1), "b:2");
+        assert_eq!(s.index_of("b:2"), Some(1));
+        assert_eq!(s.index_of("c:3"), None);
+    }
+
+    #[test]
+    fn spreads_first_fetches_then_sticks_by_locality() {
+        let s = selector(2);
+        // first fetch: both idle with zero fetches → index 0
+        let a = s.select(PartitionId(10)).unwrap();
+        assert_eq!(a, 0);
+        s.begin_fetch(a);
+        s.finish_fetch(a);
+        s.record_locality(PartitionId(10), a);
+        // a different partition now prefers the less-used replica 1
+        let b = s.select(PartitionId(11)).unwrap();
+        assert_eq!(b, 1);
+        s.begin_fetch(b);
+        s.finish_fetch(b);
+        s.record_locality(PartitionId(11), b);
+        // repeat fetches stick to whoever served the partition before,
+        // regardless of load counters
+        s.begin_fetch(1);
+        assert_eq!(s.select(PartitionId(10)).unwrap(), 0);
+        assert_eq!(s.select(PartitionId(11)).unwrap(), 1);
+        s.finish_fetch(1);
+    }
+
+    #[test]
+    fn least_outstanding_wins_while_fetches_are_in_flight() {
+        let s = selector(3);
+        s.begin_fetch(0); // replica 0 busy
+        s.begin_fetch(1); // replica 1 busy
+        assert_eq!(s.select(PartitionId(5)).unwrap(), 2);
+        s.finish_fetch(0);
+        s.finish_fetch(1);
+    }
+
+    #[test]
+    fn failover_skips_dead_replicas_and_drops_their_locality() {
+        let s = selector(2);
+        s.record_locality(PartitionId(7), 0);
+        assert_eq!(s.select(PartitionId(7)).unwrap(), 0);
+        s.mark_dead(0);
+        assert_eq!(s.live_count(), 1);
+        assert_eq!(s.failovers(), 1);
+        // locality to the dead replica no longer pins the partition
+        assert_eq!(s.select(PartitionId(7)).unwrap(), 1);
+        // marking dead twice does not double-count
+        s.mark_dead(0);
+        assert_eq!(s.failovers(), 1);
+        s.mark_dead(1);
+        assert_eq!(s.select(PartitionId(7)), None, "all replicas dead");
+    }
+}

@@ -3,7 +3,14 @@
 //! Owns the central task list behind the *same* [`Scheduler`] the
 //! in-process engines use, and serves it pull-style over the wire:
 //!
-//! * `Join` → membership + a fresh [`ServiceId`];
+//! * `Join` → protocol-version check, then membership + a fresh
+//!   [`ServiceId`] + the data-plane replica directory (mismatched
+//!   versions are rejected with a clear `Error`, paper-era RMI would
+//!   have deserialization-failed instead);
+//! * `ReplicaAnnounce` → a data server (primary or replica) registers
+//!   its address and partition list; the directory is handed to every
+//!   joining match service and the partition list feeds replica-aware
+//!   affinity scheduling ([`Scheduler::add_replica_coverage`]);
 //! * `TaskRequest` / `Complete` → next assignment (`TaskAssign`, or
 //!   `NoTask {done}` when the open list is empty), with completion
 //!   reports carrying the piggybacked cache status that feeds
@@ -21,7 +28,7 @@ use crate::coordinator::scheduler::{Policy, Scheduler, ServiceId};
 use crate::model::Correspondence;
 use crate::net::TrafficStats;
 use crate::partition::MatchTask;
-use crate::rpc::{Message, Transport};
+use crate::rpc::{Message, Transport, PROTOCOL_VERSION};
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -66,6 +73,10 @@ struct WfShared {
     traffic: TrafficStats,
     requeued_tasks: AtomicU64,
     stale_completions: AtomicU64,
+    /// Peers rejected for speaking a different protocol version.
+    version_rejections: AtomicU64,
+    /// Data-plane replica directory, announcement order, deduplicated.
+    replicas: Mutex<Vec<String>>,
     shutdown: AtomicBool,
     heartbeat_timeout: Duration,
 }
@@ -100,12 +111,17 @@ impl WfShared {
 pub struct WorkflowReport {
     /// Merged per-task match output in completion order.
     pub correspondences: Vec<Correspondence>,
+    /// Tasks completed (exactly once each).
     pub completed_tasks: usize,
+    /// Tasks the workflow started with.
     pub total_tasks: usize,
+    /// Total pair comparisons reported by match services.
     pub comparisons: u64,
+    /// Control-plane frames received.
     pub control_messages: u64,
     /// Control-plane bytes sent over sockets.
     pub control_wire_bytes: u64,
+    /// Assignments that hit at least one cached partition.
     pub affinity_assignments: u64,
     /// Tasks re-queued because their service failed or left.
     pub requeued_tasks: u64,
@@ -113,6 +129,10 @@ pub struct WorkflowReport {
     pub stale_completions: u64,
     /// Services that ever joined.
     pub services_joined: usize,
+    /// Peers rejected at join/announce for a protocol-version mismatch.
+    pub version_rejections: u64,
+    /// Data-plane replica directory at the end of the run.
+    pub data_replicas: Vec<String>,
 }
 
 /// A running workflow-service endpoint.
@@ -141,6 +161,8 @@ impl WorkflowServiceServer {
             traffic: TrafficStats::new(),
             requeued_tasks: AtomicU64::new(0),
             stale_completions: AtomicU64::new(0),
+            version_rejections: AtomicU64::new(0),
+            replicas: Mutex::new(Vec::new()),
             shutdown: AtomicBool::new(false),
             heartbeat_timeout: cfg.heartbeat_timeout,
         });
@@ -155,6 +177,7 @@ impl WorkflowServiceServer {
         Ok(WorkflowServiceServer { addr, shared })
     }
 
+    /// The bound address (for clients).
     pub fn addr(&self) -> SocketAddr {
         self.addr
     }
@@ -220,6 +243,11 @@ impl WorkflowServiceServer {
                 .stale_completions
                 .load(Ordering::Relaxed),
             services_joined: self.shared.next_service.load(Ordering::Relaxed),
+            version_rejections: self
+                .shared
+                .version_rejections
+                .load(Ordering::Relaxed),
+            data_replicas: self.shared.replicas.lock().unwrap().clone(),
         }
     }
 }
@@ -287,18 +315,76 @@ fn handle_conn(stream: TcpStream, shared: Arc<WfShared>) {
         }
         shared.control_messages.fetch_add(1, Ordering::Relaxed);
         let reply = match msg {
-            Message::Join { name } => {
-                let id = shared.next_service.fetch_add(1, Ordering::SeqCst);
-                shared.members.lock().unwrap().insert(
-                    id,
-                    Member {
-                        name,
-                        last_seen: Instant::now(),
-                    },
-                );
-                shared.sched.lock().unwrap().add_service(ServiceId(id));
-                Message::JoinAck {
-                    service: ServiceId(id),
+            Message::Join { name, version } => {
+                if version != PROTOCOL_VERSION {
+                    shared
+                        .version_rejections
+                        .fetch_add(1, Ordering::Relaxed);
+                    Message::Error {
+                        message: format!(
+                            "protocol version mismatch: match service \
+                             {name:?} speaks v{version}, this \
+                             coordinator speaks v{PROTOCOL_VERSION} — \
+                             upgrade the older side"
+                        ),
+                    }
+                } else {
+                    let id =
+                        shared.next_service.fetch_add(1, Ordering::SeqCst);
+                    shared.members.lock().unwrap().insert(
+                        id,
+                        Member {
+                            name,
+                            last_seen: Instant::now(),
+                        },
+                    );
+                    shared.sched.lock().unwrap().add_service(ServiceId(id));
+                    Message::JoinAck {
+                        service: ServiceId(id),
+                        version: PROTOCOL_VERSION,
+                        replicas: shared.replicas.lock().unwrap().clone(),
+                    }
+                }
+            }
+            Message::ReplicaAnnounce {
+                addr,
+                version,
+                partitions,
+            } => {
+                if version != PROTOCOL_VERSION {
+                    shared
+                        .version_rejections
+                        .fetch_add(1, Ordering::Relaxed);
+                    Message::Error {
+                        message: format!(
+                            "protocol version mismatch: data replica \
+                             {addr} speaks v{version}, this coordinator \
+                             speaks v{PROTOCOL_VERSION} — upgrade the \
+                             older side"
+                        ),
+                    }
+                } else {
+                    let directory = {
+                        let mut dir = shared.replicas.lock().unwrap();
+                        let fresh = !dir.contains(&addr);
+                        if fresh {
+                            dir.push(addr);
+                        }
+                        (fresh, dir.clone())
+                    };
+                    // count coverage only on first announcement, so a
+                    // replica re-announcing (reconnect) does not inflate
+                    // the per-partition replica counts
+                    if directory.0 {
+                        shared
+                            .sched
+                            .lock()
+                            .unwrap()
+                            .add_replica_coverage(&partitions);
+                    }
+                    Message::ReplicaDirectory {
+                        replicas: directory.1,
+                    }
                 }
             }
             Message::Leave { service } => {
@@ -386,10 +472,13 @@ mod tests {
 
     fn join(t: &mut Transport, name: &str) -> ServiceId {
         match t
-            .request(&Message::Join { name: name.into() })
+            .request(&Message::Join {
+                name: name.into(),
+                version: PROTOCOL_VERSION,
+            })
             .unwrap()
         {
-            Message::JoinAck { service } => service,
+            Message::JoinAck { service, .. } => service,
             other => panic!("expected JoinAck, got {}", other.kind()),
         }
     }
@@ -450,6 +539,101 @@ mod tests {
         assert!(report.control_messages >= 4);
         assert!(report.control_wire_bytes > 0);
         assert_eq!(report.services_joined, 1);
+    }
+
+    /// The ROADMAP bugfix: frames used to carry no protocol version, so
+    /// a mismatched peer would fail with a confusing decode error deep
+    /// into a run.  Now a `Join` or `ReplicaAnnounce` from the wrong
+    /// version is rejected up front with a clear message, and the peer
+    /// is never admitted.
+    #[test]
+    fn version_mismatch_rejected_with_clear_error() {
+        let srv = WorkflowServiceServer::start(
+            vec![task(0, 0, 0)],
+            WorkflowServerConfig::default(),
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let mut c = client(srv.addr());
+        let reply = c
+            .request(&Message::Join {
+                name: "time-traveler".into(),
+                version: PROTOCOL_VERSION + 1,
+            })
+            .unwrap();
+        let Message::Error { message } = reply else {
+            panic!("v{} join must be rejected", PROTOCOL_VERSION + 1);
+        };
+        assert!(
+            message.contains("version mismatch"),
+            "unclear rejection: {message}"
+        );
+        assert!(message.contains(&format!("v{}", PROTOCOL_VERSION + 1)));
+        assert!(message.contains(&format!("v{PROTOCOL_VERSION}")));
+
+        let reply = c
+            .request(&Message::ReplicaAnnounce {
+                addr: "10.0.0.9:7402".into(),
+                version: 0,
+                partitions: vec![PartitionId(0)],
+            })
+            .unwrap();
+        assert!(matches!(reply, Message::Error { .. }));
+
+        // a correct-version peer still joins, and no service id was
+        // burned on the rejected one
+        let svc = join(&mut c, "contemporary");
+        assert_eq!(svc, ServiceId(0));
+        let report = srv.finish();
+        assert_eq!(report.version_rejections, 2);
+        assert_eq!(report.services_joined, 1);
+        assert!(report.data_replicas.is_empty());
+    }
+
+    /// Announced replicas accumulate in the directory and are handed to
+    /// every subsequently joining match service; re-announcement is
+    /// idempotent.
+    #[test]
+    fn replica_directory_grows_and_reaches_joiners() {
+        let srv = WorkflowServiceServer::start(
+            vec![task(0, 0, 0)],
+            WorkflowServerConfig::default(),
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let mut c = client(srv.addr());
+        let announce = |c: &mut Transport, addr: &str| {
+            match c
+                .request(&Message::ReplicaAnnounce {
+                    addr: addr.into(),
+                    version: PROTOCOL_VERSION,
+                    partitions: vec![PartitionId(0), PartitionId(1)],
+                })
+                .unwrap()
+            {
+                Message::ReplicaDirectory { replicas } => replicas,
+                other => panic!("expected directory, got {}", other.kind()),
+            }
+        };
+        assert_eq!(announce(&mut c, "10.0.0.1:7402"), vec!["10.0.0.1:7402"]);
+        let dir = announce(&mut c, "10.0.0.2:7402");
+        assert_eq!(dir, vec!["10.0.0.1:7402", "10.0.0.2:7402"]);
+        // idempotent re-announce (e.g. after a replica reconnects)
+        assert_eq!(announce(&mut c, "10.0.0.1:7402"), dir);
+
+        let reply = c
+            .request(&Message::Join {
+                name: "late-joiner".into(),
+                version: PROTOCOL_VERSION,
+            })
+            .unwrap();
+        let Message::JoinAck { replicas, .. } = reply else {
+            panic!("expected JoinAck, got {}", reply.kind());
+        };
+        assert_eq!(replicas, dir, "directory delivered at join");
+        let report = srv.finish();
+        assert_eq!(report.data_replicas, dir);
+        assert_eq!(report.version_rejections, 0);
     }
 
     #[test]

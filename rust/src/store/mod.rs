@@ -109,6 +109,23 @@ impl DataService {
         Some(data)
     }
 
+    /// Look a partition up **without accounting** — used by data-plane
+    /// replication, which pushes every partition to the replicas once
+    /// and must not inflate the logical fetch statistics the paper's
+    /// cache-effectiveness numbers are computed from.
+    pub fn peek(&self, id: PartitionId) -> Option<Arc<PartitionData>> {
+        self.partitions.get(&id).cloned()
+    }
+
+    /// All partition ids held by this store, ascending.  Replica
+    /// announcements and sync streams enumerate partitions with this.
+    pub fn partition_ids(&self) -> Vec<PartitionId> {
+        let mut ids: Vec<PartitionId> =
+            self.partitions.keys().copied().collect();
+        ids.sort_unstable_by_key(|p| p.0);
+        ids
+    }
+
     /// Size of a partition payload without fetching (the simulator charges
     /// transfer time from this).
     pub fn payload_bytes(&self, id: PartitionId) -> u64 {

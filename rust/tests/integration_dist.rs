@@ -15,11 +15,15 @@ use pem::engine::dist;
 use pem::matching::{MatchStrategy, StrategyKind};
 use pem::model::EntityId;
 use pem::partition::{generate_tasks, partition_size_based};
+use pem::service::{
+    announce_replica, run_match_node, DataServiceServer, MatchNodeConfig,
+    WorkflowServerConfig, WorkflowServiceServer,
+};
 use pem::store::DataService;
 use pem::util::GIB;
 use pem::worker::{RustExecutor, TaskExecutor};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn blocking_cfg(kind: StrategyKind, max: usize, min: usize) -> WorkflowConfig {
     let mut cfg = WorkflowConfig::blocking_based(kind);
@@ -90,6 +94,166 @@ fn dist_workflow_matches_thread_engine_exactly() {
     );
     assert!(dist.metrics.control_messages > dist.n_tasks as u64);
     assert!(dist.metrics.cache_hits > 0, "partition caches engaged");
+}
+
+/// The replicated data plane end to end: a full workflow on 2 data
+/// replicas and 2 match-service nodes is result-identical to the
+/// thread engine, every data server carries traffic, and the
+/// per-replica byte accounting adds up.
+#[test]
+fn dist_replicated_run_matches_thread_engine_exactly() {
+    let data = GeneratorConfig::tiny()
+        .with_entities(600)
+        .with_seed(42)
+        .generate();
+    let ce = ComputingEnv::new(2, 2, GIB); // 2 match services × 2 workers
+    let base = blocking_cfg(StrategyKind::Wam, 150, 30).with_cache(8);
+
+    let threads = run_workflow(
+        &data,
+        &base.clone().with_engine(EngineChoice::Threads),
+        &ce,
+    )
+    .unwrap();
+    let dist = run_workflow(
+        &data,
+        &base
+            .with_engine(EngineChoice::Distributed)
+            .with_data_replicas(2),
+        &ce,
+    )
+    .unwrap();
+
+    assert_eq!(dist.metrics.tasks, threads.metrics.tasks);
+    assert_eq!(dist.metrics.comparisons, threads.metrics.comparisons);
+    assert_eq!(dist.result.len(), threads.result.len());
+    for c in threads.result.iter() {
+        assert_eq!(
+            dist.result.similarity(c.e1, c.e2),
+            Some(c.sim),
+            "pair ({}, {}) differs with a replicated data plane",
+            c.e1,
+            c.e2
+        );
+    }
+}
+
+/// Data-plane failover end to end: two data replicas serve a 2-node
+/// run; one replica is killed mid-run, the nodes fail over to the
+/// surviving server, and the merged result is still identical to the
+/// thread engine on the same seed.
+#[test]
+fn dist_replica_killed_mid_run_fails_over_and_completes() {
+    let data = GeneratorConfig::tiny()
+        .with_entities(500)
+        .with_seed(13)
+        .generate();
+    let ids: Vec<EntityId> =
+        data.dataset.entities.iter().map(|e| e.id).collect();
+    let parts = partition_size_based(&ids, 40);
+    let tasks = generate_tasks(&parts);
+    let n_tasks = tasks.len();
+    assert!(n_tasks > 20, "need a long enough run to kill mid-way");
+    let store = Arc::new(DataService::build(&data.dataset, &parts));
+
+    // reference result from the thread engine
+    let exec = RustExecutor::new(MatchStrategy::new(StrategyKind::Wam));
+    let reference = pem::engine::threads::run(
+        &ComputingEnv::new(1, 2, GIB),
+        &parts,
+        tasks.clone(),
+        &store,
+        &exec,
+        pem::engine::threads::ThreadConfig::default(),
+    );
+
+    // primary + one synced replica, both announced to the coordinator
+    let primary =
+        DataServiceServer::start(store.clone(), "127.0.0.1:0").unwrap();
+    let replica = DataServiceServer::start_replica(
+        "127.0.0.1:0",
+        &primary.addr().to_string(),
+        Duration::from_secs(10),
+    )
+    .unwrap();
+    assert!(replica.wait_synced(Duration::from_secs(30)));
+    let wf_srv = WorkflowServiceServer::start(
+        tasks,
+        WorkflowServerConfig::default(),
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let wf_addr = wf_srv.addr().to_string();
+    for srv in [&primary, &replica] {
+        announce_replica(
+            &wf_addr,
+            &srv.addr().to_string(),
+            &srv.partition_ids(),
+            Duration::from_secs(5),
+        )
+        .unwrap();
+    }
+
+    // two match nodes; small caches keep wire fetches coming so the
+    // kill below is guaranteed to be felt
+    let node_handles: Vec<_> = (0..2)
+        .map(|i| {
+            let mut cfg = MatchNodeConfig::new(
+                wf_addr.clone(),
+                primary.addr().to_string(),
+            );
+            cfg.data_addrs.push(replica.addr().to_string());
+            cfg.name = format!("failover-node-{i}");
+            cfg.threads = 2;
+            cfg.cache_capacity = 2;
+            let exec: Arc<dyn TaskExecutor> = Arc::new(RustExecutor::new(
+                MatchStrategy::new(StrategyKind::Wam),
+            ));
+            std::thread::spawn(move || run_match_node(&cfg, exec))
+        })
+        .collect();
+
+    // kill the replica once the run is ~20% through
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while wf_srv.completed() < n_tasks / 5 {
+        assert!(Instant::now() < deadline, "run never got going");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    replica.shutdown();
+
+    let mut reports = Vec::new();
+    for h in node_handles {
+        reports.push(h.join().expect("node thread").expect("node report"));
+    }
+    assert!(wf_srv.wait_done(Duration::from_secs(60)));
+    let report = wf_srv.finish();
+    primary.shutdown();
+
+    assert_eq!(report.completed_tasks, n_tasks, "every task completed");
+    for r in &reports {
+        assert!(!r.crashed, "failover must not take a node down");
+        assert_eq!(r.fetches_per_replica.len(), 2);
+    }
+    // at least one node actually exercised the failover path (the
+    // replica had served ~half the traffic before the kill)
+    let failovers: u64 = reports.iter().map(|r| r.replica_failovers).sum();
+    assert!(failovers >= 1, "no node failed over: {reports:?}");
+
+    // and the failure changed nothing about the merged result
+    let norm = |cs: &[pem::model::Correspondence]| {
+        let mut r = pem::model::MatchResult::new();
+        for &c in cs {
+            r.add(c);
+        }
+        let mut pairs: Vec<(EntityId, EntityId)> =
+            r.iter().map(|c| c.pair()).collect();
+        pairs.sort_unstable();
+        pairs
+    };
+    assert_eq!(
+        norm(&report.correspondences),
+        norm(&reference.correspondences)
+    );
 }
 
 /// Failure handling (paper §4) through the wire: a node that stops

@@ -1,0 +1,48 @@
+#!/usr/bin/env bash
+# Link check for the markdown docs: every relative link target in
+# docs/*.md, README.md and ROADMAP.md must exist in the repo.
+# External (http/https/mailto) links are syntax-checked only — CI must
+# not flake on the network.  Run from the repo root.
+set -euo pipefail
+
+fail=0
+for f in docs/*.md README.md ROADMAP.md; do
+    [ -f "$f" ] || continue
+    dir=$(dirname "$f")
+    # inline markdown links: [text](target)
+    while IFS= read -r target; do
+        case "$target" in
+            http://*|https://*|mailto:*)
+                continue ;;
+            '#'*)
+                # intra-document anchor; heading text is not checked
+                continue ;;
+        esac
+        # strip a trailing #anchor from relative file links
+        path="${target%%#*}"
+        [ -n "$path" ] || continue
+        if [ ! -e "$dir/$path" ]; then
+            echo "BROKEN: $f -> $target"
+            fail=1
+        fi
+    done < <(grep -oE '\]\([^)]+\)' "$f" | sed -E 's/^\]\(//; s/\)$//')
+done
+
+# backtick-quoted repo paths in the docs that look like files should
+# exist too (e.g. `rust/src/rpc/mod.rs`, `docs/WIRE_PROTOCOL.md`)
+for f in docs/*.md README.md; do
+    [ -f "$f" ] || continue
+    while IFS= read -r path; do
+        if [ ! -e "$path" ]; then
+            echo "BROKEN (path mention): $f -> $path"
+            fail=1
+        fi
+    done < <(grep -oE '`(docs|rust|python|examples|scripts)/[A-Za-z0-9_./-]+`' "$f" \
+             | tr -d '`' | sort -u)
+done
+
+if [ "$fail" -ne 0 ]; then
+    echo "doc link check FAILED"
+    exit 1
+fi
+echo "doc link check OK"
