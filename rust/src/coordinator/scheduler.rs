@@ -9,6 +9,22 @@
 //! locality.  Failure handling (paper §4): when a match service stops
 //! responding, its in-flight tasks are put back on the open list.
 //!
+//! Failure handling carries a **generation check**: failing a service
+//! bumps its generation and marks it dead, so a "resurrected" service
+//! — one declared dead that reports anyway — can neither pull new
+//! tasks nor complete old ones ([`Scheduler::next_task`] returns
+//! `None`, [`Scheduler::try_report_complete`] drops the report).
+//! Without it, a zombie could be handed the re-queued copy of its own
+//! task and its straggler completion would then satisfy the new
+//! assignment — a double-completion.  Revival is explicit: only
+//! [`Scheduler::add_service`] (a real re-join; the wire layer always
+//! grants a fresh [`ServiceId`]) clears the dead mark.
+//!
+//! For the v3 batched wire protocol, [`Scheduler::next_tasks_for`]
+//! assigns up to `k` tasks in one call, re-ranking the open list
+//! between picks so affinity and replica-coverage ordering hold
+//! *within* the batch, not just at its head.
+//!
 //! With a **replicated data plane** the scheduler additionally tracks
 //! how many data replicas hold each partition
 //! ([`Scheduler::add_replica_coverage`], fed by `ReplicaAnnounce`).
@@ -38,8 +54,15 @@ pub enum Policy {
 #[derive(Debug)]
 pub struct Scheduler {
     open: VecDeque<MatchTask>,
-    in_flight: HashMap<u32, (ServiceId, MatchTask)>,
+    /// task id → (owner, owner's generation at assignment, task).
+    in_flight: HashMap<u32, (ServiceId, u32, MatchTask)>,
     cache_status: HashMap<ServiceId, HashSet<PartitionId>>,
+    /// Membership epoch per service: bumped by [`Scheduler::fail_service`],
+    /// so completions from before a failure can never satisfy an
+    /// assignment made after it.
+    generation: HashMap<ServiceId, u32>,
+    /// Services declared dead and not (re-)added since.
+    dead: HashSet<ServiceId>,
     /// partition → number of data replicas announced as holding it.
     replica_coverage: HashMap<PartitionId, u32>,
     policy: Policy,
@@ -57,6 +80,8 @@ impl Scheduler {
             open: tasks.into(),
             in_flight: HashMap::new(),
             cache_status: HashMap::new(),
+            generation: HashMap::new(),
+            dead: HashSet::new(),
             replica_coverage: HashMap::new(),
             policy,
             affinity_assignments: 0,
@@ -86,7 +111,8 @@ impl Scheduler {
     }
 
     /// Assign the next task to `service`, or `None` if the open list is
-    /// empty (in-flight tasks may still complete — or fail and reopen).
+    /// empty (in-flight tasks may still complete — or fail and reopen)
+    /// or the service has been declared dead and not re-added.
     ///
     /// Under [`Policy::Affinity`] the score of a task is the pair
     /// `(cached partitions at the service, replica coverage of its
@@ -95,7 +121,7 @@ impl Scheduler {
     /// most data replicas hold, so its fetches can be spread across the
     /// replicated data plane.  Ties go to the oldest task (FIFO).
     pub fn next_task(&mut self, service: ServiceId) -> Option<MatchTask> {
-        if self.open.is_empty() {
+        if self.open.is_empty() || self.dead.contains(&service) {
             return None;
         }
         let idx = match self.policy {
@@ -139,8 +165,30 @@ impl Scheduler {
             }
         };
         let task = self.open.remove(idx).expect("index valid");
-        self.in_flight.insert(task.id, (service, task));
+        let epoch = self.generation.get(&service).copied().unwrap_or(0);
+        self.in_flight.insert(task.id, (service, epoch, task));
         Some(task)
+    }
+
+    /// Assign up to `max` tasks to `service` in one call (the v3
+    /// batched pull).  Each pick re-ranks the remaining open list, so
+    /// the affinity / replica-coverage preference of
+    /// [`Scheduler::next_task`] orders tasks *within* the batch too.
+    /// Returns fewer than `max` (possibly none) when the open list
+    /// runs dry or the service is dead.
+    pub fn next_tasks_for(
+        &mut self,
+        service: ServiceId,
+        max: usize,
+    ) -> Vec<MatchTask> {
+        let mut batch = Vec::with_capacity(max.min(self.open.len()));
+        for _ in 0..max {
+            match self.next_task(service) {
+                Some(task) => batch.push(task),
+                None => break,
+            }
+        }
+        batch
     }
 
     /// A data replica announced that it holds `parts`: bump each
@@ -176,49 +224,107 @@ impl Scheduler {
     /// (missed heartbeats → [`Self::fail_service`]) may still deliver a
     /// completion for a task that has since been re-queued or re-assigned.
     /// The distributed runtime must not crash on such stragglers — the
-    /// stale report is dropped and `false` returned.  The cache status is
-    /// recorded either way (it is current information about that service).
+    /// stale report is dropped and `false` returned.
+    ///
+    /// A report is **fresh** only when all three hold: the service has
+    /// not been declared dead, the task is in flight at that service,
+    /// and the assignment was made in the service's *current*
+    /// generation.  The generation check is what stops the
+    /// double-completion: without it, a zombie's straggler could
+    /// satisfy a post-failure re-assignment of the same task.  The
+    /// cache status is recorded only for live services.
     pub fn try_report_complete(
         &mut self,
         service: ServiceId,
         task_id: u32,
         cached: Vec<PartitionId>,
     ) -> bool {
-        let fresh = matches!(
-            self.in_flight.get(&task_id),
-            Some((s, _)) if *s == service
-        );
-        if fresh {
-            self.in_flight.remove(&task_id);
-            self.completed += 1;
+        if self.dead.contains(&service) {
+            return false;
         }
+        let fresh = self.try_complete_batched(service, task_id);
         self.cache_status
             .insert(service, cached.into_iter().collect());
         fresh
     }
 
+    /// Like [`Self::try_report_complete`] but leaves the service's
+    /// recorded cache status untouched: the v3 batch path folds many
+    /// completions with this and then records the batch's piggybacked
+    /// status once via [`Self::record_cache_status`], instead of
+    /// rebuilding the status set per task.
+    pub fn try_complete_batched(
+        &mut self,
+        service: ServiceId,
+        task_id: u32,
+    ) -> bool {
+        if self.dead.contains(&service) {
+            return false;
+        }
+        let epoch = self.generation.get(&service).copied().unwrap_or(0);
+        let fresh = matches!(
+            self.in_flight.get(&task_id),
+            Some((s, e, _)) if *s == service && *e == epoch
+        );
+        if fresh {
+            self.in_flight.remove(&task_id);
+            self.completed += 1;
+        }
+        fresh
+    }
+
+    /// Record a service's piggybacked cache status without reporting a
+    /// completion.  The v3 batch path sends the status **once per
+    /// batch**, so the workflow service folds the batch's completions
+    /// with [`Self::try_report_complete`] (empty status) and records
+    /// the real status here, instead of rebuilding the status set per
+    /// task.  Dead services are ignored.
+    pub fn record_cache_status(
+        &mut self,
+        service: ServiceId,
+        cached: Vec<PartitionId>,
+    ) {
+        if self.dead.contains(&service) {
+            return;
+        }
+        self.cache_status
+            .insert(service, cached.into_iter().collect());
+    }
+
     /// A match service was added (paper §4: services can be added on
     /// demand — pull scheduling needs no state, this just primes the
-    /// cache-status entry).
+    /// cache-status entry).  Also the only way a previously-failed
+    /// [`ServiceId`] becomes assignable again — an explicit re-join,
+    /// starting a fresh generation.
     pub fn add_service(&mut self, service: ServiceId) {
+        self.dead.remove(&service);
+        self.generation.entry(service).or_insert(0);
         self.cache_status.entry(service).or_default();
     }
 
+    /// `true` when `service` was failed and has not re-joined since.
+    pub fn is_dead(&self, service: ServiceId) -> bool {
+        self.dead.contains(&service)
+    }
+
     /// A match service failed or was removed: requeue its in-flight
-    /// tasks (at the front — they are oldest) and drop its cache status.
-    /// Returns the number of requeued tasks.
+    /// tasks (at the front — they are oldest), drop its cache status,
+    /// bump its generation and mark it dead (see the module docs on
+    /// the generation check).  Returns the number of requeued tasks.
     pub fn fail_service(&mut self, service: ServiceId) -> usize {
         let failed: Vec<u32> = self
             .in_flight
             .iter()
-            .filter(|(_, (s, _))| *s == service)
+            .filter(|(_, (s, _, _))| *s == service)
             .map(|(id, _)| *id)
             .collect();
         for id in &failed {
-            let (_, task) = self.in_flight.remove(id).unwrap();
+            let (_, _, task) = self.in_flight.remove(id).unwrap();
             self.open.push_front(task);
         }
         self.cache_status.remove(&service);
+        *self.generation.entry(service).or_insert(0) += 1;
+        self.dead.insert(service);
         failed.len()
     }
 
@@ -310,8 +416,10 @@ mod tests {
         s.report_complete(ServiceId(1), 0, vec![]);
     }
 
-    /// Property: under any interleaving of assignment/completion/failure,
-    /// every task is eventually completed exactly once.
+    /// Property: under any interleaving of assignment/completion/failure
+    /// (every failed node re-joining under a fresh id, as the wire
+    /// layer guarantees), every task is eventually completed exactly
+    /// once.
     #[test]
     fn prop_all_tasks_complete_exactly_once() {
         forall("scheduler-complete", 80, |rng| {
@@ -326,6 +434,14 @@ mod tests {
                 Policy::Fifo
             };
             let mut s = Scheduler::new(tasks, policy);
+            // slot → the ServiceId currently joined for that node; a
+            // failed node re-joins under a fresh id (like the wire
+            // layer, which never reuses ids)
+            let mut ids: Vec<usize> = (0..n_services).collect();
+            let mut next_id = n_services;
+            for &id in &ids {
+                s.add_service(ServiceId(id));
+            }
             let mut holding: Vec<Vec<MatchTask>> =
                 vec![Vec::new(); n_services];
             let mut completions: Vec<u32> = Vec::new();
@@ -335,15 +451,22 @@ mod tests {
                 match rng.gen_range(10) {
                     // occasionally fail a service (max 3 times per run)
                     0 if failures < 3 && !holding[svc].is_empty() => {
-                        s.fail_service(ServiceId(svc));
+                        let old = ServiceId(ids[svc]);
+                        s.fail_service(old);
                         holding[svc].clear();
                         failures += 1;
+                        // the dead id is out of the game for good
+                        assert!(s.next_task(old).is_none());
+                        // re-join under a fresh id
+                        ids[svc] = next_id;
+                        next_id += 1;
+                        s.add_service(ServiceId(ids[svc]));
                     }
                     // complete something it holds
                     1..=5 if !holding[svc].is_empty() => {
                         let t = holding[svc].pop().unwrap();
                         s.report_complete(
-                            ServiceId(svc),
+                            ServiceId(ids[svc]),
                             t.id,
                             t.needed_partitions(),
                         );
@@ -351,7 +474,9 @@ mod tests {
                     }
                     // otherwise pull a new task
                     _ => {
-                        if let Some(t) = s.next_task(ServiceId(svc)) {
+                        if let Some(t) =
+                            s.next_task(ServiceId(ids[svc]))
+                        {
                             holding[svc].push(t);
                         } else if holding.iter().all(Vec::is_empty) {
                             // nothing open and nothing held anywhere,
@@ -497,6 +622,80 @@ mod tests {
         }
         assert!(s.is_done());
         assert_eq!(s.completed(), 4);
+    }
+
+    /// The PR-3 bugfix, reproduced: before the generation check, a
+    /// service declared dead could keep pulling (the wire layer's old
+    /// `touch` silently resurrected it), be handed the re-queued copy
+    /// of its *own* in-flight task, and its straggler report from the
+    /// first assignment then completed the second one — the workflow
+    /// could finish while the re-execution was still running, and the
+    /// "dead" node kept computing against a task the scheduler had
+    /// re-opened.  Now the dead id is fenced until an explicit
+    /// re-join.
+    #[test]
+    fn resurrected_service_cannot_pull_or_complete() {
+        let mut s = Scheduler::new(
+            vec![task(0, 0, 0), task(1, 1, 1)],
+            Policy::Fifo,
+        );
+        s.add_service(ServiceId(0));
+        let t = s.next_task(ServiceId(0)).unwrap();
+        assert_eq!(s.fail_service(ServiceId(0)), 1);
+        assert!(s.is_dead(ServiceId(0)));
+        // the zombie pulls again: with the old code this handed task 0
+        // back to the dead id — now it gets nothing
+        assert!(s.next_task(ServiceId(0)).is_none());
+        // and its straggler completion is dropped
+        assert!(!s.try_report_complete(ServiceId(0), t.id, vec![]));
+        assert_eq!(s.completed(), 0);
+        // the re-queued task completes exactly once at a live service
+        s.add_service(ServiceId(1));
+        let re = s.next_task(ServiceId(1)).unwrap();
+        assert_eq!(re.id, t.id);
+        assert!(s.try_report_complete(ServiceId(1), re.id, vec![]));
+        // an explicit re-join revives the old id in a new generation:
+        // it can work again, but nothing from before the failure counts
+        s.add_service(ServiceId(0));
+        assert!(!s.is_dead(ServiceId(0)));
+        assert!(!s.try_report_complete(ServiceId(0), t.id, vec![]));
+        let t1 = s.next_task(ServiceId(0)).unwrap();
+        assert!(s.try_report_complete(ServiceId(0), t1.id, vec![]));
+        assert!(s.is_done());
+        assert_eq!(s.completed(), 2);
+    }
+
+    /// Batched assignment keeps the affinity ordering *within* a
+    /// batch: with partitions 5/6 cached, both tasks touching them
+    /// come first, best score first, before the cold task.
+    #[test]
+    fn next_tasks_for_orders_batch_by_affinity() {
+        let tasks = vec![
+            task(0, 9, 9),
+            task(1, 7, 8),
+            task(2, 5, 7),
+            task(3, 5, 6),
+        ];
+        let mut s = Scheduler::new(tasks, Policy::Affinity);
+        s.add_service(ServiceId(0));
+        let t0 = s.next_task(ServiceId(0)).unwrap();
+        assert_eq!(t0.id, 0);
+        s.report_complete(
+            ServiceId(0),
+            0,
+            vec![PartitionId(5), PartitionId(6)],
+        );
+        let batch = s.next_tasks_for(ServiceId(0), 3);
+        assert_eq!(
+            batch.iter().map(|t| t.id).collect::<Vec<_>>(),
+            vec![3, 2, 1],
+            "both-cached, then one-cached, then cold"
+        );
+        // a further pull drains nothing: the open list is empty
+        assert!(s.next_tasks_for(ServiceId(0), 4).is_empty());
+        // dead services get empty batches
+        s.fail_service(ServiceId(0));
+        assert!(s.next_tasks_for(ServiceId(0), 4).is_empty());
     }
 
     #[test]

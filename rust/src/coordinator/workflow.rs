@@ -74,6 +74,12 @@ pub struct WorkflowConfig {
     /// Distributed engine: total data-plane servers (1 = just the
     /// primary; N > 1 adds N−1 synced replicas and fetch failover).
     pub data_replicas: usize,
+    /// Distributed engine: tasks pulled per control round trip
+    /// (protocol v3 batched assignment; 1 = classic per-task pull).
+    pub batch: usize,
+    /// Distributed engine: host the services bind (default loopback;
+    /// the ROADMAP fix for the unconditional `0.0.0.0` binds).
+    pub bind: String,
     /// Control-plane cost model (workflow-service RMI).
     pub net: CostModel,
     /// Data-plane cost model (data-service partition fetches).
@@ -108,6 +114,8 @@ impl WorkflowConfig {
             cache_capacity: 0,
             policy: crate::coordinator::Policy::Affinity,
             data_replicas: 1,
+            batch: 1,
+            bind: "127.0.0.1".to_string(),
             net: CostModel::lan(),
             data_net: CostModel::dbms(),
             execute_in_sim: false,
@@ -147,6 +155,13 @@ impl WorkflowConfig {
     /// style; clamped to ≥ 1 at run time).
     pub fn with_data_replicas(mut self, n: usize) -> Self {
         self.data_replicas = n;
+        self
+    }
+
+    /// Distributed engine: pull this many tasks per control round
+    /// trip (builder style; clamped to ≥ 1 at run time).
+    pub fn with_batch(mut self, k: usize) -> Self {
+        self.batch = k;
         self
     }
 }
@@ -265,6 +280,8 @@ pub fn run_workflow(
                     cache_capacity: cfg.cache_capacity,
                     policy: cfg.policy,
                     data_replicas: cfg.data_replicas.max(1),
+                    batch: cfg.batch.max(1),
+                    bind: cfg.bind.clone(),
                     ..dist::DistConfig::default()
                 },
             )?;

@@ -47,6 +47,15 @@ pub struct DistConfig {
     pub cache_capacity: usize,
     /// Task-assignment policy (FIFO or affinity).
     pub policy: Policy,
+    /// Tasks pulled per control round trip (protocol v3 batched
+    /// assignment; 1 = the classic per-task pull).  Batches amortize
+    /// the request/assign round trip and enable the node-side
+    /// prefetcher that overlaps execution with partition fetches.
+    pub batch: usize,
+    /// Host every service binds (the ROADMAP fix: servers used to bind
+    /// `0.0.0.0` unconditionally).  The default keeps single-machine
+    /// runs off external interfaces.
+    pub bind: String,
     /// Total data-plane servers: 1 = just the primary (the pre-replica
     /// behavior); N > 1 additionally starts N−1 replicas, waits for
     /// their push-sync, and announces all N into the coordinator's
@@ -70,6 +79,8 @@ impl Default for DistConfig {
         DistConfig {
             cache_capacity: 0,
             policy: Policy::Affinity,
+            batch: 1,
+            bind: "127.0.0.1".to_string(),
             data_replicas: 1,
             heartbeat_timeout: Duration::from_secs(2),
             heartbeat_interval: Duration::from_millis(50),
@@ -112,14 +123,26 @@ pub fn run(
     cfg: DistConfig,
 ) -> Result<DistOutcome> {
     let n_tasks = tasks.len();
-    let data_srv = DataServiceServer::start(store, "127.0.0.1:0")
+    // every server binds the configured host (default loopback — the
+    // ROADMAP fix for the unconditional 0.0.0.0 binds); the wildcard
+    // is not a *connectable* address, so in-process clients dial
+    // loopback when it is used
+    let bind_ep = format!("{}:0", cfg.bind);
+    let connect_host = if cfg.bind == "0.0.0.0" {
+        "127.0.0.1"
+    } else {
+        cfg.bind.as_str()
+    };
+    let data_srv = DataServiceServer::start(store, &bind_ep)
         .context("starting data service")?;
+    let primary_addr =
+        format!("{connect_host}:{}", data_srv.addr().port());
     // replicated data plane: N−1 replicas push-synced from the primary
     let mut replica_srvs: Vec<DataServiceServer> = Vec::new();
     for r in 1..cfg.data_replicas.max(1) {
         let srv = DataServiceServer::start_replica(
-            "127.0.0.1:0",
-            &data_srv.addr().to_string(),
+            &bind_ep,
+            &primary_addr,
             Duration::from_secs(30),
         )
         .with_context(|| format!("starting data replica {r}"))?;
@@ -140,14 +163,15 @@ pub fn run(
             policy: cfg.policy,
             heartbeat_timeout: cfg.heartbeat_timeout,
         },
-        "127.0.0.1:0",
+        &bind_ep,
     )
     .context("starting workflow service")?;
 
-    let wf_addr = wf_srv.addr().to_string();
+    let wf_addr =
+        format!("{connect_host}:{}", wf_srv.addr().port());
     let data_addrs: Vec<String> = std::iter::once(&data_srv)
         .chain(replica_srvs.iter())
-        .map(|s| s.addr().to_string())
+        .map(|s| format!("{connect_host}:{}", s.addr().port()))
         .collect();
     // announce every data server into the directory so the scheduler
     // sees replica coverage and late joiners learn all addresses
@@ -176,6 +200,7 @@ pub fn run(
             node_cfg.name = format!("node-{i}");
             node_cfg.threads = ce.threads_per_node;
             node_cfg.cache_capacity = cfg.cache_capacity;
+            node_cfg.batch = cfg.batch;
             node_cfg.heartbeat_interval = cfg.heartbeat_interval;
             node_cfg.poll_interval = cfg.poll_interval;
             node_cfg.fail_after_tasks = cfg
@@ -362,6 +387,46 @@ mod tests {
         for r in &out.node_reports {
             assert_eq!(r.fetches_per_replica.len(), 2);
             assert_eq!(r.replica_failovers, 0);
+        }
+    }
+
+    /// Batched assignment (protocol v3): the run completes with the
+    /// same totals as the classic per-task pull while the control
+    /// plane sees strictly fewer pulls than tasks, and every task
+    /// flowed through a batch.
+    #[test]
+    fn batched_assignment_cuts_control_round_trips() {
+        let (parts, tasks, store) = setup(400, 40);
+        let n_tasks = tasks.len();
+        let ce = ComputingEnv::new(2, 2, crate::util::GIB);
+        let out = run(
+            &ce,
+            &parts,
+            tasks,
+            store,
+            wam_exec(),
+            DistConfig {
+                cache_capacity: 8,
+                batch: 4,
+                // slow drain polls keep the pull count stable
+                poll_interval: Duration::from_millis(20),
+                ..DistConfig::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(out.metrics.tasks, n_tasks);
+        assert_eq!(out.metrics.comparisons, 400 * 399 / 2);
+        assert!(out.workflow.batch_requests > 0, "v3 path exercised");
+        assert!(
+            out.workflow.batch_requests < n_tasks as u64,
+            "{} pulls for {} tasks — batching must amortize them",
+            out.workflow.batch_requests,
+            n_tasks
+        );
+        assert_eq!(out.workflow.requeued_tasks, 0);
+        assert_eq!(out.workflow.stale_completions, 0);
+        for r in &out.node_reports {
+            assert!(r.tasks_completed > 0, "idle node {:?}", r.service);
         }
     }
 

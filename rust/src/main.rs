@@ -77,9 +77,15 @@ fn usage() -> ! {
     --cores-list 1,2,4,8,12,16
   match/sweep dist-engine options:
     --data-replicas N     data-plane servers incl. primary (default 1)
+    --batch K             tasks pulled per control round trip
+                          (default 1 = classic per-task pull)
+    --bind HOST           host the services bind (default 127.0.0.1)
   serve options (workflow + data services for multi-process matching):
     --workflow-port P     control-plane port (default 0 = ephemeral)
     --data-port P         data-plane port (default 0 = ephemeral)
+    --bind HOST           host to bind (default 127.0.0.1; set to
+                          0.0.0.0 together with --advertise to accept
+                          remote nodes)
     --heartbeat-ms MS     failure-detection timeout (default 2000)
     --timeout-s S         give up after S seconds (default 3600)
     --advertise HOST      host to publish in the replica directory
@@ -89,10 +95,12 @@ fn usage() -> ! {
     --replica-of HOST:PORT  upstream data server to sync from (required)
     --workflow HOST:PORT    coordinator to announce this replica to
     --data-port P           port to serve on (default 0 = ephemeral)
+    --bind HOST             host to bind (default 127.0.0.1)
   distmatch options (one match-service node):
     --workflow HOST:PORT  workflow service address (required)
     --data HOST:PORT[,HOST:PORT...]  data replica addresses (required;
                           the join-time directory adds any missing ones)
+    --batch K             tasks pulled per round trip (default 1)
     --name NAME           node name  --threads T  --cache C"
     );
     std::process::exit(2);
@@ -151,6 +159,8 @@ fn parse_workflow(args: &Args, kind: StrategyKind) -> Result<WorkflowConfig> {
             Policy::Affinity
         },
         data_replicas: args.get_or("data-replicas", 1usize)?,
+        batch: args.get_or("batch", 1usize)?,
+        bind: args.str_or("bind", "127.0.0.1").to_string(),
         net: pem::net::CostModel::lan(),
         data_net: pem::net::CostModel::dbms(),
         execute_in_sim: args.flag("execute"),
@@ -310,7 +320,13 @@ fn cmd_serve_data_replica(args: &Args) -> Result<()> {
     let upstream = args.get_str("replica-of").ok_or_else(|| {
         anyhow::anyhow!("--replica-of HOST:PORT required with --role data")
     })?;
-    let bind = format!("0.0.0.0:{}", args.get_or("data-port", 0u16)?);
+    // bind loopback unless the operator opts into exposure (the
+    // ROADMAP fix: replicas used to bind 0.0.0.0 unconditionally)
+    let bind = format!(
+        "{}:{}",
+        args.str_or("bind", "127.0.0.1"),
+        args.get_or("data-port", 0u16)?
+    );
     let srv = DataServiceServer::start_replica(
         &bind,
         upstream,
@@ -393,10 +409,15 @@ fn cmd_serve_coordinator(args: &Args) -> Result<()> {
         tasks.len()
     );
 
+    // bind loopback unless the operator opts in with --bind (the
+    // ROADMAP fix: the coordinator used to bind 0.0.0.0
+    // unconditionally, exposing an unauthenticated control plane on
+    // every interface)
+    let bind_host = args.str_or("bind", "127.0.0.1");
     let data_bind =
-        format!("0.0.0.0:{}", args.get_or("data-port", 0u16)?);
+        format!("{bind_host}:{}", args.get_or("data-port", 0u16)?);
     let wf_bind =
-        format!("0.0.0.0:{}", args.get_or("workflow-port", 0u16)?);
+        format!("{bind_host}:{}", args.get_or("workflow-port", 0u16)?);
     let data_srv = DataServiceServer::start(store, &data_bind)?;
     let wf_srv = WorkflowServiceServer::start(
         tasks,
@@ -416,8 +437,15 @@ fn cmd_serve_coordinator(args: &Args) -> Result<()> {
     let advertise = args.str_or("advertise", "127.0.0.1");
     let primary_addr =
         format!("{advertise}:{}", data_srv.addr().port());
+    // self-announce over a host we can actually reach: loopback when
+    // bound to loopback or every interface, the bound host otherwise
+    let self_host = if bind_host == "0.0.0.0" {
+        "127.0.0.1"
+    } else {
+        bind_host
+    };
     announce_replica(
-        &format!("127.0.0.1:{}", wf_srv.addr().port()),
+        &format!("{self_host}:{}", wf_srv.addr().port()),
         &primary_addr,
         &data_srv.partition_ids(),
         std::time::Duration::from_secs(10),
@@ -471,6 +499,16 @@ fn cmd_serve_coordinator(args: &Args) -> Result<()> {
         report.requeued_tasks,
         report.stale_completions
     );
+    if report.batch_requests > 0 {
+        // assignment_pulls also counts classic (batch = 1) TaskRequest
+        // frames, so the two counters are reported side by side rather
+        // than as a subset
+        println!(
+            "batched assignment: {} batch pull(s); {} pull(s) across \
+             all nodes carried no completion report",
+            report.batch_requests, report.assignment_pulls
+        );
+    }
     if report.data_replicas.len() > 1 {
         println!(
             "replica directory: {} (remote replicas report their own \
@@ -525,6 +563,7 @@ fn cmd_distmatch(args: &Args) -> Result<()> {
     cfg.name = args.str_or("name", "distmatch").to_string();
     cfg.threads = args.get_or("threads", 4usize)?;
     cfg.cache_capacity = args.get_or("cache", 0usize)?;
+    cfg.batch = args.get_or("batch", 1usize)?.max(1);
     let exec: std::sync::Arc<dyn pem::worker::TaskExecutor> =
         std::sync::Arc::new(pem::worker::RustExecutor::new(
             MatchStrategy::new(kind),

@@ -11,6 +11,13 @@
 //!
 //! Delivered-bytes accounting feeds the communication-overhead numbers in
 //! the experiment reports.
+//!
+//! The *real* I/O layer lives next door in [`reactor`]: the
+//! readiness-driven event loop the TCP servers run on (one thread per
+//! server, nonblocking sockets, incremental framing via
+//! [`crate::rpc::session`]).
+
+pub mod reactor;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -35,13 +35,24 @@
 //! replica directory, data servers announce themselves with
 //! [`Message::ReplicaAnnounce`], replicate partition frames with
 //! [`Message::SyncRequest`]/[`Message::SyncDone`], and answer fetches
-//! for partitions they do not hold with [`Message::Redirect`].  The
+//! for partitions they do not hold with [`Message::Redirect`].
+//!
+//! **Batched assignment (protocol v3).**  One
+//! [`Message::TaskRequestBatch`] reports every task a worker finished
+//! since its last pull ([`CompletedTask`] records, cache status
+//! attached once) *and* requests up to `max` new tasks; the reply is
+//! [`Message::TaskAssignBatch`].  This folds the per-task
+//! request/assign round trip — the dominant coordination cost when
+//! tasks are small — into one round trip per batch.  v3 also adds the
+//! incremental session layer ([`session`]) that lets servers decode
+//! these frames from arbitrary read-chunk boundaries.  The
 //! authoritative byte-level layout of every frame is specified in
 //! `docs/WIRE_PROTOCOL.md`, kept in lockstep with this module.
 
 #![warn(missing_docs)]
 
 pub mod frame;
+pub mod session;
 
 pub use frame::{read_frame, read_frame_raw, write_frame, Transport, MAX_FRAME_BYTES};
 
@@ -52,8 +63,9 @@ pub use frame::{read_frame, read_frame_raw, write_frame, Transport, MAX_FRAME_BY
 /// different version are rejected at join time with a clear error
 /// (`docs/WIRE_PROTOCOL.md` § Version negotiation).  History:
 /// v1 — PR 1's unversioned frames; v2 — version byte + replicated data
-/// plane (directory, redirect, sync).
-pub const PROTOCOL_VERSION: u8 = 2;
+/// plane (directory, redirect, sync); v3 — batched task assignment
+/// ([`Message::TaskRequestBatch`] / [`Message::TaskAssignBatch`]).
+pub const PROTOCOL_VERSION: u8 = 3;
 
 use crate::coordinator::scheduler::ServiceId;
 use crate::features::{EntityFeatures, QGramSet, TokenSet};
@@ -94,6 +106,19 @@ impl fmt::Display for WireError {
 }
 
 impl std::error::Error for WireError {}
+
+/// One finished task inside a [`Message::TaskRequestBatch`] report:
+/// the v3 batched equivalent of a [`Message::Complete`] body (the
+/// cache status travels once per batch, not per task).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompletedTask {
+    /// The completed task.
+    pub task_id: u32,
+    /// Pair comparisons the task evaluated.
+    pub comparisons: u64,
+    /// Correspondences the task found.
+    pub matches: Vec<Correspondence>,
+}
 
 /// One protocol message (control plane to the workflow service, data
 /// plane to the data service).
@@ -171,6 +196,33 @@ pub enum Message {
     },
     /// workflow service → match service: liveness acknowledged.
     HeartbeatAck,
+    /// match service → workflow service (v3): report every task
+    /// finished since the last pull and request up to `max` new tasks
+    /// — the batched form of the [`Message::Complete`] +
+    /// [`Message::TaskRequest`] round trip.  The reply is
+    /// [`Message::TaskAssignBatch`].
+    TaskRequestBatch {
+        /// The pulling service.
+        service: ServiceId,
+        /// Maximum number of tasks the worker wants assigned.
+        max: u32,
+        /// Partition ids currently in the service's cache (piggybacked
+        /// once per batch, paper §4).
+        cached: Vec<PartitionId>,
+        /// Tasks completed since the previous batch request.
+        completed: Vec<CompletedTask>,
+    },
+    /// workflow service → match service (v3): up to `max` assignments
+    /// for a [`Message::TaskRequestBatch`].  An empty `tasks` with
+    /// `done = false` means poll again (tasks are in flight elsewhere
+    /// and may be re-queued); `done = true` means the whole workflow
+    /// has completed.
+    TaskAssignBatch {
+        /// `true` once every task of the workflow has completed.
+        done: bool,
+        /// The assigned tasks, in scheduler preference order.
+        tasks: Vec<MatchTask>,
+    },
     /// match service → data service: fetch one partition.
     FetchPartition {
         /// The wanted partition.
@@ -248,6 +300,8 @@ const TAG_REPLICA_DIRECTORY: u8 = 15;
 const TAG_REDIRECT: u8 = 16;
 const TAG_SYNC_REQUEST: u8 = 17;
 const TAG_SYNC_DONE: u8 = 18;
+const TAG_TASK_REQUEST_BATCH: u8 = 19;
+const TAG_TASK_ASSIGN_BATCH: u8 = 20;
 
 /// Minimum wire footprint of one [`EntityFeatures`]: a 4-byte title
 /// length plus three 4-byte list counts (all possibly zero).
@@ -399,6 +453,38 @@ impl Message {
                 put_service(&mut b, *service);
             }
             Message::HeartbeatAck => put_u8(&mut b, TAG_HEARTBEAT_ACK),
+            Message::TaskRequestBatch {
+                service,
+                max,
+                cached,
+                completed,
+            } => {
+                put_u8(&mut b, TAG_TASK_REQUEST_BATCH);
+                put_service(&mut b, *service);
+                put_u32(&mut b, *max);
+                put_partition_list(&mut b, cached);
+                put_u32(&mut b, completed.len() as u32);
+                for c in completed {
+                    put_u32(&mut b, c.task_id);
+                    put_u64(&mut b, c.comparisons);
+                    put_u32(&mut b, c.matches.len() as u32);
+                    for m in &c.matches {
+                        put_u32(&mut b, m.e1.0);
+                        put_u32(&mut b, m.e2.0);
+                        put_f32(&mut b, m.sim);
+                    }
+                }
+            }
+            Message::TaskAssignBatch { done, tasks } => {
+                put_u8(&mut b, TAG_TASK_ASSIGN_BATCH);
+                put_bool(&mut b, *done);
+                put_u32(&mut b, tasks.len() as u32);
+                for t in tasks {
+                    put_u32(&mut b, t.id);
+                    put_u32(&mut b, t.left.0);
+                    put_u32(&mut b, t.right.0);
+                }
+            }
             Message::FetchPartition { id } => {
                 put_u8(&mut b, TAG_FETCH_PARTITION);
                 put_u32(&mut b, id.0);
@@ -501,6 +587,51 @@ impl Message {
                 service: d.service()?,
             },
             TAG_HEARTBEAT_ACK => Message::HeartbeatAck,
+            TAG_TASK_REQUEST_BATCH => {
+                let service = d.service()?;
+                let max = d.u32()?;
+                let cached = d.partition_list()?;
+                // minimum wire footprint of one CompletedTask: task id,
+                // comparisons, and an (empty) match count
+                let n = d.list_len(16)?;
+                let mut completed = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let task_id = d.u32()?;
+                    let comparisons = d.u64()?;
+                    let n_matches = d.list_len(12)?;
+                    let mut matches = Vec::with_capacity(n_matches);
+                    for _ in 0..n_matches {
+                        let e1 = EntityId(d.u32()?);
+                        let e2 = EntityId(d.u32()?);
+                        let sim = d.f32()?;
+                        matches.push(Correspondence { e1, e2, sim });
+                    }
+                    completed.push(CompletedTask {
+                        task_id,
+                        comparisons,
+                        matches,
+                    });
+                }
+                Message::TaskRequestBatch {
+                    service,
+                    max,
+                    cached,
+                    completed,
+                }
+            }
+            TAG_TASK_ASSIGN_BATCH => {
+                let done = d.bool()?;
+                let n = d.list_len(12)?;
+                let mut tasks = Vec::with_capacity(n);
+                for _ in 0..n {
+                    tasks.push(MatchTask {
+                        id: d.u32()?,
+                        left: PartitionId(d.u32()?),
+                        right: PartitionId(d.u32()?),
+                    });
+                }
+                Message::TaskAssignBatch { done, tasks }
+            }
             TAG_FETCH_PARTITION => Message::FetchPartition {
                 id: PartitionId(d.u32()?),
             },
@@ -564,6 +695,8 @@ impl Message {
             Message::Complete { .. } => "Complete",
             Message::Heartbeat { .. } => "Heartbeat",
             Message::HeartbeatAck => "HeartbeatAck",
+            Message::TaskRequestBatch { .. } => "TaskRequestBatch",
+            Message::TaskAssignBatch { .. } => "TaskAssignBatch",
             Message::FetchPartition { .. } => "FetchPartition",
             Message::Partition { .. } => "Partition",
             Message::ReplicaAnnounce { .. } => "ReplicaAnnounce",
@@ -698,13 +831,14 @@ impl<'a> Dec<'a> {
     }
 }
 
+/// Randomized message generators shared by this module's property
+/// tests and the [`session`] chunk-fuzzing tests.
 #[cfg(test)]
-mod tests {
+pub(crate) mod testutil {
     use super::*;
-    use crate::util::proptest::forall;
     use crate::util::Rng;
 
-    fn rand_string(rng: &mut Rng, max_len: usize) -> String {
+    pub(crate) fn rand_string(rng: &mut Rng, max_len: usize) -> String {
         let len = rng.gen_range(max_len + 1);
         (0..len)
             .map(|_| {
@@ -717,7 +851,7 @@ mod tests {
             .collect()
     }
 
-    fn rand_features(rng: &mut Rng) -> EntityFeatures {
+    pub(crate) fn rand_features(rng: &mut Rng) -> EntityFeatures {
         let title = rand_string(rng, 24);
         let desc = rand_string(rng, 60);
         let title_grams = QGramSet::new(&title, 3);
@@ -733,7 +867,7 @@ mod tests {
         }
     }
 
-    fn rand_partition(rng: &mut Rng) -> PartitionData {
+    pub(crate) fn rand_partition(rng: &mut Rng) -> PartitionData {
         let n = rng.gen_range(6);
         let entities: Vec<EntityId> =
             (0..n).map(|i| EntityId(i as u32 * 7)).collect();
@@ -746,8 +880,9 @@ mod tests {
         }
     }
 
-    /// One of each message kind with randomized fields.
-    fn arbitrary_messages(rng: &mut Rng) -> Vec<Message> {
+    /// One of each message kind (all protocol versions) with
+    /// randomized fields.
+    pub(crate) fn arbitrary_messages(rng: &mut Rng) -> Vec<Message> {
         let svc = ServiceId(rng.gen_range(64));
         vec![
             Message::Join {
@@ -820,11 +955,48 @@ mod tests {
             Message::SyncDone {
                 count: rng.gen_range(10_000) as u32,
             },
+            Message::TaskRequestBatch {
+                service: svc,
+                max: 1 + rng.gen_range(16) as u32,
+                cached: (0..rng.gen_range(5))
+                    .map(|i| PartitionId(i as u32))
+                    .collect(),
+                completed: (0..rng.gen_range(4))
+                    .map(|i| CompletedTask {
+                        task_id: i as u32,
+                        comparisons: rng.gen_range(1 << 20) as u64,
+                        matches: (0..rng.gen_range(3))
+                            .map(|j| Correspondence {
+                                e1: EntityId(2 * j as u32),
+                                e2: EntityId(2 * j as u32 + 1),
+                                sim: (rng.gen_range(1000) as f32) / 1000.0,
+                            })
+                            .collect(),
+                    })
+                    .collect(),
+            },
+            Message::TaskAssignBatch {
+                done: rng.gen_bool(0.5),
+                tasks: (0..rng.gen_range(9))
+                    .map(|i| MatchTask {
+                        id: i as u32,
+                        left: PartitionId(rng.gen_range(500) as u32),
+                        right: PartitionId(rng.gen_range(500) as u32),
+                    })
+                    .collect(),
+            },
             Message::Error {
                 message: rand_string(rng, 40),
             },
         ]
     }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+    use crate::util::proptest::forall;
 
     /// Property: every message round-trips encode → decode → encode to
     /// identical bytes (the encoding is canonical, so byte equality is
@@ -1049,5 +1221,95 @@ mod tests {
         let borrowed = encode_partition_message(&data);
         let owned = Message::Partition { data }.encode();
         assert_eq!(borrowed, owned);
+    }
+
+    /// The v3 batch frames round-trip with field order and content
+    /// preserved (assignments must arrive in scheduler preference
+    /// order).
+    #[test]
+    fn batch_frames_roundtrip_in_order() {
+        let req = Message::TaskRequestBatch {
+            service: ServiceId(4),
+            max: 8,
+            cached: vec![PartitionId(1), PartitionId(9)],
+            completed: vec![
+                CompletedTask {
+                    task_id: 7,
+                    comparisons: 1234,
+                    matches: vec![Correspondence {
+                        e1: EntityId(1),
+                        e2: EntityId(2),
+                        sim: 0.75,
+                    }],
+                },
+                CompletedTask {
+                    task_id: 8,
+                    comparisons: 0,
+                    matches: vec![],
+                },
+            ],
+        };
+        let Ok(Message::TaskRequestBatch {
+            service,
+            max,
+            cached,
+            completed,
+        }) = Message::decode(&req.encode())
+        else {
+            panic!("decode TaskRequestBatch");
+        };
+        assert_eq!(service, ServiceId(4));
+        assert_eq!(max, 8);
+        assert_eq!(cached, vec![PartitionId(1), PartitionId(9)]);
+        assert_eq!(completed.len(), 2);
+        assert_eq!(completed[0].task_id, 7);
+        assert_eq!(completed[0].matches[0].sim, 0.75);
+        assert_eq!(completed[1].task_id, 8);
+
+        let assign = Message::TaskAssignBatch {
+            done: false,
+            tasks: (0..3)
+                .map(|i| MatchTask {
+                    id: i,
+                    left: PartitionId(i),
+                    right: PartitionId(i + 1),
+                })
+                .collect(),
+        };
+        let Ok(Message::TaskAssignBatch { done, tasks }) =
+            Message::decode(&assign.encode())
+        else {
+            panic!("decode TaskAssignBatch");
+        };
+        assert!(!done);
+        assert_eq!(
+            tasks.iter().map(|t| t.id).collect::<Vec<_>>(),
+            vec![0, 1, 2],
+            "assignment order preserved"
+        );
+    }
+
+    /// Hostile batch counts are rejected before any allocation, like
+    /// every other list in the protocol.
+    #[test]
+    fn batch_frames_with_lying_counts_rejected() {
+        // a TaskRequestBatch claiming 4 billion completed tasks
+        let mut b = vec![TAG_TASK_REQUEST_BATCH];
+        put_u32(&mut b, 1); // service
+        put_u32(&mut b, 4); // max
+        put_u32(&mut b, 0); // cached: empty
+        put_u32(&mut b, u32::MAX); // completed count — lies
+        assert!(matches!(
+            Message::decode(&b),
+            Err(WireError::Truncated)
+        ));
+        // a TaskAssignBatch claiming 4 billion tasks
+        let mut b = vec![TAG_TASK_ASSIGN_BATCH];
+        b.push(0); // done = false
+        put_u32(&mut b, u32::MAX); // task count — lies
+        assert!(matches!(
+            Message::decode(&b),
+            Err(WireError::Truncated)
+        ));
     }
 }

@@ -1,0 +1,382 @@
+//! Per-connection session state machines for the readiness-driven
+//! servers: incremental frame decoding and buffered outbound frames.
+//!
+//! The blocking [`super::Transport`] can simply `read_exact` a whole
+//! frame; a nonblocking server cannot — the kernel hands it whatever
+//! bytes happen to have arrived, which may be half a length prefix,
+//! three coalesced frames, or one byte of a megabyte payload.  This
+//! module contains the two state machines the
+//! [`crate::net::reactor`] drives per connection:
+//!
+//! * [`SessionDecoder`] — absorbs arbitrary read chunks and yields
+//!   complete frame payloads, enforcing [`MAX_FRAME_BYTES`] on the
+//!   announced length *before* buffering the body;
+//! * [`SessionEncoder`] — queues encoded frames and writes as much as
+//!   the socket accepts, carrying partial writes across readiness
+//!   events.
+//!
+//! Both are pure byte-level machines with no socket inside, so the
+//! property tests below can fuzz every chunk boundary: the decoder is
+//! held byte-identical to the blocking codec under 1-byte reads, split
+//! length prefixes and coalesced frames, and the encoder under short
+//! writes and spurious `WouldBlock`s.
+//!
+//! **Buffering bounds** (normative, `docs/WIRE_PROTOCOL.md` § Framing):
+//! inbound, a session buffers at most one partial frame — 4 prefix
+//! bytes plus [`MAX_FRAME_BYTES`] — and a length header above the limit
+//! is a framing violation answered by hanging up; outbound, a peer that
+//! stops draining its socket may have at most
+//! [`MAX_SESSION_SEND_BYTES`] queued against it before the server hangs
+//! up on it.
+
+use super::{Message, WireError, MAX_FRAME_BYTES};
+use std::collections::VecDeque;
+use std::io::{self, Write};
+
+/// Upper bound on bytes queued toward one peer that is not draining
+/// its socket.  Generous enough for a full replication stream of an
+/// extreme store; anything beyond it means the peer is gone or wedged
+/// and the server hangs up instead of buffering without bound.
+pub const MAX_SESSION_SEND_BYTES: usize = 1 << 30;
+
+/// Incremental frame decoder: feed arbitrary byte chunks, pull
+/// complete frame payloads.
+///
+/// The consumed prefix of the internal buffer is reclaimed lazily, so
+/// feeding and draining are amortized O(bytes).
+#[derive(Debug, Default)]
+pub struct SessionDecoder {
+    buf: Vec<u8>,
+    start: usize,
+}
+
+impl SessionDecoder {
+    /// Fresh decoder with no buffered bytes.
+    pub fn new() -> SessionDecoder {
+        SessionDecoder::default()
+    }
+
+    /// Absorb one read chunk (any size, including empty).
+    pub fn feed(&mut self, chunk: &[u8]) {
+        self.buf.extend_from_slice(chunk);
+    }
+
+    /// Extract the next complete frame payload, if one is buffered.
+    ///
+    /// `Ok(None)` means more bytes are needed;
+    /// [`WireError::FrameTooLarge`] means the stream is corrupt (or
+    /// hostile) and the connection must be dropped — the oversized
+    /// body was never buffered.
+    pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>, WireError> {
+        if self.buffered() < 4 {
+            self.compact();
+            return Ok(None);
+        }
+        let prefix: [u8; 4] =
+            self.buf[self.start..self.start + 4].try_into().unwrap();
+        let len = u32::from_le_bytes(prefix) as u64;
+        if len > MAX_FRAME_BYTES {
+            return Err(WireError::FrameTooLarge(len));
+        }
+        let len = len as usize;
+        if self.buffered() < 4 + len {
+            self.compact();
+            return Ok(None);
+        }
+        let body_start = self.start + 4;
+        let payload = self.buf[body_start..body_start + len].to_vec();
+        self.start += 4 + len;
+        if self.start == self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        }
+        Ok(Some(payload))
+    }
+
+    /// Bytes buffered but not yet consumed as frames.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Reclaim the consumed prefix (called when the caller is about to
+    /// wait for more bytes, so the buffer never grows past one frame).
+    fn compact(&mut self) {
+        if self.start > 0 {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+    }
+}
+
+/// Outbound frame queue with partial-write tracking.
+///
+/// Frames are queued in full (length prefix included) and drained by
+/// [`SessionEncoder::flush_into`], which writes as much as the sink
+/// accepts and resumes mid-frame on the next readiness event.
+#[derive(Debug, Default)]
+pub struct SessionEncoder {
+    /// Complete frames; the front one may be partially written.
+    queue: VecDeque<Vec<u8>>,
+    /// Bytes of the front frame already written.
+    offset: usize,
+    /// Total unwritten bytes across the queue.
+    pending: usize,
+}
+
+impl SessionEncoder {
+    /// Fresh encoder with nothing queued.
+    pub fn new() -> SessionEncoder {
+        SessionEncoder::default()
+    }
+
+    /// Queue one message as a frame; returns the frame's full wire
+    /// footprint (payload + length prefix) for traffic accounting.
+    pub fn queue_message(&mut self, msg: &Message) -> u64 {
+        self.queue_payload(&msg.encode())
+    }
+
+    /// Queue one pre-encoded payload as a frame (the length prefix is
+    /// added here); returns the frame's full wire footprint.  Payloads
+    /// above [`MAX_FRAME_BYTES`] are a caller bug — servers only queue
+    /// payloads they themselves encoded under the limit.
+    pub fn queue_payload(&mut self, payload: &[u8]) -> u64 {
+        debug_assert!(payload.len() as u64 <= MAX_FRAME_BYTES);
+        let mut frame = Vec::with_capacity(payload.len() + 4);
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(payload);
+        let n = frame.len();
+        self.pending += n;
+        self.queue.push_back(frame);
+        n as u64
+    }
+
+    /// `true` when every queued byte has been written.
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Bytes queued but not yet accepted by the sink.
+    pub fn pending_bytes(&self) -> usize {
+        self.pending
+    }
+
+    /// Write as much as `w` accepts right now; a `WouldBlock` stops
+    /// the drain without error (the remainder is retried on the next
+    /// readiness event).  Returns the bytes written by this call.
+    pub fn flush_into<W: Write>(&mut self, w: &mut W) -> io::Result<usize> {
+        let mut total = 0;
+        loop {
+            let (front_len, wrote) = {
+                let Some(front) = self.queue.front() else { break };
+                (front.len(), w.write(&front[self.offset..]))
+            };
+            match wrote {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::WriteZero,
+                        "sink accepted no bytes",
+                    ));
+                }
+                Ok(n) => {
+                    total += n;
+                    self.offset += n;
+                    self.pending -= n;
+                    if self.offset == front_len {
+                        self.queue.pop_front();
+                        self.offset = 0;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::testutil::arbitrary_messages;
+    use crate::rpc::write_frame;
+    use crate::util::proptest::forall;
+    use crate::util::Rng;
+
+    /// Encode `msgs` with the blocking codec into one contiguous byte
+    /// stream (the exact bytes a `Transport` would put on the wire).
+    fn blocking_stream(msgs: &[Message]) -> Vec<u8> {
+        let mut stream = Vec::new();
+        for m in msgs {
+            write_frame(&mut stream, m).unwrap();
+        }
+        stream
+    }
+
+    /// Split `stream` into random chunks: mostly tiny (down to one
+    /// byte, so length prefixes get split), sometimes large (so frames
+    /// get coalesced).
+    fn random_chunks(rng: &mut Rng, stream: &[u8]) -> Vec<Vec<u8>> {
+        let mut chunks = Vec::new();
+        let mut pos = 0;
+        while pos < stream.len() {
+            let remaining = stream.len() - pos;
+            let n = if rng.gen_bool(0.4) {
+                1
+            } else {
+                1 + rng.gen_range(remaining.min(96))
+            };
+            chunks.push(stream[pos..pos + n].to_vec());
+            pos += n;
+        }
+        chunks
+    }
+
+    /// Property (the tentpole's decoder guarantee): feeding the
+    /// blocking codec's byte stream through [`SessionDecoder`] under
+    /// arbitrary chunk splits yields exactly the blocking codec's
+    /// payloads, byte for byte, for every v2/v3 frame type.
+    #[test]
+    fn prop_decoder_matches_blocking_codec_under_any_chunking() {
+        forall("session-decode-chunked", 48, |rng| {
+            let msgs = arbitrary_messages(rng);
+            let expected: Vec<Vec<u8>> =
+                msgs.iter().map(Message::encode).collect();
+            let stream = blocking_stream(&msgs);
+            let mut dec = SessionDecoder::new();
+            let mut got: Vec<Vec<u8>> = Vec::new();
+            for chunk in random_chunks(rng, &stream) {
+                dec.feed(&chunk);
+                while let Some(payload) = dec.next_frame().unwrap() {
+                    got.push(payload);
+                }
+            }
+            assert_eq!(got, expected, "payload mismatch after chunking");
+            assert_eq!(dec.buffered(), 0, "bytes left over");
+            // and every recovered payload still decodes canonically
+            for payload in &got {
+                let msg = Message::decode(payload).unwrap();
+                assert_eq!(&msg.encode(), payload);
+            }
+        });
+    }
+
+    /// Property: draining [`SessionEncoder`] through a sink that
+    /// accepts only a few bytes at a time (and interleaves spurious
+    /// `WouldBlock`s) reproduces the blocking codec's byte stream
+    /// exactly.
+    #[test]
+    fn prop_encoder_matches_blocking_codec_under_short_writes() {
+        struct ShortWriter {
+            out: Vec<u8>,
+            rng: Rng,
+        }
+        impl std::io::Write for ShortWriter {
+            fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+                if self.rng.gen_bool(0.25) {
+                    return Err(io::Error::new(
+                        io::ErrorKind::WouldBlock,
+                        "not ready",
+                    ));
+                }
+                let cap = buf.len().min(7);
+                let n = 1 + self.rng.gen_range(cap);
+                self.out.extend_from_slice(&buf[..n]);
+                Ok(n)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        forall("session-encode-short-writes", 32, |rng| {
+            let msgs = arbitrary_messages(rng);
+            let expected = blocking_stream(&msgs);
+            let mut enc = SessionEncoder::new();
+            let mut queued = 0u64;
+            for m in &msgs {
+                queued += enc.queue_message(m);
+            }
+            assert_eq!(queued as usize, enc.pending_bytes());
+            let mut w = ShortWriter {
+                out: Vec::new(),
+                rng: rng.fork(),
+            };
+            while !enc.is_empty() {
+                enc.flush_into(&mut w).unwrap();
+            }
+            assert_eq!(enc.pending_bytes(), 0);
+            assert_eq!(w.out, expected, "wire bytes differ");
+        });
+    }
+
+    /// A length prefix split across feeds decodes once completed.
+    #[test]
+    fn split_length_prefix_is_reassembled() {
+        let msg = Message::HeartbeatAck;
+        let mut stream = Vec::new();
+        write_frame(&mut stream, &msg).unwrap();
+        let mut dec = SessionDecoder::new();
+        dec.feed(&stream[..2]); // half the prefix
+        assert!(dec.next_frame().unwrap().is_none());
+        dec.feed(&stream[2..4]); // prefix complete, no body yet
+        assert!(dec.next_frame().unwrap().is_none());
+        dec.feed(&stream[4..]);
+        let payload = dec.next_frame().unwrap().unwrap();
+        assert_eq!(payload, msg.encode());
+        assert!(dec.next_frame().unwrap().is_none());
+    }
+
+    /// Two frames arriving in one chunk are both extracted.
+    #[test]
+    fn coalesced_frames_split_correctly() {
+        let a = Message::LeaveAck;
+        let b = Message::NoTask { done: true };
+        let mut stream = Vec::new();
+        write_frame(&mut stream, &a).unwrap();
+        write_frame(&mut stream, &b).unwrap();
+        let mut dec = SessionDecoder::new();
+        dec.feed(&stream);
+        assert_eq!(dec.next_frame().unwrap().unwrap(), a.encode());
+        assert_eq!(dec.next_frame().unwrap().unwrap(), b.encode());
+        assert!(dec.next_frame().unwrap().is_none());
+        assert_eq!(dec.buffered(), 0);
+    }
+
+    /// An oversized length header is rejected before any body bytes
+    /// are buffered — the reactor hangs up on such a peer.
+    #[test]
+    fn oversized_header_rejected_without_buffering() {
+        let mut dec = SessionDecoder::new();
+        dec.feed(&[0xFF, 0xFF, 0xFF, 0xFF]);
+        assert!(matches!(
+            dec.next_frame(),
+            Err(WireError::FrameTooLarge(_))
+        ));
+    }
+
+    /// Partial writes resume exactly where they stopped.
+    #[test]
+    fn partial_write_resumes_mid_frame() {
+        struct OneByte(Vec<u8>);
+        impl std::io::Write for OneByte {
+            fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+                self.0.push(buf[0]);
+                Ok(1)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let msg = Message::NoTask { done: false };
+        let mut enc = SessionEncoder::new();
+        let n = enc.queue_message(&msg);
+        assert_eq!(n as usize, enc.pending_bytes());
+        let mut w = OneByte(Vec::new());
+        while !enc.is_empty() {
+            enc.flush_into(&mut w).unwrap();
+        }
+        let mut expected = Vec::new();
+        write_frame(&mut expected, &msg).unwrap();
+        assert_eq!(w.0, expected);
+    }
+}

@@ -3,6 +3,11 @@
 //! Wraps the in-process [`DataService`] store behind a socket loop:
 //! match services connect, send [`Message::FetchPartition`], and receive
 //! the partition payload (entity ids + precomputed match features).
+//! Since PR 3 the serving side runs on the readiness-driven
+//! [`crate::net::reactor`] — one thread per server, frames decoded
+//! incrementally from arbitrary read chunks, multi-megabyte partition
+//! replies buffered across partial writes — so hundreds of match
+//! workers no longer cost one blocking OS thread each.
 //!
 //! A server runs in one of two roles:
 //!
@@ -25,13 +30,14 @@
 //!   written to the socket**, frames included, per server — so a
 //!   replicated run reports per-replica byte accounting.
 
+use crate::net::reactor::{Action, ConnId, FrameHandler, Reactor};
 use crate::net::TrafficStats;
 use crate::partition::PartitionId;
+use crate::rpc::session::SessionEncoder;
 use crate::rpc::{encode_partition_message, Message, Transport};
 use crate::store::DataService;
-use std::collections::HashMap;
-use std::io;
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::collections::{HashMap, HashSet};
+use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -62,7 +68,8 @@ enum Served {
 struct DataShared {
     backing: Backing,
     wire: TrafficStats,
-    shutdown: AtomicBool,
+    /// Shared with the reactor thread, which exits when it flips.
+    shutdown: Arc<AtomicBool>,
     /// Replica: the initial sync stream completed.  Primaries are
     /// always "synced".
     synced: AtomicBool,
@@ -201,19 +208,24 @@ impl DataServiceServer {
     ) -> anyhow::Result<DataServiceServer> {
         let listener = TcpListener::bind(bind)?;
         let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
         let shared = Arc::new(DataShared {
             backing,
             wire: TrafficStats::new(),
-            shutdown: AtomicBool::new(false),
+            shutdown: shutdown.clone(),
             synced: AtomicBool::new(synced),
             sync_started: AtomicBool::new(false),
             upstream_lost: AtomicBool::new(false),
             encoded: Mutex::new(HashMap::new()),
         });
-        let accept_shared = shared.clone();
-        std::thread::Builder::new()
-            .name("pem-data-accept".into())
-            .spawn(move || accept_loop(listener, accept_shared))?;
+        let reactor = Reactor::new(
+            listener,
+            DataHandler {
+                shared: shared.clone(),
+            },
+            shutdown,
+        )?;
+        reactor.spawn("pem-data-reactor")?;
         Ok(DataServiceServer { addr, shared })
     }
 
@@ -286,77 +298,86 @@ impl DataServiceServer {
         self.shared.wire.total_messages()
     }
 
-    /// Stop accepting connections.  Existing connections drain on their
-    /// own when clients disconnect.
+    /// Stop the server: the reactor exits at its next tick and drops
+    /// every open connection, unblocking clients with an I/O error.
     pub fn shutdown(&self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
-        // wake the blocking accept with a throwaway connection
-        let _ = TcpStream::connect_timeout(
-            &self.addr,
-            Duration::from_millis(200),
-        );
     }
 }
 
-fn accept_loop(listener: TcpListener, shared: Arc<DataShared>) {
-    loop {
-        let Ok((stream, _)) = listener.accept() else { break };
-        if shared.shutdown.load(Ordering::SeqCst) {
-            break;
-        }
-        let conn_shared = shared.clone();
-        let _ = std::thread::Builder::new()
-            .name("pem-data-conn".into())
-            .spawn(move || handle_conn(stream, conn_shared));
-    }
+/// The reactor-driven connection handler: one instance serves every
+/// fetch and replication connection of this server.
+struct DataHandler {
+    shared: Arc<DataShared>,
 }
 
-fn handle_conn(stream: TcpStream, shared: Arc<DataShared>) {
-    let Ok(mut t) = Transport::from_stream(stream) else {
-        return;
-    };
-    // connection lives until the client disconnects (Err on recv)
-    while let Ok(msg) = t.recv() {
-        if shared.shutdown.load(Ordering::SeqCst) {
-            break; // shut down: drop the connection, unblocking clients
+impl FrameHandler for DataHandler {
+    fn on_frame(
+        &mut self,
+        _conn: ConnId,
+        out: &mut SessionEncoder,
+        payload: &[u8],
+    ) -> Action {
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            return Action::Close; // drop the connection, unblocking clients
         }
-        let sent = match msg {
-            Message::FetchPartition { id } => match shared.serve(id) {
-                Served::Payload(payload) => t.send_raw_payload(&payload),
-                Served::Redirect(addr) => {
-                    t.send(&Message::Redirect { addr })
-                }
-                Served::Unknown => t.send(&Message::Error {
-                    message: format!("unknown partition {id}"),
-                }),
-            },
-            Message::SyncRequest { have } => {
-                serve_sync(&mut t, &shared, &have)
+        let msg = match Message::decode(payload) {
+            Ok(msg) => msg,
+            Err(e) => {
+                out.queue_message(&Message::Error {
+                    message: format!("undecodable frame: {e}"),
+                });
+                return Action::Close;
             }
-            other => t.send(&Message::Error {
+        };
+        let sent = match msg {
+            Message::FetchPartition { id } => {
+                match self.shared.serve(id) {
+                    Served::Payload(payload) => out.queue_payload(&payload),
+                    Served::Redirect(addr) => {
+                        out.queue_message(&Message::Redirect { addr })
+                    }
+                    Served::Unknown => out.queue_message(&Message::Error {
+                        message: format!("unknown partition {id}"),
+                    }),
+                }
+            }
+            Message::SyncRequest { have } => {
+                queue_sync(&self.shared, out, &have)
+            }
+            other => out.queue_message(&Message::Error {
                 message: format!(
                     "data service got unexpected {}",
                     other.kind()
                 ),
             }),
         };
-        match sent {
-            Ok(n) => shared.wire.record(n),
-            Err(_) => break,
-        }
+        self.shared.wire.record(sent);
+        Action::Continue
     }
 }
 
-/// Push every held partition frame the peer lacks, then `SyncDone`.
-/// Returns the total bytes written (recorded as one traffic entry —
-/// replication is one logical transfer, not thousands of fetches).
-fn serve_sync(
-    t: &mut Transport,
+/// Upper bound on the payload bytes one `SyncRequest` response pushes.
+/// The reactor queues a whole response before the socket drains it, so
+/// an unbounded response would duplicate the entire encoded store in
+/// the connection's outbound buffer (and trip the reactor's
+/// send-buffer cap on very large stores, wedging replication).
+/// Bounding the round keeps peak buffering small; the replica simply
+/// issues another round for the remainder (see [`sync_loop`]).
+const MAX_SYNC_BATCH_BYTES: u64 = 32 * 1024 * 1024;
+
+/// Queue held partition frames the peer lacks — up to
+/// [`MAX_SYNC_BATCH_BYTES`] per round — then `SyncDone`.  Returns the
+/// total bytes queued (recorded as one traffic entry — replication is
+/// one logical transfer, not thousands of fetches).  The reactor's
+/// outbound buffering drains the round across as many writable events
+/// as the socket needs.
+fn queue_sync(
     shared: &DataShared,
+    out: &mut SessionEncoder,
     have: &[PartitionId],
-) -> io::Result<u64> {
-    let have: std::collections::HashSet<PartitionId> =
-        have.iter().copied().collect();
+) -> u64 {
+    let have: HashSet<PartitionId> = have.iter().copied().collect();
     let mut total = 0u64;
     let mut count = 0u32;
     for id in shared.held_ids() {
@@ -366,12 +387,15 @@ fn serve_sync(
         // `encoded_for_sync` can only miss if a concurrent shutdown
         // raced the id listing; skip rather than abort the stream
         if let Some(payload) = shared.encoded_for_sync(id) {
-            total += t.send_raw_payload(&payload)?;
+            total += out.queue_payload(&payload);
             count += 1;
+            if total >= MAX_SYNC_BATCH_BYTES {
+                break; // bounded round: the next round pulls the rest
+            }
         }
     }
-    total += t.send(&Message::SyncDone { count })?;
-    Ok(total)
+    total += out.queue_message(&Message::SyncDone { count });
+    total
 }
 
 /// One [`Message::SyncRequest`] round: ask upstream for everything not
@@ -426,14 +450,22 @@ fn sync_loop(shared: Arc<DataShared>) {
             return;
         }
     };
-    match sync_round(&mut t, &shared) {
-        Ok(_) => shared.synced.store(true, Ordering::SeqCst),
-        Err(e) => {
-            eprintln!("data replica: sync from {upstream} failed: {e:#}");
-            shared.upstream_lost.store(true, Ordering::SeqCst);
-            return;
+    // initial sync: the upstream bounds each round's response, so keep
+    // pulling rounds until one pushes nothing new
+    loop {
+        match sync_round(&mut t, &shared) {
+            Ok(0) => break,
+            Ok(_) => {}
+            Err(e) => {
+                eprintln!(
+                    "data replica: sync from {upstream} failed: {e:#}"
+                );
+                shared.upstream_lost.store(true, Ordering::SeqCst);
+                return;
+            }
         }
     }
+    shared.synced.store(true, Ordering::SeqCst);
     let interval = Duration::from_millis(400);
     let step = Duration::from_millis(20);
     'watch: loop {

@@ -17,22 +17,31 @@
 //! abandon its task and stop heartbeating, so the workflow service
 //! re-queues it (paper §4 failure handling, now on the data plane too).
 //!
-//! The node runs to workflow completion (`NoTask { done: true }`),
-//! then leaves gracefully.  `fail_after_tasks` simulates a crash for
-//! failure-handling tests: after N completions the node abandons its
-//! next assigned task and stops heartbeating, so the workflow service
-//! must detect the failure and re-queue.
+//! With `batch > 1` a worker speaks protocol v3: one
+//! `TaskRequestBatch` reports every task it finished and pulls up to
+//! `batch` new ones — a single control round trip per batch instead of
+//! per task — and, while it chews through the batch, a node-wide
+//! **prefetcher** thread pulls the upcoming tasks' partitions into the
+//! shared cache, overlapping execution with data-plane fetches.
+//!
+//! The node runs to workflow completion (`NoTask { done: true }` /
+//! an empty batch with `done`), then leaves gracefully.
+//! `fail_after_tasks` simulates a crash for failure-handling tests:
+//! after N completions the node abandons its next assigned task and
+//! stops heartbeating, so the workflow service must detect the failure
+//! and re-queue.
 
 use crate::coordinator::scheduler::ServiceId;
-use crate::partition::PartitionId;
-use crate::rpc::{Message, Transport, PROTOCOL_VERSION};
+use crate::partition::{MatchTask, PartitionId};
+use crate::rpc::{CompletedTask, Message, Transport, PROTOCOL_VERSION};
 use crate::service::replica::ReplicaSelector;
 use crate::store::PartitionData;
 use crate::worker::{task_comparisons, PartitionCache, TaskExecutor};
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -53,6 +62,13 @@ pub struct MatchNodeConfig {
     /// Partition-cache capacity `c` shared by the node's workers
     /// (0 disables caching).
     pub cache_capacity: usize,
+    /// Tasks requested per control-plane round trip (protocol v3
+    /// batched assignment).  `1` keeps the classic one-task
+    /// `TaskRequest`/`Complete` flow; `k > 1` makes each worker pull
+    /// up to `k` tasks per `TaskRequestBatch` with its completion
+    /// reports piggybacked, and (with a cache) enables the prefetcher
+    /// that overlaps execution with partition fetches.
+    pub batch: usize,
     /// Liveness signal period; must be well below the workflow
     /// service's heartbeat timeout.
     pub heartbeat_interval: Duration,
@@ -75,6 +91,7 @@ impl MatchNodeConfig {
             name: "match-node".into(),
             threads: 1,
             cache_capacity: 0,
+            batch: 1,
             heartbeat_interval: Duration::from_millis(50),
             poll_interval: Duration::from_millis(2),
             io_timeout: Duration::from_secs(30),
@@ -197,32 +214,51 @@ pub fn run_match_node(
     let dead = AtomicBool::new(false); // crash simulation tripped
     let done = AtomicBool::new(false); // workflow finished
     let completed_total = AtomicUsize::new(0);
+    // batch-mode prefetch channel: workers push the partitions of
+    // their *queued* tasks, the prefetcher warms the shared cache
+    let (prefetch_tx, prefetch_rx) =
+        std::sync::mpsc::channel::<PartitionId>();
+    let use_prefetch = cfg.batch > 1 && cfg.cache_capacity > 0;
 
     let worker_results: Vec<Result<WorkerStats>> = std::thread::scope(|s| {
         // heartbeat thread: its own connection, stops on done/dead
         // (joined implicitly at scope exit, right after `done` is set)
         let _heartbeat = s.spawn(|| heartbeat_loop(cfg, service, &done, &dead));
 
+        if use_prefetch {
+            let pcache = &cache;
+            let pselector = &selector;
+            let pdead = &dead;
+            s.spawn(move || {
+                prefetch_loop(cfg, prefetch_rx, pselector, pcache, pdead)
+            });
+        } else {
+            // no receiver: worker sends become cheap no-op errors
+            drop(prefetch_rx);
+        }
+
         let handles: Vec<_> = (0..cfg.threads)
             .map(|_| {
-                let executor = &executor;
-                let cache = &cache;
-                let selector = &selector;
-                let dead = &dead;
-                let completed_total = &completed_total;
+                let ctx = WorkerCtx {
+                    cfg,
+                    service,
+                    executor: executor.as_ref(),
+                    cache: &cache,
+                    selector: &selector,
+                    completed_total: &completed_total,
+                    dead: &dead,
+                };
+                let tx = prefetch_tx.clone();
                 s.spawn(move || {
-                    worker_loop(
-                        cfg,
-                        service,
-                        executor.as_ref(),
-                        cache,
-                        selector,
-                        completed_total,
-                        dead,
-                    )
+                    if ctx.cfg.batch > 1 {
+                        worker_loop_batched(ctx, &tx)
+                    } else {
+                        worker_loop(ctx)
+                    }
                 })
             })
             .collect();
+        drop(prefetch_tx);
         let results = handles
             .into_iter()
             .map(|h| h.join().expect("match worker panicked"))
@@ -274,8 +310,14 @@ fn heartbeat_loop(
         if done.load(Ordering::SeqCst) || dead.load(Ordering::SeqCst) {
             break;
         }
-        if t.request(&Message::Heartbeat { service }).is_err() {
-            break; // coordinator gone; workers will notice on their own
+        match t.request(&Message::Heartbeat { service }) {
+            // fenced: the coordinator declared this node dead — stop
+            // heartbeating for good (the workers hit the same wall and
+            // wind the node down)
+            Ok(Message::Error { .. }) => break,
+            Ok(_) => {}
+            // coordinator gone; workers will notice on their own
+            Err(_) => break,
         }
         let mut slept = Duration::ZERO;
         while slept < cfg.heartbeat_interval {
@@ -288,15 +330,82 @@ fn heartbeat_loop(
     }
 }
 
-fn worker_loop(
-    cfg: &MatchNodeConfig,
+/// Everything a worker (or the prefetcher) needs, bundled so the loop
+/// signatures stay readable.
+#[derive(Clone, Copy)]
+struct WorkerCtx<'a> {
+    cfg: &'a MatchNodeConfig,
     service: ServiceId,
-    executor: &dyn TaskExecutor,
-    cache: &PartitionCache,
-    selector: &ReplicaSelector,
-    completed_total: &AtomicUsize,
-    dead: &AtomicBool,
-) -> Result<WorkerStats> {
+    executor: &'a dyn TaskExecutor,
+    cache: &'a PartitionCache,
+    selector: &'a ReplicaSelector,
+    completed_total: &'a AtomicUsize,
+    dead: &'a AtomicBool,
+}
+
+/// Fetch, execute and account one assigned task — the core both
+/// worker loops share.  A fetch failure sets `dead` (we hold an
+/// assigned task we can no longer run: the whole node must go down,
+/// stop heartbeating, and let the workflow service's failure detector
+/// re-queue it, paper §4) and returns the error.
+fn execute_task(
+    ctx: WorkerCtx<'_>,
+    conns: &mut HashMap<usize, Transport>,
+    stats: &mut WorkerStats,
+    task: &MatchTask,
+) -> Result<CompletedTask> {
+    let t0 = Instant::now();
+    let intra = task.left == task.right;
+    let fetched = (|| {
+        let left =
+            fetch(ctx.cfg, conns, ctx.selector, ctx.cache, task.left)?;
+        let right = if intra {
+            left.clone()
+        } else {
+            fetch(ctx.cfg, conns, ctx.selector, ctx.cache, task.right)?
+        };
+        Ok::<_, anyhow::Error>((left, right))
+    })();
+    let (left, right) = match fetched {
+        Ok(pair) => pair,
+        Err(e) => {
+            ctx.dead.store(true, Ordering::SeqCst);
+            return Err(e.context(format!(
+                "fetch for task {} failed; abandoning node",
+                task.id
+            )));
+        }
+    };
+    let found = ctx.executor.execute(&left, &right, intra);
+    let n_cmp = task_comparisons(task, left.len(), right.len());
+    stats.busy_ns += t0.elapsed().as_nanos() as u64;
+    stats.completed += 1;
+    stats.comparisons += n_cmp;
+    ctx.completed_total.fetch_add(1, Ordering::SeqCst);
+    Ok(CompletedTask {
+        task_id: task.id,
+        comparisons: n_cmp,
+        matches: found,
+    })
+}
+
+/// The crash-simulation hook shared by both worker loops: `true` when
+/// this worker must abandon its work and take the node down.
+fn simulated_crash_tripped(ctx: WorkerCtx<'_>) -> bool {
+    match ctx.cfg.fail_after_tasks {
+        Some(limit)
+            if ctx.completed_total.load(Ordering::SeqCst) >= limit =>
+        {
+            ctx.dead.store(true, Ordering::SeqCst);
+            true
+        }
+        _ => false,
+    }
+}
+
+fn worker_loop(ctx: WorkerCtx<'_>) -> Result<WorkerStats> {
+    let cfg = ctx.cfg;
+    let service = ctx.service;
     let mut wf =
         Transport::connect(cfg.workflow_addr.as_str(), cfg.io_timeout)?;
     // per-replica data connections, opened lazily on first use
@@ -304,7 +413,7 @@ fn worker_loop(
     let mut stats = WorkerStats::default();
     let mut outgoing = Message::TaskRequest { service };
     loop {
-        if dead.load(Ordering::SeqCst) {
+        if ctx.dead.load(Ordering::SeqCst) {
             break; // node-wide simulated crash: drop everything
         }
         let reply = match wf.request(&outgoing) {
@@ -317,55 +426,17 @@ fn worker_loop(
         };
         match reply {
             Message::TaskAssign { task } => {
-                if let Some(limit) = cfg.fail_after_tasks {
-                    if completed_total.load(Ordering::SeqCst) >= limit {
-                        // simulated crash: abandon the in-flight task,
-                        // stop heartbeating — the workflow service must
-                        // detect this and re-queue (paper §4)
-                        dead.store(true, Ordering::SeqCst);
-                        break;
-                    }
+                if simulated_crash_tripped(ctx) {
+                    break; // the in-flight task is abandoned, re-queued
                 }
-                let t0 = Instant::now();
-                let intra = task.left == task.right;
-                let fetched = (|| {
-                    let left =
-                        fetch(cfg, &mut conns, selector, cache, task.left)?;
-                    let right = if intra {
-                        left.clone()
-                    } else {
-                        fetch(cfg, &mut conns, selector, cache, task.right)?
-                    };
-                    Ok::<_, anyhow::Error>((left, right))
-                })();
-                let (left, right) = match fetched {
-                    Ok(pair) => pair,
-                    Err(e) => {
-                        // we hold an assigned task we can no longer run:
-                        // take the whole node down (stop heartbeating) so
-                        // the workflow service's failure detector re-queues
-                        // it (paper §4) instead of it hanging in-flight
-                        // while sibling workers poll forever
-                        dead.store(true, Ordering::SeqCst);
-                        return Err(e.context(format!(
-                            "fetch for task {} failed; abandoning node",
-                            task.id
-                        )));
-                    }
-                };
-                let found = executor.execute(&left, &right, intra);
-                let n_cmp =
-                    task_comparisons(&task, left.len(), right.len());
-                stats.busy_ns += t0.elapsed().as_nanos() as u64;
-                stats.completed += 1;
-                stats.comparisons += n_cmp;
-                completed_total.fetch_add(1, Ordering::SeqCst);
+                let report =
+                    execute_task(ctx, &mut conns, &mut stats, &task)?;
                 outgoing = Message::Complete {
                     service,
-                    task_id: task.id,
-                    comparisons: n_cmp,
-                    cached: cache.status(),
-                    matches: found,
+                    task_id: report.task_id,
+                    comparisons: report.comparisons,
+                    cached: ctx.cache.status(),
+                    matches: report.matches,
                 };
             }
             Message::NoTask { done: true } => break,
@@ -375,16 +446,152 @@ fn worker_loop(
                 outgoing = Message::TaskRequest { service };
             }
             Message::Error { message } => {
-                dead.store(true, Ordering::SeqCst);
+                ctx.dead.store(true, Ordering::SeqCst);
                 bail!("workflow service error: {message}")
             }
             other => {
-                dead.store(true, Ordering::SeqCst);
+                ctx.dead.store(true, Ordering::SeqCst);
                 bail!("unexpected {} from workflow service", other.kind())
             }
         }
     }
     Ok(stats)
+}
+
+/// The protocol-v3 worker: pull up to `cfg.batch` tasks per round
+/// trip, report the whole previous batch's completions on the same
+/// frame, and feed the prefetcher the queued tasks' partitions so the
+/// data plane is warmed while the current task executes.
+fn worker_loop_batched(
+    ctx: WorkerCtx<'_>,
+    prefetch: &Sender<PartitionId>,
+) -> Result<WorkerStats> {
+    let cfg = ctx.cfg;
+    let service = ctx.service;
+    let mut wf =
+        Transport::connect(cfg.workflow_addr.as_str(), cfg.io_timeout)?;
+    let mut conns: HashMap<usize, Transport> = HashMap::new();
+    let mut stats = WorkerStats::default();
+    let mut queue: VecDeque<MatchTask> = VecDeque::new();
+    let mut completed: Vec<CompletedTask> = Vec::new();
+    let max = cfg.batch.max(1) as u32;
+    loop {
+        if ctx.dead.load(Ordering::SeqCst) {
+            break; // node-wide simulated crash: drop everything
+        }
+        if queue.is_empty() {
+            // one round trip: report everything finished, pull the
+            // next batch
+            let request = Message::TaskRequestBatch {
+                service,
+                max,
+                cached: ctx.cache.status(),
+                completed: std::mem::take(&mut completed),
+            };
+            let reply = match wf.request(&request) {
+                Ok(r) => r,
+                Err(_) => {
+                    // coordinator went away — treat as end of workflow
+                    stats.lost_coordinator = true;
+                    break;
+                }
+            };
+            match reply {
+                Message::TaskAssignBatch { done, tasks } => {
+                    if tasks.is_empty() {
+                        if done {
+                            break;
+                        }
+                        // tasks in flight elsewhere may be re-queued
+                        std::thread::sleep(cfg.poll_interval);
+                        continue;
+                    }
+                    // warm the cache for everything beyond the first
+                    // task while we execute it (send errors just mean
+                    // the prefetcher is off — cache disabled)
+                    for t in tasks.iter().skip(1) {
+                        for p in t.needed_partitions() {
+                            let _ = prefetch.send(p);
+                        }
+                    }
+                    queue.extend(tasks);
+                }
+                Message::Error { message } => {
+                    ctx.dead.store(true, Ordering::SeqCst);
+                    bail!("workflow service error: {message}")
+                }
+                other => {
+                    ctx.dead.store(true, Ordering::SeqCst);
+                    bail!(
+                        "unexpected {} from workflow service",
+                        other.kind()
+                    )
+                }
+            }
+            continue;
+        }
+        let task = queue.pop_front().expect("queue checked non-empty");
+        if simulated_crash_tripped(ctx) {
+            // the whole queued batch and the unsent completion reports
+            // are abandoned; the failure detector re-queues every one
+            break;
+        }
+        let report = execute_task(ctx, &mut conns, &mut stats, &task)?;
+        completed.push(report);
+    }
+    Ok(stats)
+}
+
+/// Node-wide prefetcher (batch mode with a cache): receives partition
+/// ids of queued tasks and pulls the missing ones into the shared
+/// cache over its own data-plane connections, so a worker's next task
+/// usually starts with both partitions warm.  Failures are left for
+/// the workers' full fetch logic (failover, node teardown) — the
+/// prefetcher never kills anything, it only warms.
+fn prefetch_loop(
+    cfg: &MatchNodeConfig,
+    jobs: Receiver<PartitionId>,
+    selector: &ReplicaSelector,
+    cache: &PartitionCache,
+    dead: &AtomicBool,
+) {
+    let mut conns: HashMap<usize, Transport> = HashMap::new();
+    loop {
+        let id = match jobs.recv_timeout(Duration::from_millis(50)) {
+            Ok(id) => id,
+            Err(RecvTimeoutError::Timeout) => {
+                if dead.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
+        };
+        if dead.load(Ordering::SeqCst) {
+            return;
+        }
+        if cache.contains(id) {
+            continue; // already warm (contains() skips hit accounting)
+        }
+        let Some(idx) = selector.select(id) else {
+            return; // every replica dead — nothing left to warm from
+        };
+        selector.begin_fetch(idx);
+        let outcome = fetch_once(cfg, &mut conns, selector, idx, id);
+        selector.finish_fetch(idx);
+        match outcome {
+            Ok(FetchReply::Data(data)) => {
+                selector.record_locality(id, idx);
+                cache.put(id, data);
+            }
+            // redirects/denials/conn errors: drop the connection and
+            // leave the partition for the worker's fetch path
+            Ok(_) => {}
+            Err(_) => {
+                conns.remove(&idx);
+            }
+        }
+    }
 }
 
 /// What one fetch attempt produced at the protocol level.
@@ -584,6 +791,61 @@ mod tests {
         assert_eq!(wf_report.completed_tasks, n_tasks);
         assert_eq!(wf_report.comparisons, 120 * 119 / 2);
         assert!(data_srv.wire_bytes() > 0);
+        data_srv.shutdown();
+    }
+
+    /// Batch mode end to end on one node: the workflow completes with
+    /// the same totals as the classic flow, while the control plane
+    /// sees one batch request per ~`batch` tasks instead of one
+    /// `Complete` per task.
+    #[test]
+    fn batched_node_completes_workflow_with_fewer_round_trips() {
+        let data = GeneratorConfig::tiny().with_entities(240).generate();
+        let ids: Vec<EntityId> =
+            data.dataset.entities.iter().map(|e| e.id).collect();
+        let parts = partition_size_based(&ids, 40);
+        let tasks = generate_tasks(&parts);
+        let n_tasks = tasks.len();
+        assert!(n_tasks >= 20, "need enough tasks for the comparison");
+        let store =
+            Arc::new(DataService::build(&data.dataset, &parts));
+
+        let data_srv =
+            DataServiceServer::start(store, "127.0.0.1:0").unwrap();
+        let wf_srv = WorkflowServiceServer::start(
+            tasks,
+            WorkflowServerConfig::default(),
+            "127.0.0.1:0",
+        )
+        .unwrap();
+
+        let mut cfg = MatchNodeConfig::new(
+            wf_srv.addr().to_string(),
+            data_srv.addr().to_string(),
+        );
+        cfg.threads = 2;
+        cfg.cache_capacity = 4;
+        cfg.batch = 4;
+        // a sluggish drain poll keeps the pull count comparison honest
+        cfg.poll_interval = Duration::from_millis(25);
+        let exec: Arc<dyn TaskExecutor> = Arc::new(RustExecutor::new(
+            MatchStrategy::new(StrategyKind::Wam),
+        ));
+        let report = run_match_node(&cfg, exec).unwrap();
+
+        assert_eq!(report.tasks_completed as usize, n_tasks);
+        assert!(!report.crashed);
+        assert!(wf_srv.wait_done(Duration::from_secs(1)));
+        let wf_report = wf_srv.finish();
+        assert_eq!(wf_report.completed_tasks, n_tasks);
+        assert_eq!(wf_report.comparisons, 240 * 239 / 2);
+        assert!(wf_report.batch_requests > 0, "batched path used");
+        assert!(
+            wf_report.batch_requests < n_tasks as u64,
+            "fewer pulls ({}) than tasks ({n_tasks})",
+            wf_report.batch_requests
+        );
+        assert_eq!(wf_report.stale_completions, 0);
         data_srv.shutdown();
     }
 

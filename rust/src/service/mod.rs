@@ -3,9 +3,14 @@
 //! The seed modeled the workflow / data / match services of the paper's
 //! distributed infrastructure as in-process objects plus a communication
 //! *cost model* ([`crate::net`]).  This module makes them actual TCP
-//! servers speaking the [`crate::rpc`] wire protocol, one blocking OS
-//! thread per connection — the same architecture as the paper's RMI
-//! deployment:
+//! servers speaking the [`crate::rpc`] wire protocol.  Since PR 3 both
+//! servers run on the readiness-driven [`crate::net::reactor`] — one
+//! thread per *server* over nonblocking sockets, frames decoded
+//! incrementally by [`crate::rpc::session`] — instead of the paper-era
+//! one-blocking-thread-per-connection model, so a coordinator scales
+//! past a few dozen match workers; and task assignment is **batched**
+//! (protocol v3): a node pulls up to `batch` tasks per round trip with
+//! its completion reports piggybacked on the same frame:
 //!
 //! * [`WorkflowServiceServer`] — owns the central task list and the
 //!   *same* [`crate::coordinator::Scheduler`] the in-process engines

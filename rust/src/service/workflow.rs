@@ -15,25 +15,45 @@
 //!   `NoTask {done}` when the open list is empty), with completion
 //!   reports carrying the piggybacked cache status that feeds
 //!   affinity-based scheduling;
+//! * `TaskRequestBatch` (protocol v3) → up to `max` assignments in one
+//!   `TaskAssignBatch` reply, with every completion since the node's
+//!   last pull piggybacked on the request — one control round trip per
+//!   batch instead of per task;
 //! * `Heartbeat` → liveness; a monitor thread fails services whose
 //!   heartbeats stop arriving within the configured timeout and
 //!   re-queues their in-flight tasks (paper §4 failure handling);
 //! * `Leave` → graceful departure (in-flight tasks re-queued).
 //!
-//! Stale completions — a service presumed dead that reports anyway —
-//! are dropped via [`Scheduler::try_report_complete`] instead of
-//! crashing the coordinator.
+//! Since PR 3 the server runs on the readiness-driven
+//! [`crate::net::reactor`]: **one thread serves every connection**,
+//! decoding frames incrementally from arbitrary read chunks
+//! ([`crate::rpc::session`]) instead of burning one blocking OS thread
+//! per match worker.
+//!
+//! A service the failure detector has declared dead is *fenced*: its
+//! pulls, completions and heartbeats are answered with `Error` (the
+//! node treats that as fatal and must re-join for a fresh
+//! [`ServiceId`]), and [`Scheduler::try_report_complete`]'s generation
+//! check drops its stragglers — a resurrected zombie can no longer
+//! double-complete a re-queued task.
 
 use crate::coordinator::scheduler::{Policy, Scheduler, ServiceId};
 use crate::model::Correspondence;
+use crate::net::reactor::{Action, ConnId, FrameHandler, Reactor};
 use crate::net::TrafficStats;
 use crate::partition::MatchTask;
-use crate::rpc::{Message, Transport, PROTOCOL_VERSION};
+use crate::rpc::session::SessionEncoder;
+use crate::rpc::{CompletedTask, Message, PROTOCOL_VERSION};
 use std::collections::HashMap;
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Server-side cap on one batch assignment, whatever the node asks
+/// for (a hostile `max` must not drain the whole open list into one
+/// slow worker).
+const MAX_ASSIGN_BATCH: usize = 256;
 
 /// Workflow-server tuning.
 #[derive(Clone, Copy, Debug)]
@@ -69,6 +89,16 @@ struct WfShared {
     /// inside the reply to the same frame, so this ≈ the paper's
     /// "2 messages per task" plus heartbeats and membership).
     control_messages: AtomicU64,
+    /// Heartbeat frames received (subset of `control_messages`;
+    /// subtracting them isolates the per-task coordination cost).
+    heartbeats: AtomicU64,
+    /// v3 batch pulls received ([`Message::TaskRequestBatch`]).
+    batch_requests: AtomicU64,
+    /// Pulls that carried no completion report (initial requests and
+    /// drain-time polls) — the round trips whose *only* purpose was
+    /// obtaining work.  With completion piggybacking these are the
+    /// marginal assignment cost, near zero per task.
+    assignment_pulls: AtomicU64,
     /// Control-plane wire bytes sent (replies).
     traffic: TrafficStats,
     requeued_tasks: AtomicU64,
@@ -77,20 +107,23 @@ struct WfShared {
     version_rejections: AtomicU64,
     /// Data-plane replica directory, announcement order, deduplicated.
     replicas: Mutex<Vec<String>>,
-    shutdown: AtomicBool,
+    shutdown: Arc<AtomicBool>,
     heartbeat_timeout: Duration,
 }
 
 impl WfShared {
-    fn touch(&self, service: ServiceId) {
-        let mut members = self.members.lock().unwrap();
-        members
-            .entry(service.0)
-            .and_modify(|m| m.last_seen = Instant::now())
-            .or_insert_with(|| Member {
-                name: format!("service-{}(rejoined)", service.0),
-                last_seen: Instant::now(),
-            });
+    /// Refresh the liveness timestamp of a *member*.  Returns `false`
+    /// for services that are not members (never joined, failed by the
+    /// monitor, or departed) — unlike the pre-PR-3 code this never
+    /// resurrects a membership, so a zombie cannot silently rejoin.
+    fn touch(&self, service: ServiceId) -> bool {
+        match self.members.lock().unwrap().get_mut(&service.0) {
+            Some(m) => {
+                m.last_seen = Instant::now();
+                true
+            }
+            None => false,
+        }
     }
 
     /// Reply to a pull (TaskRequest or Complete): the next assignment.
@@ -101,6 +134,18 @@ impl WfShared {
             None => Message::NoTask {
                 done: sched.is_done(),
             },
+        }
+    }
+
+    /// Reply to a fenced (non-member) service: a clear error telling
+    /// it to re-join.  Nodes treat workflow `Error`s as fatal.
+    fn fenced(&self, service: ServiceId) -> Message {
+        Message::Error {
+            message: format!(
+                "service {} is not a member (failed by the heartbeat \
+                 monitor or never joined); re-join for a fresh id",
+                service.0
+            ),
         }
     }
 }
@@ -119,13 +164,21 @@ pub struct WorkflowReport {
     pub comparisons: u64,
     /// Control-plane frames received.
     pub control_messages: u64,
+    /// Heartbeat frames received (subset of `control_messages`).
+    pub heartbeats: u64,
+    /// v3 batch pulls received.
+    pub batch_requests: u64,
+    /// Pulls (any version) that carried no completion report — the
+    /// dedicated assignment round trips.
+    pub assignment_pulls: u64,
     /// Control-plane bytes sent over sockets.
     pub control_wire_bytes: u64,
     /// Assignments that hit at least one cached partition.
     pub affinity_assignments: u64,
     /// Tasks re-queued because their service failed or left.
     pub requeued_tasks: u64,
-    /// Completion reports dropped as stale (service presumed dead).
+    /// Completion reports dropped as stale (service presumed dead, or
+    /// task no longer in flight at that service/generation).
     pub stale_completions: u64,
     /// Services that ever joined.
     pub services_joined: usize,
@@ -151,6 +204,7 @@ impl WorkflowServiceServer {
     ) -> anyhow::Result<WorkflowServiceServer> {
         let listener = TcpListener::bind(bind)?;
         let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
         let shared = Arc::new(WfShared {
             sched: Mutex::new(Scheduler::new(tasks, cfg.policy)),
             results: Mutex::new(Vec::new()),
@@ -158,18 +212,25 @@ impl WorkflowServiceServer {
             next_service: AtomicUsize::new(0),
             comparisons: AtomicU64::new(0),
             control_messages: AtomicU64::new(0),
+            heartbeats: AtomicU64::new(0),
+            batch_requests: AtomicU64::new(0),
+            assignment_pulls: AtomicU64::new(0),
             traffic: TrafficStats::new(),
             requeued_tasks: AtomicU64::new(0),
             stale_completions: AtomicU64::new(0),
             version_rejections: AtomicU64::new(0),
             replicas: Mutex::new(Vec::new()),
-            shutdown: AtomicBool::new(false),
+            shutdown: shutdown.clone(),
             heartbeat_timeout: cfg.heartbeat_timeout,
         });
-        let accept_shared = shared.clone();
-        std::thread::Builder::new()
-            .name("pem-workflow-accept".into())
-            .spawn(move || accept_loop(listener, accept_shared))?;
+        let reactor = Reactor::new(
+            listener,
+            WfHandler {
+                shared: shared.clone(),
+            },
+            shutdown,
+        )?;
+        reactor.spawn("pem-workflow-reactor")?;
         let monitor_shared = shared.clone();
         std::thread::Builder::new()
             .name("pem-workflow-monitor".into())
@@ -202,22 +263,17 @@ impl WorkflowServiceServer {
         }
     }
 
-    /// Tear the server down without consuming the handle: stops the
-    /// accept and monitor loops and makes every connection handler drop
-    /// its connection at the next received frame, so match services
-    /// unblock with an I/O error even when the workflow never finished
-    /// (run-timeout path).  Idempotent.
+    /// Tear the server down without consuming the handle: the reactor
+    /// and monitor stop at their next tick and every open connection
+    /// is dropped, so match services unblock with an I/O error even
+    /// when the workflow never finished (run-timeout path).
+    /// Idempotent.
     pub fn abort(&self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
-        let _ = TcpStream::connect_timeout(
-            &self.addr,
-            Duration::from_millis(200),
-        );
     }
 
-    /// Stop the accept and monitor loops and extract the final report.
-    /// Call after [`Self::wait_done`]; open connections drain when the
-    /// match services disconnect.
+    /// Stop the reactor and monitor and extract the final report.
+    /// Call after [`Self::wait_done`].
     pub fn finish(self) -> WorkflowReport {
         self.abort();
         let sched = self.shared.sched.lock().unwrap();
@@ -231,6 +287,15 @@ impl WorkflowServiceServer {
             control_messages: self
                 .shared
                 .control_messages
+                .load(Ordering::Relaxed),
+            heartbeats: self.shared.heartbeats.load(Ordering::Relaxed),
+            batch_requests: self
+                .shared
+                .batch_requests
+                .load(Ordering::Relaxed),
+            assignment_pulls: self
+                .shared
+                .assignment_pulls
                 .load(Ordering::Relaxed),
             control_wire_bytes: self.shared.traffic.total_bytes(),
             affinity_assignments: sched.affinity_assignments,
@@ -249,19 +314,6 @@ impl WorkflowServiceServer {
                 .load(Ordering::Relaxed),
             data_replicas: self.shared.replicas.lock().unwrap().clone(),
         }
-    }
-}
-
-fn accept_loop(listener: TcpListener, shared: Arc<WfShared>) {
-    loop {
-        let Ok((stream, _)) = listener.accept() else { break };
-        if shared.shutdown.load(Ordering::SeqCst) {
-            break;
-        }
-        let conn_shared = shared.clone();
-        let _ = std::thread::Builder::new()
-            .name("pem-workflow-conn".into())
-            .spawn(move || handle_conn(stream, conn_shared));
     }
 }
 
@@ -303,153 +355,246 @@ fn monitor_loop(shared: Arc<WfShared>) {
     }
 }
 
-fn handle_conn(stream: TcpStream, shared: Arc<WfShared>) {
-    let Ok(mut t) = Transport::from_stream(stream) else {
-        return;
-    };
-    while let Ok(msg) = t.recv() {
-        if shared.shutdown.load(Ordering::SeqCst) {
-            // aborted server: drop the connection instead of answering,
-            // so clients stuck in poll loops error out and exit
-            break;
+/// The reactor-driven connection handler: one instance serves every
+/// control-plane connection.
+struct WfHandler {
+    shared: Arc<WfShared>,
+}
+
+impl FrameHandler for WfHandler {
+    fn on_frame(
+        &mut self,
+        _conn: ConnId,
+        out: &mut SessionEncoder,
+        payload: &[u8],
+    ) -> Action {
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            // aborted server: drop the connection instead of
+            // answering, so clients stuck in poll loops error out
+            return Action::Close;
         }
-        shared.control_messages.fetch_add(1, Ordering::Relaxed);
-        let reply = match msg {
-            Message::Join { name, version } => {
-                if version != PROTOCOL_VERSION {
-                    shared
-                        .version_rejections
-                        .fetch_add(1, Ordering::Relaxed);
-                    Message::Error {
-                        message: format!(
-                            "protocol version mismatch: match service \
-                             {name:?} speaks v{version}, this \
-                             coordinator speaks v{PROTOCOL_VERSION} — \
-                             upgrade the older side"
-                        ),
-                    }
-                } else {
-                    let id =
-                        shared.next_service.fetch_add(1, Ordering::SeqCst);
-                    shared.members.lock().unwrap().insert(
-                        id,
-                        Member {
-                            name,
-                            last_seen: Instant::now(),
-                        },
-                    );
-                    shared.sched.lock().unwrap().add_service(ServiceId(id));
-                    Message::JoinAck {
-                        service: ServiceId(id),
-                        version: PROTOCOL_VERSION,
-                        replicas: shared.replicas.lock().unwrap().clone(),
-                    }
-                }
+        let msg = match Message::decode(payload) {
+            Ok(msg) => msg,
+            Err(e) => {
+                // a frame that does not decode means the peer is
+                // corrupt or incompatible: answer once, hang up
+                out.queue_message(&Message::Error {
+                    message: format!("undecodable frame: {e}"),
+                });
+                return Action::Close;
             }
-            Message::ReplicaAnnounce {
-                addr,
-                version,
-                partitions,
-            } => {
-                if version != PROTOCOL_VERSION {
-                    shared
-                        .version_rejections
-                        .fetch_add(1, Ordering::Relaxed);
-                    Message::Error {
-                        message: format!(
-                            "protocol version mismatch: data replica \
-                             {addr} speaks v{version}, this coordinator \
-                             speaks v{PROTOCOL_VERSION} — upgrade the \
-                             older side"
-                        ),
-                    }
-                } else {
-                    let directory = {
-                        let mut dir = shared.replicas.lock().unwrap();
-                        let fresh = !dir.contains(&addr);
-                        if fresh {
-                            dir.push(addr);
-                        }
-                        (fresh, dir.clone())
-                    };
-                    // count coverage only on first announcement, so a
-                    // replica re-announcing (reconnect) does not inflate
-                    // the per-partition replica counts
-                    if directory.0 {
-                        shared
-                            .sched
-                            .lock()
-                            .unwrap()
-                            .add_replica_coverage(&partitions);
-                    }
-                    Message::ReplicaDirectory {
-                        replicas: directory.1,
-                    }
-                }
-            }
-            Message::Leave { service } => {
-                shared.members.lock().unwrap().remove(&service.0);
-                let reopened = shared
-                    .sched
-                    .lock()
-                    .unwrap()
-                    .fail_service(service);
-                shared
-                    .requeued_tasks
-                    .fetch_add(reopened as u64, Ordering::Relaxed);
-                Message::LeaveAck
-            }
-            Message::TaskRequest { service } => {
-                shared.touch(service);
-                shared.next_assignment(service)
-            }
-            Message::Complete {
-                service,
-                task_id,
-                comparisons,
-                cached,
-                matches,
-            } => {
-                shared.touch(service);
-                {
-                    // hold the scheduler lock across the result append:
-                    // `is_done()` must never be observable as true while
-                    // this task's output is not yet in `results`, or a
-                    // wait_done() → finish() sequence could drain the
-                    // results missing the final task's matches.  Lock
-                    // order is sched → results here and in finish().
-                    let mut sched = shared.sched.lock().unwrap();
-                    if sched.try_report_complete(service, task_id, cached)
-                    {
-                        shared
-                            .comparisons
-                            .fetch_add(comparisons, Ordering::Relaxed);
-                        shared.results.lock().unwrap().extend(matches);
-                    } else {
-                        // straggler from a service presumed dead: the
-                        // task was re-queued, its output arrives again
-                        shared
-                            .stale_completions
-                            .fetch_add(1, Ordering::Relaxed);
-                    }
-                }
-                shared.next_assignment(service)
-            }
-            Message::Heartbeat { service } => {
-                shared.touch(service);
-                Message::HeartbeatAck
-            }
-            other => Message::Error {
-                message: format!(
-                    "workflow service got unexpected {}",
-                    other.kind()
-                ),
-            },
         };
-        match t.send(&reply) {
-            Ok(n) => shared.traffic.record(n),
-            Err(_) => break,
+        self.shared.control_messages.fetch_add(1, Ordering::Relaxed);
+        let reply = handle_message(&self.shared, msg);
+        let n = out.queue_message(&reply);
+        self.shared.traffic.record(n);
+        Action::Continue
+    }
+}
+
+/// Process one control-plane message and build its reply.
+fn handle_message(shared: &WfShared, msg: Message) -> Message {
+    match msg {
+        Message::Join { name, version } => {
+            if version != PROTOCOL_VERSION {
+                shared
+                    .version_rejections
+                    .fetch_add(1, Ordering::Relaxed);
+                Message::Error {
+                    message: format!(
+                        "protocol version mismatch: match service \
+                         {name:?} speaks v{version}, this \
+                         coordinator speaks v{PROTOCOL_VERSION} — \
+                         upgrade the older side"
+                    ),
+                }
+            } else {
+                let id =
+                    shared.next_service.fetch_add(1, Ordering::SeqCst);
+                shared.members.lock().unwrap().insert(
+                    id,
+                    Member {
+                        name,
+                        last_seen: Instant::now(),
+                    },
+                );
+                shared.sched.lock().unwrap().add_service(ServiceId(id));
+                Message::JoinAck {
+                    service: ServiceId(id),
+                    version: PROTOCOL_VERSION,
+                    replicas: shared.replicas.lock().unwrap().clone(),
+                }
+            }
         }
+        Message::ReplicaAnnounce {
+            addr,
+            version,
+            partitions,
+        } => {
+            if version != PROTOCOL_VERSION {
+                shared
+                    .version_rejections
+                    .fetch_add(1, Ordering::Relaxed);
+                Message::Error {
+                    message: format!(
+                        "protocol version mismatch: data replica \
+                         {addr} speaks v{version}, this coordinator \
+                         speaks v{PROTOCOL_VERSION} — upgrade the \
+                         older side"
+                    ),
+                }
+            } else {
+                let (fresh, directory) = {
+                    let mut dir = shared.replicas.lock().unwrap();
+                    let fresh = !dir.contains(&addr);
+                    if fresh {
+                        dir.push(addr);
+                    }
+                    (fresh, dir.clone())
+                };
+                // count coverage only on first announcement, so a
+                // replica re-announcing (reconnect) does not inflate
+                // the per-partition replica counts
+                if fresh {
+                    shared
+                        .sched
+                        .lock()
+                        .unwrap()
+                        .add_replica_coverage(&partitions);
+                }
+                Message::ReplicaDirectory {
+                    replicas: directory,
+                }
+            }
+        }
+        Message::Leave { service } => {
+            shared.members.lock().unwrap().remove(&service.0);
+            let reopened = shared
+                .sched
+                .lock()
+                .unwrap()
+                .fail_service(service);
+            shared
+                .requeued_tasks
+                .fetch_add(reopened as u64, Ordering::Relaxed);
+            Message::LeaveAck
+        }
+        Message::TaskRequest { service } => {
+            if !shared.touch(service) {
+                return shared.fenced(service);
+            }
+            shared.assignment_pulls.fetch_add(1, Ordering::Relaxed);
+            shared.next_assignment(service)
+        }
+        Message::Complete {
+            service,
+            task_id,
+            comparisons,
+            cached,
+            matches,
+        } => {
+            if !shared.touch(service) {
+                // a straggler from a fenced service: its completion is
+                // stale by definition — count and refuse
+                shared
+                    .stale_completions
+                    .fetch_add(1, Ordering::Relaxed);
+                return shared.fenced(service);
+            }
+            {
+                // hold the scheduler lock across the result append:
+                // `is_done()` must never be observable as true while
+                // this task's output is not yet in `results`, or a
+                // wait_done() → finish() sequence could drain the
+                // results missing the final task's matches.  Lock
+                // order is sched → results here and in finish().
+                let mut sched = shared.sched.lock().unwrap();
+                if sched.try_report_complete(service, task_id, cached) {
+                    shared
+                        .comparisons
+                        .fetch_add(comparisons, Ordering::Relaxed);
+                    shared.results.lock().unwrap().extend(matches);
+                } else {
+                    // straggler from a service presumed dead: the
+                    // task was re-queued, its output arrives again
+                    shared
+                        .stale_completions
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            shared.next_assignment(service)
+        }
+        Message::TaskRequestBatch {
+            service,
+            max,
+            cached,
+            completed,
+        } => {
+            if !shared.touch(service) {
+                shared
+                    .stale_completions
+                    .fetch_add(completed.len() as u64, Ordering::Relaxed);
+                return shared.fenced(service);
+            }
+            shared.batch_requests.fetch_add(1, Ordering::Relaxed);
+            if completed.is_empty() {
+                shared.assignment_pulls.fetch_add(1, Ordering::Relaxed);
+            }
+            let (tasks, done) = {
+                // same lock-order contract as the Complete arm
+                let mut sched = shared.sched.lock().unwrap();
+                report_batch(shared, &mut sched, service, cached, completed);
+                let k = (max as usize).clamp(1, MAX_ASSIGN_BATCH);
+                let tasks = sched.next_tasks_for(service, k);
+                (tasks, sched.is_done())
+            };
+            Message::TaskAssignBatch { done, tasks }
+        }
+        Message::Heartbeat { service } => {
+            shared.heartbeats.fetch_add(1, Ordering::Relaxed);
+            if !shared.touch(service) {
+                return shared.fenced(service);
+            }
+            Message::HeartbeatAck
+        }
+        other => Message::Error {
+            message: format!(
+                "workflow service got unexpected {}",
+                other.kind()
+            ),
+        },
+    }
+}
+
+/// Fold a batch of completion reports into the scheduler and the
+/// merged results (caller holds the scheduler lock).  The batch's
+/// cache status is recorded once at the end rather than per task, and
+/// the fresh tasks' matches are appended under a single results-lock
+/// acquisition — this runs on the one reactor thread, so the
+/// control-plane hot path stays lean.
+fn report_batch(
+    shared: &WfShared,
+    sched: &mut Scheduler,
+    service: ServiceId,
+    cached: Vec<crate::partition::PartitionId>,
+    completed: Vec<CompletedTask>,
+) {
+    let mut comparisons = 0u64;
+    let mut fresh_matches: Vec<Correspondence> = Vec::new();
+    for report in completed {
+        if sched.try_complete_batched(service, report.task_id) {
+            comparisons += report.comparisons;
+            fresh_matches.extend(report.matches);
+        } else {
+            shared.stale_completions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    sched.record_cache_status(service, cached);
+    if !fresh_matches.is_empty() {
+        shared.results.lock().unwrap().extend(fresh_matches);
+    }
+    if comparisons > 0 {
+        shared.comparisons.fetch_add(comparisons, Ordering::Relaxed);
     }
 }
 
@@ -457,6 +602,7 @@ fn handle_conn(stream: TcpStream, shared: Arc<WfShared>) {
 mod tests {
     use super::*;
     use crate::partition::PartitionId;
+    use crate::rpc::Transport;
 
     fn task(id: u32, l: u32, r: u32) -> MatchTask {
         MatchTask {
@@ -539,6 +685,88 @@ mod tests {
         assert!(report.control_messages >= 4);
         assert!(report.control_wire_bytes > 0);
         assert_eq!(report.services_joined, 1);
+        // exactly one pull carried no completion (the initial one)
+        assert_eq!(report.assignment_pulls, 1);
+        assert_eq!(report.batch_requests, 0);
+    }
+
+    /// The v3 batched pull: one round trip reports a whole batch of
+    /// completions and receives the next batch of assignments.
+    #[test]
+    fn batched_pull_protocol_round() {
+        let srv = WorkflowServiceServer::start(
+            vec![task(0, 0, 1), task(1, 2, 3), task(2, 4, 5)],
+            WorkflowServerConfig::default(),
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let mut c = client(srv.addr());
+        let svc = join(&mut c, "batch-node");
+
+        // initial batch pull: nothing to report yet
+        let reply = c
+            .request(&Message::TaskRequestBatch {
+                service: svc,
+                max: 2,
+                cached: vec![],
+                completed: vec![],
+            })
+            .unwrap();
+        let Message::TaskAssignBatch { done, tasks } = reply else {
+            panic!("expected batch assignment");
+        };
+        assert!(!done);
+        assert_eq!(tasks.len(), 2, "asked for 2, open list has 3");
+
+        // both completions + the next pull ride one frame
+        let reply = c
+            .request(&Message::TaskRequestBatch {
+                service: svc,
+                max: 2,
+                cached: vec![tasks[0].left],
+                completed: tasks
+                    .iter()
+                    .map(|t| CompletedTask {
+                        task_id: t.id,
+                        comparisons: 7,
+                        matches: vec![],
+                    })
+                    .collect(),
+            })
+            .unwrap();
+        let Message::TaskAssignBatch { done, tasks } = reply else {
+            panic!("expected second batch");
+        };
+        assert!(!done);
+        assert_eq!(tasks.len(), 1, "one task left");
+
+        // final completion: empty assignment, workflow done
+        let reply = c
+            .request(&Message::TaskRequestBatch {
+                service: svc,
+                max: 2,
+                cached: vec![],
+                completed: vec![CompletedTask {
+                    task_id: tasks[0].id,
+                    comparisons: 7,
+                    matches: vec![],
+                }],
+            })
+            .unwrap();
+        let Message::TaskAssignBatch { done, tasks } = reply else {
+            panic!("expected final batch reply");
+        };
+        assert!(done);
+        assert!(tasks.is_empty());
+
+        assert!(srv.wait_done(Duration::from_secs(1)));
+        let report = srv.finish();
+        assert_eq!(report.completed_tasks, 3);
+        assert_eq!(report.comparisons, 21);
+        assert_eq!(report.batch_requests, 3);
+        // only the initial pull carried no completions
+        assert_eq!(report.assignment_pulls, 1);
+        assert_eq!(report.stale_completions, 0);
     }
 
     /// The ROADMAP bugfix: frames used to carry no protocol version, so
@@ -636,6 +864,11 @@ mod tests {
         assert_eq!(report.version_rejections, 0);
     }
 
+    /// A service that misses heartbeats is failed and fenced: its
+    /// in-flight task is re-queued for others, and everything it sends
+    /// afterwards — completions included — is refused with an `Error`
+    /// telling it to re-join (the PR-3 zombie fix; it used to be
+    /// silently resurrected).
     #[test]
     fn missed_heartbeats_requeue_in_flight_tasks() {
         let srv = WorkflowServiceServer::start(
@@ -669,7 +902,7 @@ mod tests {
         };
         assert_eq!(re.id, t.id);
 
-        // the doomed node's stale completion is dropped…
+        // the doomed node's stale completion is fenced with an error…
         let stale = a
             .request(&Message::Complete {
                 service: svc_a,
@@ -679,7 +912,10 @@ mod tests {
                 matches: vec![],
             })
             .unwrap();
-        assert!(matches!(stale, Message::NoTask { .. }));
+        let Message::Error { message } = stale else {
+            panic!("zombie completion must be fenced, got {}", stale.kind());
+        };
+        assert!(message.contains("re-join"), "unclear fence: {message}");
         // …and does not mark the workflow done
         assert!(!srv.wait_done(Duration::from_millis(50)));
 

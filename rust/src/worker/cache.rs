@@ -31,6 +31,13 @@ impl PartitionCache {
         self.inner.lock().unwrap().put(id, data);
     }
 
+    /// Presence probe that touches neither recency nor the hit/miss
+    /// counters — the batch-mode prefetcher uses it so warming the
+    /// cache does not distort the cache statistics the reports carry.
+    pub fn contains(&self, id: PartitionId) -> bool {
+        self.inner.lock().unwrap().contains(&id)
+    }
+
     /// Cached partition ids — piggybacked on task-completion reports so
     /// the workflow service can maintain its approximate cache status
     /// without extra messages (paper §4).

@@ -4,6 +4,15 @@
 //! data, and ≥ 2 match-service nodes speaking the `pem::rpc` wire
 //! protocol — validated against the in-process thread engine on the
 //! same seed.
+//!
+//! The fault-injection half (PR 3) routes both planes through a
+//! [`ChaosTransport`] — a byte-mangling TCP forwarder that splits
+//! writes down to single bytes, stalls mid-frame, and cuts
+//! connections mid-frame — and holds a 4-node *batched* run to the
+//! thread engine's exact result: the readiness-driven servers must
+//! reassemble frames from any chunking, and the scheduler must
+//! neither lose nor double-complete a task, whatever the injected
+//! faults do (in the spirit of deterministic failpoint testing).
 
 use pem::cluster::ComputingEnv;
 use pem::coordinator::workflow::EngineChoice;
@@ -35,6 +44,136 @@ fn blocking_cfg(kind: StrategyKind, max: usize, min: usize) -> WorkflowConfig {
         *min_size = min;
     }
     cfg
+}
+
+/// Fault profile of one [`ChaosTransport`] direction.
+#[derive(Clone, Copy)]
+struct ChaosConfig {
+    /// 1-in-N chance to stall 1–20 ms before forwarding a chunk
+    /// (0 = never stall).
+    stall_one_in: usize,
+    /// Cut the connection (both directions, mid-frame with
+    /// overwhelming probability) after forwarding this many bytes.
+    disconnect_after: Option<u64>,
+}
+
+/// A deterministic byte-mangling TCP forwarder: everything a client
+/// sends is re-chunked (down to single bytes, so length prefixes get
+/// split), optionally stalled, and optionally cut mid-frame, before
+/// reaching the upstream server — and the same on the way back.  The
+/// readiness-driven servers and the blocking clients must survive all
+/// of it; the run's *result* must not change.
+struct ChaosTransport;
+
+impl ChaosTransport {
+    /// Start a forwarder to `upstream`; returns the address clients
+    /// should connect to.  Each proxied connection gets its own
+    /// deterministic fault stream derived from `seed`.
+    fn start(
+        upstream: String,
+        seed: u64,
+        cfg: ChaosConfig,
+    ) -> std::net::SocketAddr {
+        let listener =
+            std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let mut conn_seq = 0u64;
+            for client in listener.incoming() {
+                let Ok(client) = client else { break };
+                conn_seq += 1;
+                let Ok(server) =
+                    std::net::TcpStream::connect(&upstream)
+                else {
+                    continue; // upstream gone: drop the client conn
+                };
+                let c2 = client.try_clone().unwrap();
+                let s2 = server.try_clone().unwrap();
+                let conn_seed = seed
+                    ^ conn_seq.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+                std::thread::spawn(move || {
+                    chaos_pump(
+                        client,
+                        s2,
+                        pem::util::Rng::new(conn_seed),
+                        cfg,
+                    )
+                });
+                std::thread::spawn(move || {
+                    chaos_pump(
+                        server,
+                        c2,
+                        pem::util::Rng::new(conn_seed ^ 0xFF),
+                        cfg,
+                    )
+                });
+            }
+        });
+        addr
+    }
+}
+
+/// One direction of a proxied connection: read arbitrary-size chunks,
+/// forward them as several short writes, stall occasionally, cut the
+/// whole connection once the byte budget is spent.
+fn chaos_pump(
+    mut from: std::net::TcpStream,
+    mut to: std::net::TcpStream,
+    mut rng: pem::util::Rng,
+    cfg: ChaosConfig,
+) {
+    use std::io::{Read, Write};
+    let mut buf = [0u8; 4096];
+    let mut forwarded = 0u64;
+    'pump: loop {
+        // arbitrary read sizes: 1-byte reads split length prefixes on
+        // the receiving session state machine
+        let max = if rng.gen_bool(0.3) {
+            1 + rng.gen_range(7)
+        } else {
+            1 + rng.gen_range(buf.len() - 1)
+        };
+        let n = match from.read(&mut buf[..max]) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => n,
+        };
+        if cfg.stall_one_in > 0 && rng.gen_range(cfg.stall_one_in) == 0 {
+            std::thread::sleep(Duration::from_millis(
+                (1 + rng.gen_range(19)) as u64,
+            ));
+        }
+        // short writes: forward in several small slices
+        let mut off = 0;
+        while off < n {
+            let chunk = 1 + rng.gen_range(n - off);
+            if to.write_all(&buf[off..off + chunk]).is_err() {
+                break 'pump;
+            }
+            off += chunk;
+        }
+        forwarded += n as u64;
+        if let Some(limit) = cfg.disconnect_after {
+            if forwarded >= limit {
+                break; // mid-frame cut: both sides torn down below
+            }
+        }
+    }
+    let _ = from.shutdown(std::net::Shutdown::Both);
+    let _ = to.shutdown(std::net::Shutdown::Both);
+}
+
+/// Order-normalize a correspondence set for exact comparison.
+fn norm_pairs(
+    cs: &[pem::model::Correspondence],
+) -> Vec<(EntityId, EntityId)> {
+    let mut r = pem::model::MatchResult::new();
+    for &c in cs {
+        r.add(c);
+    }
+    let mut pairs: Vec<(EntityId, EntityId)> =
+        r.iter().map(|c| c.pair()).collect();
+    pairs.sort_unstable();
+    pairs
 }
 
 /// The acceptance-criteria test: a blocking-based workflow through real
@@ -332,6 +471,177 @@ fn dist_node_failure_requeues_and_completes() {
     assert_eq!(
         norm(&out.correspondences),
         norm(&reference.correspondences)
+    );
+}
+
+/// Batched assignment (protocol v3) through the full workflow API: a
+/// 2-node run pulling 4 tasks per round trip is result-identical to
+/// the thread engine — batching changes the control-plane shape, never
+/// the output.
+#[test]
+fn dist_batched_run_matches_thread_engine_exactly() {
+    let data = GeneratorConfig::tiny()
+        .with_entities(600)
+        .with_seed(42)
+        .generate();
+    let ce = ComputingEnv::new(2, 2, GIB);
+    let base = blocking_cfg(StrategyKind::Wam, 150, 30).with_cache(8);
+
+    let threads = run_workflow(
+        &data,
+        &base.clone().with_engine(EngineChoice::Threads),
+        &ce,
+    )
+    .unwrap();
+    let dist = run_workflow(
+        &data,
+        &base.with_engine(EngineChoice::Distributed).with_batch(4),
+        &ce,
+    )
+    .unwrap();
+
+    assert_eq!(dist.metrics.tasks, threads.metrics.tasks);
+    assert_eq!(dist.metrics.comparisons, threads.metrics.comparisons);
+    assert_eq!(dist.result.len(), threads.result.len());
+    for c in threads.result.iter() {
+        assert_eq!(
+            dist.result.similarity(c.e1, c.e2),
+            Some(c.sim),
+            "pair ({}, {}) differs under batched assignment",
+            c.e1,
+            c.e2
+        );
+    }
+}
+
+/// The PR-3 acceptance test: a **4-node batched run under fault
+/// injection** — every control and data connection passes through a
+/// [`ChaosTransport`] that splits writes down to single bytes and
+/// stalls mid-frame, and the chaotic data path additionally cuts
+/// connections mid-frame (forcing failover to the direct replica) —
+/// must complete every task exactly once with a merged result
+/// identical to the thread engine on the same seed.
+#[test]
+fn dist_batched_chaos_run_matches_thread_engine() {
+    let data = GeneratorConfig::tiny()
+        .with_entities(600)
+        .with_seed(42)
+        .generate();
+    let ids: Vec<EntityId> =
+        data.dataset.entities.iter().map(|e| e.id).collect();
+    let parts = partition_size_based(&ids, 40);
+    let tasks = generate_tasks(&parts);
+    let n_tasks = tasks.len();
+    let store = Arc::new(DataService::build(&data.dataset, &parts));
+
+    // reference result from the thread engine
+    let exec = RustExecutor::new(MatchStrategy::new(StrategyKind::Wam));
+    let reference = pem::engine::threads::run(
+        &ComputingEnv::new(1, 2, GIB),
+        &parts,
+        tasks.clone(),
+        &store,
+        &exec,
+        pem::engine::threads::ThreadConfig::default(),
+    );
+
+    let primary =
+        DataServiceServer::start(store.clone(), "127.0.0.1:0").unwrap();
+    let wf_srv = WorkflowServiceServer::start(
+        tasks,
+        WorkflowServerConfig {
+            policy: Policy::Affinity,
+            // stalls are ≤ 20 ms; keep spurious failure detection out
+            heartbeat_timeout: Duration::from_secs(3),
+        },
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let wf_addr = wf_srv.addr().to_string();
+    announce_replica(
+        &wf_addr,
+        &primary.addr().to_string(),
+        &primary.partition_ids(),
+        Duration::from_secs(5),
+    )
+    .unwrap();
+
+    // chaos on both planes: the control path mangles chunk boundaries
+    // and stalls; the chaotic data path additionally cuts every
+    // connection mid-frame after ~150 KB
+    let chaos_wf = ChaosTransport::start(
+        wf_addr,
+        0xC0FFEE,
+        ChaosConfig {
+            stall_one_in: 64,
+            disconnect_after: None,
+        },
+    );
+    let chaos_data = ChaosTransport::start(
+        primary.addr().to_string(),
+        0xBAD_5EED,
+        ChaosConfig {
+            stall_one_in: 64,
+            disconnect_after: Some(150_000),
+        },
+    );
+
+    let node_handles: Vec<_> = (0..4)
+        .map(|i| {
+            let mut cfg = MatchNodeConfig::new(
+                chaos_wf.to_string(),
+                chaos_data.to_string(),
+            );
+            // the direct primary is the failover target once the
+            // chaotic data path gets cut mid-frame
+            cfg.data_addrs.push(primary.addr().to_string());
+            cfg.name = format!("chaos-node-{i}");
+            cfg.threads = 2;
+            cfg.cache_capacity = 4;
+            cfg.batch = 4;
+            let exec: Arc<dyn TaskExecutor> = Arc::new(RustExecutor::new(
+                MatchStrategy::new(StrategyKind::Wam),
+            ));
+            std::thread::spawn(move || run_match_node(&cfg, exec))
+        })
+        .collect();
+
+    assert!(
+        wf_srv.wait_done(Duration::from_secs(120)),
+        "chaos run did not complete"
+    );
+    let mut reports = Vec::new();
+    let mut torn_down = 0;
+    for h in node_handles {
+        match h.join().expect("node thread") {
+            Ok(r) => reports.push(r),
+            // a node the injected faults took down entirely: its tasks
+            // were re-queued and finished elsewhere
+            Err(_) => torn_down += 1,
+        }
+    }
+    let report = wf_srv.finish();
+    primary.shutdown();
+
+    // no task lost, none double-completed
+    assert_eq!(report.completed_tasks, n_tasks, "every task exactly once");
+    assert_eq!(report.total_tasks, n_tasks);
+    assert!(report.batch_requests > 0, "batched path exercised");
+    assert_eq!(reports.len() + torn_down, 4);
+    assert!(!reports.is_empty(), "at least one node must survive");
+    // the chaotic data path was really used and really failed over
+    let failovers: u64 =
+        reports.iter().map(|r| r.replica_failovers).sum();
+    assert!(
+        failovers >= 1,
+        "mid-frame cuts never forced a failover: {reports:?}"
+    );
+
+    // and none of it changed the result
+    assert_eq!(
+        norm_pairs(&report.correspondences),
+        norm_pairs(&reference.correspondences),
+        "injected faults altered the merged result"
     );
 }
 

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# with_timeout.sh SECONDS CMD [ARGS...]
+#
+# Run CMD under a hard wall-clock timeout.  Used by the `dist-tests`
+# CI job to run each distributed integration test individually: a
+# hung reactor or a deadlocked node then fails that one test fast
+# (exit 124) instead of stalling the whole pipeline until the job
+# timeout.  SIGTERM first, SIGKILL 15 s later if the process ignores
+# it.
+set -u
+
+if [ "$#" -lt 2 ]; then
+    echo "usage: $0 SECONDS CMD [ARGS...]" >&2
+    exit 2
+fi
+
+secs="$1"
+shift
+
+timeout --kill-after=15 "$secs" "$@"
+rc=$?
+if [ "$rc" -eq 124 ]; then
+    echo "with_timeout: '$*' exceeded ${secs}s and was killed" >&2
+fi
+exit "$rc"
