@@ -9,26 +9,30 @@
 //! ```
 
 use pem::cluster::ComputingEnv;
-use pem::coordinator::{run_workflow, Policy, WorkflowConfig};
+use pem::coordinator::{Policy, Workflow};
 use pem::datagen::GeneratorConfig;
+use pem::engine::backend::{Sim, SimOptions};
 use pem::matching::StrategyKind;
+use pem::partition::BlockingBased;
 use pem::util::stats::Table;
 use pem::util::GIB;
 
 fn main() -> anyhow::Result<()> {
     let data = GeneratorConfig::default().with_entities(8_000).generate();
     let kind = StrategyKind::Wam;
-    let base = {
-        let mut cfg = WorkflowConfig::blocking_based(kind);
-        use pem::coordinator::PartitioningChoice;
-        if let PartitioningChoice::BlockingBased {
-            max_size, min_size, ..
-        } = &mut cfg.partitioning
-        {
-            *max_size = Some(200);
-            *min_size = 40;
-        }
-        cfg
+    // the same simulated run with caching disabled, caching+FIFO, and
+    // caching+affinity
+    let cell = |ce: ComputingEnv, cache: usize, policy: Policy| {
+        Workflow::for_dataset(&data.dataset)
+            .matching(kind)
+            .strategy(
+                BlockingBased::product_type().with_bounds(200, 40),
+            )
+            .backend(Sim(SimOptions::default()))
+            .env(ce)
+            .cache(cache)
+            .policy(policy)
+            .run()
     };
 
     println!("caching & affinity on the simulated testbed (c = 16)\n");
@@ -38,11 +42,9 @@ fn main() -> anyhow::Result<()> {
         let nodes = cores.div_ceil(4).max(1);
         let ce = ComputingEnv::new(nodes, cores.div_ceil(nodes), 3 * GIB);
 
-        let nc = run_workflow(&data, &base.clone().with_cache(0), &ce)?;
-        let mut fifo_cfg = base.clone().with_cache(16);
-        fifo_cfg.policy = Policy::Fifo;
-        let fifo = run_workflow(&data, &fifo_cfg, &ce)?;
-        let aff = run_workflow(&data, &base.clone().with_cache(16), &ce)?;
+        let nc = cell(ce, 0, Policy::Affinity)?;
+        let fifo = cell(ce, 16, Policy::Fifo)?;
+        let aff = cell(ce, 16, Policy::Affinity)?;
 
         let t_nc = nc.metrics.makespan_ns as f64;
         let t_c = aff.metrics.makespan_ns as f64;

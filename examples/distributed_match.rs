@@ -19,10 +19,10 @@
 //! ```
 
 use pem::cluster::ComputingEnv;
-use pem::coordinator::workflow::EngineChoice;
-use pem::coordinator::{run_workflow, WorkflowConfig};
+use pem::coordinator::Workflow;
 use pem::datagen::GeneratorConfig;
-use pem::matching::StrategyKind;
+use pem::engine::backend::{Dist, DistOptions, Threads};
+use pem::partition::BlockingBased;
 use pem::util::{fmt_bytes, fmt_nanos, GIB};
 
 fn main() -> anyhow::Result<()> {
@@ -34,12 +34,17 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 3 match-service nodes × 2 worker threads, partition caches of 8,
-    // affinity scheduling — all talking over localhost TCP
+    // affinity scheduling — all talking over localhost TCP.  The plan
+    // is built first (inspectable), then handed to the Dist backend.
     let ce = ComputingEnv::new(3, 2, GIB);
-    let cfg = WorkflowConfig::blocking_based(StrategyKind::Wam)
-        .with_engine(EngineChoice::Distributed)
-        .with_cache(8);
-    let out = run_workflow(&data, &cfg, &ce)?;
+    let planned = Workflow::for_dataset(&data.dataset)
+        .strategy(BlockingBased::product_type())
+        .backend(Dist(DistOptions::default()))
+        .env(ce)
+        .cache(8)
+        .plan()?;
+    println!("\n{}", planned.plan().summary());
+    let out = planned.execute()?;
 
     println!(
         "\nblocking-based workflow over TCP: {} partitions ({} misc) → {} tasks",
@@ -76,13 +81,12 @@ fn main() -> anyhow::Result<()> {
 
     // cross-check against the in-process thread engine on the same seed:
     // the wire round trip is lossless, so the results must be identical
-    let t = run_workflow(
-        &data,
-        &WorkflowConfig::blocking_based(StrategyKind::Wam)
-            .with_engine(EngineChoice::Threads)
-            .with_cache(8),
-        &ce,
-    )?;
+    let t = Workflow::for_dataset(&data.dataset)
+        .strategy(BlockingBased::product_type())
+        .backend(Threads)
+        .env(ce)
+        .cache(8)
+        .run()?;
     assert_eq!(t.result.len(), out.result.len());
     println!(
         "thread-engine cross-check: identical {} correspondences ✓",

@@ -19,12 +19,13 @@
 //! Recorded in EXPERIMENTS.md §End-to-end.
 
 use pem::cluster::ComputingEnv;
-use pem::coordinator::workflow::EngineChoice;
-use pem::coordinator::{run_workflow, WorkflowConfig};
+use pem::coordinator::Workflow;
 use pem::datagen::GeneratorConfig;
+use pem::engine::backend::{Sim, SimOptions, Threads};
 use pem::matching::train::{train_lrm, training_pairs, TrainConfig};
 use pem::matching::{MatchStrategy, StrategyKind};
 use pem::metrics::speedups;
+use pem::partition::BlockingBased;
 use pem::util::cli::Args;
 use pem::util::{fmt_nanos, GIB};
 
@@ -71,12 +72,14 @@ fn main() -> anyhow::Result<()> {
         ("WAM", MatchStrategy::new(StrategyKind::Wam)),
         ("LRM(trained)", lrm),
     ] {
-        let mut cfg = WorkflowConfig::blocking_based(strategy.kind)
-            .with_engine(EngineChoice::Threads)
-            .with_cache(16);
-        cfg.strategy = strategy;
         let ce = ComputingEnv::new(1, 4, 3 * GIB);
-        let out = run_workflow(&data, &cfg, &ce)?;
+        let out = Workflow::for_dataset(&data.dataset)
+            .match_strategy(strategy)
+            .strategy(BlockingBased::product_type())
+            .backend(Threads)
+            .env(ce)
+            .cache(16)
+            .run()?;
         let q = out.result.quality(&data.truth);
         println!(
             "[3] {name}: {} partitions ({} misc), {} tasks, {} comparisons",
@@ -99,13 +102,18 @@ fn main() -> anyhow::Result<()> {
     // [4] headline: scale-out on the simulated paper testbed
     println!("\n[4] scale-out on the simulated paper testbed (CE=(4,4,3GB), c=16):");
     for kind in [StrategyKind::Wam, StrategyKind::Lrm] {
-        let cfg = WorkflowConfig::blocking_based(kind).with_cache(16);
         let mut times = Vec::new();
         print!("    {}: ", kind.name());
         for cores in [1usize, 4, 16] {
             let nodes = cores.div_ceil(4).max(1);
             let ce = ComputingEnv::new(nodes, cores.div_ceil(nodes), 3 * GIB);
-            let out = run_workflow(&data, &cfg, &ce)?;
+            let out = Workflow::for_dataset(&data.dataset)
+                .matching(kind)
+                .strategy(BlockingBased::product_type())
+                .backend(Sim(SimOptions::default()))
+                .env(ce)
+                .cache(16)
+                .run()?;
             times.push(out.metrics.makespan_ns);
             print!(
                 "{}@{}c  ",

@@ -12,34 +12,30 @@
 //! ```
 
 use pem::cluster::{ComputingEnv, HeterogeneousEnv, NodeSpec};
-use pem::coordinator::workflow::build_partitions;
-use pem::coordinator::WorkflowConfig;
+use pem::coordinator::MatchPlan;
 use pem::datagen::GeneratorConfig;
 use pem::engine::sim::{run_heterogeneous, SimConfig};
 use pem::engine::{calibrate, sim};
 use pem::matching::StrategyKind;
-use pem::partition::generate_tasks;
+use pem::partition::BlockingBased;
 use pem::store::DataService;
 use pem::util::{fmt_nanos, GIB};
 
 fn main() -> anyhow::Result<()> {
     let data = GeneratorConfig::default().with_entities(6_000).generate();
     let kind = StrategyKind::Wam;
-    let mut wf = WorkflowConfig::blocking_based(kind);
-    {
-        use pem::coordinator::PartitioningChoice;
-        if let PartitioningChoice::BlockingBased {
-            max_size, min_size, ..
-        } = &mut wf.partitioning
-        {
-            *max_size = Some(250);
-            *min_size = 50;
-        }
-    }
     let ce = ComputingEnv::new(4, 4, 3 * GIB);
-    let parts = build_partitions(&data, &wf, &ce)?;
-    let tasks = generate_tasks(&parts);
-    let store = DataService::build(&data.dataset, &parts);
+    // one plan, three executions below — the plan/execute split at the
+    // engine level
+    let plan = MatchPlan::build(
+        &data.dataset,
+        &BlockingBased::product_type().with_bounds(250, 50),
+        kind,
+        &ce,
+    )?;
+    let parts = &plan.partitions;
+    let tasks = plan.tasks.clone();
+    let store = DataService::build(&data.dataset, parts);
     let cost =
         calibrate::calibrated_params(&data.dataset, kind, 100, 7);
     println!(
@@ -52,7 +48,7 @@ fn main() -> anyhow::Result<()> {
     // (a) healthy 4-node run
     let mut cfg = SimConfig::new(kind, cost);
     cfg.cache_capacity = 16;
-    let healthy = sim::run(&ce, &parts, tasks.clone(), &store, cfg);
+    let healthy = sim::run(&ce, parts, tasks.clone(), &store, cfg);
     println!(
         "(a) healthy 4-node cluster:        {}",
         fmt_nanos(healthy.metrics.makespan_ns)
@@ -62,7 +58,7 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = SimConfig::new(kind, cost);
     cfg.cache_capacity = 16;
     cfg.failures = vec![(healthy.metrics.makespan_ns / 4, 3)];
-    let failed = sim::run(&ce, &parts, tasks.clone(), &store, cfg);
+    let failed = sim::run(&ce, parts, tasks.clone(), &store, cfg);
     println!(
         "(b) node 3 fails at 25%:           {}  (all {} tasks still completed)",
         fmt_nanos(failed.metrics.makespan_ns),
@@ -78,7 +74,7 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = SimConfig::new(kind, cost);
     cfg.cache_capacity = 16;
     let hetero =
-        run_heterogeneous(&env, &parts, tasks, &store, &mut cfg);
+        run_heterogeneous(&env, parts, tasks, &store, &mut cfg);
     println!(
         "(c) heterogeneous (one 0.5x node): {}  (imbalance {:.2})",
         fmt_nanos(hetero.metrics.makespan_ns),

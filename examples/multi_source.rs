@@ -21,10 +21,11 @@ use pem::coordinator::multi_source::{
     cross_quality, run_two_source_workflow, split_duplicate_free,
     union_sources, TwoSourceMode,
 };
-use pem::coordinator::workflow::EngineChoice;
-use pem::coordinator::{run_workflow, WorkflowConfig};
+use pem::coordinator::Workflow;
 use pem::datagen::GeneratorConfig;
+use pem::engine::backend::Threads;
 use pem::matching::{MatchStrategy, StrategyKind};
+use pem::partition::SizeBased;
 use pem::util::GIB;
 
 fn main() -> anyhow::Result<()> {
@@ -43,14 +44,11 @@ fn main() -> anyhow::Result<()> {
 
     // ——— union approach ———
     let union = union_sources(vec![a.clone(), b.clone()]);
-    let mut ucfg = WorkflowConfig::size_based(StrategyKind::Wam)
-        .with_engine(EngineChoice::Threads);
-    if let pem::coordinator::PartitioningChoice::SizeBased { max_size } =
-        &mut ucfg.partitioning
-    {
-        *max_size = Some(200);
-    }
-    let u = run_workflow(&union, &ucfg, &ce)?;
+    let u = Workflow::for_dataset(&union)
+        .strategy(SizeBased::with_max_size(200))
+        .backend(Threads)
+        .env(ce)
+        .run()?;
     println!(
         "\nunion:                  {} tasks, {} comparisons, {} matches",
         u.n_tasks,

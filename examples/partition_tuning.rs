@@ -62,6 +62,9 @@ fn main() {
                 format!("misc [{}/{}]", index + 1, count)
             }
             PartitionKind::SizeBased => "size-based".into(),
+            PartitionKind::Window { index, count } => {
+                format!("window [{}/{}]", index + 1, count)
+            }
         };
         println!("  {}  {:<34} {} entities", p.id, kind, p.len());
     }

@@ -1,21 +1,22 @@
-//! Quickstart: generate a small product-offer dataset, run the paper's
-//! blocking-based match workflow, and inspect the result.
+//! Quickstart: generate a small product-offer dataset, plan the
+//! paper's blocking-based match workflow, inspect the plan, execute it.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
 use pem::cluster::ComputingEnv;
-use pem::coordinator::workflow::EngineChoice;
-use pem::coordinator::{run_workflow, WorkflowConfig};
-use pem::datagen::GeneratorConfig;
-use pem::matching::StrategyKind;
+use pem::coordinator::Workflow;
+use pem::engine::backend::Threads;
+use pem::partition::BlockingBased;
 use pem::util::GIB;
 
 fn main() -> anyhow::Result<()> {
     // 1. A dataset with known injected duplicates (offers of the same
     //    product from different shops, corrupted titles/descriptions).
-    let data = GeneratorConfig::tiny().with_entities(2_000).generate();
+    let data = pem::datagen::GeneratorConfig::tiny()
+        .with_entities(2_000)
+        .generate();
     println!(
         "dataset: {} offers, {} products, {} true duplicate pairs",
         data.dataset.len(),
@@ -23,20 +24,20 @@ fn main() -> anyhow::Result<()> {
         data.truth.len()
     );
 
-    // 2. The paper's workflow: blocking by product type → partition
-    //    tuning → match task generation → parallel matching (WAM).
-    //    Threads engine = really match, on this machine.
-    let cfg = WorkflowConfig::blocking_based(StrategyKind::Wam)
-        .with_engine(EngineChoice::Threads)
-        .with_cache(16);
-    let ce = ComputingEnv::new(1, 4, 3 * GIB);
-    let out = run_workflow(&data, &cfg, &ce)?;
+    // 2. Plan the paper's workflow: blocking by product type →
+    //    partition tuning → match task generation.  `.plan()` is the
+    //    cheap half — inspect partitions and task skew before paying
+    //    for execution (`pem plan` is the CLI form of this step).
+    let planned = Workflow::for_dataset(&data.dataset)
+        .strategy(BlockingBased::product_type())
+        .backend(Threads) // really match, on this machine
+        .env(ComputingEnv::new(1, 4, 3 * GIB))
+        .cache(16)
+        .plan()?;
+    println!("\n{}\n", planned.plan().summary());
 
-    // 3. Inspect.
-    println!(
-        "partitions: {} ({} misc), match tasks: {}",
-        out.n_partitions, out.n_misc_partitions, out.n_tasks
-    );
+    // 3. Execute the plan and inspect the merged result.
+    let out = planned.execute()?;
     println!("metrics: {}", out.metrics.summary());
     let q = out.result.quality(&data.truth);
     println!(

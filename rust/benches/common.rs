@@ -81,6 +81,16 @@ pub fn apply_net(cfg: &mut pem::coordinator::WorkflowConfig) {
     cfg.data_net = data_net();
 }
 
+/// The scaled cost models + a pinned calibration as `Sim` backend
+/// options (the builder-API form of `apply_net` + `with_cost`).
+pub fn sim_options(cost: CostParams) -> pem::engine::backend::SimOptions {
+    pem::engine::backend::SimOptions {
+        data_net: data_net(),
+        cost_override: Some(cost),
+        ..Default::default()
+    }
+}
+
 /// Calibrate both strategies once on a dataset sample.
 pub fn calibrated(data: &GeneratedData) -> (CostParams, CostParams) {
     let wam =

@@ -5,13 +5,18 @@
 //! 100 → 200 strongly improves both strategies (fewer tasks, less
 //! overhead); WAM keeps improving to 1000; LRM's memory consumption
 //! grows with m² and its time deteriorates past 500.
+//!
+//! Runs through the plan/execute builder: each cell's `MatchPlan`
+//! supplies the task count and the §3.1 peak-memory model that the
+//! paper's figure annotates.
 
 mod common;
 
 use pem::cluster::ComputingEnv;
-use pem::coordinator::{run_workflow, PartitioningChoice, WorkflowConfig};
+use pem::coordinator::Workflow;
+use pem::engine::backend::Sim;
 use pem::matching::StrategyKind;
-use pem::partition::task_memory_bytes;
+use pem::partition::SizeBased;
 use pem::util::{fmt_bytes, fmt_nanos};
 
 fn main() {
@@ -31,16 +36,20 @@ fn main() {
         println!("strategy {}", kind.name());
         println!("m        time          tasks   peak-mem(model)");
         for &m in &sizes {
-            let mut cfg = WorkflowConfig::size_based(kind).with_cost(
-                if kind == StrategyKind::Wam { cost_wam } else { cost_lrm },
-            );
-            cfg.partitioning =
-                PartitioningChoice::SizeBased { max_size: Some(m) };
-            common::apply_net(&mut cfg);
-            let out = run_workflow(&data, &cfg, &ce).expect("workflow");
-            // modeled peak memory: 4 concurrent tasks of m×m pairs
-            let peak =
-                task_memory_bytes(m, m, kind) * ce.threads_per_node as u64;
+            let cost =
+                if kind == StrategyKind::Wam { cost_wam } else { cost_lrm };
+            let planned = Workflow::for_dataset(&data.dataset)
+                .matching(kind)
+                .strategy(SizeBased::with_max_size(m))
+                .backend(Sim(common::sim_options(cost)))
+                .env(ce)
+                .plan()
+                .expect("plan");
+            // modeled peak memory: `threads` concurrent copies of the
+            // heaviest task's §3.1 footprint, straight from the plan
+            let peak = planned.plan().skew().max_task_mem
+                * ce.threads_per_node as u64;
+            let out = planned.execute().expect("workflow");
             println!(
                 "{:>5}  {:>12}  {:>6}  {:>12}",
                 m,

@@ -1,0 +1,333 @@
+//! The composable workflow builder: plan, inspect, then execute.
+//!
+//! ```no_run
+//! use pem::coordinator::Workflow;
+//! use pem::engine::backend::{Dist, DistOptions};
+//! use pem::partition::SortedNeighborhood;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let data = pem::datagen::GeneratorConfig::small().generate();
+//! let planned = Workflow::for_dataset(&data.dataset)
+//!     .strategy(SortedNeighborhood::by_title(200))
+//!     .backend(Dist(DistOptions { replicas: 2, batch: 4, ..Default::default() }))
+//!     .env(pem::cluster::ComputingEnv::new(2, 2, 3 * pem::util::GIB))
+//!     .cache(16)
+//!     .plan()?;           // ← stop here to inspect task skew…
+//! println!("{}", planned.plan().summary());
+//! let outcome = planned.execute()?;   // …or pay for execution
+//! println!("{} matches", outcome.result.len());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The split mirrors the paper's Figure-1 pipeline: `.plan()` runs the
+//! cheap pre-processing half (blocking/partitioning + task generation)
+//! and returns a [`PlannedWorkflow`] holding an inspectable
+//! [`MatchPlan`]; `.execute()` hands that plan to the configured
+//! [`ExecutionBackend`].  Strategies and backends are open traits —
+//! see [`crate::partition::strategy`] and [`crate::engine::backend`].
+
+use crate::cluster::ComputingEnv;
+use crate::coordinator::plan::MatchPlan;
+use crate::coordinator::scheduler::Policy;
+use crate::engine::backend::{
+    ExecContext, ExecutionBackend, Threads,
+};
+use crate::engine::CostParams;
+use crate::matching::{MatchStrategy, StrategyKind};
+use crate::metrics::RunMetrics;
+use crate::model::{Dataset, MatchResult};
+use crate::partition::{BlockingBased, PartitionStrategy};
+use anyhow::{bail, Result};
+use std::time::Instant;
+
+/// Outcome of an executed workflow: merged result + run metrics +
+/// structural info from the plan.
+pub struct RunOutcome {
+    /// Merged, deduplicated correspondences.
+    pub result: MatchResult,
+    /// Engine metrics (wall clock or virtual time, see engine docs).
+    pub metrics: RunMetrics,
+    /// Partitions after tuning.
+    pub n_partitions: usize,
+    /// Partitions that came from the misc block (§3.2).
+    pub n_misc_partitions: usize,
+    /// Match tasks generated.
+    pub n_tasks: usize,
+    /// Wall-clock time of the whole workflow (plan + match + merge
+    /// when run through [`Workflow::run`]; execution + merge when the
+    /// plan was built separately).
+    pub elapsed: std::time::Duration,
+    /// Cost params used by the simulator (after calibration).
+    pub cost: Option<CostParams>,
+}
+
+/// Fluent builder for a match workflow (see module docs).
+pub struct Workflow<'a> {
+    dataset: &'a Dataset,
+    strategy: Box<dyn PartitionStrategy>,
+    backend: Box<dyn ExecutionBackend>,
+    matching: MatchStrategy,
+    ce: ComputingEnv,
+    cache_capacity: usize,
+    policy: Policy,
+}
+
+impl<'a> Workflow<'a> {
+    /// Start a workflow over `dataset` with the paper's defaults:
+    /// blocking-based partitioning by product type, WAM matching, the
+    /// [`Threads`] backend, one 4-core node, affinity scheduling, no
+    /// cache.
+    pub fn for_dataset(dataset: &'a Dataset) -> Workflow<'a> {
+        Workflow {
+            dataset,
+            strategy: Box::new(BlockingBased::product_type()),
+            backend: Box::new(Threads),
+            matching: MatchStrategy::new(StrategyKind::Wam),
+            ce: ComputingEnv::new(1, 4, 3 * crate::util::GIB),
+            cache_capacity: 0,
+            policy: Policy::Affinity,
+        }
+    }
+
+    /// Select the partitioning strategy.
+    pub fn strategy(
+        self,
+        strategy: impl PartitionStrategy + 'static,
+    ) -> Self {
+        self.strategy_boxed(Box::new(strategy))
+    }
+
+    /// Select an already-boxed partitioning strategy (for callers that
+    /// choose at run time, like the CLI).
+    pub fn strategy_boxed(
+        mut self,
+        strategy: Box<dyn PartitionStrategy>,
+    ) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Select the execution backend.
+    pub fn backend(
+        self,
+        backend: impl ExecutionBackend + 'static,
+    ) -> Self {
+        self.backend_boxed(Box::new(backend))
+    }
+
+    /// Select an already-boxed execution backend.
+    pub fn backend_boxed(
+        mut self,
+        backend: Box<dyn ExecutionBackend>,
+    ) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Select the match strategy by kind (default threshold).
+    pub fn matching(mut self, kind: StrategyKind) -> Self {
+        self.matching = MatchStrategy::new(kind);
+        self
+    }
+
+    /// Select a fully-configured match strategy.
+    pub fn match_strategy(mut self, strategy: MatchStrategy) -> Self {
+        self.matching = strategy;
+        self
+    }
+
+    /// Set the computing environment the plan is sized for and the
+    /// backend executes on.
+    pub fn env(mut self, ce: ComputingEnv) -> Self {
+        self.ce = ce;
+        self
+    }
+
+    /// Set the per-service partition-cache capacity (`c`; 0 disables).
+    pub fn cache(mut self, capacity: usize) -> Self {
+        self.cache_capacity = capacity;
+        self
+    }
+
+    /// Set the task-assignment policy.
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Run the planning half: partitioning + task generation + memory
+    /// footprints.  Cheap; no matching happens.
+    pub fn plan(self) -> Result<PlannedWorkflow<'a>> {
+        let plan = MatchPlan::build(
+            self.dataset,
+            self.strategy.as_ref(),
+            self.matching.kind,
+            &self.ce,
+        )?;
+        Ok(PlannedWorkflow {
+            plan,
+            dataset: self.dataset,
+            backend: self.backend,
+            matching: self.matching,
+            ce: self.ce,
+            cache_capacity: self.cache_capacity,
+            policy: self.policy,
+        })
+    }
+
+    /// Plan and execute in one call, timing the whole pipeline.
+    pub fn run(self) -> Result<RunOutcome> {
+        let started = Instant::now();
+        let mut out = self.plan()?.execute()?;
+        out.elapsed = started.elapsed();
+        Ok(out)
+    }
+}
+
+/// A planned workflow: the [`MatchPlan`] plus everything needed to
+/// execute it.  Inspect the plan (print, serialize, check skew), then
+/// call [`PlannedWorkflow::execute`].
+pub struct PlannedWorkflow<'a> {
+    plan: MatchPlan,
+    dataset: &'a Dataset,
+    backend: Box<dyn ExecutionBackend>,
+    matching: MatchStrategy,
+    ce: ComputingEnv,
+    cache_capacity: usize,
+    policy: Policy,
+}
+
+impl<'a> PlannedWorkflow<'a> {
+    /// The plan artifact.
+    pub fn plan(&self) -> &MatchPlan {
+        &self.plan
+    }
+
+    /// Give up the plan without executing (e.g. to serialize it).
+    pub fn into_plan(self) -> MatchPlan {
+        self.plan
+    }
+
+    /// Execute the plan on the configured backend and merge the
+    /// per-task outputs (the workflow service's post-processing).
+    pub fn execute(self) -> Result<RunOutcome> {
+        let started = Instant::now();
+        if !self.plan.matches_dataset(self.dataset) {
+            bail!(
+                "plan was built for a different dataset (fingerprint \
+                 mismatch)"
+            );
+        }
+        let ctx = ExecContext {
+            dataset: self.dataset,
+            ce: &self.ce,
+            strategy: self.matching,
+            cache_capacity: self.cache_capacity,
+            policy: self.policy,
+        };
+        let run = self.backend.execute(&self.plan, &ctx)?;
+        let mut result = MatchResult::new();
+        for c in run.correspondences {
+            result.add(c);
+        }
+        Ok(RunOutcome {
+            result,
+            metrics: run.metrics,
+            n_partitions: self.plan.n_partitions(),
+            n_misc_partitions: self.plan.n_misc_partitions(),
+            n_tasks: self.plan.n_tasks(),
+            elapsed: started.elapsed(),
+            cost: run.cost,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::GeneratorConfig;
+    use crate::engine::backend::{Sim, SimOptions};
+    use crate::partition::{SizeBased, SortedNeighborhood};
+    use crate::util::GIB;
+
+    #[test]
+    fn plan_then_execute_finds_duplicates() {
+        let data = GeneratorConfig::tiny().with_seed(21).generate();
+        let planned = Workflow::for_dataset(&data.dataset)
+            .strategy(SizeBased::auto())
+            .backend(Threads)
+            .env(ComputingEnv::new(1, 2, GIB))
+            .plan()
+            .unwrap();
+        assert!(planned.plan().n_tasks() >= planned.plan().n_partitions());
+        let out = planned.execute().unwrap();
+        let q = out.result.quality(&data.truth);
+        assert!(q.recall > 0.8, "recall {}", q.recall);
+        assert!(q.precision > 0.5, "precision {}", q.precision);
+    }
+
+    #[test]
+    fn sorted_neighborhood_prunes_comparisons_but_keeps_recall() {
+        let data = GeneratorConfig::tiny().with_entities(900).generate();
+        let ce = ComputingEnv::new(1, 2, GIB);
+        let cartesian = Workflow::for_dataset(&data.dataset)
+            .strategy(SizeBased::with_max_size(150))
+            .backend(Threads)
+            .env(ce)
+            .run()
+            .unwrap();
+        let sn = Workflow::for_dataset(&data.dataset)
+            .strategy(
+                SortedNeighborhood::by_title(80).with_max_size(150),
+            )
+            .backend(Threads)
+            .env(ce)
+            .run()
+            .unwrap();
+        assert!(
+            sn.metrics.comparisons < cartesian.metrics.comparisons / 2,
+            "sn {} vs cartesian {}",
+            sn.metrics.comparisons,
+            cartesian.metrics.comparisons
+        );
+        // same floor as the sorted-neighborhood blocking operator's
+        // integration test: windowing trades some recall for pruning
+        let qs = sn.result.quality(&data.truth);
+        assert!(qs.recall > 0.4, "sn recall {}", qs.recall);
+    }
+
+    #[test]
+    fn executing_against_the_wrong_dataset_is_refused() {
+        let a = GeneratorConfig::tiny().with_entities(200).generate();
+        let b = GeneratorConfig::tiny().with_entities(300).generate();
+        let planned = Workflow::for_dataset(&a.dataset)
+            .strategy(SizeBased::with_max_size(50))
+            .env(ComputingEnv::new(1, 2, GIB))
+            .plan()
+            .unwrap();
+        // swap the dataset behind the plan's back
+        let hijacked = PlannedWorkflow {
+            dataset: &b.dataset,
+            ..planned
+        };
+        assert!(hijacked.execute().is_err());
+    }
+
+    #[test]
+    fn sim_backend_through_builder_reports_cost() {
+        let data = GeneratorConfig::tiny().generate();
+        let out = Workflow::for_dataset(&data.dataset)
+            .matching(StrategyKind::Lrm)
+            .backend(Sim(SimOptions {
+                calibrate: false,
+                ..SimOptions::default()
+            }))
+            .env(ComputingEnv::paper_testbed(4))
+            .run()
+            .unwrap();
+        assert!(out.metrics.makespan_ns > 0);
+        assert_eq!(out.result.len(), 0, "sim without execute");
+        assert!(out.cost.is_some());
+    }
+}

@@ -1,18 +1,32 @@
 //! The workflow service (paper §4): end-to-end match workflow execution.
 //!
-//! The workflow service is the central access point: it performs the
-//! pre-processing (blocking, partitioning, match task generation),
-//! maintains the central task list and the affinity-based scheduler
-//! ([`scheduler`]), drives one of the execution engines, and merges the
-//! per-task match results into the final output ([`workflow`]).
+//! The workflow service is the central access point.  Since the
+//! plan/execute split it is layered as:
+//!
+//! * [`builder`] — the fluent [`Workflow`] builder: pick a
+//!   [`PartitionStrategy`](crate::partition::PartitionStrategy), an
+//!   [`ExecutionBackend`](crate::engine::backend::ExecutionBackend),
+//!   the shared service knobs, then `.plan()` and `.execute()`;
+//! * [`plan`] — the inspectable, serializable [`MatchPlan`] artifact
+//!   the planning half produces (partitions + tasks + §3.1 memory
+//!   footprints + provenance);
+//! * [`scheduler`] — the central task list and affinity-based
+//!   scheduling the execution half runs on;
+//! * [`workflow`] — the legacy [`WorkflowConfig`] shim (deprecated;
+//!   `docs/MIGRATION.md` maps it onto the builder);
+//! * [`multi_source`] — the §3.3 multi-source workflow variants.
 
 #![warn(missing_docs)]
 
+pub mod builder;
 pub mod multi_source;
+pub mod plan;
 pub mod scheduler;
 pub mod workflow;
 
+pub use builder::{PlannedWorkflow, RunOutcome, Workflow};
 pub use multi_source::{run_two_source_workflow, TwoSourceMode};
+pub use plan::{MatchPlan, PlanProvenance, PlanSkew};
 pub use scheduler::{Policy, Scheduler, ServiceId};
 pub use workflow::{
     run_workflow, PartitioningChoice, WorkflowConfig, WorkflowOutcome,

@@ -1,0 +1,633 @@
+//! The first-class match plan: the inspectable artifact between
+//! planning and execution.
+//!
+//! [`MatchPlan`] captures everything the pre-processing half of the
+//! Figure-1 workflow decides — the tuned [`PartitionSet`], the
+//! generated [`MatchTask`] list, each task's §3.1 memory footprint, and
+//! the provenance (strategy, parameters, dataset fingerprint, computing
+//! environment) that produced them.  A plan can be printed (`pem plan`),
+//! analyzed for skew ([`MatchPlan::skew`]), serialized to a stable byte
+//! format ([`MatchPlan::to_bytes`] / [`MatchPlan::from_bytes`]) and
+//! handed to any [`crate::engine::backend::ExecutionBackend`] — the
+//! execute half — without re-planning.
+//!
+//! The serialization is canonical: building the same plan twice from
+//! the same dataset, strategy and environment yields byte-identical
+//! output (property-tested in `tests/plan_determinism.rs`), so plans
+//! can be diffed, cached and shipped.
+
+use crate::cluster::ComputingEnv;
+use crate::matching::StrategyKind;
+use crate::model::Dataset;
+use crate::partition::{
+    task_memory_bytes, MatchTask, PartitionId, PartitionKind,
+    PartitionSet, PartitionStrategy, PlanContext,
+};
+use crate::util::{fmt_bytes, fnv1a};
+use anyhow::{bail, Result};
+
+/// Magic prefix + format version of the serialized plan.
+const PLAN_MAGIC: &[u8; 8] = b"PEMPLAN\x01";
+
+/// Where a plan came from: enough to reproduce it and to refuse to
+/// execute it against the wrong dataset.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanProvenance {
+    /// Partition strategy name ([`PartitionStrategy::name`]).
+    pub strategy: String,
+    /// Strategy parameter string ([`PartitionStrategy::params`]).
+    pub params: String,
+    /// Match strategy (WAM or LRM) the plan was sized for.
+    pub match_kind: StrategyKind,
+    /// Entities in the planned dataset.
+    pub dataset_entities: u64,
+    /// FNV-1a fingerprint over the dataset's entity ids *and titles*
+    /// ([`dataset_fingerprint`]), so both structural and content
+    /// drift between planning and execution is caught.
+    pub dataset_fingerprint: u64,
+    /// Computing environment: nodes.
+    pub nodes: u32,
+    /// Computing environment: cores per node.
+    pub cores_per_node: u32,
+    /// Computing environment: match threads per node.
+    pub threads_per_node: u32,
+    /// Computing environment: memory per node, bytes.
+    pub max_mem: u64,
+}
+
+/// Task-skew statistics of a plan (what `pem plan` prints so operators
+/// can see load imbalance *before* paying for execution).
+#[derive(Clone, Copy, Debug)]
+pub struct PlanSkew {
+    /// Match tasks in the plan.
+    pub n_tasks: usize,
+    /// Total pair comparisons across all tasks.
+    pub total_pairs: u64,
+    /// Pair comparisons of the heaviest task.
+    pub max_pairs: u64,
+    /// Mean pair comparisons per task.
+    pub mean_pairs: f64,
+    /// `max_pairs / mean_pairs` — 1.0 is perfectly even; large values
+    /// mean one straggler task dominates the makespan.
+    pub skew_ratio: f64,
+    /// Largest §3.1 task memory footprint, bytes.
+    pub max_task_mem: u64,
+}
+
+/// A complete, executable match plan (see module docs).
+#[derive(Debug)]
+pub struct MatchPlan {
+    /// Where the plan came from.
+    pub provenance: PlanProvenance,
+    /// The tuned partitions.
+    pub partitions: PartitionSet,
+    /// The generated match tasks.
+    pub tasks: Vec<MatchTask>,
+    /// §3.1 memory footprint (`c_ms · m₁ · m₂`) per task, parallel to
+    /// [`MatchPlan::tasks`].
+    pub task_mem: Vec<u64>,
+}
+
+/// FNV-1a fingerprint over a dataset's entity ids and title values
+/// (order-sensitive).  Titles are included so a dataset whose ids
+/// survived but whose *content* changed (e.g. a re-exported CSV with
+/// corrected titles) no longer matches a stale plan — for a
+/// sort-key-sensitive strategy like sorted-neighborhood, executing
+/// against drifted content would silently lose coverage.  Callers
+/// executing a *deserialized* plan through a backend directly (rather
+/// than [`crate::coordinator::PlannedWorkflow::execute`], which
+/// checks) should verify [`MatchPlan::matches_dataset`] themselves.
+pub fn dataset_fingerprint(dataset: &Dataset) -> u64 {
+    let mut bytes =
+        Vec::with_capacity(16 + dataset.entities.len() * 24);
+    bytes.extend_from_slice(
+        &(dataset.entities.len() as u64).to_le_bytes(),
+    );
+    for e in &dataset.entities {
+        bytes.extend_from_slice(&e.id.0.to_le_bytes());
+        let title = e.title(&dataset.schema);
+        bytes.extend_from_slice(&(title.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(title.as_bytes());
+    }
+    fnv1a(&bytes)
+}
+
+impl MatchPlan {
+    /// Run the planning half of the workflow: partition the dataset
+    /// with `strategy`, generate the tasks, and compute the per-task
+    /// memory footprints under the §3.1 model.
+    pub fn build(
+        dataset: &Dataset,
+        strategy: &dyn PartitionStrategy,
+        match_kind: StrategyKind,
+        ce: &ComputingEnv,
+    ) -> Result<MatchPlan> {
+        let ctx = PlanContext { ce, match_kind };
+        let partitions = strategy.partition(dataset, &ctx)?;
+        let tasks = strategy.tasks(&partitions);
+        let task_mem: Vec<u64> = tasks
+            .iter()
+            .map(|t| {
+                task_memory_bytes(
+                    partitions.get(t.left).len(),
+                    partitions.get(t.right).len(),
+                    match_kind,
+                )
+            })
+            .collect();
+        Ok(MatchPlan {
+            provenance: PlanProvenance {
+                strategy: strategy.name().to_string(),
+                params: strategy.params(),
+                match_kind,
+                dataset_entities: dataset.entities.len() as u64,
+                dataset_fingerprint: dataset_fingerprint(dataset),
+                nodes: ce.nodes as u32,
+                cores_per_node: ce.cores_per_node as u32,
+                threads_per_node: ce.threads_per_node as u32,
+                max_mem: ce.max_mem,
+            },
+            partitions,
+            tasks,
+            task_mem,
+        })
+    }
+
+    /// Number of match tasks.
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Number of partitions.
+    pub fn n_partitions(&self) -> usize {
+        self.partitions.len()
+    }
+
+    /// Number of misc partitions (§3.2).
+    pub fn n_misc_partitions(&self) -> usize {
+        self.partitions.n_misc()
+    }
+
+    /// Total pair comparisons across all tasks.
+    pub fn total_pairs(&self) -> u64 {
+        self.tasks
+            .iter()
+            .map(|t| t.n_pairs(&self.partitions))
+            .sum()
+    }
+
+    /// Task-skew statistics.
+    pub fn skew(&self) -> PlanSkew {
+        let pairs: Vec<u64> = self
+            .tasks
+            .iter()
+            .map(|t| t.n_pairs(&self.partitions))
+            .collect();
+        let total: u64 = pairs.iter().sum();
+        let max = pairs.iter().copied().max().unwrap_or(0);
+        let mean = if pairs.is_empty() {
+            0.0
+        } else {
+            total as f64 / pairs.len() as f64
+        };
+        PlanSkew {
+            n_tasks: pairs.len(),
+            total_pairs: total,
+            max_pairs: max,
+            mean_pairs: mean,
+            skew_ratio: if mean > 0.0 { max as f64 / mean } else { 1.0 },
+            max_task_mem: self.task_mem.iter().copied().max().unwrap_or(0),
+        }
+    }
+
+    /// The `k` heaviest tasks as `(task, pairs, mem_bytes)`, heaviest
+    /// first — the stragglers an operator inspects before executing.
+    pub fn top_tasks(&self, k: usize) -> Vec<(MatchTask, u64, u64)> {
+        let mut ranked: Vec<(MatchTask, u64, u64)> = self
+            .tasks
+            .iter()
+            .zip(self.task_mem.iter())
+            .map(|(t, &m)| (*t, t.n_pairs(&self.partitions), m))
+            .collect();
+        ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.id.cmp(&b.0.id)));
+        ranked.truncate(k);
+        ranked
+    }
+
+    /// Check the plan was built for `dataset` (same entity-id
+    /// fingerprint); executing a plan against a different dataset is
+    /// refused by the workflow layer.
+    pub fn matches_dataset(&self, dataset: &Dataset) -> bool {
+        self.provenance.dataset_entities
+            == dataset.entities.len() as u64
+            && self.provenance.dataset_fingerprint
+                == dataset_fingerprint(dataset)
+    }
+
+    /// Multi-line human-readable summary (what `pem plan` prints).
+    pub fn summary(&self) -> String {
+        let p = &self.provenance;
+        let s = self.skew();
+        let mut out = String::new();
+        out.push_str(&format!(
+            "plan: {} ({}) for {} over {} entities (fingerprint \
+             {:016x})\n",
+            p.strategy,
+            p.params,
+            p.match_kind.name(),
+            p.dataset_entities,
+            p.dataset_fingerprint
+        ));
+        out.push_str(&format!(
+            "env:  CE = ({} nodes, {} cores, {}), {} thread(s)/node\n",
+            p.nodes,
+            p.cores_per_node,
+            fmt_bytes(p.max_mem),
+            p.threads_per_node
+        ));
+        out.push_str(&format!(
+            "partitions: {} ({} misc), max size {}\n",
+            self.n_partitions(),
+            self.n_misc_partitions(),
+            self.partitions.max_size()
+        ));
+        out.push_str(&format!(
+            "tasks: {} / {} pair comparisons; skew: max {} vs mean \
+             {:.0} pairs (ratio {:.2}); max task memory {}",
+            s.n_tasks,
+            s.total_pairs,
+            s.max_pairs,
+            s.mean_pairs,
+            s.skew_ratio,
+            fmt_bytes(s.max_task_mem)
+        ));
+        out
+    }
+
+    // -------------------------------------------------- serialization
+
+    /// Serialize to the canonical byte format (see module docs).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(
+            64 + self.tasks.len() * 20
+                + self.partitions.total_entities() * 4,
+        );
+        b.extend_from_slice(PLAN_MAGIC);
+        let p = &self.provenance;
+        put_str(&mut b, &p.strategy);
+        put_str(&mut b, &p.params);
+        b.push(match p.match_kind {
+            StrategyKind::Wam => 0,
+            StrategyKind::Lrm => 1,
+        });
+        put_u64(&mut b, p.dataset_entities);
+        put_u64(&mut b, p.dataset_fingerprint);
+        put_u32(&mut b, p.nodes);
+        put_u32(&mut b, p.cores_per_node);
+        put_u32(&mut b, p.threads_per_node);
+        put_u64(&mut b, p.max_mem);
+        put_u32(&mut b, self.partitions.len() as u32);
+        for part in self.partitions.iter() {
+            put_kind(&mut b, &part.kind);
+            put_u32(&mut b, part.entities.len() as u32);
+            for id in &part.entities {
+                put_u32(&mut b, id.0);
+            }
+        }
+        put_u32(&mut b, self.tasks.len() as u32);
+        for t in &self.tasks {
+            put_u32(&mut b, t.id);
+            put_u32(&mut b, t.left.0);
+            put_u32(&mut b, t.right.0);
+        }
+        debug_assert_eq!(self.task_mem.len(), self.tasks.len());
+        for &m in &self.task_mem {
+            put_u64(&mut b, m);
+        }
+        b
+    }
+
+    /// Deserialize a plan written by [`MatchPlan::to_bytes`].  Strict:
+    /// bad magic, truncation or trailing bytes are errors.
+    pub fn from_bytes(bytes: &[u8]) -> Result<MatchPlan> {
+        let mut d = PlanDec {
+            buf: bytes,
+            pos: 0,
+        };
+        let magic = d.take(PLAN_MAGIC.len())?;
+        if magic != PLAN_MAGIC {
+            bail!("not a pem plan (bad magic)");
+        }
+        let strategy = d.string()?;
+        let params = d.string()?;
+        let match_kind = match d.u8()? {
+            0 => StrategyKind::Wam,
+            1 => StrategyKind::Lrm,
+            other => bail!("unknown match-strategy tag {other}"),
+        };
+        let dataset_entities = d.u64()?;
+        let dataset_fingerprint = d.u64()?;
+        let nodes = d.u32()?;
+        let cores_per_node = d.u32()?;
+        let threads_per_node = d.u32()?;
+        let max_mem = d.u64()?;
+        let n_parts = d.len(6)?;
+        let mut partitions = PartitionSet::new();
+        for i in 0..n_parts {
+            let kind = d.kind()?;
+            let n = d.len(4)?;
+            let mut entities = Vec::with_capacity(n);
+            for _ in 0..n {
+                entities.push(crate::model::EntityId(d.u32()?));
+            }
+            let id = partitions.push(kind, entities);
+            if id.0 as usize != i {
+                bail!("partition ids out of order in plan");
+            }
+        }
+        let n_tasks = d.len(12)?;
+        let mut tasks = Vec::with_capacity(n_tasks);
+        for _ in 0..n_tasks {
+            let id = d.u32()?;
+            let left = PartitionId(d.u32()?);
+            let right = PartitionId(d.u32()?);
+            if left.0 as usize >= n_parts || right.0 as usize >= n_parts
+            {
+                bail!("task {id} references unknown partition");
+            }
+            tasks.push(MatchTask { id, left, right });
+        }
+        let mut task_mem = Vec::with_capacity(n_tasks);
+        for _ in 0..n_tasks {
+            task_mem.push(d.u64()?);
+        }
+        d.finish()?;
+        Ok(MatchPlan {
+            provenance: PlanProvenance {
+                strategy,
+                params,
+                match_kind,
+                dataset_entities,
+                dataset_fingerprint,
+                nodes,
+                cores_per_node,
+                threads_per_node,
+                max_mem,
+            },
+            partitions,
+            tasks,
+            task_mem,
+        })
+    }
+}
+
+// ------------------------------------------------- codec primitives
+// (the u32/u64/string encoders are the rpc module's — one set of
+// primitives for both canonical binary formats)
+
+use crate::rpc::{put_str, put_u32, put_u64};
+
+fn put_kind(b: &mut Vec<u8>, kind: &PartitionKind) {
+    match kind {
+        PartitionKind::SizeBased => b.push(0),
+        PartitionKind::Block { key } => {
+            b.push(1);
+            put_str(b, key);
+        }
+        PartitionKind::SubBlock { key, index, count } => {
+            b.push(2);
+            put_str(b, key);
+            put_u32(b, *index as u32);
+            put_u32(b, *count as u32);
+        }
+        PartitionKind::Aggregate { keys } => {
+            b.push(3);
+            put_u32(b, keys.len() as u32);
+            for k in keys {
+                put_str(b, k);
+            }
+        }
+        PartitionKind::Misc { index, count } => {
+            b.push(4);
+            put_u32(b, *index as u32);
+            put_u32(b, *count as u32);
+        }
+        PartitionKind::Window { index, count } => {
+            b.push(5);
+            put_u32(b, *index as u32);
+            put_u32(b, *count as u32);
+        }
+    }
+}
+
+struct PlanDec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> PlanDec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!("truncated plan");
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A count whose elements need at least `min_elem_bytes` each,
+    /// validated against the remaining buffer before allocation.
+    fn len(&mut self, min_elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(min_elem_bytes) > self.buf.len() - self.pos {
+            bail!("truncated plan (lying count)");
+        }
+        Ok(n)
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.len(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| anyhow::anyhow!("plan string is not UTF-8"))
+    }
+
+    fn kind(&mut self) -> Result<PartitionKind> {
+        Ok(match self.u8()? {
+            0 => PartitionKind::SizeBased,
+            1 => PartitionKind::Block {
+                key: self.string()?,
+            },
+            2 => PartitionKind::SubBlock {
+                key: self.string()?,
+                index: self.u32()? as usize,
+                count: self.u32()? as usize,
+            },
+            3 => {
+                let n = self.len(4)?;
+                let mut keys = Vec::with_capacity(n);
+                for _ in 0..n {
+                    keys.push(self.string()?);
+                }
+                PartitionKind::Aggregate { keys }
+            }
+            4 => PartitionKind::Misc {
+                index: self.u32()? as usize,
+                count: self.u32()? as usize,
+            },
+            5 => PartitionKind::Window {
+                index: self.u32()? as usize,
+                count: self.u32()? as usize,
+            },
+            other => bail!("unknown partition-kind tag {other}"),
+        })
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "{} trailing bytes after plan",
+                self.buf.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::GeneratorConfig;
+    use crate::partition::{BlockingBased, SizeBased, SortedNeighborhood};
+    use crate::util::GIB;
+
+    fn ce() -> ComputingEnv {
+        ComputingEnv::new(2, 2, GIB)
+    }
+
+    #[test]
+    fn build_and_inspect_size_based_plan() {
+        let data = GeneratorConfig::tiny().with_entities(400).generate();
+        let plan = MatchPlan::build(
+            &data.dataset,
+            &SizeBased::with_max_size(100),
+            StrategyKind::Wam,
+            &ce(),
+        )
+        .unwrap();
+        assert_eq!(plan.n_partitions(), 4);
+        assert_eq!(plan.n_tasks(), 4 + 4 * 3 / 2);
+        assert_eq!(plan.total_pairs(), 400 * 399 / 2);
+        assert_eq!(plan.task_mem.len(), plan.n_tasks());
+        // Cartesian tasks over equal partitions: near-zero skew (intra
+        // tasks are half the pairs of cross tasks)
+        let skew = plan.skew();
+        assert_eq!(skew.total_pairs, 400 * 399 / 2);
+        assert!(skew.skew_ratio < 1.5, "ratio {}", skew.skew_ratio);
+        assert!(skew.max_task_mem >= 20 * 100 * 100);
+        assert!(plan.matches_dataset(&data.dataset));
+        assert!(!plan.summary().is_empty());
+        let top = plan.top_tasks(3);
+        assert_eq!(top.len(), 3);
+        assert!(top[0].1 >= top[1].1 && top[1].1 >= top[2].1);
+    }
+
+    #[test]
+    fn serialization_roundtrips_byte_identical() {
+        let data = GeneratorConfig::tiny().with_entities(600).generate();
+        for strategy in [
+            Box::new(SizeBased::with_max_size(150))
+                as Box<dyn PartitionStrategy>,
+            Box::new(
+                BlockingBased::product_type().with_bounds(150, 30),
+            ),
+            Box::new(
+                SortedNeighborhood::by_title(40).with_max_size(120),
+            ),
+        ] {
+            let plan = MatchPlan::build(
+                &data.dataset,
+                strategy.as_ref(),
+                StrategyKind::Lrm,
+                &ce(),
+            )
+            .unwrap();
+            let bytes = plan.to_bytes();
+            let back = MatchPlan::from_bytes(&bytes).unwrap();
+            assert_eq!(back.to_bytes(), bytes, "{}", strategy.name());
+            assert_eq!(back.provenance, plan.provenance);
+            assert_eq!(back.tasks, plan.tasks);
+            assert_eq!(back.task_mem, plan.task_mem);
+        }
+    }
+
+    #[test]
+    fn corrupt_plans_rejected() {
+        let data = GeneratorConfig::tiny().with_entities(100).generate();
+        let plan = MatchPlan::build(
+            &data.dataset,
+            &SizeBased::with_max_size(50),
+            StrategyKind::Wam,
+            &ce(),
+        )
+        .unwrap();
+        let bytes = plan.to_bytes();
+        assert!(MatchPlan::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] = b'X';
+        assert!(MatchPlan::from_bytes(&bad_magic).is_err());
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(MatchPlan::from_bytes(&trailing).is_err());
+        assert!(MatchPlan::from_bytes(b"").is_err());
+    }
+
+    /// Same entity ids, different attribute values: the fingerprint
+    /// must change (a plan over stale content is not executable).
+    #[test]
+    fn fingerprint_detects_changed_attribute_values() {
+        use crate::model::{
+            Dataset, Entity, EntityId, Schema, ATTR_TITLE,
+        };
+        let schema = Schema::new(vec![ATTR_TITLE]);
+        let mk = |title: &str| {
+            let mut ds = Dataset::new(schema.clone());
+            let mut e = Entity::new(EntityId(0), &schema);
+            e.set(&schema, ATTR_TITLE, title.to_string());
+            ds.push(e);
+            ds
+        };
+        assert_ne!(
+            dataset_fingerprint(&mk("samsung f1")),
+            dataset_fingerprint(&mk("samsung f2")),
+            "content drift must change the fingerprint"
+        );
+    }
+
+    #[test]
+    fn fingerprint_detects_other_dataset() {
+        let a = GeneratorConfig::tiny().with_entities(100).generate();
+        let b = GeneratorConfig::tiny().with_entities(101).generate();
+        let plan = MatchPlan::build(
+            &a.dataset,
+            &SizeBased::with_max_size(50),
+            StrategyKind::Wam,
+            &ce(),
+        )
+        .unwrap();
+        assert!(plan.matches_dataset(&a.dataset));
+        assert!(!plan.matches_dataset(&b.dataset));
+    }
+}

@@ -25,6 +25,14 @@
 //! between picks so affinity and replica-coverage ordering hold
 //! *within* the batch, not just at its head.
 //!
+//! The §3.1 **memory model** reaches the scheduler through
+//! [`Scheduler::reject_task`] (wire `TaskRejected`, protocol v4): a
+//! node that cannot fit an assigned task's memory footprint hands it
+//! back, the task is re-queued *marked oversize for that service*, and
+//! [`Scheduler::next_task`] never offers it to that service again —
+//! other nodes (with larger budgets) still receive it, so an oversize
+//! task is re-routed instead of lost or endlessly ping-ponged.
+//!
 //! With a **replicated data plane** the scheduler additionally tracks
 //! how many data replicas hold each partition
 //! ([`Scheduler::add_replica_coverage`], fed by `ReplicaAnnounce`).
@@ -63,6 +71,9 @@ pub struct Scheduler {
     generation: HashMap<ServiceId, u32>,
     /// Services declared dead and not (re-)added since.
     dead: HashSet<ServiceId>,
+    /// task id → services that rejected it as oversize (§3.1 memory
+    /// model): the task is never re-offered to those services.
+    oversize: HashMap<u32, HashSet<ServiceId>>,
     /// partition → number of data replicas announced as holding it.
     replica_coverage: HashMap<PartitionId, u32>,
     policy: Policy,
@@ -82,6 +93,7 @@ impl Scheduler {
             cache_status: HashMap::new(),
             generation: HashMap::new(),
             dead: HashSet::new(),
+            oversize: HashMap::new(),
             replica_coverage: HashMap::new(),
             policy,
             affinity_assignments: 0,
@@ -124,8 +136,15 @@ impl Scheduler {
         if self.open.is_empty() || self.dead.contains(&service) {
             return None;
         }
+        // tasks this service rejected as oversize are invisible to it
+        // (`rejected_by` is one lookup in a normally-empty map, so the
+        // FIFO pick stays effectively O(1) and the affinity scan stays
+        // one allocation-free pass)
         let idx = match self.policy {
-            Policy::Fifo => 0,
+            Policy::Fifo => self
+                .open
+                .iter()
+                .position(|t| !self.rejected_by(t.id, service))?,
             Policy::Affinity => {
                 let cached = self.cache_status.get(&service);
                 let coverage = &self.replica_coverage;
@@ -146,28 +165,76 @@ impl Scheduler {
                     (hits, cov)
                 };
                 // best score wins; ties go to the oldest task (FIFO)
-                let mut best = 0usize;
-                let mut best_score = score(&self.open[0]);
-                for (i, t) in self.open.iter().enumerate().skip(1) {
+                let mut best: Option<(usize, (usize, u32))> = None;
+                for (i, t) in self.open.iter().enumerate() {
+                    if self.rejected_by(t.id, service) {
+                        continue;
+                    }
                     let s = score(t);
-                    if s > best_score {
-                        best = i;
-                        best_score = s;
+                    let better = match &best {
+                        None => true,
+                        Some((_, best_score)) => s > *best_score,
+                    };
+                    if better {
+                        best = Some((i, s));
                         if s.0 == 2 && coverage.is_empty() {
                             break; // cannot do better than both cached
                         }
                     }
                 }
+                let (idx, best_score) = best?;
                 if best_score.0 > 0 {
                     self.affinity_assignments += 1;
                 }
-                best
+                idx
             }
         };
         let task = self.open.remove(idx).expect("index valid");
         let epoch = self.generation.get(&service).copied().unwrap_or(0);
         self.in_flight.insert(task.id, (service, epoch, task));
         Some(task)
+    }
+
+    /// `true` when `service` has rejected `task` as oversize.
+    fn rejected_by(&self, task: u32, service: ServiceId) -> bool {
+        self.oversize
+            .get(&task)
+            .is_some_and(|s| s.contains(&service))
+    }
+
+    /// A match service reports that an assigned task's §3.1 memory
+    /// footprint exceeds its budget (wire `TaskRejected`, v4): put the
+    /// task back on the open list *marked oversize for that service*,
+    /// so it is re-offered only to other services.  Subject to the
+    /// same freshness rules as [`Self::try_report_complete`] — a
+    /// zombie's rejection is dropped (returns `false`).
+    ///
+    /// A task every service has rejected can never complete; the run's
+    /// timeout surfaces that as a failure, which is the §3.1 contract
+    /// ("this plan does not fit this cluster") instead of an OOM kill.
+    pub fn reject_task(&mut self, service: ServiceId, task_id: u32) -> bool {
+        if self.dead.contains(&service) {
+            return false;
+        }
+        let epoch = self.generation.get(&service).copied().unwrap_or(0);
+        let fresh = matches!(
+            self.in_flight.get(&task_id),
+            Some((s, e, _)) if *s == service && *e == epoch
+        );
+        if fresh {
+            let (_, _, task) = self.in_flight.remove(&task_id).unwrap();
+            self.oversize.entry(task_id).or_default().insert(service);
+            // to the back: every other service sees it soon enough,
+            // and the rejecting service's next pull is not dominated
+            // by re-ranking the same task it just refused
+            self.open.push_back(task);
+        }
+        fresh
+    }
+
+    /// Tasks at least one service has rejected as oversize.
+    pub fn oversize_tasks(&self) -> usize {
+        self.oversize.len()
     }
 
     /// Assign up to `max` tasks to `service` in one call (the v3
@@ -696,6 +763,60 @@ mod tests {
         // dead services get empty batches
         s.fail_service(ServiceId(0));
         assert!(s.next_tasks_for(ServiceId(0), 4).is_empty());
+    }
+
+    /// §3.1 memory-model parity: a rejected-oversize task is re-queued
+    /// and re-routed to other services, but never re-offered to the
+    /// service that rejected it.
+    #[test]
+    fn oversize_rejection_requeues_and_excludes_the_rejector() {
+        let mut s = Scheduler::new(
+            vec![task(0, 0, 0), task(1, 1, 1)],
+            Policy::Fifo,
+        );
+        s.add_service(ServiceId(0));
+        s.add_service(ServiceId(1));
+        let t = s.next_task(ServiceId(0)).unwrap();
+        assert_eq!(t.id, 0);
+        assert!(s.reject_task(ServiceId(0), t.id), "fresh rejection");
+        assert_eq!(s.oversize_tasks(), 1);
+        assert_eq!(s.remaining(), 2, "nothing lost");
+        // a duplicate rejection of the same task is stale
+        assert!(!s.reject_task(ServiceId(0), t.id));
+        // the rejector only ever sees the other task again
+        let n = s.next_task(ServiceId(0)).unwrap();
+        assert_eq!(n.id, 1);
+        assert!(s.next_task(ServiceId(0)).is_none(), "task 0 invisible");
+        // another service picks the oversize task up
+        let re = s.next_task(ServiceId(1)).unwrap();
+        assert_eq!(re.id, 0);
+        s.report_complete(ServiceId(1), re.id, vec![]);
+        s.report_complete(ServiceId(0), n.id, vec![]);
+        assert!(s.is_done());
+    }
+
+    /// A task rejected by every service stays open (visible in
+    /// `remaining`), it is not spun between nodes.
+    #[test]
+    fn task_rejected_by_all_services_stays_open() {
+        let mut s = Scheduler::new(vec![task(0, 0, 0)], Policy::Affinity);
+        for id in 0..2 {
+            s.add_service(ServiceId(id));
+        }
+        for id in 0..2 {
+            let t = s.next_task(ServiceId(id)).unwrap();
+            assert_eq!(t.id, 0);
+            assert!(s.reject_task(ServiceId(id), t.id));
+        }
+        assert!(s.next_task(ServiceId(0)).is_none());
+        assert!(s.next_task(ServiceId(1)).is_none());
+        assert_eq!(s.remaining(), 1);
+        assert!(!s.is_done());
+        // a fresh service (bigger budget) can still complete it
+        s.add_service(ServiceId(2));
+        let t = s.next_task(ServiceId(2)).unwrap();
+        assert!(s.try_report_complete(ServiceId(2), t.id, vec![]));
+        assert!(s.is_done());
     }
 
     #[test]

@@ -1,28 +1,44 @@
-//! End-to-end match workflows: Figure 1 of the paper.
+//! Legacy workflow configuration — a thin shim over the plan/execute
+//! split.
 //!
-//! ```text
-//! input ─▶ [blocking]? ─▶ partitioning (size-based | blocking-based
-//!        with partition tuning) ─▶ match task generation ─▶ parallel
-//!        execution (threads | virtual-time sim) ─▶ merged match result
-//! ```
+//! **Deprecated in favor of the [`super::Workflow`] builder** (kept for
+//! one release so downstream code can migrate; see
+//! `docs/MIGRATION.md`).  [`WorkflowConfig`] closed the workflow over
+//! two enums — [`PartitioningChoice`] for the partitioning stage and
+//! [`EngineChoice`] for execution — plus a flat bag of engine-specific
+//! knobs.  The open API replaces the enums with the
+//! [`PartitionStrategy`](crate::partition::PartitionStrategy) and
+//! [`ExecutionBackend`](crate::engine::backend::ExecutionBackend)
+//! traits and moves the knobs into per-backend option structs
+//! ([`crate::engine::backend::SimOptions`],
+//! [`crate::engine::backend::DistOptions`]).  [`run_workflow`] and
+//! [`build_partitions`] now just translate a config into the builder
+//! and delegate — both paths are property-tested result-identical in
+//! `tests/plan_determinism.rs`.
 
 use crate::blocking::BlockingMethod;
 use crate::cluster::ComputingEnv;
-use crate::engine::{calibrate, dist, sim, threads, CostParams};
+use crate::engine::backend::{
+    Dist, DistOptions, ExecutionBackend, Sim, SimOptions, Threads,
+};
+use crate::engine::CostParams;
 use crate::matching::{MatchStrategy, StrategyKind};
-use crate::metrics::RunMetrics;
-use crate::model::{Dataset, EntityId, MatchResult};
 use crate::net::CostModel;
 use crate::partition::{
-    generate_tasks, max_partition_size, partition_size_based, tune,
-    MatchTask, PartitionSet, TuningConfig,
+    PartitionSet, PartitionStrategy, PlanContext,
 };
-use crate::store::DataService;
-use crate::worker::RustExecutor;
-use anyhow::{bail, Result};
+use anyhow::Result;
 use std::time::Instant;
 
+pub use super::builder::RunOutcome;
+pub use crate::partition::strategy::{default_max_size, default_min_size};
+
 /// Which partitioning strategy the workflow applies.
+///
+/// Legacy closed enum; new code passes a
+/// [`PartitionStrategy`](crate::partition::PartitionStrategy) impl to
+/// [`super::Workflow::strategy`] instead (which is how the
+/// sorted-neighborhood strategy is available there but not here).
 #[derive(Clone, Debug)]
 pub enum PartitioningChoice {
     /// §3.1 — Cartesian product with equally-sized partitions.
@@ -43,7 +59,33 @@ pub enum PartitioningChoice {
     },
 }
 
+impl PartitioningChoice {
+    /// The equivalent open-API strategy.
+    pub fn to_strategy(&self) -> Box<dyn PartitionStrategy> {
+        match self {
+            PartitioningChoice::SizeBased { max_size } => {
+                Box::new(crate::partition::SizeBased {
+                    max_size: *max_size,
+                })
+            }
+            PartitioningChoice::BlockingBased {
+                method,
+                max_size,
+                min_size,
+            } => Box::new(crate::partition::BlockingBased {
+                method: method.clone(),
+                max_size: *max_size,
+                min_size: Some(*min_size),
+            }),
+        }
+    }
+}
+
 /// Which engine executes the match tasks.
+///
+/// Legacy closed enum; new code passes an
+/// [`ExecutionBackend`](crate::engine::backend::ExecutionBackend) impl
+/// to [`super::Workflow::backend`] instead.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineChoice {
     /// Real OS threads; real matching; wall-clock metrics.
@@ -58,7 +100,7 @@ pub enum EngineChoice {
     Distributed,
 }
 
-/// Full workflow configuration.
+/// Full workflow configuration (legacy shim; see module docs).
 #[derive(Clone, Debug)]
 pub struct WorkflowConfig {
     /// Match strategy (WAM or LRM) with its decision threshold.
@@ -75,10 +117,9 @@ pub struct WorkflowConfig {
     /// primary; N > 1 adds N−1 synced replicas and fetch failover).
     pub data_replicas: usize,
     /// Distributed engine: tasks pulled per control round trip
-    /// (protocol v3 batched assignment; 1 = classic per-task pull).
+    /// (batched assignment; 1 = classic per-task pull).
     pub batch: usize,
-    /// Distributed engine: host the services bind (default loopback;
-    /// the ROADMAP fix for the unconditional `0.0.0.0` binds).
+    /// Distributed engine: host the services bind (default loopback).
     pub bind: String,
     /// Control-plane cost model (workflow-service RMI).
     pub net: CostModel,
@@ -164,178 +205,74 @@ impl WorkflowConfig {
         self.batch = k;
         self
     }
-}
 
-/// The paper's favorable maximum partition sizes (Fig 6): 1,000 for WAM,
-/// 500 for LRM.
-pub fn default_max_size(kind: StrategyKind) -> usize {
-    match kind {
-        StrategyKind::Wam => 1000,
-        StrategyKind::Lrm => 500,
+    /// The equivalent open-API backend for this config's engine choice
+    /// and flat knobs.
+    pub fn to_backend(&self) -> Box<dyn ExecutionBackend> {
+        match self.engine {
+            EngineChoice::Threads => Box::new(Threads),
+            EngineChoice::Distributed => Box::new(Dist(DistOptions {
+                replicas: self.data_replicas.max(1),
+                batch: self.batch.max(1),
+                bind: self.bind.clone(),
+                memory_budget: None,
+            })),
+            EngineChoice::Simulated => Box::new(Sim(SimOptions {
+                net: self.net,
+                data_net: self.data_net,
+                execute: self.execute_in_sim,
+                calibrate: self.calibrate,
+                cost_override: self.cost_override,
+                failures: self.failures.clone(),
+            })),
+        }
     }
 }
 
-/// The paper's favorable minimum partition sizes (Fig 7): 200 for WAM,
-/// 100 for LRM.
-pub fn default_min_size(kind: StrategyKind) -> usize {
-    match kind {
-        StrategyKind::Wam => 200,
-        StrategyKind::Lrm => 100,
-    }
-}
-
-/// Workflow outcome: merged result + run metrics + structural info.
-pub struct WorkflowOutcome {
-    /// Merged, deduplicated correspondences.
-    pub result: MatchResult,
-    /// Engine metrics (wall clock or virtual time, see engine docs).
-    pub metrics: RunMetrics,
-    /// Partitions after tuning.
-    pub n_partitions: usize,
-    /// Partitions that came from the misc block (§3.2).
-    pub n_misc_partitions: usize,
-    /// Match tasks generated.
-    pub n_tasks: usize,
-    /// Wall-clock time of the whole workflow (pre+match+merge).
-    pub elapsed: std::time::Duration,
-    /// Cost params used by the simulator (after calibration).
-    pub cost: Option<CostParams>,
-}
+/// Workflow outcome — alias of the builder's [`RunOutcome`] so legacy
+/// call sites keep compiling.
+pub type WorkflowOutcome = RunOutcome;
 
 /// Build the partition set for a workflow (pre-processing half).
+/// Legacy shim over [`PartitionStrategy::partition`].
 pub fn build_partitions(
-    dataset: &Dataset,
+    dataset: &crate::model::Dataset,
     cfg: &WorkflowConfig,
     ce: &ComputingEnv,
 ) -> Result<PartitionSet> {
-    let kind = cfg.strategy.kind;
-    // An explicit max_size overrides the memory model (experiments like
-    // Fig 6 sweep past the memory-restricted size on purpose, paying the
-    // paging penalty); `None` derives m from §3.1's formula, clamped to
-    // the strategy's empirically favorable size.
-    let mem_cap = max_partition_size(ce, kind);
-    let auto = || default_max_size(kind).min(mem_cap.max(1));
-    match &cfg.partitioning {
-        PartitioningChoice::SizeBased { max_size } => {
-            let m = max_size.unwrap_or_else(auto);
-            let ids: Vec<EntityId> =
-                dataset.entities.iter().map(|e| e.id).collect();
-            Ok(partition_size_based(&ids, m))
-        }
-        PartitioningChoice::BlockingBased {
-            method,
-            max_size,
-            min_size,
-        } => {
-            let m = max_size.unwrap_or_else(auto);
-            if *min_size > m {
-                bail!("min_size {min_size} exceeds max partition size {m}");
-            }
-            let blocks = method.run(dataset);
-            Ok(tune(&blocks, TuningConfig::new(m, *min_size)))
-        }
-    }
+    let ctx = PlanContext {
+        ce,
+        match_kind: cfg.strategy.kind,
+    };
+    cfg.partitioning.to_strategy().partition(dataset, &ctx)
 }
 
-/// Run a complete match workflow.
+/// Run a complete match workflow.  Legacy shim: translates the config
+/// into the [`super::Workflow`] builder and delegates.
 pub fn run_workflow(
-    dataset: &Dataset,
+    dataset: &crate::model::Dataset,
     cfg: &WorkflowConfig,
     ce: &ComputingEnv,
 ) -> Result<WorkflowOutcome> {
     let started = Instant::now();
-    let parts = build_partitions(dataset, cfg, ce)?;
-    let tasks: Vec<MatchTask> = generate_tasks(&parts);
-    let store = std::sync::Arc::new(DataService::build(dataset, &parts));
-    let n_tasks = tasks.len();
-    let n_partitions = parts.len();
-    let n_misc = parts.n_misc();
-
-    let (metrics, correspondences, cost) = match cfg.engine {
-        EngineChoice::Threads => {
-            let exec = RustExecutor::new(cfg.strategy);
-            let out = threads::run(
-                ce,
-                &parts,
-                tasks,
-                &store,
-                &exec,
-                threads::ThreadConfig {
-                    cache_capacity: cfg.cache_capacity,
-                    policy: cfg.policy,
-                },
-            );
-            (out.metrics, out.correspondences, None)
-        }
-        EngineChoice::Distributed => {
-            let exec: std::sync::Arc<dyn crate::worker::TaskExecutor> =
-                std::sync::Arc::new(RustExecutor::new(cfg.strategy));
-            let out = dist::run(
-                ce,
-                &parts,
-                tasks,
-                store.clone(),
-                exec,
-                dist::DistConfig {
-                    cache_capacity: cfg.cache_capacity,
-                    policy: cfg.policy,
-                    data_replicas: cfg.data_replicas.max(1),
-                    batch: cfg.batch.max(1),
-                    bind: cfg.bind.clone(),
-                    ..dist::DistConfig::default()
-                },
-            )?;
-            (out.metrics, out.correspondences, None)
-        }
-        EngineChoice::Simulated => {
-            let cost = if let Some(cost) = cfg.cost_override {
-                cost
-            } else if cfg.calibrate {
-                calibrate::calibrated_params(
-                    dataset,
-                    cfg.strategy.kind,
-                    120,
-                    0xCA11B,
-                )
-            } else {
-                CostParams::default_for(cfg.strategy.kind)
-            };
-            let mut sim_cfg = sim::SimConfig::new(cfg.strategy.kind, cost);
-            sim_cfg.net = cfg.net;
-            sim_cfg.data_net = cfg.data_net;
-            sim_cfg.cache_capacity = cfg.cache_capacity;
-            sim_cfg.policy = cfg.policy;
-            sim_cfg.failures = cfg.failures.clone();
-            if cfg.execute_in_sim {
-                sim_cfg.execute =
-                    Some(Box::new(RustExecutor::new(cfg.strategy)));
-            }
-            let out = sim::run(ce, &parts, tasks, &store, sim_cfg);
-            (out.metrics, out.correspondences, Some(cost))
-        }
-    };
-
-    // merge per-task outputs (the workflow service's post-processing)
-    let mut result = MatchResult::new();
-    for c in correspondences {
-        result.add(c);
-    }
-
-    Ok(WorkflowOutcome {
-        result,
-        metrics,
-        n_partitions,
-        n_misc_partitions: n_misc,
-        n_tasks,
-        elapsed: started.elapsed(),
-        cost,
-    })
+    let mut out = super::Workflow::for_dataset(dataset)
+        .match_strategy(cfg.strategy)
+        .strategy_boxed(cfg.partitioning.to_strategy())
+        .backend_boxed(cfg.to_backend())
+        .env(*ce)
+        .cache(cfg.cache_capacity)
+        .policy(cfg.policy)
+        .plan()?
+        .execute()?;
+    out.elapsed = started.elapsed();
+    Ok(out)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::datagen::GeneratorConfig;
+    use crate::partition::max_partition_size;
 
     fn tiny_ce() -> ComputingEnv {
         ComputingEnv::new(1, 2, crate::util::GIB)

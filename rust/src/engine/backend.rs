@@ -1,0 +1,335 @@
+//! Execution backends: the execute half of the plan/execute split.
+//!
+//! An [`ExecutionBackend`] consumes a finished
+//! [`crate::coordinator::MatchPlan`] and runs its tasks, returning the
+//! engine-level output (metrics + raw correspondences) that the
+//! workflow layer merges into a
+//! [`crate::coordinator::RunOutcome`].  The three engines are impls —
+//! [`Threads`], [`Sim`], [`Dist`] — and each owns its *own* typed
+//! option struct ([`SimOptions`], [`DistOptions`]) instead of leaking
+//! engine-specific knobs into a shared flat config.  The trait is
+//! object-safe, so the [`crate::coordinator::Workflow`] builder holds a
+//! `Box<dyn ExecutionBackend>` and new backends (a remote cluster, a
+//! recorded trace, …) plug in without touching the workflow layer.
+
+use crate::cluster::ComputingEnv;
+use crate::coordinator::plan::MatchPlan;
+use crate::coordinator::scheduler::Policy;
+use crate::engine::{calibrate, dist, sim, threads, CostParams};
+use crate::matching::MatchStrategy;
+use crate::metrics::RunMetrics;
+use crate::model::{Correspondence, Dataset};
+use crate::net::CostModel;
+use crate::store::DataService;
+use crate::worker::{RustExecutor, TaskExecutor};
+use anyhow::Result;
+use std::fmt;
+use std::sync::Arc;
+
+/// Shared execution inputs every backend receives alongside the plan:
+/// the dataset the plan was built from, the environment, the match
+/// strategy, and the cross-backend service knobs (cache capacity,
+/// scheduling policy).
+pub struct ExecContext<'a> {
+    /// The dataset the plan partitions (must be the one the plan was
+    /// built from — the workflow layer checks the fingerprint).
+    pub dataset: &'a Dataset,
+    /// The computing environment to execute on.
+    pub ce: &'a ComputingEnv,
+    /// Match strategy (decides similarity + threshold).
+    pub strategy: MatchStrategy,
+    /// Partition-cache capacity per match service (0 = disabled).
+    pub cache_capacity: usize,
+    /// Task-assignment policy (FIFO or affinity).
+    pub policy: Policy,
+}
+
+/// Raw engine output, before the workflow layer merges per-task match
+/// results.
+pub struct EngineRun {
+    /// Engine metrics (wall clock or virtual time, see engine docs).
+    pub metrics: RunMetrics,
+    /// Per-task match output, merged across services.
+    pub correspondences: Vec<Correspondence>,
+    /// Cost params used by the simulator (after calibration), when the
+    /// backend simulates.
+    pub cost: Option<CostParams>,
+}
+
+/// An execution backend: consumes a plan, returns an [`EngineRun`].
+pub trait ExecutionBackend: fmt::Debug + Send + Sync {
+    /// Short stable identifier (`"threads"`, `"sim"`, `"dist"`).
+    fn name(&self) -> &'static str;
+
+    /// Execute every task of `plan` under `ctx`.
+    fn execute(
+        &self,
+        plan: &MatchPlan,
+        ctx: &ExecContext<'_>,
+    ) -> Result<EngineRun>;
+}
+
+/// Real OS threads inside this process; real matching; wall-clock
+/// metrics ([`crate::engine::threads`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Threads;
+
+impl ExecutionBackend for Threads {
+    fn name(&self) -> &'static str {
+        "threads"
+    }
+
+    fn execute(
+        &self,
+        plan: &MatchPlan,
+        ctx: &ExecContext<'_>,
+    ) -> Result<EngineRun> {
+        let store = DataService::build(ctx.dataset, &plan.partitions);
+        let exec = RustExecutor::new(ctx.strategy);
+        let out = threads::run(
+            ctx.ce,
+            &plan.partitions,
+            plan.tasks.clone(),
+            &store,
+            &exec,
+            threads::ThreadConfig {
+                cache_capacity: ctx.cache_capacity,
+                policy: ctx.policy,
+            },
+        );
+        Ok(EngineRun {
+            metrics: out.metrics,
+            correspondences: out.correspondences,
+            cost: None,
+        })
+    }
+}
+
+/// Options of the [`Sim`] backend (virtual-time simulator).
+#[derive(Clone, Debug)]
+pub struct SimOptions {
+    /// Control-plane cost model (workflow-service RMI).
+    pub net: CostModel,
+    /// Data-plane cost model (data-service partition fetches).
+    pub data_net: CostModel,
+    /// Also execute the tasks to produce real correspondences (small
+    /// workloads only).
+    pub execute: bool,
+    /// Calibrate per-pair cost by really matching a sample (otherwise
+    /// use the strategy's default constants).
+    pub calibrate: bool,
+    /// Use these cost params verbatim (skips calibration).  Sweeps
+    /// MUST pin the cost once and reuse it — re-calibrating per
+    /// configuration injects real-timer noise into virtual-time
+    /// ratios.
+    pub cost_override: Option<CostParams>,
+    /// Simulated node failures (virtual ns, node index).
+    pub failures: Vec<(u64, usize)>,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            net: CostModel::lan(),
+            data_net: CostModel::dbms(),
+            execute: false,
+            calibrate: true,
+            cost_override: None,
+            failures: Vec::new(),
+        }
+    }
+}
+
+/// Deterministic virtual-time simulation with calibrated costs
+/// ([`crate::engine::sim`]); no matching performed (metrics only)
+/// unless [`SimOptions::execute`] is set.
+#[derive(Clone, Debug, Default)]
+pub struct Sim(pub SimOptions);
+
+impl ExecutionBackend for Sim {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn execute(
+        &self,
+        plan: &MatchPlan,
+        ctx: &ExecContext<'_>,
+    ) -> Result<EngineRun> {
+        let opts = &self.0;
+        let store = DataService::build(ctx.dataset, &plan.partitions);
+        let cost = if let Some(cost) = opts.cost_override {
+            cost
+        } else if opts.calibrate {
+            calibrate::calibrated_params(
+                ctx.dataset,
+                ctx.strategy.kind,
+                120,
+                0xCA11B,
+            )
+        } else {
+            CostParams::default_for(ctx.strategy.kind)
+        };
+        let mut sim_cfg = sim::SimConfig::new(ctx.strategy.kind, cost);
+        sim_cfg.net = opts.net;
+        sim_cfg.data_net = opts.data_net;
+        sim_cfg.cache_capacity = ctx.cache_capacity;
+        sim_cfg.policy = ctx.policy;
+        sim_cfg.failures = opts.failures.clone();
+        if opts.execute {
+            sim_cfg.execute =
+                Some(Box::new(RustExecutor::new(ctx.strategy)));
+        }
+        let out = sim::run(
+            ctx.ce,
+            &plan.partitions,
+            plan.tasks.clone(),
+            &store,
+            sim_cfg,
+        );
+        Ok(EngineRun {
+            metrics: out.metrics,
+            correspondences: out.correspondences,
+            cost: Some(cost),
+        })
+    }
+}
+
+/// Options of the [`Dist`] backend (real TCP services).
+#[derive(Clone, Debug)]
+pub struct DistOptions {
+    /// Total data-plane servers (1 = just the primary; N > 1 adds N−1
+    /// synced replicas and fetch failover).
+    pub replicas: usize,
+    /// Tasks pulled per control round trip (protocol batched
+    /// assignment; 1 = classic per-task pull).
+    pub batch: usize,
+    /// Host the services bind (default loopback).
+    pub bind: String,
+    /// §3.1 memory-model enforcement: when set, every match node
+    /// rejects assigned tasks whose plan footprint exceeds this budget
+    /// with a typed `TaskRejected`, and the scheduler re-queues them
+    /// marked oversize.  A task exceeding *every* node's budget can
+    /// never complete — the run then fails at its timeout, which is
+    /// the §3.1 contract surfacing instead of an OOM kill.
+    pub memory_budget: Option<u64>,
+}
+
+impl Default for DistOptions {
+    fn default() -> Self {
+        DistOptions {
+            replicas: 1,
+            batch: 1,
+            bind: "127.0.0.1".to_string(),
+            memory_budget: None,
+        }
+    }
+}
+
+/// Real services over real TCP ([`crate::engine::dist`]): workflow +
+/// data services, `ce.nodes` match-service nodes, the [`crate::rpc`]
+/// wire protocol in between; wall-clock metrics and actual socket-byte
+/// traffic accounting.
+#[derive(Clone, Debug, Default)]
+pub struct Dist(pub DistOptions);
+
+impl ExecutionBackend for Dist {
+    fn name(&self) -> &'static str {
+        "dist"
+    }
+
+    fn execute(
+        &self,
+        plan: &MatchPlan,
+        ctx: &ExecContext<'_>,
+    ) -> Result<EngineRun> {
+        let opts = &self.0;
+        let store =
+            Arc::new(DataService::build(ctx.dataset, &plan.partitions));
+        let exec: Arc<dyn TaskExecutor> =
+            Arc::new(RustExecutor::new(ctx.strategy));
+        let out = dist::run(
+            ctx.ce,
+            &plan.partitions,
+            plan.tasks.clone(),
+            store,
+            exec,
+            dist::DistConfig {
+                cache_capacity: ctx.cache_capacity,
+                policy: ctx.policy,
+                data_replicas: opts.replicas.max(1),
+                batch: opts.batch.max(1),
+                bind: opts.bind.clone(),
+                task_mem: plan.task_mem.clone(),
+                memory_budget: opts.memory_budget,
+                ..dist::DistConfig::default()
+            },
+        )?;
+        Ok(EngineRun {
+            metrics: out.metrics,
+            correspondences: out.correspondences,
+            cost: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::plan::MatchPlan;
+    use crate::datagen::GeneratorConfig;
+    use crate::matching::StrategyKind;
+    use crate::partition::SizeBased;
+    use crate::util::GIB;
+
+    fn ctx<'a>(
+        dataset: &'a Dataset,
+        ce: &'a ComputingEnv,
+    ) -> ExecContext<'a> {
+        ExecContext {
+            dataset,
+            ce,
+            strategy: MatchStrategy::new(StrategyKind::Wam),
+            cache_capacity: 4,
+            policy: Policy::Affinity,
+        }
+    }
+
+    #[test]
+    fn threads_backend_executes_a_plan() {
+        let data = GeneratorConfig::tiny().with_entities(200).generate();
+        let ce = ComputingEnv::new(1, 2, GIB);
+        let plan = MatchPlan::build(
+            &data.dataset,
+            &SizeBased::with_max_size(50),
+            StrategyKind::Wam,
+            &ce,
+        )
+        .unwrap();
+        let run = Threads.execute(&plan, &ctx(&data.dataset, &ce)).unwrap();
+        assert_eq!(run.metrics.tasks, plan.n_tasks());
+        assert_eq!(run.metrics.comparisons, 200 * 199 / 2);
+        assert!(run.cost.is_none());
+    }
+
+    #[test]
+    fn sim_backend_reports_cost_and_metrics_only() {
+        let data = GeneratorConfig::tiny().with_entities(200).generate();
+        let ce = ComputingEnv::paper_testbed(2);
+        let plan = MatchPlan::build(
+            &data.dataset,
+            &SizeBased::with_max_size(50),
+            StrategyKind::Wam,
+            &ce,
+        )
+        .unwrap();
+        let backend = Sim(SimOptions {
+            calibrate: false,
+            ..SimOptions::default()
+        });
+        let run = backend.execute(&plan, &ctx(&data.dataset, &ce)).unwrap();
+        assert!(run.metrics.makespan_ns > 0);
+        assert!(run.correspondences.is_empty(), "metrics only");
+        assert!(run.cost.is_some());
+    }
+}

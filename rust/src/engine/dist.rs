@@ -61,6 +61,21 @@ pub struct DistConfig {
     /// their push-sync, and announces all N into the coordinator's
     /// replica directory.
     pub data_replicas: usize,
+    /// §3.1 memory footprint per task, aligned with the `tasks`
+    /// argument of [`run`] (from the match plan).  Empty = no
+    /// footprints: every assignment travels with footprint 0 and is
+    /// never rejected.
+    pub task_mem: Vec<u64>,
+    /// §3.1 memory budget applied to every match node: a node rejects
+    /// assigned tasks whose footprint exceeds it (`TaskRejected`,
+    /// re-queued marked oversize).  `None` disables enforcement.  A
+    /// task exceeding *every* node's budget can never complete and
+    /// the run fails at `run_timeout` — the memory model surfacing as
+    /// an error instead of an OOM kill.
+    pub memory_budget: Option<u64>,
+    /// Test hook: per-node budget overrides `(node_index, budget)`
+    /// for heterogeneous-memory runs; overrides `memory_budget`.
+    pub node_memory_budgets: Vec<(usize, u64)>,
     /// Failure detector: a silent service is failed after this long.
     pub heartbeat_timeout: Duration,
     /// Node-side liveness signal period.
@@ -82,6 +97,9 @@ impl Default for DistConfig {
             batch: 1,
             bind: "127.0.0.1".to_string(),
             data_replicas: 1,
+            task_mem: Vec::new(),
+            memory_budget: None,
+            node_memory_budgets: Vec::new(),
             heartbeat_timeout: Duration::from_secs(2),
             heartbeat_interval: Duration::from_millis(50),
             poll_interval: Duration::from_millis(2),
@@ -157,11 +175,18 @@ pub fn run(
             bail!("data replica {} did not sync in time", r + 1);
         }
     }
+    // §3.1 footprints from the plan, keyed by task id for assignment
+    let task_mem: std::collections::HashMap<u32, u64> = tasks
+        .iter()
+        .zip(cfg.task_mem.iter())
+        .map(|(t, &m)| (t.id, m))
+        .collect();
     let wf_srv = WorkflowServiceServer::start(
         tasks,
         WorkflowServerConfig {
             policy: cfg.policy,
             heartbeat_timeout: cfg.heartbeat_timeout,
+            task_mem,
         },
         &bind_ep,
     )
@@ -201,6 +226,12 @@ pub fn run(
             node_cfg.threads = ce.threads_per_node;
             node_cfg.cache_capacity = cfg.cache_capacity;
             node_cfg.batch = cfg.batch;
+            node_cfg.task_memory_budget = cfg
+                .node_memory_budgets
+                .iter()
+                .find(|(node, _)| *node == i)
+                .map(|&(_, budget)| budget)
+                .or(cfg.memory_budget);
             node_cfg.heartbeat_interval = cfg.heartbeat_interval;
             node_cfg.poll_interval = cfg.poll_interval;
             node_cfg.fail_after_tasks = cfg
@@ -428,6 +459,73 @@ mod tests {
         for r in &out.node_reports {
             assert!(r.tasks_completed > 0, "idle node {:?}", r.service);
         }
+    }
+
+    /// §3.1 memory-model parity in the engine: with plan footprints
+    /// attached and one node's budget below every task, that node
+    /// rejects its assignments (`TaskRejected`), the scheduler
+    /// re-routes them, and the roomier node completes the workflow —
+    /// nothing lost, nothing double-completed.
+    #[test]
+    fn heterogeneous_memory_budgets_reroute_oversize_tasks() {
+        let (parts, tasks, store) = setup(300, 60);
+        let n_tasks = tasks.len();
+        // the same footprints a MatchPlan would carry
+        let task_mem: Vec<u64> = tasks
+            .iter()
+            .map(|t| {
+                crate::partition::task_memory_bytes(
+                    parts.get(t.left).len(),
+                    parts.get(t.right).len(),
+                    StrategyKind::Wam,
+                )
+            })
+            .collect();
+        let min_footprint =
+            *task_mem.iter().min().expect("tasks exist");
+        assert!(min_footprint > 100, "test premise");
+        let ce = ComputingEnv::new(2, 1, crate::util::GIB);
+        let out = run(
+            &ce,
+            &parts,
+            tasks,
+            store,
+            wam_exec(),
+            DistConfig {
+                cache_capacity: 4,
+                task_mem,
+                // node 0 fits nothing; node 1 is unrestricted
+                node_memory_budgets: vec![(0, 100)],
+                ..DistConfig::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(out.metrics.tasks, n_tasks);
+        assert_eq!(out.metrics.comparisons, 300 * 299 / 2);
+        assert!(
+            out.workflow.oversize_rejections >= 1,
+            "the capped node never rejected anything"
+        );
+        assert_eq!(out.workflow.requeued_tasks, 0, "no failures");
+        let rejected: u64 =
+            out.node_reports.iter().map(|r| r.tasks_rejected).sum();
+        assert_eq!(rejected, out.workflow.oversize_rejections);
+        // every completion ran on the unrestricted node
+        for r in &out.node_reports {
+            if r.tasks_rejected > 0 {
+                assert_eq!(
+                    r.tasks_completed, 0,
+                    "capped node must not execute oversize work"
+                );
+            }
+        }
+        assert_eq!(
+            out.node_reports
+                .iter()
+                .map(|r| r.tasks_completed)
+                .sum::<u64>() as usize,
+            n_tasks
+        );
     }
 
     #[test]

@@ -15,9 +15,13 @@
 //!   scheduler, same executors, real wire.
 //! * [`calibrate`] — measures real per-pair match cost on this host to
 //!   anchor the simulator's virtual clock.
+//! * [`backend`] — the [`backend::ExecutionBackend`] trait that wraps
+//!   each engine behind the plan/execute split, with per-backend typed
+//!   option structs.
 
 #![warn(missing_docs)]
 
+pub mod backend;
 pub mod calibrate;
 pub mod dist;
 pub mod sim;

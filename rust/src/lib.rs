@@ -39,20 +39,34 @@
 //!
 //! ## Quick start
 //!
+//! The workflow API follows the paper's Figure-1 pipeline as a
+//! **plan/execute split**: a [`partition::PartitionStrategy`] plans an
+//! inspectable [`coordinator::MatchPlan`], an
+//! [`engine::backend::ExecutionBackend`] executes it.
+//!
 //! ```no_run
 //! use pem::prelude::*;
 //!
 //! // 1. Generate a product-offer dataset with known duplicates.
-//! let ds = pem::datagen::GeneratorConfig::small().generate();
-//! // 2. Configure the computing environment and the match workflow.
-//! let ce = pem::cluster::ComputingEnv::new(1, 4, 3 * pem::util::GIB);
-//! let wf = pem::coordinator::WorkflowConfig::blocking_based(
-//!     pem::matching::StrategyKind::Wam,
-//! );
-//! // 3. Run: blocking → partition tuning → task generation → parallel match.
-//! let outcome = pem::coordinator::run_workflow(&ds, &wf, &ce).unwrap();
+//! let data = pem::datagen::GeneratorConfig::small().generate();
+//! // 2. Plan: blocking → partition tuning → task generation.  Stop
+//! //    here to inspect task skew before paying for execution.
+//! let planned = Workflow::for_dataset(&data.dataset)
+//!     .strategy(BlockingBased::product_type())
+//!     .backend(Threads)
+//!     .env(ComputingEnv::new(1, 4, 3 * pem::util::GIB))
+//!     .cache(16)
+//!     .plan()
+//!     .unwrap();
+//! println!("{}", planned.plan().summary());
+//! // 3. Execute the plan and merge the per-task results.
+//! let outcome = planned.execute().unwrap();
 //! println!("{} matches in {:?}", outcome.result.len(), outcome.elapsed);
 //! ```
+//!
+//! The pre-redesign [`coordinator::WorkflowConfig`] +
+//! [`coordinator::run_workflow`] API remains as a deprecated shim for
+//! one release (`docs/MIGRATION.md` has the mapping).
 
 pub mod bench;
 pub mod blocking;
@@ -78,9 +92,18 @@ pub mod worker;
 pub mod prelude {
     pub use crate::blocking::{BlockingMethod, Blocks};
     pub use crate::cluster::ComputingEnv;
-    pub use crate::coordinator::{run_workflow, WorkflowConfig, WorkflowOutcome};
+    pub use crate::coordinator::{
+        run_workflow, MatchPlan, PlannedWorkflow, RunOutcome, Workflow,
+        WorkflowConfig, WorkflowOutcome,
+    };
     pub use crate::datagen::GeneratorConfig;
+    pub use crate::engine::backend::{
+        Dist, DistOptions, ExecutionBackend, Sim, SimOptions, Threads,
+    };
     pub use crate::matching::{MatchStrategy, StrategyKind};
     pub use crate::model::{Correspondence, Dataset, Entity, MatchResult};
-    pub use crate::partition::{MatchTask, PartitionId, PartitionSet};
+    pub use crate::partition::{
+        BlockingBased, MatchTask, PartitionId, PartitionSet,
+        PartitionStrategy, SizeBased, SortedNeighborhood,
+    };
 }

@@ -4,9 +4,15 @@
 //!
 //! * `generate` — produce a synthetic product-offer dataset and print its
 //!   block-structure statistics;
-//! * `match`    — run a full match workflow (blocking → partition tuning
-//!   → task generation → parallel execution) and report the result;
-//! * `sweep`    — run a core-count sweep (the Figs 8/9 experiment shape);
+//! * `plan`     — run ONLY the planning half (partitioning → task
+//!   generation → memory footprints) and print the plan: partition
+//!   stats, task skew, the heaviest tasks — without paying for
+//!   execution.  `--save plan.bin` writes the serialized plan;
+//! * `match`    — run a full match workflow (plan → execute) and report
+//!   the result;
+//! * `sweep`    — run a core-count sweep (the Figs 8/9 experiment
+//!   shape); a failing cell reports its strategy/backend combination
+//!   and the sweep continues;
 //! * `serve`    — start the workflow + data services on TCP ports and
 //!   wait for match-service nodes to complete the workflow; with
 //!   `--role data --replica-of HOST:PORT` it instead runs a standalone
@@ -31,16 +37,19 @@
 use anyhow::{bail, Result};
 use pem::blocking::BlockingMethod;
 use pem::cluster::ComputingEnv;
-use pem::coordinator::workflow::{
-    default_max_size, default_min_size, EngineChoice,
-};
-use pem::coordinator::{
-    run_workflow, PartitioningChoice, Policy, WorkflowConfig,
-};
+use pem::coordinator::workflow::{default_max_size, default_min_size};
+use pem::coordinator::{Policy, Workflow};
 use pem::datagen::GeneratorConfig;
+use pem::engine::backend::{
+    Dist, DistOptions, ExecutionBackend, Sim, SimOptions, Threads,
+};
 use pem::matching::{MatchStrategy, StrategyKind};
 use pem::metrics::speedups;
-use pem::partition::max_partition_size;
+use pem::model::Dataset;
+use pem::partition::{
+    max_partition_size, BlockingBased, PartitionStrategy, SizeBased,
+    SortedNeighborhood,
+};
 use pem::util::cli::Args;
 use pem::util::{fmt_bytes, fmt_nanos, GIB};
 
@@ -53,7 +62,7 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: pem <generate|export|match|sweep|serve|distmatch|artifacts|info> [options]
+        "usage: pem <generate|export|plan|match|sweep|serve|distmatch|artifacts|info> [options]
   common options:
     --entities N          dataset size (default 20000)
     --seed S              generator seed (default 2010)
@@ -64,9 +73,14 @@ fn usage() -> ! {
   match options:
     --input offers.csv    match a CSV dataset instead of generating one
     --out matches.csv     write correspondences as CSV
-  match/sweep options:
-    --partitioning size|blocking   (default blocking)
+  plan options (plan only, no execution):
+    --save plan.bin       write the serialized MatchPlan
+    --top N               print the N heaviest tasks (default 5)
+  plan/match/sweep options:
+    --partitioning size|blocking|sn   (default blocking)
     --blocking-attr product_type|manufacturer
+    --sn-attr ATTR        sorted-neighborhood sort key (default title)
+    --window W            sorted-neighborhood window size (default 100)
     --max-size M  --min-size M     partition tuning bounds
     --nodes N --cores N --mem-gb G --threads T
     --cache C             partition cache capacity per service
@@ -80,6 +94,8 @@ fn usage() -> ! {
     --batch K             tasks pulled per control round trip
                           (default 1 = classic per-task pull)
     --bind HOST           host the services bind (default 127.0.0.1)
+    --mem-budget BYTES    per-node §3.1 memory budget: nodes reject
+                          assigned tasks whose plan footprint exceeds it
   serve options (workflow + data services for multi-process matching):
     --workflow-port P     control-plane port (default 0 = ephemeral)
     --data-port P         data-plane port (default 0 = ephemeral)
@@ -101,6 +117,7 @@ fn usage() -> ! {
     --data HOST:PORT[,HOST:PORT...]  data replica addresses (required;
                           the join-time directory adds any missing ones)
     --batch K             tasks pulled per round trip (default 1)
+    --mem-budget BYTES    reject tasks whose footprint exceeds this
     --name NAME           node name  --threads T  --cache C"
     );
     std::process::exit(2);
@@ -121,53 +138,107 @@ fn parse_ce(args: &Args) -> Result<ComputingEnv> {
     Ok(ce)
 }
 
-fn parse_workflow(args: &Args, kind: StrategyKind) -> Result<WorkflowConfig> {
-    let partitioning = match args.str_or("partitioning", "blocking") {
-        "size" => PartitioningChoice::SizeBased {
-            max_size: Some(args.get_or("max-size", default_max_size(kind))?),
-        },
+/// An option that is `None` when the flag is absent (instead of a
+/// default value).
+fn opt_usize(args: &Args, name: &str) -> Result<Option<usize>> {
+    if args.get_str(name).is_some() {
+        Ok(Some(args.get_or(name, 0usize)?))
+    } else {
+        Ok(None)
+    }
+}
+
+/// A `u64` option that is `None` when the flag is absent.
+fn opt_u64(args: &Args, name: &str) -> Result<Option<u64>> {
+    if args.get_str(name).is_some() {
+        Ok(Some(args.get_or(name, 0u64)?))
+    } else {
+        Ok(None)
+    }
+}
+
+/// `--partitioning size|blocking|sn` → the open-API strategy.
+fn parse_partition_strategy(
+    args: &Args,
+    kind: StrategyKind,
+) -> Result<Box<dyn PartitionStrategy>> {
+    let max_size =
+        Some(args.get_or("max-size", default_max_size(kind))?);
+    Ok(match args.str_or("partitioning", "blocking") {
+        "size" => Box::new(SizeBased { max_size }),
         "blocking" => {
             let method = match args.str_or("blocking-attr", "product_type") {
                 "product_type" => BlockingMethod::product_type(),
                 "manufacturer" => BlockingMethod::manufacturer(),
                 other => bail!("bad blocking attr {other:?}"),
             };
-            PartitioningChoice::BlockingBased {
+            Box::new(BlockingBased {
                 method,
-                max_size: Some(
-                    args.get_or("max-size", default_max_size(kind))?,
+                max_size,
+                min_size: Some(
+                    args.get_or("min-size", default_min_size(kind))?,
                 ),
-                min_size: args.get_or("min-size", default_min_size(kind))?,
-            }
+            })
         }
+        "sn" | "sorted" | "sorted-neighborhood" => Box::new(
+            SortedNeighborhood {
+                attribute: args
+                    .str_or("sn-attr", pem::model::ATTR_TITLE)
+                    .to_string(),
+                window: args.get_or("window", 100usize)?,
+                max_size: opt_usize(args, "max-size")?,
+            },
+        ),
         other => bail!("bad partitioning {other:?}"),
-    };
-    let engine = match args.str_or("engine", "sim") {
-        "sim" => EngineChoice::Simulated,
-        "threads" => EngineChoice::Threads,
-        "dist" => EngineChoice::Distributed,
-        other => bail!("bad engine {other:?}"),
-    };
-    Ok(WorkflowConfig {
-        strategy: MatchStrategy::new(kind),
-        partitioning,
-        engine,
-        cache_capacity: args.get_or("cache", 0usize)?,
-        policy: if args.flag("no-affinity") {
-            Policy::Fifo
-        } else {
-            Policy::Affinity
-        },
-        data_replicas: args.get_or("data-replicas", 1usize)?,
-        batch: args.get_or("batch", 1usize)?,
-        bind: args.str_or("bind", "127.0.0.1").to_string(),
-        net: pem::net::CostModel::lan(),
-        data_net: pem::net::CostModel::dbms(),
-        execute_in_sim: args.flag("execute"),
-        calibrate: !args.flag("no-calibrate"),
-        cost_override: None,
-        failures: Vec::new(),
     })
+}
+
+/// `--engine sim|threads|dist` (+ its engine-specific flags) → the
+/// open-API backend.
+fn parse_backend(args: &Args) -> Result<Box<dyn ExecutionBackend>> {
+    Ok(match args.str_or("engine", "sim") {
+        "threads" => Box::new(Threads),
+        "dist" => Box::new(Dist(DistOptions {
+            replicas: args.get_or("data-replicas", 1usize)?,
+            batch: args.get_or("batch", 1usize)?,
+            bind: args.str_or("bind", "127.0.0.1").to_string(),
+            memory_budget: opt_u64(args, "mem-budget")?,
+        })),
+        "sim" => Box::new(Sim(SimOptions {
+            execute: args.flag("execute"),
+            calibrate: !args.flag("no-calibrate"),
+            ..SimOptions::default()
+        })),
+        other => bail!("bad engine {other:?}"),
+    })
+}
+
+fn parse_policy(args: &Args) -> Policy {
+    if args.flag("no-affinity") {
+        Policy::Fifo
+    } else {
+        Policy::Affinity
+    }
+}
+
+/// Ground-truth duplicate pairs of a generated dataset.
+type Truth = Vec<(pem::model::EntityId, pem::model::EntityId)>;
+
+/// Dataset from `--input` CSV, or generated (with its ground truth).
+fn load_dataset(args: &Args) -> Result<(Dataset, Option<Truth>)> {
+    match args.get_str("input") {
+        Some(path) => Ok((
+            pem::io::read_dataset_file(std::path::Path::new(path))?,
+            None,
+        )),
+        None => {
+            let g = GeneratorConfig::default()
+                .with_entities(args.get_or("entities", 20_000usize)?)
+                .with_seed(args.get_or("seed", 2010u64)?)
+                .generate();
+            Ok((g.dataset, Some(g.truth)))
+        }
+    }
 }
 
 fn run() -> Result<()> {
@@ -176,6 +247,7 @@ fn run() -> Result<()> {
     match cmd {
         Some("generate") => cmd_generate(&args),
         Some("export") => cmd_export(&args),
+        Some("plan") => cmd_plan(&args),
         Some("match") => cmd_match(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("serve") => cmd_serve(&args),
@@ -228,25 +300,67 @@ fn cmd_export(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `pem plan`: run only the planning half and print the inspectable
+/// plan — partitions, task skew, heaviest tasks, memory footprints vs
+/// the per-task budget — without executing anything.
+fn cmd_plan(args: &Args) -> Result<()> {
+    let kind = parse_strategy(args)?;
+    let ce = parse_ce(args)?;
+    let (dataset, _truth) = load_dataset(args)?;
+    let planned = Workflow::for_dataset(&dataset)
+        .matching(kind)
+        .strategy_boxed(parse_partition_strategy(args, kind)?)
+        .env(ce)
+        .plan()?;
+    let plan = planned.plan();
+    println!("{}", plan.summary());
+    let budget = pem::partition::memory::mem_per_task(&ce);
+    let skew = plan.skew();
+    println!(
+        "memory: max task footprint {} vs per-task budget {} → {}",
+        fmt_bytes(skew.max_task_mem),
+        fmt_bytes(budget),
+        if skew.max_task_mem <= budget {
+            "fits"
+        } else {
+            "EXCEEDS BUDGET (dist nodes with --mem-budget would reject)"
+        }
+    );
+    let top = args.get_or("top", 5usize)?;
+    if top > 0 {
+        println!("heaviest tasks:");
+        println!("  task   left×right        pairs        memory");
+        for (t, pairs, mem) in plan.top_tasks(top) {
+            let span = format!("{}×{}", t.left, t.right);
+            println!(
+                "  {:<6} {:<15} {:>10}  {:>12}",
+                t.id,
+                span,
+                pairs,
+                fmt_bytes(mem)
+            );
+        }
+    }
+    if let Some(path) = args.get_str("save") {
+        std::fs::write(path, plan.to_bytes())?;
+        println!("saved plan to {path}");
+    }
+    println!("(plan only — nothing was executed)");
+    Ok(())
+}
+
 fn cmd_match(args: &Args) -> Result<()> {
     let kind = parse_strategy(args)?;
     let ce = parse_ce(args)?;
-    let cfg = parse_workflow(args, kind)?;
-    // CSV inputs carry no ground truth; generated data does
-    let (dataset, truth) = match args.get_str("input") {
-        Some(path) => (
-            pem::io::read_dataset_file(std::path::Path::new(path))?,
-            None,
-        ),
-        None => {
-            let g = GeneratorConfig::default()
-                .with_entities(args.get_or("entities", 20_000usize)?)
-                .with_seed(args.get_or("seed", 2010u64)?)
-                .generate();
-            (g.dataset, Some(g.truth))
-        }
-    };
-    let out = run_workflow(&dataset, &cfg, &ce)?;
+    let (dataset, truth) = load_dataset(args)?;
+    let out = Workflow::for_dataset(&dataset)
+        .matching(kind)
+        .strategy_boxed(parse_partition_strategy(args, kind)?)
+        .backend_boxed(parse_backend(args)?)
+        .env(ce)
+        .cache(args.get_or("cache", 0usize)?)
+        .policy(parse_policy(args))
+        .run()?;
     println!(
         "partitions={} (misc {})  tasks={}",
         out.n_partitions, out.n_misc_partitions, out.n_tasks
@@ -272,7 +386,6 @@ fn cmd_match(args: &Args) -> Result<()> {
 
 fn cmd_sweep(args: &Args) -> Result<()> {
     let kind = parse_strategy(args)?;
-    let cfg = parse_workflow(args, kind)?;
     let cores_list: Vec<usize> =
         args.get_list("cores-list", &[1usize, 2, 4, 8, 12, 16])?;
     let data = GeneratorConfig::default()
@@ -280,13 +393,46 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .with_seed(args.get_or("seed", 2010u64)?)
         .generate();
     let mut times = Vec::new();
+    // the speedup column is relative to the first *successful* cell;
+    // when an earlier cell failed, say so instead of printing a
+    // silently re-based Figs-8/9 column
+    let mut baseline_cores: Option<usize> = None;
+    let mut failed_cells = 0usize;
     println!("cores  time         speedup  hr     tasks");
     for &cores in &cores_list {
         // 4 cores per node as in the paper; cores beyond one node add nodes
         let nodes = cores.div_ceil(4).max(1);
         let per = cores.div_ceil(nodes);
         let ce = ComputingEnv::new(nodes, per, 3 * GIB);
-        let out = run_workflow(&data, &cfg, &ce)?;
+        // boxed strategies/backends are not Clone: parse per cell
+        let strategy = parse_partition_strategy(args, kind)?;
+        let backend = parse_backend(args)?;
+        let (strategy_name, backend_name) =
+            (strategy.name(), backend.name());
+        let cell = Workflow::for_dataset(&data.dataset)
+            .matching(kind)
+            .strategy_boxed(strategy)
+            .backend_boxed(backend)
+            .env(ce)
+            .cache(args.get_or("cache", 0usize)?)
+            .policy(parse_policy(args))
+            .run();
+        let out = match cell {
+            Ok(out) => out,
+            Err(e) => {
+                // one bad cell must not abort the whole sweep — name
+                // the failing combination and keep sweeping
+                failed_cells += 1;
+                eprintln!(
+                    "sweep cell failed (cores={cores}, \
+                     strategy={strategy_name}, backend={backend_name}, \
+                     matching={}): {e:#}",
+                    kind.name()
+                );
+                continue;
+            }
+        };
+        baseline_cores.get_or_insert(cores);
         times.push(out.metrics.makespan_ns);
         let s = speedups(&times);
         println!(
@@ -297,6 +443,20 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             out.metrics.hit_ratio() * 100.0,
             out.n_tasks
         );
+    }
+    if failed_cells == cores_list.len() {
+        bail!("every sweep cell failed ({failed_cells})");
+    }
+    if failed_cells > 0 {
+        eprintln!("{failed_cells} sweep cell(s) failed, see above");
+    }
+    if let Some(base) = baseline_cores {
+        if base != cores_list[0] {
+            println!(
+                "note: speedups are relative to the {base}-core cell \
+                 (earlier cells failed)"
+            );
+        }
     }
     Ok(())
 }
@@ -372,8 +532,9 @@ fn cmd_serve_data_replica(args: &Args) -> Result<()> {
 }
 
 /// Start the coordinator half of a multi-process match: generate (or
-/// load) the dataset, build partitions and tasks, and serve the
-/// workflow + data services until the task list drains.
+/// load) the dataset, build the match plan, and serve the workflow +
+/// data services (assignments carry the plan's §3.1 footprints) until
+/// the task list drains.
 fn cmd_serve_coordinator(args: &Args) -> Result<()> {
     use pem::service::{
         announce_replica, DataServiceServer, WorkflowServerConfig,
@@ -381,32 +542,31 @@ fn cmd_serve_coordinator(args: &Args) -> Result<()> {
     };
     let kind = parse_strategy(args)?;
     let ce = parse_ce(args)?;
-    let cfg = parse_workflow(args, kind)?;
-    let (dataset, truth) = match args.get_str("input") {
-        Some(path) => (
-            pem::io::read_dataset_file(std::path::Path::new(path))?,
-            None,
-        ),
-        None => {
-            let g = GeneratorConfig::default()
-                .with_entities(args.get_or("entities", 20_000usize)?)
-                .with_seed(args.get_or("seed", 2010u64)?)
-                .generate();
-            (g.dataset, Some(g.truth))
-        }
-    };
-    let parts =
-        pem::coordinator::workflow::build_partitions(&dataset, &cfg, &ce)?;
-    let tasks = pem::partition::generate_tasks(&parts);
+    let policy = parse_policy(args);
+    let (dataset, truth) = load_dataset(args)?;
+    let planned = Workflow::for_dataset(&dataset)
+        .matching(kind)
+        .strategy_boxed(parse_partition_strategy(args, kind)?)
+        .env(ce)
+        .plan()?;
+    let plan = planned.into_plan();
+    let tasks = plan.tasks.clone();
+    let task_mem: std::collections::HashMap<u32, u64> = plan
+        .tasks
+        .iter()
+        .zip(plan.task_mem.iter())
+        .map(|(t, &m)| (t.id, m))
+        .collect();
     let store = std::sync::Arc::new(pem::store::DataService::build(
-        &dataset, &parts,
+        &dataset,
+        &plan.partitions,
     ));
     println!(
         "dataset: {} entities → {} partitions (misc {}) → {} tasks",
         dataset.len(),
-        parts.len(),
-        parts.n_misc(),
-        tasks.len()
+        plan.n_partitions(),
+        plan.n_misc_partitions(),
+        plan.n_tasks()
     );
 
     // bind loopback unless the operator opts in with --bind (the
@@ -422,10 +582,11 @@ fn cmd_serve_coordinator(args: &Args) -> Result<()> {
     let wf_srv = WorkflowServiceServer::start(
         tasks,
         WorkflowServerConfig {
-            policy: cfg.policy,
+            policy,
             heartbeat_timeout: std::time::Duration::from_millis(
                 args.get_or("heartbeat-ms", 2000u64)?,
             ),
+            task_mem,
         },
         &wf_bind,
     )?;
@@ -499,6 +660,13 @@ fn cmd_serve_coordinator(args: &Args) -> Result<()> {
         report.requeued_tasks,
         report.stale_completions
     );
+    if report.oversize_rejections > 0 {
+        println!(
+            "memory model: {} oversize rejection(s) re-routed to \
+             roomier nodes",
+            report.oversize_rejections
+        );
+    }
     if report.batch_requests > 0 {
         // assignment_pulls also counts classic (batch = 1) TaskRequest
         // frames, so the two counters are reported side by side rather
@@ -564,6 +732,7 @@ fn cmd_distmatch(args: &Args) -> Result<()> {
     cfg.threads = args.get_or("threads", 4usize)?;
     cfg.cache_capacity = args.get_or("cache", 0usize)?;
     cfg.batch = args.get_or("batch", 1usize)?.max(1);
+    cfg.task_memory_budget = opt_u64(args, "mem-budget")?;
     let exec: std::sync::Arc<dyn pem::worker::TaskExecutor> =
         std::sync::Arc::new(pem::worker::RustExecutor::new(
             MatchStrategy::new(kind),
@@ -594,8 +763,17 @@ fn cmd_distmatch(args: &Args) -> Result<()> {
             ""
         }
     );
+    if report.tasks_rejected > 0 {
+        println!(
+            "rejected {} oversize task(s) (budget {})",
+            report.tasks_rejected,
+            cfg.task_memory_budget
+                .map(fmt_bytes)
+                .unwrap_or_else(|| "-".into())
+        );
+    }
     println!(
-        "fetches per data replica: [{}]{}",
+        "fetches per data replica: [{}]{}{}",
         report
             .fetches_per_replica
             .iter()
@@ -604,6 +782,14 @@ fn cmd_distmatch(args: &Args) -> Result<()> {
             .join(", "),
         if report.replica_failovers > 0 {
             format!(" ({} replica failover(s))", report.replica_failovers)
+        } else {
+            String::new()
+        },
+        if report.replica_readmissions > 0 {
+            format!(
+                " ({} replica(s) re-admitted after cooldown)",
+                report.replica_readmissions
+            )
         } else {
             String::new()
         }

@@ -12,16 +12,24 @@
 //!   *misc* block against everything;
 //! * [`task_gen`]: generate match tasks for the three §3.2 cases plus the
 //!   multi-source variants of §3.3;
-//! * [`memory`]: the `m ≤ √(max_mem / (#cores · c_ms))` sizing model.
+//! * [`memory`]: the `m ≤ √(max_mem / (#cores · c_ms))` sizing model;
+//! * [`strategy`]: the open [`PartitionStrategy`] trait — the plan half
+//!   of the plan/execute split — with the two paper strategies and
+//!   [`strategy::SortedNeighborhood`] windowing as impls.
 
 pub mod blocking_based;
 pub mod memory;
 pub mod size_based;
+pub mod strategy;
 pub mod task_gen;
 
 pub use blocking_based::{tune, TuningConfig};
 pub use memory::{max_partition_size, task_memory_bytes};
 pub use size_based::partition_size_based;
+pub use strategy::{
+    BlockingBased, PartitionStrategy, PlanContext, SizeBased,
+    SortedNeighborhood,
+};
 pub use task_gen::{
     generate_tasks, generate_tasks_two_sources_blocked,
     generate_tasks_two_sources_cartesian,
@@ -58,6 +66,11 @@ pub enum PartitionKind {
     Aggregate { keys: Vec<String> },
     /// Sub-partition of the misc block: matched with *everything*.
     Misc { index: usize, count: usize },
+    /// Window `index` (of `count`) of a sorted-neighborhood run:
+    /// matched with itself and with the *adjacent* window
+    /// (`index + 1`), recovering the sliding-window overlap at the
+    /// partition boundary ([`strategy::SortedNeighborhood`]).
+    Window { index: usize, count: usize },
 }
 
 impl PartitionKind {

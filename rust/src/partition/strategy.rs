@@ -1,0 +1,472 @@
+//! Open partitioning strategies: the plan half of the plan/execute
+//! split.
+//!
+//! The paper's Figure-1 workflow treats partitioning as a swappable
+//! stage.  [`PartitionStrategy`] makes that literal: a strategy turns a
+//! dataset into a [`PartitionSet`] and the matching [`MatchTask`] list,
+//! under the §3.1 memory model carried by [`PlanContext`].  The two
+//! paper strategies ([`SizeBased`], [`BlockingBased`]) are impls rather
+//! than enum arms, so new strategies plug in without touching the
+//! workflow layer — proven by [`SortedNeighborhood`], which ports the
+//! sorted-neighborhood blocking of Kolb et al. (*Parallel Sorted
+//! Neighborhood Blocking with MapReduce*) onto the partition/task
+//! machinery: entities are sorted by a key, sliced into consecutive
+//! window partitions, and adjacent windows get an extra overlap task so
+//! no near-neighbor pair is lost at a partition boundary.
+//!
+//! Strategies are object-safe (`Box<dyn PartitionStrategy>`), and the
+//! [`crate::coordinator::Workflow`] builder consumes them to produce an
+//! inspectable [`crate::coordinator::MatchPlan`] before any execution
+//! happens.
+
+use super::task_gen::generate_tasks;
+use super::{
+    max_partition_size, partition_size_based, tune, MatchTask,
+    PartitionKind, PartitionSet, TuningConfig,
+};
+use crate::blocking::BlockingMethod;
+use crate::cluster::ComputingEnv;
+use crate::features::normalize;
+use crate::matching::StrategyKind;
+use crate::model::{Dataset, EntityId};
+use anyhow::{bail, Result};
+use std::fmt;
+
+/// The paper's favorable maximum partition sizes (Fig 6): 1,000 for WAM,
+/// 500 for LRM.
+pub fn default_max_size(kind: StrategyKind) -> usize {
+    match kind {
+        StrategyKind::Wam => 1000,
+        StrategyKind::Lrm => 500,
+    }
+}
+
+/// The paper's favorable minimum partition sizes (Fig 7): 200 for WAM,
+/// 100 for LRM.
+pub fn default_min_size(kind: StrategyKind) -> usize {
+    match kind {
+        StrategyKind::Wam => 200,
+        StrategyKind::Lrm => 100,
+    }
+}
+
+/// Everything a strategy may consult while planning: the computing
+/// environment (for the §3.1 memory-restricted partition size) and the
+/// match strategy whose per-pair memory cost `c_ms` drives it.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanContext<'a> {
+    /// The computing environment the plan targets.
+    pub ce: &'a ComputingEnv,
+    /// Match strategy (WAM or LRM) that will execute the tasks.
+    pub match_kind: StrategyKind,
+}
+
+impl PlanContext<'_> {
+    /// The automatic maximum partition size: the §3.1 memory model
+    /// `m ≤ √(max_mem / (#cores · c_ms))`, clamped to the strategy's
+    /// empirically favorable size (Fig 6).  An explicit `max_size` on a
+    /// strategy overrides this — experiments like Fig 6 sweep past the
+    /// memory-restricted size on purpose, paying the paging penalty.
+    pub fn auto_max_size(&self) -> usize {
+        let mem_cap = max_partition_size(self.ce, self.match_kind);
+        default_max_size(self.match_kind).min(mem_cap.max(1))
+    }
+}
+
+/// A partitioning strategy: the pluggable first stage of a match plan.
+///
+/// Object-safe on purpose — the workflow builder holds a
+/// `Box<dyn PartitionStrategy>`, so downstream crates (and tests) can
+/// supply their own strategies without touching this crate's enums.
+pub trait PartitionStrategy: fmt::Debug + Send + Sync {
+    /// Short stable identifier recorded in plan provenance
+    /// (e.g. `"size_based"`).
+    fn name(&self) -> &'static str;
+
+    /// Stable human-readable parameter string recorded in plan
+    /// provenance (part of the serialized plan, so keep it
+    /// deterministic).
+    fn params(&self) -> String;
+
+    /// Build the partition set for `dataset` under `ctx`'s memory
+    /// model.
+    fn partition(
+        &self,
+        dataset: &Dataset,
+        ctx: &PlanContext<'_>,
+    ) -> Result<PartitionSet>;
+
+    /// Generate the match tasks for a partition set this strategy
+    /// built.  The default is the §3.1/§3.2 generator, which already
+    /// understands every [`PartitionKind`]; override only for task
+    /// structures the kinds cannot express.
+    fn tasks(&self, parts: &PartitionSet) -> Vec<MatchTask> {
+        generate_tasks(parts)
+    }
+}
+
+/// §3.1 — Cartesian product evaluation with equally-sized partitions.
+#[derive(Clone, Debug, Default)]
+pub struct SizeBased {
+    /// Maximum partition size; `None` derives `m` from the memory
+    /// model ([`PlanContext::auto_max_size`]).
+    pub max_size: Option<usize>,
+}
+
+impl SizeBased {
+    /// Derive the partition size from the memory model.
+    pub fn auto() -> SizeBased {
+        SizeBased { max_size: None }
+    }
+
+    /// Fix the partition size explicitly.
+    pub fn with_max_size(m: usize) -> SizeBased {
+        SizeBased { max_size: Some(m) }
+    }
+}
+
+impl PartitionStrategy for SizeBased {
+    fn name(&self) -> &'static str {
+        "size_based"
+    }
+
+    fn params(&self) -> String {
+        match self.max_size {
+            Some(m) => format!("max_size={m}"),
+            None => "max_size=auto".to_string(),
+        }
+    }
+
+    fn partition(
+        &self,
+        dataset: &Dataset,
+        ctx: &PlanContext<'_>,
+    ) -> Result<PartitionSet> {
+        let m = self.max_size.unwrap_or_else(|| ctx.auto_max_size());
+        if m == 0 {
+            bail!("size-based partitioning needs max_size >= 1");
+        }
+        let ids: Vec<EntityId> =
+            dataset.entities.iter().map(|e| e.id).collect();
+        Ok(partition_size_based(&ids, m))
+    }
+}
+
+/// §3.2 — blocking followed by partition tuning (split oversized
+/// blocks, aggregate undersized ones, route the misc block).
+#[derive(Clone, Debug)]
+pub struct BlockingBased {
+    /// Blocking method (e.g. by product type or manufacturer).
+    pub method: BlockingMethod,
+    /// Maximum partition size; `None` derives `m` from the memory
+    /// model.
+    pub max_size: Option<usize>,
+    /// Minimum partition size for aggregating small blocks; `None`
+    /// uses the paper's favorable size ([`default_min_size`]).
+    pub min_size: Option<usize>,
+}
+
+impl BlockingBased {
+    /// Blocking by product type with automatic tuning bounds — the
+    /// paper's primary configuration.
+    pub fn product_type() -> BlockingBased {
+        BlockingBased::new(BlockingMethod::product_type())
+    }
+
+    /// Blocking with `method` and automatic tuning bounds.
+    pub fn new(method: BlockingMethod) -> BlockingBased {
+        BlockingBased {
+            method,
+            max_size: None,
+            min_size: None,
+        }
+    }
+
+    /// Fix the tuning bounds explicitly (builder style).
+    pub fn with_bounds(mut self, max_size: usize, min_size: usize) -> Self {
+        self.max_size = Some(max_size);
+        self.min_size = Some(min_size);
+        self
+    }
+}
+
+impl PartitionStrategy for BlockingBased {
+    fn name(&self) -> &'static str {
+        "blocking_based"
+    }
+
+    fn params(&self) -> String {
+        let bounds = |v: Option<usize>| match v {
+            Some(x) => x.to_string(),
+            None => "auto".to_string(),
+        };
+        format!(
+            "method={:?} max_size={} min_size={}",
+            self.method,
+            bounds(self.max_size),
+            bounds(self.min_size)
+        )
+    }
+
+    fn partition(
+        &self,
+        dataset: &Dataset,
+        ctx: &PlanContext<'_>,
+    ) -> Result<PartitionSet> {
+        let m = self.max_size.unwrap_or_else(|| ctx.auto_max_size());
+        let min = self
+            .min_size
+            .unwrap_or_else(|| default_min_size(ctx.match_kind));
+        if min > m {
+            bail!("min_size {min} exceeds max partition size {m}");
+        }
+        let blocks = self.method.run(dataset);
+        Ok(tune(&blocks, TuningConfig::new(m, min)))
+    }
+}
+
+/// Sorted-neighborhood partitioning (Hernández/Stolfo windowing on the
+/// partition level, after Kolb et al.'s MapReduce formulation).
+///
+/// Entities are sorted by the normalized value of `attribute`, sliced
+/// into consecutive partitions of `max_size` entities
+/// ([`PartitionKind::Window`]), and matched within each window plus
+/// across each *adjacent* window pair (the overlap tasks the task
+/// generator emits for `Window` kinds).  Because every window holds at
+/// least `window` entities (the partition size is clamped to the
+/// window), any two entities within `window` positions of each other
+/// in sort order land in the same or in adjacent partitions — the
+/// classic sliding-window guarantee, expressed as §3.2-style match
+/// tasks.  Entities with a missing key go to misc partitions and are
+/// matched against everything, exactly like §3.2's misc block.
+#[derive(Clone, Debug)]
+pub struct SortedNeighborhood {
+    /// Attribute whose normalized value is the sort key.
+    pub attribute: String,
+    /// Sliding-window size `w`: any two entities within `w` positions
+    /// in sort order are guaranteed to be compared.  Must be ≥ 2.
+    pub window: usize,
+    /// Partition (window-slice) size; `None` derives it from the
+    /// memory model.  Clamped to at least `window` so the overlap
+    /// guarantee holds.
+    pub max_size: Option<usize>,
+}
+
+impl SortedNeighborhood {
+    /// Sort by `attribute` with window `w`, partition size from the
+    /// memory model.
+    pub fn new<S: Into<String>>(attribute: S, window: usize) -> Self {
+        SortedNeighborhood {
+            attribute: attribute.into(),
+            window,
+            max_size: None,
+        }
+    }
+
+    /// Sort by title — the default key for product offers.
+    pub fn by_title(window: usize) -> Self {
+        SortedNeighborhood::new(crate::model::ATTR_TITLE, window)
+    }
+
+    /// Fix the partition size explicitly (builder style).
+    pub fn with_max_size(mut self, m: usize) -> Self {
+        self.max_size = Some(m);
+        self
+    }
+}
+
+impl PartitionStrategy for SortedNeighborhood {
+    fn name(&self) -> &'static str {
+        "sorted_neighborhood"
+    }
+
+    fn params(&self) -> String {
+        format!(
+            "attribute={} window={} max_size={}",
+            self.attribute,
+            self.window,
+            match self.max_size {
+                Some(m) => m.to_string(),
+                None => "auto".to_string(),
+            }
+        )
+    }
+
+    fn partition(
+        &self,
+        dataset: &Dataset,
+        ctx: &PlanContext<'_>,
+    ) -> Result<PartitionSet> {
+        if self.window < 2 {
+            bail!("sorted-neighborhood window must be >= 2");
+        }
+        // the window guarantee needs every partition to span at least
+        // `window` sort positions, so the slice size is clamped up
+        let m = self
+            .max_size
+            .unwrap_or_else(|| ctx.auto_max_size())
+            .max(self.window);
+        let mut keyed: Vec<(String, EntityId)> = Vec::new();
+        let mut missing: Vec<EntityId> = Vec::new();
+        for e in &dataset.entities {
+            match e.get(&dataset.schema, &self.attribute) {
+                Some(v) if !v.trim().is_empty() => {
+                    keyed.push((normalize(v), e.id));
+                }
+                _ => missing.push(e.id),
+            }
+        }
+        // deterministic total order: (normalized key, entity id)
+        keyed.sort();
+        let mut out = PartitionSet::new();
+        // exact-size slices (last one may be short): every non-tail
+        // window spans >= `window` positions, so a pair at sort
+        // distance < `window` is intra-window or in adjacent windows —
+        // never further apart.  Balanced slicing would break this
+        // (three slices of ~2m/3 leave < m gaps uncovered).
+        let count = keyed.len().div_ceil(m);
+        for (index, chunk) in keyed.chunks(m).enumerate() {
+            out.push(
+                PartitionKind::Window { index, count },
+                chunk.iter().map(|(_, id)| *id).collect(),
+            );
+        }
+        if !missing.is_empty() {
+            let mcount = missing.len().div_ceil(m);
+            for (index, chunk) in missing.chunks(m).enumerate() {
+                out.push(
+                    PartitionKind::Misc {
+                        index,
+                        count: mcount,
+                    },
+                    chunk.to_vec(),
+                );
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::GeneratorConfig;
+    use crate::model::ATTR_TITLE;
+    use crate::util::GIB;
+
+    fn ctx_in(ce: &ComputingEnv) -> PlanContext<'_> {
+        PlanContext {
+            ce,
+            match_kind: StrategyKind::Wam,
+        }
+    }
+
+    #[test]
+    fn size_based_strategy_matches_direct_call() {
+        let data = GeneratorConfig::tiny().with_entities(500).generate();
+        let ce = ComputingEnv::new(1, 2, GIB);
+        let s = SizeBased::with_max_size(100);
+        let parts = s.partition(&data.dataset, &ctx_in(&ce)).unwrap();
+        assert_eq!(parts.len(), 5);
+        assert_eq!(parts.total_entities(), 500);
+        let tasks = s.tasks(&parts);
+        assert_eq!(tasks.len(), 5 + 5 * 4 / 2);
+    }
+
+    #[test]
+    fn blocking_based_strategy_rejects_inverted_bounds() {
+        let data = GeneratorConfig::tiny().generate();
+        let ce = ComputingEnv::new(1, 2, GIB);
+        let s = BlockingBased::product_type().with_bounds(100, 5_000);
+        assert!(s.partition(&data.dataset, &ctx_in(&ce)).is_err());
+    }
+
+    #[test]
+    fn sorted_neighborhood_windows_cover_all_entities_in_order() {
+        let data = GeneratorConfig::tiny().with_entities(700).generate();
+        let ce = ComputingEnv::new(1, 2, GIB);
+        let s = SortedNeighborhood::by_title(40).with_max_size(100);
+        let parts = s.partition(&data.dataset, &ctx_in(&ce)).unwrap();
+        assert_eq!(parts.total_entities(), 700);
+        // windows are exact slices of the sorted order; every window
+        // except possibly the last tail holds the full slice size
+        let windows: Vec<_> = parts
+            .iter()
+            .filter(|p| {
+                matches!(p.kind, PartitionKind::Window { .. })
+            })
+            .collect();
+        assert!(!windows.is_empty());
+        for w in &windows[..windows.len() - 1] {
+            assert_eq!(w.len(), 100);
+        }
+        for (i, w) in windows.iter().enumerate() {
+            match &w.kind {
+                PartitionKind::Window { index, count } => {
+                    assert_eq!(*index, i);
+                    assert_eq!(*count, windows.len());
+                }
+                other => panic!("unexpected kind {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn sorted_neighborhood_partition_size_clamped_to_window() {
+        let data = GeneratorConfig::tiny().with_entities(300).generate();
+        let ce = ComputingEnv::new(1, 2, GIB);
+        // max_size 10 below window 50: slices are clamped up to 50
+        let s = SortedNeighborhood::by_title(50).with_max_size(10);
+        let parts = s.partition(&data.dataset, &ctx_in(&ce)).unwrap();
+        for p in parts.iter() {
+            if let PartitionKind::Window { count, .. } = &p.kind {
+                if p.id.0 as usize + 1 < *count {
+                    assert!(p.len() >= 50, "window below w: {}", p.len());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sorted_neighborhood_missing_keys_go_to_misc() {
+        use crate::model::{Dataset, Entity, EntityId, Schema};
+        let schema = Schema::new(vec![ATTR_TITLE]);
+        let mut ds = Dataset::new(schema.clone());
+        for i in 0..10u32 {
+            let mut e = Entity::new(EntityId(i), &schema);
+            if i % 3 != 0 {
+                e.set(&schema, ATTR_TITLE, format!("title {i}"));
+            }
+            ds.push(e);
+        }
+        let ce = ComputingEnv::new(1, 2, GIB);
+        let s = SortedNeighborhood::by_title(2).with_max_size(4);
+        let parts = s.partition(&ds, &ctx_in(&ce)).unwrap();
+        assert_eq!(parts.total_entities(), 10);
+        let misc: usize = parts
+            .iter()
+            .filter(|p| p.kind.is_misc())
+            .map(|p| p.len())
+            .sum();
+        assert_eq!(misc, 4, "ids 0,3,6,9 have no title");
+    }
+
+    #[test]
+    fn sorted_neighborhood_rejects_tiny_window() {
+        let data = GeneratorConfig::tiny().with_entities(50).generate();
+        let ce = ComputingEnv::new(1, 2, GIB);
+        let s = SortedNeighborhood::by_title(1);
+        assert!(s.partition(&data.dataset, &ctx_in(&ce)).is_err());
+    }
+
+    #[test]
+    fn strategy_params_are_deterministic() {
+        let a = SortedNeighborhood::by_title(64);
+        let b = SortedNeighborhood::by_title(64);
+        assert_eq!(a.params(), b.params());
+        assert_eq!(
+            SizeBased::auto().params(),
+            SizeBased { max_size: None }.params()
+        );
+    }
+}

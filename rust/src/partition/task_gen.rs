@@ -53,6 +53,19 @@ pub fn generate_tasks(parts: &PartitionSet) -> Vec<MatchTask> {
                     }
                 }
             }
+            // Sorted-neighborhood windows: self + the adjacent window
+            // (the boundary-overlap task of the sliding-window model).
+            PartitionKind::Window { index, .. } => {
+                push(&mut tasks, p.id, p.id);
+                for q in all.iter().skip(i + 1) {
+                    if let PartitionKind::Window { index: qi, .. } = &q.kind {
+                        if *qi == *index + 1 {
+                            push(&mut tasks, p.id, q.id);
+                            break;
+                        }
+                    }
+                }
+            }
             // Case 3: self + later misc siblings + every non-misc
             // partition (regardless of order).
             PartitionKind::Misc { .. } => {
@@ -118,7 +131,9 @@ pub fn generate_tasks_two_sources_blocked(
                 ks.sort();
                 Some(format!("agg:{}", ks.join("+")))
             }
-            PartitionKind::Misc { .. } | PartitionKind::SizeBased => None,
+            PartitionKind::Misc { .. }
+            | PartitionKind::SizeBased
+            | PartitionKind::Window { .. } => None,
         }
     };
     let mut tasks = Vec::new();
@@ -385,6 +400,87 @@ mod tests {
         let tasks = generate_tasks_two_sources_blocked(&pa, &pb);
         // x↔x (1) + miscA×all B (3) + miscB×non-misc A (2) = 6
         assert_eq!(tasks.len(), 6);
+    }
+
+    /// Sorted-neighborhood windows: `k` windows → `k` intra tasks +
+    /// `k−1` adjacent-overlap tasks, and misc partitions still pair
+    /// with every window.
+    #[test]
+    fn window_task_generation_counts() {
+        let mut ps = PartitionSet::new();
+        for index in 0..4usize {
+            let members: Vec<EntityId> = (index * 10..(index + 1) * 10)
+                .map(|i| EntityId(i as u32))
+                .collect();
+            ps.push(
+                crate::partition::PartitionKind::Window { index, count: 4 },
+                members,
+            );
+        }
+        let tasks = generate_tasks(&ps);
+        assert_eq!(tasks.len(), 4 + 3, "4 intra + 3 adjacent overlaps");
+        // adjacency only: no window skips its neighbor
+        for t in &tasks {
+            if t.left != t.right {
+                assert_eq!(t.right.0, t.left.0 + 1);
+            }
+        }
+        // with a misc partition, misc × every window is added
+        ps.push(
+            crate::partition::PartitionKind::Misc { index: 0, count: 1 },
+            (40..45u32).map(EntityId).collect(),
+        );
+        let tasks = generate_tasks(&ps);
+        assert_eq!(tasks.len(), 7 + 1 + 4, "+ misc intra + misc × windows");
+    }
+
+    /// The sliding-window guarantee: every pair of entities within
+    /// `w` positions of each other in sort order is covered by some
+    /// task, for any slice size ≥ w.
+    #[test]
+    fn prop_window_pairs_within_w_covered() {
+        forall("window-cover", 40, |rng| {
+            let n = 2 + rng.gen_range(300);
+            let w = 2 + rng.gen_range(40);
+            let m = w + rng.gen_range(60); // slice size >= window
+            let all: Vec<EntityId> = ids(n);
+            let mut ps = PartitionSet::new();
+            let count = n.div_ceil(m);
+            for (index, chunk) in all.chunks(m).enumerate() {
+                ps.push(
+                    crate::partition::PartitionKind::Window { index, count },
+                    chunk.to_vec(),
+                );
+            }
+            let tasks = generate_tasks(&ps);
+            let mut covered: HashSet<(u32, u32)> = HashSet::new();
+            for t in &tasks {
+                let l = &ps.get(t.left).entities;
+                let r = &ps.get(t.right).entities;
+                if t.left == t.right {
+                    for i in 0..l.len() {
+                        for j in (i + 1)..l.len() {
+                            covered.insert((l[i].0, l[j].0));
+                        }
+                    }
+                } else {
+                    for &a in l {
+                        for &b in r {
+                            covered.insert((a.0.min(b.0), a.0.max(b.0)));
+                        }
+                    }
+                }
+            }
+            // entity ids are the sort positions here
+            for a in 0..n as u32 {
+                for b in (a + 1)..((a as usize + w).min(n) as u32) {
+                    assert!(
+                        covered.contains(&(a, b)),
+                        "pair ({a},{b}) within w={w} lost (m={m})"
+                    );
+                }
+            }
+        });
     }
 
     #[test]

@@ -45,7 +45,15 @@
 //! request/assign round trip — the dominant coordination cost when
 //! tasks are small — into one round trip per batch.  v3 also adds the
 //! incremental session layer ([`session`]) that lets servers decode
-//! these frames from arbitrary read-chunk boundaries.  The
+//! these frames from arbitrary read-chunk boundaries.
+//!
+//! **Memory-aware assignment (protocol v4).**  Every assignment —
+//! [`Message::TaskAssign`] and each [`AssignedTask`] inside
+//! [`Message::TaskAssignBatch`] — carries the task's §3.1 memory
+//! footprint (`c_ms · m₁ · m₂` from the match plan), and a match node
+//! whose budget the footprint exceeds answers with
+//! [`Message::TaskRejected`] instead of executing; the workflow
+//! service re-queues the task marked oversize for that node.  The
 //! authoritative byte-level layout of every frame is specified in
 //! `docs/WIRE_PROTOCOL.md`, kept in lockstep with this module.
 
@@ -64,8 +72,10 @@ pub use frame::{read_frame, read_frame_raw, write_frame, Transport, MAX_FRAME_BY
 /// (`docs/WIRE_PROTOCOL.md` § Version negotiation).  History:
 /// v1 — PR 1's unversioned frames; v2 — version byte + replicated data
 /// plane (directory, redirect, sync); v3 — batched task assignment
-/// ([`Message::TaskRequestBatch`] / [`Message::TaskAssignBatch`]).
-pub const PROTOCOL_VERSION: u8 = 3;
+/// ([`Message::TaskRequestBatch`] / [`Message::TaskAssignBatch`]);
+/// v4 — §3.1 memory-aware assignment (footprints on every assignment,
+/// [`Message::TaskRejected`]).
+pub const PROTOCOL_VERSION: u8 = 4;
 
 use crate::coordinator::scheduler::ServiceId;
 use crate::features::{EntityFeatures, QGramSet, TokenSet};
@@ -120,6 +130,19 @@ pub struct CompletedTask {
     pub matches: Vec<Correspondence>,
 }
 
+/// One assignment inside a [`Message::TaskAssignBatch`] (protocol v4):
+/// the task plus its §3.1 memory footprint, so a node can reject work
+/// that would not fit its budget *before* fetching anything.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AssignedTask {
+    /// The assigned match task.
+    pub task: MatchTask,
+    /// Estimated §3.1 memory footprint of the task (`c_ms · m₁ · m₂`
+    /// from the match plan; 0 when the coordinator has no plan
+    /// footprints).
+    pub mem_bytes: u64,
+}
+
 /// One protocol message (control plane to the workflow service, data
 /// plane to the data service).
 #[derive(Debug)]
@@ -164,6 +187,9 @@ pub enum Message {
     TaskAssign {
         /// The assigned match task (id + partition pair).
         task: MatchTask,
+        /// Estimated §3.1 memory footprint of the task (v4; 0 when
+        /// the coordinator has no plan footprints).
+        mem_bytes: u64,
     },
     /// workflow service → match service: nothing to assign right now.
     NoTask {
@@ -220,8 +246,21 @@ pub enum Message {
     TaskAssignBatch {
         /// `true` once every task of the workflow has completed.
         done: bool,
-        /// The assigned tasks, in scheduler preference order.
-        tasks: Vec<MatchTask>,
+        /// The assigned tasks with their memory footprints, in
+        /// scheduler preference order.
+        tasks: Vec<AssignedTask>,
+    },
+    /// match service → workflow service (v4): the assigned task's
+    /// §3.1 memory footprint exceeds this node's budget — it was not
+    /// executed.  The workflow service re-queues the task marked
+    /// oversize for this node and replies with the next assignment
+    /// ([`Message::TaskAssign`] or [`Message::NoTask`]), exactly like
+    /// a [`Message::TaskRequest`].
+    TaskRejected {
+        /// The rejecting service.
+        service: ServiceId,
+        /// The task that did not fit.
+        task_id: u32,
     },
     /// match service → data service: fetch one partition.
     FetchPartition {
@@ -302,6 +341,7 @@ const TAG_SYNC_REQUEST: u8 = 17;
 const TAG_SYNC_DONE: u8 = 18;
 const TAG_TASK_REQUEST_BATCH: u8 = 19;
 const TAG_TASK_ASSIGN_BATCH: u8 = 20;
+const TAG_TASK_REJECTED: u8 = 21;
 
 /// Minimum wire footprint of one [`EntityFeatures`]: a 4-byte title
 /// length plus three 4-byte list counts (all possibly zero).
@@ -313,11 +353,14 @@ fn put_u8(buf: &mut Vec<u8>, v: u8) {
     buf.push(v);
 }
 
-fn put_u32(buf: &mut Vec<u8>, v: u32) {
+// `put_u32`/`put_u64`/`put_str` are shared with the plan serializer
+// (`crate::coordinator::plan`), so the two canonical binary formats
+// keep one set of primitive encoders.
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u64(buf: &mut Vec<u8>, v: u64) {
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
@@ -329,7 +372,7 @@ fn put_bool(buf: &mut Vec<u8>, v: bool) {
     put_u8(buf, v as u8);
 }
 
-fn put_str(buf: &mut Vec<u8>, s: &str) {
+pub(crate) fn put_str(buf: &mut Vec<u8>, s: &str) {
     put_u32(buf, s.len() as u32);
     buf.extend_from_slice(s.as_bytes());
 }
@@ -416,11 +459,12 @@ impl Message {
                 put_u8(&mut b, TAG_TASK_REQUEST);
                 put_service(&mut b, *service);
             }
-            Message::TaskAssign { task } => {
+            Message::TaskAssign { task, mem_bytes } => {
                 put_u8(&mut b, TAG_TASK_ASSIGN);
                 put_u32(&mut b, task.id);
                 put_u32(&mut b, task.left.0);
                 put_u32(&mut b, task.right.0);
+                put_u64(&mut b, *mem_bytes);
             }
             Message::NoTask { done } => {
                 put_u8(&mut b, TAG_NO_TASK);
@@ -479,11 +523,17 @@ impl Message {
                 put_u8(&mut b, TAG_TASK_ASSIGN_BATCH);
                 put_bool(&mut b, *done);
                 put_u32(&mut b, tasks.len() as u32);
-                for t in tasks {
-                    put_u32(&mut b, t.id);
-                    put_u32(&mut b, t.left.0);
-                    put_u32(&mut b, t.right.0);
+                for a in tasks {
+                    put_u32(&mut b, a.task.id);
+                    put_u32(&mut b, a.task.left.0);
+                    put_u32(&mut b, a.task.right.0);
+                    put_u64(&mut b, a.mem_bytes);
                 }
+            }
+            Message::TaskRejected { service, task_id } => {
+                put_u8(&mut b, TAG_TASK_REJECTED);
+                put_service(&mut b, *service);
+                put_u32(&mut b, *task_id);
             }
             Message::FetchPartition { id } => {
                 put_u8(&mut b, TAG_FETCH_PARTITION);
@@ -556,6 +606,7 @@ impl Message {
                     left: PartitionId(d.u32()?),
                     right: PartitionId(d.u32()?),
                 },
+                mem_bytes: d.u64()?,
             },
             TAG_NO_TASK => Message::NoTask { done: d.bool()? },
             TAG_COMPLETE => {
@@ -621,17 +672,25 @@ impl Message {
             }
             TAG_TASK_ASSIGN_BATCH => {
                 let done = d.bool()?;
-                let n = d.list_len(12)?;
+                // 12 task bytes + 8 footprint bytes per element
+                let n = d.list_len(20)?;
                 let mut tasks = Vec::with_capacity(n);
                 for _ in 0..n {
-                    tasks.push(MatchTask {
-                        id: d.u32()?,
-                        left: PartitionId(d.u32()?),
-                        right: PartitionId(d.u32()?),
+                    tasks.push(AssignedTask {
+                        task: MatchTask {
+                            id: d.u32()?,
+                            left: PartitionId(d.u32()?),
+                            right: PartitionId(d.u32()?),
+                        },
+                        mem_bytes: d.u64()?,
                     });
                 }
                 Message::TaskAssignBatch { done, tasks }
             }
+            TAG_TASK_REJECTED => Message::TaskRejected {
+                service: d.service()?,
+                task_id: d.u32()?,
+            },
             TAG_FETCH_PARTITION => Message::FetchPartition {
                 id: PartitionId(d.u32()?),
             },
@@ -697,6 +756,7 @@ impl Message {
             Message::HeartbeatAck => "HeartbeatAck",
             Message::TaskRequestBatch { .. } => "TaskRequestBatch",
             Message::TaskAssignBatch { .. } => "TaskAssignBatch",
+            Message::TaskRejected { .. } => "TaskRejected",
             Message::FetchPartition { .. } => "FetchPartition",
             Message::Partition { .. } => "Partition",
             Message::ReplicaAnnounce { .. } => "ReplicaAnnounce",
@@ -905,6 +965,11 @@ pub(crate) mod testutil {
                     left: PartitionId(rng.gen_range(500) as u32),
                     right: PartitionId(rng.gen_range(500) as u32),
                 },
+                mem_bytes: rng.gen_range(1 << 30) as u64,
+            },
+            Message::TaskRejected {
+                service: svc,
+                task_id: rng.gen_range(10_000) as u32,
             },
             Message::NoTask {
                 done: rng.gen_bool(0.5),
@@ -978,10 +1043,13 @@ pub(crate) mod testutil {
             Message::TaskAssignBatch {
                 done: rng.gen_bool(0.5),
                 tasks: (0..rng.gen_range(9))
-                    .map(|i| MatchTask {
-                        id: i as u32,
-                        left: PartitionId(rng.gen_range(500) as u32),
-                        right: PartitionId(rng.gen_range(500) as u32),
+                    .map(|i| AssignedTask {
+                        task: MatchTask {
+                            id: i as u32,
+                            left: PartitionId(rng.gen_range(500) as u32),
+                            right: PartitionId(rng.gen_range(500) as u32),
+                        },
+                        mem_bytes: rng.gen_range(1 << 40) as u64,
                     })
                     .collect(),
             },
@@ -1269,10 +1337,13 @@ mod tests {
         let assign = Message::TaskAssignBatch {
             done: false,
             tasks: (0..3)
-                .map(|i| MatchTask {
-                    id: i,
-                    left: PartitionId(i),
-                    right: PartitionId(i + 1),
+                .map(|i| AssignedTask {
+                    task: MatchTask {
+                        id: i,
+                        left: PartitionId(i),
+                        right: PartitionId(i + 1),
+                    },
+                    mem_bytes: 1000 * i as u64,
                 })
                 .collect(),
         };
@@ -1283,10 +1354,48 @@ mod tests {
         };
         assert!(!done);
         assert_eq!(
-            tasks.iter().map(|t| t.id).collect::<Vec<_>>(),
+            tasks.iter().map(|a| a.task.id).collect::<Vec<_>>(),
             vec![0, 1, 2],
             "assignment order preserved"
         );
+        assert_eq!(
+            tasks.iter().map(|a| a.mem_bytes).collect::<Vec<_>>(),
+            vec![0, 1000, 2000],
+            "footprints travel with the tasks"
+        );
+    }
+
+    /// The v4 frames: the single assignment carries its footprint and
+    /// a rejection round-trips exactly.
+    #[test]
+    fn v4_assignment_and_rejection_roundtrip() {
+        let assign = Message::TaskAssign {
+            task: MatchTask {
+                id: 7,
+                left: PartitionId(1),
+                right: PartitionId(2),
+            },
+            mem_bytes: 123_456_789,
+        };
+        let Ok(Message::TaskAssign { task, mem_bytes }) =
+            Message::decode(&assign.encode())
+        else {
+            panic!("decode TaskAssign");
+        };
+        assert_eq!(task.id, 7);
+        assert_eq!(mem_bytes, 123_456_789);
+
+        let rej = Message::TaskRejected {
+            service: ServiceId(3),
+            task_id: 7,
+        };
+        let Ok(Message::TaskRejected { service, task_id }) =
+            Message::decode(&rej.encode())
+        else {
+            panic!("decode TaskRejected");
+        };
+        assert_eq!(service, ServiceId(3));
+        assert_eq!(task_id, 7);
     }
 
     /// Hostile batch counts are rejected before any allocation, like

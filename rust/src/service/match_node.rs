@@ -24,6 +24,14 @@
 //! **prefetcher** thread pulls the upcoming tasks' partitions into the
 //! shared cache, overlapping execution with data-plane fetches.
 //!
+//! With a `task_memory_budget` the node enforces the paper's §3.1
+//! memory model (protocol v4): every assignment carries the task's
+//! estimated footprint, and one that exceeds the budget is answered
+//! with `TaskRejected` — the coordinator re-queues it marked oversize
+//! for this node and routes it to a roomier one.  Written-off data
+//! replicas are retried after `replica_retry_cooldown` instead of
+//! being banned for the rest of the run.
+//!
 //! The node runs to workflow completion (`NoTask { done: true }` /
 //! an empty batch with `done`), then leaves gracefully.
 //! `fail_after_tasks` simulates a crash for failure-handling tests:
@@ -76,6 +84,16 @@ pub struct MatchNodeConfig {
     pub poll_interval: Duration,
     /// Connect/read timeout for all sockets.
     pub io_timeout: Duration,
+    /// §3.1 memory budget of this node: an assigned task whose
+    /// footprint (delivered with the assignment, protocol v4) exceeds
+    /// this is answered with `TaskRejected` instead of being executed
+    /// — the coordinator re-queues it for nodes with more memory.
+    /// `None` accepts every task (the pre-v4 behavior).
+    pub task_memory_budget: Option<u64>,
+    /// How long a data replica written off after a connection failure
+    /// stays excluded before fetches try it again
+    /// ([`ReplicaSelector`] re-admission).
+    pub replica_retry_cooldown: Duration,
     /// Test hook: simulate a crash after completing this many tasks.
     pub fail_after_tasks: Option<usize>,
 }
@@ -95,6 +113,9 @@ impl MatchNodeConfig {
             heartbeat_interval: Duration::from_millis(50),
             poll_interval: Duration::from_millis(2),
             io_timeout: Duration::from_secs(30),
+            task_memory_budget: None,
+            replica_retry_cooldown:
+                crate::service::replica::DEFAULT_RETRY_COOLDOWN,
             fail_after_tasks: None,
         }
     }
@@ -119,6 +140,11 @@ pub struct NodeReport {
     /// Data replicas this node gave up on mid-run (connection errors
     /// answered by failing over to the next replica).
     pub replica_failovers: u64,
+    /// Written-off replicas re-admitted after the retry cooldown.
+    pub replica_readmissions: u64,
+    /// Assignments this node rejected as oversize (§3.1 memory
+    /// budget, protocol v4); each was re-queued by the coordinator.
+    pub tasks_rejected: u64,
     /// Busy time per worker thread, ns.
     pub busy_ns: Vec<u64>,
     /// The node went down without a graceful leave — either the
@@ -183,7 +209,13 @@ struct WorkerStats {
     busy_ns: u64,
     completed: u64,
     comparisons: u64,
+    rejected: u64,
     lost_coordinator: bool,
+}
+
+/// Does `mem_bytes` exceed this node's §3.1 budget?
+fn oversize(cfg: &MatchNodeConfig, mem_bytes: u64) -> bool {
+    cfg.task_memory_budget.is_some_and(|budget| mem_bytes > budget)
 }
 
 /// Join, match until done, leave.  See module docs.
@@ -205,7 +237,10 @@ pub fn run_match_node(
     // the coordinator's directory adds; the selector deduplicates
     let mut data_addrs = cfg.data_addrs.clone();
     data_addrs.extend(directory);
-    let selector = ReplicaSelector::new(data_addrs);
+    let selector = ReplicaSelector::with_cooldown(
+        data_addrs,
+        cfg.replica_retry_cooldown,
+    );
     if selector.is_empty() {
         bail!("no data-plane address configured and none in the directory");
     }
@@ -280,6 +315,8 @@ pub fn run_match_node(
         cache_misses: cache.misses(),
         fetches_per_replica: selector.fetches_per_replica(),
         replica_failovers: selector.failovers(),
+        replica_readmissions: selector.readmissions(),
+        tasks_rejected: 0,
         busy_ns: Vec::new(),
         crashed,
         lost_coordinator: false,
@@ -288,6 +325,7 @@ pub fn run_match_node(
         let stats = r?;
         report.tasks_completed += stats.completed;
         report.comparisons += stats.comparisons;
+        report.tasks_rejected += stats.rejected;
         report.busy_ns.push(stats.busy_ns);
         report.lost_coordinator |= stats.lost_coordinator;
     }
@@ -425,9 +463,20 @@ fn worker_loop(ctx: WorkerCtx<'_>) -> Result<WorkerStats> {
             }
         };
         match reply {
-            Message::TaskAssign { task } => {
+            Message::TaskAssign { task, mem_bytes } => {
                 if simulated_crash_tripped(ctx) {
                     break; // the in-flight task is abandoned, re-queued
+                }
+                if oversize(cfg, mem_bytes) {
+                    // §3.1: the task does not fit this node — hand it
+                    // back instead of paging/OOMing; the reply to the
+                    // rejection is the next assignment
+                    stats.rejected += 1;
+                    outgoing = Message::TaskRejected {
+                        service,
+                        task_id: task.id,
+                    };
+                    continue;
                 }
                 let report =
                     execute_task(ctx, &mut conns, &mut stats, &task)?;
@@ -498,7 +547,63 @@ fn worker_loop_batched(
             };
             match reply {
                 Message::TaskAssignBatch { done, tasks } => {
-                    if tasks.is_empty() {
+                    // §3.1 budget check per assignment; oversize ones
+                    // are handed back one frame each, and the replies
+                    // may carry replacement assignments (checked too)
+                    let mut accepted: Vec<MatchTask> =
+                        Vec::with_capacity(tasks.len());
+                    let mut rejections: VecDeque<u32> = VecDeque::new();
+                    for a in tasks {
+                        if oversize(cfg, a.mem_bytes) {
+                            stats.rejected += 1;
+                            rejections.push_back(a.task.id);
+                        } else {
+                            accepted.push(a.task);
+                        }
+                    }
+                    let mut lost = false;
+                    while let Some(task_id) = rejections.pop_front() {
+                        let reply = match wf.request(
+                            &Message::TaskRejected { service, task_id },
+                        ) {
+                            Ok(r) => r,
+                            Err(_) => {
+                                lost = true;
+                                break;
+                            }
+                        };
+                        match reply {
+                            Message::TaskAssign { task, mem_bytes } => {
+                                if oversize(cfg, mem_bytes) {
+                                    stats.rejected += 1;
+                                    rejections.push_back(task.id);
+                                } else {
+                                    accepted.push(task);
+                                }
+                            }
+                            Message::NoTask { .. } => {}
+                            Message::Error { message } => {
+                                ctx.dead.store(true, Ordering::SeqCst);
+                                bail!(
+                                    "workflow service error: {message}"
+                                )
+                            }
+                            other => {
+                                ctx.dead.store(true, Ordering::SeqCst);
+                                bail!(
+                                    "unexpected {} from workflow \
+                                     service",
+                                    other.kind()
+                                )
+                            }
+                        }
+                    }
+                    if lost {
+                        // coordinator went away — end of workflow
+                        stats.lost_coordinator = true;
+                        break;
+                    }
+                    if accepted.is_empty() {
                         if done {
                             break;
                         }
@@ -509,12 +614,12 @@ fn worker_loop_batched(
                     // warm the cache for everything beyond the first
                     // task while we execute it (send errors just mean
                     // the prefetcher is off — cache disabled)
-                    for t in tasks.iter().skip(1) {
+                    for t in accepted.iter().skip(1) {
                         for p in t.needed_partitions() {
                             let _ = prefetch.send(p);
                         }
                     }
-                    queue.extend(tasks);
+                    queue.extend(accepted);
                 }
                 Message::Error { message } => {
                     ctx.dead.store(true, Ordering::SeqCst);
@@ -846,6 +951,76 @@ mod tests {
             wf_report.batch_requests
         );
         assert_eq!(wf_report.stale_completions, 0);
+        data_srv.shutdown();
+    }
+
+    /// §3.1 memory-model parity end to end: a node whose budget no
+    /// task fits rejects every assignment with `TaskRejected`, the
+    /// coordinator re-queues them marked oversize, and a second node
+    /// with enough memory completes the whole workflow — no task is
+    /// lost, none executes on the small node.
+    #[test]
+    fn small_budget_node_rejects_tasks_and_big_node_completes() {
+        let data = GeneratorConfig::tiny().with_entities(120).generate();
+        let ids: Vec<EntityId> =
+            data.dataset.entities.iter().map(|e| e.id).collect();
+        let parts = partition_size_based(&ids, 40);
+        let tasks = generate_tasks(&parts);
+        let n_tasks = tasks.len();
+        let task_mem: std::collections::HashMap<u32, u64> =
+            tasks.iter().map(|t| (t.id, 1_000u64)).collect();
+        let store = Arc::new(DataService::build(&data.dataset, &parts));
+        let data_srv =
+            DataServiceServer::start(store, "127.0.0.1:0").unwrap();
+        let wf_srv = WorkflowServiceServer::start(
+            tasks,
+            WorkflowServerConfig {
+                task_mem,
+                ..WorkflowServerConfig::default()
+            },
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let exec: Arc<dyn TaskExecutor> = Arc::new(RustExecutor::new(
+            MatchStrategy::new(StrategyKind::Wam),
+        ));
+
+        // the small node starts alone, so it is assigned (and
+        // rejects) every open task before the big node exists
+        let mut small = MatchNodeConfig::new(
+            wf_srv.addr().to_string(),
+            data_srv.addr().to_string(),
+        );
+        small.name = "small".into();
+        small.task_memory_budget = Some(500); // every task is 1,000 B
+        let small_exec = exec.clone();
+        let small_handle = std::thread::spawn(move || {
+            run_match_node(&small, small_exec)
+        });
+        std::thread::sleep(Duration::from_millis(150));
+
+        let mut big = MatchNodeConfig::new(
+            wf_srv.addr().to_string(),
+            data_srv.addr().to_string(),
+        );
+        big.name = "big".into();
+        big.cache_capacity = 4;
+        let report_big = run_match_node(&big, exec).unwrap();
+        let report_small = small_handle.join().unwrap().unwrap();
+
+        assert_eq!(report_small.tasks_completed, 0, "nothing fits");
+        assert!(report_small.tasks_rejected >= 1);
+        assert!(!report_small.crashed);
+        assert_eq!(report_big.tasks_completed as usize, n_tasks);
+        assert_eq!(report_big.tasks_rejected, 0);
+        assert!(wf_srv.wait_done(Duration::from_secs(1)));
+        let wf_report = wf_srv.finish();
+        assert_eq!(wf_report.completed_tasks, n_tasks);
+        assert_eq!(
+            wf_report.oversize_rejections,
+            report_small.tasks_rejected
+        );
+        assert_eq!(wf_report.comparisons, 120 * 119 / 2, "nothing lost");
         data_srv.shutdown();
     }
 

@@ -15,8 +15,14 @@
 //!
 //! A replica that fails at the connection level is marked dead and its
 //! locality entries are dropped; selection then **fails over** to the
-//! next live replica.  Selection returns `None` only when every replica
-//! is dead — the caller treats that like the old single-data-server
+//! next live replica.  A dead replica is not banned forever: after
+//! [`ReplicaSelector::cooldown`] it is **re-admitted** and selection
+//! may try it again — a replica that was only restarting (or dropped a
+//! single connection under load) rejoins the rotation instead of
+//! leaving the node one failure away from abandoning its run.  If it
+//! fails again it is written off for another cooldown.  Selection
+//! returns `None` only when every replica is dead *and within its
+//! cooldown* — the caller treats that like the old single-data-server
 //! fetch failure (abandon the node, let the workflow service re-queue).
 
 use crate::partition::PartitionId;
@@ -25,11 +31,18 @@ use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// Default re-admission cooldown for a written-off replica.
+pub const DEFAULT_RETRY_COOLDOWN: Duration = Duration::from_secs(3);
 
 struct ReplicaState {
     addr: String,
     alive: AtomicBool,
+    /// When the replica was written off (None while alive).  Guards
+    /// the re-admission clock; `Mutex` because `Instant` is not
+    /// atomic.
+    dead_since: Mutex<Option<Instant>>,
     /// Fetches in flight right now (across this node's workers).
     outstanding: AtomicUsize,
     /// Fetches ever started against this replica.
@@ -38,19 +51,32 @@ struct ReplicaState {
 
 /// Picks which data-plane replica serves each partition fetch; shared
 /// by all workers of one match node.  See the module docs for the
-/// selection policy.
+/// selection policy and the re-admission cooldown.
 pub struct ReplicaSelector {
     replicas: Vec<ReplicaState>,
     /// partition → replica index that last served it successfully.
     locality: Mutex<HashMap<PartitionId, usize>>,
     failovers: AtomicU64,
+    readmissions: AtomicU64,
+    /// How long a dead replica stays excluded before selection tries
+    /// it again.
+    cooldown: Duration,
 }
 
 impl ReplicaSelector {
-    /// Build a selector over `addrs` (duplicates removed, order kept —
-    /// exact string comparison, so `"localhost:1"` and `"127.0.0.1:1"`
-    /// count as distinct replicas).
+    /// Build a selector over `addrs` with the default re-admission
+    /// cooldown (duplicates removed, order kept — exact string
+    /// comparison, so `"localhost:1"` and `"127.0.0.1:1"` count as
+    /// distinct replicas).
     pub fn new(addrs: Vec<String>) -> ReplicaSelector {
+        ReplicaSelector::with_cooldown(addrs, DEFAULT_RETRY_COOLDOWN)
+    }
+
+    /// Build a selector with an explicit re-admission cooldown.
+    pub fn with_cooldown(
+        addrs: Vec<String>,
+        cooldown: Duration,
+    ) -> ReplicaSelector {
         let mut seen: Vec<String> = Vec::new();
         for a in addrs {
             if !seen.contains(&a) {
@@ -63,12 +89,15 @@ impl ReplicaSelector {
                 .map(|addr| ReplicaState {
                     addr,
                     alive: AtomicBool::new(true),
+                    dead_since: Mutex::new(None),
                     outstanding: AtomicUsize::new(0),
                     fetches: AtomicU64::new(0),
                 })
                 .collect(),
             locality: Mutex::new(HashMap::new()),
             failovers: AtomicU64::new(0),
+            readmissions: AtomicU64::new(0),
+            cooldown,
         }
     }
 
@@ -90,6 +119,11 @@ impl ReplicaSelector {
             .count()
     }
 
+    /// The configured re-admission cooldown.
+    pub fn cooldown(&self) -> Duration {
+        self.cooldown
+    }
+
     /// Address of replica `idx`.
     pub fn addr(&self, idx: usize) -> &str {
         &self.replicas[idx].addr
@@ -100,8 +134,16 @@ impl ReplicaSelector {
         self.replicas.iter().position(|r| r.addr == addr)
     }
 
-    /// Choose a replica for fetching `id`; `None` when all are dead.
+    /// Choose a replica for fetching `id`; `None` when all are dead
+    /// and still cooling down.
     pub fn select(&self, id: PartitionId) -> Option<usize> {
+        self.select_at(id, Instant::now())
+    }
+
+    /// [`Self::select`] with an explicit clock (unit tests drive the
+    /// cooldown deterministically through this).
+    fn select_at(&self, id: PartitionId, now: Instant) -> Option<usize> {
+        self.readmit_due(now);
         if let Some(&i) = self.locality.lock().unwrap().get(&id) {
             if self.replicas[i].alive.load(Ordering::SeqCst) {
                 return Some(i);
@@ -121,6 +163,26 @@ impl ReplicaSelector {
             .map(|(i, _)| i)
     }
 
+    /// Re-admit every dead replica whose cooldown has elapsed at
+    /// `now`.
+    fn readmit_due(&self, now: Instant) {
+        for r in &self.replicas {
+            if r.alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            let mut dead_since = r.dead_since.lock().unwrap();
+            let due = matches!(
+                *dead_since,
+                Some(at) if now.duration_since(at) >= self.cooldown
+            );
+            if due {
+                *dead_since = None;
+                r.alive.store(true, Ordering::SeqCst);
+                self.readmissions.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+    }
+
     /// Mark a fetch against `idx` as started (pair with
     /// [`ReplicaSelector::finish_fetch`]).
     pub fn begin_fetch(&self, idx: usize) {
@@ -138,12 +200,22 @@ impl ReplicaSelector {
         self.locality.lock().unwrap().insert(id, idx);
     }
 
-    /// Connection-level failure of `idx`: stop selecting it and forget
-    /// its locality entries.  Counts one failover.
+    /// Connection-level failure of `idx`: stop selecting it until the
+    /// cooldown elapses and forget its locality entries.  Counts one
+    /// failover.
     pub fn mark_dead(&self, idx: usize) {
+        self.mark_dead_at(idx, Instant::now());
+    }
+
+    /// [`Self::mark_dead`] with an explicit clock (for the cooldown
+    /// unit tests).
+    fn mark_dead_at(&self, idx: usize, now: Instant) {
         if self.replicas[idx].alive.swap(false, Ordering::SeqCst) {
             self.failovers.fetch_add(1, Ordering::SeqCst);
         }
+        // (re-)start the cooldown clock even when already dead, so a
+        // failure during re-probing pushes the next retry out again
+        *self.replicas[idx].dead_since.lock().unwrap() = Some(now);
         self.locality.lock().unwrap().retain(|_, v| *v != idx);
     }
 
@@ -158,6 +230,11 @@ impl ReplicaSelector {
     /// Replicas marked dead so far.
     pub fn failovers(&self) -> u64 {
         self.failovers.load(Ordering::SeqCst)
+    }
+
+    /// Written-off replicas re-admitted after their cooldown.
+    pub fn readmissions(&self) -> u64 {
+        self.readmissions.load(Ordering::SeqCst)
     }
 }
 
@@ -210,6 +287,7 @@ mod tests {
         assert_eq!(s.addr(1), "b:2");
         assert_eq!(s.index_of("b:2"), Some(1));
         assert_eq!(s.index_of("c:3"), None);
+        assert_eq!(s.cooldown(), DEFAULT_RETRY_COOLDOWN);
     }
 
     #[test]
@@ -260,5 +338,78 @@ mod tests {
         assert_eq!(s.failovers(), 1);
         s.mark_dead(1);
         assert_eq!(s.select(PartitionId(7)), None, "all replicas dead");
+    }
+
+    /// The ROADMAP follow-up: a written-off replica is retried after
+    /// the cooldown instead of being banned for the rest of the run.
+    /// Driven through an explicit clock so the test is deterministic.
+    #[test]
+    fn dead_replica_readmitted_after_cooldown() {
+        let cd = Duration::from_secs(5);
+        let s = ReplicaSelector::with_cooldown(
+            vec!["a:1".into(), "b:2".into()],
+            cd,
+        );
+        let t0 = Instant::now();
+        s.mark_dead_at(0, t0);
+        assert_eq!(s.live_count(), 1);
+        // within the cooldown the dead replica stays excluded
+        let just_before = t0 + cd - Duration::from_millis(1);
+        assert_eq!(s.select_at(PartitionId(1), just_before), Some(1));
+        assert_eq!(s.live_count(), 1);
+        assert_eq!(s.readmissions(), 0);
+        // at the cooldown boundary it rejoins the rotation
+        assert_eq!(s.select_at(PartitionId(1), t0 + cd), Some(0));
+        assert_eq!(s.live_count(), 2);
+        assert_eq!(s.readmissions(), 1);
+        // a second failure re-starts the clock (and counts a failover)
+        s.mark_dead_at(0, t0 + cd);
+        assert_eq!(s.failovers(), 2);
+        assert_eq!(
+            s.select_at(PartitionId(1), t0 + cd + cd / 2),
+            Some(1),
+            "cooling down again"
+        );
+        assert_eq!(s.select_at(PartitionId(1), t0 + cd + cd), Some(0));
+        assert_eq!(s.readmissions(), 2);
+    }
+
+    /// With every replica dead and cooling down, selection yields
+    /// `None` (the caller abandons); once the cooldown passes it
+    /// recovers instead of staying dead forever.
+    #[test]
+    fn all_dead_recovers_after_cooldown() {
+        let cd = Duration::from_secs(2);
+        let s =
+            ReplicaSelector::with_cooldown(vec!["a:1".into()], cd);
+        let t0 = Instant::now();
+        s.mark_dead_at(0, t0);
+        assert_eq!(s.select_at(PartitionId(0), t0), None);
+        assert_eq!(
+            s.select_at(PartitionId(0), t0 + cd),
+            Some(0),
+            "sole replica retried after cooldown"
+        );
+    }
+
+    /// A failure while re-probing pushes the next retry out: the
+    /// cooldown clock restarts from the newest failure.
+    #[test]
+    fn reprobe_failure_restarts_cooldown_clock() {
+        let cd = Duration::from_secs(4);
+        let s = ReplicaSelector::with_cooldown(
+            vec!["a:1".into(), "b:2".into()],
+            cd,
+        );
+        let t0 = Instant::now();
+        s.mark_dead_at(0, t0);
+        // a later failure report (e.g. the re-probe also failed)
+        s.mark_dead_at(0, t0 + Duration::from_secs(3));
+        // the original cooldown expiry no longer re-admits it
+        assert_eq!(s.select_at(PartitionId(9), t0 + cd), Some(1));
+        assert_eq!(s.live_count(), 1);
+        // only the restarted clock does
+        let t_restart = t0 + Duration::from_secs(3) + cd;
+        assert_eq!(s.select_at(PartitionId(9), t_restart), Some(0));
     }
 }

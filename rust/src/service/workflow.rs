@@ -43,8 +43,8 @@ use crate::net::reactor::{Action, ConnId, FrameHandler, Reactor};
 use crate::net::TrafficStats;
 use crate::partition::MatchTask;
 use crate::rpc::session::SessionEncoder;
-use crate::rpc::{CompletedTask, Message, PROTOCOL_VERSION};
-use std::collections::HashMap;
+use crate::rpc::{AssignedTask, CompletedTask, Message, PROTOCOL_VERSION};
+use std::collections::{HashMap, HashSet};
 use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -56,13 +56,18 @@ use std::time::{Duration, Instant};
 const MAX_ASSIGN_BATCH: usize = 256;
 
 /// Workflow-server tuning.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct WorkflowServerConfig {
     /// Scheduling policy for the central task list.
     pub policy: Policy,
     /// A service that has not been heard from for this long is failed
     /// and its in-flight tasks re-queued.
     pub heartbeat_timeout: Duration,
+    /// §3.1 memory footprint per task id (from the match plan),
+    /// attached to every assignment (protocol v4) so nodes can reject
+    /// work that exceeds their budget.  Tasks without an entry are
+    /// assigned with footprint 0 (never rejected).
+    pub task_mem: HashMap<u32, u64>,
 }
 
 impl Default for WorkflowServerConfig {
@@ -70,6 +75,7 @@ impl Default for WorkflowServerConfig {
         WorkflowServerConfig {
             policy: Policy::Affinity,
             heartbeat_timeout: Duration::from_secs(2),
+            task_mem: HashMap::new(),
         }
     }
 }
@@ -103,6 +109,15 @@ struct WfShared {
     traffic: TrafficStats,
     requeued_tasks: AtomicU64,
     stale_completions: AtomicU64,
+    /// Fresh oversize rejections (`TaskRejected`, v4) — tasks handed
+    /// back because their §3.1 footprint exceeded a node's budget.
+    oversize_rejections: AtomicU64,
+    /// Services whose first oversize rejection was already logged
+    /// (the reactor thread must not write one stderr line per
+    /// rejected task; rejections are counted, not narrated).
+    oversize_logged: Mutex<HashSet<usize>>,
+    /// §3.1 memory footprint per task id, attached to assignments.
+    task_mem: HashMap<u32, u64>,
     /// Peers rejected for speaking a different protocol version.
     version_rejections: AtomicU64,
     /// Data-plane replica directory, announcement order, deduplicated.
@@ -126,11 +141,20 @@ impl WfShared {
         }
     }
 
-    /// Reply to a pull (TaskRequest or Complete): the next assignment.
+    /// The §3.1 footprint attached to an assignment of `task_id`.
+    fn mem_of(&self, task_id: u32) -> u64 {
+        self.task_mem.get(&task_id).copied().unwrap_or(0)
+    }
+
+    /// Reply to a pull (TaskRequest, Complete or TaskRejected): the
+    /// next assignment with its memory footprint.
     fn next_assignment(&self, service: ServiceId) -> Message {
         let mut sched = self.sched.lock().unwrap();
         match sched.next_task(service) {
-            Some(task) => Message::TaskAssign { task },
+            Some(task) => Message::TaskAssign {
+                task,
+                mem_bytes: self.mem_of(task.id),
+            },
             None => Message::NoTask {
                 done: sched.is_done(),
             },
@@ -177,6 +201,10 @@ pub struct WorkflowReport {
     pub affinity_assignments: u64,
     /// Tasks re-queued because their service failed or left.
     pub requeued_tasks: u64,
+    /// Oversize rejections (v4): assignments handed back because the
+    /// task's §3.1 footprint exceeded the node's budget, re-queued
+    /// marked oversize instead of lost.
+    pub oversize_rejections: u64,
     /// Completion reports dropped as stale (service presumed dead, or
     /// task no longer in flight at that service/generation).
     pub stale_completions: u64,
@@ -218,6 +246,9 @@ impl WorkflowServiceServer {
             traffic: TrafficStats::new(),
             requeued_tasks: AtomicU64::new(0),
             stale_completions: AtomicU64::new(0),
+            oversize_rejections: AtomicU64::new(0),
+            oversize_logged: Mutex::new(HashSet::new()),
+            task_mem: cfg.task_mem,
             version_rejections: AtomicU64::new(0),
             replicas: Mutex::new(Vec::new()),
             shutdown: shutdown.clone(),
@@ -302,6 +333,10 @@ impl WorkflowServiceServer {
             requeued_tasks: self
                 .shared
                 .requeued_tasks
+                .load(Ordering::Relaxed),
+            oversize_rejections: self
+                .shared
+                .oversize_rejections
                 .load(Ordering::Relaxed),
             stale_completions: self
                 .shared
@@ -548,7 +583,52 @@ fn handle_message(shared: &WfShared, msg: Message) -> Message {
                 let tasks = sched.next_tasks_for(service, k);
                 (tasks, sched.is_done())
             };
+            let tasks = tasks
+                .into_iter()
+                .map(|task| {
+                    let mem_bytes = shared.mem_of(task.id);
+                    AssignedTask { task, mem_bytes }
+                })
+                .collect();
             Message::TaskAssignBatch { done, tasks }
+        }
+        Message::TaskRejected { service, task_id } => {
+            if !shared.touch(service) {
+                return shared.fenced(service);
+            }
+            let fresh = shared
+                .sched
+                .lock()
+                .unwrap()
+                .reject_task(service, task_id);
+            if fresh {
+                shared
+                    .oversize_rejections
+                    .fetch_add(1, Ordering::Relaxed);
+                // one diagnostic per service, not per task: this runs
+                // on the reactor thread, and a node that fits nothing
+                // rejects every open task
+                if shared
+                    .oversize_logged
+                    .lock()
+                    .unwrap()
+                    .insert(service.0)
+                {
+                    eprintln!(
+                        "workflow service: service {} rejected task \
+                         {task_id} as oversize ({} estimated); this \
+                         and further oversize work is re-queued for \
+                         other services (counted, not logged)",
+                        service.0,
+                        crate::util::fmt_bytes(shared.mem_of(task_id))
+                    );
+                }
+            } else {
+                shared
+                    .stale_completions
+                    .fetch_add(1, Ordering::Relaxed);
+            }
+            shared.next_assignment(service)
         }
         Message::Heartbeat { service } => {
             shared.heartbeats.fetch_add(1, Ordering::Relaxed);
@@ -641,7 +721,7 @@ mod tests {
         let svc = join(&mut c, "test-node");
 
         // initial pull
-        let Message::TaskAssign { task: t0 } =
+        let Message::TaskAssign { task: t0, .. } =
             c.request(&Message::TaskRequest { service: svc }).unwrap()
         else {
             panic!("expected assignment");
@@ -660,7 +740,7 @@ mod tests {
                 }],
             })
             .unwrap();
-        let Message::TaskAssign { task: t1 } = reply else {
+        let Message::TaskAssign { task: t1, .. } = reply else {
             panic!("expected second assignment, got {}", reply.kind());
         };
         assert_ne!(t0.id, t1.id);
@@ -723,11 +803,11 @@ mod tests {
             .request(&Message::TaskRequestBatch {
                 service: svc,
                 max: 2,
-                cached: vec![tasks[0].left],
+                cached: vec![tasks[0].task.left],
                 completed: tasks
                     .iter()
-                    .map(|t| CompletedTask {
-                        task_id: t.id,
+                    .map(|a| CompletedTask {
+                        task_id: a.task.id,
                         comparisons: 7,
                         matches: vec![],
                     })
@@ -747,7 +827,7 @@ mod tests {
                 max: 2,
                 cached: vec![],
                 completed: vec![CompletedTask {
-                    task_id: tasks[0].id,
+                    task_id: tasks[0].task.id,
                     comparisons: 7,
                     matches: vec![],
                 }],
@@ -864,6 +944,91 @@ mod tests {
         assert_eq!(report.version_rejections, 0);
     }
 
+    /// §3.1 memory-model parity over the wire: footprints travel on
+    /// assignments, a `TaskRejected` re-queues the task marked
+    /// oversize (never re-offered to the rejector), and another node
+    /// completes it — nothing is lost.
+    #[test]
+    fn oversize_rejection_is_requeued_not_lost() {
+        let mut task_mem = HashMap::new();
+        task_mem.insert(0u32, 1_000_000u64);
+        task_mem.insert(1u32, 10u64);
+        let srv = WorkflowServiceServer::start(
+            vec![task(0, 0, 1), task(1, 2, 3)],
+            WorkflowServerConfig {
+                policy: Policy::Fifo,
+                task_mem,
+                ..WorkflowServerConfig::default()
+            },
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let mut a = client(srv.addr());
+        let svc_a = join(&mut a, "small-node");
+        let Message::TaskAssign { task: t, mem_bytes } = a
+            .request(&Message::TaskRequest { service: svc_a })
+            .unwrap()
+        else {
+            panic!("expected assignment");
+        };
+        assert_eq!(t.id, 0);
+        assert_eq!(mem_bytes, 1_000_000, "footprint attached");
+        // node rejects; the reply is the next (fitting) assignment
+        let reply = a
+            .request(&Message::TaskRejected {
+                service: svc_a,
+                task_id: t.id,
+            })
+            .unwrap();
+        let Message::TaskAssign { task: t1, mem_bytes } = reply else {
+            panic!("expected follow-up assignment");
+        };
+        assert_eq!(t1.id, 1);
+        assert_eq!(mem_bytes, 10);
+        // after completing the small task, the oversize one is NOT
+        // re-offered to its rejector
+        let reply = a
+            .request(&Message::Complete {
+                service: svc_a,
+                task_id: t1.id,
+                comparisons: 1,
+                cached: vec![],
+                matches: vec![],
+            })
+            .unwrap();
+        assert!(
+            matches!(reply, Message::NoTask { done: false }),
+            "rejector must not see the oversize task again"
+        );
+        // a second node receives the re-queued task and completes it
+        let mut b = client(srv.addr());
+        let svc_b = join(&mut b, "big-node");
+        let Message::TaskAssign { task: re, mem_bytes } = b
+            .request(&Message::TaskRequest { service: svc_b })
+            .unwrap()
+        else {
+            panic!("re-queued oversize task not offered");
+        };
+        assert_eq!(re.id, 0);
+        assert_eq!(mem_bytes, 1_000_000);
+        let done = b
+            .request(&Message::Complete {
+                service: svc_b,
+                task_id: re.id,
+                comparisons: 1,
+                cached: vec![],
+                matches: vec![],
+            })
+            .unwrap();
+        assert!(matches!(done, Message::NoTask { done: true }));
+        assert!(srv.wait_done(Duration::from_secs(1)));
+        let report = srv.finish();
+        assert_eq!(report.completed_tasks, 2);
+        assert_eq!(report.oversize_rejections, 1);
+        assert_eq!(report.requeued_tasks, 0, "rejection is not a failure");
+        assert_eq!(report.stale_completions, 0);
+    }
+
     /// A service that misses heartbeats is failed and fenced: its
     /// in-flight task is re-queued for others, and everything it sends
     /// afterwards — completions included — is refused with an `Error`
@@ -883,7 +1048,7 @@ mod tests {
         // node A joins, takes the task, then goes silent
         let mut a = client(srv.addr());
         let svc_a = join(&mut a, "doomed");
-        let Message::TaskAssign { task: t } = a
+        let Message::TaskAssign { task: t, .. } = a
             .request(&Message::TaskRequest { service: svc_a })
             .unwrap()
         else {
@@ -894,7 +1059,7 @@ mod tests {
         // node B joins and receives the re-queued task
         let mut b = client(srv.addr());
         let svc_b = join(&mut b, "survivor");
-        let Message::TaskAssign { task: re } = b
+        let Message::TaskAssign { task: re, .. } = b
             .request(&Message::TaskRequest { service: svc_b })
             .unwrap()
         else {

@@ -553,6 +553,7 @@ fn dist_batched_chaos_run_matches_thread_engine() {
             policy: Policy::Affinity,
             // stalls are ≤ 20 ms; keep spurious failure detection out
             heartbeat_timeout: Duration::from_secs(3),
+            ..WorkflowServerConfig::default()
         },
         "127.0.0.1:0",
     )
@@ -643,6 +644,75 @@ fn dist_batched_chaos_run_matches_thread_engine() {
         norm_pairs(&reference.correspondences),
         "injected faults altered the merged result"
     );
+}
+
+/// The api-redesign acceptance test: the fluent builder with the new
+/// **sorted-neighborhood strategy behind the `PartitionStrategy`
+/// trait** runs end to end on the real TCP engine —
+/// `Workflow::for_dataset(..).strategy(SortedNeighborhood{..})
+/// .backend(Dist(..)).plan()?.execute()?` — and is result-identical
+/// to the same plan on the thread backend.
+#[test]
+fn builder_sorted_neighborhood_on_dist_matches_threads() {
+    use pem::coordinator::Workflow;
+    use pem::engine::backend::{Dist, DistOptions, Threads};
+    use pem::partition::SortedNeighborhood;
+
+    let data = GeneratorConfig::tiny()
+        .with_entities(600)
+        .with_seed(42)
+        .generate();
+    let ce = ComputingEnv::new(2, 2, GIB);
+
+    let threads = Workflow::for_dataset(&data.dataset)
+        .strategy(SortedNeighborhood::by_title(80).with_max_size(120))
+        .backend(Threads)
+        .env(ce)
+        .cache(8)
+        .run()
+        .unwrap();
+
+    let planned = Workflow::for_dataset(&data.dataset)
+        .strategy(SortedNeighborhood::by_title(80).with_max_size(120))
+        .backend(Dist(DistOptions {
+            batch: 2,
+            ..DistOptions::default()
+        }))
+        .env(ce)
+        .cache(8)
+        .plan()
+        .unwrap();
+    // the plan is a first-class artifact: inspectable and serializable
+    // before any execution
+    let skew = planned.plan().skew();
+    assert!(skew.n_tasks > 0);
+    assert!(skew.max_task_mem > 0, "footprints planned");
+    let bytes = planned.plan().to_bytes();
+    assert_eq!(
+        pem::coordinator::MatchPlan::from_bytes(&bytes)
+            .unwrap()
+            .to_bytes(),
+        bytes
+    );
+    let dist = planned.execute().unwrap();
+
+    assert_eq!(dist.n_tasks, threads.n_tasks);
+    assert_eq!(dist.metrics.tasks, threads.metrics.tasks);
+    assert_eq!(dist.metrics.comparisons, threads.metrics.comparisons);
+    assert_eq!(dist.result.len(), threads.result.len());
+    for c in threads.result.iter() {
+        assert_eq!(
+            dist.result.similarity(c.e1, c.e2),
+            Some(c.sim),
+            "pair ({}, {}) differs across backends",
+            c.e1,
+            c.e2
+        );
+    }
+    assert!(dist.metrics.bytes_fetched > 0, "real socket traffic");
+    // the windowed strategy really found duplicates over the wire
+    let q = dist.result.quality(&data.truth);
+    assert!(q.recall > 0.4, "sn recall {}", q.recall);
 }
 
 /// The pull protocol balances load: with two equal nodes and plenty of

@@ -205,3 +205,41 @@ fn misc_entities_still_matchable() {
     assert!(q.recall > 0.75, "recall {} with 40% misc", q.recall);
     assert!(out.n_misc_partitions >= 1);
 }
+
+/// The new sorted-neighborhood strategy crosses engines like the
+/// legacy ones: executing its window/overlap tasks inside the
+/// simulator yields exactly the thread engine's correspondences.
+#[test]
+fn sorted_neighborhood_sim_execute_equals_threads_result() {
+    use pem::coordinator::Workflow;
+    use pem::engine::backend::{Sim, SimOptions, Threads};
+    use pem::partition::SortedNeighborhood;
+
+    let data = GeneratorConfig::tiny()
+        .with_entities(600)
+        .with_seed(9)
+        .generate();
+    let sn = || SortedNeighborhood::by_title(60).with_max_size(120);
+    let t = Workflow::for_dataset(&data.dataset)
+        .strategy(sn())
+        .backend(Threads)
+        .env(small_ce())
+        .run()
+        .unwrap();
+    let s = Workflow::for_dataset(&data.dataset)
+        .strategy(sn())
+        .backend(Sim(SimOptions {
+            execute: true,
+            calibrate: false,
+            ..SimOptions::default()
+        }))
+        .env(ComputingEnv::paper_testbed(2))
+        .run()
+        .unwrap();
+    assert_eq!(t.n_tasks, s.n_tasks);
+    assert_eq!(t.metrics.comparisons, s.metrics.comparisons);
+    assert_eq!(t.result.len(), s.result.len());
+    for c in t.result.iter() {
+        assert!(s.result.contains(c.e1, c.e2));
+    }
+}

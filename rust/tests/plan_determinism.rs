@@ -1,0 +1,167 @@
+//! Plan determinism + legacy-shim equivalence (the api_redesign
+//! acceptance tests).
+//!
+//! 1. A [`MatchPlan`] built twice from the same dataset / strategy /
+//!    environment serializes to byte-identical output, for every
+//!    strategy behind the trait (property test over seeds).
+//! 2. The new builder path is result-identical to the legacy
+//!    `WorkflowConfig` path for both legacy strategies — the shim is a
+//!    pure translation, not a second implementation.
+
+use pem::cluster::ComputingEnv;
+use pem::coordinator::workflow::EngineChoice;
+use pem::coordinator::{
+    run_workflow, MatchPlan, PartitioningChoice, Workflow, WorkflowConfig,
+};
+use pem::datagen::GeneratorConfig;
+use pem::engine::backend::Threads;
+use pem::matching::StrategyKind;
+use pem::model::EntityId;
+use pem::partition::{
+    BlockingBased, PartitionStrategy, SizeBased, SortedNeighborhood,
+};
+use pem::util::proptest::forall;
+use pem::util::GIB;
+
+fn strategies() -> Vec<Box<dyn PartitionStrategy>> {
+    vec![
+        Box::new(SizeBased::with_max_size(120)),
+        Box::new(SizeBased::auto()),
+        Box::new(BlockingBased::product_type().with_bounds(150, 30)),
+        Box::new(SortedNeighborhood::by_title(60).with_max_size(150)),
+    ]
+}
+
+/// Property: same dataset + strategy + environment ⇒ byte-identical
+/// serialized plans, and deserialization is lossless.
+#[test]
+fn prop_plan_built_twice_is_byte_identical() {
+    forall("plan-determinism", 12, |rng| {
+        let n = 100 + rng.gen_range(700);
+        let seed = rng.gen_range(1 << 20) as u64;
+        let data = GeneratorConfig::tiny()
+            .with_entities(n)
+            .with_seed(seed)
+            .generate();
+        let ce = ComputingEnv::new(
+            1 + rng.gen_range(3),
+            1 + rng.gen_range(4),
+            GIB,
+        );
+        let kind = if rng.gen_bool(0.5) {
+            StrategyKind::Wam
+        } else {
+            StrategyKind::Lrm
+        };
+        for strategy in strategies() {
+            let a =
+                MatchPlan::build(&data.dataset, strategy.as_ref(), kind, &ce)
+                    .unwrap();
+            let b =
+                MatchPlan::build(&data.dataset, strategy.as_ref(), kind, &ce)
+                    .unwrap();
+            let bytes = a.to_bytes();
+            assert_eq!(
+                bytes,
+                b.to_bytes(),
+                "{} not deterministic (n={n}, seed={seed})",
+                strategy.name()
+            );
+            // round trip through the serialized form is lossless
+            let back = MatchPlan::from_bytes(&bytes).unwrap();
+            assert_eq!(back.to_bytes(), bytes);
+            assert_eq!(back.tasks, a.tasks);
+            assert_eq!(back.task_mem, a.task_mem);
+            assert!(back.matches_dataset(&data.dataset));
+        }
+    });
+}
+
+fn norm(result: &pem::model::MatchResult) -> Vec<(EntityId, EntityId, f32)> {
+    let mut pairs: Vec<(EntityId, EntityId, f32)> =
+        result.iter().map(|c| (c.e1, c.e2, c.sim)).collect();
+    pairs.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+    pairs
+}
+
+/// The legacy `WorkflowConfig` path and the new builder path produce
+/// identical results (structure, comparisons, correspondences with
+/// exact similarities) for both legacy strategies.
+#[test]
+fn builder_path_is_result_identical_to_legacy_config_path() {
+    let data = GeneratorConfig::tiny()
+        .with_entities(800)
+        .with_seed(2010)
+        .generate();
+    let ce = ComputingEnv::new(1, 2, GIB);
+
+    // §3.1 size-based
+    let legacy_cfg = WorkflowConfig {
+        partitioning: PartitioningChoice::SizeBased {
+            max_size: Some(120),
+        },
+        ..WorkflowConfig::size_based(StrategyKind::Wam)
+    }
+    .with_engine(EngineChoice::Threads)
+    .with_cache(8);
+    let legacy = run_workflow(&data, &legacy_cfg, &ce).unwrap();
+    let new = Workflow::for_dataset(&data.dataset)
+        .strategy(SizeBased::with_max_size(120))
+        .backend(Threads)
+        .env(ce)
+        .cache(8)
+        .run()
+        .unwrap();
+    assert_eq!(new.n_partitions, legacy.n_partitions);
+    assert_eq!(new.n_tasks, legacy.n_tasks);
+    assert_eq!(new.metrics.comparisons, legacy.metrics.comparisons);
+    assert_eq!(norm(&new.result), norm(&legacy.result));
+
+    // §3.2 blocking-based
+    let mut legacy_cfg = WorkflowConfig::blocking_based(StrategyKind::Wam)
+        .with_engine(EngineChoice::Threads)
+        .with_cache(8);
+    if let PartitioningChoice::BlockingBased {
+        max_size, min_size, ..
+    } = &mut legacy_cfg.partitioning
+    {
+        *max_size = Some(150);
+        *min_size = 30;
+    }
+    let legacy = run_workflow(&data, &legacy_cfg, &ce).unwrap();
+    let new = Workflow::for_dataset(&data.dataset)
+        .strategy(BlockingBased::product_type().with_bounds(150, 30))
+        .backend(Threads)
+        .env(ce)
+        .cache(8)
+        .run()
+        .unwrap();
+    assert_eq!(new.n_partitions, legacy.n_partitions);
+    assert_eq!(new.n_misc_partitions, legacy.n_misc_partitions);
+    assert_eq!(new.n_tasks, legacy.n_tasks);
+    assert_eq!(new.metrics.comparisons, legacy.metrics.comparisons);
+    assert_eq!(norm(&new.result), norm(&legacy.result));
+}
+
+/// `build_partitions` (the legacy pre-processing entry point) and the
+/// plan built by the builder agree on the partition structure.
+#[test]
+fn legacy_build_partitions_agrees_with_plan() {
+    let data = GeneratorConfig::tiny().with_entities(500).generate();
+    let ce = ComputingEnv::new(1, 4, GIB);
+    let cfg = WorkflowConfig::blocking_based(StrategyKind::Lrm);
+    let parts =
+        pem::coordinator::workflow::build_partitions(&data, &cfg, &ce)
+            .unwrap();
+    let planned = Workflow::for_dataset(&data.dataset)
+        .matching(StrategyKind::Lrm)
+        .strategy(BlockingBased::product_type())
+        .env(ce)
+        .plan()
+        .unwrap();
+    let plan = planned.plan();
+    assert_eq!(plan.n_partitions(), parts.len());
+    assert_eq!(plan.n_misc_partitions(), parts.n_misc());
+    assert_eq!(plan.partitions.max_size(), parts.max_size());
+    assert_eq!(plan.partitions.total_entities(), parts.total_entities());
+}
