@@ -27,7 +27,7 @@ pub mod workflow;
 pub use builder::{PlannedWorkflow, RunOutcome, Workflow};
 pub use multi_source::{run_two_source_workflow, TwoSourceMode};
 pub use plan::{MatchPlan, PlanProvenance, PlanSkew};
-pub use scheduler::{Policy, Scheduler, ServiceId};
+pub use scheduler::{PlanMisfit, Policy, Scheduler, ServiceId};
 pub use workflow::{
     run_workflow, PartitioningChoice, WorkflowConfig, WorkflowOutcome,
 };

@@ -176,7 +176,11 @@ impl MatchPlan {
             .sum()
     }
 
-    /// Task-skew statistics.
+    /// Task-skew statistics.  Guarded against the empty-task-list
+    /// case (an empty dataset, or blocking that yields no pairs):
+    /// `mean_pairs` and `skew_ratio` are always finite — dividing by
+    /// `pairs.len()` or a zero mean would otherwise propagate NaN
+    /// into `pem plan` output and the serialized stats.
     pub fn skew(&self) -> PlanSkew {
         let pairs: Vec<u64> = self
             .tasks
@@ -190,14 +194,38 @@ impl MatchPlan {
         } else {
             total as f64 / pairs.len() as f64
         };
+        // a plan with no pairs is perfectly balanced, not 0/0 = NaN
+        let skew_ratio = if mean > 0.0 { max as f64 / mean } else { 1.0 };
+        debug_assert!(mean.is_finite() && skew_ratio.is_finite());
         PlanSkew {
             n_tasks: pairs.len(),
             total_pairs: total,
             max_pairs: max,
             mean_pairs: mean,
-            skew_ratio: if mean > 0.0 { max as f64 / mean } else { 1.0 },
+            skew_ratio,
             max_task_mem: self.task_mem.iter().copied().max().unwrap_or(0),
         }
+    }
+
+    /// Per-task `(left, right)` partition entity counts — the split
+    /// metadata the runtime scheduler needs to reshape a task no
+    /// node's §3.1 budget fits (fed to the workflow service alongside
+    /// the footprints).
+    pub fn task_sizes(
+        &self,
+    ) -> std::collections::HashMap<u32, (u32, u32)> {
+        self.tasks
+            .iter()
+            .map(|t| {
+                (
+                    t.id,
+                    (
+                        self.partitions.get(t.left).len() as u32,
+                        self.partitions.get(t.right).len() as u32,
+                    ),
+                )
+            })
+            .collect()
     }
 
     /// The `k` heaviest tasks as `(task, pairs, mem_bytes)`, heaviest
@@ -570,6 +598,59 @@ mod tests {
             assert_eq!(back.provenance, plan.provenance);
             assert_eq!(back.tasks, plan.tasks);
             assert_eq!(back.task_mem, plan.task_mem);
+        }
+    }
+
+    /// The NaN satellite: a plan over an empty dataset (or one whose
+    /// blocking yields no pairs) must report finite skew stats — NaN
+    /// would poison `pem plan` output and everything serialized from
+    /// it.
+    #[test]
+    fn empty_plan_skew_is_finite_not_nan() {
+        use crate::model::{Dataset, Schema, ATTR_TITLE};
+        let ds = Dataset::new(Schema::new(vec![ATTR_TITLE]));
+        let plan = MatchPlan::build(
+            &ds,
+            &SizeBased::with_max_size(10),
+            StrategyKind::Wam,
+            &ce(),
+        )
+        .unwrap();
+        assert_eq!(plan.n_tasks(), 0);
+        assert_eq!(plan.n_partitions(), 0);
+        let s = plan.skew();
+        assert!(s.mean_pairs.is_finite(), "mean {}", s.mean_pairs);
+        assert!(s.skew_ratio.is_finite(), "ratio {}", s.skew_ratio);
+        assert_eq!(s.mean_pairs, 0.0);
+        assert_eq!(s.skew_ratio, 1.0);
+        assert_eq!(s.total_pairs, 0);
+        let summary = plan.summary();
+        assert!(!summary.contains("NaN"), "summary: {summary}");
+        // the empty plan still serializes canonically
+        let bytes = plan.to_bytes();
+        assert_eq!(
+            MatchPlan::from_bytes(&bytes).unwrap().to_bytes(),
+            bytes
+        );
+        assert!(plan.task_sizes().is_empty());
+    }
+
+    #[test]
+    fn task_sizes_mirror_partition_lengths() {
+        let data = GeneratorConfig::tiny().with_entities(250).generate();
+        let plan = MatchPlan::build(
+            &data.dataset,
+            &SizeBased::with_max_size(100),
+            StrategyKind::Wam,
+            &ce(),
+        )
+        .unwrap();
+        let sizes = plan.task_sizes();
+        assert_eq!(sizes.len(), plan.n_tasks());
+        for t in &plan.tasks {
+            let &(l, r) = sizes.get(&t.id).unwrap();
+            assert_eq!(l as usize, plan.partitions.get(t.left).len());
+            assert_eq!(r as usize, plan.partitions.get(t.right).len());
         }
     }
 

@@ -33,6 +33,22 @@
 //! other nodes (with larger budgets) still receive it, so an oversize
 //! task is re-routed instead of lost or endlessly ping-ponged.
 //!
+//! When **every** live service has rejected a task, re-routing cannot
+//! help — the paper's §3 answer is to *reshape* the task, not bounce
+//! it until the run times out.  Fed the plan's split metadata
+//! ([`Scheduler::set_task_meta`]) and each node's budget reported at
+//! join ([`Scheduler::set_service_budget`], protocol v5), the
+//! scheduler splits the unplaceable task's pair space into sub-tasks
+//! that fit the **smallest live budget** — triangles along the
+//! diagonal plus the rectangles between chunks, Kolb et al.'s
+//! BlockSplit applied at run time — re-queues them carrying a
+//! [`TaskSpan`] each, and merges their completions so the original
+//! task counts as completed **exactly once**.  A task that cannot be
+//! split any further (no metadata, or a single pair already exceeds
+//! the smallest budget) raises the typed [`PlanMisfit`] error instead:
+//! the workflow server and the dist engine surface "this plan does not
+//! fit this cluster" immediately, never burning the run timeout.
+//!
 //! With a **replicated data plane** the scheduler additionally tracks
 //! how many data replicas hold each partition
 //! ([`Scheduler::add_replica_coverage`], fed by `ReplicaAnnounce`).
@@ -41,12 +57,47 @@
 //! be served by a nearby, less-loaded replica (the paper's §5 caching +
 //! affinity strategy, extended across the network).
 
-use crate::partition::{MatchTask, PartitionId};
+use crate::partition::{MatchTask, PartitionId, TaskSpan};
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::fmt;
 
 /// Identifier of a match service (one per node).
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
 pub struct ServiceId(pub usize);
+
+/// Typed terminal error of the §3.1 memory model: a task was rejected
+/// by every live match service and cannot be split into smaller
+/// sub-tasks, so the plan can never complete on this cluster.  The
+/// workflow server ([`crate::service::WorkflowServiceServer`]) and the
+/// dist engine surface this immediately (fail fast) instead of letting
+/// the run idle until its timeout.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanMisfit {
+    /// The unplaceable task.
+    pub task_id: u32,
+    /// Its §3.1 memory footprint (`0` = unknown: the run carried no
+    /// plan footprints).
+    pub mem_bytes: u64,
+    /// Smallest per-task budget among the live services when the task
+    /// became unplaceable (`0` = no budget was ever reported).
+    pub smallest_budget: u64,
+}
+
+impl fmt::Display for PlanMisfit {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "plan does not fit this cluster: task {} (§3.1 footprint \
+             {}) was rejected by every live match service (smallest \
+             budget {}) and cannot be split further",
+            self.task_id,
+            crate::util::fmt_bytes(self.mem_bytes),
+            crate::util::fmt_bytes(self.smallest_budget),
+        )
+    }
+}
+
+impl std::error::Error for PlanMisfit {}
 
 /// Scheduling policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -74,6 +125,35 @@ pub struct Scheduler {
     /// task id → services that rejected it as oversize (§3.1 memory
     /// model): the task is never re-offered to those services.
     oversize: HashMap<u32, HashSet<ServiceId>>,
+    /// task id → §3.1 memory footprint: the plan's for root tasks,
+    /// computed at split time for sub-tasks.  Served with every
+    /// assignment (protocol v4/v5).
+    mem: HashMap<u32, u64>,
+    /// task id → (left, right) partition entity counts — the split
+    /// metadata fed from the plan.  A task without an entry cannot be
+    /// runtime-split (an all-rejected one then raises [`PlanMisfit`]).
+    sizes: HashMap<u32, (u32, u32)>,
+    /// Pair-space spans of runtime-split sub-tasks.
+    spans: HashMap<u32, TaskSpan>,
+    /// sub-task id → root (plan) task id it descends from.
+    split_parent: HashMap<u32, u32>,
+    /// root task id → descendants not yet completed; the root counts
+    /// as completed exactly once, when this reaches zero.
+    split_outstanding: HashMap<u32, usize>,
+    /// §3.1 per-task budget reported by each live service at join
+    /// (absent = unlimited).  Sub-tasks are sized to the smallest.
+    budgets: HashMap<ServiceId, u64>,
+    /// Reshaping waits until this many services have ever joined —
+    /// the engine's expected cluster size.  Guards against a fast
+    /// first node declaring a task unplaceable while its (roomier)
+    /// peers are still connecting.
+    min_split_services: usize,
+    /// Next sub-task id (kept above every plan task id).
+    next_split_id: u32,
+    /// Tasks (plan tasks or sub-tasks) split at run time.
+    runtime_splits: u64,
+    /// Terminal §3.1 misfit; sticky once set (first wins).
+    misfit: Option<PlanMisfit>,
     /// partition → number of data replicas announced as holding it.
     replica_coverage: HashMap<PartitionId, u32>,
     policy: Policy,
@@ -87,6 +167,11 @@ impl Scheduler {
     /// Seed the central task list under the given policy.
     pub fn new(tasks: Vec<MatchTask>, policy: Policy) -> Scheduler {
         let total = tasks.len();
+        let next_split_id = tasks
+            .iter()
+            .map(|t| t.id)
+            .max()
+            .map_or(0, |m| m + 1);
         Scheduler {
             open: tasks.into(),
             in_flight: HashMap::new(),
@@ -94,12 +179,89 @@ impl Scheduler {
             generation: HashMap::new(),
             dead: HashSet::new(),
             oversize: HashMap::new(),
+            mem: HashMap::new(),
+            sizes: HashMap::new(),
+            spans: HashMap::new(),
+            split_parent: HashMap::new(),
+            split_outstanding: HashMap::new(),
+            budgets: HashMap::new(),
+            min_split_services: 1,
+            next_split_id,
+            runtime_splits: 0,
+            misfit: None,
             replica_coverage: HashMap::new(),
             policy,
             affinity_assignments: 0,
             completed: 0,
             total,
         }
+    }
+
+    /// Attach the plan's per-task §3.1 footprints and `(left, right)`
+    /// partition sizes.  Footprints travel with every assignment;
+    /// sizes are the split metadata that lets the scheduler reshape a
+    /// task every live service has rejected (see the module docs).
+    pub fn set_task_meta(
+        &mut self,
+        mem: HashMap<u32, u64>,
+        sizes: HashMap<u32, (u32, u32)>,
+    ) {
+        self.mem = mem;
+        self.sizes = sizes;
+    }
+
+    /// Record the §3.1 per-task budget `service` reported at join
+    /// (`None` = unlimited).  Feeds runtime splitting: sub-tasks of an
+    /// unplaceable task are sized to the smallest live budget.
+    pub fn set_service_budget(
+        &mut self,
+        service: ServiceId,
+        budget: Option<u64>,
+    ) {
+        match budget {
+            Some(b) => {
+                self.budgets.insert(service, b);
+            }
+            None => {
+                self.budgets.remove(&service);
+            }
+        }
+    }
+
+    /// Defer runtime splitting (and the misfit verdict) until `n`
+    /// services have ever joined.  The dist engine sets its node
+    /// count here, so a fast first node that rejects everything while
+    /// its roomier peers are still connecting cannot prematurely
+    /// declare a task unplaceable.  Clamped to ≥ 1; default 1 (an
+    /// elastic cluster splits as soon as all *current* members have
+    /// rejected).
+    pub fn set_min_split_services(&mut self, n: usize) {
+        self.min_split_services = n.max(1);
+    }
+
+    /// The §3.1 footprint served with an assignment of `task_id`
+    /// (0 when the run carries no plan footprints).
+    pub fn mem_of(&self, task_id: u32) -> u64 {
+        self.mem.get(&task_id).copied().unwrap_or(0)
+    }
+
+    /// The pair-space span of a runtime-split sub-task (`None` for
+    /// plan tasks): travels with the assignment so the node knows
+    /// which rectangle of the fetched partitions to compare.
+    pub fn span_of(&self, task_id: u32) -> Option<TaskSpan> {
+        self.spans.get(&task_id).copied()
+    }
+
+    /// The terminal §3.1 misfit, once a task has proven unplaceable
+    /// *and* unsplittable (see [`PlanMisfit`]).
+    pub fn misfit(&self) -> Option<&PlanMisfit> {
+        self.misfit.as_ref()
+    }
+
+    /// Tasks split at run time because every live service rejected
+    /// them.
+    pub fn runtime_splits(&self) -> u64 {
+        self.runtime_splits
     }
 
     /// Tasks not yet completed (open + in flight).
@@ -136,18 +298,41 @@ impl Scheduler {
         if self.open.is_empty() || self.dead.contains(&service) {
             return None;
         }
-        // tasks this service rejected as oversize are invisible to it
-        // (`rejected_by` is one lookup in a normally-empty map, so the
-        // FIFO pick stays effectively O(1) and the affinity scan stays
-        // one allocation-free pass)
+        // tasks this service rejected as oversize are invisible to it;
+        // in the normal case — no rejection anywhere — both policies
+        // skip their scans entirely and pop the front in O(1)
         let idx = match self.policy {
-            Policy::Fifo => self
-                .open
-                .iter()
-                .position(|t| !self.rejected_by(t.id, service))?,
+            Policy::Fifo => {
+                if self.oversize.is_empty() {
+                    // nothing is excluded for anyone: plain FIFO pop
+                    // instead of an exclusion scan over the open list
+                    0
+                } else {
+                    self.open
+                        .iter()
+                        .position(|t| !self.rejected_by(t.id, service))?
+                }
+            }
             Policy::Affinity => {
                 let cached = self.cache_status.get(&service);
                 let coverage = &self.replica_coverage;
+                let no_signal = self.oversize.is_empty()
+                    && coverage.is_empty()
+                    && match cached {
+                        None => true,
+                        Some(set) => set.is_empty(),
+                    };
+                if no_signal {
+                    // every score ties at (0, 0) and nothing is
+                    // excluded: the oldest task wins — same O(1) pop
+                    // as the FIFO fast path
+                    let task =
+                        self.open.pop_front().expect("checked non-empty");
+                    let epoch =
+                        self.generation.get(&service).copied().unwrap_or(0);
+                    self.in_flight.insert(task.id, (service, epoch, task));
+                    return Some(task);
+                }
                 let score = |t: &MatchTask| -> (usize, u32) {
                     let hits = match cached {
                         None => 0,
@@ -209,9 +394,13 @@ impl Scheduler {
     /// same freshness rules as [`Self::try_report_complete`] — a
     /// zombie's rejection is dropped (returns `false`).
     ///
-    /// A task every service has rejected can never complete; the run's
-    /// timeout surfaces that as a failure, which is the §3.1 contract
-    /// ("this plan does not fit this cluster") instead of an OOM kill.
+    /// When the rejection leaves the task with **no** eligible live
+    /// service, re-routing is over: the task is split into sub-tasks
+    /// sized to the smallest live budget and those are queued instead
+    /// (see the module docs).  If it cannot be split any further, the
+    /// typed [`PlanMisfit`] is recorded — "this plan does not fit this
+    /// cluster" — and the engines fail fast instead of idling to the
+    /// run timeout.
     pub fn reject_task(&mut self, service: ServiceId, task_id: u32) -> bool {
         if self.dead.contains(&service) {
             return false;
@@ -224,12 +413,212 @@ impl Scheduler {
         if fresh {
             let (_, _, task) = self.in_flight.remove(&task_id).unwrap();
             self.oversize.entry(task_id).or_default().insert(service);
-            // to the back: every other service sees it soon enough,
-            // and the rejecting service's next pull is not dominated
-            // by re-ranking the same task it just refused
-            self.open.push_back(task);
+            if self.rejected_by_every_live_service(task_id) {
+                self.reshape_unplaceable(task);
+            } else {
+                // to the back: every other service sees it soon
+                // enough, and the rejecting service's next pull is not
+                // dominated by re-ranking the same task it just
+                // refused
+                self.open.push_back(task);
+            }
         }
         fresh
+    }
+
+    /// `true` when every service that has joined and not been failed
+    /// since has rejected `task_id` as oversize (and at least one such
+    /// service exists).  Always `false` while fewer than
+    /// [`Self::set_min_split_services`] services have ever joined —
+    /// the cluster is still assembling.
+    fn rejected_by_every_live_service(&self, task_id: u32) -> bool {
+        if self.generation.len() < self.min_split_services {
+            return false;
+        }
+        let Some(rejectors) = self.oversize.get(&task_id) else {
+            return false;
+        };
+        let mut any_live = false;
+        for s in self.generation.keys() {
+            if self.dead.contains(s) {
+                continue;
+            }
+            any_live = true;
+            if !rejectors.contains(s) {
+                return false;
+            }
+        }
+        any_live
+    }
+
+    /// A task no live service accepts: split its pair space into
+    /// sub-tasks that fit the smallest live budget and queue those.
+    /// When no finer split exists, record the terminal [`PlanMisfit`]
+    /// and leave the task open — the engines fail fast on the misfit,
+    /// but a roomier node joining later could still rescue the run.
+    fn reshape_unplaceable(&mut self, task: MatchTask) {
+        let smallest_budget = self
+            .generation
+            .keys()
+            .filter(|&s| !self.dead.contains(s))
+            .filter_map(|s| self.budgets.get(s).copied())
+            .min();
+        let mem = self.mem_of(task.id);
+        // sub-tasks target the smallest live budget; without one on
+        // record (defensively — a rejection implies a budget) aim for
+        // a quarter of the footprint so repeated splits still converge
+        let target = smallest_budget.unwrap_or((mem / 4).max(1));
+        if !self.split_task(task, mem, target) {
+            if self.misfit.is_none() {
+                self.misfit = Some(PlanMisfit {
+                    task_id: task.id,
+                    mem_bytes: mem,
+                    smallest_budget: smallest_budget.unwrap_or(0),
+                });
+            }
+            self.open.push_back(task);
+        }
+    }
+
+    /// Try to split `task` (footprint `mem`) into sub-tasks whose
+    /// §3.1 footprints fit `budget`, queueing them.  Returns `false`
+    /// when no finer split exists: the plan carried no sizes for the
+    /// task, a single pair already exceeds the budget, or the pair
+    /// space is down to one cell.
+    fn split_task(&mut self, task: MatchTask, mem: u64, budget: u64) -> bool {
+        let Some(&(l_len, r_len)) = self.sizes.get(&task.id) else {
+            return false; // no split metadata (plan-less run)
+        };
+        if mem == 0 || l_len == 0 || r_len == 0 {
+            return false;
+        }
+        // §3.1: mem = c_ms · m₁ · m₂ — recover the per-cell cost, then
+        // the largest pair-space rectangle the budget allows
+        let per_cell = mem
+            .div_ceil(l_len as u64 * r_len as u64)
+            .max(1);
+        let max_cells = budget / per_cell;
+        if max_cells == 0 {
+            return false; // a single pair exceeds the budget
+        }
+        let span = self.spans.get(&task.id).copied().unwrap_or(TaskSpan {
+            left: (0, l_len),
+            right: (0, r_len),
+        });
+        let triangle =
+            task.left == task.right && span.left == span.right;
+        // (span, left entities, right entities) per sub-task
+        let mut children: Vec<(TaskSpan, u32, u32)> = Vec::new();
+        if triangle {
+            if l_len < 2 {
+                return false; // a 1-entity triangle has no pairs left
+            }
+            // chunk width: the rectangles between chunks are the
+            // largest sub-tasks (≤ c² cells); at least 2 chunks so a
+            // forced split always makes progress
+            let c = ((max_cells as f64).sqrt().floor() as u32)
+                .clamp(1, l_len);
+            let k = (l_len.div_ceil(c) as usize).max(2);
+            let chunks = chunk_ranges(span.left.0, span.left.1, k);
+            for (i, &a) in chunks.iter().enumerate() {
+                children.push((
+                    TaskSpan { left: a, right: a },
+                    a.1 - a.0,
+                    a.1 - a.0,
+                ));
+                for &b in chunks.iter().skip(i + 1) {
+                    children.push((
+                        TaskSpan { left: a, right: b },
+                        a.1 - a.0,
+                        b.1 - b.0,
+                    ));
+                }
+            }
+        } else {
+            // rectangle: a grid of balanced chunks, ≤ c₁ × c₂ cells
+            let c1 = ((max_cells as f64).sqrt().floor() as u32)
+                .clamp(1, l_len);
+            let c2 = (((max_cells / c1 as u64).max(1)) as u32)
+                .clamp(1, r_len);
+            let mut k1 = l_len.div_ceil(c1) as usize;
+            let mut k2 = r_len.div_ceil(c2) as usize;
+            if k1 == 1 && k2 == 1 {
+                // the whole rectangle "fits" yet every live service
+                // rejected it (budget drift): force a halving along
+                // the longer side so the split still makes progress
+                if l_len >= r_len && l_len >= 2 {
+                    k1 = 2;
+                } else if r_len >= 2 {
+                    k2 = 2;
+                } else {
+                    return false; // a 1×1 cell: nothing left to split
+                }
+            }
+            let ls = chunk_ranges(span.left.0, span.left.1, k1);
+            let rs = chunk_ranges(span.right.0, span.right.1, k2);
+            for &a in &ls {
+                for &b in &rs {
+                    children.push((
+                        TaskSpan { left: a, right: b },
+                        a.1 - a.0,
+                        b.1 - b.0,
+                    ));
+                }
+            }
+        }
+        // bookkeeping: children adopt the original plan task's root,
+        // so completion accounting merges the whole tree exactly once
+        let root = self.split_parent.remove(&task.id).unwrap_or(task.id);
+        let n = children.len();
+        match self.split_outstanding.get_mut(&root) {
+            // splitting a sub-task: it is replaced by its children
+            Some(left) => *left += n - 1,
+            None => {
+                self.split_outstanding.insert(root, n);
+            }
+        }
+        self.spans.remove(&task.id);
+        self.sizes.remove(&task.id);
+        if task.id != root {
+            self.mem.remove(&task.id);
+        }
+        self.oversize.remove(&task.id);
+        for (span, cl, cr) in children {
+            let id = self.next_split_id;
+            self.next_split_id += 1;
+            self.split_parent.insert(id, root);
+            self.spans.insert(id, span);
+            self.sizes.insert(id, (cl, cr));
+            self.mem.insert(id, per_cell * cl as u64 * cr as u64);
+            self.open.push_back(MatchTask {
+                id,
+                left: task.left,
+                right: task.right,
+            });
+        }
+        self.runtime_splits += 1;
+        true
+    }
+
+    /// Re-check every oversize-marked open task after the live set
+    /// shrank ([`Self::fail_service`]): one that is now rejected by
+    /// every remaining live service would never be pulled again — a
+    /// silent stall — so it is reshaped (or declared a misfit) now.
+    fn resolve_unplaceable_open(&mut self) {
+        let stuck: Vec<u32> = self
+            .oversize
+            .keys()
+            .copied()
+            .filter(|id| self.rejected_by_every_live_service(*id))
+            .collect();
+        for id in stuck {
+            let Some(pos) = self.open.iter().position(|t| t.id == id)
+            else {
+                continue; // in flight elsewhere — not stalled
+            };
+            let task = self.open.remove(pos).expect("position valid");
+            self.reshape_unplaceable(task);
+        }
     }
 
     /// Tasks at least one service has rejected as oversize.
@@ -335,7 +724,29 @@ impl Scheduler {
         );
         if fresh {
             self.in_flight.remove(&task_id);
-            self.completed += 1;
+            // a completed task's oversize marks are dead weight — and
+            // would needlessly keep the pull fast path disabled
+            self.oversize.remove(&task_id);
+            match self.split_parent.remove(&task_id) {
+                // a runtime-split sub-task: the root counts as
+                // completed exactly once, when its last descendant
+                // reports — never before, never twice
+                Some(root) => {
+                    self.spans.remove(&task_id);
+                    self.sizes.remove(&task_id);
+                    self.mem.remove(&task_id);
+                    let outstanding = self
+                        .split_outstanding
+                        .get_mut(&root)
+                        .expect("split root tracked");
+                    *outstanding -= 1;
+                    if *outstanding == 0 {
+                        self.split_outstanding.remove(&root);
+                        self.completed += 1;
+                    }
+                }
+                None => self.completed += 1,
+            }
         }
         fresh
     }
@@ -375,9 +786,10 @@ impl Scheduler {
     }
 
     /// A match service failed or was removed: requeue its in-flight
-    /// tasks (at the front — they are oldest), drop its cache status,
-    /// bump its generation and mark it dead (see the module docs on
-    /// the generation check).  Returns the number of requeued tasks.
+    /// tasks (at the front — they are oldest), drop its cache status
+    /// and budget, bump its generation and mark it dead (see the
+    /// module docs on the generation check).  Returns the number of
+    /// requeued tasks.
     pub fn fail_service(&mut self, service: ServiceId) -> usize {
         let failed: Vec<u32> = self
             .in_flight
@@ -390,8 +802,12 @@ impl Scheduler {
             self.open.push_front(task);
         }
         self.cache_status.remove(&service);
+        self.budgets.remove(&service);
         *self.generation.entry(service).or_insert(0) += 1;
         self.dead.insert(service);
+        // the live set shrank: an oversize task now rejected by every
+        // surviving service would otherwise sit unpullable forever
+        self.resolve_unplaceable_open();
         failed.len()
     }
 
@@ -399,6 +815,25 @@ impl Scheduler {
     pub fn cached_at(&self, service: ServiceId) -> Option<&HashSet<PartitionId>> {
         self.cache_status.get(&service)
     }
+}
+
+/// `k` balanced contiguous half-open ranges covering `[lo, hi)` —
+/// sizes differ by at most one, like §3.2's even block splitting.
+/// Requires `1 <= k <= hi - lo`.
+fn chunk_ranges(lo: u32, hi: u32, k: usize) -> Vec<(u32, u32)> {
+    let n = (hi - lo) as usize;
+    debug_assert!(k >= 1 && k <= n, "chunk_ranges({lo}, {hi}, {k})");
+    let base = (n / k) as u32;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = lo;
+    for i in 0..k {
+        let len = base + u32::from(i < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    debug_assert_eq!(start, hi);
+    out
 }
 
 #[cfg(test)]
@@ -795,10 +1230,12 @@ mod tests {
         assert!(s.is_done());
     }
 
-    /// A task rejected by every service stays open (visible in
-    /// `remaining`), it is not spun between nodes.
+    /// A task rejected by every service *without* split metadata (a
+    /// plan-less run) raises the typed [`PlanMisfit`] — the fail-fast
+    /// signal — while the task itself stays open, so a roomier late
+    /// joiner can still rescue the run.
     #[test]
-    fn task_rejected_by_all_services_stays_open() {
+    fn task_rejected_by_all_services_raises_misfit_but_stays_open() {
         let mut s = Scheduler::new(vec![task(0, 0, 0)], Policy::Affinity);
         for id in 0..2 {
             s.add_service(ServiceId(id));
@@ -808,6 +1245,12 @@ mod tests {
             assert_eq!(t.id, 0);
             assert!(s.reject_task(ServiceId(id), t.id));
         }
+        // no sizes were attached: splitting is impossible — the typed
+        // error is raised instead of letting the run idle to timeout
+        let misfit = s.misfit().expect("misfit raised").clone();
+        assert_eq!(misfit.task_id, 0);
+        assert!(misfit.to_string().contains("does not fit"));
+        assert_eq!(s.runtime_splits(), 0);
         assert!(s.next_task(ServiceId(0)).is_none());
         assert!(s.next_task(ServiceId(1)).is_none());
         assert_eq!(s.remaining(), 1);
@@ -817,6 +1260,234 @@ mod tests {
         let t = s.next_task(ServiceId(2)).unwrap();
         assert!(s.try_report_complete(ServiceId(2), t.id, vec![]));
         assert!(s.is_done());
+    }
+
+    /// Runtime splitting (the tentpole): an intra-partition task every
+    /// live service rejects is split into triangle + rectangle
+    /// sub-tasks sized to the smallest live budget, the sub-tasks tile
+    /// the parent pair space exactly, and completing them all counts
+    /// the parent as completed exactly once.
+    #[test]
+    fn all_rejected_intra_task_splits_into_fitting_subtasks() {
+        let mut s = Scheduler::new(vec![task(0, 7, 7)], Policy::Fifo);
+        // §3.1 metadata: 30×30 entities at 20 B per pair
+        let mem = 20u64 * 30 * 30;
+        s.set_task_meta(
+            [(0u32, mem)].into_iter().collect(),
+            [(0u32, (30u32, 30u32))].into_iter().collect(),
+        );
+        for id in 0..2 {
+            s.add_service(ServiceId(id));
+            s.set_service_budget(ServiceId(id), Some(20 * 15 * 15));
+        }
+        for id in 0..2 {
+            let t = s.next_task(ServiceId(id)).unwrap();
+            assert_eq!(t.id, 0);
+            assert!(s.reject_task(ServiceId(id), t.id));
+        }
+        assert_eq!(s.runtime_splits(), 1);
+        assert!(s.misfit().is_none());
+        assert_eq!(s.oversize_tasks(), 0, "parent left circulation");
+        // 2 chunks of 15 → 2 triangles + 1 rectangle, every footprint
+        // within the smallest live budget
+        assert_eq!(s.remaining(), 3);
+        let mut spans = Vec::new();
+        let mut pulled = Vec::new();
+        for _ in 0..3 {
+            let t = s.next_task(ServiceId(0)).unwrap();
+            assert!(t.id >= 1, "sub-task ids sit above the plan's");
+            assert_eq!(t.left, PartitionId(7));
+            assert_eq!(t.right, PartitionId(7));
+            assert!(s.mem_of(t.id) <= 20 * 15 * 15);
+            spans.push(s.span_of(t.id).expect("sub-tasks carry spans"));
+            pulled.push(t.id);
+        }
+        // exact tiling of the 30-entity triangle
+        assert!(spans.contains(&TaskSpan {
+            left: (0, 15),
+            right: (0, 15),
+        }));
+        assert!(spans.contains(&TaskSpan {
+            left: (15, 30),
+            right: (15, 30),
+        }));
+        assert!(spans.contains(&TaskSpan {
+            left: (0, 15),
+            right: (15, 30),
+        }));
+        // completing two children completes nothing yet…
+        assert!(s.try_report_complete(ServiceId(0), pulled[0], vec![]));
+        assert!(s.try_report_complete(ServiceId(0), pulled[1], vec![]));
+        assert_eq!(s.completed(), 0);
+        assert!(!s.is_done());
+        // …the last one completes the parent exactly once
+        assert!(s.try_report_complete(ServiceId(0), pulled[2], vec![]));
+        assert_eq!(s.completed(), 1);
+        assert!(s.is_done());
+        // a straggler duplicate of a child is dropped
+        assert!(!s.try_report_complete(ServiceId(0), pulled[2], vec![]));
+        assert_eq!(s.completed(), 1);
+    }
+
+    /// A cross-partition task splits into a balanced grid of
+    /// rectangles whose cells tile the parent exactly.
+    #[test]
+    fn all_rejected_cross_task_splits_into_grid() {
+        let mut s = Scheduler::new(vec![task(0, 1, 2)], Policy::Fifo);
+        let mem = 20u64 * 10 * 40;
+        s.set_task_meta(
+            [(0u32, mem)].into_iter().collect(),
+            [(0u32, (10u32, 40u32))].into_iter().collect(),
+        );
+        s.add_service(ServiceId(0));
+        s.set_service_budget(ServiceId(0), Some(20 * 10 * 10));
+        let t = s.next_task(ServiceId(0)).unwrap();
+        assert!(s.reject_task(ServiceId(0), t.id));
+        // 10×40 cells at a 100-cell budget → a 1×4 grid of 10×10
+        // rectangles
+        assert_eq!(s.remaining(), 4);
+        let mut covered = 0u64;
+        for _ in 0..4 {
+            let c = s.next_task(ServiceId(0)).unwrap();
+            let span = s.span_of(c.id).unwrap();
+            assert_eq!(span.left, (0, 10));
+            assert_eq!(span.right_len(), 10);
+            assert!(s.mem_of(c.id) <= 20 * 10 * 10);
+            covered +=
+                span.left_len() as u64 * span.right_len() as u64;
+            assert!(s.try_report_complete(ServiceId(0), c.id, vec![]));
+        }
+        assert_eq!(covered, 400, "grid tiles the full rectangle");
+        assert!(s.is_done());
+        assert_eq!(s.completed(), 1);
+    }
+
+    /// A sub-task the (now smaller) cluster rejects again splits
+    /// recursively, and the root still completes exactly once.
+    #[test]
+    fn split_subtask_rejected_again_splits_recursively() {
+        let mut s = Scheduler::new(vec![task(0, 3, 3)], Policy::Fifo);
+        let mem = 20u64 * 40 * 40;
+        s.set_task_meta(
+            [(0u32, mem)].into_iter().collect(),
+            [(0u32, (40u32, 40u32))].into_iter().collect(),
+        );
+        s.add_service(ServiceId(0));
+        s.set_service_budget(ServiceId(0), Some(20 * 20 * 20));
+        let t = s.next_task(ServiceId(0)).unwrap();
+        assert!(s.reject_task(ServiceId(0), t.id));
+        assert_eq!(s.remaining(), 3, "2 chunks of 20");
+        // the cluster's budget shrinks mid-run
+        s.set_service_budget(ServiceId(0), Some(20 * 10 * 10));
+        let c = s.next_task(ServiceId(0)).unwrap();
+        assert!(s.reject_task(ServiceId(0), c.id));
+        assert_eq!(s.runtime_splits(), 2, "nested split");
+        // drain everything; the root completes exactly once
+        while let Some(t) = s.next_task(ServiceId(0)) {
+            assert!(s.try_report_complete(ServiceId(0), t.id, vec![]));
+        }
+        assert!(s.is_done());
+        assert_eq!(s.completed(), 1);
+        assert_eq!(s.total(), 1);
+    }
+
+    /// A task whose single pair already exceeds the smallest budget
+    /// cannot be reshaped: the typed misfit carries the numbers an
+    /// operator needs.
+    #[test]
+    fn unsplittable_task_raises_typed_misfit() {
+        let mut s = Scheduler::new(vec![task(0, 0, 0)], Policy::Fifo);
+        s.set_task_meta(
+            [(0u32, 20u64 * 4)].into_iter().collect(),
+            [(0u32, (2u32, 2u32))].into_iter().collect(),
+        );
+        for id in 0..2 {
+            s.add_service(ServiceId(id));
+            s.set_service_budget(ServiceId(id), Some(10)); // < one pair
+        }
+        for id in 0..2 {
+            let t = s.next_task(ServiceId(id)).unwrap();
+            assert!(s.reject_task(ServiceId(id), t.id));
+        }
+        let misfit = s.misfit().expect("typed misfit raised").clone();
+        assert_eq!(misfit.task_id, 0);
+        assert_eq!(misfit.mem_bytes, 80);
+        assert_eq!(misfit.smallest_budget, 10);
+        assert!(misfit.to_string().contains("does not fit"));
+        assert_eq!(s.runtime_splits(), 0);
+        // the task is still open: a roomier late joiner can rescue it
+        s.add_service(ServiceId(9));
+        let t = s.next_task(ServiceId(9)).unwrap();
+        assert!(s.try_report_complete(ServiceId(9), t.id, vec![]));
+        assert!(s.is_done());
+    }
+
+    /// Reshaping waits for the engine's expected cluster size: the
+    /// first (small) node rejecting everything must not split tasks
+    /// while its roomier peers are still connecting.
+    #[test]
+    fn split_deferred_until_expected_cluster_assembles() {
+        let mut s = Scheduler::new(vec![task(0, 0, 0)], Policy::Fifo);
+        s.set_task_meta(
+            [(0u32, 20u64 * 10 * 10)].into_iter().collect(),
+            [(0u32, (10u32, 10u32))].into_iter().collect(),
+        );
+        s.set_min_split_services(2);
+        s.add_service(ServiceId(0));
+        s.set_service_budget(ServiceId(0), Some(100));
+        let t = s.next_task(ServiceId(0)).unwrap();
+        assert!(s.reject_task(ServiceId(0), t.id));
+        // only 1 of the 2 expected services has joined: no verdict yet
+        assert_eq!(s.runtime_splits(), 0);
+        assert!(s.misfit().is_none());
+        assert_eq!(s.remaining(), 1);
+        // the second (equally small) node joins and rejects too — now
+        // the cluster is assembled and the split happens
+        s.add_service(ServiceId(1));
+        s.set_service_budget(ServiceId(1), Some(100));
+        let t = s.next_task(ServiceId(1)).unwrap();
+        assert!(s.reject_task(ServiceId(1), t.id));
+        assert_eq!(s.runtime_splits(), 1);
+        while let Some(t) = s.next_task(ServiceId(0)) {
+            assert!(s.mem_of(t.id) <= 100, "sub-task fits the budget");
+            assert!(s.try_report_complete(ServiceId(0), t.id, vec![]));
+        }
+        assert!(s.is_done());
+        assert_eq!(s.completed(), 1);
+    }
+
+    /// Losing the last service that could still take an oversize task
+    /// reshapes it immediately — the failure path must not create a
+    /// new stall class.
+    #[test]
+    fn service_failure_reshapes_tasks_left_without_takers() {
+        let mut s = Scheduler::new(vec![task(0, 0, 0)], Policy::Fifo);
+        s.set_task_meta(
+            [(0u32, 20u64 * 12 * 12)].into_iter().collect(),
+            [(0u32, (12u32, 12u32))].into_iter().collect(),
+        );
+        for id in 0..3 {
+            s.add_service(ServiceId(id));
+        }
+        s.set_service_budget(ServiceId(0), Some(20 * 6 * 6));
+        s.set_service_budget(ServiceId(1), Some(20 * 6 * 6));
+        // service 2 reports no budget (unlimited) — it keeps the task
+        // placeable while services 0 and 1 reject it
+        for id in 0..2 {
+            let t = s.next_task(ServiceId(id)).unwrap();
+            assert!(s.reject_task(ServiceId(id), t.id));
+        }
+        assert_eq!(s.runtime_splits(), 0, "still one taker left");
+        // the unlimited service dies before ever pulling: the live
+        // set shrinks and the stranded task is reshaped, not stalled
+        assert_eq!(s.fail_service(ServiceId(2)), 0);
+        assert_eq!(s.runtime_splits(), 1);
+        assert!(s.misfit().is_none());
+        while let Some(t) = s.next_task(ServiceId(0)) {
+            assert!(s.try_report_complete(ServiceId(0), t.id, vec![]));
+        }
+        assert!(s.is_done());
+        assert_eq!(s.completed(), 1);
     }
 
     #[test]

@@ -209,9 +209,12 @@ pub struct DistOptions {
     /// §3.1 memory-model enforcement: when set, every match node
     /// rejects assigned tasks whose plan footprint exceeds this budget
     /// with a typed `TaskRejected`, and the scheduler re-queues them
-    /// marked oversize.  A task exceeding *every* node's budget can
-    /// never complete — the run then fails at its timeout, which is
-    /// the §3.1 contract surfacing instead of an OOM kill.
+    /// marked oversize.  A task exceeding *every* node's budget is
+    /// split by the scheduler into sub-tasks that fit (runtime
+    /// BlockSplit, protocol v5); one that cannot be split — a single
+    /// pair already over budget — fails the run fast with the typed
+    /// [`crate::coordinator::PlanMisfit`] instead of burning the
+    /// timeout.
     pub memory_budget: Option<u64>,
 }
 

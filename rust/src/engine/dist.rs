@@ -32,7 +32,8 @@ use crate::model::Correspondence;
 use crate::partition::{MatchTask, PartitionSet};
 use crate::service::{
     announce_replica, run_match_node, DataServiceServer, MatchNodeConfig,
-    NodeReport, WorkflowReport, WorkflowServerConfig, WorkflowServiceServer,
+    NodeReport, WaitStatus, WorkflowReport, WorkflowServerConfig,
+    WorkflowServiceServer,
 };
 use crate::store::DataService;
 use crate::worker::TaskExecutor;
@@ -69,9 +70,12 @@ pub struct DistConfig {
     /// §3.1 memory budget applied to every match node: a node rejects
     /// assigned tasks whose footprint exceeds it (`TaskRejected`,
     /// re-queued marked oversize).  `None` disables enforcement.  A
-    /// task exceeding *every* node's budget can never complete and
-    /// the run fails at `run_timeout` — the memory model surfacing as
-    /// an error instead of an OOM kill.
+    /// task exceeding *every* node's budget is **split** by the
+    /// scheduler into sub-tasks that fit the smallest budget (runtime
+    /// BlockSplit, protocol v5) — and when even a single pair cannot
+    /// fit, the run fails fast with the typed
+    /// [`crate::coordinator::PlanMisfit`] instead of burning
+    /// `run_timeout`.
     pub memory_budget: Option<u64>,
     /// Test hook: per-node budget overrides `(node_index, budget)`
     /// for heterogeneous-memory runs; overrides `memory_budget`.
@@ -134,7 +138,7 @@ pub struct DistOutcome {
 /// `ce.threads_per_node` workers each, over localhost TCP.
 pub fn run(
     ce: &ComputingEnv,
-    _parts: &PartitionSet,
+    parts: &PartitionSet,
     tasks: Vec<MatchTask>,
     store: Arc<DataService>,
     executor: Arc<dyn TaskExecutor>,
@@ -175,11 +179,25 @@ pub fn run(
             bail!("data replica {} did not sync in time", r + 1);
         }
     }
-    // §3.1 footprints from the plan, keyed by task id for assignment
+    // §3.1 footprints from the plan, keyed by task id for assignment,
+    // plus the partition sizes the scheduler needs to *split* a task
+    // no node's budget fits (runtime BlockSplit, protocol v5)
     let task_mem: std::collections::HashMap<u32, u64> = tasks
         .iter()
         .zip(cfg.task_mem.iter())
         .map(|(t, &m)| (t.id, m))
+        .collect();
+    let task_sizes: std::collections::HashMap<u32, (u32, u32)> = tasks
+        .iter()
+        .map(|t| {
+            (
+                t.id,
+                (
+                    parts.get(t.left).len() as u32,
+                    parts.get(t.right).len() as u32,
+                ),
+            )
+        })
         .collect();
     let wf_srv = WorkflowServiceServer::start(
         tasks,
@@ -187,6 +205,9 @@ pub fn run(
             policy: cfg.policy,
             heartbeat_timeout: cfg.heartbeat_timeout,
             task_mem,
+            task_sizes,
+            // splitting verdicts wait until the whole cluster joined
+            expected_services: ce.nodes,
         },
         &bind_ep,
     )
@@ -247,13 +268,15 @@ pub fn run(
         })
         .collect();
 
-    let done = wf_srv.wait_done(cfg.run_timeout);
+    let status = wf_srv.wait_outcome(cfg.run_timeout);
     let elapsed = start.elapsed().as_nanos() as u64;
+    let done = matches!(status, WaitStatus::Done);
     if !done {
-        // tear the wire down *before* joining the node threads: with the
-        // servers aborted, every blocked worker/heartbeat request errors
-        // out promptly, so the joins below cannot hang on nodes still
-        // polling an un-finishable workflow
+        // timeout or §3.1 misfit — tear the wire down *before* joining
+        // the node threads: with the servers aborted, every blocked
+        // worker/heartbeat request errors out promptly, so the joins
+        // below cannot hang on nodes still polling an un-finishable
+        // workflow
         wf_srv.abort();
         data_srv.shutdown();
         for srv in &replica_srvs {
@@ -280,6 +303,15 @@ pub fn run(
     let data_wire_bytes: u64 = replica_wire_bytes.iter().sum();
     let mut workflow = wf_srv.finish();
 
+    if let WaitStatus::Misfit(misfit) = status {
+        // the typed §3.1 fail-fast: callers can downcast to
+        // `PlanMisfit` to distinguish "plan does not fit this
+        // cluster" from infrastructure failures
+        return Err(anyhow::Error::new(misfit).context(format!(
+            "distributed run failed fast: {}/{} tasks complete",
+            workflow.completed_tasks, workflow.total_tasks
+        )));
+    }
     if !done {
         bail!(
             "distributed run timed out: {}/{} tasks complete, \

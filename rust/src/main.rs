@@ -47,8 +47,8 @@ use pem::matching::{MatchStrategy, StrategyKind};
 use pem::metrics::speedups;
 use pem::model::Dataset;
 use pem::partition::{
-    max_partition_size, BlockingBased, PartitionStrategy, SizeBased,
-    SortedNeighborhood,
+    max_partition_size, BlockSplit, BlockingBased, PartitionStrategy,
+    SizeBased, SortedNeighborhood,
 };
 use pem::util::cli::Args;
 use pem::util::{fmt_bytes, fmt_nanos, GIB};
@@ -77,10 +77,12 @@ fn usage() -> ! {
     --save plan.bin       write the serialized MatchPlan
     --top N               print the N heaviest tasks (default 5)
   plan/match/sweep options:
-    --partitioning size|blocking|sn   (default blocking)
+    --partitioning size|blocking|blocksplit|sn   (default blocking)
     --blocking-attr product_type|manufacturer
     --sn-attr ATTR        sorted-neighborhood sort key (default title)
     --window W            sorted-neighborhood window size (default 100)
+    --target-pairs N      blocksplit: pair comparisons per task
+                          (default (max-size/2)²; Kolb et al. balance)
     --max-size M  --min-size M     partition tuning bounds
     --nodes N --cores N --mem-gb G --threads T
     --cache C             partition cache capacity per service
@@ -102,6 +104,8 @@ fn usage() -> ! {
     --bind HOST           host to bind (default 127.0.0.1; set to
                           0.0.0.0 together with --advertise to accept
                           remote nodes)
+    --expect-nodes N      defer oversize-task splitting until N match
+                          nodes have joined (default 1)
     --heartbeat-ms MS     failure-detection timeout (default 2000)
     --timeout-s S         give up after S seconds (default 3600)
     --advertise HOST      host to publish in the replica directory
@@ -157,7 +161,31 @@ fn opt_u64(args: &Args, name: &str) -> Result<Option<u64>> {
     }
 }
 
-/// `--partitioning size|blocking|sn` → the open-API strategy.
+/// `--mem-budget`, rejecting the degenerate 0: on the wire a budget
+/// of 0 means "unlimited", and a node that fits nothing would only
+/// grind the scheduler through pointless splits before the misfit.
+fn parse_mem_budget(args: &Args) -> Result<Option<u64>> {
+    match opt_u64(args, "mem-budget")? {
+        Some(0) => bail!(
+            "--mem-budget must be >= 1 (a budget of 0 would reject \
+             every task; omit the flag for an unlimited node)"
+        ),
+        other => Ok(other),
+    }
+}
+
+/// `--blocking-attr product_type|manufacturer` → the blocking method
+/// shared by the blocking and blocksplit strategies.
+fn parse_blocking_method(args: &Args) -> Result<BlockingMethod> {
+    Ok(match args.str_or("blocking-attr", "product_type") {
+        "product_type" => BlockingMethod::product_type(),
+        "manufacturer" => BlockingMethod::manufacturer(),
+        other => bail!("bad blocking attr {other:?}"),
+    })
+}
+
+/// `--partitioning size|blocking|blocksplit|sn` → the open-API
+/// strategy.
 fn parse_partition_strategy(
     args: &Args,
     kind: StrategyKind,
@@ -166,20 +194,21 @@ fn parse_partition_strategy(
         Some(args.get_or("max-size", default_max_size(kind))?);
     Ok(match args.str_or("partitioning", "blocking") {
         "size" => Box::new(SizeBased { max_size }),
-        "blocking" => {
-            let method = match args.str_or("blocking-attr", "product_type") {
-                "product_type" => BlockingMethod::product_type(),
-                "manufacturer" => BlockingMethod::manufacturer(),
-                other => bail!("bad blocking attr {other:?}"),
-            };
-            Box::new(BlockingBased {
-                method,
-                max_size,
-                min_size: Some(
-                    args.get_or("min-size", default_min_size(kind))?,
-                ),
-            })
-        }
+        "blocking" => Box::new(BlockingBased {
+            method: parse_blocking_method(args)?,
+            max_size,
+            min_size: Some(
+                args.get_or("min-size", default_min_size(kind))?,
+            ),
+        }),
+        "blocksplit" | "block-split" => Box::new(BlockSplit {
+            method: parse_blocking_method(args)?,
+            max_size,
+            min_size: Some(
+                args.get_or("min-size", default_min_size(kind))?,
+            ),
+            target_pairs: opt_u64(args, "target-pairs")?,
+        }),
         "sn" | "sorted" | "sorted-neighborhood" => Box::new(
             SortedNeighborhood {
                 attribute: args
@@ -202,7 +231,7 @@ fn parse_backend(args: &Args) -> Result<Box<dyn ExecutionBackend>> {
             replicas: args.get_or("data-replicas", 1usize)?,
             batch: args.get_or("batch", 1usize)?,
             bind: args.str_or("bind", "127.0.0.1").to_string(),
-            memory_budget: opt_u64(args, "mem-budget")?,
+            memory_budget: parse_mem_budget(args)?,
         })),
         "sim" => Box::new(Sim(SimOptions {
             execute: args.flag("execute"),
@@ -326,6 +355,39 @@ fn cmd_plan(args: &Args) -> Result<()> {
             "EXCEEDS BUDGET (dist nodes with --mem-budget would reject)"
         }
     );
+    // blocksplit: show the before/after balance against plain §3.2
+    // tuning with the same bounds, so the operator sees what the
+    // pair-space splitting bought
+    if matches!(
+        args.str_or("partitioning", "blocking"),
+        "blocksplit" | "block-split"
+    ) {
+        let before = Workflow::for_dataset(&dataset)
+            .matching(kind)
+            .strategy_boxed(Box::new(BlockingBased {
+                method: parse_blocking_method(args)?,
+                max_size: Some(
+                    args.get_or("max-size", default_max_size(kind))?,
+                ),
+                min_size: Some(
+                    args.get_or("min-size", default_min_size(kind))?,
+                ),
+            }))
+            .env(ce)
+            .plan()?;
+        let b = before.plan().skew();
+        println!(
+            "split balance: blocking_based skew {:.2} (max {} pairs, \
+             {} tasks) → block_split skew {:.2} (max {} pairs, {} \
+             tasks)",
+            b.skew_ratio,
+            b.max_pairs,
+            b.n_tasks,
+            skew.skew_ratio,
+            skew.max_pairs,
+            skew.n_tasks
+        );
+    }
     let top = args.get_or("top", 5usize)?;
     if top > 0 {
         println!("heaviest tasks:");
@@ -392,6 +454,49 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .with_entities(args.get_or("entities", 20_000usize)?)
         .with_seed(args.get_or("seed", 2010u64)?)
         .generate();
+    // skew report: how much BlockSplit's pair-space splitting
+    // rebalances the task list vs plain §3.2 tuning on this dataset
+    // (plan-only — costs partitioning, not matching; only relevant —
+    // and only paid — when the sweep itself runs a blocking variant)
+    if matches!(
+        args.str_or("partitioning", "blocking"),
+        "blocking" | "blocksplit" | "block-split"
+    ) {
+        let ce = ComputingEnv::new(1, 4, 3 * GIB);
+        let max = args.get_or("max-size", default_max_size(kind))?;
+        let min = args.get_or("min-size", default_min_size(kind))?;
+        let skew_of =
+            |s: Box<dyn PartitionStrategy>| -> Result<pem::coordinator::PlanSkew> {
+                Ok(Workflow::for_dataset(&data.dataset)
+                    .matching(kind)
+                    .strategy_boxed(s)
+                    .env(ce)
+                    .plan()?
+                    .plan()
+                    .skew())
+            };
+        let bb = skew_of(Box::new(BlockingBased {
+            method: parse_blocking_method(args)?,
+            max_size: Some(max),
+            min_size: Some(min),
+        }))?;
+        let bs = skew_of(Box::new(BlockSplit {
+            method: parse_blocking_method(args)?,
+            max_size: Some(max),
+            min_size: Some(min),
+            target_pairs: opt_u64(args, "target-pairs")?,
+        }))?;
+        println!(
+            "task skew (max/mean pairs): blocking {:.2} ({} tasks, \
+             max {}) vs blocksplit {:.2} ({} tasks, max {})",
+            bb.skew_ratio,
+            bb.n_tasks,
+            bb.max_pairs,
+            bs.skew_ratio,
+            bs.n_tasks,
+            bs.max_pairs
+        );
+    }
     let mut times = Vec::new();
     // the speedup column is relative to the first *successful* cell;
     // when an earlier cell failed, say so instead of printing a
@@ -557,6 +662,7 @@ fn cmd_serve_coordinator(args: &Args) -> Result<()> {
         .zip(plan.task_mem.iter())
         .map(|(t, &m)| (t.id, m))
         .collect();
+    let task_sizes = plan.task_sizes();
     let store = std::sync::Arc::new(pem::store::DataService::build(
         &dataset,
         &plan.partitions,
@@ -587,6 +693,8 @@ fn cmd_serve_coordinator(args: &Args) -> Result<()> {
                 args.get_or("heartbeat-ms", 2000u64)?,
             ),
             task_mem,
+            task_sizes,
+            expected_services: args.get_or("expect-nodes", 1usize)?,
         },
         &wf_bind,
     )?;
@@ -627,12 +735,24 @@ fn cmd_serve_coordinator(args: &Args) -> Result<()> {
     let timeout = std::time::Duration::from_secs(
         args.get_or("timeout-s", 3600u64)?,
     );
-    if !wf_srv.wait_done(timeout) {
-        data_srv.shutdown();
-        bail!(
-            "timed out after {timeout:?} with {} tasks complete",
-            wf_srv.completed()
-        );
+    match wf_srv.wait_outcome(timeout) {
+        pem::service::WaitStatus::Done => {}
+        pem::service::WaitStatus::Misfit(misfit) => {
+            // the §3.1 fail-fast: tell the operator *now* instead of
+            // idling until --timeout-s
+            data_srv.shutdown();
+            return Err(anyhow::Error::new(misfit).context(
+                "workflow failed fast (§3.1 memory model): add \
+                 roomier nodes or re-plan with a smaller --max-size",
+            ));
+        }
+        pem::service::WaitStatus::Timeout => {
+            data_srv.shutdown();
+            bail!(
+                "timed out after {timeout:?} with {} tasks complete",
+                wf_srv.completed()
+            );
+        }
     }
     // grace period: let the nodes observe `done` and leave cleanly
     std::thread::sleep(std::time::Duration::from_millis(250));
@@ -665,6 +785,13 @@ fn cmd_serve_coordinator(args: &Args) -> Result<()> {
             "memory model: {} oversize rejection(s) re-routed to \
              roomier nodes",
             report.oversize_rejections
+        );
+    }
+    if report.runtime_splits > 0 {
+        println!(
+            "memory model: {} task(s) split at run time into \
+             budget-fitting sub-tasks (results merged exactly once)",
+            report.runtime_splits
         );
     }
     if report.batch_requests > 0 {
@@ -732,7 +859,7 @@ fn cmd_distmatch(args: &Args) -> Result<()> {
     cfg.threads = args.get_or("threads", 4usize)?;
     cfg.cache_capacity = args.get_or("cache", 0usize)?;
     cfg.batch = args.get_or("batch", 1usize)?.max(1);
-    cfg.task_memory_budget = opt_u64(args, "mem-budget")?;
+    cfg.task_memory_budget = parse_mem_budget(args)?;
     let exec: std::sync::Arc<dyn pem::worker::TaskExecutor> =
         std::sync::Arc::new(pem::worker::RustExecutor::new(
             MatchStrategy::new(kind),

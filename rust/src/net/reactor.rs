@@ -358,6 +358,7 @@ mod tests {
         let msg = Message::Join {
             name: "dribbler".into(),
             version: crate::rpc::PROTOCOL_VERSION,
+            mem_budget: 0,
         };
         let payload = msg.encode();
         let mut wire =

@@ -57,6 +57,30 @@ fn split_evenly(ids: &[EntityId], max: usize) -> Vec<Vec<EntityId>> {
 
 /// Run partition tuning over blocking output.
 pub fn tune(blocks: &Blocks, cfg: TuningConfig) -> PartitionSet {
+    tune_split(blocks, cfg, cfg.max_size)
+}
+
+/// Partition tuning with a separate **split threshold** — the shared
+/// core of [`tune`] and the BlockSplit strategy
+/// ([`super::strategy::BlockSplit`]): blocks larger than `split_at`
+/// are split into even sub-blocks of at most `split_at` entities
+/// (and the misc block is sliced likewise), while aggregation of
+/// undersized blocks still packs to `cfg.max_size`.  With
+/// `split_at == cfg.max_size` this is exactly §3.2 tuning; a smaller
+/// `split_at` reshapes the oversized blocks' tasks without changing
+/// *which* blocks aggregate — so the covered pair set is identical.
+/// Requires `cfg.min_size <= split_at <= cfg.max_size`.
+pub(crate) fn tune_split(
+    blocks: &Blocks,
+    cfg: TuningConfig,
+    split_at: usize,
+) -> PartitionSet {
+    debug_assert!(
+        cfg.min_size <= split_at && split_at <= cfg.max_size,
+        "split_at {split_at} outside [{}, {}]",
+        cfg.min_size,
+        cfg.max_size
+    );
     let mut out = PartitionSet::new();
 
     // Pass 1: normal blocks — split the oversized, queue the undersized.
@@ -65,8 +89,8 @@ pub fn tune(blocks: &Blocks, cfg: TuningConfig) -> PartitionSet {
         if ids.is_empty() {
             continue;
         }
-        if ids.len() > cfg.max_size {
-            let parts = split_evenly(ids, cfg.max_size);
+        if ids.len() > split_at {
+            let parts = split_evenly(ids, split_at);
             let count = parts.len();
             for (index, chunk) in parts.into_iter().enumerate() {
                 out.push(
@@ -133,8 +157,8 @@ pub fn tune(blocks: &Blocks, cfg: TuningConfig) -> PartitionSet {
     // Pass 3: misc block — carried over, split when oversized.
     let misc = blocks.misc();
     if !misc.is_empty() {
-        let parts = if misc.len() > cfg.max_size {
-            split_evenly(misc, cfg.max_size)
+        let parts = if misc.len() > split_at {
+            split_evenly(misc, split_at)
         } else {
             vec![misc.to_vec()]
         };

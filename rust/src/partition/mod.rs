@@ -14,8 +14,9 @@
 //!   multi-source variants of §3.3;
 //! * [`memory`]: the `m ≤ √(max_mem / (#cores · c_ms))` sizing model;
 //! * [`strategy`]: the open [`PartitionStrategy`] trait — the plan half
-//!   of the plan/execute split — with the two paper strategies and
-//!   [`strategy::SortedNeighborhood`] windowing as impls.
+//!   of the plan/execute split — with the two paper strategies,
+//!   [`strategy::SortedNeighborhood`] windowing and the
+//!   load-balancing [`strategy::BlockSplit`] (Kolb et al.) as impls.
 
 pub mod blocking_based;
 pub mod memory;
@@ -27,8 +28,8 @@ pub use blocking_based::{tune, TuningConfig};
 pub use memory::{max_partition_size, task_memory_bytes};
 pub use size_based::partition_size_based;
 pub use strategy::{
-    BlockingBased, PartitionStrategy, PlanContext, SizeBased,
-    SortedNeighborhood,
+    BlockSplit, BlockingBased, PartitionStrategy, PlanContext,
+    SizeBased, SortedNeighborhood,
 };
 pub use task_gen::{
     generate_tasks, generate_tasks_two_sources_blocked,
@@ -163,6 +164,40 @@ pub struct MatchTask {
     pub right: PartitionId,
 }
 
+/// A contiguous rectangle of a match task's pair space, used by
+/// **runtime task splitting** (the scheduler's answer to a task no
+/// live node's §3.1 budget fits): half-open entity-index ranges into
+/// the task's left and right partitions that a sub-task compares
+/// instead of the full partitions.
+///
+/// On an intra-partition task (`task.left == task.right`), a span with
+/// `left == right` marks a *triangle* sub-task (unordered pairs within
+/// the range); any other combination — two distinct ranges of the same
+/// partition, or ranges of two different partitions — is a plain
+/// rectangle compared as a cross task.  The splitter tiles the parent
+/// pair space exactly (triangles along the diagonal plus the
+/// rectangles between chunks), so the union of the sub-tasks covers
+/// every parent pair exactly once.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TaskSpan {
+    /// Half-open index range `[start, end)` into the left partition.
+    pub left: (u32, u32),
+    /// Half-open index range `[start, end)` into the right partition.
+    pub right: (u32, u32),
+}
+
+impl TaskSpan {
+    /// Entities selected from the left partition.
+    pub fn left_len(&self) -> u32 {
+        self.left.1.saturating_sub(self.left.0)
+    }
+
+    /// Entities selected from the right partition.
+    pub fn right_len(&self) -> u32 {
+        self.right.1.saturating_sub(self.right.0)
+    }
+}
+
 impl MatchTask {
     /// Number of entity-pair comparisons this task performs.
     pub fn n_pairs(&self, parts: &PartitionSet) -> u64 {
@@ -219,6 +254,23 @@ mod tests {
         assert_eq!(cross.n_pairs(&ps), 50); // 10*5
         assert_eq!(intra.needed_partitions(), vec![a]);
         assert_eq!(cross.needed_partitions(), vec![a, b]);
+    }
+
+    #[test]
+    fn task_span_lengths() {
+        let s = TaskSpan {
+            left: (10, 25),
+            right: (0, 40),
+        };
+        assert_eq!(s.left_len(), 15);
+        assert_eq!(s.right_len(), 40);
+        // malformed (inverted) ranges saturate instead of wrapping
+        let bad = TaskSpan {
+            left: (5, 2),
+            right: (0, 0),
+        };
+        assert_eq!(bad.left_len(), 0);
+        assert_eq!(bad.right_len(), 0);
     }
 
     #[test]

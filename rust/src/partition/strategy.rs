@@ -12,13 +12,19 @@
 //! Neighborhood Blocking with MapReduce*) onto the partition/task
 //! machinery: entities are sorted by a key, sliced into consecutive
 //! window partitions, and adjacent windows get an extra overlap task so
-//! no near-neighbor pair is lost at a partition boundary.
+//! no near-neighbor pair is lost at a partition boundary.  The fourth
+//! strategy, [`BlockSplit`] (Kolb et al., *Load Balancing for
+//! MapReduce-based Entity Resolution*), re-slices oversized blocks by
+//! their **pair space** so the generated tasks are balanced around a
+//! target comparison count — same covered pairs as [`BlockingBased`],
+//! strictly lower task skew on Zipf-distributed blocking keys.
 //!
 //! Strategies are object-safe (`Box<dyn PartitionStrategy>`), and the
 //! [`crate::coordinator::Workflow`] builder consumes them to produce an
 //! inspectable [`crate::coordinator::MatchPlan`] before any execution
 //! happens.
 
+use super::blocking_based::tune_split;
 use super::task_gen::generate_tasks;
 use super::{
     max_partition_size, partition_size_based, tune, MatchTask,
@@ -225,6 +231,127 @@ impl PartitionStrategy for BlockingBased {
     }
 }
 
+/// **BlockSplit** (Kolb, Thor & Rahm, *Load Balancing for
+/// MapReduce-based Entity Resolution*) as a partition strategy: §3.2
+/// blocking, but oversized blocks are split by their **comparison
+/// space** instead of the entity-count bound alone.
+///
+/// Every block whose pair space would exceed `target_pairs` is sliced
+/// into even sub-blocks of at most `√target_pairs` entities, so the
+/// resulting match tasks — the intra-sub-block triangles and
+/// cross-sub-block rectangles of [`super::task_gen`]'s case 2 — stay
+/// balanced near the target instead of inheriting the Zipf skew of
+/// the blocking keys.  Aggregation of undersized blocks is
+/// *identical* to [`BlockingBased`] with the same bounds (same
+/// `min_size` cut, same first-fit packing to `max_size`), and the
+/// misc block keeps its misc routing, so the strategy covers
+/// **exactly the same comparison pairs** as [`BlockingBased`]
+/// (property-tested) while its max-task/mean-task skew ratio is
+/// strictly lower whenever any block's pair space exceeds the target.
+///
+/// The slice width is clamped to `[min_size, max_size]`: never above
+/// the §3.1 memory bound, and never below the aggregation cut (which
+/// would change *which* blocks aggregate and thereby the pair set).
+#[derive(Clone, Debug)]
+pub struct BlockSplit {
+    /// Blocking method (e.g. by product type or manufacturer).
+    pub method: BlockingMethod,
+    /// Maximum partition size; `None` derives `m` from the memory
+    /// model.
+    pub max_size: Option<usize>,
+    /// Minimum partition size for aggregating small blocks; `None`
+    /// uses the paper's favorable size ([`default_min_size`]).
+    pub min_size: Option<usize>,
+    /// Target pair comparisons per task.  `None` derives `(m/2)²`
+    /// from the max partition size `m` — splitting any block above
+    /// half the §3.1 size bound.
+    pub target_pairs: Option<u64>,
+}
+
+impl BlockSplit {
+    /// Blocking by product type with automatic bounds and target —
+    /// the paper's primary configuration, load-balanced.
+    pub fn product_type() -> BlockSplit {
+        BlockSplit::new(BlockingMethod::product_type())
+    }
+
+    /// Blocking with `method`, automatic bounds and target.
+    pub fn new(method: BlockingMethod) -> BlockSplit {
+        BlockSplit {
+            method,
+            max_size: None,
+            min_size: None,
+            target_pairs: None,
+        }
+    }
+
+    /// Fix the tuning bounds explicitly (builder style).
+    pub fn with_bounds(mut self, max_size: usize, min_size: usize) -> Self {
+        self.max_size = Some(max_size);
+        self.min_size = Some(min_size);
+        self
+    }
+
+    /// Fix the per-task pair target explicitly (builder style).
+    pub fn with_target_pairs(mut self, target: u64) -> Self {
+        self.target_pairs = Some(target);
+        self
+    }
+}
+
+impl PartitionStrategy for BlockSplit {
+    fn name(&self) -> &'static str {
+        "block_split"
+    }
+
+    fn params(&self) -> String {
+        let bounds = |v: Option<usize>| match v {
+            Some(x) => x.to_string(),
+            None => "auto".to_string(),
+        };
+        format!(
+            "method={:?} max_size={} min_size={} target_pairs={}",
+            self.method,
+            bounds(self.max_size),
+            bounds(self.min_size),
+            match self.target_pairs {
+                Some(t) => t.to_string(),
+                None => "auto".to_string(),
+            }
+        )
+    }
+
+    fn partition(
+        &self,
+        dataset: &Dataset,
+        ctx: &PlanContext<'_>,
+    ) -> Result<PartitionSet> {
+        let m = self.max_size.unwrap_or_else(|| ctx.auto_max_size());
+        if m == 0 {
+            bail!("block-split partitioning needs max_size >= 1");
+        }
+        let min = self
+            .min_size
+            .unwrap_or_else(|| default_min_size(ctx.match_kind));
+        if min > m {
+            bail!("min_size {min} exceeds max partition size {m}");
+        }
+        let target = self.target_pairs.unwrap_or_else(|| {
+            let half = (m / 2).max(1) as u64;
+            (half * half).max(1)
+        });
+        // slice width: the cross-sub-block rectangles (s² pairs) are
+        // the heaviest split tasks, so s = √target keeps them at or
+        // under the target; clamped to [min, m] — see the type docs.
+        // Aggregation inside tune_split still packs to `m`, exactly
+        // like BlockingBased, so the covered pair set is identical.
+        let s = ((target as f64).sqrt().floor() as usize)
+            .clamp(min.max(1), m);
+        let blocks = self.method.run(dataset);
+        Ok(tune_split(&blocks, TuningConfig::new(m, min), s))
+    }
+}
+
 /// Sorted-neighborhood partitioning (Hernández/Stolfo windowing on the
 /// partition level, after Kolb et al.'s MapReduce formulation).
 ///
@@ -352,13 +479,44 @@ mod tests {
     use super::*;
     use crate::datagen::GeneratorConfig;
     use crate::model::ATTR_TITLE;
+    use crate::util::proptest::forall;
     use crate::util::GIB;
+    use std::collections::HashSet;
 
     fn ctx_in(ce: &ComputingEnv) -> PlanContext<'_> {
         PlanContext {
             ce,
             match_kind: StrategyKind::Wam,
         }
+    }
+
+    /// Every unordered entity pair some task of `parts` compares.
+    fn covered_pairs(parts: &PartitionSet) -> HashSet<(u32, u32)> {
+        let mut covered = HashSet::new();
+        for t in &generate_tasks(parts) {
+            let l = &parts.get(t.left).entities;
+            let r = &parts.get(t.right).entities;
+            if t.left == t.right {
+                for i in 0..l.len() {
+                    for j in (i + 1)..l.len() {
+                        covered.insert((
+                            l[i].0.min(l[j].0),
+                            l[i].0.max(l[j].0),
+                        ));
+                    }
+                }
+            } else {
+                for &a in l {
+                    for &b in r {
+                        if a != b {
+                            covered
+                                .insert((a.0.min(b.0), a.0.max(b.0)));
+                        }
+                    }
+                }
+            }
+        }
+        covered
     }
 
     #[test]
@@ -379,6 +537,130 @@ mod tests {
         let ce = ComputingEnv::new(1, 2, GIB);
         let s = BlockingBased::product_type().with_bounds(100, 5_000);
         assert!(s.partition(&data.dataset, &ctx_in(&ce)).is_err());
+    }
+
+    /// The tentpole property: BlockSplit covers **exactly** the same
+    /// comparison pairs as BlockingBased with the same bounds — the
+    /// pair-space splitting reshapes tasks, never coverage.
+    #[test]
+    fn prop_block_split_preserves_blocking_pair_set() {
+        forall("blocksplit-pairs", 10, |rng| {
+            let n = 150 + rng.gen_range(350);
+            let seed = rng.gen_range(10_000) as u64;
+            let data = GeneratorConfig::tiny()
+                .with_entities(n)
+                .with_seed(seed)
+                .generate();
+            let ce = ComputingEnv::new(1, 2, GIB);
+            let ctx = ctx_in(&ce);
+            let max = 40 + rng.gen_range(120);
+            let min = (1 + rng.gen_range(30)).min(max);
+            let target = 4 + rng.gen_range(4000) as u64;
+            let bb = BlockingBased::product_type()
+                .with_bounds(max, min)
+                .partition(&data.dataset, &ctx)
+                .unwrap();
+            let bs = BlockSplit::product_type()
+                .with_bounds(max, min)
+                .with_target_pairs(target)
+                .partition(&data.dataset, &ctx)
+                .unwrap();
+            assert_eq!(bs.total_entities(), bb.total_entities());
+            assert_eq!(
+                covered_pairs(&bs),
+                covered_pairs(&bb),
+                "pair sets differ \
+                 (n={n} max={max} min={min} target={target})"
+            );
+        });
+    }
+
+    /// The load-balance claim on a skewed catalog — one giant
+    /// blocking key plus a few mid-size ones: BlockSplit's
+    /// max-task/mean-task pair ratio is strictly lower than
+    /// BlockingBased's, at an unchanged total comparison count, and
+    /// no split task exceeds the pair target.
+    #[test]
+    fn block_split_lowers_skew_on_skewed_catalog() {
+        use crate::model::{
+            Dataset, Entity, EntityId, Schema, ATTR_PRODUCT_TYPE,
+        };
+        let schema = Schema::new(vec![ATTR_TITLE, ATTR_PRODUCT_TYPE]);
+        let mut ds = Dataset::new(schema.clone());
+        let mut next = 0u32;
+        let mut add = |ds: &mut Dataset, ptype: Option<&str>, n: usize| {
+            for _ in 0..n {
+                let mut e = Entity::new(EntityId(next), &schema);
+                e.set(&schema, ATTR_TITLE, format!("offer {next}"));
+                if let Some(p) = ptype {
+                    e.set(&schema, ATTR_PRODUCT_TYPE, p.to_string());
+                }
+                ds.push(e);
+                next += 1;
+            }
+        };
+        add(&mut ds, Some("disk"), 1500); // the Zipf head
+        add(&mut ds, Some("tv"), 200);
+        add(&mut ds, Some("cam"), 200);
+        add(&mut ds, Some("gps"), 200);
+        add(&mut ds, None, 50); // misc
+        let ce = ComputingEnv::new(1, 2, GIB);
+        let ctx = ctx_in(&ce);
+        let target = 10_000u64;
+        let bb = BlockingBased::product_type()
+            .with_bounds(500, 20)
+            .partition(&ds, &ctx)
+            .unwrap();
+        let bs = BlockSplit::product_type()
+            .with_bounds(500, 20)
+            .with_target_pairs(target)
+            .partition(&ds, &ctx)
+            .unwrap();
+        let skew = |parts: &PartitionSet| -> (f64, u64, u64) {
+            let tasks = generate_tasks(parts);
+            let pairs: Vec<u64> =
+                tasks.iter().map(|t| t.n_pairs(parts)).collect();
+            let total: u64 = pairs.iter().sum();
+            let max = *pairs.iter().max().unwrap();
+            let mean = total as f64 / pairs.len() as f64;
+            (max as f64 / mean, max, total)
+        };
+        let (ratio_bb, max_bb, total_bb) = skew(&bb);
+        let (ratio_bs, max_bs, total_bs) = skew(&bs);
+        assert_eq!(total_bb, total_bs, "comparison work unchanged");
+        assert!(
+            ratio_bs < ratio_bb,
+            "block_split ratio {ratio_bs:.2} must be strictly below \
+             blocking_based {ratio_bb:.2}"
+        );
+        assert!(max_bs < max_bb, "heaviest task shrank");
+        assert!(
+            max_bs <= target,
+            "split task of {max_bs} pairs exceeds target {target}"
+        );
+    }
+
+    #[test]
+    fn block_split_equals_blocking_when_target_not_binding() {
+        // a huge target never splits beyond the §3.1 bound: the
+        // partition sets coincide exactly with BlockingBased's
+        let data = GeneratorConfig::tiny().with_entities(500).generate();
+        let ce = ComputingEnv::new(1, 2, GIB);
+        let ctx = ctx_in(&ce);
+        let bb = BlockingBased::product_type()
+            .with_bounds(150, 30)
+            .partition(&data.dataset, &ctx)
+            .unwrap();
+        let bs = BlockSplit::product_type()
+            .with_bounds(150, 30)
+            .with_target_pairs(u64::MAX)
+            .partition(&data.dataset, &ctx)
+            .unwrap();
+        assert_eq!(bs.len(), bb.len());
+        for (a, b) in bs.iter().zip(bb.iter()) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.entities, b.entities);
+        }
     }
 
     #[test]

@@ -179,6 +179,7 @@ mod tests {
             Message::Join {
                 name: "node0".into(),
                 version: super::super::PROTOCOL_VERSION,
+                mem_budget: 0,
             },
             Message::NoTask { done: true },
             Message::Heartbeat {

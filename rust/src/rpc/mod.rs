@@ -53,7 +53,15 @@
 //! footprint (`c_ms · m₁ · m₂` from the match plan), and a match node
 //! whose budget the footprint exceeds answers with
 //! [`Message::TaskRejected`] instead of executing; the workflow
-//! service re-queues the task marked oversize for that node.  The
+//! service re-queues the task marked oversize for that node.
+//!
+//! **Runtime task splitting (protocol v5).**  [`Message::Join`] now
+//! reports the joining node's §3.1 budget, and every assignment may
+//! carry an optional [`TaskSpan`]: when a task has been rejected by
+//! *every* live node, the scheduler splits its pair space into
+//! sub-tasks that fit the smallest live budget (Kolb et al.'s
+//! BlockSplit, applied at run time), and the span tells the node which
+//! entity-index rectangle of the fetched partitions to compare.  The
 //! authoritative byte-level layout of every frame is specified in
 //! `docs/WIRE_PROTOCOL.md`, kept in lockstep with this module.
 
@@ -74,13 +82,15 @@ pub use frame::{read_frame, read_frame_raw, write_frame, Transport, MAX_FRAME_BY
 /// plane (directory, redirect, sync); v3 — batched task assignment
 /// ([`Message::TaskRequestBatch`] / [`Message::TaskAssignBatch`]);
 /// v4 — §3.1 memory-aware assignment (footprints on every assignment,
-/// [`Message::TaskRejected`]).
-pub const PROTOCOL_VERSION: u8 = 4;
+/// [`Message::TaskRejected`]); v5 — runtime task splitting (node
+/// budget on [`Message::Join`], optional [`TaskSpan`] on every
+/// assignment).
+pub const PROTOCOL_VERSION: u8 = 5;
 
 use crate::coordinator::scheduler::ServiceId;
 use crate::features::{EntityFeatures, QGramSet, TokenSet};
 use crate::model::{Correspondence, EntityId};
-use crate::partition::{MatchTask, PartitionId};
+use crate::partition::{MatchTask, PartitionId, TaskSpan};
 use crate::store::PartitionData;
 use std::fmt;
 
@@ -141,6 +151,9 @@ pub struct AssignedTask {
     /// from the match plan; 0 when the coordinator has no plan
     /// footprints).
     pub mem_bytes: u64,
+    /// Runtime-split sub-task span (v5): the pair-space rectangle to
+    /// compare instead of the full partitions.  `None` for plan tasks.
+    pub span: Option<TaskSpan>,
 }
 
 /// One protocol message (control plane to the workflow service, data
@@ -155,6 +168,11 @@ pub enum Message {
         name: String,
         /// Sender's [`PROTOCOL_VERSION`].
         version: u8,
+        /// The node's §3.1 per-task memory budget, bytes (v5); `0` =
+        /// unlimited.  Feeds scheduler-level task splitting: a task
+        /// rejected by every live node is split into sub-tasks sized
+        /// to the smallest live budget.
+        mem_budget: u64,
     },
     /// workflow service → match service: membership granted.  Carries
     /// the coordinator's protocol version (echo for symmetric checking)
@@ -190,6 +208,10 @@ pub enum Message {
         /// Estimated §3.1 memory footprint of the task (v4; 0 when
         /// the coordinator has no plan footprints).
         mem_bytes: u64,
+        /// Runtime-split sub-task span (v5): the pair-space rectangle
+        /// to compare instead of the full partitions.  `None` for
+        /// plan tasks.
+        span: Option<TaskSpan>,
     },
     /// workflow service → match service: nothing to assign right now.
     NoTask {
@@ -347,6 +369,26 @@ const TAG_TASK_REJECTED: u8 = 21;
 /// length plus three 4-byte list counts (all possibly zero).
 const MIN_FEATURE_BYTES: usize = 16;
 
+/// Salvage the version check from a handshake frame that failed to
+/// decode.  The handshake frames put the version byte *immediately
+/// after the tag* precisely so compatibility can be checked before
+/// parsing anything else — and since v5 changed the `Join` body
+/// layout (the budget field), an older node's `Join` no longer
+/// decodes at all; strict decoding would otherwise mask the version
+/// mismatch behind a generic "undecodable frame" error.  Returns
+/// `Some(peer_version)` when `payload` starts like a handshake frame
+/// whose version differs from [`PROTOCOL_VERSION`].
+pub fn foreign_handshake_version(payload: &[u8]) -> Option<u8> {
+    match payload {
+        [TAG_JOIN | TAG_JOIN_ACK | TAG_REPLICA_ANNOUNCE, version, ..]
+            if *version != PROTOCOL_VERSION =>
+        {
+            Some(*version)
+        }
+        _ => None,
+    }
+}
+
 // ------------------------------------------------------------- encoder
 
 fn put_u8(buf: &mut Vec<u8>, v: u8) {
@@ -402,6 +444,19 @@ fn put_partition_list(buf: &mut Vec<u8>, ps: &[PartitionId]) {
     }
 }
 
+fn put_span(buf: &mut Vec<u8>, span: &Option<TaskSpan>) {
+    match span {
+        None => put_bool(buf, false),
+        Some(s) => {
+            put_bool(buf, true);
+            put_u32(buf, s.left.0);
+            put_u32(buf, s.left.1);
+            put_u32(buf, s.right.0);
+            put_u32(buf, s.right.1);
+        }
+    }
+}
+
 fn put_features(buf: &mut Vec<u8>, f: &EntityFeatures) {
     // Only the canonical representations travel; `title_chars` and the
     // sparse count vectors are derived again on the receiving side.
@@ -435,10 +490,15 @@ impl Message {
     pub fn encode(&self) -> Vec<u8> {
         let mut b = Vec::with_capacity(16);
         match self {
-            Message::Join { name, version } => {
+            Message::Join {
+                name,
+                version,
+                mem_budget,
+            } => {
                 put_u8(&mut b, TAG_JOIN);
                 put_u8(&mut b, *version);
                 put_str(&mut b, name);
+                put_u64(&mut b, *mem_budget);
             }
             Message::JoinAck {
                 service,
@@ -459,12 +519,17 @@ impl Message {
                 put_u8(&mut b, TAG_TASK_REQUEST);
                 put_service(&mut b, *service);
             }
-            Message::TaskAssign { task, mem_bytes } => {
+            Message::TaskAssign {
+                task,
+                mem_bytes,
+                span,
+            } => {
                 put_u8(&mut b, TAG_TASK_ASSIGN);
                 put_u32(&mut b, task.id);
                 put_u32(&mut b, task.left.0);
                 put_u32(&mut b, task.right.0);
                 put_u64(&mut b, *mem_bytes);
+                put_span(&mut b, span);
             }
             Message::NoTask { done } => {
                 put_u8(&mut b, TAG_NO_TASK);
@@ -528,6 +593,7 @@ impl Message {
                     put_u32(&mut b, a.task.left.0);
                     put_u32(&mut b, a.task.right.0);
                     put_u64(&mut b, a.mem_bytes);
+                    put_span(&mut b, &a.span);
                 }
             }
             Message::TaskRejected { service, task_id } => {
@@ -587,6 +653,7 @@ impl Message {
             TAG_JOIN => Message::Join {
                 version: d.u8()?,
                 name: d.string()?,
+                mem_budget: d.u64()?,
             },
             TAG_JOIN_ACK => Message::JoinAck {
                 version: d.u8()?,
@@ -607,6 +674,7 @@ impl Message {
                     right: PartitionId(d.u32()?),
                 },
                 mem_bytes: d.u64()?,
+                span: d.span()?,
             },
             TAG_NO_TASK => Message::NoTask { done: d.bool()? },
             TAG_COMPLETE => {
@@ -672,8 +740,9 @@ impl Message {
             }
             TAG_TASK_ASSIGN_BATCH => {
                 let done = d.bool()?;
-                // 12 task bytes + 8 footprint bytes per element
-                let n = d.list_len(20)?;
+                // 12 task bytes + 8 footprint bytes + 1 span-presence
+                // byte per element
+                let n = d.list_len(21)?;
                 let mut tasks = Vec::with_capacity(n);
                 for _ in 0..n {
                     tasks.push(AssignedTask {
@@ -683,6 +752,7 @@ impl Message {
                             right: PartitionId(d.u32()?),
                         },
                         mem_bytes: d.u64()?,
+                        span: d.span()?,
                     });
                 }
                 Message::TaskAssignBatch { done, tasks }
@@ -858,6 +928,16 @@ impl<'a> Dec<'a> {
         Ok(out)
     }
 
+    fn span(&mut self) -> Result<Option<TaskSpan>, WireError> {
+        if !self.bool()? {
+            return Ok(None);
+        }
+        Ok(Some(TaskSpan {
+            left: (self.u32()?, self.u32()?),
+            right: (self.u32()?, self.u32()?),
+        }))
+    }
+
     fn u64_list(&mut self) -> Result<Vec<u64>, WireError> {
         let n = self.list_len(8)?;
         let mut out = Vec::with_capacity(n);
@@ -927,6 +1007,18 @@ pub(crate) mod testutil {
         }
     }
 
+    pub(crate) fn rand_span(rng: &mut Rng) -> Option<TaskSpan> {
+        if rng.gen_bool(0.5) {
+            return None;
+        }
+        let l0 = rng.gen_range(100) as u32;
+        let r0 = rng.gen_range(100) as u32;
+        Some(TaskSpan {
+            left: (l0, l0 + 1 + rng.gen_range(50) as u32),
+            right: (r0, r0 + 1 + rng.gen_range(50) as u32),
+        })
+    }
+
     pub(crate) fn rand_partition(rng: &mut Rng) -> PartitionData {
         let n = rng.gen_range(6);
         let entities: Vec<EntityId> =
@@ -948,6 +1040,7 @@ pub(crate) mod testutil {
             Message::Join {
                 name: rand_string(rng, 16),
                 version: rng.gen_range(256) as u8,
+                mem_budget: rng.gen_range(1 << 30) as u64,
             },
             Message::JoinAck {
                 service: svc,
@@ -966,6 +1059,7 @@ pub(crate) mod testutil {
                     right: PartitionId(rng.gen_range(500) as u32),
                 },
                 mem_bytes: rng.gen_range(1 << 30) as u64,
+                span: rand_span(rng),
             },
             Message::TaskRejected {
                 service: svc,
@@ -1050,6 +1144,7 @@ pub(crate) mod testutil {
                             right: PartitionId(rng.gen_range(500) as u32),
                         },
                         mem_bytes: rng.gen_range(1 << 40) as u64,
+                        span: rand_span(rng),
                     })
                     .collect(),
             },
@@ -1136,6 +1231,7 @@ mod tests {
         let join = Message::Join {
             name: "n".into(),
             version: 0xAB,
+            mem_budget: 0,
         }
         .encode();
         assert_eq!(join[0], TAG_JOIN);
@@ -1156,6 +1252,64 @@ mod tests {
         .encode();
         assert_eq!(ann[0], TAG_REPLICA_ANNOUNCE);
         assert_eq!(ann[1], 0xEF);
+    }
+
+    /// The handshake-salvage helper: a foreign version byte is
+    /// recoverable from handshake frames whose body no longer
+    /// decodes, and only from handshake frames.
+    #[test]
+    fn foreign_handshake_version_reads_the_version_byte() {
+        // a v4-era Join: tag, version byte, name — no budget field
+        let mut legacy = vec![TAG_JOIN, PROTOCOL_VERSION - 1];
+        put_str(&mut legacy, "old-node");
+        assert!(Message::decode(&legacy).is_err(), "layout changed in v5");
+        assert_eq!(
+            foreign_handshake_version(&legacy),
+            Some(PROTOCOL_VERSION - 1)
+        );
+        // current-version handshakes are not flagged…
+        let current = Message::Join {
+            name: "new-node".into(),
+            version: PROTOCOL_VERSION,
+            mem_budget: 7,
+        }
+        .encode();
+        assert_eq!(foreign_handshake_version(&current), None);
+        // …nor are non-handshake frames or runts
+        assert_eq!(
+            foreign_handshake_version(
+                &Message::NoTask { done: true }.encode()
+            ),
+            None
+        );
+        assert_eq!(foreign_handshake_version(&[TAG_JOIN]), None);
+        assert_eq!(foreign_handshake_version(&[]), None);
+        // ReplicaAnnounce is a handshake frame too
+        assert_eq!(
+            foreign_handshake_version(&[TAG_REPLICA_ANNOUNCE, 0]),
+            Some(0)
+        );
+    }
+
+    /// The v5 join: the node's §3.1 budget rides the handshake (0 =
+    /// unlimited) and round-trips exactly.
+    #[test]
+    fn v5_join_carries_memory_budget() {
+        for budget in [0u64, 1, 3 * 1024 * 1024 * 1024] {
+            let msg = Message::Join {
+                name: "budgeted".into(),
+                version: PROTOCOL_VERSION,
+                mem_budget: budget,
+            };
+            let Ok(Message::Join {
+                name, mem_budget, ..
+            }) = Message::decode(&msg.encode())
+            else {
+                panic!("decode Join");
+            };
+            assert_eq!(name, "budgeted");
+            assert_eq!(mem_budget, budget);
+        }
     }
 
     #[test]
@@ -1344,6 +1498,10 @@ mod tests {
                         right: PartitionId(i + 1),
                     },
                     mem_bytes: 1000 * i as u64,
+                    span: (i == 1).then_some(TaskSpan {
+                        left: (0, 10),
+                        right: (10, 20),
+                    }),
                 })
                 .collect(),
         };
@@ -1363,10 +1521,23 @@ mod tests {
             vec![0, 1000, 2000],
             "footprints travel with the tasks"
         );
+        assert_eq!(
+            tasks.iter().map(|a| a.span).collect::<Vec<_>>(),
+            vec![
+                None,
+                Some(TaskSpan {
+                    left: (0, 10),
+                    right: (10, 20),
+                }),
+                None
+            ],
+            "spans travel with the tasks"
+        );
     }
 
-    /// The v4 frames: the single assignment carries its footprint and
-    /// a rejection round-trips exactly.
+    /// The v4/v5 frames: the single assignment carries its footprint
+    /// (and, for a runtime-split sub-task, its span) and a rejection
+    /// round-trips exactly.
     #[test]
     fn v4_assignment_and_rejection_roundtrip() {
         let assign = Message::TaskAssign {
@@ -1376,14 +1547,45 @@ mod tests {
                 right: PartitionId(2),
             },
             mem_bytes: 123_456_789,
+            span: None,
         };
-        let Ok(Message::TaskAssign { task, mem_bytes }) =
-            Message::decode(&assign.encode())
+        let Ok(Message::TaskAssign {
+            task,
+            mem_bytes,
+            span,
+        }) = Message::decode(&assign.encode())
         else {
             panic!("decode TaskAssign");
         };
         assert_eq!(task.id, 7);
         assert_eq!(mem_bytes, 123_456_789);
+        assert_eq!(span, None);
+
+        // a runtime-split sub-task: the span survives the round trip
+        let sub = Message::TaskAssign {
+            task: MatchTask {
+                id: 900,
+                left: PartitionId(4),
+                right: PartitionId(4),
+            },
+            mem_bytes: 4_000,
+            span: Some(TaskSpan {
+                left: (0, 15),
+                right: (15, 31),
+            }),
+        };
+        let Ok(Message::TaskAssign { span, .. }) =
+            Message::decode(&sub.encode())
+        else {
+            panic!("decode split TaskAssign");
+        };
+        assert_eq!(
+            span,
+            Some(TaskSpan {
+                left: (0, 15),
+                right: (15, 31),
+            })
+        );
 
         let rej = Message::TaskRejected {
             service: ServiceId(3),

@@ -28,9 +28,14 @@
 //! memory model (protocol v4): every assignment carries the task's
 //! estimated footprint, and one that exceeds the budget is answered
 //! with `TaskRejected` — the coordinator re-queues it marked oversize
-//! for this node and routes it to a roomier one.  Written-off data
-//! replicas are retried after `replica_retry_cooldown` instead of
-//! being banned for the rest of the run.
+//! for this node and routes it to a roomier one.  The budget is also
+//! reported at join (v5), so a task *every* node rejects comes back
+//! reshaped: the scheduler splits its pair space and each sub-task
+//! assignment carries a [`TaskSpan`] telling this node which
+//! entity-range rectangle of the fetched partitions to compare.
+//! Written-off data replicas are retried after
+//! `replica_retry_cooldown` instead of being banned for the rest of
+//! the run.
 //!
 //! The node runs to workflow completion (`NoTask { done: true }` /
 //! an empty batch with `done`), then leaves gracefully.
@@ -40,7 +45,7 @@
 //! and re-queue.
 
 use crate::coordinator::scheduler::ServiceId;
-use crate::partition::{MatchTask, PartitionId};
+use crate::partition::{MatchTask, PartitionId, TaskSpan};
 use crate::rpc::{CompletedTask, Message, Transport, PROTOCOL_VERSION};
 use crate::service::replica::ReplicaSelector;
 use crate::store::PartitionData;
@@ -175,16 +180,23 @@ impl MatchServiceNode {
 }
 
 /// Join the workflow service over `t`, negotiating the protocol
-/// version; returns the granted [`ServiceId`] and the data-plane
-/// replica directory.  A coordinator speaking a different
-/// [`PROTOCOL_VERSION`] (or rejecting ours) yields a clear error.
+/// version and reporting this node's §3.1 budget (`None` = unlimited;
+/// v5 — it sizes the sub-tasks of runtime splitting); returns the
+/// granted [`ServiceId`] and the data-plane replica directory.  A
+/// coordinator speaking a different [`PROTOCOL_VERSION`] (or
+/// rejecting ours) yields a clear error.
 pub fn join_workflow(
     t: &mut Transport,
     name: &str,
+    mem_budget: Option<u64>,
 ) -> Result<(ServiceId, Vec<String>)> {
     match t.request(&Message::Join {
         name: name.to_string(),
         version: PROTOCOL_VERSION,
+        // on the wire 0 means "unlimited", so a configured budget of
+        // 0 (nothing fits) is reported as 1 — the smallest value that
+        // still tells the scheduler this node has a budget
+        mem_budget: mem_budget.map_or(0, |b| b.max(1)),
     })? {
         Message::JoinAck {
             service,
@@ -231,7 +243,11 @@ pub fn run_match_node(
     .with_context(|| {
         format!("connecting to workflow service {}", cfg.workflow_addr)
     })?;
-    let (service, directory) = join_workflow(&mut control, &cfg.name)?;
+    let (service, directory) = join_workflow(
+        &mut control,
+        &cfg.name,
+        cfg.task_memory_budget,
+    )?;
 
     // configured replicas first (operator preference), then whatever
     // the coordinator's directory adds; the selector deduplicates
@@ -382,22 +398,27 @@ struct WorkerCtx<'a> {
 }
 
 /// Fetch, execute and account one assigned task — the core both
-/// worker loops share.  A fetch failure sets `dead` (we hold an
-/// assigned task we can no longer run: the whole node must go down,
-/// stop heartbeating, and let the workflow service's failure detector
+/// worker loops share.  A runtime-split sub-task arrives with a
+/// [`TaskSpan`]: the full partitions are fetched (and cached) as
+/// usual, then sliced down to the assigned pair-space rectangle —
+/// intra-partition matching only when the span is the diagonal
+/// triangle.  A fetch failure sets `dead` (we hold an assigned task
+/// we can no longer run: the whole node must go down, stop
+/// heartbeating, and let the workflow service's failure detector
 /// re-queue it, paper §4) and returns the error.
 fn execute_task(
     ctx: WorkerCtx<'_>,
     conns: &mut HashMap<usize, Transport>,
     stats: &mut WorkerStats,
     task: &MatchTask,
+    span: Option<TaskSpan>,
 ) -> Result<CompletedTask> {
     let t0 = Instant::now();
-    let intra = task.left == task.right;
+    let same_partition = task.left == task.right;
     let fetched = (|| {
         let left =
             fetch(ctx.cfg, conns, ctx.selector, ctx.cache, task.left)?;
-        let right = if intra {
+        let right = if same_partition {
             left.clone()
         } else {
             fetch(ctx.cfg, conns, ctx.selector, ctx.cache, task.right)?
@@ -414,8 +435,38 @@ fn execute_task(
             )));
         }
     };
+    let (left, right, intra) = match span {
+        None => (left, right, same_partition),
+        Some(s) => {
+            let l = Arc::new(
+                left.slice(s.left.0 as usize, s.left.1 as usize),
+            );
+            if same_partition && s.left == s.right {
+                // diagonal sub-task: unordered pairs within the range
+                (l.clone(), l, true)
+            } else {
+                // off-diagonal rectangle (two ranges of one partition,
+                // or ranges of two): compared as a cross task
+                let r = Arc::new(
+                    right.slice(s.right.0 as usize, s.right.1 as usize),
+                );
+                (l, r, false)
+            }
+        }
+    };
     let found = ctx.executor.execute(&left, &right, intra);
-    let n_cmp = task_comparisons(task, left.len(), right.len());
+    let n_cmp = if span.is_some() {
+        // span-sliced counts: the sliced lengths, with the triangle
+        // formula only for the diagonal sub-task
+        if intra {
+            let n = left.len() as u64;
+            n * n.saturating_sub(1) / 2
+        } else {
+            left.len() as u64 * right.len() as u64
+        }
+    } else {
+        task_comparisons(task, left.len(), right.len())
+    };
     stats.busy_ns += t0.elapsed().as_nanos() as u64;
     stats.completed += 1;
     stats.comparisons += n_cmp;
@@ -463,7 +514,11 @@ fn worker_loop(ctx: WorkerCtx<'_>) -> Result<WorkerStats> {
             }
         };
         match reply {
-            Message::TaskAssign { task, mem_bytes } => {
+            Message::TaskAssign {
+                task,
+                mem_bytes,
+                span,
+            } => {
                 if simulated_crash_tripped(ctx) {
                     break; // the in-flight task is abandoned, re-queued
                 }
@@ -478,8 +533,9 @@ fn worker_loop(ctx: WorkerCtx<'_>) -> Result<WorkerStats> {
                     };
                     continue;
                 }
-                let report =
-                    execute_task(ctx, &mut conns, &mut stats, &task)?;
+                let report = execute_task(
+                    ctx, &mut conns, &mut stats, &task, span,
+                )?;
                 outgoing = Message::Complete {
                     service,
                     task_id: report.task_id,
@@ -521,7 +577,8 @@ fn worker_loop_batched(
         Transport::connect(cfg.workflow_addr.as_str(), cfg.io_timeout)?;
     let mut conns: HashMap<usize, Transport> = HashMap::new();
     let mut stats = WorkerStats::default();
-    let mut queue: VecDeque<MatchTask> = VecDeque::new();
+    let mut queue: VecDeque<(MatchTask, Option<TaskSpan>)> =
+        VecDeque::new();
     let mut completed: Vec<CompletedTask> = Vec::new();
     let max = cfg.batch.max(1) as u32;
     loop {
@@ -550,7 +607,7 @@ fn worker_loop_batched(
                     // §3.1 budget check per assignment; oversize ones
                     // are handed back one frame each, and the replies
                     // may carry replacement assignments (checked too)
-                    let mut accepted: Vec<MatchTask> =
+                    let mut accepted: Vec<(MatchTask, Option<TaskSpan>)> =
                         Vec::with_capacity(tasks.len());
                     let mut rejections: VecDeque<u32> = VecDeque::new();
                     for a in tasks {
@@ -558,7 +615,7 @@ fn worker_loop_batched(
                             stats.rejected += 1;
                             rejections.push_back(a.task.id);
                         } else {
-                            accepted.push(a.task);
+                            accepted.push((a.task, a.span));
                         }
                     }
                     let mut lost = false;
@@ -573,12 +630,16 @@ fn worker_loop_batched(
                             }
                         };
                         match reply {
-                            Message::TaskAssign { task, mem_bytes } => {
+                            Message::TaskAssign {
+                                task,
+                                mem_bytes,
+                                span,
+                            } => {
                                 if oversize(cfg, mem_bytes) {
                                     stats.rejected += 1;
                                     rejections.push_back(task.id);
                                 } else {
-                                    accepted.push(task);
+                                    accepted.push((task, span));
                                 }
                             }
                             Message::NoTask { .. } => {}
@@ -614,7 +675,7 @@ fn worker_loop_batched(
                     // warm the cache for everything beyond the first
                     // task while we execute it (send errors just mean
                     // the prefetcher is off — cache disabled)
-                    for t in accepted.iter().skip(1) {
+                    for (t, _) in accepted.iter().skip(1) {
                         for p in t.needed_partitions() {
                             let _ = prefetch.send(p);
                         }
@@ -635,13 +696,15 @@ fn worker_loop_batched(
             }
             continue;
         }
-        let task = queue.pop_front().expect("queue checked non-empty");
+        let (task, span) =
+            queue.pop_front().expect("queue checked non-empty");
         if simulated_crash_tripped(ctx) {
             // the whole queued batch and the unsent completion reports
             // are abandoned; the failure detector re-queues every one
             break;
         }
-        let report = execute_task(ctx, &mut conns, &mut stats, &task)?;
+        let report =
+            execute_task(ctx, &mut conns, &mut stats, &task, span)?;
         completed.push(report);
     }
     Ok(stats)

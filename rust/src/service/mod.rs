@@ -51,7 +51,8 @@ pub use data::DataServiceServer;
 pub use match_node::{run_match_node, MatchNodeConfig, NodeReport};
 pub use replica::{announce_replica, ReplicaSelector};
 pub use workflow::{
-    WorkflowReport, WorkflowServerConfig, WorkflowServiceServer,
+    WaitStatus, WorkflowReport, WorkflowServerConfig,
+    WorkflowServiceServer,
 };
 
 /// Convenience: a match-service node handle (config + entry point) —

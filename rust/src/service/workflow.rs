@@ -36,8 +36,20 @@
 //! [`ServiceId`]), and [`Scheduler::try_report_complete`]'s generation
 //! check drops its stragglers — a resurrected zombie can no longer
 //! double-complete a re-queued task.
+//!
+//! Since protocol v5 the server also drives **runtime task
+//! splitting**: joins report each node's §3.1 budget, `TaskRejected`
+//! feeds [`Scheduler::reject_task`], and once every live node has
+//! rejected a task the scheduler reshapes it — subsequent assignments
+//! carry the sub-tasks' pair-space spans, and their completions merge
+//! back into the plan task exactly once.  A task that cannot be split
+//! surfaces the typed [`PlanMisfit`] through
+//! [`WorkflowServiceServer::wait_outcome`] / the final report, so
+//! callers fail fast instead of idling to their run timeout.
 
-use crate::coordinator::scheduler::{Policy, Scheduler, ServiceId};
+use crate::coordinator::scheduler::{
+    PlanMisfit, Policy, Scheduler, ServiceId,
+};
 use crate::model::Correspondence;
 use crate::net::reactor::{Action, ConnId, FrameHandler, Reactor};
 use crate::net::TrafficStats;
@@ -68,6 +80,18 @@ pub struct WorkflowServerConfig {
     /// work that exceeds their budget.  Tasks without an entry are
     /// assigned with footprint 0 (never rejected).
     pub task_mem: HashMap<u32, u64>,
+    /// `(left, right)` partition entity counts per task id (from the
+    /// match plan): the split metadata that lets the scheduler
+    /// reshape a task every live node has rejected (protocol v5
+    /// runtime splitting).  Empty disables splitting — an
+    /// all-rejected task then fails fast with [`PlanMisfit`].
+    pub task_sizes: HashMap<u32, (u32, u32)>,
+    /// Match services expected to join: splitting (and the misfit
+    /// verdict) waits until this many have, so a fast first node
+    /// cannot declare a task unplaceable while its roomier peers are
+    /// still connecting.  The dist engine sets its node count; an
+    /// elastic `pem serve` keeps the default 1.
+    pub expected_services: usize,
 }
 
 impl Default for WorkflowServerConfig {
@@ -76,6 +100,8 @@ impl Default for WorkflowServerConfig {
             policy: Policy::Affinity,
             heartbeat_timeout: Duration::from_secs(2),
             task_mem: HashMap::new(),
+            task_sizes: HashMap::new(),
+            expected_services: 1,
         }
     }
 }
@@ -116,8 +142,6 @@ struct WfShared {
     /// (the reactor thread must not write one stderr line per
     /// rejected task; rejections are counted, not narrated).
     oversize_logged: Mutex<HashSet<usize>>,
-    /// §3.1 memory footprint per task id, attached to assignments.
-    task_mem: HashMap<u32, u64>,
     /// Peers rejected for speaking a different protocol version.
     version_rejections: AtomicU64,
     /// Data-plane replica directory, announcement order, deduplicated.
@@ -141,19 +165,23 @@ impl WfShared {
         }
     }
 
-    /// The §3.1 footprint attached to an assignment of `task_id`.
+    /// The §3.1 footprint attached to an assignment of `task_id`
+    /// (scheduler-owned since runtime splitting: sub-task footprints
+    /// are computed at split time).
     fn mem_of(&self, task_id: u32) -> u64 {
-        self.task_mem.get(&task_id).copied().unwrap_or(0)
+        self.sched.lock().unwrap().mem_of(task_id)
     }
 
     /// Reply to a pull (TaskRequest, Complete or TaskRejected): the
-    /// next assignment with its memory footprint.
+    /// next assignment with its memory footprint and — for a
+    /// runtime-split sub-task — its pair-space span.
     fn next_assignment(&self, service: ServiceId) -> Message {
         let mut sched = self.sched.lock().unwrap();
         match sched.next_task(service) {
             Some(task) => Message::TaskAssign {
                 task,
-                mem_bytes: self.mem_of(task.id),
+                mem_bytes: sched.mem_of(task.id),
+                span: sched.span_of(task.id),
             },
             None => Message::NoTask {
                 done: sched.is_done(),
@@ -208,12 +236,33 @@ pub struct WorkflowReport {
     /// Completion reports dropped as stale (service presumed dead, or
     /// task no longer in flight at that service/generation).
     pub stale_completions: u64,
+    /// Tasks the scheduler split at run time because every live node
+    /// rejected them (protocol v5; sub-task results were merged back
+    /// into their plan task exactly once).
+    pub runtime_splits: u64,
+    /// The terminal §3.1 misfit, when the run failed fast because a
+    /// task was rejected by every live node and could not be split.
+    pub plan_misfit: Option<PlanMisfit>,
     /// Services that ever joined.
     pub services_joined: usize,
     /// Peers rejected at join/announce for a protocol-version mismatch.
     pub version_rejections: u64,
     /// Data-plane replica directory at the end of the run.
     pub data_replicas: Vec<String>,
+}
+
+/// Why [`WorkflowServiceServer::wait_outcome`] returned.
+#[derive(Clone, Debug)]
+pub enum WaitStatus {
+    /// Every task completed.
+    Done,
+    /// The typed fail-fast error: a task was rejected by every live
+    /// node and cannot be split further — the run can never complete
+    /// on this cluster, so the caller should tear down *now* instead
+    /// of burning its timeout.
+    Misfit(PlanMisfit),
+    /// The timeout elapsed with tasks still outstanding.
+    Timeout,
 }
 
 /// A running workflow-service endpoint.
@@ -233,8 +282,11 @@ impl WorkflowServiceServer {
         let listener = TcpListener::bind(bind)?;
         let addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
+        let mut sched = Scheduler::new(tasks, cfg.policy);
+        sched.set_task_meta(cfg.task_mem, cfg.task_sizes);
+        sched.set_min_split_services(cfg.expected_services);
         let shared = Arc::new(WfShared {
-            sched: Mutex::new(Scheduler::new(tasks, cfg.policy)),
+            sched: Mutex::new(sched),
             results: Mutex::new(Vec::new()),
             members: Mutex::new(HashMap::new()),
             next_service: AtomicUsize::new(0),
@@ -248,7 +300,6 @@ impl WorkflowServiceServer {
             stale_completions: AtomicU64::new(0),
             oversize_rejections: AtomicU64::new(0),
             oversize_logged: Mutex::new(HashSet::new()),
-            task_mem: cfg.task_mem,
             version_rejections: AtomicU64::new(0),
             replicas: Mutex::new(Vec::new()),
             shutdown: shutdown.clone(),
@@ -280,18 +331,38 @@ impl WorkflowServiceServer {
     }
 
     /// Block until every task has completed, polling the scheduler.
-    /// Returns `false` on timeout.
+    /// Returns `false` on timeout — or immediately when the scheduler
+    /// declares the terminal §3.1 misfit (use [`Self::wait_outcome`]
+    /// to distinguish the two).
     pub fn wait_done(&self, timeout: Duration) -> bool {
+        matches!(self.wait_outcome(timeout), WaitStatus::Done)
+    }
+
+    /// Like [`Self::wait_done`] but tells the caller *why* the wait
+    /// ended: completion, the typed fail-fast misfit, or the timeout.
+    pub fn wait_outcome(&self, timeout: Duration) -> WaitStatus {
         let deadline = Instant::now() + timeout;
         loop {
-            if self.shared.sched.lock().unwrap().is_done() {
-                return true;
+            {
+                let sched = self.shared.sched.lock().unwrap();
+                if sched.is_done() {
+                    return WaitStatus::Done;
+                }
+                if let Some(m) = sched.misfit() {
+                    return WaitStatus::Misfit(m.clone());
+                }
             }
             if Instant::now() >= deadline {
-                return false;
+                return WaitStatus::Timeout;
             }
             std::thread::sleep(Duration::from_millis(2));
         }
+    }
+
+    /// The terminal §3.1 misfit, once the scheduler has declared one
+    /// (see [`PlanMisfit`]).
+    pub fn misfit(&self) -> Option<PlanMisfit> {
+        self.shared.sched.lock().unwrap().misfit().cloned()
     }
 
     /// Tear the server down without consuming the handle: the reactor
@@ -342,6 +413,14 @@ impl WorkflowServiceServer {
                 .shared
                 .stale_completions
                 .load(Ordering::Relaxed),
+            runtime_splits: sched.runtime_splits(),
+            // a misfit verdict that a late-joining roomy node overtook
+            // (the run completed anyway) is not reported as terminal
+            plan_misfit: if sched.is_done() {
+                None
+            } else {
+                sched.misfit().cloned()
+            },
             services_joined: self.shared.next_service.load(Ordering::Relaxed),
             version_rejections: self
                 .shared
@@ -412,7 +491,28 @@ impl FrameHandler for WfHandler {
             Ok(msg) => msg,
             Err(e) => {
                 // a frame that does not decode means the peer is
-                // corrupt or incompatible: answer once, hang up
+                // corrupt or incompatible: answer once, hang up.  A
+                // handshake frame from another protocol version (its
+                // body layout may differ — e.g. a v4 Join has no
+                // budget field) still carries a readable version
+                // byte, so it gets the spec's clear mismatch error
+                // rather than a generic decode failure.
+                if let Some(peer) =
+                    crate::rpc::foreign_handshake_version(payload)
+                {
+                    self.shared
+                        .version_rejections
+                        .fetch_add(1, Ordering::Relaxed);
+                    out.queue_message(&Message::Error {
+                        message: format!(
+                            "protocol version mismatch: peer speaks \
+                             v{peer}, this coordinator speaks \
+                             v{PROTOCOL_VERSION} — upgrade the older \
+                             side"
+                        ),
+                    });
+                    return Action::Close;
+                }
                 out.queue_message(&Message::Error {
                     message: format!("undecodable frame: {e}"),
                 });
@@ -430,7 +530,11 @@ impl FrameHandler for WfHandler {
 /// Process one control-plane message and build its reply.
 fn handle_message(shared: &WfShared, msg: Message) -> Message {
     match msg {
-        Message::Join { name, version } => {
+        Message::Join {
+            name,
+            version,
+            mem_budget,
+        } => {
             if version != PROTOCOL_VERSION {
                 shared
                     .version_rejections
@@ -453,7 +557,16 @@ fn handle_message(shared: &WfShared, msg: Message) -> Message {
                         last_seen: Instant::now(),
                     },
                 );
-                shared.sched.lock().unwrap().add_service(ServiceId(id));
+                {
+                    // the budget reported at join (v5) sizes the
+                    // sub-tasks of runtime splitting; 0 = unlimited
+                    let mut sched = shared.sched.lock().unwrap();
+                    sched.add_service(ServiceId(id));
+                    sched.set_service_budget(
+                        ServiceId(id),
+                        (mem_budget > 0).then_some(mem_budget),
+                    );
+                }
                 Message::JoinAck {
                     service: ServiceId(id),
                     version: PROTOCOL_VERSION,
@@ -580,16 +693,17 @@ fn handle_message(shared: &WfShared, msg: Message) -> Message {
                 let mut sched = shared.sched.lock().unwrap();
                 report_batch(shared, &mut sched, service, cached, completed);
                 let k = (max as usize).clamp(1, MAX_ASSIGN_BATCH);
-                let tasks = sched.next_tasks_for(service, k);
+                let tasks: Vec<AssignedTask> = sched
+                    .next_tasks_for(service, k)
+                    .into_iter()
+                    .map(|task| AssignedTask {
+                        mem_bytes: sched.mem_of(task.id),
+                        span: sched.span_of(task.id),
+                        task,
+                    })
+                    .collect();
                 (tasks, sched.is_done())
             };
-            let tasks = tasks
-                .into_iter()
-                .map(|task| {
-                    let mem_bytes = shared.mem_of(task.id);
-                    AssignedTask { task, mem_bytes }
-                })
-                .collect();
             Message::TaskAssignBatch { done, tasks }
         }
         Message::TaskRejected { service, task_id } => {
@@ -697,10 +811,19 @@ mod tests {
     }
 
     fn join(t: &mut Transport, name: &str) -> ServiceId {
+        join_with_budget(t, name, 0)
+    }
+
+    fn join_with_budget(
+        t: &mut Transport,
+        name: &str,
+        mem_budget: u64,
+    ) -> ServiceId {
         match t
             .request(&Message::Join {
                 name: name.into(),
                 version: PROTOCOL_VERSION,
+                mem_budget,
             })
             .unwrap()
         {
@@ -867,6 +990,7 @@ mod tests {
             .request(&Message::Join {
                 name: "time-traveler".into(),
                 version: PROTOCOL_VERSION + 1,
+                mem_budget: 0,
             })
             .unwrap();
         let Message::Error { message } = reply else {
@@ -896,6 +1020,48 @@ mod tests {
         assert_eq!(report.version_rejections, 2);
         assert_eq!(report.services_joined, 1);
         assert!(report.data_replicas.is_empty());
+    }
+
+    /// A *v4-era* `Join` — whose body layout predates the v5 budget
+    /// field and therefore no longer decodes — still gets the spec's
+    /// clear version-mismatch error, not a generic "undecodable
+    /// frame": the version byte right after the tag is salvaged.
+    #[test]
+    fn legacy_join_layout_gets_version_mismatch_not_decode_error() {
+        use std::io::Write;
+        let srv = WorkflowServiceServer::start(
+            vec![task(0, 0, 0)],
+            WorkflowServerConfig::default(),
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        // hand-craft the v4 frame: tag, version byte, name — no budget
+        let mut payload = vec![1u8, PROTOCOL_VERSION - 1];
+        crate::rpc::put_str(&mut payload, "museum-piece");
+        assert!(
+            Message::decode(&payload).is_err(),
+            "premise: the legacy layout must no longer decode"
+        );
+        let mut stream =
+            std::net::TcpStream::connect(srv.addr()).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        let mut wire = (payload.len() as u32).to_le_bytes().to_vec();
+        wire.extend_from_slice(&payload);
+        stream.write_all(&wire).unwrap();
+        let reply = crate::rpc::read_frame(&mut stream).unwrap();
+        let Message::Error { message } = reply else {
+            panic!("expected Error, got {}", reply.kind());
+        };
+        assert!(
+            message.contains("version mismatch"),
+            "unclear rejection: {message}"
+        );
+        assert!(message.contains(&format!("v{}", PROTOCOL_VERSION - 1)));
+        let report = srv.finish();
+        assert_eq!(report.version_rejections, 1);
+        assert_eq!(report.services_joined, 0);
     }
 
     /// Announced replicas accumulate in the directory and are handed to
@@ -933,6 +1099,7 @@ mod tests {
             .request(&Message::Join {
                 name: "late-joiner".into(),
                 version: PROTOCOL_VERSION,
+                mem_budget: 0,
             })
             .unwrap();
         let Message::JoinAck { replicas, .. } = reply else {
@@ -965,7 +1132,9 @@ mod tests {
         .unwrap();
         let mut a = client(srv.addr());
         let svc_a = join(&mut a, "small-node");
-        let Message::TaskAssign { task: t, mem_bytes } = a
+        let Message::TaskAssign {
+            task: t, mem_bytes, ..
+        } = a
             .request(&Message::TaskRequest { service: svc_a })
             .unwrap()
         else {
@@ -980,7 +1149,12 @@ mod tests {
                 task_id: t.id,
             })
             .unwrap();
-        let Message::TaskAssign { task: t1, mem_bytes } = reply else {
+        let Message::TaskAssign {
+            task: t1,
+            mem_bytes,
+            ..
+        } = reply
+        else {
             panic!("expected follow-up assignment");
         };
         assert_eq!(t1.id, 1);
@@ -1003,7 +1177,9 @@ mod tests {
         // a second node receives the re-queued task and completes it
         let mut b = client(srv.addr());
         let svc_b = join(&mut b, "big-node");
-        let Message::TaskAssign { task: re, mem_bytes } = b
+        let Message::TaskAssign {
+            task: re, mem_bytes, ..
+        } = b
             .request(&Message::TaskRequest { service: svc_b })
             .unwrap()
         else {
@@ -1029,6 +1205,194 @@ mod tests {
         assert_eq!(report.stale_completions, 0);
     }
 
+    /// The tentpole over the wire: a task every joined node has
+    /// rejected comes back *reshaped* — split into spanned sub-tasks
+    /// sized to the smallest reported budget — and completing all
+    /// sub-tasks counts the plan task as completed exactly once.
+    #[test]
+    fn all_nodes_rejecting_splits_task_into_spanned_subtasks() {
+        // one intra task over a 20-entity partition at 20 B per pair
+        let srv = WorkflowServiceServer::start(
+            vec![task(0, 5, 5)],
+            WorkflowServerConfig {
+                policy: Policy::Fifo,
+                task_mem: [(0u32, 20u64 * 20 * 20)]
+                    .into_iter()
+                    .collect(),
+                task_sizes: [(0u32, (20u32, 20u32))]
+                    .into_iter()
+                    .collect(),
+                ..WorkflowServerConfig::default()
+            },
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let budget = 20u64 * 10 * 10; // half the entities fit
+        let mut a = client(srv.addr());
+        let svc_a = join_with_budget(&mut a, "small-a", budget);
+        let mut b = client(srv.addr());
+        let svc_b = join_with_budget(&mut b, "small-b", budget);
+
+        // both nodes reject the plan task
+        let Message::TaskAssign { task: t, span, .. } = a
+            .request(&Message::TaskRequest { service: svc_a })
+            .unwrap()
+        else {
+            panic!("expected assignment");
+        };
+        assert_eq!(t.id, 0);
+        assert_eq!(span, None, "plan tasks carry no span");
+        let reply = a
+            .request(&Message::TaskRejected {
+                service: svc_a,
+                task_id: t.id,
+            })
+            .unwrap();
+        assert!(
+            matches!(reply, Message::NoTask { done: false }),
+            "sole rejector sees nothing until another node weighs in"
+        );
+        let Message::TaskAssign { task: t, .. } = b
+            .request(&Message::TaskRequest { service: svc_b })
+            .unwrap()
+        else {
+            panic!("expected assignment at node b");
+        };
+        assert_eq!(t.id, 0);
+        // b's rejection completes the all-rejected condition; the
+        // reply already carries the first sub-task
+        let reply = b
+            .request(&Message::TaskRejected {
+                service: svc_b,
+                task_id: t.id,
+            })
+            .unwrap();
+        let Message::TaskAssign {
+            task: first,
+            mem_bytes,
+            span,
+        } = reply
+        else {
+            panic!("expected a sub-task, got {}", reply.kind());
+        };
+        assert!(first.id >= 1, "sub-task ids sit above the plan's");
+        assert!(mem_bytes <= budget, "sub-task fits the budget");
+        let mut spans = vec![span.expect("sub-tasks carry spans")];
+        let complete = |t: &mut Transport,
+                        svc: ServiceId,
+                        task_id: u32|
+         -> Message {
+            t.request(&Message::Complete {
+                service: svc,
+                task_id,
+                comparisons: 1,
+                cached: vec![],
+                matches: vec![],
+            })
+            .unwrap()
+        };
+        // 2 chunks of 10 → 2 triangles + 1 rectangle; both nodes share
+        // the drain
+        let mut outstanding = first.id;
+        loop {
+            match complete(&mut b, svc_b, outstanding) {
+                Message::TaskAssign {
+                    task,
+                    mem_bytes,
+                    span,
+                } => {
+                    assert!(mem_bytes <= budget);
+                    spans.push(span.expect("sub-tasks carry spans"));
+                    outstanding = task.id;
+                }
+                Message::NoTask { done } => {
+                    assert!(done, "all sub-tasks drained");
+                    break;
+                }
+                other => panic!("unexpected {}", other.kind()),
+            }
+        }
+        assert_eq!(spans.len(), 3, "2 triangles + 1 rectangle");
+        assert!(spans.contains(&crate::partition::TaskSpan {
+            left: (0, 10),
+            right: (0, 10),
+        }));
+        assert!(spans.contains(&crate::partition::TaskSpan {
+            left: (10, 20),
+            right: (10, 20),
+        }));
+        assert!(spans.contains(&crate::partition::TaskSpan {
+            left: (0, 10),
+            right: (10, 20),
+        }));
+        assert!(srv.wait_done(Duration::from_secs(1)));
+        let report = srv.finish();
+        assert_eq!(report.completed_tasks, 1, "plan task merged once");
+        assert_eq!(report.total_tasks, 1);
+        assert_eq!(report.runtime_splits, 1);
+        assert_eq!(report.oversize_rejections, 2);
+        assert!(report.plan_misfit.is_none());
+    }
+
+    /// The fail-fast satellite: when every node has rejected a task
+    /// that cannot be split (no metadata at all here), the server
+    /// reports the typed misfit immediately — `wait_outcome` returns
+    /// within milliseconds, not at the run timeout.
+    #[test]
+    fn unsplittable_rejection_fails_fast_with_typed_misfit() {
+        let srv = WorkflowServiceServer::start(
+            vec![task(0, 0, 1)],
+            WorkflowServerConfig {
+                policy: Policy::Fifo,
+                task_mem: [(0u32, 1_000_000u64)].into_iter().collect(),
+                ..WorkflowServerConfig::default()
+            },
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let mut a = client(srv.addr());
+        let svc_a = join_with_budget(&mut a, "tiny-a", 10);
+        let mut b = client(srv.addr());
+        let svc_b = join_with_budget(&mut b, "tiny-b", 10);
+        for (t, svc) in [(&mut a, svc_a), (&mut b, svc_b)] {
+            let Message::TaskAssign { task, .. } = t
+                .request(&Message::TaskRequest { service: svc })
+                .unwrap()
+            else {
+                panic!("expected assignment");
+            };
+            let _ = t
+                .request(&Message::TaskRejected {
+                    service: svc,
+                    task_id: task.id,
+                })
+                .unwrap();
+        }
+        let started = Instant::now();
+        let status = srv.wait_outcome(Duration::from_secs(30));
+        assert!(
+            started.elapsed() < Duration::from_secs(5),
+            "misfit must not burn the timeout"
+        );
+        let WaitStatus::Misfit(misfit) = status else {
+            panic!("expected the typed misfit, got {status:?}");
+        };
+        assert_eq!(misfit.task_id, 0);
+        assert_eq!(misfit.mem_bytes, 1_000_000);
+        assert_eq!(misfit.smallest_budget, 10);
+        assert!(srv.misfit().is_some());
+        // a node polling after the verdict is not crashed out — the
+        // engine tears the run down, the protocol stays well-formed
+        let reply = a
+            .request(&Message::TaskRequest { service: svc_a })
+            .unwrap();
+        assert!(matches!(reply, Message::NoTask { done: false }));
+        let report = srv.finish();
+        assert_eq!(report.completed_tasks, 0);
+        assert!(report.plan_misfit.is_some());
+        assert_eq!(report.runtime_splits, 0);
+    }
+
     /// A service that misses heartbeats is failed and fenced: its
     /// in-flight task is re-queued for others, and everything it sends
     /// afterwards — completions included — is refused with an `Error`
@@ -1041,6 +1405,7 @@ mod tests {
             WorkflowServerConfig {
                 policy: Policy::Fifo,
                 heartbeat_timeout: Duration::from_millis(80),
+                ..WorkflowServerConfig::default()
             },
             "127.0.0.1:0",
         )

@@ -31,6 +31,30 @@ impl PartitionData {
         self.entities.is_empty()
     }
 
+    /// The sub-range `[start, end)` of this payload as an owned
+    /// partition — what a match node executes for a runtime-split
+    /// sub-task ([`crate::partition::TaskSpan`]): the full partition
+    /// is fetched (and cached) once, then sliced down to the assigned
+    /// entity range.  Bounds are clamped to the payload, so a
+    /// malformed span yields an empty slice instead of a panic;
+    /// `approx_bytes` is scaled by the kept fraction.
+    pub fn slice(&self, start: usize, end: usize) -> PartitionData {
+        let end = end.min(self.entities.len());
+        let start = start.min(end);
+        let approx_bytes = if self.entities.is_empty() {
+            0
+        } else {
+            self.approx_bytes * (end - start) as u64
+                / self.entities.len() as u64
+        };
+        PartitionData {
+            id: self.id,
+            entities: self.entities[start..end].to_vec(),
+            features: self.features[start..end].to_vec(),
+            approx_bytes,
+        }
+    }
+
     /// Assemble the padded title/description feature matrices for the
     /// accelerated path (`f32[capacity, dim]`, zero-padded).
     pub fn feature_matrices(&self, capacity: usize, dim: usize) -> (FeatureMatrix, FeatureMatrix) {
@@ -212,6 +236,24 @@ mod tests {
         assert_eq!(t.rows, p.len());
         assert_eq!(t.dim, DEFAULT_DIM);
         assert_eq!(desc.data.len(), 128 * DEFAULT_DIM);
+    }
+
+    #[test]
+    fn slice_selects_range_and_clamps_bounds() {
+        let (data, ps) = setup();
+        let store = DataService::build(&data.dataset, &ps);
+        let p = ps.iter().next().unwrap();
+        let d = store.fetch(p.id);
+        let s = d.slice(10, 40);
+        assert_eq!(s.len(), 30);
+        assert_eq!(s.entities, d.entities[10..40]);
+        assert_eq!(s.features.len(), 30);
+        assert_eq!(s.id, d.id);
+        assert!(s.approx_bytes > 0 && s.approx_bytes < d.approx_bytes);
+        // malformed bounds clamp to empty instead of panicking
+        assert!(d.slice(500, 900).is_empty());
+        assert!(d.slice(40, 10).is_empty());
+        assert_eq!(d.slice(0, d.len()).entities, d.entities);
     }
 
     #[test]

@@ -715,6 +715,237 @@ fn builder_sorted_neighborhood_on_dist_matches_threads() {
     assert!(q.recall > 0.4, "sn recall {}", q.recall);
 }
 
+/// The tentpole acceptance test: a **3-node cluster whose every node
+/// rejects every plan task** (one shared §3.1 budget below all of
+/// them) completes via scheduler-level task splitting — with the
+/// control plane routed through a [`ChaosTransport`] so mid-run
+/// `TaskRejected` frames arrive re-chunked and stalled — and the
+/// merged result is identical to the thread engine: no sub-task lost,
+/// none double-merged.
+#[test]
+fn dist_runtime_splitting_under_chaos_matches_thread_engine() {
+    let data = GeneratorConfig::tiny()
+        .with_entities(600)
+        .with_seed(42)
+        .generate();
+    let ids: Vec<EntityId> =
+        data.dataset.entities.iter().map(|e| e.id).collect();
+    let parts = partition_size_based(&ids, 60);
+    let tasks = generate_tasks(&parts);
+    let n_tasks = tasks.len();
+    let store = Arc::new(DataService::build(&data.dataset, &parts));
+
+    // reference result from the thread engine (no budgets there)
+    let exec = RustExecutor::new(MatchStrategy::new(StrategyKind::Wam));
+    let reference = pem::engine::threads::run(
+        &ComputingEnv::new(1, 2, GIB),
+        &parts,
+        tasks.clone(),
+        &store,
+        &exec,
+        pem::engine::threads::ThreadConfig::default(),
+    );
+
+    // §3.1 plan metadata, exactly as a MatchPlan would carry it
+    let task_mem: std::collections::HashMap<u32, u64> = tasks
+        .iter()
+        .map(|t| {
+            (
+                t.id,
+                pem::partition::task_memory_bytes(
+                    parts.get(t.left).len(),
+                    parts.get(t.right).len(),
+                    StrategyKind::Wam,
+                ),
+            )
+        })
+        .collect();
+    let task_sizes: std::collections::HashMap<u32, (u32, u32)> = tasks
+        .iter()
+        .map(|t| {
+            (
+                t.id,
+                (
+                    parts.get(t.left).len() as u32,
+                    parts.get(t.right).len() as u32,
+                ),
+            )
+        })
+        .collect();
+    // below every full task (≥ 20 B · ~60·59/2) but far above one
+    // pair: every node must reject every plan task, and splitting
+    // must carry the whole run
+    let budget = 20_000u64;
+    assert!(task_mem.values().all(|&m| m > budget), "test premise");
+
+    let primary =
+        DataServiceServer::start(store.clone(), "127.0.0.1:0").unwrap();
+    let wf_srv = WorkflowServiceServer::start(
+        tasks,
+        WorkflowServerConfig {
+            policy: Policy::Affinity,
+            heartbeat_timeout: Duration::from_secs(3),
+            task_mem,
+            task_sizes,
+            expected_services: 3,
+        },
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let wf_addr = wf_srv.addr().to_string();
+    announce_replica(
+        &wf_addr,
+        &primary.addr().to_string(),
+        &primary.partition_ids(),
+        Duration::from_secs(5),
+    )
+    .unwrap();
+
+    // chaos on the control plane: rejections, spanned assignments and
+    // sub-task completions all cross a byte-mangling forwarder
+    let chaos_wf = ChaosTransport::start(
+        wf_addr,
+        0x5117_C0DE,
+        ChaosConfig {
+            stall_one_in: 64,
+            disconnect_after: None,
+        },
+    );
+
+    let node_handles: Vec<_> = (0..3)
+        .map(|i| {
+            let mut cfg = MatchNodeConfig::new(
+                chaos_wf.to_string(),
+                primary.addr().to_string(),
+            );
+            cfg.name = format!("split-node-{i}");
+            cfg.threads = 2;
+            cfg.cache_capacity = 4;
+            // node 2 keeps the classic per-task pull so both the
+            // TaskAssign and the TaskAssignBatch span paths run
+            cfg.batch = if i == 2 { 1 } else { 2 };
+            cfg.task_memory_budget = Some(budget);
+            let exec: Arc<dyn TaskExecutor> = Arc::new(RustExecutor::new(
+                MatchStrategy::new(StrategyKind::Wam),
+            ));
+            std::thread::spawn(move || run_match_node(&cfg, exec))
+        })
+        .collect();
+
+    assert!(
+        wf_srv.wait_done(Duration::from_secs(120)),
+        "splitting run did not complete: misfit = {:?}",
+        wf_srv.misfit()
+    );
+    let mut reports = Vec::new();
+    for h in node_handles {
+        reports.push(h.join().expect("node thread").expect("node report"));
+    }
+    let report = wf_srv.finish();
+    primary.shutdown();
+
+    // every plan task was rejected by all 3 nodes, then split —
+    // and still completed exactly once
+    assert_eq!(report.completed_tasks, n_tasks, "no task lost");
+    assert_eq!(report.total_tasks, n_tasks);
+    assert!(report.plan_misfit.is_none());
+    assert!(
+        report.runtime_splits >= n_tasks as u64,
+        "{} splits for {} tasks — every plan task must have split",
+        report.runtime_splits,
+        n_tasks
+    );
+    assert!(
+        report.oversize_rejections >= 3 * n_tasks as u64,
+        "every node must have rejected every plan task"
+    );
+    let rejected: u64 =
+        reports.iter().map(|r| r.tasks_rejected).sum();
+    assert_eq!(rejected, report.oversize_rejections);
+    for r in &reports {
+        assert!(!r.crashed);
+        assert!(
+            r.tasks_completed > 0,
+            "every node executes sub-tasks: {reports:?}"
+        );
+    }
+
+    // exact pair-space tiling: the comparison total is bit-identical
+    // to the unsplit thread run…
+    assert_eq!(report.comparisons, reference.metrics.comparisons);
+    assert_eq!(report.comparisons, 600 * 599 / 2);
+    // …and so is the merged match result
+    assert_eq!(
+        norm_pairs(&report.correspondences),
+        norm_pairs(&reference.correspondences),
+        "runtime splitting altered the merged result"
+    );
+}
+
+/// The fail-fast satellite: two tiny-budget nodes (a single pair
+/// already exceeds the budget, so splitting cannot help) make the
+/// dist engine fail **immediately** with the typed `PlanMisfit` —
+/// never idling until the run timeout.
+#[test]
+fn dist_unsplittable_plan_fails_fast_with_typed_error() {
+    use pem::coordinator::PlanMisfit;
+    let data = GeneratorConfig::tiny()
+        .with_entities(120)
+        .with_seed(3)
+        .generate();
+    let ids: Vec<EntityId> =
+        data.dataset.entities.iter().map(|e| e.id).collect();
+    let parts = partition_size_based(&ids, 40);
+    let tasks = generate_tasks(&parts);
+    let task_mem: Vec<u64> = tasks
+        .iter()
+        .map(|t| {
+            pem::partition::task_memory_bytes(
+                parts.get(t.left).len(),
+                parts.get(t.right).len(),
+                StrategyKind::Wam,
+            )
+        })
+        .collect();
+    let store = Arc::new(DataService::build(&data.dataset, &parts));
+    let exec: Arc<dyn TaskExecutor> =
+        Arc::new(RustExecutor::new(MatchStrategy::new(StrategyKind::Wam)));
+
+    let started = Instant::now();
+    let err = match dist::run(
+        &ComputingEnv::new(2, 1, GIB),
+        &parts,
+        tasks,
+        store,
+        exec,
+        dist::DistConfig {
+            task_mem,
+            // 10 B is below even one pair's 20 B footprint
+            memory_budget: Some(10),
+            run_timeout: Duration::from_secs(60),
+            ..dist::DistConfig::default()
+        },
+    ) {
+        Ok(_) => panic!("an unsplittable plan must not succeed"),
+        Err(e) => e,
+    };
+    let elapsed = started.elapsed();
+
+    // fail fast: nowhere near the 60 s run timeout
+    assert!(
+        elapsed < Duration::from_secs(30),
+        "fail-fast took {elapsed:?}"
+    );
+    // and typed: the chain carries the §3.1 misfit with its numbers
+    let misfit = err
+        .chain()
+        .find_map(|e| e.downcast_ref::<PlanMisfit>())
+        .unwrap_or_else(|| panic!("no PlanMisfit in chain: {err:#}"));
+    assert_eq!(misfit.smallest_budget, 10);
+    assert!(misfit.mem_bytes > 10);
+    assert!(err.to_string().contains("failed fast"));
+}
+
 /// The pull protocol balances load: with two equal nodes and plenty of
 /// tasks, both make progress (no node starves behind the wire).
 #[test]
