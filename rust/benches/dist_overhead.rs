@@ -40,6 +40,7 @@ fn main() {
         parts.len(),
         generate_tasks(&parts).len()
     );
+    let mut snap = Vec::new();
     println!("engine    nodes  time         hr     data plane      ctl msgs");
 
     for nodes in [1usize, 2, 4] {
@@ -59,8 +60,13 @@ fn main() {
             threads::ThreadConfig {
                 cache_capacity: 8,
                 policy: pem::coordinator::Policy::Affinity,
+                tracer: None,
             },
         );
+        snap.push(pem::bench::point(
+            format!("threads/nodes={nodes}"),
+            t.metrics.makespan_ns,
+        ));
         println!(
             "threads   {:>5}  {:>11}  {:>4.0}%  {:>14}  {:>8}",
             nodes,
@@ -86,6 +92,10 @@ fn main() {
             },
         )
         .expect("distributed run");
+        snap.push(pem::bench::point(
+            format!("dist/nodes={nodes}"),
+            d.metrics.makespan_ns,
+        ));
         println!(
             "dist      {:>5}  {:>11}  {:>4.0}%  {:>14}  {:>8}",
             nodes,
@@ -138,6 +148,10 @@ fn main() {
             },
         )
         .expect("replicated distributed run");
+        snap.push(pem::bench::point(
+            format!("dist/replicas={replicas}"),
+            d.metrics.makespan_ns,
+        ));
         let secs = d.metrics.makespan_ns as f64 / 1e9;
         let mibps = if secs > 0.0 {
             d.data_wire_bytes as f64 / (1024.0 * 1024.0) / secs
@@ -197,6 +211,10 @@ fn main() {
             },
         )
         .expect("batched distributed run");
+        snap.push(pem::bench::point(
+            format!("dist/batch={k}"),
+            d.metrics.makespan_ns,
+        ));
         let wf = &d.workflow;
         // task-coordination frames: everything except liveness
         let coordination =
@@ -257,6 +275,13 @@ fn main() {
             pulled += 1;
         }
         let el = t0.elapsed().as_nanos() as u64;
+        snap.push(pem::bench::point(
+            format!(
+                "scheduler_drain/oversize_map={}",
+                if poison { "populated" } else { "empty" }
+            ),
+            el,
+        ));
         println!(
             "{:>11}  {:>11}  {:>7.0} ns",
             if poison { "1 entry" } else { "empty" },
@@ -270,4 +295,6 @@ fn main() {
          pull; the delta between the rows is what the normal-case \
          fast path avoids)"
     );
+    pem::bench::write_json_snapshot("dist_overhead", &snap)
+        .expect("bench snapshot");
 }

@@ -22,6 +22,7 @@ fn main() {
     let data = common::small_problem();
     let m = common::scaled(500);
     let (cost_wam, cost_lrm) = common::calibrated(&data);
+    let mut snap = Vec::new();
 
     for kind in [StrategyKind::Wam, StrategyKind::Lrm] {
         let mut cfg = WorkflowConfig::size_based(kind).with_cost(
@@ -37,6 +38,10 @@ fn main() {
             common::apply_net(&mut cfg);
             let out = run_workflow(&data, &cfg, &ce).expect("workflow");
             times.push(out.metrics.makespan_ns);
+            snap.push(pem::bench::point(
+                format!("{}/threads={threads}", kind.name()),
+                out.metrics.makespan_ns,
+            ));
             let s = speedups(&times);
             println!(
                 "{:>7}  {:>12}  {:>7.2}",
@@ -52,4 +57,6 @@ fn main() {
             s[3], s[7]
         );
     }
+    pem::bench::write_json_snapshot("fig5_threads", &snap)
+        .expect("bench snapshot");
 }

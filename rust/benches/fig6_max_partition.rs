@@ -32,6 +32,7 @@ fn main() {
         .collect();
 
     let (cost_wam, cost_lrm) = common::calibrated(&data);
+    let mut snap = Vec::new();
     for kind in [StrategyKind::Wam, StrategyKind::Lrm] {
         println!("strategy {}", kind.name());
         println!("m        time          tasks   peak-mem(model)");
@@ -50,6 +51,10 @@ fn main() {
             let peak = planned.plan().skew().max_task_mem
                 * ce.threads_per_node as u64;
             let out = planned.execute().expect("workflow");
+            snap.push(pem::bench::point(
+                format!("{}/m={m}", kind.name()),
+                out.metrics.makespan_ns,
+            ));
             println!(
                 "{:>5}  {:>12}  {:>6}  {:>12}",
                 m,
@@ -60,4 +65,6 @@ fn main() {
         }
         println!();
     }
+    pem::bench::write_json_snapshot("fig6_max_partition", &snap)
+        .expect("bench snapshot");
 }

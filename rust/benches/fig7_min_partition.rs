@@ -29,6 +29,7 @@ fn main() {
         .collect();
 
     let (cost_wam, cost_lrm) = common::calibrated(&data);
+    let mut snap = Vec::new();
     for (kind, max) in
         [(StrategyKind::Wam, 1000), (StrategyKind::Lrm, 500)]
     {
@@ -49,6 +50,10 @@ fn main() {
             };
             common::apply_net(&mut cfg);
             let out = run_workflow(&data, &cfg, &ce).expect("workflow");
+            snap.push(pem::bench::point(
+                format!("{}/min={min}", kind.name()),
+                out.metrics.makespan_ns,
+            ));
             println!(
                 "{:>5}  {:>12}  {:>5}  {:>12}",
                 min,
@@ -59,4 +64,6 @@ fn main() {
         }
         println!();
     }
+    pem::bench::write_json_snapshot("fig7_min_partition", &snap)
+        .expect("bench snapshot");
 }

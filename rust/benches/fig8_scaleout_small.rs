@@ -20,6 +20,7 @@ fn main() {
     let data = common::small_problem();
     let cores_list = [1usize, 2, 4, 8, 12, 16];
     let (cost_wam, cost_lrm) = common::calibrated(&data);
+    let mut snap = Vec::new();
 
     for kind in [StrategyKind::Wam, StrategyKind::Lrm] {
         let cost = if kind == StrategyKind::Wam { cost_wam } else { cost_lrm };
@@ -38,6 +39,10 @@ fn main() {
                 common::apply_net(&mut cfg);
             let out = run_workflow(&data, &cfg, &ce).expect("workflow");
                 times.push(out.metrics.makespan_ns);
+                snap.push(pem::bench::point(
+                    format!("{}/{pname}/cores={cores}", kind.name()),
+                    out.metrics.makespan_ns,
+                ));
                 let s = speedups(&times);
                 println!(
                     "{:>5}  {:>12}  {:>7.2}  {}",
@@ -50,6 +55,8 @@ fn main() {
             println!();
         }
     }
+    pem::bench::write_json_snapshot("fig8_scaleout_small", &snap)
+        .expect("bench snapshot");
 }
 
 fn scale_partitioning(cfg: &mut WorkflowConfig, kind: StrategyKind) {

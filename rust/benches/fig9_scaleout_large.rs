@@ -23,6 +23,7 @@ fn main() {
     let data = common::large_problem();
     let cores_list = [1usize, 2, 4, 8, 12, 16];
     let (cost_wam, cost_lrm) = common::calibrated(&data);
+    let mut snap = Vec::new();
 
     for kind in [StrategyKind::Wam, StrategyKind::Lrm] {
         let mut cfg = WorkflowConfig::blocking_based(kind).with_cost(
@@ -73,6 +74,10 @@ fn main() {
             common::apply_net(&mut cfg);
             let out = run_workflow(&data, &cfg, &ce).expect("workflow");
             times.push(out.metrics.makespan_ns);
+            snap.push(pem::bench::point(
+                format!("{}/cores={cores}", kind.name()),
+                out.metrics.makespan_ns,
+            ));
             let s = speedups(&times);
             println!(
                 "{:>5}  {:>12}  {:>7.2}",
@@ -83,4 +88,6 @@ fn main() {
         }
         println!();
     }
+    pem::bench::write_json_snapshot("fig9_scaleout_large", &snap)
+        .expect("bench snapshot");
 }

@@ -145,4 +145,6 @@ fn main() {
         let out = run_workflow(&data, &cfg, &common::testbed(16)).unwrap();
         std::hint::black_box(out.metrics.makespan_ns);
     });
+
+    b.write_snapshot("micro_hotpath").expect("bench snapshot");
 }

@@ -4,7 +4,13 @@
 //! `cargo bench` targets (`rust/benches/*.rs`, `harness = false`) use
 //! [`Bencher`] for timed kernels and the free functions here to render
 //! the per-figure/table experiment reports.
+//!
+//! When the environment variable `PEM_BENCH_JSON` names a directory,
+//! benches additionally write a schema'd `BENCH_<name>.json` snapshot
+//! there (see [`write_json_snapshot`]) — the machine-readable
+//! trajectory `scripts/bench_snapshot.sh` collects and CI archives.
 
+use crate::obs::registry::json_string;
 use crate::util::stats::Summary;
 use std::time::{Duration, Instant};
 
@@ -117,6 +123,91 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Write everything measured so far as the `bench` snapshot (see
+    /// [`write_json_snapshot`]); a no-op unless `PEM_BENCH_JSON` is
+    /// set.
+    pub fn write_snapshot(&self, bench: &str) -> std::io::Result<()> {
+        write_json_snapshot(bench, &self.results)
+    }
+}
+
+/// Schema identifier written into every bench snapshot file.
+pub const SNAPSHOT_SCHEMA: &str = "pem-bench-snapshot/1";
+
+/// A single-sample [`BenchResult`]: figure benches measure one
+/// makespan per configuration rather than iterating a closure, and
+/// record each as a point.
+pub fn point(name: impl Into<String>, value_ns: u64) -> BenchResult {
+    BenchResult {
+        name: name.into(),
+        samples_ns: vec![value_ns as f64],
+    }
+}
+
+/// Write `BENCH_<bench>.json` into the directory named by the
+/// `PEM_BENCH_JSON` environment variable (created if missing);
+/// returns without writing when the variable is unset.
+///
+/// The file is one JSON object: `schema`, `bench`, `quick` (whether
+/// `PEM_BENCH_QUICK` reduced the workload), `created_unix`,
+/// `provenance` (free-form `PEM_BENCH_PROVENANCE`, default
+/// `"unrecorded"` — committed snapshots must say what hardware
+/// produced them), and `results`, an array of per-measurement summary
+/// stats in nanoseconds.
+pub fn write_json_snapshot(
+    bench: &str,
+    results: &[BenchResult],
+) -> std::io::Result<()> {
+    let Some(dir) = std::env::var_os("PEM_BENCH_JSON") else {
+        return Ok(());
+    };
+    let dir = std::path::PathBuf::from(dir);
+    std::fs::create_dir_all(&dir)?;
+    let quick =
+        std::env::var("PEM_BENCH_QUICK").is_ok_and(|v| v != "0");
+    let provenance = std::env::var("PEM_BENCH_PROVENANCE")
+        .unwrap_or_else(|_| "unrecorded".to_string());
+    let created = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut body = String::with_capacity(256 + results.len() * 160);
+    body.push_str("{\n");
+    body.push_str(&format!(
+        "  \"schema\": {},\n",
+        json_string(SNAPSHOT_SCHEMA)
+    ));
+    body.push_str(&format!("  \"bench\": {},\n", json_string(bench)));
+    body.push_str(&format!("  \"quick\": {quick},\n"));
+    body.push_str(&format!("  \"created_unix\": {created},\n"));
+    body.push_str(&format!(
+        "  \"provenance\": {},\n",
+        json_string(&provenance)
+    ));
+    body.push_str("  \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        let s = r.summary();
+        body.push_str(&format!(
+            "    {{\"name\": {}, \"n\": {}, \"mean_ns\": {:.1}, \
+             \"median_ns\": {:.1}, \"min_ns\": {:.1}, \"max_ns\": \
+             {:.1}, \"mad_ns\": {:.1}, \"stddev_ns\": {:.1}}}{}\n",
+            json_string(&r.name),
+            s.n,
+            s.mean,
+            s.median,
+            s.min,
+            s.max,
+            s.mad,
+            s.stddev,
+            if i + 1 < results.len() { "," } else { "" },
+        ));
+    }
+    body.push_str("  ]\n}\n");
+    let path = dir.join(format!("BENCH_{bench}.json"));
+    std::fs::write(&path, body)?;
+    println!("wrote bench snapshot to {}", path.display());
+    Ok(())
 }
 
 /// Render a report header for a figure/table reproduction bench.
@@ -161,6 +252,25 @@ mod tests {
             std::thread::sleep(Duration::from_micros(10))
         });
         assert!(r.samples_ns.len() <= 3);
+    }
+
+    #[test]
+    fn json_snapshot_written_when_env_set() {
+        let dir = std::env::temp_dir()
+            .join(format!("pem_bench_snap_{}", std::process::id()));
+        std::env::set_var("PEM_BENCH_JSON", &dir);
+        let r = point("cell/a", 1500);
+        write_json_snapshot("unit_test", &[r]).unwrap();
+        std::env::remove_var("PEM_BENCH_JSON");
+        let path = dir.join("BENCH_unit_test.json");
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("\"schema\": \"pem-bench-snapshot/1\""));
+        assert!(body.contains("\"bench\": \"unit_test\""));
+        assert!(body.contains("\"name\": \"cell/a\""));
+        assert!(body.contains("\"median_ns\": 1500.0"));
+        assert!(body.contains("\"provenance\""));
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
     }
 
     #[test]

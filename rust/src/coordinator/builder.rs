@@ -37,8 +37,10 @@ use crate::engine::CostParams;
 use crate::matching::{MatchStrategy, StrategyKind};
 use crate::metrics::RunMetrics;
 use crate::model::{Dataset, MatchResult};
+use crate::obs::Tracer;
 use crate::partition::{BlockingBased, PartitionStrategy};
 use anyhow::{bail, Result};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Outcome of an executed workflow: merged result + run metrics +
@@ -71,6 +73,7 @@ pub struct Workflow<'a> {
     ce: ComputingEnv,
     cache_capacity: usize,
     policy: Policy,
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl<'a> Workflow<'a> {
@@ -87,6 +90,7 @@ impl<'a> Workflow<'a> {
             ce: ComputingEnv::new(1, 4, 3 * crate::util::GIB),
             cache_capacity: 0,
             policy: Policy::Affinity,
+            tracer: None,
         }
     }
 
@@ -156,6 +160,16 @@ impl<'a> Workflow<'a> {
         self
     }
 
+    /// Attach a lifecycle [`Tracer`]: the backend's scheduler and
+    /// workers record every task's `Planned → … → Completed` history
+    /// into it.  Keep the `Arc` — after [`PlannedWorkflow::execute`]
+    /// returns, dump it ([`Tracer::dump_jsonl`]) or replay-verify it
+    /// ([`Tracer::verify_plan`]).  The sim backend ignores tracing.
+    pub fn trace(mut self, tracer: Arc<Tracer>) -> Self {
+        self.tracer = Some(tracer);
+        self
+    }
+
     /// Run the planning half: partitioning + task generation + memory
     /// footprints.  Cheap; no matching happens.
     pub fn plan(self) -> Result<PlannedWorkflow<'a>> {
@@ -173,6 +187,7 @@ impl<'a> Workflow<'a> {
             ce: self.ce,
             cache_capacity: self.cache_capacity,
             policy: self.policy,
+            tracer: self.tracer,
         })
     }
 
@@ -196,6 +211,7 @@ pub struct PlannedWorkflow<'a> {
     ce: ComputingEnv,
     cache_capacity: usize,
     policy: Policy,
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl<'a> PlannedWorkflow<'a> {
@@ -225,6 +241,7 @@ impl<'a> PlannedWorkflow<'a> {
             strategy: self.matching,
             cache_capacity: self.cache_capacity,
             policy: self.policy,
+            tracer: self.tracer.clone(),
         };
         let run = self.backend.execute(&self.plan, &ctx)?;
         let mut result = MatchResult::new();

@@ -57,9 +57,11 @@
 //! be served by a nearby, less-loaded replica (the paper's §5 caching +
 //! affinity strategy, extended across the network).
 
+use crate::obs::{TraceEventKind, Tracer};
 use crate::partition::{MatchTask, PartitionId, TaskSpan};
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::fmt;
+use std::sync::Arc;
 
 /// Identifier of a match service (one per node).
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
@@ -156,6 +158,9 @@ pub struct Scheduler {
     misfit: Option<PlanMisfit>,
     /// partition → number of data replicas announced as holding it.
     replica_coverage: HashMap<PartitionId, u32>,
+    /// Lifecycle tracer ([`crate::obs::trace`]); every scheduling
+    /// decision is recorded when set.
+    tracer: Option<Arc<Tracer>>,
     policy: Policy,
     /// Tasks assigned with at least one affinity (cached-partition) hit.
     pub affinity_assignments: u64,
@@ -190,6 +195,7 @@ impl Scheduler {
             runtime_splits: 0,
             misfit: None,
             replica_coverage: HashMap::new(),
+            tracer: None,
             policy,
             affinity_assignments: 0,
             completed: 0,
@@ -225,6 +231,39 @@ impl Scheduler {
             None => {
                 self.budgets.remove(&service);
             }
+        }
+    }
+
+    /// Attach a lifecycle tracer ([`crate::obs::trace`]): every task
+    /// currently open is recorded as `Planned` + `Queued`, and every
+    /// scheduling decision from here on (assignment, rejection,
+    /// splitting, requeueing, completion merging) emits its event.
+    /// Call right after [`Scheduler::new`], before execution starts.
+    pub fn set_tracer(&mut self, tracer: Arc<Tracer>) {
+        for t in &self.open {
+            tracer.record(t.id, TraceEventKind::Planned, None, None);
+            tracer.record(t.id, TraceEventKind::Queued, None, None);
+        }
+        self.tracer = Some(tracer);
+    }
+
+    /// The attached lifecycle tracer, if any — engines clone it to
+    /// stamp their own node-side events (`PartitionsFetched`,
+    /// `Executed`) into the same ring.
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.as_ref()
+    }
+
+    /// Record `kind` for `task` when a tracer is attached.
+    fn trace(
+        &self,
+        task: u32,
+        kind: TraceEventKind,
+        node: Option<ServiceId>,
+        parent: Option<u32>,
+    ) {
+        if let Some(t) = &self.tracer {
+            t.record(task, kind, node.map(|s| s.0 as u64), parent);
         }
     }
 
@@ -267,6 +306,17 @@ impl Scheduler {
     /// Tasks not yet completed (open + in flight).
     pub fn remaining(&self) -> usize {
         self.open.len() + self.in_flight.len()
+    }
+
+    /// Tasks waiting on the open list, not yet assigned (the queue
+    /// depth `pem stats` reports).
+    pub fn queue_depth(&self) -> usize {
+        self.open.len()
+    }
+
+    /// Tasks currently assigned to a service and not yet reported.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.len()
     }
 
     /// Tasks completed exactly once.
@@ -331,6 +381,12 @@ impl Scheduler {
                     let epoch =
                         self.generation.get(&service).copied().unwrap_or(0);
                     self.in_flight.insert(task.id, (service, epoch, task));
+                    self.trace(
+                        task.id,
+                        TraceEventKind::Assigned,
+                        Some(service),
+                        None,
+                    );
                     return Some(task);
                 }
                 let score = |t: &MatchTask| -> (usize, u32) {
@@ -377,6 +433,7 @@ impl Scheduler {
         let task = self.open.remove(idx).expect("index valid");
         let epoch = self.generation.get(&service).copied().unwrap_or(0);
         self.in_flight.insert(task.id, (service, epoch, task));
+        self.trace(task.id, TraceEventKind::Assigned, Some(service), None);
         Some(task)
     }
 
@@ -413,6 +470,12 @@ impl Scheduler {
         if fresh {
             let (_, _, task) = self.in_flight.remove(&task_id).unwrap();
             self.oversize.entry(task_id).or_default().insert(service);
+            self.trace(
+                task_id,
+                TraceEventKind::Rejected,
+                Some(service),
+                self.split_parent.get(&task_id).copied(),
+            );
             if self.rejected_by_every_live_service(task_id) {
                 self.reshape_unplaceable(task);
             } else {
@@ -569,6 +632,12 @@ impl Scheduler {
         // bookkeeping: children adopt the original plan task's root,
         // so completion accounting merges the whole tree exactly once
         let root = self.split_parent.remove(&task.id).unwrap_or(task.id);
+        self.trace(
+            task.id,
+            TraceEventKind::Split,
+            None,
+            (task.id != root).then_some(root),
+        );
         let n = children.len();
         match self.split_outstanding.get_mut(&root) {
             // splitting a sub-task: it is replaced by its children
@@ -595,6 +664,7 @@ impl Scheduler {
                 left: task.left,
                 right: task.right,
             });
+            self.trace(id, TraceEventKind::Queued, None, Some(root));
         }
         self.runtime_splits += 1;
         true
@@ -735,6 +805,12 @@ impl Scheduler {
                     self.spans.remove(&task_id);
                     self.sizes.remove(&task_id);
                     self.mem.remove(&task_id);
+                    self.trace(
+                        task_id,
+                        TraceEventKind::SpanMerged,
+                        Some(service),
+                        Some(root),
+                    );
                     let outstanding = self
                         .split_outstanding
                         .get_mut(&root)
@@ -743,9 +819,23 @@ impl Scheduler {
                     if *outstanding == 0 {
                         self.split_outstanding.remove(&root);
                         self.completed += 1;
+                        self.trace(
+                            root,
+                            TraceEventKind::Completed,
+                            Some(service),
+                            None,
+                        );
                     }
                 }
-                None => self.completed += 1,
+                None => {
+                    self.completed += 1;
+                    self.trace(
+                        task_id,
+                        TraceEventKind::Completed,
+                        Some(service),
+                        None,
+                    );
+                }
             }
         }
         fresh
@@ -800,6 +890,12 @@ impl Scheduler {
         for id in &failed {
             let (_, _, task) = self.in_flight.remove(id).unwrap();
             self.open.push_front(task);
+            self.trace(
+                *id,
+                TraceEventKind::Requeued,
+                Some(service),
+                self.split_parent.get(id).copied(),
+            );
         }
         self.cache_status.remove(&service);
         self.budgets.remove(&service);
@@ -1511,5 +1607,65 @@ mod tests {
         assert!(s.try_report_complete(ServiceId(1), t1.id, vec![]));
         assert!(s.is_done());
         assert_eq!(s.completed(), 2);
+    }
+
+    /// The tracer hooks: a run with rejection-driven runtime
+    /// splitting, a node failure with requeueing, and straggler
+    /// duplicates leaves a trace the exactly-once verifier certifies.
+    #[test]
+    fn tracer_records_verifiable_lifecycle() {
+        let mut s = Scheduler::new(
+            vec![task(0, 7, 7), task(1, 1, 2)],
+            Policy::Fifo,
+        );
+        // §3.1 metadata so task 0 (30×30 intra) can be runtime-split
+        s.set_task_meta(
+            [(0u32, 20u64 * 30 * 30)].into_iter().collect(),
+            [(0u32, (30u32, 30u32))].into_iter().collect(),
+        );
+        let tracer = Tracer::new(1 << 12);
+        s.set_tracer(tracer.clone());
+        for id in 0..2 {
+            s.add_service(ServiceId(id));
+            s.set_service_budget(ServiceId(id), Some(20 * 15 * 15));
+        }
+        // both services reject task 0 → split into 3 sub-tasks
+        let t = s.next_task(ServiceId(0)).unwrap();
+        assert_eq!(t.id, 0);
+        assert!(s.reject_task(ServiceId(0), t.id));
+        let held = s.next_task(ServiceId(1)).unwrap();
+        assert_eq!(held.id, 1);
+        let t = s.next_task(ServiceId(1)).unwrap();
+        assert_eq!(t.id, 0);
+        assert!(s.reject_task(ServiceId(1), t.id));
+        assert_eq!(s.runtime_splits(), 1);
+        // service 1 completes its plan task, pulls a sub-task, dies
+        assert!(s.try_report_complete(ServiceId(1), held.id, vec![]));
+        let lost = s.next_task(ServiceId(1)).unwrap();
+        assert_eq!(s.fail_service(ServiceId(1)), 1);
+        // its straggler duplicate is dropped — and not traced
+        assert!(!s.try_report_complete(ServiceId(1), lost.id, vec![]));
+        // service 0 drains the sub-tasks; the root completes once
+        while let Some(t) = s.next_task(ServiceId(0)) {
+            assert!(s.try_report_complete(ServiceId(0), t.id, vec![]));
+        }
+        assert!(s.is_done());
+        let summary = tracer.verify_plan(&[0, 1]).expect("trace verifies");
+        assert_eq!(summary.plan_tasks, 2);
+        assert_eq!(summary.subtasks, 3, "2 triangles + 1 rectangle");
+        assert_eq!(summary.splits, 1);
+        assert_eq!(summary.requeues, 1);
+        // assignments: t0×2 (rejected twice), t1, sub-task×1 (lost),
+        // sub-tasks×3 (drained) = 7
+        assert_eq!(summary.assignments, 7);
+        assert_eq!(tracer.dropped(), 0);
+        let events = tracer.events();
+        let completions: Vec<u32> = events
+            .iter()
+            .filter(|e| e.kind == TraceEventKind::Completed)
+            .map(|e| e.task)
+            .collect();
+        assert_eq!(completions.len(), 2);
+        assert!(completions.contains(&0) && completions.contains(&1));
     }
 }

@@ -20,6 +20,7 @@ use crate::matching::MatchStrategy;
 use crate::metrics::RunMetrics;
 use crate::model::{Correspondence, Dataset};
 use crate::net::CostModel;
+use crate::obs::Tracer;
 use crate::store::DataService;
 use crate::worker::{RustExecutor, TaskExecutor};
 use anyhow::Result;
@@ -42,6 +43,13 @@ pub struct ExecContext<'a> {
     pub cache_capacity: usize,
     /// Task-assignment policy (FIFO or affinity).
     pub policy: Policy,
+    /// Optional lifecycle tracer threaded through to the engine's
+    /// scheduler and workers ([`Workflow::trace`] sets it; the sim
+    /// backend ignores it — virtual-time stamps would not be
+    /// comparable).
+    ///
+    /// [`Workflow::trace`]: crate::coordinator::Workflow::trace
+    pub tracer: Option<Arc<Tracer>>,
 }
 
 /// Raw engine output, before the workflow layer merges per-task match
@@ -95,6 +103,7 @@ impl ExecutionBackend for Threads {
             threads::ThreadConfig {
                 cache_capacity: ctx.cache_capacity,
                 policy: ctx.policy,
+                tracer: ctx.tracer.clone(),
             },
         );
         Ok(EngineRun {
@@ -265,6 +274,7 @@ impl ExecutionBackend for Dist {
                 bind: opts.bind.clone(),
                 task_mem: plan.task_mem.clone(),
                 memory_budget: opts.memory_budget,
+                tracer: ctx.tracer.clone(),
                 ..dist::DistConfig::default()
             },
         )?;
@@ -295,6 +305,7 @@ mod tests {
             strategy: MatchStrategy::new(StrategyKind::Wam),
             cache_capacity: 4,
             policy: Policy::Affinity,
+            tracer: None,
         }
     }
 

@@ -29,6 +29,7 @@ use crate::cluster::ComputingEnv;
 use crate::coordinator::scheduler::Policy;
 use crate::metrics::RunMetrics;
 use crate::model::Correspondence;
+use crate::obs::Tracer;
 use crate::partition::{MatchTask, PartitionSet};
 use crate::service::{
     announce_replica, run_match_node, DataServiceServer, MatchNodeConfig,
@@ -91,6 +92,11 @@ pub struct DistConfig {
     /// Test hook: `(node_index, tasks)` — that node crashes after
     /// completing `tasks` tasks (see [`MatchNodeConfig`]).
     pub fail_node_after: Vec<(usize, usize)>,
+    /// Optional lifecycle tracer shared by the coordinator's scheduler
+    /// **and** every in-process match node: one replayable stream of
+    /// `Planned → … → Completed` events for the whole wire run
+    /// (`pem match --trace`, chaos replay verification).
+    pub tracer: Option<Arc<Tracer>>,
 }
 
 impl Default for DistConfig {
@@ -109,6 +115,7 @@ impl Default for DistConfig {
             poll_interval: Duration::from_millis(2),
             run_timeout: Duration::from_secs(600),
             fail_node_after: Vec::new(),
+            tracer: None,
         }
     }
 }
@@ -208,6 +215,7 @@ pub fn run(
             task_sizes,
             // splitting verdicts wait until the whole cluster joined
             expected_services: ce.nodes,
+            tracer: cfg.tracer.clone(),
         },
         &bind_ep,
     )
@@ -260,6 +268,7 @@ pub fn run(
                 .iter()
                 .find(|(node, _)| *node == i)
                 .map(|&(_, after)| after);
+            node_cfg.tracer = cfg.tracer.clone();
             let exec = executor.clone();
             std::thread::Builder::new()
                 .name(format!("pem-match-node-{i}"))

@@ -14,6 +14,7 @@ use crate::cluster::ComputingEnv;
 use crate::coordinator::scheduler::{Policy, Scheduler, ServiceId};
 use crate::metrics::RunMetrics;
 use crate::model::Correspondence;
+use crate::obs::{TraceEventKind, Tracer};
 use crate::partition::{MatchTask, PartitionSet};
 use crate::store::DataService;
 use crate::worker::{task_comparisons, PartitionCache, TaskExecutor};
@@ -26,6 +27,11 @@ pub struct ThreadConfig {
     pub cache_capacity: usize,
     /// Task-assignment policy (FIFO or affinity).
     pub policy: Policy,
+    /// Optional lifecycle tracer: the scheduler records its decisions
+    /// and the workers add `PartitionsFetched`/`Executed`, so a run's
+    /// full task history can be dumped (`pem match --trace`) and
+    /// replay-verified.
+    pub tracer: Option<Arc<Tracer>>,
 }
 
 impl Default for ThreadConfig {
@@ -33,6 +39,7 @@ impl Default for ThreadConfig {
         ThreadConfig {
             cache_capacity: 0,
             policy: Policy::Affinity,
+            tracer: None,
         }
     }
 }
@@ -56,7 +63,11 @@ pub fn run(
     cfg: ThreadConfig,
 ) -> ThreadOutcome {
     let n_tasks = tasks.len();
-    let scheduler = Arc::new(Mutex::new(Scheduler::new(tasks, cfg.policy)));
+    let mut sched = Scheduler::new(tasks, cfg.policy);
+    if let Some(tracer) = cfg.tracer.clone() {
+        sched.set_tracer(tracer);
+    }
+    let scheduler = Arc::new(Mutex::new(sched));
     let caches: Vec<Arc<PartitionCache>> = (0..ce.nodes)
         .map(|_| Arc::new(PartitionCache::new(cfg.cache_capacity)))
         .collect();
@@ -81,6 +92,7 @@ pub fn run(
             let comparisons = &comparisons;
             let done_tasks = &done_tasks;
             let busy = &busy;
+            let tracer = cfg.tracer.clone();
             scope.spawn(move || {
                 loop {
                     let task = {
@@ -125,7 +137,23 @@ pub fn run(
                     } else {
                         fetch(task.right)
                     };
+                    if let Some(t) = &tracer {
+                        t.record(
+                            task.id,
+                            TraceEventKind::PartitionsFetched,
+                            Some(node as u64),
+                            None,
+                        );
+                    }
                     let found = executor.execute(&left, &right, intra);
+                    if let Some(t) = &tracer {
+                        t.record(
+                            task.id,
+                            TraceEventKind::Executed,
+                            Some(node as u64),
+                            None,
+                        );
+                    }
                     comparisons.fetch_add(
                         task_comparisons(&task, left.len(), right.len()),
                         std::sync::atomic::Ordering::Relaxed,
@@ -235,6 +263,7 @@ mod tests {
                 ThreadConfig {
                     cache_capacity: cache,
                     policy: Policy::Affinity,
+                    tracer: None,
                 },
             );
             let mut pairs: Vec<(EntityId, EntityId)> = out
@@ -267,6 +296,7 @@ mod tests {
             ThreadConfig {
                 cache_capacity: 0,
                 policy: Policy::Affinity,
+                tracer: None,
             },
         );
         let (_, parts2, tasks2, store_c) = setup(400, 50);
@@ -279,12 +309,49 @@ mod tests {
             ThreadConfig {
                 cache_capacity: 16,
                 policy: Policy::Affinity,
+                tracer: None,
             },
         );
         assert_eq!(out_nc.metrics.cache_hits, 0);
         assert!(out_c.metrics.cache_hits > 0);
         assert!(store_c.fetches() < store_nc.fetches());
         assert!(out_c.metrics.hit_ratio() > 0.5);
+    }
+
+    /// A traced run records a replayable lifecycle: every plan task
+    /// completes exactly once, every execution was preceded by an
+    /// assignment, and each `Executed` is bracketed by a
+    /// `PartitionsFetched` from the same node.
+    #[test]
+    fn traced_run_replays_exactly_once() {
+        let (_, parts, tasks, store) = setup(200, 40);
+        let exec = RustExecutor::new(MatchStrategy::new(StrategyKind::Wam));
+        let plan_ids: Vec<u32> = tasks.iter().map(|t| t.id).collect();
+        let tracer = crate::obs::Tracer::new(1 << 16);
+        let out = run(
+            &ComputingEnv::new(2, 2, crate::util::GIB),
+            &parts,
+            tasks,
+            &store,
+            &exec,
+            ThreadConfig {
+                cache_capacity: 8,
+                policy: Policy::Affinity,
+                tracer: Some(tracer.clone()),
+            },
+        );
+        assert_eq!(out.metrics.tasks, plan_ids.len());
+        let summary = tracer.verify_plan(&plan_ids).unwrap();
+        assert_eq!(summary.plan_tasks, plan_ids.len());
+        assert_eq!(summary.splits, 0);
+        assert_eq!(summary.requeues, 0);
+        assert_eq!(summary.assignments, plan_ids.len());
+        let events = tracer.events();
+        let executed = events
+            .iter()
+            .filter(|e| e.kind == crate::obs::TraceEventKind::Executed)
+            .count();
+        assert_eq!(executed, plan_ids.len());
     }
 
     #[test]

@@ -34,8 +34,10 @@
 //! execution engines — real threads, a deterministic virtual-time
 //! simulator, and distributed TCP services ([`engine`]) — the PJRT
 //! runtime for the AOT-compiled
-//! accelerated match path ([`runtime`]), metrics ([`metrics`]) and an
-//! in-tree micro-benchmark harness ([`mod@bench`]).
+//! accelerated match path ([`runtime`]), metrics ([`metrics`]),
+//! cluster observability — metrics registry, per-task lifecycle
+//! tracing, live `pem stats` scraping ([`obs`]) — and an in-tree
+//! micro-benchmark harness ([`mod@bench`]).
 //!
 //! ## Quick start
 //!
@@ -80,6 +82,7 @@ pub mod matching;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod partition;
 pub mod rpc;
 pub mod runtime;

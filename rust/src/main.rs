@@ -21,6 +21,9 @@
 //! * `distmatch`— run one match-service node process against a running
 //!   `pem serve` coordinator (give `--data` a comma-separated replica
 //!   list, or let the join-time directory supply it);
+//! * `stats`    — scrape a RUNNING cluster's live metrics over the
+//!   wire (protocol v6 `StatsRequest`): scheduler queue depth,
+//!   per-node busy/idle, cache hit ratios, fetch-latency histograms;
 //! * `artifacts`— inspect the AOT artifact manifest and smoke-run the
 //!   PJRT path on a tiny workload;
 //! * `info`     — print the computing-environment and memory-model
@@ -62,7 +65,7 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: pem <generate|export|plan|match|sweep|serve|distmatch|artifacts|info> [options]
+        "usage: pem <generate|export|plan|match|sweep|serve|distmatch|stats|artifacts|info> [options]
   common options:
     --entities N          dataset size (default 20000)
     --seed S              generator seed (default 2010)
@@ -73,6 +76,9 @@ fn usage() -> ! {
   match options:
     --input offers.csv    match a CSV dataset instead of generating one
     --out matches.csv     write correspondences as CSV
+    --trace out.jsonl     dump the per-task lifecycle trace as JSONL
+                          (one event per line) and replay-verify that
+                          every plan task completed exactly once
   plan options (plan only, no execution):
     --save plan.bin       write the serialized MatchPlan
     --top N               print the N heaviest tasks (default 5)
@@ -111,6 +117,8 @@ fn usage() -> ! {
     --advertise HOST      host to publish in the replica directory
                           (default 127.0.0.1; set to this machine's
                           address for multi-host runs)
+    --trace out.jsonl     dump the scheduler's task-lifecycle trace
+                          as JSONL when the workflow drains
   serve --role data options (standalone data-plane replica):
     --replica-of HOST:PORT  upstream data server to sync from (required)
     --workflow HOST:PORT    coordinator to announce this replica to
@@ -122,7 +130,13 @@ fn usage() -> ! {
                           the join-time directory adds any missing ones)
     --batch K             tasks pulled per round trip (default 1)
     --mem-budget BYTES    reject tasks whose footprint exceeds this
-    --name NAME           node name  --threads T  --cache C"
+    --name NAME           node name  --threads T  --cache C
+  stats options (scrape a RUNNING cluster: pem stats HOST:PORT):
+    --no-follow           scrape only the given address (by default a
+                          workflow service's replica directory is
+                          followed and the data servers scraped too)
+    --json                print raw snapshots as JSON
+    --timeout-s S         per-scrape connect/read timeout (default 5)"
     );
     std::process::exit(2);
 }
@@ -281,6 +295,7 @@ fn run() -> Result<()> {
         Some("sweep") => cmd_sweep(&args),
         Some("serve") => cmd_serve(&args),
         Some("distmatch") => cmd_distmatch(&args),
+        Some("stats") => cmd_stats(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("info") => cmd_info(&args),
         _ => usage(),
@@ -415,14 +430,22 @@ fn cmd_match(args: &Args) -> Result<()> {
     let kind = parse_strategy(args)?;
     let ce = parse_ce(args)?;
     let (dataset, truth) = load_dataset(args)?;
-    let out = Workflow::for_dataset(&dataset)
+    // --trace: record every task's lifecycle; dumped + replay-verified
+    // after the run (1 Mi events is plenty for any CLI workload)
+    let tracer = args
+        .get_str("trace")
+        .map(|_| pem::obs::Tracer::new(1 << 20));
+    let mut wf = Workflow::for_dataset(&dataset)
         .matching(kind)
         .strategy_boxed(parse_partition_strategy(args, kind)?)
         .backend_boxed(parse_backend(args)?)
         .env(ce)
         .cache(args.get_or("cache", 0usize)?)
-        .policy(parse_policy(args))
-        .run()?;
+        .policy(parse_policy(args));
+    if let Some(t) = &tracer {
+        wf = wf.trace(t.clone());
+    }
+    let out = wf.run()?;
     println!(
         "partitions={} (misc {})  tasks={}",
         out.n_partitions, out.n_misc_partitions, out.n_tasks
@@ -441,6 +464,35 @@ fn cmd_match(args: &Args) -> Result<()> {
             std::fs::File::create(out_path)?,
         )?;
         println!("wrote {} matches to {out_path}", out.result.len());
+    }
+    if let (Some(path), Some(tracer)) = (args.get_str("trace"), &tracer)
+    {
+        let events = tracer.events();
+        std::fs::write(path, tracer.dump_jsonl())?;
+        println!("wrote {} trace events to {path}", events.len());
+        // replay-verify against the planned task set (the scheduler
+        // records one Planned event per plan task; split children are
+        // Queued with a parent, never Planned)
+        let planned: Vec<u32> = events
+            .iter()
+            .filter(|e| e.kind == pem::obs::TraceEventKind::Planned)
+            .map(|e| e.task)
+            .collect();
+        if planned.is_empty() {
+            println!(
+                "(no lifecycle events recorded — the sim engine does \
+                 not trace; use --engine threads|dist)"
+            );
+        } else {
+            match tracer.verify_plan(&planned) {
+                Ok(s) => println!(
+                    "trace replay: {} plan task(s) completed exactly \
+                     once ({} split(s), {} requeue(s))",
+                    s.plan_tasks, s.splits, s.requeues
+                ),
+                Err(e) => eprintln!("trace replay FAILED: {e}"),
+            }
+        }
     }
     println!("wall-clock: {:?}", out.elapsed);
     Ok(())
@@ -503,7 +555,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // silently re-based Figs-8/9 column
     let mut baseline_cores: Option<usize> = None;
     let mut failed_cells = 0usize;
-    println!("cores  time         speedup  hr     tasks");
+    println!("cores  time         speedup  hr     skew   tasks");
     for &cores in &cores_list {
         // 4 cores per node as in the paper; cores beyond one node add nodes
         let nodes = cores.div_ceil(4).max(1);
@@ -540,13 +592,17 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         baseline_cores.get_or_insert(cores);
         times.push(out.metrics.makespan_ns);
         let s = speedups(&times);
+        // observability columns come from the run's registry snapshot
+        // (the same shape `pem stats` scrapes), not ad-hoc fields
+        let snap = out.metrics.snapshot();
         println!(
-            "{:>5}  {:>11}  {:>6.2}  {:>5.1}%  {}",
+            "{:>5}  {:>11}  {:>6.2}  {:>5.1}%  {:>5.2}  {}",
             cores,
-            fmt_nanos(out.metrics.makespan_ns),
+            fmt_nanos(snap.gauge("makespan_ns").unwrap_or(0)),
             s.last().unwrap(),
-            out.metrics.hit_ratio() * 100.0,
-            out.n_tasks
+            snapshot_hit_ratio(&snap) * 100.0,
+            snapshot_busy_skew(&snap),
+            snap.gauge("tasks").unwrap_or(0),
         );
     }
     if failed_cells == cores_list.len() {
@@ -685,6 +741,11 @@ fn cmd_serve_coordinator(args: &Args) -> Result<()> {
     let wf_bind =
         format!("{bind_host}:{}", args.get_or("workflow-port", 0u16)?);
     let data_srv = DataServiceServer::start(store, &data_bind)?;
+    // --trace: the scheduler records every assignment / rejection /
+    // split / completion; dumped as JSONL when the workflow drains
+    let tracer = args.get_str("trace").map(|_| {
+        pem::obs::Tracer::new(pem::obs::DEFAULT_TRACE_CAPACITY)
+    });
     let wf_srv = WorkflowServiceServer::start(
         tasks,
         WorkflowServerConfig {
@@ -695,6 +756,7 @@ fn cmd_serve_coordinator(args: &Args) -> Result<()> {
             task_mem,
             task_sizes,
             expected_services: args.get_or("expect-nodes", 1usize)?,
+            tracer: tracer.clone(),
         },
         &wf_bind,
     )?;
@@ -831,6 +893,11 @@ fn cmd_serve_coordinator(args: &Args) -> Result<()> {
         )?;
         println!("wrote {} matches to {out_path}", result.len());
     }
+    if let (Some(path), Some(tracer)) = (args.get_str("trace"), &tracer)
+    {
+        std::fs::write(path, tracer.dump_jsonl())?;
+        println!("wrote {} trace events to {path}", tracer.len());
+    }
     println!("match wall-clock: {elapsed:?}");
     data_srv.shutdown();
     Ok(())
@@ -921,6 +988,132 @@ fn cmd_distmatch(args: &Args) -> Result<()> {
             String::new()
         }
     );
+    Ok(())
+}
+
+/// The paper's cache hit ratio `hr` from a snapshot's raw counters.
+fn snapshot_hit_ratio(snap: &pem::obs::MetricsSnapshot) -> f64 {
+    let hits = snap.counter("cache_hits").unwrap_or(0);
+    let misses = snap.counter("cache_misses").unwrap_or(0);
+    let total = hits + misses;
+    if total == 0 {
+        0.0
+    } else {
+        hits as f64 / total as f64
+    }
+}
+
+/// Max/mean busy-time skew across the `thread.{i}.busy_ns` gauges of
+/// a run snapshot (1.0 = perfectly balanced).
+fn snapshot_busy_skew(snap: &pem::obs::MetricsSnapshot) -> f64 {
+    let mut busy: Vec<u64> = Vec::new();
+    while let Some(b) =
+        snap.gauge(&format!("thread.{}.busy_ns", busy.len()))
+    {
+        busy.push(b);
+    }
+    if busy.is_empty() {
+        return 1.0;
+    }
+    let max = *busy.iter().max().unwrap() as f64;
+    let mean = busy.iter().sum::<u64>() as f64 / busy.len() as f64;
+    if mean == 0.0 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
+/// One `StatsRequest` round trip against a running service.
+fn scrape_stats(
+    addr: &str,
+    timeout: std::time::Duration,
+) -> Result<pem::obs::MetricsSnapshot> {
+    use pem::rpc::{Message, Transport};
+    let mut t = Transport::connect(addr, timeout)?;
+    match t.request(&Message::StatsRequest)? {
+        Message::StatsReport { stats } => {
+            Ok(pem::obs::MetricsSnapshot::from_bytes(&stats)?)
+        }
+        other => {
+            bail!("unexpected reply from {addr}: {}", other.kind())
+        }
+    }
+}
+
+/// Render one scraped snapshot: labels, gauges, counters, histogram
+/// summaries, then the derived ratios operators actually ask for.
+fn print_stats(addr: &str, snap: &pem::obs::MetricsSnapshot, json: bool) {
+    if json {
+        println!("{}", snap.to_json());
+        return;
+    }
+    let role = snap.label("role").unwrap_or("?");
+    println!("── {role} @ {addr} ──");
+    for (k, v) in &snap.labels {
+        if k != "role" {
+            println!("  {k} = {v}");
+        }
+    }
+    if !snap.gauges.is_empty() {
+        println!("  gauges:");
+        for (k, v) in &snap.gauges {
+            if k.ends_with("_ns") {
+                println!("    {k:<28} {}", fmt_nanos(*v));
+            } else if k.ends_with("bytes") {
+                println!("    {k:<28} {}", fmt_bytes(*v));
+            } else {
+                println!("    {k:<28} {v}");
+            }
+        }
+    }
+    if !snap.counters.is_empty() {
+        println!("  counters:");
+        for (k, v) in &snap.counters {
+            if k.ends_with("bytes") {
+                println!("    {k:<28} {}", fmt_bytes(*v));
+            } else {
+                println!("    {k:<28} {v}");
+            }
+        }
+    }
+    for (k, h) in &snap.histograms {
+        println!("  histogram {k}: {}", h.summary());
+    }
+    if snap.counter("cache_hits").is_some() {
+        println!(
+            "  derived: cache hr {:.1}%",
+            snapshot_hit_ratio(snap) * 100.0
+        );
+    }
+}
+
+/// `pem stats <addr>`: scrape the live metrics of a RUNNING cluster
+/// over the wire (protocol v6 `StatsRequest`).  A workflow service's
+/// reply carries the replica directory as a label, so the data
+/// servers are scraped in the same invocation unless `--no-follow`.
+fn cmd_stats(args: &Args) -> Result<()> {
+    let addr = args.positional().get(1).cloned().ok_or_else(|| {
+        anyhow::anyhow!("usage: pem stats HOST:PORT [--no-follow]")
+    })?;
+    let timeout = std::time::Duration::from_secs(
+        args.get_or("timeout-s", 5u64)?,
+    );
+    let json = args.flag("json");
+    let snap = scrape_stats(&addr, timeout)?;
+    print_stats(&addr, &snap, json);
+    if !args.flag("no-follow") {
+        if let Some(dir) = snap.label("data_replicas") {
+            for d in dir.split(',').filter(|s| !s.is_empty()) {
+                match scrape_stats(d, timeout) {
+                    Ok(s) => print_stats(d, &s, json),
+                    Err(e) => eprintln!(
+                        "scrape of data server {d} failed: {e:#}"
+                    ),
+                }
+            }
+        }
+    }
     Ok(())
 }
 

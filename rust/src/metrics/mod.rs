@@ -4,6 +4,7 @@
 //! harness and the `pem` CLI render them as the paper's tables (execution
 //! time, speedup, #tasks, cache hit ratio `hr`, Δ, Δ/t_nc).
 
+use crate::obs::{MetricsSnapshot, Registry};
 use crate::util::{fmt_bytes, fmt_nanos};
 
 /// Metrics of one parallel match run.
@@ -65,6 +66,29 @@ impl RunMetrics {
         } else {
             max / mean
         }
+    }
+
+    /// Export these run metrics as a [`MetricsSnapshot`] — the same
+    /// mergeable/serializable shape the live services scrape — so
+    /// offline runs (threads, sim) and post-run reports share one
+    /// vocabulary with `pem stats`.  Derived ratios stay methods on
+    /// the consumer side; the snapshot carries raw counts plus the
+    /// per-thread busy series as `thread.{i}.busy_ns` gauges.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let reg = Registry::new();
+        reg.counter("comparisons").add(self.comparisons);
+        reg.counter("cache_hits").add(self.cache_hits);
+        reg.counter("cache_misses").add(self.cache_misses);
+        reg.counter("bytes_fetched").add(self.bytes_fetched);
+        reg.counter("control_messages").add(self.control_messages);
+        reg.counter("affinity_hits").add(self.affinity_hits);
+        reg.gauge("makespan_ns").set(self.makespan_ns);
+        reg.gauge("tasks").set(self.tasks as u64);
+        reg.gauge("matches").set(self.matches as u64);
+        for (i, busy) in self.thread_busy_ns.iter().enumerate() {
+            reg.gauge(&format!("thread.{i}.busy_ns")).set(*busy);
+        }
+        reg.snapshot()
     }
 
     /// One-line human-readable summary.

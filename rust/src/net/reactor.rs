@@ -325,6 +325,10 @@ mod tests {
         for i in 0..5u32 {
             let msg = Message::Heartbeat {
                 service: ServiceId(i as usize),
+                busy_ns: 0,
+                cache_hits: 0,
+                cache_misses: 0,
+                tasks_done: 0,
             };
             assert_eq!(a.request(&msg).unwrap().encode(), msg.encode());
             let msg = Message::NoTask { done: i % 2 == 0 };

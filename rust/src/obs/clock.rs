@@ -1,0 +1,119 @@
+//! The one monotonic time source ([`Clock`]) behind all observability
+//! timestamps.
+//!
+//! Everything in the crate that needs "now" for *accounting* — trace
+//! event stamps, heartbeat liveness, replica-failover cooldowns, busy-ns
+//! bookkeeping — goes through this trait instead of calling
+//! `Instant::now()` directly, so deterministic tests can drive time with
+//! [`ManualClock`] while production uses [`SystemClock`].  Timestamps
+//! are plain `u64` nanoseconds since an arbitrary per-clock origin:
+//! monotonic and comparable within one clock, meaningless across
+//! processes (trace analysis only ever compares stamps from the same
+//! server).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A monotonic nanosecond clock.
+pub trait Clock: Send + Sync + std::fmt::Debug {
+    /// Nanoseconds since this clock's origin.  Monotonic: never
+    /// decreases between calls on the same clock.
+    fn now_ns(&self) -> u64;
+}
+
+/// Real time: nanoseconds since the clock was created, backed by
+/// [`Instant`].
+#[derive(Debug)]
+pub struct SystemClock {
+    origin: Instant,
+}
+
+impl SystemClock {
+    /// A clock whose origin is "now".
+    pub fn new() -> SystemClock {
+        SystemClock {
+            origin: Instant::now(),
+        }
+    }
+}
+
+impl Default for SystemClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for SystemClock {
+    fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+}
+
+/// Deterministic test clock: time advances only when told to.
+#[derive(Debug, Default)]
+pub struct ManualClock {
+    now: AtomicU64,
+}
+
+impl ManualClock {
+    /// A clock starting at `start_ns`.
+    pub fn new(start_ns: u64) -> ManualClock {
+        ManualClock {
+            now: AtomicU64::new(start_ns),
+        }
+    }
+
+    /// Advance time by `ns`.
+    pub fn advance(&self, ns: u64) {
+        self.now.fetch_add(ns, Ordering::SeqCst);
+    }
+
+    /// Jump to an absolute time (must not go backwards in tests that
+    /// rely on monotonicity; the clock does not enforce it).
+    pub fn set(&self, ns: u64) {
+        self.now.store(ns, Ordering::SeqCst);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_ns(&self) -> u64 {
+        self.now.load(Ordering::SeqCst)
+    }
+}
+
+/// Shorthand for the production clock as a shareable trait object.
+pub fn system_clock() -> Arc<dyn Clock> {
+    Arc::new(SystemClock::new())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_clock_is_monotonic() {
+        let c = SystemClock::new();
+        let a = c.now_ns();
+        let b = c.now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn manual_clock_advances_only_on_demand() {
+        let c = ManualClock::new(100);
+        assert_eq!(c.now_ns(), 100);
+        assert_eq!(c.now_ns(), 100);
+        c.advance(50);
+        assert_eq!(c.now_ns(), 150);
+        c.set(1_000);
+        assert_eq!(c.now_ns(), 1_000);
+    }
+
+    #[test]
+    fn clocks_are_object_safe_and_shareable() {
+        let c: Arc<dyn Clock> = Arc::new(ManualClock::new(7));
+        let c2 = Arc::clone(&c);
+        assert_eq!(c.now_ns(), c2.now_ns());
+    }
+}

@@ -1,0 +1,28 @@
+//! Cluster-wide observability: metrics registry, lifecycle tracing,
+//! and the shared monotonic clock.
+//!
+//! Three pieces (see `docs/OBSERVABILITY.md` for the operator view):
+//!
+//! * [`clock`] — the injectable monotonic [`Clock`] every accounting
+//!   timestamp in the crate goes through;
+//! * [`registry`] — lock-cheap counters/gauges/histograms per server,
+//!   snapshottable into a serializable [`MetricsSnapshot`] that the
+//!   protocol-v6 `StatsRequest`/`StatsReport` frames carry to `pem
+//!   stats`;
+//! * [`trace`] — per-task lifecycle events in a bounded ring,
+//!   dumpable as JSONL (`pem match --trace`) and replayable by
+//!   [`verify_exactly_once`].
+
+pub mod clock;
+pub mod registry;
+pub mod trace;
+
+pub use clock::{system_clock, Clock, ManualClock, SystemClock};
+pub use registry::{
+    bucket_index, bucket_lower, Counter, Gauge, Histogram,
+    HistogramSnapshot, MetricsSnapshot, Registry, HISTOGRAM_BUCKETS,
+};
+pub use trace::{
+    verify_exactly_once, ReplaySummary, TraceEvent, TraceEventKind,
+    Tracer, DEFAULT_TRACE_CAPACITY,
+};

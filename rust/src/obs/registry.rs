@@ -1,0 +1,842 @@
+//! Lock-cheap metrics registry: atomic counters, gauges and fixed-bucket
+//! latency histograms, snapshottable into one serializable value.
+//!
+//! Every server (workflow, data, match node) owns a [`Registry`] and
+//! hands out [`Counter`]/[`Gauge`]/[`Histogram`] handles at startup; the
+//! hot paths then touch a single relaxed atomic — no locks, no string
+//! lookups.  A [`MetricsSnapshot`] is a consistent-enough point-in-time
+//! copy (each metric is read atomically; the set is not a global
+//! transaction) that serializes with the same strict binary discipline
+//! as `MatchPlan` (magic prefix, canonical field order, trailing-bytes
+//! rejection) so it can cross the wire in a `StatsReport` frame and be
+//! diffed or merged downstream.
+//!
+//! Histogram buckets are base-2: bucket 0 counts zero values, bucket
+//! `i ≥ 1` counts values in `[2^(i-1), 2^i)`.  That makes merge a plain
+//! element-wise sum — associative, commutative and lossless on counts,
+//! property-tested below — which is what lets per-node snapshots be
+//! folded into cluster totals in any order.
+
+use crate::util::fmt_nanos;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Magic prefix + format version of a serialized [`MetricsSnapshot`].
+const STATS_MAGIC: &[u8; 8] = b"PEMSTAT\x01";
+
+/// Number of histogram buckets: one zero bucket + one per power of two
+/// up to `2^63`.
+pub const HISTOGRAM_BUCKETS: usize = 65;
+
+/// Monotonically increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    /// A counter at zero.
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    /// Add `n` to the counter.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Add one.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (queue depth, live nodes, …).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    /// A gauge at zero.
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    /// Overwrite the value.
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket base-2 histogram (see module docs for the bucket
+/// boundaries).  `observe` is three relaxed atomic adds.
+pub struct Histogram {
+    buckets: [AtomicU64; HISTOGRAM_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count.load(Ordering::Relaxed))
+            .field("sum", &self.sum.load(Ordering::Relaxed))
+            .finish_non_exhaustive()
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Bucket index of a value: 0 for 0, else `1 + floor(log2(v))`.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        64 - v.leading_zeros() as usize
+    }
+}
+
+/// Inclusive lower bound of bucket `i`.
+pub fn bucket_lower(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << (i - 1)
+    }
+}
+
+impl Histogram {
+    /// A histogram with all buckets empty.
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one value.
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of the histogram.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| {
+                self.buckets[i].load(Ordering::Relaxed)
+            }),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Immutable copy of a [`Histogram`]; the unit that merges and
+/// serializes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Per-bucket counts (see [`bucket_lower`] for boundaries).
+    pub buckets: [u64; HISTOGRAM_BUCKETS],
+    /// Total observations.
+    pub count: u64,
+    /// Sum of observed values.
+    pub sum: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        HistogramSnapshot {
+            buckets: [0; HISTOGRAM_BUCKETS],
+            count: 0,
+            sum: 0,
+        }
+    }
+}
+
+impl HistogramSnapshot {
+    /// An empty snapshot (the merge identity).
+    pub fn empty() -> HistogramSnapshot {
+        HistogramSnapshot::default()
+    }
+
+    /// Element-wise sum of two snapshots.  Associative, commutative,
+    /// and lossless on counts (property-tested below).
+    pub fn merge(&self, other: &HistogramSnapshot) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| {
+                self.buckets[i] + other.buckets[i]
+            }),
+            count: self.count + other.count,
+            sum: self.sum + other.sum,
+        }
+    }
+
+    /// Mean observed value (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate quantile: the lower bound of the bucket containing
+    /// the `q`-quantile observation (`0.0 ≤ q ≤ 1.0`).  Exact to
+    /// within one power of two — enough for the p50/p99 lines `pem
+    /// stats` prints.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let rank = rank.max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_lower(i);
+            }
+        }
+        bucket_lower(HISTOGRAM_BUCKETS - 1)
+    }
+
+    /// One-line human summary (`pem stats` output).
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean {} p50≥{} p99≥{}",
+            self.count,
+            fmt_nanos(self.mean() as u64),
+            fmt_nanos(self.quantile(0.50)),
+            fmt_nanos(self.quantile(0.99)),
+        )
+    }
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: BTreeMap<String, Arc<Counter>>,
+    gauges: BTreeMap<String, Arc<Gauge>>,
+    histograms: BTreeMap<String, Arc<Histogram>>,
+    labels: BTreeMap<String, String>,
+}
+
+/// Named collection of metrics.  Registration takes a write lock;
+/// handles returned by [`Registry::counter`] & co. are lock-free to
+/// update, so hot paths register once and hold the `Arc`.
+#[derive(Default)]
+pub struct Registry {
+    inner: RwLock<RegistryInner>,
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.inner.read().unwrap();
+        f.debug_struct("Registry")
+            .field("counters", &inner.counters.len())
+            .field("gauges", &inner.gauges.len())
+            .field("histograms", &inner.histograms.len())
+            .finish()
+    }
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or register the counter `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut inner = self.inner.write().unwrap();
+        Arc::clone(
+            inner
+                .counters
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(Counter::new())),
+        )
+    }
+
+    /// Get or register the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut inner = self.inner.write().unwrap();
+        Arc::clone(
+            inner
+                .gauges
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(Gauge::new())),
+        )
+    }
+
+    /// Get or register the histogram `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut inner = self.inner.write().unwrap();
+        Arc::clone(
+            inner
+                .histograms
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(Histogram::new())),
+        )
+    }
+
+    /// Set a non-numeric label (role, addresses, …) carried on
+    /// snapshots.
+    pub fn set_label(&self, key: &str, value: &str) {
+        self.inner
+            .write()
+            .unwrap()
+            .labels
+            .insert(key.to_string(), value.to_string());
+    }
+
+    /// Point-in-time copy of every registered metric, sorted by name.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let inner = self.inner.read().unwrap();
+        MetricsSnapshot {
+            counters: inner
+                .counters
+                .iter()
+                .map(|(k, c)| (k.clone(), c.get()))
+                .collect(),
+            gauges: inner
+                .gauges
+                .iter()
+                .map(|(k, g)| (k.clone(), g.get()))
+                .collect(),
+            histograms: inner
+                .histograms
+                .iter()
+                .map(|(k, h)| (k.clone(), h.snapshot()))
+                .collect(),
+            labels: inner
+                .labels
+                .iter()
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+        }
+    }
+}
+
+/// Serializable point-in-time copy of a [`Registry`]; what a
+/// `StatsReport` frame carries and what `pem stats` renders.  Entries
+/// are sorted by name, so equal registries snapshot to equal bytes.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    /// `(name, value)` counters, name-sorted.
+    pub counters: Vec<(String, u64)>,
+    /// `(name, value)` gauges, name-sorted.
+    pub gauges: Vec<(String, u64)>,
+    /// `(name, snapshot)` histograms, name-sorted.
+    pub histograms: Vec<(String, HistogramSnapshot)>,
+    /// `(key, value)` labels, key-sorted.
+    pub labels: Vec<(String, String)>,
+}
+
+// one set of codec primitives for all canonical binary formats
+use crate::rpc::{put_str, put_u32, put_u64};
+
+impl MetricsSnapshot {
+    /// Counter value by name.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| *v)
+    }
+
+    /// Gauge value by name.
+    pub fn gauge(&self, name: &str) -> Option<u64> {
+        self.gauges
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| *v)
+    }
+
+    /// Histogram snapshot by name.
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSnapshot> {
+        self.histograms
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, h)| h)
+    }
+
+    /// Label value by key.
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Merge two snapshots by name: counters and histogram buckets
+    /// add, gauges take the maximum (a cluster-level "worst of"),
+    /// labels union with `self` winning ties.  Inherits the histogram
+    /// merge's associativity/commutativity on counters and histograms.
+    pub fn merge(&self, other: &MetricsSnapshot) -> MetricsSnapshot {
+        fn merge_by_name<T: Clone>(
+            a: &[(String, T)],
+            b: &[(String, T)],
+            combine: impl Fn(&T, &T) -> T,
+        ) -> Vec<(String, T)> {
+            let mut out: BTreeMap<String, T> = a.iter().cloned().collect();
+            for (k, v) in b {
+                let merged = match out.get(k) {
+                    Some(prev) => combine(prev, v),
+                    None => v.clone(),
+                };
+                out.insert(k.clone(), merged);
+            }
+            out.into_iter().collect()
+        }
+        MetricsSnapshot {
+            counters: merge_by_name(&self.counters, &other.counters, |a, b| {
+                a + b
+            }),
+            gauges: merge_by_name(&self.gauges, &other.gauges, |a, b| {
+                *a.max(b)
+            }),
+            histograms: merge_by_name(
+                &self.histograms,
+                &other.histograms,
+                |a, b| a.merge(b),
+            ),
+            labels: merge_by_name(&self.labels, &other.labels, |a, _b| {
+                a.clone()
+            }),
+        }
+    }
+
+    // ------------------------------------------------ serialization
+
+    /// Serialize to the canonical byte format (same discipline as
+    /// `MatchPlan::to_bytes`: magic prefix, LE fields, canonical
+    /// order).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(
+            64 + self.counters.len() * 24
+                + self.histograms.len() * (24 + HISTOGRAM_BUCKETS * 8),
+        );
+        b.extend_from_slice(STATS_MAGIC);
+        put_u32(&mut b, self.counters.len() as u32);
+        for (k, v) in &self.counters {
+            put_str(&mut b, k);
+            put_u64(&mut b, *v);
+        }
+        put_u32(&mut b, self.gauges.len() as u32);
+        for (k, v) in &self.gauges {
+            put_str(&mut b, k);
+            put_u64(&mut b, *v);
+        }
+        put_u32(&mut b, self.histograms.len() as u32);
+        for (k, h) in &self.histograms {
+            put_str(&mut b, k);
+            put_u64(&mut b, h.count);
+            put_u64(&mut b, h.sum);
+            for &bucket in &h.buckets {
+                put_u64(&mut b, bucket);
+            }
+        }
+        put_u32(&mut b, self.labels.len() as u32);
+        for (k, v) in &self.labels {
+            put_str(&mut b, k);
+            put_str(&mut b, v);
+        }
+        b
+    }
+
+    /// Deserialize a snapshot written by [`MetricsSnapshot::to_bytes`].
+    /// Strict: bad magic, truncation or trailing bytes are errors.
+    pub fn from_bytes(bytes: &[u8]) -> Result<MetricsSnapshot> {
+        let mut d = StatsDec { buf: bytes, pos: 0 };
+        let magic = d.take(STATS_MAGIC.len())?;
+        if magic != STATS_MAGIC {
+            bail!("not a pem stats snapshot (bad magic)");
+        }
+        let n = d.len(12)?;
+        let mut counters = Vec::with_capacity(n);
+        for _ in 0..n {
+            let k = d.string()?;
+            counters.push((k, d.u64()?));
+        }
+        let n = d.len(12)?;
+        let mut gauges = Vec::with_capacity(n);
+        for _ in 0..n {
+            let k = d.string()?;
+            gauges.push((k, d.u64()?));
+        }
+        let n = d.len(20 + HISTOGRAM_BUCKETS * 8)?;
+        let mut histograms = Vec::with_capacity(n);
+        for _ in 0..n {
+            let k = d.string()?;
+            let count = d.u64()?;
+            let sum = d.u64()?;
+            let mut buckets = [0u64; HISTOGRAM_BUCKETS];
+            for bucket in buckets.iter_mut() {
+                *bucket = d.u64()?;
+            }
+            histograms.push((
+                k,
+                HistogramSnapshot {
+                    buckets,
+                    count,
+                    sum,
+                },
+            ));
+        }
+        let n = d.len(8)?;
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let k = d.string()?;
+            labels.push((k, d.string()?));
+        }
+        d.finish()?;
+        Ok(MetricsSnapshot {
+            counters,
+            gauges,
+            histograms,
+            labels,
+        })
+    }
+
+    /// Render as one JSON object (hand-rolled; no serde offline).
+    /// Histograms serialize as `{count, sum, buckets}` with trailing
+    /// empty buckets trimmed.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{");
+        out.push_str("\"counters\":{");
+        push_kv_u64(&mut out, &self.counters);
+        out.push_str("},\"gauges\":{");
+        push_kv_u64(&mut out, &self.gauges);
+        out.push_str("},\"histograms\":{");
+        for (i, (k, h)) in self.histograms.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let last = h
+                .buckets
+                .iter()
+                .rposition(|&c| c != 0)
+                .map_or(0, |p| p + 1);
+            out.push_str(&format!(
+                "{}:{{\"count\":{},\"sum\":{},\"buckets\":[{}]}}",
+                json_string(k),
+                h.count,
+                h.sum,
+                h.buckets[..last]
+                    .iter()
+                    .map(|c| c.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",")
+            ));
+        }
+        out.push_str("},\"labels\":{");
+        for (i, (k, v)) in self.labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{}:{}",
+                json_string(k),
+                json_string(v)
+            ));
+        }
+        out.push_str("}}");
+        out
+    }
+}
+
+fn push_kv_u64(out: &mut String, kvs: &[(String, u64)]) {
+    for (i, (k, v)) in kvs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("{}:{}", json_string(k), v));
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslash, control chars).
+pub(crate) fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+struct StatsDec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> StatsDec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!("truncated stats snapshot");
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A count whose elements need at least `min_elem_bytes` each,
+    /// validated against the remaining buffer before allocation.
+    fn len(&mut self, min_elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(min_elem_bytes) > self.buf.len() - self.pos {
+            bail!("truncated stats snapshot (lying count)");
+        }
+        Ok(n)
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.len(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| anyhow::anyhow!("stats string is not UTF-8"))
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "{} trailing bytes after stats snapshot",
+                self.buf.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+    use crate::util::Rng;
+
+    fn arbitrary_hist(rng: &mut Rng) -> HistogramSnapshot {
+        let h = Histogram::new();
+        for _ in 0..rng.gen_range(64) {
+            // span many buckets: uniform exponent, uniform mantissa
+            let shift = rng.gen_range(40) as u64;
+            h.observe(rng.next_u64() >> (23 + shift % 41));
+        }
+        h.snapshot()
+    }
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        assert_eq!(bucket_lower(0), 0);
+        // every bucket's lower bound maps back into that bucket
+        for i in 1..HISTOGRAM_BUCKETS {
+            assert_eq!(bucket_index(bucket_lower(i)), i);
+        }
+    }
+
+    #[test]
+    fn histogram_merge_is_associative_commutative_lossless() {
+        forall("histogram merge algebra", 128, |rng| {
+            let a = arbitrary_hist(rng);
+            let b = arbitrary_hist(rng);
+            let c = arbitrary_hist(rng);
+            // commutative
+            assert_eq!(a.merge(&b), b.merge(&a));
+            // associative
+            assert_eq!(a.merge(&b).merge(&c), a.merge(&b.merge(&c)));
+            // identity
+            assert_eq!(a.merge(&HistogramSnapshot::empty()), a);
+            // lossless on counts and sums
+            let m = a.merge(&b);
+            assert_eq!(m.count, a.count + b.count);
+            assert_eq!(m.sum, a.sum + b.sum);
+            assert_eq!(
+                m.buckets.iter().sum::<u64>(),
+                a.count + b.count,
+                "bucket totals account for every observation"
+            );
+        });
+    }
+
+    #[test]
+    fn histogram_quantiles_and_mean() {
+        let h = Histogram::new();
+        for v in [1u64, 1, 1, 1000, 1000, 1_000_000] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 6);
+        assert_eq!(s.sum, 3 + 2000 + 1_000_000);
+        assert_eq!(s.quantile(0.0), 1);
+        assert_eq!(s.quantile(0.5), 1);
+        assert!(s.quantile(0.99) >= 512 * 1024);
+        assert!(s.mean() > 0.0);
+        assert!(!s.summary().is_empty());
+        assert_eq!(HistogramSnapshot::empty().quantile(0.5), 0);
+        assert_eq!(HistogramSnapshot::empty().mean(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_increments_are_not_lost() {
+        let reg = Registry::new();
+        let counter = reg.counter("ops");
+        let hist = reg.histogram("lat");
+        const THREADS: usize = 8;
+        const PER_THREAD: u64 = 10_000;
+        std::thread::scope(|scope| {
+            for t in 0..THREADS {
+                let counter = Arc::clone(&counter);
+                let hist = Arc::clone(&hist);
+                scope.spawn(move || {
+                    for i in 0..PER_THREAD {
+                        counter.inc();
+                        hist.observe((t as u64 + 1) * 100 + i % 7);
+                    }
+                });
+            }
+        });
+        let snap = reg.snapshot();
+        let total = THREADS as u64 * PER_THREAD;
+        assert_eq!(snap.counter("ops"), Some(total));
+        let h = snap.histogram("lat").unwrap();
+        assert_eq!(h.count, total);
+        assert_eq!(h.buckets.iter().sum::<u64>(), total);
+    }
+
+    #[test]
+    fn registry_handles_are_shared_by_name() {
+        let reg = Registry::new();
+        reg.counter("x").add(3);
+        reg.counter("x").add(4);
+        reg.gauge("g").set(9);
+        reg.gauge("g").set(2);
+        assert_eq!(reg.snapshot().counter("x"), Some(7));
+        assert_eq!(reg.snapshot().gauge("g"), Some(2));
+        assert_eq!(reg.snapshot().counter("missing"), None);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_byte_identical() {
+        forall("snapshot codec roundtrip", 32, |rng| {
+            let reg = Registry::new();
+            for i in 0..rng.gen_range(6) {
+                reg.counter(&format!("c{i}")).add(rng.next_u64() >> 30);
+            }
+            for i in 0..rng.gen_range(4) {
+                reg.gauge(&format!("g{i}")).set(rng.next_u64() >> 40);
+            }
+            for i in 0..rng.gen_range(3) {
+                let h = reg.histogram(&format!("h{i}"));
+                for _ in 0..rng.gen_range(20) {
+                    h.observe(rng.next_u64() >> 32);
+                }
+            }
+            reg.set_label("role", "workflow");
+            let snap = reg.snapshot();
+            let bytes = snap.to_bytes();
+            let back = MetricsSnapshot::from_bytes(&bytes).unwrap();
+            assert_eq!(back, snap);
+            assert_eq!(back.to_bytes(), bytes);
+        });
+    }
+
+    #[test]
+    fn corrupt_snapshots_rejected() {
+        let reg = Registry::new();
+        reg.counter("a").add(1);
+        reg.histogram("h").observe(5);
+        reg.set_label("role", "data");
+        let bytes = reg.snapshot().to_bytes();
+        assert!(MetricsSnapshot::from_bytes(&bytes[..bytes.len() - 1])
+            .is_err());
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] = b'X';
+        assert!(MetricsSnapshot::from_bytes(&bad_magic).is_err());
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(MetricsSnapshot::from_bytes(&trailing).is_err());
+        assert!(MetricsSnapshot::from_bytes(b"").is_err());
+    }
+
+    #[test]
+    fn snapshot_merge_sums_counters_and_histograms() {
+        let a = Registry::new();
+        a.counter("ops").add(3);
+        a.gauge("depth").set(5);
+        a.histogram("lat").observe(100);
+        a.set_label("role", "node");
+        let b = Registry::new();
+        b.counter("ops").add(4);
+        b.counter("only_b").add(1);
+        b.gauge("depth").set(2);
+        b.histogram("lat").observe(200);
+        let m = a.snapshot().merge(&b.snapshot());
+        assert_eq!(m.counter("ops"), Some(7));
+        assert_eq!(m.counter("only_b"), Some(1));
+        assert_eq!(m.gauge("depth"), Some(5), "gauges take the max");
+        assert_eq!(m.histogram("lat").unwrap().count, 2);
+        assert_eq!(m.label("role"), Some("node"));
+    }
+
+    #[test]
+    fn json_rendering_is_wellformed_enough() {
+        let reg = Registry::new();
+        reg.counter("ops").add(2);
+        reg.gauge("q\"uote").set(1);
+        reg.histogram("lat").observe(3);
+        reg.set_label("addr", "127.0.0.1:9000");
+        let json = reg.snapshot().to_json();
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert!(json.contains("\"ops\":2"));
+        assert!(json.contains("\\\"uote"));
+        assert!(json.contains("\"addr\":\"127.0.0.1:9000\""));
+        assert!(json.contains("\"buckets\":[0,0,1]"));
+    }
+}

@@ -1,0 +1,492 @@
+//! Per-task lifecycle tracing: structured events in a bounded ring
+//! buffer, dumpable as JSONL and replayable by an exactly-once
+//! verifier.
+//!
+//! The normal lifecycle of a plan task is
+//!
+//! ```text
+//! Planned → Queued → Assigned(node) → PartitionsFetched → Executed → Completed
+//! ```
+//!
+//! with three detours: a node whose §3.1 budget can't hold the task
+//! emits `Rejected`; a task no live node fits is `Split` into child
+//! tasks (each `Queued` with `parent` set to the originating plan
+//! task, `SpanMerged` when its result folds back in); a task lost to
+//! a dead node is `Requeued`.  Events are stamped by an
+//! [`super::Clock`] at record time, so ordering within one tracer is
+//! meaningful even though absolute values are per-process.
+//!
+//! The buffer is bounded ([`Tracer::new`] takes the capacity): when
+//! full, the *oldest* events are dropped and counted, never the
+//! newest — a stats scrape sees the recent past, and
+//! [`verify_exactly_once`] refuses to certify a truncated trace.
+
+use super::clock::{system_clock, Clock};
+use super::registry::json_string;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// What happened to a task (see module docs for the lifecycle).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TraceEventKind {
+    /// Task exists in the plan.
+    Planned,
+    /// Task entered the scheduler queue.
+    Queued,
+    /// Task handed to a service (`node` is the service id).
+    Assigned,
+    /// Node finished fetching the task's partitions.
+    PartitionsFetched,
+    /// Node finished comparing the task's pairs.
+    Executed,
+    /// A split child's result folded into its root task.
+    SpanMerged,
+    /// Task completed exactly once (roots only).
+    Completed,
+    /// A service's §3.1 budget could not hold the task.
+    Rejected,
+    /// Task was split into child tasks.
+    Split,
+    /// Task re-queued after its service died.
+    Requeued,
+}
+
+impl TraceEventKind {
+    /// Stable snake_case name (the JSONL `kind` field).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TraceEventKind::Planned => "planned",
+            TraceEventKind::Queued => "queued",
+            TraceEventKind::Assigned => "assigned",
+            TraceEventKind::PartitionsFetched => "partitions_fetched",
+            TraceEventKind::Executed => "executed",
+            TraceEventKind::SpanMerged => "span_merged",
+            TraceEventKind::Completed => "completed",
+            TraceEventKind::Rejected => "rejected",
+            TraceEventKind::Split => "split",
+            TraceEventKind::Requeued => "requeued",
+        }
+    }
+}
+
+/// One recorded lifecycle event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Nanosecond stamp from the tracer's clock.
+    pub at_ns: u64,
+    /// Task id the event is about.
+    pub task: u32,
+    /// What happened.
+    pub kind: TraceEventKind,
+    /// Service/node involved, if any.
+    pub node: Option<u64>,
+    /// Root plan task, set on events about split children.
+    pub parent: Option<u32>,
+}
+
+impl TraceEvent {
+    /// One JSONL line (no trailing newline).
+    pub fn to_json(&self) -> String {
+        let mut out = format!(
+            "{{\"at_ns\":{},\"task\":{},\"kind\":{}",
+            self.at_ns,
+            self.task,
+            json_string(self.kind.as_str())
+        );
+        if let Some(n) = self.node {
+            out.push_str(&format!(",\"node\":{n}"));
+        }
+        if let Some(p) = self.parent {
+            out.push_str(&format!(",\"parent\":{p}"));
+        }
+        out.push('}');
+        out
+    }
+}
+
+/// Bounded, thread-safe ring buffer of [`TraceEvent`]s.
+#[derive(Debug)]
+pub struct Tracer {
+    clock: Arc<dyn Clock>,
+    cap: usize,
+    buf: Mutex<VecDeque<TraceEvent>>,
+    dropped: AtomicU64,
+}
+
+/// Default ring capacity: enough for every event of a ~100k-task run
+/// (a task emits ≤ ~8 events) without unbounded growth on servers
+/// that run forever.
+pub const DEFAULT_TRACE_CAPACITY: usize = 1 << 20;
+
+impl Tracer {
+    /// A tracer over the system clock holding at most `cap` events.
+    pub fn new(cap: usize) -> Arc<Tracer> {
+        Tracer::with_clock(cap, system_clock())
+    }
+
+    /// A tracer over an injected clock (deterministic tests).
+    pub fn with_clock(cap: usize, clock: Arc<dyn Clock>) -> Arc<Tracer> {
+        Arc::new(Tracer {
+            clock,
+            cap: cap.max(1),
+            buf: Mutex::new(VecDeque::new()),
+            dropped: AtomicU64::new(0),
+        })
+    }
+
+    /// Record an event about `task`, stamped now.
+    pub fn record(
+        &self,
+        task: u32,
+        kind: TraceEventKind,
+        node: Option<u64>,
+        parent: Option<u32>,
+    ) {
+        let ev = TraceEvent {
+            at_ns: self.clock.now_ns(),
+            task,
+            kind,
+            node,
+            parent,
+        };
+        let mut buf = self.buf.lock().unwrap();
+        if buf.len() == self.cap {
+            buf.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        buf.push_back(ev);
+    }
+
+    /// Copy of the buffered events, oldest first.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.buf.lock().unwrap().iter().copied().collect()
+    }
+
+    /// Events evicted because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Buffered event count.
+    pub fn len(&self) -> usize {
+        self.buf.lock().unwrap().len()
+    }
+
+    /// True when no events are buffered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All buffered events as JSONL (one event per line).
+    pub fn dump_jsonl(&self) -> String {
+        let buf = self.buf.lock().unwrap();
+        let mut out = String::with_capacity(buf.len() * 64);
+        for ev in buf.iter() {
+            out.push_str(&ev.to_json());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Replay the buffered trace against `plan_tasks`, refusing if
+    /// events were dropped (a truncated trace can't prove
+    /// exactly-once).
+    pub fn verify_plan(
+        &self,
+        plan_tasks: &[u32],
+    ) -> Result<ReplaySummary, String> {
+        let dropped = self.dropped();
+        if dropped > 0 {
+            return Err(format!(
+                "{dropped} events dropped from the ring; trace is \
+                 incomplete"
+            ));
+        }
+        verify_exactly_once(&self.events(), plan_tasks)
+    }
+}
+
+/// What a successful replay reconstructed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReplaySummary {
+    /// Plan tasks, each completed exactly once.
+    pub plan_tasks: usize,
+    /// Split children observed.
+    pub subtasks: usize,
+    /// Split events.
+    pub splits: usize,
+    /// Requeue events (tasks recovered from dead services).
+    pub requeues: usize,
+    /// Assignment events (> plan_tasks under rejection/requeue churn).
+    pub assignments: usize,
+}
+
+/// Replay a trace and assert the exactly-once lifecycle invariants:
+///
+/// 1. every task in `plan_tasks` has exactly one `Completed` event;
+/// 2. no other task id has a `Completed` event (children merge, only
+///    roots complete);
+/// 3. every split child (a task `Queued` with a `parent`) is either
+///    `SpanMerged` exactly once or `Split` again — never both, never
+///    twice, never silently lost;
+/// 4. every `Executed` event's task was `Assigned` beforehand.
+///
+/// Together these prove no task was lost or double-completed, even
+/// under chaos (requeues) and runtime splitting.
+pub fn verify_exactly_once(
+    events: &[TraceEvent],
+    plan_tasks: &[u32],
+) -> Result<ReplaySummary, String> {
+    let plan: HashSet<u32> = plan_tasks.iter().copied().collect();
+    let mut completed: HashMap<u32, usize> = HashMap::new();
+    let mut merged: HashMap<u32, usize> = HashMap::new();
+    let mut split: HashMap<u32, usize> = HashMap::new();
+    let mut assigned: HashSet<u32> = HashSet::new();
+    let mut subtasks: HashSet<u32> = HashSet::new();
+    let mut summary = ReplaySummary::default();
+    for ev in events {
+        match ev.kind {
+            TraceEventKind::Completed => {
+                *completed.entry(ev.task).or_default() += 1;
+            }
+            TraceEventKind::SpanMerged => {
+                *merged.entry(ev.task).or_default() += 1;
+            }
+            TraceEventKind::Split => {
+                *split.entry(ev.task).or_default() += 1;
+                summary.splits += 1;
+            }
+            TraceEventKind::Assigned => {
+                assigned.insert(ev.task);
+                summary.assignments += 1;
+            }
+            TraceEventKind::Executed => {
+                if !assigned.contains(&ev.task) {
+                    return Err(format!(
+                        "task {} executed without assignment",
+                        ev.task
+                    ));
+                }
+            }
+            TraceEventKind::Requeued => summary.requeues += 1,
+            TraceEventKind::Queued => {
+                if ev.parent.is_some() {
+                    subtasks.insert(ev.task);
+                }
+            }
+            _ => {}
+        }
+    }
+    for &id in &plan {
+        match completed.get(&id).copied().unwrap_or(0) {
+            1 => {}
+            0 => return Err(format!("plan task {id} never completed")),
+            n => {
+                return Err(format!(
+                    "plan task {id} completed {n} times"
+                ))
+            }
+        }
+    }
+    for (&id, &n) in &completed {
+        if !plan.contains(&id) {
+            return Err(format!(
+                "non-plan task {id} has {n} Completed event(s); only \
+                 roots complete"
+            ));
+        }
+    }
+    for &id in &subtasks {
+        let m = merged.get(&id).copied().unwrap_or(0);
+        let s = split.get(&id).copied().unwrap_or(0);
+        match (m, s) {
+            (1, 0) | (0, 1) => {}
+            (0, 0) => {
+                return Err(format!(
+                    "split child {id} neither merged nor re-split \
+                     (lost)"
+                ))
+            }
+            _ => {
+                return Err(format!(
+                    "split child {id} merged {m}× / split {s}× \
+                     (duplicated)"
+                ))
+            }
+        }
+    }
+    for (&id, &n) in &merged {
+        if n > 1 {
+            return Err(format!("task {id} span-merged {n} times"));
+        }
+    }
+    summary.plan_tasks = plan.len();
+    summary.subtasks = subtasks.len();
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::clock::ManualClock;
+    use super::*;
+
+    fn ev(task: u32, kind: TraceEventKind) -> TraceEvent {
+        TraceEvent {
+            at_ns: 0,
+            task,
+            kind,
+            node: None,
+            parent: None,
+        }
+    }
+
+    fn child_queued(task: u32, parent: u32) -> TraceEvent {
+        TraceEvent {
+            parent: Some(parent),
+            ..ev(task, TraceEventKind::Queued)
+        }
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let clock = Arc::new(ManualClock::new(0));
+        let t = Tracer::with_clock(3, clock.clone());
+        for i in 0..5u32 {
+            clock.advance(10);
+            t.record(i, TraceEventKind::Queued, None, None);
+        }
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.dropped(), 2);
+        let evs = t.events();
+        assert_eq!(
+            evs.iter().map(|e| e.task).collect::<Vec<_>>(),
+            vec![2, 3, 4],
+            "oldest evicted first"
+        );
+        assert!(evs[0].at_ns < evs[2].at_ns);
+        assert!(t.verify_plan(&[2, 3, 4]).is_err(), "truncated trace");
+    }
+
+    #[test]
+    fn jsonl_dump_has_one_line_per_event() {
+        let t = Tracer::new(16);
+        t.record(7, TraceEventKind::Assigned, Some(1), None);
+        t.record(8, TraceEventKind::Queued, None, Some(7));
+        let dump = t.dump_jsonl();
+        let lines: Vec<&str> = dump.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"task\":7"));
+        assert!(lines[0].contains("\"kind\":\"assigned\""));
+        assert!(lines[0].contains("\"node\":1"));
+        assert!(lines[1].contains("\"parent\":7"));
+        assert!(!t.is_empty());
+    }
+
+    #[test]
+    fn verifier_accepts_plain_lifecycle() {
+        let mut evs = Vec::new();
+        for id in [0u32, 1, 2] {
+            evs.push(ev(id, TraceEventKind::Planned));
+            evs.push(ev(id, TraceEventKind::Queued));
+            evs.push(ev(id, TraceEventKind::Assigned));
+            evs.push(ev(id, TraceEventKind::Executed));
+            evs.push(ev(id, TraceEventKind::Completed));
+        }
+        let s = verify_exactly_once(&evs, &[0, 1, 2]).unwrap();
+        assert_eq!(s.plan_tasks, 3);
+        assert_eq!(s.subtasks, 0);
+        assert_eq!(s.assignments, 3);
+    }
+
+    #[test]
+    fn verifier_accepts_split_and_requeue_lifecycle() {
+        let mut evs = vec![
+            ev(0, TraceEventKind::Planned),
+            ev(0, TraceEventKind::Queued),
+            ev(0, TraceEventKind::Assigned),
+            ev(0, TraceEventKind::Rejected),
+            ev(0, TraceEventKind::Split),
+            child_queued(10, 0),
+            child_queued(11, 0),
+        ];
+        // child 10 executes; child 11 is lost to a dead node, requeued,
+        // then split again into 12/13
+        for id in [10u32] {
+            evs.push(ev(id, TraceEventKind::Assigned));
+            evs.push(ev(id, TraceEventKind::Executed));
+            evs.push(ev(id, TraceEventKind::SpanMerged));
+        }
+        evs.push(ev(11, TraceEventKind::Assigned));
+        evs.push(ev(11, TraceEventKind::Requeued));
+        evs.push(ev(11, TraceEventKind::Assigned));
+        evs.push(ev(11, TraceEventKind::Rejected));
+        evs.push(ev(11, TraceEventKind::Split));
+        evs.push(child_queued(12, 0));
+        evs.push(child_queued(13, 0));
+        for id in [12u32, 13] {
+            evs.push(ev(id, TraceEventKind::Assigned));
+            evs.push(ev(id, TraceEventKind::Executed));
+            evs.push(ev(id, TraceEventKind::SpanMerged));
+        }
+        evs.push(ev(0, TraceEventKind::Completed));
+        let s = verify_exactly_once(&evs, &[0]).unwrap();
+        assert_eq!(s.plan_tasks, 1);
+        assert_eq!(s.subtasks, 4);
+        assert_eq!(s.splits, 2);
+        assert_eq!(s.requeues, 1);
+    }
+
+    #[test]
+    fn verifier_rejects_lost_and_duplicated_lifecycles() {
+        // missing completion
+        let evs = vec![ev(0, TraceEventKind::Queued)];
+        assert!(verify_exactly_once(&evs, &[0])
+            .unwrap_err()
+            .contains("never completed"));
+        // double completion
+        let evs = vec![
+            ev(0, TraceEventKind::Assigned),
+            ev(0, TraceEventKind::Completed),
+            ev(0, TraceEventKind::Completed),
+        ];
+        assert!(verify_exactly_once(&evs, &[0])
+            .unwrap_err()
+            .contains("completed 2 times"));
+        // completion of a non-plan task
+        let evs = vec![
+            ev(0, TraceEventKind::Assigned),
+            ev(0, TraceEventKind::Completed),
+            ev(9, TraceEventKind::Completed),
+        ];
+        assert!(verify_exactly_once(&evs, &[0])
+            .unwrap_err()
+            .contains("non-plan task 9"));
+        // lost split child
+        let evs = vec![
+            ev(0, TraceEventKind::Assigned),
+            child_queued(10, 0),
+            ev(0, TraceEventKind::Completed),
+        ];
+        assert!(verify_exactly_once(&evs, &[0])
+            .unwrap_err()
+            .contains("neither merged"));
+        // double-merged split child
+        let evs = vec![
+            ev(0, TraceEventKind::Assigned),
+            child_queued(10, 0),
+            ev(10, TraceEventKind::SpanMerged),
+            ev(10, TraceEventKind::SpanMerged),
+            ev(0, TraceEventKind::Completed),
+        ];
+        assert!(verify_exactly_once(&evs, &[0]).is_err());
+        // execution without assignment
+        let evs = vec![
+            ev(0, TraceEventKind::Executed),
+            ev(0, TraceEventKind::Completed),
+        ];
+        assert!(verify_exactly_once(&evs, &[0])
+            .unwrap_err()
+            .contains("without assignment"));
+    }
+}

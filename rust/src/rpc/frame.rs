@@ -184,6 +184,10 @@ mod tests {
             Message::NoTask { done: true },
             Message::Heartbeat {
                 service: ServiceId(3),
+                busy_ns: 1,
+                cache_hits: 2,
+                cache_misses: 3,
+                tasks_done: 4,
             },
         ] {
             let reply = c.request(&msg).unwrap();

@@ -61,9 +61,18 @@
 //! *every* live node, the scheduler splits its pair space into
 //! sub-tasks that fit the smallest live budget (Kolb et al.'s
 //! BlockSplit, applied at run time), and the span tells the node which
-//! entity-index rectangle of the fetched partitions to compare.  The
-//! authoritative byte-level layout of every frame is specified in
-//! `docs/WIRE_PROTOCOL.md`, kept in lockstep with this module.
+//! entity-index rectangle of the fetched partitions to compare.
+//!
+//! **Live observability (protocol v6).**  Any server answers
+//! [`Message::StatsRequest`] with a [`Message::StatsReport`] carrying
+//! its serialized [`crate::obs::MetricsSnapshot`] — scheduler queue
+//! depth, per-node busy ns, cache hit ratios, fetch-latency histograms
+//! — so `pem stats` can scrape a *running* cluster.
+//! [`Message::Heartbeat`] is enriched with the node's busy-ns and
+//! cache counters, giving the coordinator live per-node load without
+//! extra round trips.  The authoritative byte-level layout of every
+//! frame is specified in `docs/WIRE_PROTOCOL.md`, kept in lockstep
+//! with this module.
 
 #![warn(missing_docs)]
 
@@ -84,8 +93,10 @@ pub use frame::{read_frame, read_frame_raw, write_frame, Transport, MAX_FRAME_BY
 /// v4 — §3.1 memory-aware assignment (footprints on every assignment,
 /// [`Message::TaskRejected`]); v5 — runtime task splitting (node
 /// budget on [`Message::Join`], optional [`TaskSpan`] on every
-/// assignment).
-pub const PROTOCOL_VERSION: u8 = 5;
+/// assignment); v6 — live observability ([`Message::StatsRequest`] /
+/// [`Message::StatsReport`] management frames, enriched
+/// [`Message::Heartbeat`] carrying busy-ns and cache counters).
+pub const PROTOCOL_VERSION: u8 = 6;
 
 use crate::coordinator::scheduler::ServiceId;
 use crate::features::{EntityFeatures, QGramSet, TokenSet};
@@ -237,10 +248,21 @@ pub enum Message {
         /// Correspondences the task found.
         matches: Vec<Correspondence>,
     },
-    /// match service → workflow service: liveness signal.
+    /// match service → workflow service: liveness signal.  Since v6
+    /// the heartbeat doubles as a cheap stats push: the cumulative
+    /// busy-ns and cache counters ride along, so the coordinator has
+    /// live per-node load for `pem stats` without extra round trips.
     Heartbeat {
         /// The live service.
         service: ServiceId,
+        /// Cumulative ns this node's workers spent executing tasks.
+        busy_ns: u64,
+        /// Cumulative partition-cache hits on this node.
+        cache_hits: u64,
+        /// Cumulative partition-cache misses on this node.
+        cache_misses: u64,
+        /// Tasks this node has completed so far.
+        tasks_done: u64,
     },
     /// workflow service → match service: liveness acknowledged.
     HeartbeatAck,
@@ -334,6 +356,22 @@ pub enum Message {
         /// Number of partition frames pushed in this stream.
         count: u32,
     },
+    /// any client → any server (v6): scrape the server's live
+    /// metrics.  Every server — workflow, data, replica — answers
+    /// with a [`Message::StatsReport`]; the frame carries no fields
+    /// so it can be sent by an operator tool (`pem stats`) that knows
+    /// nothing about the server's role.
+    StatsRequest,
+    /// server → client (v6): the server's current
+    /// [`crate::obs::MetricsSnapshot`], in its canonical byte format
+    /// (`PEMSTAT` magic; decoded with
+    /// [`crate::obs::MetricsSnapshot::from_bytes`]).  The snapshot
+    /// travels as opaque bytes so the wire layer needs no knowledge
+    /// of metric names.
+    StatsReport {
+        /// Serialized `MetricsSnapshot`.
+        stats: Vec<u8>,
+    },
     /// Either direction: request failed.
     Error {
         /// Human-readable failure description.
@@ -364,6 +402,8 @@ const TAG_SYNC_DONE: u8 = 18;
 const TAG_TASK_REQUEST_BATCH: u8 = 19;
 const TAG_TASK_ASSIGN_BATCH: u8 = 20;
 const TAG_TASK_REJECTED: u8 = 21;
+const TAG_STATS_REQUEST: u8 = 22;
+const TAG_STATS_REPORT: u8 = 23;
 
 /// Minimum wire footprint of one [`EntityFeatures`]: a 4-byte title
 /// length plus three 4-byte list counts (all possibly zero).
@@ -557,9 +597,19 @@ impl Message {
                     put_f32(&mut b, c.sim);
                 }
             }
-            Message::Heartbeat { service } => {
+            Message::Heartbeat {
+                service,
+                busy_ns,
+                cache_hits,
+                cache_misses,
+                tasks_done,
+            } => {
                 put_u8(&mut b, TAG_HEARTBEAT);
                 put_service(&mut b, *service);
+                put_u64(&mut b, *busy_ns);
+                put_u64(&mut b, *cache_hits);
+                put_u64(&mut b, *cache_misses);
+                put_u64(&mut b, *tasks_done);
             }
             Message::HeartbeatAck => put_u8(&mut b, TAG_HEARTBEAT_ACK),
             Message::TaskRequestBatch {
@@ -634,6 +684,12 @@ impl Message {
                 put_u8(&mut b, TAG_SYNC_DONE);
                 put_u32(&mut b, *count);
             }
+            Message::StatsRequest => put_u8(&mut b, TAG_STATS_REQUEST),
+            Message::StatsReport { stats } => {
+                put_u8(&mut b, TAG_STATS_REPORT);
+                put_u32(&mut b, stats.len() as u32);
+                b.extend_from_slice(stats);
+            }
             Message::Error { message } => {
                 put_u8(&mut b, TAG_ERROR);
                 put_str(&mut b, message);
@@ -704,6 +760,10 @@ impl Message {
             }
             TAG_HEARTBEAT => Message::Heartbeat {
                 service: d.service()?,
+                busy_ns: d.u64()?,
+                cache_hits: d.u64()?,
+                cache_misses: d.u64()?,
+                tasks_done: d.u64()?,
             },
             TAG_HEARTBEAT_ACK => Message::HeartbeatAck,
             TAG_TASK_REQUEST_BATCH => {
@@ -802,6 +862,13 @@ impl Message {
                 have: d.partition_list()?,
             },
             TAG_SYNC_DONE => Message::SyncDone { count: d.u32()? },
+            TAG_STATS_REQUEST => Message::StatsRequest,
+            TAG_STATS_REPORT => Message::StatsReport {
+                stats: {
+                    let n = d.list_len(1)?;
+                    d.take(n)?.to_vec()
+                },
+            },
             TAG_ERROR => Message::Error {
                 message: d.string()?,
             },
@@ -834,6 +901,8 @@ impl Message {
             Message::Redirect { .. } => "Redirect",
             Message::SyncRequest { .. } => "SyncRequest",
             Message::SyncDone { .. } => "SyncDone",
+            Message::StatsRequest => "StatsRequest",
+            Message::StatsReport { .. } => "StatsReport",
             Message::Error { .. } => "Error",
         }
     }
@@ -1083,8 +1152,20 @@ pub(crate) mod testutil {
                     })
                     .collect(),
             },
-            Message::Heartbeat { service: svc },
+            Message::Heartbeat {
+                service: svc,
+                busy_ns: rng.gen_range(1 << 40) as u64,
+                cache_hits: rng.gen_range(1 << 20) as u64,
+                cache_misses: rng.gen_range(1 << 20) as u64,
+                tasks_done: rng.gen_range(1 << 16) as u64,
+            },
             Message::HeartbeatAck,
+            Message::StatsRequest,
+            Message::StatsReport {
+                stats: (0..rng.gen_range(64))
+                    .map(|_| rng.gen_range(256) as u8)
+                    .collect(),
+            },
             Message::FetchPartition {
                 id: PartitionId(rng.gen_range(500) as u32),
             },
@@ -1598,6 +1679,68 @@ mod tests {
         };
         assert_eq!(service, ServiceId(3));
         assert_eq!(task_id, 7);
+    }
+
+    /// The v6 observability frames: a `StatsRequest` is a bare tag, a
+    /// `StatsReport` carries an opaque snapshot blob that round-trips
+    /// bit-exactly (and decodes as a real `MetricsSnapshot`).
+    #[test]
+    fn v6_stats_frames_roundtrip() {
+        let req = Message::StatsRequest;
+        assert_eq!(req.encode(), vec![TAG_STATS_REQUEST]);
+        assert!(matches!(
+            Message::decode(&req.encode()),
+            Ok(Message::StatsRequest)
+        ));
+
+        let reg = crate::obs::Registry::new();
+        reg.counter("tasks_completed").add(17);
+        reg.histogram("fetch_ns").observe(1_000_000);
+        reg.set_label("role", "workflow");
+        let snap = reg.snapshot();
+        let msg = Message::StatsReport {
+            stats: snap.to_bytes(),
+        };
+        let Ok(Message::StatsReport { stats }) =
+            Message::decode(&msg.encode())
+        else {
+            panic!("decode StatsReport");
+        };
+        let back =
+            crate::obs::MetricsSnapshot::from_bytes(&stats).unwrap();
+        assert_eq!(back, snap);
+        // lying blob length rejected before allocation
+        let mut b = vec![TAG_STATS_REPORT];
+        put_u32(&mut b, u32::MAX);
+        assert!(matches!(Message::decode(&b), Err(WireError::Truncated)));
+    }
+
+    /// The v6 heartbeat: the liveness frame doubles as a stats push;
+    /// the load counters round-trip exactly.
+    #[test]
+    fn v6_heartbeat_carries_load_counters() {
+        let hb = Message::Heartbeat {
+            service: ServiceId(2),
+            busy_ns: 123_456_789_000,
+            cache_hits: 40,
+            cache_misses: 8,
+            tasks_done: 31,
+        };
+        let Ok(Message::Heartbeat {
+            service,
+            busy_ns,
+            cache_hits,
+            cache_misses,
+            tasks_done,
+        }) = Message::decode(&hb.encode())
+        else {
+            panic!("decode Heartbeat");
+        };
+        assert_eq!(service, ServiceId(2));
+        assert_eq!(busy_ns, 123_456_789_000);
+        assert_eq!(cache_hits, 40);
+        assert_eq!(cache_misses, 8);
+        assert_eq!(tasks_done, 31);
     }
 
     /// Hostile batch counts are rejected before any allocation, like

@@ -32,6 +32,9 @@
 
 use crate::net::reactor::{Action, ConnId, FrameHandler, Reactor};
 use crate::net::TrafficStats;
+use crate::obs::{
+    system_clock, Clock, Counter, Histogram, MetricsSnapshot, Registry,
+};
 use crate::partition::PartitionId;
 use crate::rpc::session::SessionEncoder;
 use crate::rpc::{encode_partition_message, Message, Transport};
@@ -84,6 +87,17 @@ struct DataShared {
     /// match-service caches are small).  Replicas are seeded by the
     /// sync stream instead of a store.
     encoded: Mutex<HashMap<PartitionId, Arc<Vec<u8>>>>,
+    /// This server's metrics; scraped live over the wire by
+    /// `StatsRequest` (protocol v6, `pem stats`).
+    registry: Arc<Registry>,
+    /// Monotonic clock for the fetch-serve latency histogram.
+    clock: Arc<dyn Clock>,
+    /// Nanoseconds from fetch-frame decode to response queued.
+    fetch_serve_ns: Arc<Histogram>,
+    /// Fetches answered with a partition payload.
+    fetches_served: Arc<Counter>,
+    /// Fetches answered with a redirect (unsynced replica).
+    redirects: Arc<Counter>,
 }
 
 impl DataShared {
@@ -127,6 +141,18 @@ impl DataShared {
                 ids
             }
         }
+    }
+
+    /// Refresh the point-in-time gauges and snapshot the registry —
+    /// the payload of a `StatsReport` and of
+    /// [`DataServiceServer::stats`].
+    fn stats_snapshot(&self) -> MetricsSnapshot {
+        let r = &self.registry;
+        r.gauge("partitions_held").set(self.held_ids().len() as u64);
+        r.gauge("wire_bytes").set(self.wire.total_bytes());
+        r.gauge("wire_messages").set(self.wire.total_messages());
+        r.gauge("synced").set(self.synced.load(Ordering::SeqCst) as u64);
+        r.snapshot()
     }
 
     /// The encoded frame for `id` **without** logical fetch accounting
@@ -209,6 +235,16 @@ impl DataServiceServer {
         let listener = TcpListener::bind(bind)?;
         let addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
+        let registry = Arc::new(Registry::new());
+        registry.set_label(
+            "role",
+            if matches!(backing, Backing::Primary(_)) {
+                "data-primary"
+            } else {
+                "data-replica"
+            },
+        );
+        registry.set_label("addr", &addr.to_string());
         let shared = Arc::new(DataShared {
             backing,
             wire: TrafficStats::new(),
@@ -217,6 +253,11 @@ impl DataServiceServer {
             sync_started: AtomicBool::new(false),
             upstream_lost: AtomicBool::new(false),
             encoded: Mutex::new(HashMap::new()),
+            clock: system_clock(),
+            fetch_serve_ns: registry.histogram("fetch_serve_ns"),
+            fetches_served: registry.counter("fetches_served"),
+            redirects: registry.counter("redirects"),
+            registry,
         });
         let reactor = Reactor::new(
             listener,
@@ -298,6 +339,14 @@ impl DataServiceServer {
         self.shared.wire.total_messages()
     }
 
+    /// A live metrics snapshot of this server — the same payload a
+    /// wire `StatsRequest` gets: fetch counters, the fetch-serve
+    /// latency histogram, and point-in-time gauges (partitions held,
+    /// wire traffic, sync state).
+    pub fn stats(&self) -> MetricsSnapshot {
+        self.shared.stats_snapshot()
+    }
+
     /// Stop the server: the reactor exits at its next tick and drops
     /// every open connection, unblocking clients with an I/O error.
     pub fn shutdown(&self) {
@@ -332,19 +381,33 @@ impl FrameHandler for DataHandler {
         };
         let sent = match msg {
             Message::FetchPartition { id } => {
-                match self.shared.serve(id) {
-                    Served::Payload(payload) => out.queue_payload(&payload),
+                let t0 = self.shared.clock.now_ns();
+                let sent = match self.shared.serve(id) {
+                    Served::Payload(payload) => {
+                        self.shared.fetches_served.inc();
+                        out.queue_payload(&payload)
+                    }
                     Served::Redirect(addr) => {
+                        self.shared.redirects.inc();
                         out.queue_message(&Message::Redirect { addr })
                     }
                     Served::Unknown => out.queue_message(&Message::Error {
                         message: format!("unknown partition {id}"),
                     }),
-                }
+                };
+                self.shared.fetch_serve_ns.observe(
+                    self.shared.clock.now_ns().saturating_sub(t0),
+                );
+                sent
             }
             Message::SyncRequest { have } => {
                 queue_sync(&self.shared, out, &have)
             }
+            Message::StatsRequest => out.queue_message(
+                &Message::StatsReport {
+                    stats: self.shared.stats_snapshot().to_bytes(),
+                },
+            ),
             other => out.queue_message(&Message::Error {
                 message: format!(
                     "data service got unexpected {}",
@@ -619,6 +682,39 @@ mod tests {
         assert!(matches!(reply, Message::Partition { .. }));
         replica.shutdown();
         primary.shutdown();
+    }
+
+    /// A `StatsRequest` over the wire returns the same live snapshot
+    /// as [`DataServiceServer::stats`]: role label, fetch counters,
+    /// and a fetch-serve latency histogram with one observation per
+    /// fetch frame.
+    #[test]
+    fn stats_request_scrapes_live_fetch_metrics() {
+        let srv = DataServiceServer::start(store(), "127.0.0.1:0").unwrap();
+        let mut c = Transport::connect(srv.addr(), Duration::from_secs(5))
+            .unwrap();
+        for id in [PartitionId(0), PartitionId(1), PartitionId(0)] {
+            let reply =
+                c.request(&Message::FetchPartition { id }).unwrap();
+            assert!(matches!(reply, Message::Partition { .. }));
+        }
+        let reply = c.request(&Message::StatsRequest).unwrap();
+        let Message::StatsReport { stats } = reply else {
+            panic!("expected stats report, got {}", reply.kind());
+        };
+        let snap = MetricsSnapshot::from_bytes(&stats).unwrap();
+        assert_eq!(snap.label("role"), Some("data-primary"));
+        assert_eq!(snap.label("addr"), Some(srv.addr().to_string()).as_deref());
+        assert_eq!(snap.counter("fetches_served"), Some(3));
+        assert_eq!(snap.counter("redirects"), Some(0));
+        assert_eq!(snap.gauge("partitions_held"), Some(2));
+        assert_eq!(snap.gauge("synced"), Some(1));
+        assert!(snap.gauge("wire_bytes").unwrap() > 0);
+        let hist = snap.histogram("fetch_serve_ns").unwrap();
+        assert_eq!(hist.count, 3);
+        // the in-process accessor agrees (wire gauges may have moved)
+        assert_eq!(srv.stats().counter("fetches_served"), Some(3));
+        srv.shutdown();
     }
 
     /// A replica notices when its upstream goes away after sync.

@@ -45,6 +45,7 @@
 //! and re-queue.
 
 use crate::coordinator::scheduler::ServiceId;
+use crate::obs::{system_clock, Clock, TraceEventKind, Tracer};
 use crate::partition::{MatchTask, PartitionId, TaskSpan};
 use crate::rpc::{CompletedTask, Message, Transport, PROTOCOL_VERSION};
 use crate::service::replica::ReplicaSelector;
@@ -53,10 +54,10 @@ use crate::worker::{task_comparisons, PartitionCache, TaskExecutor};
 use anyhow::{bail, Context, Result};
 use std::collections::{HashMap, VecDeque};
 use std::io;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Configuration of one match-service node.
 #[derive(Clone, Debug)]
@@ -101,6 +102,13 @@ pub struct MatchNodeConfig {
     pub replica_retry_cooldown: Duration,
     /// Test hook: simulate a crash after completing this many tasks.
     pub fail_after_tasks: Option<usize>,
+    /// Optional in-process lifecycle tracer: each executed task emits
+    /// `PartitionsFetched` (both inputs warm) and `Executed` events
+    /// tagged with this node's [`ServiceId`].  Useful when the
+    /// workflow service runs in the same process (the distributed
+    /// engine, integration tests) so node events interleave with the
+    /// scheduler's in one replayable stream.
+    pub tracer: Option<Arc<Tracer>>,
 }
 
 impl MatchNodeConfig {
@@ -122,6 +130,7 @@ impl MatchNodeConfig {
             replica_retry_cooldown:
                 crate::service::replica::DEFAULT_RETRY_COOLDOWN,
             fail_after_tasks: None,
+            tracer: None,
         }
     }
 }
@@ -225,6 +234,16 @@ struct WorkerStats {
     lost_coordinator: bool,
 }
 
+/// Node-wide load counters the workers bump and the heartbeat thread
+/// reads, so every protocol-v6 `Heartbeat` carries a live load report
+/// (cache hits/misses come straight from the shared
+/// [`PartitionCache`]).
+#[derive(Default)]
+struct NodeLoad {
+    busy_ns: AtomicU64,
+    tasks_done: AtomicU64,
+}
+
 /// Does `mem_bytes` exceed this node's §3.1 budget?
 fn oversize(cfg: &MatchNodeConfig, mem_bytes: u64) -> bool {
     cfg.task_memory_budget.is_some_and(|budget| mem_bytes > budget)
@@ -265,6 +284,8 @@ pub fn run_match_node(
     let dead = AtomicBool::new(false); // crash simulation tripped
     let done = AtomicBool::new(false); // workflow finished
     let completed_total = AtomicUsize::new(0);
+    let load = NodeLoad::default();
+    let clock = system_clock();
     // batch-mode prefetch channel: workers push the partitions of
     // their *queued* tasks, the prefetcher warms the shared cache
     let (prefetch_tx, prefetch_rx) =
@@ -274,7 +295,9 @@ pub fn run_match_node(
     let worker_results: Vec<Result<WorkerStats>> = std::thread::scope(|s| {
         // heartbeat thread: its own connection, stops on done/dead
         // (joined implicitly at scope exit, right after `done` is set)
-        let _heartbeat = s.spawn(|| heartbeat_loop(cfg, service, &done, &dead));
+        let _heartbeat = s.spawn(|| {
+            heartbeat_loop(cfg, service, &done, &dead, &cache, &load)
+        });
 
         if use_prefetch {
             let pcache = &cache;
@@ -298,6 +321,9 @@ pub fn run_match_node(
                     selector: &selector,
                     completed_total: &completed_total,
                     dead: &dead,
+                    load: &load,
+                    clock: clock.as_ref(),
+                    tracer: cfg.tracer.as_deref(),
                 };
                 let tx = prefetch_tx.clone();
                 s.spawn(move || {
@@ -353,6 +379,8 @@ fn heartbeat_loop(
     service: ServiceId,
     done: &AtomicBool,
     dead: &AtomicBool,
+    cache: &PartitionCache,
+    load: &NodeLoad,
 ) {
     let Ok(mut t) =
         Transport::connect(cfg.workflow_addr.as_str(), cfg.io_timeout)
@@ -364,7 +392,16 @@ fn heartbeat_loop(
         if done.load(Ordering::SeqCst) || dead.load(Ordering::SeqCst) {
             break;
         }
-        match t.request(&Message::Heartbeat { service }) {
+        // liveness + a live load report (protocol v6): the coordinator
+        // publishes these as per-node gauges for `pem stats`
+        let beat = Message::Heartbeat {
+            service,
+            busy_ns: load.busy_ns.load(Ordering::Relaxed),
+            cache_hits: cache.hits(),
+            cache_misses: cache.misses(),
+            tasks_done: load.tasks_done.load(Ordering::Relaxed),
+        };
+        match t.request(&beat) {
             // fenced: the coordinator declared this node dead — stop
             // heartbeating for good (the workers hit the same wall and
             // wind the node down)
@@ -395,6 +432,18 @@ struct WorkerCtx<'a> {
     selector: &'a ReplicaSelector,
     completed_total: &'a AtomicUsize,
     dead: &'a AtomicBool,
+    load: &'a NodeLoad,
+    clock: &'a dyn Clock,
+    tracer: Option<&'a Tracer>,
+}
+
+impl WorkerCtx<'_> {
+    /// Emit a node-side lifecycle event when a tracer is configured.
+    fn trace(&self, task: u32, kind: TraceEventKind) {
+        if let Some(t) = self.tracer {
+            t.record(task, kind, Some(self.service.0 as u64), None);
+        }
+    }
 }
 
 /// Fetch, execute and account one assigned task — the core both
@@ -413,7 +462,7 @@ fn execute_task(
     task: &MatchTask,
     span: Option<TaskSpan>,
 ) -> Result<CompletedTask> {
-    let t0 = Instant::now();
+    let t0 = ctx.clock.now_ns();
     let same_partition = task.left == task.right;
     let fetched = (|| {
         let left =
@@ -435,6 +484,7 @@ fn execute_task(
             )));
         }
     };
+    ctx.trace(task.id, TraceEventKind::PartitionsFetched);
     let (left, right, intra) = match span {
         None => (left, right, same_partition),
         Some(s) => {
@@ -467,9 +517,13 @@ fn execute_task(
     } else {
         task_comparisons(task, left.len(), right.len())
     };
-    stats.busy_ns += t0.elapsed().as_nanos() as u64;
+    ctx.trace(task.id, TraceEventKind::Executed);
+    let busy = ctx.clock.now_ns().saturating_sub(t0);
+    stats.busy_ns += busy;
     stats.completed += 1;
     stats.comparisons += n_cmp;
+    ctx.load.busy_ns.fetch_add(busy, Ordering::Relaxed);
+    ctx.load.tasks_done.fetch_add(1, Ordering::Relaxed);
     ctx.completed_total.fetch_add(1, Ordering::SeqCst);
     Ok(CompletedTask {
         task_id: task.id,

@@ -25,13 +25,14 @@
 //! cooldown* — the caller treats that like the old single-data-server
 //! fetch failure (abandon the node, let the workflow service re-queue).
 
+use crate::obs::{system_clock, Clock};
 use crate::partition::PartitionId;
 use crate::rpc::{Message, Transport, PROTOCOL_VERSION};
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
-use std::time::{Duration, Instant};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Default re-admission cooldown for a written-off replica.
 pub const DEFAULT_RETRY_COOLDOWN: Duration = Duration::from_secs(3);
@@ -39,10 +40,9 @@ pub const DEFAULT_RETRY_COOLDOWN: Duration = Duration::from_secs(3);
 struct ReplicaState {
     addr: String,
     alive: AtomicBool,
-    /// When the replica was written off (None while alive).  Guards
-    /// the re-admission clock; `Mutex` because `Instant` is not
-    /// atomic.
-    dead_since: Mutex<Option<Instant>>,
+    /// [`Clock`] timestamp (ns) when the replica was written off
+    /// (`None` while alive); guards the re-admission clock.
+    dead_since: Mutex<Option<u64>>,
     /// Fetches in flight right now (across this node's workers).
     outstanding: AtomicUsize,
     /// Fetches ever started against this replica.
@@ -61,6 +61,9 @@ pub struct ReplicaSelector {
     /// How long a dead replica stays excluded before selection tries
     /// it again.
     cooldown: Duration,
+    /// The monotonic clock driving the cooldown — injectable, so tests
+    /// advance it deterministically ([`crate::obs::ManualClock`]).
+    clock: Arc<dyn Clock>,
 }
 
 impl ReplicaSelector {
@@ -72,10 +75,22 @@ impl ReplicaSelector {
         ReplicaSelector::with_cooldown(addrs, DEFAULT_RETRY_COOLDOWN)
     }
 
-    /// Build a selector with an explicit re-admission cooldown.
+    /// Build a selector with an explicit re-admission cooldown, timed
+    /// by the system [`Clock`].
     pub fn with_cooldown(
         addrs: Vec<String>,
         cooldown: Duration,
+    ) -> ReplicaSelector {
+        ReplicaSelector::with_clock(addrs, cooldown, system_clock())
+    }
+
+    /// Build a selector with an explicit cooldown **and** clock — the
+    /// injection point that lets tests drive re-admission through a
+    /// [`crate::obs::ManualClock`] instead of sleeping.
+    pub fn with_clock(
+        addrs: Vec<String>,
+        cooldown: Duration,
+        clock: Arc<dyn Clock>,
     ) -> ReplicaSelector {
         let mut seen: Vec<String> = Vec::new();
         for a in addrs {
@@ -98,6 +113,7 @@ impl ReplicaSelector {
             failovers: AtomicU64::new(0),
             readmissions: AtomicU64::new(0),
             cooldown,
+            clock,
         }
     }
 
@@ -137,12 +153,7 @@ impl ReplicaSelector {
     /// Choose a replica for fetching `id`; `None` when all are dead
     /// and still cooling down.
     pub fn select(&self, id: PartitionId) -> Option<usize> {
-        self.select_at(id, Instant::now())
-    }
-
-    /// [`Self::select`] with an explicit clock (unit tests drive the
-    /// cooldown deterministically through this).
-    fn select_at(&self, id: PartitionId, now: Instant) -> Option<usize> {
+        let now = self.clock.now_ns();
         self.readmit_due(now);
         if let Some(&i) = self.locality.lock().unwrap().get(&id) {
             if self.replicas[i].alive.load(Ordering::SeqCst) {
@@ -164,8 +175,9 @@ impl ReplicaSelector {
     }
 
     /// Re-admit every dead replica whose cooldown has elapsed at
-    /// `now`.
-    fn readmit_due(&self, now: Instant) {
+    /// `now` (a [`Clock`] timestamp, ns).
+    fn readmit_due(&self, now: u64) {
+        let cooldown_ns = self.cooldown.as_nanos() as u64;
         for r in &self.replicas {
             if r.alive.load(Ordering::SeqCst) {
                 continue;
@@ -173,7 +185,7 @@ impl ReplicaSelector {
             let mut dead_since = r.dead_since.lock().unwrap();
             let due = matches!(
                 *dead_since,
-                Some(at) if now.duration_since(at) >= self.cooldown
+                Some(at) if now.saturating_sub(at) >= cooldown_ns
             );
             if due {
                 *dead_since = None;
@@ -204,18 +216,13 @@ impl ReplicaSelector {
     /// cooldown elapses and forget its locality entries.  Counts one
     /// failover.
     pub fn mark_dead(&self, idx: usize) {
-        self.mark_dead_at(idx, Instant::now());
-    }
-
-    /// [`Self::mark_dead`] with an explicit clock (for the cooldown
-    /// unit tests).
-    fn mark_dead_at(&self, idx: usize, now: Instant) {
         if self.replicas[idx].alive.swap(false, Ordering::SeqCst) {
             self.failovers.fetch_add(1, Ordering::SeqCst);
         }
         // (re-)start the cooldown clock even when already dead, so a
         // failure during re-probing pushes the next retry out again
-        *self.replicas[idx].dead_since.lock().unwrap() = Some(now);
+        *self.replicas[idx].dead_since.lock().unwrap() =
+            Some(self.clock.now_ns());
         self.locality.lock().unwrap().retain(|_, v| *v != idx);
     }
 
@@ -268,6 +275,7 @@ pub fn announce_replica(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::ManualClock;
 
     fn selector(n: usize) -> ReplicaSelector {
         ReplicaSelector::new(
@@ -342,35 +350,37 @@ mod tests {
 
     /// The ROADMAP follow-up: a written-off replica is retried after
     /// the cooldown instead of being banned for the rest of the run.
-    /// Driven through an explicit clock so the test is deterministic.
+    /// Driven through a [`ManualClock`] so the test is deterministic —
+    /// no sleeping, time advances only when told to.
     #[test]
     fn dead_replica_readmitted_after_cooldown() {
         let cd = Duration::from_secs(5);
-        let s = ReplicaSelector::with_cooldown(
+        let cd_ns = cd.as_nanos() as u64;
+        let clock = Arc::new(ManualClock::new(0));
+        let s = ReplicaSelector::with_clock(
             vec!["a:1".into(), "b:2".into()],
             cd,
+            clock.clone(),
         );
-        let t0 = Instant::now();
-        s.mark_dead_at(0, t0);
+        s.mark_dead(0);
         assert_eq!(s.live_count(), 1);
         // within the cooldown the dead replica stays excluded
-        let just_before = t0 + cd - Duration::from_millis(1);
-        assert_eq!(s.select_at(PartitionId(1), just_before), Some(1));
+        clock.set(cd_ns - 1);
+        assert_eq!(s.select(PartitionId(1)), Some(1));
         assert_eq!(s.live_count(), 1);
         assert_eq!(s.readmissions(), 0);
         // at the cooldown boundary it rejoins the rotation
-        assert_eq!(s.select_at(PartitionId(1), t0 + cd), Some(0));
+        clock.set(cd_ns);
+        assert_eq!(s.select(PartitionId(1)), Some(0));
         assert_eq!(s.live_count(), 2);
         assert_eq!(s.readmissions(), 1);
         // a second failure re-starts the clock (and counts a failover)
-        s.mark_dead_at(0, t0 + cd);
+        s.mark_dead(0);
         assert_eq!(s.failovers(), 2);
-        assert_eq!(
-            s.select_at(PartitionId(1), t0 + cd + cd / 2),
-            Some(1),
-            "cooling down again"
-        );
-        assert_eq!(s.select_at(PartitionId(1), t0 + cd + cd), Some(0));
+        clock.set(cd_ns + cd_ns / 2);
+        assert_eq!(s.select(PartitionId(1)), Some(1), "cooling down again");
+        clock.set(cd_ns + cd_ns);
+        assert_eq!(s.select(PartitionId(1)), Some(0));
         assert_eq!(s.readmissions(), 2);
     }
 
@@ -380,13 +390,17 @@ mod tests {
     #[test]
     fn all_dead_recovers_after_cooldown() {
         let cd = Duration::from_secs(2);
-        let s =
-            ReplicaSelector::with_cooldown(vec!["a:1".into()], cd);
-        let t0 = Instant::now();
-        s.mark_dead_at(0, t0);
-        assert_eq!(s.select_at(PartitionId(0), t0), None);
+        let clock = Arc::new(ManualClock::new(0));
+        let s = ReplicaSelector::with_clock(
+            vec!["a:1".into()],
+            cd,
+            clock.clone(),
+        );
+        s.mark_dead(0);
+        assert_eq!(s.select(PartitionId(0)), None);
+        clock.set(cd.as_nanos() as u64);
         assert_eq!(
-            s.select_at(PartitionId(0), t0 + cd),
+            s.select(PartitionId(0)),
             Some(0),
             "sole replica retried after cooldown"
         );
@@ -397,19 +411,24 @@ mod tests {
     #[test]
     fn reprobe_failure_restarts_cooldown_clock() {
         let cd = Duration::from_secs(4);
-        let s = ReplicaSelector::with_cooldown(
+        let cd_ns = cd.as_nanos() as u64;
+        let clock = Arc::new(ManualClock::new(0));
+        let s = ReplicaSelector::with_clock(
             vec!["a:1".into(), "b:2".into()],
             cd,
+            clock.clone(),
         );
-        let t0 = Instant::now();
-        s.mark_dead_at(0, t0);
+        s.mark_dead(0);
         // a later failure report (e.g. the re-probe also failed)
-        s.mark_dead_at(0, t0 + Duration::from_secs(3));
+        let second_failure = Duration::from_secs(3).as_nanos() as u64;
+        clock.set(second_failure);
+        s.mark_dead(0);
         // the original cooldown expiry no longer re-admits it
-        assert_eq!(s.select_at(PartitionId(9), t0 + cd), Some(1));
+        clock.set(cd_ns);
+        assert_eq!(s.select(PartitionId(9)), Some(1));
         assert_eq!(s.live_count(), 1);
         // only the restarted clock does
-        let t_restart = t0 + Duration::from_secs(3) + cd;
-        assert_eq!(s.select_at(PartitionId(9), t_restart), Some(0));
+        clock.set(second_failure + cd_ns);
+        assert_eq!(s.select(PartitionId(9)), Some(0));
     }
 }

@@ -53,12 +53,15 @@ use crate::coordinator::scheduler::{
 use crate::model::Correspondence;
 use crate::net::reactor::{Action, ConnId, FrameHandler, Reactor};
 use crate::net::TrafficStats;
+use crate::obs::{
+    system_clock, Clock, Counter, MetricsSnapshot, Registry, Tracer,
+};
 use crate::partition::MatchTask;
 use crate::rpc::session::SessionEncoder;
 use crate::rpc::{AssignedTask, CompletedTask, Message, PROTOCOL_VERSION};
 use std::collections::{HashMap, HashSet};
 use std::net::{SocketAddr, TcpListener};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -92,6 +95,11 @@ pub struct WorkflowServerConfig {
     /// still connecting.  The dist engine sets its node count; an
     /// elastic `pem serve` keeps the default 1.
     pub expected_services: usize,
+    /// Lifecycle tracer handed to the scheduler: every scheduling
+    /// decision (assignment, rejection, splitting, requeueing,
+    /// completion) is recorded for `--trace` dumps and the
+    /// exactly-once replay verifier.  `None` disables tracing.
+    pub tracer: Option<Arc<Tracer>>,
 }
 
 impl Default for WorkflowServerConfig {
@@ -102,13 +110,15 @@ impl Default for WorkflowServerConfig {
             task_mem: HashMap::new(),
             task_sizes: HashMap::new(),
             expected_services: 1,
+            tracer: None,
         }
     }
 }
 
 struct Member {
     name: String,
-    last_seen: Instant,
+    /// [`Clock`] timestamp (ns) of the last frame from this service.
+    last_seen: u64,
 }
 
 struct WfShared {
@@ -116,38 +126,46 @@ struct WfShared {
     results: Mutex<Vec<Correspondence>>,
     members: Mutex<HashMap<usize, Member>>,
     next_service: AtomicUsize,
-    comparisons: AtomicU64,
+    /// Metrics registry behind every counter below; snapshotted for
+    /// `StatsReport` replies and the final report.  The counters are
+    /// registry handles (one relaxed atomic each), so the hot paths
+    /// pay no name lookups.
+    registry: Arc<Registry>,
+    comparisons: Arc<Counter>,
     /// Control-plane frames received (assignments are counted on send
     /// inside the reply to the same frame, so this ≈ the paper's
     /// "2 messages per task" plus heartbeats and membership).
-    control_messages: AtomicU64,
+    control_messages: Arc<Counter>,
     /// Heartbeat frames received (subset of `control_messages`;
     /// subtracting them isolates the per-task coordination cost).
-    heartbeats: AtomicU64,
+    heartbeats: Arc<Counter>,
     /// v3 batch pulls received ([`Message::TaskRequestBatch`]).
-    batch_requests: AtomicU64,
+    batch_requests: Arc<Counter>,
     /// Pulls that carried no completion report (initial requests and
     /// drain-time polls) — the round trips whose *only* purpose was
     /// obtaining work.  With completion piggybacking these are the
     /// marginal assignment cost, near zero per task.
-    assignment_pulls: AtomicU64,
+    assignment_pulls: Arc<Counter>,
     /// Control-plane wire bytes sent (replies).
     traffic: TrafficStats,
-    requeued_tasks: AtomicU64,
-    stale_completions: AtomicU64,
+    requeued_tasks: Arc<Counter>,
+    stale_completions: Arc<Counter>,
     /// Fresh oversize rejections (`TaskRejected`, v4) — tasks handed
     /// back because their §3.1 footprint exceeded a node's budget.
-    oversize_rejections: AtomicU64,
+    oversize_rejections: Arc<Counter>,
     /// Services whose first oversize rejection was already logged
     /// (the reactor thread must not write one stderr line per
     /// rejected task; rejections are counted, not narrated).
     oversize_logged: Mutex<HashSet<usize>>,
     /// Peers rejected for speaking a different protocol version.
-    version_rejections: AtomicU64,
+    version_rejections: Arc<Counter>,
     /// Data-plane replica directory, announcement order, deduplicated.
     replicas: Mutex<Vec<String>>,
     shutdown: Arc<AtomicBool>,
     heartbeat_timeout: Duration,
+    /// Monotonic clock behind the liveness timestamps (injectable via
+    /// [`crate::obs::Clock`]; production uses the system clock).
+    clock: Arc<dyn Clock>,
 }
 
 impl WfShared {
@@ -158,7 +176,7 @@ impl WfShared {
     fn touch(&self, service: ServiceId) -> bool {
         match self.members.lock().unwrap().get_mut(&service.0) {
             Some(m) => {
-                m.last_seen = Instant::now();
+                m.last_seen = self.clock.now_ns();
                 true
             }
             None => false,
@@ -187,6 +205,40 @@ impl WfShared {
                 done: sched.is_done(),
             },
         }
+    }
+
+    /// Refresh the scheduler-derived gauges and snapshot the registry
+    /// (the `StatsRequest` reply and the final report's stats).
+    fn stats_snapshot(&self) -> MetricsSnapshot {
+        {
+            let sched = self.sched.lock().unwrap();
+            self.registry
+                .gauge("queue_depth")
+                .set(sched.queue_depth() as u64);
+            self.registry
+                .gauge("in_flight")
+                .set(sched.in_flight() as u64);
+            self.registry
+                .gauge("tasks_completed")
+                .set(sched.completed() as u64);
+            self.registry.gauge("tasks_total").set(sched.total() as u64);
+            self.registry
+                .gauge("runtime_splits")
+                .set(sched.runtime_splits());
+            self.registry
+                .gauge("affinity_assignments")
+                .set(sched.affinity_assignments);
+        }
+        self.registry
+            .gauge("services_joined")
+            .set(self.next_service.load(Ordering::Relaxed) as u64);
+        self.registry
+            .gauge("live_members")
+            .set(self.members.lock().unwrap().len() as u64);
+        self.registry
+            .gauge("control_wire_bytes")
+            .set(self.traffic.total_bytes());
+        self.registry.snapshot()
     }
 
     /// Reply to a fenced (non-member) service: a clear error telling
@@ -249,6 +301,9 @@ pub struct WorkflowReport {
     pub version_rejections: u64,
     /// Data-plane replica directory at the end of the run.
     pub data_replicas: Vec<String>,
+    /// Final metrics snapshot (the same registry a live `pem stats`
+    /// scrape reads; every counter above is also in here by name).
+    pub stats: MetricsSnapshot,
 }
 
 /// Why [`WorkflowServiceServer::wait_outcome`] returned.
@@ -285,25 +340,33 @@ impl WorkflowServiceServer {
         let mut sched = Scheduler::new(tasks, cfg.policy);
         sched.set_task_meta(cfg.task_mem, cfg.task_sizes);
         sched.set_min_split_services(cfg.expected_services);
+        if let Some(tracer) = cfg.tracer {
+            sched.set_tracer(tracer);
+        }
+        let registry = Arc::new(Registry::new());
+        registry.set_label("role", "workflow");
+        registry.set_label("addr", &addr.to_string());
         let shared = Arc::new(WfShared {
             sched: Mutex::new(sched),
             results: Mutex::new(Vec::new()),
             members: Mutex::new(HashMap::new()),
             next_service: AtomicUsize::new(0),
-            comparisons: AtomicU64::new(0),
-            control_messages: AtomicU64::new(0),
-            heartbeats: AtomicU64::new(0),
-            batch_requests: AtomicU64::new(0),
-            assignment_pulls: AtomicU64::new(0),
+            comparisons: registry.counter("comparisons"),
+            control_messages: registry.counter("control_messages"),
+            heartbeats: registry.counter("heartbeats"),
+            batch_requests: registry.counter("batch_requests"),
+            assignment_pulls: registry.counter("assignment_pulls"),
             traffic: TrafficStats::new(),
-            requeued_tasks: AtomicU64::new(0),
-            stale_completions: AtomicU64::new(0),
-            oversize_rejections: AtomicU64::new(0),
+            requeued_tasks: registry.counter("requeued_tasks"),
+            stale_completions: registry.counter("stale_completions"),
+            oversize_rejections: registry.counter("oversize_rejections"),
             oversize_logged: Mutex::new(HashSet::new()),
-            version_rejections: AtomicU64::new(0),
+            version_rejections: registry.counter("version_rejections"),
             replicas: Mutex::new(Vec::new()),
             shutdown: shutdown.clone(),
             heartbeat_timeout: cfg.heartbeat_timeout,
+            clock: system_clock(),
+            registry,
         });
         let reactor = Reactor::new(
             listener,
@@ -378,6 +441,7 @@ impl WorkflowServiceServer {
     /// Call after [`Self::wait_done`].
     pub fn finish(self) -> WorkflowReport {
         self.abort();
+        let stats = self.shared.stats_snapshot();
         let sched = self.shared.sched.lock().unwrap();
         WorkflowReport {
             correspondences: std::mem::take(
@@ -385,34 +449,16 @@ impl WorkflowServiceServer {
             ),
             completed_tasks: sched.completed(),
             total_tasks: sched.total(),
-            comparisons: self.shared.comparisons.load(Ordering::Relaxed),
-            control_messages: self
-                .shared
-                .control_messages
-                .load(Ordering::Relaxed),
-            heartbeats: self.shared.heartbeats.load(Ordering::Relaxed),
-            batch_requests: self
-                .shared
-                .batch_requests
-                .load(Ordering::Relaxed),
-            assignment_pulls: self
-                .shared
-                .assignment_pulls
-                .load(Ordering::Relaxed),
+            comparisons: self.shared.comparisons.get(),
+            control_messages: self.shared.control_messages.get(),
+            heartbeats: self.shared.heartbeats.get(),
+            batch_requests: self.shared.batch_requests.get(),
+            assignment_pulls: self.shared.assignment_pulls.get(),
             control_wire_bytes: self.shared.traffic.total_bytes(),
             affinity_assignments: sched.affinity_assignments,
-            requeued_tasks: self
-                .shared
-                .requeued_tasks
-                .load(Ordering::Relaxed),
-            oversize_rejections: self
-                .shared
-                .oversize_rejections
-                .load(Ordering::Relaxed),
-            stale_completions: self
-                .shared
-                .stale_completions
-                .load(Ordering::Relaxed),
+            requeued_tasks: self.shared.requeued_tasks.get(),
+            oversize_rejections: self.shared.oversize_rejections.get(),
+            stale_completions: self.shared.stale_completions.get(),
             runtime_splits: sched.runtime_splits(),
             // a misfit verdict that a late-joining roomy node overtook
             // (the run completed anyway) is not reported as terminal
@@ -422,11 +468,9 @@ impl WorkflowServiceServer {
                 sched.misfit().cloned()
             },
             services_joined: self.shared.next_service.load(Ordering::Relaxed),
-            version_rejections: self
-                .shared
-                .version_rejections
-                .load(Ordering::Relaxed),
+            version_rejections: self.shared.version_rejections.get(),
             data_replicas: self.shared.replicas.lock().unwrap().clone(),
+            stats,
         }
     }
 }
@@ -437,14 +481,14 @@ fn monitor_loop(shared: Arc<WfShared>) {
     let tick = (shared.heartbeat_timeout / 4).max(Duration::from_millis(5));
     while !shared.shutdown.load(Ordering::SeqCst) {
         std::thread::sleep(tick);
-        let now = Instant::now();
+        let now = shared.clock.now_ns();
+        let timeout_ns = shared.heartbeat_timeout.as_nanos() as u64;
         let expired: Vec<(usize, String)> = {
             let mut members = shared.members.lock().unwrap();
             let dead: Vec<usize> = members
                 .iter()
                 .filter(|(_, m)| {
-                    now.duration_since(m.last_seen)
-                        > shared.heartbeat_timeout
+                    now.saturating_sub(m.last_seen) > timeout_ns
                 })
                 .map(|(&id, _)| id)
                 .collect();
@@ -458,9 +502,7 @@ fn monitor_loop(shared: Arc<WfShared>) {
                 .lock()
                 .unwrap()
                 .fail_service(ServiceId(id));
-            shared
-                .requeued_tasks
-                .fetch_add(reopened as u64, Ordering::Relaxed);
+            shared.requeued_tasks.add(reopened as u64);
             eprintln!(
                 "workflow service: match service {id} ({name}) missed \
                  heartbeats; re-queued {reopened} in-flight task(s)"
@@ -500,9 +542,7 @@ impl FrameHandler for WfHandler {
                 if let Some(peer) =
                     crate::rpc::foreign_handshake_version(payload)
                 {
-                    self.shared
-                        .version_rejections
-                        .fetch_add(1, Ordering::Relaxed);
+                    self.shared.version_rejections.inc();
                     out.queue_message(&Message::Error {
                         message: format!(
                             "protocol version mismatch: peer speaks \
@@ -519,7 +559,7 @@ impl FrameHandler for WfHandler {
                 return Action::Close;
             }
         };
-        self.shared.control_messages.fetch_add(1, Ordering::Relaxed);
+        self.shared.control_messages.inc();
         let reply = handle_message(&self.shared, msg);
         let n = out.queue_message(&reply);
         self.shared.traffic.record(n);
@@ -536,9 +576,7 @@ fn handle_message(shared: &WfShared, msg: Message) -> Message {
             mem_budget,
         } => {
             if version != PROTOCOL_VERSION {
-                shared
-                    .version_rejections
-                    .fetch_add(1, Ordering::Relaxed);
+                shared.version_rejections.inc();
                 Message::Error {
                     message: format!(
                         "protocol version mismatch: match service \
@@ -554,7 +592,7 @@ fn handle_message(shared: &WfShared, msg: Message) -> Message {
                     id,
                     Member {
                         name,
-                        last_seen: Instant::now(),
+                        last_seen: shared.clock.now_ns(),
                     },
                 );
                 {
@@ -580,9 +618,7 @@ fn handle_message(shared: &WfShared, msg: Message) -> Message {
             partitions,
         } => {
             if version != PROTOCOL_VERSION {
-                shared
-                    .version_rejections
-                    .fetch_add(1, Ordering::Relaxed);
+                shared.version_rejections.inc();
                 Message::Error {
                     message: format!(
                         "protocol version mismatch: data replica \
@@ -609,6 +645,12 @@ fn handle_message(shared: &WfShared, msg: Message) -> Message {
                         .lock()
                         .unwrap()
                         .add_replica_coverage(&partitions);
+                    // label the snapshot with the directory so a
+                    // `pem stats` scrape can discover and scrape the
+                    // data servers too
+                    shared
+                        .registry
+                        .set_label("data_replicas", &directory.join(","));
                 }
                 Message::ReplicaDirectory {
                     replicas: directory,
@@ -622,16 +664,14 @@ fn handle_message(shared: &WfShared, msg: Message) -> Message {
                 .lock()
                 .unwrap()
                 .fail_service(service);
-            shared
-                .requeued_tasks
-                .fetch_add(reopened as u64, Ordering::Relaxed);
+            shared.requeued_tasks.add(reopened as u64);
             Message::LeaveAck
         }
         Message::TaskRequest { service } => {
             if !shared.touch(service) {
                 return shared.fenced(service);
             }
-            shared.assignment_pulls.fetch_add(1, Ordering::Relaxed);
+            shared.assignment_pulls.inc();
             shared.next_assignment(service)
         }
         Message::Complete {
@@ -644,9 +684,7 @@ fn handle_message(shared: &WfShared, msg: Message) -> Message {
             if !shared.touch(service) {
                 // a straggler from a fenced service: its completion is
                 // stale by definition — count and refuse
-                shared
-                    .stale_completions
-                    .fetch_add(1, Ordering::Relaxed);
+                shared.stale_completions.inc();
                 return shared.fenced(service);
             }
             {
@@ -658,16 +696,12 @@ fn handle_message(shared: &WfShared, msg: Message) -> Message {
                 // order is sched → results here and in finish().
                 let mut sched = shared.sched.lock().unwrap();
                 if sched.try_report_complete(service, task_id, cached) {
-                    shared
-                        .comparisons
-                        .fetch_add(comparisons, Ordering::Relaxed);
+                    shared.comparisons.add(comparisons);
                     shared.results.lock().unwrap().extend(matches);
                 } else {
                     // straggler from a service presumed dead: the
                     // task was re-queued, its output arrives again
-                    shared
-                        .stale_completions
-                        .fetch_add(1, Ordering::Relaxed);
+                    shared.stale_completions.inc();
                 }
             }
             shared.next_assignment(service)
@@ -679,14 +713,12 @@ fn handle_message(shared: &WfShared, msg: Message) -> Message {
             completed,
         } => {
             if !shared.touch(service) {
-                shared
-                    .stale_completions
-                    .fetch_add(completed.len() as u64, Ordering::Relaxed);
+                shared.stale_completions.add(completed.len() as u64);
                 return shared.fenced(service);
             }
-            shared.batch_requests.fetch_add(1, Ordering::Relaxed);
+            shared.batch_requests.inc();
             if completed.is_empty() {
-                shared.assignment_pulls.fetch_add(1, Ordering::Relaxed);
+                shared.assignment_pulls.inc();
             }
             let (tasks, done) = {
                 // same lock-order contract as the Complete arm
@@ -716,9 +748,7 @@ fn handle_message(shared: &WfShared, msg: Message) -> Message {
                 .unwrap()
                 .reject_task(service, task_id);
             if fresh {
-                shared
-                    .oversize_rejections
-                    .fetch_add(1, Ordering::Relaxed);
+                shared.oversize_rejections.inc();
                 // one diagnostic per service, not per task: this runs
                 // on the reactor thread, and a node that fits nothing
                 // rejects every open task
@@ -738,19 +768,37 @@ fn handle_message(shared: &WfShared, msg: Message) -> Message {
                     );
                 }
             } else {
-                shared
-                    .stale_completions
-                    .fetch_add(1, Ordering::Relaxed);
+                shared.stale_completions.inc();
             }
             shared.next_assignment(service)
         }
-        Message::Heartbeat { service } => {
-            shared.heartbeats.fetch_add(1, Ordering::Relaxed);
+        Message::Heartbeat {
+            service,
+            busy_ns,
+            cache_hits,
+            cache_misses,
+            tasks_done,
+        } => {
+            shared.heartbeats.inc();
             if !shared.touch(service) {
                 return shared.fenced(service);
             }
+            // v6: the heartbeat carries the node's load counters —
+            // recorded as per-node gauges so a live `pem stats`
+            // scrape sees busy/idle time and cache behaviour without
+            // touching the nodes themselves
+            let id = service.0;
+            let reg = &shared.registry;
+            reg.gauge(&format!("node.{id}.busy_ns")).set(busy_ns);
+            reg.gauge(&format!("node.{id}.cache_hits")).set(cache_hits);
+            reg.gauge(&format!("node.{id}.cache_misses"))
+                .set(cache_misses);
+            reg.gauge(&format!("node.{id}.tasks_done")).set(tasks_done);
             Message::HeartbeatAck
         }
+        Message::StatsRequest => Message::StatsReport {
+            stats: shared.stats_snapshot().to_bytes(),
+        },
         other => Message::Error {
             message: format!(
                 "workflow service got unexpected {}",
@@ -780,7 +828,7 @@ fn report_batch(
             comparisons += report.comparisons;
             fresh_matches.extend(report.matches);
         } else {
-            shared.stale_completions.fetch_add(1, Ordering::Relaxed);
+            shared.stale_completions.inc();
         }
     }
     sched.record_cache_status(service, cached);
@@ -788,7 +836,7 @@ fn report_batch(
         shared.results.lock().unwrap().extend(fresh_matches);
     }
     if comparisons > 0 {
-        shared.comparisons.fetch_add(comparisons, Ordering::Relaxed);
+        shared.comparisons.add(comparisons);
     }
 }
 
@@ -1465,5 +1513,134 @@ mod tests {
         assert_eq!(report.completed_tasks, 1);
         assert_eq!(report.requeued_tasks, 1);
         assert_eq!(report.stale_completions, 1);
+    }
+
+    /// Protocol v6: a `StatsRequest` from a separate operator
+    /// connection scrapes the live registry mid-run — queue depth,
+    /// counters, and the per-node gauges fed by enriched heartbeats.
+    #[test]
+    fn stats_scrape_reports_live_counters() {
+        let srv = WorkflowServiceServer::start(
+            vec![task(0, 0, 1), task(1, 2, 3)],
+            WorkflowServerConfig::default(),
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let mut c = client(srv.addr());
+        let svc = join(&mut c, "scraped-node");
+        // take one task, leave the other queued
+        let Message::TaskAssign { task: t0, .. } =
+            c.request(&Message::TaskRequest { service: svc }).unwrap()
+        else {
+            panic!("expected assignment");
+        };
+        // an enriched v6 heartbeat feeds the per-node gauges
+        let hb = c
+            .request(&Message::Heartbeat {
+                service: svc,
+                busy_ns: 1_000,
+                cache_hits: 3,
+                cache_misses: 1,
+                tasks_done: 0,
+            })
+            .unwrap();
+        assert!(matches!(hb, Message::HeartbeatAck));
+        // scrape from a second connection while the run is live
+        let mut op = client(srv.addr());
+        let reply = op.request(&Message::StatsRequest).unwrap();
+        let Message::StatsReport { stats } = reply else {
+            panic!("expected StatsReport, got {}", reply.kind());
+        };
+        let snap = MetricsSnapshot::from_bytes(&stats).unwrap();
+        assert_eq!(snap.label("role"), Some("workflow"));
+        assert_eq!(snap.gauge("tasks_total"), Some(2));
+        assert_eq!(snap.gauge("tasks_completed"), Some(0));
+        assert_eq!(snap.gauge("in_flight"), Some(1));
+        assert_eq!(snap.gauge("queue_depth"), Some(1));
+        assert_eq!(snap.gauge("services_joined"), Some(1));
+        assert_eq!(snap.gauge("node.0.busy_ns"), Some(1_000));
+        assert_eq!(snap.gauge("node.0.cache_hits"), Some(3));
+        assert_eq!(snap.gauge("node.0.cache_misses"), Some(1));
+        assert_eq!(snap.counter("heartbeats"), Some(1));
+        // drain the run; the final report carries the same registry
+        let Message::TaskAssign { task: t1, .. } = c
+            .request(&Message::Complete {
+                service: svc,
+                task_id: t0.id,
+                comparisons: 2,
+                cached: vec![],
+                matches: vec![],
+            })
+            .unwrap()
+        else {
+            panic!("expected second assignment");
+        };
+        let done = c
+            .request(&Message::Complete {
+                service: svc,
+                task_id: t1.id,
+                comparisons: 3,
+                cached: vec![],
+                matches: vec![],
+            })
+            .unwrap();
+        assert!(matches!(done, Message::NoTask { done: true }));
+        assert!(srv.wait_done(Duration::from_secs(1)));
+        let report = srv.finish();
+        assert_eq!(report.stats.counter("comparisons"), Some(5));
+        assert_eq!(
+            report.stats.gauge("tasks_completed"),
+            Some(report.completed_tasks as u64)
+        );
+    }
+
+    /// A tracer handed in via the config captures a full wire-protocol
+    /// run, and the exactly-once verifier certifies it.
+    #[test]
+    fn configured_tracer_captures_wire_run() {
+        let tracer = Tracer::new(1 << 12);
+        let srv = WorkflowServiceServer::start(
+            vec![task(0, 0, 1), task(1, 2, 3)],
+            WorkflowServerConfig {
+                tracer: Some(tracer.clone()),
+                ..WorkflowServerConfig::default()
+            },
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let mut c = client(srv.addr());
+        let svc = join(&mut c, "traced-node");
+        let mut next = match c
+            .request(&Message::TaskRequest { service: svc })
+            .unwrap()
+        {
+            Message::TaskAssign { task, .. } => task.id,
+            other => panic!("expected assignment, got {}", other.kind()),
+        };
+        loop {
+            match c
+                .request(&Message::Complete {
+                    service: svc,
+                    task_id: next,
+                    comparisons: 1,
+                    cached: vec![],
+                    matches: vec![],
+                })
+                .unwrap()
+            {
+                Message::TaskAssign { task, .. } => next = task.id,
+                Message::NoTask { done } => {
+                    assert!(done);
+                    break;
+                }
+                other => panic!("unexpected {}", other.kind()),
+            }
+        }
+        assert!(srv.wait_done(Duration::from_secs(1)));
+        srv.finish();
+        let summary = tracer.verify_plan(&[0, 1]).expect("trace verifies");
+        assert_eq!(summary.plan_tasks, 2);
+        assert_eq!(summary.assignments, 2);
+        assert_eq!(summary.splits, 0);
     }
 }

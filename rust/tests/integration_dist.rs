@@ -788,6 +788,7 @@ fn dist_runtime_splitting_under_chaos_matches_thread_engine() {
             task_mem,
             task_sizes,
             expected_services: 3,
+            tracer: None,
         },
         "127.0.0.1:0",
     )
@@ -944,6 +945,282 @@ fn dist_unsplittable_plan_fails_fast_with_typed_error() {
     assert_eq!(misfit.smallest_budget, 10);
     assert!(misfit.mem_bytes > 10);
     assert!(err.to_string().contains("failed fast"));
+}
+
+/// The observability tentpole end to end: the same 3-node
+/// chaos + runtime-splitting cluster as above, but with one shared
+/// lifecycle [`pem::obs::Tracer`] wired through the workflow server
+/// *and* every match node.  Replaying the trace afterwards must
+/// reconstruct every plan task's lifecycle **exactly once** — one
+/// `Completed` per plan task, every split child merged or re-split
+/// exactly once, every `Executed` preceded by an `Assigned` — even
+/// though every event was generated on the far side of a
+/// byte-mangling control plane.
+#[test]
+fn dist_chaos_splitting_trace_replays_exactly_once() {
+    use pem::obs::Tracer;
+
+    let data = GeneratorConfig::tiny()
+        .with_entities(600)
+        .with_seed(42)
+        .generate();
+    let ids: Vec<EntityId> =
+        data.dataset.entities.iter().map(|e| e.id).collect();
+    let parts = partition_size_based(&ids, 60);
+    let tasks = generate_tasks(&parts);
+    let n_tasks = tasks.len();
+    let plan_ids: Vec<u32> = tasks.iter().map(|t| t.id).collect();
+    let store = Arc::new(DataService::build(&data.dataset, &parts));
+
+    // §3.1 plan metadata so the scheduler can split on rejection
+    let task_mem: std::collections::HashMap<u32, u64> = tasks
+        .iter()
+        .map(|t| {
+            (
+                t.id,
+                pem::partition::task_memory_bytes(
+                    parts.get(t.left).len(),
+                    parts.get(t.right).len(),
+                    StrategyKind::Wam,
+                ),
+            )
+        })
+        .collect();
+    let task_sizes: std::collections::HashMap<u32, (u32, u32)> = tasks
+        .iter()
+        .map(|t| {
+            (
+                t.id,
+                (
+                    parts.get(t.left).len() as u32,
+                    parts.get(t.right).len() as u32,
+                ),
+            )
+        })
+        .collect();
+    // below every full task: every plan task is rejected and split
+    let budget = 20_000u64;
+    assert!(task_mem.values().all(|&m| m > budget), "test premise");
+
+    let tracer = Tracer::new(pem::obs::DEFAULT_TRACE_CAPACITY);
+    let primary =
+        DataServiceServer::start(store.clone(), "127.0.0.1:0").unwrap();
+    let wf_srv = WorkflowServiceServer::start(
+        tasks,
+        WorkflowServerConfig {
+            policy: Policy::Affinity,
+            heartbeat_timeout: Duration::from_secs(3),
+            task_mem,
+            task_sizes,
+            expected_services: 3,
+            tracer: Some(tracer.clone()),
+        },
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let wf_addr = wf_srv.addr().to_string();
+    announce_replica(
+        &wf_addr,
+        &primary.addr().to_string(),
+        &primary.partition_ids(),
+        Duration::from_secs(5),
+    )
+    .unwrap();
+
+    // lifecycle events are *recorded* cluster-side, but every state
+    // transition they witness is driven by frames that crossed this
+    // byte-mangling forwarder
+    let chaos_wf = ChaosTransport::start(
+        wf_addr,
+        0x0B5E_55ED,
+        ChaosConfig {
+            stall_one_in: 64,
+            disconnect_after: None,
+        },
+    );
+
+    let node_handles: Vec<_> = (0..3)
+        .map(|i| {
+            let mut cfg = MatchNodeConfig::new(
+                chaos_wf.to_string(),
+                primary.addr().to_string(),
+            );
+            cfg.name = format!("traced-node-{i}");
+            cfg.threads = 2;
+            cfg.cache_capacity = 4;
+            cfg.batch = if i == 2 { 1 } else { 2 };
+            cfg.task_memory_budget = Some(budget);
+            cfg.tracer = Some(tracer.clone());
+            let exec: Arc<dyn TaskExecutor> = Arc::new(RustExecutor::new(
+                MatchStrategy::new(StrategyKind::Wam),
+            ));
+            std::thread::spawn(move || run_match_node(&cfg, exec))
+        })
+        .collect();
+
+    assert!(
+        wf_srv.wait_done(Duration::from_secs(120)),
+        "traced splitting run did not complete"
+    );
+    for h in node_handles {
+        h.join().expect("node thread").expect("node report");
+    }
+    let report = wf_srv.finish();
+    primary.shutdown();
+
+    // the run itself was exact …
+    assert_eq!(report.completed_tasks, n_tasks);
+    assert_eq!(report.comparisons, 600 * 599 / 2);
+    assert!(report.runtime_splits >= n_tasks as u64);
+
+    // … and the trace replays it: the ring dropped nothing, and the
+    // replay reconstructs every plan task's lifecycle exactly once
+    assert_eq!(tracer.dropped(), 0, "trace ring must not drop events");
+    let summary = tracer
+        .verify_plan(&plan_ids)
+        .expect("chaos trace must replay exactly-once");
+    assert_eq!(summary.plan_tasks, n_tasks);
+    assert!(
+        summary.splits >= n_tasks,
+        "{} splits traced for {} plan tasks — every plan task split",
+        summary.splits,
+        n_tasks
+    );
+    assert!(summary.subtasks > 0, "split children traced");
+    assert!(
+        summary.assignments > summary.plan_tasks,
+        "sub-task assignments traced through the chaotic control plane"
+    );
+
+    // the JSONL dump is the same stream, one line per event
+    let dump = tracer.dump_jsonl();
+    assert_eq!(dump.lines().count(), tracer.len());
+}
+
+/// The v6 live-observability acceptance criterion: `pem stats`
+/// semantics against a **running 2-node cluster over real TCP** — an
+/// operator connection sends [`Message::StatsRequest`] to the
+/// workflow server mid-run, decodes the snapshot from the
+/// [`Message::StatsReport`] reply, discovers the data server through
+/// the `data_replicas` label exactly as the CLI does, and scrapes
+/// that server too.
+#[test]
+fn dist_live_cluster_stats_scrape_over_tcp() {
+    use pem::obs::MetricsSnapshot;
+    use pem::rpc::{Message, Transport};
+
+    let data = GeneratorConfig::tiny()
+        .with_entities(600)
+        .with_seed(42)
+        .generate();
+    let ids: Vec<EntityId> =
+        data.dataset.entities.iter().map(|e| e.id).collect();
+    let parts = partition_size_based(&ids, 60);
+    let tasks = generate_tasks(&parts);
+    let n_tasks = tasks.len();
+    let store = Arc::new(DataService::build(&data.dataset, &parts));
+
+    let primary =
+        DataServiceServer::start(store.clone(), "127.0.0.1:0").unwrap();
+    let wf_srv = WorkflowServiceServer::start(
+        tasks,
+        WorkflowServerConfig::default(),
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let wf_addr = wf_srv.addr().to_string();
+    announce_replica(
+        &wf_addr,
+        &primary.addr().to_string(),
+        &primary.partition_ids(),
+        Duration::from_secs(5),
+    )
+    .unwrap();
+
+    // small caches keep wire fetches flowing for the whole run
+    let node_handles: Vec<_> = (0..2)
+        .map(|i| {
+            let mut cfg = MatchNodeConfig::new(
+                wf_addr.clone(),
+                primary.addr().to_string(),
+            );
+            cfg.name = format!("scraped-node-{i}");
+            cfg.threads = 2;
+            cfg.cache_capacity = 2;
+            let exec: Arc<dyn TaskExecutor> = Arc::new(RustExecutor::new(
+                MatchStrategy::new(StrategyKind::Wam),
+            ));
+            std::thread::spawn(move || run_match_node(&cfg, exec))
+        })
+        .collect();
+
+    // wait until the run is demonstrably under way, then scrape the
+    // workflow server from a fresh operator connection (no Join)
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while wf_srv.completed() < 1 {
+        assert!(Instant::now() < deadline, "run never got going");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let mut op =
+        Transport::connect(wf_srv.addr(), Duration::from_secs(5)).unwrap();
+    let reply = op.request(&Message::StatsRequest).unwrap();
+    let Message::StatsReport { stats } = reply else {
+        panic!("expected StatsReport, got {}", reply.kind());
+    };
+    let wf_snap = MetricsSnapshot::from_bytes(&stats).unwrap();
+    assert_eq!(wf_snap.label("role"), Some("workflow"));
+    assert_eq!(wf_snap.gauge("tasks_total"), Some(n_tasks as u64));
+    let done = wf_snap.gauge("tasks_completed").unwrap();
+    assert!(
+        (1..=n_tasks as u64).contains(&done),
+        "mid-run completion count out of range: {done}"
+    );
+
+    // follow the replica directory label, exactly as `pem stats` does
+    let replicas = wf_snap
+        .label("data_replicas")
+        .expect("workflow snapshot advertises the data servers")
+        .to_string();
+    assert_eq!(replicas, primary.addr().to_string());
+    let mut dop =
+        Transport::connect(replicas.as_str(), Duration::from_secs(5))
+            .unwrap();
+    let Message::StatsReport { stats } =
+        dop.request(&Message::StatsRequest).unwrap()
+    else {
+        panic!("expected StatsReport from the data server");
+    };
+    let mid = MetricsSnapshot::from_bytes(&stats).unwrap();
+    assert_eq!(mid.label("role"), Some("data-primary"));
+    assert_eq!(
+        mid.gauge("partitions_held"),
+        Some(primary.partition_ids().len() as u64)
+    );
+
+    // drain the run, then scrape the data server once more: by now
+    // the fetch counters and the latency histogram must both show
+    // the traffic the run generated
+    assert!(wf_srv.wait_done(Duration::from_secs(60)));
+    for h in node_handles {
+        h.join().expect("node thread").expect("node report");
+    }
+    let Message::StatsReport { stats } =
+        dop.request(&Message::StatsRequest).unwrap()
+    else {
+        panic!("expected final StatsReport from the data server");
+    };
+    let fin = MetricsSnapshot::from_bytes(&stats).unwrap();
+    let fetches = fin.counter("fetches_served").unwrap();
+    assert!(fetches > 0, "the run must have fetched over TCP");
+    let hist = fin.histogram("fetch_serve_ns").unwrap();
+    assert_eq!(hist.count, fetches, "one latency sample per fetch");
+    assert!(fin.gauge("wire_bytes").unwrap() > 0);
+
+    let report = wf_srv.finish();
+    primary.shutdown();
+    assert_eq!(report.completed_tasks, n_tasks);
+    // the final report's registry agrees with what the wire showed
+    assert_eq!(report.stats.gauge("tasks_completed"), Some(n_tasks as u64));
 }
 
 /// The pull protocol balances load: with two equal nodes and plenty of

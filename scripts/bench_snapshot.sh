@@ -1,0 +1,75 @@
+#!/usr/bin/env bash
+# bench_snapshot.sh [--smoke] [--out DIR] [BENCH...]
+#
+# Run the figure/overhead/micro benches and collect their schema'd
+# JSON snapshots (`BENCH_<name>.json`, schema pem-bench-snapshot/1)
+# into one directory — the committed bench trajectory.
+#
+#   --smoke     quick mode: PEM_BENCH_QUICK=1 shrinks every workload
+#               so the whole sweep finishes in CI-smoke time; the
+#               snapshots are still written (marked "quick": true)
+#   --out DIR   where to put the JSON files (default bench_snapshots/)
+#   BENCH...    subset of bench targets (default: the full list below)
+#
+# Each bench runs under scripts/with_timeout.sh so one hung distributed
+# run fails that bench instead of stalling the sweep.  Provenance: set
+# PEM_BENCH_PROVENANCE to describe the hardware; committed snapshots
+# must not pretend to be from machines they never ran on.
+set -u
+
+cd "$(dirname "$0")/.."
+
+BENCHES_DEFAULT="fig5_threads fig6_max_partition fig7_min_partition \
+fig8_scaleout_small fig9_scaleout_large dist_overhead micro_hotpath"
+
+out="bench_snapshots"
+smoke=0
+benches=""
+while [ "$#" -gt 0 ]; do
+    case "$1" in
+        --smoke) smoke=1 ;;
+        --out)
+            shift
+            out="${1:?--out needs a directory}"
+            ;;
+        -h | --help)
+            sed -n '2,18p' "$0" | sed 's/^# \{0,1\}//'
+            exit 0
+            ;;
+        *) benches="$benches $1" ;;
+    esac
+    shift
+done
+[ -n "$benches" ] || benches="$BENCHES_DEFAULT"
+
+mkdir -p "$out"
+export PEM_BENCH_JSON="$(cd "$out" && pwd)"
+if [ "$smoke" -eq 1 ]; then
+    export PEM_BENCH_QUICK=1
+    per_bench_timeout=300
+else
+    per_bench_timeout=1800
+fi
+: "${PEM_BENCH_PROVENANCE:=unrecorded}"
+export PEM_BENCH_PROVENANCE
+
+echo "bench snapshot sweep → $PEM_BENCH_JSON (smoke=$smoke," \
+    "provenance=$PEM_BENCH_PROVENANCE)"
+
+failed=""
+for b in $benches; do
+    echo "=== $b ==="
+    if ! bash scripts/with_timeout.sh "$per_bench_timeout" \
+        cargo bench --manifest-path rust/Cargo.toml --bench "$b"; then
+        echo "bench $b FAILED" >&2
+        failed="$failed $b"
+    fi
+done
+
+echo
+echo "snapshots in $PEM_BENCH_JSON:"
+ls -l "$PEM_BENCH_JSON"/BENCH_*.json 2>/dev/null || echo "  (none)"
+if [ -n "$failed" ]; then
+    echo "failed benches:$failed" >&2
+    exit 1
+fi
