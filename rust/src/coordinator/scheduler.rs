@@ -56,6 +56,26 @@
 //! whose partitions are the most widely replicated — those fetches can
 //! be served by a nearby, less-loaded replica (the paper's §5 caching +
 //! affinity strategy, extended across the network).
+//!
+//! **Multi-tenant fair scheduling (protocol v7).**  A resident
+//! workflow service runs many concurrently submitted plans over one
+//! task list.  Each submitted plan becomes a *tenant*
+//! ([`Scheduler::add_tenant_tasks`]); the seed workflow the scheduler
+//! was constructed with is tenant `0`.  While more than one tenant has
+//! open tasks, every pick first chooses the tenant by **round-robin
+//! across tenants with assignable work** (skipping tenants at their
+//! in-flight quota), then applies the normal affinity / replica /
+//! FIFO ranking *within* that tenant's tasks — so a heavy plan cannot
+//! starve a light one, and among continuously backlogged tenants the
+//! number of assignments never diverges by more than one per pick
+//! (the fairness property test in this module).  Runtime-split
+//! sub-tasks inherit their root's tenant.  An unsplittable tenant
+//! task raises a **per-tenant** misfit ([`Scheduler::tenant_misfit`])
+//! and drains only that tenant — the cluster and every other tenant
+//! keep running — whereas a tenant-0 misfit stays the terminal
+//! [`Scheduler::misfit`] it always was.  With a single tenant the
+//! selection layer disappears entirely (the O(1) fast paths below are
+//! untouched).
 
 use crate::obs::{TraceEventKind, Tracer};
 use crate::partition::{MatchTask, PartitionId, TaskSpan};
@@ -158,6 +178,23 @@ pub struct Scheduler {
     misfit: Option<PlanMisfit>,
     /// partition → number of data replicas announced as holding it.
     replica_coverage: HashMap<PartitionId, u32>,
+    /// root (plan) task id → tenant that submitted it (v7).  Tasks
+    /// without an entry belong to tenant `0`, the seed workflow;
+    /// runtime-split sub-tasks inherit their root's tenant.  Empty
+    /// unless plans have been submitted — the single-tenant fast
+    /// paths key off this.
+    tenant_of: HashMap<u32, u32>,
+    /// tenant → max tasks in flight at once (absent = unlimited).
+    tenant_quota: HashMap<u32, usize>,
+    /// tenant → root tasks completed (tenant 0 not tracked here).
+    tenant_completed: HashMap<u32, usize>,
+    /// tenant → root tasks submitted (tenant 0 not tracked here).
+    tenant_total: HashMap<u32, usize>,
+    /// Per-tenant §3.1 misfits: an unsplittable *tenant* task fails
+    /// only its tenant, never the cluster (v7).
+    tenant_misfits: HashMap<u32, PlanMisfit>,
+    /// Round-robin cursor of the tenant selection layer.
+    rr_last: u32,
     /// Lifecycle tracer ([`crate::obs::trace`]); every scheduling
     /// decision is recorded when set.
     tracer: Option<Arc<Tracer>>,
@@ -195,6 +232,12 @@ impl Scheduler {
             runtime_splits: 0,
             misfit: None,
             replica_coverage: HashMap::new(),
+            tenant_of: HashMap::new(),
+            tenant_quota: HashMap::new(),
+            tenant_completed: HashMap::new(),
+            tenant_total: HashMap::new(),
+            tenant_misfits: HashMap::new(),
+            rr_last: 0,
             tracer: None,
             policy,
             affinity_assignments: 0,
@@ -212,8 +255,10 @@ impl Scheduler {
         mem: HashMap<u32, u64>,
         sizes: HashMap<u32, (u32, u32)>,
     ) {
-        self.mem = mem;
-        self.sizes = sizes;
+        // merged, not replaced: tenant plans admitted later
+        // (`add_tenant_tasks`) bring their own entries
+        self.mem.extend(mem);
+        self.sizes.extend(sizes);
     }
 
     /// Record the §3.1 per-task budget `service` reported at join
@@ -348,6 +393,13 @@ impl Scheduler {
         if self.open.is_empty() || self.dead.contains(&service) {
             return None;
         }
+        if !self.tenant_of.is_empty() {
+            // v7: more than one tenant may have open work — fairness
+            // first (round-robin over tenants), ranking within the
+            // chosen tenant.  See the module docs.
+            let tenant = self.pick_tenant(service)?;
+            return self.next_task_of_tenant(service, tenant);
+        }
         // tasks this service rejected as oversize are invisible to it;
         // in the normal case — no rejection anywhere — both policies
         // skip their scans entirely and pop the front in O(1)
@@ -444,6 +496,118 @@ impl Scheduler {
             .is_some_and(|s| s.contains(&service))
     }
 
+    /// The tenant a task belongs to: runtime-split sub-tasks resolve
+    /// through their root; tasks with no tenant entry are the seed
+    /// workflow (tenant `0`).
+    pub fn tenant_of_task(&self, task_id: u32) -> u32 {
+        let root = self.split_parent.get(&task_id).copied().unwrap_or(task_id);
+        self.tenant_of.get(&root).copied().unwrap_or(0)
+    }
+
+    /// Tasks of `tenant` currently assigned and not yet reported.
+    pub fn tenant_inflight(&self, tenant: u32) -> usize {
+        self.in_flight
+            .keys()
+            .filter(|&&id| self.tenant_of_task(id) == tenant)
+            .count()
+    }
+
+    /// Deficit-round-robin tenant selection: among tenants that have
+    /// at least one open task this service may take (not rejected by
+    /// it) and that are under their in-flight quota, pick the next one
+    /// after the cursor, cyclically.  `None` when no tenant qualifies
+    /// (everything open is either excluded for this service or
+    /// quota-bound).
+    fn pick_tenant(&mut self, service: ServiceId) -> Option<u32> {
+        let mut eligible: Vec<u32> = Vec::new();
+        for t in self.open.iter() {
+            if self.rejected_by(t.id, service) {
+                continue;
+            }
+            let ten = self.tenant_of_task(t.id);
+            if !eligible.contains(&ten) {
+                eligible.push(ten);
+            }
+        }
+        eligible.retain(|&ten| match self.tenant_quota.get(&ten) {
+            Some(&q) => self.tenant_inflight(ten) < q,
+            None => true,
+        });
+        if eligible.is_empty() {
+            return None;
+        }
+        eligible.sort_unstable();
+        let next = eligible
+            .iter()
+            .copied()
+            .find(|&t| t > self.rr_last)
+            .unwrap_or(eligible[0]);
+        self.rr_last = next;
+        Some(next)
+    }
+
+    /// The [`Self::next_task`] ranking restricted to one tenant's open
+    /// tasks: FIFO takes the tenant's oldest eligible task, affinity
+    /// scores `(cache hits, replica coverage)` among the tenant's
+    /// tasks with FIFO tie-breaks — the same preference order as the
+    /// single-tenant path, applied within the tenant.
+    fn next_task_of_tenant(
+        &mut self,
+        service: ServiceId,
+        tenant: u32,
+    ) -> Option<MatchTask> {
+        let idx = {
+            let cached = self.cache_status.get(&service);
+            let coverage = &self.replica_coverage;
+            let mut best: Option<(usize, (usize, u32))> = None;
+            for (i, t) in self.open.iter().enumerate() {
+                if self.tenant_of_task(t.id) != tenant
+                    || self.rejected_by(t.id, service)
+                {
+                    continue;
+                }
+                if self.policy == Policy::Fifo {
+                    best = Some((i, (0, 0)));
+                    break; // oldest eligible task of the tenant
+                }
+                let hits = match cached {
+                    None => 0,
+                    Some(set) => t
+                        .needed_partitions()
+                        .iter()
+                        .filter(|p| set.contains(p))
+                        .count(),
+                };
+                let cov = t
+                    .needed_partitions()
+                    .iter()
+                    .map(|p| coverage.get(p).copied().unwrap_or(0))
+                    .sum::<u32>();
+                let s = (hits, cov);
+                let better = match &best {
+                    None => true,
+                    Some((_, best_score)) => s > *best_score,
+                };
+                if better {
+                    best = Some((i, s));
+                    if s.0 == 2 && coverage.is_empty() {
+                        break; // cannot do better than both cached
+                    }
+                }
+            }
+            let (idx, best_score) = best?;
+            if self.policy == Policy::Affinity && best_score.0 > 0 {
+                self.affinity_assignments += 1;
+            }
+            idx
+        };
+        let task = self.open.remove(idx).expect("index valid");
+        let epoch = self.generation.get(&service).copied().unwrap_or(0);
+        self.in_flight.insert(task.id, (service, epoch, task));
+        self.trace(task.id, TraceEventKind::Assigned, Some(service), None);
+        Some(task)
+    }
+
     /// A match service reports that an assigned task's §3.1 memory
     /// footprint exceeds its budget (wire `TaskRejected`, v4): put the
     /// task back on the open list *marked oversize for that service*,
@@ -532,12 +696,24 @@ impl Scheduler {
         // a quarter of the footprint so repeated splits still converge
         let target = smallest_budget.unwrap_or((mem / 4).max(1));
         if !self.split_task(task, mem, target) {
+            let misfit = PlanMisfit {
+                task_id: task.id,
+                mem_bytes: mem,
+                smallest_budget: smallest_budget.unwrap_or(0),
+            };
+            let tenant = self.tenant_of_task(task.id);
+            if tenant != 0 {
+                // v7: an unsplittable *tenant* task fails only its
+                // tenant — record the per-tenant misfit and drain the
+                // tenant's remaining work; the cluster and every other
+                // tenant keep running
+                self.tenant_misfits.entry(tenant).or_insert(misfit);
+                self.open.push_back(task);
+                self.drain_tenant(tenant);
+                return;
+            }
             if self.misfit.is_none() {
-                self.misfit = Some(PlanMisfit {
-                    task_id: task.id,
-                    mem_bytes: mem,
-                    smallest_budget: smallest_budget.unwrap_or(0),
-                });
+                self.misfit = Some(misfit);
             }
             self.open.push_back(task);
         }
@@ -819,6 +995,7 @@ impl Scheduler {
                     if *outstanding == 0 {
                         self.split_outstanding.remove(&root);
                         self.completed += 1;
+                        self.note_tenant_completion(root);
                         self.trace(
                             root,
                             TraceEventKind::Completed,
@@ -829,6 +1006,7 @@ impl Scheduler {
                 }
                 None => {
                     self.completed += 1;
+                    self.note_tenant_completion(task_id);
                     self.trace(
                         task_id,
                         TraceEventKind::Completed,
@@ -910,6 +1088,157 @@ impl Scheduler {
     /// Known cache status (for tests / introspection).
     pub fn cached_at(&self, service: ServiceId) -> Option<&HashSet<PartitionId>> {
         self.cache_status.get(&service)
+    }
+
+    // ------------------------------------------------- tenants (v7)
+
+    /// Bump the completed count of the tenant owning root task `root`
+    /// (tenant 0, the seed workflow, is tracked by the global
+    /// counters only).
+    fn note_tenant_completion(&mut self, root: u32) {
+        if let Some(&tenant) = self.tenant_of.get(&root) {
+            *self.tenant_completed.entry(tenant).or_insert(0) += 1;
+        }
+    }
+
+    /// Reserve `count` task ids above everything the scheduler has
+    /// ever issued (plan tasks *and* runtime-split sub-tasks) and
+    /// return the first.  A submitted plan's tasks are renumbered into
+    /// this range before [`Self::add_tenant_tasks`], so tenants can
+    /// never collide with the seed workflow or with each other.
+    pub fn reserve_task_ids(&mut self, count: u32) -> u32 {
+        let base = self.next_split_id;
+        self.next_split_id += count;
+        base
+    }
+
+    /// Admit a submitted plan's tasks as tenant `tenant` (> 0): the
+    /// tasks join the open list with their §3.1 footprints and split
+    /// metadata merged in, and `quota` (if any) caps how many of the
+    /// tenant's tasks may be in flight at once.  Task ids must come
+    /// from [`Self::reserve_task_ids`]; partition-id namespacing is
+    /// the caller's concern ([`crate::service::WorkflowServiceServer`]
+    /// offsets them into the shared data service).
+    pub fn add_tenant_tasks(
+        &mut self,
+        tenant: u32,
+        tasks: Vec<MatchTask>,
+        mem: HashMap<u32, u64>,
+        sizes: HashMap<u32, (u32, u32)>,
+        quota: Option<usize>,
+    ) {
+        debug_assert!(tenant != 0, "tenant 0 is the seed workflow");
+        self.total += tasks.len();
+        self.tenant_total.insert(tenant, tasks.len());
+        self.tenant_completed.insert(tenant, 0);
+        if let Some(q) = quota {
+            self.tenant_quota.insert(tenant, q.max(1));
+        }
+        self.mem.extend(mem);
+        self.sizes.extend(sizes);
+        for t in tasks {
+            self.tenant_of.insert(t.id, tenant);
+            self.trace(t.id, TraceEventKind::Planned, None, None);
+            self.trace(t.id, TraceEventKind::Queued, None, None);
+            self.open.push_back(t);
+        }
+    }
+
+    /// Remove every remaining task of `tenant` — open *and* in flight
+    /// (stragglers completing a drained task are dropped as stale by
+    /// the generation-checked report paths).  Called when the
+    /// submitting client vanishes (abort) or the tenant misfits; the
+    /// global totals shrink by the tenant's unfinished tasks so
+    /// [`Self::is_done`] still converges.  Returns the number of
+    /// tasks dropped.  Tenant 0 (the seed workflow) cannot be
+    /// drained.
+    pub fn drain_tenant(&mut self, tenant: u32) -> usize {
+        if tenant == 0 {
+            return 0;
+        }
+        let open_drop: Vec<u32> = self
+            .open
+            .iter()
+            .map(|t| t.id)
+            .filter(|&id| self.tenant_of_task(id) == tenant)
+            .collect();
+        let flight_drop: Vec<u32> = self
+            .in_flight
+            .keys()
+            .copied()
+            .filter(|&id| self.tenant_of_task(id) == tenant)
+            .collect();
+        let dropped = open_drop.len() + flight_drop.len();
+        let drop_set: HashSet<u32> =
+            open_drop.iter().copied().collect();
+        self.open.retain(|t| !drop_set.contains(&t.id));
+        for id in open_drop.into_iter().chain(flight_drop) {
+            self.in_flight.remove(&id);
+            self.split_parent.remove(&id);
+            self.spans.remove(&id);
+            self.sizes.remove(&id);
+            self.mem.remove(&id);
+            self.oversize.remove(&id);
+        }
+        // root-level bookkeeping of the tenant's plan tasks
+        let roots: Vec<u32> = self
+            .tenant_of
+            .iter()
+            .filter(|(_, &t)| t == tenant)
+            .map(|(&r, _)| r)
+            .collect();
+        for r in &roots {
+            self.split_outstanding.remove(r);
+            self.sizes.remove(r);
+            self.mem.remove(r);
+            self.oversize.remove(r);
+            self.tenant_of.remove(r);
+        }
+        let done = self.tenant_completed.get(&tenant).copied().unwrap_or(0);
+        let tot = self.tenant_total.get(&tenant).copied().unwrap_or(0);
+        self.total -= tot.saturating_sub(done);
+        self.tenant_quota.remove(&tenant);
+        dropped
+    }
+
+    /// `(completed, total)` root tasks of a tenant.  `(0, 0)` for
+    /// unknown tenants (and for tenant 0 — the seed workflow reads
+    /// the global [`Self::completed`] / [`Self::total`]).
+    pub fn tenant_progress(&self, tenant: u32) -> (usize, usize) {
+        (
+            self.tenant_completed.get(&tenant).copied().unwrap_or(0),
+            self.tenant_total.get(&tenant).copied().unwrap_or(0),
+        )
+    }
+
+    /// The per-tenant §3.1 misfit, if the tenant's plan proved
+    /// unplaceable on this cluster (its tasks have been drained).
+    pub fn tenant_misfit(&self, tenant: u32) -> Option<&PlanMisfit> {
+        self.tenant_misfits.get(&tenant)
+    }
+
+    /// Aggregate §3.1 capacity of the live cluster: the sum of the
+    /// join-time budgets of every live service, `None` when at least
+    /// one live service reported no budget (unlimited ⇒ unbounded
+    /// capacity), and `Some(0)` when no live service exists.  The
+    /// admission-control input for submitted plans.
+    pub fn cluster_budget(&self) -> Option<u64> {
+        let mut sum = 0u64;
+        let mut any = false;
+        for s in self.generation.keys() {
+            if self.dead.contains(s) {
+                continue;
+            }
+            any = true;
+            match self.budgets.get(s) {
+                Some(b) => sum = sum.saturating_add(*b),
+                None => return None,
+            }
+        }
+        if !any {
+            return Some(0);
+        }
+        Some(sum)
     }
 }
 
@@ -1667,5 +1996,211 @@ mod tests {
             .collect();
         assert_eq!(completions.len(), 2);
         assert!(completions.contains(&0) && completions.contains(&1));
+    }
+
+    // ------------------------------------------------- tenants (v7)
+
+    /// Build `k` tenants with `n` tasks each on a fresh scheduler
+    /// (empty seed workflow), ids allocated via `reserve_task_ids`.
+    fn tenant_sched(
+        k: u32,
+        n: u32,
+        quota: Option<usize>,
+        policy: Policy,
+    ) -> Scheduler {
+        let mut s = Scheduler::new(vec![], policy);
+        for tenant in 1..=k {
+            let base = s.reserve_task_ids(n);
+            let tasks: Vec<MatchTask> = (0..n)
+                .map(|i| task(base + i, base + i, base + i))
+                .collect();
+            s.add_tenant_tasks(
+                tenant,
+                tasks,
+                HashMap::new(),
+                HashMap::new(),
+                quota,
+            );
+        }
+        s
+    }
+
+    /// Property (v7 fairness invariant): for any interleaving of task
+    /// pulls from any number of services, as long as every tenant
+    /// still has open tasks the per-tenant assignment counts never
+    /// diverge by more than one — round-robin tenant selection cannot
+    /// let a heavy plan starve a light one.  The interleaving is a
+    /// deterministic schedule driven by a [`ManualClock`]: each pull
+    /// event gets a random arrival offset, events fire in clock
+    /// order, and some completions are interleaved so the open/
+    /// in-flight mix varies too.
+    #[test]
+    fn prop_tenant_fairness_round_robin() {
+        use crate::obs::{Clock, ManualClock};
+        forall("tenant-fairness", 60, |rng| {
+            let k = 2 + rng.gen_range(3) as u32; // 2..=4 tenants
+            let n = 4 + rng.gen_range(12) as u32; // tasks per tenant
+            let n_services = 1 + rng.gen_range(4);
+            let policy = if rng.gen_bool(0.5) {
+                Policy::Affinity
+            } else {
+                Policy::Fifo
+            };
+            let mut s = tenant_sched(k, n, None, policy);
+            for svc in 0..n_services {
+                s.add_service(ServiceId(svc));
+            }
+            // deterministic arrival schedule: the ManualClock advances
+            // by a random offset before every pull event
+            let clock = ManualClock::new(0);
+            let mut assigned: HashMap<u32, usize> = HashMap::new();
+            let mut in_flight: Vec<(usize, u32)> = Vec::new();
+            loop {
+                clock.advance(1 + rng.gen_range(1_000) as u64);
+                let _arrival = clock.now_ns();
+                let svc = rng.gen_range(n_services);
+                if !in_flight.is_empty() && rng.gen_bool(0.3) {
+                    // interleave a completion of a random in-flight task
+                    let i = rng.gen_range(in_flight.len());
+                    let (owner, tid) = in_flight.swap_remove(i);
+                    assert!(s.try_report_complete(
+                        ServiceId(owner),
+                        tid,
+                        vec![]
+                    ));
+                    continue;
+                }
+                let Some(t) = s.next_task(ServiceId(svc)) else {
+                    break; // open list drained
+                };
+                let tenant = s.tenant_of_task(t.id);
+                *assigned.entry(tenant).or_insert(0) += 1;
+                in_flight.push((svc, t.id));
+                // invariant: among tenants that still have open tasks
+                // (assigned < n), counts stay within one of each other
+                let backlogged: Vec<usize> = (1..=k)
+                    .map(|t| assigned.get(&t).copied().unwrap_or(0))
+                    .filter(|&a| a < n as usize)
+                    .collect();
+                if backlogged.len() >= 2 {
+                    let hi = *backlogged.iter().max().unwrap();
+                    let lo = *backlogged.iter().min().unwrap();
+                    assert!(
+                        hi - lo <= 1,
+                        "fairness violated: backlogged tenant counts \
+                         {backlogged:?} diverge by more than one"
+                    );
+                }
+            }
+            // every tenant got everything in the end
+            for tenant in 1..=k {
+                assert_eq!(assigned[&tenant], n as usize);
+            }
+            for (owner, tid) in in_flight {
+                assert!(s.try_report_complete(ServiceId(owner), tid, vec![]));
+            }
+            assert!(s.is_done());
+            for tenant in 1..=k {
+                assert_eq!(s.tenant_progress(tenant), (n as usize, n as usize));
+            }
+        });
+    }
+
+    #[test]
+    fn tenant_quota_caps_in_flight() {
+        let mut s = tenant_sched(2, 5, Some(1), Policy::Fifo);
+        s.add_service(ServiceId(0));
+        let a = s.next_task(ServiceId(0)).expect("tenant 1 under quota");
+        let b = s.next_task(ServiceId(0)).expect("tenant 2 under quota");
+        assert_ne!(s.tenant_of_task(a.id), s.tenant_of_task(b.id));
+        // both tenants at their quota: nothing assignable despite a
+        // non-empty open list
+        assert!(s.next_task(ServiceId(0)).is_none());
+        assert_eq!(s.queue_depth(), 8);
+        // completing frees the quota slot
+        assert!(s.try_report_complete(ServiceId(0), a.id, vec![]));
+        let c = s.next_task(ServiceId(0)).expect("slot freed");
+        assert_eq!(s.tenant_of_task(c.id), s.tenant_of_task(a.id));
+    }
+
+    #[test]
+    fn drain_tenant_drops_open_and_inflight() {
+        let mut s = tenant_sched(2, 3, None, Policy::Fifo);
+        s.add_service(ServiceId(0));
+        let a = s.next_task(ServiceId(0)).unwrap(); // tenant 1
+        assert_eq!(s.tenant_of_task(a.id), 1);
+        assert_eq!(s.total(), 6);
+        // drain tenant 1: its in-flight task + 2 open tasks vanish
+        assert_eq!(s.drain_tenant(1), 3);
+        assert_eq!(s.total(), 3);
+        // the straggler completion of the drained task is stale
+        assert!(!s.try_report_complete(ServiceId(0), a.id, vec![]));
+        // tenant 2 is untouched and completes the workflow
+        while let Some(t) = s.next_task(ServiceId(0)) {
+            assert_eq!(s.tenant_of_task(t.id), 2);
+            assert!(s.try_report_complete(ServiceId(0), t.id, vec![]));
+        }
+        assert!(s.is_done());
+        assert_eq!(s.tenant_progress(2), (3, 3));
+    }
+
+    #[test]
+    fn tenant_misfit_isolates_failure() {
+        // seed workflow: one task; tenant 1: one unsplittable task
+        // (a footprint but no split metadata)
+        let mut s = Scheduler::new(vec![task(0, 0, 0)], Policy::Fifo);
+        s.add_service(ServiceId(0));
+        s.set_service_budget(ServiceId(0), Some(100));
+        let base = s.reserve_task_ids(1);
+        let mem: HashMap<u32, u64> = [(base, 1 << 30)].into();
+        s.add_tenant_tasks(
+            1,
+            vec![task(base, 7, 8)],
+            mem,
+            HashMap::new(),
+            None,
+        );
+        // round-robin offers tenant 1 first (cursor starts at 0)
+        let t = s.next_task(ServiceId(0)).unwrap();
+        assert_eq!(s.tenant_of_task(t.id), 1);
+        // the only live service rejects it: unplaceable + unsplittable
+        assert!(s.reject_task(ServiceId(0), t.id));
+        let mis = s.tenant_misfit(1).expect("tenant misfit recorded");
+        assert_eq!(mis.task_id, t.id);
+        assert_eq!(mis.smallest_budget, 100);
+        // ...but only tenant 1 failed: no cluster-wide misfit, and the
+        // tenant's work is drained so the workflow still converges
+        assert!(s.misfit().is_none());
+        let seed = s.next_task(ServiceId(0)).unwrap();
+        assert_eq!(seed.id, 0);
+        assert!(s.try_report_complete(ServiceId(0), seed.id, vec![]));
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn split_children_inherit_tenant() {
+        let mut s = Scheduler::new(vec![], Policy::Fifo);
+        s.add_service(ServiceId(0));
+        s.set_service_budget(ServiceId(0), Some(30));
+        let base = s.reserve_task_ids(1);
+        let mem: HashMap<u32, u64> = [(base, 100)].into();
+        let sizes: HashMap<u32, (u32, u32)> = [(base, (4, 4))].into();
+        s.add_tenant_tasks(1, vec![task(base, 7, 8)], mem, sizes, None);
+        let t = s.next_task(ServiceId(0)).unwrap();
+        assert!(s.reject_task(ServiceId(0), t.id));
+        assert_eq!(s.runtime_splits(), 1);
+        assert!(s.tenant_misfit(1).is_none());
+        // every sub-task belongs to tenant 1; completing them all
+        // completes the root exactly once
+        let mut n_children = 0;
+        while let Some(c) = s.next_task(ServiceId(0)) {
+            assert_eq!(s.tenant_of_task(c.id), 1);
+            assert!(s.span_of(c.id).is_some());
+            assert!(s.try_report_complete(ServiceId(0), c.id, vec![]));
+            n_children += 1;
+        }
+        assert!(n_children > 1, "the task was split");
+        assert_eq!(s.tenant_progress(1), (1, 1));
+        assert!(s.is_done());
     }
 }

@@ -28,13 +28,13 @@
 use crate::cluster::ComputingEnv;
 use crate::coordinator::scheduler::Policy;
 use crate::metrics::RunMetrics;
-use crate::model::Correspondence;
+use crate::model::{Correspondence, Dataset};
 use crate::obs::Tracer;
 use crate::partition::{MatchTask, PartitionSet};
 use crate::service::{
     announce_replica, run_match_node, DataServiceServer, MatchNodeConfig,
-    NodeReport, WaitStatus, WorkflowReport, WorkflowServerConfig,
-    WorkflowServiceServer,
+    NodeReport, TenantHostConfig, WaitStatus, WorkflowReport,
+    WorkflowServerConfig, WorkflowServiceServer,
 };
 use crate::store::DataService;
 use crate::worker::TaskExecutor;
@@ -97,6 +97,11 @@ pub struct DistConfig {
     /// `Planned → … → Completed` events for the whole wire run
     /// (`pem match --trace`, chaos replay verification).
     pub tracer: Option<Arc<Tracer>>,
+    /// Per-tenant in-flight cap for a *resident* cluster
+    /// ([`serve_resident`]): at most this many of one tenant's tasks
+    /// assigned at once, so a huge submitted plan cannot starve a
+    /// small one.  Ignored by [`run`].  `None` = uncapped.
+    pub per_tenant_inflight: Option<usize>,
 }
 
 impl Default for DistConfig {
@@ -116,8 +121,128 @@ impl Default for DistConfig {
             run_timeout: Duration::from_secs(600),
             fail_node_after: Vec::new(),
             tracer: None,
+            per_tenant_inflight: None,
         }
     }
+}
+
+/// A running resident multi-tenant cluster (protocol v7): the data
+/// primary, a workflow server that accepts `PlanSubmit` frames, and
+/// `ce.nodes` in-process match nodes that stay attached between
+/// plans.  Built by [`serve_resident`]; lives until
+/// [`ResidentCluster::shutdown`].
+pub struct ResidentCluster {
+    workflow: WorkflowServiceServer,
+    data: DataServiceServer,
+    nodes: Vec<std::thread::JoinHandle<Result<NodeReport>>>,
+}
+
+impl ResidentCluster {
+    /// Control-plane address clients submit plans to (`pem submit
+    /// --to`).
+    pub fn workflow_addr(&self) -> std::net::SocketAddr {
+        self.workflow.addr()
+    }
+
+    /// Data-plane primary address.
+    pub fn data_addr(&self) -> std::net::SocketAddr {
+        self.data.addr()
+    }
+
+    /// Tear the cluster down: abort both servers (their dropped
+    /// connections unblock every node poll), join the node threads,
+    /// and extract the final coordinator report.  Nodes exiting with
+    /// a lost-coordinator error is the *expected* resident teardown,
+    /// not a failure.
+    pub fn shutdown(self) -> WorkflowReport {
+        self.workflow.abort();
+        self.data.shutdown();
+        for h in self.nodes {
+            let _ = h.join();
+        }
+        self.workflow.finish()
+    }
+}
+
+/// Start a resident multi-tenant cluster serving `dataset`: the
+/// workflow server is seeded with **no tasks** and a
+/// [`TenantHostConfig`], so all work arrives as `PlanSubmit` frames
+/// from clients; admitted plans' partitions are loaded into `store`
+/// at run time, and the match nodes — which never see `done` — pull
+/// whatever the fair scheduler interleaves.
+pub fn serve_resident(
+    ce: &ComputingEnv,
+    dataset: Arc<Dataset>,
+    store: Arc<DataService>,
+    executor: Arc<dyn TaskExecutor>,
+    cfg: DistConfig,
+) -> Result<ResidentCluster> {
+    let bind_ep = format!("{}:0", cfg.bind);
+    let connect_host = if cfg.bind == "0.0.0.0" {
+        "127.0.0.1"
+    } else {
+        cfg.bind.as_str()
+    };
+    let data_srv = DataServiceServer::start(store.clone(), &bind_ep)
+        .context("starting data service")?;
+    let data_addr =
+        format!("{connect_host}:{}", data_srv.addr().port());
+    let wf_srv = WorkflowServiceServer::start(
+        Vec::new(),
+        WorkflowServerConfig {
+            policy: cfg.policy,
+            heartbeat_timeout: cfg.heartbeat_timeout,
+            task_mem: std::collections::HashMap::new(),
+            task_sizes: std::collections::HashMap::new(),
+            expected_services: ce.nodes,
+            tracer: cfg.tracer.clone(),
+            tenancy: Some(TenantHostConfig {
+                dataset,
+                store,
+                per_tenant_inflight: cfg.per_tenant_inflight,
+            }),
+        },
+        &bind_ep,
+    )
+    .context("starting resident workflow service")?;
+    let wf_addr = format!("{connect_host}:{}", wf_srv.addr().port());
+    announce_replica(
+        &wf_addr,
+        &data_addr,
+        &data_srv.partition_ids(),
+        Duration::from_secs(10),
+    )
+    .context("announcing the data primary")?;
+
+    let nodes: Vec<_> = (0..ce.nodes)
+        .map(|i| {
+            let mut node_cfg =
+                MatchNodeConfig::new(wf_addr.clone(), data_addr.clone());
+            node_cfg.name = format!("resident-node-{i}");
+            node_cfg.threads = ce.threads_per_node;
+            node_cfg.cache_capacity = cfg.cache_capacity;
+            node_cfg.batch = cfg.batch;
+            node_cfg.task_memory_budget = cfg
+                .node_memory_budgets
+                .iter()
+                .find(|(node, _)| *node == i)
+                .map(|&(_, budget)| budget)
+                .or(cfg.memory_budget);
+            node_cfg.heartbeat_interval = cfg.heartbeat_interval;
+            node_cfg.poll_interval = cfg.poll_interval;
+            node_cfg.tracer = cfg.tracer.clone();
+            let exec = executor.clone();
+            std::thread::Builder::new()
+                .name(format!("pem-resident-node-{i}"))
+                .spawn(move || run_match_node(&node_cfg, exec))
+                .expect("spawn match node")
+        })
+        .collect();
+    Ok(ResidentCluster {
+        workflow: wf_srv,
+        data: data_srv,
+        nodes,
+    })
 }
 
 /// Outcome of a distributed run.
@@ -216,6 +341,7 @@ pub fn run(
             // splitting verdicts wait until the whole cluster joined
             expected_services: ce.nodes,
             tracer: cfg.tracer.clone(),
+            tenancy: None,
         },
         &bind_ep,
     )

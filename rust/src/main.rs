@@ -21,6 +21,10 @@
 //! * `distmatch`— run one match-service node process against a running
 //!   `pem serve` coordinator (give `--data` a comma-separated replica
 //!   list, or let the join-time directory supply it);
+//! * `submit`   — send a saved match plan (`pem plan --save`) to a
+//!   *resident* coordinator (`pem serve --resident`, protocol v7) and
+//!   follow it to completion; admission is checked against the live
+//!   cluster's aggregate §3.1 budget;
 //! * `stats`    — scrape a RUNNING cluster's live metrics over the
 //!   wire (protocol v6 `StatsRequest`): scheduler queue depth,
 //!   per-node busy/idle, cache hit ratios, fetch-latency histograms;
@@ -65,7 +69,7 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: pem <generate|export|plan|match|sweep|serve|distmatch|stats|artifacts|info> [options]
+        "usage: pem <generate|export|plan|match|sweep|serve|distmatch|submit|stats|artifacts|info> [options]
   common options:
     --entities N          dataset size (default 20000)
     --seed S              generator seed (default 2010)
@@ -119,6 +123,12 @@ fn usage() -> ! {
                           address for multi-host runs)
     --trace out.jsonl     dump the scheduler's task-lifecycle trace
                           as JSONL when the workflow drains
+    --resident            protocol v7 multi-tenant mode: keep the
+                          cluster alive after the seed workflow drains
+                          and accept `pem submit` plan submissions
+                          (admission-controlled, fair-scheduled)
+    --tenant-inflight K   fairness cap: at most K in-flight tasks per
+                          submitted plan (default uncapped)
   serve --role data options (standalone data-plane replica):
     --replica-of HOST:PORT  upstream data server to sync from (required)
     --workflow HOST:PORT    coordinator to announce this replica to
@@ -131,6 +141,13 @@ fn usage() -> ! {
     --batch K             tasks pulled per round trip (default 1)
     --mem-budget BYTES    reject tasks whose footprint exceeds this
     --name NAME           node name  --threads T  --cache C
+  submit options (submit a saved plan: pem submit plan.bin --to ADDR):
+    --to HOST:PORT        resident workflow service (required)
+    --name NAME           plan label in coordinator logs (default:
+                          the file name)
+    --out matches.csv     write the plan's correspondences as CSV
+    --poll-ms MS          status poll period (default 200)
+    --timeout-s S         give up following after S seconds (default 600)
   stats options (scrape a RUNNING cluster: pem stats HOST:PORT):
     --no-follow           scrape only the given address (by default a
                           workflow service's replica directory is
@@ -295,6 +312,7 @@ fn run() -> Result<()> {
         Some("sweep") => cmd_sweep(&args),
         Some("serve") => cmd_serve(&args),
         Some("distmatch") => cmd_distmatch(&args),
+        Some("submit") => cmd_submit(&args),
         Some("stats") => cmd_stats(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("info") => cmd_info(&args),
@@ -704,7 +722,11 @@ fn cmd_serve_coordinator(args: &Args) -> Result<()> {
     let kind = parse_strategy(args)?;
     let ce = parse_ce(args)?;
     let policy = parse_policy(args);
+    let resident = args.flag("resident");
     let (dataset, truth) = load_dataset(args)?;
+    // resident mode shares the dataset with the tenant table, which
+    // validates submitted plans' provenance against it
+    let dataset = std::sync::Arc::new(dataset);
     let planned = Workflow::for_dataset(&dataset)
         .matching(kind)
         .strategy_boxed(parse_partition_strategy(args, kind)?)
@@ -740,7 +762,7 @@ fn cmd_serve_coordinator(args: &Args) -> Result<()> {
         format!("{bind_host}:{}", args.get_or("data-port", 0u16)?);
     let wf_bind =
         format!("{bind_host}:{}", args.get_or("workflow-port", 0u16)?);
-    let data_srv = DataServiceServer::start(store, &data_bind)?;
+    let data_srv = DataServiceServer::start(store.clone(), &data_bind)?;
     // --trace: the scheduler records every assignment / rejection /
     // split / completion; dumped as JSONL when the workflow drains
     let tracer = args.get_str("trace").map(|_| {
@@ -757,6 +779,18 @@ fn cmd_serve_coordinator(args: &Args) -> Result<()> {
             task_sizes,
             expected_services: args.get_or("expect-nodes", 1usize)?,
             tracer: tracer.clone(),
+            tenancy: if resident {
+                Some(pem::service::TenantHostConfig {
+                    dataset: dataset.clone(),
+                    store: store.clone(),
+                    per_tenant_inflight: opt_usize(
+                        args,
+                        "tenant-inflight",
+                    )?,
+                })
+            } else {
+                None
+            },
         },
         &wf_bind,
     )?;
@@ -797,27 +831,48 @@ fn cmd_serve_coordinator(args: &Args) -> Result<()> {
     let timeout = std::time::Duration::from_secs(
         args.get_or("timeout-s", 3600u64)?,
     );
-    match wf_srv.wait_outcome(timeout) {
-        pem::service::WaitStatus::Done => {}
-        pem::service::WaitStatus::Misfit(misfit) => {
-            // the §3.1 fail-fast: tell the operator *now* instead of
-            // idling until --timeout-s
-            data_srv.shutdown();
-            return Err(anyhow::Error::new(misfit).context(
-                "workflow failed fast (§3.1 memory model): add \
-                 roomier nodes or re-plan with a smaller --max-size",
-            ));
+    if resident {
+        // a resident coordinator has no natural "done": nodes stay
+        // attached between submitted plans, so serve until the
+        // operator's --timeout-s budget elapses (or the process is
+        // killed), then tear down and report
+        println!(
+            "resident mode: accepting plan submissions for \
+             {timeout:?} — pem submit plan.bin --to {advertise}:{}",
+            wf_srv.addr().port()
+        );
+        std::thread::sleep(timeout);
+        // parting snapshot: the same tenant table `pem stats` shows,
+        // so the operator sees what every submitted plan ended as
+        if let Ok(snap) = scrape_stats(
+            &format!("{self_host}:{}", wf_srv.addr().port()),
+            std::time::Duration::from_secs(5),
+        ) {
+            print_stats("self", &snap, args.flag("json"));
         }
-        pem::service::WaitStatus::Timeout => {
-            data_srv.shutdown();
-            bail!(
-                "timed out after {timeout:?} with {} tasks complete",
-                wf_srv.completed()
-            );
+    } else {
+        match wf_srv.wait_outcome(timeout) {
+            pem::service::WaitStatus::Done => {}
+            pem::service::WaitStatus::Misfit(misfit) => {
+                // the §3.1 fail-fast: tell the operator *now* instead
+                // of idling until --timeout-s
+                data_srv.shutdown();
+                return Err(anyhow::Error::new(misfit).context(
+                    "workflow failed fast (§3.1 memory model): add \
+                     roomier nodes or re-plan with a smaller --max-size",
+                ));
+            }
+            pem::service::WaitStatus::Timeout => {
+                data_srv.shutdown();
+                bail!(
+                    "timed out after {timeout:?} with {} tasks complete",
+                    wf_srv.completed()
+                );
+            }
         }
+        // grace period: let the nodes observe `done` and leave cleanly
+        std::thread::sleep(std::time::Duration::from_millis(250));
     }
-    // grace period: let the nodes observe `done` and leave cleanly
-    std::thread::sleep(std::time::Duration::from_millis(250));
     let elapsed = started.elapsed();
     let report = wf_srv.finish();
     let mut result = pem::model::MatchResult::new();
@@ -991,6 +1046,129 @@ fn cmd_distmatch(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `pem submit plan.bin --to HOST:PORT`: submit a saved match plan
+/// (`pem plan --save`) to a *resident* coordinator (protocol v7) and
+/// follow it to its terminal state.  An over-budget plan is refused
+/// in one round trip with the typed §3.1 admission verdict.
+fn cmd_submit(args: &Args) -> Result<()> {
+    use pem::rpc::{Message, Transport};
+    use pem::service::{
+        AdmissionDenied, TENANT_ABORTED, TENANT_DONE, TENANT_FAILED,
+    };
+    let path = args.positional().get(1).cloned().ok_or_else(|| {
+        anyhow::anyhow!("usage: pem submit plan.bin --to HOST:PORT")
+    })?;
+    let to = args
+        .get_str("to")
+        .ok_or_else(|| anyhow::anyhow!("--to HOST:PORT required"))?;
+    let name = args.str_or("name", path.as_str()).to_string();
+    let plan_bytes = std::fs::read(&path)?;
+    let timeout = std::time::Duration::from_secs(
+        args.get_or("timeout-s", 600u64)?,
+    );
+    let poll = std::time::Duration::from_millis(
+        args.get_or("poll-ms", 200u64)?,
+    );
+    let mut t =
+        Transport::connect(to, std::time::Duration::from_secs(5))?;
+    let plan_id = match t.request(&Message::PlanSubmit {
+        name: name.clone(),
+        plan: plan_bytes,
+    })? {
+        Message::PlanAccepted { plan } => plan,
+        Message::PlanRejected {
+            required,
+            available,
+            reason,
+        } => {
+            if required > 0 {
+                // the typed admission verdict: scripts can downcast
+                // to `AdmissionDenied` for the exact byte numbers
+                return Err(anyhow::Error::new(AdmissionDenied {
+                    required,
+                    available,
+                })
+                .context(format!("plan {name:?} refused by {to}")));
+            }
+            bail!("plan {name:?} refused by {to}: {reason}");
+        }
+        other => bail!("unexpected reply: {}", other.kind()),
+    };
+    println!("plan {name:?} admitted by {to} as plan #{plan_id}");
+    let started = std::time::Instant::now();
+    loop {
+        if started.elapsed() > timeout {
+            bail!(
+                "gave up following plan #{plan_id} after {timeout:?} \
+                 (it keeps running server-side; poll with pem stats)"
+            );
+        }
+        match t.request(&Message::PlanStatus { plan: plan_id })? {
+            Message::PlanStatusReport {
+                completed, total, ..
+            } => {
+                println!("plan #{plan_id}: {completed}/{total} tasks");
+            }
+            Message::PlanResult {
+                state,
+                comparisons,
+                matches,
+                detail,
+                ..
+            } => {
+                return match state {
+                    TENANT_DONE => {
+                        println!(
+                            "plan #{plan_id} done: {comparisons} \
+                             comparisons, {} matches",
+                            matches.len()
+                        );
+                        if let Some(out_path) = args.get_str("out") {
+                            pem::io::write_matches(
+                                matches.iter(),
+                                std::fs::File::create(out_path)?,
+                            )?;
+                            println!(
+                                "wrote {} matches to {out_path}",
+                                matches.len()
+                            );
+                        }
+                        Ok(())
+                    }
+                    TENANT_ABORTED => {
+                        bail!("plan #{plan_id} aborted: {detail}")
+                    }
+                    TENANT_FAILED => {
+                        bail!("plan #{plan_id} failed: {detail}")
+                    }
+                    other => bail!(
+                        "plan #{plan_id}: unknown terminal state {other}"
+                    ),
+                };
+            }
+            Message::Error { message } => {
+                bail!("coordinator refused the status poll: {message}")
+            }
+            other => bail!("unexpected reply: {}", other.kind()),
+        }
+        std::thread::sleep(poll);
+    }
+}
+
+/// Human name of a `tenant.{id}.state` gauge value.
+fn tenant_state_name(state: u64) -> &'static str {
+    use pem::service::{
+        TENANT_ABORTED, TENANT_DONE, TENANT_FAILED, TENANT_RUNNING,
+    };
+    match state {
+        s if s == TENANT_RUNNING as u64 => "running",
+        s if s == TENANT_DONE as u64 => "done",
+        s if s == TENANT_ABORTED as u64 => "aborted",
+        s if s == TENANT_FAILED as u64 => "failed",
+        _ => "?",
+    }
+}
+
 /// The paper's cache hit ratio `hr` from a snapshot's raw counters.
 fn snapshot_hit_ratio(snap: &pem::obs::MetricsSnapshot) -> f64 {
     let hits = snap.counter("cache_hits").unwrap_or(0);
@@ -1058,6 +1236,10 @@ fn print_stats(addr: &str, snap: &pem::obs::MetricsSnapshot, json: bool) {
     if !snap.gauges.is_empty() {
         println!("  gauges:");
         for (k, v) in &snap.gauges {
+            if k.starts_with("tenant.") {
+                // rendered as the derived per-plan table below
+                continue;
+            }
             if k.ends_with("_ns") {
                 println!("    {k:<28} {}", fmt_nanos(*v));
             } else if k.ends_with("bytes") {
@@ -1085,6 +1267,26 @@ fn print_stats(addr: &str, snap: &pem::obs::MetricsSnapshot, json: bool) {
             "  derived: cache hr {:.1}%",
             snapshot_hit_ratio(snap) * 100.0
         );
+    }
+    // resident coordinator (protocol v7): one row per submitted plan
+    // — plan ids are dense from 1, and terminal tenants stay in the
+    // table, so walking until the first gap covers them all
+    let g = pem::obs::tenant_gauge;
+    if let Some(active) = snap
+        .gauge("tenants_active")
+        .filter(|&a| a > 0 || snap.gauge(&g(1, "state")).is_some())
+    {
+        println!("  tenants ({active} running):");
+        let mut id = 1u32;
+        while let Some(state) = snap.gauge(&g(id, "state")) {
+            println!(
+                "    plan #{id}: {:<8} {}/{} tasks",
+                tenant_state_name(state),
+                snap.gauge(&g(id, "tasks_completed")).unwrap_or(0),
+                snap.gauge(&g(id, "tasks_total")).unwrap_or(0)
+            );
+            id += 1;
+        }
     }
 }
 

@@ -19,7 +19,7 @@ pub mod trace;
 
 pub use clock::{system_clock, Clock, ManualClock, SystemClock};
 pub use registry::{
-    bucket_index, bucket_lower, Counter, Gauge, Histogram,
+    bucket_index, bucket_lower, tenant_gauge, Counter, Gauge, Histogram,
     HistogramSnapshot, MetricsSnapshot, Registry, HISTOGRAM_BUCKETS,
 };
 pub use trace::{

@@ -130,6 +130,15 @@ pub fn bucket_lower(i: usize) -> u64 {
     }
 }
 
+/// Name of a per-tenant gauge on a resident coordinator (protocol
+/// v7): `tenant.{id}.state`, `tenant.{id}.tasks_completed`,
+/// `tenant.{id}.tasks_total`.  The one formatter shared by the
+/// workflow server's emitters and the `pem stats` renderer, so the
+/// two cannot drift apart.
+pub fn tenant_gauge(id: u32, field: &str) -> String {
+    format!("tenant.{id}.{field}")
+}
+
 impl Histogram {
     /// A histogram with all buckets empty.
     pub fn new() -> Histogram {

@@ -70,9 +70,22 @@
 //! — so `pem stats` can scrape a *running* cluster.
 //! [`Message::Heartbeat`] is enriched with the node's busy-ns and
 //! cache counters, giving the coordinator live per-node load without
-//! extra round trips.  The authoritative byte-level layout of every
-//! frame is specified in `docs/WIRE_PROTOCOL.md`, kept in lockstep
-//! with this module.
+//! extra round trips.
+//!
+//! **Multi-tenant plan submission (protocol v7).**  A *client* (not a
+//! match node) submits a whole workflow over the wire:
+//! [`Message::PlanSubmit`] carries the canonical
+//! [`crate::coordinator::MatchPlan`] bytes (`pem plan --save`); the
+//! resident workflow service admits it against the aggregate of the
+//! v5 join-time node budgets and answers [`Message::PlanAccepted`]
+//! (with the tenant's plan id) or [`Message::PlanRejected`] (typed
+//! admission denial: required vs. available bytes).  The client polls
+//! with [`Message::PlanStatus`]; the reply is
+//! [`Message::PlanStatusReport`] while the plan runs and
+//! [`Message::PlanResult`] — the tenant's isolated match output —
+//! once it reaches a terminal state.  The authoritative byte-level
+//! layout of every frame is specified in `docs/WIRE_PROTOCOL.md`,
+//! kept in lockstep with this module.
 
 #![warn(missing_docs)]
 
@@ -95,8 +108,12 @@ pub use frame::{read_frame, read_frame_raw, write_frame, Transport, MAX_FRAME_BY
 /// budget on [`Message::Join`], optional [`TaskSpan`] on every
 /// assignment); v6 — live observability ([`Message::StatsRequest`] /
 /// [`Message::StatsReport`] management frames, enriched
-/// [`Message::Heartbeat`] carrying busy-ns and cache counters).
-pub const PROTOCOL_VERSION: u8 = 6;
+/// [`Message::Heartbeat`] carrying busy-ns and cache counters);
+/// v7 — multi-tenant plan submission ([`Message::PlanSubmit`] /
+/// [`Message::PlanAccepted`] / [`Message::PlanRejected`] /
+/// [`Message::PlanStatus`] / [`Message::PlanStatusReport`] /
+/// [`Message::PlanResult`]) to a resident workflow service.
+pub const PROTOCOL_VERSION: u8 = 7;
 
 use crate::coordinator::scheduler::ServiceId;
 use crate::features::{EntityFeatures, QGramSet, TokenSet};
@@ -372,6 +389,78 @@ pub enum Message {
         /// Serialized `MetricsSnapshot`.
         stats: Vec<u8>,
     },
+    /// client → workflow service (v7): submit a whole match workflow
+    /// to a *resident* cluster.  `plan` is the canonical
+    /// [`crate::coordinator::MatchPlan`] byte format (`PEMPLAN` magic,
+    /// `pem plan --save`) — the same bytes the CLI writes to disk.
+    /// Answered with [`Message::PlanAccepted`] or
+    /// [`Message::PlanRejected`].
+    PlanSubmit {
+        /// Human-readable tenant name (status reports, `pem stats`).
+        name: String,
+        /// Serialized `MatchPlan` (`MatchPlan::to_bytes`).
+        plan: Vec<u8>,
+    },
+    /// workflow service → client (v7): the submitted plan was admitted.
+    PlanAccepted {
+        /// Tenant plan id — the handle for [`Message::PlanStatus`]
+        /// polls.  Unique for the lifetime of the resident service.
+        plan: u32,
+    },
+    /// workflow service → client (v7): the submitted plan was refused.
+    /// When `required > 0` this is a typed **admission denial**: the
+    /// plan's aggregate §3.1 footprint (`required` bytes) exceeds the
+    /// cluster's aggregate join-time budget (`available` bytes) — the
+    /// client gets the denial in one round trip instead of a
+    /// queue-and-hang run timeout.  `required == 0` means the plan was
+    /// malformed or the service is not accepting submissions; see
+    /// `reason`.
+    PlanRejected {
+        /// Aggregate §3.1 footprint of the plan, bytes (0 = not an
+        /// admission denial).
+        required: u64,
+        /// Aggregate budget of the live cluster, bytes, at denial time.
+        available: u64,
+        /// Human-readable refusal description.
+        reason: String,
+    },
+    /// client → workflow service (v7): poll a submitted plan.
+    PlanStatus {
+        /// The plan id from [`Message::PlanAccepted`].
+        plan: u32,
+    },
+    /// workflow service → client (v7): progress of a *running* plan.
+    /// Terminal plans answer with [`Message::PlanResult`] instead.
+    PlanStatusReport {
+        /// The polled plan.
+        plan: u32,
+        /// Tenant lifecycle state (`1` running — terminal states
+        /// arrive as [`Message::PlanResult`]).
+        state: u8,
+        /// Tasks of this plan completed so far.
+        completed: u32,
+        /// Total tasks of this plan.
+        total: u32,
+        /// Human-readable detail (empty while healthy).
+        detail: String,
+    },
+    /// workflow service → client (v7): terminal outcome of a submitted
+    /// plan — the tenant's isolated result channel.  `state` is `2`
+    /// done, `3` aborted (submitting client vanished), `4` failed
+    /// (e.g. an unsplittable task raised a plan misfit).  Re-polling a
+    /// terminal plan is idempotent: the same result is served again.
+    PlanResult {
+        /// The polled plan.
+        plan: u32,
+        /// Terminal tenant state (2 done / 3 aborted / 4 failed).
+        state: u8,
+        /// Pair comparisons the plan's tasks evaluated.
+        comparisons: u64,
+        /// Correspondences the plan found (empty unless done).
+        matches: Vec<Correspondence>,
+        /// Failure/abort detail (empty when done).
+        detail: String,
+    },
     /// Either direction: request failed.
     Error {
         /// Human-readable failure description.
@@ -404,6 +493,12 @@ const TAG_TASK_ASSIGN_BATCH: u8 = 20;
 const TAG_TASK_REJECTED: u8 = 21;
 const TAG_STATS_REQUEST: u8 = 22;
 const TAG_STATS_REPORT: u8 = 23;
+const TAG_PLAN_SUBMIT: u8 = 24;
+const TAG_PLAN_ACCEPTED: u8 = 25;
+const TAG_PLAN_REJECTED: u8 = 26;
+const TAG_PLAN_STATUS: u8 = 27;
+const TAG_PLAN_STATUS_REPORT: u8 = 28;
+const TAG_PLAN_RESULT: u8 = 29;
 
 /// Minimum wire footprint of one [`EntityFeatures`]: a 4-byte title
 /// length plus three 4-byte list counts (all possibly zero).
@@ -690,6 +785,63 @@ impl Message {
                 put_u32(&mut b, stats.len() as u32);
                 b.extend_from_slice(stats);
             }
+            Message::PlanSubmit { name, plan } => {
+                put_u8(&mut b, TAG_PLAN_SUBMIT);
+                put_str(&mut b, name);
+                put_u32(&mut b, plan.len() as u32);
+                b.extend_from_slice(plan);
+            }
+            Message::PlanAccepted { plan } => {
+                put_u8(&mut b, TAG_PLAN_ACCEPTED);
+                put_u32(&mut b, *plan);
+            }
+            Message::PlanRejected {
+                required,
+                available,
+                reason,
+            } => {
+                put_u8(&mut b, TAG_PLAN_REJECTED);
+                put_u64(&mut b, *required);
+                put_u64(&mut b, *available);
+                put_str(&mut b, reason);
+            }
+            Message::PlanStatus { plan } => {
+                put_u8(&mut b, TAG_PLAN_STATUS);
+                put_u32(&mut b, *plan);
+            }
+            Message::PlanStatusReport {
+                plan,
+                state,
+                completed,
+                total,
+                detail,
+            } => {
+                put_u8(&mut b, TAG_PLAN_STATUS_REPORT);
+                put_u32(&mut b, *plan);
+                put_u8(&mut b, *state);
+                put_u32(&mut b, *completed);
+                put_u32(&mut b, *total);
+                put_str(&mut b, detail);
+            }
+            Message::PlanResult {
+                plan,
+                state,
+                comparisons,
+                matches,
+                detail,
+            } => {
+                put_u8(&mut b, TAG_PLAN_RESULT);
+                put_u32(&mut b, *plan);
+                put_u8(&mut b, *state);
+                put_u64(&mut b, *comparisons);
+                put_u32(&mut b, matches.len() as u32);
+                for c in matches {
+                    put_u32(&mut b, c.e1.0);
+                    put_u32(&mut b, c.e2.0);
+                    put_f32(&mut b, c.sim);
+                }
+                put_str(&mut b, detail);
+            }
             Message::Error { message } => {
                 put_u8(&mut b, TAG_ERROR);
                 put_str(&mut b, message);
@@ -869,6 +1021,47 @@ impl Message {
                     d.take(n)?.to_vec()
                 },
             },
+            TAG_PLAN_SUBMIT => Message::PlanSubmit {
+                name: d.string()?,
+                plan: {
+                    let n = d.list_len(1)?;
+                    d.take(n)?.to_vec()
+                },
+            },
+            TAG_PLAN_ACCEPTED => Message::PlanAccepted { plan: d.u32()? },
+            TAG_PLAN_REJECTED => Message::PlanRejected {
+                required: d.u64()?,
+                available: d.u64()?,
+                reason: d.string()?,
+            },
+            TAG_PLAN_STATUS => Message::PlanStatus { plan: d.u32()? },
+            TAG_PLAN_STATUS_REPORT => Message::PlanStatusReport {
+                plan: d.u32()?,
+                state: d.u8()?,
+                completed: d.u32()?,
+                total: d.u32()?,
+                detail: d.string()?,
+            },
+            TAG_PLAN_RESULT => {
+                let plan = d.u32()?;
+                let state = d.u8()?;
+                let comparisons = d.u64()?;
+                let n_matches = d.list_len(12)?;
+                let mut matches = Vec::with_capacity(n_matches);
+                for _ in 0..n_matches {
+                    let e1 = EntityId(d.u32()?);
+                    let e2 = EntityId(d.u32()?);
+                    let sim = d.f32()?;
+                    matches.push(Correspondence { e1, e2, sim });
+                }
+                Message::PlanResult {
+                    plan,
+                    state,
+                    comparisons,
+                    matches,
+                    detail: d.string()?,
+                }
+            }
             TAG_ERROR => Message::Error {
                 message: d.string()?,
             },
@@ -903,6 +1096,12 @@ impl Message {
             Message::SyncDone { .. } => "SyncDone",
             Message::StatsRequest => "StatsRequest",
             Message::StatsReport { .. } => "StatsReport",
+            Message::PlanSubmit { .. } => "PlanSubmit",
+            Message::PlanAccepted { .. } => "PlanAccepted",
+            Message::PlanRejected { .. } => "PlanRejected",
+            Message::PlanStatus { .. } => "PlanStatus",
+            Message::PlanStatusReport { .. } => "PlanStatusReport",
+            Message::PlanResult { .. } => "PlanResult",
             Message::Error { .. } => "Error",
         }
     }
@@ -1228,6 +1427,43 @@ pub(crate) mod testutil {
                         span: rand_span(rng),
                     })
                     .collect(),
+            },
+            Message::PlanSubmit {
+                name: rand_string(rng, 16),
+                plan: (0..rng.gen_range(128))
+                    .map(|_| rng.gen_range(256) as u8)
+                    .collect(),
+            },
+            Message::PlanAccepted {
+                plan: rng.gen_range(10_000) as u32,
+            },
+            Message::PlanRejected {
+                required: rng.gen_range(1 << 40) as u64,
+                available: rng.gen_range(1 << 40) as u64,
+                reason: rand_string(rng, 40),
+            },
+            Message::PlanStatus {
+                plan: rng.gen_range(10_000) as u32,
+            },
+            Message::PlanStatusReport {
+                plan: rng.gen_range(10_000) as u32,
+                state: rng.gen_range(5) as u8,
+                completed: rng.gen_range(1000) as u32,
+                total: rng.gen_range(1000) as u32,
+                detail: rand_string(rng, 24),
+            },
+            Message::PlanResult {
+                plan: rng.gen_range(10_000) as u32,
+                state: 2 + rng.gen_range(3) as u8,
+                comparisons: rng.gen_range(1 << 40) as u64,
+                matches: (0..rng.gen_range(6))
+                    .map(|i| Correspondence {
+                        e1: EntityId(2 * i as u32),
+                        e2: EntityId(2 * i as u32 + 1),
+                        sim: (rng.gen_range(1000) as f32) / 1000.0,
+                    })
+                    .collect(),
+                detail: rand_string(rng, 24),
             },
             Message::Error {
                 message: rand_string(rng, 40),

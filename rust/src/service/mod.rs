@@ -39,6 +39,13 @@
 //! or `--role data` for a standalone replica) and `pem distmatch`
 //! (match node) CLI subcommands.  `docs/ARCHITECTURE.md` has the full
 //! layer map and data-flow diagrams.
+//!
+//! Since protocol v7 the workflow server can also run **resident and
+//! multi-tenant** ([`TenantHostConfig`]): many clients submit
+//! serialized match plans over the wire (`pem submit`), admission is
+//! checked against the cluster's aggregate §3.1 budget
+//! ([`AdmissionDenied`]), and admitted plans are fair-scheduled side
+//! by side with isolated result channels.
 
 #![warn(missing_docs)]
 
@@ -51,8 +58,9 @@ pub use data::DataServiceServer;
 pub use match_node::{run_match_node, MatchNodeConfig, NodeReport};
 pub use replica::{announce_replica, ReplicaSelector};
 pub use workflow::{
-    WaitStatus, WorkflowReport, WorkflowServerConfig,
-    WorkflowServiceServer,
+    AdmissionDenied, TenantHostConfig, WaitStatus, WorkflowReport,
+    WorkflowServerConfig, WorkflowServiceServer, TENANT_ABORTED,
+    TENANT_DONE, TENANT_FAILED, TENANT_RUNNING,
 };
 
 /// Convenience: a match-service node handle (config + entry point) —

@@ -46,17 +46,37 @@
 //! surfaces the typed [`PlanMisfit`] through
 //! [`WorkflowServiceServer::wait_outcome`] / the final report, so
 //! callers fail fast instead of idling to their run timeout.
+//!
+//! Since protocol v7 the server can run **resident and multi-tenant**:
+//! configured with a [`TenantHostConfig`], it accepts `PlanSubmit`
+//! frames carrying a serialized [`MatchPlan`] from any number of
+//! client connections.  Each admitted plan becomes a *tenant* — a row
+//! in the tenant table with its own task-id and partition-id range,
+//! isolated result channel, and lifecycle state machine (running →
+//! done / aborted / failed) — and its tasks are fair-scheduled against
+//! every other tenant's by the scheduler's deficit round-robin.
+//! Admission is checked up front against the aggregate of the live
+//! nodes' v5 join-time budgets: a plan whose §3.1 footprint the
+//! cluster can never hold is refused with the typed
+//! [`AdmissionDenied`] numbers instead of queue-and-hang.  Clients
+//! poll `PlanStatus` for progress and collect the terminal
+//! `PlanResult`; a client connection that drops mid-run aborts its
+//! running plans and drains their tasks, so surviving tenants get the
+//! cluster back.  In resident mode `NoTask`/`TaskAssignBatch` replies
+//! never report `done`, so match nodes stay attached between plans.
 
+use crate::coordinator::plan::MatchPlan;
 use crate::coordinator::scheduler::{
     PlanMisfit, Policy, Scheduler, ServiceId,
 };
-use crate::model::Correspondence;
+use crate::model::{Correspondence, Dataset};
 use crate::net::reactor::{Action, ConnId, FrameHandler, Reactor};
 use crate::net::TrafficStats;
 use crate::obs::{
     system_clock, Clock, Counter, MetricsSnapshot, Registry, Tracer,
 };
-use crate::partition::MatchTask;
+use crate::partition::{MatchTask, PartitionId};
+use crate::store::DataService;
 use crate::rpc::session::SessionEncoder;
 use crate::rpc::{AssignedTask, CompletedTask, Message, PROTOCOL_VERSION};
 use std::collections::{HashMap, HashSet};
@@ -69,6 +89,108 @@ use std::time::{Duration, Instant};
 /// for (a hostile `max` must not drain the whole open list into one
 /// slow worker).
 const MAX_ASSIGN_BATCH: usize = 256;
+
+/// Tenant lifecycle states as they travel on the wire
+/// (`PlanStatusReport.state` / `PlanResult.state`, protocol v7).
+/// `RUNNING` is the only non-terminal state; the terminal ones are
+/// answered with an idempotent `PlanResult`.
+pub const TENANT_RUNNING: u8 = 1;
+/// Terminal: every task of the plan completed; `PlanResult` carries
+/// the tenant's merged correspondences.
+pub const TENANT_DONE: u8 = 2;
+/// Terminal: the submitting client's connection closed while the plan
+/// was running; its tasks were drained.
+pub const TENANT_ABORTED: u8 = 3;
+/// Terminal: a task of the plan was rejected by every live node and
+/// could not be split (the per-tenant [`PlanMisfit`]); the plan's
+/// remaining tasks were drained.
+pub const TENANT_FAILED: u8 = 4;
+
+/// The typed admission-control refusal (protocol v7): the submitted
+/// plan's aggregate §3.1 footprint exceeds what the live cluster's
+/// join-time budgets can ever hold, so the plan is refused *at
+/// submission* — in milliseconds, with the numbers — instead of
+/// queueing tasks that would be rejected by every node and burn the
+/// client's run timeout.  Travels as `PlanRejected { required,
+/// available }`; `pem submit` rebuilds it client-side so callers can
+/// downcast just like for [`PlanMisfit`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AdmissionDenied {
+    /// Aggregate §3.1 footprint of the submitted plan, bytes.
+    pub required: u64,
+    /// Aggregate join-time budget of the live match nodes, bytes, at
+    /// the moment of submission (0 = no live node).
+    pub available: u64,
+}
+
+impl std::fmt::Display for AdmissionDenied {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "admission denied: the plan's aggregate §3.1 footprint is \
+             {} but the live cluster's total budget is {} — add nodes \
+             (or memory) and re-submit",
+            crate::util::fmt_bytes(self.required),
+            crate::util::fmt_bytes(self.available)
+        )
+    }
+}
+
+impl std::error::Error for AdmissionDenied {}
+
+/// Host-side resources that make the workflow server *resident and
+/// multi-tenant* (protocol v7): with this configured it accepts
+/// `PlanSubmit` frames at run time, loads each admitted plan's tuned
+/// partitions into the shared data service under a fresh id range,
+/// and keeps match nodes attached between plans (`NoTask` /
+/// `TaskAssignBatch` replies never report `done`).
+#[derive(Clone)]
+pub struct TenantHostConfig {
+    /// The resident dataset every submitted plan must have been built
+    /// for — checked via the plan's provenance fingerprint; a plan
+    /// built against different data is refused at submission.
+    pub dataset: Arc<Dataset>,
+    /// The coordinator's primary data service: an admitted plan's
+    /// partitions are re-materialized into it (ids offset into a
+    /// fresh range) so match nodes fetch them exactly like seed
+    /// partitions, and replicas pick them up via anti-entropy sync.
+    pub store: Arc<DataService>,
+    /// Per-tenant in-flight cap for the scheduler's deficit
+    /// round-robin: at most this many of one tenant's tasks may be
+    /// assigned-and-unreported at once, so a huge plan cannot starve
+    /// a small one.  `None` = uncapped (fairness then rests on the
+    /// round-robin alone).
+    pub per_tenant_inflight: Option<usize>,
+}
+
+impl std::fmt::Debug for TenantHostConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TenantHostConfig")
+            .field("dataset_entities", &self.dataset.entities.len())
+            .field("store_partitions", &self.store.n_partitions())
+            .field("per_tenant_inflight", &self.per_tenant_inflight)
+            .finish()
+    }
+}
+
+/// One row of the tenant table: an admitted plan's lifecycle record.
+struct Tenant {
+    /// Client-supplied label (diagnostics and `pem stats` rows).
+    name: String,
+    /// The control connection that submitted the plan: if it closes
+    /// while the plan is running, the plan is aborted and its tasks
+    /// drained ([`WfHandler::on_close`]).
+    conn: ConnId,
+    /// One of the `TENANT_*` states.
+    state: u8,
+    /// The tenant's isolated result channel — completions of its
+    /// tasks land here, never in the seed workflow's `results`.
+    results: Vec<Correspondence>,
+    /// Pair comparisons reported for this tenant's tasks.
+    comparisons: u64,
+    /// Human-readable terminal detail (abort/failure reason).
+    detail: String,
+}
 
 /// Workflow-server tuning.
 #[derive(Clone, Debug)]
@@ -100,6 +222,13 @@ pub struct WorkflowServerConfig {
     /// completion) is recorded for `--trace` dumps and the
     /// exactly-once replay verifier.  `None` disables tracing.
     pub tracer: Option<Arc<Tracer>>,
+    /// Protocol v7 multi-tenancy: when set, the server is *resident*
+    /// — it accepts `PlanSubmit` frames against this dataset/store
+    /// and keeps match nodes attached between plans.  `None` (the
+    /// default) keeps the one-shot behaviour: submissions are
+    /// refused and the server reports `done` when the seed workflow
+    /// drains.
+    pub tenancy: Option<TenantHostConfig>,
 }
 
 impl Default for WorkflowServerConfig {
@@ -111,6 +240,7 @@ impl Default for WorkflowServerConfig {
             task_sizes: HashMap::new(),
             expected_services: 1,
             tracer: None,
+            tenancy: None,
         }
     }
 }
@@ -159,6 +289,30 @@ struct WfShared {
     oversize_logged: Mutex<HashSet<usize>>,
     /// Peers rejected for speaking a different protocol version.
     version_rejections: Arc<Counter>,
+    /// v7 multi-tenancy host resources (`None` = one-shot server:
+    /// `PlanSubmit` is refused, `done` reported when the seed drains).
+    tenancy: Option<TenantHostConfig>,
+    /// The tenant table: plan id → lifecycle record.  Plan ids start
+    /// at 1; 0 is the seed workflow.  Only the single reactor thread
+    /// mutates rows; other threads read for stats.
+    tenants: Mutex<HashMap<u32, Tenant>>,
+    /// Next plan id.
+    next_tenant: AtomicUsize,
+    /// Next free partition id for renumbering an admitted plan's
+    /// partitions into the shared data service (seeded past the seed
+    /// workflow's partitions).
+    next_partition_id: AtomicUsize,
+    /// `PlanSubmit` frames received (admitted or not).
+    plans_submitted: Arc<Counter>,
+    /// Submissions refused (admission control, bad plan, wrong
+    /// dataset, or a non-resident server).
+    plans_rejected: Arc<Counter>,
+    /// Tenants that reached `TENANT_DONE`.
+    plans_completed: Arc<Counter>,
+    /// Tenants aborted because their client connection dropped.
+    plans_aborted: Arc<Counter>,
+    /// Tenants failed on a per-tenant §3.1 misfit.
+    plans_failed: Arc<Counter>,
     /// Data-plane replica directory, announcement order, deduplicated.
     replicas: Mutex<Vec<String>>,
     shutdown: Arc<AtomicBool>,
@@ -190,6 +344,14 @@ impl WfShared {
         self.sched.lock().unwrap().mem_of(task_id)
     }
 
+    /// The `done` flag for `NoTask` / `TaskAssignBatch` replies.  A
+    /// *resident* server (v7 tenancy) never reports `done`: an empty
+    /// open list just means "between plans", and nodes must stay
+    /// attached for the next submission.
+    fn done_flag(&self, sched: &Scheduler) -> bool {
+        sched.is_done() && self.tenancy.is_none()
+    }
+
     /// Reply to a pull (TaskRequest, Complete or TaskRejected): the
     /// next assignment with its memory footprint and — for a
     /// runtime-split sub-task — its pair-space span.
@@ -202,7 +364,7 @@ impl WfShared {
                 span: sched.span_of(task.id),
             },
             None => Message::NoTask {
-                done: sched.is_done(),
+                done: self.done_flag(&sched),
             },
         }
     }
@@ -228,6 +390,31 @@ impl WfShared {
             self.registry
                 .gauge("affinity_assignments")
                 .set(sched.affinity_assignments);
+        }
+        // v7: one gauge row per tenant, so a `pem stats` scrape shows
+        // every submitted plan's state and progress.  The two tables
+        // are locked *sequentially* (never nested) to keep the lock
+        // order free of cycles with the reactor thread.
+        let tenant_rows: Vec<(u32, u8)> = {
+            let tenants = self.tenants.lock().unwrap();
+            self.registry.gauge("tenants_active").set(
+                tenants
+                    .values()
+                    .filter(|t| t.state == TENANT_RUNNING)
+                    .count() as u64,
+            );
+            tenants.iter().map(|(&id, t)| (id, t.state)).collect()
+        };
+        if !tenant_rows.is_empty() {
+            let sched = self.sched.lock().unwrap();
+            for (id, state) in tenant_rows {
+                let (done, total) = sched.tenant_progress(id);
+                let reg = &self.registry;
+                let g = crate::obs::tenant_gauge;
+                reg.gauge(&g(id, "state")).set(state as u64);
+                reg.gauge(&g(id, "tasks_completed")).set(done as u64);
+                reg.gauge(&g(id, "tasks_total")).set(total as u64);
+            }
         }
         self.registry
             .gauge("services_joined")
@@ -362,6 +549,22 @@ impl WorkflowServiceServer {
             oversize_rejections: registry.counter("oversize_rejections"),
             oversize_logged: Mutex::new(HashSet::new()),
             version_rejections: registry.counter("version_rejections"),
+            tenants: Mutex::new(HashMap::new()),
+            next_tenant: AtomicUsize::new(1),
+            // tenant partitions are renumbered above everything the
+            // seed store already holds
+            next_partition_id: AtomicUsize::new(
+                cfg.tenancy
+                    .as_ref()
+                    .and_then(|t| t.store.max_partition_id())
+                    .map_or(0, |m| m as usize + 1),
+            ),
+            plans_submitted: registry.counter("plans_submitted"),
+            plans_rejected: registry.counter("plans_rejected"),
+            plans_completed: registry.counter("plans_completed"),
+            plans_aborted: registry.counter("plans_aborted"),
+            plans_failed: registry.counter("plans_failed"),
+            tenancy: cfg.tenancy,
             replicas: Mutex::new(Vec::new()),
             shutdown: shutdown.clone(),
             heartbeat_timeout: cfg.heartbeat_timeout,
@@ -520,7 +723,7 @@ struct WfHandler {
 impl FrameHandler for WfHandler {
     fn on_frame(
         &mut self,
-        _conn: ConnId,
+        conn: ConnId,
         out: &mut SessionEncoder,
         payload: &[u8],
     ) -> Action {
@@ -560,15 +763,61 @@ impl FrameHandler for WfHandler {
             }
         };
         self.shared.control_messages.inc();
-        let reply = handle_message(&self.shared, msg);
+        let reply = handle_message(&self.shared, conn, msg);
         let n = out.queue_message(&reply);
         self.shared.traffic.record(n);
         Action::Continue
     }
+
+    /// v7 tenant-abort-on-disconnect: a client connection closing
+    /// while one of its submitted plans is still running aborts that
+    /// plan — its queued and in-flight tasks are drained so surviving
+    /// tenants get the whole cluster back, and the terminal
+    /// `TENANT_ABORTED` result stays in the table for observers.
+    /// Locks are taken sequentially (tenants, then sched, then
+    /// tenants again), never nested.
+    fn on_close(&mut self, conn: ConnId) {
+        if self.shared.tenancy.is_none() {
+            return;
+        }
+        let doomed: Vec<u32> = {
+            let tenants = self.shared.tenants.lock().unwrap();
+            tenants
+                .iter()
+                .filter(|(_, t)| {
+                    t.conn == conn && t.state == TENANT_RUNNING
+                })
+                .map(|(&id, _)| id)
+                .collect()
+        };
+        for id in doomed {
+            let dropped =
+                self.shared.sched.lock().unwrap().drain_tenant(id);
+            let mut tenants = self.shared.tenants.lock().unwrap();
+            let t = tenants.get_mut(&id).expect("tenant listed");
+            t.state = TENANT_ABORTED;
+            t.detail = format!(
+                "client connection closed mid-run; plan aborted with \
+                 {dropped} task(s) drained"
+            );
+            self.shared.plans_aborted.inc();
+            eprintln!(
+                "workflow service: tenant {id} ({}) lost its client; \
+                 plan aborted, {dropped} task(s) drained",
+                t.name
+            );
+        }
+    }
 }
 
-/// Process one control-plane message and build its reply.
-fn handle_message(shared: &WfShared, msg: Message) -> Message {
+/// Process one control-plane message and build its reply.  `conn`
+/// identifies the client connection — only `PlanSubmit` uses it (the
+/// tenant is bound to its submitter for abort-on-disconnect).
+fn handle_message(
+    shared: &WfShared,
+    conn: ConnId,
+    msg: Message,
+) -> Message {
     match msg {
         Message::Join {
             name,
@@ -694,10 +943,24 @@ fn handle_message(shared: &WfShared, msg: Message) -> Message {
                 // wait_done() → finish() sequence could drain the
                 // results missing the final task's matches.  Lock
                 // order is sched → results here and in finish().
+                // The tenant is resolved *before* the report: a merge
+                // completion removes the sub-task's split_parent link.
                 let mut sched = shared.sched.lock().unwrap();
+                let tenant = sched.tenant_of_task(task_id);
                 if sched.try_report_complete(service, task_id, cached) {
                     shared.comparisons.add(comparisons);
-                    shared.results.lock().unwrap().extend(matches);
+                    if tenant == 0 {
+                        shared.results.lock().unwrap().extend(matches);
+                    } else if let Some(t) = shared
+                        .tenants
+                        .lock()
+                        .unwrap()
+                        .get_mut(&tenant)
+                    {
+                        // isolated per-tenant result channel
+                        t.comparisons += comparisons;
+                        t.results.extend(matches);
+                    }
                 } else {
                     // straggler from a service presumed dead: the
                     // task was re-queued, its output arrives again
@@ -734,7 +997,7 @@ fn handle_message(shared: &WfShared, msg: Message) -> Message {
                         task,
                     })
                     .collect();
-                (tasks, sched.is_done())
+                (tasks, shared.done_flag(&sched))
             };
             Message::TaskAssignBatch { done, tasks }
         }
@@ -799,12 +1062,218 @@ fn handle_message(shared: &WfShared, msg: Message) -> Message {
         Message::StatsRequest => Message::StatsReport {
             stats: shared.stats_snapshot().to_bytes(),
         },
+        Message::PlanSubmit { name, plan } => {
+            plan_submit(shared, conn, name, &plan)
+        }
+        Message::PlanStatus { plan } => plan_status(shared, plan),
         other => Message::Error {
             message: format!(
                 "workflow service got unexpected {}",
                 other.kind()
             ),
         },
+    }
+}
+
+/// Shorthand for the submission refusals that carry no §3.1 numbers
+/// (non-resident server, undecodable plan, wrong dataset).
+fn plan_refused(shared: &WfShared, reason: String) -> Message {
+    shared.plans_rejected.inc();
+    Message::PlanRejected {
+        required: 0,
+        available: 0,
+        reason,
+    }
+}
+
+/// Handle a v7 `PlanSubmit`: decode, check provenance, run admission
+/// control against the live cluster's aggregate budget, and — if
+/// admitted — renumber the plan's partitions and tasks into fresh id
+/// ranges, load the partitions into the shared data service, open the
+/// tasks under a new tenant, and answer `PlanAccepted { plan }`.
+fn plan_submit(
+    shared: &WfShared,
+    conn: ConnId,
+    name: String,
+    plan_bytes: &[u8],
+) -> Message {
+    shared.plans_submitted.inc();
+    let Some(host) = &shared.tenancy else {
+        return plan_refused(
+            shared,
+            "this workflow service runs a one-shot workflow and does \
+             not accept submissions; start it resident \
+             (`pem serve --resident`)"
+                .into(),
+        );
+    };
+    let plan = match MatchPlan::from_bytes(plan_bytes) {
+        Ok(plan) => plan,
+        Err(e) => {
+            return plan_refused(
+                shared,
+                format!("undecodable plan payload: {e}"),
+            );
+        }
+    };
+    if !plan.matches_dataset(&host.dataset) {
+        return plan_refused(
+            shared,
+            format!(
+                "plan provenance mismatch: built for {} entities \
+                 (fingerprint {:016x}), this cluster serves {} — \
+                 re-plan against the resident dataset",
+                plan.provenance.dataset_entities,
+                plan.provenance.dataset_fingerprint,
+                host.dataset.entities.len()
+            ),
+        );
+    }
+    // §3.1 admission control: the plan's aggregate footprint against
+    // the aggregate of the live nodes' join-time budgets.  `None`
+    // means some live node reported no budget (unlimited) — admit.
+    let required: u64 = plan
+        .task_mem
+        .iter()
+        .fold(0u64, |sum, &m| sum.saturating_add(m));
+    let refused = {
+        let sched = shared.sched.lock().unwrap();
+        match sched.cluster_budget() {
+            Some(available) if required > available => Some(available),
+            _ => None,
+        }
+    };
+    if let Some(available) = refused {
+        shared.plans_rejected.inc();
+        let denied = AdmissionDenied {
+            required,
+            available,
+        };
+        return Message::PlanRejected {
+            required,
+            available,
+            reason: denied.to_string(),
+        };
+    }
+    // admit: partition ids are offset above everything the shared
+    // store holds, task ids above everything the scheduler ever
+    // issued — tenants can collide with neither the seed workflow
+    // nor each other
+    let part_span = plan
+        .partitions
+        .iter()
+        .map(|p| p.id.0)
+        .max()
+        .map_or(0, |m| m + 1);
+    let part_off = shared
+        .next_partition_id
+        .fetch_add(part_span as usize, Ordering::SeqCst)
+        as u32;
+    host.store.extend(&host.dataset, &plan.partitions, part_off);
+    let tenant =
+        shared.next_tenant.fetch_add(1, Ordering::SeqCst) as u32;
+    let sizes_by_plan_id = plan.task_sizes();
+    {
+        let mut sched = shared.sched.lock().unwrap();
+        let task_span = plan
+            .tasks
+            .iter()
+            .map(|t| t.id)
+            .max()
+            .map_or(0, |m| m + 1);
+        let task_off = sched.reserve_task_ids(task_span);
+        let mut tasks = Vec::with_capacity(plan.tasks.len());
+        let mut mem = HashMap::with_capacity(plan.tasks.len());
+        let mut sizes = HashMap::with_capacity(plan.tasks.len());
+        for (t, &m) in plan.tasks.iter().zip(plan.task_mem.iter()) {
+            let id = t.id + task_off;
+            tasks.push(MatchTask {
+                id,
+                left: PartitionId(t.left.0 + part_off),
+                right: PartitionId(t.right.0 + part_off),
+            });
+            mem.insert(id, m);
+            if let Some(&s) = sizes_by_plan_id.get(&t.id) {
+                sizes.insert(id, s);
+            }
+        }
+        sched.add_tenant_tasks(
+            tenant,
+            tasks,
+            mem,
+            sizes,
+            host.per_tenant_inflight,
+        );
+    }
+    shared.tenants.lock().unwrap().insert(
+        tenant,
+        Tenant {
+            name,
+            conn,
+            state: TENANT_RUNNING,
+            results: Vec::new(),
+            comparisons: 0,
+            detail: String::new(),
+        },
+    );
+    Message::PlanAccepted { plan: tenant }
+}
+
+/// Handle a v7 `PlanStatus` poll: settle any pending lifecycle
+/// transition (per-tenant misfit → failed, all tasks completed →
+/// done), then answer `PlanStatusReport` while running or the
+/// idempotent terminal `PlanResult`.
+fn plan_status(shared: &WfShared, plan: u32) -> Message {
+    let mut tenants = shared.tenants.lock().unwrap();
+    let Some(t) = tenants.get_mut(&plan) else {
+        return Message::Error {
+            message: format!("unknown plan id {plan}"),
+        };
+    };
+    let mut progress = (0usize, 0usize);
+    if t.state == TENANT_RUNNING {
+        // the scheduler is the source of truth for the transition;
+        // the tenant row is updated on this poll (reactor thread)
+        let (prog, misfit) = {
+            let sched = shared.sched.lock().unwrap();
+            (
+                sched.tenant_progress(plan),
+                sched.tenant_misfit(plan).cloned(),
+            )
+        };
+        progress = prog;
+        if let Some(misfit) = misfit {
+            t.state = TENANT_FAILED;
+            t.detail = format!(
+                "plan misfit: task {} needs {} but the smallest live \
+                 budget is {} and the task cannot be split further",
+                misfit.task_id,
+                crate::util::fmt_bytes(misfit.mem_bytes),
+                crate::util::fmt_bytes(misfit.smallest_budget)
+            );
+            shared.plans_failed.inc();
+        } else if progress.0 >= progress.1 {
+            t.state = TENANT_DONE;
+            shared.plans_completed.inc();
+        }
+    }
+    if t.state == TENANT_RUNNING {
+        Message::PlanStatusReport {
+            plan,
+            state: TENANT_RUNNING,
+            completed: progress.0 as u32,
+            total: progress.1 as u32,
+            detail: String::new(),
+        }
+    } else {
+        // terminal: idempotent — every poll gets the same result
+        Message::PlanResult {
+            plan,
+            state: t.state,
+            comparisons: t.comparisons,
+            matches: t.results.clone(),
+            detail: t.detail.clone(),
+        }
     }
 }
 
@@ -823,10 +1292,23 @@ fn report_batch(
 ) {
     let mut comparisons = 0u64;
     let mut fresh_matches: Vec<Correspondence> = Vec::new();
+    // fresh results of *submitted* plans, keyed by tenant id — routed
+    // to that tenant's isolated channel, never the seed results
+    let mut tenant_fresh: HashMap<u32, (u64, Vec<Correspondence>)> =
+        HashMap::new();
     for report in completed {
+        // resolve the tenant BEFORE completion: merging a split
+        // sub-task drops its parent link
+        let tenant = sched.tenant_of_task(report.task_id);
         if sched.try_complete_batched(service, report.task_id) {
-            comparisons += report.comparisons;
-            fresh_matches.extend(report.matches);
+            if tenant == 0 {
+                comparisons += report.comparisons;
+                fresh_matches.extend(report.matches);
+            } else {
+                let slot = tenant_fresh.entry(tenant).or_default();
+                slot.0 += report.comparisons;
+                slot.1.extend(report.matches);
+            }
         } else {
             shared.stale_completions.inc();
         }
@@ -837,6 +1319,18 @@ fn report_batch(
     }
     if comparisons > 0 {
         shared.comparisons.add(comparisons);
+    }
+    if !tenant_fresh.is_empty() {
+        // reactor thread: the sched → tenants nesting matches the
+        // single-task Complete arm (see the lock-order note there)
+        let mut tenants = shared.tenants.lock().unwrap();
+        for (tenant, (comp, matches)) in tenant_fresh {
+            shared.comparisons.add(comp);
+            if let Some(t) = tenants.get_mut(&tenant) {
+                t.comparisons += comp;
+                t.results.extend(matches);
+            }
+        }
     }
 }
 
@@ -1642,5 +2136,301 @@ mod tests {
         assert_eq!(summary.plan_tasks, 2);
         assert_eq!(summary.assignments, 2);
         assert_eq!(summary.splits, 0);
+    }
+
+    // ---- protocol v7: resident multi-tenant service -------------
+
+    /// A small resident host: dataset, primary store seeded from a
+    /// size-based partitioning, and an empty-seed workflow server
+    /// that accepts submissions.
+    fn resident_host(
+        entities: usize,
+        seed: u64,
+    ) -> (Arc<Dataset>, Arc<DataService>, WorkflowServiceServer) {
+        let data = crate::datagen::GeneratorConfig::tiny()
+            .with_entities(entities)
+            .with_seed(seed)
+            .generate();
+        let dataset = Arc::new(data.dataset);
+        let ids: Vec<crate::model::EntityId> =
+            dataset.entities.iter().map(|e| e.id).collect();
+        let parts = crate::partition::partition_size_based(&ids, 25);
+        let store = Arc::new(DataService::build(&dataset, &parts));
+        let srv = WorkflowServiceServer::start(
+            Vec::new(),
+            WorkflowServerConfig {
+                policy: Policy::Fifo,
+                tenancy: Some(TenantHostConfig {
+                    dataset: dataset.clone(),
+                    store: store.clone(),
+                    per_tenant_inflight: None,
+                }),
+                ..WorkflowServerConfig::default()
+            },
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        (dataset, store, srv)
+    }
+
+    /// Build a serialized plan for `dataset` with a fixed partition
+    /// size (deterministic §3.1 footprints).
+    fn plan_bytes_for(dataset: &Dataset, max_size: usize) -> Vec<u8> {
+        let plan = MatchPlan::build(
+            dataset,
+            &crate::partition::SizeBased {
+                max_size: Some(max_size),
+            },
+            crate::matching::StrategyKind::Wam,
+            &crate::cluster::ComputingEnv::new(1, 1, crate::util::GIB),
+        )
+        .unwrap();
+        assert!(plan.n_tasks() > 0, "test premise: plan has work");
+        plan.to_bytes()
+    }
+
+    /// A one-shot server (no tenancy) refuses submissions with a
+    /// clear pointer at resident mode — never a decode error.
+    #[test]
+    fn one_shot_server_refuses_plan_submission() {
+        let srv = WorkflowServiceServer::start(
+            vec![task(0, 0, 0)],
+            WorkflowServerConfig::default(),
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let mut c = client(srv.addr());
+        let reply = c
+            .request(&Message::PlanSubmit {
+                name: "hopeful".into(),
+                plan: vec![1, 2, 3],
+            })
+            .unwrap();
+        let Message::PlanRejected { reason, .. } = reply else {
+            panic!("expected PlanRejected, got {}", reply.kind());
+        };
+        assert!(reason.contains("resident"), "unclear refusal: {reason}");
+        let report = srv.finish();
+        assert_eq!(report.stats.counter("plans_submitted"), Some(1));
+        assert_eq!(report.stats.counter("plans_rejected"), Some(1));
+    }
+
+    /// The admission-control satellite: a plan whose aggregate §3.1
+    /// footprint exceeds the cluster's join-time budgets is refused
+    /// *immediately* with the typed numbers; the same plan is
+    /// admitted after a roomier node joins, runs to completion, and
+    /// its terminal `PlanResult` is idempotent.
+    #[test]
+    fn admission_denied_then_admitted_after_roomy_join() {
+        let (dataset, _store, srv) = resident_host(60, 9);
+        let bytes = plan_bytes_for(&dataset, 20);
+        let plan = MatchPlan::from_bytes(&bytes).unwrap();
+        let required: u64 = plan.task_mem.iter().sum();
+        assert!(required > 1);
+
+        // one live node with a 1-byte budget: nothing fits
+        let mut a = client(srv.addr());
+        let _svc_a = join_with_budget(&mut a, "cramped", 1);
+        let mut sub = client(srv.addr());
+        let started = Instant::now();
+        let reply = sub
+            .request(&Message::PlanSubmit {
+                name: "big-plan".into(),
+                plan: bytes.clone(),
+            })
+            .unwrap();
+        assert!(
+            started.elapsed() < Duration::from_secs(5),
+            "admission must answer in seconds, not the run timeout"
+        );
+        let Message::PlanRejected {
+            required: r,
+            available,
+            reason,
+        } = reply
+        else {
+            panic!("expected PlanRejected, got {}", reply.kind());
+        };
+        assert_eq!(r, required, "the typed numbers travel");
+        assert_eq!(available, 1);
+        assert!(reason.contains("admission denied"), "{reason}");
+
+        // a node with an unlimited budget joins → re-submission wins
+        let mut b = client(srv.addr());
+        let svc_b = join(&mut b, "roomy");
+        let reply = sub
+            .request(&Message::PlanSubmit {
+                name: "big-plan".into(),
+                plan: bytes,
+            })
+            .unwrap();
+        let Message::PlanAccepted { plan: plan_id } = reply else {
+            panic!("expected PlanAccepted, got {}", reply.kind());
+        };
+        assert_eq!(plan_id, 1, "plan ids start at 1");
+
+        // the roomy node drains the tenant's tasks; the resident
+        // server never reports done (nodes stay attached)
+        let mut completed = 0u32;
+        let mut reply = b
+            .request(&Message::TaskRequest { service: svc_b })
+            .unwrap();
+        loop {
+            match reply {
+                Message::TaskAssign { task, .. } => {
+                    reply = b
+                        .request(&Message::Complete {
+                            service: svc_b,
+                            task_id: task.id,
+                            comparisons: 2,
+                            cached: vec![],
+                            matches: vec![Correspondence {
+                                e1: crate::model::EntityId(completed),
+                                e2: crate::model::EntityId(completed + 1),
+                                sim: 0.8,
+                            }],
+                        })
+                        .unwrap();
+                    completed += 1;
+                }
+                Message::NoTask { done } => {
+                    assert!(!done, "a resident server never says done");
+                    break;
+                }
+                other => panic!("unexpected {}", other.kind()),
+            }
+        }
+        assert_eq!(completed as usize, plan.n_tasks());
+
+        // the status poll settles the lifecycle and returns the
+        // tenant's isolated result — twice, identically
+        let result = |sub: &mut Transport| {
+            match sub
+                .request(&Message::PlanStatus { plan: plan_id })
+                .unwrap()
+            {
+                Message::PlanResult {
+                    state,
+                    comparisons,
+                    matches,
+                    ..
+                } => (state, comparisons, matches.len()),
+                other => panic!("expected PlanResult, got {}", other.kind()),
+            }
+        };
+        let first = result(&mut sub);
+        assert_eq!(
+            first,
+            (TENANT_DONE, 2 * completed as u64, completed as usize)
+        );
+        assert_eq!(result(&mut sub), first, "terminal result idempotent");
+        // none of the tenant's matches leaked into the seed channel
+        let report = srv.finish();
+        assert!(report.correspondences.is_empty());
+        assert_eq!(report.stats.counter("plans_rejected"), Some(1));
+        assert_eq!(report.stats.counter("plans_completed"), Some(1));
+        assert_eq!(
+            report.stats.gauge(&format!("tenant.{plan_id}.state")),
+            Some(TENANT_DONE as u64)
+        );
+    }
+
+    /// A plan built against different data is refused at submission
+    /// (provenance fingerprint check) — and an unknown plan id polls
+    /// to a clear error.
+    #[test]
+    fn foreign_plan_and_unknown_id_are_refused() {
+        let (_dataset, _store, srv) = resident_host(60, 9);
+        let other = crate::datagen::GeneratorConfig::tiny()
+            .with_entities(40)
+            .with_seed(77)
+            .generate();
+        let bytes = plan_bytes_for(&other.dataset, 20);
+        let mut c = client(srv.addr());
+        let reply = c
+            .request(&Message::PlanSubmit {
+                name: "foreign".into(),
+                plan: bytes,
+            })
+            .unwrap();
+        let Message::PlanRejected { reason, .. } = reply else {
+            panic!("expected PlanRejected, got {}", reply.kind());
+        };
+        assert!(reason.contains("provenance"), "{reason}");
+        let reply =
+            c.request(&Message::PlanStatus { plan: 42 }).unwrap();
+        assert!(matches!(reply, Message::Error { .. }));
+        srv.finish();
+    }
+
+    /// The abort-on-disconnect half of the tenant lifecycle: the
+    /// submitting client's connection drops mid-run, the plan is
+    /// aborted and its tasks drained, the straggling completion is
+    /// stale — and an observer connection still reads the terminal
+    /// `TENANT_ABORTED` result.
+    #[test]
+    fn client_disconnect_aborts_running_plan() {
+        let (dataset, _store, srv) = resident_host(60, 9);
+        let bytes = plan_bytes_for(&dataset, 20);
+        let mut node = client(srv.addr());
+        let svc = join(&mut node, "worker");
+        let mut sub = client(srv.addr());
+        let Message::PlanAccepted { plan } = sub
+            .request(&Message::PlanSubmit {
+                name: "doomed".into(),
+                plan: bytes,
+            })
+            .unwrap()
+        else {
+            panic!("expected PlanAccepted");
+        };
+        // one task in flight, the rest queued
+        let Message::TaskAssign { task, .. } = node
+            .request(&Message::TaskRequest { service: svc })
+            .unwrap()
+        else {
+            panic!("expected assignment");
+        };
+        drop(sub); // the client vanishes mid-run
+        let mut obs = client(srv.addr());
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let state = loop {
+            match obs
+                .request(&Message::PlanStatus { plan })
+                .unwrap()
+            {
+                Message::PlanResult { state, matches, .. } => {
+                    assert!(matches.is_empty());
+                    break state;
+                }
+                Message::PlanStatusReport { .. } => {
+                    assert!(
+                        Instant::now() < deadline,
+                        "disconnect never aborted the plan"
+                    );
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                other => panic!("unexpected {}", other.kind()),
+            }
+        };
+        assert_eq!(state, TENANT_ABORTED);
+        // the drained in-flight task's completion is stale, and no
+        // further tenant work is offered
+        let reply = node
+            .request(&Message::Complete {
+                service: svc,
+                task_id: task.id,
+                comparisons: 1,
+                cached: vec![],
+                matches: vec![],
+            })
+            .unwrap();
+        assert!(
+            matches!(reply, Message::NoTask { done: false }),
+            "drained tenant work must not be re-offered"
+        );
+        let report = srv.finish();
+        assert_eq!(report.stats.counter("plans_aborted"), Some(1));
+        assert_eq!(report.stats.counter("stale_completions"), Some(1));
     }
 }

@@ -10,7 +10,7 @@ use crate::model::{Dataset, EntityId};
 use crate::net::TrafficStats;
 use crate::partition::{PartitionId, PartitionSet};
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 
 /// The transferable payload of one partition: entity ids + features.
 #[derive(Debug)]
@@ -70,9 +70,13 @@ impl PartitionData {
 }
 
 /// Central data service.  Thread-safe; fetches return `Arc`s so cached
-/// copies are shared, not cloned.
+/// copies are shared, not cloned.  Since protocol v7 the partition map
+/// is runtime-growable ([`DataService::extend`]): a resident workflow
+/// service inserts the partitions of every admitted tenant plan into
+/// the live store, so match nodes can fetch them like seed partitions
+/// (and the anti-entropy sync streams propagate them to replicas).
 pub struct DataService {
-    partitions: HashMap<PartitionId, Arc<PartitionData>>,
+    partitions: RwLock<HashMap<PartitionId, Arc<PartitionData>>>,
     pub traffic: TrafficStats,
     fetch_log: Mutex<Vec<PartitionId>>,
 }
@@ -109,10 +113,68 @@ impl DataService {
             );
         }
         DataService {
-            partitions,
+            partitions: RwLock::new(partitions),
             traffic: TrafficStats::new(),
             fetch_log: Mutex::new(Vec::new()),
         }
+    }
+
+    /// Insert the partitions of an admitted tenant plan (protocol v7),
+    /// each renumbered to `PartitionId(original + id_offset)` so
+    /// tenants can never collide with the seed workflow or each other.
+    /// Features are recomputed from `dataset` exactly like
+    /// [`DataService::build`] does — the submitted plan references
+    /// entities of the *host's* dataset (fingerprint-checked at
+    /// admission).  Returns the renumbered ids, ascending.
+    pub fn extend(
+        &self,
+        dataset: &Dataset,
+        parts: &PartitionSet,
+        id_offset: u32,
+    ) -> Vec<PartitionId> {
+        let mut added = Vec::new();
+        let mut map = self.partitions.write().unwrap();
+        for p in parts.iter() {
+            let features: Vec<EntityFeatures> = p
+                .entities
+                .iter()
+                .map(|id| {
+                    EntityFeatures::of(
+                        &dataset.entities[id.0 as usize],
+                        dataset,
+                    )
+                })
+                .collect();
+            let approx_bytes = features
+                .iter()
+                .map(|f| f.approx_bytes() as u64)
+                .sum::<u64>()
+                + 8 * p.entities.len() as u64;
+            let id = PartitionId(p.id.0 + id_offset);
+            map.insert(
+                id,
+                Arc::new(PartitionData {
+                    id,
+                    entities: p.entities.clone(),
+                    features,
+                    approx_bytes,
+                }),
+            );
+            added.push(id);
+        }
+        added.sort_unstable_by_key(|p| p.0);
+        added
+    }
+
+    /// The highest partition id held (`None` for an empty store) — the
+    /// renumbering base for [`DataService::extend`].
+    pub fn max_partition_id(&self) -> Option<u32> {
+        self.partitions
+            .read()
+            .unwrap()
+            .keys()
+            .map(|p| p.0)
+            .max()
     }
 
     /// Fetch a partition (counts as one data-service access — a *cache
@@ -127,7 +189,7 @@ impl DataService {
     /// of dying (see [`crate::service::DataServiceServer`]).  Accounting
     /// is only charged on success.
     pub fn try_fetch(&self, id: PartitionId) -> Option<Arc<PartitionData>> {
-        let data = self.partitions.get(&id)?.clone();
+        let data = self.partitions.read().unwrap().get(&id)?.clone();
         self.traffic.record(data.approx_bytes);
         self.fetch_log.lock().unwrap().push(id);
         Some(data)
@@ -138,14 +200,14 @@ impl DataService {
     /// and must not inflate the logical fetch statistics the paper's
     /// cache-effectiveness numbers are computed from.
     pub fn peek(&self, id: PartitionId) -> Option<Arc<PartitionData>> {
-        self.partitions.get(&id).cloned()
+        self.partitions.read().unwrap().get(&id).cloned()
     }
 
     /// All partition ids held by this store, ascending.  Replica
     /// announcements and sync streams enumerate partitions with this.
     pub fn partition_ids(&self) -> Vec<PartitionId> {
         let mut ids: Vec<PartitionId> =
-            self.partitions.keys().copied().collect();
+            self.partitions.read().unwrap().keys().copied().collect();
         ids.sort_unstable_by_key(|p| p.0);
         ids
     }
@@ -154,13 +216,15 @@ impl DataService {
     /// transfer time from this).
     pub fn payload_bytes(&self, id: PartitionId) -> u64 {
         self.partitions
+            .read()
+            .unwrap()
             .get(&id)
             .unwrap_or_else(|| panic!("unknown partition {id}"))
             .approx_bytes
     }
 
     pub fn n_partitions(&self) -> usize {
-        self.partitions.len()
+        self.partitions.read().unwrap().len()
     }
 
     pub fn fetches(&self) -> usize {
@@ -254,6 +318,31 @@ mod tests {
         assert!(d.slice(500, 900).is_empty());
         assert!(d.slice(40, 10).is_empty());
         assert_eq!(d.slice(0, d.len()).entities, d.entities);
+    }
+
+    #[test]
+    fn extend_inserts_renumbered_tenant_partitions() {
+        let (data, ps) = setup();
+        let store = DataService::build(&data.dataset, &ps);
+        let before = store.n_partitions();
+        let offset = store.max_partition_id().unwrap() + 1;
+        let added = store.extend(&data.dataset, &ps, offset);
+        assert_eq!(added.len(), ps.len());
+        assert_eq!(store.n_partitions(), before + ps.len());
+        // renumbered payloads are byte-equal to the originals except
+        // for the id
+        for p in ps.iter() {
+            let orig = store.fetch(p.id);
+            let ten = store.fetch(PartitionId(p.id.0 + offset));
+            assert_eq!(ten.id.0, p.id.0 + offset);
+            assert_eq!(ten.entities, orig.entities);
+            assert_eq!(ten.approx_bytes, orig.approx_bytes);
+        }
+        // the original namespace is untouched
+        assert_eq!(
+            store.max_partition_id().unwrap(),
+            offset + ps.iter().map(|p| p.id.0).max().unwrap()
+        );
     }
 
     #[test]

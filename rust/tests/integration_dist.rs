@@ -789,6 +789,7 @@ fn dist_runtime_splitting_under_chaos_matches_thread_engine() {
             task_sizes,
             expected_services: 3,
             tracer: None,
+            tenancy: None,
         },
         "127.0.0.1:0",
     )
@@ -1014,6 +1015,7 @@ fn dist_chaos_splitting_trace_replays_exactly_once() {
             task_sizes,
             expected_services: 3,
             tracer: Some(tracer.clone()),
+            tenancy: None,
         },
         "127.0.0.1:0",
     )

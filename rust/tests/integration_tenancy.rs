@@ -1,0 +1,665 @@
+//! End-to-end tests of the multi-tenant resident match service
+//! (protocol v7): several clients submit serialized match plans over
+//! real TCP to one long-lived cluster, which admission-checks them
+//! against the aggregate §3.1 node budgets, fair-schedules their
+//! tasks side by side, and streams each tenant's result back on an
+//! isolated channel.
+//!
+//! Three scenarios:
+//!
+//! * three *concurrent* plans built with different partitioning
+//!   strategies on a 3-node cluster — each result byte-identical to a
+//!   solo thread-engine run of the same plan;
+//! * admission control: an over-budget plan is refused in one round
+//!   trip with the typed required/available verdict, and the *same
+//!   bytes* are admitted after a roomier node joins;
+//! * tenant isolation under chaos: two tenants submit through a
+//!   byte-mangling [`ChaosTransport`]; one client's connection is cut
+//!   mid-run, its plan is aborted server-side, and the survivor's
+//!   result is still byte-identical — then the cluster accepts and
+//!   completes a third plan, proving the abort left it healthy.
+
+use pem::blocking::BlockingMethod;
+use pem::cluster::ComputingEnv;
+use pem::coordinator::MatchPlan;
+use pem::datagen::GeneratorConfig;
+use pem::engine::dist;
+use pem::matching::{MatchStrategy, StrategyKind};
+use pem::model::{Correspondence, Dataset, EntityId};
+use pem::partition::{
+    partition_size_based, BlockingBased, PartitionStrategy, SizeBased,
+    SortedNeighborhood,
+};
+use pem::rpc::{Message, Transport};
+use pem::service::{
+    run_match_node, MatchNodeConfig, TENANT_ABORTED, TENANT_DONE,
+};
+use pem::store::DataService;
+use pem::util::GIB;
+use pem::worker::{RustExecutor, TaskExecutor};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------- chaos
+// A lean copy of `integration_dist.rs`'s byte-mangling forwarder
+// (test binaries cannot share code without a support crate): client
+// frames are re-chunked down to single bytes, optionally stalled, and
+// optionally cut after a byte budget — the resident control plane
+// must survive the mangling and treat the cut as a client death.
+
+/// Fault profile of one [`ChaosTransport`] direction.
+#[derive(Clone, Copy)]
+struct ChaosConfig {
+    /// 1-in-N chance to stall 1–20 ms before forwarding a chunk
+    /// (0 = never stall).
+    stall_one_in: usize,
+    /// Cut the connection (both directions, mid-frame with
+    /// overwhelming probability) after forwarding this many bytes.
+    disconnect_after: Option<u64>,
+}
+
+struct ChaosTransport;
+
+impl ChaosTransport {
+    /// Start a forwarder to `upstream`; returns the address clients
+    /// should connect to.
+    fn start(
+        upstream: String,
+        seed: u64,
+        cfg: ChaosConfig,
+    ) -> std::net::SocketAddr {
+        let listener =
+            std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let mut conn_seq = 0u64;
+            for client in listener.incoming() {
+                let Ok(client) = client else { break };
+                conn_seq += 1;
+                let Ok(server) =
+                    std::net::TcpStream::connect(&upstream)
+                else {
+                    continue;
+                };
+                let c2 = client.try_clone().unwrap();
+                let s2 = server.try_clone().unwrap();
+                let conn_seed = seed
+                    ^ conn_seq.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+                std::thread::spawn(move || {
+                    chaos_pump(
+                        client,
+                        s2,
+                        pem::util::Rng::new(conn_seed),
+                        cfg,
+                    )
+                });
+                std::thread::spawn(move || {
+                    chaos_pump(
+                        server,
+                        c2,
+                        pem::util::Rng::new(conn_seed ^ 0xFF),
+                        cfg,
+                    )
+                });
+            }
+        });
+        addr
+    }
+}
+
+fn chaos_pump(
+    mut from: std::net::TcpStream,
+    mut to: std::net::TcpStream,
+    mut rng: pem::util::Rng,
+    cfg: ChaosConfig,
+) {
+    use std::io::{Read, Write};
+    let mut buf = [0u8; 4096];
+    let mut forwarded = 0u64;
+    'pump: loop {
+        let max = if rng.gen_bool(0.3) {
+            1 + rng.gen_range(7)
+        } else {
+            1 + rng.gen_range(buf.len() - 1)
+        };
+        let n = match from.read(&mut buf[..max]) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => n,
+        };
+        if cfg.stall_one_in > 0 && rng.gen_range(cfg.stall_one_in) == 0 {
+            std::thread::sleep(Duration::from_millis(
+                (1 + rng.gen_range(19)) as u64,
+            ));
+        }
+        let mut off = 0;
+        while off < n {
+            let chunk = 1 + rng.gen_range(n - off);
+            if to.write_all(&buf[off..off + chunk]).is_err() {
+                break 'pump;
+            }
+            off += chunk;
+        }
+        forwarded += n as u64;
+        if let Some(limit) = cfg.disconnect_after {
+            if forwarded >= limit {
+                break;
+            }
+        }
+    }
+    let _ = from.shutdown(std::net::Shutdown::Both);
+    let _ = to.shutdown(std::net::Shutdown::Both);
+}
+
+// -------------------------------------------------------------- helpers
+
+/// Order-normalize a correspondence set for exact comparison.
+fn norm_pairs(cs: &[Correspondence]) -> Vec<(EntityId, EntityId)> {
+    let mut r = pem::model::MatchResult::new();
+    for &c in cs {
+        r.add(c);
+    }
+    let mut pairs: Vec<(EntityId, EntityId)> =
+        r.iter().map(|c| c.pair()).collect();
+    pairs.sort_unstable();
+    pairs
+}
+
+fn wam_exec() -> Arc<dyn TaskExecutor> {
+    Arc::new(RustExecutor::new(MatchStrategy::new(StrategyKind::Wam)))
+}
+
+/// Build a submittable plan for `dataset` with the given partitioning
+/// strategy (always WAM — the resident cluster's node executors are
+/// fixed at start).
+fn plan_for(
+    dataset: &Dataset,
+    strategy: &dyn PartitionStrategy,
+) -> MatchPlan {
+    MatchPlan::build(
+        dataset,
+        strategy,
+        StrategyKind::Wam,
+        &ComputingEnv::new(1, 1, GIB),
+    )
+    .unwrap()
+}
+
+/// Solo reference run of `plan` through the in-process thread engine
+/// — the byte-identical oracle every tenant result is held to.
+fn thread_reference(
+    dataset: &Dataset,
+    plan: &MatchPlan,
+) -> Vec<(EntityId, EntityId)> {
+    let store = DataService::build(dataset, &plan.partitions);
+    let exec = RustExecutor::new(MatchStrategy::new(StrategyKind::Wam));
+    let out = pem::engine::threads::run(
+        &ComputingEnv::new(1, 2, GIB),
+        &plan.partitions,
+        plan.tasks.clone(),
+        &store,
+        &exec,
+        pem::engine::threads::ThreadConfig::default(),
+    );
+    norm_pairs(&out.correspondences)
+}
+
+/// Terminal outcome of one submitted plan as a client observed it.
+struct PlanOutcome {
+    plan: u32,
+    state: u8,
+    comparisons: u64,
+    matches: Vec<Correspondence>,
+    detail: String,
+}
+
+/// Submit `plan_bytes` on `t` and poll every `poll` until terminal.
+fn submit_and_follow(
+    t: &mut Transport,
+    name: &str,
+    plan_bytes: Vec<u8>,
+    poll: Duration,
+) -> PlanOutcome {
+    let plan = match t
+        .request(&Message::PlanSubmit {
+            name: name.to_string(),
+            plan: plan_bytes,
+        })
+        .unwrap()
+    {
+        Message::PlanAccepted { plan } => plan,
+        other => panic!("submit of {name:?} refused: {other:?}"),
+    };
+    follow(t, plan, poll)
+}
+
+/// Poll `plan` on `t` until it reaches a terminal state.
+fn follow(t: &mut Transport, plan: u32, poll: Duration) -> PlanOutcome {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        assert!(
+            Instant::now() < deadline,
+            "plan #{plan} never reached a terminal state"
+        );
+        match t.request(&Message::PlanStatus { plan }).unwrap() {
+            Message::PlanStatusReport { .. } => {
+                std::thread::sleep(poll)
+            }
+            Message::PlanResult {
+                plan,
+                state,
+                comparisons,
+                matches,
+                detail,
+            } => {
+                return PlanOutcome {
+                    plan,
+                    state,
+                    comparisons,
+                    matches,
+                    detail,
+                }
+            }
+            other => panic!("unexpected status reply: {other:?}"),
+        }
+    }
+}
+
+fn connect(addr: std::net::SocketAddr) -> Transport {
+    Transport::connect(addr, Duration::from_secs(5)).unwrap()
+}
+
+/// Start a resident cluster on `dataset` with a seed store holding
+/// size-based partitions (the tenants bring their own partitions; the
+/// seed ones only exercise the renumbering offset).
+fn resident_cluster(
+    dataset: &Arc<Dataset>,
+    nodes: usize,
+    cfg: dist::DistConfig,
+) -> dist::ResidentCluster {
+    let ids: Vec<EntityId> =
+        dataset.entities.iter().map(|e| e.id).collect();
+    let parts = partition_size_based(&ids, 100);
+    let store = Arc::new(DataService::build(dataset, &parts));
+    dist::serve_resident(
+        &ComputingEnv::new(nodes, 2, GIB),
+        dataset.clone(),
+        store,
+        wam_exec(),
+        cfg,
+    )
+    .unwrap()
+}
+
+// ---------------------------------------------------------------- tests
+
+/// The tentpole acceptance test: three clients concurrently submit
+/// plans built with three different partitioning strategies to one
+/// 3-node resident cluster.  Every plan completes, and each tenant's
+/// isolated result is byte-identical to a solo thread-engine run of
+/// the same plan — interleaved fair scheduling must change *nothing*
+/// about any tenant's output.
+#[test]
+fn three_concurrent_mixed_strategy_plans_are_byte_identical() {
+    let data = GeneratorConfig::tiny()
+        .with_entities(900)
+        .with_seed(77)
+        .generate();
+    let dataset = Arc::new(data.dataset);
+
+    let strategies: Vec<(&str, Box<dyn PartitionStrategy>)> = vec![
+        ("size", Box::new(SizeBased { max_size: Some(60) })),
+        (
+            "blocking",
+            Box::new(BlockingBased {
+                method: BlockingMethod::product_type(),
+                max_size: Some(120),
+                min_size: Some(20),
+            }),
+        ),
+        (
+            "sorted-neighborhood",
+            Box::new(SortedNeighborhood {
+                attribute: pem::model::ATTR_TITLE.to_string(),
+                window: 60,
+                max_size: None,
+            }),
+        ),
+    ];
+    let plans: Vec<(String, MatchPlan, Vec<(EntityId, EntityId)>)> =
+        strategies
+            .iter()
+            .map(|(name, s)| {
+                let plan = plan_for(&dataset, s.as_ref());
+                assert!(!plan.tasks.is_empty(), "{name}: empty plan");
+                let reference = thread_reference(&dataset, &plan);
+                (name.to_string(), plan, reference)
+            })
+            .collect();
+
+    let cluster = resident_cluster(
+        &dataset,
+        3,
+        dist::DistConfig {
+            cache_capacity: 8,
+            // the fairness quota: no tenant may hold more than 2
+            // assignments at once, so all three interleave
+            per_tenant_inflight: Some(2),
+            ..dist::DistConfig::default()
+        },
+    );
+    let wf_addr = cluster.workflow_addr();
+
+    // three concurrent submitting clients, one per plan
+    let handles: Vec<_> = plans
+        .iter()
+        .map(|(name, plan, _)| {
+            let name = name.clone();
+            let bytes = plan.to_bytes();
+            std::thread::spawn(move || {
+                let mut t = connect(wf_addr);
+                submit_and_follow(
+                    &mut t,
+                    &name,
+                    bytes,
+                    Duration::from_millis(5),
+                )
+            })
+        })
+        .collect();
+    let outcomes: Vec<PlanOutcome> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // distinct plan ids were handed out
+    let mut ids: Vec<u32> = outcomes.iter().map(|o| o.plan).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 3, "plan ids must be unique");
+
+    for (o, (name, plan, reference)) in outcomes.iter().zip(&plans) {
+        assert_eq!(
+            o.state, TENANT_DONE,
+            "plan {name:?} (#{}) not done: {}",
+            o.plan, o.detail
+        );
+        assert!(o.comparisons > 0, "{name}: no comparisons");
+        assert_eq!(
+            &norm_pairs(&o.matches),
+            reference,
+            "plan {name:?} (#{}, {} tasks) diverged from its solo \
+             thread-engine run",
+            o.plan,
+            plan.tasks.len()
+        );
+    }
+    // the size-based plan covers the full cross product exactly once
+    let size = &outcomes[0];
+    assert_eq!(size.comparisons, 900 * 899 / 2);
+
+    let report = cluster.shutdown();
+    // all three tenants' tasks flowed through the one scheduler
+    let total: usize =
+        plans.iter().map(|(_, p, _)| p.tasks.len()).sum();
+    assert!(
+        report.completed_tasks >= total,
+        "{} tasks completed for {} submitted",
+        report.completed_tasks,
+        total
+    );
+}
+
+/// Admission control end to end: a cluster whose only node joined
+/// with a 1-byte §3.1 budget refuses a plan in ONE round trip with
+/// the typed required/available verdict (no queue-and-time-out); the
+/// *same plan bytes* are admitted after an unlimited node joins, and
+/// the plan then runs to a byte-identical result.
+#[test]
+fn over_budget_plan_denied_fast_then_admitted_after_roomy_join() {
+    let data = GeneratorConfig::tiny()
+        .with_entities(300)
+        .with_seed(5)
+        .generate();
+    let dataset = Arc::new(data.dataset);
+    let plan =
+        plan_for(&dataset, &SizeBased { max_size: Some(50) });
+    let required: u64 =
+        plan.task_mem.iter().fold(0, |a, &m| a.saturating_add(m));
+    assert!(required > 1, "test premise: the plan needs memory");
+    let reference = thread_reference(&dataset, &plan);
+
+    let cluster = resident_cluster(
+        &dataset,
+        1,
+        dist::DistConfig {
+            // the lone node joins with a 1-byte budget: aggregate
+            // cluster budget = 1
+            memory_budget: Some(1),
+            ..dist::DistConfig::default()
+        },
+    );
+    let wf_addr = cluster.workflow_addr();
+    // let the node join before probing the aggregate budget
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut t = connect(wf_addr);
+    let verdict = loop {
+        assert!(Instant::now() < deadline, "node never joined");
+        let started = Instant::now();
+        match t
+            .request(&Message::PlanSubmit {
+                name: "too-big".into(),
+                plan: plan.to_bytes(),
+            })
+            .unwrap()
+        {
+            Message::PlanRejected {
+                available: 0, ..
+            } => {
+                // the node has not joined yet (aggregate budget 0);
+                // retry until its 1-byte budget is on the books
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Message::PlanRejected {
+                required,
+                available,
+                reason,
+            } => {
+                // the acceptance criterion: the denial is immediate,
+                // not a run_timeout
+                assert!(
+                    started.elapsed() < Duration::from_secs(5),
+                    "denial took {:?}",
+                    started.elapsed()
+                );
+                break (required, available, reason);
+            }
+            other => panic!("expected a denial, got {other:?}"),
+        }
+    };
+    assert_eq!(verdict.0, required, "denial must quote the footprint");
+    assert_eq!(verdict.1, 1, "denial must quote the live budget");
+    assert!(
+        verdict.2.contains("admission denied"),
+        "unclear denial: {}",
+        verdict.2
+    );
+
+    // a roomier node joins (budget 0 on the wire = unlimited) …
+    let node_addr = cluster.workflow_addr().to_string();
+    let data_addr = cluster.data_addr().to_string();
+    let roomy = std::thread::spawn(move || {
+        let mut cfg = MatchNodeConfig::new(node_addr, data_addr);
+        cfg.name = "roomy".into();
+        cfg.threads = 2;
+        run_match_node(&cfg, wam_exec())
+    });
+
+    // … and the very same bytes are now admitted and run to the
+    // byte-identical result (retry while the join is in flight)
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let outcome = loop {
+        assert!(Instant::now() < deadline, "plan never admitted");
+        match t
+            .request(&Message::PlanSubmit {
+                name: "fits-now".into(),
+                plan: plan.to_bytes(),
+            })
+            .unwrap()
+        {
+            Message::PlanAccepted { plan } => {
+                break follow(&mut t, plan, Duration::from_millis(5))
+            }
+            Message::PlanRejected { .. } => {
+                std::thread::sleep(Duration::from_millis(20))
+            }
+            other => panic!("unexpected reply: {other:?}"),
+        }
+    };
+    assert_eq!(outcome.state, TENANT_DONE, "{}", outcome.detail);
+    assert_eq!(norm_pairs(&outcome.matches), reference);
+
+    cluster.shutdown();
+    let _ = roomy.join();
+}
+
+/// Tenant isolation under chaos: two tenants submit through
+/// byte-mangling proxies; tenant 1's client connection is cut
+/// mid-run.  The server must abort plan 1 (drain its tasks), leave
+/// tenant 2's result byte-identical to its solo run, and stay healthy
+/// enough to admit and complete a third plan afterwards.
+#[test]
+fn client_cut_mid_run_aborts_its_plan_and_spares_the_survivor() {
+    let data = GeneratorConfig::tiny()
+        .with_entities(1200)
+        .with_seed(23)
+        .generate();
+    let dataset = Arc::new(data.dataset);
+    // plan 1 is deliberately long-running (many tiny tasks) so the
+    // cut below lands while it is still in flight
+    let victim_plan =
+        plan_for(&dataset, &SizeBased { max_size: Some(15) });
+    assert!(victim_plan.tasks.len() > 1000, "needs a long runway");
+    let survivor_plan = plan_for(
+        &dataset,
+        &BlockingBased {
+            method: BlockingMethod::product_type(),
+            max_size: Some(150),
+            min_size: Some(30),
+        },
+    );
+    let survivor_reference = thread_reference(&dataset, &survivor_plan);
+
+    let cluster =
+        resident_cluster(&dataset, 2, dist::DistConfig::default());
+    let wf_addr = cluster.workflow_addr();
+
+    // the victim's proxy cuts shortly after the submit frame passed;
+    // the survivor's proxy only stalls and re-chunks
+    let victim_bytes = victim_plan.to_bytes();
+    let victim_proxy = ChaosTransport::start(
+        wf_addr.to_string(),
+        0xC0FFEE,
+        ChaosConfig {
+            stall_one_in: 0,
+            disconnect_after: Some(victim_bytes.len() as u64 + 256),
+        },
+    );
+    let survivor_proxy = ChaosTransport::start(
+        wf_addr.to_string(),
+        0xDECAF,
+        ChaosConfig {
+            stall_one_in: 6,
+            disconnect_after: None,
+        },
+    );
+
+    let victim_id: Arc<Mutex<Option<u32>>> =
+        Arc::new(Mutex::new(None));
+    let victim_slot = victim_id.clone();
+    let victim = std::thread::spawn(move || {
+        let mut t = connect(victim_proxy);
+        let plan = match t
+            .request(&Message::PlanSubmit {
+                name: "victim".into(),
+                plan: victim_bytes,
+            })
+            .unwrap()
+        {
+            Message::PlanAccepted { plan } => plan,
+            other => panic!("victim submit refused: {other:?}"),
+        };
+        *victim_slot.lock().unwrap() = Some(plan);
+        // poll until the chaos proxy cuts the connection out from
+        // under us — the request error IS the expected outcome
+        loop {
+            match t.request(&Message::PlanStatus { plan }) {
+                Ok(Message::PlanStatusReport { .. }) => {
+                    std::thread::sleep(Duration::from_millis(5))
+                }
+                Ok(Message::PlanResult { state, .. }) => {
+                    panic!(
+                        "plan finished (state {state}) before the \
+                         cut — grow the victim plan"
+                    )
+                }
+                Ok(other) => panic!("unexpected: {other:?}"),
+                Err(_) => break, // the cut
+            }
+        }
+    });
+    let survivor_bytes = survivor_plan.to_bytes();
+    let survivor = std::thread::spawn(move || {
+        let mut t = connect(survivor_proxy);
+        submit_and_follow(
+            &mut t,
+            "survivor",
+            survivor_bytes,
+            Duration::from_millis(10),
+        )
+    });
+
+    victim.join().unwrap();
+    let victim_plan_id =
+        victim_id.lock().unwrap().expect("victim was admitted");
+
+    // observer on a clean connection: the cut client's plan must be
+    // terminal-aborted (the on_close hook drains its open tasks)
+    let mut obs = connect(wf_addr);
+    let aborted =
+        follow(&mut obs, victim_plan_id, Duration::from_millis(10));
+    assert_eq!(
+        aborted.state, TENANT_ABORTED,
+        "victim plan ended as {} ({})",
+        aborted.state, aborted.detail
+    );
+    assert!(
+        aborted.detail.contains("aborted"),
+        "unclear abort detail: {}",
+        aborted.detail
+    );
+    // re-polling a terminal plan is idempotent
+    let again =
+        follow(&mut obs, victim_plan_id, Duration::from_millis(10));
+    assert_eq!(again.state, TENANT_ABORTED);
+
+    // the surviving tenant is untouched: byte-identical result
+    let outcome = survivor.join().unwrap();
+    assert_eq!(outcome.state, TENANT_DONE, "{}", outcome.detail);
+    assert_eq!(
+        norm_pairs(&outcome.matches),
+        survivor_reference,
+        "the abort leaked into the survivor's result"
+    );
+
+    // and the cluster is still serving: a third plan completes
+    let third = plan_for(&dataset, &SizeBased { max_size: Some(200) });
+    let third_reference = thread_reference(&dataset, &third);
+    let after = submit_and_follow(
+        &mut obs,
+        "after-the-abort",
+        third.to_bytes(),
+        Duration::from_millis(10),
+    );
+    assert_eq!(after.state, TENANT_DONE, "{}", after.detail);
+    assert_eq!(norm_pairs(&after.matches), third_reference);
+
+    cluster.shutdown();
+}
