@@ -29,6 +29,7 @@ use crate::cluster::ComputingEnv;
 use crate::coordinator::scheduler::Policy;
 use crate::metrics::RunMetrics;
 use crate::model::{Correspondence, Dataset};
+use crate::net::reactor::Reactor;
 use crate::obs::Tracer;
 use crate::partition::{MatchTask, PartitionSet};
 use crate::service::{
@@ -183,11 +184,19 @@ pub fn serve_resident(
     } else {
         cfg.bind.as_str()
     };
-    let data_srv = DataServiceServer::start(store.clone(), &bind_ep)
-        .context("starting data service")?;
+    // one reactor thread hosts both resident services (PR 8): the
+    // control and data planes park in the same kernel wait instead of
+    // two spinning loops, which is what makes leaving the cluster
+    // resident essentially free when idle
+    let mut reactor = Reactor::build()
+        .context("building the shared service reactor")?;
+    let data_srv =
+        DataServiceServer::start_on(&mut reactor, store.clone(), &bind_ep)
+            .context("starting data service")?;
     let data_addr =
         format!("{connect_host}:{}", data_srv.addr().port());
-    let wf_srv = WorkflowServiceServer::start(
+    let wf_srv = WorkflowServiceServer::start_on(
+        &mut reactor,
         Vec::new(),
         WorkflowServerConfig {
             policy: cfg.policy,
@@ -205,6 +214,9 @@ pub fn serve_resident(
         &bind_ep,
     )
     .context("starting resident workflow service")?;
+    reactor
+        .spawn("pem-services")
+        .context("spawning the shared service reactor")?;
     let wf_addr = format!("{connect_host}:{}", wf_srv.addr().port());
     announce_replica(
         &wf_addr,
@@ -287,30 +299,6 @@ pub fn run(
     } else {
         cfg.bind.as_str()
     };
-    let data_srv = DataServiceServer::start(store, &bind_ep)
-        .context("starting data service")?;
-    let primary_addr =
-        format!("{connect_host}:{}", data_srv.addr().port());
-    // replicated data plane: N−1 replicas push-synced from the primary
-    let mut replica_srvs: Vec<DataServiceServer> = Vec::new();
-    for r in 1..cfg.data_replicas.max(1) {
-        let srv = DataServiceServer::start_replica(
-            &bind_ep,
-            &primary_addr,
-            Duration::from_secs(30),
-        )
-        .with_context(|| format!("starting data replica {r}"))?;
-        replica_srvs.push(srv);
-    }
-    for (r, srv) in replica_srvs.iter().enumerate() {
-        if !srv.wait_synced(Duration::from_secs(60)) {
-            data_srv.shutdown();
-            for s in &replica_srvs {
-                s.shutdown();
-            }
-            bail!("data replica {} did not sync in time", r + 1);
-        }
-    }
     // §3.1 footprints from the plan, keyed by task id for assignment,
     // plus the partition sizes the scheduler needs to *split* a task
     // no node's budget fits (runtime BlockSplit, protocol v5)
@@ -331,7 +319,18 @@ pub fn run(
             )
         })
         .collect();
-    let wf_srv = WorkflowServiceServer::start(
+    // the primary data server and the workflow server share one
+    // reactor thread (PR 8); replicas still run their own so a
+    // wedged replica cannot stall the primary's event loop
+    let mut reactor = Reactor::build()
+        .context("building the shared service reactor")?;
+    let data_srv =
+        DataServiceServer::start_on(&mut reactor, store, &bind_ep)
+            .context("starting data service")?;
+    let primary_addr =
+        format!("{connect_host}:{}", data_srv.addr().port());
+    let wf_srv = WorkflowServiceServer::start_on(
+        &mut reactor,
         tasks,
         WorkflowServerConfig {
             policy: cfg.policy,
@@ -346,6 +345,30 @@ pub fn run(
         &bind_ep,
     )
     .context("starting workflow service")?;
+    reactor
+        .spawn("pem-services")
+        .context("spawning the shared service reactor")?;
+    // replicated data plane: N−1 replicas push-synced from the primary
+    let mut replica_srvs: Vec<DataServiceServer> = Vec::new();
+    for r in 1..cfg.data_replicas.max(1) {
+        let srv = DataServiceServer::start_replica(
+            &bind_ep,
+            &primary_addr,
+            Duration::from_secs(30),
+        )
+        .with_context(|| format!("starting data replica {r}"))?;
+        replica_srvs.push(srv);
+    }
+    for (r, srv) in replica_srvs.iter().enumerate() {
+        if !srv.wait_synced(Duration::from_secs(60)) {
+            wf_srv.abort();
+            data_srv.shutdown();
+            for s in &replica_srvs {
+                s.shutdown();
+            }
+            bail!("data replica {} did not sync in time", r + 1);
+        }
+    }
 
     let wf_addr =
         format!("{connect_host}:{}", wf_srv.addr().port());

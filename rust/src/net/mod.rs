@@ -13,10 +13,13 @@
 //! the experiment reports.
 //!
 //! The *real* I/O layer lives next door in [`reactor`]: the
-//! readiness-driven event loop the TCP servers run on (one thread per
-//! server, nonblocking sockets, incremental framing via
-//! [`crate::rpc::session`]).
+//! readiness-driven event loop the TCP servers run on.  It parks in
+//! the kernel on [`poll`] (`epoll(7)` on Linux, `poll(2)` elsewhere)
+//! until a socket is actually ready, serves any number of servers on
+//! one thread, and is woken for shutdown through a [`poll::Waker`];
+//! framing stays incremental via [`crate::rpc::session`].
 
+pub mod poll;
 pub mod reactor;
 
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -1,37 +1,53 @@
 //! A std-only readiness-driven event loop for the TCP servers.
 //!
 //! The first two PRs ran every server connection on its own blocking
-//! OS thread — faithful to the paper's RMI era, but a coordinator
-//! burning one thread per match worker tops out at a few dozen nodes.
-//! This reactor replaces that model: **one thread serves every
-//! connection of a server**, polling nonblocking sockets in a level-
-//! triggered loop (the same shape as a mio/epoll reactor, but built on
-//! nothing outside `std` — `WouldBlock` *is* the readiness signal).
+//! OS thread.  PR 3 collapsed that to one thread per server — but it
+//! *polled*: a tick loop over every nonblocking socket with a 500 µs
+//! sleep whenever no byte moved, so an idle server still burned
+//! thousands of syscalls per second, O(connections) each tick.  PR 8
+//! replaces the spin with real kernel readiness via
+//! [`crate::net::poll`]: the reactor **parks** in `epoll_wait` /
+//! `poll(2)` until a socket actually has bytes (or buffer space) for
+//! it, and a [`Waker`] pokes it when a shutdown flag flips — the old
+//! "no poke needed, the loop polls" contract is gone.
 //!
-//! Per tick the reactor:
+//! One reactor now hosts *any number of servers* (listener + handler
+//! + shutdown flag), so the dist engine runs the workflow and data
+//! services on a single thread: see [`Reactor::add_server`].  Per
+//! readiness event the reactor:
 //!
-//! 1. accepts every pending connection on the nonblocking listener;
-//! 2. for each connection, drains writable bytes from its
+//! 1. accepts every pending connection on a ready listener (fatal
+//!    accept errors are counted via `reactor.accept_errors`, never
+//!    silently swallowed);
+//! 2. for a ready connection, drains writable bytes from its
 //!    [`SessionEncoder`], reads whatever chunk the kernel has
 //!    (possibly half a length prefix), feeds it to the
 //!    [`SessionDecoder`], and hands every completed frame to the
-//!    server's [`FrameHandler`];
-//! 3. drops connections that closed, errored, violated framing
+//!    owning server's [`FrameHandler`];
+//! 3. keeps kernel-side write interest in sync with whether the
+//!    connection has queued outbound bytes, so a parked reactor is
+//!    woken exactly when progress is possible;
+//! 4. drops connections that closed, errored, violated framing
 //!    (oversized length header) or exceeded the outbound buffer cap
-//!    ([`MAX_SESSION_SEND_BYTES`]);
-//! 4. sleeps briefly only when no byte moved anywhere, so an idle
-//!    server costs microseconds and a busy one runs flat out.
+//!    ([`MAX_SESSION_SEND_BYTES`]).
 //!
 //! Handlers run on the reactor thread and must not block; the
 //! workflow/data handlers only touch in-memory state behind short
 //! critical sections.  Replies are *queued*, never written inline —
 //! a slow peer stalls only its own buffer, not the loop.
+//!
+//! Each hosted server's obs registry gains `reactor.*` metrics:
+//! `accept_errors`, `conns_accepted`, `conns_open`, `wakeups`
+//! (kernel un-parks — the spin detector), and `busy_ns` (cumulative
+//! CPU time of the reactor thread, shared across co-hosted servers).
 
-use crate::rpc::session::{
-    SessionDecoder, SessionEncoder, MAX_SESSION_SEND_BYTES,
-};
+use crate::net::poll::{thread_cpu_time_ns, Event, Poller, Waker};
+use crate::obs::{Counter, Gauge, Registry};
+use crate::rpc::session::{SessionDecoder, SessionEncoder, MAX_SESSION_SEND_BYTES};
+use std::collections::HashMap;
 use std::io::{self, Read};
 use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
@@ -65,176 +81,314 @@ pub trait FrameHandler: Send {
     fn on_close(&mut self, _conn: ConnId) {}
 }
 
+/// Upper bound on how long a shutdown flag can go unnoticed if its
+/// owner forgets to [`Waker::wake`] the reactor.  Pure robustness: the
+/// services always poke, so a parked reactor normally sees ~4 of
+/// these ticks per second and nothing else.
+const FALLBACK_WAIT: Duration = Duration::from_millis(250);
+
+/// Poll tokens below this are listener slots (index into `servers`);
+/// tokens at or above it are connections.
+const CONN_BASE: u64 = 1 << 32;
+
+/// Per-server `reactor.*` instruments, created in the server's own
+/// obs registry by [`Reactor::add_server`].
+struct SlotMetrics {
+    accept_errors: Arc<Counter>,
+    conns_accepted: Arc<Counter>,
+    conns_open: Arc<Gauge>,
+    wakeups: Arc<Counter>,
+    busy_ns: Arc<Gauge>,
+}
+
+impl SlotMetrics {
+    fn from_registry(reg: &Registry) -> SlotMetrics {
+        SlotMetrics {
+            accept_errors: reg.counter("reactor.accept_errors"),
+            conns_accepted: reg.counter("reactor.conns_accepted"),
+            conns_open: reg.gauge("reactor.conns_open"),
+            wakeups: reg.counter("reactor.wakeups"),
+            busy_ns: reg.gauge("reactor.busy_ns"),
+        }
+    }
+}
+
+/// One hosted server: its listener (until shutdown), handler, flag
+/// and metrics.
+struct ServerSlot {
+    listener: Option<TcpListener>,
+    handler: Box<dyn FrameHandler>,
+    shutdown: Arc<AtomicBool>,
+    open_conns: u64,
+    metrics: SlotMetrics,
+}
+
 struct Conn {
     id: ConnId,
+    server: usize,
     stream: TcpStream,
     dec: SessionDecoder,
     enc: SessionEncoder,
-    open: bool,
+    /// Whether kernel-side write interest is currently registered.
+    want_write: bool,
 }
 
-/// One listener + its connections + the server's handler, executed by
-/// a single thread ([`Reactor::run`] / [`Reactor::spawn`]).
-pub struct Reactor<H: FrameHandler> {
-    listener: TcpListener,
-    handler: H,
-    shutdown: Arc<AtomicBool>,
-    conns: Vec<Conn>,
-    next_id: ConnId,
+/// A readiness-driven event loop hosting one or more TCP servers on a
+/// single thread ([`Reactor::run`] / [`Reactor::spawn`]).
+///
+/// Lifecycle: [`Reactor::build`], then [`Reactor::add_server`] for
+/// each server, grab a [`Reactor::waker`], then [`Reactor::spawn`].
+/// Each server stops when its own shutdown flag is set *and* the
+/// waker is poked (or at the next [`FALLBACK_WAIT`] tick); the thread
+/// exits when every hosted server has stopped.
+pub struct Reactor {
+    poll: Poller,
+    servers: Vec<ServerSlot>,
+    conns: HashMap<u64, Conn>,
+    next_conn: u64,
 }
 
-/// Sleep between ticks when no byte moved anywhere (level-triggered
-/// polling needs no wakeup channel; this bounds idle CPU at a few
-/// thousand cheap syscalls per second while adding well under a
-/// millisecond of request latency).
-const IDLE_SLEEP: Duration = Duration::from_micros(500);
-
-impl<H: FrameHandler> Reactor<H> {
-    /// Wrap an already-bound listener.  The listener is switched to
-    /// nonblocking mode; `shutdown` stops [`Reactor::run`] at the next
-    /// tick (no wakeup poke needed — the loop polls).
-    pub fn new(
-        listener: TcpListener,
-        handler: H,
-        shutdown: Arc<AtomicBool>,
-    ) -> io::Result<Reactor<H>> {
-        listener.set_nonblocking(true)?;
+impl Reactor {
+    /// An empty reactor with no servers yet.
+    pub fn build() -> io::Result<Reactor> {
         Ok(Reactor {
-            listener,
-            handler,
-            shutdown,
-            conns: Vec::new(),
-            next_id: 0,
+            poll: Poller::new()?,
+            servers: Vec::new(),
+            conns: HashMap::new(),
+            next_conn: CONN_BASE,
         })
     }
 
-    /// Run the event loop on the calling thread until the shutdown
-    /// flag is set; every open connection is dropped on exit, so
-    /// blocked peers unblock with a connection error.
+    /// A handle that un-parks the loop from any thread.  Required
+    /// after setting a server's shutdown flag; harmless at any other
+    /// time.
+    pub fn waker(&self) -> Waker {
+        self.poll.waker()
+    }
+
+    /// Host `listener`'s connections on this reactor, dispatching
+    /// frames to `handler`.  The listener is switched to nonblocking
+    /// mode.  Setting `shutdown` (then waking) closes the listener
+    /// and this server's connections without touching co-hosted
+    /// servers.  `reactor.*` metrics are created in `registry`.
+    pub fn add_server(
+        &mut self,
+        listener: TcpListener,
+        handler: Box<dyn FrameHandler>,
+        shutdown: Arc<AtomicBool>,
+        registry: &Registry,
+    ) -> io::Result<()> {
+        listener.set_nonblocking(true)?;
+        let token = self.servers.len() as u64;
+        assert!(token < CONN_BASE, "too many servers on one reactor");
+        self.poll.register(listener.as_raw_fd(), token, true, false)?;
+        self.servers.push(ServerSlot {
+            listener: Some(listener),
+            handler,
+            shutdown,
+            open_conns: 0,
+            metrics: SlotMetrics::from_registry(registry),
+        });
+        Ok(())
+    }
+
+    /// Run the event loop on the calling thread until every hosted
+    /// server's shutdown flag is set; each server's connections are
+    /// dropped as it stops, so blocked peers unblock with a
+    /// connection error.
     pub fn run(mut self) {
+        let mut events: Vec<Event> = Vec::new();
         loop {
-            if self.shutdown.load(Ordering::SeqCst) {
+            self.reap_stopped();
+            if self.servers.iter().all(|s| s.listener.is_none()) {
                 break;
             }
-            if !self.tick() {
-                std::thread::sleep(IDLE_SLEEP);
+            if let Err(e) = self.poll.wait(&mut events, Some(FALLBACK_WAIT)) {
+                // not expected on any supported platform; make sure a
+                // persistent failure cannot become a hot error loop
+                eprintln!("reactor: poll wait failed: {e}");
+                std::thread::sleep(FALLBACK_WAIT);
+                continue;
             }
-        }
-        for conn in &self.conns {
-            let _ = conn.stream.shutdown(Shutdown::Both);
+            let busy = thread_cpu_time_ns();
+            for slot in self.servers.iter().filter(|s| s.listener.is_some()) {
+                slot.metrics.wakeups.inc();
+                slot.metrics.busy_ns.set(busy);
+            }
+            for ev in events.drain(..) {
+                if ev.token < CONN_BASE {
+                    self.accept_burst(ev.token as usize);
+                } else {
+                    self.service_event(ev.token);
+                }
+            }
         }
     }
 
     /// Spawn a named thread running [`Reactor::run`].
-    pub fn spawn(
-        self,
-        name: &str,
-    ) -> io::Result<std::thread::JoinHandle<()>>
-    where
-        H: 'static,
-    {
+    pub fn spawn(self, name: &str) -> io::Result<std::thread::JoinHandle<()>> {
         std::thread::Builder::new()
             .name(name.to_string())
             .spawn(move || self.run())
     }
 
-    /// One pass over listener + connections; `true` if any byte moved.
-    fn tick(&mut self) -> bool {
-        let mut progressed = false;
+    /// Tear down every server whose shutdown flag is set.
+    fn reap_stopped(&mut self) {
+        for idx in 0..self.servers.len() {
+            if self.servers[idx].listener.is_some()
+                && self.servers[idx].shutdown.load(Ordering::SeqCst)
+            {
+                self.teardown_server(idx);
+            }
+        }
+    }
+
+    fn teardown_server(&mut self, idx: usize) {
+        if let Some(listener) = self.servers[idx].listener.take() {
+            let _ = self.poll.deregister(listener.as_raw_fd());
+        }
+        let doomed: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| c.server == idx)
+            .map(|(&t, _)| t)
+            .collect();
+        for token in doomed {
+            self.close_conn(token);
+        }
+    }
+
+    /// Hang up on a connection and notify its server's handler.
+    fn close_conn(&mut self, token: u64) {
+        if let Some(conn) = self.conns.remove(&token) {
+            let _ = self.poll.deregister(conn.stream.as_raw_fd());
+            let _ = conn.stream.shutdown(Shutdown::Both);
+            let slot = &mut self.servers[conn.server];
+            slot.open_conns = slot.open_conns.saturating_sub(1);
+            slot.metrics.conns_open.set(slot.open_conns);
+            slot.handler.on_close(conn.id);
+        }
+    }
+
+    /// Accept every pending connection on server `idx`'s listener.
+    fn accept_burst(&mut self, idx: usize) {
         loop {
-            match self.listener.accept() {
+            let slot = &mut self.servers[idx];
+            let Some(listener) = slot.listener.as_ref() else {
+                return;
+            };
+            match listener.accept() {
                 Ok((stream, _)) => {
-                    progressed = true;
+                    // a stream we cannot switch to nonblocking mode
+                    // would wedge the whole loop on its first read:
+                    // close it *explicitly* and count the failure
+                    // (PR 8 satellite — this used to be a silent
+                    // `continue` that leaked the stream to Drop)
                     if stream.set_nonblocking(true).is_err() {
+                        slot.metrics.accept_errors.inc();
+                        let _ = stream.shutdown(Shutdown::Both);
                         continue;
                     }
                     stream.set_nodelay(true).ok();
-                    let id = self.next_id;
-                    self.next_id += 1;
-                    self.conns.push(Conn {
-                        id,
-                        stream,
-                        dec: SessionDecoder::new(),
-                        enc: SessionEncoder::new(),
-                        open: true,
-                    });
+                    let token = self.next_conn;
+                    self.next_conn += 1;
+                    if self.poll.register(stream.as_raw_fd(), token, true, false).is_err() {
+                        slot.metrics.accept_errors.inc();
+                        let _ = stream.shutdown(Shutdown::Both);
+                        continue;
+                    }
+                    slot.open_conns += 1;
+                    slot.metrics.conns_open.set(slot.open_conns);
+                    slot.metrics.conns_accepted.inc();
+                    self.conns.insert(
+                        token,
+                        Conn {
+                            id: token,
+                            server: idx,
+                            stream,
+                            dec: SessionDecoder::new(),
+                            enc: SessionEncoder::new(),
+                            want_write: false,
+                        },
+                    );
                 }
-                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    // fatal listener error (EMFILE, ENFILE, …): count
+                    // it instead of swallowing it (PR 8 satellite —
+                    // this used to be a bare `break`).  The listener
+                    // stays level-triggered-ready while the condition
+                    // persists, so back off briefly rather than spin.
+                    slot.metrics.accept_errors.inc();
+                    std::thread::sleep(Duration::from_millis(10));
                     break;
                 }
-                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => {
-                    continue;
+            }
+        }
+    }
+
+    /// Service a readiness event for one connection.
+    fn service_event(&mut self, token: u64) {
+        let keep = {
+            let Reactor { conns, servers, poll, .. } = self;
+            let Some(conn) = conns.get_mut(&token) else {
+                return;
+            };
+            let slot = &mut servers[conn.server];
+            let mut keep = service_conn(conn, slot.handler.as_mut());
+            if keep {
+                // keep kernel write interest in sync with whether
+                // outbound bytes are queued, so the loop parks until
+                // the peer's socket can make progress
+                let want = !conn.enc.is_empty();
+                if want != conn.want_write {
+                    let fd = conn.stream.as_raw_fd();
+                    if poll.modify(fd, token, true, want).is_ok() {
+                        conn.want_write = want;
+                    } else {
+                        keep = false;
+                    }
                 }
-                Err(_) => break,
             }
+            keep
+        };
+        if !keep {
+            self.close_conn(token);
         }
-        let Reactor { conns, handler, .. } = self;
-        for conn in conns.iter_mut() {
-            if conn.open {
-                progressed |= service_conn(conn, handler);
-            }
-        }
-        conns.retain(|c| c.open);
-        progressed
     }
 }
 
-/// Hang up on `conn` (idempotent) and notify the handler.
-fn close_conn<H: FrameHandler>(conn: &mut Conn, handler: &mut H) {
-    if conn.open {
-        conn.open = false;
-        let _ = conn.stream.shutdown(Shutdown::Both);
-        handler.on_close(conn.id);
-    }
-}
-
-/// Flush, read, decode, dispatch for one connection.  Returns `true`
-/// if any byte moved.
-fn service_conn<H: FrameHandler>(conn: &mut Conn, handler: &mut H) -> bool {
-    let mut progressed = false;
+/// Flush, read, decode, dispatch for one connection.  Returns `false`
+/// when the connection should be closed.
+fn service_conn(conn: &mut Conn, handler: &mut dyn FrameHandler) -> bool {
     // drain what the socket will take of earlier replies
-    match conn.enc.flush_into(&mut conn.stream) {
-        Ok(n) => progressed |= n > 0,
-        Err(_) => {
-            close_conn(conn, handler);
-            return progressed;
-        }
+    if conn.enc.flush_into(&mut conn.stream).is_err() {
+        return false;
     }
     // read whatever chunk has arrived; frames are extracted as they
     // complete so inbound buffering never exceeds one frame
     let mut buf = [0u8; 16 * 1024];
     loop {
         match conn.stream.read(&mut buf) {
-            Ok(0) => {
-                close_conn(conn, handler);
-                return progressed;
-            }
+            Ok(0) => return false,
             Ok(n) => {
-                progressed = true;
                 conn.dec.feed(&buf[..n]);
                 loop {
                     match conn.dec.next_frame() {
                         Ok(Some(payload)) => {
-                            let action = handler.on_frame(
-                                conn.id,
-                                &mut conn.enc,
-                                &payload,
-                            );
+                            let action = handler.on_frame(conn.id, &mut conn.enc, &payload);
                             if action == Action::Close {
                                 // best-effort flush of the final reply
-                                let _ = conn
-                                    .enc
-                                    .flush_into(&mut conn.stream);
-                                close_conn(conn, handler);
-                                return true;
+                                let _ = conn.enc.flush_into(&mut conn.stream);
+                                return false;
                             }
                         }
                         Ok(None) => break,
                         Err(_) => {
                             // framing violation (oversized header):
                             // the stream is garbage — hang up
-                            close_conn(conn, handler);
-                            return true;
+                            return false;
                         }
                     }
                 }
@@ -243,26 +397,17 @@ fn service_conn<H: FrameHandler>(conn: &mut Conn, handler: &mut H) -> bool {
                 }
             }
             Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
-            Err(ref e) if e.kind() == io::ErrorKind::Interrupted => {
-                continue;
-            }
-            Err(_) => {
-                close_conn(conn, handler);
-                return progressed;
-            }
+            Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
         }
     }
-    // push replies queued by this tick's frames
-    match conn.enc.flush_into(&mut conn.stream) {
-        Ok(n) => progressed |= n > 0,
-        Err(_) => close_conn(conn, handler),
+    // push replies queued by this event's frames
+    if conn.enc.flush_into(&mut conn.stream).is_err() {
+        return false;
     }
     // a peer that stopped draining its socket does not get to pin
     // server memory: cap the outbound buffer and hang up beyond it
-    if conn.open && conn.enc.pending_bytes() > MAX_SESSION_SEND_BYTES {
-        close_conn(conn, handler);
-    }
-    progressed
+    conn.enc.pending_bytes() <= MAX_SESSION_SEND_BYTES
 }
 
 #[cfg(test)]
@@ -271,10 +416,28 @@ mod tests {
     use crate::coordinator::scheduler::ServiceId;
     use crate::rpc::{read_frame, Message, Transport};
     use std::io::Write;
+    use std::sync::atomic::AtomicU64;
+    use std::time::Instant;
+
+    /// Deadline-bounded readiness wait (PR 8 satellite): polls
+    /// `ready` every millisecond until it holds or `timeout` lapses,
+    /// so a slow CI machine stretches the wait instead of flaking.
+    fn wait_until(timeout: Duration, ready: impl Fn() -> bool) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if ready() {
+                return true;
+            }
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
 
     /// Echoes every frame back unchanged; counts closes.
     struct Echo {
-        closes: Arc<std::sync::atomic::AtomicU64>,
+        closes: Arc<AtomicU64>,
     }
 
     impl FrameHandler for Echo {
@@ -293,35 +456,49 @@ mod tests {
         }
     }
 
-    fn start_echo() -> (
-        std::net::SocketAddr,
-        Arc<AtomicBool>,
-        Arc<std::sync::atomic::AtomicU64>,
-        std::thread::JoinHandle<()>,
-    ) {
+    struct EchoServer {
+        addr: std::net::SocketAddr,
+        shutdown: Arc<AtomicBool>,
+        waker: Waker,
+        closes: Arc<AtomicU64>,
+        registry: Arc<Registry>,
+        handle: std::thread::JoinHandle<()>,
+    }
+
+    impl EchoServer {
+        /// Flag + wake + join: the post-PR-8 shutdown contract.
+        fn stop(self) {
+            self.shutdown.store(true, Ordering::SeqCst);
+            self.waker.wake();
+            self.handle.join().unwrap();
+        }
+    }
+
+    fn start_echo() -> EchoServer {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let shutdown = Arc::new(AtomicBool::new(false));
-        let closes = Arc::new(std::sync::atomic::AtomicU64::new(0));
-        let reactor = Reactor::new(
-            listener,
-            Echo {
-                closes: closes.clone(),
-            },
-            shutdown.clone(),
-        )
-        .unwrap();
+        let closes = Arc::new(AtomicU64::new(0));
+        let registry = Arc::new(Registry::new());
+        let mut reactor = Reactor::build().unwrap();
+        reactor
+            .add_server(
+                listener,
+                Box::new(Echo { closes: closes.clone() }),
+                shutdown.clone(),
+                &registry,
+            )
+            .unwrap();
+        let waker = reactor.waker();
         let handle = reactor.spawn("test-reactor").unwrap();
-        (addr, shutdown, closes, handle)
+        EchoServer { addr, shutdown, waker, closes, registry, handle }
     }
 
     #[test]
     fn echoes_frames_from_multiple_blocking_clients() {
-        let (addr, shutdown, closes, handle) = start_echo();
-        let mut a = Transport::connect(addr, Duration::from_secs(5))
-            .unwrap();
-        let mut b = Transport::connect(addr, Duration::from_secs(5))
-            .unwrap();
+        let srv = start_echo();
+        let mut a = Transport::connect(srv.addr, Duration::from_secs(5)).unwrap();
+        let mut b = Transport::connect(srv.addr, Duration::from_secs(5)).unwrap();
         for i in 0..5u32 {
             let msg = Message::Heartbeat {
                 service: ServiceId(i as usize),
@@ -337,16 +514,15 @@ mod tests {
         drop(a);
         drop(b);
         // the reactor notices both hangups
-        let deadline =
-            std::time::Instant::now() + Duration::from_secs(5);
-        while closes.load(Ordering::SeqCst) < 2
-            && std::time::Instant::now() < deadline
-        {
-            std::thread::sleep(Duration::from_millis(2));
-        }
-        assert_eq!(closes.load(Ordering::SeqCst), 2);
-        shutdown.store(true, Ordering::SeqCst);
-        handle.join().unwrap();
+        let closes = srv.closes.clone();
+        assert!(
+            wait_until(Duration::from_secs(10), || {
+                closes.load(Ordering::SeqCst) >= 2
+            }),
+            "reactor never noticed the client hangups"
+        );
+        assert_eq!(srv.closes.load(Ordering::SeqCst), 2);
+        srv.stop();
     }
 
     /// The tentpole property at the socket level: a client dribbling
@@ -354,19 +530,16 @@ mod tests {
     /// complete, correct reply.
     #[test]
     fn one_byte_writes_reassemble_into_frames() {
-        let (addr, shutdown, _closes, handle) = start_echo();
-        let mut stream = TcpStream::connect(addr).unwrap();
-        stream
-            .set_read_timeout(Some(Duration::from_secs(5)))
-            .unwrap();
+        let srv = start_echo();
+        let mut stream = TcpStream::connect(srv.addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
         let msg = Message::Join {
             name: "dribbler".into(),
             version: crate::rpc::PROTOCOL_VERSION,
             mem_budget: 0,
         };
         let payload = msg.encode();
-        let mut wire =
-            (payload.len() as u32).to_le_bytes().to_vec();
+        let mut wire = (payload.len() as u32).to_le_bytes().to_vec();
         wire.extend_from_slice(&payload);
         for byte in &wire {
             stream.write_all(std::slice::from_ref(byte)).unwrap();
@@ -374,57 +547,155 @@ mod tests {
         }
         let reply = read_frame(&mut stream).unwrap();
         assert_eq!(reply.encode(), payload);
-        shutdown.store(true, Ordering::SeqCst);
-        handle.join().unwrap();
+        srv.stop();
     }
 
-    /// Shutdown drops open connections so blocked clients unblock.
+    /// Shutdown (flag + waker) drops open connections so blocked
+    /// clients unblock.
     #[test]
     fn shutdown_drops_connections() {
-        let (addr, shutdown, _closes, handle) = start_echo();
-        let mut c = Transport::connect(addr, Duration::from_secs(5))
-            .unwrap();
+        let srv = start_echo();
+        let mut c = Transport::connect(srv.addr, Duration::from_secs(5)).unwrap();
         let msg = Message::LeaveAck;
         assert!(c.request(&msg).is_ok());
-        shutdown.store(true, Ordering::SeqCst);
-        handle.join().unwrap();
-        // the next round trip fails: server gone
+        let closes = srv.closes.clone();
+        srv.stop();
+        // the open connection was torn down and its close was
+        // reported to the handler; the next round trip fails
+        assert_eq!(closes.load(Ordering::SeqCst), 1);
         assert!(c.request(&msg).is_err());
+    }
+
+    /// Robustness: even *without* the waker poke, a set shutdown flag
+    /// is noticed at the next fallback tick, bounded by
+    /// [`FALLBACK_WAIT`] — a misbehaving owner gets a slow stop, not
+    /// a stuck thread.
+    #[test]
+    fn shutdown_flag_alone_lands_at_the_fallback_tick() {
+        let EchoServer { addr, shutdown, handle, .. } = start_echo();
+        let mut c = Transport::connect(addr, Duration::from_secs(5)).unwrap();
+        assert!(c.request(&Message::LeaveAck).is_ok());
+        shutdown.store(true, Ordering::SeqCst);
+        // no wake() on purpose
+        handle.join().unwrap();
+        assert!(c.request(&Message::LeaveAck).is_err());
     }
 
     /// A corrupt length header (beyond MAX_FRAME_BYTES) gets the
     /// connection dropped, not a hung or confused server.
     #[test]
     fn oversized_header_hangs_up() {
-        let (addr, shutdown, closes, handle) = start_echo();
-        let mut stream = TcpStream::connect(addr).unwrap();
-        stream
-            .set_read_timeout(Some(Duration::from_secs(5)))
-            .unwrap();
+        let srv = start_echo();
+        let mut stream = TcpStream::connect(srv.addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
         stream.write_all(&[0xFF, 0xFF, 0xFF, 0xFF, 0x00]).unwrap();
         // the server hangs up: the next read sees EOF/reset
         let mut sink = [0u8; 8];
-        let deadline =
-            std::time::Instant::now() + Duration::from_secs(5);
+        let deadline = Instant::now() + Duration::from_secs(5);
         loop {
             match stream.read(&mut sink) {
                 Ok(0) | Err(_) => break,
                 Ok(_) => {}
             }
-            assert!(
-                std::time::Instant::now() < deadline,
-                "server never hung up"
-            );
+            assert!(Instant::now() < deadline, "server never hung up");
         }
-        let deadline =
-            std::time::Instant::now() + Duration::from_secs(5);
-        while closes.load(Ordering::SeqCst) < 1
-            && std::time::Instant::now() < deadline
-        {
-            std::thread::sleep(Duration::from_millis(2));
+        let closes = srv.closes.clone();
+        assert!(
+            wait_until(Duration::from_secs(10), || {
+                closes.load(Ordering::SeqCst) >= 1
+            }),
+            "close was never reported to the handler"
+        );
+        srv.stop();
+    }
+
+    /// The PR 8 idle-cost regression proof at unit-test scale: with
+    /// k parked connections and no traffic, the reactor thread takes
+    /// only its ~4 Hz fallback ticks (the 500 µs spin loop it
+    /// replaces would log ~1200 wakeups over the same window) and
+    /// burns a negligible slice of CPU.  Wall-clock based — no
+    /// ManualClock — because the claim is about the real kernel
+    /// parking the real thread.
+    #[test]
+    fn idle_connections_accumulate_no_busy_time() {
+        let srv = start_echo();
+        let mut conns: Vec<Transport> = (0..8)
+            .map(|_| Transport::connect(srv.addr, Duration::from_secs(5)).unwrap())
+            .collect();
+        // one round trip per connection so all eight are registered
+        for c in conns.iter_mut() {
+            c.request(&Message::LeaveAck).unwrap();
         }
-        assert_eq!(closes.load(Ordering::SeqCst), 1);
-        shutdown.store(true, Ordering::SeqCst);
+        let snap0 = srv.registry.snapshot();
+        let busy0 = snap0.gauge("reactor.busy_ns").unwrap_or(0);
+        let wakeups0 = snap0.counter("reactor.wakeups").unwrap_or(0);
+        std::thread::sleep(Duration::from_millis(600));
+        // one probe round trip refreshes the busy gauge
+        conns[0].request(&Message::LeaveAck).unwrap();
+        let snap1 = srv.registry.snapshot();
+        assert_eq!(snap1.gauge("reactor.conns_open"), Some(8));
+        let wakeups = snap1.counter("reactor.wakeups").unwrap_or(0) - wakeups0;
+        let busy = snap1.gauge("reactor.busy_ns").unwrap_or(0).saturating_sub(busy0);
+        assert!(
+            wakeups <= 60,
+            "reactor woke {wakeups} times across a ~600 ms idle window — busy-polling?"
+        );
+        assert!(
+            busy < 200_000_000,
+            "reactor burned {busy} ns of CPU across a ~600 ms idle window"
+        );
+        srv.stop();
+    }
+
+    /// Two servers hosted on one reactor thread stop independently:
+    /// shutting one down leaves the other serving, and the thread
+    /// exits only when both are gone.
+    #[test]
+    fn two_servers_share_one_reactor() {
+        let la = TcpListener::bind("127.0.0.1:0").unwrap();
+        let lb = TcpListener::bind("127.0.0.1:0").unwrap();
+        let (addr_a, addr_b) = (la.local_addr().unwrap(), lb.local_addr().unwrap());
+        let (shut_a, shut_b) = (
+            Arc::new(AtomicBool::new(false)),
+            Arc::new(AtomicBool::new(false)),
+        );
+        let closes_a = Arc::new(AtomicU64::new(0));
+        let closes_b = Arc::new(AtomicU64::new(0));
+        let (reg_a, reg_b) = (Registry::new(), Registry::new());
+        let mut reactor = Reactor::build().unwrap();
+        reactor
+            .add_server(la, Box::new(Echo { closes: closes_a.clone() }), shut_a.clone(), &reg_a)
+            .unwrap();
+        reactor
+            .add_server(lb, Box::new(Echo { closes: closes_b.clone() }), shut_b.clone(), &reg_b)
+            .unwrap();
+        let waker = reactor.waker();
+        let handle = reactor.spawn("test-shared-reactor").unwrap();
+
+        let mut ca = Transport::connect(addr_a, Duration::from_secs(5)).unwrap();
+        let mut cb = Transport::connect(addr_b, Duration::from_secs(5)).unwrap();
+        assert!(ca.request(&Message::LeaveAck).is_ok());
+        assert!(cb.request(&Message::LeaveAck).is_ok());
+
+        // stop server A only
+        shut_a.store(true, Ordering::SeqCst);
+        waker.wake();
+        assert!(
+            wait_until(Duration::from_secs(10), || {
+                closes_a.load(Ordering::SeqCst) >= 1
+            }),
+            "server A's connection was not torn down"
+        );
+        assert!(ca.request(&Message::LeaveAck).is_err(), "server A still serving");
+        // server B is untouched: the old connection still works and
+        // new ones are accepted
+        assert!(cb.request(&Message::LeaveAck).is_ok());
+        let mut cb2 = Transport::connect(addr_b, Duration::from_secs(5)).unwrap();
+        assert!(cb2.request(&Message::NoTask { done: true }).is_ok());
+
+        // stopping B ends the shared thread
+        shut_b.store(true, Ordering::SeqCst);
+        waker.wake();
         handle.join().unwrap();
     }
 }

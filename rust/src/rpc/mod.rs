@@ -606,69 +606,86 @@ fn put_features(buf: &mut Vec<u8>, f: &EntityFeatures) {
 /// partitions and must not deep-clone them per fetch.
 pub fn encode_partition_message(data: &PartitionData) -> Vec<u8> {
     let mut buf = Vec::with_capacity(64 + data.approx_bytes as usize / 2);
-    put_u8(&mut buf, TAG_PARTITION);
-    put_u32(&mut buf, data.id.0);
-    put_u64(&mut buf, data.approx_bytes);
-    put_u32(&mut buf, data.entities.len() as u32);
+    encode_partition_message_into(data, &mut buf);
+    buf
+}
+
+/// [`encode_partition_message`] into a caller-provided buffer, which
+/// is cleared first.  The session encoder calls this with a recycled
+/// buffer so steady-state replies allocate nothing per frame.
+pub fn encode_partition_message_into(data: &PartitionData, buf: &mut Vec<u8>) {
+    buf.clear();
+    put_u8(buf, TAG_PARTITION);
+    put_u32(buf, data.id.0);
+    put_u64(buf, data.approx_bytes);
+    put_u32(buf, data.entities.len() as u32);
     for e in &data.entities {
-        put_u32(&mut buf, e.0);
+        put_u32(buf, e.0);
     }
     debug_assert_eq!(data.features.len(), data.entities.len());
     for f in &data.features {
-        put_features(&mut buf, f);
+        put_features(buf, f);
     }
-    buf
 }
 
 impl Message {
     /// Encode to a payload (without the frame length prefix).
     pub fn encode(&self) -> Vec<u8> {
         let mut b = Vec::with_capacity(16);
+        self.encode_into(&mut b);
+        b
+    }
+
+    /// Encode into a caller-provided buffer, replacing its contents.
+    /// This is the allocation-free path the session encoder drives
+    /// with its recycled buffers (PR 8).
+    pub fn encode_into(&self, b: &mut Vec<u8>) {
+        b.clear();
         match self {
             Message::Join {
                 name,
                 version,
                 mem_budget,
             } => {
-                put_u8(&mut b, TAG_JOIN);
-                put_u8(&mut b, *version);
-                put_str(&mut b, name);
-                put_u64(&mut b, *mem_budget);
+                put_u8(b, TAG_JOIN);
+                put_u8(b, *version);
+                put_str(b, name);
+                put_u64(b, *mem_budget);
             }
             Message::JoinAck {
                 service,
                 version,
                 replicas,
             } => {
-                put_u8(&mut b, TAG_JOIN_ACK);
-                put_u8(&mut b, *version);
-                put_service(&mut b, *service);
-                put_str_list(&mut b, replicas);
+                put_u8(b, TAG_JOIN_ACK);
+                put_u8(b, *version);
+                put_service(b, *service);
+                put_str_list(b, replicas);
             }
             Message::Leave { service } => {
-                put_u8(&mut b, TAG_LEAVE);
-                put_service(&mut b, *service);
+                put_u8(b, TAG_LEAVE);
+                put_service(b, *service);
             }
-            Message::LeaveAck => put_u8(&mut b, TAG_LEAVE_ACK),
+            Message::LeaveAck => put_u8(b, TAG_LEAVE_ACK),
             Message::TaskRequest { service } => {
-                put_u8(&mut b, TAG_TASK_REQUEST);
-                put_service(&mut b, *service);
+                put_u8(b, TAG_TASK_REQUEST);
+                put_service(b, *service);
             }
             Message::TaskAssign {
                 task,
                 mem_bytes,
                 span,
             } => {
-                put_u8(&mut b, TAG_TASK_ASSIGN);
-                put_u32(&mut b, task.id);
-                put_u32(&mut b, task.left.0);
-                put_u32(&mut b, task.right.0);
-                put_u64(&mut b, *mem_bytes);
-                put_span(&mut b, span);
+                put_u8(b, TAG_TASK_ASSIGN);
+                put_u32(b, task.id);
+                put_u32(b, task.left.0);
+                put_u32(b, task.right.0);
+                put_u64(b, *mem_bytes);
+                put_span(b, span);
             }
             Message::NoTask { done } => {
-                put_u8(&mut b, TAG_NO_TASK);
-                put_bool(&mut b, *done);
+                put_u8(b, TAG_NO_TASK);
+                put_bool(b, *done);
             }
             Message::Complete {
                 service,
@@ -677,19 +694,19 @@ impl Message {
                 cached,
                 matches,
             } => {
-                put_u8(&mut b, TAG_COMPLETE);
-                put_service(&mut b, *service);
-                put_u32(&mut b, *task_id);
-                put_u64(&mut b, *comparisons);
-                put_u32(&mut b, cached.len() as u32);
+                put_u8(b, TAG_COMPLETE);
+                put_service(b, *service);
+                put_u32(b, *task_id);
+                put_u64(b, *comparisons);
+                put_u32(b, cached.len() as u32);
                 for p in cached {
-                    put_u32(&mut b, p.0);
+                    put_u32(b, p.0);
                 }
-                put_u32(&mut b, matches.len() as u32);
+                put_u32(b, matches.len() as u32);
                 for c in matches {
-                    put_u32(&mut b, c.e1.0);
-                    put_u32(&mut b, c.e2.0);
-                    put_f32(&mut b, c.sim);
+                    put_u32(b, c.e1.0);
+                    put_u32(b, c.e2.0);
+                    put_f32(b, c.sim);
                 }
             }
             Message::Heartbeat {
@@ -699,115 +716,115 @@ impl Message {
                 cache_misses,
                 tasks_done,
             } => {
-                put_u8(&mut b, TAG_HEARTBEAT);
-                put_service(&mut b, *service);
-                put_u64(&mut b, *busy_ns);
-                put_u64(&mut b, *cache_hits);
-                put_u64(&mut b, *cache_misses);
-                put_u64(&mut b, *tasks_done);
+                put_u8(b, TAG_HEARTBEAT);
+                put_service(b, *service);
+                put_u64(b, *busy_ns);
+                put_u64(b, *cache_hits);
+                put_u64(b, *cache_misses);
+                put_u64(b, *tasks_done);
             }
-            Message::HeartbeatAck => put_u8(&mut b, TAG_HEARTBEAT_ACK),
+            Message::HeartbeatAck => put_u8(b, TAG_HEARTBEAT_ACK),
             Message::TaskRequestBatch {
                 service,
                 max,
                 cached,
                 completed,
             } => {
-                put_u8(&mut b, TAG_TASK_REQUEST_BATCH);
-                put_service(&mut b, *service);
-                put_u32(&mut b, *max);
-                put_partition_list(&mut b, cached);
-                put_u32(&mut b, completed.len() as u32);
+                put_u8(b, TAG_TASK_REQUEST_BATCH);
+                put_service(b, *service);
+                put_u32(b, *max);
+                put_partition_list(b, cached);
+                put_u32(b, completed.len() as u32);
                 for c in completed {
-                    put_u32(&mut b, c.task_id);
-                    put_u64(&mut b, c.comparisons);
-                    put_u32(&mut b, c.matches.len() as u32);
+                    put_u32(b, c.task_id);
+                    put_u64(b, c.comparisons);
+                    put_u32(b, c.matches.len() as u32);
                     for m in &c.matches {
-                        put_u32(&mut b, m.e1.0);
-                        put_u32(&mut b, m.e2.0);
-                        put_f32(&mut b, m.sim);
+                        put_u32(b, m.e1.0);
+                        put_u32(b, m.e2.0);
+                        put_f32(b, m.sim);
                     }
                 }
             }
             Message::TaskAssignBatch { done, tasks } => {
-                put_u8(&mut b, TAG_TASK_ASSIGN_BATCH);
-                put_bool(&mut b, *done);
-                put_u32(&mut b, tasks.len() as u32);
+                put_u8(b, TAG_TASK_ASSIGN_BATCH);
+                put_bool(b, *done);
+                put_u32(b, tasks.len() as u32);
                 for a in tasks {
-                    put_u32(&mut b, a.task.id);
-                    put_u32(&mut b, a.task.left.0);
-                    put_u32(&mut b, a.task.right.0);
-                    put_u64(&mut b, a.mem_bytes);
-                    put_span(&mut b, &a.span);
+                    put_u32(b, a.task.id);
+                    put_u32(b, a.task.left.0);
+                    put_u32(b, a.task.right.0);
+                    put_u64(b, a.mem_bytes);
+                    put_span(b, &a.span);
                 }
             }
             Message::TaskRejected { service, task_id } => {
-                put_u8(&mut b, TAG_TASK_REJECTED);
-                put_service(&mut b, *service);
-                put_u32(&mut b, *task_id);
+                put_u8(b, TAG_TASK_REJECTED);
+                put_service(b, *service);
+                put_u32(b, *task_id);
             }
             Message::FetchPartition { id } => {
-                put_u8(&mut b, TAG_FETCH_PARTITION);
-                put_u32(&mut b, id.0);
+                put_u8(b, TAG_FETCH_PARTITION);
+                put_u32(b, id.0);
             }
             Message::Partition { data } => {
-                return encode_partition_message(data);
+                encode_partition_message_into(data, b);
             }
             Message::ReplicaAnnounce {
                 addr,
                 version,
                 partitions,
             } => {
-                put_u8(&mut b, TAG_REPLICA_ANNOUNCE);
-                put_u8(&mut b, *version);
-                put_str(&mut b, addr);
-                put_partition_list(&mut b, partitions);
+                put_u8(b, TAG_REPLICA_ANNOUNCE);
+                put_u8(b, *version);
+                put_str(b, addr);
+                put_partition_list(b, partitions);
             }
             Message::ReplicaDirectory { replicas } => {
-                put_u8(&mut b, TAG_REPLICA_DIRECTORY);
-                put_str_list(&mut b, replicas);
+                put_u8(b, TAG_REPLICA_DIRECTORY);
+                put_str_list(b, replicas);
             }
             Message::Redirect { addr } => {
-                put_u8(&mut b, TAG_REDIRECT);
-                put_str(&mut b, addr);
+                put_u8(b, TAG_REDIRECT);
+                put_str(b, addr);
             }
             Message::SyncRequest { have } => {
-                put_u8(&mut b, TAG_SYNC_REQUEST);
-                put_partition_list(&mut b, have);
+                put_u8(b, TAG_SYNC_REQUEST);
+                put_partition_list(b, have);
             }
             Message::SyncDone { count } => {
-                put_u8(&mut b, TAG_SYNC_DONE);
-                put_u32(&mut b, *count);
+                put_u8(b, TAG_SYNC_DONE);
+                put_u32(b, *count);
             }
-            Message::StatsRequest => put_u8(&mut b, TAG_STATS_REQUEST),
+            Message::StatsRequest => put_u8(b, TAG_STATS_REQUEST),
             Message::StatsReport { stats } => {
-                put_u8(&mut b, TAG_STATS_REPORT);
-                put_u32(&mut b, stats.len() as u32);
+                put_u8(b, TAG_STATS_REPORT);
+                put_u32(b, stats.len() as u32);
                 b.extend_from_slice(stats);
             }
             Message::PlanSubmit { name, plan } => {
-                put_u8(&mut b, TAG_PLAN_SUBMIT);
-                put_str(&mut b, name);
-                put_u32(&mut b, plan.len() as u32);
+                put_u8(b, TAG_PLAN_SUBMIT);
+                put_str(b, name);
+                put_u32(b, plan.len() as u32);
                 b.extend_from_slice(plan);
             }
             Message::PlanAccepted { plan } => {
-                put_u8(&mut b, TAG_PLAN_ACCEPTED);
-                put_u32(&mut b, *plan);
+                put_u8(b, TAG_PLAN_ACCEPTED);
+                put_u32(b, *plan);
             }
             Message::PlanRejected {
                 required,
                 available,
                 reason,
             } => {
-                put_u8(&mut b, TAG_PLAN_REJECTED);
-                put_u64(&mut b, *required);
-                put_u64(&mut b, *available);
-                put_str(&mut b, reason);
+                put_u8(b, TAG_PLAN_REJECTED);
+                put_u64(b, *required);
+                put_u64(b, *available);
+                put_str(b, reason);
             }
             Message::PlanStatus { plan } => {
-                put_u8(&mut b, TAG_PLAN_STATUS);
-                put_u32(&mut b, *plan);
+                put_u8(b, TAG_PLAN_STATUS);
+                put_u32(b, *plan);
             }
             Message::PlanStatusReport {
                 plan,
@@ -816,12 +833,12 @@ impl Message {
                 total,
                 detail,
             } => {
-                put_u8(&mut b, TAG_PLAN_STATUS_REPORT);
-                put_u32(&mut b, *plan);
-                put_u8(&mut b, *state);
-                put_u32(&mut b, *completed);
-                put_u32(&mut b, *total);
-                put_str(&mut b, detail);
+                put_u8(b, TAG_PLAN_STATUS_REPORT);
+                put_u32(b, *plan);
+                put_u8(b, *state);
+                put_u32(b, *completed);
+                put_u32(b, *total);
+                put_str(b, detail);
             }
             Message::PlanResult {
                 plan,
@@ -830,24 +847,23 @@ impl Message {
                 matches,
                 detail,
             } => {
-                put_u8(&mut b, TAG_PLAN_RESULT);
-                put_u32(&mut b, *plan);
-                put_u8(&mut b, *state);
-                put_u64(&mut b, *comparisons);
-                put_u32(&mut b, matches.len() as u32);
+                put_u8(b, TAG_PLAN_RESULT);
+                put_u32(b, *plan);
+                put_u8(b, *state);
+                put_u64(b, *comparisons);
+                put_u32(b, matches.len() as u32);
                 for c in matches {
-                    put_u32(&mut b, c.e1.0);
-                    put_u32(&mut b, c.e2.0);
-                    put_f32(&mut b, c.sim);
+                    put_u32(b, c.e1.0);
+                    put_u32(b, c.e2.0);
+                    put_f32(b, c.sim);
                 }
-                put_str(&mut b, detail);
+                put_str(b, detail);
             }
             Message::Error { message } => {
-                put_u8(&mut b, TAG_ERROR);
-                put_str(&mut b, message);
+                put_u8(b, TAG_ERROR);
+                put_str(b, message);
             }
         }
-        b
     }
 
     /// Decode a full payload; strict — see module docs.

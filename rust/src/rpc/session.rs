@@ -11,9 +11,14 @@
 //! * [`SessionDecoder`] — absorbs arbitrary read chunks and yields
 //!   complete frame payloads, enforcing [`MAX_FRAME_BYTES`] on the
 //!   announced length *before* buffering the body;
-//! * [`SessionEncoder`] — queues encoded frames and writes as much as
-//!   the socket accepts, carrying partial writes across readiness
-//!   events.
+//! * [`SessionEncoder`] — queues outbound frames and writes as much
+//!   as the socket accepts, carrying partial writes across readiness
+//!   events.  Since PR 8 the length prefix and body go down in one
+//!   vectored write, owned encode buffers are recycled through a
+//!   bounded spare pool, and shared payloads
+//!   ([`SessionEncoder::queue_shared`]) are written straight from
+//!   their `Arc` allocation — the partition-fetch path frames
+//!   `PartitionData` bytes with zero intermediate copies.
 //!
 //! Both are pure byte-level machines with no socket inside, so the
 //! property tests below can fuzz every chunk boundary: the decoder is
@@ -31,7 +36,8 @@
 
 use super::{Message, WireError, MAX_FRAME_BYTES};
 use std::collections::VecDeque;
-use std::io::{self, Write};
+use std::io::{self, IoSlice, Write};
+use std::sync::Arc;
 
 /// Upper bound on bytes queued toward one peer that is not draining
 /// its socket.  Generous enough for a full replication stream of an
@@ -108,19 +114,76 @@ impl SessionDecoder {
     }
 }
 
+/// Recycled encode buffers above this capacity are dropped instead of
+/// pooled, so one giant control frame cannot pin its allocation.
+const SPARE_BUF_CAP: usize = 64 * 1024;
+
+/// At most this many recycled encode buffers are pooled per session.
+const SPARE_BUFS: usize = 8;
+
+/// The bytes of one queued outbound frame body.
+#[derive(Debug)]
+enum OutBody {
+    /// Encoder-owned bytes (control replies); the buffer returns to
+    /// the spare pool once written.
+    Owned(Vec<u8>),
+    /// Shared, already-encoded bytes written straight from their
+    /// owner's allocation — the zero-copy partition-fetch path.  The
+    /// session never copies them and never pools them.
+    Shared(Arc<Vec<u8>>),
+}
+
+impl OutBody {
+    fn as_slice(&self) -> &[u8] {
+        match self {
+            OutBody::Owned(v) => v,
+            OutBody::Shared(v) => v,
+        }
+    }
+}
+
+/// One queued frame: 4-byte little-endian length prefix + body.  The
+/// prefix lives beside the body instead of being copied in front of
+/// it; [`SessionEncoder::flush_into`] stitches the two together with
+/// a vectored write.
+#[derive(Debug)]
+struct OutFrame {
+    header: [u8; 4],
+    body: OutBody,
+}
+
+impl OutFrame {
+    fn wire_len(&self) -> usize {
+        4 + self.body.as_slice().len()
+    }
+}
+
 /// Outbound frame queue with partial-write tracking.
 ///
-/// Frames are queued in full (length prefix included) and drained by
-/// [`SessionEncoder::flush_into`], which writes as much as the sink
-/// accepts and resumes mid-frame on the next readiness event.
+/// Frames are queued with their length prefix held separately and
+/// drained by [`SessionEncoder::flush_into`], which writes as much as
+/// the sink accepts (header + body in one vectored call where the
+/// sink supports it) and resumes mid-frame on the next readiness
+/// event.  Two paths feed it:
+///
+/// * **owned** ([`SessionEncoder::queue_message`] /
+///   [`SessionEncoder::queue_payload`]): the body is encoded into a
+///   session-recycled buffer (bounded spare pool, no per-frame
+///   allocation in steady state);
+/// * **shared** ([`SessionEncoder::queue_shared`]): the body is an
+///   `Arc<Vec<u8>>` written in place — partition fetches are framed
+///   without any intermediate copy.
 #[derive(Debug, Default)]
 pub struct SessionEncoder {
     /// Complete frames; the front one may be partially written.
-    queue: VecDeque<Vec<u8>>,
-    /// Bytes of the front frame already written.
+    queue: VecDeque<OutFrame>,
+    /// Bytes of the front frame already written (prefix included).
     offset: usize,
     /// Total unwritten bytes across the queue.
     pending: usize,
+    /// Recycled owned encode buffers (bounded by [`SPARE_BUFS`] ×
+    /// [`SPARE_BUF_CAP`]).
+    spare: Vec<Vec<u8>>,
 }
 
 impl SessionEncoder {
@@ -131,8 +194,11 @@ impl SessionEncoder {
 
     /// Queue one message as a frame; returns the frame's full wire
     /// footprint (payload + length prefix) for traffic accounting.
+    /// The encoding lands directly in a recycled session buffer.
     pub fn queue_message(&mut self, msg: &Message) -> u64 {
-        self.queue_payload(&msg.encode())
+        let mut body = self.take_buf();
+        msg.encode_into(&mut body);
+        self.queue_body(OutBody::Owned(body))
     }
 
     /// Queue one pre-encoded payload as a frame (the length prefix is
@@ -140,14 +206,46 @@ impl SessionEncoder {
     /// above [`MAX_FRAME_BYTES`] are a caller bug — servers only queue
     /// payloads they themselves encoded under the limit.
     pub fn queue_payload(&mut self, payload: &[u8]) -> u64 {
-        debug_assert!(payload.len() as u64 <= MAX_FRAME_BYTES);
-        let mut frame = Vec::with_capacity(payload.len() + 4);
-        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-        frame.extend_from_slice(payload);
-        let n = frame.len();
-        self.pending += n;
+        let mut body = self.take_buf();
+        body.extend_from_slice(payload);
+        self.queue_body(OutBody::Owned(body))
+    }
+
+    /// Queue shared pre-encoded bytes as a frame, written straight
+    /// from the shared allocation (no copy into session buffers).
+    /// This is how the data service serves its cached per-partition
+    /// encodings to any number of fetchers at once.
+    pub fn queue_shared(&mut self, payload: Arc<Vec<u8>>) -> u64 {
+        self.queue_body(OutBody::Shared(payload))
+    }
+
+    fn queue_body(&mut self, body: OutBody) -> u64 {
+        let len = body.as_slice().len();
+        debug_assert!(len as u64 <= MAX_FRAME_BYTES);
+        let frame = OutFrame { header: (len as u32).to_le_bytes(), body };
+        self.pending += frame.wire_len();
         self.queue.push_back(frame);
-        n as u64
+        (len + 4) as u64
+    }
+
+    /// A cleared buffer from the spare pool, or a fresh one.
+    fn take_buf(&mut self) -> Vec<u8> {
+        match self.spare.pop() {
+            Some(mut b) => {
+                b.clear();
+                b
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Return a fully-written frame's buffer to the spare pool.
+    fn recycle(&mut self, frame: OutFrame) {
+        if let OutBody::Owned(buf) = frame.body {
+            if buf.capacity() <= SPARE_BUF_CAP && self.spare.len() < SPARE_BUFS {
+                self.spare.push(buf);
+            }
+        }
     }
 
     /// `true` when every queued byte has been written.
@@ -160,15 +258,34 @@ impl SessionEncoder {
         self.pending
     }
 
+    /// Total capacity held by the recycled-buffer pool.  Test hook:
+    /// the shared (zero-copy) path must never grow it.
+    pub fn spare_capacity_bytes(&self) -> usize {
+        self.spare.iter().map(|b| b.capacity()).sum()
+    }
+
     /// Write as much as `w` accepts right now; a `WouldBlock` stops
     /// the drain without error (the remainder is retried on the next
     /// readiness event).  Returns the bytes written by this call.
+    ///
+    /// While the 4-byte prefix of the front frame is unwritten, the
+    /// prefix remainder and the whole body go down in **one vectored
+    /// write**, so a partition fetch reaches the socket as
+    /// `writev(header, shared_payload)` with zero staging copies.
     pub fn flush_into<W: Write>(&mut self, w: &mut W) -> io::Result<usize> {
         let mut total = 0;
         loop {
-            let (front_len, wrote) = {
+            let (frame_len, wrote) = {
                 let Some(front) = self.queue.front() else { break };
-                (front.len(), w.write(&front[self.offset..]))
+                let body = front.body.as_slice();
+                let wrote = if self.offset < 4 {
+                    let slices =
+                        [IoSlice::new(&front.header[self.offset..]), IoSlice::new(body)];
+                    w.write_vectored(&slices)
+                } else {
+                    w.write(&body[self.offset - 4..])
+                };
+                (4 + body.len(), wrote)
             };
             match wrote {
                 Ok(0) => {
@@ -181,9 +298,10 @@ impl SessionEncoder {
                     total += n;
                     self.offset += n;
                     self.pending -= n;
-                    if self.offset == front_len {
-                        self.queue.pop_front();
+                    if self.offset == frame_len {
+                        let done = self.queue.pop_front().expect("front frame exists");
                         self.offset = 0;
+                        self.recycle(done);
                     }
                 }
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
@@ -352,6 +470,144 @@ mod tests {
             dec.next_frame(),
             Err(WireError::FrameTooLarge(_))
         ));
+    }
+
+    /// Property: a random mix of owned (`queue_message`) and shared
+    /// (`queue_shared`) frames drains to exactly the blocking codec's
+    /// byte stream, under short writes, and the shared path leaves
+    /// the spare pool untouched.
+    #[test]
+    fn prop_mixed_owned_and_shared_frames_match_blocking_codec() {
+        struct ShortWriter {
+            out: Vec<u8>,
+            rng: Rng,
+        }
+        impl std::io::Write for ShortWriter {
+            fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+                if self.rng.gen_bool(0.25) {
+                    return Err(io::Error::new(
+                        io::ErrorKind::WouldBlock,
+                        "not ready",
+                    ));
+                }
+                let cap = buf.len().min(7);
+                let n = 1 + self.rng.gen_range(cap);
+                self.out.extend_from_slice(&buf[..n]);
+                Ok(n)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        forall("session-encode-mixed-shared", 32, |rng| {
+            let msgs = arbitrary_messages(rng);
+            let expected = blocking_stream(&msgs);
+            let mut enc = SessionEncoder::new();
+            let mut queued = 0u64;
+            for m in &msgs {
+                if rng.gen_bool(0.5) {
+                    queued += enc.queue_shared(Arc::new(m.encode()));
+                } else {
+                    queued += enc.queue_message(m);
+                }
+            }
+            assert_eq!(queued as usize, enc.pending_bytes());
+            let mut w = ShortWriter {
+                out: Vec::new(),
+                rng: rng.fork(),
+            };
+            while !enc.is_empty() {
+                enc.flush_into(&mut w).unwrap();
+            }
+            assert_eq!(enc.pending_bytes(), 0);
+            assert_eq!(w.out, expected, "wire bytes differ");
+        });
+    }
+
+    /// The zero-copy guarantee at the syscall boundary: with the
+    /// front frame's prefix unwritten, header and body reach the sink
+    /// in a *single* vectored write — no staging buffer in between.
+    #[test]
+    fn header_and_body_go_down_in_one_vectored_write() {
+        struct VectoredCapture {
+            out: Vec<u8>,
+            /// Non-empty slice count of each vectored call.
+            calls: Vec<usize>,
+        }
+        impl std::io::Write for VectoredCapture {
+            fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+                self.calls.push(1);
+                self.out.extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            fn write_vectored(&mut self, bufs: &[IoSlice<'_>]) -> io::Result<usize> {
+                self.calls.push(bufs.iter().filter(|b| !b.is_empty()).count());
+                let mut n = 0;
+                for b in bufs {
+                    self.out.extend_from_slice(b);
+                    n += b.len();
+                }
+                Ok(n)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let payload = Arc::new(vec![0xAB; 4096]);
+        let mut enc = SessionEncoder::new();
+        let n = enc.queue_shared(payload.clone());
+        assert_eq!(n, 4096 + 4);
+        let mut w = VectoredCapture { out: Vec::new(), calls: Vec::new() };
+        while !enc.is_empty() {
+            enc.flush_into(&mut w).unwrap();
+        }
+        assert_eq!(w.calls, vec![2], "expected exactly one two-slice writev");
+        let mut expected = (4096u32).to_le_bytes().to_vec();
+        expected.extend_from_slice(&payload[..]);
+        assert_eq!(w.out, expected);
+    }
+
+    /// The no-growth guarantee for the fetch path (PR 8 satellite
+    /// test): streaming many large *shared* frames through a session
+    /// never grows the spare-buffer pool, and recycled owned buffers
+    /// stay within the bounded pool cap.
+    #[test]
+    fn shared_frames_do_not_grow_spare_buffers() {
+        let mut enc = SessionEncoder::new();
+        let mut sink = Vec::new();
+        let big = Arc::new(vec![7u8; 1 << 20]); // 1 MiB, like a partition
+        for _ in 0..32 {
+            enc.queue_shared(big.clone());
+            while !enc.is_empty() {
+                enc.flush_into(&mut sink).unwrap();
+            }
+            assert_eq!(
+                enc.spare_capacity_bytes(),
+                0,
+                "zero-copy frames must not leave buffers behind"
+            );
+            sink.clear();
+        }
+        // owned control frames recycle through a *bounded* pool …
+        for _ in 0..64 {
+            enc.queue_message(&Message::HeartbeatAck);
+            while !enc.is_empty() {
+                enc.flush_into(&mut sink).unwrap();
+            }
+        }
+        assert!(enc.spare_capacity_bytes() <= SPARE_BUFS * SPARE_BUF_CAP);
+        // … and an oversized owned frame is dropped, not pooled
+        let before = enc.spare_capacity_bytes();
+        let oversized = vec![1u8; SPARE_BUF_CAP * 2];
+        enc.queue_payload(&oversized);
+        while !enc.is_empty() {
+            enc.flush_into(&mut sink).unwrap();
+        }
+        assert!(
+            enc.spare_capacity_bytes() <= before.max(SPARE_BUFS * SPARE_BUF_CAP),
+            "oversized encode buffer was retained"
+        );
+        assert!(enc.spare_capacity_bytes() < SPARE_BUF_CAP * 2);
     }
 
     /// Partial writes resume exactly where they stopped.

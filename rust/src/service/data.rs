@@ -4,10 +4,18 @@
 //! match services connect, send [`Message::FetchPartition`], and receive
 //! the partition payload (entity ids + precomputed match features).
 //! Since PR 3 the serving side runs on the readiness-driven
-//! [`crate::net::reactor`] — one thread per server, frames decoded
-//! incrementally from arbitrary read chunks, multi-megabyte partition
-//! replies buffered across partial writes — so hundreds of match
-//! workers no longer cost one blocking OS thread each.
+//! [`crate::net::reactor`] — frames decoded incrementally from
+//! arbitrary read chunks, multi-megabyte partition replies buffered
+//! across partial writes — so hundreds of match workers no longer
+//! cost one blocking OS thread each.  Since PR 8 the reactor parks in
+//! the kernel (`epoll`/`poll(2)`) instead of spin-ticking, shutdown
+//! pokes it through a [`crate::net::poll::Waker`], and several
+//! services can share one reactor thread
+//! ([`DataServiceServer::start_on`] — the dist engine co-hosts the
+//! workflow and data services this way).  Cached partition frames are
+//! queued by `Arc` ([`SessionEncoder::queue_shared`]) and written
+//! with vectored I/O, so the fetch hot path never copies payload
+//! bytes into the encoder.
 //!
 //! A server runs in one of two roles:
 //!
@@ -30,6 +38,7 @@
 //!   written to the socket**, frames included, per server — so a
 //!   replicated run reports per-replica byte accounting.
 
+use crate::net::poll::Waker;
 use crate::net::reactor::{Action, ConnId, FrameHandler, Reactor};
 use crate::net::TrafficStats;
 use crate::obs::{
@@ -39,6 +48,7 @@ use crate::partition::PartitionId;
 use crate::rpc::session::SessionEncoder;
 use crate::rpc::{encode_partition_message, Message, Transport};
 use crate::store::DataService;
+use crate::util::lock_poisonless;
 use std::collections::{HashMap, HashSet};
 use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -71,8 +81,13 @@ enum Served {
 struct DataShared {
     backing: Backing,
     wire: TrafficStats,
-    /// Shared with the reactor thread, which exits when it flips.
+    /// Shared with the reactor thread, which tears this server down
+    /// when it flips (after a [`Waker`] poke — the reactor parks in
+    /// the kernel and no longer polls the flag on a tick).
     shutdown: Arc<AtomicBool>,
+    /// Pokes the (possibly shared) reactor out of its kernel wait so
+    /// a shutdown is observed immediately.
+    waker: Waker,
     /// Replica: the initial sync stream completed.  Primaries are
     /// always "synced".
     synced: AtomicBool,
@@ -110,7 +125,7 @@ impl DataShared {
                 let Some(data) = store.try_fetch(id) else {
                     return Served::Unknown;
                 };
-                let mut cache = self.encoded.lock().unwrap();
+                let mut cache = lock_poisonless(&self.encoded);
                 let payload = match cache.get(&id) {
                     Some(p) => p.clone(),
                     None => {
@@ -122,7 +137,7 @@ impl DataShared {
                 Served::Payload(payload)
             }
             Backing::Replica { upstream, .. } => {
-                match self.encoded.lock().unwrap().get(&id) {
+                match lock_poisonless(&self.encoded).get(&id) {
                     Some(p) => Served::Payload(p.clone()),
                     None => Served::Redirect(upstream.clone()),
                 }
@@ -136,7 +151,7 @@ impl DataShared {
             Backing::Primary(store) => store.partition_ids(),
             Backing::Replica { .. } => {
                 let mut ids: Vec<PartitionId> =
-                    self.encoded.lock().unwrap().keys().copied().collect();
+                    lock_poisonless(&self.encoded).keys().copied().collect();
                 ids.sort_unstable();
                 ids
             }
@@ -158,14 +173,14 @@ impl DataShared {
     /// The encoded frame for `id` **without** logical fetch accounting
     /// (replication push path).
     fn encoded_for_sync(&self, id: PartitionId) -> Option<Arc<Vec<u8>>> {
-        if let Some(p) = self.encoded.lock().unwrap().get(&id) {
+        if let Some(p) = lock_poisonless(&self.encoded).get(&id) {
             return Some(p.clone());
         }
         match &self.backing {
             Backing::Primary(store) => {
                 let data = store.peek(id)?;
                 let p = Arc::new(encode_partition_message(&data));
-                self.encoded.lock().unwrap().insert(id, p.clone());
+                lock_poisonless(&self.encoded).insert(id, p.clone());
                 Some(p)
             }
             Backing::Replica { .. } => None,
@@ -227,7 +242,31 @@ impl DataServiceServer {
         )
     }
 
+    /// Register a **primary** on a caller-owned [`Reactor`] instead of
+    /// spawning a dedicated one — the dist engine co-hosts the data
+    /// and workflow services on a single reactor thread this way.
+    /// The caller spawns (or runs) the reactor afterwards.
+    pub fn start_on(
+        reactor: &mut Reactor,
+        store: Arc<DataService>,
+        bind: &str,
+    ) -> anyhow::Result<DataServiceServer> {
+        Self::register_on(reactor, Backing::Primary(store), bind, true)
+    }
+
     fn start_inner(
+        backing: Backing,
+        bind: &str,
+        synced: bool,
+    ) -> anyhow::Result<DataServiceServer> {
+        let mut reactor = Reactor::build()?;
+        let srv = Self::register_on(&mut reactor, backing, bind, synced)?;
+        reactor.spawn("pem-data-reactor")?;
+        Ok(srv)
+    }
+
+    fn register_on(
+        reactor: &mut Reactor,
         backing: Backing,
         bind: &str,
         synced: bool,
@@ -249,6 +288,7 @@ impl DataServiceServer {
             backing,
             wire: TrafficStats::new(),
             shutdown: shutdown.clone(),
+            waker: reactor.waker(),
             synced: AtomicBool::new(synced),
             sync_started: AtomicBool::new(false),
             upstream_lost: AtomicBool::new(false),
@@ -257,16 +297,16 @@ impl DataServiceServer {
             fetch_serve_ns: registry.histogram("fetch_serve_ns"),
             fetches_served: registry.counter("fetches_served"),
             redirects: registry.counter("redirects"),
-            registry,
+            registry: registry.clone(),
         });
-        let reactor = Reactor::new(
+        reactor.add_server(
             listener,
-            DataHandler {
+            Box::new(DataHandler {
                 shared: shared.clone(),
-            },
+            }),
             shutdown,
+            &registry,
         )?;
-        reactor.spawn("pem-data-reactor")?;
         Ok(DataServiceServer { addr, shared })
     }
 
@@ -347,10 +387,13 @@ impl DataServiceServer {
         self.shared.stats_snapshot()
     }
 
-    /// Stop the server: the reactor exits at its next tick and drops
-    /// every open connection, unblocking clients with an I/O error.
+    /// Stop the server: wakes the reactor out of its kernel wait,
+    /// which tears this server down and drops its open connections,
+    /// unblocking clients with an I/O error.  Co-hosted servers on a
+    /// shared reactor are untouched.
     pub fn shutdown(&self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.waker.wake();
     }
 }
 
@@ -385,7 +428,9 @@ impl FrameHandler for DataHandler {
                 let sent = match self.shared.serve(id) {
                     Served::Payload(payload) => {
                         self.shared.fetches_served.inc();
-                        out.queue_payload(&payload)
+                        // zero-copy: the cached frame is queued by Arc
+                        // and written straight from the shared buffer
+                        out.queue_shared(payload)
                     }
                     Served::Redirect(addr) => {
                         self.shared.redirects.inc();
@@ -450,7 +495,7 @@ fn queue_sync(
         // `encoded_for_sync` can only miss if a concurrent shutdown
         // raced the id listing; skip rather than abort the stream
         if let Some(payload) = shared.encoded_for_sync(id) {
-            total += out.queue_payload(&payload);
+            total += out.queue_shared(payload);
             count += 1;
             if total >= MAX_SYNC_BATCH_BYTES {
                 break; // bounded round: the next round pulls the rest
@@ -467,17 +512,14 @@ fn queue_sync(
 /// refused.
 fn sync_round(t: &mut Transport, shared: &DataShared) -> anyhow::Result<u32> {
     let have: Vec<PartitionId> =
-        shared.encoded.lock().unwrap().keys().copied().collect();
+        lock_poisonless(&shared.encoded).keys().copied().collect();
     t.send(&Message::SyncRequest { have })?;
     let mut received = 0u32;
     loop {
         let raw = t.recv_raw()?;
         match Message::decode(&raw) {
             Ok(Message::Partition { data }) => {
-                shared
-                    .encoded
-                    .lock()
-                    .unwrap()
+                lock_poisonless(&shared.encoded)
                     .insert(data.id, Arc::new(raw));
                 received += 1;
             }

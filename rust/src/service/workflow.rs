@@ -28,7 +28,11 @@
 //! [`crate::net::reactor`]: **one thread serves every connection**,
 //! decoding frames incrementally from arbitrary read chunks
 //! ([`crate::rpc::session`]) instead of burning one blocking OS thread
-//! per match worker.
+//! per match worker.  Since PR 8 that thread parks in the kernel
+//! (`epoll`/`poll(2)`) between frames, [`WorkflowServiceServer::abort`]
+//! wakes it through a [`crate::net::poll::Waker`], and the server can
+//! be co-hosted with the data service on one shared reactor
+//! ([`WorkflowServiceServer::start_on`]).
 //!
 //! A service the failure detector has declared dead is *fenced*: its
 //! pulls, completions and heartbeats are answered with `Error` (the
@@ -70,6 +74,7 @@ use crate::coordinator::scheduler::{
     PlanMisfit, Policy, Scheduler, ServiceId,
 };
 use crate::model::{Correspondence, Dataset};
+use crate::net::poll::Waker;
 use crate::net::reactor::{Action, ConnId, FrameHandler, Reactor};
 use crate::net::TrafficStats;
 use crate::obs::{
@@ -77,6 +82,7 @@ use crate::obs::{
 };
 use crate::partition::{MatchTask, PartitionId};
 use crate::store::DataService;
+use crate::util::lock_poisonless;
 use crate::rpc::session::SessionEncoder;
 use crate::rpc::{AssignedTask, CompletedTask, Message, PROTOCOL_VERSION};
 use std::collections::{HashMap, HashSet};
@@ -316,6 +322,9 @@ struct WfShared {
     /// Data-plane replica directory, announcement order, deduplicated.
     replicas: Mutex<Vec<String>>,
     shutdown: Arc<AtomicBool>,
+    /// Pokes the (possibly shared) reactor out of its kernel wait so
+    /// an abort is observed immediately.
+    waker: Waker,
     heartbeat_timeout: Duration,
     /// Monotonic clock behind the liveness timestamps (injectable via
     /// [`crate::obs::Clock`]; production uses the system clock).
@@ -328,7 +337,7 @@ impl WfShared {
     /// monitor, or departed) — unlike the pre-PR-3 code this never
     /// resurrects a membership, so a zombie cannot silently rejoin.
     fn touch(&self, service: ServiceId) -> bool {
-        match self.members.lock().unwrap().get_mut(&service.0) {
+        match lock_poisonless(&self.members).get_mut(&service.0) {
             Some(m) => {
                 m.last_seen = self.clock.now_ns();
                 true
@@ -341,7 +350,7 @@ impl WfShared {
     /// (scheduler-owned since runtime splitting: sub-task footprints
     /// are computed at split time).
     fn mem_of(&self, task_id: u32) -> u64 {
-        self.sched.lock().unwrap().mem_of(task_id)
+        lock_poisonless(&self.sched).mem_of(task_id)
     }
 
     /// The `done` flag for `NoTask` / `TaskAssignBatch` replies.  A
@@ -356,7 +365,7 @@ impl WfShared {
     /// next assignment with its memory footprint and — for a
     /// runtime-split sub-task — its pair-space span.
     fn next_assignment(&self, service: ServiceId) -> Message {
-        let mut sched = self.sched.lock().unwrap();
+        let mut sched = lock_poisonless(&self.sched);
         match sched.next_task(service) {
             Some(task) => Message::TaskAssign {
                 task,
@@ -373,7 +382,7 @@ impl WfShared {
     /// (the `StatsRequest` reply and the final report's stats).
     fn stats_snapshot(&self) -> MetricsSnapshot {
         {
-            let sched = self.sched.lock().unwrap();
+            let sched = lock_poisonless(&self.sched);
             self.registry
                 .gauge("queue_depth")
                 .set(sched.queue_depth() as u64);
@@ -396,7 +405,7 @@ impl WfShared {
         // are locked *sequentially* (never nested) to keep the lock
         // order free of cycles with the reactor thread.
         let tenant_rows: Vec<(u32, u8)> = {
-            let tenants = self.tenants.lock().unwrap();
+            let tenants = lock_poisonless(&self.tenants);
             self.registry.gauge("tenants_active").set(
                 tenants
                     .values()
@@ -406,7 +415,7 @@ impl WfShared {
             tenants.iter().map(|(&id, t)| (id, t.state)).collect()
         };
         if !tenant_rows.is_empty() {
-            let sched = self.sched.lock().unwrap();
+            let sched = lock_poisonless(&self.sched);
             for (id, state) in tenant_rows {
                 let (done, total) = sched.tenant_progress(id);
                 let reg = &self.registry;
@@ -421,7 +430,7 @@ impl WfShared {
             .set(self.next_service.load(Ordering::Relaxed) as u64);
         self.registry
             .gauge("live_members")
-            .set(self.members.lock().unwrap().len() as u64);
+            .set(lock_poisonless(&self.members).len() as u64);
         self.registry
             .gauge("control_wire_bytes")
             .set(self.traffic.total_bytes());
@@ -515,8 +524,27 @@ pub struct WorkflowServiceServer {
 
 impl WorkflowServiceServer {
     /// Seed the central task list and start serving on `bind`
-    /// (`"127.0.0.1:0"` for an ephemeral port).
+    /// (`"127.0.0.1:0"` for an ephemeral port) on a dedicated reactor
+    /// thread.
     pub fn start(
+        tasks: Vec<MatchTask>,
+        cfg: WorkflowServerConfig,
+        bind: &str,
+    ) -> anyhow::Result<WorkflowServiceServer> {
+        let mut reactor = Reactor::build()?;
+        let srv = Self::start_on(&mut reactor, tasks, cfg, bind)?;
+        reactor.spawn("pem-workflow-reactor")?;
+        Ok(srv)
+    }
+
+    /// Like [`WorkflowServiceServer::start`], but registers the server
+    /// on a caller-owned [`Reactor`] instead of spawning a dedicated
+    /// one — the dist engine co-hosts the workflow and data services
+    /// on a single reactor thread this way.  The caller spawns (or
+    /// runs) the reactor afterwards; the heartbeat-monitor thread is
+    /// still spawned here.
+    pub fn start_on(
+        reactor: &mut Reactor,
         tasks: Vec<MatchTask>,
         cfg: WorkflowServerConfig,
         bind: &str,
@@ -567,18 +595,19 @@ impl WorkflowServiceServer {
             tenancy: cfg.tenancy,
             replicas: Mutex::new(Vec::new()),
             shutdown: shutdown.clone(),
+            waker: reactor.waker(),
             heartbeat_timeout: cfg.heartbeat_timeout,
             clock: system_clock(),
-            registry,
+            registry: registry.clone(),
         });
-        let reactor = Reactor::new(
+        reactor.add_server(
             listener,
-            WfHandler {
+            Box::new(WfHandler {
                 shared: shared.clone(),
-            },
+            }),
             shutdown,
+            &registry,
         )?;
-        reactor.spawn("pem-workflow-reactor")?;
         let monitor_shared = shared.clone();
         std::thread::Builder::new()
             .name("pem-workflow-monitor".into())
@@ -593,7 +622,7 @@ impl WorkflowServiceServer {
 
     /// Tasks completed so far (for progress displays).
     pub fn completed(&self) -> usize {
-        self.shared.sched.lock().unwrap().completed()
+        lock_poisonless(&self.shared.sched).completed()
     }
 
     /// Block until every task has completed, polling the scheduler.
@@ -610,7 +639,7 @@ impl WorkflowServiceServer {
         let deadline = Instant::now() + timeout;
         loop {
             {
-                let sched = self.shared.sched.lock().unwrap();
+                let sched = lock_poisonless(&self.shared.sched);
                 if sched.is_done() {
                     return WaitStatus::Done;
                 }
@@ -628,16 +657,18 @@ impl WorkflowServiceServer {
     /// The terminal §3.1 misfit, once the scheduler has declared one
     /// (see [`PlanMisfit`]).
     pub fn misfit(&self) -> Option<PlanMisfit> {
-        self.shared.sched.lock().unwrap().misfit().cloned()
+        lock_poisonless(&self.shared.sched).misfit().cloned()
     }
 
-    /// Tear the server down without consuming the handle: the reactor
-    /// and monitor stop at their next tick and every open connection
-    /// is dropped, so match services unblock with an I/O error even
-    /// when the workflow never finished (run-timeout path).
-    /// Idempotent.
+    /// Tear the server down without consuming the handle: wakes the
+    /// reactor out of its kernel wait (dropping every open connection,
+    /// so match services unblock with an I/O error even when the
+    /// workflow never finished — run-timeout path); the monitor stops
+    /// at its next tick.  Co-hosted servers on a shared reactor are
+    /// untouched.  Idempotent.
     pub fn abort(&self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.waker.wake();
     }
 
     /// Stop the reactor and monitor and extract the final report.
@@ -645,10 +676,10 @@ impl WorkflowServiceServer {
     pub fn finish(self) -> WorkflowReport {
         self.abort();
         let stats = self.shared.stats_snapshot();
-        let sched = self.shared.sched.lock().unwrap();
+        let sched = lock_poisonless(&self.shared.sched);
         WorkflowReport {
             correspondences: std::mem::take(
-                &mut *self.shared.results.lock().unwrap(),
+                &mut *lock_poisonless(&self.shared.results),
             ),
             completed_tasks: sched.completed(),
             total_tasks: sched.total(),
@@ -672,7 +703,7 @@ impl WorkflowServiceServer {
             },
             services_joined: self.shared.next_service.load(Ordering::Relaxed),
             version_rejections: self.shared.version_rejections.get(),
-            data_replicas: self.shared.replicas.lock().unwrap().clone(),
+            data_replicas: lock_poisonless(&self.shared.replicas).clone(),
             stats,
         }
     }
@@ -687,7 +718,7 @@ fn monitor_loop(shared: Arc<WfShared>) {
         let now = shared.clock.now_ns();
         let timeout_ns = shared.heartbeat_timeout.as_nanos() as u64;
         let expired: Vec<(usize, String)> = {
-            let mut members = shared.members.lock().unwrap();
+            let mut members = lock_poisonless(&shared.members);
             let dead: Vec<usize> = members
                 .iter()
                 .filter(|(_, m)| {
@@ -700,10 +731,7 @@ fn monitor_loop(shared: Arc<WfShared>) {
                 .collect()
         };
         for (id, name) in expired {
-            let reopened = shared
-                .sched
-                .lock()
-                .unwrap()
+            let reopened = lock_poisonless(&shared.sched)
                 .fail_service(ServiceId(id));
             shared.requeued_tasks.add(reopened as u64);
             eprintln!(
@@ -781,7 +809,7 @@ impl FrameHandler for WfHandler {
             return;
         }
         let doomed: Vec<u32> = {
-            let tenants = self.shared.tenants.lock().unwrap();
+            let tenants = lock_poisonless(&self.shared.tenants);
             tenants
                 .iter()
                 .filter(|(_, t)| {
@@ -792,8 +820,8 @@ impl FrameHandler for WfHandler {
         };
         for id in doomed {
             let dropped =
-                self.shared.sched.lock().unwrap().drain_tenant(id);
-            let mut tenants = self.shared.tenants.lock().unwrap();
+                lock_poisonless(&self.shared.sched).drain_tenant(id);
+            let mut tenants = lock_poisonless(&self.shared.tenants);
             let t = tenants.get_mut(&id).expect("tenant listed");
             t.state = TENANT_ABORTED;
             t.detail = format!(
@@ -837,7 +865,7 @@ fn handle_message(
             } else {
                 let id =
                     shared.next_service.fetch_add(1, Ordering::SeqCst);
-                shared.members.lock().unwrap().insert(
+                lock_poisonless(&shared.members).insert(
                     id,
                     Member {
                         name,
@@ -847,7 +875,7 @@ fn handle_message(
                 {
                     // the budget reported at join (v5) sizes the
                     // sub-tasks of runtime splitting; 0 = unlimited
-                    let mut sched = shared.sched.lock().unwrap();
+                    let mut sched = lock_poisonless(&shared.sched);
                     sched.add_service(ServiceId(id));
                     sched.set_service_budget(
                         ServiceId(id),
@@ -857,7 +885,7 @@ fn handle_message(
                 Message::JoinAck {
                     service: ServiceId(id),
                     version: PROTOCOL_VERSION,
-                    replicas: shared.replicas.lock().unwrap().clone(),
+                    replicas: lock_poisonless(&shared.replicas).clone(),
                 }
             }
         }
@@ -878,7 +906,7 @@ fn handle_message(
                 }
             } else {
                 let (fresh, directory) = {
-                    let mut dir = shared.replicas.lock().unwrap();
+                    let mut dir = lock_poisonless(&shared.replicas);
                     let fresh = !dir.contains(&addr);
                     if fresh {
                         dir.push(addr);
@@ -889,10 +917,7 @@ fn handle_message(
                 // replica re-announcing (reconnect) does not inflate
                 // the per-partition replica counts
                 if fresh {
-                    shared
-                        .sched
-                        .lock()
-                        .unwrap()
+                    lock_poisonless(&shared.sched)
                         .add_replica_coverage(&partitions);
                     // label the snapshot with the directory so a
                     // `pem stats` scrape can discover and scrape the
@@ -907,11 +932,8 @@ fn handle_message(
             }
         }
         Message::Leave { service } => {
-            shared.members.lock().unwrap().remove(&service.0);
-            let reopened = shared
-                .sched
-                .lock()
-                .unwrap()
+            lock_poisonless(&shared.members).remove(&service.0);
+            let reopened = lock_poisonless(&shared.sched)
                 .fail_service(service);
             shared.requeued_tasks.add(reopened as u64);
             Message::LeaveAck
@@ -945,16 +967,13 @@ fn handle_message(
                 // order is sched → results here and in finish().
                 // The tenant is resolved *before* the report: a merge
                 // completion removes the sub-task's split_parent link.
-                let mut sched = shared.sched.lock().unwrap();
+                let mut sched = lock_poisonless(&shared.sched);
                 let tenant = sched.tenant_of_task(task_id);
                 if sched.try_report_complete(service, task_id, cached) {
                     shared.comparisons.add(comparisons);
                     if tenant == 0 {
-                        shared.results.lock().unwrap().extend(matches);
-                    } else if let Some(t) = shared
-                        .tenants
-                        .lock()
-                        .unwrap()
+                        lock_poisonless(&shared.results).extend(matches);
+                    } else if let Some(t) = lock_poisonless(&shared.tenants)
                         .get_mut(&tenant)
                     {
                         // isolated per-tenant result channel
@@ -985,7 +1004,7 @@ fn handle_message(
             }
             let (tasks, done) = {
                 // same lock-order contract as the Complete arm
-                let mut sched = shared.sched.lock().unwrap();
+                let mut sched = lock_poisonless(&shared.sched);
                 report_batch(shared, &mut sched, service, cached, completed);
                 let k = (max as usize).clamp(1, MAX_ASSIGN_BATCH);
                 let tasks: Vec<AssignedTask> = sched
@@ -1005,20 +1024,14 @@ fn handle_message(
             if !shared.touch(service) {
                 return shared.fenced(service);
             }
-            let fresh = shared
-                .sched
-                .lock()
-                .unwrap()
+            let fresh = lock_poisonless(&shared.sched)
                 .reject_task(service, task_id);
             if fresh {
                 shared.oversize_rejections.inc();
                 // one diagnostic per service, not per task: this runs
                 // on the reactor thread, and a node that fits nothing
                 // rejects every open task
-                if shared
-                    .oversize_logged
-                    .lock()
-                    .unwrap()
+                if lock_poisonless(&shared.oversize_logged)
                     .insert(service.0)
                 {
                     eprintln!(
@@ -1137,7 +1150,7 @@ fn plan_submit(
         .iter()
         .fold(0u64, |sum, &m| sum.saturating_add(m));
     let refused = {
-        let sched = shared.sched.lock().unwrap();
+        let sched = lock_poisonless(&shared.sched);
         match sched.cluster_budget() {
             Some(available) if required > available => Some(available),
             _ => None,
@@ -1174,7 +1187,7 @@ fn plan_submit(
         shared.next_tenant.fetch_add(1, Ordering::SeqCst) as u32;
     let sizes_by_plan_id = plan.task_sizes();
     {
-        let mut sched = shared.sched.lock().unwrap();
+        let mut sched = lock_poisonless(&shared.sched);
         let task_span = plan
             .tasks
             .iter()
@@ -1205,7 +1218,7 @@ fn plan_submit(
             host.per_tenant_inflight,
         );
     }
-    shared.tenants.lock().unwrap().insert(
+    lock_poisonless(&shared.tenants).insert(
         tenant,
         Tenant {
             name,
@@ -1224,7 +1237,7 @@ fn plan_submit(
 /// done), then answer `PlanStatusReport` while running or the
 /// idempotent terminal `PlanResult`.
 fn plan_status(shared: &WfShared, plan: u32) -> Message {
-    let mut tenants = shared.tenants.lock().unwrap();
+    let mut tenants = lock_poisonless(&shared.tenants);
     let Some(t) = tenants.get_mut(&plan) else {
         return Message::Error {
             message: format!("unknown plan id {plan}"),
@@ -1235,7 +1248,7 @@ fn plan_status(shared: &WfShared, plan: u32) -> Message {
         // the scheduler is the source of truth for the transition;
         // the tenant row is updated on this poll (reactor thread)
         let (prog, misfit) = {
-            let sched = shared.sched.lock().unwrap();
+            let sched = lock_poisonless(&shared.sched);
             (
                 sched.tenant_progress(plan),
                 sched.tenant_misfit(plan).cloned(),
@@ -1315,7 +1328,7 @@ fn report_batch(
     }
     sched.record_cache_status(service, cached);
     if !fresh_matches.is_empty() {
-        shared.results.lock().unwrap().extend(fresh_matches);
+        lock_poisonless(&shared.results).extend(fresh_matches);
     }
     if comparisons > 0 {
         shared.comparisons.add(comparisons);
@@ -1323,7 +1336,7 @@ fn report_batch(
     if !tenant_fresh.is_empty() {
         // reactor thread: the sched → tenants nesting matches the
         // single-task Complete arm (see the lock-order note there)
-        let mut tenants = shared.tenants.lock().unwrap();
+        let mut tenants = lock_poisonless(&shared.tenants);
         for (tenant, (comp, matches)) in tenant_fresh {
             shared.comparisons.add(comp);
             if let Some(t) = tenants.get_mut(&tenant) {
@@ -2432,5 +2445,64 @@ mod tests {
         let report = srv.finish();
         assert_eq!(report.stats.counter("plans_aborted"), Some(1));
         assert_eq!(report.stats.counter("stale_completions"), Some(1));
+    }
+
+    /// PR 8 satellite regression: a panic while a lock on the shared
+    /// server state is held (a frame handler dying mid-request) must
+    /// not poison-wedge every other connection — the server keeps
+    /// serving joins and assignments afterwards.
+    #[test]
+    fn poisoned_server_locks_do_not_wedge_other_connections() {
+        let srv = WorkflowServiceServer::start(
+            vec![task(0, 0, 1), task(1, 2, 3)],
+            WorkflowServerConfig::default(),
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        for mutex in ["sched", "members", "results"] {
+            let shared = srv.shared.clone();
+            assert!(std::thread::spawn(move || {
+                match mutex {
+                    "sched" => {
+                        let _g = shared.sched.lock().unwrap();
+                        panic!("poison sched");
+                    }
+                    "members" => {
+                        let _g = shared.members.lock().unwrap();
+                        panic!("poison members");
+                    }
+                    _ => {
+                        let _g = shared.results.lock().unwrap();
+                        panic!("poison results");
+                    }
+                }
+            })
+            .join()
+            .is_err());
+        }
+        assert!(
+            srv.shared.sched.lock().is_err(),
+            "scheduler mutex should be poisoned"
+        );
+        // the server still serves: join, pull, complete, report
+        let mut c = client(srv.addr());
+        let svc = join(&mut c, "post-poison-node");
+        let Message::TaskAssign { task: t0, .. } =
+            c.request(&Message::TaskRequest { service: svc }).unwrap()
+        else {
+            panic!("expected assignment after poisoning");
+        };
+        let reply = c
+            .request(&Message::Complete {
+                service: svc,
+                task_id: t0.id,
+                comparisons: 3,
+                cached: vec![],
+                matches: vec![],
+            })
+            .unwrap();
+        assert!(matches!(reply, Message::TaskAssign { .. }));
+        assert_eq!(srv.completed(), 1);
+        srv.abort();
     }
 }

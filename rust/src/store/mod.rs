@@ -9,6 +9,7 @@ use crate::features::{EntityFeatures, FeatureMatrix};
 use crate::model::{Dataset, EntityId};
 use crate::net::TrafficStats;
 use crate::partition::{PartitionId, PartitionSet};
+use crate::util::{lock_poisonless, read_poisonless, write_poisonless};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, RwLock};
 
@@ -133,7 +134,7 @@ impl DataService {
         id_offset: u32,
     ) -> Vec<PartitionId> {
         let mut added = Vec::new();
-        let mut map = self.partitions.write().unwrap();
+        let mut map = write_poisonless(&self.partitions);
         for p in parts.iter() {
             let features: Vec<EntityFeatures> = p
                 .entities
@@ -169,12 +170,7 @@ impl DataService {
     /// The highest partition id held (`None` for an empty store) — the
     /// renumbering base for [`DataService::extend`].
     pub fn max_partition_id(&self) -> Option<u32> {
-        self.partitions
-            .read()
-            .unwrap()
-            .keys()
-            .map(|p| p.0)
-            .max()
+        read_poisonless(&self.partitions).keys().map(|p| p.0).max()
     }
 
     /// Fetch a partition (counts as one data-service access — a *cache
@@ -189,9 +185,9 @@ impl DataService {
     /// of dying (see [`crate::service::DataServiceServer`]).  Accounting
     /// is only charged on success.
     pub fn try_fetch(&self, id: PartitionId) -> Option<Arc<PartitionData>> {
-        let data = self.partitions.read().unwrap().get(&id)?.clone();
+        let data = read_poisonless(&self.partitions).get(&id)?.clone();
         self.traffic.record(data.approx_bytes);
-        self.fetch_log.lock().unwrap().push(id);
+        lock_poisonless(&self.fetch_log).push(id);
         Some(data)
     }
 
@@ -200,14 +196,14 @@ impl DataService {
     /// and must not inflate the logical fetch statistics the paper's
     /// cache-effectiveness numbers are computed from.
     pub fn peek(&self, id: PartitionId) -> Option<Arc<PartitionData>> {
-        self.partitions.read().unwrap().get(&id).cloned()
+        read_poisonless(&self.partitions).get(&id).cloned()
     }
 
     /// All partition ids held by this store, ascending.  Replica
     /// announcements and sync streams enumerate partitions with this.
     pub fn partition_ids(&self) -> Vec<PartitionId> {
         let mut ids: Vec<PartitionId> =
-            self.partitions.read().unwrap().keys().copied().collect();
+            read_poisonless(&self.partitions).keys().copied().collect();
         ids.sort_unstable_by_key(|p| p.0);
         ids
     }
@@ -215,20 +211,18 @@ impl DataService {
     /// Size of a partition payload without fetching (the simulator charges
     /// transfer time from this).
     pub fn payload_bytes(&self, id: PartitionId) -> u64 {
-        self.partitions
-            .read()
-            .unwrap()
+        read_poisonless(&self.partitions)
             .get(&id)
             .unwrap_or_else(|| panic!("unknown partition {id}"))
             .approx_bytes
     }
 
     pub fn n_partitions(&self) -> usize {
-        self.partitions.read().unwrap().len()
+        read_poisonless(&self.partitions).len()
     }
 
     pub fn fetches(&self) -> usize {
-        self.fetch_log.lock().unwrap().len()
+        lock_poisonless(&self.fetch_log).len()
     }
 }
 
@@ -351,5 +345,37 @@ mod tests {
         let (data, ps) = setup();
         let store = DataService::build(&data.dataset, &ps);
         store.fetch(PartitionId(9999));
+    }
+
+    /// PR 8 satellite regression: a panic while holding a store lock
+    /// (e.g. a frame handler dying mid-request) must not wedge every
+    /// other connection with `PoisonError` unwraps.
+    #[test]
+    fn poisoned_locks_recover_instead_of_wedging() {
+        let (data, ps) = setup();
+        let store = Arc::new(DataService::build(&data.dataset, &ps));
+        let id = ps.iter().next().unwrap().id;
+
+        let s = store.clone();
+        assert!(std::thread::spawn(move || {
+            let _g = s.partitions.write().unwrap();
+            panic!("handler panics while holding the partition map");
+        })
+        .join()
+        .is_err());
+        let s = store.clone();
+        assert!(std::thread::spawn(move || {
+            let _g = s.fetch_log.lock().unwrap();
+            panic!("handler panics while holding the fetch log");
+        })
+        .join()
+        .is_err());
+
+        // Both locks are now poisoned; the service must still serve.
+        let d = store.try_fetch(id).expect("fetch after poison");
+        assert_eq!(d.id, id);
+        assert_eq!(store.fetches(), 1);
+        assert_eq!(store.n_partitions(), ps.len());
+        assert!(store.max_partition_id().is_some());
     }
 }

@@ -52,6 +52,33 @@ pub fn fmt_bytes(bytes: u64) -> String {
     }
 }
 
+/// Lock a mutex, recovering the data if a previous holder panicked.
+///
+/// The resident services guard shared state (scheduler, members,
+/// results, tenant tables) with mutexes that are locked on every
+/// connection-handling path.  A bare `.lock().unwrap()` there turns
+/// one panicked frame handler into a poisoned lock that wedges every
+/// other tenant forever (PR 8 satellite fix).  All state guarded this
+/// way is valid after any partial update — counters, maps and vecs
+/// with no multi-field invariants spanning a panic point — so
+/// recovering the poisoned guard is sound: the panic fails its own
+/// request, not the cluster.
+pub fn lock_poisonless<T: ?Sized>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// [`lock_poisonless`], for `RwLock` read guards.
+pub fn read_poisonless<T: ?Sized>(l: &std::sync::RwLock<T>) -> std::sync::RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// [`lock_poisonless`], for `RwLock` write guards.
+pub fn write_poisonless<T: ?Sized>(
+    l: &std::sync::RwLock<T>,
+) -> std::sync::RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Format a virtual-time duration given in nanoseconds.
 pub fn fmt_nanos(ns: u64) -> String {
     let s = ns as f64 / 1e9;
@@ -101,6 +128,34 @@ mod tests {
     #[should_panic]
     fn div_ceil_zero_divisor_panics() {
         div_ceil(1, 0);
+    }
+
+    #[test]
+    fn poisonless_locks_recover_the_data() {
+        use std::sync::{Arc, Mutex, RwLock};
+        let m = Arc::new(Mutex::new(41u32));
+        let m2 = m.clone();
+        assert!(std::thread::spawn(move || {
+            let mut g = m2.lock().unwrap();
+            *g = 42;
+            panic!("poison while holding the mutex");
+        })
+        .join()
+        .is_err());
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*lock_poisonless(&m), 42);
+
+        let l = Arc::new(RwLock::new(7u32));
+        let l2 = l.clone();
+        assert!(std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison while holding the write lock");
+        })
+        .join()
+        .is_err());
+        assert_eq!(*read_poisonless(&l), 7);
+        *write_poisonless(&l) = 8;
+        assert_eq!(*read_poisonless(&l), 8);
     }
 
     #[test]
