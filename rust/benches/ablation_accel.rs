@@ -39,8 +39,8 @@ fn main() {
         data.dataset.entities.iter().map(|e| e.id).collect();
     let parts = partition_size_based(&ids, 64);
     let store = DataService::build(&data.dataset, &parts);
-    let p0 = store.fetch(pem::partition::PartitionId(0));
-    let p1 = store.fetch(pem::partition::PartitionId(1));
+    let p0 = store.fetch(pem::partition::PartitionId(0)).unwrap();
+    let p1 = store.fetch(pem::partition::PartitionId(1)).unwrap();
 
     let mut b = Bencher::default();
     for kind in [StrategyKind::Wam, StrategyKind::Lrm] {

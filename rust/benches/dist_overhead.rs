@@ -482,6 +482,82 @@ fn main() {
         fmt_nanos(p99),
     );
 
+    // ------------------------------------------- out-of-core store
+    // PR 9's tentpole: the spill tier trades RAM for disk.  Two
+    // price tags matter — the cold *fault* (read + fnv1a verify +
+    // decode of a spill file when the hot set missed) and the hot
+    // *hit* (an Arc clone of the resident payload).  A tiny byte
+    // budget makes every round-robin fetch fault; an uncapped one
+    // makes every fetch after warm-up a hit.
+    pem::bench::report_header(
+        "Out-of-core store — spill-fault latency vs hot-hit throughput",
+        "SpillStore fetch: cold = checksummed file re-read, hot = Arc",
+    );
+    use pem::store::SpillStore;
+    let spill_parts = partition_size_based(&ids, m);
+    let part_ids: Vec<PartitionId> =
+        spill_parts.iter().map(|p| p.id).collect();
+    let spill_iters = common::scaled(2_000).max(200) as u64;
+    println!("mode   budget     fetches  per fetch    throughput");
+    for (mode, budget) in [("fault", 1u64), ("hot", u64::MAX)] {
+        let svc = DataService::build_with(
+            &data.dataset,
+            &spill_parts,
+            Arc::new(SpillStore::new(budget, None).expect("spill dir")),
+        )
+        .expect("spill store load");
+        // warm-up pass: the hot run must start with the set resident
+        for &p in &part_ids {
+            svc.fetch(p).expect("warm fetch");
+        }
+        let before = svc.store_stats();
+        let t0 = std::time::Instant::now();
+        let mut bytes = 0u64;
+        for i in 0..spill_iters {
+            let p = part_ids[(i % part_ids.len() as u64) as usize];
+            bytes += svc.fetch(p).expect("bench fetch").approx_bytes;
+        }
+        let el = t0.elapsed().as_nanos() as u64;
+        let st = svc.store_stats();
+        match mode {
+            "fault" => assert!(
+                st.faults > before.faults,
+                "1-byte budget must fault on every rotation"
+            ),
+            _ => assert_eq!(
+                st.faults, before.faults,
+                "uncapped budget must never fault after warm-up"
+            ),
+        }
+        let ns_per = el / spill_iters.max(1);
+        snap.push(pem::bench::point(
+            format!("store/spill_{mode}_ns_per_fetch"),
+            ns_per,
+        ));
+        let mibps = if el > 0 {
+            bytes as f64 / (1024.0 * 1024.0) / (el as f64 / 1e9)
+        } else {
+            0.0
+        };
+        println!(
+            "{:>5}  {:>9}  {:>7}  {:>9}  {:>8.0} MiB/s",
+            mode,
+            if budget == u64::MAX {
+                "uncapped".to_string()
+            } else {
+                fmt_bytes(budget)
+            },
+            spill_iters,
+            fmt_nanos(ns_per),
+            mibps,
+        );
+    }
+    println!(
+        "\n(the fault row re-reads, re-verifies, and re-decodes a spill \
+         file per fetch; the hot row is the Arc-clone fast path — the \
+         delta is what the byte budget buys back per access)"
+    );
+
     pem::bench::write_json_snapshot("dist_overhead", &snap)
         .expect("bench snapshot");
 }

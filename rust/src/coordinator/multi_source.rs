@@ -138,8 +138,12 @@ pub fn run_two_source_workflow(
     let mut result = MatchResult::new();
     let mut comparisons = 0u64;
     for (task, _) in &tasks {
-        let left = store_a.fetch(task.left);
-        let right = store_b.fetch(task.right);
+        let left = store_a
+            .fetch(task.left)
+            .expect("partition named by the plan");
+        let right = store_b
+            .fetch(task.right)
+            .expect("partition named by the plan");
         comparisons += left.len() as u64 * right.len() as u64;
         for i in 0..left.len() {
             for j in 0..right.len() {

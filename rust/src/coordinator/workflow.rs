@@ -215,7 +215,7 @@ impl WorkflowConfig {
                 replicas: self.data_replicas.max(1),
                 batch: self.batch.max(1),
                 bind: self.bind.clone(),
-                memory_budget: None,
+                ..DistOptions::default()
             })),
             EngineChoice::Simulated => Box::new(Sim(SimOptions {
                 net: self.net,

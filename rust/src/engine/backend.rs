@@ -21,9 +21,9 @@ use crate::metrics::RunMetrics;
 use crate::model::{Correspondence, Dataset};
 use crate::net::CostModel;
 use crate::obs::Tracer;
-use crate::store::DataService;
+use crate::store::{DataService, StoreKind};
 use crate::worker::{RustExecutor, TaskExecutor};
-use anyhow::Result;
+use anyhow::{Context, Result};
 use std::fmt;
 use std::sync::Arc;
 
@@ -225,6 +225,17 @@ pub struct DistOptions {
     /// [`crate::coordinator::PlanMisfit`] instead of burning the
     /// timeout.
     pub memory_budget: Option<u64>,
+    /// Which [`PartitionStore`] backs the data-plane primary:
+    /// [`StoreKind::Resident`] (everything in RAM) or
+    /// [`StoreKind::Spill`] (byte-budgeted hot set over checksummed
+    /// spill files — catalogs larger than RAM).
+    ///
+    /// [`PartitionStore`]: crate::store::PartitionStore
+    pub store: StoreKind,
+    /// Hot-set byte budget per data replica (partial replication);
+    /// `None` = full replicas.  See
+    /// [`crate::engine::dist::DistConfig::replica_hot_budget`].
+    pub replica_hot_budget: Option<u64>,
 }
 
 impl Default for DistOptions {
@@ -234,6 +245,8 @@ impl Default for DistOptions {
             batch: 1,
             bind: "127.0.0.1".to_string(),
             memory_budget: None,
+            store: StoreKind::Resident,
+            replica_hot_budget: None,
         }
     }
 }
@@ -256,8 +269,16 @@ impl ExecutionBackend for Dist {
         ctx: &ExecContext<'_>,
     ) -> Result<EngineRun> {
         let opts = &self.0;
-        let store =
-            Arc::new(DataService::build(ctx.dataset, &plan.partitions));
+        let store = Arc::new(
+            DataService::build_with(
+                ctx.dataset,
+                &plan.partitions,
+                opts.store
+                    .open()
+                    .context("opening the partition store")?,
+            )
+            .context("loading partitions into the store")?,
+        );
         let exec: Arc<dyn TaskExecutor> =
             Arc::new(RustExecutor::new(ctx.strategy));
         let out = dist::run(
@@ -274,6 +295,7 @@ impl ExecutionBackend for Dist {
                 bind: opts.bind.clone(),
                 task_mem: plan.task_mem.clone(),
                 memory_budget: opts.memory_budget,
+                replica_hot_budget: opts.replica_hot_budget,
                 tracer: ctx.tracer.clone(),
                 ..dist::DistConfig::default()
             },

@@ -64,6 +64,13 @@ pub struct DistConfig {
     /// their push-sync, and announces all N into the coordinator's
     /// replica directory.
     pub data_replicas: usize,
+    /// Hot-set byte budget for each data replica (**partial
+    /// replication**): instead of mirroring the whole catalog, a
+    /// budgeted replica keeps only the most-demanded frames, redirects
+    /// cold misses to the primary, and re-admits a shed frame once
+    /// demand for it recurs.  `None` = full replicas (the pre-PR 9
+    /// behavior).
+    pub replica_hot_budget: Option<u64>,
     /// §3.1 memory footprint per task, aligned with the `tasks`
     /// argument of [`run`] (from the match plan).  Empty = no
     /// footprints: every assignment travels with footprint 0 and is
@@ -113,6 +120,7 @@ impl Default for DistConfig {
             batch: 1,
             bind: "127.0.0.1".to_string(),
             data_replicas: 1,
+            replica_hot_budget: None,
             task_mem: Vec::new(),
             memory_budget: None,
             node_memory_budgets: Vec::new(),
@@ -351,11 +359,19 @@ pub fn run(
     // replicated data plane: N−1 replicas push-synced from the primary
     let mut replica_srvs: Vec<DataServiceServer> = Vec::new();
     for r in 1..cfg.data_replicas.max(1) {
-        let srv = DataServiceServer::start_replica(
-            &bind_ep,
-            &primary_addr,
-            Duration::from_secs(30),
-        )
+        let srv = match cfg.replica_hot_budget {
+            Some(budget) => DataServiceServer::start_replica_partial(
+                &bind_ep,
+                &primary_addr,
+                Duration::from_secs(30),
+                budget,
+            ),
+            None => DataServiceServer::start_replica(
+                &bind_ep,
+                &primary_addr,
+                Duration::from_secs(30),
+            ),
+        }
         .with_context(|| format!("starting data replica {r}"))?;
         replica_srvs.push(srv);
     }

@@ -213,7 +213,9 @@ pub fn run_heterogeneous(
                         metrics.cache_hits += 1;
                     } else {
                         metrics.cache_misses += 1;
-                        let bytes = store.payload_bytes(pid);
+                        let bytes = store
+                            .payload_bytes(pid)
+                            .expect("partition named by the plan");
                         t += cfg.data_net.transfer_time_ns(bytes);
                         metrics.bytes_fetched += bytes;
                         node.cache.put(pid, bytes);
@@ -314,12 +316,16 @@ pub fn run_heterogeneous(
                 metrics.tasks += 1;
                 metrics.comparisons += task_comparisons(&task, l, r);
                 if let Some(exec) = &cfg.execute {
-                    let left = store.fetch(task.left);
+                    let left = store
+                        .fetch(task.left)
+                        .expect("partition named by the plan");
                     let intra = task.left == task.right;
                     let right = if intra {
                         left.clone()
                     } else {
-                        store.fetch(task.right)
+                        store
+                            .fetch(task.right)
+                            .expect("partition named by the plan")
                     };
                     correspondences
                         .extend(exec.execute(&left, &right, intra));

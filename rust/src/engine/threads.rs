@@ -125,7 +125,9 @@ pub fn run(
                     let fetch = |pid| match cache.get(pid) {
                         Some(d) => d,
                         None => {
-                            let d = store.fetch(pid);
+                            let d = store
+                                .fetch(pid)
+                                .expect("partition named by the plan");
                             cache.put(pid, d.clone());
                             d
                         }

@@ -1,12 +1,19 @@
-//! Dataset and result I/O: CSV import/export.
+//! Dataset and result I/O: CSV / JSONL import, CSV export.
 //!
 //! Real deployments do not generate their offers — they load them from
 //! catalog exports.  This module reads/writes RFC-4180-style CSV
-//! (quoted fields, embedded commas/quotes/newlines) without external
-//! crates:
+//! (quoted fields, embedded commas/quotes/newlines) and strict flat
+//! JSON-Lines without external crates:
 //!
+//! * [`stream_dataset`] — the incremental loader: entities are parsed
+//!   one record at a time, never holding the raw file in memory.  The
+//!   out-of-core path (`pem match --input big.jsonl --store spill`)
+//!   feeds from this;
 //! * [`read_dataset`] / [`write_dataset`] — entities against a schema
 //!   (header row = attribute names; empty cells = missing values);
+//!   `read_dataset` is [`stream_dataset`] collected;
+//! * [`write_dataset_jsonl`] — the same catalog as JSON-Lines, one
+//!   flat string-valued object per line;
 //! * [`write_matches`] / [`read_matches`] — correspondence lists
 //!   `(e1, e2, sim)` for downstream consumption;
 //! * [`write_truth`] — ground-truth pair exports for evaluation.
@@ -103,36 +110,426 @@ pub fn write_dataset<W: Write>(dataset: &Dataset, w: W) -> Result<()> {
     Ok(())
 }
 
-/// Read a dataset from CSV.  The header row defines the schema; entity
-/// ids are assigned densely in row order.
-pub fn read_dataset<R: Read>(r: R) -> Result<Dataset> {
-    let mut lines = BufReader::new(r).lines();
-    let header = parse_record(&mut lines)?
-        .context("empty CSV: missing header row")?;
-    if header.is_empty() || header.iter().all(|h| h.trim().is_empty()) {
-        bail!("CSV header has no attribute names");
-    }
-    let schema = Schema::new(header.clone());
-    let mut dataset = Dataset::new(schema.clone());
-    let mut row_no = 1usize;
-    while let Some(fields) = parse_record(&mut lines)? {
-        row_no += 1;
-        if fields.len() != header.len() {
-            bail!(
-                "row {row_no}: {} fields, header has {}",
-                fields.len(),
-                header.len()
-            );
+/// The record encodings [`stream_dataset`] understands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetFormat {
+    /// RFC-4180-style CSV; the header row defines the schema.
+    Csv,
+    /// JSON Lines: one flat, string-valued JSON object per line; the
+    /// first record's keys define the schema.
+    Jsonl,
+}
+
+impl DatasetFormat {
+    /// Pick the format from a file extension: `.jsonl`/`.json` →
+    /// [`DatasetFormat::Jsonl`], everything else CSV.
+    pub fn from_path(path: &Path) -> DatasetFormat {
+        match path.extension().and_then(|e| e.to_str()) {
+            Some(ext)
+                if ext.eq_ignore_ascii_case("jsonl")
+                    || ext.eq_ignore_ascii_case("json") =>
+            {
+                DatasetFormat::Jsonl
+            }
+            _ => DatasetFormat::Csv,
         }
-        let mut e = Entity::new(EntityId(dataset.len() as u32), &schema);
-        for (attr, value) in header.iter().zip(fields) {
-            if !value.is_empty() {
-                e.set(&schema, attr, value);
+    }
+}
+
+/// An incremental dataset reader: yields one [`Entity`] per input
+/// record without ever buffering the file.  The schema is fixed by the
+/// first record (CSV header / first JSONL object) and available from
+/// [`DatasetStream::schema`] before any entity is consumed — so an
+/// out-of-core build can plan partitions and spill payloads while the
+/// catalog is still streaming in.  Entity ids are assigned densely in
+/// record order.
+pub struct DatasetStream<B: BufRead> {
+    lines: std::io::Lines<B>,
+    schema: Schema,
+    /// Attribute order of incoming records (CSV column order / first
+    /// JSONL record's key order).
+    header: Vec<String>,
+    format: DatasetFormat,
+    /// First JSONL record, parsed while establishing the schema.
+    pending: Option<Vec<Option<String>>>,
+    next_id: u32,
+    row_no: usize,
+}
+
+impl<B: BufRead> DatasetStream<B> {
+    /// The schema every yielded entity conforms to.
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    /// Assemble the next entity from per-column values aligned with
+    /// the header (`None` = missing).
+    fn entity_from(&mut self, values: Vec<Option<String>>) -> Entity {
+        let mut e = Entity::new(EntityId(self.next_id), &self.schema);
+        self.next_id += 1;
+        for (attr, value) in self.header.iter().zip(values) {
+            if let Some(v) = value {
+                if !v.is_empty() {
+                    e.set(&self.schema, attr, v);
+                }
             }
         }
-        dataset.push(e);
+        e
+    }
+
+    /// The next non-blank JSONL line, as `(row_no, line)`.
+    fn next_jsonl_line(&mut self) -> Option<Result<String>> {
+        loop {
+            match self.lines.next()? {
+                Ok(line) => {
+                    self.row_no += 1;
+                    if !line.trim().is_empty() {
+                        return Some(Ok(line));
+                    }
+                }
+                Err(e) => return Some(Err(e.into())),
+            }
+        }
+    }
+}
+
+impl<B: BufRead> Iterator for DatasetStream<B> {
+    type Item = Result<Entity>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if let Some(values) = self.pending.take() {
+            return Some(Ok(self.entity_from(values)));
+        }
+        match self.format {
+            DatasetFormat::Csv => {
+                let fields = match parse_record(&mut self.lines) {
+                    Ok(Some(f)) => f,
+                    Ok(None) => return None,
+                    Err(e) => return Some(Err(e)),
+                };
+                self.row_no += 1;
+                if fields.len() != self.header.len() {
+                    return Some(Err(anyhow::anyhow!(
+                        "row {}: {} fields, header has {}",
+                        self.row_no,
+                        fields.len(),
+                        self.header.len()
+                    )));
+                }
+                Some(Ok(self.entity_from(
+                    fields.into_iter().map(Some).collect(),
+                )))
+            }
+            DatasetFormat::Jsonl => {
+                let line = match self.next_jsonl_line()? {
+                    Ok(l) => l,
+                    Err(e) => return Some(Err(e)),
+                };
+                let row = self.row_no;
+                let record = match parse_jsonl_record(&line, row) {
+                    Ok(r) => r,
+                    Err(e) => return Some(Err(e)),
+                };
+                match align_jsonl_record(&self.header, record, row) {
+                    Ok(values) => Some(Ok(self.entity_from(values))),
+                    Err(e) => Some(Err(e)),
+                }
+            }
+        }
+    }
+}
+
+/// Open an incremental dataset reader over `r` (see
+/// [`DatasetStream`]).  Fails immediately if the schema-defining first
+/// record is missing or malformed.
+pub fn stream_dataset<R: Read>(
+    r: R,
+    format: DatasetFormat,
+) -> Result<DatasetStream<BufReader<R>>> {
+    let mut lines = BufReader::new(r).lines();
+    match format {
+        DatasetFormat::Csv => {
+            let header = parse_record(&mut lines)?
+                .context("empty CSV: missing header row")?;
+            if header.is_empty()
+                || header.iter().all(|h| h.trim().is_empty())
+            {
+                bail!("CSV header has no attribute names");
+            }
+            let schema = Schema::new(header.clone());
+            Ok(DatasetStream {
+                lines,
+                schema,
+                header,
+                format,
+                pending: None,
+                next_id: 0,
+                row_no: 1,
+            })
+        }
+        DatasetFormat::Jsonl => {
+            let mut row_no = 0usize;
+            let first = loop {
+                match lines.next() {
+                    None => bail!("empty JSONL: no records"),
+                    Some(line) => {
+                        let line = line?;
+                        row_no += 1;
+                        if !line.trim().is_empty() {
+                            break line;
+                        }
+                    }
+                }
+            };
+            let record = parse_jsonl_record(&first, row_no)?;
+            if record.is_empty() {
+                bail!("row {row_no}: first record has no attributes");
+            }
+            let header: Vec<String> =
+                record.iter().map(|(k, _)| k.clone()).collect();
+            let schema = Schema::new(header.clone());
+            let pending =
+                Some(record.into_iter().map(|(_, v)| v).collect());
+            Ok(DatasetStream {
+                lines,
+                schema,
+                header,
+                format,
+                pending,
+                next_id: 0,
+                row_no,
+            })
+        }
+    }
+}
+
+/// Open an incremental reader over a file, picking the format from the
+/// extension (`.jsonl`/`.json` → JSONL, else CSV).
+pub fn stream_dataset_file(
+    path: &Path,
+) -> Result<DatasetStream<BufReader<std::fs::File>>> {
+    stream_dataset(
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?,
+        DatasetFormat::from_path(path),
+    )
+}
+
+/// Read a dataset from CSV.  The header row defines the schema; entity
+/// ids are assigned densely in row order.  This is [`stream_dataset`]
+/// collected into a materialized [`Dataset`].
+pub fn read_dataset<R: Read>(r: R) -> Result<Dataset> {
+    collect_stream(stream_dataset(r, DatasetFormat::Csv)?)
+}
+
+/// Drain a stream into a materialized [`Dataset`].
+fn collect_stream<B: BufRead>(stream: DatasetStream<B>) -> Result<Dataset> {
+    let mut dataset = Dataset::new(stream.schema().clone());
+    for entity in stream {
+        dataset.push(entity?);
     }
     Ok(dataset)
+}
+
+/// Map a parsed JSONL record onto the schema's attribute order.
+/// Unknown keys are errors (the schema is fixed by the first record);
+/// absent keys are missing values.
+fn align_jsonl_record(
+    header: &[String],
+    record: Vec<(String, Option<String>)>,
+    row: usize,
+) -> Result<Vec<Option<String>>> {
+    let mut values: Vec<Option<String>> = vec![None; header.len()];
+    for (key, value) in record {
+        let Some(pos) = header.iter().position(|h| *h == key) else {
+            bail!(
+                "row {row}: attribute {key:?} not in the schema \
+                 (fixed by the first record: {header:?})"
+            );
+        };
+        if values[pos].is_some() {
+            bail!("row {row}: duplicate attribute {key:?}");
+        }
+        values[pos] = Some(value.unwrap_or_default());
+    }
+    Ok(values)
+}
+
+/// Parse one strict JSONL record: a single flat JSON object whose
+/// values are strings (or `null` = missing).  Returns `(key, value)`
+/// pairs in appearance order.
+fn parse_jsonl_record(
+    line: &str,
+    row: usize,
+) -> Result<Vec<(String, Option<String>)>> {
+    let mut chars = line.chars().peekable();
+    let mut out: Vec<(String, Option<String>)> = Vec::new();
+    skip_ws(&mut chars);
+    if chars.next() != Some('{') {
+        bail!("row {row}: JSONL record must be a JSON object");
+    }
+    skip_ws(&mut chars);
+    if chars.peek() == Some(&'}') {
+        chars.next();
+    } else {
+        loop {
+            skip_ws(&mut chars);
+            let key = parse_json_string(&mut chars)
+                .with_context(|| format!("row {row}: object key"))?;
+            skip_ws(&mut chars);
+            if chars.next() != Some(':') {
+                bail!("row {row}: expected ':' after key {key:?}");
+            }
+            skip_ws(&mut chars);
+            let value = match chars.peek() {
+                Some('"') => Some(
+                    parse_json_string(&mut chars).with_context(
+                        || format!("row {row}: value of {key:?}"),
+                    )?,
+                ),
+                Some('n') => {
+                    for want in ['n', 'u', 'l', 'l'] {
+                        if chars.next() != Some(want) {
+                            bail!(
+                                "row {row}: malformed literal for \
+                                 {key:?}"
+                            );
+                        }
+                    }
+                    None
+                }
+                _ => bail!(
+                    "row {row}: value of {key:?} must be a string or \
+                     null (flat string-valued objects only)"
+                ),
+            };
+            out.push((key, value));
+            skip_ws(&mut chars);
+            match chars.next() {
+                Some(',') => continue,
+                Some('}') => break,
+                _ => bail!("row {row}: expected ',' or '}}'"),
+            }
+        }
+    }
+    skip_ws(&mut chars);
+    if chars.next().is_some() {
+        bail!("row {row}: trailing data after the JSON object");
+    }
+    Ok(out)
+}
+
+fn skip_ws(chars: &mut std::iter::Peekable<std::str::Chars<'_>>) {
+    while matches!(chars.peek(), Some(' ' | '\t' | '\r')) {
+        chars.next();
+    }
+}
+
+/// Parse a JSON string literal (leading `"` still unconsumed),
+/// handling the full escape set including `\uXXXX` surrogate pairs.
+fn parse_json_string(
+    chars: &mut std::iter::Peekable<std::str::Chars<'_>>,
+) -> Result<String> {
+    if chars.next() != Some('"') {
+        bail!("expected '\"'");
+    }
+    let mut out = String::new();
+    loop {
+        match chars.next() {
+            None => bail!("unterminated string"),
+            Some('"') => return Ok(out),
+            Some('\\') => match chars.next() {
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some('/') => out.push('/'),
+                Some('b') => out.push('\u{8}'),
+                Some('f') => out.push('\u{c}'),
+                Some('n') => out.push('\n'),
+                Some('r') => out.push('\r'),
+                Some('t') => out.push('\t'),
+                Some('u') => {
+                    let hi = parse_hex4(chars)?;
+                    let c = if (0xD800..0xDC00).contains(&hi) {
+                        // surrogate pair: the low half must follow
+                        if chars.next() != Some('\\')
+                            || chars.next() != Some('u')
+                        {
+                            bail!("lone high surrogate");
+                        }
+                        let lo = parse_hex4(chars)?;
+                        if !(0xDC00..0xE000).contains(&lo) {
+                            bail!("invalid low surrogate");
+                        }
+                        0x10000
+                            + ((hi - 0xD800) << 10)
+                            + (lo - 0xDC00)
+                    } else if (0xDC00..0xE000).contains(&hi) {
+                        bail!("lone low surrogate");
+                    } else {
+                        hi
+                    };
+                    out.push(
+                        char::from_u32(c)
+                            .context("invalid unicode escape")?,
+                    );
+                }
+                other => bail!("bad escape {other:?}"),
+            },
+            Some(c) => out.push(c),
+        }
+    }
+}
+
+fn parse_hex4(
+    chars: &mut std::iter::Peekable<std::str::Chars<'_>>,
+) -> Result<u32> {
+    let mut v = 0u32;
+    for _ in 0..4 {
+        let c = chars.next().context("truncated \\u escape")?;
+        v = v * 16
+            + c.to_digit(16)
+                .with_context(|| format!("bad hex digit {c:?}"))?;
+    }
+    Ok(v)
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Write a dataset as JSON Lines: one flat string-valued object per
+/// entity, every schema attribute present (`null` = missing) so the
+/// first record fixes the full schema for [`stream_dataset`].
+pub fn write_dataset_jsonl<W: Write>(dataset: &Dataset, w: W) -> Result<()> {
+    let mut w = BufWriter::new(w);
+    let attrs = dataset.schema.attributes();
+    for e in &dataset.entities {
+        let fields: Vec<String> = attrs
+            .iter()
+            .map(|a| match e.get(&dataset.schema, a) {
+                Some(v) => {
+                    format!("\"{}\":\"{}\"", json_escape(a), json_escape(v))
+                }
+                None => format!("\"{}\":null", json_escape(a)),
+            })
+            .collect();
+        writeln!(w, "{{{}}}", fields.join(","))?;
+    }
+    Ok(())
 }
 
 /// Write correspondences as `e1,e2,sim` CSV (with header).
@@ -189,11 +586,18 @@ pub fn write_dataset_file(dataset: &Dataset, path: &Path) -> Result<()> {
     write_dataset(dataset, std::fs::File::create(path)?)
 }
 
+/// Read a dataset from a file, picking CSV or JSONL from the
+/// extension (see [`DatasetFormat::from_path`]).
 pub fn read_dataset_file(path: &Path) -> Result<Dataset> {
-    read_dataset(
-        std::fs::File::open(path)
-            .with_context(|| format!("opening {}", path.display()))?,
-    )
+    collect_stream(stream_dataset_file(path)?)
+}
+
+/// Write a dataset as JSON Lines to a file.
+pub fn write_dataset_jsonl_file(
+    dataset: &Dataset,
+    path: &Path,
+) -> Result<()> {
+    write_dataset_jsonl(dataset, std::fs::File::create(path)?)
 }
 
 #[cfg(test)]
@@ -266,6 +670,107 @@ mod tests {
         assert!(read_dataset("".as_bytes()).is_err());
         assert!(read_dataset("a,b\n1,2,3\n".as_bytes()).is_err());
         assert!(read_dataset("a,b\n\"open,2\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn jsonl_roundtrip_preserves_everything() {
+        let data = GeneratorConfig::tiny().with_entities(200).generate();
+        let mut buf = Vec::new();
+        write_dataset_jsonl(&data.dataset, &mut buf).unwrap();
+        let stream =
+            stream_dataset(&buf[..], DatasetFormat::Jsonl).unwrap();
+        assert_eq!(*stream.schema(), data.dataset.schema);
+        let back = collect_stream(stream).unwrap();
+        assert_eq!(back.len(), data.dataset.len());
+        for (a, b) in data.dataset.entities.iter().zip(&back.entities) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn jsonl_awkward_values_and_missing_roundtrip() {
+        let jsonl = concat!(
+            "{\"title\":\"comma, \\\"quote\\\" and\\nnewline\",",
+            "\"description\":null}\n",
+            "\n",
+            "{\"description\":\"plain \\u00e9\\ud83d\\ude00\"}\n",
+        );
+        let ds = read_dataset_from_jsonl(jsonl);
+        assert_eq!(ds.len(), 2);
+        assert_eq!(
+            ds.entities[0].get(&ds.schema, "title"),
+            Some("comma, \"quote\" and\nnewline")
+        );
+        assert_eq!(ds.entities[0].get(&ds.schema, "description"), None);
+        assert_eq!(ds.entities[1].get(&ds.schema, "title"), None);
+        assert_eq!(
+            ds.entities[1].get(&ds.schema, "description"),
+            Some("plain \u{e9}\u{1f600}")
+        );
+    }
+
+    fn read_dataset_from_jsonl(s: &str) -> Dataset {
+        collect_stream(
+            stream_dataset(s.as_bytes(), DatasetFormat::Jsonl).unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn jsonl_malformed_inputs_rejected() {
+        let stream = |s: &str| {
+            stream_dataset(s.as_bytes(), DatasetFormat::Jsonl)
+                .and_then(collect_stream)
+        };
+        assert!(stream("").is_err(), "no records");
+        assert!(stream("[1,2]\n").is_err(), "not an object");
+        assert!(stream("{\"a\":1}\n").is_err(), "non-string value");
+        assert!(
+            stream("{\"a\":\"x\"} trailing\n").is_err(),
+            "trailing data"
+        );
+        assert!(
+            stream("{\"a\":\"x\",\"a\":\"y\"}\n").is_err(),
+            "duplicate key"
+        );
+        assert!(
+            stream("{\"a\":\"x\"}\n{\"b\":\"y\"}\n").is_err(),
+            "key outside the first record's schema"
+        );
+        assert!(
+            stream("{\"a\":\"\\ud800 lone\"}\n").is_err(),
+            "lone surrogate"
+        );
+        // the schema error surfaces before later records are parsed
+        assert!(
+            stream_dataset("{\"a\":1}\n".as_bytes(), DatasetFormat::Jsonl)
+                .is_err(),
+            "first record is validated eagerly"
+        );
+    }
+
+    #[test]
+    fn streaming_csv_is_incremental_and_matches_read() {
+        let data = GeneratorConfig::tiny().with_entities(50).generate();
+        let mut buf = Vec::new();
+        write_dataset(&data.dataset, &mut buf).unwrap();
+        let mut stream =
+            stream_dataset(&buf[..], DatasetFormat::Csv).unwrap();
+        // schema is available before any entity is consumed
+        assert_eq!(*stream.schema(), data.dataset.schema);
+        let first = stream.next().unwrap().unwrap();
+        assert_eq!(first, data.dataset.entities[0]);
+        assert_eq!(stream.count(), data.dataset.len() - 1);
+    }
+
+    #[test]
+    fn format_detection_from_extension() {
+        let f = |p: &str| DatasetFormat::from_path(Path::new(p));
+        assert_eq!(f("cat.csv"), DatasetFormat::Csv);
+        assert_eq!(f("cat"), DatasetFormat::Csv);
+        assert_eq!(f("big.jsonl"), DatasetFormat::Jsonl);
+        assert_eq!(f("big.JSONL"), DatasetFormat::Jsonl);
+        assert_eq!(f("big.json"), DatasetFormat::Jsonl);
     }
 
     #[test]

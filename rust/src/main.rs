@@ -41,7 +41,7 @@
 //!       --threads 4 --cache 8   # repeat per node / machine
 //! ```
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use pem::blocking::BlockingMethod;
 use pem::cluster::ComputingEnv;
 use pem::coordinator::workflow::{default_max_size, default_min_size};
@@ -78,7 +78,9 @@ fn usage() -> ! {
     --out offers.csv      write the generated dataset as CSV
     --truth truth.csv     also write the ground-truth duplicate pairs
   match options:
-    --input offers.csv    match a CSV dataset instead of generating one
+    --input offers.csv    match a CSV (or .jsonl) dataset instead of
+                          generating one; JSONL is read incrementally
+                          (schema from the first record)
     --out matches.csv     write correspondences as CSV
     --trace out.jsonl     dump the per-task lifecycle trace as JSONL
                           (one event per line) and replay-verify that
@@ -108,6 +110,18 @@ fn usage() -> ! {
     --bind HOST           host the services bind (default 127.0.0.1)
     --mem-budget BYTES    per-node §3.1 memory budget: nodes reject
                           assigned tasks whose plan footprint exceeds it
+  match/serve out-of-core store options (primary data plane):
+    --store resident|spill   partition store backend (default resident)
+    --store-budget SIZE   spill hot-set byte budget, K/M/G suffix ok
+                          (required with --store spill, e.g. 2G):
+                          payloads beyond it live in checksummed spill
+                          files and fault back in on demand
+    --spill-dir DIR       keep spill files here (default: a fresh temp
+                          dir, removed on exit)
+    --hot-budget SIZE     partial replication: each data replica keeps
+                          only the most-demanded frames within this
+                          budget and redirects cold misses upstream
+                          (default: replicas mirror everything)
   serve options (workflow + data services for multi-process matching):
     --workflow-port P     control-plane port (default 0 = ephemeral)
     --data-port P         data-plane port (default 0 = ephemeral)
@@ -134,6 +148,8 @@ fn usage() -> ! {
     --workflow HOST:PORT    coordinator to announce this replica to
     --data-port P           port to serve on (default 0 = ephemeral)
     --bind HOST             host to bind (default 127.0.0.1)
+    --hot-budget SIZE       partial replica: hot-set byte budget
+                            (default: mirror the full catalog)
   distmatch options (one match-service node):
     --workflow HOST:PORT  workflow service address (required)
     --data HOST:PORT[,HOST:PORT...]  data replica addresses (required;
@@ -205,6 +221,70 @@ fn parse_mem_budget(args: &Args) -> Result<Option<u64>> {
     }
 }
 
+/// A byte count with an optional K/M/G suffix: `4096`, `512K`, `2G`.
+fn parse_size_suffix(s: &str) -> Result<u64> {
+    let t = s.trim();
+    let (digits, mult) = match t.char_indices().last() {
+        Some((i, c))
+            if matches!(c.to_ascii_uppercase(), 'K' | 'M' | 'G') =>
+        {
+            let mult = match c.to_ascii_uppercase() {
+                'K' => 1u64 << 10,
+                'M' => 1u64 << 20,
+                _ => 1u64 << 30,
+            };
+            (&t[..i], mult)
+        }
+        _ => (t, 1u64),
+    };
+    let n: u64 = digits
+        .parse()
+        .with_context(|| format!("bad size {s:?} (want e.g. 2G, 512M, 4096)"))?;
+    Ok(n.saturating_mul(mult))
+}
+
+/// `--store resident|spill [--store-budget 2G] [--spill-dir DIR]` →
+/// the primary's [`pem::store::StoreKind`].
+fn parse_store(args: &Args) -> Result<pem::store::StoreKind> {
+    match args.str_or("store", "resident") {
+        "resident" => Ok(pem::store::StoreKind::Resident),
+        "spill" => {
+            let budget = match args.get_str("store-budget") {
+                Some(s) => parse_size_suffix(s)?,
+                None => bail!(
+                    "--store spill requires --store-budget (the hot-set \
+                     byte budget, e.g. --store-budget 2G)"
+                ),
+            };
+            if budget == 0 {
+                bail!("--store-budget must be >= 1");
+            }
+            Ok(pem::store::StoreKind::Spill {
+                budget,
+                dir: args
+                    .get_str("spill-dir")
+                    .map(std::path::PathBuf::from),
+            })
+        }
+        other => bail!("bad --store {other:?} (resident|spill)"),
+    }
+}
+
+/// `--hot-budget 64M` → the partial-replication hot-set budget
+/// (`None` = replicas mirror the full catalog).
+fn parse_hot_budget(args: &Args) -> Result<Option<u64>> {
+    match args.get_str("hot-budget") {
+        Some(s) => {
+            let b = parse_size_suffix(s)?;
+            if b == 0 {
+                bail!("--hot-budget must be >= 1");
+            }
+            Ok(Some(b))
+        }
+        None => Ok(None),
+    }
+}
+
 /// `--blocking-attr product_type|manufacturer` → the blocking method
 /// shared by the blocking and blocksplit strategies.
 fn parse_blocking_method(args: &Args) -> Result<BlockingMethod> {
@@ -263,6 +343,8 @@ fn parse_backend(args: &Args) -> Result<Box<dyn ExecutionBackend>> {
             batch: args.get_or("batch", 1usize)?,
             bind: args.str_or("bind", "127.0.0.1").to_string(),
             memory_budget: parse_mem_budget(args)?,
+            store: parse_store(args)?,
+            replica_hot_budget: parse_hot_budget(args)?,
         })),
         "sim" => Box::new(Sim(SimOptions {
             execute: args.flag("execute"),
@@ -284,7 +366,8 @@ fn parse_policy(args: &Args) -> Policy {
 /// Ground-truth duplicate pairs of a generated dataset.
 type Truth = Vec<(pem::model::EntityId, pem::model::EntityId)>;
 
-/// Dataset from `--input` CSV, or generated (with its ground truth).
+/// Dataset from `--input` (CSV or JSONL, by extension), or generated
+/// (with its ground truth).
 fn load_dataset(args: &Args) -> Result<(Dataset, Option<Truth>)> {
     match args.get_str("input") {
         Some(path) => Ok((
@@ -666,11 +749,21 @@ fn cmd_serve_data_replica(args: &Args) -> Result<()> {
         args.str_or("bind", "127.0.0.1"),
         args.get_or("data-port", 0u16)?
     );
-    let srv = DataServiceServer::start_replica(
-        &bind,
-        upstream,
-        std::time::Duration::from_secs(30),
-    )?;
+    let srv = match parse_hot_budget(args)? {
+        // partial replication: hold only the most-demanded frames
+        // within the budget; cold misses redirect to the upstream
+        Some(budget) => DataServiceServer::start_replica_partial(
+            &bind,
+            upstream,
+            std::time::Duration::from_secs(30),
+            budget,
+        )?,
+        None => DataServiceServer::start_replica(
+            &bind,
+            upstream,
+            std::time::Duration::from_secs(30),
+        )?,
+    };
     println!("data replica on {} syncing from {upstream}…", srv.addr());
     let sync_timeout = std::time::Duration::from_secs(
         args.get_or("sync-timeout-s", 120u64)?,
@@ -741,10 +834,17 @@ fn cmd_serve_coordinator(args: &Args) -> Result<()> {
         .map(|(t, &m)| (t.id, m))
         .collect();
     let task_sizes = plan.task_sizes();
-    let store = std::sync::Arc::new(pem::store::DataService::build(
-        &dataset,
-        &plan.partitions,
-    ));
+    let store_kind = parse_store(args)?;
+    let store = std::sync::Arc::new(
+        pem::store::DataService::build_with(
+            &dataset,
+            &plan.partitions,
+            store_kind
+                .open()
+                .context("opening the partition store")?,
+        )
+        .context("loading partitions into the store")?,
+    );
     println!(
         "dataset: {} entities → {} partitions (misc {}) → {} tasks",
         dataset.len(),
@@ -752,6 +852,17 @@ fn cmd_serve_coordinator(args: &Args) -> Result<()> {
         plan.n_misc_partitions(),
         plan.n_tasks()
     );
+    if let pem::store::StoreKind::Spill { budget, dir } = &store_kind {
+        let stats = store.store_stats();
+        println!(
+            "partition store: spill (hot budget {}, {} on disk{})",
+            fmt_bytes(*budget),
+            fmt_bytes(stats.spill_bytes),
+            dir.as_deref()
+                .map(|d| format!(" in {}", d.display()))
+                .unwrap_or_default()
+        );
+    }
 
     // bind loopback unless the operator opts in with --bind (the
     // ROADMAP fix: the coordinator used to bind 0.0.0.0
@@ -1346,7 +1457,7 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
             engine,
             MatchStrategy::new(kind),
         );
-        let p0 = store.fetch(pem::partition::PartitionId(0));
+        let p0 = store.fetch(pem::partition::PartitionId(0))?;
         let found = exec.execute(&p0, &p0, true);
         println!(
             "smoke: matched partition of {} with itself → {} correspondences",

@@ -46,7 +46,7 @@ use crate::obs::{
 };
 use crate::partition::PartitionId;
 use crate::rpc::session::SessionEncoder;
-use crate::rpc::{encode_partition_message, Message, Transport};
+use crate::rpc::{Message, Transport};
 use crate::store::DataService;
 use crate::util::lock_poisonless;
 use std::collections::{HashMap, HashSet};
@@ -57,7 +57,9 @@ use std::time::{Duration, Instant};
 
 /// What backs this server's partitions.
 enum Backing {
-    /// Authoritative store; frames are encoded lazily on first fetch.
+    /// Authoritative store; frames come from the tiered
+    /// [`PartitionStore`](crate::store::PartitionStore) backend
+    /// (resident-cached or re-materialized from spill on fault).
     Primary(Arc<DataService>),
     /// No store: only frames pushed from `upstream`.  Misses redirect.
     Replica {
@@ -65,6 +67,11 @@ enum Backing {
         upstream: String,
         /// Read/connect timeout for the sync connection.
         io_timeout: Duration,
+        /// `Some(bytes)`: hold only a *partial* hot set of frames
+        /// under this byte budget, shedding the least-fetched ones —
+        /// the [`crate::store::Layered`] admission policy applied at
+        /// the frame level.  `None`: full replica (the default).
+        hot_budget: Option<u64>,
     },
 }
 
@@ -74,8 +81,32 @@ enum Served {
     Payload(Arc<Vec<u8>>),
     /// Not here — client should retry at this address.
     Redirect(String),
-    /// Unknown everywhere (primary miss): protocol error.
-    Unknown,
+    /// The store could not produce the partition (unknown id, or a
+    /// spill-tier I/O / corruption failure): protocol error with this
+    /// detail.
+    Failed(String),
+}
+
+/// Frame misses a shed partition must accumulate before the next sync
+/// round re-admits it — mirrors [`crate::store::Layered::ADMIT_AFTER`]:
+/// one miss records interest, the second proves the partition is hot.
+const READMIT_AFTER: u64 = 2;
+
+/// Bookkeeping for a partial replica's frame-level hot set.
+#[derive(Default)]
+struct ReplicaHot {
+    /// Total bytes of frames currently held.
+    bytes: u64,
+    /// Frame size per held partition (eviction accounting).
+    sizes: HashMap<PartitionId, u64>,
+    /// Fetch requests per partition since startup — the shed-victim
+    /// signal (least-fetched frames are shed first).
+    freq: HashMap<PartitionId, u64>,
+    /// Partitions deliberately not held (shed under the budget).
+    shed: HashSet<PartitionId>,
+    /// Misses per shed partition since it was shed — the re-admission
+    /// signal.
+    redirects: HashMap<PartitionId, u64>,
 }
 
 struct DataShared {
@@ -96,12 +127,17 @@ struct DataShared {
     /// Replica: the upstream connection dropped after sync — the
     /// coordinator is gone and this replica can retire.
     upstream_lost: AtomicBool,
-    /// Partition payloads are immutable for a run, so each is
-    /// serialized once and the encoded frame reused for every
-    /// subsequent fetch (repeat fetches are the common case whenever
-    /// match-service caches are small).  Replicas are seeded by the
-    /// sync stream instead of a store.
+    /// Replica frame set, seeded by the sync stream.  Primaries keep
+    /// their frames in the store backend instead (which caches or
+    /// spills them per its tier); this map stays empty for them.
     encoded: Mutex<HashMap<PartitionId, Arc<Vec<u8>>>>,
+    /// Partial-replica hot-set bookkeeping (only consulted when the
+    /// backing is a replica with a hot budget).  Never locked while
+    /// `encoded` is held, and vice versa — the two are always taken
+    /// in separate critical sections.
+    replica_hot: Mutex<ReplicaHot>,
+    /// Frames shed by a partial replica to stay under its budget.
+    partial_evictions: Arc<Counter>,
     /// This server's metrics; scraped live over the wire by
     /// `StatsRequest` (protocol v6, `pem stats`).
     registry: Arc<Registry>,
@@ -121,24 +157,29 @@ impl DataShared {
         match &self.backing {
             Backing::Primary(store) => {
                 // logical fetch accounting on every hit, like the
-                // in-process engines
-                let Some(data) = store.try_fetch(id) else {
-                    return Served::Unknown;
-                };
-                let mut cache = lock_poisonless(&self.encoded);
-                let payload = match cache.get(&id) {
-                    Some(p) => p.clone(),
-                    None => {
-                        let p = Arc::new(encode_partition_message(&data));
-                        cache.insert(id, p.clone());
-                        p
-                    }
-                };
-                Served::Payload(payload)
+                // in-process engines; the backend caches the frame
+                // (resident) or re-materializes it from spill (fault)
+                match store.fetch_frame(id) {
+                    Ok(payload) => Served::Payload(payload),
+                    Err(e) => Served::Failed(e.to_string()),
+                }
             }
-            Backing::Replica { upstream, .. } => {
-                match lock_poisonless(&self.encoded).get(&id) {
-                    Some(p) => Served::Payload(p.clone()),
+            Backing::Replica {
+                upstream,
+                hot_budget,
+                ..
+            } => {
+                let hit =
+                    lock_poisonless(&self.encoded).get(&id).cloned();
+                if hot_budget.is_some() {
+                    let mut hot = lock_poisonless(&self.replica_hot);
+                    *hot.freq.entry(id).or_insert(0) += 1;
+                    if hit.is_none() && hot.shed.contains(&id) {
+                        *hot.redirects.entry(id).or_insert(0) += 1;
+                    }
+                }
+                match hit {
+                    Some(p) => Served::Payload(p),
                     None => Served::Redirect(upstream.clone()),
                 }
             }
@@ -160,14 +201,28 @@ impl DataShared {
 
     /// Refresh the point-in-time gauges and snapshot the registry —
     /// the payload of a `StatsReport` and of
-    /// [`DataServiceServer::stats`].
+    /// [`DataServiceServer::stats`].  Primaries merge the storage
+    /// tier's `store.*` metrics (faults, evictions, spill bytes, the
+    /// fault-latency histogram) into the snapshot, so `pem stats`
+    /// sees the out-of-core behavior next to the wire counters.
     fn stats_snapshot(&self) -> MetricsSnapshot {
         let r = &self.registry;
         r.gauge("partitions_held").set(self.held_ids().len() as u64);
         r.gauge("wire_bytes").set(self.wire.total_bytes());
         r.gauge("wire_messages").set(self.wire.total_messages());
         r.gauge("synced").set(self.synced.load(Ordering::SeqCst) as u64);
-        r.snapshot()
+        match &self.backing {
+            Backing::Primary(store) => {
+                r.snapshot().merge(&store.store_stats().to_snapshot())
+            }
+            Backing::Replica { hot_budget, .. } => {
+                if hot_budget.is_some() {
+                    r.gauge("hot_bytes")
+                        .set(lock_poisonless(&self.replica_hot).bytes);
+                }
+                r.snapshot()
+            }
+        }
     }
 
     /// The encoded frame for `id` **without** logical fetch accounting
@@ -177,14 +232,80 @@ impl DataShared {
             return Some(p.clone());
         }
         match &self.backing {
-            Backing::Primary(store) => {
-                let data = store.peek(id)?;
-                let p = Arc::new(encode_partition_message(&data));
-                lock_poisonless(&self.encoded).insert(id, p.clone());
-                Some(p)
-            }
+            Backing::Primary(store) => store.peek_frame(id),
             Backing::Replica { .. } => None,
         }
+    }
+
+    /// Absorb one frame pushed by the sync stream, then (for a partial
+    /// replica) shed the least-fetched frames until the hot budget
+    /// holds again.  Lock discipline: `encoded` and `replica_hot` are
+    /// taken strictly one after the other, never nested.
+    fn absorb_sync_frame(&self, id: PartitionId, raw: Vec<u8>) {
+        let len = raw.len() as u64;
+        let replaced =
+            lock_poisonless(&self.encoded).insert(id, Arc::new(raw));
+        let Backing::Replica { hot_budget, .. } = &self.backing else {
+            return;
+        };
+        let mut victims: Vec<PartitionId> = Vec::new();
+        {
+            let mut hot = lock_poisonless(&self.replica_hot);
+            if let Some(old) = replaced {
+                hot.bytes -= old.len() as u64;
+            }
+            hot.bytes += len;
+            hot.sizes.insert(id, len);
+            hot.shed.remove(&id);
+            hot.redirects.remove(&id);
+            if let Some(budget) = hot_budget {
+                while hot.bytes > *budget && !hot.sizes.is_empty() {
+                    let victim = hot
+                        .sizes
+                        .keys()
+                        .min_by_key(|p| {
+                            (hot.freq.get(*p).copied().unwrap_or(0), p.0)
+                        })
+                        .copied()
+                        .expect("non-empty sizes");
+                    let size =
+                        hot.sizes.remove(&victim).unwrap_or(0);
+                    hot.bytes -= size;
+                    hot.shed.insert(victim);
+                    hot.redirects.insert(victim, 0);
+                    self.partial_evictions.inc();
+                    victims.push(victim);
+                }
+            }
+        }
+        if !victims.is_empty() {
+            let mut encoded = lock_poisonless(&self.encoded);
+            for v in &victims {
+                encoded.remove(v);
+            }
+        }
+    }
+
+    /// What a sync round claims to already have: every held frame,
+    /// plus (for a partial replica) the shed frames that have *not*
+    /// accumulated [`READMIT_AFTER`] misses — the upstream only pushes
+    /// what is absent from this list, so listing a cold shed frame
+    /// keeps it shed while omitting a hot one re-admits it.
+    fn sync_have(&self) -> Vec<PartitionId> {
+        let mut have: Vec<PartitionId> =
+            lock_poisonless(&self.encoded).keys().copied().collect();
+        if let Backing::Replica {
+            hot_budget: Some(_),
+            ..
+        } = &self.backing
+        {
+            let hot = lock_poisonless(&self.replica_hot);
+            have.extend(hot.shed.iter().copied().filter(|p| {
+                hot.redirects.get(p).copied().unwrap_or(0)
+                    < READMIT_AFTER
+            }));
+        }
+        have
     }
 }
 
@@ -222,6 +343,32 @@ impl DataServiceServer {
         Ok(srv)
     }
 
+    /// Like [`DataServiceServer::start_replica`], but holding only a
+    /// **partial** hot set: at most `hot_budget` bytes of frames stay
+    /// resident, the least-fetched ones are shed, and a shed frame is
+    /// re-admitted by the periodic sync rounds once enough fetch
+    /// misses prove it hot again.  Misses keep answering with the
+    /// usual [`Message::Redirect`] to the upstream — the protocol is
+    /// unchanged.
+    pub fn start_replica_partial(
+        bind: &str,
+        upstream: &str,
+        io_timeout: Duration,
+        hot_budget: u64,
+    ) -> anyhow::Result<DataServiceServer> {
+        let srv = Self::start_inner(
+            Backing::Replica {
+                upstream: upstream.to_string(),
+                io_timeout,
+                hot_budget: Some(hot_budget),
+            },
+            bind,
+            false,
+        )?;
+        srv.begin_sync();
+        Ok(srv)
+    }
+
     /// Like [`DataServiceServer::start_replica`], but without starting
     /// the sync stream: the replica serves [`Message::Redirect`] for
     /// everything until [`DataServiceServer::begin_sync`] is called.
@@ -236,6 +383,7 @@ impl DataServiceServer {
             Backing::Replica {
                 upstream: upstream.to_string(),
                 io_timeout,
+                hot_budget: None,
             },
             bind,
             false,
@@ -293,6 +441,8 @@ impl DataServiceServer {
             sync_started: AtomicBool::new(false),
             upstream_lost: AtomicBool::new(false),
             encoded: Mutex::new(HashMap::new()),
+            replica_hot: Mutex::new(ReplicaHot::default()),
+            partial_evictions: registry.counter("partial_evictions"),
             clock: system_clock(),
             fetch_serve_ns: registry.histogram("fetch_serve_ns"),
             fetches_served: registry.counter("fetches_served"),
@@ -436,9 +586,9 @@ impl FrameHandler for DataHandler {
                         self.shared.redirects.inc();
                         out.queue_message(&Message::Redirect { addr })
                     }
-                    Served::Unknown => out.queue_message(&Message::Error {
-                        message: format!("unknown partition {id}"),
-                    }),
+                    Served::Failed(message) => {
+                        out.queue_message(&Message::Error { message })
+                    }
                 };
                 self.shared.fetch_serve_ns.observe(
                     self.shared.clock.now_ns().saturating_sub(t0),
@@ -511,16 +661,14 @@ fn queue_sync(
 /// number of frames received, or an error when the upstream is gone /
 /// refused.
 fn sync_round(t: &mut Transport, shared: &DataShared) -> anyhow::Result<u32> {
-    let have: Vec<PartitionId> =
-        lock_poisonless(&shared.encoded).keys().copied().collect();
+    let have = shared.sync_have();
     t.send(&Message::SyncRequest { have })?;
     let mut received = 0u32;
     loop {
         let raw = t.recv_raw()?;
         match Message::decode(&raw) {
             Ok(Message::Partition { data }) => {
-                lock_poisonless(&shared.encoded)
-                    .insert(data.id, Arc::new(raw));
+                shared.absorb_sync_frame(data.id, raw);
                 received += 1;
             }
             Ok(Message::SyncDone { .. }) => return Ok(received),
@@ -757,6 +905,77 @@ mod tests {
         // the in-process accessor agrees (wire gauges may have moved)
         assert_eq!(srv.stats().counter("fetches_served"), Some(3));
         srv.shutdown();
+    }
+
+    /// A partial replica sheds frames to its hot budget, redirects for
+    /// shed partitions, and re-admits a shed partition once repeated
+    /// misses prove it hot — all over the unchanged v7 sync protocol.
+    #[test]
+    fn partial_replica_sheds_and_readmits_by_demand() {
+        let store = store();
+        let n_parts = store.n_partitions();
+        let primary =
+            DataServiceServer::start(store.clone(), "127.0.0.1:0").unwrap();
+        // budget ≈ one frame: the replica can hold one partition hot
+        let frame = store.peek_frame(PartitionId(0)).unwrap();
+        let replica = DataServiceServer::start_replica_partial(
+            "127.0.0.1:0",
+            &primary.addr().to_string(),
+            Duration::from_secs(5),
+            frame.len() as u64 + 16,
+        )
+        .unwrap();
+        assert!(replica.wait_synced(Duration::from_secs(10)));
+        let held = replica.partition_ids();
+        assert!(
+            held.len() < n_parts,
+            "partial replica held everything: {held:?}"
+        );
+        assert!(
+            replica.stats().counter("partial_evictions").unwrap() > 0
+        );
+
+        // a shed partition redirects to the upstream
+        let shed = store
+            .partition_ids()
+            .into_iter()
+            .find(|id| !held.contains(id))
+            .expect("some partition was shed");
+        let mut c =
+            Transport::connect(replica.addr(), Duration::from_secs(5))
+                .unwrap();
+        for _ in 0..READMIT_AFTER {
+            let reply = c
+                .request(&Message::FetchPartition { id: shed })
+                .unwrap();
+            assert!(matches!(reply, Message::Redirect { .. }));
+        }
+
+        // the next heartbeat sync rounds re-admit the now-hot frame
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let reply = c
+                .request(&Message::FetchPartition { id: shed })
+                .unwrap();
+            match reply {
+                Message::Partition { data } => {
+                    assert_eq!(data.id, shed);
+                    break;
+                }
+                Message::Redirect { .. } => {
+                    assert!(
+                        Instant::now() < deadline,
+                        "shed partition was never re-admitted"
+                    );
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                other => panic!("unexpected {}", other.kind()),
+            }
+        }
+        // the budget still holds: something else was shed in its place
+        assert!(replica.partition_count() < n_parts);
+        replica.shutdown();
+        primary.shutdown();
     }
 
     /// A replica notices when its upstream goes away after sync.

@@ -22,7 +22,16 @@
 //! `batch` new ones — a single control round trip per batch instead of
 //! per task — and, while it chews through the batch, a node-wide
 //! **prefetcher** thread pulls the upcoming tasks' partitions into the
-//! shared cache, overlapping execution with data-plane fetches.
+//! shared cache, overlapping execution with data-plane fetches.  The
+//! prefetcher is **deadline-aware**: every queued task is stamped with
+//! a node-wide sequence number in `TaskAssignBatch` arrival order (the
+//! order workers will execute them), and the prefetcher always serves
+//! the lowest-stamped partition next ([`PrefetchQueue`]) — so the
+//! partition needed *soonest* is warmed first instead of whichever
+//! worker happened to enqueue first.  With a spill-backed data plane
+//! this matters twice: a fetch that faults on the primary is slow, and
+//! warming in execution order keeps those faults off the critical
+//! path.
 //!
 //! With a `task_memory_budget` the node enforces the paper's §3.1
 //! memory model (protocol v4): every assignment carries the task's
@@ -52,11 +61,11 @@ use crate::service::replica::ReplicaSelector;
 use crate::store::PartitionData;
 use crate::worker::{task_comparisons, PartitionCache, TaskExecutor};
 use anyhow::{bail, Context, Result};
-use std::collections::{HashMap, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::io;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 /// Configuration of one match-service node.
@@ -168,6 +177,102 @@ pub struct NodeReport {
     pub crashed: bool,
     /// The coordinator went away mid-run (treated as end of workflow).
     pub lost_coordinator: bool,
+    /// Partitions evicted from the node cache to stay under capacity
+    /// (`cache.evictions` — tells capacity thrash from cold misses).
+    pub cache_evictions: u64,
+    /// Cost-model bytes resident in the node cache at run end
+    /// (`cache.resident_bytes`).
+    pub cache_resident_bytes: u64,
+}
+
+/// Deadline-aware prefetch queue shared by the workers and the
+/// node-wide prefetcher thread.
+///
+/// Every task accepted from a `TaskAssignBatch` draws a node-wide
+/// [`PrefetchQueue::stamp`] in arrival order — the order the workers
+/// will execute them.  Workers push the queued tasks' partitions
+/// tagged with their task's stamp, and [`PrefetchQueue::pop`] always
+/// yields the lowest stamp first: the partition needed *soonest*
+/// across the whole node, not whichever worker enqueued first.
+struct PrefetchQueue {
+    seq: AtomicU64,
+    state: Mutex<PrefetchState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct PrefetchState {
+    /// Min-heap of `(assignment stamp, partition id)`.
+    heap: BinaryHeap<Reverse<(u64, u32)>>,
+    closed: bool,
+}
+
+/// What one [`PrefetchQueue::pop`] produced.
+enum PrefetchPop {
+    /// Warm this partition next (lowest outstanding stamp).
+    Job(PartitionId),
+    /// Timed out empty — caller re-checks liveness and tries again.
+    Idle,
+    /// Queue closed and drained: the run is over.
+    Closed,
+}
+
+impl PrefetchQueue {
+    fn new() -> PrefetchQueue {
+        PrefetchQueue {
+            seq: AtomicU64::new(0),
+            state: Mutex::new(PrefetchState::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Draw the next assignment stamp (one per accepted task, in
+    /// `TaskAssignBatch` arrival order).
+    fn stamp(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Queue `id` for prefetch on behalf of the task stamped `seq`.
+    fn push(&self, seq: u64, id: PartitionId) {
+        let mut s = crate::util::lock_poisonless(&self.state);
+        s.heap.push(Reverse((seq, id.0)));
+        self.cv.notify_one();
+    }
+
+    /// Pop the lowest-stamped partition, waiting up to `timeout` when
+    /// the queue is empty.
+    fn pop(&self, timeout: Duration) -> PrefetchPop {
+        let mut s = crate::util::lock_poisonless(&self.state);
+        loop {
+            if let Some(Reverse((_, id))) = s.heap.pop() {
+                return PrefetchPop::Job(PartitionId(id));
+            }
+            if s.closed {
+                return PrefetchPop::Closed;
+            }
+            let (guard, res) = self
+                .cv
+                .wait_timeout(s, timeout)
+                .unwrap_or_else(|e| e.into_inner());
+            s = guard;
+            if res.timed_out() {
+                return match s.heap.pop() {
+                    Some(Reverse((_, id))) => {
+                        PrefetchPop::Job(PartitionId(id))
+                    }
+                    None => PrefetchPop::Idle,
+                };
+            }
+        }
+    }
+
+    /// End of run: wake every popper; pops drain what is left, then
+    /// report [`PrefetchPop::Closed`].
+    fn close(&self) {
+        let mut s = crate::util::lock_poisonless(&self.state);
+        s.closed = true;
+        self.cv.notify_all();
+    }
 }
 
 /// A configured match-service node; [`MatchServiceNode::run`] blocks
@@ -286,11 +391,12 @@ pub fn run_match_node(
     let completed_total = AtomicUsize::new(0);
     let load = NodeLoad::default();
     let clock = system_clock();
-    // batch-mode prefetch channel: workers push the partitions of
-    // their *queued* tasks, the prefetcher warms the shared cache
-    let (prefetch_tx, prefetch_rx) =
-        std::sync::mpsc::channel::<PartitionId>();
-    let use_prefetch = cfg.batch > 1 && cfg.cache_capacity > 0;
+    // batch-mode prefetch queue: workers stamp their accepted tasks
+    // in assignment order and push the queued tasks' partitions; the
+    // prefetcher warms the shared cache lowest-stamp-first, i.e. in
+    // execution order, not first-come-first-served
+    let prefetch_queue = (cfg.batch > 1 && cfg.cache_capacity > 0)
+        .then(PrefetchQueue::new);
 
     let worker_results: Vec<Result<WorkerStats>> = std::thread::scope(|s| {
         // heartbeat thread: its own connection, stops on done/dead
@@ -299,16 +405,13 @@ pub fn run_match_node(
             heartbeat_loop(cfg, service, &done, &dead, &cache, &load)
         });
 
-        if use_prefetch {
+        if let Some(q) = prefetch_queue.as_ref() {
             let pcache = &cache;
             let pselector = &selector;
             let pdead = &dead;
             s.spawn(move || {
-                prefetch_loop(cfg, prefetch_rx, pselector, pcache, pdead)
+                prefetch_loop(cfg, q, pselector, pcache, pdead)
             });
-        } else {
-            // no receiver: worker sends become cheap no-op errors
-            drop(prefetch_rx);
         }
 
         let handles: Vec<_> = (0..cfg.threads)
@@ -325,21 +428,23 @@ pub fn run_match_node(
                     clock: clock.as_ref(),
                     tracer: cfg.tracer.as_deref(),
                 };
-                let tx = prefetch_tx.clone();
+                let q = prefetch_queue.as_ref();
                 s.spawn(move || {
                     if ctx.cfg.batch > 1 {
-                        worker_loop_batched(ctx, &tx)
+                        worker_loop_batched(ctx, q)
                     } else {
                         worker_loop(ctx)
                     }
                 })
             })
             .collect();
-        drop(prefetch_tx);
         let results = handles
             .into_iter()
             .map(|h| h.join().expect("match worker panicked"))
             .collect();
+        if let Some(q) = prefetch_queue.as_ref() {
+            q.close();
+        }
         done.store(true, Ordering::SeqCst);
         results
     });
@@ -362,6 +467,8 @@ pub fn run_match_node(
         busy_ns: Vec::new(),
         crashed,
         lost_coordinator: false,
+        cache_evictions: cache.evictions(),
+        cache_resident_bytes: cache.resident_bytes(),
     };
     for r in worker_results {
         let stats = r?;
@@ -619,11 +726,12 @@ fn worker_loop(ctx: WorkerCtx<'_>) -> Result<WorkerStats> {
 
 /// The protocol-v3 worker: pull up to `cfg.batch` tasks per round
 /// trip, report the whole previous batch's completions on the same
-/// frame, and feed the prefetcher the queued tasks' partitions so the
-/// data plane is warmed while the current task executes.
+/// frame, and feed the prefetcher the queued tasks' partitions —
+/// stamped in assignment order so the queue warms them in execution
+/// order — while the current task executes.
 fn worker_loop_batched(
     ctx: WorkerCtx<'_>,
-    prefetch: &Sender<PartitionId>,
+    prefetch: Option<&PrefetchQueue>,
 ) -> Result<WorkerStats> {
     let cfg = ctx.cfg;
     let service = ctx.service;
@@ -726,12 +834,20 @@ fn worker_loop_batched(
                         std::thread::sleep(cfg.poll_interval);
                         continue;
                     }
-                    // warm the cache for everything beyond the first
-                    // task while we execute it (send errors just mean
-                    // the prefetcher is off — cache disabled)
-                    for (t, _) in accepted.iter().skip(1) {
-                        for p in t.needed_partitions() {
-                            let _ = prefetch.send(p);
+                    // stamp the accepted tasks in assignment order
+                    // (node-wide sequence) and queue the partitions of
+                    // everything beyond the first for prefetch: the
+                    // first task is fetched inline immediately, the
+                    // rest get warmed soonest-needed-first
+                    if let Some(q) = prefetch {
+                        for (i, (t, _)) in accepted.iter().enumerate() {
+                            let seq = q.stamp();
+                            if i == 0 {
+                                continue;
+                            }
+                            for p in t.needed_partitions() {
+                                q.push(seq, p);
+                            }
                         }
                     }
                     queue.extend(accepted);
@@ -764,30 +880,32 @@ fn worker_loop_batched(
     Ok(stats)
 }
 
-/// Node-wide prefetcher (batch mode with a cache): receives partition
-/// ids of queued tasks and pulls the missing ones into the shared
-/// cache over its own data-plane connections, so a worker's next task
-/// usually starts with both partitions warm.  Failures are left for
-/// the workers' full fetch logic (failover, node teardown) — the
-/// prefetcher never kills anything, it only warms.
+/// Node-wide prefetcher (batch mode with a cache): pops the queued
+/// tasks' partitions in assignment order — the [`PrefetchQueue`]
+/// always yields the one needed soonest — and pulls the missing ones
+/// into the shared cache over its own data-plane connections, so a
+/// worker's next task usually starts with both partitions warm.
+/// Failures are left for the workers' full fetch logic (failover,
+/// node teardown) — the prefetcher never kills anything, it only
+/// warms.
 fn prefetch_loop(
     cfg: &MatchNodeConfig,
-    jobs: Receiver<PartitionId>,
+    jobs: &PrefetchQueue,
     selector: &ReplicaSelector,
     cache: &PartitionCache,
     dead: &AtomicBool,
 ) {
     let mut conns: HashMap<usize, Transport> = HashMap::new();
     loop {
-        let id = match jobs.recv_timeout(Duration::from_millis(50)) {
-            Ok(id) => id,
-            Err(RecvTimeoutError::Timeout) => {
+        let id = match jobs.pop(Duration::from_millis(50)) {
+            PrefetchPop::Job(id) => id,
+            PrefetchPop::Idle => {
                 if dead.load(Ordering::SeqCst) {
                     return;
                 }
                 continue;
             }
-            Err(RecvTimeoutError::Disconnected) => return,
+            PrefetchPop::Closed => return,
         };
         if dead.load(Ordering::SeqCst) {
             return;
@@ -969,6 +1087,43 @@ mod tests {
     };
     use crate::store::DataService;
     use crate::worker::RustExecutor;
+
+    /// The deadline-aware queue pops in assignment-stamp order no
+    /// matter the push order, drains before reporting idle/closed,
+    /// and `close` wakes blocked poppers.
+    #[test]
+    fn prefetch_queue_pops_in_assignment_order() {
+        let q = PrefetchQueue::new();
+        let s0 = q.stamp();
+        let s1 = q.stamp();
+        let s2 = q.stamp();
+        // pushed out of order (two workers racing)
+        q.push(s2, PartitionId(30));
+        q.push(s0, PartitionId(10));
+        q.push(s1, PartitionId(20));
+        let t = Duration::from_millis(10);
+        assert!(matches!(q.pop(t), PrefetchPop::Job(PartitionId(10))));
+        assert!(matches!(q.pop(t), PrefetchPop::Job(PartitionId(20))));
+        assert!(matches!(q.pop(t), PrefetchPop::Job(PartitionId(30))));
+        assert!(matches!(q.pop(t), PrefetchPop::Idle));
+        // close still drains what is left before reporting Closed
+        q.push(q.stamp(), PartitionId(40));
+        q.close();
+        assert!(matches!(q.pop(t), PrefetchPop::Job(PartitionId(40))));
+        assert!(matches!(q.pop(t), PrefetchPop::Closed));
+    }
+
+    #[test]
+    fn prefetch_queue_close_wakes_blocked_popper() {
+        let q = Arc::new(PrefetchQueue::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            q2.pop(Duration::from_secs(30))
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        q.close();
+        assert!(matches!(h.join().unwrap(), PrefetchPop::Closed));
+    }
 
     #[test]
     fn single_node_completes_a_small_workflow_over_tcp() {

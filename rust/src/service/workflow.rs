@@ -1182,7 +1182,16 @@ fn plan_submit(
         .next_partition_id
         .fetch_add(part_span as usize, Ordering::SeqCst)
         as u32;
-    host.store.extend(&host.dataset, &plan.partitions, part_off);
+    // a spill-backed store can fail here (disk full, I/O error) —
+    // refuse the plan instead of serving partitions that don't exist
+    if let Err(e) =
+        host.store.extend(&host.dataset, &plan.partitions, part_off)
+    {
+        return plan_refused(
+            shared,
+            format!("storing plan partitions failed: {e}"),
+        );
+    }
     let tenant =
         shared.next_tenant.fetch_add(1, Ordering::SeqCst) as u32;
     let sizes_by_plan_id = plan.task_sizes();

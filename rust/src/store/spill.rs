@@ -1,0 +1,545 @@
+//! Out-of-core partition storage: [`SpillStore`], a byte-budgeted hot
+//! set in RAM backed by one checksummed spill file per partition.
+//!
+//! # On-disk format (`part-<id>.spill`, version 1)
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  b"PEMSPIL1"
+//! 8       4     partition id            (u32 LE)
+//! 12      8     payload_bytes           (u64 LE, the cost-model size)
+//! 20      8     frame_len               (u64 LE)
+//! 28      8     FNV-1a 64 of the frame  (u64 LE)
+//! 36      …     frame                   (frame_len bytes)
+//! ```
+//!
+//! The `frame` is **exactly** the encoded `Message::Partition` wire
+//! frame ([`encode_partition_message`]) — the spill file *is* the
+//! bytes the TCP data server ships.  That buys two invariants for
+//! free: a fault re-materializes a frame byte-identical to what a
+//! resident store would serve (so the zero-copy
+//! `SessionEncoder::queue_shared` path is preserved across tiers), and
+//! the payload decoded from it round-trips through the same
+//! property-tested codec the wire already trusts.  Every fault
+//! re-verifies magic, id, length, and checksum before decoding; a
+//! mismatch is a typed [`StoreError::Corrupt`], never a panic.
+
+use crate::obs::{Counter, Histogram};
+use crate::partition::PartitionId;
+use crate::rpc::{encode_partition_message, Message};
+use crate::store::tier::{PartitionStore, StoreError, StoreStats};
+use crate::store::PartitionData;
+use crate::util::{fnv1a, lock_poisonless, read_poisonless, write_poisonless};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+/// Spill-file magic, bumped with the format.
+const SPILL_MAGIC: &[u8; 8] = b"PEMSPIL1";
+
+/// Bytes before the frame: magic + id + payload_bytes + frame_len +
+/// checksum.
+const SPILL_HEADER_BYTES: usize = 8 + 4 + 8 + 8 + 8;
+
+/// Monotone suffix for generated spill directories, so two stores in
+/// one process never collide.
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// What the index remembers per spilled partition; the payload itself
+/// lives on disk (and maybe in the hot set).
+struct IndexEntry {
+    /// The cost-model size (`PartitionData::approx_bytes`).
+    payload_bytes: u64,
+    /// On-disk size of the whole spill file.
+    file_bytes: u64,
+}
+
+/// One hot entry: decoded payload + encoded frame, both shared.
+struct HotEntry {
+    data: Arc<PartitionData>,
+    frame: Arc<Vec<u8>>,
+    /// LRU stamp: monotone, bumped on every touch.
+    stamp: u64,
+}
+
+struct HotSet {
+    map: HashMap<PartitionId, HotEntry>,
+    /// Sum of hot frame lengths — what the budget caps.
+    bytes: u64,
+    clock: u64,
+}
+
+/// A [`PartitionStore`] whose authority is on disk: every insert is
+/// persisted to a spill file, and at most `budget` bytes of frames are
+/// kept hot in RAM, evicted LRU.  A `get`/`encoded_frame` miss faults
+/// the file back in (verify → decode → re-admit), so a catalog far
+/// bigger than the budget still serves — out of core.
+pub struct SpillStore {
+    dir: PathBuf,
+    /// Generated temp dirs are removed on drop; operator-chosen dirs
+    /// are left alone.
+    owns_dir: bool,
+    budget: u64,
+    index: RwLock<HashMap<PartitionId, IndexEntry>>,
+    hot: Mutex<HotSet>,
+    hot_hits: Counter,
+    faults: Counter,
+    evictions: Counter,
+    spill_bytes: AtomicU64,
+    fault_ns: Histogram,
+}
+
+impl SpillStore {
+    /// A spill store keeping at most `budget` hot bytes, spilling to
+    /// `dir` (created if missing).  With `dir = None` a unique
+    /// directory under the OS temp dir is created and removed when the
+    /// store drops.
+    pub fn new(
+        budget: u64,
+        dir: Option<PathBuf>,
+    ) -> std::io::Result<SpillStore> {
+        let (dir, owns_dir) = match dir {
+            Some(d) => (d, false),
+            None => {
+                let seq = DIR_SEQ.fetch_add(1, Ordering::Relaxed);
+                (
+                    std::env::temp_dir().join(format!(
+                        "pem-spill-{}-{seq}",
+                        std::process::id()
+                    )),
+                    true,
+                )
+            }
+        };
+        std::fs::create_dir_all(&dir)?;
+        Ok(SpillStore {
+            dir,
+            owns_dir,
+            budget,
+            index: RwLock::new(HashMap::new()),
+            hot: Mutex::new(HotSet {
+                map: HashMap::new(),
+                bytes: 0,
+                clock: 0,
+            }),
+            hot_hits: Counter::new(),
+            faults: Counter::new(),
+            evictions: Counter::new(),
+            spill_bytes: AtomicU64::new(0),
+            fault_ns: Histogram::new(),
+        })
+    }
+
+    /// Where this store spills (one `part-<id>.spill` per partition).
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The hot-set byte budget this store was built with.
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    fn spill_path(&self, id: PartitionId) -> PathBuf {
+        self.dir.join(format!("part-{}.spill", id.0))
+    }
+
+    /// Serialize `frame` into its spill-file bytes.
+    fn file_bytes(
+        id: PartitionId,
+        payload_bytes: u64,
+        frame: &[u8],
+    ) -> Vec<u8> {
+        let mut out =
+            Vec::with_capacity(SPILL_HEADER_BYTES + frame.len());
+        out.extend_from_slice(SPILL_MAGIC);
+        out.extend_from_slice(&id.0.to_le_bytes());
+        out.extend_from_slice(&payload_bytes.to_le_bytes());
+        out.extend_from_slice(&(frame.len() as u64).to_le_bytes());
+        out.extend_from_slice(&fnv1a(frame).to_le_bytes());
+        out.extend_from_slice(frame);
+        out
+    }
+
+    /// Touch `id` in the hot set, bumping its LRU stamp.
+    fn hot_get(
+        &self,
+        id: PartitionId,
+    ) -> Option<(Arc<PartitionData>, Arc<Vec<u8>>)> {
+        let mut hot = lock_poisonless(&self.hot);
+        hot.clock += 1;
+        let stamp = hot.clock;
+        let e = hot.map.get_mut(&id)?;
+        e.stamp = stamp;
+        self.hot_hits.inc();
+        Some((e.data.clone(), e.frame.clone()))
+    }
+
+    /// Admit `id` to the hot set, evicting least-recently-used entries
+    /// until the budget holds.  A frame larger than the whole budget
+    /// is served without being admitted.
+    fn admit(
+        &self,
+        id: PartitionId,
+        data: Arc<PartitionData>,
+        frame: Arc<Vec<u8>>,
+    ) {
+        let incoming = frame.len() as u64;
+        let mut hot = lock_poisonless(&self.hot);
+        if let Some(old) = hot.map.remove(&id) {
+            hot.bytes -= old.frame.len() as u64;
+        }
+        if incoming > self.budget {
+            return;
+        }
+        while hot.bytes + incoming > self.budget {
+            let lru = hot
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(&p, _)| p);
+            let Some(victim) = lru else { break };
+            if let Some(e) = hot.map.remove(&victim) {
+                hot.bytes -= e.frame.len() as u64;
+                self.evictions.inc();
+            }
+        }
+        hot.clock += 1;
+        let stamp = hot.clock;
+        hot.bytes += incoming;
+        hot.map.insert(id, HotEntry { data, frame, stamp });
+    }
+
+    /// Read, verify, and decode the spill file of `id`.
+    fn fault(
+        &self,
+        id: PartitionId,
+    ) -> Result<(Arc<PartitionData>, Arc<Vec<u8>>), StoreError> {
+        if !read_poisonless(&self.index).contains_key(&id) {
+            return Err(StoreError::Unknown(id));
+        }
+        let t0 = Instant::now();
+        let raw = std::fs::read(self.spill_path(id)).map_err(|e| {
+            StoreError::Io {
+                id,
+                detail: e.to_string(),
+            }
+        })?;
+        let corrupt = |detail: &str| StoreError::Corrupt {
+            id,
+            detail: detail.to_string(),
+        };
+        if raw.len() < SPILL_HEADER_BYTES {
+            return Err(corrupt("file shorter than the header"));
+        }
+        if &raw[0..8] != SPILL_MAGIC {
+            return Err(corrupt("bad magic"));
+        }
+        let file_id =
+            u32::from_le_bytes(raw[8..12].try_into().unwrap());
+        if file_id != id.0 {
+            return Err(corrupt("partition id mismatch"));
+        }
+        let frame_len =
+            u64::from_le_bytes(raw[20..28].try_into().unwrap()) as usize;
+        if raw.len() != SPILL_HEADER_BYTES + frame_len {
+            return Err(corrupt("frame length mismatch"));
+        }
+        let checksum =
+            u64::from_le_bytes(raw[28..36].try_into().unwrap());
+        let frame = &raw[SPILL_HEADER_BYTES..];
+        if fnv1a(frame) != checksum {
+            return Err(corrupt("checksum mismatch"));
+        }
+        let msg = Message::decode(frame)
+            .map_err(|e| corrupt(&format!("undecodable frame: {e}")))?;
+        let Message::Partition { data } = msg else {
+            return Err(corrupt("frame is not a partition message"));
+        };
+        if data.id != id {
+            return Err(corrupt("decoded id mismatch"));
+        }
+        self.faults.inc();
+        self.fault_ns.observe(t0.elapsed().as_nanos() as u64);
+        let data = Arc::new(data);
+        let frame = Arc::new(frame.to_vec());
+        self.admit(id, data.clone(), frame.clone());
+        Ok((data, frame))
+    }
+}
+
+impl PartitionStore for SpillStore {
+    fn get(
+        &self,
+        id: PartitionId,
+    ) -> Result<Arc<PartitionData>, StoreError> {
+        if let Some((data, _)) = self.hot_get(id) {
+            return Ok(data);
+        }
+        self.fault(id).map(|(data, _)| data)
+    }
+
+    fn encoded_frame(
+        &self,
+        id: PartitionId,
+    ) -> Result<Arc<Vec<u8>>, StoreError> {
+        if let Some((_, frame)) = self.hot_get(id) {
+            return Ok(frame);
+        }
+        self.fault(id).map(|(_, frame)| frame)
+    }
+
+    fn payload_bytes(&self, id: PartitionId) -> Option<u64> {
+        read_poisonless(&self.index)
+            .get(&id)
+            .map(|e| e.payload_bytes)
+    }
+
+    fn ids(&self) -> Vec<PartitionId> {
+        let mut ids: Vec<PartitionId> = read_poisonless(&self.index)
+            .keys()
+            .copied()
+            .collect();
+        ids.sort_unstable_by_key(|p| p.0);
+        ids
+    }
+
+    fn insert(&self, data: Arc<PartitionData>) -> Result<(), StoreError> {
+        let id = data.id;
+        let frame = Arc::new(encode_partition_message(&data));
+        let file =
+            Self::file_bytes(id, data.approx_bytes, &frame);
+        let file_bytes = file.len() as u64;
+        std::fs::write(self.spill_path(id), file).map_err(|e| {
+            StoreError::Io {
+                id,
+                detail: e.to_string(),
+            }
+        })?;
+        let replaced = write_poisonless(&self.index).insert(
+            id,
+            IndexEntry {
+                payload_bytes: data.approx_bytes,
+                file_bytes,
+            },
+        );
+        if let Some(old) = replaced {
+            self.spill_bytes
+                .fetch_sub(old.file_bytes, Ordering::Relaxed);
+        }
+        self.spill_bytes.fetch_add(file_bytes, Ordering::Relaxed);
+        self.admit(id, data, frame);
+        Ok(())
+    }
+
+    fn stats(&self) -> StoreStats {
+        let hot_bytes = lock_poisonless(&self.hot).bytes;
+        StoreStats {
+            tier: self.tier(),
+            hot_hits: self.hot_hits.get(),
+            faults: self.faults.get(),
+            evictions: self.evictions.get(),
+            hot_bytes,
+            spill_bytes: self.spill_bytes.load(Ordering::Relaxed),
+            fault_ns: self.fault_ns.snapshot(),
+        }
+    }
+
+    fn tier(&self) -> &'static str {
+        "spill"
+    }
+}
+
+impl Drop for SpillStore {
+    fn drop(&mut self) {
+        if self.owns_dir {
+            let _ = std::fs::remove_dir_all(&self.dir);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::GeneratorConfig;
+    use crate::model::EntityId;
+    use crate::partition::partition_size_based;
+    use crate::store::tier::Resident;
+    use crate::store::DataService;
+    use crate::util::Rng;
+
+    /// A resident reference store and the same payloads in a
+    /// `SpillStore` with the given budget.
+    fn pair_with(
+        entities: usize,
+        max: usize,
+        budget: u64,
+    ) -> (Arc<Resident>, SpillStore, Vec<PartitionId>) {
+        let data = GeneratorConfig::tiny()
+            .with_entities(entities)
+            .generate();
+        let ids: Vec<EntityId> =
+            data.dataset.entities.iter().map(|e| e.id).collect();
+        let parts = partition_size_based(&ids, max);
+        let built = DataService::build(&data.dataset, &parts);
+        let resident = Arc::new(Resident::new());
+        let spill = SpillStore::new(budget, None).unwrap();
+        let mut pids = Vec::new();
+        for p in parts.iter() {
+            let d = built.fetch(p.id).expect("built partition");
+            resident.insert(d.clone()).unwrap();
+            spill.insert(d).unwrap();
+            pids.push(p.id);
+        }
+        pids.sort_unstable_by_key(|p| p.0);
+        (resident, spill, pids)
+    }
+
+    /// The satellite property test: under a tiny budget (forced
+    /// eviction on nearly every access), random fetch orders return
+    /// payloads and encoded frames **byte-identical** to the resident
+    /// store — eviction and re-materialization must be invisible.
+    #[test]
+    fn spill_random_orders_byte_identical_to_resident() {
+        // budget ≈ one partition: almost every get faults from disk
+        let (resident, spill, pids) = pair_with(300, 30, 4_096);
+        for seed in [1u64, 42, 2010] {
+            let mut rng = Rng::new(seed);
+            for _ in 0..200 {
+                let id = pids[rng.gen_range(pids.len())];
+                let want = resident.get(id).unwrap();
+                let got = spill.get(id).unwrap();
+                assert_eq!(got.id, want.id);
+                assert_eq!(got.entities, want.entities);
+                assert_eq!(got.approx_bytes, want.approx_bytes);
+                assert_eq!(
+                    *spill.encoded_frame(id).unwrap(),
+                    *resident.encoded_frame(id).unwrap(),
+                    "frame differs for {id} (seed {seed})"
+                );
+            }
+        }
+        let s = spill.stats();
+        assert!(s.faults > 0, "budget never forced a fault");
+        assert!(s.evictions > 0, "budget never forced an eviction");
+        assert!(s.spill_bytes > 0);
+        assert!(s.hot_bytes <= 4_096);
+        assert_eq!(s.fault_ns.count, s.faults);
+        assert_eq!(spill.ids(), pids);
+    }
+
+    #[test]
+    fn hot_set_respects_budget_and_serves_hot() {
+        let (_, spill, pids) = pair_with(120, 40, u64::MAX >> 1);
+        // everything fits hot: repeated gets never fault
+        for &id in &pids {
+            spill.get(id).unwrap();
+            spill.get(id).unwrap();
+        }
+        let s = spill.stats();
+        assert_eq!(s.faults, 0, "inserts pre-warm the hot set");
+        assert!(s.hot_hits >= 2 * pids.len() as u64);
+        assert!(s.hot_bytes > 0 && s.hot_bytes <= s.spill_bytes);
+    }
+
+    #[test]
+    fn zero_budget_store_faults_every_access() {
+        let (resident, spill, pids) = pair_with(120, 40, 0);
+        assert_eq!(spill.stats().hot_bytes, 0);
+        for &id in &pids {
+            assert_eq!(
+                *spill.encoded_frame(id).unwrap(),
+                *resident.encoded_frame(id).unwrap()
+            );
+        }
+        let s = spill.stats();
+        assert_eq!(s.faults, pids.len() as u64);
+        assert_eq!(s.hot_bytes, 0, "nothing may be admitted at 0");
+    }
+
+    /// The satellite corruption test: a flipped payload byte, a
+    /// truncated file, and a wrong-id header are all rejected with
+    /// typed `Corrupt` errors — never served, never a panic.
+    #[test]
+    fn corrupt_spill_files_are_rejected() {
+        let (_, spill, pids) = pair_with(120, 40, 0);
+        let id = pids[0];
+        let path = spill.spill_path(id);
+        let pristine = std::fs::read(&path).unwrap();
+
+        // flip one payload byte: checksum must catch it
+        let mut flipped = pristine.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x01;
+        std::fs::write(&path, &flipped).unwrap();
+        match spill.get(id) {
+            Err(StoreError::Corrupt { detail, .. }) => {
+                assert!(detail.contains("checksum"), "{detail}")
+            }
+            other => panic!("flipped byte served: {other:?}"),
+        }
+
+        // truncate mid-frame: length check must catch it
+        std::fs::write(&path, &pristine[..pristine.len() / 2]).unwrap();
+        assert!(matches!(
+            spill.get(id),
+            Err(StoreError::Corrupt { .. })
+        ));
+
+        // a file swapped in from another partition: id check
+        let other_path = spill.spill_path(pids[1]);
+        std::fs::copy(&other_path, &path).unwrap();
+        match spill.get(id) {
+            Err(StoreError::Corrupt { detail, .. }) => {
+                assert!(detail.contains("id mismatch"), "{detail}")
+            }
+            other => panic!("swapped file served: {other:?}"),
+        }
+
+        // a deleted file is Io, an id never inserted is Unknown
+        std::fs::remove_file(&path).unwrap();
+        assert!(matches!(spill.get(id), Err(StoreError::Io { .. })));
+        assert_eq!(
+            spill.get(PartitionId(99_999)).unwrap_err(),
+            StoreError::Unknown(PartitionId(99_999))
+        );
+
+        // restore: the store serves again (no wedged state)
+        std::fs::write(&path, &pristine).unwrap();
+        assert_eq!(spill.get(id).unwrap().id, id);
+    }
+
+    #[test]
+    fn generated_spill_dir_is_removed_on_drop() {
+        let (_, spill, pids) = pair_with(80, 40, 1024);
+        let dir = spill.dir().to_path_buf();
+        assert!(dir.exists());
+        assert!(!pids.is_empty());
+        drop(spill);
+        assert!(!dir.exists(), "owned spill dir must be cleaned up");
+    }
+
+    #[test]
+    fn operator_dir_survives_drop_and_reinsert_replaces() {
+        let base = std::env::temp_dir().join(format!(
+            "pem-spill-test-{}-keep",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&base);
+        {
+            let spill =
+                SpillStore::new(1024, Some(base.clone())).unwrap();
+            let (_, src, pids) = pair_with(80, 40, 0);
+            let d = src.get(pids[0]).unwrap();
+            spill.insert(d.clone()).unwrap();
+            let before = spill.stats().spill_bytes;
+            // re-insert replaces, not double-counts
+            spill.insert(d).unwrap();
+            assert_eq!(spill.stats().spill_bytes, before);
+        }
+        assert!(base.exists(), "operator-chosen dir must survive");
+        let _ = std::fs::remove_dir_all(&base);
+    }
+}

@@ -1,0 +1,631 @@
+//! Tiered partition storage: the [`PartitionStore`] trait and its
+//! in-memory backends.
+//!
+//! The data plane used to be welded to one layout — every partition's
+//! feature payload resident in a `HashMap` for the lifetime of the
+//! process, on the primary *and* on every replica.  This module opens
+//! that seam: [`DataService`](crate::store::DataService) now fronts an
+//! object-safe [`PartitionStore`], and the backend decides where the
+//! bytes live:
+//!
+//! * [`Resident`] — today's behavior: every payload in RAM, plus an
+//!   `Arc`-cached encoded wire frame per partition so the TCP fetch
+//!   path stays zero-copy ([`SessionEncoder::queue_shared`]).
+//! * [`SpillStore`](crate::store::SpillStore) — a byte-budgeted hot
+//!   set in RAM backed by per-partition spill files (strict on-disk
+//!   format, checksummed); see [`crate::store::spill`].
+//! * [`Layered`] — a *partial* hot set over any cold store, admitting
+//!   partitions by fetch frequency — the policy partial replicas run
+//!   at the frame level (see `service/data.rs`).
+//!
+//! Every backend serves byte-identical [`PartitionData`] and encoded
+//! frames for the same inserts — the spill property tests hold them to
+//! that — so swapping tiers can never change a match result.
+//!
+//! [`SessionEncoder::queue_shared`]: crate::rpc::session::SessionEncoder::queue_shared
+
+use crate::obs::{Counter, Histogram, HistogramSnapshot, MetricsSnapshot};
+use crate::partition::PartitionId;
+use crate::rpc::encode_partition_message;
+use crate::store::PartitionData;
+use crate::util::{lock_poisonless, read_poisonless, write_poisonless};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+/// Why a store could not produce a partition.  `Unknown` is the benign
+/// miss every caller must expect (a malformed remote request, a
+/// tenant id from another cluster); `Io`/`Corrupt` mean the spill tier
+/// lost or mangled bytes and the payload is *gone*, not just absent.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StoreError {
+    /// No partition with this id was ever inserted.
+    Unknown(PartitionId),
+    /// The backing file could not be read.
+    Io {
+        /// The partition whose spill file failed.
+        id: PartitionId,
+        /// OS-level error detail.
+        detail: String,
+    },
+    /// The backing file was read but failed validation (bad magic,
+    /// length mismatch, checksum mismatch, undecodable frame).
+    Corrupt {
+        /// The partition whose spill file failed validation.
+        id: PartitionId,
+        /// Which check failed.
+        detail: String,
+    },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Unknown(id) => {
+                write!(f, "unknown partition {id}")
+            }
+            StoreError::Io { id, detail } => {
+                write!(f, "partition {id}: spill read failed: {detail}")
+            }
+            StoreError::Corrupt { id, detail } => {
+                write!(f, "partition {id}: spill file corrupt: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+/// Point-in-time counters of one store tier, exported as `store.*`
+/// metrics (see `docs/OBSERVABILITY.md`).
+#[derive(Clone, Debug)]
+pub struct StoreStats {
+    /// Backend name: `resident`, `spill`, or `layered`.
+    pub tier: &'static str,
+    /// Reads served from the in-memory (hot) set.
+    pub hot_hits: u64,
+    /// Reads that had to re-materialize a payload from the cold tier.
+    pub faults: u64,
+    /// Hot-set entries evicted to stay under the byte budget.
+    pub evictions: u64,
+    /// Bytes currently held hot in RAM.
+    pub hot_bytes: u64,
+    /// Bytes currently written to spill files on disk.
+    pub spill_bytes: u64,
+    /// Latency of cold faults (file read + verify + decode), ns.
+    pub fault_ns: HistogramSnapshot,
+}
+
+impl StoreStats {
+    /// Render these stats as a mergeable [`MetricsSnapshot`] under the
+    /// `store.*` namespace — the shape `pem stats` scrapes.  Entry
+    /// names are emitted pre-sorted, as snapshot consumers require.
+    pub fn to_snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: vec![
+                ("store.evictions".into(), self.evictions),
+                ("store.faults".into(), self.faults),
+                ("store.hot_hits".into(), self.hot_hits),
+            ],
+            gauges: vec![
+                ("store.hot_bytes".into(), self.hot_bytes),
+                ("store.spill_bytes".into(), self.spill_bytes),
+            ],
+            histograms: vec![(
+                "store.fault_ns".into(),
+                self.fault_ns.clone(),
+            )],
+            labels: vec![("store.tier".into(), self.tier.to_string())],
+        }
+    }
+}
+
+/// Object-safe tiered storage for partition payloads.
+///
+/// Implementations are thread-safe and hand out `Arc`s, so a payload
+/// held hot is shared, never copied.  The contract every backend is
+/// tested against: for the same inserts, [`get`](PartitionStore::get)
+/// returns byte-identical payloads and
+/// [`encoded_frame`](PartitionStore::encoded_frame) byte-identical
+/// wire frames, whatever evicted in between.
+pub trait PartitionStore: Send + Sync {
+    /// The payload of `id`, faulting it in from the cold tier if it is
+    /// not hot.
+    fn get(
+        &self,
+        id: PartitionId,
+    ) -> Result<Arc<PartitionData>, StoreError>;
+
+    /// [`get`](PartitionStore::get) flattened to an `Option` for
+    /// callers that treat every failure as a miss.
+    fn try_get(&self, id: PartitionId) -> Option<Arc<PartitionData>> {
+        self.get(id).ok()
+    }
+
+    /// The encoded `Message::Partition` wire frame of `id`, shared by
+    /// `Arc` so the TCP serve path writes it without a copy.  Spill
+    /// tiers re-materialize the frame on fault — byte-identical, since
+    /// the spill file *is* the frame.
+    fn encoded_frame(
+        &self,
+        id: PartitionId,
+    ) -> Result<Arc<Vec<u8>>, StoreError>;
+
+    /// Serialized payload size of `id` without faulting it in (the
+    /// simulator charges transfer time from this), `None` if unknown.
+    fn payload_bytes(&self, id: PartitionId) -> Option<u64>;
+
+    /// All partition ids held (hot or cold), ascending.
+    fn ids(&self) -> Vec<PartitionId>;
+
+    /// Insert (or replace) a partition payload.  Spill tiers persist
+    /// it before returning; only I/O failure errors.
+    fn insert(&self, data: Arc<PartitionData>) -> Result<(), StoreError>;
+
+    /// Current tier counters.
+    fn stats(&self) -> StoreStats;
+
+    /// Backend name: `resident`, `spill`, or `layered`.
+    fn tier(&self) -> &'static str;
+}
+
+// ------------------------------------------------------------------
+// Resident
+// ------------------------------------------------------------------
+
+/// The classic backend: every payload in RAM for the lifetime of the
+/// store, encoded frames cached per partition on first serve.  This is
+/// exactly the pre-tiering `DataService` behavior, extracted behind
+/// the trait; it never faults and never evicts.
+#[derive(Default)]
+pub struct Resident {
+    partitions: RwLock<HashMap<PartitionId, Arc<PartitionData>>>,
+    frames: Mutex<HashMap<PartitionId, Arc<Vec<u8>>>>,
+    hot_hits: Counter,
+}
+
+impl Resident {
+    /// An empty resident store.
+    pub fn new() -> Resident {
+        Resident::default()
+    }
+}
+
+impl PartitionStore for Resident {
+    fn get(
+        &self,
+        id: PartitionId,
+    ) -> Result<Arc<PartitionData>, StoreError> {
+        let data = read_poisonless(&self.partitions)
+            .get(&id)
+            .cloned()
+            .ok_or(StoreError::Unknown(id))?;
+        self.hot_hits.inc();
+        Ok(data)
+    }
+
+    fn encoded_frame(
+        &self,
+        id: PartitionId,
+    ) -> Result<Arc<Vec<u8>>, StoreError> {
+        if let Some(frame) = lock_poisonless(&self.frames).get(&id) {
+            self.hot_hits.inc();
+            return Ok(frame.clone());
+        }
+        let data = read_poisonless(&self.partitions)
+            .get(&id)
+            .cloned()
+            .ok_or(StoreError::Unknown(id))?;
+        let frame = Arc::new(encode_partition_message(&data));
+        lock_poisonless(&self.frames).insert(id, frame.clone());
+        self.hot_hits.inc();
+        Ok(frame)
+    }
+
+    fn payload_bytes(&self, id: PartitionId) -> Option<u64> {
+        read_poisonless(&self.partitions)
+            .get(&id)
+            .map(|d| d.approx_bytes)
+    }
+
+    fn ids(&self) -> Vec<PartitionId> {
+        let mut ids: Vec<PartitionId> = read_poisonless(&self.partitions)
+            .keys()
+            .copied()
+            .collect();
+        ids.sort_unstable_by_key(|p| p.0);
+        ids
+    }
+
+    fn insert(&self, data: Arc<PartitionData>) -> Result<(), StoreError> {
+        let id = data.id;
+        write_poisonless(&self.partitions).insert(id, data);
+        // a replaced payload invalidates its cached frame
+        lock_poisonless(&self.frames).remove(&id);
+        Ok(())
+    }
+
+    fn stats(&self) -> StoreStats {
+        let hot_bytes: u64 = read_poisonless(&self.partitions)
+            .values()
+            .map(|d| d.approx_bytes)
+            .sum();
+        StoreStats {
+            tier: self.tier(),
+            hot_hits: self.hot_hits.get(),
+            faults: 0,
+            evictions: 0,
+            hot_bytes,
+            spill_bytes: 0,
+            fault_ns: HistogramSnapshot::default(),
+        }
+    }
+
+    fn tier(&self) -> &'static str {
+        "resident"
+    }
+}
+
+// ------------------------------------------------------------------
+// Layered
+// ------------------------------------------------------------------
+
+/// One hot entry of a [`Layered`] store: payload + wire frame, both
+/// shared, charged at the frame's byte size.
+struct LayeredEntry {
+    data: Arc<PartitionData>,
+    frame: Arc<Vec<u8>>,
+}
+
+struct LayeredHot {
+    map: HashMap<PartitionId, LayeredEntry>,
+    bytes: u64,
+    /// Faults per partition since startup — the admission signal.
+    freq: HashMap<PartitionId, u64>,
+}
+
+/// A byte-budgeted *partial* hot set over any cold store, admitted by
+/// per-partition fetch frequency: a partition enters the hot set once
+/// it has faulted [`Layered::ADMIT_AFTER`] times, and the
+/// least-frequently-fetched entries are evicted first when the budget
+/// overflows.  This is the PR 2 follow-up policy — replicas holding
+/// only the partitions their nodes actually pull — expressed as a
+/// store composition (the replica server applies the same policy to
+/// raw frames; see `service/data.rs`).
+pub struct Layered {
+    hot: Mutex<LayeredHot>,
+    budget: u64,
+    cold: Arc<dyn PartitionStore>,
+    hot_hits: Counter,
+    faults: Counter,
+    evictions: Counter,
+    fault_ns: Histogram,
+}
+
+impl Layered {
+    /// Faults before a partition is admitted to the hot set: the first
+    /// fetch only records interest, the second proves it is hot.
+    pub const ADMIT_AFTER: u64 = 2;
+
+    /// A layered store holding at most `budget` hot bytes over `cold`.
+    pub fn new(budget: u64, cold: Arc<dyn PartitionStore>) -> Layered {
+        Layered {
+            hot: Mutex::new(LayeredHot {
+                map: HashMap::new(),
+                bytes: 0,
+                freq: HashMap::new(),
+            }),
+            budget,
+            cold,
+            hot_hits: Counter::new(),
+            faults: Counter::new(),
+            evictions: Counter::new(),
+            fault_ns: Histogram::new(),
+        }
+    }
+
+    /// Fault `id` from the cold tier, bump its frequency, and admit it
+    /// to the hot set if it has earned residence.
+    fn fault(
+        &self,
+        id: PartitionId,
+    ) -> Result<(Arc<PartitionData>, Arc<Vec<u8>>), StoreError> {
+        let t0 = Instant::now();
+        let data = self.cold.get(id)?;
+        let frame = self.cold.encoded_frame(id)?;
+        self.faults.inc();
+        self.fault_ns.observe(t0.elapsed().as_nanos() as u64);
+        let mut hot = lock_poisonless(&self.hot);
+        let freq = hot.freq.entry(id).or_insert(0);
+        *freq += 1;
+        if *freq >= Self::ADMIT_AFTER {
+            self.admit(&mut hot, id, data.clone(), frame.clone());
+        }
+        Ok((data, frame))
+    }
+
+    /// Insert `id` hot, evicting least-frequently-fetched entries
+    /// until the budget holds.  An entry larger than the whole budget
+    /// is served but never admitted.
+    fn admit(
+        &self,
+        hot: &mut LayeredHot,
+        id: PartitionId,
+        data: Arc<PartitionData>,
+        frame: Arc<Vec<u8>>,
+    ) {
+        let incoming = frame.len() as u64;
+        if incoming > self.budget || hot.map.contains_key(&id) {
+            return;
+        }
+        while hot.bytes + incoming > self.budget {
+            let coldest = hot
+                .map
+                .keys()
+                .min_by_key(|p| {
+                    (hot.freq.get(*p).copied().unwrap_or(0), p.0)
+                })
+                .copied();
+            let Some(victim) = coldest else { break };
+            if let Some(e) = hot.map.remove(&victim) {
+                hot.bytes -= e.frame.len() as u64;
+                self.evictions.inc();
+            }
+        }
+        hot.bytes += incoming;
+        hot.map.insert(id, LayeredEntry { data, frame });
+    }
+
+    /// Ids currently held hot (the partial set), ascending — what a
+    /// partial replica would announce.
+    pub fn hot_ids(&self) -> Vec<PartitionId> {
+        let hot = lock_poisonless(&self.hot);
+        let mut ids: Vec<PartitionId> =
+            hot.map.keys().copied().collect();
+        ids.sort_unstable_by_key(|p| p.0);
+        ids
+    }
+}
+
+impl PartitionStore for Layered {
+    fn get(
+        &self,
+        id: PartitionId,
+    ) -> Result<Arc<PartitionData>, StoreError> {
+        if let Some(e) = lock_poisonless(&self.hot).map.get(&id) {
+            self.hot_hits.inc();
+            return Ok(e.data.clone());
+        }
+        self.fault(id).map(|(data, _)| data)
+    }
+
+    fn encoded_frame(
+        &self,
+        id: PartitionId,
+    ) -> Result<Arc<Vec<u8>>, StoreError> {
+        if let Some(e) = lock_poisonless(&self.hot).map.get(&id) {
+            self.hot_hits.inc();
+            return Ok(e.frame.clone());
+        }
+        self.fault(id).map(|(_, frame)| frame)
+    }
+
+    fn payload_bytes(&self, id: PartitionId) -> Option<u64> {
+        self.cold.payload_bytes(id)
+    }
+
+    fn ids(&self) -> Vec<PartitionId> {
+        self.cold.ids()
+    }
+
+    fn insert(&self, data: Arc<PartitionData>) -> Result<(), StoreError> {
+        // a replaced payload must not be served stale from the hot set
+        {
+            let mut hot = lock_poisonless(&self.hot);
+            if let Some(e) = hot.map.remove(&data.id) {
+                hot.bytes -= e.frame.len() as u64;
+            }
+        }
+        self.cold.insert(data)
+    }
+
+    fn stats(&self) -> StoreStats {
+        let hot_bytes = lock_poisonless(&self.hot).bytes;
+        StoreStats {
+            tier: self.tier(),
+            hot_hits: self.hot_hits.get(),
+            faults: self.faults.get(),
+            evictions: self.evictions.get(),
+            hot_bytes,
+            spill_bytes: self.cold.stats().spill_bytes,
+            fault_ns: self.fault_ns.snapshot(),
+        }
+    }
+
+    fn tier(&self) -> &'static str {
+        "layered"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::GeneratorConfig;
+    use crate::model::EntityId;
+    use crate::partition::partition_size_based;
+    use crate::store::DataService;
+
+    fn resident_with(
+        entities: usize,
+        max: usize,
+    ) -> (Arc<Resident>, Vec<PartitionId>) {
+        let data = GeneratorConfig::tiny()
+            .with_entities(entities)
+            .generate();
+        let ids: Vec<EntityId> =
+            data.dataset.entities.iter().map(|e| e.id).collect();
+        let parts = partition_size_based(&ids, max);
+        let store = DataService::build(&data.dataset, &parts);
+        let resident = Arc::new(Resident::new());
+        let mut pids = Vec::new();
+        for p in parts.iter() {
+            resident
+                .insert(store.fetch(p.id).expect("built partition"))
+                .unwrap();
+            pids.push(p.id);
+        }
+        pids.sort_unstable_by_key(|p| p.0);
+        (resident, pids)
+    }
+
+    #[test]
+    fn resident_serves_and_reports_unknown() {
+        let (store, pids) = resident_with(120, 40);
+        assert_eq!(store.ids(), pids);
+        for &id in &pids {
+            let d = store.get(id).unwrap();
+            assert_eq!(d.id, id);
+            assert_eq!(
+                store.payload_bytes(id),
+                Some(d.approx_bytes)
+            );
+            // the cached frame is exactly the encoder's output
+            let frame = store.encoded_frame(id).unwrap();
+            assert_eq!(*frame, encode_partition_message(&d));
+            // second serve returns the same Arc (cached, no re-encode)
+            assert!(Arc::ptr_eq(
+                &frame,
+                &store.encoded_frame(id).unwrap()
+            ));
+        }
+        let missing = PartitionId(9999);
+        assert_eq!(
+            store.get(missing).unwrap_err(),
+            StoreError::Unknown(missing)
+        );
+        assert!(store.try_get(missing).is_none());
+        assert_eq!(store.payload_bytes(missing), None);
+        let s = store.stats();
+        assert_eq!(s.tier, "resident");
+        assert_eq!(s.faults, 0);
+        assert!(s.hot_hits > 0);
+        assert!(s.hot_bytes > 0);
+    }
+
+    #[test]
+    fn resident_insert_invalidates_cached_frame() {
+        let (store, pids) = resident_with(80, 40);
+        let id = pids[0];
+        let before = store.encoded_frame(id).unwrap();
+        // replace the payload with a truncated copy of itself
+        let d = store.get(id).unwrap();
+        store.insert(Arc::new(d.slice(0, 1))).unwrap();
+        let after = store.encoded_frame(id).unwrap();
+        assert_ne!(*before, *after, "stale frame served after replace");
+        assert_eq!(
+            *after,
+            encode_partition_message(&store.get(id).unwrap())
+        );
+    }
+
+    /// PR 8 regression, re-homed with the backend: a panic while
+    /// holding the partition map must not wedge later reads.
+    #[test]
+    fn resident_poisoned_lock_recovers() {
+        let (store, pids) = resident_with(80, 40);
+        let s = store.clone();
+        assert!(std::thread::spawn(move || {
+            let _g = s.partitions.write().unwrap();
+            panic!("handler panics while holding the partition map");
+        })
+        .join()
+        .is_err());
+        let d = store.get(pids[0]).expect("read after poison");
+        assert_eq!(d.id, pids[0]);
+        assert_eq!(store.ids().len(), pids.len());
+    }
+
+    #[test]
+    fn layered_admits_by_frequency_and_holds_budget() {
+        let (cold, pids) = resident_with(200, 20);
+        assert!(pids.len() >= 4, "need several partitions");
+        let frame_len =
+            cold.encoded_frame(pids[0]).unwrap().len() as u64;
+        // room for roughly two average frames
+        let layered = Layered::new(frame_len * 2, cold.clone());
+
+        // first fetch: fault, not yet admitted
+        layered.get(pids[0]).unwrap();
+        assert!(layered.hot_ids().is_empty(), "admitted on 1st fault");
+        // second fetch: fault again (still cold), now admitted
+        layered.get(pids[0]).unwrap();
+        assert_eq!(layered.hot_ids(), vec![pids[0]]);
+        // third fetch is a hot hit
+        let before = layered.stats().hot_hits;
+        layered.get(pids[0]).unwrap();
+        assert_eq!(layered.stats().hot_hits, before + 1);
+
+        // heat every partition; the hot set must stay under budget
+        for _ in 0..2 {
+            for &id in &pids {
+                let d = layered.get(id).unwrap();
+                assert_eq!(d.id, id);
+            }
+        }
+        let s = layered.stats();
+        assert!(
+            s.hot_bytes <= frame_len * 2,
+            "hot {} over budget {}",
+            s.hot_bytes,
+            frame_len * 2
+        );
+        assert!(
+            layered.hot_ids().len() < pids.len(),
+            "a partial set must not hold everything"
+        );
+        assert!(s.evictions > 0, "budget pressure must evict");
+        assert!(s.faults > 0);
+        assert_eq!(s.fault_ns.count, s.faults);
+
+        // served bytes are identical to the cold tier, hot or not
+        for &id in &pids {
+            assert_eq!(
+                *layered.encoded_frame(id).unwrap(),
+                *cold.encoded_frame(id).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn layered_insert_drops_stale_hot_entry() {
+        let (cold, pids) = resident_with(80, 40);
+        let layered = Layered::new(u64::MAX, cold.clone());
+        let id = pids[0];
+        layered.get(id).unwrap();
+        layered.get(id).unwrap(); // admitted now
+        assert_eq!(layered.hot_ids(), vec![id]);
+        let replacement = layered.get(id).unwrap().slice(0, 1);
+        layered.insert(Arc::new(replacement)).unwrap();
+        // the hot copy is gone; the next get serves the new payload
+        let d = layered.get(id).unwrap();
+        assert_eq!(d.len(), 1);
+    }
+
+    #[test]
+    fn store_stats_snapshot_is_scrapable_and_merges() {
+        let (store, pids) = resident_with(80, 40);
+        store.get(pids[0]).unwrap();
+        let snap = store.stats().to_snapshot();
+        assert_eq!(snap.label("store.tier"), Some("resident"));
+        assert_eq!(snap.counter("store.hot_hits"), Some(1));
+        assert_eq!(snap.counter("store.faults"), Some(0));
+        assert!(snap.gauge("store.hot_bytes").unwrap() > 0);
+        assert!(snap.histogram("store.fault_ns").is_some());
+        // merging into a registry snapshot keeps both namespaces
+        let reg = crate::obs::Registry::new();
+        reg.counter("fetches_served").add(7);
+        let merged = reg.snapshot().merge(&snap);
+        assert_eq!(merged.counter("fetches_served"), Some(7));
+        assert_eq!(merged.counter("store.hot_hits"), Some(1));
+    }
+}

@@ -104,6 +104,12 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
         self.map.keys().cloned().collect()
     }
 
+    /// Iterate the cached values without touching recency or stats —
+    /// resident-size accounting reads payload sizes through this.
+    pub fn values(&self) -> impl Iterator<Item = &V> {
+        self.map.values().map(|(v, _)| v)
+    }
+
     pub fn clear(&mut self) {
         self.map.clear();
     }

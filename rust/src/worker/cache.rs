@@ -53,6 +53,23 @@ impl PartitionCache {
         self.inner.lock().unwrap().misses()
     }
 
+    /// Entries evicted to stay under capacity — with hits/misses this
+    /// tells cold-start misses from capacity thrash (`cache.evictions`).
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap().evictions()
+    }
+
+    /// Cost-model bytes currently held by cached payloads
+    /// (`cache.resident_bytes`).
+    pub fn resident_bytes(&self) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .values()
+            .map(|d| d.approx_bytes)
+            .sum()
+    }
+
     pub fn capacity(&self) -> usize {
         self.inner.lock().unwrap().capacity()
     }
@@ -87,6 +104,23 @@ mod tests {
         let mut st = c.status();
         st.sort();
         assert_eq!(st, vec![PartitionId(1)]);
+        assert_eq!(c.resident_bytes(), 100);
+        assert_eq!(c.evictions(), 0);
+    }
+
+    #[test]
+    fn eviction_and_residency_observability() {
+        let c = PartitionCache::new(2);
+        c.put(PartitionId(1), dummy(1));
+        c.put(PartitionId(2), dummy(2));
+        assert_eq!(c.resident_bytes(), 200);
+        c.put(PartitionId(3), dummy(3)); // capacity thrash
+        assert_eq!(c.evictions(), 1);
+        // resident bytes track the *current* payloads, not history
+        assert_eq!(c.resident_bytes(), 200);
+        c.clear();
+        assert_eq!(c.resident_bytes(), 0);
+        assert_eq!(c.evictions(), 1, "history survives clear");
     }
 
     #[test]

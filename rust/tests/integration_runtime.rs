@@ -59,8 +59,8 @@ fn manifest_lists_both_strategies() {
 fn pjrt_runs_and_scores_in_range() {
     let Some(engine) = engine_or_skip() else { return };
     let (_, store) = store_with(50, 100);
-    let left = store.fetch(PartitionId(0));
-    let right = store.fetch(PartitionId(1));
+    let left = store.fetch(PartitionId(0)).unwrap();
+    let right = store.fetch(PartitionId(1)).unwrap();
     for kind in [StrategyKind::Wam, StrategyKind::Lrm] {
         let params = MatchStrategy::new(kind).params.values;
         let (sims, cap) = engine
@@ -89,7 +89,7 @@ fn pjrt_scores_correlate_with_rust_matchers() {
     // *confident* exact-path match is found by the accelerated path.
     let Some(engine) = engine_or_skip() else { return };
     let (_, store) = store_with(100, 100);
-    let p = store.fetch(PartitionId(0));
+    let p = store.fetch(PartitionId(0)).unwrap();
     for kind in [StrategyKind::Wam, StrategyKind::Lrm] {
         let strategy = MatchStrategy::new(kind);
         // continuous scores: for WAM pass margin=1.0 so the in-graph
@@ -162,7 +162,7 @@ fn pjrt_scores_correlate_with_rust_matchers() {
 fn pjrt_intra_task_finds_duplicates() {
     let Some(engine) = engine_or_skip() else { return };
     let (data, store) = store_with(120, 120);
-    let p = store.fetch(PartitionId(0));
+    let p = store.fetch(PartitionId(0)).unwrap();
     let strategy = MatchStrategy::new(StrategyKind::Wam);
     let pjrt = PjrtExecutor::new(engine, strategy);
     let found = pjrt.execute(&p, &p, true);
@@ -189,7 +189,7 @@ fn pjrt_capacity_selection_pads_correctly() {
     let Some(engine) = engine_or_skip() else { return };
     // 130 entities forces the 256-capacity artifact
     let (_, store) = store_with(130, 130);
-    let p = store.fetch(PartitionId(0));
+    let p = store.fetch(PartitionId(0)).unwrap();
     let params = MatchStrategy::new(StrategyKind::Wam).params.values;
     let (sims, cap) = engine
         .run_pair(StrategyKind::Wam, params, &p, &p)
