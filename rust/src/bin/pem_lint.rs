@@ -1,0 +1,146 @@
+//! `pem_lint` — run the project-native invariant analyzer over the
+//! tree.
+//!
+//! ```text
+//! pem_lint [--root <repo-root>] [--write-baseline]
+//! ```
+//!
+//! Walks every `.rs` file under `<root>/rust/src` (or `<root>/src`),
+//! checks invariants L1–L5 (see `docs/STATIC_ANALYSIS.md`), prints
+//! each violation as `L2 worker/cache.rs:26 <detail>` and exits 1 if
+//! any fired.  Warnings (a stale L5 baseline) go to stderr and do not
+//! fail the run.  `--write-baseline` regenerates
+//! `<root>/scripts/lint_baseline.txt` from the current tree instead
+//! of checking — use it only to lock in a *shrink*.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use pem::lint::{self, LintInput, ScannedFile};
+
+/// Collect every `.rs` file under `dir`, sorted by path for stable
+/// output.
+fn rust_files(dir: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        for entry in std::fs::read_dir(&d)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn scan_tree(src_root: &Path) -> std::io::Result<Vec<ScannedFile>> {
+    let mut files = Vec::new();
+    for path in rust_files(src_root)? {
+        let rel = path
+            .strip_prefix(src_root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(&path)?;
+        files.push(ScannedFile::scan(&rel, &src));
+    }
+    Ok(files)
+}
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut write_baseline = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => {
+                    eprintln!("pem_lint: --root needs a directory");
+                    return ExitCode::from(2);
+                }
+            },
+            "--write-baseline" => write_baseline = true,
+            "--help" | "-h" => {
+                println!(
+                    "usage: pem_lint [--root <repo-root>] \
+                     [--write-baseline]"
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("pem_lint: unknown argument {other}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let src_root = if root.join("rust/src").is_dir() {
+        root.join("rust/src")
+    } else if root.join("src").is_dir() {
+        root.join("src")
+    } else {
+        eprintln!(
+            "pem_lint: no rust/src or src under {}",
+            root.display()
+        );
+        return ExitCode::from(2);
+    };
+
+    let files = match scan_tree(&src_root) {
+        Ok(files) => files,
+        Err(e) => {
+            eprintln!("pem_lint: scanning {}: {e}", src_root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    let baseline_path = root.join("scripts/lint_baseline.txt");
+    if write_baseline {
+        let text = lint::format_baseline(&lint::panic_sites(&files));
+        if let Err(e) = std::fs::write(&baseline_path, &text) {
+            eprintln!(
+                "pem_lint: writing {}: {e}",
+                baseline_path.display()
+            );
+            return ExitCode::from(2);
+        }
+        println!("wrote {}", baseline_path.display());
+        return ExitCode::SUCCESS;
+    }
+
+    let wire_doc = std::fs::read_to_string(root.join(lint::WIRE_DOC)).ok();
+    let obs_doc = std::fs::read_to_string(root.join(lint::OBS_DOC)).ok();
+    let baseline = std::fs::read_to_string(&baseline_path).ok();
+
+    let report = lint::run(&LintInput {
+        files,
+        wire_doc: wire_doc.as_deref(),
+        obs_doc: obs_doc.as_deref(),
+        baseline: baseline.as_deref(),
+    });
+
+    for warning in &report.warnings {
+        eprintln!("warning: {warning}");
+    }
+    if report.violations.is_empty() {
+        println!(
+            "pem_lint: clean ({} warnings)",
+            report.warnings.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        for v in &report.violations {
+            println!("{v}");
+        }
+        println!(
+            "pem_lint: {} violation(s) — see docs/STATIC_ANALYSIS.md",
+            report.violations.len()
+        );
+        ExitCode::FAILURE
+    }
+}

@@ -24,11 +24,11 @@ use crate::engine::backend::{
 use crate::engine::CostParams;
 use crate::matching::{MatchStrategy, StrategyKind};
 use crate::net::CostModel;
+use crate::obs::Stopwatch;
 use crate::partition::{
     PartitionSet, PartitionStrategy, PlanContext,
 };
 use anyhow::Result;
-use std::time::Instant;
 
 pub use super::builder::RunOutcome;
 pub use crate::partition::strategy::{default_max_size, default_min_size};
@@ -254,7 +254,7 @@ pub fn run_workflow(
     cfg: &WorkflowConfig,
     ce: &ComputingEnv,
 ) -> Result<WorkflowOutcome> {
-    let started = Instant::now();
+    let started = Stopwatch::start();
     let mut out = super::Workflow::for_dataset(dataset)
         .match_strategy(cfg.strategy)
         .strategy_boxed(cfg.partitioning.to_strategy())

@@ -11,8 +11,8 @@ use super::CostParams;
 use crate::features::EntityFeatures;
 use crate::matching::{MatchStrategy, StrategyKind};
 use crate::model::Dataset;
+use crate::obs::Stopwatch;
 use crate::util::Rng;
-use std::time::Instant;
 
 /// Measured calibration result.
 #[derive(Clone, Copy, Debug)]
@@ -54,7 +54,7 @@ pub fn calibrate(
         }
     }
 
-    let start = Instant::now();
+    let start = Stopwatch::start();
     let mut pairs = 0u64;
     for i in 0..feats.len() {
         for j in (i + 1)..feats.len() {
@@ -62,7 +62,7 @@ pub fn calibrate(
             pairs += 1;
         }
     }
-    let elapsed = start.elapsed().as_nanos() as f64;
+    let elapsed = start.elapsed_ns() as f64;
     Calibration {
         strategy,
         pair_ns: elapsed / pairs.max(1) as f64,

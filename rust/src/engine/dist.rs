@@ -41,7 +41,7 @@ use crate::store::DataService;
 use crate::worker::TaskExecutor;
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Distributed-engine configuration.
 #[derive(Clone, Debug)]
@@ -407,7 +407,7 @@ pub fn run(
         )
         .with_context(|| format!("announcing data server {addr}"))?;
     }
-    let start = Instant::now();
+    let start = crate::obs::Stopwatch::start();
 
     let node_handles: Vec<_> = (0..ce.nodes)
         .map(|i| {
@@ -443,7 +443,7 @@ pub fn run(
         .collect();
 
     let status = wf_srv.wait_outcome(cfg.run_timeout);
-    let elapsed = start.elapsed().as_nanos() as u64;
+    let elapsed = start.elapsed_ns();
     let done = matches!(status, WaitStatus::Done);
     if !done {
         // timeout or §3.1 misfit — tear the wire down *before* joining

@@ -14,12 +14,12 @@ use crate::cluster::ComputingEnv;
 use crate::coordinator::scheduler::{Policy, Scheduler, ServiceId};
 use crate::metrics::RunMetrics;
 use crate::model::Correspondence;
-use crate::obs::{TraceEventKind, Tracer};
+use crate::obs::{Stopwatch, TraceEventKind, Tracer};
 use crate::partition::{MatchTask, PartitionSet};
 use crate::store::DataService;
+use crate::util::lock_poisonless;
 use crate::worker::{task_comparisons, PartitionCache, TaskExecutor};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
 /// Thread-engine configuration.
 pub struct ThreadConfig {
@@ -72,11 +72,11 @@ pub fn run(
         .map(|_| Arc::new(PartitionCache::new(cfg.cache_capacity)))
         .collect();
     for i in 0..ce.nodes {
-        scheduler.lock().unwrap().add_service(ServiceId(i));
+        lock_poisonless(&scheduler).add_service(ServiceId(i));
     }
 
     let n_threads = ce.total_threads();
-    let start = Instant::now();
+    let start = Stopwatch::start();
     let results: Mutex<Vec<Correspondence>> = Mutex::new(Vec::new());
     let comparisons = std::sync::atomic::AtomicU64::new(0);
     let done_tasks = std::sync::atomic::AtomicU64::new(0);
@@ -96,20 +96,20 @@ pub fn run(
             scope.spawn(move || {
                 loop {
                     let task = {
-                        let mut s = scheduler.lock().unwrap();
+                        let mut s = lock_poisonless(&scheduler);
                         s.next_task(ServiceId(node))
                     };
                     let Some(task) = task else {
                         // open list empty: if everything completed, stop;
                         // otherwise wait for potential requeues
-                        let done = scheduler.lock().unwrap().is_done();
+                        let done = lock_poisonless(&scheduler).is_done();
                         if done {
                             break;
                         }
                         std::thread::yield_now();
                         // re-check: remaining-but-in-flight tasks may
                         // finish without reopening; exit when done
-                        let s = scheduler.lock().unwrap();
+                        let s = lock_poisonless(&scheduler);
                         if s.is_done() || s.remaining() == 0 {
                             break;
                         }
@@ -120,7 +120,7 @@ pub fn run(
                         continue;
                     };
 
-                    let t0 = Instant::now();
+                    let t0 = Stopwatch::start();
                     // fetch through the service cache
                     let fetch = |pid| match cache.get(pid) {
                         Some(d) => d,
@@ -163,11 +163,11 @@ pub fn run(
                     done_tasks
                         .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     busy[thread].fetch_add(
-                        t0.elapsed().as_nanos() as u64,
+                        t0.elapsed_ns(),
                         std::sync::atomic::Ordering::Relaxed,
                     );
-                    results.lock().unwrap().extend(found);
-                    scheduler.lock().unwrap().report_complete(
+                    lock_poisonless(results).extend(found);
+                    lock_poisonless(&scheduler).report_complete(
                         ServiceId(node),
                         task.id,
                         cache.status(),
@@ -177,8 +177,8 @@ pub fn run(
         }
     });
 
-    let elapsed = start.elapsed().as_nanos() as u64;
-    let sched = scheduler.lock().unwrap();
+    let elapsed = start.elapsed_ns();
+    let sched = lock_poisonless(&scheduler);
     assert!(sched.is_done(), "thread engine finished incomplete");
     let correspondences = results.into_inner().unwrap();
     let metrics = RunMetrics {
@@ -387,5 +387,42 @@ mod tests {
             norm(&thread_out.correspondences),
             norm(&sim_out.correspondences)
         );
+    }
+
+    /// Wedge regression (PR 8 bug class, now lint-enforced as L2): a
+    /// worker that panics while holding the scheduler lock poisons the
+    /// mutex, and every `.lock().unwrap()` after that would wedge the
+    /// whole engine.  The scheduler path goes through
+    /// `lock_poisonless`, so a poisoned scheduler keeps dispatching.
+    #[test]
+    fn poisoned_scheduler_mutex_keeps_dispatching() {
+        let (_, _parts, tasks, _store) = setup(100, 20);
+        let n_tasks = tasks.len();
+        let scheduler =
+            Arc::new(Mutex::new(Scheduler::new(tasks, Policy::Affinity)));
+        // poison the mutex: panic while holding the guard
+        let poisoner = Arc::clone(&scheduler);
+        std::thread::spawn(move || {
+            let _guard = poisoner.lock().unwrap();
+            panic!("deliberate poison");
+        })
+        .join()
+        .unwrap_err();
+        assert!(scheduler.is_poisoned());
+        // the engine's scheduler path still works end to end
+        lock_poisonless(&scheduler).add_service(ServiceId(0));
+        let mut completed = 0usize;
+        while let Some(task) =
+            lock_poisonless(&scheduler).next_task(ServiceId(0))
+        {
+            lock_poisonless(&scheduler).report_complete(
+                ServiceId(0),
+                task.id,
+                Vec::new(),
+            );
+            completed += 1;
+        }
+        assert_eq!(completed, n_tasks);
+        assert!(lock_poisonless(&scheduler).is_done());
     }
 }

@@ -78,6 +78,7 @@ pub mod datagen;
 pub mod engine;
 pub mod features;
 pub mod io;
+pub mod lint;
 pub mod matching;
 pub mod metrics;
 pub mod model;

@@ -1,0 +1,1076 @@
+//! `pem-lint`: the project-native invariant analyzer.
+//!
+//! Five invariants, grown one per PR and previously enforced only by
+//! reviewer memory, are machine-checked here (and on every commit by
+//! the `lint-invariants` CI job — `cargo run --bin pem_lint`):
+//!
+//! * **L1 clock-discipline** — no `Instant::now()` /
+//!   `SystemTime::now()` outside `obs/clock.rs`, `bench/` (which
+//!   measures wall time by design) and `#[cfg(test)]` code.  Time
+//!   flows through [`crate::obs::Clock`] / [`crate::obs::Stopwatch`].
+//! * **L2 poison-safety** — no `.lock().unwrap()` (or the `RwLock`
+//!   equivalents) in non-test code; locks go through
+//!   `util::{lock,read,write}_poisonless` so one panicked holder
+//!   cannot wedge every other tenant (the PR 8 bug class).
+//! * **L3 wire-conformance** — the `TAG_*` frame-tag constants in
+//!   `rpc/mod.rs` are unique and agree, bidirectionally, with the tag
+//!   tables in `docs/WIRE_PROTOCOL.md`.
+//! * **L4 metrics-conformance** — every metric-name literal the code
+//!   registers appears in `docs/OBSERVABILITY.md`'s metric catalog,
+//!   and vice versa.
+//! * **L5 no-panic server paths** — `panic!` / `.unwrap()` /
+//!   `.expect(` in non-test `service/`, `rpc/`, `net/`, `store/` code
+//!   is held to the committed baseline `scripts/lint_baseline.txt`,
+//!   which may only shrink.
+//!
+//! The scanner these run over is [`source::ScannedFile`] — masking,
+//! not parsing; see that module.  `docs/STATIC_ANALYSIS.md` is the
+//! operator-facing catalog.
+
+pub mod source;
+
+pub use source::ScannedFile;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+/// One finding.  `line` is 0 for findings that are not anchored to a
+/// source line (doc drift, baseline bookkeeping).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    /// Which invariant fired: `"L1"` … `"L5"`.
+    pub lint: &'static str,
+    /// Source-root-relative path (or a doc path for drift findings).
+    pub path: String,
+    /// 1-based line, 0 when not line-anchored.
+    pub line: usize,
+    /// Human explanation, including the fix.
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.line > 0 {
+            write!(
+                f,
+                "{} {}:{} {}",
+                self.lint, self.path, self.line, self.detail
+            )
+        } else {
+            write!(f, "{} {} {}", self.lint, self.path, self.detail)
+        }
+    }
+}
+
+/// Everything one lint run produced: hard failures plus non-fatal
+/// warnings (stale baseline entries).
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// Findings that fail the run.
+    pub violations: Vec<Violation>,
+    /// Non-fatal notices (e.g. a baseline entry the tree has already
+    /// improved past — regenerate with `--write-baseline`).
+    pub warnings: Vec<String>,
+}
+
+// ------------------------------------------------------------- L1
+
+/// The one file allowed to touch `Instant`/`SystemTime` directly.
+pub const CLOCK_FILE: &str = "obs/clock.rs";
+/// Directory allowed to measure wall time directly: the bench harness
+/// exists to time real execution (and stamps `created_unix` via
+/// `SystemTime`).
+pub const BENCH_DIR: &str = "bench/";
+
+/// L1 clock-discipline: direct time reads outside the sanctioned
+/// places.
+pub fn check_clock_discipline(files: &[ScannedFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for f in files {
+        if f.rel == CLOCK_FILE || f.rel.starts_with(BENCH_DIR) {
+            continue;
+        }
+        for pat in ["Instant::now()", "SystemTime::now()"] {
+            for k in f.find_all(pat) {
+                out.push(Violation {
+                    lint: "L1",
+                    path: f.rel.clone(),
+                    line: f.line_of(k),
+                    detail: format!(
+                        "{pat} in non-test code — route time through \
+                         obs::Clock or obs::Stopwatch"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------- L2
+
+/// L2 poison-safety: raw lock-unwraps in non-test code.
+pub fn check_poison_safety(files: &[ScannedFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let fixes = [
+        (".lock().unwrap()", "util::lock_poisonless"),
+        (".read().unwrap()", "util::read_poisonless"),
+        (".write().unwrap()", "util::write_poisonless"),
+    ];
+    for f in files {
+        for (pat, fix) in fixes {
+            for k in f.find_all(pat) {
+                out.push(Violation {
+                    lint: "L2",
+                    path: f.rel.clone(),
+                    line: f.line_of(k),
+                    detail: format!(
+                        "{pat} in non-test code — use {fix} so a \
+                         poisoned lock recovers instead of wedging"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------- L3
+
+/// Where the frame-tag constants live.
+pub const RPC_FILE: &str = "rpc/mod.rs";
+/// The wire-protocol spec the tags must agree with.
+pub const WIRE_DOC: &str = "docs/WIRE_PROTOCOL.md";
+
+/// `TAG_JOIN_ACK` → `JoinAck` (the name the spec tables use).
+fn tag_doc_name(tag_ident: &str) -> String {
+    tag_ident
+        .split('_')
+        .map(|part| {
+            let mut chars = part.chars();
+            match chars.next() {
+                Some(first) => {
+                    first.to_ascii_uppercase().to_string()
+                        + &chars.as_str().to_ascii_lowercase()
+                }
+                None => String::new(),
+            }
+        })
+        .collect()
+}
+
+/// Frame tags declared in code: `(doc-style name, tag value, line)`,
+/// parsed from `const TAG_<IDENT>: u8 = <N>;` items.
+pub fn wire_tags(rpc: &ScannedFile) -> Vec<(String, u8, usize)> {
+    let mut out = Vec::new();
+    let bytes = rpc.cond.as_bytes();
+    for k in rpc.find_all("constTAG_") {
+        let mut j = k + "constTAG_".len();
+        let ident_start = j;
+        while j < bytes.len()
+            && (bytes[j].is_ascii_alphanumeric() || bytes[j] == b'_')
+        {
+            j += 1;
+        }
+        let ident = &rpc.cond[ident_start..j];
+        if !rpc.cond[j..].starts_with(":u8=") {
+            continue;
+        }
+        j += ":u8=".len();
+        let num_start = j;
+        while j < bytes.len() && bytes[j].is_ascii_digit() {
+            j += 1;
+        }
+        if j == num_start || !rpc.cond[j..].starts_with(';') {
+            continue;
+        }
+        let Ok(value) = rpc.cond[num_start..j].parse::<u8>() else {
+            continue;
+        };
+        out.push((tag_doc_name(ident), value, rpc.line_of(k)));
+    }
+    out
+}
+
+/// Extract the text between the first pair of backticks in `cell`.
+fn backticked(cell: &str) -> Option<&str> {
+    let open = cell.find('`')?;
+    let rest = &cell[open + 1..];
+    let close = rest.find('`')?;
+    Some(&rest[..close])
+}
+
+/// Tag rows of the spec's tables: any markdown table row whose first
+/// cell is a number and whose second cell is a backticked frame name.
+pub fn doc_wire_tags(doc: &str) -> Vec<(u8, String)> {
+    let mut out = Vec::new();
+    for line in doc.lines() {
+        let line = line.trim();
+        if !line.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<&str> = line.split('|').map(str::trim).collect();
+        // split of "| a | b |" yields ["", "a", "b", ""]
+        if cells.len() < 3 {
+            continue;
+        }
+        let Ok(tag) = cells[1].parse::<u8>() else {
+            continue;
+        };
+        if let Some(name) = backticked(cells[2]) {
+            out.push((tag, name.to_string()));
+        }
+    }
+    out
+}
+
+/// L3 wire-conformance: tags unique, documented, and nothing phantom
+/// in the docs.
+pub fn check_wire_conformance(
+    rpc: &ScannedFile,
+    doc: &str,
+) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let code = wire_tags(rpc);
+    if code.is_empty() {
+        out.push(Violation {
+            lint: "L3",
+            path: rpc.rel.clone(),
+            line: 0,
+            detail: "no `const TAG_*: u8` frame tags found — scanner \
+                     and rpc module have drifted apart"
+                .into(),
+        });
+        return out;
+    }
+    let mut by_value: BTreeMap<u8, (String, usize)> = BTreeMap::new();
+    for (name, value, line) in &code {
+        if let Some((prev, prev_line)) = by_value.get(value) {
+            out.push(Violation {
+                lint: "L3",
+                path: rpc.rel.clone(),
+                line: *line,
+                detail: format!(
+                    "tag {value} ({name}) duplicates {prev} \
+                     (line {prev_line})"
+                ),
+            });
+        } else {
+            by_value.insert(*value, (name.clone(), *line));
+        }
+    }
+    let mut doc_by_value: BTreeMap<u8, String> = BTreeMap::new();
+    for (value, name) in doc_wire_tags(doc) {
+        if let Some(prev) = doc_by_value.get(&value) {
+            if *prev != name {
+                out.push(Violation {
+                    lint: "L3",
+                    path: WIRE_DOC.into(),
+                    line: 0,
+                    detail: format!(
+                        "tag {value} documented twice with different \
+                         names: {prev} and {name}"
+                    ),
+                });
+            }
+        } else {
+            doc_by_value.insert(value, name);
+        }
+    }
+    for (value, (name, line)) in &by_value {
+        match doc_by_value.get(value) {
+            None => out.push(Violation {
+                lint: "L3",
+                path: rpc.rel.clone(),
+                line: *line,
+                detail: format!(
+                    "tag {value} ({name}) is not documented in \
+                     {WIRE_DOC}"
+                ),
+            }),
+            Some(doc_name) if doc_name != name => out.push(Violation {
+                lint: "L3",
+                path: rpc.rel.clone(),
+                line: *line,
+                detail: format!(
+                    "tag {value} is {name} in code but {doc_name} in \
+                     {WIRE_DOC}"
+                ),
+            }),
+            Some(_) => {}
+        }
+    }
+    for (value, doc_name) in &doc_by_value {
+        if !by_value.contains_key(value) {
+            out.push(Violation {
+                lint: "L3",
+                path: WIRE_DOC.into(),
+                line: 0,
+                detail: format!(
+                    "documents tag {value} ({doc_name}) which does not \
+                     exist in {}",
+                    rpc.rel
+                ),
+            });
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------- L4
+
+/// The metrics catalog the code-side names must agree with.
+pub const OBS_DOC: &str = "docs/OBSERVABILITY.md";
+
+/// Normalize a code-side metric-name literal: every `{…}` format
+/// argument becomes `<*>` (`tenant.{id}.state` → `tenant.<*>.state`).
+pub fn normalize_code_name(lit: &str) -> String {
+    let mut out = String::with_capacity(lit.len());
+    let mut rest = lit;
+    while let Some(open) = rest.find('{') {
+        out.push_str(&rest[..open]);
+        match rest[open..].find('}') {
+            Some(close) => {
+                out.push_str("<*>");
+                rest = &rest[open + close + 1..];
+            }
+            None => {
+                rest = &rest[open..];
+                break;
+            }
+        }
+    }
+    out.push_str(rest);
+    out
+}
+
+/// Normalize a doc-side metric name: every `<…>` placeholder becomes
+/// `<*>` (`tenant.<id>.state` → `tenant.<*>.state`).
+pub fn normalize_doc_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    let mut rest = name;
+    while let Some(open) = rest.find('<') {
+        out.push_str(&rest[..open]);
+        match rest[open..].find('>') {
+            Some(close) => {
+                out.push_str("<*>");
+                rest = &rest[open + close + 1..];
+            }
+            None => {
+                rest = &rest[open..];
+                break;
+            }
+        }
+    }
+    out.push_str(rest);
+    out
+}
+
+/// Metric names the code registers, normalized, with one witness
+/// `(path, line)` each.  Recognized shapes:
+///
+/// * a string literal (or `&format!("…")`) directly inside a
+///   `.counter(` / `.gauge(` / `.histogram(` / `.set_label(` /
+///   `.label(` call;
+/// * the first literal argument of a `tenant_gauge(` call (name
+///   prefixed `tenant.<*>.`) or a `metric_name(` call — the two
+///   sanctioned builders for names assembled away from the
+///   instrument call.
+pub fn code_metric_names(
+    files: &[ScannedFile],
+) -> BTreeMap<String, (String, usize)> {
+    let mut out: BTreeMap<String, (String, usize)> = BTreeMap::new();
+    let mut add = |name: String, path: &str, line: usize| {
+        out.entry(name).or_insert_with(|| (path.to_string(), line));
+    };
+    let instrument_pats =
+        [".counter(", ".gauge(", ".histogram(", ".set_label(", ".label("];
+    let builder_pats = ["tenant_gauge(", "metric_name("];
+    for f in files {
+        for pat in instrument_pats {
+            for k in f.find_all(pat) {
+                let after = k + pat.len();
+                if f.cond[after..].starts_with('"') {
+                    if let Some(lit) = f.literal_at(after) {
+                        add(
+                            normalize_code_name(lit),
+                            &f.rel,
+                            f.line_of(k),
+                        );
+                    }
+                } else if f.cond[after..].starts_with("&format!(\"") {
+                    let q = after + "&format!(\"".len() - 1;
+                    if let Some(lit) = f.literal_at(q) {
+                        add(
+                            normalize_code_name(lit),
+                            &f.rel,
+                            f.line_of(k),
+                        );
+                    }
+                }
+            }
+        }
+        for pat in builder_pats {
+            for k in f.find_all(pat) {
+                if f.preceded_by_ident(k) {
+                    continue; // the `fn tenant_gauge` definition itself
+                }
+                // first string literal within the balanced call parens
+                let mut depth = 0usize;
+                let mut j = k + pat.len() - 1;
+                let bytes = f.cond.as_bytes();
+                let mut lit = None;
+                while j < bytes.len() {
+                    match bytes[j] {
+                        b'(' => depth += 1,
+                        b')' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        b'"' => {
+                            if let Some(text) = f.literal_at(j) {
+                                lit = Some(text);
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                if let Some(text) = lit {
+                    let name = if pat == "tenant_gauge(" {
+                        format!("tenant.<*>.{text}")
+                    } else {
+                        normalize_code_name(text)
+                    };
+                    add(name, &f.rel, f.line_of(k));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Metric names the catalog documents, normalized: the first cell of
+/// every row of every markdown table whose header row contains both
+/// `metric` and `kind`.
+pub fn doc_metric_names(doc: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let mut in_table = false;
+    for line in doc.lines() {
+        let line = line.trim();
+        if !line.starts_with('|') {
+            in_table = false;
+            continue;
+        }
+        let cells: Vec<&str> = line.split('|').map(str::trim).collect();
+        if cells.len() < 3 {
+            continue;
+        }
+        let lowered = line.to_ascii_lowercase();
+        if lowered.contains("metric") && lowered.contains("kind") {
+            in_table = true;
+            continue;
+        }
+        if !in_table || cells[1].chars().all(|c| c == '-' || c == ':') {
+            continue;
+        }
+        if let Some(name) = backticked(cells[1]) {
+            out.insert(normalize_doc_name(name));
+        }
+    }
+    out
+}
+
+/// L4 metrics-conformance: code names ⊆ catalog and catalog ⊆ code
+/// names.
+pub fn check_metrics_conformance(
+    files: &[ScannedFile],
+    doc: &str,
+) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let code = code_metric_names(files);
+    let documented = doc_metric_names(doc);
+    if documented.is_empty() {
+        out.push(Violation {
+            lint: "L4",
+            path: OBS_DOC.into(),
+            line: 0,
+            detail: "no metric catalog tables found (header cells \
+                     `metric` + `kind`) — scanner and doc have \
+                     drifted apart"
+                .into(),
+        });
+        return out;
+    }
+    for (name, (path, line)) in &code {
+        if !documented.contains(name) {
+            out.push(Violation {
+                lint: "L4",
+                path: path.clone(),
+                line: *line,
+                detail: format!(
+                    "metric `{name}` is not documented in {OBS_DOC}"
+                ),
+            });
+        }
+    }
+    for name in &documented {
+        if !code.contains_key(name) {
+            out.push(Violation {
+                lint: "L4",
+                path: OBS_DOC.into(),
+                line: 0,
+                detail: format!(
+                    "documents metric `{name}` which no code registers"
+                ),
+            });
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------- L5
+
+/// Directories whose non-test code must not panic: a panicking server
+/// drops every connected tenant on the floor.
+pub const SERVER_DIRS: [&str; 4] = ["service/", "rpc/", "net/", "store/"];
+
+/// Panic-capable sites in non-test server-path code, by file:
+/// `(line, pattern)` per site.
+pub fn panic_sites(
+    files: &[ScannedFile],
+) -> BTreeMap<String, Vec<(usize, &'static str)>> {
+    let mut out: BTreeMap<String, Vec<(usize, &'static str)>> =
+        BTreeMap::new();
+    for f in files {
+        if !SERVER_DIRS.iter().any(|d| f.rel.starts_with(d)) {
+            continue;
+        }
+        let mut sites = Vec::new();
+        for pat in [".unwrap()", ".expect(", "panic!("] {
+            for k in f.find_all(pat) {
+                sites.push((f.line_of(k), pat));
+            }
+        }
+        if !sites.is_empty() {
+            sites.sort_unstable();
+            out.insert(f.rel.clone(), sites);
+        }
+    }
+    out
+}
+
+/// Parse `scripts/lint_baseline.txt`: `L5 <path> <count>` lines,
+/// `#` comments and blank lines ignored.
+pub fn parse_baseline(
+    text: &str,
+) -> Result<BTreeMap<String, usize>, String> {
+    let mut out = BTreeMap::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some("L5"), Some(path), Some(count), None) => {
+                let count = count.parse::<usize>().map_err(|_| {
+                    format!("baseline line {}: bad count", i + 1)
+                })?;
+                out.insert(path.to_string(), count);
+            }
+            _ => {
+                return Err(format!(
+                    "baseline line {}: expected `L5 <path> <count>`",
+                    i + 1
+                ))
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Render the current tree's L5 site counts as the baseline file.
+pub fn format_baseline(
+    sites: &BTreeMap<String, Vec<(usize, &'static str)>>,
+) -> String {
+    let mut out = String::from(
+        "# pem-lint L5 no-panic baseline: panic-capable sites allowed\n\
+         # per non-test server-path file.  This file may only shrink.\n\
+         # Regenerate (after removing sites) with:\n\
+         #     cargo run --bin pem_lint -- --write-baseline\n",
+    );
+    for (path, file_sites) in sites {
+        out.push_str(&format!("L5 {} {}\n", path, file_sites.len()));
+    }
+    out
+}
+
+/// L5 no-panic server paths, held to the committed baseline.  New or
+/// grown files fail; shrunken files only warn (regenerate the
+/// baseline to lock in the improvement).
+pub fn check_no_panic(
+    files: &[ScannedFile],
+    baseline: &BTreeMap<String, usize>,
+) -> (Vec<Violation>, Vec<String>) {
+    let mut violations = Vec::new();
+    let mut warnings = Vec::new();
+    let sites = panic_sites(files);
+    for (path, file_sites) in &sites {
+        let allowed = baseline.get(path).copied().unwrap_or(0);
+        let count = file_sites.len();
+        if count > allowed {
+            let lines: Vec<String> = file_sites
+                .iter()
+                .map(|(line, pat)| format!("{line} ({pat})"))
+                .collect();
+            violations.push(Violation {
+                lint: "L5",
+                path: path.clone(),
+                line: file_sites[0].0,
+                detail: format!(
+                    "{count} panic-capable sites, baseline allows \
+                     {allowed} — lines {}.  Return a typed error \
+                     instead; the baseline may only shrink",
+                    lines.join(", ")
+                ),
+            });
+        } else if count < allowed {
+            warnings.push(format!(
+                "L5 baseline stale: {path} allows {allowed} sites but \
+                 only {count} remain — run with --write-baseline to \
+                 lock in the improvement"
+            ));
+        }
+    }
+    for (path, allowed) in baseline {
+        if *allowed > 0 && !sites.contains_key(path) {
+            warnings.push(format!(
+                "L5 baseline stale: {path} allows {allowed} sites but \
+                 the file is clean (or gone) — run with \
+                 --write-baseline"
+            ));
+        }
+    }
+    (violations, warnings)
+}
+
+// ------------------------------------------------------------- run
+
+/// Everything a full lint run needs.  The binary builds this from the
+/// filesystem; fixture tests build it from strings.
+pub struct LintInput<'a> {
+    /// Scanned `.rs` files, paths relative to the source root.
+    pub files: Vec<ScannedFile>,
+    /// Contents of `docs/WIRE_PROTOCOL.md` (None = L3 cannot run,
+    /// which is itself a violation).
+    pub wire_doc: Option<&'a str>,
+    /// Contents of `docs/OBSERVABILITY.md` (None = L4 cannot run,
+    /// which is itself a violation).
+    pub obs_doc: Option<&'a str>,
+    /// Contents of `scripts/lint_baseline.txt` (None = empty
+    /// baseline: every L5 site is a violation).
+    pub baseline: Option<&'a str>,
+}
+
+/// Run all five lints and collect the report.
+pub fn run(input: &LintInput<'_>) -> LintReport {
+    let mut report = LintReport::default();
+    report
+        .violations
+        .extend(check_clock_discipline(&input.files));
+    report.violations.extend(check_poison_safety(&input.files));
+    match (
+        input.files.iter().find(|f| f.rel == RPC_FILE),
+        input.wire_doc,
+    ) {
+        (Some(rpc), Some(doc)) => {
+            report.violations.extend(check_wire_conformance(rpc, doc));
+        }
+        (None, _) => report.violations.push(Violation {
+            lint: "L3",
+            path: RPC_FILE.into(),
+            line: 0,
+            detail: "file not found under the source root".into(),
+        }),
+        (_, None) => report.violations.push(Violation {
+            lint: "L3",
+            path: WIRE_DOC.into(),
+            line: 0,
+            detail: "spec not found — wire tags cannot be checked"
+                .into(),
+        }),
+    }
+    match input.obs_doc {
+        Some(doc) => report
+            .violations
+            .extend(check_metrics_conformance(&input.files, doc)),
+        None => report.violations.push(Violation {
+            lint: "L4",
+            path: OBS_DOC.into(),
+            line: 0,
+            detail: "catalog not found — metric names cannot be \
+                     checked"
+                .into(),
+        }),
+    }
+    let baseline = match input.baseline {
+        Some(text) => match parse_baseline(text) {
+            Ok(b) => b,
+            Err(e) => {
+                report.violations.push(Violation {
+                    lint: "L5",
+                    path: "scripts/lint_baseline.txt".into(),
+                    line: 0,
+                    detail: e,
+                });
+                BTreeMap::new()
+            }
+        },
+        None => BTreeMap::new(),
+    };
+    let (violations, warnings) = check_no_panic(&input.files, &baseline);
+    report.violations.extend(violations);
+    report.warnings.extend(warnings);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(rel: &str, src: &str) -> ScannedFile {
+        ScannedFile::scan(rel, src)
+    }
+
+    // ---------------------------------------------------- L1 fixtures
+
+    #[test]
+    fn l1_fires_on_direct_time_reads() {
+        let files = vec![scan(
+            "engine/foo.rs",
+            "fn f() { let t = std::time::Instant::now(); }\n\
+             fn g() { let s = std::time::SystemTime::now(); }",
+        )];
+        let v = check_clock_discipline(&files);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0].lint, "L1");
+        assert_eq!(v[0].path, "engine/foo.rs");
+        assert_eq!(v[0].line, 1);
+        assert_eq!(v[1].line, 2);
+    }
+
+    #[test]
+    fn l1_exempts_clock_file_bench_and_test_code() {
+        let files = vec![
+            scan(CLOCK_FILE, "fn f() { Instant::now(); }"),
+            scan("bench/mod.rs", "fn f() { Instant::now(); }"),
+            scan(
+                "engine/foo.rs",
+                "#[cfg(test)]\nmod tests {\n  #[test]\n  fn t() { \
+                 std::time::Instant::now(); }\n}",
+            ),
+            // comments and strings never fire
+            scan(
+                "engine/bar.rs",
+                "// Instant::now()\nfn f() { let s = \
+                 \"Instant::now()\"; }",
+            ),
+        ];
+        assert!(check_clock_discipline(&files).is_empty());
+    }
+
+    // ---------------------------------------------------- L2 fixtures
+
+    #[test]
+    fn l2_fires_on_raw_lock_unwraps_even_multiline() {
+        let files = vec![scan(
+            "service/foo.rs",
+            "fn f(m: &std::sync::Mutex<u8>, l: &std::sync::RwLock<u8>) \
+             {\n    let _ = m\n        .lock()\n        .unwrap();\n    \
+             let _ = l.read().unwrap();\n    let _ = \
+             l.write().unwrap();\n}",
+        )];
+        let v = check_poison_safety(&files);
+        assert_eq!(v.len(), 3);
+        assert!(v[0].detail.contains("lock_poisonless"));
+        assert!(v[1].detail.contains("read_poisonless"));
+        assert!(v[2].detail.contains("write_poisonless"));
+    }
+
+    #[test]
+    fn l2_exempts_test_code() {
+        let files = vec![scan(
+            "service/foo.rs",
+            "fn ok() {}\n#[cfg(test)]\nmod tests {\n  #[test]\n  fn t() \
+             { m().lock().unwrap(); }\n}",
+        )];
+        assert!(check_poison_safety(&files).is_empty());
+    }
+
+    // ---------------------------------------------------- L3 fixtures
+
+    const RPC_FIXTURE: &str = "const TAG_JOIN: u8 = 1;\n\
+         const TAG_JOIN_ACK: u8 = 2;\n\
+         pub const TAG_PLAN_RESULT: u8 = 29;\n";
+
+    const WIRE_FIXTURE: &str = "\
+         | tag | frame | direction | fields |\n\
+         |---|---|---|---|\n\
+         | 1 | `Join` | a | b |\n\
+         | 2 | `JoinAck` | a | b |\n\
+         | 29 | `PlanResult` | a | b |\n";
+
+    #[test]
+    fn l3_parses_tags_and_passes_when_in_sync() {
+        let rpc = scan(RPC_FILE, RPC_FIXTURE);
+        let tags = wire_tags(&rpc);
+        assert_eq!(
+            tags,
+            vec![
+                ("Join".to_string(), 1, 1),
+                ("JoinAck".to_string(), 2, 2),
+                ("PlanResult".to_string(), 29, 3),
+            ]
+        );
+        assert!(check_wire_conformance(&rpc, WIRE_FIXTURE).is_empty());
+    }
+
+    #[test]
+    fn l3_detects_undocumented_tag() {
+        let rpc = scan(
+            RPC_FILE,
+            &format!("{RPC_FIXTURE}const TAG_NEW_THING: u8 = 30;\n"),
+        );
+        let v = check_wire_conformance(&rpc, WIRE_FIXTURE);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].detail.contains("tag 30 (NewThing) is not documented"));
+        assert_eq!(v[0].line, 4);
+    }
+
+    #[test]
+    fn l3_detects_phantom_doc_tag_and_duplicate_code_tag() {
+        let rpc = scan(
+            RPC_FILE,
+            &format!("{RPC_FIXTURE}const TAG_CLASH: u8 = 1;\n"),
+        );
+        let doc =
+            format!("{WIRE_FIXTURE}| 77 | `Ghost` | a | b |\n");
+        let v = check_wire_conformance(&rpc, &doc);
+        let details: Vec<&str> =
+            v.iter().map(|x| x.detail.as_str()).collect();
+        assert!(details.iter().any(|d| d.contains("duplicates Join")));
+        assert!(details
+            .iter()
+            .any(|d| d.contains("documents tag 77 (Ghost)")));
+    }
+
+    #[test]
+    fn l3_detects_name_mismatch() {
+        let rpc = scan(RPC_FILE, RPC_FIXTURE);
+        let doc = WIRE_FIXTURE.replace("`JoinAck`", "`JoinReply`");
+        let v = check_wire_conformance(&rpc, &doc);
+        assert_eq!(v.len(), 1);
+        assert!(v[0]
+            .detail
+            .contains("tag 2 is JoinAck in code but JoinReply"));
+    }
+
+    // ---------------------------------------------------- L4 fixtures
+
+    const OBS_FIXTURE: &str = "\
+         some prose.\n\n\
+         | metric | kind | meaning |\n\
+         |---|---|---|\n\
+         | `ops` | counter | stuff |\n\
+         | `node.<i>.busy_ns` | gauge | stuff |\n\
+         | `tenant.<id>.state` | gauge | stuff |\n\n\
+         more prose.\n";
+
+    fn metric_fixture_files() -> Vec<ScannedFile> {
+        vec![scan(
+            "service/foo.rs",
+            "fn f(reg: &Registry, id: u32) {\n\
+             reg.counter(\"ops\").inc();\n\
+             reg.gauge(&format!(\"node.{id}.busy_ns\")).set(1);\n\
+             reg.gauge(&crate::obs::tenant_gauge(id, \"state\")).set(1);\n\
+             }\n",
+        )]
+    }
+
+    #[test]
+    fn l4_normalizes_format_args_and_tenant_gauge() {
+        let names = code_metric_names(&metric_fixture_files());
+        let keys: Vec<&str> =
+            names.keys().map(String::as_str).collect();
+        assert_eq!(
+            keys,
+            vec!["node.<*>.busy_ns", "ops", "tenant.<*>.state"]
+        );
+        assert!(check_metrics_conformance(
+            &metric_fixture_files(),
+            OBS_FIXTURE
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn l4_detects_undocumented_metric() {
+        let mut files = metric_fixture_files();
+        files.push(scan(
+            "service/bar.rs",
+            "fn g(reg: &Registry) { reg.counter(\"sneaky\").inc(); }",
+        ));
+        let v = check_metrics_conformance(&files, OBS_FIXTURE);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].detail.contains("`sneaky` is not documented"));
+        assert_eq!(v[0].path, "service/bar.rs");
+    }
+
+    #[test]
+    fn l4_detects_phantom_doc_metric() {
+        let doc = format!(
+            "{OBS_FIXTURE}\n| metric | kind | meaning |\n|---|---|---|\n\
+             | `ghost.metric` | counter | stuff |\n"
+        );
+        let v = check_metrics_conformance(&metric_fixture_files(), &doc);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].detail.contains("`ghost.metric`"));
+        assert_eq!(v[0].path, OBS_DOC);
+    }
+
+    #[test]
+    fn l4_ignores_the_builder_definitions_themselves() {
+        let files = vec![scan(
+            "obs/registry.rs",
+            "pub fn tenant_gauge(id: u32, field: &str) -> String {\n\
+             format!(\"tenant.{id}.{field}\")\n}\n\
+             pub const fn metric_name(name: &'static str) -> &'static \
+             str { name }\n",
+        )];
+        assert!(code_metric_names(&files).is_empty());
+    }
+
+    // ---------------------------------------------------- L5 fixtures
+
+    #[test]
+    fn l5_counts_sites_and_honors_baseline() {
+        let files = vec![
+            scan(
+                "rpc/foo.rs",
+                "fn f(x: Option<u8>) { x.unwrap(); \
+                 x.expect(\"boom\"); }",
+            ),
+            scan("engine/foo.rs", "fn f(x: Option<u8>) { x.unwrap(); }"),
+        ];
+        // engine/ is not a server dir
+        let sites = panic_sites(&files);
+        assert_eq!(sites.len(), 1);
+        assert_eq!(sites["rpc/foo.rs"].len(), 2);
+        // no baseline: violation
+        let (v, w) = check_no_panic(&files, &BTreeMap::new());
+        assert_eq!(v.len(), 1);
+        assert!(v[0].detail.contains("2 panic-capable sites"));
+        assert!(w.is_empty());
+        // exact baseline: clean
+        let exact = parse_baseline("L5 rpc/foo.rs 2\n").unwrap();
+        let (v, w) = check_no_panic(&files, &exact);
+        assert!(v.is_empty() && w.is_empty());
+        // generous baseline: stale warning, no violation
+        let generous =
+            parse_baseline("L5 rpc/foo.rs 5\nL5 rpc/gone.rs 3\n")
+                .unwrap();
+        let (v, w) = check_no_panic(&files, &generous);
+        assert!(v.is_empty());
+        assert_eq!(w.len(), 2);
+        assert!(w.iter().all(|x| x.contains("stale")));
+    }
+
+    #[test]
+    fn l5_panics_in_test_code_are_exempt() {
+        let files = vec![scan(
+            "store/foo.rs",
+            "fn ok() {}\n#[cfg(test)]\nmod tests {\n  #[test]\n  fn t() \
+             { Some(1).unwrap(); panic!(\"x\"); }\n}",
+        )];
+        assert!(panic_sites(&files).is_empty());
+    }
+
+    #[test]
+    fn baseline_roundtrips_through_format_and_parse() {
+        let files = vec![scan(
+            "net/foo.rs",
+            "fn f() { panic!(\"a\"); Some(1).unwrap(); }",
+        )];
+        let sites = panic_sites(&files);
+        let text = format_baseline(&sites);
+        let parsed = parse_baseline(&text).unwrap();
+        assert_eq!(parsed["net/foo.rs"], 2);
+        assert!(parse_baseline("garbage line\n").is_err());
+        assert!(parse_baseline("# comment\n\n").unwrap().is_empty());
+    }
+
+    // ------------------------------------- the real tree's artifacts
+
+    /// The committed spec stays parseable and in sync with the real
+    /// `rpc/mod.rs` — this is the L3 gate runnable without a
+    /// filesystem walk.
+    #[test]
+    fn real_wire_protocol_doc_matches_rpc_module() {
+        let rpc = scan(
+            RPC_FILE,
+            include_str!(concat!(
+                env!("CARGO_MANIFEST_DIR"),
+                "/src/rpc/mod.rs"
+            )),
+        );
+        let doc = include_str!(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/../docs/WIRE_PROTOCOL.md"
+        ));
+        let tags = wire_tags(&rpc);
+        assert!(tags.len() >= 29, "found only {} tags", tags.len());
+        let v = check_wire_conformance(&rpc, doc);
+        assert!(v.is_empty(), "L3 drift: {v:?}");
+    }
+
+    /// The committed catalog parses and contains the core names.
+    #[test]
+    fn real_observability_doc_has_a_catalog() {
+        let doc = include_str!(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/../docs/OBSERVABILITY.md"
+        ));
+        let names = doc_metric_names(doc);
+        for expect in [
+            "store.faults",
+            "reactor.wakeups",
+            "tenant.<*>.state",
+            "node.<*>.busy_ns",
+            "makespan_ns",
+        ] {
+            assert!(names.contains(expect), "catalog lost `{expect}`");
+        }
+    }
+
+    /// The committed L5 baseline parses and only names real server
+    /// dirs.
+    #[test]
+    fn real_baseline_parses() {
+        let text = include_str!(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/../scripts/lint_baseline.txt"
+        ));
+        let baseline = parse_baseline(text).unwrap();
+        assert!(!baseline.is_empty());
+        for path in baseline.keys() {
+            assert!(
+                SERVER_DIRS.iter().any(|d| path.starts_with(d)),
+                "baseline entry {path} outside server dirs"
+            );
+        }
+    }
+}

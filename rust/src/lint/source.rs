@@ -1,0 +1,419 @@
+//! The lint scanner: a masking pass over Rust source text.
+//!
+//! `pem-lint` never parses Rust — it *masks*.  A byte-level pass turns
+//! everything that is not executable non-test code into spaces while
+//! preserving newlines (so byte offsets still map to line numbers):
+//!
+//! 1. comments (`//…`, nested `/*…*/`) → spaces;
+//! 2. string literal *contents* → spaces, keeping the quotes and
+//!    remembering the original text (the L4 pass needs the metric-name
+//!    literals back); raw strings (`r"…"`, `r#"…"#`, `br"…"`) and char
+//!    literals masked whole;
+//! 3. every `#[cfg(test)]`-gated item (attribute through its matching
+//!    `}` or `;`) → spaces, so test-only code is exempt by
+//!    construction.
+//!
+//! The masked text is then *condensed*: all whitespace removed, with a
+//! position map back to raw byte offsets.  Pattern checks search the
+//! condensed stream, which makes them immune to formatting — a
+//! `.lock()\n    .unwrap()` chain split across lines matches
+//! `.lock().unwrap()` all the same.
+//!
+//! A Python replica of this scanner lives at
+//! `scripts/lint_replica.py`; keep the two in step.
+
+use std::collections::HashMap;
+
+/// A scanned source file, ready for pattern checks.
+pub struct ScannedFile {
+    /// Path relative to the scanned source root, `/`-separated
+    /// (e.g. `obs/clock.rs`).
+    pub rel: String,
+    /// Byte offsets of `\n` in the raw text (line mapping).
+    newlines: Vec<usize>,
+    /// The condensed masked stream (no whitespace).
+    pub cond: String,
+    /// `cond` byte index → raw byte offset.
+    pos: Vec<usize>,
+    /// Raw-offset-of-opening-quote → original literal text, for
+    /// string literals the mask blanked.
+    lits: HashMap<usize, String>,
+}
+
+fn is_ident_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Blank `[a, b)` in `out` with spaces, preserving newlines.
+fn blank(out: &mut [u8], a: usize, b: usize) {
+    for slot in out.iter_mut().take(b.min(out.len())).skip(a) {
+        if *slot != b'\n' {
+            *slot = b' ';
+        }
+    }
+}
+
+/// Pass 1: comments → spaces, string contents → spaces (quotes kept,
+/// text remembered), raw strings and char literals masked whole.
+fn mask(src: &[u8]) -> (Vec<u8>, HashMap<usize, String>) {
+    let mut out = src.to_vec();
+    let mut lits = HashMap::new();
+    let n = src.len();
+    let mut i = 0;
+    while i < n {
+        let c = src[i];
+        if c == b'/' && i + 1 < n && src[i + 1] == b'/' {
+            let mut j = i;
+            while j < n && src[j] != b'\n' {
+                j += 1;
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'/' && i + 1 < n && src[i + 1] == b'*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if src[j] == b'/' && j + 1 < n && src[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if src[j] == b'*' && j + 1 < n && src[j + 1] == b'/'
+                {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'"' {
+            let mut j = i + 1;
+            while j < n && src[j] != b'"' {
+                if src[j] == b'\\' {
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            let text =
+                String::from_utf8_lossy(&src[i + 1..j.min(n)]).into_owned();
+            lits.insert(i, text);
+            blank(&mut out, i + 1, j.min(n)); // keep both quotes
+            i = (j + 1).min(n);
+        } else if c == b'r' || c == b'b' {
+            let prev = if i > 0 { src[i - 1] } else { 0 };
+            let mut j = i + 1;
+            if c == b'b' && j < n && src[j] == b'r' {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while j < n && src[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            let starts_raw = !is_ident_byte(prev)
+                && j < n
+                && src[j] == b'"'
+                && (c == b'r' || (i + 1 < n && src[i + 1] == b'r'));
+            if starts_raw {
+                // raw string r"…" / r#"…"# / br"…": mask it whole
+                let mut close = vec![b'"'];
+                close.extend(std::iter::repeat(b'#').take(hashes));
+                let mut k = j + 1;
+                while k < n && !src[k..].starts_with(&close) {
+                    k += 1;
+                }
+                k = (k + close.len()).min(n);
+                blank(&mut out, i, k);
+                i = k;
+            } else if c == b'b'
+                && i + 1 < n
+                && src[i + 1] == b'\''
+                && !is_ident_byte(prev)
+            {
+                // byte char b'x'
+                let mut j = i + 2;
+                if j < n && src[j] == b'\\' {
+                    j += 2;
+                }
+                while j < n && src[j] != b'\'' {
+                    j += 1;
+                }
+                blank(&mut out, i, (j + 1).min(n));
+                i = (j + 1).min(n);
+            } else {
+                i += 1;
+            }
+        } else if c == b'\'' {
+            if i + 1 < n && src[i + 1] == b'\\' {
+                // escaped char literal '\n', '\'', '\u{…}'
+                let mut j = i + 3;
+                while j < n && src[j] != b'\'' {
+                    j += 1;
+                }
+                blank(&mut out, i, (j + 1).min(n));
+                i = (j + 1).min(n);
+            } else {
+                // closing quote within a few bytes → char literal
+                // ('x', multibyte 'é'); otherwise a lifetime ('a)
+                let limit = (i + 6).min(n);
+                let mut found = None;
+                let mut k = i + 2;
+                while k < limit {
+                    if src[k] == b'\'' {
+                        found = Some(k);
+                        break;
+                    }
+                    k += 1;
+                }
+                if let Some(close) = found {
+                    blank(&mut out, i, close + 1);
+                    i = close + 1;
+                } else {
+                    i += 1; // lifetime
+                }
+            }
+        } else {
+            i += 1;
+        }
+    }
+    (out, lits)
+}
+
+/// Pass 2: blank every `#[cfg(test)]`-gated item — the attribute, any
+/// attributes after it, and the item body through its matching `}` (or
+/// a terminating `;`).  Runs on already-masked text so comments and
+/// strings cannot fake or hide an attribute.
+fn cfg_test_mask(masked: &mut [u8]) {
+    let src = masked.to_vec();
+    let n = src.len();
+    let skip_ws = |mut j: usize| {
+        while j < n && (src[j] as char).is_ascii_whitespace() {
+            j += 1;
+        }
+        j
+    };
+    let expect = |j: usize, tok: &[u8]| -> Option<usize> {
+        let j = skip_ws(j);
+        if src[j..].starts_with(tok) {
+            Some(j + tok.len())
+        } else {
+            None
+        }
+    };
+    let mut i = 0;
+    while i < n {
+        if src[i] != b'#' {
+            i += 1;
+            continue;
+        }
+        let matched = expect(i + 1, b"[")
+            .and_then(|j| expect(j, b"cfg"))
+            .and_then(|j| expect(j, b"("))
+            .and_then(|j| expect(j, b"test"))
+            .and_then(|j| expect(j, b")"))
+            .and_then(|j| expect(j, b"]"));
+        let Some(j) = matched else {
+            i += 1;
+            continue;
+        };
+        // skip any further attributes on the same item
+        let mut k = skip_ws(j);
+        while k < n && src[k] == b'#' {
+            let k2 = skip_ws(k + 1);
+            if k2 < n && src[k2] == b'[' {
+                let mut depth = 1usize;
+                let mut k3 = k2 + 1;
+                while k3 < n && depth > 0 {
+                    match src[k3] {
+                        b'[' => depth += 1,
+                        b']' => depth -= 1,
+                        _ => {}
+                    }
+                    k3 += 1;
+                }
+                k = skip_ws(k3);
+            } else {
+                break;
+            }
+        }
+        // scan to the item's first `{` or a terminating `;`
+        while k < n && src[k] != b'{' && src[k] != b';' {
+            k += 1;
+        }
+        if k < n && src[k] == b'{' {
+            let mut depth = 1usize;
+            k += 1;
+            while k < n && depth > 0 {
+                match src[k] {
+                    b'{' => depth += 1,
+                    b'}' => depth -= 1,
+                    _ => {}
+                }
+                k += 1;
+            }
+        } else {
+            k = (k + 1).min(n);
+        }
+        blank(masked, i, k);
+        i = k;
+    }
+}
+
+impl ScannedFile {
+    /// Scan `src`, recorded under the root-relative path `rel`.
+    pub fn scan(rel: &str, src: &str) -> ScannedFile {
+        let raw = src.as_bytes();
+        let (mut masked, lits) = mask(raw);
+        cfg_test_mask(&mut masked);
+        let mut cond = String::with_capacity(masked.len());
+        let mut pos = Vec::with_capacity(masked.len());
+        for (i, &c) in masked.iter().enumerate() {
+            if !(c as char).is_ascii_whitespace() {
+                cond.push(c as char);
+                pos.push(i);
+            }
+        }
+        let newlines = raw
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c == b'\n')
+            .map(|(i, _)| i)
+            .collect();
+        ScannedFile {
+            rel: rel.replace('\\', "/"),
+            newlines,
+            cond,
+            pos,
+            lits,
+        }
+    }
+
+    /// 1-based line number of the condensed-stream index `cond_idx`.
+    pub fn line_of(&self, cond_idx: usize) -> usize {
+        let off = self.pos[cond_idx];
+        self.newlines.partition_point(|&nl| nl < off) + 1
+    }
+
+    /// Every condensed-stream index where `pat` occurs.
+    pub fn find_all(&self, pat: &str) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut start = 0;
+        while let Some(k) = self.cond[start..].find(pat) {
+            out.push(start + k);
+            start += k + 1;
+        }
+        out
+    }
+
+    /// Original text of the string literal whose opening `"` sits at
+    /// condensed index `cond_idx`, if one does.
+    pub fn literal_at(&self, cond_idx: usize) -> Option<&str> {
+        self.pos
+            .get(cond_idx)
+            .and_then(|off| self.lits.get(off))
+            .map(String::as_str)
+    }
+
+    /// True when the condensed byte before `cond_idx` is part of an
+    /// identifier (used to reject `fn tenant_gauge(` definition sites
+    /// when looking for `tenant_gauge(` calls).
+    pub fn preceded_by_ident(&self, cond_idx: usize) -> bool {
+        cond_idx > 0
+            && is_ident_byte(self.cond.as_bytes()[cond_idx - 1])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_masked() {
+        let f = ScannedFile::scan(
+            "x.rs",
+            r#"
+// Instant::now() in a comment
+/* and /* nested */ Instant::now() */
+fn f() {
+    let s = "Instant::now()";
+    let r = r"Instant::now()";
+}
+"#,
+        );
+        assert!(!f.cond.contains("Instant::now()"));
+        // quotes of plain strings survive; the raw string is gone
+        assert!(f.cond.contains("lets=\"\";"));
+    }
+
+    #[test]
+    fn literal_text_is_recoverable() {
+        let f = ScannedFile::scan(
+            "x.rs",
+            "fn f(r: &Registry) { r.counter(\"my.metric\"); }",
+        );
+        let hits = f.find_all(".counter(");
+        assert_eq!(hits.len(), 1);
+        let quote = hits[0] + ".counter(".len();
+        assert_eq!(&f.cond[quote..quote + 1], "\"");
+        assert_eq!(f.literal_at(quote), Some("my.metric"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let f = ScannedFile::scan(
+            "x.rs",
+            "fn f<'a>(x: &'a str) -> char { let c = '\\''; 'x' }",
+        );
+        // lifetimes survive, char literals are blanked
+        assert!(f.cond.contains("fnf<'a>(x:&'astr)"));
+        assert!(!f.cond.contains("'x'"));
+    }
+
+    #[test]
+    fn cfg_test_items_are_exempt() {
+        let f = ScannedFile::scan(
+            "x.rs",
+            r#"
+fn prod() { real_code(); }
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { std::time::Instant::now(); }
+}
+"#,
+        );
+        assert!(f.cond.contains("real_code()"));
+        assert!(!f.cond.contains("Instant::now()"));
+    }
+
+    #[test]
+    fn cfg_test_with_following_attributes() {
+        let f = ScannedFile::scan(
+            "x.rs",
+            "#[cfg(test)]\n#[allow(dead_code)]\nfn helper() { bad(); }\nfn keep() {}",
+        );
+        assert!(!f.cond.contains("bad()"));
+        assert!(f.cond.contains("fnkeep()"));
+    }
+
+    #[test]
+    fn multiline_chains_condense() {
+        let f = ScannedFile::scan(
+            "x.rs",
+            "fn f(m: &std::sync::Mutex<u8>) {\n    let _ = m\n        .lock()\n        .unwrap();\n}",
+        );
+        let hits = f.find_all(".lock().unwrap()");
+        assert_eq!(hits.len(), 1);
+        // the line reported is where the chain starts matching
+        assert_eq!(f.line_of(hits[0]), 3);
+    }
+
+    #[test]
+    fn line_mapping_is_exact() {
+        let f = ScannedFile::scan("x.rs", "a\nbb\nccc\n");
+        assert_eq!(f.line_of(0), 1);
+        assert_eq!(f.line_of(1), 2);
+        assert_eq!(f.line_of(3), 3);
+    }
+}

@@ -938,7 +938,7 @@ fn cmd_serve_coordinator(args: &Args) -> Result<()> {
         kind.name()
     );
 
-    let started = std::time::Instant::now();
+    let started = pem::obs::Stopwatch::start();
     let timeout = std::time::Duration::from_secs(
         args.get_or("timeout-s", 3600u64)?,
     );
@@ -1206,7 +1206,7 @@ fn cmd_submit(args: &Args) -> Result<()> {
         other => bail!("unexpected reply: {}", other.kind()),
     };
     println!("plan {name:?} admitted by {to} as plan #{plan_id}");
-    let started = std::time::Instant::now();
+    let started = pem::obs::Stopwatch::start();
     loop {
         if started.elapsed() > timeout {
             bail!(
@@ -1382,19 +1382,24 @@ fn print_stats(addr: &str, snap: &pem::obs::MetricsSnapshot, json: bool) {
     // resident coordinator (protocol v7): one row per submitted plan
     // — plan ids are dense from 1, and terminal tenants stay in the
     // table, so walking until the first gap covers them all
-    let g = pem::obs::tenant_gauge;
-    if let Some(active) = snap
-        .gauge("tenants_active")
-        .filter(|&a| a > 0 || snap.gauge(&g(1, "state")).is_some())
-    {
+    if let Some(active) = snap.gauge("tenants_active").filter(|&a| {
+        a > 0
+            || snap
+                .gauge(&pem::obs::tenant_gauge(1, "state"))
+                .is_some()
+    }) {
         println!("  tenants ({active} running):");
         let mut id = 1u32;
-        while let Some(state) = snap.gauge(&g(id, "state")) {
+        while let Some(state) =
+            snap.gauge(&pem::obs::tenant_gauge(id, "state"))
+        {
             println!(
                 "    plan #{id}: {:<8} {}/{} tasks",
                 tenant_state_name(state),
-                snap.gauge(&g(id, "tasks_completed")).unwrap_or(0),
-                snap.gauge(&g(id, "tasks_total")).unwrap_or(0)
+                snap.gauge(&pem::obs::tenant_gauge(id, "tasks_completed"))
+                    .unwrap_or(0),
+                snap.gauge(&pem::obs::tenant_gauge(id, "tasks_total"))
+                    .unwrap_or(0)
             );
             id += 1;
         }

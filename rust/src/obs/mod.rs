@@ -17,10 +17,13 @@ pub mod clock;
 pub mod registry;
 pub mod trace;
 
-pub use clock::{system_clock, Clock, ManualClock, SystemClock};
+pub use clock::{
+    system_clock, Clock, ManualClock, Stopwatch, SystemClock,
+};
 pub use registry::{
-    bucket_index, bucket_lower, tenant_gauge, Counter, Gauge, Histogram,
-    HistogramSnapshot, MetricsSnapshot, Registry, HISTOGRAM_BUCKETS,
+    bucket_index, bucket_lower, metric_name, tenant_gauge, Counter,
+    Gauge, Histogram, HistogramSnapshot, MetricsSnapshot, Registry,
+    HISTOGRAM_BUCKETS,
 };
 pub use trace::{
     verify_exactly_once, ReplaySummary, TraceEvent, TraceEventKind,

@@ -17,7 +17,7 @@
 //! property-tested below — which is what lets per-node snapshots be
 //! folded into cluster totals in any order.
 
-use crate::util::fmt_nanos;
+use crate::util::{fmt_nanos, read_poisonless, write_poisonless};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -137,6 +137,20 @@ pub fn bucket_lower(i: usize) -> u64 {
 /// two cannot drift apart.
 pub fn tenant_gauge(id: u32, field: &str) -> String {
     format!("tenant.{id}.{field}")
+}
+
+/// Marker for a metric name that is *built* somewhere other than the
+/// `Registry::counter`/`gauge`/`histogram` call that registers it
+/// (e.g. the `store.*` names assembled inside
+/// `PartitionStore::metrics` snapshots).  Identity at runtime; its
+/// value is that `pem-lint`'s L4 metrics-conformance pass recognizes
+/// the call site and cross-checks the literal against
+/// `docs/OBSERVABILITY.md`.  Any new metric name that doesn't appear
+/// literally inside an instrument call must pass through here or
+/// [`tenant_gauge`], or L4 cannot see it.
+#[inline]
+pub const fn metric_name(name: &'static str) -> &'static str {
+    name
 }
 
 impl Histogram {
@@ -264,7 +278,7 @@ pub struct Registry {
 
 impl std::fmt::Debug for Registry {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let inner = self.inner.read().unwrap();
+        let inner = read_poisonless(&self.inner);
         f.debug_struct("Registry")
             .field("counters", &inner.counters.len())
             .field("gauges", &inner.gauges.len())
@@ -281,7 +295,7 @@ impl Registry {
 
     /// Get or register the counter `name`.
     pub fn counter(&self, name: &str) -> Arc<Counter> {
-        let mut inner = self.inner.write().unwrap();
+        let mut inner = write_poisonless(&self.inner);
         Arc::clone(
             inner
                 .counters
@@ -292,7 +306,7 @@ impl Registry {
 
     /// Get or register the gauge `name`.
     pub fn gauge(&self, name: &str) -> Arc<Gauge> {
-        let mut inner = self.inner.write().unwrap();
+        let mut inner = write_poisonless(&self.inner);
         Arc::clone(
             inner
                 .gauges
@@ -303,7 +317,7 @@ impl Registry {
 
     /// Get or register the histogram `name`.
     pub fn histogram(&self, name: &str) -> Arc<Histogram> {
-        let mut inner = self.inner.write().unwrap();
+        let mut inner = write_poisonless(&self.inner);
         Arc::clone(
             inner
                 .histograms
@@ -315,16 +329,14 @@ impl Registry {
     /// Set a non-numeric label (role, addresses, …) carried on
     /// snapshots.
     pub fn set_label(&self, key: &str, value: &str) {
-        self.inner
-            .write()
-            .unwrap()
+        write_poisonless(&self.inner)
             .labels
             .insert(key.to_string(), value.to_string());
     }
 
     /// Point-in-time copy of every registered metric, sorted by name.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let inner = self.inner.read().unwrap();
+        let inner = read_poisonless(&self.inner);
         MetricsSnapshot {
             counters: inner
                 .counters

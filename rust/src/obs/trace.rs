@@ -150,7 +150,7 @@ impl Tracer {
             node,
             parent,
         };
-        let mut buf = self.buf.lock().unwrap();
+        let mut buf = crate::util::lock_poisonless(&self.buf);
         if buf.len() == self.cap {
             buf.pop_front();
             self.dropped.fetch_add(1, Ordering::Relaxed);
@@ -160,7 +160,10 @@ impl Tracer {
 
     /// Copy of the buffered events, oldest first.
     pub fn events(&self) -> Vec<TraceEvent> {
-        self.buf.lock().unwrap().iter().copied().collect()
+        crate::util::lock_poisonless(&self.buf)
+            .iter()
+            .copied()
+            .collect()
     }
 
     /// Events evicted because the ring was full.
@@ -170,7 +173,7 @@ impl Tracer {
 
     /// Buffered event count.
     pub fn len(&self) -> usize {
-        self.buf.lock().unwrap().len()
+        crate::util::lock_poisonless(&self.buf).len()
     }
 
     /// True when no events are buffered.
@@ -180,7 +183,7 @@ impl Tracer {
 
     /// All buffered events as JSONL (one event per line).
     pub fn dump_jsonl(&self) -> String {
-        let buf = self.buf.lock().unwrap();
+        let buf = crate::util::lock_poisonless(&self.buf);
         let mut out = String::with_capacity(buf.len() * 64);
         for ev in buf.iter() {
             out.push_str(&ev.to_json());

@@ -197,7 +197,7 @@ mod pjrt {
                     )
                 })?
                 .clone();
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = crate::util::lock_poisonless(&self.inner);
             if !inner.cache.contains_key(&entry.name) {
                 let path = self.manifest.artifact_path(&entry);
                 let proto = xla::HloModuleProto::from_text_file(

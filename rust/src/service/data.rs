@@ -43,6 +43,7 @@ use crate::net::reactor::{Action, ConnId, FrameHandler, Reactor};
 use crate::net::TrafficStats;
 use crate::obs::{
     system_clock, Clock, Counter, Histogram, MetricsSnapshot, Registry,
+    Stopwatch,
 };
 use crate::partition::PartitionId;
 use crate::rpc::session::SessionEncoder;
@@ -53,7 +54,7 @@ use std::collections::{HashMap, HashSet};
 use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// What backs this server's partitions.
 enum Backing {
@@ -490,12 +491,12 @@ impl DataServiceServer {
     /// Block until the initial replication stream has completed
     /// (immediately `true` on primaries); `false` on timeout.
     pub fn wait_synced(&self, timeout: Duration) -> bool {
-        let deadline = Instant::now() + timeout;
+        let waited = Stopwatch::start();
         loop {
             if self.shared.synced.load(Ordering::SeqCst) {
                 return true;
             }
-            if Instant::now() >= deadline {
+            if waited.elapsed() >= timeout {
                 return false;
             }
             std::thread::sleep(Duration::from_millis(2));
@@ -743,6 +744,7 @@ mod tests {
     use crate::datagen::GeneratorConfig;
     use crate::model::EntityId;
     use crate::partition::{partition_size_based, PartitionId};
+    use std::time::Instant;
 
     fn store() -> Arc<DataService> {
         let data = GeneratorConfig::tiny().with_entities(60).generate();

@@ -155,7 +155,7 @@ impl ReplicaSelector {
     pub fn select(&self, id: PartitionId) -> Option<usize> {
         let now = self.clock.now_ns();
         self.readmit_due(now);
-        if let Some(&i) = self.locality.lock().unwrap().get(&id) {
+        if let Some(&i) = crate::util::lock_poisonless(&self.locality).get(&id) {
             if self.replicas[i].alive.load(Ordering::SeqCst) {
                 return Some(i);
             }
@@ -182,7 +182,7 @@ impl ReplicaSelector {
             if r.alive.load(Ordering::SeqCst) {
                 continue;
             }
-            let mut dead_since = r.dead_since.lock().unwrap();
+            let mut dead_since = crate::util::lock_poisonless(&r.dead_since);
             let due = matches!(
                 *dead_since,
                 Some(at) if now.saturating_sub(at) >= cooldown_ns
@@ -209,7 +209,7 @@ impl ReplicaSelector {
 
     /// Record that `idx` served `id` — future fetches of `id` prefer it.
     pub fn record_locality(&self, id: PartitionId, idx: usize) {
-        self.locality.lock().unwrap().insert(id, idx);
+        crate::util::lock_poisonless(&self.locality).insert(id, idx);
     }
 
     /// Connection-level failure of `idx`: stop selecting it until the
@@ -221,9 +221,10 @@ impl ReplicaSelector {
         }
         // (re-)start the cooldown clock even when already dead, so a
         // failure during re-probing pushes the next retry out again
-        *self.replicas[idx].dead_since.lock().unwrap() =
+        *crate::util::lock_poisonless(&self.replicas[idx].dead_since) =
             Some(self.clock.now_ns());
-        self.locality.lock().unwrap().retain(|_, v| *v != idx);
+        crate::util::lock_poisonless(&self.locality)
+            .retain(|_, v| *v != idx);
     }
 
     /// Fetches ever started, per replica (configuration order).

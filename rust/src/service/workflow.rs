@@ -78,7 +78,8 @@ use crate::net::poll::Waker;
 use crate::net::reactor::{Action, ConnId, FrameHandler, Reactor};
 use crate::net::TrafficStats;
 use crate::obs::{
-    system_clock, Clock, Counter, MetricsSnapshot, Registry, Tracer,
+    system_clock, Clock, Counter, MetricsSnapshot, Registry, Stopwatch,
+    Tracer,
 };
 use crate::partition::{MatchTask, PartitionId};
 use crate::store::DataService;
@@ -89,7 +90,7 @@ use std::collections::{HashMap, HashSet};
 use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Server-side cap on one batch assignment, whatever the node asks
 /// for (a hostile `max` must not drain the whole open list into one
@@ -419,10 +420,12 @@ impl WfShared {
             for (id, state) in tenant_rows {
                 let (done, total) = sched.tenant_progress(id);
                 let reg = &self.registry;
-                let g = crate::obs::tenant_gauge;
-                reg.gauge(&g(id, "state")).set(state as u64);
-                reg.gauge(&g(id, "tasks_completed")).set(done as u64);
-                reg.gauge(&g(id, "tasks_total")).set(total as u64);
+                reg.gauge(&crate::obs::tenant_gauge(id, "state"))
+                    .set(state as u64);
+                reg.gauge(&crate::obs::tenant_gauge(id, "tasks_completed"))
+                    .set(done as u64);
+                reg.gauge(&crate::obs::tenant_gauge(id, "tasks_total"))
+                    .set(total as u64);
             }
         }
         self.registry
@@ -636,7 +639,7 @@ impl WorkflowServiceServer {
     /// Like [`Self::wait_done`] but tells the caller *why* the wait
     /// ended: completion, the typed fail-fast misfit, or the timeout.
     pub fn wait_outcome(&self, timeout: Duration) -> WaitStatus {
-        let deadline = Instant::now() + timeout;
+        let waited = Stopwatch::start();
         loop {
             {
                 let sched = lock_poisonless(&self.shared.sched);
@@ -647,7 +650,7 @@ impl WorkflowServiceServer {
                     return WaitStatus::Misfit(m.clone());
                 }
             }
-            if Instant::now() >= deadline {
+            if waited.elapsed() >= timeout {
                 return WaitStatus::Timeout;
             }
             std::thread::sleep(Duration::from_millis(2));
@@ -1361,6 +1364,7 @@ mod tests {
     use super::*;
     use crate::partition::PartitionId;
     use crate::rpc::Transport;
+    use std::time::Instant;
 
     fn task(id: u32, l: u32, r: u32) -> MatchTask {
         MatchTask {

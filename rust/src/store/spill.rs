@@ -24,7 +24,7 @@
 //! re-verifies magic, id, length, and checksum before decoding; a
 //! mismatch is a typed [`StoreError::Corrupt`], never a panic.
 
-use crate::obs::{Counter, Histogram};
+use crate::obs::{Counter, Histogram, Stopwatch};
 use crate::partition::PartitionId;
 use crate::rpc::{encode_partition_message, Message};
 use crate::store::tier::{PartitionStore, StoreError, StoreStats};
@@ -34,7 +34,6 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::Instant;
 
 /// Spill-file magic, bumped with the format.
 const SPILL_MAGIC: &[u8; 8] = b"PEMSPIL1";
@@ -220,7 +219,7 @@ impl SpillStore {
         if !read_poisonless(&self.index).contains_key(&id) {
             return Err(StoreError::Unknown(id));
         }
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let raw = std::fs::read(self.spill_path(id)).map_err(|e| {
             StoreError::Io {
                 id,
@@ -262,7 +261,7 @@ impl SpillStore {
             return Err(corrupt("decoded id mismatch"));
         }
         self.faults.inc();
-        self.fault_ns.observe(t0.elapsed().as_nanos() as u64);
+        self.fault_ns.observe(t0.elapsed_ns());
         let data = Arc::new(data);
         let frame = Arc::new(frame.to_vec());
         self.admit(id, data.clone(), frame.clone());

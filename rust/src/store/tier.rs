@@ -24,14 +24,15 @@
 //!
 //! [`SessionEncoder::queue_shared`]: crate::rpc::session::SessionEncoder::queue_shared
 
-use crate::obs::{Counter, Histogram, HistogramSnapshot, MetricsSnapshot};
+use crate::obs::{
+    Counter, Histogram, HistogramSnapshot, MetricsSnapshot, Stopwatch,
+};
 use crate::partition::PartitionId;
 use crate::rpc::encode_partition_message;
 use crate::store::PartitionData;
 use crate::util::{lock_poisonless, read_poisonless, write_poisonless};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::Instant;
 
 /// Why a store could not produce a partition.  `Unknown` is the benign
 /// miss every caller must expect (a malformed remote request, a
@@ -101,21 +102,31 @@ impl StoreStats {
     /// `store.*` namespace — the shape `pem stats` scrapes.  Entry
     /// names are emitted pre-sorted, as snapshot consumers require.
     pub fn to_snapshot(&self) -> MetricsSnapshot {
+        // metric_name marks the literals for pem-lint's L4 doc
+        // cross-check — these names never pass through a Registry
+        // instrument call, so the lint cannot see them otherwise
+        use crate::obs::metric_name;
         MetricsSnapshot {
             counters: vec![
-                ("store.evictions".into(), self.evictions),
-                ("store.faults".into(), self.faults),
-                ("store.hot_hits".into(), self.hot_hits),
+                (metric_name("store.evictions").into(), self.evictions),
+                (metric_name("store.faults").into(), self.faults),
+                (metric_name("store.hot_hits").into(), self.hot_hits),
             ],
             gauges: vec![
-                ("store.hot_bytes".into(), self.hot_bytes),
-                ("store.spill_bytes".into(), self.spill_bytes),
+                (metric_name("store.hot_bytes").into(), self.hot_bytes),
+                (
+                    metric_name("store.spill_bytes").into(),
+                    self.spill_bytes,
+                ),
             ],
             histograms: vec![(
-                "store.fault_ns".into(),
+                metric_name("store.fault_ns").into(),
                 self.fault_ns.clone(),
             )],
-            labels: vec![("store.tier".into(), self.tier.to_string())],
+            labels: vec![(
+                metric_name("store.tier").into(),
+                self.tier.to_string(),
+            )],
         }
     }
 }
@@ -330,11 +341,11 @@ impl Layered {
         &self,
         id: PartitionId,
     ) -> Result<(Arc<PartitionData>, Arc<Vec<u8>>), StoreError> {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let data = self.cold.get(id)?;
         let frame = self.cold.encoded_frame(id)?;
         self.faults.inc();
-        self.fault_ns.observe(t0.elapsed().as_nanos() as u64);
+        self.fault_ns.observe(t0.elapsed_ns());
         let mut hot = lock_poisonless(&self.hot);
         let freq = hot.freq.entry(id).or_insert(0);
         *freq += 1;

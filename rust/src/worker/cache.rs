@@ -6,7 +6,7 @@
 
 use crate::partition::PartitionId;
 use crate::store::PartitionData;
-use crate::util::LruCache;
+use crate::util::{lock_poisonless, LruCache};
 use std::sync::{Arc, Mutex};
 
 /// Thread-safe partition cache.
@@ -23,59 +23,57 @@ impl PartitionCache {
 
     /// Look up a partition; counts a hit or miss.
     pub fn get(&self, id: PartitionId) -> Option<Arc<PartitionData>> {
-        self.inner.lock().unwrap().get(&id).cloned()
+        lock_poisonless(&self.inner).get(&id).cloned()
     }
 
     /// Store a fetched partition.
     pub fn put(&self, id: PartitionId, data: Arc<PartitionData>) {
-        self.inner.lock().unwrap().put(id, data);
+        lock_poisonless(&self.inner).put(id, data);
     }
 
     /// Presence probe that touches neither recency nor the hit/miss
     /// counters — the batch-mode prefetcher uses it so warming the
     /// cache does not distort the cache statistics the reports carry.
     pub fn contains(&self, id: PartitionId) -> bool {
-        self.inner.lock().unwrap().contains(&id)
+        lock_poisonless(&self.inner).contains(&id)
     }
 
     /// Cached partition ids — piggybacked on task-completion reports so
     /// the workflow service can maintain its approximate cache status
     /// without extra messages (paper §4).
     pub fn status(&self) -> Vec<PartitionId> {
-        self.inner.lock().unwrap().keys()
+        lock_poisonless(&self.inner).keys()
     }
 
     pub fn hits(&self) -> u64 {
-        self.inner.lock().unwrap().hits()
+        lock_poisonless(&self.inner).hits()
     }
 
     pub fn misses(&self) -> u64 {
-        self.inner.lock().unwrap().misses()
+        lock_poisonless(&self.inner).misses()
     }
 
     /// Entries evicted to stay under capacity — with hits/misses this
     /// tells cold-start misses from capacity thrash (`cache.evictions`).
     pub fn evictions(&self) -> u64 {
-        self.inner.lock().unwrap().evictions()
+        lock_poisonless(&self.inner).evictions()
     }
 
     /// Cost-model bytes currently held by cached payloads
     /// (`cache.resident_bytes`).
     pub fn resident_bytes(&self) -> u64 {
-        self.inner
-            .lock()
-            .unwrap()
+        lock_poisonless(&self.inner)
             .values()
             .map(|d| d.approx_bytes)
             .sum()
     }
 
     pub fn capacity(&self) -> usize {
-        self.inner.lock().unwrap().capacity()
+        lock_poisonless(&self.inner).capacity()
     }
 
     pub fn clear(&self) {
-        self.inner.lock().unwrap().clear()
+        lock_poisonless(&self.inner).clear()
     }
 }
 

@@ -1,0 +1,269 @@
+#!/usr/bin/env python3
+"""Reference replica of rust/src/lint's source scanner.
+
+Used once while authoring PR 10 to inventory violations and generate
+scripts/lint_baseline.txt; the binding implementation is the Rust one
+(`cargo run --bin pem_lint`).  Kept in-tree so a future session can
+cross-check the two scanners against each other.
+"""
+import os, re, sys, bisect, json
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "rust", "src")
+
+def mask(src: bytes):
+    """comments -> spaces, string contents -> spaces (quotes kept),
+    raw strings fully masked, char literals masked; newlines kept.
+    Returns (masked bytearray, {quote_offset: literal_text})."""
+    out = bytearray(src)
+    lits = {}
+    i, n = 0, len(src)
+    def blank(a, b):
+        for k in range(a, b):
+            if out[k] != 0x0A:
+                out[k] = 0x20
+    def is_ident(c):
+        return (0x30 <= c <= 0x39) or (0x41 <= c <= 0x5A) or (0x61 <= c <= 0x7A) or c == 0x5F
+    while i < n:
+        c = src[i]
+        if c == 0x2F and i + 1 < n and src[i+1] == 0x2F:  # //
+            j = i
+            while j < n and src[j] != 0x0A:
+                j += 1
+            blank(i, j); i = j
+        elif c == 0x2F and i + 1 < n and src[i+1] == 0x2A:  # /*
+            depth, j = 1, i + 2
+            while j < n and depth > 0:
+                if src[j] == 0x2F and j + 1 < n and src[j+1] == 0x2A:
+                    depth += 1; j += 2
+                elif src[j] == 0x2A and j + 1 < n and src[j+1] == 0x2F:
+                    depth -= 1; j += 2
+                else:
+                    j += 1
+            blank(i, j); i = j
+        elif c == 0x22:  # "
+            j = i + 1
+            while j < n and src[j] != 0x22:
+                if src[j] == 0x5C:
+                    j += 2
+                else:
+                    j += 1
+            lits[i] = src[i+1:j].decode("utf-8", "replace")
+            blank(i + 1, min(j, n))  # keep both quotes
+            i = min(j + 1, n)
+        elif c in (0x72, 0x62):  # r / b : raw or byte string?
+            prev = src[i-1] if i > 0 else 0
+            j = i + 1
+            if c == 0x62 and j < n and src[j] == 0x72:
+                j += 1
+            hashes = 0
+            while j < n and src[j] == 0x23:
+                hashes += 1; j += 1
+            if (not is_ident(prev)) and src[i] in (0x72, 0x62) and j < n and src[j] == 0x22 and (c == 0x72 or (i+1 < n and src[i+1] == 0x72)):
+                # raw string r"..." / r#"..."# / br"..."
+                k = j + 1
+                close = b'"' + b'#' * hashes
+                while k < n and src[k:k+len(close)] != close:
+                    k += 1
+                k = min(k + len(close), n)
+                blank(i, k); i = k
+            elif c == 0x62 and i + 1 < n and src[i+1] == 0x27 and not is_ident(prev):
+                # byte char b'x'
+                j = i + 2
+                if j < n and src[j] == 0x5C:
+                    j += 2
+                while j < n and src[j] != 0x27:
+                    j += 1
+                blank(i, min(j+1, n)); i = min(j + 1, n)
+            else:
+                i += 1
+        elif c == 0x27:  # ' : char literal or lifetime
+            if i + 1 < n and src[i+1] == 0x5C:
+                j = i + 2 + 1
+                while j < n and src[j] != 0x27:
+                    j += 1
+                blank(i, min(j+1, n)); i = min(j + 1, n)
+            else:
+                # closing quote within the next 4 bytes => char literal
+                j = i + 1
+                limit = min(i + 6, n)
+                k = i + 2
+                found = -1
+                while k < limit:
+                    if src[k] == 0x27:
+                        found = k; break
+                    k += 1
+                if found > 0 and found > i + 1:
+                    blank(i, found + 1); i = found + 1
+                else:
+                    i += 1  # lifetime
+        else:
+            i += 1
+    return out, lits
+
+def cfg_test_mask(masked: bytearray):
+    src = bytes(masked)
+    n = len(src)
+    i = 0
+    def skip_ws(j):
+        while j < n and src[j] in b" \t\r\n":
+            j += 1
+        return j
+    def expect(j, tok: bytes):
+        j = skip_ws(j)
+        if src[j:j+len(tok)] == tok:
+            return j + len(tok)
+        return -1
+    def blank(a, b):
+        for k in range(a, b):
+            if masked[k] != 0x0A:
+                masked[k] = 0x20
+    while i < n:
+        if src[i] != 0x23:  # '#'
+            i += 1; continue
+        j = expect(i + 1, b"[")
+        if j < 0: i += 1; continue
+        j = expect(j, b"cfg")
+        if j < 0: i += 1; continue
+        j = expect(j, b"(")
+        if j < 0: i += 1; continue
+        j = expect(j, b"test")
+        if j < 0: i += 1; continue
+        j = expect(j, b")")
+        if j < 0: i += 1; continue
+        j = expect(j, b"]")
+        if j < 0: i += 1; continue
+        # attribute matched: [i, j). skip further attributes
+        k = skip_ws(j)
+        while k < n and src[k] == 0x23:
+            k2 = skip_ws(k + 1)
+            if k2 < n and src[k2] == 0x5B:  # [
+                depth = 1; k2 += 1
+                while k2 < n and depth > 0:
+                    if src[k2] == 0x5B: depth += 1
+                    elif src[k2] == 0x5D: depth -= 1
+                    k2 += 1
+                k = skip_ws(k2)
+            else:
+                break
+        # scan to first '{' or ';'
+        while k < n and src[k] not in b"{;":
+            k += 1
+        if k < n and src[k] == 0x7B:  # {
+            depth = 1; k += 1
+            while k < n and depth > 0:
+                if src[k] == 0x7B: depth += 1
+                elif src[k] == 0x7D: depth -= 1
+                k += 1
+        else:
+            k = min(k + 1, n)
+        blank(i, k)
+        i = k
+    return masked
+
+def condense(masked: bytes):
+    text = []
+    pos = []
+    for i, c in enumerate(masked):
+        if c not in b" \t\r\n":
+            text.append(chr(c))
+            pos.append(i)
+    return "".join(text), pos
+
+class File:
+    def __init__(self, path):
+        self.rel = os.path.relpath(path, ROOT).replace(os.sep, "/")
+        raw = open(path, "rb").read()
+        m, self.lits = mask(raw)
+        m = cfg_test_mask(m)
+        self.masked = bytes(m)
+        self.cond, self.pos = condense(self.masked)
+        self.newlines = [i for i, c in enumerate(raw) if c == 0x0A]
+    def line(self, off):
+        return bisect.bisect_right(self.newlines, off) + 1
+    def find_all(self, pat):
+        out = []
+        start = 0
+        while True:
+            k = self.cond.find(pat, start)
+            if k < 0:
+                return out
+            out.append(k)
+            start = k + 1
+
+def walk():
+    for dirpath, _, names in sorted(os.walk(SRC)):
+        for name in sorted(names):
+            if name.endswith(".rs"):
+                yield File(os.path.join(dirpath, name))
+
+IDENT = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789_")
+
+def main():
+    files = list(walk())
+    report = {"L1": [], "L2": [], "L5": {}, "L4": {}}
+    for f in files:
+        srcrel = f.rel  # like rust/src/obs/clock.rs
+        # L1
+        if not (srcrel == "rust/src/obs/clock.rs" or srcrel.startswith("rust/src/bench/")):
+            for pat in ("Instant::now()", "SystemTime::now()"):
+                for k in f.find_all(pat):
+                    report["L1"].append((srcrel, f.line(f.pos[k]), pat))
+        # L2
+        for pat in (".lock().unwrap()", ".read().unwrap()", ".write().unwrap()"):
+            for k in f.find_all(pat):
+                report["L2"].append((srcrel, f.line(f.pos[k]), pat))
+        # L5
+        if any(srcrel.startswith("rust/src/" + d + "/") for d in ("service", "rpc", "net", "store")):
+            sites = []
+            for pat in (".unwrap()", ".expect(", "panic!("):
+                for k in f.find_all(pat):
+                    sites.append((f.line(f.pos[k]), pat))
+            if sites:
+                report["L5"][srcrel] = sorted(sites)
+        # L4 code-side names
+        names = []
+        for pat in (".counter(", ".gauge(", ".histogram(", ".set_label(", ".label("):
+            for k in f.find_all(pat):
+                after = k + len(pat)
+                if f.cond[after:after+1] == '"':
+                    lit = f.lits.get(f.pos[after])
+                    if lit is not None:
+                        names.append((lit, f.line(f.pos[k])))
+                elif f.cond[after:].startswith('&format!("'):
+                    q = after + len('&format!("') - 1
+                    lit = f.lits.get(f.pos[q])
+                    if lit is not None:
+                        names.append((lit, f.line(f.pos[k])))
+        for pat in ("tenant_gauge(", "metric_name("):
+            for k in f.find_all(pat):
+                if k > 0 and f.cond[k-1] in IDENT:
+                    continue
+                # first literal within balanced parens
+                depth = 0
+                j = k + len(pat) - 1
+                lit = None
+                while j < len(f.cond):
+                    c = f.cond[j]
+                    if c == '(':
+                        depth += 1
+                    elif c == ')':
+                        depth -= 1
+                        if depth == 0:
+                            break
+                    elif c == '"' and f.pos[j] in f.lits:
+                        lit = f.lits[f.pos[j]]
+                        break
+                    j += 1
+                if lit is not None:
+                    if pat == "tenant_gauge(":
+                        names.append(("tenant.<*>." + lit, f.line(f.pos[k])))
+                    else:
+                        names.append((lit, f.line(f.pos[k])))
+        for lit, line in names:
+            norm = re.sub(r"\{[^}]*\}", "<*>", lit)
+            report["L4"].setdefault(norm, []).append((srcrel, line))
+    print(json.dumps(report, indent=1, default=list))
+
+if __name__ == "__main__":
+    main()
